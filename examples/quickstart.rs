@@ -1,0 +1,62 @@
+//! Quickstart: build a corpus, index it, run queries, then run one
+//! Hurry-up-vs-Linux simulation — the public API in ~60 lines.
+//!
+//!     cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use hurryup::prelude::*;
+
+fn main() -> Result<()> {
+    // 1. A synthetic Wikipedia-like corpus + inverted index (the
+    //    Elasticsearch stand-in — tokenizer, stemmer, BM25, top-k).
+    let corpus = CorpusConfig::small().build();
+    let index = Arc::new(Index::build(&corpus));
+    println!(
+        "index: {} docs, {} terms, {} postings, avgdl {:.0}",
+        index.num_docs(),
+        index.num_terms(),
+        index.total_postings(),
+        index.avgdl()
+    );
+
+    // 2. Run a query end to end.
+    let engine = SearchEngine::new(index.clone(), 5);
+    let word_a = index.term(3).to_string();
+    let word_b = index.term(17).to_string();
+    let query = Query::parse(&format!("{word_a} {word_b}"));
+    let result = engine.search(&query);
+    println!(
+        "\nquery {:?}: {} candidates in {} blocks",
+        query.text, result.stats.candidates, result.stats.blocks
+    );
+    for hit in &result.hits {
+        println!("  doc{:<6} {:7.3}  {}", hit.doc, hit.score, hit.title);
+    }
+
+    // 3. One simulated serving experiment on the Juno R1 platform model:
+    //    Hurry-up (sampling 25 ms / threshold 50 ms) vs the Linux baseline.
+    println!("\nsimulating 10k requests @ 20 QPS on 2B+4L …");
+    for policy in [
+        PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        },
+        PolicyKind::LinuxRandom,
+    ] {
+        let cfg = SimConfig::paper_default(policy)
+            .with_qps(20.0)
+            .with_requests(10_000)
+            .with_seed(7);
+        let out = Simulation::new(cfg).run();
+        println!(
+            "  {:<12} p90 {:>5.0} ms | p99 {:>6.0} ms | energy {:>6.1} J | {} migrations",
+            policy.label(),
+            out.p90_ms(),
+            out.latency.percentile(0.99),
+            out.energy.total_j(),
+            out.migrations
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! End-to-end serving driver — the full three-layer stack on a real
+//! workload (EXPERIMENTS.md §E2E records a run of this example):
+//!
+//!   * builds a real (synthetic-Wikipedia) corpus and inverted index,
+//!   * starts the live thread-pool server: 6 worker OS-threads pinned to
+//!     the simulated 2-big/4-little Juno topology, each executing the
+//!     **AOT-compiled XLA scorer** (Layer 1 Pallas kernel + Layer 2 JAX
+//!     top-k) via PJRT on every scoring block of every request,
+//!   * drives it with a Poisson load, first under the static Linux-style
+//!     mapping, then under Hurry-up reading the real `TID;RID;TS` stats
+//!     stream over a UnixStream pair,
+//!   * reports latency, throughput and model-derived energy.
+//!
+//! Requires `make artifacts` (falls back to the pure-Rust scorer with a
+//! warning if the artifact is missing, so the example always runs).
+//!
+//! NOTE on load: the default 4 QPS targets a single-CPU host (this image
+//! has `nproc = 1`, so the six "cores" timeshare one physical CPU; the
+//! DES, not the live server, is the throughput-faithful reproduction —
+//! see DESIGN.md §1). On a ≥6-core host, `--qps 20` and beyond behave
+//! like the simulator.
+//!
+//!     cargo run --release --example serve_search [-- --requests 400 --qps 25]
+
+use std::sync::Arc;
+
+use hurryup::cli::Args;
+use hurryup::live::{LiveConfig, LiveServer};
+use hurryup::mapper::HurryUpParams;
+use hurryup::prelude::*;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let requests = args.get_usize("requests", 120)?;
+    let qps = args.get_f64("qps", 4.0)?;
+
+    let use_xla = hurryup::runtime::artifact::require_scorer().is_ok();
+    if !use_xla {
+        eprintln!("warning: artifacts/scorer.hlo.txt missing — run `make artifacts`;");
+        eprintln!("         falling back to the pure-Rust scorer backend.\n");
+    }
+
+    println!("building corpus + index …");
+    let corpus = CorpusConfig::small().build();
+    let index = Arc::new(Index::build(&corpus));
+    println!(
+        "index: {} docs, {} postings\n",
+        index.num_docs(),
+        index.total_postings()
+    );
+
+    let mut results = Vec::new();
+    for (label, hurryup) in [
+        ("linux-static", None),
+        ("hurry-up", Some(HurryUpParams::default())),
+    ] {
+        println!("serving {requests} requests @ {qps} QPS — mapper: {label}, backend: {}",
+            if use_xla { "xla(pjrt)" } else { "rust" });
+        let cfg = LiveConfig {
+            qps,
+            num_requests: requests,
+            use_xla,
+            hurryup,
+            seed: 11,
+            ..LiveConfig::default()
+        };
+        let report = LiveServer::new(cfg, index.clone()).run()?;
+        println!(
+            "  served {} | throughput {:>5.1} qps | p50 {:>4.0} ms | p90 {:>4.0} ms | p99 {:>5.0} ms",
+            report.per_request.len(),
+            report.throughput_qps(),
+            report.latency.percentile(0.50),
+            report.p90_ms(),
+            report.latency.percentile(0.99),
+        );
+        println!(
+            "  migrations {} | scoring passes {} | energy {:.1} J (model)\n",
+            report.migrations,
+            report.total_passes,
+            report.energy.total_j()
+        );
+        results.push((label, report));
+    }
+
+    let (linux, hu) = (&results[0].1, &results[1].1);
+    let cut = 1.0 - hu.p90_ms() / linux.p90_ms();
+    println!("== end-to-end: hurry-up cuts p90 by {:.0}% on the live server ==", cut * 100.0);
+    // Sanity: both runs returned real search results.
+    let hits = |r: &hurryup::live::LiveReport| {
+        r.per_request.iter().filter(|x| x.top_hit.is_some()).count()
+    };
+    println!(
+        "requests with non-empty results: linux {}/{}, hurry-up {}/{}",
+        hits(linux),
+        linux.per_request.len(),
+        hits(hu),
+        hu.per_request.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,73 @@
+"""AOT-lower the Layer-2 scorer to HLO text for the Rust PJRT runtime.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the HLO
+text parser reassigns ids, so text round-trips cleanly.
+(See /opt/xla-example/README.md and gen_hlo.py.)
+
+Usage:  cd python && python -m compile.aot --out ../artifacts/scorer.hlo.txt
+
+Also writes ``scorer.meta.json`` next to the artifact so the Rust side can
+verify block geometry and BM25 parameters at load time.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_scorer() -> str:
+    lowered = jax.jit(model.score_block).lower(*model.example_args())
+    return to_hlo_text(lowered)
+
+
+def metadata() -> dict:
+    from .kernels import DOC_BLOCK, DOC_TILE, MAX_TERMS, K1, B
+
+    return {
+        "artifact": "scorer",
+        "doc_block": DOC_BLOCK,
+        "doc_tile": DOC_TILE,
+        "max_terms": MAX_TERMS,
+        "top_k": model.TOP_K,
+        "k1": K1,
+        "b": B,
+        "inputs": ["tf[doc_block,max_terms]", "dl[doc_block]", "idf[max_terms]", "avgdl[1]"],
+        "outputs": ["scores[doc_block]", "topk_vals[top_k]", "topk_idx[top_k]"],
+        "jax_version": jax.__version__,
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts/scorer.hlo.txt")
+    args = parser.parse_args()
+
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    text = lower_scorer()
+    with open(args.out, "w") as f:
+        f.write(text)
+    meta_path = os.path.splitext(os.path.splitext(args.out)[0])[0] + ".meta.json"
+    with open(meta_path, "w") as f:
+        json.dump(metadata(), f, indent=2)
+        f.write("\n")
+    print(f"wrote {len(text)} chars to {args.out} (+ {os.path.basename(meta_path)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels for the Hurry-up web-search leaf scorer.
+
+The compute hot-spot of a search leaf node is batched BM25 scoring of a
+block of candidate documents. ``bm25.py`` holds the Pallas kernel (run with
+``interpret=True`` — CPU PJRT cannot execute Mosaic custom-calls);
+``ref.py`` holds the pure-jnp oracle the kernel is validated against.
+"""
+
+from .bm25 import bm25_block_pallas, DOC_BLOCK, DOC_TILE, MAX_TERMS, K1, B
+from .ref import bm25_block_ref
+
+__all__ = [
+    "bm25_block_pallas",
+    "bm25_block_ref",
+    "DOC_BLOCK",
+    "DOC_TILE",
+    "MAX_TERMS",
+    "K1",
+    "B",
+]

@@ -1,0 +1,83 @@
+"""Pallas BM25 block-scoring kernel (Layer 1).
+
+Scores a fixed-size block of ``DOC_BLOCK`` candidate documents against a
+query of up to ``MAX_TERMS`` terms:
+
+    score(d) = sum_t idf[t] * tf[d,t] * (k1 + 1)
+                       / (tf[d,t] + k1 * (1 - b + b * dl[d] / avgdl))
+
+Unused term slots carry ``idf = 0`` and contribute nothing; ``tf = 0``
+likewise contributes nothing (0 / (0 + norm) == 0), so no masking is needed.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper targets
+ARM big/little CPU cores, so there is no GPU kernel to port mechanically.
+The TPU mapping of the leaf-scoring hot loop is a dense, regular, batched
+reduction: the document axis is tiled with ``BlockSpec`` so each tile's TF
+block (DOC_TILE x MAX_TERMS f32 ~= 12 KiB) plus the per-doc length vector and
+per-term IDF vector sit in VMEM, and the per-tile arithmetic is
+elementwise + one reduction, i.e. VPU work (BM25 has no matmul; the MXU is
+idle by construction and the roofline is HBM-bandwidth bound).
+
+``interpret=True`` is mandatory on this image: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block geometry, fixed at AOT time. The Rust engine pads candidate blocks to
+# DOC_BLOCK docs and queries to MAX_TERMS term slots.
+DOC_BLOCK = 256  # documents scored per scorer invocation
+DOC_TILE = 128  # documents per Pallas grid step (VMEM tile)
+MAX_TERMS = 24  # query term slots (paper queries use 1..18 keywords)
+
+# Elasticsearch-default BM25 parameters, baked into the artifact (the paper
+# runs stock Elasticsearch). Kept in sync with rust/src/search/bm25.rs.
+K1 = 1.2
+B = 0.75
+
+
+def _bm25_kernel(tf_ref, dl_ref, idf_ref, avgdl_ref, out_ref, *, k1: float, b: float):
+    """One DOC_TILE tile: elementwise BM25 weight + reduction over terms."""
+    tf = tf_ref[...]  # [DOC_TILE, MAX_TERMS]
+    dl = dl_ref[...]  # [DOC_TILE]
+    idf = idf_ref[...]  # [MAX_TERMS]
+    avgdl = avgdl_ref[0]
+
+    # Per-document length normalisation, broadcast over the term axis.
+    norm = k1 * (1.0 - b + b * dl / avgdl)  # [DOC_TILE]
+    w = tf * (k1 + 1.0) / (tf + norm[:, None])  # [DOC_TILE, MAX_TERMS]
+    out_ref[...] = jnp.sum(w * idf[None, :], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("k1", "b"))
+def bm25_block_pallas(tf, dl, idf, avgdl, *, k1: float = K1, b: float = B):
+    """Score a [DOC_BLOCK, MAX_TERMS] TF block; returns [DOC_BLOCK] scores.
+
+    Args:
+      tf:    f32[DOC_BLOCK, MAX_TERMS] term frequencies (0 for absent terms).
+      dl:    f32[DOC_BLOCK] document lengths in tokens (>= 1 for real docs;
+             padded rows may carry any positive value and score 0 anyway).
+      idf:   f32[MAX_TERMS] per-slot IDF weights (0 for unused slots).
+      avgdl: f32[1] corpus average document length (> 0).
+    """
+    docs, terms = tf.shape
+    if docs % DOC_TILE != 0:
+        raise ValueError(f"doc block {docs} not a multiple of DOC_TILE={DOC_TILE}")
+    grid = (docs // DOC_TILE,)
+    return pl.pallas_call(
+        functools.partial(_bm25_kernel, k1=k1, b=b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((DOC_TILE, terms), lambda i: (i, 0)),
+            pl.BlockSpec((DOC_TILE,), lambda i: (i,)),
+            pl.BlockSpec((terms,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((DOC_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((docs,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(tf, dl, idf, avgdl)

@@ -1,0 +1,57 @@
+"""bfloat16 BM25 kernel variant — the TPU hardware-adaptation study.
+
+DESIGN.md §Hardware-Adaptation: on a real TPU the BM25 block scorer is
+VPU-bound and its operands stream from HBM, so halving operand width with
+bfloat16 halves the memory-bandwidth demand — the roofline axis that
+actually limits this kernel (there is no matmul, the MXU is idle either
+way). This variant keeps the *accumulation* in f32 (bf16 has ~8 bits of
+mantissa; summing up to MAX_TERMS=24 weighted contributions in bf16 would
+lose rank-relevant precision) and casts only the streamed operands.
+
+Serving uses the f32 kernel (`bm25.py`) — CPU XLA gains nothing from bf16 —
+but the variant is validated against the same oracle so the TPU port is a
+one-line swap, and `test_bf16_ranking` quantifies the ranking agreement.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .bm25 import DOC_TILE, K1, B
+
+
+def _bm25_bf16_kernel(tf_ref, dl_ref, idf_ref, avgdl_ref, out_ref, *, k1, b):
+    # Streamed operands in bf16 (half the HBM traffic on TPU) …
+    tf = tf_ref[...].astype(jnp.bfloat16)
+    idf = idf_ref[...].astype(jnp.bfloat16)
+    # … but per-document normalisation and accumulation in f32.
+    dl = dl_ref[...]
+    avgdl = avgdl_ref[0]
+    norm = (k1 * (1.0 - b + b * dl / avgdl)).astype(jnp.float32)
+    tf32 = tf.astype(jnp.float32)
+    w = tf32 * (k1 + 1.0) / (tf32 + norm[:, None])
+    out_ref[...] = jnp.sum(w * idf.astype(jnp.float32)[None, :], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("k1", "b"))
+def bm25_block_bf16(tf, dl, idf, avgdl, *, k1: float = K1, b: float = B):
+    """bf16-operand BM25 block scorer; same signature as bm25_block_pallas."""
+    docs, terms = tf.shape
+    if docs % DOC_TILE != 0:
+        raise ValueError(f"doc block {docs} not a multiple of DOC_TILE={DOC_TILE}")
+    grid = (docs // DOC_TILE,)
+    return pl.pallas_call(
+        functools.partial(_bm25_bf16_kernel, k1=k1, b=b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((DOC_TILE, terms), lambda i: (i, 0)),
+            pl.BlockSpec((DOC_TILE,), lambda i: (i,)),
+            pl.BlockSpec((terms,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((DOC_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((docs,), jnp.float32),
+        interpret=True,
+    )(tf, dl, idf, avgdl)

@@ -1,0 +1,19 @@
+"""Pure-jnp BM25 oracle — the correctness reference for the Pallas kernel.
+
+Deliberately written in the most direct form possible (no tiling, no
+reshaping) so a reviewer can check it against the BM25 formula by eye.
+Kept in sync with rust/src/search/bm25.rs, which is the same formula again
+in Rust and is cross-checked against the AOT artifact in integration tests.
+"""
+
+import jax.numpy as jnp
+
+from . import bm25 as _bm25
+
+
+def bm25_block_ref(tf, dl, idf, avgdl, *, k1: float = _bm25.K1, b: float = _bm25.B):
+    """Reference BM25 scores; same signature/shapes as bm25_block_pallas."""
+    avgdl = jnp.asarray(avgdl).reshape(())
+    norm = k1 * (1.0 - b + b * dl / avgdl)  # [docs]
+    w = tf * (k1 + 1.0) / (tf + norm[:, None])  # [docs, terms]
+    return jnp.sum(w * idf[None, :], axis=-1)

@@ -1,0 +1,59 @@
+"""Layer-2 JAX scorer graph for the Hurry-up search leaf.
+
+``score_block`` is the unit of request-path compute: BM25-score one padded
+block of DOC_BLOCK candidate documents (Pallas kernel, Layer 1), then select
+the block-local top-K so the Rust coordinator only merges tiny per-block
+heaps instead of full score vectors.
+
+This module is build-time only. ``aot.py`` lowers ``score_block`` once to
+HLO text; the Rust runtime (rust/src/runtime/) loads and executes the
+artifact on the request path. Python never runs while serving.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bm25_block_pallas, DOC_BLOCK, MAX_TERMS, K1, B
+
+# Block-local top-K handed back to the coordinator. The Rust side merges
+# per-block (value, block-local index) pairs into the global top-k.
+TOP_K = 16
+
+
+def score_block(tf, dl, idf, avgdl):
+    """Score one candidate block and reduce to its local top-K.
+
+    Args:
+      tf:    f32[DOC_BLOCK, MAX_TERMS] term-frequency block.
+      dl:    f32[DOC_BLOCK] document lengths.
+      idf:   f32[MAX_TERMS] IDF weights (0 on unused slots).
+      avgdl: f32[1] corpus average document length.
+
+    Returns:
+      (scores, topk_vals, topk_idx):
+        scores:    f32[DOC_BLOCK] full BM25 scores for the block,
+        topk_vals: f32[TOP_K]     largest scores, descending,
+        topk_idx:  i32[TOP_K]     block-local doc indices of topk_vals.
+    """
+    scores = bm25_block_pallas(tf, dl, idf, avgdl, k1=K1, b=B)
+    # Block-local top-K via a full key/value sort rather than jax.lax.top_k:
+    # top_k lowers to the `topk` HLO instruction, which the Rust runtime's
+    # xla_extension 0.5.1 HLO parser predates. sort lowers to the classic
+    # `sort` HLO and round-trips cleanly. DOC_BLOCK is only 256, so the
+    # sort costs nothing at serving time.
+    neg_sorted, idx_sorted = jax.lax.sort_key_val(
+        -scores, jnp.arange(scores.shape[0], dtype=jnp.int32)
+    )
+    topk_vals = -neg_sorted[:TOP_K]
+    topk_idx = idx_sorted[:TOP_K]
+    return scores, topk_vals, topk_idx
+
+
+def example_args():
+    """ShapeDtypeStructs matching score_block's AOT signature."""
+    return (
+        jax.ShapeDtypeStruct((DOC_BLOCK, MAX_TERMS), jnp.float32),
+        jax.ShapeDtypeStruct((DOC_BLOCK,), jnp.float32),
+        jax.ShapeDtypeStruct((MAX_TERMS,), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+    )

@@ -1,0 +1,48 @@
+"""AOT path: the scorer lowers to parseable HLO text with the right signature."""
+
+import json
+
+from compile import aot, model
+from compile.kernels import DOC_BLOCK, MAX_TERMS
+
+
+class TestAot:
+    def test_lower_scorer_produces_hlo_text(self):
+        text = aot.lower_scorer()
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        # Four parameters with the AOT shapes.
+        assert f"f32[{DOC_BLOCK},{MAX_TERMS}]" in text
+        assert "f32[1]" in text
+
+    def test_output_is_tuple_of_three(self):
+        text = aot.lower_scorer()
+        # return_tuple=True => root is a 3-tuple (scores, topk_vals, topk_idx)
+        assert (
+            f"(f32[{DOC_BLOCK}]" in text.replace(" ", "")
+            or f"(f32[{DOC_BLOCK}]{{0}}" in text
+        )
+        assert f"s32[{model.TOP_K}]" in text
+
+    def test_no_custom_calls(self):
+        """interpret=True must lower Pallas to plain HLO (no Mosaic)."""
+        text = aot.lower_scorer()
+        assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+    def test_metadata_consistent(self):
+        meta = aot.metadata()
+        assert meta["doc_block"] == DOC_BLOCK
+        assert meta["max_terms"] == MAX_TERMS
+        assert meta["top_k"] == model.TOP_K
+        json.dumps(meta)  # serialisable
+
+    def test_writer_roundtrip(self, tmp_path):
+        out = tmp_path / "scorer.hlo.txt"
+        import sys
+        from unittest import mock
+
+        with mock.patch.object(sys, "argv", ["aot", "--out", str(out)]):
+            aot.main()
+        assert out.exists() and out.stat().st_size > 1000
+        meta = json.loads((tmp_path / "scorer.meta.json").read_text())
+        assert meta["artifact"] == "scorer"

@@ -1,0 +1,45 @@
+"""bf16 kernel variant: numeric closeness and ranking agreement vs f32."""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from compile.kernels import bm25_block_ref, DOC_BLOCK
+from compile.kernels.bm25_bf16 import bm25_block_bf16
+from tests.test_kernel import make_inputs
+
+
+class TestBf16Variant:
+    def test_close_to_f32_reference(self):
+        tf, dl, idf, avgdl = make_inputs(seed=31)
+        got = np.asarray(bm25_block_bf16(tf, dl, idf, avgdl))
+        want = np.asarray(bm25_block_ref(tf, dl, idf, avgdl))
+        # bf16 operands: ~8 mantissa bits ⇒ ~0.4 % relative error budget.
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=1e-2)
+
+    def test_ranking_agreement(self):
+        """Top-10 rankings must be near-identical despite bf16 operands —
+        the metric that matters for a search engine."""
+        agree = 0
+        trials = 12
+        for seed in range(trials):
+            tf, dl, idf, avgdl = make_inputs(seed=100 + seed)
+            a = np.asarray(bm25_block_bf16(tf, dl, idf, avgdl))
+            b = np.asarray(bm25_block_ref(tf, dl, idf, avgdl))
+            top_a = set(np.argsort(-a)[:10].tolist())
+            top_b = set(np.argsort(-b)[:10].tolist())
+            agree += len(top_a & top_b)
+        # ≥ 90 % overlap of top-10 sets across trials.
+        assert agree >= int(0.9 * 10 * trials), f"agreement {agree}/{10*trials}"
+
+    def test_zero_rows_still_zero(self):
+        tf, dl, idf, avgdl = make_inputs(seed=32)
+        tf = tf.at[0].set(0.0)
+        out = np.asarray(bm25_block_bf16(tf, dl, idf, avgdl))
+        assert out[0] == 0.0
+
+    def test_shapes_match_f32_kernel(self):
+        tf, dl, idf, avgdl = make_inputs(seed=33)
+        out = bm25_block_bf16(tf, dl, idf, avgdl)
+        assert out.shape == (DOC_BLOCK,)
+        assert out.dtype == jnp.float32  # accumulation stays f32

@@ -1,0 +1,109 @@
+"""Pallas BM25 kernel vs pure-jnp reference — the core correctness signal."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.kernels import (
+    bm25_block_pallas,
+    bm25_block_ref,
+    DOC_BLOCK,
+    DOC_TILE,
+    MAX_TERMS,
+    K1,
+    B,
+)
+
+
+def make_inputs(docs=DOC_BLOCK, terms=MAX_TERMS, seed=0, active_terms=None):
+    rng = np.random.default_rng(seed)
+    tf = rng.integers(0, 8, size=(docs, terms)).astype(np.float32)
+    dl = rng.integers(20, 2000, size=(docs,)).astype(np.float32)
+    idf = rng.uniform(0.1, 9.0, size=(terms,)).astype(np.float32)
+    if active_terms is not None:
+        idf[active_terms:] = 0.0
+        tf[:, active_terms:] = 0.0
+    avgdl = np.asarray([float(dl.mean())], dtype=np.float32)
+    return jnp.asarray(tf), jnp.asarray(dl), jnp.asarray(idf), jnp.asarray(avgdl)
+
+
+class TestKernelVsRef:
+    def test_default_block(self):
+        tf, dl, idf, avgdl = make_inputs()
+        got = bm25_block_pallas(tf, dl, idf, avgdl)
+        want = bm25_block_ref(tf, dl, idf, avgdl)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_random_seeds(self, seed):
+        tf, dl, idf, avgdl = make_inputs(seed=seed)
+        np.testing.assert_allclose(
+            bm25_block_pallas(tf, dl, idf, avgdl),
+            bm25_block_ref(tf, dl, idf, avgdl),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    @pytest.mark.parametrize("docs", [DOC_TILE, 2 * DOC_TILE, 4 * DOC_TILE])
+    def test_doc_multiples_of_tile(self, docs):
+        tf, dl, idf, avgdl = make_inputs(docs=docs, seed=3)
+        got = bm25_block_pallas(tf, dl, idf, avgdl)
+        assert got.shape == (docs,)
+        np.testing.assert_allclose(
+            got, bm25_block_ref(tf, dl, idf, avgdl), rtol=1e-5, atol=1e-5
+        )
+
+    @pytest.mark.parametrize("active", [0, 1, 2, 5, 17, MAX_TERMS])
+    def test_padded_term_slots(self, active):
+        """Unused term slots (idf=0, tf=0) must contribute exactly nothing."""
+        tf, dl, idf, avgdl = make_inputs(seed=7, active_terms=active)
+        got = bm25_block_pallas(tf, dl, idf, avgdl)
+        want = bm25_block_ref(tf, dl, idf, avgdl)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+        if active == 0:
+            np.testing.assert_array_equal(np.asarray(got), np.zeros(DOC_BLOCK, np.float32))
+
+    def test_zero_tf_rows_score_zero(self):
+        """Padded documents (tf == 0 everywhere) score exactly 0."""
+        tf, dl, idf, avgdl = make_inputs(seed=11)
+        tf = tf.at[10].set(0.0).at[255].set(0.0)
+        got = np.asarray(bm25_block_pallas(tf, dl, idf, avgdl))
+        assert got[10] == 0.0 and got[255] == 0.0
+
+    def test_scores_nonnegative(self):
+        tf, dl, idf, avgdl = make_inputs(seed=13)
+        assert np.all(np.asarray(bm25_block_pallas(tf, dl, idf, avgdl)) >= 0.0)
+
+    def test_monotone_in_tf(self):
+        """More occurrences of a query term never lowers the score."""
+        tf, dl, idf, avgdl = make_inputs(seed=17)
+        lo = np.asarray(bm25_block_pallas(tf, dl, idf, avgdl))
+        hi = np.asarray(bm25_block_pallas(tf + 1.0, dl, idf, avgdl))
+        assert np.all(hi >= lo - 1e-6)
+
+    def test_longer_docs_score_less(self):
+        """With b > 0, a longer document with equal tf scores lower."""
+        tf, dl, idf, avgdl = make_inputs(seed=19)
+        short = np.asarray(bm25_block_pallas(tf, dl, idf, avgdl))
+        long = np.asarray(bm25_block_pallas(tf, dl * 4.0, idf, avgdl))
+        active = np.asarray(tf).sum(axis=1) > 0
+        assert np.all(long[active] <= short[active] + 1e-6)
+
+    def test_custom_k1_b(self):
+        tf, dl, idf, avgdl = make_inputs(seed=23)
+        for k1, b in [(0.9, 0.4), (2.0, 1.0), (1.2, 0.0)]:
+            np.testing.assert_allclose(
+                bm25_block_pallas(tf, dl, idf, avgdl, k1=k1, b=b),
+                bm25_block_ref(tf, dl, idf, avgdl, k1=k1, b=b),
+                rtol=1e-5,
+                atol=1e-5,
+            )
+
+    def test_rejects_non_tile_multiple(self):
+        tf, dl, idf, avgdl = make_inputs(docs=DOC_TILE + 1, seed=29)
+        with pytest.raises(ValueError, match="DOC_TILE"):
+            bm25_block_pallas(tf, dl, idf, avgdl)
+
+    def test_default_params_match_module_constants(self):
+        assert (K1, B) == (1.2, 0.75)

@@ -1,0 +1,59 @@
+"""Layer-2 scorer graph: shapes, top-k semantics, kernel composition."""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import bm25_block_ref, DOC_BLOCK, MAX_TERMS
+from tests.test_kernel import make_inputs
+
+
+class TestScoreBlock:
+    def test_shapes_and_dtypes(self):
+        tf, dl, idf, avgdl = make_inputs(seed=1)
+        scores, vals, idx = model.score_block(tf, dl, idf, avgdl)
+        assert scores.shape == (DOC_BLOCK,) and scores.dtype == jnp.float32
+        assert vals.shape == (model.TOP_K,) and vals.dtype == jnp.float32
+        assert idx.shape == (model.TOP_K,) and idx.dtype == jnp.int32
+
+    def test_scores_match_ref(self):
+        tf, dl, idf, avgdl = make_inputs(seed=2)
+        scores, _, _ = model.score_block(tf, dl, idf, avgdl)
+        np.testing.assert_allclose(
+            scores, bm25_block_ref(tf, dl, idf, avgdl), rtol=1e-5, atol=1e-5
+        )
+
+    def test_topk_is_sorted_prefix_of_full_sort(self):
+        tf, dl, idf, avgdl = make_inputs(seed=3)
+        scores, vals, idx = model.score_block(tf, dl, idf, avgdl)
+        scores, vals, idx = map(np.asarray, (scores, vals, idx))
+        assert np.all(np.diff(vals) <= 1e-6)  # descending
+        np.testing.assert_allclose(
+            vals, np.sort(scores)[::-1][: model.TOP_K], rtol=1e-6, atol=1e-6
+        )
+
+    def test_topk_indices_point_at_values(self):
+        tf, dl, idf, avgdl = make_inputs(seed=4)
+        scores, vals, idx = map(np.asarray, model.score_block(tf, dl, idf, avgdl))
+        np.testing.assert_allclose(scores[idx], vals, rtol=1e-6, atol=1e-6)
+        assert len(set(idx.tolist())) == model.TOP_K  # distinct docs
+
+    def test_example_args_signature(self):
+        specs = model.example_args()
+        assert [tuple(s.shape) for s in specs] == [
+            (DOC_BLOCK, MAX_TERMS),
+            (DOC_BLOCK,),
+            (MAX_TERMS,),
+            (1,),
+        ]
+        assert all(s.dtype == jnp.float32 for s in specs)
+
+    def test_all_zero_block(self):
+        """A fully padded block: scores all 0, top-k values all 0."""
+        tf = jnp.zeros((DOC_BLOCK, MAX_TERMS), jnp.float32)
+        dl = jnp.ones((DOC_BLOCK,), jnp.float32)
+        idf = jnp.zeros((MAX_TERMS,), jnp.float32)
+        avgdl = jnp.ones((1,), jnp.float32)
+        scores, vals, _ = map(np.asarray, model.score_block(tf, dl, idf, avgdl))
+        assert np.all(scores == 0.0) and np.all(vals == 0.0)

@@ -1,0 +1,55 @@
+//! `cargo bench --bench figures [-- fig1 fig8 …]` — regenerates every table
+//! and figure of the paper's evaluation and prints the same rows/series the
+//! paper reports, with wall-clock timing per experiment.
+//!
+//! Scale: fast by default; `HURRYUP_FULL=1` (or `-- --full`) runs the
+//! paper's 1×10⁵-request scale.
+
+use std::time::Instant;
+
+use hurryup::experiments::{registry, Scale};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let full = args.iter().any(|a| a == "--full");
+    let ids: Vec<String> = args
+        .into_iter()
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    let scale = if full {
+        Scale { requests: 100_000 }
+    } else {
+        Scale::from_env()
+    };
+    println!(
+        "hurryup figure bench — scale: {} requests/run (HURRYUP_FULL=1 for paper scale)\n",
+        scale.requests
+    );
+    let t_all = Instant::now();
+    let mut ran = 0;
+    for (name, f) in registry() {
+        if !ids.is_empty() && !ids.iter().any(|i| i == name) {
+            continue;
+        }
+        let t0 = Instant::now();
+        let tables = f(scale);
+        let dt = t0.elapsed();
+        for t in &tables {
+            t.print();
+            println!();
+        }
+        println!("[{name}: {:.2}s]\n", dt.as_secs_f64());
+        ran += 1;
+    }
+    if ran == 0 {
+        eprintln!("no matching experiments; known ids:");
+        for (name, _) in registry() {
+            eprintln!("  {name}");
+        }
+        std::process::exit(2);
+    }
+    println!(
+        "== figures bench complete: {ran} experiments in {:.1}s ==",
+        t_all.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,224 @@
+//! `cargo bench --bench hotpath` — micro-benchmarks of the request-path and
+//! simulator hot spots (criterion is unavailable offline; this is a
+//! hand-rolled measure-loop harness with warmup).
+//!
+//! Benchmarked hot paths (EXPERIMENTS.md §Perf tracks these):
+//!   sim_event_loop     DES throughput (requests/s) at the 30 QPS point
+//!   mapper_tick        Algorithm 1 decision cost with a loaded table
+//!   stats_codec        IPC record encode+parse
+//!   bm25_block_rust    one 256×24 block scored in Rust
+//!   xla_block          one block through the PJRT artifact (if built)
+//!   engine_query       full query execution over the small index
+//!   histogram_record   latency histogram insert + percentile
+//!   topk_push          bounded top-k insertion
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use hurryup::config::{CorpusConfig, KeywordMix, SimConfig};
+use hurryup::ipc::{RequestTag, StatsRecord};
+use hurryup::mapper::{HurryUp, HurryUpParams, Policy, PolicyKind};
+use hurryup::metrics::LatencyHistogram;
+use hurryup::platform::{AffinityTable, ThreadId, Topology};
+use hurryup::search::engine::BlockScorer;
+use hurryup::search::{Bm25Params, Index, Query, RustScorer, ScoreBlock, SearchEngine, TopK};
+use hurryup::sim::Simulation;
+use hurryup::util::Rng;
+
+/// Run `f` repeatedly for ~`budget_ms`, returning (iters, secs).
+fn measure<F: FnMut()>(budget_ms: u64, mut f: F) -> (u64, f64) {
+    for _ in 0..3 {
+        f(); // warmup
+    }
+    let t0 = Instant::now();
+    let budget = std::time::Duration::from_millis(budget_ms);
+    let mut iters = 0u64;
+    while t0.elapsed() < budget {
+        f();
+        iters += 1;
+    }
+    (iters, t0.elapsed().as_secs_f64())
+}
+
+fn report(name: &str, unit: &str, per_iter_units: f64, iters: u64, secs: f64) {
+    let rate = per_iter_units * iters as f64 / secs;
+    let per = secs / iters as f64;
+    println!(
+        "{name:<18} {rate:>14.0} {unit}/s   {:>12.3} µs/iter   ({iters} iters)",
+        per * 1e6
+    );
+}
+
+fn make_block() -> (ScoreBlock, Vec<f32>) {
+    let mut rng = Rng::new(99);
+    let block = ScoreBlock {
+        tf: (0..hurryup::search::DOC_BLOCK * hurryup::search::MAX_TERMS)
+            .map(|_| (rng.below(6)) as f32)
+            .collect(),
+        dl: (0..hurryup::search::DOC_BLOCK)
+            .map(|_| rng.f64_range(20.0, 2000.0) as f32)
+            .collect(),
+        docs: (0..hurryup::search::DOC_BLOCK as u32).collect(),
+        max_tf: vec![0.0; hurryup::search::MAX_TERMS],
+        min_dl: 20.0,
+    };
+    let idf: Vec<f32> = (0..hurryup::search::MAX_TERMS)
+        .map(|_| rng.f64_range(0.1, 8.0) as f32)
+        .collect();
+    (block, idf)
+}
+
+fn main() {
+    println!("hurryup hotpath bench (hand-rolled; criterion unavailable offline)\n");
+
+    // --- sim event loop ---
+    {
+        let cfg = SimConfig::paper_default(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        })
+        .with_qps(30.0)
+        .with_requests(20_000)
+        .with_seed(1);
+        let t0 = Instant::now();
+        let out = Simulation::new(cfg).run();
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "sim_event_loop     {:>14.0} requests/s ({} requests, {} migrations, {:.2}s)",
+            out.completed as f64 / secs,
+            out.completed,
+            out.migrations,
+            secs
+        );
+    }
+
+    // --- mapper tick ---
+    {
+        let topo = Topology::juno_r1();
+        let mut policy = HurryUp::new(HurryUpParams::default(), topo.clone());
+        let aff = AffinityTable::round_robin(topo);
+        for t in 0..6 {
+            policy.observe(&StatsRecord {
+                tid: ThreadId(t),
+                rid: RequestTag::from_seq(t as u64),
+                ts_ms: 1000 + t as u64,
+            });
+        }
+        let (iters, secs) = measure(300, || {
+            black_box(policy.tick(black_box(5000.0), &aff));
+        });
+        report("mapper_tick", "ticks", 1.0, iters, secs);
+    }
+
+    // --- stats codec ---
+    {
+        let rec = StatsRecord {
+            tid: ThreadId(77),
+            rid: RequestTag::from_seq(123_456),
+            ts_ms: 1_498_060_927_953,
+        };
+        let (iters, secs) = measure(300, || {
+            let line = black_box(&rec).encode();
+            black_box(StatsRecord::parse(&line).unwrap());
+        });
+        report("stats_codec", "records", 1.0, iters, secs);
+    }
+
+    // --- BM25 block, Rust ---
+    {
+        let (block, idf) = make_block();
+        let mut scorer = RustScorer::new(Bm25Params::default());
+        let (iters, secs) = measure(500, || {
+            black_box(scorer.score_block(black_box(&block), &idf, 450.0).unwrap());
+        });
+        report(
+            "bm25_block_rust",
+            "docs",
+            hurryup::search::DOC_BLOCK as f64,
+            iters,
+            secs,
+        );
+    }
+
+    // --- BM25 block, XLA artifact (optional) ---
+    match hurryup::runtime::XlaScorer::load() {
+        Ok(mut scorer) => {
+            let (block, idf) = make_block();
+            let (iters, secs) = measure(1000, || {
+                black_box(scorer.score_block(black_box(&block), &idf, 450.0).unwrap());
+            });
+            report(
+                "xla_block",
+                "docs",
+                hurryup::search::DOC_BLOCK as f64,
+                iters,
+                secs,
+            );
+            // Repeated execution (the live emulation path): 16 passes per
+            // upload — §Perf optimization amortising H2D/literal cost.
+            let (iters, secs) = measure(1000, || {
+                black_box(
+                    scorer
+                        .score_block_repeated(black_box(&block), &idf, 450.0, 16)
+                        .unwrap(),
+                );
+            });
+            report("xla_block_rep16", "passes", 16.0, iters, secs);
+        }
+        Err(e) => println!("xla_block          skipped ({e})"),
+    }
+
+    // --- full query over the small index ---
+    {
+        let index = std::sync::Arc::new(Index::build(&CorpusConfig::small().build()));
+        let engine = SearchEngine::new(index.clone(), 10);
+        let qgen = hurryup::loadgen::QueryGen::new(KeywordMix::Paper, index.num_terms());
+        let mut rng = Rng::new(5);
+        let queries: Vec<Query> = (0..64)
+            .map(|_| {
+                let k = qgen.sample_keywords(&mut rng);
+                Query::from_terms(
+                    qgen.sample_terms(k, &mut rng)
+                        .into_iter()
+                        .map(|t| index.term(t).to_string())
+                        .collect(),
+                )
+            })
+            .collect();
+        let mut qi = 0;
+        let (iters, secs) = measure(500, || {
+            black_box(engine.search(&queries[qi % queries.len()]));
+            qi += 1;
+        });
+        report("engine_query", "queries", 1.0, iters, secs);
+    }
+
+    // --- histogram ---
+    {
+        let mut h = LatencyHistogram::new();
+        let mut rng = Rng::new(6);
+        let (iters, secs) = measure(300, || {
+            for _ in 0..1000 {
+                h.record(rng.f64_range(0.5, 5_000.0));
+            }
+            black_box(h.percentile(0.90));
+        });
+        report("histogram_record", "samples", 1000.0, iters, secs);
+    }
+
+    // --- top-k ---
+    {
+        let mut rng = Rng::new(7);
+        let scores: Vec<f32> = (0..4096).map(|_| rng.f64_range(0.0, 30.0) as f32).collect();
+        let (iters, secs) = measure(300, || {
+            let mut tk = TopK::new(10);
+            for (i, &s) in scores.iter().enumerate() {
+                tk.push(i as u32, s);
+            }
+            black_box(tk.into_sorted());
+        });
+        report("topk_push", "candidates", 4096.0, iters, secs);
+    }
+
+    println!("\nhotpath bench complete");
+}

@@ -1,0 +1,126 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `hurryup <subcommand> [--flag value] [--switch] [positional…]`.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand).
+    pub command: Option<String>,
+    /// `--key value` pairs (switches store an empty string).
+    pub flags: HashMap<String, String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+}
+
+/// Flags that are boolean switches (consume no value).
+const SWITCHES: &[&str] = &["full", "help", "xla", "csv", "verbose"];
+
+impl Args {
+    /// Parse raw argv (excluding the binary name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::invalid("empty flag `--`"));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if SWITCHES.contains(&name) {
+                    args.flags.insert(name.to_string(), String::new());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| Error::invalid(format!("flag --{name} needs a value")))?;
+                    args.flags.insert(name.to_string(), v);
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// String flag.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Boolean switch.
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    /// f64 flag with default.
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::invalid(format!("--{name} must be a number, got `{v}`"))),
+        }
+    }
+
+    /// usize flag with default.
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::invalid(format!("--{name} must be an integer, got `{v}`"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("sim --qps 30 --policy hurry_up --full");
+        assert_eq!(a.command.as_deref(), Some("sim"));
+        assert_eq!(a.get("qps"), Some("30"));
+        assert_eq!(a.get("policy"), Some("hurry_up"));
+        assert!(a.has("full"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("sim --qps=12.5");
+        assert_eq!(a.get_f64("qps", 0.0).unwrap(), 12.5);
+    }
+
+    #[test]
+    fn positionals_after_command() {
+        let a = parse("figures fig1 fig8");
+        assert_eq!(a.command.as_deref(), Some("figures"));
+        assert_eq!(a.positional, vec!["fig1", "fig8"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(vec!["sim".into(), "--qps".into()]).is_err());
+    }
+
+    #[test]
+    fn typed_accessors_validate() {
+        let a = parse("sim --n 100");
+        assert_eq!(a.get_usize("n", 5).unwrap(), 100);
+        assert_eq!(a.get_usize("missing", 5).unwrap(), 5);
+        let b = parse("sim --n xyz");
+        assert!(b.get_usize("n", 5).is_err());
+    }
+}

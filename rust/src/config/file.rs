@@ -1,0 +1,225 @@
+//! Load a `SimConfig` from a TOML-subset config file — the launcher's
+//! config-file entry point (`hurryup sim --config exp.toml`).
+
+use std::path::Path;
+
+use super::toml::{parse, Document, Value};
+use super::{KeywordMix, SimConfig};
+use crate::error::{Error, Result};
+use crate::mapper::PolicyKind;
+
+/// Read and parse a config file into a validated `SimConfig`.
+pub fn load_sim_config(path: impl AsRef<Path>) -> Result<SimConfig> {
+    let text = std::fs::read_to_string(path)?;
+    sim_config_from_str(&text)
+}
+
+/// Parse a config string into a validated `SimConfig`. Unknown keys are
+/// rejected (typos should fail loudly, not silently fall back to defaults).
+pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
+    let doc = parse(text)?;
+    let mut cfg = SimConfig::paper_default(PolicyKind::LinuxRandom);
+
+    for key in doc.keys() {
+        const KNOWN: &[&str] = &[
+            "big_cores",
+            "little_cores",
+            "qps",
+            "num_requests",
+            "warmup_requests",
+            "seed",
+            "policy.kind",
+            "policy.sampling_ms",
+            "policy.threshold_ms",
+            "policy.oracle_cutoff_kw",
+            "policy.qos_ms",
+            "mix.kind",
+            "mix.fixed_k",
+            "mix.min",
+            "mix.max",
+            "service.base_units",
+            "service.per_kw_units",
+            "service.migration_cost_ms",
+            "noise.sigma_big",
+            "noise.sigma_little",
+        ];
+        if !KNOWN.contains(&key.as_str()) {
+            return Err(Error::config(format!("unknown config key `{key}`")));
+        }
+    }
+
+    if let Some(v) = get_i64(&doc, "big_cores")? {
+        cfg.big_cores = v as usize;
+    }
+    if let Some(v) = get_i64(&doc, "little_cores")? {
+        cfg.little_cores = v as usize;
+    }
+    if let Some(v) = get_f64(&doc, "qps")? {
+        cfg.qps = v;
+    }
+    if let Some(v) = get_i64(&doc, "num_requests")? {
+        cfg.num_requests = v as usize;
+    }
+    if let Some(v) = get_i64(&doc, "warmup_requests")? {
+        cfg.warmup_requests = v as usize;
+    }
+    if let Some(v) = get_i64(&doc, "seed")? {
+        cfg.seed = v as u64;
+    }
+    if let Some(v) = get_f64(&doc, "service.base_units")? {
+        cfg.service.base_units = v;
+    }
+    if let Some(v) = get_f64(&doc, "service.per_kw_units")? {
+        cfg.service.per_kw_units = v;
+    }
+    if let Some(v) = get_f64(&doc, "service.migration_cost_ms")? {
+        cfg.service.migration_cost_ms = v;
+    }
+
+    let sigma_big = get_f64(&doc, "noise.sigma_big")?;
+    let sigma_little = get_f64(&doc, "noise.sigma_little")?;
+    if sigma_big.is_some() || sigma_little.is_some() {
+        use crate::platform::CoreKind;
+        cfg.noise_override = Some((
+            sigma_big.unwrap_or(CoreKind::Big.noise_sigma()),
+            sigma_little.unwrap_or(CoreKind::Little.noise_sigma()),
+        ));
+    }
+
+    if let Some(kind) = doc.get("policy.kind").and_then(Value::as_str) {
+        cfg.policy = match kind {
+            "hurry_up" => PolicyKind::HurryUp {
+                sampling_ms: get_f64(&doc, "policy.sampling_ms")?.unwrap_or(25.0),
+                threshold_ms: get_f64(&doc, "policy.threshold_ms")?.unwrap_or(50.0),
+            },
+            "linux_random" => PolicyKind::LinuxRandom,
+            "round_robin" => PolicyKind::RoundRobin,
+            "all_big" => PolicyKind::AllBig,
+            "all_little" => PolicyKind::AllLittle,
+            "oracle" => PolicyKind::Oracle {
+                cutoff_kw: get_i64(&doc, "policy.oracle_cutoff_kw")?.unwrap_or(5) as usize,
+            },
+            "app_level" => PolicyKind::AppLevel {
+                qos_ms: get_f64(&doc, "policy.qos_ms")?.unwrap_or(500.0),
+                sampling_ms: get_f64(&doc, "policy.sampling_ms")?.unwrap_or(50.0),
+            },
+            other => {
+                return Err(Error::config(format!("unknown policy kind `{other}`")))
+            }
+        };
+    }
+
+    if let Some(kind) = doc.get("mix.kind").and_then(Value::as_str) {
+        cfg.keyword_mix = match kind {
+            "paper" => KeywordMix::Paper,
+            "fixed" => KeywordMix::Fixed(
+                get_i64(&doc, "mix.fixed_k")?
+                    .ok_or_else(|| Error::config("mix.fixed_k required for fixed mix"))?
+                    as usize,
+            ),
+            "uniform" => KeywordMix::Uniform(
+                get_i64(&doc, "mix.min")?.unwrap_or(1) as usize,
+                get_i64(&doc, "mix.max")?.unwrap_or(18) as usize,
+            ),
+            other => return Err(Error::config(format!("unknown mix kind `{other}`"))),
+        };
+    }
+
+    cfg.validated()
+}
+
+fn get_f64(doc: &Document, key: &str) -> Result<Option<f64>> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| Error::config(format!("`{key}` must be a number"))),
+    }
+}
+
+fn get_i64(doc: &Document, key: &str) -> Result<Option<i64>> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_i64()
+            .map(Some)
+            .ok_or_else(|| Error::config(format!("`{key}` must be an integer"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config_roundtrip() {
+        let cfg = sim_config_from_str(
+            r#"
+            big_cores = 2
+            little_cores = 4
+            qps = 20.0
+            num_requests = 5000
+            seed = 9
+            [policy]
+            kind = "hurry_up"
+            sampling_ms = 50.0
+            threshold_ms = 100.0
+            [mix]
+            kind = "paper"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.qps, 20.0);
+        assert_eq!(cfg.num_requests, 5000);
+        match cfg.policy {
+            PolicyKind::HurryUp {
+                sampling_ms,
+                threshold_ms,
+            } => {
+                assert_eq!(sampling_ms, 50.0);
+                assert_eq!(threshold_ms, 100.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply_when_keys_absent() {
+        let cfg = sim_config_from_str("qps = 10.0").unwrap();
+        assert_eq!((cfg.big_cores, cfg.little_cores), (2, 4));
+        assert!(matches!(cfg.policy, PolicyKind::LinuxRandom));
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let e = sim_config_from_str("qsp = 10.0").unwrap_err();
+        assert!(e.to_string().contains("qsp"), "{e}");
+    }
+
+    #[test]
+    fn unknown_policy_rejected() {
+        let e = sim_config_from_str("[policy]\nkind = \"magic\"").unwrap_err();
+        assert!(e.to_string().contains("magic"));
+    }
+
+    #[test]
+    fn fixed_mix_requires_k() {
+        assert!(sim_config_from_str("[mix]\nkind = \"fixed\"").is_err());
+        let cfg = sim_config_from_str("[mix]\nkind = \"fixed\"\nfixed_k = 7").unwrap();
+        assert_eq!(cfg.keyword_mix, KeywordMix::Fixed(7));
+    }
+
+    #[test]
+    fn validation_still_applies() {
+        assert!(sim_config_from_str("qps = -3.0").is_err());
+    }
+
+    #[test]
+    fn noise_override_parsed() {
+        let cfg = sim_config_from_str("[noise]\nsigma_little = 0.6").unwrap();
+        let (b, l) = cfg.noise_override.unwrap();
+        assert_eq!(l, 0.6);
+        assert_eq!(b, crate::platform::CoreKind::Big.noise_sigma());
+    }
+}

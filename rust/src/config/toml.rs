@@ -1,0 +1,233 @@
+//! Minimal TOML-subset parser (serde/toml crates are unavailable offline).
+//!
+//! Supports the subset the launcher configs use: `[section]` /
+//! `[section.sub]` headers, `key = value` with string, integer, float,
+//! boolean and flat-array values, `#` comments, and blank lines. Keys are
+//! flattened to dotted paths (`section.key`).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Flat array of scalars.
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// As f64 (ints widen).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As i64.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// As &str.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A flattened document: dotted key → value.
+pub type Document = BTreeMap<String, Value>;
+
+/// Parse a TOML-subset string into a flattened document.
+pub fn parse(input: &str) -> Result<Document> {
+    let mut doc = Document::new();
+    let mut prefix = String::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(section) = line.strip_prefix('[') {
+            let section = section
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if section.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            prefix = section.to_string();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let full_key = if prefix.is_empty() {
+            key.to_string()
+        } else {
+            format!("{prefix}.{key}")
+        };
+        let value = parse_value(val.trim()).map_err(|m| err(lineno, &m))?;
+        if doc.insert(full_key.clone(), value).is_some() {
+            return Err(err(lineno, &format!("duplicate key `{full_key}`")));
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|it| parse_value(it.trim()))
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("line {}: {}", lineno + 1, msg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = parse(
+            r#"
+            qps = 30.0
+            seed = 42
+            name = "hurryup"  # trailing comment
+            [policy]
+            kind = "hurry_up"
+            sampling_ms = 25.0
+            enabled = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc["qps"].as_f64(), Some(30.0));
+        assert_eq!(doc["seed"].as_i64(), Some(42));
+        assert_eq!(doc["name"].as_str(), Some("hurryup"));
+        assert_eq!(doc["policy.kind"].as_str(), Some("hurry_up"));
+        assert_eq!(doc["policy.sampling_ms"].as_f64(), Some(25.0));
+        assert_eq!(doc["policy.enabled"].as_bool(), Some(true));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = parse("loads = [5, 10, 20, 30, 40]").unwrap();
+        match &doc["loads"] {
+            Value::Array(v) => {
+                assert_eq!(v.len(), 5);
+                assert_eq!(v[2].as_i64(), Some(20));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn int_widens_to_f64() {
+        let doc = parse("x = 5").unwrap();
+        assert_eq!(doc["x"].as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn underscore_in_int() {
+        let doc = parse("n = 100_000").unwrap();
+        assert_eq!(doc["n"].as_i64(), Some(100_000));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse(r##"s = "a#b""##).unwrap();
+        assert_eq!(doc["s"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("x = 1\nbroken line\n").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn unterminated_constructs_rejected() {
+        assert!(parse("[section").is_err());
+        assert!(parse(r#"s = "oops"#).is_err());
+        assert!(parse("a = [1, 2").is_err());
+    }
+}

@@ -1,0 +1,81 @@
+//! Crate-wide error type.
+//!
+//! Offline build: no `eyre`/`thiserror`, so this is a small hand-rolled enum
+//! with `From` conversions for everything the coordinator touches.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All error conditions surfaced by the library.
+#[derive(Debug)]
+pub enum Error {
+    /// I/O error (artifact files, IPC sockets, trace files).
+    Io(std::io::Error),
+    /// XLA / PJRT runtime error.
+    Xla(String),
+    /// Configuration parse or validation error.
+    Config(String),
+    /// Malformed IPC stats record.
+    Ipc(String),
+    /// Invalid argument / state in the public API.
+    Invalid(String),
+    /// Required AOT artifact missing (run `make artifacts`).
+    ArtifactMissing(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Ipc(m) => write!(f, "ipc error: {m}"),
+            Error::Invalid(m) => write!(f, "invalid: {m}"),
+            Error::ArtifactMissing(p) => {
+                write!(f, "artifact missing: {p} (run `make artifacts` first)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl Error {
+    /// Shorthand for an invalid-argument error.
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Error::Invalid(msg.into())
+    }
+
+    /// Shorthand for a config error.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = Error::ArtifactMissing("artifacts/scorer.hlo.txt".into());
+        let s = e.to_string();
+        assert!(s.contains("scorer.hlo.txt") && s.contains("make artifacts"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().contains("nope"));
+    }
+}

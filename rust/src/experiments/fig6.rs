@@ -1,0 +1,93 @@
+//! Fig 6 — PDF of query processing time: Hurry-up vs Linux mapping at
+//! 30 QPS (sampling 25 ms, threshold 50 ms).
+//!
+//! Paper's readings: (A) Hurry-up cuts the worst-case tail (1200 → 800 ms);
+//! (B) Hurry-up shows *higher* density at the migration-target band because
+//! it aggressively migrates potential long-runners; (C) migrated requests
+//! finish much earlier than their little-core fate under Linux.
+
+use super::runner::{compare_policies, paper_pair, Scale};
+use crate::config::SimConfig;
+use crate::mapper::PolicyKind;
+use crate::metrics::pdf_from_samples;
+use crate::util::fmt::Table;
+
+/// The figure's load.
+pub const QPS: f64 = 30.0;
+/// PDF range and bins (ms).
+pub const RANGE_MS: (f64, f64) = (0.0, 1400.0);
+/// Number of PDF bins.
+pub const BINS: usize = 56;
+
+/// Run both policies on the shared 30 QPS workload; return latency samples.
+pub fn samples(scale: Scale) -> (Vec<f64>, Vec<f64>) {
+    let base = SimConfig::paper_default(PolicyKind::LinuxRandom)
+        .with_qps(QPS)
+        .with_requests(scale.requests)
+        .with_seed(0xF166);
+    let outs = compare_policies(&base, &paper_pair());
+    let warm = base.warmup_requests;
+    (outs[0].latency_samples(warm), outs[1].latency_samples(warm))
+}
+
+/// Regenerate Fig 6.
+pub fn run(scale: Scale) -> Vec<Table> {
+    let (hu, linux) = samples(scale);
+    let pdf_hu = pdf_from_samples(&hu, RANGE_MS.0, RANGE_MS.1, BINS);
+    let pdf_li = pdf_from_samples(&linux, RANGE_MS.0, RANGE_MS.1, BINS);
+    let mut t = Table::new(
+        format!("Fig 6: latency PDF at {QPS} QPS (density × 1e3)"),
+        &["latency_ms", "hurry_up", "linux"],
+    );
+    for ((c, dh), (_, dl)) in pdf_hu.iter().zip(&pdf_li) {
+        t.row(&[
+            format!("{c:.0}"),
+            format!("{:.4}", dh * 1e3),
+            format!("{:.4}", dl * 1e3),
+        ]);
+    }
+    // Headline summary row table.
+    let mx = |v: &[f64]| v.iter().cloned().fold(0.0f64, f64::max);
+    let mut s = Table::new(
+        "Fig 6 summary (point A: worst-case tail)",
+        &["policy", "max_ms", "paper_max_ms"],
+    );
+    s.row(&["hurry-up".into(), format!("{:.0}", mx(&hu)), "~800".into()]);
+    s.row(&["linux".into(), format!("{:.0}", mx(&linux)), "~1200".into()]);
+    vec![t, s]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worst_case_tail_cut() {
+        let (hu, linux) = samples(Scale { requests: 6_000 });
+        let mx = |v: &[f64]| v.iter().cloned().fold(0.0f64, f64::max);
+        // Point A: Hurry-up's worst case well below Linux's.
+        assert!(
+            mx(&hu) < 0.85 * mx(&linux),
+            "hu max {} vs linux max {}",
+            mx(&hu),
+            mx(&linux)
+        );
+    }
+
+    #[test]
+    fn tail_mass_shifts_left() {
+        let (hu, linux) = samples(Scale { requests: 6_000 });
+        let over = |v: &[f64], thr: f64| {
+            v.iter().filter(|&&x| x > thr).count() as f64 / v.len() as f64
+        };
+        // Far fewer >500 ms requests under Hurry-up.
+        assert!(over(&hu, 500.0) < over(&linux, 500.0));
+    }
+
+    #[test]
+    fn pdf_tables_render() {
+        let tables = run(Scale::tiny());
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].len(), BINS);
+    }
+}

@@ -1,0 +1,98 @@
+//! Fig 8 — tail latency at various loads, Hurry-up vs Linux mapping.
+//!
+//! The paper's headline: Hurry-up reduces tail latency at every load, by up
+//! to 86 % (at 20 QPS) and 39.5 % on average; at the highest load (40 QPS)
+//! the cut shrinks to ~10 % because both policies queue heavily.
+
+use super::runner::{compare_policies, paper_pair, Scale};
+use crate::config::SimConfig;
+use crate::mapper::PolicyKind;
+use crate::util::fmt::Table;
+
+/// The figure's load points (QPS).
+pub const LOADS: [f64; 5] = [5.0, 10.0, 20.0, 30.0, 40.0];
+
+/// Run one load; returns (hurry-up p90, linux p90).
+pub fn load_p90s(qps: f64, requests: usize) -> (f64, f64) {
+    let base = SimConfig::paper_default(PolicyKind::LinuxRandom)
+        .with_qps(qps)
+        .with_requests(requests)
+        .with_seed(0xF168);
+    let outs = compare_policies(&base, &paper_pair());
+    (outs[0].p90_ms(), outs[1].p90_ms())
+}
+
+/// Regenerate Fig 8, including the headline mean-reduction row.
+pub fn run(scale: Scale) -> Vec<Table> {
+    let requests = scale.cell_requests(5);
+    let mut t = Table::new(
+        "Fig 8: tail latency (p90, ms) vs load",
+        &["qps", "hurry_up_ms", "linux_ms", "reduction"],
+    );
+    let mut reductions = Vec::new();
+    for qps in LOADS {
+        let (hu, li) = load_p90s(qps, requests);
+        let red = 1.0 - hu / li;
+        reductions.push(red);
+        t.row(&[
+            format!("{qps:.0}"),
+            format!("{hu:.0}"),
+            format!("{li:.0}"),
+            format!("{:.1}%", red * 100.0),
+        ]);
+    }
+    let mean = reductions.iter().sum::<f64>() / reductions.len() as f64;
+    let max = reductions.iter().cloned().fold(f64::MIN, f64::max);
+    let mut s = Table::new("Fig 8 summary", &["metric", "measured", "paper"]);
+    s.row(&[
+        "mean tail-latency reduction".into(),
+        format!("{:.1}%", mean * 100.0),
+        "39.5%".into(),
+    ]);
+    s.row(&[
+        "max tail-latency reduction".into(),
+        format!("{:.1}%", max * 100.0),
+        "86% @ 20 QPS".into(),
+    ]);
+    s.row(&[
+        "reduction at 40 QPS".into(),
+        format!("{:.1}%", reductions[4] * 100.0),
+        "~10%".into(),
+    ]);
+    vec![t, s]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hurryup_wins_at_every_load() {
+        for qps in LOADS {
+            let (hu, li) = load_p90s(qps, 5_000);
+            assert!(hu < li, "qps={qps}: hu {hu} vs linux {li}");
+        }
+    }
+
+    #[test]
+    fn reduction_peaks_mid_load_and_shrinks_at_saturation() {
+        let red = |qps: f64| {
+            let (hu, li) = load_p90s(qps, 6_000);
+            1.0 - hu / li
+        };
+        let r20 = red(20.0);
+        let r40 = red(40.0);
+        assert!(
+            r20 > r40,
+            "mid-load reduction ({r20}) should exceed saturation reduction ({r40})"
+        );
+        assert!(r20 > 0.3, "r20={r20} should be large");
+    }
+
+    #[test]
+    fn table_shape() {
+        let tables = run(Scale::tiny());
+        assert_eq!(tables[0].len(), LOADS.len());
+        assert_eq!(tables[1].len(), 3);
+    }
+}

@@ -1,0 +1,102 @@
+//! Fig 9 — sensitivity of tail latency and energy to the migration
+//! threshold, across loads, with the sampling interval fixed at 50 ms.
+//!
+//! Paper's readings: at mid loads a higher threshold means higher latency
+//! and lower energy (requests linger on little cores); a lower threshold
+//! means lower latency and higher energy (everything rushes to big cores).
+
+use super::runner::Scale;
+use crate::config::SimConfig;
+use crate::mapper::PolicyKind;
+use crate::sim::Simulation;
+use crate::util::fmt::Table;
+
+/// Migration thresholds swept (ms).
+pub const THRESHOLDS: [f64; 5] = [25.0, 50.0, 100.0, 200.0, 400.0];
+/// Loads swept (QPS) — the paper's Fig 9 x-groups.
+pub const LOADS: [f64; 6] = [5.0, 10.0, 15.0, 20.0, 30.0, 40.0];
+/// Sampling interval fixed at 50 ms for the whole figure.
+pub const SAMPLING_MS: f64 = 50.0;
+
+/// One (threshold, load) cell: (p90 ms, energy J).
+pub fn cell(threshold_ms: f64, qps: f64, requests: usize) -> (f64, f64) {
+    let cfg = SimConfig::paper_default(PolicyKind::HurryUp {
+        sampling_ms: SAMPLING_MS,
+        threshold_ms,
+    })
+    .with_qps(qps)
+    .with_requests(requests)
+    .with_seed(0xF169);
+    let out = Simulation::new(cfg).run();
+    (out.p90_ms(), out.energy.total_j())
+}
+
+/// Regenerate Fig 9.
+pub fn run(scale: Scale) -> Vec<Table> {
+    let requests = scale.cell_requests(THRESHOLDS.len() * LOADS.len());
+    let mut t = Table::new(
+        format!("Fig 9: threshold sensitivity (sampling = {SAMPLING_MS} ms)"),
+        &["qps", "threshold_ms", "p90_ms", "energy_J"],
+    );
+    for qps in LOADS {
+        for thr in THRESHOLDS {
+            let (p90, energy) = cell(thr, qps, requests);
+            t.row(&[
+                format!("{qps:.0}"),
+                format!("{thr:.0}"),
+                format!("{p90:.0}"),
+                format!("{energy:.1}"),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn higher_threshold_higher_latency_mid_load() {
+        // Paper: at 10–30 QPS, threshold ↑ ⇒ latency ↑.
+        let n = 4_000;
+        let (p_50, _) = cell(50.0, 20.0, n);
+        let (p_400, _) = cell(400.0, 20.0, n);
+        assert!(
+            p_400 > p_50,
+            "threshold 400 p90 {p_400} should exceed threshold 50 p90 {p_50}"
+        );
+    }
+
+    #[test]
+    fn lower_threshold_higher_big_cluster_energy() {
+        // Energy comparison on the *big cluster* channel: lower threshold
+        // migrates more requests to big cores sooner.
+        use crate::platform::MeterChannel;
+        let n = 4_000;
+        let run_thr = |thr: f64| {
+            let cfg = SimConfig::paper_default(PolicyKind::HurryUp {
+                sampling_ms: SAMPLING_MS,
+                threshold_ms: thr,
+            })
+            .with_qps(15.0)
+            .with_requests(n)
+            .with_seed(0xF169);
+            Simulation::new(cfg).run()
+        };
+        let lo = run_thr(25.0);
+        let hi = run_thr(400.0);
+        assert!(
+            lo.energy.channel_j(MeterChannel::BigCluster)
+                > hi.energy.channel_j(MeterChannel::BigCluster),
+            "threshold 25 should burn more big-cluster energy"
+        );
+        assert!(lo.migrations > hi.migrations);
+    }
+
+    #[test]
+    fn table_has_full_grid() {
+        let tables = run(Scale::tiny());
+        assert_eq!(tables[0].len(), THRESHOLDS.len() * LOADS.len());
+    }
+}

@@ -1,0 +1,91 @@
+//! Experiment harness: one module per figure/table of the paper's
+//! evaluation, each regenerating the same rows/series the paper reports.
+//!
+//! | id          | paper content                                     |
+//! |-------------|---------------------------------------------------|
+//! | `fig1`      | time + energy vs #keywords, big vs little core    |
+//! | `fig2`      | latency distribution by core config               |
+//! | `fig3`      | tail latency + socket power normalised to 1-L     |
+//! | `fig6`      | latency PDF, Hurry-up vs Linux @30 QPS            |
+//! | `fig7`      | tail latency vs energy trade-off across loads     |
+//! | `fig8`      | tail latency vs load (+ the headline 39.5 %)      |
+//! | `fig9`      | threshold × load sensitivity (sampling = 50 ms)   |
+//! | `power_table` | §IV-A power-efficiency facts                    |
+//! | `ablations` | extra design-choice studies (DESIGN.md §6)        |
+//!
+//! Scale: experiments default to a fast setting; set `HURRYUP_FULL=1` for
+//! the paper's 1×10⁵-request scale.
+
+pub mod ablations;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod power_table;
+pub mod runner;
+
+pub use runner::{compare_policies, Scale};
+
+use crate::util::fmt::Table;
+
+/// An experiment produces one or more printable tables.
+pub type ExperimentFn = fn(Scale) -> Vec<Table>;
+
+/// Registry of all experiments by id.
+pub fn registry() -> Vec<(&'static str, ExperimentFn)> {
+    vec![
+        ("fig1", fig1::run as ExperimentFn),
+        ("fig2", fig2::run as ExperimentFn),
+        ("fig3", fig3::run as ExperimentFn),
+        ("fig6", fig6::run as ExperimentFn),
+        ("fig7", fig7::run as ExperimentFn),
+        ("fig8", fig8::run as ExperimentFn),
+        ("fig9", fig9::run as ExperimentFn),
+        ("power_table", power_table::run as ExperimentFn),
+        ("ablations", ablations::run as ExperimentFn),
+    ]
+}
+
+/// Run one experiment by id, printing its tables. Returns false if unknown.
+pub fn run_by_id(id: &str, scale: Scale) -> bool {
+    for (name, f) in registry() {
+        if name == id {
+            for table in f(scale) {
+                table.print();
+                println!();
+            }
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_paper_figure() {
+        let ids: Vec<&str> = registry().iter().map(|(n, _)| *n).collect();
+        for required in [
+            "fig1",
+            "fig2",
+            "fig3",
+            "fig6",
+            "fig7",
+            "fig8",
+            "fig9",
+            "power_table",
+        ] {
+            assert!(ids.contains(&required), "missing {required}");
+        }
+    }
+
+    #[test]
+    fn unknown_id_reports_false() {
+        assert!(!run_by_id("fig99", Scale::tiny()));
+    }
+}

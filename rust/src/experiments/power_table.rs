@@ -1,0 +1,88 @@
+//! §IV-A power facts — the calibration targets of the power model, printed
+//! paper-vs-model so every claim is auditable.
+//!
+//! Paper claims: a single big core is more power-efficient per IPS than a
+//! little core *including* the rest-of-system share; a little cluster beats
+//! a big cluster; excluding rest-of-system a little core is 2.3× more
+//! efficient; rest-of-system ≈ one big core at full utilisation (0.76 W);
+//! Fig 3's 7.8× single-core active-power ratio.
+
+use super::runner::Scale;
+use crate::platform::{CoreKind, PowerModel};
+use crate::util::fmt::Table;
+
+/// Regenerate the §IV-A facts table.
+pub fn run(_scale: Scale) -> Vec<Table> {
+    let p = PowerModel::juno_r1();
+    let mut t = Table::new(
+        "§IV-A power facts: paper vs calibrated model",
+        &["fact", "model", "paper"],
+    );
+    let act_ratio = p.big_active_w / p.little_active_w;
+    t.row(&[
+        "big/little active power (Fig 3)".into(),
+        format!("{act_ratio:.1}x"),
+        "7.8x".into(),
+    ]);
+    let excl = p.efficiency_excl_rest(CoreKind::Little) / p.efficiency_excl_rest(CoreKind::Big);
+    t.row(&[
+        "little per-IPS efficiency excl. rest".into(),
+        format!("{excl:.1}x big"),
+        "2.3x big".into(),
+    ]);
+    let incl =
+        p.efficiency_incl_rest(CoreKind::Big) / p.efficiency_incl_rest(CoreKind::Little);
+    t.row(&[
+        "big per-IPS efficiency incl. rest".into(),
+        format!("{:+.0}%", (incl - 1.0) * 100.0),
+        "+52%".into(),
+    ]);
+    // Cluster comparison at full utilisation, incl. rest share.
+    let big_cluster = 2.0 * CoreKind::Big.speed() / (2.0 * p.big_active_w + p.rest_w);
+    let little_cluster = 4.0 * CoreKind::Little.speed() / (4.0 * p.little_active_w + p.rest_w);
+    t.row(&[
+        "little cluster vs big cluster (IPS/W)".into(),
+        format!("{:+.0}%", (little_cluster / big_cluster - 1.0) * 100.0),
+        "+25%".into(),
+    ]);
+    t.row(&[
+        "rest-of-system power".into(),
+        format!("{:.2} W", p.rest_w),
+        "0.76 W (~1 big core)".into(),
+    ]);
+    t.row(&[
+        "big core active power".into(),
+        format!("{:.2} W", p.big_active_w),
+        "~0.76-1.3 W".into(),
+    ]);
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn directions_match_paper() {
+        let p = PowerModel::juno_r1();
+        // Every §IV-A claim's *direction* must hold in the model.
+        assert!(p.big_active_w / p.little_active_w > 5.0);
+        assert!(
+            p.efficiency_excl_rest(CoreKind::Little) > p.efficiency_excl_rest(CoreKind::Big)
+        );
+        assert!(
+            p.efficiency_incl_rest(CoreKind::Big) > p.efficiency_incl_rest(CoreKind::Little)
+        );
+        let big_cluster = 2.0 * CoreKind::Big.speed() / (2.0 * p.big_active_w + p.rest_w);
+        let little_cluster =
+            4.0 * CoreKind::Little.speed() / (4.0 * p.little_active_w + p.rest_w);
+        assert!(little_cluster > big_cluster);
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = run(Scale::tiny());
+        assert_eq!(t.len(), 1);
+        assert!(t[0].len() >= 5);
+    }
+}

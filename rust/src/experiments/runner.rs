@@ -1,0 +1,118 @@
+//! Shared experiment infrastructure: scale control and paired policy
+//! comparisons over a shared workload trace (so latency differences are
+//! policy-caused, never workload-sampling noise).
+
+use crate::config::SimConfig;
+use crate::loadgen::{ArrivalProcess, QueryGen, Workload};
+use crate::mapper::PolicyKind;
+use crate::sim::{SimOutput, Simulation};
+use crate::util::Rng;
+
+/// Experiment scale.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    /// Requests per run.
+    pub requests: usize,
+}
+
+impl Scale {
+    /// Scale from `HURRYUP_FULL` / `HURRYUP_REQUESTS` env (default: fast).
+    pub fn from_env() -> Scale {
+        if let Ok(n) = std::env::var("HURRYUP_REQUESTS") {
+            if let Ok(n) = n.parse() {
+                return Scale { requests: n };
+            }
+        }
+        if std::env::var("HURRYUP_FULL").map(|v| v == "1").unwrap_or(false) {
+            Scale { requests: 100_000 } // the paper's experiment scale
+        } else {
+            Scale { requests: 20_000 }
+        }
+    }
+
+    /// Minimal scale for unit tests.
+    pub fn tiny() -> Scale {
+        Scale { requests: 1_500 }
+    }
+
+    /// Scale down a request count proportionally (figures that sweep many
+    /// cells use fewer requests per cell).
+    pub fn cell_requests(&self, divisor: usize) -> usize {
+        (self.requests / divisor).max(500)
+    }
+}
+
+/// Generate the shared workload a config implies (same seed ⇒ same trace).
+pub fn shared_workload(cfg: &SimConfig) -> Workload {
+    let mut rng = Rng::new(cfg.seed);
+    let gen = QueryGen::new(cfg.keyword_mix, 0);
+    Workload::generate(
+        ArrivalProcess::Poisson { qps: cfg.qps },
+        &gen,
+        cfg.num_requests,
+        false,
+        &mut rng.fork(),
+    )
+}
+
+/// Run several policies over the *same* workload trace derived from `base`.
+pub fn compare_policies(base: &SimConfig, policies: &[PolicyKind]) -> Vec<SimOutput> {
+    let workload = shared_workload(base);
+    policies
+        .iter()
+        .map(|&p| Simulation::new(base.clone().with_policy(p)).run_workload(&workload))
+        .collect()
+}
+
+/// The two policies of the paper's head-to-head, at the Fig 6–8 parameters.
+pub fn paper_pair() -> [PolicyKind; 2] {
+    [
+        PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        },
+        PolicyKind::LinuxRandom,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_workload_is_deterministic() {
+        let cfg = SimConfig::paper_default(PolicyKind::LinuxRandom).with_requests(100);
+        let a = shared_workload(&cfg);
+        let b = shared_workload(&cfg);
+        assert_eq!(a.requests, b.requests);
+    }
+
+    #[test]
+    fn compare_runs_same_trace() {
+        let cfg = SimConfig::paper_default(PolicyKind::LinuxRandom)
+            .with_requests(800)
+            .with_qps(10.0);
+        let outs = compare_policies(&cfg, &paper_pair());
+        assert_eq!(outs.len(), 2);
+        // Same arrivals ⇒ same request count and same (arrival, keywords)
+        // multiset (per_request is in completion order, which may differ).
+        assert_eq!(outs[0].completed, outs[1].completed);
+        let key = |o: &crate::sim::SimOutput| {
+            let mut v: Vec<(u64, usize)> = o
+                .per_request
+                .iter()
+                .map(|r| (r.arrived_ms.to_bits(), r.keywords))
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(key(&outs[0]), key(&outs[1]));
+    }
+
+    #[test]
+    fn scale_env_and_tiny() {
+        assert!(Scale::tiny().requests < 5_000);
+        assert_eq!(Scale { requests: 9000 }.cell_requests(3), 3000);
+        assert_eq!(Scale { requests: 900 }.cell_requests(10), 500); // floor
+    }
+}

@@ -1,0 +1,166 @@
+//! Stats-stream transport over a real OS-level IPC channel.
+//!
+//! The paper's search application writes stats lines into a pipe the
+//! Hurry-up Mapper reads (blocking when no data is available — §III-C).
+//! Live mode uses a `UnixStream` pair: many worker threads share the writer
+//! (line writes are serialized by a mutex so records never interleave
+//! mid-line), the mapper thread owns the reader.
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::sync::{Arc, Mutex};
+
+use super::codec::StatsRecord;
+use crate::error::Result;
+
+/// Shared, thread-safe writer half of the stats channel.
+#[derive(Clone)]
+pub struct StatsWriter {
+    inner: Arc<Mutex<UnixStream>>,
+}
+
+impl StatsWriter {
+    /// Write one record as a line. Blocking; called from search threads at
+    /// request begin/end (two syscalls per request — negligible vs. ms-scale
+    /// service times).
+    pub fn send(&self, rec: &StatsRecord) -> Result<()> {
+        let mut line = rec.encode();
+        line.push('\n');
+        let mut stream = self.inner.lock().expect("stats writer poisoned");
+        stream.write_all(line.as_bytes())?;
+        Ok(())
+    }
+
+    /// Close the channel (readers see EOF once all writer clones drop).
+    pub fn shutdown(&self) {
+        if let Ok(stream) = self.inner.lock() {
+            let _ = stream.shutdown(std::net::Shutdown::Write);
+        }
+    }
+}
+
+/// Reader half: owned by the mapper thread.
+pub struct StatsReader {
+    inner: BufReader<UnixStream>,
+    line: String,
+}
+
+impl StatsReader {
+    /// Blocking read of the next record (paper: "blocks waiting in case
+    /// there is no available data"). Returns `Ok(None)` at EOF (all writers
+    /// gone), `Err` on a malformed line.
+    pub fn recv(&mut self) -> Result<Option<StatsRecord>> {
+        loop {
+            self.line.clear();
+            let n = self.inner.read_line(&mut self.line)?;
+            if n == 0 {
+                return Ok(None);
+            }
+            if self.line.trim().is_empty() {
+                continue;
+            }
+            return StatsRecord::parse(&self.line).map(Some);
+        }
+    }
+
+    /// Set a read timeout so the mapper can wake up to run its sampling
+    /// window even when the stream is quiet. `recv` then returns `Err` with
+    /// a `WouldBlock`/`TimedOut` io error on timeout.
+    pub fn set_timeout(&mut self, dur: Option<std::time::Duration>) -> Result<()> {
+        self.inner.get_ref().set_read_timeout(dur)?;
+        Ok(())
+    }
+}
+
+/// Create a connected (writer, reader) pair over a `UnixStream` socketpair.
+pub fn stats_channel() -> Result<(StatsWriter, StatsReader)> {
+    let (tx, rx) = UnixStream::pair()?;
+    Ok((
+        StatsWriter {
+            inner: Arc::new(Mutex::new(tx)),
+        },
+        StatsReader {
+            inner: BufReader::new(rx),
+            line: String::new(),
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ipc::codec::RequestTag;
+    use crate::platform::ThreadId;
+
+    fn rec(tid: usize, seq: u64, ts: u64) -> StatsRecord {
+        StatsRecord {
+            tid: ThreadId(tid),
+            rid: RequestTag::from_seq(seq),
+            ts_ms: ts,
+        }
+    }
+
+    #[test]
+    fn roundtrip_over_socketpair() {
+        let (tx, mut rx) = stats_channel().unwrap();
+        let sent = vec![rec(1, 10, 100), rec(2, 11, 105), rec(1, 10, 190)];
+        for r in &sent {
+            tx.send(r).unwrap();
+        }
+        tx.shutdown();
+        let mut got = Vec::new();
+        while let Some(r) = rx.recv().unwrap() {
+            got.push(r);
+        }
+        assert_eq!(got, sent);
+    }
+
+    #[test]
+    fn concurrent_writers_never_interleave() {
+        let (tx, mut rx) = stats_channel().unwrap();
+        let mut handles = Vec::new();
+        for t in 0..8usize {
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..200u64 {
+                    tx.send(&rec(t, (t as u64) << 32 | i, i)).unwrap();
+                }
+            }));
+        }
+        drop(tx); // writers hold clones
+        let reader = std::thread::spawn(move || {
+            let mut n = 0;
+            while let Some(r) = rx.recv().unwrap() {
+                // Parsing succeeded => no mid-line interleaving.
+                assert!(r.tid.0 < 8);
+                n += 1;
+                if n == 8 * 200 {
+                    break;
+                }
+            }
+            n
+        });
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(reader.join().unwrap(), 1600);
+    }
+
+    #[test]
+    fn eof_returns_none() {
+        let (tx, mut rx) = stats_channel().unwrap();
+        tx.send(&rec(0, 1, 2)).unwrap();
+        tx.shutdown();
+        drop(tx);
+        assert!(rx.recv().unwrap().is_some());
+        assert!(rx.recv().unwrap().is_none());
+    }
+
+    #[test]
+    fn timeout_surfaces_as_err() {
+        let (_tx, mut rx) = stats_channel().unwrap();
+        rx.set_timeout(Some(std::time::Duration::from_millis(20))).unwrap();
+        let err = rx.recv();
+        assert!(err.is_err(), "expected timeout error");
+    }
+}

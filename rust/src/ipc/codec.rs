@@ -1,0 +1,166 @@
+//! Wire format of the stats stream: `TID;RID;TIMESTAMP\n`.
+//!
+//! `RID` is a 4-character printable tag, as in the paper's snapshot
+//! (`ixI.`, `1J.D`, `579[`, `Xrt@`, `qc80`): sequential request numbers
+//! encoded base-85-ish over a printable alphabet.
+
+use crate::error::{Error, Result};
+use crate::platform::ThreadId;
+
+/// Printable alphabet for request tags (85 symbols, no `;` or whitespace —
+/// the field separator must never appear inside a tag).
+const ALPHABET: &[u8; 85] =
+    b"0123456789ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz.@[]{}()<>+-*/=_!?%&$~^";
+
+/// A 4-printable-character request identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestTag(pub [u8; 4]);
+
+impl RequestTag {
+    /// Encode a sequential request number (unique below 85⁴ ≈ 52.2 M —
+    /// far above the paper's 1×10⁵-request experiments).
+    pub fn from_seq(seq: u64) -> RequestTag {
+        let mut v = seq % 85u64.pow(4);
+        let mut buf = [0u8; 4];
+        for slot in buf.iter_mut() {
+            *slot = ALPHABET[(v % 85) as usize];
+            v /= 85;
+        }
+        RequestTag(buf)
+    }
+
+    /// The tag as a `&str` (always valid ASCII).
+    pub fn as_str(&self) -> &str {
+        std::str::from_utf8(&self.0).expect("tags are ASCII by construction")
+    }
+}
+
+impl std::fmt::Display for RequestTag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One stats-stream record. Emitted once when a thread starts processing a
+/// request and once when it finishes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StatsRecord {
+    /// Search thread id.
+    pub tid: ThreadId,
+    /// Request tag (unique per in-flight request).
+    pub rid: RequestTag,
+    /// Event timestamp in milliseconds.
+    pub ts_ms: u64,
+}
+
+impl StatsRecord {
+    /// Encode as one wire line (without trailing newline).
+    pub fn encode(&self) -> String {
+        format!("{};{};{}", self.tid.0, self.rid, self.ts_ms)
+    }
+
+    /// Parse one wire line.
+    pub fn parse(line: &str) -> Result<StatsRecord> {
+        let mut parts = line.trim_end().split(';');
+        let tid = parts
+            .next()
+            .and_then(|s| s.parse::<usize>().ok())
+            .ok_or_else(|| bad(line, "thread id"))?;
+        let rid_s = parts.next().ok_or_else(|| bad(line, "request id"))?;
+        let rid_b = rid_s.as_bytes();
+        if rid_b.len() != 4 {
+            return Err(bad(line, "request id must be 4 chars"));
+        }
+        let rid = RequestTag([rid_b[0], rid_b[1], rid_b[2], rid_b[3]]);
+        let ts_ms = parts
+            .next()
+            .and_then(|s| s.parse::<u64>().ok())
+            .ok_or_else(|| bad(line, "timestamp"))?;
+        if parts.next().is_some() {
+            return Err(bad(line, "trailing fields"));
+        }
+        Ok(StatsRecord {
+            tid: ThreadId(tid),
+            rid,
+            ts_ms,
+        })
+    }
+}
+
+fn bad(line: &str, what: &str) -> Error {
+    Error::Ipc(format!("malformed stats record ({what}): `{line}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn paper_snapshot_lines_parse() {
+        // Verbatim from §III-C's example stream.
+        for line in [
+            "75;ixI.;1498060927539",
+            "77;1J.D;1498060927953",
+            "78;579[;1498060927954",
+            "79;Xrt@;1498060928003",
+            "80;qc80;1498060928014",
+            "77;1J.D;1498060928023",
+        ] {
+            let rec = StatsRecord::parse(line).unwrap();
+            assert_eq!(rec.encode(), line);
+        }
+    }
+
+    #[test]
+    fn begin_end_pairing_by_duplicate_rid() {
+        let a = StatsRecord::parse("77;1J.D;1498060927953").unwrap();
+        let b = StatsRecord::parse("77;1J.D;1498060928023").unwrap();
+        assert_eq!(a.rid, b.rid);
+        assert_eq!(b.ts_ms - a.ts_ms, 70); // the paper's 70 ms example
+    }
+
+    #[test]
+    fn tags_unique_for_experiment_scale() {
+        let mut seen = std::collections::HashSet::new();
+        for seq in 0..200_000u64 {
+            assert!(seen.insert(RequestTag::from_seq(seq)), "dup at {seq}");
+        }
+    }
+
+    #[test]
+    fn tags_never_contain_separator() {
+        for seq in (0..85u64.pow(4)).step_by(104_729) {
+            let tag = RequestTag::from_seq(seq);
+            assert!(!tag.as_str().contains(';'), "{tag}");
+            assert_eq!(tag.as_str().len(), 4);
+        }
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        for line in [
+            "",
+            "x;abcd;123",
+            "1;toolong;123",
+            "1;abc;123",
+            "1;abcd;notanum",
+            "1;abcd;123;extra",
+        ] {
+            assert!(StatsRecord::parse(line).is_err(), "{line:?}");
+        }
+    }
+
+    #[test]
+    fn prop_encode_parse_roundtrip() {
+        prop::check(prop::DEFAULT_CASES, |rng, _| {
+            let rec = StatsRecord {
+                tid: ThreadId(rng.below(1000)),
+                rid: RequestTag::from_seq(rng.next_u64()),
+                ts_ms: rng.next_u64() % 10_u64.pow(13),
+            };
+            let parsed = StatsRecord::parse(&rec.encode()).unwrap();
+            assert_eq!(parsed, rec);
+        });
+    }
+}

@@ -1,0 +1,18 @@
+//! Application→mapper stats stream — the paper's IPC channel.
+//!
+//! Search threads record a `TID;RID;TIMESTAMP` line when they begin and when
+//! they finish processing a request (§III-B gives the exact wire snapshot:
+//! `75;ixI.;1498060927539`). The Hurry-up Mapper reads the stream from a
+//! pipe; a request id appearing a *second* time means that request finished
+//! (Algorithm 1 lines 5–8 — there is no explicit begin/end flag on the
+//! wire).
+//!
+//! `codec` implements the line format with the paper's 4-printable-character
+//! request ids; `channel` carries it over a real `UnixStream` pair in live
+//! mode.
+
+pub mod channel;
+pub mod codec;
+
+pub use channel::{stats_channel, StatsReader, StatsWriter};
+pub use codec::{RequestTag, StatsRecord};

@@ -1,0 +1,25 @@
+//! Live thread-pool server: the end-to-end validation layer.
+//!
+//! Unlike the discrete-event simulator (which *models* service times), the
+//! live server actually executes queries against an in-memory index using
+//! the AOT-compiled XLA scorer — the full three-layer stack on a real
+//! request path:
+//!
+//! * one worker OS-thread per simulated core, each owning its own compiled
+//!   PJRT executable (compiled once at startup, never per request);
+//! * core heterogeneity emulated by per-block scoring repetitions: a worker
+//!   "on" a little core performs `1/speed(little) ≈ 3.3×` the block passes
+//!   of a big core, re-reading its current speed *between blocks* so a
+//!   migration takes effect mid-request exactly as `sched_setaffinity`
+//!   would;
+//! * workers write `TID;RID;TS` lines into a real `UnixStream` stats
+//!   channel; the Hurry-up mapper runs in its own thread, reading the
+//!   stream and swapping core affinities on its sampling interval — the
+//!   same `HurryUp` state machine the simulator uses;
+//! * energy is computed post-hoc from per-kind busy time via the same
+//!   calibrated power model.
+
+pub mod server;
+pub mod worker;
+
+pub use server::{LiveConfig, LiveRecord, LiveReport, LiveServer};

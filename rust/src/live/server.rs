@@ -1,0 +1,391 @@
+//! The live server: spawns workers + loadgen + mapper threads, runs a
+//! workload end to end, and reports latency/throughput/energy.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::worker::{DispatchQueue, EmulatedScorer, LiveRequest, SpeedCell};
+use crate::config::KeywordMix;
+use crate::error::Result;
+use crate::ipc::{stats_channel, RequestTag, StatsRecord, StatsWriter};
+use crate::loadgen::{ArrivalProcess, QueryGen, Workload};
+use crate::mapper::{HurryUp, HurryUpParams, Policy};
+use crate::metrics::LatencyHistogram;
+use crate::platform::{AffinityTable, CoreKind, EnergyMeters, PowerModel, ThreadId, Topology};
+use crate::runtime::XlaScorer;
+use crate::search::engine::BlockScorer;
+use crate::search::{Bm25Params, Index, Query, RustScorer, SearchEngine};
+use crate::util::Rng;
+
+/// Live-server configuration.
+#[derive(Clone, Debug)]
+pub struct LiveConfig {
+    /// Big cores.
+    pub big_cores: usize,
+    /// Little cores.
+    pub little_cores: usize,
+    /// Hurry-up params; `None` = static Linux-style mapping (no mapper).
+    pub hurryup: Option<HurryUpParams>,
+    /// Offered load, QPS.
+    pub qps: f64,
+    /// Requests to serve.
+    pub num_requests: usize,
+    /// Seed for workload generation.
+    pub seed: u64,
+    /// Execute blocks on the AOT XLA scorer (requires `make artifacts`);
+    /// false = pure-Rust scorer (identical ranking, no PJRT).
+    pub use_xla: bool,
+    /// Emulation pass multiplier (stretches service times so ms-scale
+    /// mapper thresholds bite on a small test corpus).
+    pub work_scale: f64,
+    /// Hits returned per query.
+    pub top_k: usize,
+    /// Keyword mix of the query stream.
+    pub keyword_mix: KeywordMix,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        LiveConfig {
+            big_cores: 2,
+            little_cores: 4,
+            hurryup: Some(HurryUpParams::default()),
+            qps: 30.0,
+            num_requests: 300,
+            seed: 7,
+            use_xla: false,
+            work_scale: 10.0,
+            top_k: 10,
+            keyword_mix: KeywordMix::Paper,
+        }
+    }
+}
+
+/// One served request's record.
+#[derive(Clone, Debug)]
+pub struct LiveRecord {
+    /// Keyword count.
+    pub keywords: usize,
+    /// Arrival, ms since epoch.
+    pub arrived_ms: f64,
+    /// Service start, ms.
+    pub started_ms: f64,
+    /// Completion, ms.
+    pub completed_ms: f64,
+    /// Worker thread that served it.
+    pub tid: usize,
+    /// Core kind at start.
+    pub first_kind: CoreKind,
+    /// Core kind at completion.
+    pub final_kind: CoreKind,
+    /// Scoring blocks executed (real passes incl. emulation).
+    pub passes: u64,
+    /// Top hit (doc id, score), if any.
+    pub top_hit: Option<(u32, f32)>,
+}
+
+impl LiveRecord {
+    /// End-to-end latency, ms.
+    pub fn latency_ms(&self) -> f64 {
+        self.completed_ms - self.arrived_ms
+    }
+}
+
+/// Aggregated live-run report.
+#[derive(Debug)]
+pub struct LiveReport {
+    /// End-to-end latency histogram.
+    pub latency: LatencyHistogram,
+    /// Per-request records (completion order).
+    pub per_request: Vec<LiveRecord>,
+    /// Post-hoc energy estimate from the calibrated power model.
+    pub energy: EnergyMeters,
+    /// Wall-clock duration, ms.
+    pub duration_ms: f64,
+    /// Migrations applied by the mapper.
+    pub migrations: usize,
+    /// Scorer backend used ("xla" or "rust").
+    pub backend: &'static str,
+    /// Total scoring passes across workers.
+    pub total_passes: u64,
+}
+
+impl LiveReport {
+    /// Achieved throughput, QPS.
+    pub fn throughput_qps(&self) -> f64 {
+        self.per_request.len() as f64 / (self.duration_ms / 1000.0)
+    }
+
+    /// p90 end-to-end latency, ms.
+    pub fn p90_ms(&self) -> f64 {
+        self.latency.percentile(0.90)
+    }
+}
+
+struct SharedState {
+    queue: DispatchQueue,
+    aff: Mutex<AffinityTable>,
+    speeds: Vec<SpeedCell>,
+    migrations: std::sync::atomic::AtomicUsize,
+    done: std::sync::atomic::AtomicUsize,
+}
+
+/// The live server.
+pub struct LiveServer {
+    cfg: LiveConfig,
+    index: Arc<Index>,
+}
+
+impl LiveServer {
+    /// New server over a prebuilt index.
+    pub fn new(cfg: LiveConfig, index: Arc<Index>) -> LiveServer {
+        LiveServer { cfg, index }
+    }
+
+    /// Serve a generated workload to completion and report.
+    pub fn run(&self) -> Result<LiveReport> {
+        let cfg = &self.cfg;
+        let topology = Topology::new(cfg.big_cores, cfg.little_cores);
+        let n_threads = topology.num_cores();
+        let aff = AffinityTable::round_robin(topology.clone());
+        let speeds: Vec<SpeedCell> = (0..n_threads)
+            .map(|t| SpeedCell::new(aff.kind_of(ThreadId(t)).speed()))
+            .collect();
+        let shared = Arc::new(SharedState {
+            queue: DispatchQueue::new(),
+            aff: Mutex::new(aff),
+            speeds,
+            migrations: std::sync::atomic::AtomicUsize::new(0),
+            done: std::sync::atomic::AtomicUsize::new(0),
+        });
+        let (stats_tx, stats_rx) = stats_channel()?;
+        let epoch = Instant::now();
+        let now_ms = move || epoch.elapsed().as_secs_f64() * 1e3;
+
+        // Workload (with concrete terms).
+        let mut rng = Rng::new(cfg.seed);
+        let qgen = QueryGen::new(cfg.keyword_mix, self.index.num_terms());
+        let workload = Workload::generate(
+            ArrivalProcess::Poisson { qps: cfg.qps },
+            &qgen,
+            cfg.num_requests,
+            true,
+            &mut rng,
+        );
+
+        // ---- mapper thread (Hurry-up over the real IPC stream) ----
+        // With no mapper (static Linux-style baseline) a drain thread reads
+        // the stream to EOF so the socket buffer can never fill up.
+        let mapper_handle = if let Some(params) = cfg.hurryup {
+            let shared = shared.clone();
+            let topo = topology.clone();
+            let total = cfg.num_requests;
+            let mut rx = stats_rx;
+            std::thread::spawn(move || {
+                let mut policy = HurryUp::new(params, topo.clone());
+                rx.set_timeout(Some(Duration::from_millis(
+                    (params.sampling_ms / 4.0).max(1.0) as u64,
+                )))
+                .ok();
+                let mut last_tick = 0.0f64;
+                loop {
+                    match rx.recv() {
+                        Ok(Some(rec)) => policy.observe(&rec),
+                        Ok(None) => break, // EOF: all writers gone
+                        Err(_) => {}       // timeout: fall through to tick check
+                    }
+                    let now = now_ms();
+                    if now - last_tick >= params.sampling_ms {
+                        last_tick = now;
+                        let mut aff = shared.aff.lock().expect("aff poisoned");
+                        let migs = policy.tick(now, &aff);
+                        for m in &migs {
+                            let (t_big, t_little) = aff.swap(m.big_core, m.little_core);
+                            shared.speeds[t_big.0]
+                                .set(aff.kind_of(t_big).speed());
+                            shared.speeds[t_little.0]
+                                .set(aff.kind_of(t_little).speed());
+                        }
+                        shared
+                            .migrations
+                            .fetch_add(migs.len(), Ordering::Relaxed);
+                    }
+                    if shared.done.load(Ordering::Relaxed) >= total {
+                        break;
+                    }
+                }
+                policy.migrations()
+            })
+        } else {
+            let mut rx = stats_rx;
+            std::thread::spawn(move || {
+                while let Ok(Some(_)) = rx.recv() {}
+                0usize
+            })
+        };
+
+        // ---- worker threads ----
+        let records: Arc<Mutex<Vec<LiveRecord>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut workers = Vec::new();
+        for t in 0..n_threads {
+            let shared = shared.clone();
+            let index = self.index.clone();
+            let records = records.clone();
+            let stats_tx: StatsWriter = stats_tx.clone();
+            let use_xla = cfg.use_xla;
+            let work_scale = cfg.work_scale;
+            let top_k = cfg.top_k;
+            workers.push(std::thread::spawn(move || -> Result<u64> {
+                // Per-thread scorer: PJRT client is not Send, build here.
+                let mut scorer: Box<dyn BlockScorer> = if use_xla {
+                    Box::new(XlaScorer::load()?)
+                } else {
+                    Box::new(RustScorer::new(Bm25Params::default()))
+                };
+                let engine = SearchEngine::new(index, top_k);
+                let mut rid_seq = (t as u64) << 40;
+                let mut passes_total = 0u64;
+                while let Some(req) = shared.queue.pop() {
+                    let started = now_ms();
+                    let first_kind = {
+                        let aff = shared.aff.lock().expect("aff poisoned");
+                        aff.kind_of(ThreadId(t))
+                    };
+                    let tag = RequestTag::from_seq(rid_seq);
+                    rid_seq += 1;
+                    stats_tx
+                        .send(&StatsRecord {
+                            tid: ThreadId(t),
+                            rid: tag,
+                            ts_ms: started as u64,
+                        })
+                        .ok();
+                    let mut emulated =
+                        EmulatedScorer::new(scorer.as_mut(), &shared.speeds[t], work_scale);
+                    let result = engine.search_with(&req.query, &mut emulated)?;
+                    let passes = emulated.passes;
+                    passes_total += passes;
+                    let completed = now_ms();
+                    stats_tx
+                        .send(&StatsRecord {
+                            tid: ThreadId(t),
+                            rid: tag,
+                            ts_ms: completed as u64,
+                        })
+                        .ok();
+                    let final_kind = {
+                        let aff = shared.aff.lock().expect("aff poisoned");
+                        aff.kind_of(ThreadId(t))
+                    };
+                    records.lock().expect("records poisoned").push(LiveRecord {
+                        keywords: req.query.keyword_count(),
+                        arrived_ms: req.arrived_ms,
+                        started_ms: started,
+                        completed_ms: completed,
+                        tid: t,
+                        first_kind,
+                        final_kind,
+                        passes,
+                        top_hit: result.hits.first().map(|h| (h.doc, h.score)),
+                    });
+                    shared.done.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(passes_total)
+            }));
+        }
+
+        // ---- load generator (this thread) ----
+        for req in &workload.requests {
+            let target = req.arrive_ms;
+            let now = now_ms();
+            if target > now {
+                std::thread::sleep(Duration::from_secs_f64((target - now) / 1e3));
+            }
+            let terms = req
+                .terms
+                .iter()
+                .map(|&id| self.index.term(id).to_string())
+                .collect();
+            shared.queue.push(LiveRequest {
+                widx: 0,
+                query: Query::from_terms(terms),
+                arrived_ms: now_ms(),
+            });
+        }
+        shared.queue.close();
+
+        // ---- join ----
+        let mut total_passes = 0u64;
+        for w in workers {
+            total_passes += w.join().expect("worker panicked")?;
+        }
+        stats_tx.shutdown();
+        drop(stats_tx);
+        let migrations = mapper_handle.join().expect("mapper panicked");
+        let duration_ms = now_ms();
+
+        // ---- post-hoc metrics ----
+        let mut per_request = records.lock().expect("records poisoned").clone();
+        per_request.sort_by(|a, b| a.completed_ms.partial_cmp(&b.completed_ms).unwrap());
+        let mut latency = LatencyHistogram::new();
+        for r in &per_request {
+            latency.record(r.latency_ms());
+        }
+        let energy = post_hoc_energy(&per_request, &topology, duration_ms);
+
+        Ok(LiveReport {
+            latency,
+            per_request,
+            energy,
+            duration_ms,
+            migrations,
+            backend: if cfg.use_xla { "xla" } else { "rust" },
+            total_passes,
+        })
+    }
+}
+
+/// Estimate energy from per-request busy intervals using the calibrated
+/// power model: busy time is attributed to the request's final core kind
+/// (migration windows are short relative to service times), idle time fills
+/// the remainder of each cluster.
+fn post_hoc_energy(
+    records: &[LiveRecord],
+    topology: &Topology,
+    duration_ms: f64,
+) -> EnergyMeters {
+    let power = PowerModel::juno_r1();
+    let mut meters = EnergyMeters::new();
+    let mut busy_big = 0.0;
+    let mut busy_little = 0.0;
+    for r in records {
+        let service = r.completed_ms - r.started_ms;
+        match r.final_kind {
+            CoreKind::Big => busy_big += service,
+            CoreKind::Little => busy_little += service,
+        }
+    }
+    let cap = |busy: f64, cores: usize| busy.min(cores as f64 * duration_ms);
+    let busy_big = cap(busy_big, topology.count(CoreKind::Big));
+    let busy_little = cap(busy_little, topology.count(CoreKind::Little));
+    meters.add_core_time(&power, CoreKind::Big, true, busy_big);
+    meters.add_core_time(&power, CoreKind::Little, true, busy_little);
+    meters.add_core_time(
+        &power,
+        CoreKind::Big,
+        false,
+        topology.count(CoreKind::Big) as f64 * duration_ms - busy_big,
+    );
+    meters.add_core_time(
+        &power,
+        CoreKind::Little,
+        false,
+        topology.count(CoreKind::Little) as f64 * duration_ms - busy_little,
+    );
+    meters.add_wall_time(&power, duration_ms);
+    meters
+}
+
+// NOTE: end-to-end tests live in rust/tests/live_integration.rs (they build
+// a corpus and exercise both backends).

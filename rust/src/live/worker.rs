@@ -1,0 +1,271 @@
+//! Worker-side pieces: the speed-emulating scorer wrapper and the shared
+//! dispatch queue.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use crate::error::Result;
+use crate::search::engine::{BlockScorer, BlockTopK, ScoreBlock};
+use crate::search::Query;
+
+/// A queued live request.
+#[derive(Clone, Debug)]
+pub struct LiveRequest {
+    /// Workload index.
+    pub widx: usize,
+    /// Parsed query.
+    pub query: Query,
+    /// Arrival timestamp, ms since server epoch.
+    pub arrived_ms: f64,
+}
+
+/// Shared FIFO dispatch queue with shutdown.
+#[derive(Default)]
+pub struct DispatchQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct QueueInner {
+    queue: VecDeque<LiveRequest>,
+    closed: bool,
+}
+
+impl DispatchQueue {
+    /// New empty queue.
+    pub fn new() -> DispatchQueue {
+        DispatchQueue::default()
+    }
+
+    /// Enqueue a request and wake one idle worker.
+    pub fn push(&self, req: LiveRequest) {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        g.queue.push_back(req);
+        drop(g);
+        self.cv.notify_one();
+    }
+
+    /// Blocking pop; `None` once closed and drained.
+    pub fn pop(&self) -> Option<LiveRequest> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if let Some(req) = g.queue.pop_front() {
+                return Some(req);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).expect("queue poisoned");
+        }
+    }
+
+    /// Close the queue: workers drain and exit.
+    pub fn close(&self) {
+        self.inner.lock().expect("queue poisoned").closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Current depth (diagnostics).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().expect("queue poisoned").queue.len()
+    }
+}
+
+/// Lock-free per-thread speed cell (f64 bits in an AtomicU64), updated by
+/// the mapper on migration, read by the worker between scoring blocks.
+pub struct SpeedCell(AtomicU64);
+
+impl SpeedCell {
+    /// New cell with an initial speed.
+    pub fn new(speed: f64) -> SpeedCell {
+        SpeedCell(AtomicU64::new(speed.to_bits()))
+    }
+
+    /// Current speed (units/ms).
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Acquire))
+    }
+
+    /// Update after a migration.
+    pub fn set(&self, speed: f64) {
+        self.0.store(speed.to_bits(), Ordering::Release);
+    }
+}
+
+/// Wraps a real scorer and emulates core speed by repeating block passes:
+/// a block costs `scale / speed` passes (fractional passes carried over),
+/// so a thread "on" a little core (speed 0.30) does ≈ 3.3× the compute of a
+/// big core — and re-reads the speed cell *between* blocks, so migrations
+/// apply mid-request.
+pub struct EmulatedScorer<'a> {
+    inner: &'a mut dyn BlockScorer,
+    speed: &'a SpeedCell,
+    /// Extra emulation passes multiplier (stretches service times so the
+    /// mapper's ms-scale thresholds are meaningful on a small test corpus).
+    scale: f64,
+    carry: f64,
+    /// Total block passes executed (work accounting).
+    pub passes: u64,
+    /// Whether a speed other than the initial one was ever observed.
+    pub observed_speeds: Vec<f64>,
+}
+
+impl<'a> EmulatedScorer<'a> {
+    /// Wrap `inner`, reading speed from `speed`, with a pass multiplier.
+    pub fn new(
+        inner: &'a mut dyn BlockScorer,
+        speed: &'a SpeedCell,
+        scale: f64,
+    ) -> EmulatedScorer<'a> {
+        EmulatedScorer {
+            inner,
+            speed,
+            scale,
+            carry: 0.0,
+            passes: 0,
+            observed_speeds: Vec::new(),
+        }
+    }
+}
+
+impl BlockScorer for EmulatedScorer<'_> {
+    fn score_block(&mut self, block: &ScoreBlock, idf: &[f32], avgdl: f32) -> Result<BlockTopK> {
+        let speed = self.speed.get();
+        if self
+            .observed_speeds
+            .last()
+            .map(|&s| s != speed)
+            .unwrap_or(true)
+        {
+            self.observed_speeds.push(speed);
+        }
+        // Pass budget emulates (a) a slower core and (b) per-keyword cost:
+        // a real engine traverses one postings structure per query term, so
+        // block cost grows with the number of active term slots — this is
+        // what makes keyword count the compute-intensity driver (Fig 1).
+        let active_terms = idf.iter().filter(|&&w| w != 0.0).count().max(1);
+        self.carry += self.scale * active_terms as f64 / speed;
+        let repeats = (self.carry.floor() as u64).max(1);
+        self.carry -= repeats as f64;
+        // §Perf: one repeated call uploads inputs once and re-executes.
+        let result = self
+            .inner
+            .score_block_repeated(block, idf, avgdl, repeats)?;
+        self.passes += repeats;
+        Ok(result)
+    }
+
+    fn label(&self) -> &'static str {
+        "emulated"
+    }
+}
+
+/// Shutdown flag shared across threads.
+pub type Shutdown = AtomicBool;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::engine::RustScorer;
+    use crate::search::Bm25Params;
+
+    fn dummy_block() -> (ScoreBlock, Vec<f32>) {
+        let mut b = ScoreBlock {
+            tf: vec![0.0; crate::search::DOC_BLOCK * crate::search::MAX_TERMS],
+            dl: vec![100.0; crate::search::DOC_BLOCK],
+            docs: vec![0, 1, 2],
+            max_tf: vec![0.0; crate::search::MAX_TERMS],
+            min_dl: 100.0,
+        };
+        b.tf[0] = 3.0;
+        b.tf[crate::search::MAX_TERMS] = 1.0;
+        // Exactly one active term slot so cost = scale / speed.
+        let mut idf = vec![0.0; crate::search::MAX_TERMS];
+        idf[0] = 1.0;
+        (b, idf)
+    }
+
+    #[test]
+    fn queue_fifo_and_close() {
+        let q = DispatchQueue::new();
+        for i in 0..3 {
+            q.push(LiveRequest {
+                widx: i,
+                query: Query::from_terms(vec![]),
+                arrived_ms: i as f64,
+            });
+        }
+        assert_eq!(q.depth(), 3);
+        assert_eq!(q.pop().unwrap().widx, 0);
+        assert_eq!(q.pop().unwrap().widx, 1);
+        q.close();
+        assert_eq!(q.pop().unwrap().widx, 2); // drain after close
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn queue_unblocks_waiters_on_close() {
+        let q = std::sync::Arc::new(DispatchQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn speed_cell_roundtrip() {
+        let c = SpeedCell::new(1.0);
+        assert_eq!(c.get(), 1.0);
+        c.set(0.30);
+        assert_eq!(c.get(), 0.30);
+    }
+
+    #[test]
+    fn emulated_scorer_pass_ratio() {
+        let (block, idf) = dummy_block();
+        let mut inner = RustScorer::new(Bm25Params::default());
+        // Big core, scale 1: exactly 1 pass per block.
+        let big = SpeedCell::new(1.0);
+        let mut em = EmulatedScorer::new(&mut inner, &big, 1.0);
+        for _ in 0..10 {
+            em.score_block(&block, &idf, 100.0).unwrap();
+        }
+        assert_eq!(em.passes, 10);
+        // Little core, scale 1: 1/0.3 ≈ 3.33 passes per block.
+        let little = SpeedCell::new(0.30);
+        let mut inner2 = RustScorer::new(Bm25Params::default());
+        let mut em = EmulatedScorer::new(&mut inner2, &little, 1.0);
+        for _ in 0..30 {
+            em.score_block(&block, &idf, 100.0).unwrap();
+        }
+        let ratio = em.passes as f64 / 30.0;
+        assert!((3.1..3.6).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn emulated_scorer_result_unaffected_by_speed() {
+        let (block, idf) = dummy_block();
+        let mut a = RustScorer::new(Bm25Params::default());
+        let direct = a.score_block(&block, &idf, 100.0).unwrap();
+        let slow = SpeedCell::new(0.30);
+        let mut inner = RustScorer::new(Bm25Params::default());
+        let mut em = EmulatedScorer::new(&mut inner, &slow, 2.0);
+        let emulated = em.score_block(&block, &idf, 100.0).unwrap();
+        assert_eq!(direct.entries, emulated.entries);
+    }
+
+    #[test]
+    fn speed_change_mid_stream_observed() {
+        let (block, idf) = dummy_block();
+        let cell = SpeedCell::new(1.0);
+        let mut inner = RustScorer::new(Bm25Params::default());
+        let mut em = EmulatedScorer::new(&mut inner, &cell, 1.0);
+        em.score_block(&block, &idf, 100.0).unwrap();
+        cell.set(0.30); // "migration"
+        em.score_block(&block, &idf, 100.0).unwrap();
+        assert_eq!(em.observed_speeds, vec![1.0, 0.30]);
+    }
+}

@@ -1,0 +1,88 @@
+//! Open-loop arrival processes.
+//!
+//! Faban's web-search driver is open-loop: request arrival times are
+//! independent of server completions (so queueing delays are *felt*, not
+//! hidden — crucial for tail-latency fidelity). Poisson arrivals are the
+//! standard model; Uniform is provided for deterministic debugging.
+
+use crate::util::Rng;
+
+/// How inter-arrival gaps are drawn.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Poisson process at `qps` (exponential gaps) — the default.
+    Poisson {
+        /// Offered load, queries/second.
+        qps: f64,
+    },
+    /// Fixed gaps at `qps` (no burstiness).
+    Uniform {
+        /// Offered load, queries/second.
+        qps: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Offered load in QPS.
+    pub fn qps(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { qps } | ArrivalProcess::Uniform { qps } => qps,
+        }
+    }
+
+    /// Generate `n` arrival timestamps (ms, ascending, starting after 0).
+    pub fn generate(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        let gap_ms = 1000.0 / self.qps();
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            t += match *self {
+                ArrivalProcess::Poisson { qps } => rng.exp(qps / 1000.0),
+                ArrivalProcess::Uniform { .. } => gap_ms,
+            };
+            out.push(t);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate_close() {
+        let mut rng = Rng::new(11);
+        let arr = ArrivalProcess::Poisson { qps: 30.0 }.generate(30_000, &mut rng);
+        let duration_s = arr.last().unwrap() / 1000.0;
+        let rate = arr.len() as f64 / duration_s;
+        assert!((rate - 30.0).abs() < 1.0, "rate={rate}");
+    }
+
+    #[test]
+    fn arrivals_strictly_increasing() {
+        let mut rng = Rng::new(12);
+        let arr = ArrivalProcess::Poisson { qps: 100.0 }.generate(5_000, &mut rng);
+        assert!(arr.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn uniform_gaps_exact() {
+        let mut rng = Rng::new(13);
+        let arr = ArrivalProcess::Uniform { qps: 10.0 }.generate(5, &mut rng);
+        assert_eq!(arr, vec![100.0, 200.0, 300.0, 400.0, 500.0]);
+    }
+
+    #[test]
+    fn poisson_gaps_bursty() {
+        // Poisson should show much higher gap variance than uniform.
+        let mut rng = Rng::new(14);
+        let arr = ArrivalProcess::Poisson { qps: 10.0 }.generate(10_000, &mut rng);
+        let gaps: Vec<f64> = arr.windows(2).map(|w| w[1] - w[0]).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let cv2 = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>()
+            / gaps.len() as f64
+            / (mean * mean);
+        assert!((cv2 - 1.0).abs() < 0.1, "cv²={cv2} (exp gaps ⇒ 1)");
+    }
+}

@@ -1,0 +1,16 @@
+//! Load generation — the Faban stand-in (the paper drives Elasticsearch
+//! with Faban from CloudSuite 3.0 on a separate machine).
+//!
+//! `arrivals` produces open-loop arrival times at a fixed offered QPS;
+//! `querygen` samples keyword counts (the paper's compute-intensity axis)
+//! and concrete query terms matching the corpus' Zipfian popularity;
+//! `trace` records and replays complete workloads so every experiment is
+//! reproducible bit-for-bit.
+
+pub mod arrivals;
+pub mod querygen;
+pub mod trace;
+
+pub use arrivals::ArrivalProcess;
+pub use querygen::QueryGen;
+pub use trace::{TraceRequest, Workload};

@@ -1,0 +1,153 @@
+//! Query generation: keyword counts + concrete terms.
+//!
+//! The paper's central observation (Fig 1) is that query cost scales with
+//! keyword count. The generator samples a keyword count from the configured
+//! [`KeywordMix`], then (for live mode) samples that many *distinct* term
+//! ids Zipf-distributed over the corpus vocabulary, so popular terms appear
+//! in queries as often as they appear in documents.
+
+use crate::config::KeywordMix;
+use crate::util::{rng::Discrete, rng::Zipf, Rng};
+
+/// Query sampler.
+#[derive(Clone, Debug)]
+pub struct QueryGen {
+    mix: KeywordMix,
+    paper_mix: Option<Discrete>,
+    term_zipf: Option<Zipf>,
+}
+
+impl QueryGen {
+    /// Generator for a keyword mix; `vocab_size > 0` additionally enables
+    /// concrete term sampling (live mode).
+    pub fn new(mix: KeywordMix, vocab_size: usize) -> QueryGen {
+        let paper_mix = match mix {
+            KeywordMix::Paper => {
+                // P(k) ∝ exp(-k/2.2), k = 1..=18 (DESIGN.md §4): mean ≈ 2.7
+                // keywords (realistic web-query length), ~16 % heavy
+                // (≥ 5 keywords), which puts the Juno capacity knee at the
+                // paper's maximum load of 40 QPS.
+                let weights: Vec<f64> = (1..=18).map(|k| (-(k as f64) / 2.2).exp()).collect();
+                Some(Discrete::new(&weights))
+            }
+            _ => None,
+        };
+        QueryGen {
+            mix,
+            paper_mix,
+            term_zipf: (vocab_size > 0).then(|| Zipf::new(vocab_size, 1.05)),
+        }
+    }
+
+    /// Sample a keyword count.
+    pub fn sample_keywords(&self, rng: &mut Rng) -> usize {
+        match self.mix {
+            KeywordMix::Fixed(k) => k,
+            KeywordMix::Uniform(lo, hi) => rng.range(lo, hi),
+            KeywordMix::Paper => self.paper_mix.as_ref().unwrap().sample(rng) + 1,
+        }
+    }
+
+    /// Sample `k` distinct term ids (requires vocab_size > 0).
+    pub fn sample_terms(&self, k: usize, rng: &mut Rng) -> Vec<u32> {
+        let zipf = self
+            .term_zipf
+            .as_ref()
+            .expect("QueryGen built without vocabulary");
+        let mut terms: Vec<u32> = Vec::with_capacity(k);
+        let mut guard = 0;
+        while terms.len() < k {
+            let t = zipf.sample(rng) as u32;
+            if !terms.contains(&t) {
+                terms.push(t);
+            }
+            guard += 1;
+            assert!(
+                guard < 10_000,
+                "vocabulary too small for {k} distinct terms"
+            );
+        }
+        terms
+    }
+
+    /// The configured mix.
+    pub fn mix(&self) -> KeywordMix {
+        self.mix
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_mix_is_fixed() {
+        let g = QueryGen::new(KeywordMix::Fixed(7), 0);
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            assert_eq!(g.sample_keywords(&mut rng), 7);
+        }
+    }
+
+    #[test]
+    fn uniform_mix_in_range() {
+        let g = QueryGen::new(KeywordMix::Uniform(2, 6), 0);
+        let mut rng = Rng::new(2);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..500 {
+            let k = g.sample_keywords(&mut rng);
+            assert!((2..=6).contains(&k));
+            seen.insert(k);
+        }
+        assert_eq!(seen.len(), 5);
+    }
+
+    #[test]
+    fn paper_mix_statistics() {
+        let g = QueryGen::new(KeywordMix::Paper, 0);
+        let mut rng = Rng::new(3);
+        let n = 100_000;
+        let samples: Vec<usize> = (0..n).map(|_| g.sample_keywords(&mut rng)).collect();
+        let mean = samples.iter().sum::<usize>() as f64 / n as f64;
+        // DESIGN.md: mean ≈ 2.7, ~16 % heavy (≥ 5 keywords).
+        assert!((2.5..3.0).contains(&mean), "mean={mean}");
+        let heavy = samples.iter().filter(|&&k| k >= 5).count() as f64 / n as f64;
+        assert!((0.12..0.21).contains(&heavy), "heavy={heavy}");
+        assert!(samples.iter().all(|&k| (1..=18).contains(&k)));
+    }
+
+    #[test]
+    fn terms_distinct_and_in_range() {
+        let g = QueryGen::new(KeywordMix::Paper, 1000);
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            let terms = g.sample_terms(8, &mut rng);
+            assert_eq!(terms.len(), 8);
+            let set: std::collections::HashSet<_> = terms.iter().collect();
+            assert_eq!(set.len(), 8);
+            assert!(terms.iter().all(|&t| t < 1000));
+        }
+    }
+
+    #[test]
+    fn popular_terms_sampled_more() {
+        let g = QueryGen::new(KeywordMix::Fixed(1), 1000);
+        let mut rng = Rng::new(5);
+        let mut head = 0;
+        for _ in 0..10_000 {
+            if g.sample_terms(1, &mut rng)[0] < 10 {
+                head += 1;
+            }
+        }
+        // Top-10 of 1000 Zipf ranks should carry >30 % of the mass.
+        assert!(head > 3_000, "head={head}");
+    }
+
+    #[test]
+    #[should_panic(expected = "without vocabulary")]
+    fn terms_require_vocab() {
+        let g = QueryGen::new(KeywordMix::Paper, 0);
+        let mut rng = Rng::new(6);
+        g.sample_terms(3, &mut rng);
+    }
+}

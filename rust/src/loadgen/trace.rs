@@ -1,0 +1,197 @@
+//! Workload traces: a fully materialised request stream (arrival time,
+//! keyword count, term ids) that both the simulator and the live server
+//! consume, with text record/replay so experiments are reproducible and
+//! shareable.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use super::arrivals::ArrivalProcess;
+use super::querygen::QueryGen;
+use crate::error::{Error, Result};
+use crate::util::Rng;
+
+/// One request in a workload trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRequest {
+    /// Arrival timestamp, ms from experiment start.
+    pub arrive_ms: f64,
+    /// Keyword count (the compute-intensity driver).
+    pub keywords: usize,
+    /// Concrete query term ids (empty in sim-only traces).
+    pub terms: Vec<u32>,
+}
+
+/// A complete workload: the request stream one experiment serves.
+#[derive(Clone, Debug, Default)]
+pub struct Workload {
+    /// Requests in arrival order.
+    pub requests: Vec<TraceRequest>,
+}
+
+impl Workload {
+    /// Generate a workload: `n` requests with the given arrival process and
+    /// query mix. `with_terms` controls whether concrete term ids are
+    /// sampled (needed by live mode, skipped by the simulator for speed).
+    pub fn generate(
+        arrivals: ArrivalProcess,
+        gen: &QueryGen,
+        n: usize,
+        with_terms: bool,
+        rng: &mut Rng,
+    ) -> Workload {
+        let times = arrivals.generate(n, rng);
+        let requests = times
+            .into_iter()
+            .map(|arrive_ms| {
+                let keywords = gen.sample_keywords(rng);
+                let terms = if with_terms {
+                    gen.sample_terms(keywords, rng)
+                } else {
+                    Vec::new()
+                };
+                TraceRequest {
+                    arrive_ms,
+                    keywords,
+                    terms,
+                }
+            })
+            .collect();
+        Workload { requests }
+    }
+
+    /// Number of requests.
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// True if the workload is empty.
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Offered duration (last arrival), ms.
+    pub fn span_ms(&self) -> f64 {
+        self.requests.last().map(|r| r.arrive_ms).unwrap_or(0.0)
+    }
+
+    /// Save as a text trace: `arrive_ms;keywords;t1,t2,...` per line.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "# hurryup workload trace v1")?;
+        for r in &self.requests {
+            let terms = r
+                .terms
+                .iter()
+                .map(|t| t.to_string())
+                .collect::<Vec<_>>()
+                .join(",");
+            writeln!(f, "{:.6};{};{}", r.arrive_ms, r.keywords, terms)?;
+        }
+        Ok(())
+    }
+
+    /// Load a text trace saved by [`Workload::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<Workload> {
+        let f = BufReader::new(std::fs::File::open(path)?);
+        let mut requests = Vec::new();
+        for (lineno, line) in f.lines().enumerate() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split(';');
+            let bad = |what: &str| {
+                Error::Invalid(format!("trace line {}: bad {what}", lineno + 1))
+            };
+            let arrive_ms = parts
+                .next()
+                .and_then(|s| s.parse::<f64>().ok())
+                .ok_or_else(|| bad("arrival"))?;
+            let keywords = parts
+                .next()
+                .and_then(|s| s.parse::<usize>().ok())
+                .ok_or_else(|| bad("keywords"))?;
+            let terms_s = parts.next().unwrap_or("");
+            let terms = if terms_s.is_empty() {
+                Vec::new()
+            } else {
+                terms_s
+                    .split(',')
+                    .map(|t| t.parse::<u32>().map_err(|_| bad("terms")))
+                    .collect::<Result<Vec<_>>>()?
+            };
+            requests.push(TraceRequest {
+                arrive_ms,
+                keywords,
+                terms,
+            });
+        }
+        Ok(Workload { requests })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KeywordMix;
+
+    fn workload(with_terms: bool) -> Workload {
+        let mut rng = Rng::new(21);
+        let gen = QueryGen::new(KeywordMix::Paper, 500);
+        Workload::generate(
+            ArrivalProcess::Poisson { qps: 30.0 },
+            &gen,
+            200,
+            with_terms,
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn generate_shape() {
+        let w = workload(true);
+        assert_eq!(w.len(), 200);
+        assert!(w.span_ms() > 0.0);
+        for r in &w.requests {
+            assert_eq!(r.terms.len(), r.keywords);
+        }
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = workload(true);
+        let b = workload(true);
+        assert_eq!(a.requests, b.requests);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let w = workload(true);
+        let path = std::env::temp_dir().join(format!("hu_trace_{}.txt", std::process::id()));
+        w.save(&path).unwrap();
+        let loaded = Workload::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.len(), w.len());
+        for (a, b) in w.requests.iter().zip(&loaded.requests) {
+            assert!((a.arrive_ms - b.arrive_ms).abs() < 1e-6);
+            assert_eq!(a.keywords, b.keywords);
+            assert_eq!(a.terms, b.terms);
+        }
+    }
+
+    #[test]
+    fn simonly_trace_has_no_terms() {
+        let w = workload(false);
+        assert!(w.requests.iter().all(|r| r.terms.is_empty()));
+    }
+
+    #[test]
+    fn malformed_trace_rejected() {
+        let path = std::env::temp_dir().join(format!("hu_bad_{}.txt", std::process::id()));
+        std::fs::write(&path, "not;a;valid;trace\n").unwrap();
+        assert!(Workload::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

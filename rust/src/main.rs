@@ -1,0 +1,279 @@
+//! `hurryup` — launcher for the Hurry-up reproduction.
+//!
+//! Subcommands:
+//!   sim      run one simulated serving experiment (flags or --config TOML)
+//!   serve    run the live thread-pool server end to end (--xla for PJRT)
+//!   index    build the synthetic corpus + index and print statistics
+//!   query    run one query against the index (--q "terms", --xla)
+//!   figures  regenerate paper figures (all, or listed ids)
+//!   check    verify artifacts and runtime (loads + executes the scorer)
+
+use std::sync::Arc;
+
+use hurryup::cli::Args;
+use hurryup::config::{self, SimConfig};
+use hurryup::error::{Error, Result};
+use hurryup::experiments::{self, Scale};
+use hurryup::live::{LiveConfig, LiveServer};
+use hurryup::mapper::{HurryUpParams, PolicyKind};
+use hurryup::prelude::*;
+use hurryup::search::{self, Bm25Params, RustScorer};
+
+const USAGE: &str = "\
+hurryup — request-level thread mapping for web search on big/little cores
+(reproduction of Nishtala et al., CS.DC 2019)
+
+USAGE:
+  hurryup sim     [--config f.toml] [--qps N] [--requests N] [--policy P]
+                  [--seed N] [--threshold-ms N] [--sampling-ms N]
+  hurryup serve   [--qps N] [--requests N] [--policy P] [--xla] [--docs N]
+  hurryup index   [--docs N] [--vocab N]
+  hurryup query   --q \"search terms\" [--xla] [--docs N]
+  hurryup figures [fig1 fig2 fig3 fig6 fig7 fig8 fig9 power_table ablations]
+                  [--full]
+  hurryup check
+
+POLICIES: hurry_up | linux_random | round_robin | all_big | all_little | oracle | app_level
+";
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("sim") => cmd_sim(args),
+        Some("serve") => cmd_serve(args),
+        Some("index") => cmd_index(args),
+        Some("query") => cmd_query(args),
+        Some("figures") => cmd_figures(args),
+        Some("check") => cmd_check(),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn policy_from(args: &Args) -> Result<PolicyKind> {
+    let sampling = args.get_f64("sampling-ms", 25.0)?;
+    let threshold = args.get_f64("threshold-ms", 50.0)?;
+    Ok(match args.get("policy").unwrap_or("hurry_up") {
+        "hurry_up" => PolicyKind::HurryUp {
+            sampling_ms: sampling,
+            threshold_ms: threshold,
+        },
+        "linux_random" => PolicyKind::LinuxRandom,
+        "round_robin" => PolicyKind::RoundRobin,
+        "all_big" => PolicyKind::AllBig,
+        "all_little" => PolicyKind::AllLittle,
+        "oracle" => PolicyKind::Oracle {
+            cutoff_kw: args.get_usize("oracle-cutoff", 5)?,
+        },
+        "app_level" => PolicyKind::AppLevel {
+            qos_ms: args.get_f64("qos-ms", 500.0)?,
+            sampling_ms: sampling,
+        },
+        other => return Err(Error::invalid(format!("unknown policy `{other}`"))),
+    })
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let mut cfg: SimConfig = match args.get("config") {
+        Some(path) => config::load_sim_config(path)?,
+        None => SimConfig::paper_default(policy_from(args)?),
+    };
+    cfg.qps = args.get_f64("qps", cfg.qps)?;
+    cfg.num_requests = args.get_usize("requests", cfg.num_requests.min(20_000))?;
+    cfg.seed = args.get_usize("seed", cfg.seed as usize)? as u64;
+    let cfg = cfg.validated()?;
+    println!(
+        "sim: {} | {} qps | {} requests | seed {}",
+        cfg.topology().label(),
+        cfg.qps,
+        cfg.num_requests,
+        cfg.seed
+    );
+    let out = Simulation::new(cfg).run();
+    println!("policy     : {}", out.policy);
+    println!("completed  : {}", out.completed);
+    println!("throughput : {:.1} qps", out.throughput_qps());
+    println!("p50 / p90 / p99 : {:.0} / {:.0} / {:.0} ms",
+        out.latency.percentile(0.5), out.p90_ms(), out.latency.percentile(0.99));
+    println!("max latency: {:.0} ms", out.latency.max());
+    println!("migrations : {}", out.migrations);
+    println!("energy     : {:.1} J total, {:.3} J/request",
+        out.energy.total_j(), out.energy_per_request_j());
+    println!("big share  : {:.0}%", out.big_share() * 100.0);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let docs = args.get_usize("docs", 2_000)?;
+    let corpus = CorpusConfig {
+        num_docs: docs,
+        ..CorpusConfig::small()
+    }
+    .build();
+    let index = Arc::new(Index::build(&corpus));
+    let hurryup = match args.get("policy").unwrap_or("hurry_up") {
+        "hurry_up" => Some(HurryUpParams {
+            sampling_ms: args.get_f64("sampling-ms", 25.0)?,
+            threshold_ms: args.get_f64("threshold-ms", 50.0)?,
+        }),
+        "linux_random" => None,
+        other => {
+            return Err(Error::invalid(format!(
+                "live server supports hurry_up | linux_random, got `{other}`"
+            )))
+        }
+    };
+    let cfg = LiveConfig {
+        qps: args.get_f64("qps", 30.0)?,
+        num_requests: args.get_usize("requests", 300)?,
+        use_xla: args.has("xla"),
+        hurryup,
+        ..LiveConfig::default()
+    };
+    println!(
+        "serve: 2B4L | {} qps | {} requests | backend={} | mapper={}",
+        cfg.qps,
+        cfg.num_requests,
+        if cfg.use_xla { "xla" } else { "rust" },
+        if cfg.hurryup.is_some() { "hurry-up" } else { "static" },
+    );
+    let report = LiveServer::new(cfg, index).run()?;
+    println!("served     : {}", report.per_request.len());
+    println!("throughput : {:.1} qps", report.throughput_qps());
+    println!(
+        "p50 / p90 / p99 : {:.0} / {:.0} / {:.0} ms",
+        report.latency.percentile(0.5),
+        report.p90_ms(),
+        report.latency.percentile(0.99)
+    );
+    println!("migrations : {}", report.migrations);
+    println!("passes     : {}", report.total_passes);
+    println!("energy     : {:.1} J (post-hoc model)", report.energy.total_j());
+    Ok(())
+}
+
+fn cmd_index(args: &Args) -> Result<()> {
+    let cfg = CorpusConfig {
+        num_docs: args.get_usize("docs", 50_000)?,
+        vocab_size: args.get_usize("vocab", 30_000)?,
+        ..CorpusConfig::serving()
+    };
+    let t0 = std::time::Instant::now();
+    let corpus = cfg.build();
+    let t1 = std::time::Instant::now();
+    let index = Index::build(&corpus);
+    let t2 = std::time::Instant::now();
+    println!("corpus  : {} docs, {} tokens ({:.2}s)",
+        corpus.len(), corpus.total_tokens(), (t1 - t0).as_secs_f64());
+    println!("index   : {} terms, {} postings, avgdl {:.1} ({:.2}s)",
+        index.num_terms(), index.total_postings(), index.avgdl(), (t2 - t1).as_secs_f64());
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    let q = args
+        .get("q")
+        .ok_or_else(|| Error::invalid("--q \"terms\" required"))?;
+    let docs = args.get_usize("docs", 2_000)?;
+    let corpus = CorpusConfig {
+        num_docs: docs,
+        ..CorpusConfig::small()
+    }
+    .build();
+    let index = Arc::new(Index::build(&corpus));
+    let engine = SearchEngine::new(index, 10);
+    let query = Query::parse(q);
+    let result = if args.has("xla") {
+        let mut scorer = hurryup::runtime::XlaScorer::load()?;
+        engine.search_with(&query, &mut scorer)?
+    } else {
+        let mut scorer = RustScorer::new(Bm25Params::default());
+        engine.search_with(&query, &mut scorer)?
+    };
+    println!(
+        "query {:?} → {} terms matched, {} candidates, {} blocks",
+        q, result.stats.matched_terms, result.stats.candidates, result.stats.blocks
+    );
+    for (i, hit) in result.hits.iter().enumerate() {
+        println!("{:2}. doc{:<6} {:8.4}  {}", i + 1, hit.doc, hit.score, hit.title);
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let scale = if args.has("full") {
+        Scale { requests: 100_000 }
+    } else {
+        Scale::from_env()
+    };
+    let ids: Vec<String> = if args.positional.is_empty() {
+        experiments::registry()
+            .iter()
+            .map(|(n, _)| n.to_string())
+            .collect()
+    } else {
+        args.positional.clone()
+    };
+    for id in &ids {
+        if !experiments::run_by_id(id, scale) {
+            return Err(Error::invalid(format!("unknown figure `{id}`")));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_check() -> Result<()> {
+    print!("artifact  : ");
+    let path = hurryup::runtime::artifact::require_scorer()?;
+    println!("{}", path.display());
+    print!("runtime   : ");
+    let mut scorer = hurryup::runtime::XlaScorer::load()?;
+    // Execute one block and cross-check against the Rust scorer.
+    let mut block = search::ScoreBlock {
+        tf: vec![0.0; search::DOC_BLOCK * search::MAX_TERMS],
+        dl: vec![120.0; search::DOC_BLOCK],
+        docs: (0..4).collect(),
+        max_tf: vec![0.0; search::MAX_TERMS],
+        min_dl: 120.0,
+    };
+    block.tf[0] = 3.0; // doc 0, slot 0
+    block.tf[search::MAX_TERMS] = 1.0; // doc 1, slot 0
+    let idf = {
+        let mut v = vec![0.0f32; search::MAX_TERMS];
+        v[0] = 2.0;
+        v
+    };
+    use hurryup::search::engine::BlockScorer;
+    let xla = scorer.score_block(&block, &idf, 120.0)?;
+    let mut rust = RustScorer::new(Bm25Params::default());
+    let reference = rust.score_block(&block, &idf, 120.0)?;
+    for ((ri, rs), (xi, xs)) in reference.entries.iter().zip(&xla.entries) {
+        if ri != xi || (rs - xs).abs() > 1e-4 {
+            return Err(Error::invalid(format!(
+                "scorer mismatch: rust ({ri},{rs}) vs xla ({xi},{xs})"
+            )));
+        }
+    }
+    println!("ok (xla == rust on probe block)");
+    println!("all checks passed");
+    Ok(())
+}

@@ -1,0 +1,276 @@
+//! Application-level feedback mapping — an Octopus-Man-style comparator.
+//!
+//! The paper positions Hurry-up *against* prior work that "maps the entire
+//! application on heterogeneous cores" (Octopus-Man [19], Hipster [17]):
+//! a feedback controller observes the application's measured latency and
+//! moves the whole worker pool up/down a core-configuration ladder. This
+//! module implements that class of policy so the contrast is measurable
+//! (experiments::ablations / policy_compare):
+//!
+//! * the controller watches a sliding window of completed-request service
+//!   times from the same stats stream Hurry-up reads;
+//! * when the window p90 exceeds the QoS target it steps *up* the ladder
+//!   (enable more/bigger cores); when it is comfortably below (hysteresis)
+//!   it steps *down* — Octopus-Man's "ladder climbing" on big.LITTLE;
+//! * dispatch is restricted to the cores active at the current rung; no
+//!   per-request decisions are ever made — that is exactly the granularity
+//!   gap Hurry-up exploits.
+//!
+//! Ladder on Juno R1 (2B+4L), little-first like Octopus-Man's
+//! energy-conserving ordering:
+//!   rung 0: 1L · rung 1: 2L · rung 2: 3L · rung 3: 4L
+//!   rung 4: 4L+1B · rung 5: 4L+2B
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+use super::{random_idle, DispatchInfo, Policy};
+use crate::ipc::{RequestTag, StatsRecord};
+use crate::platform::{AffinityTable, CoreId, CoreKind, Topology};
+use crate::util::Rng;
+
+/// Octopus-Man-style whole-pool feedback controller.
+pub struct AppLevel {
+    /// QoS target on windowed service p90, ms.
+    qos_ms: f64,
+    /// Step-down hysteresis fraction (step down only below `qos × h`).
+    hysteresis: f64,
+    /// Controller sampling interval, ms.
+    sampling_ms: f64,
+    /// Sliding window of recent service times, ms.
+    window: VecDeque<f64>,
+    window_cap: usize,
+    /// Request begin timestamps (to compute service times from the stream).
+    inflight: HashMap<RequestTag, f64>,
+    /// Core-activation ladder; index = rung.
+    ladder: Vec<Vec<CoreId>>,
+    rung: usize,
+    /// Rung changes performed (reporting).
+    pub transitions: usize,
+}
+
+impl AppLevel {
+    /// Build the controller with the paper's 500 ms QoS target by default.
+    pub fn new(qos_ms: f64, sampling_ms: f64, topology: &Topology) -> AppLevel {
+        let littles = topology.little_cores();
+        let bigs = topology.big_cores();
+        let mut ladder = Vec::new();
+        // Little-first rungs.
+        for n in 1..=littles.len() {
+            ladder.push(littles[..n].to_vec());
+        }
+        // Then add bigs on top of all littles.
+        for n in 1..=bigs.len() {
+            let mut cores = littles.to_vec();
+            cores.extend_from_slice(&bigs[..n]);
+            ladder.push(cores);
+        }
+        if ladder.is_empty() {
+            ladder.push(topology.cores().collect());
+        }
+        let start = ladder.len() - 1; // start fully provisioned, scale down
+        AppLevel {
+            qos_ms,
+            hysteresis: 0.7,
+            sampling_ms,
+            window: VecDeque::new(),
+            window_cap: 64,
+            inflight: HashMap::new(),
+            ladder,
+            rung: start,
+            transitions: 0,
+        }
+    }
+
+    /// Current rung's active cores.
+    pub fn active_cores(&self) -> &[CoreId] {
+        &self.ladder[self.rung]
+    }
+
+    /// Windowed service-time p90 (the control signal).
+    fn window_p90(&self) -> Option<f64> {
+        if self.window.len() < 8 {
+            return None; // not enough signal yet
+        }
+        let mut v: Vec<f64> = self.window.iter().copied().collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(v[(v.len() * 9 / 10).min(v.len() - 1)])
+    }
+}
+
+impl Policy for AppLevel {
+    fn name(&self) -> String {
+        format!(
+            "app-level(qos={}ms, rungs={})",
+            self.qos_ms,
+            self.ladder.len()
+        )
+    }
+
+    fn sampling_ms(&self) -> Option<f64> {
+        Some(self.sampling_ms)
+    }
+
+    fn choose_core(
+        &mut self,
+        idle: &[CoreId],
+        _aff: &AffinityTable,
+        _info: DispatchInfo,
+        rng: &mut Rng,
+    ) -> Option<CoreId> {
+        let active = &self.ladder[self.rung];
+        let eligible: Vec<CoreId> = idle
+            .iter()
+            .copied()
+            .filter(|c| active.contains(c))
+            .collect();
+        random_idle(&eligible, rng)
+    }
+
+    fn observe(&mut self, rec: &StatsRecord) {
+        match self.inflight.remove(&rec.rid) {
+            Some(begin) => {
+                let service = rec.ts_ms as f64 - begin;
+                self.window.push_back(service.max(0.0));
+                if self.window.len() > self.window_cap {
+                    self.window.pop_front();
+                }
+            }
+            None => {
+                self.inflight.insert(rec.rid, rec.ts_ms as f64);
+            }
+        }
+    }
+
+    fn tick(&mut self, _now_ms: f64, _aff: &AffinityTable) -> Vec<super::Migration> {
+        // Whole-application decision only: adjust the rung; never migrate
+        // individual threads (the defining limitation vs Hurry-up).
+        if let Some(p90) = self.window_p90() {
+            if p90 > self.qos_ms && self.rung + 1 < self.ladder.len() {
+                self.rung += 1;
+                self.transitions += 1;
+            } else if p90 < self.qos_ms * self.hysteresis && self.rung > 0 {
+                self.rung -= 1;
+                self.transitions += 1;
+            }
+        }
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::ThreadId;
+
+    fn controller() -> (AppLevel, AffinityTable) {
+        let topo = Topology::juno_r1();
+        (
+            AppLevel::new(500.0, 50.0, &topo),
+            AffinityTable::round_robin(topo),
+        )
+    }
+
+    fn complete(p: &mut AppLevel, seq: u64, begin: u64, end: u64) {
+        let rid = RequestTag::from_seq(seq);
+        p.observe(&StatsRecord {
+            tid: ThreadId(0),
+            rid,
+            ts_ms: begin,
+        });
+        p.observe(&StatsRecord {
+            tid: ThreadId(0),
+            rid,
+            ts_ms: end,
+        });
+    }
+
+    #[test]
+    fn ladder_shape_for_juno() {
+        let (p, _) = controller();
+        assert_eq!(p.ladder.len(), 6); // 1L..4L, 4L+1B, 4L+2B
+        assert_eq!(p.ladder[0].len(), 1);
+        assert_eq!(p.ladder[5].len(), 6);
+        // starts fully provisioned
+        assert_eq!(p.rung, 5);
+    }
+
+    #[test]
+    fn steps_down_when_fast() {
+        let (mut p, aff) = controller();
+        for i in 0..32 {
+            complete(&mut p, i, 1000 * i, 1000 * i + 50); // 50 ms services
+        }
+        let before = p.rung;
+        p.tick(1e6, &aff);
+        assert_eq!(p.rung, before - 1, "should scale down under light load");
+    }
+
+    #[test]
+    fn steps_up_when_violating() {
+        let (mut p, aff) = controller();
+        // Force to a low rung first.
+        p.rung = 0;
+        for i in 0..32 {
+            complete(&mut p, i, 1000 * i, 1000 * i + 900); // 900 ms services
+        }
+        p.tick(1e6, &aff);
+        assert_eq!(p.rung, 1, "should scale up on QoS violation");
+        assert!(p.transitions >= 1);
+    }
+
+    #[test]
+    fn never_migrates_threads() {
+        let (mut p, aff) = controller();
+        for i in 0..32 {
+            complete(&mut p, i, 0, 2000);
+        }
+        assert!(p.tick(1e6, &aff).is_empty());
+    }
+
+    #[test]
+    fn dispatch_restricted_to_active_rung() {
+        let (mut p, aff) = controller();
+        p.rung = 0; // only little core CoreId(2) active (first little)
+        let first_little = aff.topology().little_cores()[0];
+        let mut rng = Rng::new(3);
+        let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
+        for _ in 0..20 {
+            assert_eq!(
+                p.choose_core(&idle, &aff, DispatchInfo { keywords: 3 }, &mut rng),
+                Some(first_little)
+            );
+        }
+        // If the active core is busy, the request must wait.
+        let idle = vec![CoreId(0), CoreId(1)];
+        assert_eq!(
+            p.choose_core(&idle, &aff, DispatchInfo { keywords: 3 }, &mut rng),
+            None
+        );
+    }
+
+    #[test]
+    fn window_caps() {
+        let (mut p, _) = controller();
+        for i in 0..200 {
+            complete(&mut p, i, 0, 100);
+        }
+        assert!(p.window.len() <= 64);
+        assert!(p.inflight.is_empty());
+    }
+
+    #[test]
+    fn little_first_ordering_matches_octopus_man() {
+        let (p, aff) = controller();
+        // Rungs 0..3 contain only little cores.
+        for rung in 0..4 {
+            assert!(p.ladder[rung]
+                .iter()
+                .all(|&c| aff.topology().kind(c) == CoreKind::Little));
+        }
+        // Rung 4 adds the first big core.
+        assert!(p.ladder[4]
+            .iter()
+            .any(|&c| aff.topology().kind(c) == CoreKind::Big));
+    }
+}

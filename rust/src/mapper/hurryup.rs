@@ -1,0 +1,366 @@
+//! The Hurry-up Mapper — Algorithm 1 of the paper, line for line.
+//!
+//! State: `RequestTable` maps an in-flight request tag to the thread serving
+//! it and its begin timestamp. The stats stream carries no begin/end flag; a
+//! tag seen a second time means the request finished and is dropped from the
+//! table (lines 5–8).
+//!
+//! Every `SAMPLING_TIME` ms (lines 9–10 gate on the wall clock), the mapper:
+//!   * collects every in-flight request whose elapsed time exceeds
+//!     `MIGRATION_THRESHOLD` *and* whose thread currently sits on a little
+//!     core (lines 11–16),
+//!   * sorts them by elapsed time, longest first (line 17),
+//!   * walks `BigCoreList`, pairing the b-th big core with the b-th longest
+//!     little-core thread and swapping the two threads (lines 18–26) —
+//!     the displaced big-core thread lands on the vacated little core.
+//!
+//! The swap is unconditional, exactly as written in the paper: the thread
+//! currently on the big core is displaced even if it is itself mid-request
+//! ("Hurry-up aggressively migrates potential, but not certain, long-running
+//! requests", §IV-B). The `guarded` ablation flag (off by default, not part
+//! of the paper algorithm) skips a swap when the big-core thread has been
+//! running *longer* than the candidate.
+
+use std::collections::HashMap;
+
+use super::{random_idle, DispatchInfo, Migration, Policy};
+use crate::ipc::{RequestTag, StatsRecord};
+use crate::platform::{AffinityTable, CoreId, CoreKind, ThreadId, Topology};
+use crate::util::Rng;
+
+/// Hurry-up's two empirically tuned parameters (§III-C).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HurryUpParams {
+    /// How frequently runtime statistics are sampled, ms. The paper finds
+    /// 50 ms best standalone (§III-C) and uses 25 ms in Figs 6–8.
+    pub sampling_ms: f64,
+    /// Elapsed time after which an in-flight request counts as
+    /// compute-intensive and becomes a migration candidate, ms.
+    pub threshold_ms: f64,
+}
+
+impl Default for HurryUpParams {
+    fn default() -> Self {
+        // The Fig 6–8 operating point.
+        HurryUpParams {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        }
+    }
+}
+
+/// The Hurry-up Mapper state machine.
+pub struct HurryUp {
+    params: HurryUpParams,
+    topology: Topology,
+    /// Algorithm 1's `RequestTable`: rid → (tid, begin timestamp ms).
+    request_table: HashMap<RequestTag, (ThreadId, f64)>,
+    /// Ablation: skip swaps that displace an even longer-running big thread.
+    guarded: bool,
+    /// Total migrations decided (reporting).
+    migrations: usize,
+}
+
+impl HurryUp {
+    /// New mapper for a topology.
+    pub fn new(params: HurryUpParams, topology: Topology) -> HurryUp {
+        assert!(params.sampling_ms > 0.0 && params.threshold_ms >= 0.0);
+        HurryUp {
+            params,
+            topology,
+            request_table: HashMap::new(),
+            guarded: false,
+            migrations: 0,
+        }
+    }
+
+    /// Enable the guarded-swap ablation (NOT the paper algorithm).
+    pub fn guarded(mut self) -> HurryUp {
+        self.guarded = true;
+        self
+    }
+
+    /// Parameters in use.
+    pub fn params(&self) -> HurryUpParams {
+        self.params
+    }
+
+    /// In-flight request count currently tracked.
+    pub fn tracked(&self) -> usize {
+        self.request_table.len()
+    }
+
+    /// Total migrations decided so far.
+    pub fn migrations(&self) -> usize {
+        self.migrations
+    }
+
+    /// Elapsed time of the request served by `tid`, if tracked.
+    fn elapsed_of(&self, tid: ThreadId, now_ms: f64) -> Option<f64> {
+        self.request_table
+            .values()
+            .find(|(t, _)| *t == tid)
+            .map(|(_, rts)| now_ms - rts)
+    }
+}
+
+impl Policy for HurryUp {
+    fn name(&self) -> String {
+        format!(
+            "hurry-up(sampling={}ms, threshold={}ms{})",
+            self.params.sampling_ms,
+            self.params.threshold_ms,
+            if self.guarded { ", guarded" } else { "" }
+        )
+    }
+
+    fn sampling_ms(&self) -> Option<f64> {
+        Some(self.params.sampling_ms)
+    }
+
+    fn choose_core(
+        &mut self,
+        idle: &[CoreId],
+        _aff: &AffinityTable,
+        _info: DispatchInfo,
+        rng: &mut Rng,
+    ) -> Option<CoreId> {
+        // Same random dispatch as the Linux baseline; the initial thread
+        // pool mapping is round-robin (AffinityTable::round_robin) so the
+        // difference under test is migration alone.
+        random_idle(idle, rng)
+    }
+
+    /// Lines 4–8: read a stats record; a second sighting of a request id
+    /// means the request finished.
+    fn observe(&mut self, rec: &StatsRecord) {
+        if self.request_table.remove(&rec.rid).is_none() {
+            self.request_table
+                .insert(rec.rid, (rec.tid, rec.ts_ms as f64));
+        }
+    }
+
+    /// Lines 11–26.
+    fn tick(&mut self, now_ms: f64, aff: &AffinityTable) -> Vec<Migration> {
+        // Lines 11–16: long-running threads currently on little cores.
+        let mut threads_on_little: Vec<(ThreadId, f64)> = self
+            .request_table
+            .values()
+            .filter_map(|&(tid, rts)| {
+                let elapsed = now_ms - rts;
+                (elapsed > self.params.threshold_ms
+                    && aff.kind_of(tid) == CoreKind::Little)
+                    .then_some((tid, elapsed))
+            })
+            .collect();
+        // Line 17: longest elapsed first (ties: lower thread id, for
+        // determinism — the paper does not specify tie order).
+        threads_on_little.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.0 .0.cmp(&b.0 .0))
+        });
+
+        // Lines 18–26: pair big cores with the longest candidates.
+        let mut out = Vec::new();
+        let mut claimed_little: Vec<CoreId> = Vec::new();
+        for (b, &big_core) in self.topology.big_cores().iter().enumerate() {
+            if b >= threads_on_little.len() {
+                break; // line 20: no more migration candidates
+            }
+            let (tid, elapsed) = threads_on_little[b];
+            let little_core = aff.core_of(tid);
+            debug_assert!(!claimed_little.contains(&little_core));
+            claimed_little.push(little_core);
+            if self.guarded {
+                // Ablation only: leave an even longer-running big thread be.
+                let big_tid = aff.thread_on(big_core);
+                if let Some(big_elapsed) = self.elapsed_of(big_tid, now_ms) {
+                    if big_elapsed >= elapsed {
+                        continue;
+                    }
+                }
+            }
+            out.push(Migration {
+                big_core,
+                little_core,
+            });
+        }
+        self.migrations += out.len();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ipc::RequestTag;
+    use crate::util::prop;
+
+    fn rec(tid: usize, seq: u64, ts: u64) -> StatsRecord {
+        StatsRecord {
+            tid: ThreadId(tid),
+            rid: RequestTag::from_seq(seq),
+            ts_ms: ts,
+        }
+    }
+
+    fn juno_mapper() -> (HurryUp, AffinityTable) {
+        let topo = Topology::juno_r1();
+        (
+            HurryUp::new(HurryUpParams::default(), topo.clone()),
+            AffinityTable::round_robin(topo),
+        )
+    }
+
+    #[test]
+    fn request_table_tracks_begin_end() {
+        let (mut m, _aff) = juno_mapper();
+        m.observe(&rec(2, 1, 1000));
+        assert_eq!(m.tracked(), 1);
+        m.observe(&rec(2, 1, 1070)); // same rid again => finished
+        assert_eq!(m.tracked(), 0);
+    }
+
+    #[test]
+    fn no_migration_below_threshold() {
+        let (mut m, aff) = juno_mapper();
+        // Thread 3 is on little core 3 (round robin), started at t=1000.
+        m.observe(&rec(3, 1, 1000));
+        // At t=1040, elapsed 40ms < threshold 50ms.
+        assert!(m.tick(1040.0, &aff).is_empty());
+        // At t=1051, elapsed 51ms > 50ms => migrate to first big core.
+        let mig = m.tick(1051.0, &aff);
+        assert_eq!(
+            mig,
+            vec![Migration {
+                big_core: CoreId(0),
+                little_core: CoreId(3)
+            }]
+        );
+    }
+
+    #[test]
+    fn threads_on_big_cores_never_candidates() {
+        let (mut m, aff) = juno_mapper();
+        m.observe(&rec(0, 1, 0)); // thread 0 on big core 0
+        assert!(m.tick(10_000.0, &aff).is_empty());
+    }
+
+    #[test]
+    fn longest_elapsed_gets_first_big_core() {
+        let (mut m, aff) = juno_mapper();
+        m.observe(&rec(2, 1, 500)); // little core 2, elapsed 500
+        m.observe(&rec(3, 2, 100)); // little core 3, elapsed 900 (longest)
+        m.observe(&rec(4, 3, 800)); // little core 4, elapsed 200
+        let mig = m.tick(1000.0, &aff);
+        // Two big cores: longest (thread 3) -> big 0, next (thread 2) -> big 1.
+        assert_eq!(
+            mig,
+            vec![
+                Migration {
+                    big_core: CoreId(0),
+                    little_core: CoreId(3)
+                },
+                Migration {
+                    big_core: CoreId(1),
+                    little_core: CoreId(2)
+                },
+            ]
+        );
+        assert_eq!(m.migrations(), 2);
+    }
+
+    #[test]
+    fn migrations_capped_by_big_core_count() {
+        let (mut m, aff) = juno_mapper();
+        for t in 2..6 {
+            m.observe(&rec(t, t as u64, 0)); // all four little threads long-running
+        }
+        let mig = m.tick(10_000.0, &aff);
+        assert_eq!(mig.len(), 2); // only two big cores exist
+    }
+
+    #[test]
+    fn finished_requests_do_not_trigger_migration() {
+        let (mut m, aff) = juno_mapper();
+        m.observe(&rec(4, 9, 0));
+        m.observe(&rec(4, 9, 500)); // finished
+        assert!(m.tick(1000.0, &aff).is_empty());
+    }
+
+    #[test]
+    fn swap_applied_then_thread_counts_as_big() {
+        let (mut m, mut aff) = juno_mapper();
+        m.observe(&rec(5, 1, 0));
+        let mig = m.tick(100.0, &aff);
+        assert_eq!(mig.len(), 1);
+        aff.swap(mig[0].big_core, mig[0].little_core);
+        assert_eq!(aff.kind_of(ThreadId(5)), CoreKind::Big);
+        // Next tick: the same thread is now on a big core — no candidates.
+        assert!(m.tick(200.0, &aff).is_empty());
+        assert!(aff.is_bijection());
+    }
+
+    #[test]
+    fn guarded_variant_skips_longer_big_thread() {
+        let topo = Topology::juno_r1();
+        let mut m = HurryUp::new(HurryUpParams::default(), topo.clone()).guarded();
+        let aff = AffinityTable::round_robin(topo);
+        m.observe(&rec(0, 1, 0)); // big core 0 thread, elapsed 1000
+        m.observe(&rec(1, 2, 0)); // big core 1 thread, elapsed 1000
+        m.observe(&rec(3, 3, 900)); // little thread, elapsed 100
+        let mig = m.tick(1000.0, &aff);
+        assert!(mig.is_empty(), "guarded should not displace longer big threads");
+        // Unguarded (paper) behaviour would swap:
+        let mut paper = HurryUp::new(HurryUpParams::default(), Topology::juno_r1());
+        paper.observe(&rec(0, 1, 0));
+        paper.observe(&rec(3, 3, 900));
+        assert_eq!(paper.tick(1000.0, &aff).len(), 1);
+    }
+
+    #[test]
+    fn prop_migration_invariants() {
+        // For random streams: (1) target is always a big core, (2) source is
+        // always a little core, (3) count ≤ #big cores, (4) sources distinct,
+        // (5) migrated set = longest-elapsed prefix of eligible candidates.
+        prop::check(128, |rng, _| {
+            let topo = Topology::juno_r1();
+            let mut m = HurryUp::new(HurryUpParams::default(), topo.clone());
+            let aff = AffinityTable::round_robin(topo.clone());
+            let now: f64 = 10_000.0;
+            let mut eligible: Vec<(ThreadId, f64)> = Vec::new();
+            for seq in 0..rng.below(12) as u64 {
+                let tid = rng.below(6);
+                let ts = rng.below(10_000) as u64;
+                // Only insert "begin" records with distinct threads (a thread
+                // serves one request at a time).
+                if m.request_table.values().any(|(t, _)| t.0 == tid) {
+                    continue;
+                }
+                m.observe(&rec(tid, seq, ts));
+                let elapsed = now - ts as f64;
+                if elapsed > 50.0 && tid >= 2 {
+                    eligible.push((ThreadId(tid), elapsed));
+                }
+            }
+            eligible.sort_by(|a, b| {
+                b.1.partial_cmp(&a.1)
+                    .unwrap()
+                    .then_with(|| a.0 .0.cmp(&b.0 .0))
+            });
+            let migs = m.tick(now, &aff);
+            assert!(migs.len() <= topo.big_cores().len());
+            assert_eq!(migs.len(), eligible.len().min(2));
+            let mut seen_little = std::collections::HashSet::new();
+            for (i, mig) in migs.iter().enumerate() {
+                assert_eq!(topo.kind(mig.big_core), CoreKind::Big);
+                assert_eq!(topo.kind(mig.little_core), CoreKind::Little);
+                assert!(seen_little.insert(mig.little_core));
+                // longest-first pairing: i-th migration source is the i-th
+                // longest eligible thread's core
+                assert_eq!(aff.core_of(eligible[i].0), mig.little_core);
+            }
+        });
+    }
+}

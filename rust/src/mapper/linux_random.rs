@@ -1,0 +1,81 @@
+//! The paper's baseline: "The Linux baseline maps each request to a given
+//! core type randomly, and there exists no migrations thereafter" (§IV-B).
+//!
+//! Modelled as uniformly random dispatch over idle cores with no `tick`
+//! migrations — a conservative/static policy.
+
+use super::{random_idle, DispatchInfo, Policy};
+use crate::platform::{AffinityTable, CoreId};
+use crate::util::Rng;
+
+/// Random static mapping, no migrations.
+#[derive(Debug, Default)]
+pub struct LinuxRandom;
+
+impl LinuxRandom {
+    /// New baseline policy.
+    pub fn new() -> LinuxRandom {
+        LinuxRandom
+    }
+}
+
+impl Policy for LinuxRandom {
+    fn name(&self) -> String {
+        "linux-random".into()
+    }
+
+    fn sampling_ms(&self) -> Option<f64> {
+        None // static: never ticked
+    }
+
+    fn choose_core(
+        &mut self,
+        idle: &[CoreId],
+        _aff: &AffinityTable,
+        _info: DispatchInfo,
+        rng: &mut Rng,
+    ) -> Option<CoreId> {
+        random_idle(idle, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Topology;
+
+    #[test]
+    fn never_migrates() {
+        let mut p = LinuxRandom::new();
+        assert_eq!(p.sampling_ms(), None);
+        let aff = AffinityTable::round_robin(Topology::juno_r1());
+        assert!(p.tick(1e9, &aff).is_empty());
+    }
+
+    #[test]
+    fn dispatch_covers_all_idle_cores() {
+        let mut p = LinuxRandom::new();
+        let aff = AffinityTable::round_robin(Topology::juno_r1());
+        let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
+        let mut rng = Rng::new(3);
+        let mut hit = [false; 6];
+        for _ in 0..200 {
+            let c = p
+                .choose_core(&idle, &aff, DispatchInfo { keywords: 3 }, &mut rng)
+                .unwrap();
+            hit[c.0] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "random dispatch should reach every core");
+    }
+
+    #[test]
+    fn returns_none_when_no_idle() {
+        let mut p = LinuxRandom::new();
+        let aff = AffinityTable::round_robin(Topology::juno_r1());
+        let mut rng = Rng::new(4);
+        assert_eq!(
+            p.choose_core(&[], &aff, DispatchInfo { keywords: 1 }, &mut rng),
+            None
+        );
+    }
+}

@@ -1,0 +1,238 @@
+//! Thread-mapping policies — the paper's contribution (Hurry-up) and its
+//! comparators.
+//!
+//! A [`Policy`] owns two decisions:
+//!
+//! 1. **Dispatch** ([`Policy::choose_core`]): which idle core takes the next
+//!    queued request. The paper's Linux baseline "maps each request to a
+//!    given core type randomly, and there exists no migrations thereafter";
+//!    Hurry-up inherits the same random dispatch and adds migrations.
+//! 2. **Mapping** ([`Policy::tick`]): periodic migrations driven by the
+//!    application stats stream ([`crate::ipc::StatsRecord`]), sampled every
+//!    `sampling_ms` (Algorithm 1).
+//!
+//! The same `Policy` object drives both the discrete-event simulator
+//! (`crate::sim`) and the live thread-pool server (`crate::live`), so the
+//! algorithm under test is literally the same code in both.
+
+pub mod app_level;
+pub mod hurryup;
+pub mod linux_random;
+pub mod oracle;
+pub mod round_robin;
+pub mod static_policy;
+
+pub use app_level::AppLevel;
+pub use hurryup::{HurryUp, HurryUpParams};
+pub use linux_random::LinuxRandom;
+pub use oracle::Oracle;
+pub use round_robin::RoundRobin;
+pub use static_policy::StaticKind;
+
+use crate::ipc::StatsRecord;
+use crate::platform::{AffinityTable, CoreId, CoreKind, Topology};
+use crate::util::Rng;
+
+/// One migration decision: swap the threads pinned to a big and a little
+/// core (Algorithm 1 lines 21–26 — the long-running little-core thread goes
+/// to `big_core`, the displaced thread goes to `little_core`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Migration {
+    /// Destination big core for the long-running thread.
+    pub big_core: CoreId,
+    /// Source little core, which receives the displaced big-core thread.
+    pub little_core: CoreId,
+}
+
+/// Request facts available at dispatch time. `keywords` is ground truth the
+/// realistic policies must NOT read (the paper: "it is impractical to
+/// annotate all applications"); only the Oracle ablation uses it.
+#[derive(Clone, Copy, Debug)]
+pub struct DispatchInfo {
+    /// Keyword count of the query (oracle-only).
+    pub keywords: usize,
+}
+
+/// A thread-mapping policy.
+pub trait Policy: Send {
+    /// Human-readable policy name for reports.
+    fn name(&self) -> String;
+
+    /// Sampling interval for `tick` in ms; `None` for static policies
+    /// (never ticked).
+    fn sampling_ms(&self) -> Option<f64>;
+
+    /// Pick the core that should serve the next request, among currently
+    /// idle cores. Returning `None` leaves the request queued even though
+    /// cores are idle (e.g. AllBig refuses little cores).
+    fn choose_core(
+        &mut self,
+        idle: &[CoreId],
+        aff: &AffinityTable,
+        info: DispatchInfo,
+        rng: &mut Rng,
+    ) -> Option<CoreId>;
+
+    /// Ingest one stats-stream record (Algorithm 1 lines 4–8).
+    fn observe(&mut self, rec: &StatsRecord) {
+        let _ = rec;
+    }
+
+    /// Sampling window elapsed: decide migrations (Algorithm 1 lines 11–26).
+    fn tick(&mut self, now_ms: f64, aff: &AffinityTable) -> Vec<Migration> {
+        let _ = (now_ms, aff);
+        Vec::new()
+    }
+}
+
+/// Serializable policy selector (config files, CLI).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PolicyKind {
+    /// The paper's Hurry-up mapper.
+    HurryUp {
+        /// Stats sampling window, ms (paper default 25 ms in Figs 6–8).
+        sampling_ms: f64,
+        /// Elapsed-time migration threshold, ms (paper default 50 ms).
+        threshold_ms: f64,
+    },
+    /// Paper baseline: random static mapping, no migrations.
+    LinuxRandom,
+    /// Ablation: round-robin dispatch over idle cores, no migrations.
+    RoundRobin,
+    /// Ablation: only big cores serve requests.
+    AllBig,
+    /// Ablation: only little cores serve requests.
+    AllLittle,
+    /// Ablation upper bound: knows keyword counts, sends heavy requests
+    /// (≥ cutoff) to big cores when possible.
+    Oracle {
+        /// Keyword count at and above which a request is "heavy".
+        cutoff_kw: usize,
+    },
+    /// Octopus-Man-style application-level feedback controller: moves the
+    /// whole pool up/down a core ladder on QoS violations; never makes
+    /// per-request decisions (the paper's §I contrast).
+    AppLevel {
+        /// QoS target on windowed service p90, ms.
+        qos_ms: f64,
+        /// Controller sampling interval, ms.
+        sampling_ms: f64,
+    },
+}
+
+impl PolicyKind {
+    /// Instantiate the policy for a topology.
+    pub fn build(&self, topology: &Topology) -> Box<dyn Policy> {
+        match *self {
+            PolicyKind::HurryUp {
+                sampling_ms,
+                threshold_ms,
+            } => Box::new(HurryUp::new(
+                HurryUpParams {
+                    sampling_ms,
+                    threshold_ms,
+                },
+                topology.clone(),
+            )),
+            PolicyKind::LinuxRandom => Box::new(LinuxRandom::new()),
+            PolicyKind::RoundRobin => Box::new(RoundRobin::new()),
+            PolicyKind::AllBig => Box::new(static_policy::StaticPolicy::new(StaticKind::AllBig)),
+            PolicyKind::AllLittle => {
+                Box::new(static_policy::StaticPolicy::new(StaticKind::AllLittle))
+            }
+            PolicyKind::Oracle { cutoff_kw } => Box::new(Oracle::new(cutoff_kw)),
+            PolicyKind::AppLevel { qos_ms, sampling_ms } => {
+                Box::new(AppLevel::new(qos_ms, sampling_ms, topology))
+            }
+        }
+    }
+
+    /// Short label for tables.
+    pub fn label(&self) -> String {
+        match self {
+            PolicyKind::HurryUp { .. } => "hurry-up".into(),
+            PolicyKind::LinuxRandom => "linux".into(),
+            PolicyKind::RoundRobin => "round-robin".into(),
+            PolicyKind::AllBig => "all-big".into(),
+            PolicyKind::AllLittle => "all-little".into(),
+            PolicyKind::Oracle { .. } => "oracle".into(),
+            PolicyKind::AppLevel { .. } => "app-level".into(),
+        }
+    }
+}
+
+/// Dispatch helper shared by the random-dispatch policies: uniformly random
+/// idle core (this is what an unpinned Linux wakeup balance amounts to for
+/// this workload).
+pub(crate) fn random_idle(idle: &[CoreId], rng: &mut Rng) -> Option<CoreId> {
+    if idle.is_empty() {
+        None
+    } else {
+        Some(idle[rng.below(idle.len())])
+    }
+}
+
+/// Dispatch helper: random idle core of a specific kind.
+pub(crate) fn random_idle_of_kind(
+    idle: &[CoreId],
+    aff: &AffinityTable,
+    kind: CoreKind,
+    rng: &mut Rng,
+) -> Option<CoreId> {
+    let of_kind: Vec<CoreId> = idle
+        .iter()
+        .copied()
+        .filter(|&c| aff.topology().kind(c) == kind)
+        .collect();
+    random_idle(&of_kind, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_build_and_label() {
+        let topo = Topology::juno_r1();
+        for kind in [
+            PolicyKind::HurryUp {
+                sampling_ms: 25.0,
+                threshold_ms: 50.0,
+            },
+            PolicyKind::LinuxRandom,
+            PolicyKind::RoundRobin,
+            PolicyKind::AllBig,
+            PolicyKind::AllLittle,
+            PolicyKind::Oracle { cutoff_kw: 5 },
+            PolicyKind::AppLevel { qos_ms: 500.0, sampling_ms: 50.0 },
+        ] {
+            let p = kind.build(&topo);
+            assert!(!p.name().is_empty());
+            assert!(!kind.label().is_empty());
+        }
+    }
+
+    #[test]
+    fn random_idle_none_when_empty() {
+        let mut rng = Rng::new(1);
+        assert_eq!(random_idle(&[], &mut rng), None);
+    }
+
+    #[test]
+    fn random_idle_of_kind_filters() {
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo);
+        let mut rng = Rng::new(2);
+        let idle = vec![CoreId(0), CoreId(3)];
+        for _ in 0..20 {
+            assert_eq!(
+                random_idle_of_kind(&idle, &aff, CoreKind::Big, &mut rng),
+                Some(CoreId(0))
+            );
+            assert_eq!(
+                random_idle_of_kind(&idle, &aff, CoreKind::Little, &mut rng),
+                Some(CoreId(3))
+            );
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Oracle ablation: an upper bound that *knows* each query's keyword count
+//! at dispatch (the paper's §II notes this annotation is impractical in real
+//! systems — which is exactly why Hurry-up infers intensity from elapsed
+//! time; the oracle quantifies what that inference leaves on the table).
+//!
+//! Heavy requests (≥ cutoff keywords, default 5 = the little-core QoS
+//! cutoff of Fig 1) prefer an idle big core, light requests prefer an idle
+//! little core; both fall back to the other kind rather than queueing.
+
+use super::{random_idle, random_idle_of_kind, DispatchInfo, Policy};
+use crate::platform::{AffinityTable, CoreId, CoreKind};
+use crate::util::Rng;
+
+/// Keyword-count oracle dispatch, no migrations.
+#[derive(Debug)]
+pub struct Oracle {
+    cutoff_kw: usize,
+}
+
+impl Oracle {
+    /// New oracle with the heavy-request keyword cutoff.
+    pub fn new(cutoff_kw: usize) -> Oracle {
+        Oracle { cutoff_kw }
+    }
+}
+
+impl Policy for Oracle {
+    fn name(&self) -> String {
+        format!("oracle(cutoff={}kw)", self.cutoff_kw)
+    }
+
+    fn sampling_ms(&self) -> Option<f64> {
+        None
+    }
+
+    fn choose_core(
+        &mut self,
+        idle: &[CoreId],
+        aff: &AffinityTable,
+        info: DispatchInfo,
+        rng: &mut Rng,
+    ) -> Option<CoreId> {
+        let preferred = if info.keywords >= self.cutoff_kw {
+            CoreKind::Big
+        } else {
+            CoreKind::Little
+        };
+        random_idle_of_kind(idle, aff, preferred, rng).or_else(|| random_idle(idle, rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Topology;
+
+    fn setup() -> (Oracle, AffinityTable, Rng) {
+        (
+            Oracle::new(5),
+            AffinityTable::round_robin(Topology::juno_r1()),
+            Rng::new(7),
+        )
+    }
+
+    #[test]
+    fn heavy_prefers_big() {
+        let (mut p, aff, mut rng) = setup();
+        let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
+        for _ in 0..50 {
+            let c = p
+                .choose_core(&idle, &aff, DispatchInfo { keywords: 9 }, &mut rng)
+                .unwrap();
+            assert_eq!(aff.topology().kind(c), CoreKind::Big);
+        }
+    }
+
+    #[test]
+    fn light_prefers_little() {
+        let (mut p, aff, mut rng) = setup();
+        let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
+        for _ in 0..50 {
+            let c = p
+                .choose_core(&idle, &aff, DispatchInfo { keywords: 2 }, &mut rng)
+                .unwrap();
+            assert_eq!(aff.topology().kind(c), CoreKind::Little);
+        }
+    }
+
+    #[test]
+    fn falls_back_to_other_kind() {
+        let (mut p, aff, mut rng) = setup();
+        // Heavy request, only little cores idle: take a little core rather
+        // than queue (work-conserving).
+        let idle = vec![CoreId(3), CoreId(4)];
+        let c = p
+            .choose_core(&idle, &aff, DispatchInfo { keywords: 12 }, &mut rng)
+            .unwrap();
+        assert!(idle.contains(&c));
+    }
+
+    #[test]
+    fn cutoff_boundary() {
+        let (mut p, aff, mut rng) = setup();
+        let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
+        let c = p
+            .choose_core(&idle, &aff, DispatchInfo { keywords: 5 }, &mut rng)
+            .unwrap();
+        assert_eq!(aff.topology().kind(c), CoreKind::Big); // >= cutoff is heavy
+        let c = p
+            .choose_core(&idle, &aff, DispatchInfo { keywords: 4 }, &mut rng)
+            .unwrap();
+        assert_eq!(aff.topology().kind(c), CoreKind::Little);
+    }
+}

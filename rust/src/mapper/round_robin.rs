@@ -1,0 +1,97 @@
+//! Ablation baseline: cycle dispatch over cores in round-robin order (no
+//! migrations). Isolates how much of Hurry-up's win comes from randomness
+//! in initial placement vs. migration.
+
+use super::{DispatchInfo, Policy};
+use crate::platform::{AffinityTable, CoreId};
+use crate::util::Rng;
+
+/// Round-robin dispatch, no migrations.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    /// New round-robin policy.
+    pub fn new() -> RoundRobin {
+        RoundRobin { next: 0 }
+    }
+}
+
+impl Policy for RoundRobin {
+    fn name(&self) -> String {
+        "round-robin".into()
+    }
+
+    fn sampling_ms(&self) -> Option<f64> {
+        None
+    }
+
+    fn choose_core(
+        &mut self,
+        idle: &[CoreId],
+        aff: &AffinityTable,
+        _info: DispatchInfo,
+        _rng: &mut Rng,
+    ) -> Option<CoreId> {
+        if idle.is_empty() {
+            return None;
+        }
+        // Walk the global core order from the cursor, take the first idle.
+        let n = aff.topology().num_cores();
+        for off in 0..n {
+            let candidate = CoreId((self.next + off) % n);
+            if idle.contains(&candidate) {
+                self.next = (candidate.0 + 1) % n;
+                return Some(candidate);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Topology;
+
+    #[test]
+    fn cycles_through_cores() {
+        let mut p = RoundRobin::new();
+        let aff = AffinityTable::round_robin(Topology::juno_r1());
+        let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
+        let mut rng = Rng::new(0);
+        let picks: Vec<usize> = (0..8)
+            .map(|_| {
+                p.choose_core(&idle, &aff, DispatchInfo { keywords: 1 }, &mut rng)
+                    .unwrap()
+                    .0
+            })
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 3, 4, 5, 0, 1]);
+    }
+
+    #[test]
+    fn skips_busy_cores() {
+        let mut p = RoundRobin::new();
+        let aff = AffinityTable::round_robin(Topology::juno_r1());
+        let mut rng = Rng::new(0);
+        let idle = vec![CoreId(2), CoreId(5)];
+        assert_eq!(
+            p.choose_core(&idle, &aff, DispatchInfo { keywords: 1 }, &mut rng),
+            Some(CoreId(2))
+        );
+        assert_eq!(
+            p.choose_core(&idle, &aff, DispatchInfo { keywords: 1 }, &mut rng),
+            Some(CoreId(5))
+        );
+    }
+
+    #[test]
+    fn no_migrations() {
+        let mut p = RoundRobin::new();
+        let aff = AffinityTable::round_robin(Topology::juno_r1());
+        assert!(p.tick(100.0, &aff).is_empty());
+    }
+}

@@ -1,0 +1,100 @@
+//! Ablation baselines that restrict dispatch to one core kind: all-big and
+//! all-little (the homogeneous configurations of Figs 2–3, run on the
+//! heterogeneous topology by simply never using the other cluster).
+
+use super::{random_idle_of_kind, DispatchInfo, Policy};
+use crate::platform::{AffinityTable, CoreId, CoreKind};
+use crate::util::Rng;
+
+/// Which cluster the static policy is allowed to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StaticKind {
+    /// Serve everything on big cores; littles stay idle.
+    AllBig,
+    /// Serve everything on little cores; bigs stay idle.
+    AllLittle,
+}
+
+/// Single-cluster dispatch, no migrations.
+#[derive(Debug)]
+pub struct StaticPolicy {
+    kind: StaticKind,
+}
+
+impl StaticPolicy {
+    /// New static policy for a cluster.
+    pub fn new(kind: StaticKind) -> StaticPolicy {
+        StaticPolicy { kind }
+    }
+
+    fn core_kind(&self) -> CoreKind {
+        match self.kind {
+            StaticKind::AllBig => CoreKind::Big,
+            StaticKind::AllLittle => CoreKind::Little,
+        }
+    }
+}
+
+impl Policy for StaticPolicy {
+    fn name(&self) -> String {
+        match self.kind {
+            StaticKind::AllBig => "all-big".into(),
+            StaticKind::AllLittle => "all-little".into(),
+        }
+    }
+
+    fn sampling_ms(&self) -> Option<f64> {
+        None
+    }
+
+    fn choose_core(
+        &mut self,
+        idle: &[CoreId],
+        aff: &AffinityTable,
+        _info: DispatchInfo,
+        rng: &mut Rng,
+    ) -> Option<CoreId> {
+        random_idle_of_kind(idle, aff, self.core_kind(), rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Topology;
+
+    #[test]
+    fn all_big_refuses_little_cores() {
+        let mut p = StaticPolicy::new(StaticKind::AllBig);
+        let aff = AffinityTable::round_robin(Topology::juno_r1());
+        let mut rng = Rng::new(1);
+        // Only little cores idle => request must wait.
+        let idle = vec![CoreId(2), CoreId(3)];
+        assert_eq!(
+            p.choose_core(&idle, &aff, DispatchInfo { keywords: 2 }, &mut rng),
+            None
+        );
+        // A big core idle => taken.
+        let idle = vec![CoreId(1), CoreId(4)];
+        assert_eq!(
+            p.choose_core(&idle, &aff, DispatchInfo { keywords: 2 }, &mut rng),
+            Some(CoreId(1))
+        );
+    }
+
+    #[test]
+    fn all_little_refuses_big_cores() {
+        let mut p = StaticPolicy::new(StaticKind::AllLittle);
+        let aff = AffinityTable::round_robin(Topology::juno_r1());
+        let mut rng = Rng::new(2);
+        let idle = vec![CoreId(0), CoreId(1)];
+        assert_eq!(
+            p.choose_core(&idle, &aff, DispatchInfo { keywords: 2 }, &mut rng),
+            None
+        );
+        let got = p
+            .choose_core(&[CoreId(0), CoreId(5)], &aff, DispatchInfo { keywords: 2 }, &mut rng)
+            .unwrap();
+        assert_eq!(got, CoreId(5));
+    }
+}

@@ -1,0 +1,267 @@
+//! Log-bucketed latency histogram (HdrHistogram-style, built from scratch).
+//!
+//! Buckets grow geometrically by `1 + PRECISION`, giving ≤ 1 % relative
+//! error on percentile queries over a 1 µs … 10⁷ ms range with a few
+//! thousand buckets. Also keeps exact count/mean/variance (Welford) so
+//! Fig 1's mean ± std columns are exact.
+
+/// Relative bucket width (1 % precision).
+const PRECISION: f64 = 0.01;
+/// Values below this are clamped into bucket 0 (0.001 ms = 1 µs).
+const MIN_VALUE: f64 = 1e-3;
+
+/// Log-bucketed histogram over positive millisecond values.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    min: f64,
+    max: f64,
+    // Welford running moments.
+    mean: f64,
+    m2: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// Empty histogram.
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: Vec::new(),
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            mean: 0.0,
+            m2: 0.0,
+        }
+    }
+
+    #[inline]
+    fn bucket_of(value_ms: f64) -> usize {
+        let v = value_ms.max(MIN_VALUE);
+        ((v / MIN_VALUE).ln() / (1.0 + PRECISION).ln()).floor() as usize
+    }
+
+    #[inline]
+    fn bucket_value(index: usize) -> f64 {
+        // Geometric midpoint of the bucket.
+        MIN_VALUE * (1.0 + PRECISION).powi(index as i32) * (1.0 + PRECISION / 2.0)
+    }
+
+    /// Record one latency sample (ms). Non-finite or negative samples panic
+    /// in debug and are clamped in release.
+    pub fn record(&mut self, value_ms: f64) {
+        debug_assert!(value_ms.is_finite() && value_ms >= 0.0, "bad sample {value_ms}");
+        let idx = Self::bucket_of(value_ms);
+        if idx >= self.buckets.len() {
+            self.buckets.resize(idx + 1, 0);
+        }
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.min = self.min.min(value_ms);
+        self.max = self.max.max(value_ms);
+        let delta = value_ms - self.mean;
+        self.mean += delta / self.count as f64;
+        self.m2 += delta * (value_ms - self.mean);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True if no samples were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact running mean.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Exact running population standard deviation.
+    pub fn std(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            (self.m2 / self.count as f64).sqrt()
+        }
+    }
+
+    /// Smallest recorded sample.
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Largest recorded sample.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Percentile query, `q` in [0, 1] (e.g. 0.90 for the paper's tail
+    /// latency). ≤ ~1 % relative error from bucketing; exact at extremes.
+    pub fn percentile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q), "quantile {q}");
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if q <= 0.0 {
+            return self.min;
+        }
+        if q >= 1.0 {
+            return self.max;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::bucket_value(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        if other.buckets.len() > self.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (i, &c) in other.buckets.iter().enumerate() {
+            self.buckets[i] += c;
+        }
+        // Chan et al. parallel moment combination.
+        let n1 = self.count as f64;
+        let n2 = other.count as f64;
+        let delta = other.mean - self.mean;
+        let total = n1 + n2;
+        self.mean += delta * n2 / total;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / total;
+        self.count += other.count;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Iterate non-empty buckets as `(bucket_mid_ms, count)` (PDF/CDF
+    /// rendering).
+    pub fn iter_buckets(&self) -> impl Iterator<Item = (f64, u64)> + '_ {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (Self::bucket_value(i), c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn percentiles_of_uniform_ramp() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=10_000 {
+            h.record(i as f64 / 10.0); // 0.1 .. 1000.0 ms
+        }
+        assert!((h.percentile(0.5) - 500.0).abs() / 500.0 < 0.02);
+        assert!((h.percentile(0.9) - 900.0).abs() / 900.0 < 0.02);
+        assert!((h.percentile(0.99) - 990.0).abs() / 990.0 < 0.02);
+        assert_eq!(h.percentile(0.0), 0.1);
+        assert_eq!(h.percentile(1.0), 1000.0);
+    }
+
+    #[test]
+    fn mean_std_exact() {
+        let mut h = LatencyHistogram::new();
+        for v in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            h.record(v);
+        }
+        assert!((h.mean() - 5.0).abs() < 1e-12);
+        assert!((h.std() - 2.0).abs() < 1e-12); // classic Welford example
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new();
+        assert!(h.is_empty());
+        assert!(h.mean().is_nan());
+        assert!(h.percentile(0.9).is_nan());
+    }
+
+    #[test]
+    fn merge_equals_combined_stream() {
+        let mut rng = Rng::new(5);
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        for i in 0..5000 {
+            let v = rng.f64_range(0.5, 2000.0);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.std() - all.std()).abs() < 1e-9);
+        assert_eq!(a.percentile(0.9), all.percentile(0.9));
+    }
+
+    #[test]
+    fn tiny_values_clamped_not_lost() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.0);
+        h.record(1e-9);
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile(0.5) <= MIN_VALUE * (1.0 + PRECISION));
+    }
+
+    #[test]
+    fn prop_percentile_error_within_bucket_precision() {
+        prop::check(64, |rng: &mut Rng, _| {
+            let n = rng.range(100, 2000);
+            let mut h = LatencyHistogram::new();
+            let mut vals = Vec::with_capacity(n);
+            for _ in 0..n {
+                let v = rng.lognormal(4.0, 1.5); // ~55 ms median, heavy tail
+                h.record(v);
+                vals.push(v);
+            }
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [0.5, 0.9, 0.99] {
+                let exact = vals[(((q * n as f64).ceil() as usize) - 1).min(n - 1)];
+                let approx = h.percentile(q);
+                let rel = (approx - exact).abs() / exact;
+                assert!(rel < 0.02, "q={q} exact={exact} approx={approx}");
+            }
+        });
+    }
+
+    #[test]
+    fn bucket_monotone() {
+        // bucket_of must be monotone non-decreasing in value.
+        let mut last = 0;
+        for i in 1..10_000 {
+            let b = LatencyHistogram::bucket_of(i as f64 * 0.37);
+            assert!(b >= last);
+            last = b;
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Latency/throughput metrics: log-bucketed histograms with percentile
+//! queries (the paper reports 90th-percentile tail latency), running
+//! mean/std (Fig 1 error bars), and PDF estimation (Fig 6).
+
+pub mod histogram;
+pub mod pdf;
+pub mod summary;
+
+pub use histogram::LatencyHistogram;
+pub use pdf::pdf_from_samples;
+pub use summary::Summary;

@@ -1,0 +1,71 @@
+//! Probability-density estimation over latency samples — Fig 6 plots the
+//! PDF of query processing time for Hurry-up vs Linux mapping.
+
+/// Estimate a PDF by fixed-width binning over `[lo, hi]`, returning
+/// `(bin_center_ms, density)` pairs. Densities integrate to ≈ the fraction
+/// of samples inside the range.
+pub fn pdf_from_samples(samples: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<(f64, f64)> {
+    assert!(bins > 0 && hi > lo, "bad pdf range");
+    let width = (hi - lo) / bins as f64;
+    let mut counts = vec![0u64; bins];
+    let mut inside = 0u64;
+    for &s in samples {
+        if s >= lo && s < hi {
+            let b = ((s - lo) / width) as usize;
+            counts[b.min(bins - 1)] += 1;
+            inside += 1;
+        }
+    }
+    let n = samples.len().max(1) as f64;
+    let _ = inside;
+    counts
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| {
+            let center = lo + (i as f64 + 0.5) * width;
+            let density = c as f64 / (n * width);
+            (center, density)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn integrates_to_one_for_contained_samples() {
+        let mut rng = Rng::new(3);
+        let samples: Vec<f64> = (0..20_000).map(|_| rng.f64_range(0.0, 100.0)).collect();
+        let pdf = pdf_from_samples(&samples, 0.0, 100.0, 50);
+        let integral: f64 = pdf.iter().map(|(_, d)| d * 2.0).sum(); // width 2
+        assert!((integral - 1.0).abs() < 0.01, "integral={integral}");
+    }
+
+    #[test]
+    fn uniform_density_flat() {
+        let mut rng = Rng::new(4);
+        let samples: Vec<f64> = (0..100_000).map(|_| rng.f64_range(0.0, 10.0)).collect();
+        let pdf = pdf_from_samples(&samples, 0.0, 10.0, 10);
+        for (_, d) in &pdf {
+            assert!((d - 0.1).abs() < 0.01, "d={d}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_samples_excluded() {
+        let samples = vec![-5.0, 5.0, 500.0];
+        let pdf = pdf_from_samples(&samples, 0.0, 10.0, 2);
+        let total: f64 = pdf.iter().map(|(_, d)| d * 5.0).sum();
+        // only 1 of 3 samples inside
+        assert!((total - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bin_centers_correct() {
+        let pdf = pdf_from_samples(&[1.0], 0.0, 10.0, 5);
+        let centers: Vec<f64> = pdf.iter().map(|(c, _)| *c).collect();
+        assert_eq!(centers, vec![1.0, 3.0, 5.0, 7.0, 9.0]);
+    }
+}

@@ -1,0 +1,98 @@
+//! Scalar summary of a latency distribution — the row format the experiment
+//! tables print.
+
+use super::histogram::LatencyHistogram;
+
+/// Summary statistics of a sample set.
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    /// Sample count.
+    pub count: u64,
+    /// Mean.
+    pub mean: f64,
+    /// Population standard deviation.
+    pub std: f64,
+    /// Minimum.
+    pub min: f64,
+    /// Median.
+    pub p50: f64,
+    /// 90th percentile — the paper's tail-latency metric.
+    pub p90: f64,
+    /// 99th percentile.
+    pub p99: f64,
+    /// Maximum (the paper's "worst case tail latency", Fig 6 point A).
+    pub max: f64,
+}
+
+impl Summary {
+    /// Summarise a histogram.
+    pub fn from_histogram(h: &LatencyHistogram) -> Summary {
+        Summary {
+            count: h.count(),
+            mean: h.mean(),
+            std: h.std(),
+            min: h.min(),
+            p50: h.percentile(0.50),
+            p90: h.percentile(0.90),
+            p99: h.percentile(0.99),
+            max: h.max(),
+        }
+    }
+
+    /// Summarise a raw slice (exact percentiles; used by small experiments).
+    pub fn from_slice(values: &[f64]) -> Summary {
+        assert!(!values.is_empty(), "empty sample set");
+        let mut v = values.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        let pct = |q: f64| -> f64 { v[(((q * n as f64).ceil() as usize).max(1) - 1).min(n - 1)] };
+        let mean = v.iter().sum::<f64>() / n as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            count: n as u64,
+            mean,
+            std: var.sqrt(),
+            min: v[0],
+            p50: pct(0.50),
+            p90: pct(0.90),
+            p99: pct(0.99),
+            max: v[n - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_summary_exact() {
+        let s = Summary::from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0]);
+        assert_eq!(s.count, 10);
+        assert!((s.mean - 5.5).abs() < 1e-12);
+        assert_eq!(s.p50, 5.0);
+        assert_eq!(s.p90, 9.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 10.0);
+    }
+
+    #[test]
+    fn histogram_summary_close_to_slice() {
+        let vals: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let mut h = LatencyHistogram::new();
+        for &v in &vals {
+            h.record(v);
+        }
+        let hs = Summary::from_histogram(&h);
+        let ss = Summary::from_slice(&vals);
+        assert_eq!(hs.count, ss.count);
+        assert!((hs.p90 - ss.p90).abs() / ss.p90 < 0.02);
+        assert!((hs.mean - ss.mean).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn empty_slice_panics() {
+        Summary::from_slice(&[]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Thread↔core affinity table.
+//!
+//! The paper pins one search thread per core (pool size == core count) and
+//! migrates threads by changing affinity (`sched_setaffinity`). This table
+//! maintains the 1:1 thread↔core bijection and implements the *swap*
+//! migration of Algorithm 1 lines 21–26: the long-running little-core thread
+//! moves to a big core, and the thread previously on that big core moves to
+//! the vacated little core.
+
+use super::core::{CoreId, CoreKind, ThreadId};
+use super::topology::Topology;
+
+/// Bidirectional thread↔core mapping (always a bijection).
+#[derive(Clone, Debug)]
+pub struct AffinityTable {
+    thread_to_core: Vec<CoreId>,
+    core_to_thread: Vec<ThreadId>,
+    topology: Topology,
+}
+
+impl AffinityTable {
+    /// Round-robin initial mapping: thread i → core i (the paper balances
+    /// the pool uniformly across all available cores at startup).
+    pub fn round_robin(topology: Topology) -> AffinityTable {
+        let n = topology.num_cores();
+        AffinityTable {
+            thread_to_core: (0..n).map(CoreId).collect(),
+            core_to_thread: (0..n).map(ThreadId).collect(),
+            topology,
+        }
+    }
+
+    /// Arbitrary initial mapping given as thread→core (must be a bijection).
+    pub fn from_mapping(topology: Topology, mapping: Vec<CoreId>) -> AffinityTable {
+        assert_eq!(mapping.len(), topology.num_cores(), "mapping arity");
+        let mut core_to_thread = vec![None; topology.num_cores()];
+        for (t, &c) in mapping.iter().enumerate() {
+            assert!(
+                core_to_thread[c.0].replace(ThreadId(t)).is_none(),
+                "two threads mapped to {c}"
+            );
+        }
+        AffinityTable {
+            thread_to_core: mapping,
+            core_to_thread: core_to_thread.into_iter().map(Option::unwrap).collect(),
+            topology,
+        }
+    }
+
+    /// The platform topology.
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
+    /// Number of threads (== number of cores).
+    pub fn num_threads(&self) -> usize {
+        self.thread_to_core.len()
+    }
+
+    /// Core the thread is currently pinned to (paper: `GetRunningCore`).
+    pub fn core_of(&self, tid: ThreadId) -> CoreId {
+        self.thread_to_core[tid.0]
+    }
+
+    /// Thread pinned to the core (paper: `GetRunningThread`).
+    pub fn thread_on(&self, core: CoreId) -> ThreadId {
+        self.core_to_thread[core.0]
+    }
+
+    /// Kind of the core the thread runs on.
+    pub fn kind_of(&self, tid: ThreadId) -> CoreKind {
+        self.topology.kind(self.core_of(tid))
+    }
+
+    /// Swap the threads on two cores (Algorithm 1 lines 25–26: `Map ThreadID
+    /// to BigCore; Map ThreadOnBig to LittleCore`). Returns (thread moved to
+    /// `a`, thread moved to `b`).
+    pub fn swap(&mut self, a: CoreId, b: CoreId) -> (ThreadId, ThreadId) {
+        let ta = self.core_to_thread[a.0];
+        let tb = self.core_to_thread[b.0];
+        self.core_to_thread.swap(a.0, b.0);
+        self.thread_to_core[ta.0] = b;
+        self.thread_to_core[tb.0] = a;
+        (tb, ta)
+    }
+
+    /// Check the bijection invariant (used by property tests).
+    pub fn is_bijection(&self) -> bool {
+        self.thread_to_core
+            .iter()
+            .enumerate()
+            .all(|(t, &c)| self.core_to_thread[c.0] == ThreadId(t))
+            && self
+                .core_to_thread
+                .iter()
+                .enumerate()
+                .all(|(c, &t)| self.thread_to_core[t.0] == CoreId(c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn round_robin_identity() {
+        let a = AffinityTable::round_robin(Topology::juno_r1());
+        for i in 0..6 {
+            assert_eq!(a.core_of(ThreadId(i)), CoreId(i));
+            assert_eq!(a.thread_on(CoreId(i)), ThreadId(i));
+        }
+        assert!(a.is_bijection());
+    }
+
+    #[test]
+    fn swap_moves_both_threads() {
+        let mut a = AffinityTable::round_robin(Topology::juno_r1());
+        // Thread 4 (little core 4) ↔ thread 0 (big core 0).
+        let (to_big, to_little) = a.swap(CoreId(0), CoreId(4));
+        assert_eq!(to_big, ThreadId(4));
+        assert_eq!(to_little, ThreadId(0));
+        assert_eq!(a.core_of(ThreadId(4)), CoreId(0));
+        assert_eq!(a.core_of(ThreadId(0)), CoreId(4));
+        assert_eq!(a.kind_of(ThreadId(4)), CoreKind::Big);
+        assert!(a.is_bijection());
+    }
+
+    #[test]
+    fn kind_of_tracks_topology() {
+        let a = AffinityTable::round_robin(Topology::juno_r1());
+        assert_eq!(a.kind_of(ThreadId(0)), CoreKind::Big);
+        assert_eq!(a.kind_of(ThreadId(5)), CoreKind::Little);
+    }
+
+    #[test]
+    #[should_panic(expected = "two threads")]
+    fn from_mapping_rejects_non_bijection() {
+        AffinityTable::from_mapping(
+            Topology::new(1, 1),
+            vec![CoreId(0), CoreId(0)],
+        );
+    }
+
+    #[test]
+    fn prop_random_swaps_preserve_bijection() {
+        prop::check(prop::DEFAULT_CASES, |rng: &mut Rng, _i| {
+            let big = rng.range(0, 3);
+            let little = rng.range(if big == 0 { 1 } else { 0 }, 4);
+            let topo = Topology::new(big, little);
+            let n = topo.num_cores();
+            let mut a = AffinityTable::round_robin(topo);
+            for _ in 0..rng.below(64) {
+                let x = CoreId(rng.below(n));
+                let y = CoreId(rng.below(n));
+                a.swap(x, y);
+                assert!(a.is_bijection(), "bijection broken after swap");
+            }
+        });
+    }
+}

@@ -1,0 +1,100 @@
+//! Core and thread identities and the big/little core-kind enum.
+
+use std::fmt;
+
+/// Which cluster a core belongs to.
+///
+/// Calibration (DESIGN.md §4): one *work unit* is defined as 1 ms of
+/// processing on a big core at the highest DVFS state (1.15 GHz), so
+/// `speed(Big) = 1.0` u/ms and `speed(Little) = 0.30` u/ms, matching the
+/// paper's ≈3.3× single-thread gap (Fig 1/Fig 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum CoreKind {
+    /// Out-of-order Cortex-A57 @ 1.15 GHz.
+    Big,
+    /// In-order Cortex-A53 @ 0.6 GHz.
+    Little,
+}
+
+impl CoreKind {
+    /// Work units per millisecond at the highest DVFS state.
+    pub fn speed(self) -> f64 {
+        match self {
+            CoreKind::Big => 1.0,
+            CoreKind::Little => 0.30,
+        }
+    }
+
+    /// Service-time variability (σ of multiplicative lognormal noise).
+    /// The paper observes much larger error bars on little cores (Fig 1).
+    pub fn noise_sigma(self) -> f64 {
+        match self {
+            CoreKind::Big => 0.12,
+            CoreKind::Little => 0.30,
+        }
+    }
+
+    /// Single-letter label used in the paper's Fig 3 x-axis ("B"/"L").
+    pub fn letter(self) -> char {
+        match self {
+            CoreKind::Big => 'B',
+            CoreKind::Little => 'L',
+        }
+    }
+}
+
+impl fmt::Display for CoreKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CoreKind::Big => write!(f, "big"),
+            CoreKind::Little => write!(f, "little"),
+        }
+    }
+}
+
+/// Index of a core in the platform topology.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CoreId(pub usize);
+
+/// Index of a search thread in the pool (pool size == core count; the paper
+/// pins one Elasticsearch search thread per core).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ThreadId(pub usize);
+
+impl fmt::Display for CoreId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "core{}", self.0)
+    }
+}
+
+impl fmt::Display for ThreadId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "T{}", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn big_faster_than_little() {
+        assert!(CoreKind::Big.speed() > CoreKind::Little.speed());
+        // paper's single-thread gap ≈ 3.3×
+        let ratio = CoreKind::Big.speed() / CoreKind::Little.speed();
+        assert!((3.0..3.7).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn little_noisier_than_big() {
+        assert!(CoreKind::Little.noise_sigma() > CoreKind::Big.noise_sigma());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(CoreKind::Big.letter(), 'B');
+        assert_eq!(CoreKind::Little.to_string(), "little");
+        assert_eq!(CoreId(3).to_string(), "core3");
+        assert_eq!(ThreadId(1).to_string(), "T1");
+    }
+}

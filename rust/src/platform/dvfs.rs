@@ -1,0 +1,114 @@
+//! DVFS operating points for the Juno R1 clusters.
+//!
+//! The paper pins both clusters to their *highest* DVFS state (A57 @
+//! 1.15 GHz, A53 @ 0.6 GHz, §IV-A) — this module models the full ladders so
+//! that choice is an experiment rather than an assumption (related work the
+//! paper contrasts with — Hipster, Octopus-Man, Pegasus — manages DVFS
+//! explicitly).
+//!
+//! Speed scales ~linearly with frequency for this memory-light workload;
+//! dynamic power scales ~f·V², modelled as `(f/f_max)^2.5` of the
+//! highest-state active power (idle power is frequency-insensitive here).
+
+use super::core::CoreKind;
+use crate::config::SimConfig;
+
+/// One frequency step of a cluster.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OperatingPoint {
+    /// Cluster frequency, MHz.
+    pub freq_mhz: u32,
+    /// Speed multiplier relative to the highest state (≤ 1).
+    pub speed_scale: f64,
+    /// Active-power multiplier relative to the highest state (≤ 1).
+    pub power_scale: f64,
+}
+
+fn point(freq_mhz: u32, f_max: u32) -> OperatingPoint {
+    let r = freq_mhz as f64 / f_max as f64;
+    OperatingPoint {
+        freq_mhz,
+        speed_scale: r,
+        power_scale: r.powf(2.5),
+    }
+}
+
+/// The A57 (big) cluster ladder on Juno R1, highest state last.
+pub fn big_ladder() -> Vec<OperatingPoint> {
+    [450, 625, 800, 950, 1150]
+        .iter()
+        .map(|&f| point(f, 1150))
+        .collect()
+}
+
+/// The A53 (little) cluster ladder on Juno R1, highest state last.
+pub fn little_ladder() -> Vec<OperatingPoint> {
+    [450, 575, 600].iter().map(|&f| point(f, 600)).collect()
+}
+
+/// The paper's configuration: both clusters at the top state.
+pub fn paper_states() -> (OperatingPoint, OperatingPoint) {
+    (*big_ladder().last().unwrap(), *little_ladder().last().unwrap())
+}
+
+/// Derive a `SimConfig` running at the given operating points: core speeds
+/// enter through the service model (work units are defined at the top
+/// state) and active powers through the power model.
+pub fn apply(mut cfg: SimConfig, big: OperatingPoint, little: OperatingPoint) -> SimConfig {
+    // Slowing a core by s multiplies every request's work-time on it by
+    // 1/s; expressed by scaling the work-unit costs per kind is not
+    // possible (work is kind-independent), so scale via the speed override.
+    cfg.speed_override = Some((
+        CoreKind::Big.speed() * big.speed_scale,
+        CoreKind::Little.speed() * little.speed_scale,
+    ));
+    cfg.power.big_active_w *= big.power_scale;
+    cfg.power.little_active_w *= little.power_scale;
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapper::PolicyKind;
+
+    #[test]
+    fn ladders_end_at_paper_frequencies() {
+        assert_eq!(big_ladder().last().unwrap().freq_mhz, 1150);
+        assert_eq!(little_ladder().last().unwrap().freq_mhz, 600);
+        let (b, l) = paper_states();
+        assert_eq!(b.speed_scale, 1.0);
+        assert_eq!(l.power_scale, 1.0);
+    }
+
+    #[test]
+    fn scales_monotone_in_frequency() {
+        for ladder in [big_ladder(), little_ladder()] {
+            for w in ladder.windows(2) {
+                assert!(w[0].speed_scale < w[1].speed_scale);
+                assert!(w[0].power_scale < w[1].power_scale);
+            }
+        }
+    }
+
+    #[test]
+    fn power_falls_faster_than_speed() {
+        // The DVFS rationale: f↓ saves superlinear power.
+        for p in big_ladder() {
+            assert!(p.power_scale <= p.speed_scale + 1e-12, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn apply_scales_config() {
+        let base = SimConfig::paper_default(PolicyKind::LinuxRandom);
+        let low_big = big_ladder()[0];
+        let top_little = *little_ladder().last().unwrap();
+        let cfg = apply(base.clone(), low_big, top_little);
+        let (sb, sl) = cfg.speed_override.unwrap();
+        assert!((sb - 450.0 / 1150.0).abs() < 1e-12);
+        assert_eq!(sl, 0.30);
+        assert!(cfg.power.big_active_w < base.power.big_active_w);
+        assert_eq!(cfg.power.little_active_w, base.power.little_active_w);
+    }
+}

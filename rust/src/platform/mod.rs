@@ -1,0 +1,23 @@
+//! Big/little platform model — the ARM Juno R1 stand-in.
+//!
+//! The paper's testbed is a Juno R1 developer board: 2 out-of-order
+//! Cortex-A57 ("big", 1.15 GHz, shared 2 MB L2) + 4 in-order Cortex-A53
+//! ("little", 0.6 GHz, shared 1 MB L2), fully coherent via CCI-400, with
+//! four native energy meters (big cluster, little cluster, SoC rest, GPU).
+//! None of that hardware exists here, so this module models the pieces the
+//! paper's evaluation actually exercises: relative core speeds, per-core
+//! thread affinity with cheap cross-cluster migration, and per-channel
+//! energy metering. Calibration constants and their provenance are in
+//! DESIGN.md §4.
+
+pub mod affinity;
+pub mod core;
+pub mod dvfs;
+pub mod power;
+pub mod topology;
+
+pub use affinity::AffinityTable;
+pub use dvfs::OperatingPoint;
+pub use core::{CoreId, CoreKind, ThreadId};
+pub use power::{EnergyMeters, MeterChannel, PowerModel};
+pub use topology::Topology;

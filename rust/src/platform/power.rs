@@ -1,0 +1,229 @@
+//! Power model and four-channel energy meters — the Juno R1 energy-meter
+//! stand-in.
+//!
+//! The board exposes four native meters: big cluster, little cluster, "rest
+//! of the system" (memory controllers etc.) and the Mali GPU (disabled in
+//! all the paper's experiments, hence 0 W). System energy is reported as the
+//! aggregate of big + little + rest, exactly as in §IV-A.
+//!
+//! Calibration (derivation in DESIGN.md §4):
+//!   * active-power ratio big/little = 7.8× (Fig 3),
+//!   * excluding rest-of-system a little core is ≈2.3× more power-efficient
+//!     per IPS than a big core (§IV-A),
+//!   * rest-of-system ≈ 0.76 W ≈ one big core at full utilisation (§IV-A).
+
+use super::core::CoreKind;
+
+/// Per-component power coefficients in Watts.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PowerModel {
+    /// Big core, 100 % utilised at highest DVFS state.
+    pub big_active_w: f64,
+    /// Big core, idle (WFI).
+    pub big_idle_w: f64,
+    /// Little core, 100 % utilised at highest DVFS state.
+    pub little_active_w: f64,
+    /// Little core, idle.
+    pub little_idle_w: f64,
+    /// Rest of the system: memory controllers, interconnect, IO.
+    pub rest_w: f64,
+    /// Mali GPU (disabled in all experiments).
+    pub gpu_w: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        PowerModel::juno_r1()
+    }
+}
+
+impl PowerModel {
+    /// Calibrated Juno R1 coefficients (DESIGN.md §4).
+    pub fn juno_r1() -> PowerModel {
+        PowerModel {
+            big_active_w: 1.318,
+            big_idle_w: 0.08,
+            little_active_w: 0.169,
+            little_idle_w: 0.02,
+            rest_w: 0.76,
+            gpu_w: 0.0,
+        }
+    }
+
+    /// Active power of a core kind.
+    pub fn active_w(&self, kind: CoreKind) -> f64 {
+        match kind {
+            CoreKind::Big => self.big_active_w,
+            CoreKind::Little => self.little_active_w,
+        }
+    }
+
+    /// Idle power of a core kind.
+    pub fn idle_w(&self, kind: CoreKind) -> f64 {
+        match kind {
+            CoreKind::Big => self.big_idle_w,
+            CoreKind::Little => self.little_idle_w,
+        }
+    }
+
+    /// IPS-per-watt power efficiency of a fully utilised core, excluding the
+    /// rest-of-system channel (IPS normalised to little == 1).
+    pub fn efficiency_excl_rest(&self, kind: CoreKind) -> f64 {
+        kind.speed() / self.active_w(kind)
+    }
+
+    /// IPS-per-watt including a full rest-of-system share (§IV-A's
+    /// single-core accounting).
+    pub fn efficiency_incl_rest(&self, kind: CoreKind) -> f64 {
+        kind.speed() / (self.active_w(kind) + self.rest_w)
+    }
+}
+
+/// The four meter channels of the Juno board.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MeterChannel {
+    /// A57 cluster.
+    BigCluster,
+    /// A53 cluster.
+    LittleCluster,
+    /// Memory controllers, interconnect, IO.
+    Rest,
+    /// Mali GPU (always 0 here — disabled as in the paper).
+    Gpu,
+}
+
+/// Energy accumulators for the four channels; integrates `P·dt` as the
+/// simulator (or live server) advances time.
+#[derive(Clone, Debug, Default)]
+pub struct EnergyMeters {
+    big_j: f64,
+    little_j: f64,
+    rest_j: f64,
+    gpu_j: f64,
+}
+
+impl EnergyMeters {
+    /// New meters, all channels at zero.
+    pub fn new() -> EnergyMeters {
+        EnergyMeters::default()
+    }
+
+    /// Account `dt_ms` of a core in the given activity state.
+    pub fn add_core_time(&mut self, model: &PowerModel, kind: CoreKind, active: bool, dt_ms: f64) {
+        debug_assert!(dt_ms >= -1e-9, "negative dt {dt_ms}");
+        let w = if active {
+            model.active_w(kind)
+        } else {
+            model.idle_w(kind)
+        };
+        let j = w * dt_ms / 1000.0;
+        match kind {
+            CoreKind::Big => self.big_j += j,
+            CoreKind::Little => self.little_j += j,
+        }
+    }
+
+    /// Account `dt_ms` of wall time on the always-on channels.
+    pub fn add_wall_time(&mut self, model: &PowerModel, dt_ms: f64) {
+        self.rest_j += model.rest_w * dt_ms / 1000.0;
+        self.gpu_j += model.gpu_w * dt_ms / 1000.0;
+    }
+
+    /// Energy of one channel in Joules.
+    pub fn channel_j(&self, ch: MeterChannel) -> f64 {
+        match ch {
+            MeterChannel::BigCluster => self.big_j,
+            MeterChannel::LittleCluster => self.little_j,
+            MeterChannel::Rest => self.rest_j,
+            MeterChannel::Gpu => self.gpu_j,
+        }
+    }
+
+    /// System energy as the paper aggregates it: big + little + rest
+    /// (GPU disabled/negligible).
+    pub fn total_j(&self) -> f64 {
+        self.big_j + self.little_j + self.rest_j
+    }
+
+    /// Merge another meter set into this one.
+    pub fn merge(&mut self, other: &EnergyMeters) {
+        self.big_j += other.big_j;
+        self.little_j += other.little_j;
+        self.rest_j += other.rest_j;
+        self.gpu_j += other.gpu_j;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_active_ratio_is_7_8x() {
+        let p = PowerModel::juno_r1();
+        let ratio = p.big_active_w / p.little_active_w;
+        assert!((7.6..8.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn calibration_little_2_3x_more_efficient_excl_rest() {
+        let p = PowerModel::juno_r1();
+        let ratio =
+            p.efficiency_excl_rest(CoreKind::Little) / p.efficiency_excl_rest(CoreKind::Big);
+        assert!((2.1..2.5).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn calibration_rest_close_to_one_big_core() {
+        let p = PowerModel::juno_r1();
+        // §IV-A: "the rest of the system ... consumes about the same power
+        // as the big core at full utilisation (0.76 W)". The paper's 0.76 W
+        // figure is the rest channel; our big_active is the same order.
+        assert!((p.rest_w - 0.76).abs() < 1e-9);
+        assert!(p.big_active_w / p.rest_w < 2.0);
+    }
+
+    #[test]
+    fn big_more_efficient_incl_rest() {
+        // §IV-A: including rest-of-system, a single big core is MORE
+        // power-efficient per IPS than a single little core.
+        let p = PowerModel::juno_r1();
+        assert!(
+            p.efficiency_incl_rest(CoreKind::Big) > p.efficiency_incl_rest(CoreKind::Little)
+        );
+    }
+
+    #[test]
+    fn meters_integrate_energy() {
+        let p = PowerModel::juno_r1();
+        let mut m = EnergyMeters::new();
+        m.add_core_time(&p, CoreKind::Big, true, 1000.0); // 1 s active big
+        m.add_core_time(&p, CoreKind::Little, false, 2000.0); // 2 s idle little
+        m.add_wall_time(&p, 1000.0);
+        assert!((m.channel_j(MeterChannel::BigCluster) - 1.318).abs() < 1e-9);
+        assert!((m.channel_j(MeterChannel::LittleCluster) - 0.04).abs() < 1e-9);
+        assert!((m.channel_j(MeterChannel::Rest) - 0.76).abs() < 1e-9);
+        assert_eq!(m.channel_j(MeterChannel::Gpu), 0.0);
+        assert!((m.total_j() - (1.318 + 0.04 + 0.76)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_adds_channels() {
+        let p = PowerModel::juno_r1();
+        let mut a = EnergyMeters::new();
+        let mut b = EnergyMeters::new();
+        a.add_wall_time(&p, 500.0);
+        b.add_wall_time(&p, 500.0);
+        a.merge(&b);
+        assert!((a.channel_j(MeterChannel::Rest) - 0.76).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gpu_channel_is_zero() {
+        // GPU disabled in all experiments, as in the paper.
+        let p = PowerModel::juno_r1();
+        let mut m = EnergyMeters::new();
+        m.add_wall_time(&p, 10_000.0);
+        assert_eq!(m.channel_j(MeterChannel::Gpu), 0.0);
+    }
+}

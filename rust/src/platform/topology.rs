@@ -1,0 +1,121 @@
+//! Platform topology: how many cores of each kind, in which order.
+
+use super::core::{CoreId, CoreKind};
+
+/// An ordered list of cores. Big cores first (matching the paper's
+/// `BigCoreList` iteration in Algorithm 1), then little cores.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    kinds: Vec<CoreKind>,
+}
+
+impl Topology {
+    /// The paper's platform: ARM Juno R1 — 2 big + 4 little.
+    pub fn juno_r1() -> Topology {
+        Topology::new(2, 4)
+    }
+
+    /// A custom big/little mix (used by Figs 2 and 3 core-config sweeps).
+    pub fn new(big: usize, little: usize) -> Topology {
+        assert!(big + little > 0, "empty topology");
+        let mut kinds = Vec::with_capacity(big + little);
+        kinds.extend(std::iter::repeat(CoreKind::Big).take(big));
+        kinds.extend(std::iter::repeat(CoreKind::Little).take(little));
+        Topology { kinds }
+    }
+
+    /// Total number of cores (== search thread pool size).
+    pub fn num_cores(&self) -> usize {
+        self.kinds.len()
+    }
+
+    /// Kind of a given core.
+    pub fn kind(&self, core: CoreId) -> CoreKind {
+        self.kinds[core.0]
+    }
+
+    /// All core ids, big cores first.
+    pub fn cores(&self) -> impl Iterator<Item = CoreId> + '_ {
+        (0..self.kinds.len()).map(CoreId)
+    }
+
+    /// The big cores, in order (Algorithm 1's `BigCoreList`).
+    pub fn big_cores(&self) -> Vec<CoreId> {
+        self.cores()
+            .filter(|&c| self.kind(c) == CoreKind::Big)
+            .collect()
+    }
+
+    /// The little cores, in order.
+    pub fn little_cores(&self) -> Vec<CoreId> {
+        self.cores()
+            .filter(|&c| self.kind(c) == CoreKind::Little)
+            .collect()
+    }
+
+    /// Count of cores of a given kind.
+    pub fn count(&self, kind: CoreKind) -> usize {
+        self.kinds.iter().filter(|&&k| k == kind).count()
+    }
+
+    /// Aggregate compute capacity in work units/ms (for load scaling).
+    pub fn capacity(&self) -> f64 {
+        self.kinds.iter().map(|k| k.speed()).sum()
+    }
+
+    /// Config label like "2B4L" (paper Fig 3 x-axis style).
+    pub fn label(&self) -> String {
+        let b = self.count(CoreKind::Big);
+        let l = self.count(CoreKind::Little);
+        match (b, l) {
+            (0, l) => format!("{l}L"),
+            (b, 0) => format!("{b}B"),
+            (b, l) => format!("{b}B{l}L"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn juno_r1_shape() {
+        let t = Topology::juno_r1();
+        assert_eq!(t.num_cores(), 6);
+        assert_eq!(t.count(CoreKind::Big), 2);
+        assert_eq!(t.count(CoreKind::Little), 4);
+        assert_eq!(t.label(), "2B4L");
+    }
+
+    #[test]
+    fn big_cores_listed_first() {
+        let t = Topology::juno_r1();
+        assert_eq!(t.big_cores(), vec![CoreId(0), CoreId(1)]);
+        assert_eq!(
+            t.little_cores(),
+            vec![CoreId(2), CoreId(3), CoreId(4), CoreId(5)]
+        );
+        assert_eq!(t.kind(CoreId(0)), CoreKind::Big);
+        assert_eq!(t.kind(CoreId(5)), CoreKind::Little);
+    }
+
+    #[test]
+    fn labels_for_homogeneous_configs() {
+        assert_eq!(Topology::new(0, 2).label(), "2L");
+        assert_eq!(Topology::new(1, 0).label(), "1B");
+    }
+
+    #[test]
+    fn capacity_sums_speeds() {
+        let t = Topology::juno_r1();
+        let expect = 2.0 * CoreKind::Big.speed() + 4.0 * CoreKind::Little.speed();
+        assert!((t.capacity() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn empty_topology_rejected() {
+        Topology::new(0, 0);
+    }
+}

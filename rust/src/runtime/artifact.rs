@@ -1,0 +1,119 @@
+//! Artifact discovery and validation.
+
+use std::path::PathBuf;
+
+use crate::error::{Error, Result};
+
+/// Artifact directory: `$HURRYUP_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("HURRYUP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Path of the scorer HLO text artifact.
+pub fn scorer_hlo_path() -> PathBuf {
+    artifacts_dir().join("scorer.hlo.txt")
+}
+
+/// Path of the scorer metadata JSON.
+pub fn scorer_meta_path() -> PathBuf {
+    artifacts_dir().join("scorer.meta.json")
+}
+
+/// Error unless the scorer artifact exists (run `make artifacts`).
+pub fn require_scorer() -> Result<PathBuf> {
+    let p = scorer_hlo_path();
+    if p.exists() {
+        Ok(p)
+    } else {
+        Err(Error::ArtifactMissing(p.display().to_string()))
+    }
+}
+
+/// Extract an integer field from the (tiny, trusted) metadata JSON without
+/// a JSON parser dependency: looks for `"key": <int>`.
+pub fn meta_int(meta: &str, key: &str) -> Option<i64> {
+    let needle = format!("\"{key}\"");
+    let at = meta.find(&needle)?;
+    let rest = &meta[at + needle.len()..];
+    let rest = rest.trim_start().strip_prefix(':')?.trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '-'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Validate that artifact metadata matches the engine's compiled-in block
+/// geometry (fail loudly if Python and Rust drift apart).
+pub fn validate_meta(meta: &str) -> Result<()> {
+    use crate::search::{BLOCK_TOP_K, DOC_BLOCK, MAX_TERMS};
+    let checks = [
+        ("doc_block", DOC_BLOCK as i64),
+        ("max_terms", MAX_TERMS as i64),
+        ("top_k", BLOCK_TOP_K as i64),
+    ];
+    for (key, want) in checks {
+        match meta_int(meta, key) {
+            Some(got) if got == want => {}
+            Some(got) => {
+                return Err(Error::Invalid(format!(
+                    "artifact geometry mismatch: {key}={got}, engine expects {want} — \
+                     re-run `make artifacts`"
+                )))
+            }
+            None => {
+                return Err(Error::Invalid(format!(
+                    "artifact metadata missing `{key}`"
+                )))
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_int_extracts_fields() {
+        let meta = r#"{ "doc_block": 256, "max_terms": 24, "top_k": 16, "k1": 1.2 }"#;
+        assert_eq!(meta_int(meta, "doc_block"), Some(256));
+        assert_eq!(meta_int(meta, "max_terms"), Some(24));
+        assert_eq!(meta_int(meta, "missing"), None);
+    }
+
+    #[test]
+    fn validate_accepts_matching_geometry() {
+        let meta = r#"{"doc_block": 256, "max_terms": 24, "top_k": 16}"#;
+        assert!(validate_meta(meta).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_drift() {
+        let meta = r#"{"doc_block": 128, "max_terms": 24, "top_k": 16}"#;
+        let e = validate_meta(meta).unwrap_err();
+        assert!(e.to_string().contains("doc_block"), "{e}");
+    }
+
+    #[test]
+    fn validate_rejects_missing_field() {
+        assert!(validate_meta(r#"{"doc_block": 256}"#).is_err());
+    }
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        // NB: env vars are process-global; restore afterwards.
+        let old = std::env::var_os("HURRYUP_ARTIFACTS");
+        std::env::set_var("HURRYUP_ARTIFACTS", "/tmp/custom_artifacts");
+        assert_eq!(
+            artifacts_dir(),
+            std::path::PathBuf::from("/tmp/custom_artifacts")
+        );
+        match old {
+            Some(v) => std::env::set_var("HURRYUP_ARTIFACTS", v),
+            None => std::env::remove_var("HURRYUP_ARTIFACTS"),
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime — loads and executes the AOT artifacts on the request path.
+//!
+//! The Layer-2 JAX scorer is lowered once (`make artifacts`) to HLO *text*
+//! (`artifacts/scorer.hlo.txt`; text because jax ≥ 0.5 emits 64-bit
+//! instruction ids that the bundled xla_extension 0.5.1 rejects in proto
+//! form). This module wraps the `xla` crate: CPU PJRT client, HLO parsing,
+//! compilation, and typed execution of the scorer signature.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so every live worker thread
+//! builds its own [`XlaScorer`]; compilation happens once per thread at
+//! startup, never on the request path.
+
+pub mod artifact;
+pub mod scorer;
+
+pub use artifact::{artifacts_dir, scorer_hlo_path, scorer_meta_path};
+pub use scorer::XlaScorer;

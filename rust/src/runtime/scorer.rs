@@ -1,0 +1,183 @@
+//! The compiled BM25 scorer: PJRT-loaded executable of the Layer-1/2
+//! artifact, exposed as a [`BlockScorer`] so the search engine can use it
+//! interchangeably with the pure-Rust reference.
+//!
+//! §Perf (EXPERIMENTS.md): the request-path cost of a block is dominated by
+//! host↔device plumbing, not the compute. Two optimizations, measured by
+//! `cargo bench --bench hotpath`:
+//!   1. inputs are uploaded as device buffers with `buffer_from_host_buffer`
+//!      and executed via `execute_b`, skipping per-call `Literal`
+//!      construction;
+//!   2. repeated execution of the same block (the live server's
+//!      heterogeneity emulation) uploads once and re-executes the device
+//!      buffers, making emulation passes nearly free of transfer cost.
+
+use crate::error::{Error, Result};
+use crate::search::engine::{BlockScorer, BlockTopK, ScoreBlock};
+use crate::search::{BLOCK_TOP_K, DOC_BLOCK, MAX_TERMS};
+
+use super::artifact;
+
+/// One thread's compiled scorer (owns its PJRT client — `PjRtClient` is not
+/// `Send`, so each worker thread constructs its own).
+pub struct XlaScorer {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    /// Executions performed (work accounting / perf counters).
+    pub executions: u64,
+    /// §Perf iteration 3: idf/avgdl are constant across all blocks of a
+    /// query — cache their device buffers keyed by value.
+    consts_cache: Option<(Vec<f32>, f32, xla::PjRtBuffer, xla::PjRtBuffer)>,
+}
+
+fn xerr(e: xla::Error) -> Error {
+    Error::Xla(e.to_string())
+}
+
+impl XlaScorer {
+    /// Load + compile the scorer artifact on a fresh CPU PJRT client.
+    pub fn load() -> Result<XlaScorer> {
+        let path = artifact::require_scorer()?;
+        if let Ok(meta) = std::fs::read_to_string(artifact::scorer_meta_path()) {
+            artifact::validate_meta(&meta)?;
+        }
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(xerr)?;
+        Ok(XlaScorer {
+            client,
+            exe,
+            executions: 0,
+            consts_cache: None,
+        })
+    }
+
+    /// Upload the two per-block inputs; reuse cached device buffers for the
+    /// per-query constants (idf, avgdl) when their values repeat.
+    fn upload(
+        &mut self,
+        tf: &[f32],
+        dl: &[f32],
+        idf: &[f32],
+        avgdl: f32,
+    ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+        debug_assert_eq!(tf.len(), DOC_BLOCK * MAX_TERMS);
+        debug_assert_eq!(dl.len(), DOC_BLOCK);
+        debug_assert_eq!(idf.len(), MAX_TERMS);
+        let reuse = matches!(
+            &self.consts_cache,
+            Some((v, a, _, _)) if v.as_slice() == idf && *a == avgdl
+        );
+        if !reuse {
+            let idf_b = self
+                .client
+                .buffer_from_host_buffer(idf, &[MAX_TERMS], None)
+                .map_err(xerr)?;
+            let avgdl_b = self
+                .client
+                .buffer_from_host_buffer(&[avgdl], &[1], None)
+                .map_err(xerr)?;
+            self.consts_cache = Some((idf.to_vec(), avgdl, idf_b, avgdl_b));
+        }
+        let tf_b = self
+            .client
+            .buffer_from_host_buffer(tf, &[DOC_BLOCK, MAX_TERMS], None)
+            .map_err(xerr)?;
+        let dl_b = self
+            .client
+            .buffer_from_host_buffer(dl, &[DOC_BLOCK], None)
+            .map_err(xerr)?;
+        Ok((tf_b, dl_b))
+    }
+
+    fn fetch(&self, out: &xla::PjRtBuffer) -> Result<(Vec<f32>, Vec<f32>, Vec<i32>)> {
+        let result = out.to_literal_sync().map_err(xerr)?;
+        let (scores, vals, idx) = result.to_tuple3().map_err(xerr)?;
+        Ok((
+            scores.to_vec::<f32>().map_err(xerr)?,
+            vals.to_vec::<f32>().map_err(xerr)?,
+            idx.to_vec::<i32>().map_err(xerr)?,
+        ))
+    }
+
+    /// Execute the raw artifact signature once:
+    /// `(tf[256,24], dl[256], idf[24], avgdl[1]) -> (scores, topk_vals, topk_idx)`.
+    pub fn execute_raw(
+        &mut self,
+        tf: &[f32],
+        dl: &[f32],
+        idf: &[f32],
+        avgdl: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<i32>)> {
+        self.execute_repeated(tf, dl, idf, avgdl, 1)
+    }
+
+    /// Execute the same block `repeats` times (inputs uploaded once),
+    /// returning the final result. The extra executions are real compute —
+    /// the live server uses them to emulate slower cores.
+    pub fn execute_repeated(
+        &mut self,
+        tf: &[f32],
+        dl: &[f32],
+        idf: &[f32],
+        avgdl: f32,
+        repeats: u64,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<i32>)> {
+        assert!(repeats >= 1);
+        let (tf_b, dl_b) = self.upload(tf, dl, idf, avgdl)?;
+        let (_, _, idf_b, avgdl_b) = self.consts_cache.as_ref().expect("upload populated cache");
+        let refs: [&xla::PjRtBuffer; 4] = [&tf_b, &dl_b, idf_b, avgdl_b];
+        let mut last = None;
+        for _ in 0..repeats {
+            let out = self.exe.execute_b(&refs).map_err(xerr)?;
+            self.executions += 1;
+            last = Some(out);
+        }
+        let out = last.expect("repeats >= 1");
+        self.fetch(&out[0][0])
+    }
+
+    fn topk_from(
+        &self,
+        vals: Vec<f32>,
+        idx: Vec<i32>,
+        live_rows: usize,
+    ) -> BlockTopK {
+        let entries = idx
+            .into_iter()
+            .zip(vals)
+            .filter(|(row, _)| (*row as usize) < live_rows) // padded rows out
+            .map(|(row, score)| (row as usize, score))
+            .take(BLOCK_TOP_K)
+            .collect();
+        BlockTopK { entries }
+    }
+}
+
+impl BlockScorer for XlaScorer {
+    fn score_block(&mut self, block: &ScoreBlock, idf: &[f32], avgdl: f32) -> Result<BlockTopK> {
+        let (_scores, vals, idx) = self.execute_raw(&block.tf, &block.dl, idf, avgdl)?;
+        Ok(self.topk_from(vals, idx, block.docs.len()))
+    }
+
+    fn score_block_repeated(
+        &mut self,
+        block: &ScoreBlock,
+        idf: &[f32],
+        avgdl: f32,
+        repeats: u64,
+    ) -> Result<BlockTopK> {
+        let (_scores, vals, idx) =
+            self.execute_repeated(&block.tf, &block.dl, idf, avgdl, repeats)?;
+        Ok(self.topk_from(vals, idx, block.docs.len()))
+    }
+
+    fn label(&self) -> &'static str {
+        "xla"
+    }
+}
+
+// NOTE: correctness tests live in rust/tests/runtime_integration.rs — they
+// need the artifact built (`make artifacts`) and are skipped gracefully
+// when it is absent.

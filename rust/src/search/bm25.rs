@@ -1,0 +1,135 @@
+//! BM25 ranking — the Rust reference of the scoring formula.
+//!
+//! This is the same formula as the Layer-1 Pallas kernel
+//! (`python/compile/kernels/bm25.py`) and the pure-jnp oracle; integration
+//! tests cross-check the three against each other through the AOT artifact.
+
+/// BM25 free parameters (Elasticsearch defaults, as the paper runs stock
+/// Elasticsearch). Must stay in sync with `K1`/`B` in the Python kernel —
+/// the runtime validates this against `artifacts/scorer.meta.json`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Bm25Params {
+    /// Term-frequency saturation.
+    pub k1: f32,
+    /// Length-normalisation strength.
+    pub b: f32,
+}
+
+impl Default for Bm25Params {
+    fn default() -> Self {
+        Bm25Params { k1: 1.2, b: 0.75 }
+    }
+}
+
+/// Lucene-style BM25 IDF: `ln(1 + (N - df + 0.5) / (df + 0.5))`.
+/// Always positive, so scores are non-negative.
+pub fn idf(num_docs: usize, doc_freq: usize) -> f32 {
+    let n = num_docs as f64;
+    let df = doc_freq as f64;
+    ((1.0 + (n - df + 0.5) / (df + 0.5)).ln()) as f32
+}
+
+/// Score contribution of one term occurrence pattern in one document.
+#[inline]
+pub fn bm25_term(tf: f32, idf: f32, dl: f32, avgdl: f32, p: Bm25Params) -> f32 {
+    let norm = p.k1 * (1.0 - p.b + p.b * dl / avgdl);
+    idf * tf * (p.k1 + 1.0) / (tf + norm)
+}
+
+/// Full document score given per-query-term `tf` and `idf` slices.
+#[inline]
+pub fn bm25_score(tfs: &[f32], idfs: &[f32], dl: f32, avgdl: f32, p: Bm25Params) -> f32 {
+    debug_assert_eq!(tfs.len(), idfs.len());
+    // Hot path: branchless accumulation; tf == 0 contributes exactly 0.
+    let norm = p.k1 * (1.0 - p.b + p.b * dl / avgdl);
+    let mut score = 0.0f32;
+    for (&tf, &w) in tfs.iter().zip(idfs) {
+        score += w * tf * (p.k1 + 1.0) / (tf + norm);
+    }
+    score
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn idf_decreases_with_doc_freq() {
+        let n = 10_000;
+        assert!(idf(n, 1) > idf(n, 10));
+        assert!(idf(n, 10) > idf(n, 1000));
+        assert!(idf(n, n) > 0.0); // Lucene variant never negative
+    }
+
+    #[test]
+    fn zero_tf_scores_zero() {
+        assert_eq!(
+            bm25_score(&[0.0, 0.0], &[2.0, 3.0], 100.0, 200.0, Bm25Params::default()),
+            0.0
+        );
+    }
+
+    #[test]
+    fn matches_hand_computed_value() {
+        // tf=2, idf=1.5, dl=avgdl => norm = k1 = 1.2
+        // score = 1.5 * 2*(2.2) / (2 + 1.2) = 1.5 * 4.4/3.2 = 2.0625
+        let s = bm25_term(2.0, 1.5, 300.0, 300.0, Bm25Params::default());
+        assert!((s - 2.0625).abs() < 1e-6, "s={s}");
+    }
+
+    #[test]
+    fn monotone_in_tf() {
+        let p = Bm25Params::default();
+        let mut last = 0.0;
+        for tf in 1..50 {
+            let s = bm25_term(tf as f32, 1.0, 250.0, 300.0, p);
+            assert!(s > last);
+            last = s;
+        }
+    }
+
+    #[test]
+    fn saturates_below_idf_times_k1_plus_1() {
+        let p = Bm25Params::default();
+        let s = bm25_term(1e6, 2.0, 300.0, 300.0, p);
+        assert!(s < 2.0 * (p.k1 + 1.0));
+        assert!(s > 2.0 * (p.k1 + 1.0) * 0.99); // close to the asymptote
+    }
+
+    #[test]
+    fn longer_docs_score_lower() {
+        let p = Bm25Params::default();
+        let short = bm25_term(3.0, 1.0, 100.0, 300.0, p);
+        let long = bm25_term(3.0, 1.0, 900.0, 300.0, p);
+        assert!(short > long);
+    }
+
+    #[test]
+    fn b_zero_disables_length_norm() {
+        let p = Bm25Params { k1: 1.2, b: 0.0 };
+        let a = bm25_term(3.0, 1.0, 100.0, 300.0, p);
+        let b = bm25_term(3.0, 1.0, 900.0, 300.0, p);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn prop_score_is_sum_of_terms() {
+        prop::check(prop::DEFAULT_CASES, |rng: &mut Rng, _| {
+            let p = Bm25Params::default();
+            let n = rng.range(1, 24);
+            let tfs: Vec<f32> = (0..n).map(|_| rng.below(8) as f32).collect();
+            let idfs: Vec<f32> = (0..n).map(|_| rng.f64_range(0.0, 10.0) as f32).collect();
+            let dl = rng.f64_range(10.0, 3000.0) as f32;
+            let avgdl = rng.f64_range(10.0, 3000.0) as f32;
+            let whole = bm25_score(&tfs, &idfs, dl, avgdl, p);
+            let sum: f32 = tfs
+                .iter()
+                .zip(&idfs)
+                .map(|(&tf, &w)| bm25_term(tf, w, dl, avgdl, p))
+                .sum();
+            assert!((whole - sum).abs() < 1e-4, "whole={whole} sum={sum}");
+            assert!(whole >= 0.0);
+        });
+    }
+}

@@ -1,0 +1,181 @@
+//! Synthetic Wikipedia-like corpus generator.
+//!
+//! The paper indexes the English Wikipedia dump (which we do not have) into
+//! Elasticsearch. What its evaluation depends on is only the *statistical*
+//! shape of that index: a Zipfian vocabulary (so common query terms have
+//! long postings lists and rare terms short ones) and heavy-tailed document
+//! lengths (so BM25 length normalisation matters). This generator produces a
+//! corpus with exactly those properties, deterministically from a seed.
+//!
+//! Vocabulary words are pseudo-words built from CV syllables with a
+//! consonant coda chosen so the stemmer never rewrites them (stem-stable,
+//! verified by test) — guaranteeing the analyzer round-trips query terms to
+//! the same term ids the indexer assigned.
+
+use crate::config::CorpusConfig;
+use crate::util::{rng::Zipf, Rng};
+
+/// One document: a bag of term ids plus a display title.
+#[derive(Clone, Debug)]
+pub struct Document {
+    /// Token stream as vocabulary term ids (already analysed).
+    pub tokens: Vec<u32>,
+    /// Display title (rendered words).
+    pub title: String,
+}
+
+/// A generated corpus: vocabulary + documents.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    /// Rendered vocabulary words, indexed by term id. Stem-stable.
+    pub vocab: Vec<String>,
+    /// Documents.
+    pub docs: Vec<Document>,
+    /// Zipf exponent used (needed by the query generator to match the
+    /// corpus term-popularity profile).
+    pub zipf_s: f64,
+}
+
+const SYLLABLES: [&str; 16] = [
+    "ka", "ri", "to", "na", "mi", "so", "lu", "ve", "po", "da", "ze", "ki",
+    "ta", "ro", "nu", "se",
+];
+// Codas that no stemmer rule strips (see stemmer.rs tests).
+const CODAS: [&str; 5] = ["n", "r", "k", "t", "m"];
+
+/// Render a unique, stem-stable pseudo-word for a term id.
+pub fn render_word(id: u32) -> String {
+    let mut word = String::new();
+    let mut v = id as u64;
+    // At least two syllables so every word clears the stemmer's MIN_STEM.
+    loop {
+        word.push_str(SYLLABLES[(v % 16) as usize]);
+        v /= 16;
+        if v == 0 && word.len() >= 4 {
+            break;
+        }
+    }
+    word.push_str(CODAS[(id % 5) as usize]);
+    word
+}
+
+impl Corpus {
+    /// Generate a corpus from a config, deterministically.
+    pub fn generate(cfg: &CorpusConfig) -> Corpus {
+        assert!(cfg.num_docs > 0 && cfg.vocab_size > 0);
+        let mut rng = Rng::new(cfg.seed);
+        let vocab: Vec<String> = (0..cfg.vocab_size as u32).map(render_word).collect();
+        let zipf = Zipf::new(cfg.vocab_size, cfg.zipf_s);
+
+        let mut docs = Vec::with_capacity(cfg.num_docs);
+        for _ in 0..cfg.num_docs {
+            // Heavy-tailed doc length: lognormal around the median, clamped.
+            let len = (cfg.doc_len_median as f64 * rng.lognormal(0.0, cfg.doc_len_sigma))
+                .round()
+                .clamp(8.0, 6.0 * cfg.doc_len_median as f64) as usize;
+            let tokens: Vec<u32> = (0..len).map(|_| zipf.sample(&mut rng) as u32).collect();
+            let title_len = rng.range(2, 4);
+            let title = tokens
+                .iter()
+                .take(title_len)
+                .map(|&t| vocab[t as usize].as_str())
+                .collect::<Vec<_>>()
+                .join(" ");
+            docs.push(Document { tokens, title });
+        }
+        Corpus {
+            vocab,
+            docs,
+            zipf_s: cfg.zipf_s,
+        }
+    }
+
+    /// Number of documents.
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+
+    /// True if the corpus has no documents.
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+
+    /// Total token count across all documents.
+    pub fn total_tokens(&self) -> usize {
+        self.docs.iter().map(|d| d.tokens.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CorpusConfig;
+    use crate::search::stemmer::stem;
+
+    fn small() -> Corpus {
+        Corpus::generate(&CorpusConfig::small())
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = small();
+        let b = small();
+        assert_eq!(a.docs[0].tokens, b.docs[0].tokens);
+        assert_eq!(a.docs[7].title, b.docs[7].title);
+    }
+
+    #[test]
+    fn words_unique() {
+        let c = small();
+        let mut sorted = c.vocab.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), c.vocab.len());
+    }
+
+    #[test]
+    fn words_stem_stable() {
+        // The analyzer must round-trip every vocabulary word unchanged.
+        for id in (0..20_000).step_by(37) {
+            let w = render_word(id);
+            assert_eq!(stem(&w), w, "word {w} not stem-stable");
+        }
+    }
+
+    #[test]
+    fn token_ids_in_vocab_range() {
+        let c = small();
+        let v = c.vocab.len() as u32;
+        for d in &c.docs {
+            assert!(d.tokens.iter().all(|&t| t < v));
+        }
+    }
+
+    #[test]
+    fn zipf_head_dominates() {
+        let c = small();
+        let mut counts = vec![0usize; c.vocab.len()];
+        for d in &c.docs {
+            for &t in &d.tokens {
+                counts[t as usize] += 1;
+            }
+        }
+        // term 0 much more frequent than term at rank ~vocab/2
+        assert!(counts[0] > 20 * counts[c.vocab.len() / 2].max(1) / 2);
+    }
+
+    #[test]
+    fn doc_lengths_heavy_tailed() {
+        let c = small();
+        let lens: Vec<usize> = c.docs.iter().map(|d| d.tokens.len()).collect();
+        let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
+        let max = *lens.iter().max().unwrap() as f64;
+        assert!(max > 2.0 * mean, "max={max} mean={mean}");
+    }
+
+    #[test]
+    fn titles_nonempty() {
+        let c = small();
+        assert!(c.docs.iter().all(|d| !d.title.is_empty()));
+    }
+}

@@ -1,0 +1,276 @@
+//! Inverted index: dictionary, postings lists, document statistics.
+//!
+//! Postings are strictly sorted by document id (verified by tests and a
+//! property test), which the candidate-union iterator in `engine.rs` relies
+//! on for its k-way merge.
+
+use std::collections::HashMap;
+
+use super::bm25;
+use super::corpus::Corpus;
+
+/// One postings entry: a document and the term's frequency within it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Posting {
+    /// Document id.
+    pub doc: u32,
+    /// Term frequency in the document.
+    pub tf: u32,
+}
+
+/// Immutable inverted index over a corpus.
+#[derive(Clone, Debug)]
+pub struct Index {
+    dict: HashMap<String, u32>,
+    terms: Vec<String>,
+    postings: Vec<Vec<Posting>>,
+    doc_len: Vec<u32>,
+    titles: Vec<String>,
+    avgdl: f64,
+    total_postings: usize,
+}
+
+impl Index {
+    /// Invert a corpus. Documents arrive pre-analysed (term-id streams);
+    /// the dictionary is built from the corpus vocabulary so that query-time
+    /// analysis (`text::analyze`) maps back to the same ids.
+    pub fn build(corpus: &Corpus) -> Index {
+        let num_terms = corpus.vocab.len();
+        let mut dict = HashMap::with_capacity(num_terms);
+        for (id, w) in corpus.vocab.iter().enumerate() {
+            dict.insert(w.clone(), id as u32);
+        }
+
+        let mut postings: Vec<Vec<Posting>> = vec![Vec::new(); num_terms];
+        let mut doc_len = Vec::with_capacity(corpus.docs.len());
+        let mut titles = Vec::with_capacity(corpus.docs.len());
+        // Per-document tf accumulation, then append — docs are processed in
+        // id order, which keeps every postings list sorted by construction.
+        let mut tf_acc: HashMap<u32, u32> = HashMap::new();
+        let mut total_postings = 0usize;
+        for (doc_id, doc) in corpus.docs.iter().enumerate() {
+            doc_len.push(doc.tokens.len() as u32);
+            titles.push(doc.title.clone());
+            tf_acc.clear();
+            for &t in &doc.tokens {
+                *tf_acc.entry(t).or_insert(0) += 1;
+            }
+            for (&term, &tf) in tf_acc.iter() {
+                postings[term as usize].push(Posting {
+                    doc: doc_id as u32,
+                    tf,
+                });
+                total_postings += 1;
+            }
+        }
+        // HashMap iteration order is arbitrary per doc, but each doc appends
+        // exactly one posting per term, so per-term lists are still sorted;
+        // assert in debug builds.
+        #[cfg(debug_assertions)]
+        for list in &postings {
+            debug_assert!(list.windows(2).all(|w| w[0].doc < w[1].doc));
+        }
+        let avgdl = if doc_len.is_empty() {
+            0.0
+        } else {
+            doc_len.iter().map(|&l| l as f64).sum::<f64>() / doc_len.len() as f64
+        };
+        Index {
+            dict,
+            terms: corpus.vocab.clone(),
+            postings,
+            doc_len,
+            titles,
+            avgdl,
+            total_postings,
+        }
+    }
+
+    /// Reassemble an index from its serialized parts (`persist.rs`),
+    /// rebuilding the dictionary and derived statistics and validating the
+    /// postings invariants.
+    pub fn from_parts(
+        terms: Vec<String>,
+        postings: Vec<Vec<Posting>>,
+        doc_len: Vec<u32>,
+        titles: Vec<String>,
+    ) -> crate::error::Result<Index> {
+        use crate::error::Error;
+        if postings.len() != terms.len() {
+            return Err(Error::invalid("postings/terms arity mismatch"));
+        }
+        if titles.len() != doc_len.len() {
+            return Err(Error::invalid("titles/doc_len arity mismatch"));
+        }
+        let mut dict = HashMap::with_capacity(terms.len());
+        for (id, w) in terms.iter().enumerate() {
+            if dict.insert(w.clone(), id as u32).is_some() {
+                return Err(Error::invalid(format!("duplicate term `{w}`")));
+            }
+        }
+        let mut total_postings = 0usize;
+        for list in &postings {
+            if !list.windows(2).all(|w| w[0].doc < w[1].doc) {
+                return Err(Error::invalid("postings not strictly sorted"));
+            }
+            total_postings += list.len();
+        }
+        let avgdl = if doc_len.is_empty() {
+            0.0
+        } else {
+            doc_len.iter().map(|&l| l as f64).sum::<f64>() / doc_len.len() as f64
+        };
+        Ok(Index {
+            dict,
+            terms,
+            postings,
+            doc_len,
+            titles,
+            avgdl,
+            total_postings,
+        })
+    }
+
+    /// Term id for an analysed token, if indexed.
+    pub fn lookup(&self, token: &str) -> Option<u32> {
+        self.dict.get(token).copied()
+    }
+
+    /// The word a term id renders as.
+    pub fn term(&self, id: u32) -> &str {
+        &self.terms[id as usize]
+    }
+
+    /// Postings list for a term (sorted by doc id).
+    pub fn postings(&self, term: u32) -> &[Posting] {
+        &self.postings[term as usize]
+    }
+
+    /// Document frequency of a term.
+    pub fn doc_freq(&self, term: u32) -> usize {
+        self.postings[term as usize].len()
+    }
+
+    /// BM25 IDF of a term against this index.
+    pub fn idf(&self, term: u32) -> f32 {
+        bm25::idf(self.num_docs(), self.doc_freq(term))
+    }
+
+    /// Number of indexed documents.
+    pub fn num_docs(&self) -> usize {
+        self.doc_len.len()
+    }
+
+    /// Number of distinct terms in the dictionary.
+    pub fn num_terms(&self) -> usize {
+        self.terms.len()
+    }
+
+    /// Length (token count) of a document.
+    pub fn doc_len(&self, doc: u32) -> u32 {
+        self.doc_len[doc as usize]
+    }
+
+    /// Title of a document.
+    pub fn title(&self, doc: u32) -> &str {
+        &self.titles[doc as usize]
+    }
+
+    /// Corpus average document length.
+    pub fn avgdl(&self) -> f64 {
+        self.avgdl
+    }
+
+    /// Total postings count (index size proxy).
+    pub fn total_postings(&self) -> usize {
+        self.total_postings
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CorpusConfig;
+    use crate::search::text;
+
+    fn small_index() -> Index {
+        Index::build(&Corpus::generate(&CorpusConfig::small()))
+    }
+
+    #[test]
+    fn postings_sorted_strictly_by_doc() {
+        let idx = small_index();
+        for t in 0..idx.num_terms() as u32 {
+            let p = idx.postings(t);
+            assert!(
+                p.windows(2).all(|w| w[0].doc < w[1].doc),
+                "term {t} unsorted"
+            );
+        }
+    }
+
+    #[test]
+    fn doc_freq_matches_postings_len() {
+        let idx = small_index();
+        for t in (0..idx.num_terms() as u32).step_by(101) {
+            assert_eq!(idx.doc_freq(t), idx.postings(t).len());
+        }
+    }
+
+    #[test]
+    fn tf_counts_match_corpus() {
+        let corpus = Corpus::generate(&CorpusConfig::small());
+        let idx = Index::build(&corpus);
+        // Spot-check doc 0: recount tokens by hand.
+        let mut counts = std::collections::HashMap::new();
+        for &t in &corpus.docs[0].tokens {
+            *counts.entry(t).or_insert(0u32) += 1;
+        }
+        for (&term, &tf) in &counts {
+            let p = idx
+                .postings(term)
+                .iter()
+                .find(|p| p.doc == 0)
+                .expect("posting for doc 0 missing");
+            assert_eq!(p.tf, tf);
+        }
+    }
+
+    #[test]
+    fn avgdl_positive_and_sane() {
+        let idx = small_index();
+        assert!(idx.avgdl() > 8.0);
+        let max = (0..idx.num_docs() as u32)
+            .map(|d| idx.doc_len(d))
+            .max()
+            .unwrap();
+        assert!(idx.avgdl() < max as f64);
+    }
+
+    #[test]
+    fn analyzer_roundtrips_vocabulary() {
+        // A query typed with any indexed word must find that word's term id.
+        let idx = small_index();
+        for t in (0..idx.num_terms() as u32).step_by(173) {
+            let word = idx.term(t).to_string();
+            let analyzed = text::analyze(&word);
+            assert_eq!(analyzed.len(), 1, "word {word} split or dropped");
+            assert_eq!(idx.lookup(&analyzed[0]), Some(t), "word {word}");
+        }
+    }
+
+    #[test]
+    fn idf_rarer_terms_weigh_more() {
+        let idx = small_index();
+        // term 0 is the Zipf head: most frequent => lowest idf
+        let head = idx.idf(0);
+        let tail_term = (idx.num_terms() - 1) as u32;
+        assert!(idx.idf(tail_term) >= head);
+    }
+
+    #[test]
+    fn common_term_has_long_postings() {
+        let idx = small_index();
+        assert!(idx.doc_freq(0) > idx.num_docs() / 2, "Zipf head should hit most docs");
+    }
+}

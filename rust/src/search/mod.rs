@@ -1,0 +1,33 @@
+//! From-scratch web-search engine — the Elasticsearch stand-in.
+//!
+//! The paper runs stock Elasticsearch over an English-Wikipedia index and
+//! treats it as a black box whose per-request cost grows with the number of
+//! query keywords (each extra keyword means more postings traversed and more
+//! candidates scored). This module provides the same contract as a real,
+//! self-contained engine: text analysis (tokenizer → stopwords → stemmer),
+//! a synthetic Wikipedia-like corpus, an inverted index with sorted postings,
+//! BM25 ranking (identical formula to the Layer-1 Pallas kernel) and top-k
+//! selection. `engine.rs` executes queries either through the pure-Rust
+//! scorer or through the AOT-compiled XLA scorer on the live request path.
+
+pub mod bm25;
+pub mod corpus;
+pub mod engine;
+pub mod index;
+pub mod persist;
+pub mod query;
+pub mod stemmer;
+pub mod stopwords;
+pub mod text;
+pub mod topk;
+
+pub use bm25::{bm25_score, Bm25Params};
+pub use corpus::{Corpus, Document};
+pub use engine::{
+    BlockScorer, BlockTopK, RustScorer, ScoreBlock, SearchEngine, SearchHit, SearchResult,
+    SearchStats, BLOCK_TOP_K, DOC_BLOCK, MAX_TERMS,
+};
+pub use index::{Index, Posting};
+pub use persist::{load_index_file, save_index_file};
+pub use query::Query;
+pub use topk::{ScoredDoc, TopK};

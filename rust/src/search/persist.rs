@@ -1,0 +1,252 @@
+//! Index persistence: a compact little-endian binary format so a built
+//! index can be shipped to serving nodes instead of re-inverted at startup
+//! (Elasticsearch ships Lucene segments; this is our equivalent).
+//!
+//! Layout (version 1):
+//!   magic "HUIX" · u32 version
+//!   u32 num_terms · per term: u32 len + bytes (dictionary, id order)
+//!   u32 num_docs  · per doc:  u32 doc_len
+//!   per doc: u32 title_len + bytes
+//!   per term: u32 postings_len · postings as (u32 doc, u32 tf) pairs,
+//!             doc gap-encoded (delta from previous doc id) for compactness
+//!
+//! Everything is length-prefixed and validated on load; a corrupt or
+//! truncated file yields `Error::Invalid`, never a panic.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::corpus::Corpus;
+use super::index::{Index, Posting};
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"HUIX";
+const VERSION: u32 = 1;
+
+fn w_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn r_u32(r: &mut impl Read) -> Result<u32> {
+    let mut buf = [0u8; 4];
+    r.read_exact(&mut buf)
+        .map_err(|_| Error::invalid("truncated index file"))?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+fn w_str(w: &mut impl Write, s: &str) -> Result<()> {
+    w_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn r_str(r: &mut impl Read, cap: u32) -> Result<String> {
+    let len = r_u32(r)?;
+    if len > cap {
+        return Err(Error::invalid(format!("string length {len} exceeds cap {cap}")));
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)
+        .map_err(|_| Error::invalid("truncated string"))?;
+    String::from_utf8(buf).map_err(|_| Error::invalid("non-utf8 string in index"))
+}
+
+/// Serialize an index to a writer.
+pub fn save_index(index: &Index, w: &mut impl Write) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w_u32(w, VERSION)?;
+    w_u32(w, index.num_terms() as u32)?;
+    for t in 0..index.num_terms() as u32 {
+        w_str(w, index.term(t))?;
+    }
+    w_u32(w, index.num_docs() as u32)?;
+    for d in 0..index.num_docs() as u32 {
+        w_u32(w, index.doc_len(d))?;
+    }
+    for d in 0..index.num_docs() as u32 {
+        w_str(w, index.title(d))?;
+    }
+    for t in 0..index.num_terms() as u32 {
+        let postings = index.postings(t);
+        w_u32(w, postings.len() as u32)?;
+        let mut prev = 0u32;
+        for p in postings {
+            w_u32(w, p.doc - prev)?; // gap encoding
+            w_u32(w, p.tf)?;
+            prev = p.doc;
+        }
+    }
+    Ok(())
+}
+
+/// Deserialize an index from a reader.
+pub fn load_index(r: &mut impl Read) -> Result<Index> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)
+        .map_err(|_| Error::invalid("not an index file (empty)"))?;
+    if &magic != MAGIC {
+        return Err(Error::invalid("not an index file (bad magic)"));
+    }
+    let version = r_u32(r)?;
+    if version != VERSION {
+        return Err(Error::invalid(format!("unsupported index version {version}")));
+    }
+    let num_terms = r_u32(r)? as usize;
+    if num_terms > 100_000_000 {
+        return Err(Error::invalid("implausible term count"));
+    }
+    let mut terms = Vec::with_capacity(num_terms);
+    for _ in 0..num_terms {
+        terms.push(r_str(r, 1 << 16)?);
+    }
+    let num_docs = r_u32(r)? as usize;
+    if num_docs > 2_000_000_000 {
+        return Err(Error::invalid("implausible doc count"));
+    }
+    let mut doc_len = Vec::with_capacity(num_docs);
+    for _ in 0..num_docs {
+        doc_len.push(r_u32(r)?);
+    }
+    let mut titles = Vec::with_capacity(num_docs);
+    for _ in 0..num_docs {
+        titles.push(r_str(r, 1 << 20)?);
+    }
+    let mut postings = Vec::with_capacity(num_terms);
+    for _ in 0..num_terms {
+        let n = r_u32(r)? as usize;
+        if n > num_docs {
+            return Err(Error::invalid("postings longer than corpus"));
+        }
+        let mut list = Vec::with_capacity(n);
+        let mut prev = 0u32;
+        for i in 0..n {
+            let gap = r_u32(r)?;
+            let doc = if i == 0 { gap } else { prev + gap };
+            if doc as usize >= num_docs || (i > 0 && gap == 0) {
+                return Err(Error::invalid("corrupt postings (doc order)"));
+            }
+            let tf = r_u32(r)?;
+            if tf == 0 {
+                return Err(Error::invalid("corrupt postings (zero tf)"));
+            }
+            list.push(Posting { doc, tf });
+            prev = doc;
+        }
+        postings.push(list);
+    }
+    Index::from_parts(terms, postings, doc_len, titles)
+}
+
+/// Save an index to a file.
+pub fn save_index_file(index: &Index, path: impl AsRef<Path>) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    save_index(index, &mut w)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load an index from a file.
+pub fn load_index_file(path: impl AsRef<Path>) -> Result<Index> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    load_index(&mut r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CorpusConfig;
+
+    fn small_index() -> Index {
+        Index::build(&Corpus::generate(&CorpusConfig {
+            num_docs: 300,
+            vocab_size: 800,
+            ..CorpusConfig::small()
+        }))
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let a = small_index();
+        let mut buf = Vec::new();
+        save_index(&a, &mut buf).unwrap();
+        let b = load_index(&mut buf.as_slice()).unwrap();
+        assert_eq!(a.num_docs(), b.num_docs());
+        assert_eq!(a.num_terms(), b.num_terms());
+        assert_eq!(a.total_postings(), b.total_postings());
+        assert!((a.avgdl() - b.avgdl()).abs() < 1e-12);
+        for t in (0..a.num_terms() as u32).step_by(17) {
+            assert_eq!(a.term(t), b.term(t));
+            assert_eq!(a.postings(t), b.postings(t));
+            assert_eq!(a.idf(t), b.idf(t));
+        }
+        for d in (0..a.num_docs() as u32).step_by(13) {
+            assert_eq!(a.doc_len(d), b.doc_len(d));
+            assert_eq!(a.title(d), b.title(d));
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_search_results() {
+        use crate::search::{Query, SearchEngine};
+        use std::sync::Arc;
+        let a = small_index();
+        let mut buf = Vec::new();
+        save_index(&a, &mut buf).unwrap();
+        let b = load_index(&mut buf.as_slice()).unwrap();
+        let q = Query::from_terms(vec![a.term(5).to_string(), a.term(9).to_string()]);
+        let ra = SearchEngine::new(Arc::new(a), 10).search(&q);
+        let rb = SearchEngine::new(Arc::new(b), 10).search(&q);
+        assert_eq!(ra.hits.len(), rb.hits.len());
+        for (x, y) in ra.hits.iter().zip(&rb.hits) {
+            assert_eq!(x.doc, y.doc);
+            assert_eq!(x.score, y.score);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let a = small_index();
+        let path = std::env::temp_dir().join(format!("hu_idx_{}.bin", std::process::id()));
+        save_index_file(&a, &path).unwrap();
+        let b = load_index_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(a.total_postings(), b.total_postings());
+    }
+
+    #[test]
+    fn rejects_garbage_and_truncation() {
+        assert!(load_index(&mut &b""[..]).is_err());
+        assert!(load_index(&mut &b"NOPE1234"[..]).is_err());
+        // Truncate a valid file at every eighth byte — must error, not panic.
+        let a = small_index();
+        let mut buf = Vec::new();
+        save_index(&a, &mut buf).unwrap();
+        for cut in (8..buf.len().min(4096)).step_by(97) {
+            assert!(load_index(&mut &buf[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let a = small_index();
+        let mut buf = Vec::new();
+        save_index(&a, &mut buf).unwrap();
+        buf[4] = 99; // version field
+        let e = load_index(&mut buf.as_slice()).unwrap_err();
+        assert!(e.to_string().contains("version"));
+    }
+
+    #[test]
+    fn gap_encoding_is_compact() {
+        // Sanity: the file should be smaller than naive 8-byte postings +
+        // full strings would suggest (gap deltas are small for dense terms).
+        let a = small_index();
+        let mut buf = Vec::new();
+        save_index(&a, &mut buf).unwrap();
+        assert!(buf.len() > 1000);
+        // postings dominate; 8 bytes per posting + dictionary overhead
+        let naive = a.total_postings() * 8;
+        assert!(buf.len() < naive * 3, "file {} vs naive {naive}", buf.len());
+    }
+}

@@ -1,0 +1,77 @@
+//! Query representation and parsing.
+//!
+//! The paper's key insight is that "user queries translate to different
+//! computing requirements, such as by varying length of keywords" — the
+//! keyword count is the latent compute-intensity the Hurry-up mapper never
+//! sees directly but infers via elapsed time.
+
+use super::text;
+
+/// A parsed search query.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Query {
+    /// Raw query text as submitted.
+    pub text: String,
+    /// Analysed terms (tokenized, stopword-filtered, stemmed).
+    pub terms: Vec<String>,
+}
+
+impl Query {
+    /// Parse a raw query string through the same analysis chain as the
+    /// indexer.
+    pub fn parse(text: &str) -> Query {
+        Query {
+            text: text.to_string(),
+            terms: text::analyze(text),
+        }
+    }
+
+    /// Construct directly from analysed terms (used by the load generator,
+    /// which samples indexed vocabulary words).
+    pub fn from_terms(terms: Vec<String>) -> Query {
+        Query {
+            text: terms.join(" "),
+            terms,
+        }
+    }
+
+    /// Number of keywords — the paper's compute-intensity axis (Fig 1).
+    pub fn keyword_count(&self) -> usize {
+        self.terms.len()
+    }
+
+    /// True when analysis dropped every token (stopwords-only query).
+    pub fn is_empty(&self) -> bool {
+        self.terms.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_analyses_terms() {
+        let q = Query::parse("The Searching of Cores");
+        assert_eq!(q.terms, vec!["search", "core"]);
+        assert_eq!(q.keyword_count(), 2);
+    }
+
+    #[test]
+    fn stopword_only_query_is_empty() {
+        assert!(Query::parse("the of and").is_empty());
+    }
+
+    #[test]
+    fn from_terms_preserves_terms() {
+        let q = Query::from_terms(vec!["karin".into(), "solun".into()]);
+        assert_eq!(q.keyword_count(), 2);
+        assert_eq!(q.text, "karin solun");
+    }
+
+    #[test]
+    fn keyword_count_tracks_terms() {
+        let q = Query::parse("big little big little big");
+        assert_eq!(q.keyword_count(), 5);
+    }
+}

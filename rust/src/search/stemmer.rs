@@ -1,0 +1,95 @@
+//! Light English suffix stemmer.
+//!
+//! A compact rule set in the spirit of Porter step 1 (+ a few step-4
+//! suffixes): enough to conflate the inflectional variants a query generator
+//! or user will produce, while staying simple enough to verify by eye. The
+//! exact stemmer is not load-bearing for the paper's results — what matters
+//! is that documents and queries are analysed identically.
+
+/// Minimum stem length left after stripping a suffix.
+const MIN_STEM: usize = 3;
+
+/// Stem one lowercase token.
+pub fn stem(token: &str) -> String {
+    let t = token;
+    // Ordered longest-first so e.g. "sses" wins over "es" and "s".
+    if let Some(s) = strip(t, "sses") {
+        return format!("{s}ss");
+    }
+    if let Some(s) = strip(t, "ies") {
+        return format!("{s}i");
+    }
+    for suffix in ["ational", "fulness", "iveness", "ization"] {
+        if let Some(s) = strip(t, suffix) {
+            return s.to_string();
+        }
+    }
+    for suffix in ["ment", "ness", "tion", "ing", "ed", "ly"] {
+        if let Some(s) = strip(t, suffix) {
+            return s.to_string();
+        }
+    }
+    // "-es" only after a sibilant (boxes, indexes, churches) — a bare "es"
+    // rule would wrongly turn "cores" into "cor".
+    if let Some(s) = strip(t, "es") {
+        if s.ends_with('s') || s.ends_with('x') || s.ends_with('z')
+            || s.ends_with("ch") || s.ends_with("sh")
+        {
+            return s.to_string();
+        }
+    }
+    // Plural "s": not "ss" (glass), not "us" (virus).
+    if t.ends_with('s') && !t.ends_with("ss") && !t.ends_with("us") {
+        if let Some(s) = strip(t, "s") {
+            return s.to_string();
+        }
+    }
+    t.to_string()
+}
+
+/// Strip `suffix` if present and the remaining stem is long enough.
+fn strip<'a>(token: &'a str, suffix: &str) -> Option<&'a str> {
+    let stem = token.strip_suffix(suffix)?;
+    (stem.len() >= MIN_STEM).then_some(stem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plurals() {
+        assert_eq!(stem("cores"), "core");
+        assert_eq!(stem("queries"), "queri");
+        assert_eq!(stem("glasses"), "glass");
+        assert_eq!(stem("glass"), "glass"); // 'ss' preserved
+        assert_eq!(stem("virus"), "virus"); // 'us' preserved
+    }
+
+    #[test]
+    fn verb_forms() {
+        assert_eq!(stem("searching"), "search");
+        assert_eq!(stem("mapped"), "mapp");
+        assert_eq!(stem("indexes"), "index");
+    }
+
+    #[test]
+    fn derivational() {
+        assert_eq!(stem("measurement"), "measure");
+        assert_eq!(stem("kindness"), "kind");
+    }
+
+    #[test]
+    fn short_words_untouched() {
+        assert_eq!(stem("is"), "is");
+        assert_eq!(stem("bed"), "bed"); // stem would be < MIN_STEM
+        assert_eq!(stem("doing"), "doing"); // "do" too short
+    }
+
+    #[test]
+    fn idempotent_on_stemmed_output() {
+        for w in ["search", "core", "latend", "kiron", "mappon"] {
+            assert_eq!(stem(&stem(w)), stem(w), "{w}");
+        }
+    }
+}

@@ -1,0 +1,41 @@
+//! English stopword filter (the Lucene/Elasticsearch `_english_` set).
+
+/// Lucene's classic English stopword list, as shipped in Elasticsearch.
+pub const STOPWORDS: &[&str] = &[
+    "a", "an", "and", "are", "as", "at", "be", "but", "by", "for", "if", "in",
+    "into", "is", "it", "no", "not", "of", "on", "or", "such", "that", "the",
+    "their", "then", "there", "these", "they", "this", "to", "was", "will",
+    "with",
+];
+
+/// True if `token` (already lowercased) is a stopword.
+pub fn is_stopword(token: &str) -> bool {
+    // The list is tiny and sorted — binary search beats hashing here.
+    STOPWORDS.binary_search(&token).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn list_is_sorted_for_binary_search() {
+        let mut sorted = STOPWORDS.to_vec();
+        sorted.sort_unstable();
+        assert_eq!(sorted, STOPWORDS);
+    }
+
+    #[test]
+    fn common_words_are_stopwords() {
+        for w in ["the", "and", "of", "to", "a"] {
+            assert!(is_stopword(w), "{w}");
+        }
+    }
+
+    #[test]
+    fn content_words_are_not() {
+        for w in ["search", "latency", "core", "wikipedia"] {
+            assert!(!is_stopword(w), "{w}");
+        }
+    }
+}

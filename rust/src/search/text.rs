@@ -1,0 +1,88 @@
+//! Tokenizer / text normalisation — first stage of the analysis chain.
+//!
+//! Mirrors Elasticsearch's `standard` analyzer closely enough for this
+//! workload: Unicode-naive word splitting on non-alphanumerics, lowercasing,
+//! and dropping empty/overlong tokens.
+
+/// Maximum token length retained (Elasticsearch default is 255; anything
+/// longer is noise for ranking purposes).
+pub const MAX_TOKEN_LEN: usize = 64;
+
+/// Split `input` into lowercase word tokens.
+pub fn tokenize(input: &str) -> Vec<String> {
+    let mut tokens = Vec::new();
+    let mut cur = String::new();
+    for ch in input.chars() {
+        if ch.is_alphanumeric() {
+            for lc in ch.to_lowercase() {
+                cur.push(lc);
+            }
+        } else if !cur.is_empty() {
+            if cur.len() <= MAX_TOKEN_LEN {
+                tokens.push(std::mem::take(&mut cur));
+            } else {
+                cur.clear();
+            }
+        }
+    }
+    if !cur.is_empty() && cur.len() <= MAX_TOKEN_LEN {
+        tokens.push(cur);
+    }
+    tokens
+}
+
+/// Full analysis chain: tokenize → drop stopwords → stem.
+/// This must be applied identically to documents and queries, or postings
+/// lookups silently miss — see `index::Index::build`.
+pub fn analyze(input: &str) -> Vec<String> {
+    tokenize(input)
+        .into_iter()
+        .filter(|t| !super::stopwords::is_stopword(t))
+        .map(|t| super::stemmer::stem(&t))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_on_non_alphanumerics() {
+        assert_eq!(
+            tokenize("Hello, world! foo-bar_baz"),
+            vec!["hello", "world", "foo", "bar", "baz"]
+        );
+    }
+
+    #[test]
+    fn lowercases() {
+        assert_eq!(tokenize("QUERY Latency"), vec!["query", "latency"]);
+    }
+
+    #[test]
+    fn keeps_digits() {
+        assert_eq!(tokenize("juno r1 a57"), vec!["juno", "r1", "a57"]);
+    }
+
+    #[test]
+    fn empty_and_punctuation_only() {
+        assert!(tokenize("").is_empty());
+        assert!(tokenize("...!?--").is_empty());
+    }
+
+    #[test]
+    fn drops_overlong_tokens() {
+        let long = "x".repeat(MAX_TOKEN_LEN + 1);
+        assert!(tokenize(&long).is_empty());
+        let ok = "x".repeat(MAX_TOKEN_LEN);
+        assert_eq!(tokenize(&ok).len(), 1);
+    }
+
+    #[test]
+    fn analyze_removes_stopwords_and_stems() {
+        let out = analyze("the searching of the indexes");
+        assert!(!out.contains(&"the".to_string()));
+        assert!(out.contains(&"search".to_string()), "{out:?}");
+        assert!(out.contains(&"index".to_string()), "{out:?}");
+    }
+}

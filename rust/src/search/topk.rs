@@ -1,0 +1,206 @@
+//! Bounded top-k selection over scored documents.
+//!
+//! A fixed-capacity min-heap: O(n log k) for n candidates, merges cheaply
+//! with the per-block top-k lists returned by the XLA scorer artifact.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A document with its BM25 score.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScoredDoc {
+    /// Document id.
+    pub doc: u32,
+    /// BM25 score.
+    pub score: f32,
+}
+
+// Min-heap ordering on score (ties broken by doc id for determinism).
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct MinEntry(ScoredDoc);
+
+impl Eq for MinEntry {}
+
+impl Ord for MinEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse score order => BinaryHeap becomes a min-heap; among equal
+        // scores the *largest* doc id is evicted first (ascending-doc ties).
+        other
+            .0
+            .score
+            .partial_cmp(&self.0.score)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| self.0.doc.cmp(&other.0.doc))
+    }
+}
+
+impl PartialOrd for MinEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Fixed-capacity top-k accumulator.
+#[derive(Clone, Debug)]
+pub struct TopK {
+    k: usize,
+    heap: BinaryHeap<MinEntry>,
+}
+
+impl TopK {
+    /// New accumulator keeping the `k` highest-scoring documents.
+    pub fn new(k: usize) -> TopK {
+        assert!(k > 0, "top-k with k=0");
+        TopK {
+            k,
+            heap: BinaryHeap::with_capacity(k + 1),
+        }
+    }
+
+    /// Offer one candidate.
+    #[inline]
+    pub fn push(&mut self, doc: u32, score: f32) {
+        if self.heap.len() < self.k {
+            self.heap.push(MinEntry(ScoredDoc { doc, score }));
+        } else if let Some(min) = self.heap.peek() {
+            // Admit on strictly better score, or equal score with a lower
+            // doc id (keeps results identical to a full sort with the
+            // ascending-doc tie-break).
+            if score > min.0.score || (score == min.0.score && doc < min.0.doc) {
+                self.heap.pop();
+                self.heap.push(MinEntry(ScoredDoc { doc, score }));
+            }
+        }
+    }
+
+    /// Current score threshold for admission (None until full).
+    pub fn threshold(&self) -> Option<f32> {
+        (self.heap.len() == self.k).then(|| self.heap.peek().unwrap().0.score)
+    }
+
+    /// Merge another accumulator's contents.
+    pub fn merge(&mut self, other: &TopK) {
+        for e in other.heap.iter() {
+            self.push(e.0.doc, e.0.score);
+        }
+    }
+
+    /// Number of entries currently held.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True if no entries held yet.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Finish: results sorted by descending score (ties: ascending doc id).
+    pub fn into_sorted(self) -> Vec<ScoredDoc> {
+        let mut v: Vec<ScoredDoc> = self.heap.into_iter().map(|e| e.0).collect();
+        v.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap_or(Ordering::Equal)
+                .then_with(|| a.doc.cmp(&b.doc))
+        });
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn keeps_k_best() {
+        let mut tk = TopK::new(3);
+        for (i, s) in [1.0, 9.0, 3.0, 7.0, 5.0].iter().enumerate() {
+            tk.push(i as u32, *s);
+        }
+        let out = tk.into_sorted();
+        assert_eq!(
+            out.iter().map(|d| d.doc).collect::<Vec<_>>(),
+            vec![1, 3, 4]
+        );
+        assert!(out[0].score >= out[1].score && out[1].score >= out[2].score);
+    }
+
+    #[test]
+    fn fewer_candidates_than_k() {
+        let mut tk = TopK::new(10);
+        tk.push(1, 2.0);
+        tk.push(2, 1.0);
+        let out = tk.into_sorted();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].doc, 1);
+    }
+
+    #[test]
+    fn threshold_tracks_kth_score() {
+        let mut tk = TopK::new(2);
+        assert_eq!(tk.threshold(), None);
+        tk.push(0, 5.0);
+        assert_eq!(tk.threshold(), None);
+        tk.push(1, 3.0);
+        assert_eq!(tk.threshold(), Some(3.0));
+        tk.push(2, 4.0);
+        assert_eq!(tk.threshold(), Some(4.0));
+    }
+
+    #[test]
+    fn merge_equals_combined_stream() {
+        let mut a = TopK::new(4);
+        let mut b = TopK::new(4);
+        let mut all = TopK::new(4);
+        for i in 0..20u32 {
+            let s = ((i * 7919) % 101) as f32;
+            if i % 2 == 0 {
+                a.push(i, s);
+            } else {
+                b.push(i, s);
+            }
+            all.push(i, s);
+        }
+        a.merge(&b);
+        assert_eq!(a.into_sorted(), all.into_sorted());
+    }
+
+    #[test]
+    fn deterministic_tie_break_by_doc_id() {
+        let mut tk = TopK::new(2);
+        tk.push(9, 1.0);
+        tk.push(3, 1.0);
+        tk.push(5, 1.0);
+        let out = tk.into_sorted();
+        assert_eq!(out.iter().map(|d| d.doc).collect::<Vec<_>>(), vec![3, 5]);
+    }
+
+    #[test]
+    fn prop_topk_is_sorted_prefix_of_full_sort() {
+        prop::check(prop::DEFAULT_CASES, |rng: &mut Rng, _| {
+            let n = rng.range(1, 200);
+            let k = rng.range(1, 32);
+            let scores: Vec<f32> = (0..n).map(|_| (rng.below(50)) as f32).collect();
+            let mut tk = TopK::new(k);
+            for (i, &s) in scores.iter().enumerate() {
+                tk.push(i as u32, s);
+            }
+            let got = tk.into_sorted();
+            let mut want: Vec<ScoredDoc> = scores
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| ScoredDoc { doc: i as u32, score: s })
+                .collect();
+            want.sort_by(|a, b| {
+                b.score
+                    .partial_cmp(&a.score)
+                    .unwrap()
+                    .then_with(|| a.doc.cmp(&b.doc))
+            });
+            want.truncate(k);
+            assert_eq!(got, want);
+        });
+    }
+}

@@ -1,0 +1,141 @@
+//! The simulator's event queue: a time-ordered min-heap with deterministic
+//! FIFO tie-breaking (events at equal timestamps fire in schedule order).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::platform::CoreId;
+
+/// Event payloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request with this workload index arrives.
+    Arrival(usize),
+    /// The request running on `core` completes — valid only if the core's
+    /// generation still equals `gen` (migrations invalidate completions).
+    Completion {
+        /// Core whose request finishes.
+        core: CoreId,
+        /// Generation stamp at scheduling time.
+        gen: u64,
+    },
+    /// Mapper sampling window elapsed (Algorithm 1 lines 9–10).
+    MapperTick,
+}
+
+/// A scheduled event.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Firing time, ms.
+    pub time: f64,
+    /// Monotone sequence number (FIFO tie-break).
+    pub seq: u64,
+    /// Payload.
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we need earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Time-ordered event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    /// Empty queue.
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Schedule an event at `time`.
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        debug_assert!(time.is_finite(), "non-finite event time");
+        self.heap.push(Event {
+            time,
+            seq: self.next_seq,
+            kind,
+        });
+        self.next_seq += 1;
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True if no events pending.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(5.0, EventKind::MapperTick);
+        q.push(1.0, EventKind::Arrival(0));
+        q.push(3.0, EventKind::Arrival(1));
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
+        assert_eq!(times, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn equal_times_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..5 {
+            q.push(7.0, EventKind::Arrival(i));
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|e| match e.kind {
+                EventKind::Arrival(i) => i,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut q = EventQueue::new();
+        q.push(10.0, EventKind::MapperTick);
+        q.push(1.0, EventKind::Arrival(0));
+        assert_eq!(q.pop().unwrap().time, 1.0);
+        q.push(4.0, EventKind::Arrival(1));
+        assert_eq!(q.pop().unwrap().time, 4.0);
+        assert_eq!(q.pop().unwrap().time, 10.0);
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,20 @@
+//! Deterministic discrete-event simulation of the big/little search server.
+//!
+//! Reproduces the paper's testbed end to end: open-loop arrivals feed a
+//! global FIFO dispatch queue; six search threads are pinned 1:1 to the six
+//! cores (2 big + 4 little on Juno R1); each thread serves one request at a
+//! time (§III-C); the policy's mapper runs on its sampling interval over the
+//! application stats stream and migrates threads by swapping affinities;
+//! migration takes effect *mid-request* (remaining work continues at the new
+//! core's speed after a small cross-cluster stall); the four-channel energy
+//! meters integrate power over every busy/idle interval.
+//!
+//! Determinism: everything derives from `SimConfig::seed`, so every figure
+//! regenerates bit-for-bit.
+
+pub mod event;
+pub mod server;
+pub mod service;
+
+pub use server::{RequestRecord, SimOutput, Simulation};
+pub use service::ServiceSampler;

@@ -1,0 +1,604 @@
+//! The simulated web-search server: queue, thread pool, cores, mapper loop,
+//! energy metering — the heart of every figure reproduction.
+
+use std::collections::VecDeque;
+
+use super::event::{EventKind, EventQueue};
+use super::service::{ServiceDemand, ServiceSampler};
+use crate::config::SimConfig;
+use crate::ipc::{RequestTag, StatsRecord};
+use crate::loadgen::{ArrivalProcess, QueryGen, Workload};
+use crate::mapper::{DispatchInfo, Policy};
+use crate::metrics::LatencyHistogram;
+use crate::platform::{AffinityTable, CoreId, CoreKind, EnergyMeters, ThreadId};
+use crate::util::Rng;
+
+/// Per-request outcome record.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestRecord {
+    /// Keyword count.
+    pub keywords: usize,
+    /// Arrival time, ms.
+    pub arrived_ms: f64,
+    /// Dispatch (service start) time, ms.
+    pub started_ms: f64,
+    /// Completion time, ms.
+    pub completed_ms: f64,
+    /// Core kind at dispatch.
+    pub first_kind: CoreKind,
+    /// Core kind at completion.
+    pub final_kind: CoreKind,
+    /// Whether the serving thread migrated mid-request.
+    pub migrated: bool,
+}
+
+impl RequestRecord {
+    /// End-to-end latency (queueing + service), ms — what the paper reports.
+    pub fn latency_ms(&self) -> f64 {
+        self.completed_ms - self.arrived_ms
+    }
+
+    /// Service time only, ms.
+    pub fn service_ms(&self) -> f64 {
+        self.completed_ms - self.started_ms
+    }
+
+    /// Queueing delay, ms.
+    pub fn queue_ms(&self) -> f64 {
+        self.started_ms - self.arrived_ms
+    }
+}
+
+/// Aggregated simulation output.
+#[derive(Clone, Debug)]
+pub struct SimOutput {
+    /// End-to-end latency histogram (post-warmup requests).
+    pub latency: LatencyHistogram,
+    /// Every request's record, in completion order (includes warmup).
+    pub per_request: Vec<RequestRecord>,
+    /// Four-channel energy meters over the full run.
+    pub energy: EnergyMeters,
+    /// Wall-clock span of the run, ms.
+    pub duration_ms: f64,
+    /// Requests completed.
+    pub completed: usize,
+    /// Thread migrations applied.
+    pub migrations: usize,
+    /// Policy name.
+    pub policy: String,
+}
+
+impl SimOutput {
+    /// Achieved throughput, QPS.
+    pub fn throughput_qps(&self) -> f64 {
+        self.completed as f64 / (self.duration_ms / 1000.0)
+    }
+
+    /// Fraction of requests whose *final* core was big.
+    pub fn big_share(&self) -> f64 {
+        if self.per_request.is_empty() {
+            return 0.0;
+        }
+        self.per_request
+            .iter()
+            .filter(|r| r.final_kind == CoreKind::Big)
+            .count() as f64
+            / self.per_request.len() as f64
+    }
+
+    /// The paper's tail-latency metric (90th percentile), ms.
+    pub fn p90_ms(&self) -> f64 {
+        self.latency.percentile(0.90)
+    }
+
+    /// Post-warmup latency samples (for PDF plots).
+    pub fn latency_samples(&self, warmup: usize) -> Vec<f64> {
+        self.per_request
+            .iter()
+            .skip(warmup)
+            .map(|r| r.latency_ms())
+            .collect()
+    }
+
+    /// Mean energy per request, J.
+    pub fn energy_per_request_j(&self) -> f64 {
+        self.energy.total_j() / self.completed.max(1) as f64
+    }
+}
+
+/// State of one simulated core.
+struct CoreState {
+    kind: CoreKind,
+    /// Running request, if busy.
+    running: Option<Running>,
+    /// Invalidates stale completion events after migrations.
+    gen: u64,
+    /// Last time this core's energy was integrated.
+    last_integrated: f64,
+}
+
+struct Running {
+    widx: usize,
+    demand: ServiceDemand,
+    arrived_ms: f64,
+    started_ms: f64,
+    first_kind: CoreKind,
+    migrated: bool,
+    /// Work still to do, units (updated lazily at `last_progress`).
+    work_left: f64,
+    last_progress: f64,
+    /// Extra stall (migration cost) to serve before work resumes.
+    stall_ms: f64,
+}
+
+/// The simulator.
+pub struct Simulation {
+    cfg: SimConfig,
+}
+
+impl Simulation {
+    /// New simulation from a validated config.
+    pub fn new(cfg: SimConfig) -> Simulation {
+        Simulation {
+            cfg: cfg.validated().expect("invalid sim config"),
+        }
+    }
+
+    /// Run with a freshly generated workload.
+    pub fn run(self) -> SimOutput {
+        let mut rng = Rng::new(self.cfg.seed);
+        let gen = QueryGen::new(self.cfg.keyword_mix, 0);
+        let workload = Workload::generate(
+            ArrivalProcess::Poisson { qps: self.cfg.qps },
+            &gen,
+            self.cfg.num_requests,
+            false,
+            &mut rng.fork(),
+        );
+        self.run_workload(&workload)
+    }
+
+    /// Run over a fixed workload trace (shared across policies so latency
+    /// comparisons are paired).
+    pub fn run_workload(self, workload: &Workload) -> SimOutput {
+        let cfg = &self.cfg;
+        let topology = cfg.topology();
+        let mut rng = Rng::new(cfg.seed ^ 0xD15_BA7C); // dispatch/noise stream
+        let mut policy = cfg.policy.build(&topology);
+        let mut aff = AffinityTable::round_robin(topology.clone());
+        let sampler = ServiceSampler::from_config(cfg);
+        let mut meters = EnergyMeters::new();
+
+        let mut cores: Vec<CoreState> = topology
+            .cores()
+            .map(|c| CoreState {
+                kind: topology.kind(c),
+                running: None,
+                gen: 0,
+                last_integrated: 0.0,
+            })
+            .collect();
+
+        let mut events = EventQueue::new();
+        for (i, req) in workload.requests.iter().enumerate() {
+            events.push(req.arrive_ms, EventKind::Arrival(i));
+        }
+        if let Some(sampling) = policy.sampling_ms() {
+            events.push(sampling, EventKind::MapperTick);
+        }
+
+        // Per-request sampled demands (sampled at arrival for determinism
+        // independent of dispatch order).
+        let mut demands: Vec<Option<ServiceDemand>> = vec![None; workload.len()];
+
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        let mut latency = LatencyHistogram::new();
+        let mut per_request: Vec<RequestRecord> = Vec::with_capacity(workload.len());
+        let mut completed = 0usize;
+        let mut migrations = 0usize;
+        let mut now = 0.0f64;
+        // The run semantically ends at the last completion; trailing mapper
+        // ticks must not extend the measured duration (or its rest-energy).
+        let mut last_completion_ms = 0.0f64;
+        let mut rid_seq = 0u64;
+        // Stats stream buffered between mapper ticks (the pipe).
+        let mut stream: Vec<StatsRecord> = Vec::new();
+        // rid tag per in-flight core (for the end-of-request record).
+        let mut core_rid: Vec<Option<RequestTag>> = vec![None; cores.len()];
+
+        let integrate = |core: &mut CoreState, meters: &mut EnergyMeters, now: f64, power: &crate::platform::PowerModel| {
+            let dt = now - core.last_integrated;
+            if dt > 0.0 {
+                meters.add_core_time(power, core.kind, core.running.is_some(), dt);
+                core.last_integrated = now;
+            }
+        };
+
+        macro_rules! try_dispatch {
+            () => {
+                loop {
+                    if queue.is_empty() {
+                        break;
+                    }
+                    let idle: Vec<CoreId> = (0..cores.len())
+                        .map(CoreId)
+                        .filter(|c| cores[c.0].running.is_none())
+                        .collect();
+                    if idle.is_empty() {
+                        break;
+                    }
+                    let widx = *queue.front().unwrap();
+                    let req = &workload.requests[widx];
+                    let info = DispatchInfo {
+                        keywords: req.keywords,
+                    };
+                    let Some(core_id) = policy.choose_core(&idle, &aff, info, &mut rng) else {
+                        break; // policy keeps the head queued (e.g. all-big)
+                    };
+                    queue.pop_front();
+                    let demand = *demands[widx].get_or_insert_with(|| {
+                        sampler.sample(req.keywords, &mut rng)
+                    });
+                    let core = &mut cores[core_id.0];
+                    integrate(core, &mut meters, now, &cfg.power);
+                    let kind = core.kind;
+                    core.running = Some(Running {
+                        widx,
+                        demand,
+                        arrived_ms: req.arrive_ms,
+                        started_ms: now,
+                        first_kind: kind,
+                        migrated: false,
+                        work_left: demand.work_units,
+                        last_progress: now,
+                        stall_ms: 0.0,
+                    });
+                    core.gen += 1;
+                    let finish = now + demand.work_units / demand.speed_on(kind);
+                    events.push(finish, EventKind::Completion { core: core_id, gen: core.gen });
+                    // Begin stats record (what the search thread writes).
+                    let tag = RequestTag::from_seq(rid_seq);
+                    rid_seq += 1;
+                    core_rid[core_id.0] = Some(tag);
+                    let rec = StatsRecord {
+                        tid: aff.thread_on(core_id),
+                        rid: tag,
+                        ts_ms: now as u64,
+                    };
+                    stream.push(rec);
+                }
+            };
+        }
+
+        while let Some(ev) = events.pop() {
+            now = ev.time;
+            match ev.kind {
+                EventKind::Arrival(widx) => {
+                    queue.push_back(widx);
+                    try_dispatch!();
+                }
+                EventKind::Completion { core: core_id, gen } => {
+                    if cores[core_id.0].gen != gen {
+                        continue; // stale: the thread migrated meanwhile
+                    }
+                    integrate(&mut cores[core_id.0], &mut meters, now, &cfg.power);
+                    let core = &mut cores[core_id.0];
+                    let run = core.running.take().expect("completion on idle core");
+                    core.gen += 1;
+                    let kind = core.kind;
+                    let req = &workload.requests[run.widx];
+                    let record = RequestRecord {
+                        keywords: req.keywords,
+                        arrived_ms: run.arrived_ms,
+                        started_ms: run.started_ms,
+                        completed_ms: now,
+                        first_kind: run.first_kind,
+                        final_kind: kind,
+                        migrated: run.migrated,
+                    };
+                    if per_request.len() >= cfg.warmup_requests {
+                        latency.record(record.latency_ms());
+                    }
+                    per_request.push(record);
+                    completed += 1;
+                    last_completion_ms = now;
+                    // End stats record.
+                    if let Some(tag) = core_rid[core_id.0].take() {
+                        stream.push(StatsRecord {
+                            tid: aff.thread_on(core_id),
+                            rid: tag,
+                            ts_ms: now as u64,
+                        });
+                    }
+                    try_dispatch!();
+                }
+                EventKind::MapperTick => {
+                    // Feed the stats stream accumulated this window, then act.
+                    for rec in stream.drain(..) {
+                        policy.observe(&rec);
+                    }
+                    for mig in policy.tick(now, &aff) {
+                        migrations += 1;
+                        apply_migration(
+                            mig.big_core,
+                            mig.little_core,
+                            now,
+                            &mut cores,
+                            &mut aff,
+                            &mut core_rid,
+                            &mut events,
+                            &mut meters,
+                            cfg,
+                        );
+                    }
+                    if let Some(sampling) = policy.sampling_ms() {
+                        // Keep ticking while work remains.
+                        if completed < workload.len() {
+                            events.push(now + sampling, EventKind::MapperTick);
+                        }
+                    }
+                    try_dispatch!();
+                }
+            }
+        }
+
+        // Final energy integration + always-on channels over the span.
+        for core in cores.iter_mut() {
+            let dt = last_completion_ms - core.last_integrated;
+            if dt > 0.0 {
+                meters.add_core_time(&cfg.power, core.kind, core.running.is_some(), dt);
+            }
+        }
+        meters.add_wall_time(&cfg.power, last_completion_ms);
+
+        debug_assert_eq!(completed, workload.len(), "requests lost");
+        SimOutput {
+            latency,
+            per_request,
+            energy: meters,
+            duration_ms: last_completion_ms,
+            completed,
+            migrations,
+            policy: policy.name(),
+        }
+    }
+}
+
+/// Swap the threads on `big` and `little`, updating in-flight work so the
+/// remaining units continue at the new core's speed after the migration
+/// stall. Requests stay attached to their *thread*: the request running on
+/// the little core moves (with its thread) to the big core and vice versa.
+#[allow(clippy::too_many_arguments)]
+fn apply_migration(
+    big: CoreId,
+    little: CoreId,
+    now: f64,
+    cores: &mut [CoreState],
+    aff: &mut AffinityTable,
+    core_rid: &mut [Option<RequestTag>],
+    events: &mut EventQueue,
+    meters: &mut EnergyMeters,
+    cfg: &SimConfig,
+) {
+    debug_assert_ne!(big, little);
+    // Integrate energy and progress up to `now` on both cores.
+    for &cid in &[big, little] {
+        let core = &mut cores[cid.0];
+        let dt = now - core.last_integrated;
+        if dt > 0.0 {
+            meters.add_core_time(&cfg.power, core.kind, core.running.is_some(), dt);
+            core.last_integrated = now;
+        }
+        if let Some(run) = core.running.as_mut() {
+            let progressed = (now - run.last_progress).max(0.0);
+            let stall_used = progressed.min(run.stall_ms);
+            run.stall_ms -= stall_used;
+            let active = progressed - stall_used;
+            run.work_left -= active * run.demand.speed_on(core.kind);
+            run.work_left = run.work_left.max(0.0);
+            run.last_progress = now;
+        }
+    }
+    // Swap the *threads* (and the requests riding on them).
+    aff.swap(big, little);
+    let (a, b) = if big.0 < little.0 {
+        let (lo, hi) = cores.split_at_mut(little.0);
+        (&mut lo[big.0], &mut hi[0])
+    } else {
+        let (lo, hi) = cores.split_at_mut(big.0);
+        (&mut hi[0], &mut lo[little.0])
+    };
+    std::mem::swap(&mut a.running, &mut b.running);
+    core_rid.swap(big.0, little.0);
+
+    // Reschedule completions on both cores at their new speeds.
+    for &cid in &[big, little] {
+        let core = &mut cores[cid.0];
+        core.gen += 1;
+        if let Some(run) = core.running.as_mut() {
+            run.migrated = true;
+            run.stall_ms += cfg.service.migration_cost_ms;
+            let finish =
+                now + run.stall_ms + run.work_left / run.demand.speed_on(core.kind);
+            events.push(
+                finish,
+                EventKind::Completion {
+                    core: cid,
+                    gen: core.gen,
+                },
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{KeywordMix, SimConfig};
+    use crate::mapper::PolicyKind;
+
+    fn base(policy: PolicyKind) -> SimConfig {
+        SimConfig::paper_default(policy)
+            .with_requests(3_000)
+            .with_seed(11)
+    }
+
+    #[test]
+    fn all_requests_complete() {
+        let out = Simulation::new(base(PolicyKind::LinuxRandom)).run();
+        assert_eq!(out.completed, 3_000);
+        assert_eq!(out.per_request.len(), 3_000);
+        assert!(out.duration_ms > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Simulation::new(base(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        }))
+        .run();
+        let b = Simulation::new(base(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        }))
+        .run();
+        assert_eq!(a.p90_ms(), b.p90_ms());
+        assert_eq!(a.migrations, b.migrations);
+        assert!((a.energy.total_j() - b.energy.total_j()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latencies_physically_sane() {
+        let out = Simulation::new(base(PolicyKind::LinuxRandom)).run();
+        for r in &out.per_request {
+            assert!(r.started_ms >= r.arrived_ms - 1e-9);
+            assert!(r.completed_ms > r.started_ms);
+            // Service time can never beat a noiseless big core by much
+            // (noise factor is mean-1 lognormal, bounded in practice).
+            let floor = (15.0 + 28.5 * r.keywords as f64) * 0.4;
+            assert!(
+                r.service_ms() > floor,
+                "service {}ms below physical floor {}ms",
+                r.service_ms(),
+                floor
+            );
+        }
+    }
+
+    #[test]
+    fn linux_never_migrates_hurryup_does() {
+        let linux = Simulation::new(base(PolicyKind::LinuxRandom)).run();
+        assert_eq!(linux.migrations, 0);
+        assert!(linux.per_request.iter().all(|r| !r.migrated));
+        let hu = Simulation::new(base(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        }))
+        .run();
+        assert!(hu.migrations > 0, "hurry-up should migrate at 30 qps");
+        assert!(hu.per_request.iter().any(|r| r.migrated));
+    }
+
+    #[test]
+    fn hurryup_beats_linux_tail_at_paper_operating_point() {
+        // The paper's headline (Fig 8): large p90 cut at 20-30 QPS.
+        let workload_cfg = base(PolicyKind::LinuxRandom).with_qps(30.0);
+        let linux = Simulation::new(workload_cfg.clone()).run();
+        let hu = Simulation::new(
+            workload_cfg.with_policy(PolicyKind::HurryUp {
+                sampling_ms: 25.0,
+                threshold_ms: 50.0,
+            }),
+        )
+        .run();
+        assert!(
+            hu.p90_ms() < linux.p90_ms() * 0.9,
+            "hurry-up p90 {} vs linux {}",
+            hu.p90_ms(),
+            linux.p90_ms()
+        );
+    }
+
+    #[test]
+    fn hurryup_migrated_requests_finish_on_big() {
+        let out = Simulation::new(base(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        }))
+        .run();
+        let migrated_to_big = out
+            .per_request
+            .iter()
+            .filter(|r| r.migrated && r.first_kind == CoreKind::Little)
+            .filter(|r| r.final_kind == CoreKind::Big)
+            .count();
+        let migrated_from_little = out
+            .per_request
+            .iter()
+            .filter(|r| r.migrated && r.first_kind == CoreKind::Little)
+            .count();
+        // The overwhelming majority of little→X migrations land on big
+        // (a few can be displaced back by a later swap).
+        assert!(
+            migrated_to_big as f64 > 0.7 * migrated_from_little as f64,
+            "{migrated_to_big}/{migrated_from_little}"
+        );
+    }
+
+    #[test]
+    fn all_big_uses_only_big_cores() {
+        let out = Simulation::new(
+            base(PolicyKind::AllBig).with_qps(5.0).with_requests(500),
+        )
+        .run();
+        assert!(out
+            .per_request
+            .iter()
+            .all(|r| r.final_kind == CoreKind::Big));
+    }
+
+    #[test]
+    fn all_little_slower_than_all_big() {
+        let big = Simulation::new(base(PolicyKind::AllBig).with_qps(3.0).with_requests(800)).run();
+        let little =
+            Simulation::new(base(PolicyKind::AllLittle).with_qps(3.0).with_requests(800)).run();
+        assert!(little.p90_ms() > 2.0 * big.p90_ms());
+    }
+
+    #[test]
+    fn energy_increases_with_load() {
+        let lo = Simulation::new(base(PolicyKind::LinuxRandom).with_qps(5.0)).run();
+        let hi = Simulation::new(base(PolicyKind::LinuxRandom).with_qps(40.0)).run();
+        // Same request count ⇒ higher load finishes sooner ⇒ less wall-clock
+        // rest-energy, but more *core-active* energy per unit time. Energy
+        // per request on the active channels should grow with big usage; at
+        // minimum, totals must be positive and finite.
+        assert!(lo.energy.total_j() > 0.0 && hi.energy.total_j() > 0.0);
+        assert!(lo.duration_ms > hi.duration_ms);
+    }
+
+    #[test]
+    fn fixed_keyword_mix_service_times_cluster() {
+        let cfg = base(PolicyKind::AllBig)
+            .with_qps(2.0)
+            .with_requests(400)
+            .with_mix(KeywordMix::Fixed(8));
+        let mut out = Simulation::new(cfg).run();
+        out.per_request.retain(|r| !r.migrated);
+        let mean_expected = 15.0 + 28.5 * 8.0; // 243 ms on big
+        let mean: f64 = out.per_request.iter().map(|r| r.service_ms()).sum::<f64>()
+            / out.per_request.len() as f64;
+        assert!(
+            (mean - mean_expected).abs() / mean_expected < 0.1,
+            "mean={mean} expected≈{mean_expected}"
+        );
+    }
+
+    #[test]
+    fn throughput_tracks_offered_load_when_stable() {
+        let out = Simulation::new(base(PolicyKind::LinuxRandom).with_qps(10.0)).run();
+        let qps = out.throughput_qps();
+        assert!((qps - 10.0).abs() < 1.0, "qps={qps}");
+    }
+}

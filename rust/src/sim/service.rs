@@ -1,0 +1,171 @@
+//! Per-request service-demand sampling.
+//!
+//! A request's *work* is deterministic in its keyword count
+//! (`ServiceModel::work_units`), but its realised speed on each core kind
+//! carries multiplicative lognormal noise — the paper's Fig 1 error bars,
+//! which are markedly wider on little cores (in-order A53s are much more
+//! sensitive to microarchitectural weather than the out-of-order A57s).
+//! The noise factor is sampled once per (request, core kind), so a request
+//! that migrates mid-flight keeps consistent per-kind behaviour.
+
+use crate::config::SimConfig;
+use crate::platform::CoreKind;
+use crate::util::Rng;
+
+/// Sampled service demand of one request.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceDemand {
+    /// Deterministic work, units (1 unit = 1 ms on a noise-free big core).
+    pub work_units: f64,
+    /// Base core speeds (units/ms), honouring any DVFS override.
+    base_speed_big: f64,
+    base_speed_little: f64,
+    /// Effective speed multiplier on a big core (1/noise).
+    speed_factor_big: f64,
+    /// Effective speed multiplier on a little core.
+    speed_factor_little: f64,
+}
+
+impl ServiceDemand {
+    /// Effective execution speed (units/ms) on a core kind.
+    pub fn speed_on(&self, kind: CoreKind) -> f64 {
+        match kind {
+            CoreKind::Big => self.base_speed_big * self.speed_factor_big,
+            CoreKind::Little => self.base_speed_little * self.speed_factor_little,
+        }
+    }
+
+    /// Noise-free mean service time on a kind, ms.
+    pub fn mean_ms_on(&self, kind: CoreKind) -> f64 {
+        match kind {
+            CoreKind::Big => self.work_units / self.base_speed_big,
+            CoreKind::Little => self.work_units / self.base_speed_little,
+        }
+    }
+}
+
+/// Samples service demands per the configured model.
+#[derive(Clone, Debug)]
+pub struct ServiceSampler {
+    base_units: f64,
+    per_kw_units: f64,
+    sigma_big: f64,
+    sigma_little: f64,
+    speed_big: f64,
+    speed_little: f64,
+}
+
+impl ServiceSampler {
+    /// Sampler from a sim config.
+    pub fn from_config(cfg: &SimConfig) -> ServiceSampler {
+        ServiceSampler {
+            base_units: cfg.service.base_units,
+            per_kw_units: cfg.service.per_kw_units,
+            sigma_big: cfg.sigma(CoreKind::Big),
+            sigma_little: cfg.sigma(CoreKind::Little),
+            speed_big: cfg.speed(CoreKind::Big),
+            speed_little: cfg.speed(CoreKind::Little),
+        }
+    }
+
+    /// Sample one request's demand.
+    pub fn sample(&self, keywords: usize, rng: &mut Rng) -> ServiceDemand {
+        let work_units = self.base_units + self.per_kw_units * keywords as f64;
+        // exp(N(-σ²/2, σ)) has mean exactly 1 ⇒ noise preserves mean speed.
+        let draw = |rng: &mut Rng, sigma: f64| -> f64 {
+            if sigma == 0.0 {
+                1.0
+            } else {
+                rng.lognormal(-sigma * sigma / 2.0, sigma)
+            }
+        };
+        ServiceDemand {
+            work_units,
+            base_speed_big: self.speed_big,
+            base_speed_little: self.speed_little,
+            speed_factor_big: draw(rng, self.sigma_big),
+            speed_factor_little: draw(rng, self.sigma_little),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::mapper::PolicyKind;
+
+    fn sampler(noise: Option<(f64, f64)>) -> ServiceSampler {
+        let mut cfg = SimConfig::paper_default(PolicyKind::LinuxRandom);
+        cfg.noise_override = noise;
+        ServiceSampler::from_config(&cfg)
+    }
+
+    #[test]
+    fn work_linear_in_keywords() {
+        let s = sampler(Some((0.0, 0.0)));
+        let mut rng = Rng::new(1);
+        let d1 = s.sample(1, &mut rng);
+        let d5 = s.sample(5, &mut rng);
+        assert!((d5.work_units - d1.work_units - 4.0 * 28.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noise_free_speeds_match_kind() {
+        let s = sampler(Some((0.0, 0.0)));
+        let mut rng = Rng::new(2);
+        let d = s.sample(5, &mut rng);
+        assert_eq!(d.speed_on(CoreKind::Big), 1.0);
+        assert_eq!(d.speed_on(CoreKind::Little), 0.30);
+    }
+
+    #[test]
+    fn fig1_qos_cutoffs() {
+        // Noise-free: little crosses 500 ms at ~5 kw, big at ~17 kw.
+        let s = sampler(Some((0.0, 0.0)));
+        let mut rng = Rng::new(3);
+        let d5 = s.sample(5, &mut rng);
+        let d17 = s.sample(17, &mut rng);
+        assert!(d5.mean_ms_on(CoreKind::Little) > 480.0);
+        assert!(d17.mean_ms_on(CoreKind::Big) <= 505.0);
+    }
+
+    #[test]
+    fn noise_mean_preserving() {
+        let s = sampler(None);
+        let mut rng = Rng::new(4);
+        let n = 100_000;
+        let mut sum_b = 0.0;
+        let mut sum_l = 0.0;
+        for _ in 0..n {
+            let d = s.sample(3, &mut rng);
+            sum_b += d.speed_on(CoreKind::Big);
+            sum_l += d.speed_on(CoreKind::Little);
+        }
+        assert!((sum_b / n as f64 - 1.0).abs() < 0.01);
+        assert!((sum_l / n as f64 - 0.30).abs() < 0.01);
+    }
+
+    #[test]
+    fn little_variance_exceeds_big() {
+        let s = sampler(None);
+        let mut rng = Rng::new(5);
+        let n = 50_000;
+        let (mut vb, mut vl) = (Vec::new(), Vec::new());
+        for _ in 0..n {
+            let d = s.sample(3, &mut rng);
+            vb.push(d.speed_on(CoreKind::Big));
+            vl.push(d.speed_on(CoreKind::Little) / 0.30);
+        }
+        let var = |v: &[f64]| {
+            let m = v.iter().sum::<f64>() / v.len() as f64;
+            v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64
+        };
+        assert!(
+            var(&vl) > 2.0 * var(&vb),
+            "little var {} vs big var {}",
+            var(&vl),
+            var(&vb)
+        );
+    }
+}

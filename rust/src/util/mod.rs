@@ -1,0 +1,9 @@
+//! Utilities built from scratch for the offline environment: a seedable PRNG
+//! with the samplers the simulator needs, a tiny property-testing framework,
+//! and table/CSV formatting for the experiment harness.
+
+pub mod fmt;
+pub mod prop;
+pub mod rng;
+
+pub use rng::Rng;

@@ -1,0 +1,95 @@
+//! Minimal property-testing framework (proptest is unavailable offline).
+//!
+//! A property is checked against `n` pseudo-random cases generated from a
+//! deterministic base seed; failures report the case index and seed so the
+//! exact case can be replayed with `PROP_SEED=<seed> PROP_CASE=<i>`.
+//! No shrinking — generators are kept small-biased instead.
+
+use super::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 256;
+
+/// Read the base seed from `PROP_SEED` (default: fixed for reproducibility).
+pub fn base_seed() -> u64 {
+    std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `prop(rng, case_index)` for `cases` generated cases; panics with a
+/// replay line on the first failure (propagates the inner panic message).
+pub fn check<F: FnMut(&mut Rng, usize)>(cases: usize, mut prop: F) {
+    let seed = base_seed();
+    let only: Option<usize> = std::env::var("PROP_CASE")
+        .ok()
+        .and_then(|s| s.parse().ok());
+    for i in 0..cases {
+        if let Some(c) = only {
+            if c != i {
+                continue;
+            }
+        }
+        // Per-case RNG so a failing case replays independently of the others.
+        let mut rng = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, i)
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {i}/{cases} (replay: PROP_SEED={seed} PROP_CASE={i}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generate a vector of length in [0, max_len) with elements from `f`.
+pub fn vec_of<T>(rng: &mut Rng, max_len: usize, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+    let len = rng.below(max_len.max(1));
+    (0..len).map(|_| f(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(50, |_rng, _i| {
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_reports_replay_line() {
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check(10, |_rng, i| assert!(i < 5, "boom at {i}"));
+        }));
+        let msg = match r {
+            Err(e) => e
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(_) => panic!("should have failed"),
+        };
+        assert!(msg.contains("PROP_SEED="), "msg={msg}");
+        assert!(msg.contains("case 5"), "msg={msg}");
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first = Vec::new();
+        check(5, |rng, _| first.push(rng.next_u64()));
+        let mut second = Vec::new();
+        check(5, |rng, _| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,222 @@
+//! Integration: the live thread-pool server end to end — real threads, real
+//! IPC stats stream, real query execution; Hurry-up mapper vs static
+//! mapping; optional PJRT backend when the artifact is built.
+
+use std::sync::Arc;
+
+use hurryup::config::{CorpusConfig, KeywordMix};
+use hurryup::live::{LiveConfig, LiveServer};
+use hurryup::mapper::HurryUpParams;
+use hurryup::platform::CoreKind;
+use hurryup::search::Index;
+
+/// Work scale calibrated so one block-term of emulated work costs
+/// `target_us` of wall time on a big core *in the current build profile*
+/// (a debug-build Rust block pass is ~15× slower than release; wall-clock
+/// sensitive tests must not depend on the optimizer).
+fn calibrated_scale(target_us: f64) -> f64 {
+    use hurryup::search::engine::{BlockScorer, ScoreBlock};
+    use hurryup::search::{Bm25Params, RustScorer, DOC_BLOCK, MAX_TERMS};
+    let block = ScoreBlock {
+        tf: vec![1.0; DOC_BLOCK * MAX_TERMS],
+        dl: vec![100.0; DOC_BLOCK],
+        docs: (0..DOC_BLOCK as u32).collect(),
+        max_tf: vec![1.0; MAX_TERMS],
+        min_dl: 100.0,
+    };
+    let idf = vec![1.0f32; MAX_TERMS];
+    let mut scorer = RustScorer::new(Bm25Params::default());
+    let t0 = std::time::Instant::now();
+    let iters = 50;
+    for _ in 0..iters {
+        scorer.score_block(&block, &idf, 100.0).unwrap();
+    }
+    let pass_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    (target_us / pass_us).max(1.0)
+}
+
+fn small_index() -> Arc<Index> {
+    let cfg = CorpusConfig {
+        num_docs: 800,
+        vocab_size: 2_000,
+        ..CorpusConfig::small()
+    };
+    Arc::new(Index::build(&cfg.build()))
+}
+
+fn base_cfg() -> LiveConfig {
+    LiveConfig {
+        qps: 120.0, // fast wall-clock: ~1s for 120 requests
+        num_requests: 120,
+        seed: 5,
+        use_xla: false,
+        work_scale: 2.0,
+        keyword_mix: KeywordMix::Paper,
+        ..LiveConfig::default()
+    }
+}
+
+#[test]
+fn serves_every_request_with_results() {
+    let report = LiveServer::new(base_cfg(), small_index()).run().unwrap();
+    assert_eq!(report.per_request.len(), 120);
+    // Real search: the vast majority of queries must return hits (query
+    // terms are sampled from the indexed vocabulary).
+    let with_hits = report
+        .per_request
+        .iter()
+        .filter(|r| r.top_hit.is_some())
+        .count();
+    assert!(with_hits > 100, "only {with_hits}/120 queries returned hits");
+    assert!(report.total_passes > 0);
+    assert!(report.duration_ms > 0.0);
+}
+
+#[test]
+fn static_mapping_never_migrates() {
+    let cfg = LiveConfig {
+        hurryup: None,
+        ..base_cfg()
+    };
+    let report = LiveServer::new(cfg, small_index()).run().unwrap();
+    assert_eq!(report.migrations, 0);
+    for r in &report.per_request {
+        assert_eq!(r.first_kind, r.final_kind);
+    }
+}
+
+#[test]
+fn hurryup_mapper_migrates_over_real_ipc() {
+    // Aggressive parameters so migrations certainly fire within the short
+    // wall-clock run: tiny threshold, fast sampling, stretched work.
+    let cfg = LiveConfig {
+        hurryup: Some(HurryUpParams {
+            sampling_ms: 5.0,
+            threshold_ms: 10.0,
+        }),
+        // Calibrated: ~0.5 ms of big-core work per block-term, so a
+        // little-core multi-keyword request is well past the 10 ms
+        // threshold within the run, in any build profile.
+        work_scale: calibrated_scale(520.0),
+        qps: 30.0,
+        num_requests: 90,
+        ..base_cfg()
+    };
+    let report = LiveServer::new(cfg, small_index()).run().unwrap();
+    assert!(
+        report.migrations > 0,
+        "mapper should have migrated threads (ran {} requests)",
+        report.per_request.len()
+    );
+    // At least one request should have observably changed core kind.
+    let changed = report
+        .per_request
+        .iter()
+        .filter(|r| r.first_kind != r.final_kind)
+        .count();
+    assert!(changed > 0, "no request changed core kind across migration");
+}
+
+#[test]
+fn heterogeneity_visible_in_service_times() {
+    // With static mapping, requests finishing on little cores must take
+    // longer per scoring pass than on big cores (the 1/0.3 emulation).
+    let cfg = LiveConfig {
+        hurryup: None,
+        qps: 15.0,
+        num_requests: 120,
+        work_scale: calibrated_scale(520.0),
+        ..base_cfg()
+    };
+    let report = LiveServer::new(cfg, small_index()).run().unwrap();
+    let per_pass = |kind: CoreKind| -> f64 {
+        let rs: Vec<&hurryup::live::LiveRecord> = report
+            .per_request
+            .iter()
+            .filter(|r| r.final_kind == kind && r.passes > 0)
+            .collect();
+        assert!(!rs.is_empty(), "no requests finished on {kind}");
+        rs.iter()
+            .map(|r| (r.completed_ms - r.started_ms) / r.passes as f64)
+            .sum::<f64>()
+            / rs.len() as f64
+    };
+    let big = per_pass(CoreKind::Big);
+    let little = per_pass(CoreKind::Little);
+    // Little-core requests do ~3.3× the passes for the same work, so their
+    // per-pass wall time is similar — but their total service per request
+    // is larger. Compare totals instead:
+    let total = |kind: CoreKind| -> f64 {
+        let rs: Vec<f64> = report
+            .per_request
+            .iter()
+            .filter(|r| r.final_kind == kind)
+            .map(|r| r.completed_ms - r.started_ms)
+            .collect();
+        rs.iter().sum::<f64>() / rs.len() as f64
+    };
+    let _ = (big, little);
+    assert!(
+        total(CoreKind::Little) > 1.5 * total(CoreKind::Big),
+        "little {} ms vs big {} ms",
+        total(CoreKind::Little),
+        total(CoreKind::Big)
+    );
+}
+
+#[test]
+fn hurryup_beats_static_on_live_server() {
+    // The headline, end to end on real threads. Moderate load + stretched
+    // work so heavy requests on little cores dominate the static tail.
+    let scale = calibrated_scale(700.0);
+    let mk = move |hurryup| LiveConfig {
+        hurryup,
+        qps: 18.0,
+        num_requests: 200,
+        work_scale: scale,
+        seed: 23,
+        ..base_cfg()
+    };
+    let index = small_index();
+    let static_ = LiveServer::new(mk(None), index.clone()).run().unwrap();
+    let hu = LiveServer::new(
+        mk(Some(HurryUpParams {
+            sampling_ms: 10.0,
+            threshold_ms: 30.0,
+        })),
+        index,
+    )
+    .run()
+    .unwrap();
+    assert!(
+        hu.p90_ms() < static_.p90_ms(),
+        "hurry-up p90 {} vs static p90 {}",
+        hu.p90_ms(),
+        static_.p90_ms()
+    );
+}
+
+#[test]
+fn xla_backend_end_to_end_if_artifact_present() {
+    if hurryup::runtime::artifact::require_scorer().is_err() {
+        eprintln!("SKIP: artifact missing (run `make artifacts`)");
+        return;
+    }
+    let cfg = LiveConfig {
+        use_xla: true,
+        qps: 60.0,
+        num_requests: 40,
+        big_cores: 1,
+        little_cores: 1, // 2 workers = 2 PJRT clients; keep startup cheap
+        ..base_cfg()
+    };
+    let report = LiveServer::new(cfg, small_index()).run().unwrap();
+    assert_eq!(report.backend, "xla");
+    assert_eq!(report.per_request.len(), 40);
+    let with_hits = report
+        .per_request
+        .iter()
+        .filter(|r| r.top_hit.is_some())
+        .count();
+    assert!(with_hits > 30, "xla backend returned too few hits: {with_hits}");
+}

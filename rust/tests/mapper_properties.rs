@@ -1,0 +1,184 @@
+//! Property tests over the coordinator invariants (routing, batching,
+//! state), via the in-crate mini-proptest framework: random stats streams,
+//! random topologies, random tick timings — Algorithm 1's contract must
+//! hold on every trajectory, and simulator trajectories must conserve
+//! requests and keep the thread↔core bijection intact.
+
+use std::collections::HashMap;
+
+use hurryup::config::SimConfig;
+use hurryup::ipc::{RequestTag, StatsRecord};
+use hurryup::mapper::{HurryUp, HurryUpParams, Policy, PolicyKind};
+use hurryup::platform::{AffinityTable, CoreKind, ThreadId, Topology};
+use hurryup::sim::Simulation;
+use hurryup::util::{prop, Rng};
+
+/// Drive a random begin/end stream through the mapper while applying its
+/// migrations to a real affinity table; check every invariant on the way.
+#[test]
+fn prop_hurryup_full_trajectory_invariants() {
+    prop::check(96, |rng: &mut Rng, _i| {
+        let big = rng.range(1, 3);
+        let little = rng.range(1, 5);
+        let topo = Topology::new(big, little);
+        let n = topo.num_cores();
+        let threshold = rng.f64_range(5.0, 200.0);
+        let mut mapper = HurryUp::new(
+            HurryUpParams {
+                sampling_ms: 25.0,
+                threshold_ms: threshold,
+            },
+            topo.clone(),
+        );
+        let mut aff = AffinityTable::round_robin(topo.clone());
+        let mut now = 0.0f64;
+        let mut in_flight: HashMap<usize, (u64, f64)> = HashMap::new(); // tid -> (seq, start)
+        let mut seq = 0u64;
+
+        for _step in 0..rng.below(200) {
+            now += rng.f64_range(1.0, 40.0);
+            let action = rng.below(3);
+            match action {
+                0 => {
+                    // Start a request on a random idle thread.
+                    let tid = rng.below(n);
+                    if !in_flight.contains_key(&tid) {
+                        in_flight.insert(tid, (seq, now));
+                        mapper.observe(&StatsRecord {
+                            tid: ThreadId(tid),
+                            rid: RequestTag::from_seq(seq),
+                            ts_ms: now as u64,
+                        });
+                        seq += 1;
+                    }
+                }
+                1 => {
+                    // Finish the lowest-tid in-flight request (deterministic
+                    // choice so PROP_SEED replays exactly).
+                    if let Some((&tid, &(s, _))) =
+                        in_flight.iter().min_by_key(|(tid, _)| **tid)
+                    {
+                        mapper.observe(&StatsRecord {
+                            tid: ThreadId(tid),
+                            rid: RequestTag::from_seq(s),
+                            ts_ms: now as u64,
+                        });
+                        in_flight.remove(&tid);
+                    }
+                }
+                _ => {
+                    // Mapper tick.
+                    let migs = mapper.tick(now, &aff);
+                    // Invariant: at most one migration per big core, sources
+                    // distinct little cores, all above threshold.
+                    assert!(migs.len() <= topo.big_cores().len());
+                    let mut bigs = std::collections::HashSet::new();
+                    let mut littles = std::collections::HashSet::new();
+                    for m in &migs {
+                        assert_eq!(topo.kind(m.big_core), CoreKind::Big);
+                        assert_eq!(topo.kind(m.little_core), CoreKind::Little);
+                        assert!(bigs.insert(m.big_core), "big core reused in one tick");
+                        assert!(littles.insert(m.little_core), "little core reused");
+                        // The migrating thread's request is over threshold.
+                        let tid = aff.thread_on(m.little_core);
+                        let (_, start) = in_flight[&tid.0];
+                        // u64-ms truncation in the stats stream loses < 1 ms.
+                        assert!(
+                            now - start > threshold - 1.0,
+                            "migrated below threshold: elapsed {} <= {threshold}",
+                            now - start
+                        );
+                    }
+                    for m in migs {
+                        aff.swap(m.big_core, m.little_core);
+                    }
+                    assert!(aff.is_bijection(), "bijection broken");
+                }
+            }
+        }
+        // Tracked table must exactly equal the in-flight set.
+        assert_eq!(mapper.tracked(), in_flight.len());
+    });
+}
+
+/// Simulator conservation across random configs: every request completes
+/// exactly once and latencies are non-negative, regardless of policy,
+/// topology, load, or seed.
+#[test]
+fn prop_sim_conserves_requests() {
+    prop::check(24, |rng: &mut Rng, _i| {
+        let policies = [
+            PolicyKind::HurryUp {
+                sampling_ms: rng.f64_range(5.0, 100.0),
+                threshold_ms: rng.f64_range(0.0, 300.0),
+            },
+            PolicyKind::LinuxRandom,
+            PolicyKind::RoundRobin,
+            PolicyKind::Oracle { cutoff_kw: rng.range(1, 10) },
+        ];
+        let policy = policies[rng.below(policies.len())];
+        let big = rng.range(0, 2);
+        let little = rng.range(if big == 0 { 1 } else { 0 }, 4);
+        let n = rng.range(200, 1200);
+        let cfg = SimConfig::paper_default(policy)
+            .with_topology(big, little)
+            .with_qps(rng.f64_range(1.0, 25.0))
+            .with_requests(n)
+            .with_seed(rng.next_u64());
+        let out = Simulation::new(cfg).run();
+        assert_eq!(out.completed, n, "{policy:?}");
+        for r in &out.per_request {
+            assert!(r.latency_ms() >= 0.0);
+            assert!(r.service_ms() > 0.0);
+            assert!(r.queue_ms() >= -1e-9);
+        }
+    });
+}
+
+/// Determinism: same seed ⇒ identical traces for every policy.
+#[test]
+fn prop_sim_deterministic() {
+    prop::check(12, |rng: &mut Rng, _i| {
+        let policy = if rng.chance(0.5) {
+            PolicyKind::HurryUp {
+                sampling_ms: 25.0,
+                threshold_ms: 50.0,
+            }
+        } else {
+            PolicyKind::LinuxRandom
+        };
+        let seed = rng.next_u64();
+        let mk = || {
+            SimConfig::paper_default(policy)
+                .with_qps(18.0)
+                .with_requests(600)
+                .with_seed(seed)
+        };
+        let a = Simulation::new(mk()).run();
+        let b = Simulation::new(mk()).run();
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.p90_ms(), b.p90_ms());
+        assert_eq!(a.duration_ms, b.duration_ms);
+        for (x, y) in a.per_request.iter().zip(&b.per_request) {
+            assert_eq!(x.completed_ms, y.completed_ms);
+            assert_eq!(x.final_kind, y.final_kind);
+        }
+    });
+}
+
+/// The stats codec round-trips arbitrary well-formed records (the live
+/// server's wire contract).
+#[test]
+fn prop_codec_roundtrip_and_rejects_junk() {
+    prop::check(prop::DEFAULT_CASES, |rng: &mut Rng, _i| {
+        let rec = StatsRecord {
+            tid: ThreadId(rng.below(4096)),
+            rid: RequestTag::from_seq(rng.next_u64()),
+            ts_ms: rng.next_u64() % 10u64.pow(13),
+        };
+        assert_eq!(StatsRecord::parse(&rec.encode()).unwrap(), rec);
+        // Mutating the separator structure must fail parsing.
+        let junk = rec.encode().replace(';', ",");
+        assert!(StatsRecord::parse(&junk).is_err());
+    });
+}

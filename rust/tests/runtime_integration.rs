@@ -1,0 +1,152 @@
+//! Integration: the AOT artifact (Pallas kernel + JAX top-k, lowered to HLO
+//! text) loaded through PJRT must agree with the pure-Rust BM25 scorer —
+//! the cross-layer correctness contract of the whole stack.
+//!
+//! Requires `make artifacts`; every test skips gracefully (with a loud
+//! message) when the artifact is absent so `cargo test` works standalone.
+
+use hurryup::runtime::{artifact, XlaScorer};
+use hurryup::search::engine::BlockScorer;
+use hurryup::search::{Bm25Params, RustScorer, ScoreBlock, DOC_BLOCK, MAX_TERMS};
+use hurryup::util::Rng;
+
+fn artifact_or_skip() -> Option<XlaScorer> {
+    if artifact::require_scorer().is_err() {
+        eprintln!("SKIP: artifacts/scorer.hlo.txt missing (run `make artifacts`)");
+        return None;
+    }
+    Some(XlaScorer::load().expect("artifact exists but failed to load"))
+}
+
+fn random_block(rng: &mut Rng, docs: usize) -> (ScoreBlock, Vec<f32>, f32) {
+    let mut block = ScoreBlock {
+        tf: vec![0.0; DOC_BLOCK * MAX_TERMS],
+        dl: (0..DOC_BLOCK)
+            .map(|_| rng.f64_range(10.0, 3000.0) as f32)
+            .collect(),
+        docs: (0..docs as u32).collect(),
+        max_tf: vec![0.0; MAX_TERMS],
+        min_dl: 10.0,
+    };
+    let terms = rng.range(1, MAX_TERMS);
+    let mut idf = vec![0.0f32; MAX_TERMS];
+    for slot in idf.iter_mut().take(terms) {
+        *slot = rng.f64_range(0.1, 9.0) as f32;
+    }
+    for row in 0..docs {
+        for slot in 0..terms {
+            if rng.chance(0.4) {
+                block.tf[row * MAX_TERMS + slot] = rng.below(10) as f32;
+            }
+        }
+    }
+    let avgdl = rng.f64_range(50.0, 1000.0) as f32;
+    (block, idf, avgdl)
+}
+
+#[test]
+fn xla_scores_match_rust_reference() {
+    let Some(mut xla) = artifact_or_skip() else { return };
+    let mut rng = Rng::new(42);
+    for round in 0..16 {
+        let docs = if round % 3 == 0 { DOC_BLOCK } else { rng.range(1, DOC_BLOCK) };
+        let (block, idf, avgdl) = random_block(&mut rng, docs);
+        let (scores, _vals, _idx) = xla
+            .execute_raw(&block.tf, &block.dl, &idf, avgdl)
+            .expect("xla execution failed");
+        // Compare full score vectors against the Rust formula.
+        let p = Bm25Params::default();
+        for row in 0..DOC_BLOCK {
+            let tfs = &block.tf[row * MAX_TERMS..(row + 1) * MAX_TERMS];
+            let want = hurryup::search::bm25_score(tfs, &idf, block.dl[row], avgdl, p);
+            let got = scores[row];
+            assert!(
+                (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                "round {round} row {row}: xla {got} vs rust {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_topk_matches_rust_topk() {
+    let Some(mut xla) = artifact_or_skip() else { return };
+    let mut rust = RustScorer::new(Bm25Params::default());
+    let mut rng = Rng::new(43);
+    for round in 0..8 {
+        let (block, idf, avgdl) = random_block(&mut rng, DOC_BLOCK);
+        let a = xla.score_block(&block, &idf, avgdl).unwrap();
+        let b = rust.score_block(&block, &idf, avgdl).unwrap();
+        assert_eq!(a.entries.len(), b.entries.len(), "round {round}");
+        for (i, ((ra, sa), (rb, sb))) in a.entries.iter().zip(&b.entries).enumerate() {
+            // Rows must agree except where adjacent scores tie within fp noise.
+            assert!(
+                (sa - sb).abs() <= 1e-3 * sb.abs().max(1.0),
+                "round {round} rank {i}: {sa} vs {sb}"
+            );
+            if (sa - sb).abs() < 1e-6 && ra != rb {
+                // tie-order difference: both scores must genuinely tie
+                continue;
+            }
+            assert_eq!(ra, rb, "round {round} rank {i}");
+        }
+    }
+}
+
+#[test]
+fn engine_results_identical_across_backends() {
+    let Some(mut xla) = artifact_or_skip() else { return };
+    use hurryup::config::CorpusConfig;
+    use hurryup::search::{Index, Query, SearchEngine};
+    use std::sync::Arc;
+
+    let index = Arc::new(Index::build(&CorpusConfig::small().build()));
+    let engine = SearchEngine::new(index.clone(), 10);
+    let mut rust = RustScorer::new(Bm25Params::default());
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed);
+        let k = rng.range(1, 8);
+        let terms: Vec<String> = (0..k)
+            .map(|_| index.term(rng.below(500) as u32).to_string())
+            .collect();
+        let q = Query::from_terms(terms);
+        let a = engine.search_with(&q, &mut xla).unwrap();
+        let b = engine.search_with(&q, &mut rust).unwrap();
+        assert_eq!(a.stats, b.stats, "seed {seed}");
+        assert_eq!(a.hits.len(), b.hits.len(), "seed {seed}");
+        for (ha, hb) in a.hits.iter().zip(&b.hits) {
+            assert!(
+                (ha.score - hb.score).abs() <= 1e-3 * hb.score.max(1.0),
+                "seed {seed}: {ha:?} vs {hb:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn artifact_metadata_matches_engine_geometry() {
+    if artifact::require_scorer().is_err() {
+        eprintln!("SKIP: artifact missing");
+        return;
+    }
+    let meta = std::fs::read_to_string(artifact::scorer_meta_path())
+        .expect("scorer.meta.json missing next to the artifact");
+    artifact::validate_meta(&meta).expect("geometry drift between Python and Rust");
+}
+
+#[test]
+fn padded_rows_never_reach_results() {
+    let Some(mut xla) = artifact_or_skip() else { return };
+    let mut rng = Rng::new(44);
+    // Only 3 real docs; 253 padded rows (tf=0) must not appear in top-k.
+    let (mut block, idf, avgdl) = random_block(&mut rng, 3);
+    for row in 3..DOC_BLOCK {
+        for slot in 0..MAX_TERMS {
+            block.tf[row * MAX_TERMS + slot] = 0.0;
+        }
+    }
+    let out = xla.score_block(&block, &idf, avgdl).unwrap();
+    for (row, _score) in &out.entries {
+        assert!(*row < 3, "padded row {row} leaked into top-k");
+    }
+}
