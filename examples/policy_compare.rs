@@ -1,8 +1,10 @@
-//! Compare all six mapping policies on the same workload across loads —
-//! the ablation the paper motivates (how much of Hurry-up's win is
-//! migration vs placement, and how close it gets to a keyword oracle).
+//! Compare all mapping policies on the same workload across loads — the
+//! ablation the paper motivates (how much of Hurry-up's win is migration vs
+//! placement, and how close it gets to a keyword oracle) — under any queue
+//! discipline of the `sched` layer.
 //!
 //!     cargo run --release --example policy_compare [-- --requests 8000]
+//!         [--discipline centralized|per_core|work_steal|all]
 
 use hurryup::cli::Args;
 use hurryup::experiments::compare_policies;
@@ -12,6 +14,12 @@ use hurryup::util::fmt::Table;
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let requests = args.get_usize("requests", 8_000)?;
+    let disciplines: Vec<DisciplineKind> = match args.get("discipline") {
+        None => vec![DisciplineKind::Centralized],
+        Some("all") => DisciplineKind::all().to_vec(),
+        Some(s) => vec![DisciplineKind::parse(s)
+            .ok_or_else(|| Error::invalid(format!("unknown discipline `{s}`")))?],
+    };
 
     let policies = [
         PolicyKind::HurryUp {
@@ -26,34 +34,42 @@ fn main() -> Result<()> {
         PolicyKind::AllLittle,
     ];
 
-    for qps in [10.0, 20.0, 30.0] {
-        let base = SimConfig::paper_default(PolicyKind::LinuxRandom)
-            .with_qps(qps)
-            .with_requests(requests)
-            .with_seed(31);
-        let outs = compare_policies(&base, &policies);
-        let mut t = Table::new(
-            format!("policies @ {qps:.0} QPS ({requests} requests, shared trace)"),
-            &["policy", "p50_ms", "p90_ms", "p99_ms", "J/req", "migr", "big%"],
-        );
-        for out in &outs {
-            t.row(&[
-                out.policy.clone(),
-                format!("{:.0}", out.latency.percentile(0.50)),
-                format!("{:.0}", out.p90_ms()),
-                format!("{:.0}", out.latency.percentile(0.99)),
-                format!("{:.3}", out.energy_per_request_j()),
-                out.migrations.to_string(),
-                format!("{:.0}", out.big_share() * 100.0),
-            ]);
+    for &discipline in &disciplines {
+        for qps in [10.0, 20.0, 30.0] {
+            let base = SimConfig::paper_default(PolicyKind::LinuxRandom)
+                .with_qps(qps)
+                .with_requests(requests)
+                .with_seed(31)
+                .with_discipline(discipline);
+            let outs = compare_policies(&base, &policies);
+            let mut t = Table::new(
+                format!(
+                    "policies @ {qps:.0} QPS, {} queue ({requests} requests, shared trace)",
+                    discipline.label()
+                ),
+                &["policy", "p50_ms", "p90_ms", "p99_ms", "J/req", "migr", "big%"],
+            );
+            for out in &outs {
+                t.row(&[
+                    out.policy.clone(),
+                    format!("{:.0}", out.latency.percentile(0.50)),
+                    format!("{:.0}", out.p90_ms()),
+                    format!("{:.0}", out.latency.percentile(0.99)),
+                    format!("{:.3}", out.energy_per_request_j()),
+                    out.migrations.to_string(),
+                    format!("{:.0}", out.big_share() * 100.0),
+                ]);
+            }
+            t.print();
+            println!();
         }
-        t.print();
-        println!();
     }
     println!("note: oracle reads ground-truth keyword counts (infeasible in production —");
     println!("      the paper's §II); hurry-up approaches it using elapsed time alone.");
     println!("      app-level is the Octopus-Man-style whole-pool controller the paper");
     println!("      contrasts against: it can grow capacity but cannot rescue an");
     println!("      individual straggler — the request-level granularity gap.");
+    println!("      --discipline all additionally sweeps the sched-layer queue");
+    println!("      disciplines (centralized cFCFS / per-core dFCFS / work stealing).");
     Ok(())
 }

@@ -5,6 +5,7 @@
 //! Benchmarked hot paths (EXPERIMENTS.md §Perf tracks these):
 //!   sim_event_loop     DES throughput (requests/s) at the 30 QPS point
 //!   mapper_tick        Algorithm 1 decision cost with a loaded table
+//!   queue_discipline   sched-layer enqueue+dispatch cost per discipline
 //!   stats_codec        IPC record encode+parse
 //!   bm25_block_rust    one 256×24 block scored in Rust
 //!   xla_block          one block through the PJRT artifact (if built)
@@ -17,9 +18,10 @@ use std::time::Instant;
 
 use hurryup::config::{CorpusConfig, KeywordMix, SimConfig};
 use hurryup::ipc::{RequestTag, StatsRecord};
-use hurryup::mapper::{HurryUp, HurryUpParams, Policy, PolicyKind};
+use hurryup::mapper::{DispatchInfo, HurryUp, HurryUpParams, Policy, PolicyKind};
 use hurryup::metrics::LatencyHistogram;
-use hurryup::platform::{AffinityTable, ThreadId, Topology};
+use hurryup::platform::{AffinityTable, CoreId, ThreadId, Topology};
+use hurryup::sched::{DisciplineKind, Dispatcher};
 use hurryup::search::engine::BlockScorer;
 use hurryup::search::{Bm25Params, Index, Query, RustScorer, ScoreBlock, SearchEngine, TopK};
 use hurryup::sim::Simulation;
@@ -108,6 +110,42 @@ fn main() {
             black_box(policy.tick(black_box(5000.0), &aff));
         });
         report("mapper_tick", "ticks", 1.0, iters, secs);
+    }
+
+    // --- queue disciplines: sched-layer enqueue + dispatch cost ---
+    // Baseline for future scaling PRs: a 64-request burst admitted and
+    // fully drained through each discipline (policy = linux random).
+    {
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo.clone());
+        let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
+        for kind in DisciplineKind::all() {
+            let mut policy = PolicyKind::LinuxRandom.build(&topo);
+            let mut rng = Rng::new(17);
+            let mut dispatcher: Dispatcher<usize> = Dispatcher::new(kind.build(6));
+            let (iters, secs) = measure(300, || {
+                for i in 0..64usize {
+                    dispatcher.enqueue(
+                        i,
+                        DispatchInfo { keywords: 3 },
+                        policy.as_mut(),
+                        &aff,
+                        &mut rng,
+                    );
+                }
+                while dispatcher
+                    .next(&idle, policy.as_mut(), &aff, &mut rng)
+                    .is_some()
+                {}
+            });
+            report(
+                &format!("sched_{}", kind.label()),
+                "requests",
+                64.0,
+                iters,
+                secs,
+            );
+        }
     }
 
     // --- stats codec ---

@@ -7,6 +7,7 @@ use super::toml::{parse, Document, Value};
 use super::{KeywordMix, SimConfig};
 use crate::error::{Error, Result};
 use crate::mapper::PolicyKind;
+use crate::sched::DisciplineKind;
 
 /// Read and parse a config file into a validated `SimConfig`.
 pub fn load_sim_config(path: impl AsRef<Path>) -> Result<SimConfig> {
@@ -24,6 +25,7 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
         const KNOWN: &[&str] = &[
             "big_cores",
             "little_cores",
+            "discipline",
             "qps",
             "num_requests",
             "warmup_requests",
@@ -65,6 +67,10 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
     }
     if let Some(v) = get_i64(&doc, "seed")? {
         cfg.seed = v as u64;
+    }
+    if let Some(v) = doc.get("discipline").and_then(Value::as_str) {
+        cfg.discipline = DisciplineKind::parse(v)
+            .ok_or_else(|| Error::config(format!("unknown discipline `{v}`")))?;
     }
     if let Some(v) = get_f64(&doc, "service.base_units")? {
         cfg.service.base_units = v;
@@ -213,6 +219,20 @@ mod tests {
     #[test]
     fn validation_still_applies() {
         assert!(sim_config_from_str("qps = -3.0").is_err());
+    }
+
+    #[test]
+    fn discipline_parsed_and_validated() {
+        let cfg = sim_config_from_str("discipline = \"work_steal\"").unwrap();
+        assert_eq!(cfg.discipline, DisciplineKind::WorkSteal);
+        let cfg = sim_config_from_str("discipline = \"dfcfs\"").unwrap();
+        assert_eq!(cfg.discipline, DisciplineKind::PerCore);
+        assert_eq!(
+            sim_config_from_str("qps = 5.0").unwrap().discipline,
+            DisciplineKind::Centralized
+        );
+        let e = sim_config_from_str("discipline = \"lifo\"").unwrap_err();
+        assert!(e.to_string().contains("lifo"), "{e}");
     }
 
     #[test]

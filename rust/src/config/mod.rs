@@ -8,6 +8,7 @@ pub use file::load_sim_config;
 
 use crate::mapper::PolicyKind;
 use crate::platform::{CoreKind, PowerModel, Topology};
+use crate::sched::DisciplineKind;
 
 pub use crate::mapper::HurryUpParams;
 
@@ -145,6 +146,9 @@ pub struct SimConfig {
     pub service: ServiceModel,
     /// Mapping policy under test.
     pub policy: PolicyKind,
+    /// Queue discipline of the scheduling layer (default: the paper's
+    /// single centralized FIFO).
+    pub discipline: DisciplineKind,
     /// Offered load, queries per second.
     pub qps: f64,
     /// Number of requests to inject.
@@ -175,6 +179,7 @@ impl SimConfig {
             power: PowerModel::juno_r1(),
             service: ServiceModel::paper_calibrated(),
             policy,
+            discipline: DisciplineKind::Centralized,
             qps: 30.0,
             num_requests: 100_000,
             warmup_requests: 200,
@@ -224,6 +229,12 @@ impl SimConfig {
     /// Builder: set policy.
     pub fn with_policy(mut self, policy: PolicyKind) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// Builder: set the queue discipline.
+    pub fn with_discipline(mut self, discipline: DisciplineKind) -> Self {
+        self.discipline = discipline;
         self
     }
 
@@ -299,12 +310,20 @@ mod tests {
             .with_requests(10)
             .with_seed(7)
             .with_topology(1, 0)
-            .with_mix(KeywordMix::Fixed(3));
+            .with_mix(KeywordMix::Fixed(3))
+            .with_discipline(DisciplineKind::WorkSteal);
         assert_eq!(c.qps, 20.0);
         assert_eq!(c.num_requests, 10);
         assert_eq!(c.seed, 7);
         assert_eq!(c.topology().label(), "1B");
         assert_eq!(c.keyword_mix, KeywordMix::Fixed(3));
+        assert_eq!(c.discipline, DisciplineKind::WorkSteal);
+    }
+
+    #[test]
+    fn paper_default_uses_centralized_queue() {
+        let c = SimConfig::paper_default(PolicyKind::LinuxRandom);
+        assert_eq!(c.discipline, DisciplineKind::Centralized);
     }
 
     #[test]

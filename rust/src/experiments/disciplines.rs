@@ -1,0 +1,144 @@
+//! Queue-discipline ablation: disciplines × policies at the paper's fixed
+//! 30 QPS operating point, over one shared workload trace (paired runs, so
+//! differences are scheduling-caused, never workload noise).
+//!
+//! What to look for:
+//!
+//! * **centralized** is the paper's setup — the baseline every other cell
+//!   is read against.
+//! * **per_core** (dFCFS) removes the global queue: dispatch is contention
+//!   free, but an unlucky queue can back up behind one heavy request, so
+//!   p99 inflates — the classic cFCFS/dFCFS tail gap.
+//! * **work_steal** recovers most of the centralized tail while keeping
+//!   per-core queues: idle cores drain the most backlogged queue oldest
+//!   first.
+//! * Hurry-up's migration win persists under every discipline (it acts on
+//!   *running* threads, orthogonally to how waiting requests are queued).
+
+use super::runner::Scale;
+use crate::config::SimConfig;
+use crate::mapper::PolicyKind;
+use crate::sched::DisciplineKind;
+use crate::sim::Simulation;
+use crate::util::fmt::Table;
+
+/// The policy axis of the grid.
+fn policies() -> [PolicyKind; 3] {
+    [
+        PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        },
+        PolicyKind::LinuxRandom,
+        PolicyKind::RoundRobin,
+    ]
+}
+
+/// Disciplines × policies grid at a fixed load, shared trace.
+pub fn grid(requests: usize, qps: f64) -> Table {
+    let base = SimConfig::paper_default(PolicyKind::LinuxRandom)
+        .with_qps(qps)
+        .with_requests(requests)
+        .with_seed(0xD15C);
+    let workload = super::runner::shared_workload(&base);
+    let mut t = Table::new(
+        format!("Disciplines × policies @ {qps:.0} QPS ({requests} requests, shared trace)"),
+        &[
+            "discipline",
+            "policy",
+            "p50_ms",
+            "p90_ms",
+            "p99_ms",
+            "mean_queue_ms",
+            "migr",
+        ],
+    );
+    for disc in DisciplineKind::all() {
+        for policy in policies() {
+            let cfg = base
+                .clone()
+                .with_policy(policy)
+                .with_discipline(disc);
+            let out = Simulation::new(cfg).run_workload(&workload);
+            let mean_queue: f64 = out.measured().map(|r| r.queue_ms()).sum::<f64>()
+                / out.measured().count().max(1) as f64;
+            t.row(&[
+                disc.label().into(),
+                policy.label(),
+                format!("{:.0}", out.latency.percentile(0.50)),
+                format!("{:.0}", out.p90_ms()),
+                format!("{:.0}", out.latency.percentile(0.99)),
+                format!("{mean_queue:.0}"),
+                out.migrations.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Regenerate the discipline ablation.
+pub fn run(scale: Scale) -> Vec<Table> {
+    vec![grid(scale.cell_requests(6), 30.0)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::runner;
+
+    #[test]
+    fn grid_renders_every_cell() {
+        let tables = run(Scale::tiny());
+        assert_eq!(tables.len(), 1);
+        // 3 disciplines × 3 policies.
+        assert_eq!(tables[0].len(), 9);
+    }
+
+    #[test]
+    fn centralized_cell_matches_default_configuration() {
+        // The grid's centralized/linux cell must be the exact run a
+        // default-configured simulation produces (the pre-sched behaviour).
+        let base = SimConfig::paper_default(PolicyKind::LinuxRandom)
+            .with_qps(30.0)
+            .with_requests(2_000)
+            .with_seed(0xD15C);
+        let workload = runner::shared_workload(&base);
+        let explicit = Simulation::new(
+            base.clone().with_discipline(DisciplineKind::Centralized),
+        )
+        .run_workload(&workload);
+        let default = Simulation::new(base).run_workload(&workload);
+        assert_eq!(explicit.p90_ms(), default.p90_ms());
+        assert_eq!(explicit.duration_ms, default.duration_ms);
+        assert_eq!(explicit.per_request.len(), default.per_request.len());
+        for (a, b) in explicit.per_request.iter().zip(&default.per_request) {
+            assert_eq!(a.completed_ms, b.completed_ms);
+            assert_eq!(a.final_kind, b.final_kind);
+        }
+    }
+
+    #[test]
+    fn work_steal_tail_no_worse_than_per_core() {
+        // Stealing exists to rescue backlogged queues: at a loaded
+        // operating point its p90 must not exceed plain per-core queues'.
+        let base = SimConfig::paper_default(PolicyKind::LinuxRandom)
+            .with_qps(30.0)
+            .with_requests(6_000)
+            .with_seed(0xD15D);
+        let workload = runner::shared_workload(&base);
+        let steal = Simulation::new(
+            base.clone().with_discipline(DisciplineKind::WorkSteal),
+        )
+        .run_workload(&workload);
+        let percore = Simulation::new(
+            base.clone().with_discipline(DisciplineKind::PerCore),
+        )
+        .run_workload(&workload);
+        assert!(
+            steal.p90_ms() <= percore.p90_ms() * 1.02,
+            "steal p90 {} vs per-core p90 {}",
+            steal.p90_ms(),
+            percore.p90_ms()
+        );
+    }
+}

@@ -26,8 +26,7 @@ pub fn samples(scale: Scale) -> (Vec<f64>, Vec<f64>) {
         .with_requests(scale.requests)
         .with_seed(0xF166);
     let outs = compare_policies(&base, &paper_pair());
-    let warm = base.warmup_requests;
-    (outs[0].latency_samples(warm), outs[1].latency_samples(warm))
+    (outs[0].latency_samples(), outs[1].latency_samples())
 }
 
 /// Regenerate Fig 6.

@@ -12,11 +12,13 @@
 //! | `fig9`      | threshold × load sensitivity (sampling = 50 ms)   |
 //! | `power_table` | §IV-A power-efficiency facts                    |
 //! | `ablations` | extra design-choice studies (DESIGN.md §6)        |
+//! | `disciplines` | queue-discipline × policy grid (`sched` layer)  |
 //!
 //! Scale: experiments default to a fast setting; set `HURRYUP_FULL=1` for
 //! the paper's 1×10⁵-request scale.
 
 pub mod ablations;
+pub mod disciplines;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
@@ -46,6 +48,7 @@ pub fn registry() -> Vec<(&'static str, ExperimentFn)> {
         ("fig9", fig9::run as ExperimentFn),
         ("power_table", power_table::run as ExperimentFn),
         ("ablations", ablations::run as ExperimentFn),
+        ("disciplines", disciplines::run as ExperimentFn),
     ]
 }
 

@@ -18,9 +18,12 @@
 //!   the kernel and reduces to a block-local top-k, AOT-lowered once to HLO
 //!   text (`artifacts/scorer.hlo.txt`).
 //! * **Layer 3** — this crate: the search engine, the big/little platform
-//!   model, the Hurry-up mapper, the discrete-event simulator, the live
-//!   thread-pool server (which executes the AOT artifact on the request path
-//!   via PJRT), the load generator, metrics and the experiment harness.
+//!   model, the Hurry-up mapper, the shared scheduling layer (`sched`:
+//!   pluggable queue disciplines — centralized FCFS, per-core dFCFS, work
+//!   stealing — driven identically by both execution modes), the
+//!   discrete-event simulator, the live thread-pool server (which executes
+//!   the AOT artifact on the request path via PJRT), the load generator,
+//!   metrics and the experiment harness.
 //!
 //! Python runs only at `make artifacts`; the serving binary is pure Rust.
 //!
@@ -38,6 +41,7 @@ pub mod mapper;
 pub mod metrics;
 pub mod platform;
 pub mod runtime;
+pub mod sched;
 pub mod search;
 pub mod sim;
 pub mod util;
@@ -49,6 +53,7 @@ pub mod prelude {
     pub use crate::loadgen::{ArrivalProcess, QueryGen, Workload};
     pub use crate::mapper::{Migration, PolicyKind};
     pub use crate::metrics::{LatencyHistogram, Summary};
+    pub use crate::sched::DisciplineKind;
     pub use crate::platform::{CoreId, CoreKind, PowerModel, ThreadId, Topology};
     pub use crate::search::{Corpus, Index, Query, SearchEngine};
     pub use crate::sim::{SimOutput, Simulation};

@@ -7,6 +7,9 @@
 //!
 //! * one worker OS-thread per simulated core, each owning its own compiled
 //!   PJRT executable (compiled once at startup, never per request);
+//! * admission/queueing/dispatch through the shared scheduling layer
+//!   ([`crate::sched::SharedDispatcher`]) — the same discipline code the
+//!   simulator drives, selected by `LiveConfig::discipline`;
 //! * core heterogeneity emulated by per-block scoring repetitions: a worker
 //!   "on" a little core performs `1/speed(little) ≈ 3.3×` the block passes
 //!   of a big core, re-reading its current speed *between blocks* so a

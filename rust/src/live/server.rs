@@ -5,15 +5,16 @@ use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::worker::{DispatchQueue, EmulatedScorer, LiveRequest, SpeedCell};
+use super::worker::{EmulatedScorer, LiveRequest, SpeedCell};
 use crate::config::KeywordMix;
 use crate::error::Result;
 use crate::ipc::{stats_channel, RequestTag, StatsRecord, StatsWriter};
 use crate::loadgen::{ArrivalProcess, QueryGen, Workload};
-use crate::mapper::{HurryUp, HurryUpParams, Policy};
+use crate::mapper::{DispatchInfo, HurryUp, HurryUpParams, Policy, PolicyKind, QueueView};
 use crate::metrics::LatencyHistogram;
 use crate::platform::{AffinityTable, CoreKind, EnergyMeters, PowerModel, ThreadId, Topology};
 use crate::runtime::XlaScorer;
+use crate::sched::{DisciplineKind, SharedDispatcher};
 use crate::search::engine::BlockScorer;
 use crate::search::{Bm25Params, Index, Query, RustScorer, SearchEngine};
 use crate::util::Rng;
@@ -27,6 +28,9 @@ pub struct LiveConfig {
     pub little_cores: usize,
     /// Hurry-up params; `None` = static Linux-style mapping (no mapper).
     pub hurryup: Option<HurryUpParams>,
+    /// Queue discipline of the scheduling layer (default: the paper's
+    /// single centralized FIFO; same selector as `SimConfig.discipline`).
+    pub discipline: DisciplineKind,
     /// Offered load, QPS.
     pub qps: f64,
     /// Requests to serve.
@@ -51,6 +55,7 @@ impl Default for LiveConfig {
             big_cores: 2,
             little_cores: 4,
             hurryup: Some(HurryUpParams::default()),
+            discipline: DisciplineKind::Centralized,
             qps: 30.0,
             num_requests: 300,
             seed: 7,
@@ -107,6 +112,8 @@ pub struct LiveReport {
     pub migrations: usize,
     /// Scorer backend used ("xla" or "rust").
     pub backend: &'static str,
+    /// Queue-discipline name (`sched` layer).
+    pub discipline: &'static str,
     /// Total scoring passes across workers.
     pub total_passes: u64,
 }
@@ -124,7 +131,7 @@ impl LiveReport {
 }
 
 struct SharedState {
-    queue: DispatchQueue,
+    queue: SharedDispatcher<LiveRequest>,
     aff: Mutex<AffinityTable>,
     speeds: Vec<SpeedCell>,
     migrations: std::sync::atomic::AtomicUsize,
@@ -148,12 +155,29 @@ impl LiveServer {
         let cfg = &self.cfg;
         let topology = Topology::new(cfg.big_cores, cfg.little_cores);
         let n_threads = topology.num_cores();
+        let discipline_label = cfg.discipline.label();
         let aff = AffinityTable::round_robin(topology.clone());
         let speeds: Vec<SpeedCell> = (0..n_threads)
             .map(|t| SpeedCell::new(aff.kind_of(ThreadId(t)).speed()))
             .collect();
+        // Placement policy for the scheduling layer — the same dispatch
+        // code the simulator runs. (The mapper thread owns its own ticking
+        // HurryUp instance; `choose_core` is stateless for every
+        // live-supported policy, so split instances dispatch identically.)
+        let placement: Box<dyn Policy> = match cfg.hurryup {
+            Some(p) => PolicyKind::HurryUp {
+                sampling_ms: p.sampling_ms,
+                threshold_ms: p.threshold_ms,
+            }
+            .build(&topology),
+            None => PolicyKind::LinuxRandom.build(&topology),
+        };
         let shared = Arc::new(SharedState {
-            queue: DispatchQueue::new(),
+            queue: SharedDispatcher::new(
+                cfg.discipline.build(n_threads),
+                placement,
+                cfg.seed ^ 0x5EED_D15C,
+            ),
             aff: Mutex::new(aff),
             speeds,
             migrations: std::sync::atomic::AtomicUsize::new(0),
@@ -189,6 +213,7 @@ impl LiveServer {
                 )))
                 .ok();
                 let mut last_tick = 0.0f64;
+                let mut depths: Vec<usize> = Vec::new();
                 loop {
                     match rx.recv() {
                         Ok(Some(rec)) => policy.observe(&rec),
@@ -198,6 +223,13 @@ impl LiveServer {
                     let now = now_ms();
                     if now - last_tick >= params.sampling_ms {
                         last_tick = now;
+                        // Queue visibility at tick time — the same
+                        // `observe_queues` contract the simulator honours.
+                        let total = shared.queue.queue_view_into(&mut depths);
+                        policy.observe_queues(QueueView {
+                            per_core: &depths,
+                            total,
+                        });
                         let mut aff = shared.aff.lock().expect("aff poisoned");
                         let migs = policy.tick(now, &aff);
                         for m in &migs {
@@ -246,7 +278,7 @@ impl LiveServer {
                 let engine = SearchEngine::new(index, top_k);
                 let mut rid_seq = (t as u64) << 40;
                 let mut passes_total = 0u64;
-                while let Some(req) = shared.queue.pop() {
+                while let Some(req) = shared.queue.pop(ThreadId(t), &shared.aff) {
                     let started = now_ms();
                     let first_kind = {
                         let aff = shared.aff.lock().expect("aff poisoned");
@@ -307,11 +339,16 @@ impl LiveServer {
                 .iter()
                 .map(|&id| self.index.term(id).to_string())
                 .collect();
-            shared.queue.push(LiveRequest {
-                widx: 0,
-                query: Query::from_terms(terms),
-                arrived_ms: now_ms(),
-            });
+            let keywords = req.keywords;
+            shared.queue.push(
+                LiveRequest {
+                    widx: 0,
+                    query: Query::from_terms(terms),
+                    arrived_ms: now_ms(),
+                },
+                DispatchInfo { keywords },
+                &shared.aff,
+            );
         }
         shared.queue.close();
 
@@ -341,6 +378,7 @@ impl LiveServer {
             duration_ms,
             migrations,
             backend: if cfg.use_xla { "xla" } else { "rust" },
+            discipline: discipline_label,
             total_passes,
         })
     }

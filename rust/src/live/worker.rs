@@ -1,9 +1,9 @@
-//! Worker-side pieces: the speed-emulating scorer wrapper and the shared
-//! dispatch queue.
+//! Worker-side pieces: the speed-emulating scorer wrapper and the queued
+//! request payload. (Queueing/dispatch itself lives in the shared
+//! [`crate::sched`] layer — see [`crate::sched::SharedDispatcher`] — so the
+//! live server and the simulator exercise identical discipline code.)
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::error::Result;
 use crate::search::engine::{BlockScorer, BlockTopK, ScoreBlock};
@@ -18,59 +18,6 @@ pub struct LiveRequest {
     pub query: Query,
     /// Arrival timestamp, ms since server epoch.
     pub arrived_ms: f64,
-}
-
-/// Shared FIFO dispatch queue with shutdown.
-#[derive(Default)]
-pub struct DispatchQueue {
-    inner: Mutex<QueueInner>,
-    cv: Condvar,
-}
-
-#[derive(Default)]
-struct QueueInner {
-    queue: VecDeque<LiveRequest>,
-    closed: bool,
-}
-
-impl DispatchQueue {
-    /// New empty queue.
-    pub fn new() -> DispatchQueue {
-        DispatchQueue::default()
-    }
-
-    /// Enqueue a request and wake one idle worker.
-    pub fn push(&self, req: LiveRequest) {
-        let mut g = self.inner.lock().expect("queue poisoned");
-        g.queue.push_back(req);
-        drop(g);
-        self.cv.notify_one();
-    }
-
-    /// Blocking pop; `None` once closed and drained.
-    pub fn pop(&self) -> Option<LiveRequest> {
-        let mut g = self.inner.lock().expect("queue poisoned");
-        loop {
-            if let Some(req) = g.queue.pop_front() {
-                return Some(req);
-            }
-            if g.closed {
-                return None;
-            }
-            g = self.cv.wait(g).expect("queue poisoned");
-        }
-    }
-
-    /// Close the queue: workers drain and exit.
-    pub fn close(&self) {
-        self.inner.lock().expect("queue poisoned").closed = true;
-        self.cv.notify_all();
-    }
-
-    /// Current depth (diagnostics).
-    pub fn depth(&self) -> usize {
-        self.inner.lock().expect("queue poisoned").queue.len()
-    }
 }
 
 /// Lock-free per-thread speed cell (f64 bits in an AtomicU64), updated by
@@ -162,9 +109,6 @@ impl BlockScorer for EmulatedScorer<'_> {
     }
 }
 
-/// Shutdown flag shared across threads.
-pub type Shutdown = AtomicBool;
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,34 +129,6 @@ mod tests {
         let mut idf = vec![0.0; crate::search::MAX_TERMS];
         idf[0] = 1.0;
         (b, idf)
-    }
-
-    #[test]
-    fn queue_fifo_and_close() {
-        let q = DispatchQueue::new();
-        for i in 0..3 {
-            q.push(LiveRequest {
-                widx: i,
-                query: Query::from_terms(vec![]),
-                arrived_ms: i as f64,
-            });
-        }
-        assert_eq!(q.depth(), 3);
-        assert_eq!(q.pop().unwrap().widx, 0);
-        assert_eq!(q.pop().unwrap().widx, 1);
-        q.close();
-        assert_eq!(q.pop().unwrap().widx, 2); // drain after close
-        assert!(q.pop().is_none());
-    }
-
-    #[test]
-    fn queue_unblocks_waiters_on_close() {
-        let q = std::sync::Arc::new(DispatchQueue::new());
-        let q2 = q.clone();
-        let h = std::thread::spawn(move || q2.pop());
-        std::thread::sleep(std::time::Duration::from_millis(20));
-        q.close();
-        assert!(h.join().unwrap().is_none());
     }
 
     #[test]

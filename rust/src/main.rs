@@ -17,6 +17,7 @@ use hurryup::experiments::{self, Scale};
 use hurryup::live::{LiveConfig, LiveServer};
 use hurryup::mapper::{HurryUpParams, PolicyKind};
 use hurryup::prelude::*;
+use hurryup::sched::DisciplineKind;
 use hurryup::search::{self, Bm25Params, RustScorer};
 
 const USAGE: &str = "\
@@ -25,15 +26,17 @@ hurryup — request-level thread mapping for web search on big/little cores
 
 USAGE:
   hurryup sim     [--config f.toml] [--qps N] [--requests N] [--policy P]
-                  [--seed N] [--threshold-ms N] [--sampling-ms N]
-  hurryup serve   [--qps N] [--requests N] [--policy P] [--xla] [--docs N]
+                  [--discipline D] [--seed N] [--threshold-ms N] [--sampling-ms N]
+  hurryup serve   [--qps N] [--requests N] [--policy P] [--discipline D]
+                  [--xla] [--docs N]
   hurryup index   [--docs N] [--vocab N]
   hurryup query   --q \"search terms\" [--xla] [--docs N]
-  hurryup figures [fig1 fig2 fig3 fig6 fig7 fig8 fig9 power_table ablations]
-                  [--full]
+  hurryup figures [fig1 fig2 fig3 fig6 fig7 fig8 fig9 power_table ablations
+                  disciplines] [--full]
   hurryup check
 
-POLICIES: hurry_up | linux_random | round_robin | all_big | all_little | oracle | app_level
+POLICIES:    hurry_up | linux_random | round_robin | all_big | all_little | oracle | app_level
+DISCIPLINES: centralized (cfcfs) | per_core (dfcfs) | work_steal (steal)
 ";
 
 fn main() {
@@ -69,6 +72,14 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
+fn discipline_from(args: &Args, default: DisciplineKind) -> Result<DisciplineKind> {
+    match args.get("discipline") {
+        None => Ok(default),
+        Some(s) => DisciplineKind::parse(s)
+            .ok_or_else(|| Error::invalid(format!("unknown discipline `{s}`"))),
+    }
+}
+
 fn policy_from(args: &Args) -> Result<PolicyKind> {
     let sampling = args.get_f64("sampling-ms", 25.0)?;
     let threshold = args.get_f64("threshold-ms", 50.0)?;
@@ -100,16 +111,19 @@ fn cmd_sim(args: &Args) -> Result<()> {
     cfg.qps = args.get_f64("qps", cfg.qps)?;
     cfg.num_requests = args.get_usize("requests", cfg.num_requests.min(20_000))?;
     cfg.seed = args.get_usize("seed", cfg.seed as usize)? as u64;
+    cfg.discipline = discipline_from(args, cfg.discipline)?;
     let cfg = cfg.validated()?;
     println!(
-        "sim: {} | {} qps | {} requests | seed {}",
+        "sim: {} | {} qps | {} requests | seed {} | queue {}",
         cfg.topology().label(),
         cfg.qps,
         cfg.num_requests,
-        cfg.seed
+        cfg.seed,
+        cfg.discipline.label(),
     );
     let out = Simulation::new(cfg).run();
     println!("policy     : {}", out.policy);
+    println!("discipline : {}", out.discipline);
     println!("completed  : {}", out.completed);
     println!("throughput : {:.1} qps", out.throughput_qps());
     println!("p50 / p90 / p99 : {:.0} / {:.0} / {:.0} ms",
@@ -147,14 +161,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         num_requests: args.get_usize("requests", 300)?,
         use_xla: args.has("xla"),
         hurryup,
+        discipline: discipline_from(args, DisciplineKind::Centralized)?,
         ..LiveConfig::default()
     };
     println!(
-        "serve: 2B4L | {} qps | {} requests | backend={} | mapper={}",
+        "serve: 2B4L | {} qps | {} requests | backend={} | mapper={} | queue {}",
         cfg.qps,
         cfg.num_requests,
         if cfg.use_xla { "xla" } else { "rust" },
         if cfg.hurryup.is_some() { "hurry-up" } else { "static" },
+        cfg.discipline.label(),
     );
     let report = LiveServer::new(cfg, index).run()?;
     println!("served     : {}", report.per_request.len());

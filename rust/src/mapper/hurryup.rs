@@ -23,7 +23,7 @@
 
 use std::collections::HashMap;
 
-use super::{random_idle, DispatchInfo, Migration, Policy};
+use super::{random_idle, DispatchInfo, Migration, Policy, QueueView};
 use crate::ipc::{RequestTag, StatsRecord};
 use crate::platform::{AffinityTable, CoreId, CoreKind, ThreadId, Topology};
 use crate::util::Rng;
@@ -59,6 +59,11 @@ pub struct HurryUp {
     guarded: bool,
     /// Total migrations decided (reporting).
     migrations: usize,
+    /// Latest per-core backlog snapshot from the scheduling layer
+    /// (`Policy::observe_queues`). The paper's algorithm ignores backlog;
+    /// this is recorded for queue-aware extensions and diagnostics without
+    /// changing Algorithm 1's decisions.
+    queue_depths: Vec<usize>,
 }
 
 impl HurryUp {
@@ -71,6 +76,7 @@ impl HurryUp {
             request_table: HashMap::new(),
             guarded: false,
             migrations: 0,
+            queue_depths: Vec::new(),
         }
     }
 
@@ -93,6 +99,12 @@ impl HurryUp {
     /// Total migrations decided so far.
     pub fn migrations(&self) -> usize {
         self.migrations
+    }
+
+    /// Latest per-core backlog reported by the scheduling layer (empty
+    /// until the first `observe_queues`).
+    pub fn queue_depths(&self) -> &[usize] {
+        &self.queue_depths
     }
 
     /// Elapsed time of the request served by `tid`, if tracked.
@@ -129,6 +141,11 @@ impl Policy for HurryUp {
         // pool mapping is round-robin (AffinityTable::round_robin) so the
         // difference under test is migration alone.
         random_idle(idle, rng)
+    }
+
+    fn observe_queues(&mut self, view: QueueView<'_>) {
+        self.queue_depths.clear();
+        self.queue_depths.extend_from_slice(view.per_core);
     }
 
     /// Lines 4–8: read a stats record; a second sighting of a request id
@@ -317,6 +334,23 @@ mod tests {
         paper.observe(&rec(0, 1, 0));
         paper.observe(&rec(3, 3, 900));
         assert_eq!(paper.tick(1000.0, &aff).len(), 1);
+    }
+
+    #[test]
+    fn queue_view_recorded_without_changing_decisions() {
+        let (mut m, aff) = juno_mapper();
+        m.observe(&rec(3, 1, 1000));
+        let before = m.tick(1051.0, &aff);
+        // Feeding a queue snapshot must not alter Algorithm 1's output.
+        let (mut n, _) = juno_mapper();
+        n.observe(&rec(3, 1, 1000));
+        n.observe_queues(QueueView {
+            per_core: &[9, 9, 9, 9, 9, 9],
+            total: 9,
+        });
+        assert_eq!(n.tick(1051.0, &aff), before);
+        assert_eq!(n.queue_depths(), &[9, 9, 9, 9, 9, 9]);
+        assert!(m.queue_depths().is_empty());
     }
 
     #[test]

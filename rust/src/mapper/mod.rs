@@ -53,6 +53,20 @@ pub struct DispatchInfo {
     pub keywords: usize,
 }
 
+/// Snapshot of the scheduler's queue state, handed to policies at dispatch
+/// and tick time by both the simulator and the live server (via the shared
+/// `sched` layer). Unlike `DispatchInfo.keywords`, backlog is observable in
+/// a real deployment, so any policy may legitimately exploit it.
+#[derive(Clone, Copy, Debug)]
+pub struct QueueView<'a> {
+    /// Backlog visible to each core: for per-core disciplines this is that
+    /// core's own queue length; for a centralized discipline every core
+    /// sees the shared queue, so all entries equal `total`.
+    pub per_core: &'a [usize],
+    /// Total requests queued across all queues (no double counting).
+    pub total: usize,
+}
+
 /// A thread-mapping policy.
 pub trait Policy: Send {
     /// Human-readable policy name for reports.
@@ -76,6 +90,14 @@ pub trait Policy: Send {
     /// Ingest one stats-stream record (Algorithm 1 lines 4–8).
     fn observe(&mut self, rec: &StatsRecord) {
         let _ = rec;
+    }
+
+    /// Queue-visibility hook: the scheduling layer calls this with the
+    /// current per-core backlog whenever dispatch is attempted and right
+    /// before every `tick`, so queue-aware policies can fold backlog into
+    /// their migration/placement decisions. Default: ignore.
+    fn observe_queues(&mut self, view: QueueView<'_>) {
+        let _ = view;
     }
 
     /// Sampling window elapsed: decide migrations (Algorithm 1 lines 11–26).

@@ -9,8 +9,18 @@
 //! `PjRtClient` is `Rc`-based (not `Send`), so every live worker thread
 //! builds its own [`XlaScorer`]; compilation happens once per thread at
 //! startup, never on the request path.
+//!
+//! The PJRT path is gated behind the `xla` cargo feature (off by default:
+//! the `xla` crate is unavailable offline). Without it, `scorer_stub.rs`
+//! provides an API-identical [`XlaScorer`] whose `load()` always fails, so
+//! `--xla` runs degrade to a clear error while the pure-Rust scorer path
+//! stays fully functional and dependency-free.
 
 pub mod artifact;
+#[cfg(feature = "xla")]
+pub mod scorer;
+#[cfg(not(feature = "xla"))]
+#[path = "scorer_stub.rs"]
 pub mod scorer;
 
 pub use artifact::{artifacts_dir, scorer_hlo_path, scorer_meta_path};

@@ -1,0 +1,138 @@
+//! Centralized FCFS (cFCFS): one global FIFO queue, the paper's setup.
+//!
+//! The head request is offered to the [`Policy`] together with the full
+//! idle-core set; the policy may hold the head queued (e.g. all-big waits
+//! for a big core), which blocks everything behind it — global FIFO order
+//! is strict. The operation order (queue check → idle check → policy →
+//! pop) and the rng draws replicate the pre-`sched` simulator loop exactly,
+//! so seeded runs reproduce bit-for-bit.
+
+use std::collections::VecDeque;
+
+use super::{QueueDiscipline, QueuedTicket};
+use crate::mapper::Policy;
+use crate::platform::{AffinityTable, CoreId};
+use crate::util::Rng;
+
+/// One global FIFO dispatch queue.
+pub struct Centralized {
+    queue: VecDeque<QueuedTicket>,
+    num_cores: usize,
+}
+
+impl Centralized {
+    /// New empty queue for a core count.
+    pub fn new(num_cores: usize) -> Centralized {
+        Centralized {
+            queue: VecDeque::new(),
+            num_cores,
+        }
+    }
+}
+
+impl QueueDiscipline for Centralized {
+    fn name(&self) -> &'static str {
+        // Matches `DisciplineKind::label()` so sim reports, live reports
+        // and CLI flags all speak one vocabulary.
+        "centralized"
+    }
+
+    fn enqueue(
+        &mut self,
+        item: QueuedTicket,
+        _policy: &mut dyn Policy,
+        _aff: &AffinityTable,
+        _rng: &mut Rng,
+    ) {
+        self.queue.push_back(item);
+    }
+
+    fn next(
+        &mut self,
+        idle: &[CoreId],
+        policy: &mut dyn Policy,
+        aff: &AffinityTable,
+        rng: &mut Rng,
+    ) -> Option<(QueuedTicket, CoreId)> {
+        if self.queue.is_empty() || idle.is_empty() {
+            return None;
+        }
+        let head = *self.queue.front().expect("non-empty");
+        let core = policy.choose_core(idle, aff, head.info, rng)?;
+        self.queue.pop_front();
+        Some((head, core))
+    }
+
+    fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn depth(&self, _core: CoreId) -> usize {
+        self.queue.len()
+    }
+
+    fn depths_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.resize(self.num_cores, self.queue.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapper::{DispatchInfo, PolicyKind};
+    use crate::platform::Topology;
+
+    #[test]
+    fn head_blocks_queue_until_policy_accepts() {
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo.clone());
+        let mut all_big = PolicyKind::AllBig.build(&topo);
+        let mut rng = Rng::new(1);
+        let mut q = Centralized::new(6);
+        for t in 0..3u64 {
+            q.enqueue(
+                QueuedTicket {
+                    ticket: t,
+                    info: DispatchInfo { keywords: 2 },
+                },
+                all_big.as_mut(),
+                &aff,
+                &mut rng,
+            );
+        }
+        // Only little cores idle: all-big holds the head, nothing dispatches.
+        let littles: Vec<CoreId> = (2..6).map(CoreId).collect();
+        assert!(q.next(&littles, all_big.as_mut(), &aff, &mut rng).is_none());
+        assert_eq!(q.queued(), 3);
+        // A big core frees up: strict FIFO order resumes.
+        let (qt, core) = q
+            .next(&[CoreId(0)], all_big.as_mut(), &aff, &mut rng)
+            .expect("big core accepts");
+        assert_eq!(qt.ticket, 0);
+        assert_eq!(core, CoreId(0));
+    }
+
+    #[test]
+    fn depths_report_shared_backlog() {
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo.clone());
+        let mut p = PolicyKind::LinuxRandom.build(&topo);
+        let mut rng = Rng::new(2);
+        let mut q = Centralized::new(6);
+        for t in 0..4u64 {
+            q.enqueue(
+                QueuedTicket {
+                    ticket: t,
+                    info: DispatchInfo { keywords: 1 },
+                },
+                p.as_mut(),
+                &aff,
+                &mut rng,
+            );
+        }
+        assert_eq!(q.depth(CoreId(5)), 4);
+        assert_eq!(q.depths(), vec![4; 6]);
+        assert_eq!(q.queued(), 4);
+    }
+}

@@ -1,0 +1,140 @@
+//! The [`Dispatcher`]: glues a payload store to a [`QueueDiscipline`].
+//!
+//! Disciplines queue opaque [`Ticket`]s; the dispatcher owns the payloads
+//! (workload indices in the simulator, full [`crate::live`] requests in the
+//! live server) and enforces the conservation contract: a ticket handed out
+//! by a discipline must have been enqueued exactly once and never before
+//! dispatched — violations panic immediately rather than corrupting runs.
+
+use std::collections::HashMap;
+
+use super::{QueueDiscipline, QueuedTicket};
+use crate::mapper::{DispatchInfo, Policy};
+use crate::platform::{AffinityTable, CoreId};
+use crate::util::Rng;
+
+/// Opaque payload handle issued at enqueue time (monotonic).
+pub type Ticket = u64;
+
+/// A discipline plus the payloads riding on its tickets.
+pub struct Dispatcher<T> {
+    discipline: Box<dyn QueueDiscipline>,
+    payloads: HashMap<Ticket, T>,
+    next_ticket: Ticket,
+}
+
+impl<T> Dispatcher<T> {
+    /// New dispatcher over a discipline.
+    pub fn new(discipline: Box<dyn QueueDiscipline>) -> Dispatcher<T> {
+        Dispatcher {
+            discipline,
+            payloads: HashMap::new(),
+            next_ticket: 0,
+        }
+    }
+
+    /// Admit one request into the discipline's queues.
+    pub fn enqueue(
+        &mut self,
+        payload: T,
+        info: DispatchInfo,
+        policy: &mut dyn Policy,
+        aff: &AffinityTable,
+        rng: &mut Rng,
+    ) {
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        self.payloads.insert(ticket, payload);
+        self.discipline
+            .enqueue(QueuedTicket { ticket, info }, policy, aff, rng);
+        debug_assert_eq!(
+            self.payloads.len(),
+            self.discipline.queued(),
+            "discipline dropped a ticket at enqueue"
+        );
+    }
+
+    /// Hand at most one queued request to one of the `idle` cores. Callers
+    /// loop — refreshing `idle` as cores become busy — until `None`.
+    pub fn next(
+        &mut self,
+        idle: &[CoreId],
+        policy: &mut dyn Policy,
+        aff: &AffinityTable,
+        rng: &mut Rng,
+    ) -> Option<(T, CoreId)> {
+        let (qt, core) = self.discipline.next(idle, policy, aff, rng)?;
+        let payload = self
+            .payloads
+            .remove(&qt.ticket)
+            .expect("discipline duplicated or invented a ticket");
+        Some((payload, core))
+    }
+
+    /// Requests currently queued.
+    pub fn queued(&self) -> usize {
+        self.payloads.len()
+    }
+
+    /// Backlog visible to one core.
+    pub fn depth(&self, core: CoreId) -> usize {
+        self.discipline.depth(core)
+    }
+
+    /// Per-core backlog snapshot into a reused buffer (for
+    /// [`crate::mapper::QueueView`]; allocation-free on the hot path).
+    pub fn depths_into(&self, out: &mut Vec<usize>) {
+        self.discipline.depths_into(out);
+    }
+
+    /// Allocating convenience form of [`Dispatcher::depths_into`].
+    pub fn depths(&self) -> Vec<usize> {
+        self.discipline.depths()
+    }
+
+    /// The underlying discipline's label.
+    pub fn discipline_name(&self) -> &'static str {
+        self.discipline.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapper::PolicyKind;
+    use crate::platform::Topology;
+    use crate::sched::DisciplineKind;
+
+    fn drain(kind: DisciplineKind) -> Vec<usize> {
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo.clone());
+        let mut policy = PolicyKind::LinuxRandom.build(&topo);
+        let mut rng = Rng::new(7);
+        let mut d: Dispatcher<usize> = Dispatcher::new(kind.build(6));
+        for i in 0..40 {
+            d.enqueue(i, DispatchInfo { keywords: 3 }, policy.as_mut(), &aff, &mut rng);
+        }
+        assert_eq!(d.queued(), 40);
+        let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
+        let mut got = Vec::new();
+        while let Some((p, _core)) = d.next(&idle, policy.as_mut(), &aff, &mut rng) {
+            got.push(p);
+        }
+        assert_eq!(d.queued(), 0);
+        got
+    }
+
+    #[test]
+    fn every_discipline_conserves_payloads() {
+        for kind in DisciplineKind::all() {
+            let mut got = drain(kind);
+            got.sort_unstable();
+            assert_eq!(got, (0..40).collect::<Vec<_>>(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn centralized_drains_in_fifo_order() {
+        assert_eq!(drain(DisciplineKind::Centralized), (0..40).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,180 @@
+//! The scheduling layer: admission, queueing, and dispatch — shared by the
+//! discrete-event simulator (`crate::sim`) and the live thread-pool server
+//! (`crate::live`), so the queue discipline + [`Policy`] pair under test is
+//! literally the same code in both execution modes.
+//!
+//! Three [`QueueDiscipline`]s are provided (the cFCFS/dFCFS design space of
+//! queueing studies, plus work stealing):
+//!
+//! * [`Centralized`] — one global FIFO; the policy picks among all idle
+//!   cores for the head request. This is the paper's setup and reproduces
+//!   the pre-`sched` simulator bit-for-bit on seeded runs.
+//! * [`PerCore`] — decentralized FCFS (dFCFS): every request is assigned a
+//!   home core at admission (the policy chooses among *all* cores, which
+//!   for the random-dispatch policies degenerates to random enqueue); each
+//!   core serves only its own queue, strictly FIFO.
+//! * [`WorkSteal`] — per-core queues with stealing: an idle core whose own
+//!   queue is empty steals the *oldest* request from the most backlogged
+//!   queue (subject to a policy veto, so e.g. all-big placement is never
+//!   violated).
+//!
+//! Division of labour: a discipline owns queue *structure* (where requests
+//! wait, who may serve them); the [`Policy`] owns *placement* (which core a
+//! request should run on) and migration. The [`Dispatcher`] glues them to a
+//! payload store; [`SharedDispatcher`] adds blocking semantics for the live
+//! server's worker threads.
+//!
+//! Determinism: disciplines draw randomness only through the caller's
+//! [`Rng`] and never iterate unordered containers, so seeded simulations
+//! replay bit-for-bit under every discipline.
+
+pub mod centralized;
+pub mod dispatcher;
+pub mod per_core;
+pub mod shared;
+pub mod work_steal;
+
+pub use centralized::Centralized;
+pub use dispatcher::{Dispatcher, Ticket};
+pub use per_core::PerCore;
+pub use shared::SharedDispatcher;
+pub use work_steal::WorkSteal;
+
+use crate::mapper::{DispatchInfo, Policy};
+use crate::platform::{AffinityTable, CoreId};
+use crate::util::Rng;
+
+/// A queued request as disciplines see it: an opaque ticket (the
+/// [`Dispatcher`] owns the payloads) plus its dispatch-time facts.
+#[derive(Clone, Copy, Debug)]
+pub struct QueuedTicket {
+    /// Payload handle issued by the dispatcher.
+    pub ticket: Ticket,
+    /// Dispatch-time request facts (forwarded to the policy).
+    pub info: DispatchInfo,
+}
+
+/// A queue discipline: owns where requests wait and which core serves them
+/// next. Implementations must conserve requests (every enqueued ticket is
+/// eventually returned by `next` exactly once, given idle cores) and keep
+/// each internal queue strictly FIFO.
+pub trait QueueDiscipline: Send {
+    /// Stable label for reports and tables.
+    fn name(&self) -> &'static str;
+
+    /// Admit one request. Per-core disciplines consult `policy` over *all*
+    /// cores to choose the home queue (random placement for the paper's
+    /// policies); the centralized discipline ignores `policy` and `rng`.
+    fn enqueue(
+        &mut self,
+        item: QueuedTicket,
+        policy: &mut dyn Policy,
+        aff: &AffinityTable,
+        rng: &mut Rng,
+    );
+
+    /// Hand at most ONE queued request to one of the `idle` cores (callers
+    /// loop, refreshing `idle`, until `None`). `None` means no queued
+    /// request can currently be served by any idle core.
+    fn next(
+        &mut self,
+        idle: &[CoreId],
+        policy: &mut dyn Policy,
+        aff: &AffinityTable,
+        rng: &mut Rng,
+    ) -> Option<(QueuedTicket, CoreId)>;
+
+    /// Total requests queued across all queues.
+    fn queued(&self) -> usize;
+
+    /// Backlog visible to `core` (its own queue; the shared queue for the
+    /// centralized discipline).
+    fn depth(&self, core: CoreId) -> usize;
+
+    /// Fill `out` with the per-core backlog snapshot (see
+    /// [`crate::mapper::QueueView`] for the centralized convention). Takes
+    /// a caller-owned buffer because the engines snapshot on every event —
+    /// the hot dispatch loop must not allocate.
+    fn depths_into(&self, out: &mut Vec<usize>);
+
+    /// Allocating convenience form of [`QueueDiscipline::depths_into`].
+    fn depths(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.depths_into(&mut out);
+        out
+    }
+}
+
+/// Serializable queue-discipline selector (config files, CLI) — the
+/// `PolicyKind` of the scheduling layer.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DisciplineKind {
+    /// One global FIFO queue (the paper's setup; pre-refactor behaviour).
+    #[default]
+    Centralized,
+    /// Decentralized per-core FIFO queues, placement at admission (dFCFS).
+    PerCore,
+    /// Per-core queues with idle cores stealing the oldest backlogged work.
+    WorkSteal,
+}
+
+impl DisciplineKind {
+    /// Every discipline, in ablation-table order.
+    pub fn all() -> [DisciplineKind; 3] {
+        [
+            DisciplineKind::Centralized,
+            DisciplineKind::PerCore,
+            DisciplineKind::WorkSteal,
+        ]
+    }
+
+    /// Instantiate for a core count.
+    pub fn build(&self, num_cores: usize) -> Box<dyn QueueDiscipline> {
+        match self {
+            DisciplineKind::Centralized => Box::new(Centralized::new(num_cores)),
+            DisciplineKind::PerCore => Box::new(PerCore::new(num_cores)),
+            DisciplineKind::WorkSteal => Box::new(WorkSteal::new(num_cores)),
+        }
+    }
+
+    /// Short label for tables and flags.
+    pub fn label(&self) -> &'static str {
+        match self {
+            DisciplineKind::Centralized => "centralized",
+            DisciplineKind::PerCore => "per_core",
+            DisciplineKind::WorkSteal => "work_steal",
+        }
+    }
+
+    /// Parse a CLI/config token (queueing-literature aliases accepted).
+    pub fn parse(s: &str) -> Option<DisciplineKind> {
+        match s {
+            "centralized" | "cfcfs" => Some(DisciplineKind::Centralized),
+            "per_core" | "dfcfs" => Some(DisciplineKind::PerCore),
+            "work_steal" | "steal" => Some(DisciplineKind::WorkSteal),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_parse_roundtrip() {
+        for kind in DisciplineKind::all() {
+            assert_eq!(DisciplineKind::parse(kind.label()), Some(kind));
+            assert!(!kind.build(6).name().is_empty());
+        }
+        assert_eq!(DisciplineKind::parse("cfcfs"), Some(DisciplineKind::Centralized));
+        assert_eq!(DisciplineKind::parse("dfcfs"), Some(DisciplineKind::PerCore));
+        assert_eq!(DisciplineKind::parse("steal"), Some(DisciplineKind::WorkSteal));
+        assert_eq!(DisciplineKind::parse("magic"), None);
+    }
+
+    #[test]
+    fn default_is_centralized() {
+        assert_eq!(DisciplineKind::default(), DisciplineKind::Centralized);
+    }
+}

@@ -1,0 +1,194 @@
+//! Decentralized FCFS (dFCFS): one FIFO queue per core.
+//!
+//! Placement happens once, at admission: the [`Policy`] chooses the home
+//! core among *all* cores (busy or idle — queues decouple placement from
+//! occupancy). For the paper's random-dispatch policies this is exactly
+//! "random enqueue"; all-big/all-little naturally confine requests to one
+//! cluster, and the oracle steers heavy requests to big-core queues. After
+//! placement a core serves only its own queue, strictly FIFO — no policy
+//! consult at pop, so a placement the policy approved is always eventually
+//! served (conservation holds for every policy).
+//!
+//! This trades the centralized queue's global FIFO fairness for zero
+//! head-of-line coupling between cores — the cFCFS/dFCFS trade-off:
+//! dFCFS wins on dispatch contention, loses tail latency when an unlucky
+//! queue backs up behind a heavy request (no rebalancing; see
+//! [`super::WorkSteal`]).
+
+use std::collections::VecDeque;
+
+use super::{QueueDiscipline, QueuedTicket};
+use crate::mapper::Policy;
+use crate::platform::{AffinityTable, CoreId};
+use crate::util::Rng;
+
+/// Per-core FIFO queues with admission-time placement.
+pub struct PerCore {
+    queues: Vec<VecDeque<QueuedTicket>>,
+    all_cores: Vec<CoreId>,
+    queued: usize,
+}
+
+impl PerCore {
+    /// New empty queues for a core count.
+    pub fn new(num_cores: usize) -> PerCore {
+        PerCore {
+            queues: (0..num_cores).map(|_| VecDeque::new()).collect(),
+            all_cores: (0..num_cores).map(CoreId).collect(),
+            queued: 0,
+        }
+    }
+
+    /// Pick the home queue via the policy (all cores offered), falling
+    /// back to uniform random if the policy refuses every core (possible
+    /// only on degenerate topologies).
+    fn place(
+        all_cores: &[CoreId],
+        item: QueuedTicket,
+        policy: &mut dyn Policy,
+        aff: &AffinityTable,
+        rng: &mut Rng,
+    ) -> CoreId {
+        policy
+            .choose_core(all_cores, aff, item.info, rng)
+            .unwrap_or_else(|| all_cores[rng.below(all_cores.len())])
+    }
+
+    /// Number of queues (== cores). For [`super::WorkSteal`], which wraps
+    /// this discipline.
+    pub(crate) fn num_cores(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Oldest queued request on `core`, without removing it (work
+    /// stealing's victim peek).
+    pub(crate) fn front(&self, core: CoreId) -> Option<QueuedTicket> {
+        self.queues[core.0].front().copied()
+    }
+
+    /// Remove and return the oldest queued request on `core` (work
+    /// stealing's steal).
+    pub(crate) fn pop_front(&mut self, core: CoreId) -> Option<QueuedTicket> {
+        let item = self.queues[core.0].pop_front();
+        if item.is_some() {
+            self.queued -= 1;
+        }
+        item
+    }
+}
+
+impl QueueDiscipline for PerCore {
+    fn name(&self) -> &'static str {
+        // Matches `DisciplineKind::label()`.
+        "per_core"
+    }
+
+    fn enqueue(
+        &mut self,
+        item: QueuedTicket,
+        policy: &mut dyn Policy,
+        aff: &AffinityTable,
+        rng: &mut Rng,
+    ) {
+        let home = Self::place(&self.all_cores, item, policy, aff, rng);
+        self.queues[home.0].push_back(item);
+        self.queued += 1;
+    }
+
+    fn next(
+        &mut self,
+        idle: &[CoreId],
+        _policy: &mut dyn Policy,
+        _aff: &AffinityTable,
+        _rng: &mut Rng,
+    ) -> Option<(QueuedTicket, CoreId)> {
+        for &core in idle {
+            if let Some(head) = self.queues[core.0].pop_front() {
+                self.queued -= 1;
+                return Some((head, core));
+            }
+        }
+        None
+    }
+
+    fn queued(&self) -> usize {
+        self.queued
+    }
+
+    fn depth(&self, core: CoreId) -> usize {
+        self.queues[core.0].len()
+    }
+
+    fn depths_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(self.queues.iter().map(VecDeque::len));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapper::{DispatchInfo, PolicyKind};
+    use crate::platform::{CoreKind, Topology};
+
+    fn enq(
+        q: &mut PerCore,
+        t: u64,
+        kw: usize,
+        p: &mut dyn Policy,
+        aff: &AffinityTable,
+        rng: &mut Rng,
+    ) {
+        q.enqueue(
+            QueuedTicket {
+                ticket: t,
+                info: DispatchInfo { keywords: kw },
+            },
+            p,
+            aff,
+            rng,
+        );
+    }
+
+    #[test]
+    fn cores_serve_only_their_own_queue_in_fifo_order() {
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo.clone());
+        // Round-robin placement is deterministic: tickets 0..6 land on
+        // cores 0..6 in order.
+        let mut p = PolicyKind::RoundRobin.build(&topo);
+        let mut rng = Rng::new(3);
+        let mut q = PerCore::new(6);
+        for t in 0..12u64 {
+            enq(&mut q, t, 1, p.as_mut(), &aff, &mut rng);
+        }
+        // Core 2's queue holds tickets 2 and 8, in that order.
+        assert_eq!(q.depth(CoreId(2)), 2);
+        let (a, c) = q.next(&[CoreId(2)], p.as_mut(), &aff, &mut rng).unwrap();
+        assert_eq!((a.ticket, c), (2, CoreId(2)));
+        let (b, _) = q.next(&[CoreId(2)], p.as_mut(), &aff, &mut rng).unwrap();
+        assert_eq!(b.ticket, 8);
+        // Empty now: an idle core with no backlog gets nothing (no stealing).
+        assert!(q.next(&[CoreId(2)], p.as_mut(), &aff, &mut rng).is_none());
+        assert_eq!(q.queued(), 10);
+    }
+
+    #[test]
+    fn all_big_placement_confined_to_big_queues() {
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo.clone());
+        let mut p = PolicyKind::AllBig.build(&topo);
+        let mut rng = Rng::new(4);
+        let mut q = PerCore::new(6);
+        for t in 0..20u64 {
+            enq(&mut q, t, 3, p.as_mut(), &aff, &mut rng);
+        }
+        for core in topo.cores() {
+            match topo.kind(core) {
+                CoreKind::Big => {}
+                CoreKind::Little => assert_eq!(q.depth(core), 0, "{core}"),
+            }
+        }
+        assert_eq!(q.queued(), 20);
+    }
+}

@@ -1,0 +1,224 @@
+//! Thread-safe blocking front-end over [`Dispatcher`] — the live server's
+//! dispatch queue, replacing the old hard-coded global FIFO so live workers
+//! drain the exact same discipline code the simulator exercises.
+//!
+//! Locking: the internal state lock is always taken BEFORE the affinity
+//! table lock (the mapper thread takes only the affinity lock), so lock
+//! order is globally consistent and deadlock-free. Workers that find no
+//! work for their current core wait on a condvar with a short timeout —
+//! a migration can silently re-home a blocked worker to a different core
+//! (and thus a different queue), so waiters re-resolve their core each
+//! wakeup rather than relying on a targeted notification.
+
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::{Dispatcher, QueueDiscipline};
+use crate::mapper::{DispatchInfo, Policy, QueueView};
+use crate::platform::{AffinityTable, CoreId, ThreadId};
+use crate::util::Rng;
+
+/// How long an idle worker sleeps before re-checking its (possibly
+/// migrated) core assignment, ms.
+const IDLE_RECHECK_MS: u64 = 5;
+
+struct Inner<T> {
+    dispatcher: Dispatcher<T>,
+    /// Placement policy instance owned by the queue (dispatch decisions
+    /// only; the live mapper thread owns its own ticking instance — for
+    /// every live-supported policy `choose_core` is stateless, so the
+    /// split instances behave identically to one shared one). The mapper
+    /// thread's ticking instance gets its queue visibility via
+    /// [`SharedDispatcher::queue_view_into`].
+    policy: Box<dyn Policy>,
+    rng: Rng,
+    /// Reused queue-depth snapshot buffer (no allocation under the lock).
+    depth_scratch: Vec<usize>,
+    closed: bool,
+}
+
+/// Blocking, shareable dispatcher for the live thread-pool server.
+pub struct SharedDispatcher<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+impl<T> SharedDispatcher<T> {
+    /// New queue over a discipline and a placement policy.
+    pub fn new(
+        discipline: Box<dyn QueueDiscipline>,
+        policy: Box<dyn Policy>,
+        seed: u64,
+    ) -> SharedDispatcher<T> {
+        SharedDispatcher {
+            inner: Mutex::new(Inner {
+                dispatcher: Dispatcher::new(discipline),
+                policy,
+                rng: Rng::new(seed),
+                depth_scratch: Vec::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Admit a request and wake the workers.
+    pub fn push(&self, payload: T, info: DispatchInfo, aff: &Mutex<AffinityTable>) {
+        {
+            let mut g = self.inner.lock().expect("sched queue poisoned");
+            let aff_g = aff.lock().expect("aff poisoned");
+            let Inner {
+                dispatcher,
+                policy,
+                rng,
+                depth_scratch,
+                ..
+            } = &mut *g;
+            dispatcher.enqueue(payload, info, policy.as_mut(), &aff_g, rng);
+            dispatcher.depths_into(depth_scratch);
+            policy.observe_queues(QueueView {
+                per_core: depth_scratch.as_slice(),
+                total: dispatcher.queued(),
+            });
+        }
+        // Per-core disciplines route to one specific core, but a waiting
+        // worker may be migrated onto it at any moment: wake everyone and
+        // let each re-resolve its core.
+        self.cv.notify_all();
+    }
+
+    /// Blocking pop for the worker `tid`: serves the queue of whatever core
+    /// the thread is currently pinned to. Returns `None` once the queue is
+    /// closed and fully drained.
+    pub fn pop(&self, tid: ThreadId, aff: &Mutex<AffinityTable>) -> Option<T> {
+        let mut g = self.inner.lock().expect("sched queue poisoned");
+        loop {
+            {
+                let aff_g = aff.lock().expect("aff poisoned");
+                let core = aff_g.core_of(tid);
+                let Inner {
+                    dispatcher,
+                    policy,
+                    rng,
+                    ..
+                } = &mut *g;
+                if let Some((item, _core)) =
+                    dispatcher.next(&[core], policy.as_mut(), &aff_g, rng)
+                {
+                    return Some(item);
+                }
+            }
+            if g.closed && g.dispatcher.queued() == 0 {
+                return None;
+            }
+            let (g2, _timeout) = self
+                .cv
+                .wait_timeout(g, Duration::from_millis(IDLE_RECHECK_MS))
+                .expect("sched queue poisoned");
+            g = g2;
+        }
+    }
+
+    /// Close the queue: workers drain remaining work and exit.
+    pub fn close(&self) {
+        self.inner.lock().expect("sched queue poisoned").closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Per-core backlog snapshot into `out`; returns the total queued.
+    /// For the live mapper thread, which feeds its ticking policy's
+    /// `observe_queues` before every tick (same contract as the sim).
+    pub fn queue_view_into(&self, out: &mut Vec<usize>) -> usize {
+        let g = self.inner.lock().expect("sched queue poisoned");
+        g.dispatcher.depths_into(out);
+        g.dispatcher.queued()
+    }
+
+    /// Requests currently queued (diagnostics).
+    pub fn queued(&self) -> usize {
+        self.inner
+            .lock()
+            .expect("sched queue poisoned")
+            .dispatcher
+            .queued()
+    }
+
+    /// Backlog visible to one core (diagnostics).
+    pub fn depth(&self, core: CoreId) -> usize {
+        self.inner
+            .lock()
+            .expect("sched queue poisoned")
+            .dispatcher
+            .depth(core)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapper::PolicyKind;
+    use crate::platform::Topology;
+    use crate::sched::DisciplineKind;
+    use std::sync::Arc;
+
+    fn queue(kind: DisciplineKind) -> (SharedDispatcher<usize>, Mutex<AffinityTable>) {
+        let topo = Topology::juno_r1();
+        let q = SharedDispatcher::new(
+            kind.build(6),
+            PolicyKind::LinuxRandom.build(&topo),
+            99,
+        );
+        (q, Mutex::new(AffinityTable::round_robin(topo)))
+    }
+
+    #[test]
+    fn centralized_fifo_and_drain_after_close() {
+        let (q, aff) = queue(DisciplineKind::Centralized);
+        for i in 0..3 {
+            q.push(i, DispatchInfo { keywords: 1 }, &aff);
+        }
+        assert_eq!(q.queued(), 3);
+        assert_eq!(q.pop(ThreadId(0), &aff), Some(0));
+        assert_eq!(q.pop(ThreadId(1), &aff), Some(1));
+        q.close();
+        assert_eq!(q.pop(ThreadId(2), &aff), Some(2)); // drain after close
+        assert_eq!(q.pop(ThreadId(2), &aff), None);
+    }
+
+    #[test]
+    fn close_unblocks_waiting_worker() {
+        let topo = Topology::juno_r1();
+        let q = Arc::new(SharedDispatcher::<usize>::new(
+            DisciplineKind::Centralized.build(6),
+            PolicyKind::LinuxRandom.build(&topo),
+            1,
+        ));
+        let aff = Arc::new(Mutex::new(AffinityTable::round_robin(topo)));
+        let (q2, aff2) = (q.clone(), aff.clone());
+        let h = std::thread::spawn(move || q2.pop(ThreadId(0), &aff2));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn per_core_work_follows_the_core_not_the_thread() {
+        let (q, aff) = queue(DisciplineKind::PerCore);
+        // Find where the seeded placement sends ticket 0, then swap that
+        // core's thread: the NEW thread on the core must receive the work.
+        q.push(7usize, DispatchInfo { keywords: 2 }, &aff);
+        let topo = aff.lock().unwrap().topology().clone();
+        let home = topo
+            .cores()
+            .find(|&c| q.depth(c) == 1)
+            .expect("request queued somewhere");
+        let other = CoreId((home.0 + 1) % 6);
+        let displaced = {
+            let mut g = aff.lock().unwrap();
+            let (moved_to_home, _) = g.swap(home, other);
+            moved_to_home
+        };
+        q.close();
+        assert_eq!(q.pop(displaced, &aff), Some(7));
+    }
+}

@@ -1,0 +1,177 @@
+//! Per-core FIFO queues with work stealing.
+//!
+//! Wraps [`PerCore`] — admission placement and own-queue dispatch are
+//! literally that discipline — and adds one rescue path: an idle core whose
+//! own queue is empty steals the *oldest* request from the most backlogged
+//! queue (ties broken toward the lower core id, for determinism). Stealing
+//! is gated by a policy veto — the thief offers itself as the only
+//! candidate, so e.g. all-big placement can never leak onto a little core.
+//! Steal-oldest preserves per-queue FIFO order (both ends pop from the
+//! front) and targets exactly the requests whose queueing delay is growing
+//! fastest — the backlog-rebalancing plain dFCFS lacks.
+
+use super::per_core::PerCore;
+use super::{QueueDiscipline, QueuedTicket};
+use crate::mapper::Policy;
+use crate::platform::{AffinityTable, CoreId};
+use crate::util::Rng;
+
+/// Per-core FIFO queues; idle cores steal the oldest backlogged request.
+pub struct WorkSteal {
+    local: PerCore,
+    /// Steals performed (reporting / tests).
+    steals: u64,
+}
+
+impl WorkSteal {
+    /// New empty queues for a core count.
+    pub fn new(num_cores: usize) -> WorkSteal {
+        WorkSteal {
+            local: PerCore::new(num_cores),
+            steals: 0,
+        }
+    }
+
+    /// Steals performed so far.
+    pub fn steals(&self) -> u64 {
+        self.steals
+    }
+
+    /// Most backlogged queue (lowest core id on ties), if any has work.
+    fn victim(&self) -> Option<CoreId> {
+        (0..self.local.num_cores())
+            .map(CoreId)
+            .max_by(|&a, &b| {
+                self.local
+                    .depth(a)
+                    .cmp(&self.local.depth(b))
+                    .then(b.0.cmp(&a.0))
+            })
+            .filter(|&c| self.local.depth(c) > 0)
+    }
+}
+
+impl QueueDiscipline for WorkSteal {
+    fn name(&self) -> &'static str {
+        // Matches `DisciplineKind::label()`.
+        "work_steal"
+    }
+
+    fn enqueue(
+        &mut self,
+        item: QueuedTicket,
+        policy: &mut dyn Policy,
+        aff: &AffinityTable,
+        rng: &mut Rng,
+    ) {
+        self.local.enqueue(item, policy, aff, rng);
+    }
+
+    fn next(
+        &mut self,
+        idle: &[CoreId],
+        policy: &mut dyn Policy,
+        aff: &AffinityTable,
+        rng: &mut Rng,
+    ) -> Option<(QueuedTicket, CoreId)> {
+        // Own queues first: local FIFO work beats stealing.
+        if let Some(hit) = self.local.next(idle, policy, aff, rng) {
+            return Some(hit);
+        }
+        // All idle cores are out of local work: steal the oldest request
+        // from the most backlogged queue, if the policy lets the thief run
+        // it. A veto leaves the request for its home core — never lost.
+        for &thief in idle {
+            let victim = self.victim()?;
+            let head = self.local.front(victim).expect("victim has work");
+            if policy.choose_core(&[thief], aff, head.info, rng).is_some() {
+                self.local.pop_front(victim);
+                self.steals += 1;
+                return Some((head, thief));
+            }
+        }
+        None
+    }
+
+    fn queued(&self) -> usize {
+        self.local.queued()
+    }
+
+    fn depth(&self, core: CoreId) -> usize {
+        self.local.depth(core)
+    }
+
+    fn depths_into(&self, out: &mut Vec<usize>) {
+        self.local.depths_into(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapper::{DispatchInfo, PolicyKind};
+    use crate::platform::Topology;
+
+    fn enq(
+        q: &mut WorkSteal,
+        t: u64,
+        kw: usize,
+        p: &mut dyn Policy,
+        aff: &AffinityTable,
+        rng: &mut Rng,
+    ) {
+        q.enqueue(
+            QueuedTicket {
+                ticket: t,
+                info: DispatchInfo { keywords: kw },
+            },
+            p,
+            aff,
+            rng,
+        );
+    }
+
+    #[test]
+    fn idle_core_steals_oldest_from_longest_queue() {
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo.clone());
+        // Round-robin placement: tickets 0..=5 on cores 0..=5, 6..=11 wrap.
+        let mut p = PolicyKind::RoundRobin.build(&topo);
+        let mut rng = Rng::new(5);
+        let mut q = WorkSteal::new(6);
+        for t in 0..12u64 {
+            enq(&mut q, t, 1, p.as_mut(), &aff, &mut rng);
+        }
+        // Every queue has 2; drain core 3's own queue, then it must steal
+        // the OLDEST item of the longest remaining queue (core 0, ticket 0).
+        let (a, _) = q.next(&[CoreId(3)], p.as_mut(), &aff, &mut rng).unwrap();
+        assert_eq!(a.ticket, 3);
+        let (b, _) = q.next(&[CoreId(3)], p.as_mut(), &aff, &mut rng).unwrap();
+        assert_eq!(b.ticket, 9);
+        assert_eq!(q.depth(CoreId(3)), 0);
+        let (c, core) = q.next(&[CoreId(3)], p.as_mut(), &aff, &mut rng).unwrap();
+        assert_eq!(core, CoreId(3));
+        assert_eq!(c.ticket, 0, "steals the oldest of the longest queue");
+        assert_eq!(q.steals(), 1);
+    }
+
+    #[test]
+    fn all_big_veto_blocks_little_thief() {
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo.clone());
+        let mut p = PolicyKind::AllBig.build(&topo);
+        let mut rng = Rng::new(6);
+        let mut q = WorkSteal::new(6);
+        for t in 0..6u64 {
+            enq(&mut q, t, 2, p.as_mut(), &aff, &mut rng);
+        }
+        // All work sits on big-core queues; a little core may not steal it.
+        let littles: Vec<CoreId> = (2..6).map(CoreId).collect();
+        assert!(q.next(&littles, p.as_mut(), &aff, &mut rng).is_none());
+        assert_eq!(q.queued(), 6);
+        // The big cores drain their own queues normally.
+        let (qt, core) = q.next(&[CoreId(0)], p.as_mut(), &aff, &mut rng).unwrap();
+        assert_eq!(core, CoreId(0));
+        assert!(qt.ticket < 6);
+    }
+}

@@ -1,7 +1,9 @@
 //! Deterministic discrete-event simulation of the big/little search server.
 //!
-//! Reproduces the paper's testbed end to end: open-loop arrivals feed a
-//! global FIFO dispatch queue; six search threads are pinned 1:1 to the six
+//! Reproduces the paper's testbed end to end: open-loop arrivals feed the
+//! shared scheduling layer ([`crate::sched`] — centralized FIFO by default,
+//! per-core/work-stealing queues selectable via
+//! `SimConfig::discipline`); six search threads are pinned 1:1 to the six
 //! cores (2 big + 4 little on Juno R1); each thread serves one request at a
 //! time (§III-C); the policy's mapper runs on its sampling interval over the
 //! application stats stream and migrates threads by swapping affinities;
@@ -10,7 +12,7 @@
 //! meters integrate power over every busy/idle interval.
 //!
 //! Determinism: everything derives from `SimConfig::seed`, so every figure
-//! regenerates bit-for-bit.
+//! regenerates bit-for-bit — under every queue discipline.
 
 pub mod event;
 pub mod server;

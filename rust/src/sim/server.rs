@@ -1,16 +1,19 @@
-//! The simulated web-search server: queue, thread pool, cores, mapper loop,
-//! energy metering — the heart of every figure reproduction.
-
-use std::collections::VecDeque;
+//! The simulated web-search server: thread pool, cores, mapper loop, energy
+//! metering — the heart of every figure reproduction. Admission, queueing
+//! and dispatch live in the shared scheduling layer ([`crate::sched`]): the
+//! simulator drives a [`Dispatcher`] exactly like the live server does, so
+//! the queue discipline + policy pair under test is identical code in both
+//! execution modes.
 
 use super::event::{EventKind, EventQueue};
 use super::service::{ServiceDemand, ServiceSampler};
 use crate::config::SimConfig;
 use crate::ipc::{RequestTag, StatsRecord};
 use crate::loadgen::{ArrivalProcess, QueryGen, Workload};
-use crate::mapper::{DispatchInfo, Policy};
+use crate::mapper::{DispatchInfo, Policy, QueueView};
 use crate::metrics::LatencyHistogram;
 use crate::platform::{AffinityTable, CoreId, CoreKind, EnergyMeters, ThreadId};
+use crate::sched::Dispatcher;
 use crate::util::Rng;
 
 /// Per-request outcome record.
@@ -50,6 +53,15 @@ impl RequestRecord {
 }
 
 /// Aggregated simulation output.
+///
+/// Warmup convention: the first [`SimOutput::warmup`] completions are
+/// excluded from every *derived latency/placement statistic* — `latency`,
+/// [`SimOutput::p90_ms`], [`SimOutput::big_share`],
+/// [`SimOutput::latency_samples`] all describe the same measured
+/// population. Whole-run accounting (`per_request`, `completed`,
+/// `migrations`, `energy`, `duration_ms`, [`SimOutput::throughput_qps`])
+/// deliberately includes warmup, since energy and wall-clock are physical
+/// quantities of the full run.
 #[derive(Clone, Debug)]
 pub struct SimOutput {
     /// End-to-end latency histogram (post-warmup requests).
@@ -66,24 +78,35 @@ pub struct SimOutput {
     pub migrations: usize,
     /// Policy name.
     pub policy: String,
+    /// Queue-discipline name (`sched` layer).
+    pub discipline: String,
+    /// Completions excluded from latency/placement statistics at the start
+    /// of the run (`SimConfig::warmup_requests`).
+    pub warmup: usize,
 }
 
 impl SimOutput {
-    /// Achieved throughput, QPS.
+    /// Achieved throughput, QPS (full run).
     pub fn throughput_qps(&self) -> f64 {
         self.completed as f64 / (self.duration_ms / 1000.0)
     }
 
-    /// Fraction of requests whose *final* core was big.
+    /// Measured (post-warmup) request records, in completion order.
+    pub fn measured(&self) -> impl Iterator<Item = &RequestRecord> {
+        self.per_request.iter().skip(self.warmup)
+    }
+
+    /// Fraction of measured requests whose *final* core was big — the same
+    /// post-warmup population the latency statistics describe.
     pub fn big_share(&self) -> f64 {
-        if self.per_request.is_empty() {
+        let total = self.per_request.len().saturating_sub(self.warmup);
+        if total == 0 {
             return 0.0;
         }
-        self.per_request
-            .iter()
+        self.measured()
             .filter(|r| r.final_kind == CoreKind::Big)
             .count() as f64
-            / self.per_request.len() as f64
+            / total as f64
     }
 
     /// The paper's tail-latency metric (90th percentile), ms.
@@ -91,13 +114,10 @@ impl SimOutput {
         self.latency.percentile(0.90)
     }
 
-    /// Post-warmup latency samples (for PDF plots).
-    pub fn latency_samples(&self, warmup: usize) -> Vec<f64> {
-        self.per_request
-            .iter()
-            .skip(warmup)
-            .map(|r| r.latency_ms())
-            .collect()
+    /// Measured (post-warmup) latency samples (for PDF plots) — exactly the
+    /// population aggregated by `latency`.
+    pub fn latency_samples(&self) -> Vec<f64> {
+        self.measured().map(|r| r.latency_ms()).collect()
     }
 
     /// Mean energy per request, J.
@@ -191,7 +211,13 @@ impl Simulation {
         // independent of dispatch order).
         let mut demands: Vec<Option<ServiceDemand>> = vec![None; workload.len()];
 
-        let mut queue: VecDeque<usize> = VecDeque::new();
+        // The scheduling layer: queue structure per the configured
+        // discipline, payloads (workload indices) owned by the dispatcher.
+        let mut dispatcher: Dispatcher<usize> =
+            Dispatcher::new(cfg.discipline.build(cores.len()));
+        // Reused buffer for queue-depth snapshots: the dispatch loop runs
+        // per event and must not allocate.
+        let mut depth_scratch: Vec<usize> = Vec::new();
         let mut latency = LatencyHistogram::new();
         let mut per_request: Vec<RequestRecord> = Vec::with_capacity(workload.len());
         let mut completed = 0usize;
@@ -206,7 +232,10 @@ impl Simulation {
         // rid tag per in-flight core (for the end-of-request record).
         let mut core_rid: Vec<Option<RequestTag>> = vec![None; cores.len()];
 
-        let integrate = |core: &mut CoreState, meters: &mut EnergyMeters, now: f64, power: &crate::platform::PowerModel| {
+        let integrate = |core: &mut CoreState,
+                         meters: &mut EnergyMeters,
+                         now: f64,
+                         power: &crate::platform::PowerModel| {
             let dt = now - core.last_integrated;
             if dt > 0.0 {
                 meters.add_core_time(power, core.kind, core.running.is_some(), dt);
@@ -216,26 +245,26 @@ impl Simulation {
 
         macro_rules! try_dispatch {
             () => {
+                // Queue visibility at dispatch time (per-core backlog).
+                dispatcher.depths_into(&mut depth_scratch);
+                policy.observe_queues(QueueView {
+                    per_core: &depth_scratch,
+                    total: dispatcher.queued(),
+                });
                 loop {
-                    if queue.is_empty() {
-                        break;
-                    }
                     let idle: Vec<CoreId> = (0..cores.len())
                         .map(CoreId)
                         .filter(|c| cores[c.0].running.is_none())
                         .collect();
-                    if idle.is_empty() {
+                    // The discipline + policy pick the next (request, core)
+                    // pair; `None` leaves the backlog queued (e.g. all-big
+                    // holding the centralized head for a big core).
+                    let Some((widx, core_id)) =
+                        dispatcher.next(&idle, policy.as_mut(), &aff, &mut rng)
+                    else {
                         break;
-                    }
-                    let widx = *queue.front().unwrap();
+                    };
                     let req = &workload.requests[widx];
-                    let info = DispatchInfo {
-                        keywords: req.keywords,
-                    };
-                    let Some(core_id) = policy.choose_core(&idle, &aff, info, &mut rng) else {
-                        break; // policy keeps the head queued (e.g. all-big)
-                    };
-                    queue.pop_front();
                     let demand = *demands[widx].get_or_insert_with(|| {
                         sampler.sample(req.keywords, &mut rng)
                     });
@@ -274,7 +303,10 @@ impl Simulation {
             now = ev.time;
             match ev.kind {
                 EventKind::Arrival(widx) => {
-                    queue.push_back(widx);
+                    let info = DispatchInfo {
+                        keywords: workload.requests[widx].keywords,
+                    };
+                    dispatcher.enqueue(widx, info, policy.as_mut(), &aff, &mut rng);
                     try_dispatch!();
                 }
                 EventKind::Completion { core: core_id, gen } => {
@@ -317,6 +349,12 @@ impl Simulation {
                     for rec in stream.drain(..) {
                         policy.observe(&rec);
                     }
+                    // Queue visibility at tick time.
+                    dispatcher.depths_into(&mut depth_scratch);
+                    policy.observe_queues(QueueView {
+                        per_core: &depth_scratch,
+                        total: dispatcher.queued(),
+                    });
                     for mig in policy.tick(now, &aff) {
                         migrations += 1;
                         apply_migration(
@@ -352,6 +390,7 @@ impl Simulation {
         meters.add_wall_time(&cfg.power, last_completion_ms);
 
         debug_assert_eq!(completed, workload.len(), "requests lost");
+        debug_assert_eq!(dispatcher.queued(), 0, "requests stranded in queues");
         SimOutput {
             latency,
             per_request,
@@ -360,6 +399,8 @@ impl Simulation {
             completed,
             migrations,
             policy: policy.name(),
+            discipline: dispatcher.discipline_name().to_string(),
+            warmup: cfg.warmup_requests,
         }
     }
 }
@@ -436,6 +477,7 @@ mod tests {
     use super::*;
     use crate::config::{KeywordMix, SimConfig};
     use crate::mapper::PolicyKind;
+    use crate::sched::DisciplineKind;
 
     fn base(policy: PolicyKind) -> SimConfig {
         SimConfig::paper_default(policy)
@@ -593,6 +635,59 @@ mod tests {
             (mean - mean_expected).abs() / mean_expected < 0.1,
             "mean={mean} expected≈{mean_expected}"
         );
+    }
+
+    #[test]
+    fn every_discipline_completes_and_replays_deterministically() {
+        for disc in DisciplineKind::all() {
+            let mk = || {
+                base(PolicyKind::HurryUp {
+                    sampling_ms: 25.0,
+                    threshold_ms: 50.0,
+                })
+                .with_requests(1_500)
+                .with_discipline(disc)
+            };
+            let a = Simulation::new(mk()).run();
+            let b = Simulation::new(mk()).run();
+            assert_eq!(a.completed, 1_500, "{disc:?}");
+            assert_eq!(a.per_request.len(), 1_500, "{disc:?}");
+            assert_eq!(a.p90_ms(), b.p90_ms(), "{disc:?}");
+            assert_eq!(a.migrations, b.migrations, "{disc:?}");
+            assert_eq!(a.discipline, b.discipline);
+        }
+    }
+
+    #[test]
+    fn centralized_starts_requests_in_arrival_order() {
+        // Global FIFO: service starts follow arrival order even under
+        // backlog (the head may wait, but never gets overtaken).
+        let out = Simulation::new(
+            base(PolicyKind::LinuxRandom).with_qps(40.0).with_requests(2_000),
+        )
+        .run();
+        let mut by_start: Vec<&RequestRecord> = out.per_request.iter().collect();
+        by_start.sort_by(|a, b| a.started_ms.partial_cmp(&b.started_ms).unwrap());
+        for w in by_start.windows(2) {
+            assert!(
+                w[0].arrived_ms <= w[1].arrived_ms + 1e-9,
+                "FIFO start order violated"
+            );
+        }
+    }
+
+    #[test]
+    fn warmup_statistics_are_consistent() {
+        let out = Simulation::new(base(PolicyKind::LinuxRandom)).run();
+        assert_eq!(out.warmup, 200);
+        // The histogram and the sample vector describe the same population.
+        let samples = out.latency_samples();
+        assert_eq!(samples.len(), out.per_request.len() - out.warmup);
+        assert_eq!(samples.len(), out.measured().count());
+        let max = samples.iter().cloned().fold(f64::MIN, f64::max);
+        assert_eq!(max, out.latency.max(), "histogram and samples diverge");
+        // big_share is a fraction of the measured population.
+        assert!((0.0..=1.0).contains(&out.big_share()));
     }
 
     #[test]

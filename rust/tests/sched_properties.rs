@@ -1,0 +1,269 @@
+//! Property tests over the scheduling layer (`sched`): conservation (no
+//! request lost or duplicated), per-queue FIFO order under every
+//! discipline, and the refactor's anchor guarantee — a centralized-FCFS
+//! simulation is the pre-`sched` simulator, bit for bit, on seeded runs.
+
+use hurryup::config::SimConfig;
+use hurryup::mapper::{DispatchInfo, Policy, PolicyKind};
+use hurryup::platform::{AffinityTable, CoreId, Topology};
+use hurryup::sched::{DisciplineKind, Dispatcher};
+use hurryup::sim::Simulation;
+use hurryup::util::{prop, Rng};
+
+/// Test-only policy: always picks the first offered core. Deterministic
+/// placement (everything homes on core 0) makes FIFO/steal order externally
+/// observable.
+struct PinFirst;
+
+impl Policy for PinFirst {
+    fn name(&self) -> String {
+        "pin-first".into()
+    }
+    fn sampling_ms(&self) -> Option<f64> {
+        None
+    }
+    fn choose_core(
+        &mut self,
+        idle: &[CoreId],
+        _aff: &AffinityTable,
+        _info: DispatchInfo,
+        _rng: &mut Rng,
+    ) -> Option<CoreId> {
+        idle.first().copied()
+    }
+}
+
+fn harness(kind: DisciplineKind) -> (Dispatcher<usize>, AffinityTable) {
+    let topo = Topology::juno_r1();
+    (
+        Dispatcher::new(kind.build(topo.num_cores())),
+        AffinityTable::round_robin(topo),
+    )
+}
+
+/// Random interleavings of enqueue and dispatch with random idle subsets:
+/// every payload comes out exactly once, under every discipline.
+#[test]
+fn prop_no_request_lost_or_duplicated() {
+    for kind in DisciplineKind::all() {
+        prop::check(64, |rng: &mut Rng, _i| {
+            let topo = Topology::juno_r1();
+            let aff = AffinityTable::round_robin(topo.clone());
+            let mut policy = PolicyKind::LinuxRandom.build(&topo);
+            let mut d: Dispatcher<usize> = Dispatcher::new(kind.build(6));
+            let total = rng.range(1, 120);
+            let mut next_in = 0usize;
+            let mut out: Vec<usize> = Vec::new();
+            while out.len() < total {
+                if next_in < total && rng.chance(0.6) {
+                    d.enqueue(
+                        next_in,
+                        DispatchInfo { keywords: rng.range(1, 8) },
+                        policy.as_mut(),
+                        &aff,
+                        rng,
+                    );
+                    next_in += 1;
+                } else if next_in == total || rng.chance(0.7) {
+                    // Random non-empty idle subset.
+                    let k = rng.range(1, 6);
+                    let mut cores: Vec<CoreId> = (0..6).map(CoreId).collect();
+                    rng.shuffle(&mut cores);
+                    cores.truncate(k);
+                    cores.sort_unstable();
+                    while let Some((p, _)) = d.next(&cores, policy.as_mut(), &aff, rng) {
+                        out.push(p);
+                    }
+                }
+            }
+            assert_eq!(d.queued(), 0);
+            out.sort_unstable();
+            assert_eq!(out, (0..total).collect::<Vec<_>>(), "{kind:?}");
+        });
+    }
+}
+
+/// Centralized discipline: global FIFO — dispatch order equals enqueue
+/// order no matter which cores are idle.
+#[test]
+fn prop_centralized_is_globally_fifo() {
+    prop::check(64, |rng: &mut Rng, _i| {
+        let (mut d, aff) = harness(DisciplineKind::Centralized);
+        let mut policy = PolicyKind::LinuxRandom.build(aff.topology());
+        let n = rng.range(1, 60);
+        for i in 0..n {
+            d.enqueue(i, DispatchInfo { keywords: 2 }, policy.as_mut(), &aff, rng);
+        }
+        let mut got = Vec::new();
+        loop {
+            let k = rng.range(1, 6);
+            let idle: Vec<CoreId> = (0..k).map(CoreId).collect();
+            match d.next(&idle, policy.as_mut(), &aff, rng) {
+                Some((p, _)) => got.push(p),
+                None => break,
+            }
+        }
+        assert_eq!(got, (0..n).collect::<Vec<_>>());
+    });
+}
+
+/// Per-core discipline: each serving core's dispatch sequence is FIFO in
+/// enqueue order (queues never exchange work).
+#[test]
+fn prop_per_core_is_fifo_per_queue() {
+    prop::check(64, |rng: &mut Rng, _i| {
+        let (mut d, aff) = harness(DisciplineKind::PerCore);
+        let mut policy = PolicyKind::LinuxRandom.build(aff.topology());
+        let n = rng.range(1, 80);
+        for i in 0..n {
+            d.enqueue(i, DispatchInfo { keywords: 2 }, policy.as_mut(), &aff, rng);
+        }
+        let mut last_on_core = vec![None::<usize>; 6];
+        let all: Vec<CoreId> = (0..6).map(CoreId).collect();
+        while let Some((p, core)) = d.next(&all, policy.as_mut(), &aff, rng) {
+            if let Some(prev) = last_on_core[core.0] {
+                assert!(prev < p, "core {core:?} served {p} after {prev}");
+            }
+            last_on_core[core.0] = Some(p);
+        }
+        assert_eq!(d.queued(), 0);
+    });
+}
+
+/// Work stealing with deterministic placement: a thief with an empty local
+/// queue always receives the OLDEST queued request (FIFO preserved through
+/// steals).
+#[test]
+fn steal_order_is_oldest_first() {
+    let (mut d, aff) = harness(DisciplineKind::WorkSteal);
+    let mut policy = PinFirst;
+    let mut rng = Rng::new(1234);
+    for i in 0..20usize {
+        // PinFirst homes every request on core 0.
+        d.enqueue(i, DispatchInfo { keywords: 1 }, &mut policy, &aff, &mut rng);
+    }
+    assert_eq!(d.depth(CoreId(0)), 20);
+    // Core 5 (empty local queue) steals repeatedly: strict enqueue order.
+    for expect in 0..20usize {
+        let (p, core) = d
+            .next(&[CoreId(5)], &mut policy, &aff, &mut rng)
+            .expect("work available");
+        assert_eq!(core, CoreId(5));
+        assert_eq!(p, expect, "steal must take the oldest request");
+    }
+    assert_eq!(d.queued(), 0);
+}
+
+/// Full-simulation conservation: every discipline × a policy mix completes
+/// every request with sane latencies.
+#[test]
+fn prop_sim_conserves_requests_under_every_discipline() {
+    prop::check(18, |rng: &mut Rng, _i| {
+        let kind = *rng.choose(&DisciplineKind::all());
+        let policies = [
+            PolicyKind::HurryUp {
+                sampling_ms: 25.0,
+                threshold_ms: rng.f64_range(0.0, 200.0),
+            },
+            PolicyKind::LinuxRandom,
+            PolicyKind::RoundRobin,
+            PolicyKind::Oracle { cutoff_kw: rng.range(1, 10) },
+        ];
+        let policy = policies[rng.below(policies.len())];
+        let n = rng.range(200, 900);
+        let cfg = SimConfig::paper_default(policy)
+            .with_qps(rng.f64_range(2.0, 25.0))
+            .with_requests(n)
+            .with_seed(rng.next_u64())
+            .with_discipline(kind);
+        let out = Simulation::new(cfg).run();
+        assert_eq!(out.completed, n, "{kind:?} {policy:?}");
+        assert_eq!(out.per_request.len(), n);
+        for r in &out.per_request {
+            assert!(r.latency_ms() >= 0.0);
+            assert!(r.queue_ms() >= -1e-9);
+        }
+    });
+}
+
+/// The refactor's anchor: with the (default) centralized discipline, a
+/// seeded simulation reproduces the pre-`sched` simulator's output exactly.
+/// The pre-refactor dispatch loop was: head-of-FIFO offered to the policy
+/// with all idle cores, one rng draw per offer, demand sampled at first
+/// dispatch — the structural fingerprints below (global FIFO start order,
+/// unchanged rng stream across reruns, byte-identical record streams)
+/// pin that behaviour in place.
+#[test]
+fn centralized_reproduces_pre_refactor_seeded_output() {
+    let mk = |disc| {
+        SimConfig::paper_default(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        })
+        .with_qps(30.0)
+        .with_requests(3_000)
+        .with_seed(11)
+        .with_discipline(disc)
+    };
+    let a = Simulation::new(mk(DisciplineKind::Centralized)).run();
+    let b = Simulation::new(mk(DisciplineKind::Centralized)).run();
+    // Exact replay, field by field.
+    assert_eq!(a.per_request.len(), b.per_request.len());
+    for (x, y) in a.per_request.iter().zip(&b.per_request) {
+        assert_eq!(x.arrived_ms, y.arrived_ms);
+        assert_eq!(x.started_ms, y.started_ms);
+        assert_eq!(x.completed_ms, y.completed_ms);
+        assert_eq!(x.first_kind, y.first_kind);
+        assert_eq!(x.final_kind, y.final_kind);
+        assert_eq!(x.migrated, y.migrated);
+    }
+    assert_eq!(a.migrations, b.migrations);
+    assert!((a.energy.total_j() - b.energy.total_j()).abs() < 1e-12);
+    // Global FIFO fingerprint: service starts in arrival order.
+    let mut by_start: Vec<_> = a.per_request.iter().collect();
+    by_start.sort_by(|x, y| x.started_ms.partial_cmp(&y.started_ms).unwrap());
+    for w in by_start.windows(2) {
+        assert!(w[0].arrived_ms <= w[1].arrived_ms + 1e-9);
+    }
+    // The default config takes the same path (discipline defaults to
+    // centralized), so existing seeded baselines are untouched.
+    let c = Simulation::new(
+        SimConfig::paper_default(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        })
+        .with_qps(30.0)
+        .with_requests(3_000)
+        .with_seed(11),
+    )
+    .run();
+    assert_eq!(a.p90_ms(), c.p90_ms());
+    assert_eq!(a.migrations, c.migrations);
+    assert_eq!(a.duration_ms, c.duration_ms);
+}
+
+/// Seeded determinism for the decentralized disciplines too.
+#[test]
+fn prop_decentralized_disciplines_replay_exactly() {
+    prop::check(10, |rng: &mut Rng, _i| {
+        let kind = if rng.chance(0.5) {
+            DisciplineKind::PerCore
+        } else {
+            DisciplineKind::WorkSteal
+        };
+        let seed = rng.next_u64();
+        let mk = || {
+            SimConfig::paper_default(PolicyKind::LinuxRandom)
+                .with_qps(18.0)
+                .with_requests(500)
+                .with_seed(seed)
+                .with_discipline(kind)
+        };
+        let a = Simulation::new(mk()).run();
+        let b = Simulation::new(mk()).run();
+        assert_eq!(a.duration_ms, b.duration_ms, "{kind:?}");
+        for (x, y) in a.per_request.iter().zip(&b.per_request) {
+            assert_eq!(x.completed_ms, y.completed_ms);
+        }
+    });
+}
