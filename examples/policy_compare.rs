@@ -28,6 +28,7 @@ fn main() -> Result<()> {
         },
         PolicyKind::Oracle { cutoff_kw: 5 },
         PolicyKind::AppLevel { qos_ms: 500.0, sampling_ms: 50.0 },
+        PolicyKind::QueueAware,
         PolicyKind::LinuxRandom,
         PolicyKind::RoundRobin,
         PolicyKind::AllBig,
@@ -69,6 +70,9 @@ fn main() -> Result<()> {
     println!("      app-level is the Octopus-Man-style whole-pool controller the paper");
     println!("      contrasts against: it can grow capacity but cannot rescue an");
     println!("      individual straggler — the request-level granularity gap.");
+    println!("      queue-aware reads the SchedCtx backlog snapshot: join-shortest-");
+    println!("      queue placement (strongest under per_core), big-core-first under");
+    println!("      backlog pressure — placement acting on observable queue state.");
     println!("      --discipline all additionally sweeps the sched-layer queue");
     println!("      disciplines (centralized cFCFS / per-core dFCFS / work stealing).");
     Ok(())

@@ -18,10 +18,10 @@ use std::time::Instant;
 
 use hurryup::config::{CorpusConfig, KeywordMix, SimConfig};
 use hurryup::ipc::{RequestTag, StatsRecord};
-use hurryup::mapper::{DispatchInfo, HurryUp, HurryUpParams, Policy, PolicyKind};
+use hurryup::mapper::{DispatchInfo, HurryUp, HurryUpParams, Policy, PolicyKind, SchedCtx};
 use hurryup::metrics::LatencyHistogram;
 use hurryup::platform::{AffinityTable, CoreId, ThreadId, Topology};
-use hurryup::sched::{DisciplineKind, Dispatcher};
+use hurryup::sched::{DisciplineKind, Dispatcher, QueueView};
 use hurryup::search::engine::BlockScorer;
 use hurryup::search::{Bm25Params, Index, Query, RustScorer, ScoreBlock, SearchEngine, TopK};
 use hurryup::sim::Simulation;
@@ -106,8 +106,15 @@ fn main() {
                 ts_ms: 1000 + t as u64,
             });
         }
+        let mut tick_rng = Rng::new(1);
         let (iters, secs) = measure(300, || {
-            black_box(policy.tick(black_box(5000.0), &aff));
+            let mut ctx = SchedCtx {
+                aff: &aff,
+                rng: &mut tick_rng,
+                queues: QueueView::empty(),
+                now_ms: black_box(5000.0),
+            };
+            black_box(policy.tick(&mut ctx));
         });
         report("mapper_tick", "ticks", 1.0, iters, secs);
     }
@@ -125,16 +132,17 @@ fn main() {
             let mut dispatcher: Dispatcher<usize> = Dispatcher::new(kind.build(6));
             let (iters, secs) = measure(300, || {
                 for i in 0..64usize {
-                    dispatcher.enqueue(
+                    let _ = dispatcher.enqueue(
                         i,
                         DispatchInfo { keywords: 3 },
                         policy.as_mut(),
                         &aff,
                         &mut rng,
+                        0.0,
                     );
                 }
                 while dispatcher
-                    .next(&idle, policy.as_mut(), &aff, &mut rng)
+                    .next(&idle, policy.as_mut(), &aff, &mut rng, 0.0)
                     .is_some()
                 {}
             });

@@ -26,6 +26,7 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
             "big_cores",
             "little_cores",
             "discipline",
+            "shed_deadline_ms",
             "qps",
             "num_requests",
             "warmup_requests",
@@ -72,6 +73,9 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
         cfg.discipline = DisciplineKind::parse(v)
             .ok_or_else(|| Error::config(format!("unknown discipline `{v}`")))?;
     }
+    if let Some(v) = get_f64(&doc, "shed_deadline_ms")? {
+        cfg.shed_deadline_ms = Some(v);
+    }
     if let Some(v) = get_f64(&doc, "service.base_units")? {
         cfg.service.base_units = v;
     }
@@ -93,7 +97,8 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
     }
 
     if let Some(kind) = doc.get("policy.kind").and_then(Value::as_str) {
-        cfg.policy = match kind {
+        // Selector strings are case-insensitive, trimmed, `-` == `_`.
+        cfg.policy = match crate::util::norm_token(kind).as_str() {
             "hurry_up" => PolicyKind::HurryUp {
                 sampling_ms: get_f64(&doc, "policy.sampling_ms")?.unwrap_or(25.0),
                 threshold_ms: get_f64(&doc, "policy.threshold_ms")?.unwrap_or(50.0),
@@ -109,14 +114,13 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
                 qos_ms: get_f64(&doc, "policy.qos_ms")?.unwrap_or(500.0),
                 sampling_ms: get_f64(&doc, "policy.sampling_ms")?.unwrap_or(50.0),
             },
-            other => {
-                return Err(Error::config(format!("unknown policy kind `{other}`")))
-            }
+            "queue_aware" => PolicyKind::QueueAware,
+            _ => return Err(Error::config(format!("unknown policy kind `{kind}`"))),
         };
     }
 
     if let Some(kind) = doc.get("mix.kind").and_then(Value::as_str) {
-        cfg.keyword_mix = match kind {
+        cfg.keyword_mix = match crate::util::norm_token(kind).as_str() {
             "paper" => KeywordMix::Paper,
             "fixed" => KeywordMix::Fixed(
                 get_i64(&doc, "mix.fixed_k")?
@@ -241,5 +245,30 @@ mod tests {
         let (b, l) = cfg.noise_override.unwrap();
         assert_eq!(l, 0.6);
         assert_eq!(b, crate::platform::CoreKind::Big.noise_sigma());
+    }
+
+    #[test]
+    fn selectors_are_case_insensitive() {
+        let cfg = sim_config_from_str("discipline = \"WORK_STEAL\"").unwrap();
+        assert_eq!(cfg.discipline, DisciplineKind::WorkSteal);
+        let cfg = sim_config_from_str("discipline = \" Centralized \"").unwrap();
+        assert_eq!(cfg.discipline, DisciplineKind::Centralized);
+        let cfg = sim_config_from_str("[policy]\nkind = \"Hurry-Up\"").unwrap();
+        assert!(matches!(cfg.policy, PolicyKind::HurryUp { .. }));
+        let cfg = sim_config_from_str("[policy]\nkind = \"QUEUE_AWARE\"").unwrap();
+        assert_eq!(cfg.policy, PolicyKind::QueueAware);
+        let cfg = sim_config_from_str("[mix]\nkind = \"Paper\"").unwrap();
+        assert_eq!(cfg.keyword_mix, KeywordMix::Paper);
+    }
+
+    #[test]
+    fn shed_deadline_parsed_and_validated() {
+        let cfg = sim_config_from_str("shed_deadline_ms = 500.0").unwrap();
+        assert_eq!(cfg.shed_deadline_ms, Some(500.0));
+        assert_eq!(
+            sim_config_from_str("qps = 5.0").unwrap().shed_deadline_ms,
+            None
+        );
+        assert!(sim_config_from_str("shed_deadline_ms = \"soon\"").is_err());
     }
 }

@@ -149,6 +149,12 @@ pub struct SimConfig {
     /// Queue discipline of the scheduling layer (default: the paper's
     /// single centralized FIFO).
     pub discipline: DisciplineKind,
+    /// Admission-control deadline, ms: when set, the configured policy is
+    /// wrapped in [`crate::mapper::Shedding`], refusing requests whose
+    /// projected queueing delay exceeds it. `None` (default) and
+    /// `Some(f64::INFINITY)` both admit everything — the latter takes the
+    /// admission code path but reproduces seeded runs bit-for-bit.
+    pub shed_deadline_ms: Option<f64>,
     /// Offered load, queries per second.
     pub qps: f64,
     /// Number of requests to inject.
@@ -180,6 +186,7 @@ impl SimConfig {
             service: ServiceModel::paper_calibrated(),
             policy,
             discipline: DisciplineKind::Centralized,
+            shed_deadline_ms: None,
             qps: 30.0,
             num_requests: 100_000,
             warmup_requests: 200,
@@ -238,6 +245,14 @@ impl SimConfig {
         self
     }
 
+    /// Builder: enable admission control with a projected-queueing-delay
+    /// deadline (ms). `f64::INFINITY` exercises the admission path without
+    /// ever shedding.
+    pub fn with_shed_deadline(mut self, deadline_ms: f64) -> Self {
+        self.shed_deadline_ms = Some(deadline_ms);
+        self
+    }
+
     /// Core speed (units/ms) for a kind, honouring the DVFS override.
     pub fn speed(&self, kind: CoreKind) -> f64 {
         match (self.speed_override, kind) {
@@ -266,6 +281,13 @@ impl SimConfig {
         }
         if self.num_requests == 0 {
             return Err(crate::error::Error::config("num_requests must be > 0"));
+        }
+        if let Some(d) = self.shed_deadline_ms {
+            if d.is_nan() {
+                return Err(crate::error::Error::config(
+                    "shed_deadline_ms must be a number (use inf to disable shedding)",
+                ));
+            }
         }
         Ok(self)
     }
@@ -311,19 +333,34 @@ mod tests {
             .with_seed(7)
             .with_topology(1, 0)
             .with_mix(KeywordMix::Fixed(3))
-            .with_discipline(DisciplineKind::WorkSteal);
+            .with_discipline(DisciplineKind::WorkSteal)
+            .with_shed_deadline(500.0);
         assert_eq!(c.qps, 20.0);
         assert_eq!(c.num_requests, 10);
         assert_eq!(c.seed, 7);
         assert_eq!(c.topology().label(), "1B");
         assert_eq!(c.keyword_mix, KeywordMix::Fixed(3));
         assert_eq!(c.discipline, DisciplineKind::WorkSteal);
+        assert_eq!(c.shed_deadline_ms, Some(500.0));
     }
 
     #[test]
-    fn paper_default_uses_centralized_queue() {
+    fn paper_default_uses_centralized_queue_without_admission() {
         let c = SimConfig::paper_default(PolicyKind::LinuxRandom);
         assert_eq!(c.discipline, DisciplineKind::Centralized);
+        assert_eq!(c.shed_deadline_ms, None);
+    }
+
+    #[test]
+    fn nan_shed_deadline_rejected_infinite_allowed() {
+        assert!(SimConfig::paper_default(PolicyKind::LinuxRandom)
+            .with_shed_deadline(f64::NAN)
+            .validated()
+            .is_err());
+        assert!(SimConfig::paper_default(PolicyKind::LinuxRandom)
+            .with_shed_deadline(f64::INFINITY)
+            .validated()
+            .is_ok());
     }
 
     #[test]

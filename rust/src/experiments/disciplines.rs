@@ -12,6 +12,10 @@
 //! * **work_steal** recovers most of the centralized tail while keeping
 //!   per-core queues: idle cores drain the most backlogged queue oldest
 //!   first.
+//! * **queue-aware** placement (join-shortest-queue, big-first under
+//!   pressure) closes most of per_core's remaining gap at admission time —
+//!   it is the policy-side answer to the same problem work stealing solves
+//!   on the discipline side, enabled by the `SchedCtx` backlog snapshot.
 //! * Hurry-up's migration win persists under every discipline (it acts on
 //!   *running* threads, orthogonally to how waiting requests are queued).
 
@@ -23,7 +27,7 @@ use crate::sim::Simulation;
 use crate::util::fmt::Table;
 
 /// The policy axis of the grid.
-fn policies() -> [PolicyKind; 3] {
+fn policies() -> [PolicyKind; 4] {
     [
         PolicyKind::HurryUp {
             sampling_ms: 25.0,
@@ -31,6 +35,7 @@ fn policies() -> [PolicyKind; 3] {
         },
         PolicyKind::LinuxRandom,
         PolicyKind::RoundRobin,
+        PolicyKind::QueueAware,
     ]
 }
 
@@ -90,8 +95,8 @@ mod tests {
     fn grid_renders_every_cell() {
         let tables = run(Scale::tiny());
         assert_eq!(tables.len(), 1);
-        // 3 disciplines × 3 policies.
-        assert_eq!(tables[0].len(), 9);
+        // 3 disciplines × 4 policies.
+        assert_eq!(tables[0].len(), 12);
     }
 
     #[test]
@@ -115,6 +120,28 @@ mod tests {
             assert_eq!(a.completed_ms, b.completed_ms);
             assert_eq!(a.final_kind, b.final_kind);
         }
+    }
+
+    #[test]
+    fn queue_aware_placement_beats_random_under_per_core() {
+        // JSQ placement exists to fix random enqueue's unlucky-queue tail:
+        // on the same trace under plain per-core queues (no stealing to
+        // mask placement quality) it must produce a lower p90.
+        let base = SimConfig::paper_default(PolicyKind::LinuxRandom)
+            .with_qps(30.0)
+            .with_requests(6_000)
+            .with_seed(0xD15E)
+            .with_discipline(DisciplineKind::PerCore);
+        let workload = runner::shared_workload(&base);
+        let random = Simulation::new(base.clone()).run_workload(&workload);
+        let jsq = Simulation::new(base.clone().with_policy(PolicyKind::QueueAware))
+            .run_workload(&workload);
+        assert!(
+            jsq.p90_ms() < random.p90_ms(),
+            "queue-aware p90 {} vs random p90 {}",
+            jsq.p90_ms(),
+            random.p90_ms()
+        );
     }
 
     #[test]

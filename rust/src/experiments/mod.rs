@@ -13,6 +13,7 @@
 //! | `power_table` | §IV-A power-efficiency facts                    |
 //! | `ablations` | extra design-choice studies (DESIGN.md §6)        |
 //! | `disciplines` | queue-discipline × policy grid (`sched` layer)  |
+//! | `shedding`  | admission control: p90/goodput ± load shedding    |
 //!
 //! Scale: experiments default to a fast setting; set `HURRYUP_FULL=1` for
 //! the paper's 1×10⁵-request scale.
@@ -28,6 +29,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod power_table;
 pub mod runner;
+pub mod shedding;
 
 pub use runner::{compare_policies, Scale};
 
@@ -49,6 +51,7 @@ pub fn registry() -> Vec<(&'static str, ExperimentFn)> {
         ("power_table", power_table::run as ExperimentFn),
         ("ablations", ablations::run as ExperimentFn),
         ("disciplines", disciplines::run as ExperimentFn),
+        ("shedding", shedding::run as ExperimentFn),
     ]
 }
 

@@ -1,0 +1,132 @@
+//! Admission-control ablation: plain Hurry-up vs the shedding wrapper
+//! (`Shedding` over Hurry-up, the "SheddingHurryUp" configuration) across
+//! loads, over one shared workload trace per load (paired runs).
+//!
+//! What to look for:
+//!
+//! * At and below the capacity knee (≤ 30 QPS, ρ < 1) the projected delay
+//!   rarely crosses the deadline: shed counts stay ~0 and both rows match.
+//! * At overload (≥ 40 QPS, ρ > 1) the plain queue grows without bound and
+//!   every admitted request pays the accumulated delay — p90 explodes.
+//!   The shedder refuses exactly the excess, so the *admitted* requests'
+//!   p90 stays bounded near the deadline while goodput holds at ~the
+//!   service capacity. That trade — a few refused requests for a usable
+//!   tail on the rest — is what admission control buys; neither migration
+//!   (Hurry-up) nor queue structure (`figures disciplines`) can provide it.
+
+use super::runner::Scale;
+use crate::config::SimConfig;
+use crate::mapper::PolicyKind;
+use crate::sim::Simulation;
+use crate::util::fmt::Table;
+
+/// Deadline used by the ablation, ms (the paper's 500 ms QoS target).
+pub const DEADLINE_MS: f64 = 500.0;
+
+/// Loads swept, QPS (capacity knee is just under 35 for the paper mix).
+const LOADS: [f64; 4] = [20.0, 30.0, 40.0, 50.0];
+
+fn hurry_up() -> PolicyKind {
+    PolicyKind::HurryUp {
+        sampling_ms: 25.0,
+        threshold_ms: 50.0,
+    }
+}
+
+/// Shedding vs no-shedding grid across loads, shared trace per load.
+pub fn sweep(requests: usize) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Admission control: hurry-up ± shed(deadline={DEADLINE_MS:.0}ms) \
+             ({requests} requests/load, shared trace, p90 over admitted)"
+        ),
+        &[
+            "qps",
+            "policy",
+            "admitted",
+            "shed",
+            "goodput_qps",
+            "p90_ms",
+            "p99_ms",
+        ],
+    );
+    for qps in LOADS {
+        let base = SimConfig::paper_default(hurry_up())
+            .with_qps(qps)
+            .with_requests(requests)
+            .with_seed(0x5AED);
+        let workload = super::runner::shared_workload(&base);
+        let plain = Simulation::new(base.clone()).run_workload(&workload);
+        let shed = Simulation::new(base.clone().with_shed_deadline(DEADLINE_MS))
+            .run_workload(&workload);
+        for (label, out) in [("hurry-up", &plain), ("shed-hurry-up", &shed)] {
+            t.row(&[
+                format!("{qps:.0}"),
+                label.into(),
+                out.completed.to_string(),
+                out.shed.to_string(),
+                format!("{:.1}", out.goodput_qps()),
+                format!("{:.0}", out.p90_ms()),
+                format!("{:.0}", out.latency.percentile(0.99)),
+            ]);
+        }
+    }
+    t
+}
+
+/// Regenerate the shedding ablation.
+pub fn run(scale: Scale) -> Vec<Table> {
+    vec![sweep(scale.cell_requests(8))]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::runner;
+
+    #[test]
+    fn table_renders_two_rows_per_load() {
+        let tables = run(Scale::tiny());
+        assert_eq!(tables.len(), 1);
+        assert_eq!(tables[0].len(), 2 * LOADS.len());
+    }
+
+    #[test]
+    fn shedding_cuts_admitted_p90_at_overload() {
+        // The acceptance anchor: at ≥ 40 QPS (ρ > 1) the shedding policy
+        // must report sheds and a lower p90 on admitted requests than
+        // plain Hurry-up, while goodput stays positive.
+        let base = SimConfig::paper_default(hurry_up())
+            .with_qps(40.0)
+            .with_requests(3_000)
+            .with_seed(0x5AEE);
+        let workload = runner::shared_workload(&base);
+        let plain = Simulation::new(base.clone()).run_workload(&workload);
+        let shed = Simulation::new(base.clone().with_shed_deadline(DEADLINE_MS))
+            .run_workload(&workload);
+        assert!(shed.shed > 0, "overload must trigger shedding");
+        assert_eq!(shed.completed + shed.shed, 3_000, "conservation");
+        assert!(
+            shed.p90_ms() < plain.p90_ms(),
+            "admitted p90 {} must beat plain p90 {}",
+            shed.p90_ms(),
+            plain.p90_ms()
+        );
+        assert!(shed.goodput_qps() > 0.0);
+        assert_eq!(plain.shed, 0, "no admission control on the plain run");
+    }
+
+    #[test]
+    fn no_shedding_at_light_load() {
+        let base = SimConfig::paper_default(hurry_up())
+            .with_qps(10.0)
+            .with_requests(1_500)
+            .with_seed(0x5AEF);
+        let workload = runner::shared_workload(&base);
+        let shed = Simulation::new(base.with_shed_deadline(DEADLINE_MS))
+            .run_workload(&workload);
+        // ρ ≈ 0.3: the projected delay never approaches 500 ms.
+        assert_eq!(shed.shed, 0);
+        assert_eq!(shed.completed, 1_500);
+    }
+}

@@ -18,12 +18,15 @@
 //!   the kernel and reduces to a block-local top-k, AOT-lowered once to HLO
 //!   text (`artifacts/scorer.hlo.txt`).
 //! * **Layer 3** — this crate: the search engine, the big/little platform
-//!   model, the Hurry-up mapper, the shared scheduling layer (`sched`:
-//!   pluggable queue disciplines — centralized FCFS, per-core dFCFS, work
-//!   stealing — driven identically by both execution modes), the
-//!   discrete-event simulator, the live thread-pool server (which executes
-//!   the AOT artifact on the request path via PJRT), the load generator,
-//!   metrics and the experiment harness.
+//!   model, the Hurry-up mapper, the shared scheduling layer (`sched`: a
+//!   policy platform — every admission/placement/migration decision gets a
+//!   `SchedCtx` with the live backlog snapshot; pluggable queue
+//!   disciplines — centralized FCFS, per-core dFCFS, work stealing — and
+//!   first-class admission control / load shedding, driven identically by
+//!   both execution modes), the discrete-event simulator, the live
+//!   thread-pool server (which executes the AOT artifact on the request
+//!   path via PJRT), the load generator, metrics and the experiment
+//!   harness.
 //!
 //! Python runs only at `make artifacts`; the serving binary is pure Rust.
 //!

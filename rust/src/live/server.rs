@@ -10,11 +10,11 @@ use crate::config::KeywordMix;
 use crate::error::Result;
 use crate::ipc::{stats_channel, RequestTag, StatsRecord, StatsWriter};
 use crate::loadgen::{ArrivalProcess, QueryGen, Workload};
-use crate::mapper::{DispatchInfo, HurryUp, HurryUpParams, Policy, PolicyKind, QueueView};
+use crate::mapper::{DispatchInfo, HurryUp, HurryUpParams, Policy, PolicyKind, Shedding};
 use crate::metrics::LatencyHistogram;
 use crate::platform::{AffinityTable, CoreKind, EnergyMeters, PowerModel, ThreadId, Topology};
 use crate::runtime::XlaScorer;
-use crate::sched::{DisciplineKind, SharedDispatcher};
+use crate::sched::{AdmissionOutcome, DisciplineKind, QueueView, SchedCtx, SharedDispatcher};
 use crate::search::engine::BlockScorer;
 use crate::search::{Bm25Params, Index, Query, RustScorer, SearchEngine};
 use crate::util::Rng;
@@ -31,6 +31,11 @@ pub struct LiveConfig {
     /// Queue discipline of the scheduling layer (default: the paper's
     /// single centralized FIFO; same selector as `SimConfig.discipline`).
     pub discipline: DisciplineKind,
+    /// Admission-control deadline, ms: when set, the placement policy is
+    /// wrapped in [`Shedding`] and requests whose projected queueing delay
+    /// exceeds it are refused at `push` (same semantics as
+    /// `SimConfig::shed_deadline_ms`).
+    pub shed_deadline_ms: Option<f64>,
     /// Offered load, QPS.
     pub qps: f64,
     /// Requests to serve.
@@ -56,6 +61,7 @@ impl Default for LiveConfig {
             little_cores: 4,
             hurryup: Some(HurryUpParams::default()),
             discipline: DisciplineKind::Centralized,
+            shed_deadline_ms: None,
             qps: 30.0,
             num_requests: 300,
             seed: 7,
@@ -110,6 +116,8 @@ pub struct LiveReport {
     pub duration_ms: f64,
     /// Migrations applied by the mapper.
     pub migrations: usize,
+    /// Requests refused at admission (load shedding).
+    pub shed: usize,
     /// Scorer backend used ("xla" or "rust").
     pub backend: &'static str,
     /// Queue-discipline name (`sched` layer).
@@ -119,9 +127,25 @@ pub struct LiveReport {
 }
 
 impl LiveReport {
-    /// Achieved throughput, QPS.
+    /// Achieved throughput, QPS. 0.0 for degenerate zero-span runs
+    /// (e.g. everything shed), never NaN/inf.
     pub fn throughput_qps(&self) -> f64 {
+        if self.duration_ms <= 0.0 || !self.duration_ms.is_finite() {
+            return 0.0;
+        }
         self.per_request.len() as f64 / (self.duration_ms / 1000.0)
+    }
+
+    /// Goodput: served (admitted) requests per second — identical to
+    /// [`LiveReport::throughput_qps`], named for shedding reports where
+    /// the offered load is higher.
+    pub fn goodput_qps(&self) -> f64 {
+        self.throughput_qps()
+    }
+
+    /// Requests offered to the server (served + shed).
+    pub fn offered(&self) -> usize {
+        self.per_request.len() + self.shed
     }
 
     /// p90 end-to-end latency, ms.
@@ -136,6 +160,8 @@ struct SharedState {
     speeds: Vec<SpeedCell>,
     migrations: std::sync::atomic::AtomicUsize,
     done: std::sync::atomic::AtomicUsize,
+    /// Requests refused at admission (incremented by the load generator).
+    shed: std::sync::atomic::AtomicUsize,
 }
 
 /// The live server.
@@ -172,6 +198,14 @@ impl LiveServer {
             .build(&topology),
             None => PolicyKind::LinuxRandom.build(&topology),
         };
+        // First-class admission control: wrap the placement policy in the
+        // projected-delay shedder so `push` can refuse requests. (The live
+        // queue policy never sees the stats stream, so the estimator stays
+        // at its calibrated fallback — deterministic and conservative.)
+        let placement: Box<dyn Policy> = match cfg.shed_deadline_ms {
+            Some(deadline_ms) => Box::new(Shedding::new(placement, deadline_ms)),
+            None => placement,
+        };
         let shared = Arc::new(SharedState {
             queue: SharedDispatcher::new(
                 cfg.discipline.build(n_threads),
@@ -182,6 +216,7 @@ impl LiveServer {
             speeds,
             migrations: std::sync::atomic::AtomicUsize::new(0),
             done: std::sync::atomic::AtomicUsize::new(0),
+            shed: std::sync::atomic::AtomicUsize::new(0),
         });
         let (stats_tx, stats_rx) = stats_channel()?;
         let epoch = Instant::now();
@@ -205,9 +240,13 @@ impl LiveServer {
             let shared = shared.clone();
             let topo = topology.clone();
             let total = cfg.num_requests;
+            let tick_seed = cfg.seed ^ 0x71C4_11FE;
             let mut rx = stats_rx;
             std::thread::spawn(move || {
                 let mut policy = HurryUp::new(params, topo.clone());
+                // Ctx rng for tick-time decisions (Algorithm 1 draws none;
+                // a queue-aware mapper legitimately could).
+                let mut tick_rng = Rng::new(tick_seed);
                 rx.set_timeout(Some(Duration::from_millis(
                     (params.sampling_ms / 4.0).max(1.0) as u64,
                 )))
@@ -223,15 +262,22 @@ impl LiveServer {
                     let now = now_ms();
                     if now - last_tick >= params.sampling_ms {
                         last_tick = now;
-                        // Queue visibility at tick time — the same
-                        // `observe_queues` contract the simulator honours.
-                        let total = shared.queue.queue_view_into(&mut depths);
-                        policy.observe_queues(QueueView {
-                            per_core: &depths,
-                            total,
-                        });
+                        // Tick with full SchedCtx — the same backlog
+                        // visibility contract the simulator honours.
+                        let queued = shared.queue.queue_view_into(&mut depths);
                         let mut aff = shared.aff.lock().expect("aff poisoned");
-                        let migs = policy.tick(now, &aff);
+                        let migs = {
+                            let mut ctx = SchedCtx {
+                                aff: &aff,
+                                rng: &mut tick_rng,
+                                queues: QueueView {
+                                    per_core: &depths,
+                                    total: queued,
+                                },
+                                now_ms: now,
+                            };
+                            policy.tick(&mut ctx)
+                        };
                         for m in &migs {
                             let (t_big, t_little) = aff.swap(m.big_core, m.little_core);
                             shared.speeds[t_big.0]
@@ -243,7 +289,12 @@ impl LiveServer {
                             .migrations
                             .fetch_add(migs.len(), Ordering::Relaxed);
                     }
-                    if shared.done.load(Ordering::Relaxed) >= total {
+                    // Shed requests never complete: count them toward the
+                    // exit condition or the mapper would spin forever.
+                    if shared.done.load(Ordering::Relaxed)
+                        + shared.shed.load(Ordering::Relaxed)
+                        >= total
+                    {
                         break;
                     }
                 }
@@ -340,7 +391,7 @@ impl LiveServer {
                 .map(|&id| self.index.term(id).to_string())
                 .collect();
             let keywords = req.keywords;
-            shared.queue.push(
+            let outcome = shared.queue.push(
                 LiveRequest {
                     widx: 0,
                     query: Query::from_terms(terms),
@@ -349,6 +400,9 @@ impl LiveServer {
                 DispatchInfo { keywords },
                 &shared.aff,
             );
+            if let AdmissionOutcome::Shed { .. } = outcome {
+                shared.shed.fetch_add(1, Ordering::Relaxed);
+            }
         }
         shared.queue.close();
 
@@ -377,6 +431,7 @@ impl LiveServer {
             energy,
             duration_ms,
             migrations,
+            shed: shared.shed.load(Ordering::Relaxed),
             backend: if cfg.use_xla { "xla" } else { "rust" },
             discipline: discipline_label,
             total_passes,

@@ -1,7 +1,9 @@
 //! Worker-side pieces: the speed-emulating scorer wrapper and the queued
-//! request payload. (Queueing/dispatch itself lives in the shared
-//! [`crate::sched`] layer — see [`crate::sched::SharedDispatcher`] — so the
-//! live server and the simulator exercise identical discipline code.)
+//! request payload. (The enqueue → admit → queue → next lifecycle lives in
+//! the shared [`crate::sched`] layer — see
+//! [`crate::sched::SharedDispatcher`] — so the live server and the
+//! simulator exercise identical admission + discipline code; workers only
+//! ever see requests that survived admission.)
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

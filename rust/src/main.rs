@@ -26,17 +26,21 @@ hurryup — request-level thread mapping for web search on big/little cores
 
 USAGE:
   hurryup sim     [--config f.toml] [--qps N] [--requests N] [--policy P]
-                  [--discipline D] [--seed N] [--threshold-ms N] [--sampling-ms N]
+                  [--discipline D] [--shed-deadline-ms N] [--seed N]
+                  [--threshold-ms N] [--sampling-ms N]
   hurryup serve   [--qps N] [--requests N] [--policy P] [--discipline D]
-                  [--xla] [--docs N]
+                  [--shed-deadline-ms N] [--xla] [--docs N]
   hurryup index   [--docs N] [--vocab N]
   hurryup query   --q \"search terms\" [--xla] [--docs N]
   hurryup figures [fig1 fig2 fig3 fig6 fig7 fig8 fig9 power_table ablations
-                  disciplines] [--full]
+                  disciplines shedding] [--full | --scale quick|full]
   hurryup check
 
-POLICIES:    hurry_up | linux_random | round_robin | all_big | all_little | oracle | app_level
+POLICIES:    hurry_up | linux_random | round_robin | all_big | all_little |
+             oracle | app_level | queue_aware   (names are case-insensitive)
 DISCIPLINES: centralized (cfcfs) | per_core (dfcfs) | work_steal (steal)
+ADMISSION:   --shed-deadline-ms wraps the policy in the projected-delay
+             shedder (inf = admission path, never sheds)
 ";
 
 fn main() {
@@ -83,7 +87,9 @@ fn discipline_from(args: &Args, default: DisciplineKind) -> Result<DisciplineKin
 fn policy_from(args: &Args) -> Result<PolicyKind> {
     let sampling = args.get_f64("sampling-ms", 25.0)?;
     let threshold = args.get_f64("threshold-ms", 50.0)?;
-    Ok(match args.get("policy").unwrap_or("hurry_up") {
+    let raw = args.get("policy").unwrap_or("hurry_up");
+    // Case-insensitive, trimmed, `-` == `_` (so `--policy Hurry-Up` works).
+    Ok(match hurryup::util::norm_token(raw).as_str() {
         "hurry_up" => PolicyKind::HurryUp {
             sampling_ms: sampling,
             threshold_ms: threshold,
@@ -99,8 +105,26 @@ fn policy_from(args: &Args) -> Result<PolicyKind> {
             qos_ms: args.get_f64("qos-ms", 500.0)?,
             sampling_ms: sampling,
         },
-        other => return Err(Error::invalid(format!("unknown policy `{other}`"))),
+        "queue_aware" => PolicyKind::QueueAware,
+        _ => return Err(Error::invalid(format!("unknown policy `{raw}`"))),
     })
+}
+
+/// Optional `--shed-deadline-ms` value; accepts `inf` for the
+/// admission-path-without-shedding configuration.
+fn shed_deadline_from(args: &Args) -> Result<Option<f64>> {
+    match args.get("shed-deadline-ms") {
+        None => Ok(None),
+        Some(v) => match v.parse::<f64>() {
+            // NaN compares false against every projection — it would
+            // silently disable shedding, so reject it up front for both
+            // `sim` and `serve` (matching SimConfig::validated()).
+            Ok(d) if !d.is_nan() => Ok(Some(d)),
+            _ => Err(Error::invalid(format!(
+                "--shed-deadline-ms must be a number or inf, got `{v}`"
+            ))),
+        },
+    }
 }
 
 fn cmd_sim(args: &Args) -> Result<()> {
@@ -112,20 +136,28 @@ fn cmd_sim(args: &Args) -> Result<()> {
     cfg.num_requests = args.get_usize("requests", cfg.num_requests.min(20_000))?;
     cfg.seed = args.get_usize("seed", cfg.seed as usize)? as u64;
     cfg.discipline = discipline_from(args, cfg.discipline)?;
+    if let Some(deadline) = shed_deadline_from(args)? {
+        cfg.shed_deadline_ms = Some(deadline);
+    }
     let cfg = cfg.validated()?;
     println!(
-        "sim: {} | {} qps | {} requests | seed {} | queue {}",
+        "sim: {} | {} qps | {} requests | seed {} | queue {}{}",
         cfg.topology().label(),
         cfg.qps,
         cfg.num_requests,
         cfg.seed,
         cfg.discipline.label(),
+        match cfg.shed_deadline_ms {
+            Some(d) => format!(" | shed-deadline {d} ms"),
+            None => String::new(),
+        },
     );
     let out = Simulation::new(cfg).run();
     println!("policy     : {}", out.policy);
     println!("discipline : {}", out.discipline);
     println!("completed  : {}", out.completed);
-    println!("throughput : {:.1} qps", out.throughput_qps());
+    println!("shed       : {} ({:.1}% of offered)", out.shed, out.shed_rate() * 100.0);
+    println!("goodput    : {:.1} qps", out.goodput_qps());
     println!("p50 / p90 / p99 : {:.0} / {:.0} / {:.0} ms",
         out.latency.percentile(0.5), out.p90_ms(), out.latency.percentile(0.99));
     println!("max latency: {:.0} ms", out.latency.max());
@@ -144,15 +176,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     .build();
     let index = Arc::new(Index::build(&corpus));
-    let hurryup = match args.get("policy").unwrap_or("hurry_up") {
+    let raw_policy = args.get("policy").unwrap_or("hurry_up");
+    let hurryup = match hurryup::util::norm_token(raw_policy).as_str() {
         "hurry_up" => Some(HurryUpParams {
             sampling_ms: args.get_f64("sampling-ms", 25.0)?,
             threshold_ms: args.get_f64("threshold-ms", 50.0)?,
         }),
         "linux_random" => None,
-        other => {
+        _ => {
             return Err(Error::invalid(format!(
-                "live server supports hurry_up | linux_random, got `{other}`"
+                "live server supports hurry_up | linux_random, got `{raw_policy}`"
             )))
         }
     };
@@ -162,19 +195,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         use_xla: args.has("xla"),
         hurryup,
         discipline: discipline_from(args, DisciplineKind::Centralized)?,
+        shed_deadline_ms: shed_deadline_from(args)?,
         ..LiveConfig::default()
     };
     println!(
-        "serve: 2B4L | {} qps | {} requests | backend={} | mapper={} | queue {}",
+        "serve: 2B4L | {} qps | {} requests | backend={} | mapper={} | queue {}{}",
         cfg.qps,
         cfg.num_requests,
         if cfg.use_xla { "xla" } else { "rust" },
         if cfg.hurryup.is_some() { "hurry-up" } else { "static" },
         cfg.discipline.label(),
+        match cfg.shed_deadline_ms {
+            Some(d) => format!(" | shed-deadline {d} ms"),
+            None => String::new(),
+        },
     );
     let report = LiveServer::new(cfg, index).run()?;
     println!("served     : {}", report.per_request.len());
-    println!("throughput : {:.1} qps", report.throughput_qps());
+    println!("shed       : {}", report.shed);
+    println!("goodput    : {:.1} qps", report.goodput_qps());
     println!(
         "p50 / p90 / p99 : {:.0} / {:.0} / {:.0} ms",
         report.latency.percentile(0.5),
@@ -236,10 +275,22 @@ fn cmd_query(args: &Args) -> Result<()> {
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {
+    if args.has("full") && args.get("scale").is_some() {
+        return Err(Error::invalid("--full conflicts with --scale; pass one"));
+    }
     let scale = if args.has("full") {
         Scale { requests: 100_000 }
     } else {
-        Scale::from_env()
+        match args.get("scale") {
+            Some("quick") => Scale { requests: 2_000 }, // CI smoke runs
+            Some("full") => Scale { requests: 100_000 },
+            Some(other) => {
+                return Err(Error::invalid(format!(
+                    "--scale must be quick or full, got `{other}`"
+                )))
+            }
+            None => Scale::from_env(),
+        }
     };
     let ids: Vec<String> = if args.positional.is_empty() {
         experiments::registry()

@@ -24,10 +24,9 @@
 use std::collections::HashMap;
 use std::collections::VecDeque;
 
-use super::{random_idle, DispatchInfo, Policy};
+use super::{random_idle, DispatchInfo, Policy, SchedCtx};
 use crate::ipc::{RequestTag, StatsRecord};
-use crate::platform::{AffinityTable, CoreId, CoreKind, Topology};
-use crate::util::Rng;
+use crate::platform::{CoreId, CoreKind, Topology};
 
 /// Octopus-Man-style whole-pool feedback controller.
 pub struct AppLevel {
@@ -114,9 +113,8 @@ impl Policy for AppLevel {
     fn choose_core(
         &mut self,
         idle: &[CoreId],
-        _aff: &AffinityTable,
         _info: DispatchInfo,
-        rng: &mut Rng,
+        ctx: &mut SchedCtx<'_>,
     ) -> Option<CoreId> {
         let active = &self.ladder[self.rung];
         let eligible: Vec<CoreId> = idle
@@ -124,7 +122,7 @@ impl Policy for AppLevel {
             .copied()
             .filter(|c| active.contains(c))
             .collect();
-        random_idle(&eligible, rng)
+        random_idle(&eligible, ctx.rng)
     }
 
     fn observe(&mut self, rec: &StatsRecord) {
@@ -142,7 +140,7 @@ impl Policy for AppLevel {
         }
     }
 
-    fn tick(&mut self, _now_ms: f64, _aff: &AffinityTable) -> Vec<super::Migration> {
+    fn tick(&mut self, _ctx: &mut SchedCtx<'_>) -> Vec<super::Migration> {
         // Whole-application decision only: adjust the rung; never migrate
         // individual threads (the defining limitation vs Hurry-up).
         if let Some(p90) = self.window_p90() {
@@ -161,7 +159,9 @@ impl Policy for AppLevel {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::platform::ThreadId;
+    use crate::platform::{AffinityTable, ThreadId};
+    use crate::sched::testctx::ctx;
+    use crate::util::Rng;
 
     fn controller() -> (AppLevel, AffinityTable) {
         let topo = Topology::juno_r1();
@@ -198,23 +198,25 @@ mod tests {
     #[test]
     fn steps_down_when_fast() {
         let (mut p, aff) = controller();
+        let mut rng = Rng::new(1);
         for i in 0..32 {
             complete(&mut p, i, 1000 * i, 1000 * i + 50); // 50 ms services
         }
         let before = p.rung;
-        p.tick(1e6, &aff);
+        p.tick(&mut ctx(&aff, &mut rng));
         assert_eq!(p.rung, before - 1, "should scale down under light load");
     }
 
     #[test]
     fn steps_up_when_violating() {
         let (mut p, aff) = controller();
+        let mut rng = Rng::new(2);
         // Force to a low rung first.
         p.rung = 0;
         for i in 0..32 {
             complete(&mut p, i, 1000 * i, 1000 * i + 900); // 900 ms services
         }
-        p.tick(1e6, &aff);
+        p.tick(&mut ctx(&aff, &mut rng));
         assert_eq!(p.rung, 1, "should scale up on QoS violation");
         assert!(p.transitions >= 1);
     }
@@ -222,10 +224,11 @@ mod tests {
     #[test]
     fn never_migrates_threads() {
         let (mut p, aff) = controller();
+        let mut rng = Rng::new(3);
         for i in 0..32 {
             complete(&mut p, i, 0, 2000);
         }
-        assert!(p.tick(1e6, &aff).is_empty());
+        assert!(p.tick(&mut ctx(&aff, &mut rng)).is_empty());
     }
 
     #[test]
@@ -237,14 +240,14 @@ mod tests {
         let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
         for _ in 0..20 {
             assert_eq!(
-                p.choose_core(&idle, &aff, DispatchInfo { keywords: 3 }, &mut rng),
+                p.choose_core(&idle, DispatchInfo { keywords: 3 }, &mut ctx(&aff, &mut rng)),
                 Some(first_little)
             );
         }
         // If the active core is busy, the request must wait.
         let idle = vec![CoreId(0), CoreId(1)];
         assert_eq!(
-            p.choose_core(&idle, &aff, DispatchInfo { keywords: 3 }, &mut rng),
+            p.choose_core(&idle, DispatchInfo { keywords: 3 }, &mut ctx(&aff, &mut rng)),
             None
         );
     }

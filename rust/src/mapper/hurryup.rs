@@ -20,13 +20,18 @@
 //! requests", §IV-B). The `guarded` ablation flag (off by default, not part
 //! of the paper algorithm) skips a swap when the big-core thread has been
 //! running *longer* than the candidate.
+//!
+//! Backlog: Algorithm 1 ignores queue state by design — its `tick` reads
+//! only the request table and the clock, never `ctx.queues`, so seeded
+//! runs are invariant to whatever backlog snapshot the engine supplies
+//! (pinned by a test below). Queue-aware placement lives in
+//! [`super::QueueAware`]; admission control in [`super::Shedding`].
 
 use std::collections::HashMap;
 
-use super::{random_idle, DispatchInfo, Migration, Policy, QueueView};
+use super::{random_idle, DispatchInfo, Migration, Policy, SchedCtx};
 use crate::ipc::{RequestTag, StatsRecord};
-use crate::platform::{AffinityTable, CoreId, CoreKind, ThreadId, Topology};
-use crate::util::Rng;
+use crate::platform::{CoreId, CoreKind, ThreadId, Topology};
 
 /// Hurry-up's two empirically tuned parameters (§III-C).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -59,11 +64,6 @@ pub struct HurryUp {
     guarded: bool,
     /// Total migrations decided (reporting).
     migrations: usize,
-    /// Latest per-core backlog snapshot from the scheduling layer
-    /// (`Policy::observe_queues`). The paper's algorithm ignores backlog;
-    /// this is recorded for queue-aware extensions and diagnostics without
-    /// changing Algorithm 1's decisions.
-    queue_depths: Vec<usize>,
 }
 
 impl HurryUp {
@@ -76,7 +76,6 @@ impl HurryUp {
             request_table: HashMap::new(),
             guarded: false,
             migrations: 0,
-            queue_depths: Vec::new(),
         }
     }
 
@@ -99,12 +98,6 @@ impl HurryUp {
     /// Total migrations decided so far.
     pub fn migrations(&self) -> usize {
         self.migrations
-    }
-
-    /// Latest per-core backlog reported by the scheduling layer (empty
-    /// until the first `observe_queues`).
-    pub fn queue_depths(&self) -> &[usize] {
-        &self.queue_depths
     }
 
     /// Elapsed time of the request served by `tid`, if tracked.
@@ -133,19 +126,13 @@ impl Policy for HurryUp {
     fn choose_core(
         &mut self,
         idle: &[CoreId],
-        _aff: &AffinityTable,
         _info: DispatchInfo,
-        rng: &mut Rng,
+        ctx: &mut SchedCtx<'_>,
     ) -> Option<CoreId> {
         // Same random dispatch as the Linux baseline; the initial thread
         // pool mapping is round-robin (AffinityTable::round_robin) so the
         // difference under test is migration alone.
-        random_idle(idle, rng)
-    }
-
-    fn observe_queues(&mut self, view: QueueView<'_>) {
-        self.queue_depths.clear();
-        self.queue_depths.extend_from_slice(view.per_core);
+        random_idle(idle, ctx.rng)
     }
 
     /// Lines 4–8: read a stats record; a second sighting of a request id
@@ -158,7 +145,9 @@ impl Policy for HurryUp {
     }
 
     /// Lines 11–26.
-    fn tick(&mut self, now_ms: f64, aff: &AffinityTable) -> Vec<Migration> {
+    fn tick(&mut self, ctx: &mut SchedCtx<'_>) -> Vec<Migration> {
+        let now_ms = ctx.now_ms;
+        let aff = ctx.aff;
         // Lines 11–16: long-running threads currently on little cores.
         let mut threads_on_little: Vec<(ThreadId, f64)> = self
             .request_table
@@ -212,7 +201,9 @@ impl Policy for HurryUp {
 mod tests {
     use super::*;
     use crate::ipc::RequestTag;
-    use crate::util::prop;
+    use crate::platform::AffinityTable;
+    use crate::sched::QueueView;
+    use crate::util::{prop, Rng};
 
     fn rec(tid: usize, seq: u64, ts: u64) -> StatsRecord {
         StatsRecord {
@@ -230,6 +221,18 @@ mod tests {
         )
     }
 
+    /// Tick the mapper at `now_ms` over an arbitrary (empty) queue view.
+    fn tick_at(m: &mut HurryUp, aff: &AffinityTable, now_ms: f64) -> Vec<Migration> {
+        let mut rng = Rng::new(0);
+        let mut ctx = SchedCtx {
+            aff,
+            rng: &mut rng,
+            queues: QueueView::empty(),
+            now_ms,
+        };
+        m.tick(&mut ctx)
+    }
+
     #[test]
     fn request_table_tracks_begin_end() {
         let (mut m, _aff) = juno_mapper();
@@ -245,9 +248,9 @@ mod tests {
         // Thread 3 is on little core 3 (round robin), started at t=1000.
         m.observe(&rec(3, 1, 1000));
         // At t=1040, elapsed 40ms < threshold 50ms.
-        assert!(m.tick(1040.0, &aff).is_empty());
+        assert!(tick_at(&mut m, &aff, 1040.0).is_empty());
         // At t=1051, elapsed 51ms > 50ms => migrate to first big core.
-        let mig = m.tick(1051.0, &aff);
+        let mig = tick_at(&mut m, &aff, 1051.0);
         assert_eq!(
             mig,
             vec![Migration {
@@ -261,7 +264,7 @@ mod tests {
     fn threads_on_big_cores_never_candidates() {
         let (mut m, aff) = juno_mapper();
         m.observe(&rec(0, 1, 0)); // thread 0 on big core 0
-        assert!(m.tick(10_000.0, &aff).is_empty());
+        assert!(tick_at(&mut m, &aff, 10_000.0).is_empty());
     }
 
     #[test]
@@ -270,7 +273,7 @@ mod tests {
         m.observe(&rec(2, 1, 500)); // little core 2, elapsed 500
         m.observe(&rec(3, 2, 100)); // little core 3, elapsed 900 (longest)
         m.observe(&rec(4, 3, 800)); // little core 4, elapsed 200
-        let mig = m.tick(1000.0, &aff);
+        let mig = tick_at(&mut m, &aff, 1000.0);
         // Two big cores: longest (thread 3) -> big 0, next (thread 2) -> big 1.
         assert_eq!(
             mig,
@@ -294,7 +297,7 @@ mod tests {
         for t in 2..6 {
             m.observe(&rec(t, t as u64, 0)); // all four little threads long-running
         }
-        let mig = m.tick(10_000.0, &aff);
+        let mig = tick_at(&mut m, &aff, 10_000.0);
         assert_eq!(mig.len(), 2); // only two big cores exist
     }
 
@@ -303,19 +306,19 @@ mod tests {
         let (mut m, aff) = juno_mapper();
         m.observe(&rec(4, 9, 0));
         m.observe(&rec(4, 9, 500)); // finished
-        assert!(m.tick(1000.0, &aff).is_empty());
+        assert!(tick_at(&mut m, &aff, 1000.0).is_empty());
     }
 
     #[test]
     fn swap_applied_then_thread_counts_as_big() {
         let (mut m, mut aff) = juno_mapper();
         m.observe(&rec(5, 1, 0));
-        let mig = m.tick(100.0, &aff);
+        let mig = tick_at(&mut m, &aff, 100.0);
         assert_eq!(mig.len(), 1);
         aff.swap(mig[0].big_core, mig[0].little_core);
         assert_eq!(aff.kind_of(ThreadId(5)), CoreKind::Big);
         // Next tick: the same thread is now on a big core — no candidates.
-        assert!(m.tick(200.0, &aff).is_empty());
+        assert!(tick_at(&mut m, &aff, 200.0).is_empty());
         assert!(aff.is_bijection());
     }
 
@@ -327,30 +330,38 @@ mod tests {
         m.observe(&rec(0, 1, 0)); // big core 0 thread, elapsed 1000
         m.observe(&rec(1, 2, 0)); // big core 1 thread, elapsed 1000
         m.observe(&rec(3, 3, 900)); // little thread, elapsed 100
-        let mig = m.tick(1000.0, &aff);
+        let mig = tick_at(&mut m, &aff, 1000.0);
         assert!(mig.is_empty(), "guarded should not displace longer big threads");
         // Unguarded (paper) behaviour would swap:
         let mut paper = HurryUp::new(HurryUpParams::default(), Topology::juno_r1());
         paper.observe(&rec(0, 1, 0));
         paper.observe(&rec(3, 3, 900));
-        assert_eq!(paper.tick(1000.0, &aff).len(), 1);
+        assert_eq!(tick_at(&mut paper, &aff, 1000.0).len(), 1);
     }
 
     #[test]
-    fn queue_view_recorded_without_changing_decisions() {
+    fn tick_ignores_backlog_snapshot() {
+        // Algorithm 1 reads only the request table and the clock: the same
+        // stream must produce identical migrations whatever `ctx.queues`
+        // says — the anchor that keeps seeded runs invariant under the
+        // SchedCtx API.
         let (mut m, aff) = juno_mapper();
         m.observe(&rec(3, 1, 1000));
-        let before = m.tick(1051.0, &aff);
-        // Feeding a queue snapshot must not alter Algorithm 1's output.
+        let baseline = tick_at(&mut m, &aff, 1051.0);
+
         let (mut n, _) = juno_mapper();
         n.observe(&rec(3, 1, 1000));
-        n.observe_queues(QueueView {
-            per_core: &[9, 9, 9, 9, 9, 9],
-            total: 9,
-        });
-        assert_eq!(n.tick(1051.0, &aff), before);
-        assert_eq!(n.queue_depths(), &[9, 9, 9, 9, 9, 9]);
-        assert!(m.queue_depths().is_empty());
+        let mut rng = Rng::new(0);
+        let mut ctx = SchedCtx {
+            aff: &aff,
+            rng: &mut rng,
+            queues: QueueView {
+                per_core: &[9, 9, 9, 9, 9, 9],
+                total: 9,
+            },
+            now_ms: 1051.0,
+        };
+        assert_eq!(n.tick(&mut ctx), baseline);
     }
 
     #[test]
@@ -383,7 +394,7 @@ mod tests {
                     .unwrap()
                     .then_with(|| a.0 .0.cmp(&b.0 .0))
             });
-            let migs = m.tick(now, &aff);
+            let migs = tick_at(&mut m, &aff, now);
             assert!(migs.len() <= topo.big_cores().len());
             assert_eq!(migs.len(), eligible.len().min(2));
             let mut seen_little = std::collections::HashSet::new();

@@ -4,9 +4,8 @@
 //! Modelled as uniformly random dispatch over idle cores with no `tick`
 //! migrations — a conservative/static policy.
 
-use super::{random_idle, DispatchInfo, Policy};
-use crate::platform::{AffinityTable, CoreId};
-use crate::util::Rng;
+use super::{random_idle, DispatchInfo, Policy, SchedCtx};
+use crate::platform::CoreId;
 
 /// Random static mapping, no migrations.
 #[derive(Debug, Default)]
@@ -31,25 +30,27 @@ impl Policy for LinuxRandom {
     fn choose_core(
         &mut self,
         idle: &[CoreId],
-        _aff: &AffinityTable,
         _info: DispatchInfo,
-        rng: &mut Rng,
+        ctx: &mut SchedCtx<'_>,
     ) -> Option<CoreId> {
-        random_idle(idle, rng)
+        random_idle(idle, ctx.rng)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::platform::Topology;
+    use crate::platform::{AffinityTable, Topology};
+    use crate::sched::testctx::ctx;
+    use crate::util::Rng;
 
     #[test]
     fn never_migrates() {
         let mut p = LinuxRandom::new();
         assert_eq!(p.sampling_ms(), None);
         let aff = AffinityTable::round_robin(Topology::juno_r1());
-        assert!(p.tick(1e9, &aff).is_empty());
+        let mut rng = Rng::new(1);
+        assert!(p.tick(&mut ctx(&aff, &mut rng)).is_empty());
     }
 
     #[test]
@@ -61,7 +62,7 @@ mod tests {
         let mut hit = [false; 6];
         for _ in 0..200 {
             let c = p
-                .choose_core(&idle, &aff, DispatchInfo { keywords: 3 }, &mut rng)
+                .choose_core(&idle, DispatchInfo { keywords: 3 }, &mut ctx(&aff, &mut rng))
                 .unwrap();
             hit[c.0] = true;
         }
@@ -74,7 +75,7 @@ mod tests {
         let aff = AffinityTable::round_robin(Topology::juno_r1());
         let mut rng = Rng::new(4);
         assert_eq!(
-            p.choose_core(&[], &aff, DispatchInfo { keywords: 1 }, &mut rng),
+            p.choose_core(&[], DispatchInfo { keywords: 1 }, &mut ctx(&aff, &mut rng)),
             None
         );
     }

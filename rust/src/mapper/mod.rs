@@ -1,15 +1,28 @@
-//! Thread-mapping policies — the paper's contribution (Hurry-up) and its
-//! comparators.
+//! Scheduling policies — the paper's contribution (Hurry-up), its
+//! comparators, and the admission/placement extensions the shared
+//! scheduling layer ([`crate::sched`]) enables.
 //!
-//! A [`Policy`] owns two decisions:
+//! A [`Policy`] owns three decisions, each made against a full
+//! [`SchedCtx`] (affinity, rng, backlog snapshot, clock):
 //!
-//! 1. **Dispatch** ([`Policy::choose_core`]): which idle core takes the next
-//!    queued request. The paper's Linux baseline "maps each request to a
-//!    given core type randomly, and there exists no migrations thereafter";
-//!    Hurry-up inherits the same random dispatch and adds migrations.
-//! 2. **Mapping** ([`Policy::tick`]): periodic migrations driven by the
+//! 1. **Admission** ([`Policy::admit`]): whether a request may enter the
+//!    queues at all, or is shed at the door (load shedding). The default
+//!    admits everything — the paper's setup. See [`Shedding`] for the
+//!    projected-delay admission controller.
+//! 2. **Dispatch** ([`Policy::choose_core`]): which core takes a request —
+//!    among idle cores at dispatch time (centralized discipline) or among
+//!    all cores at admission-time placement (per-core disciplines). The
+//!    paper's Linux baseline "maps each request to a given core type
+//!    randomly, and there exists no migrations thereafter"; Hurry-up
+//!    inherits the same random dispatch and adds migrations;
+//!    [`QueueAware`] instead reads the ctx backlog (join-shortest-queue,
+//!    big-core-first under pressure).
+//! 3. **Mapping** ([`Policy::tick`]): periodic migrations driven by the
 //!    application stats stream ([`crate::ipc::StatsRecord`]), sampled every
 //!    `sampling_ms` (Algorithm 1).
+//!
+//! Request lifecycle through the scheduling layer: enqueue → admit →
+//! queue → next → run (see the [`crate::sched`] module docs).
 //!
 //! The same `Policy` object drives both the discrete-event simulator
 //! (`crate::sim`) and the live thread-pool server (`crate::live`), so the
@@ -19,18 +32,26 @@ pub mod app_level;
 pub mod hurryup;
 pub mod linux_random;
 pub mod oracle;
+pub mod queue_aware;
 pub mod round_robin;
+pub mod shedding;
 pub mod static_policy;
 
 pub use app_level::AppLevel;
 pub use hurryup::{HurryUp, HurryUpParams};
 pub use linux_random::LinuxRandom;
 pub use oracle::Oracle;
+pub use queue_aware::QueueAware;
 pub use round_robin::RoundRobin;
+pub use shedding::Shedding;
 pub use static_policy::StaticKind;
 
+// The per-decision context types live with the scheduling layer; re-export
+// them here because every `Policy` implementation needs them.
+pub use crate::sched::{QueueView, SchedCtx};
+
 use crate::ipc::StatsRecord;
-use crate::platform::{AffinityTable, CoreId, CoreKind, Topology};
+use crate::platform::{CoreId, CoreKind, Topology};
 use crate::util::Rng;
 
 /// One migration decision: swap the threads pinned to a big and a little
@@ -46,28 +67,75 @@ pub struct Migration {
 
 /// Request facts available at dispatch time. `keywords` is ground truth the
 /// realistic policies must NOT read (the paper: "it is impractical to
-/// annotate all applications"); only the Oracle ablation uses it.
+/// annotate all applications"); only the Oracle ablation uses it. Backlog,
+/// by contrast, is legitimately observable — it arrives via
+/// [`SchedCtx::queues`].
 #[derive(Clone, Copy, Debug)]
 pub struct DispatchInfo {
     /// Keyword count of the query (oracle-only).
     pub keywords: usize,
 }
 
-/// Snapshot of the scheduler's queue state, handed to policies at dispatch
-/// and tick time by both the simulator and the live server (via the shared
-/// `sched` layer). Unlike `DispatchInfo.keywords`, backlog is observable in
-/// a real deployment, so any policy may legitimately exploit it.
-#[derive(Clone, Copy, Debug)]
-pub struct QueueView<'a> {
-    /// Backlog visible to each core: for per-core disciplines this is that
-    /// core's own queue length; for a centralized discipline every core
-    /// sees the shared queue, so all entries equal `total`.
-    pub per_core: &'a [usize],
-    /// Total requests queued across all queues (no double counting).
-    pub total: usize,
+/// Why an admission controller refused a request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ShedReason {
+    /// Projected queueing delay exceeds the admission deadline.
+    DeadlineExceeded {
+        /// Estimated queueing delay the request would have faced, ms.
+        projected_ms: f64,
+        /// The configured deadline it exceeded, ms.
+        deadline_ms: f64,
+    },
+    /// Total backlog at or above a fixed cap.
+    QueueFull {
+        /// Requests queued when the decision was made.
+        queued: usize,
+        /// The cap that was hit.
+        limit: usize,
+    },
+    /// Policy-specific reason.
+    Other(&'static str),
 }
 
-/// A thread-mapping policy.
+impl ShedReason {
+    /// Stable short label for counters and tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShedReason::DeadlineExceeded { .. } => "deadline",
+            ShedReason::QueueFull { .. } => "queue-full",
+            ShedReason::Other(s) => s,
+        }
+    }
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShedReason::DeadlineExceeded {
+                projected_ms,
+                deadline_ms,
+            } => write!(f, "projected {projected_ms:.0}ms > deadline {deadline_ms:.0}ms"),
+            ShedReason::QueueFull { queued, limit } => {
+                write!(f, "queue full ({queued} >= {limit})")
+            }
+            ShedReason::Other(s) => f.write_str(s),
+        }
+    }
+}
+
+/// Ruling of [`Policy::admit`] on one request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AdmissionDecision {
+    /// Let the request into the queues.
+    Admit,
+    /// Refuse it; the dispatcher hands the payload back to the caller.
+    Shed {
+        /// Why it was refused.
+        reason: ShedReason,
+    },
+}
+
+/// A scheduling policy: admission, placement, and thread mapping.
 pub trait Policy: Send {
     /// Human-readable policy name for reports.
     fn name(&self) -> String;
@@ -76,15 +144,27 @@ pub trait Policy: Send {
     /// (never ticked).
     fn sampling_ms(&self) -> Option<f64>;
 
-    /// Pick the core that should serve the next request, among currently
-    /// idle cores. Returning `None` leaves the request queued even though
-    /// cores are idle (e.g. AllBig refuses little cores).
+    /// Admission control (lifecycle step 2): rule on whether this request
+    /// may enter the queues. Called by the dispatcher BEFORE any ticket or
+    /// payload is stored, so a `Shed` ruling leaves no trace in the
+    /// scheduling layer; `ctx.queues` describes the backlog ahead of the
+    /// request. Default: admit everything (the paper's setup).
+    fn admit(&mut self, info: DispatchInfo, ctx: &mut SchedCtx<'_>) -> AdmissionDecision {
+        let _ = (info, ctx);
+        AdmissionDecision::Admit
+    }
+
+    /// Pick the core that should serve a request from the offered
+    /// candidates: the currently idle cores at dispatch time, or all cores
+    /// at per-core admission placement. Returning `None` leaves the
+    /// request queued even though cores were offered (e.g. AllBig refuses
+    /// little cores). Backlog is readable via `ctx.queues`; randomness
+    /// must come from `ctx.rng`.
     fn choose_core(
         &mut self,
         idle: &[CoreId],
-        aff: &AffinityTable,
         info: DispatchInfo,
-        rng: &mut Rng,
+        ctx: &mut SchedCtx<'_>,
     ) -> Option<CoreId>;
 
     /// Ingest one stats-stream record (Algorithm 1 lines 4–8).
@@ -92,17 +172,11 @@ pub trait Policy: Send {
         let _ = rec;
     }
 
-    /// Queue-visibility hook: the scheduling layer calls this with the
-    /// current per-core backlog whenever dispatch is attempted and right
-    /// before every `tick`, so queue-aware policies can fold backlog into
-    /// their migration/placement decisions. Default: ignore.
-    fn observe_queues(&mut self, view: QueueView<'_>) {
-        let _ = view;
-    }
-
-    /// Sampling window elapsed: decide migrations (Algorithm 1 lines 11–26).
-    fn tick(&mut self, now_ms: f64, aff: &AffinityTable) -> Vec<Migration> {
-        let _ = (now_ms, aff);
+    /// Sampling window elapsed: decide migrations (Algorithm 1 lines
+    /// 11–26). The engine clock is `ctx.now_ms`; the backlog snapshot is
+    /// `ctx.queues` — queue-aware mappers fold it into their decisions.
+    fn tick(&mut self, ctx: &mut SchedCtx<'_>) -> Vec<Migration> {
+        let _ = ctx;
         Vec::new()
     }
 }
@@ -140,6 +214,9 @@ pub enum PolicyKind {
         /// Controller sampling interval, ms.
         sampling_ms: f64,
     },
+    /// Backlog-driven placement: join-shortest-queue under per-core
+    /// disciplines, big-core-first under backlog pressure; no migrations.
+    QueueAware,
 }
 
 impl PolicyKind {
@@ -166,6 +243,7 @@ impl PolicyKind {
             PolicyKind::AppLevel { qos_ms, sampling_ms } => {
                 Box::new(AppLevel::new(qos_ms, sampling_ms, topology))
             }
+            PolicyKind::QueueAware => Box::new(QueueAware::new()),
         }
     }
 
@@ -179,6 +257,7 @@ impl PolicyKind {
             PolicyKind::AllLittle => "all-little".into(),
             PolicyKind::Oracle { .. } => "oracle".into(),
             PolicyKind::AppLevel { .. } => "app-level".into(),
+            PolicyKind::QueueAware => "queue-aware".into(),
         }
     }
 }
@@ -197,7 +276,7 @@ pub(crate) fn random_idle(idle: &[CoreId], rng: &mut Rng) -> Option<CoreId> {
 /// Dispatch helper: random idle core of a specific kind.
 pub(crate) fn random_idle_of_kind(
     idle: &[CoreId],
-    aff: &AffinityTable,
+    aff: &crate::platform::AffinityTable,
     kind: CoreKind,
     rng: &mut Rng,
 ) -> Option<CoreId> {
@@ -212,6 +291,8 @@ pub(crate) fn random_idle_of_kind(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::platform::AffinityTable;
+    use crate::sched::testctx::ctx;
 
     #[test]
     fn kinds_build_and_label() {
@@ -227,6 +308,7 @@ mod tests {
             PolicyKind::AllLittle,
             PolicyKind::Oracle { cutoff_kw: 5 },
             PolicyKind::AppLevel { qos_ms: 500.0, sampling_ms: 50.0 },
+            PolicyKind::QueueAware,
         ] {
             let p = kind.build(&topo);
             assert!(!p.name().is_empty());
@@ -256,5 +338,39 @@ mod tests {
                 Some(CoreId(3))
             );
         }
+    }
+
+    #[test]
+    fn default_admission_admits_everything() {
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo.clone());
+        let mut rng = Rng::new(3);
+        for kind in [
+            PolicyKind::HurryUp {
+                sampling_ms: 25.0,
+                threshold_ms: 50.0,
+            },
+            PolicyKind::LinuxRandom,
+            PolicyKind::QueueAware,
+        ] {
+            let mut p = kind.build(&topo);
+            assert_eq!(
+                p.admit(DispatchInfo { keywords: 9 }, &mut ctx(&aff, &mut rng)),
+                AdmissionDecision::Admit,
+                "{kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn shed_reason_labels_and_display() {
+        let r = ShedReason::DeadlineExceeded {
+            projected_ms: 750.0,
+            deadline_ms: 500.0,
+        };
+        assert_eq!(r.label(), "deadline");
+        assert!(r.to_string().contains("750"));
+        assert_eq!(ShedReason::QueueFull { queued: 9, limit: 8 }.label(), "queue-full");
+        assert_eq!(ShedReason::Other("x").label(), "x");
     }
 }

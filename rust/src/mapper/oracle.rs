@@ -7,9 +7,8 @@
 //! cutoff of Fig 1) prefer an idle big core, light requests prefer an idle
 //! little core; both fall back to the other kind rather than queueing.
 
-use super::{random_idle, random_idle_of_kind, DispatchInfo, Policy};
-use crate::platform::{AffinityTable, CoreId, CoreKind};
-use crate::util::Rng;
+use super::{random_idle, random_idle_of_kind, DispatchInfo, Policy, SchedCtx};
+use crate::platform::{CoreId, CoreKind};
 
 /// Keyword-count oracle dispatch, no migrations.
 #[derive(Debug)]
@@ -36,23 +35,25 @@ impl Policy for Oracle {
     fn choose_core(
         &mut self,
         idle: &[CoreId],
-        aff: &AffinityTable,
         info: DispatchInfo,
-        rng: &mut Rng,
+        ctx: &mut SchedCtx<'_>,
     ) -> Option<CoreId> {
         let preferred = if info.keywords >= self.cutoff_kw {
             CoreKind::Big
         } else {
             CoreKind::Little
         };
-        random_idle_of_kind(idle, aff, preferred, rng).or_else(|| random_idle(idle, rng))
+        random_idle_of_kind(idle, ctx.aff, preferred, ctx.rng)
+            .or_else(|| random_idle(idle, ctx.rng))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::platform::Topology;
+    use crate::platform::{AffinityTable, Topology};
+    use crate::sched::testctx::ctx;
+    use crate::util::Rng;
 
     fn setup() -> (Oracle, AffinityTable, Rng) {
         (
@@ -68,7 +69,7 @@ mod tests {
         let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
         for _ in 0..50 {
             let c = p
-                .choose_core(&idle, &aff, DispatchInfo { keywords: 9 }, &mut rng)
+                .choose_core(&idle, DispatchInfo { keywords: 9 }, &mut ctx(&aff, &mut rng))
                 .unwrap();
             assert_eq!(aff.topology().kind(c), CoreKind::Big);
         }
@@ -80,7 +81,7 @@ mod tests {
         let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
         for _ in 0..50 {
             let c = p
-                .choose_core(&idle, &aff, DispatchInfo { keywords: 2 }, &mut rng)
+                .choose_core(&idle, DispatchInfo { keywords: 2 }, &mut ctx(&aff, &mut rng))
                 .unwrap();
             assert_eq!(aff.topology().kind(c), CoreKind::Little);
         }
@@ -93,7 +94,7 @@ mod tests {
         // than queue (work-conserving).
         let idle = vec![CoreId(3), CoreId(4)];
         let c = p
-            .choose_core(&idle, &aff, DispatchInfo { keywords: 12 }, &mut rng)
+            .choose_core(&idle, DispatchInfo { keywords: 12 }, &mut ctx(&aff, &mut rng))
             .unwrap();
         assert!(idle.contains(&c));
     }
@@ -103,11 +104,11 @@ mod tests {
         let (mut p, aff, mut rng) = setup();
         let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
         let c = p
-            .choose_core(&idle, &aff, DispatchInfo { keywords: 5 }, &mut rng)
+            .choose_core(&idle, DispatchInfo { keywords: 5 }, &mut ctx(&aff, &mut rng))
             .unwrap();
         assert_eq!(aff.topology().kind(c), CoreKind::Big); // >= cutoff is heavy
         let c = p
-            .choose_core(&idle, &aff, DispatchInfo { keywords: 4 }, &mut rng)
+            .choose_core(&idle, DispatchInfo { keywords: 4 }, &mut ctx(&aff, &mut rng))
             .unwrap();
         assert_eq!(aff.topology().kind(c), CoreKind::Little);
     }

@@ -1,0 +1,202 @@
+//! Queue-aware placement — the first policy that genuinely *acts* on the
+//! backlog snapshot the scheduling layer exposes through
+//! [`SchedCtx::queues`] (the old `observe_queues` hook only recorded it).
+//!
+//! Placement rule, evaluated over whatever candidate set is offered:
+//!
+//! * **Join-shortest-queue**: prefer the candidate with the smallest
+//!   visible backlog. Under the per-core disciplines (`per_core`,
+//!   `work_steal`) placement happens at admission over *all* cores, so
+//!   this is classic JSQ — it removes the "unlucky queue" tail that random
+//!   enqueue suffers from.
+//! * **Big-core-first under pressure**: when the total backlog reaches the
+//!   core count (the pool is saturated), ties break toward big cores —
+//!   they drain a queue ≈ 3.3× faster, so feeding them first maximises
+//!   drain rate exactly when it matters. Below that pressure point ties
+//!   are kind-agnostic (no reason to burn big-core energy on a quiet
+//!   system).
+//! * **Round-robin tie-break**: among equally ranked candidates a rotating
+//!   cursor picks the next one, so an all-zeros backlog (the common case
+//!   at light load — queue depths do not count in-service requests)
+//!   spreads work instead of piling onto one core. Fully deterministic:
+//!   no rng draws.
+//!
+//! Under the centralized discipline every core sees the shared queue, so
+//! depths tie by construction and the policy degenerates to round-robin
+//! dispatch with big-core preference under backlog — still queue-aware,
+//! just at the only granularity a single queue exposes. No migrations
+//! (`sampling_ms` = `None`); pair with `work_steal` for rebalancing.
+
+use super::{DispatchInfo, Policy, SchedCtx};
+use crate::platform::{CoreId, CoreKind};
+
+/// Backlog-driven placement: JSQ + big-core-first under pressure.
+#[derive(Debug, Default)]
+pub struct QueueAware {
+    /// Rotating tie-break cursor (next core id to prefer).
+    next: usize,
+}
+
+impl QueueAware {
+    /// New queue-aware placement policy.
+    pub fn new() -> QueueAware {
+        QueueAware { next: 0 }
+    }
+}
+
+impl Policy for QueueAware {
+    fn name(&self) -> String {
+        "queue-aware".into()
+    }
+
+    fn sampling_ms(&self) -> Option<f64> {
+        None
+    }
+
+    fn choose_core(
+        &mut self,
+        idle: &[CoreId],
+        _info: DispatchInfo,
+        ctx: &mut SchedCtx<'_>,
+    ) -> Option<CoreId> {
+        if idle.is_empty() {
+            return None;
+        }
+        let ncores = ctx.aff.topology().num_cores().max(1);
+        let pressured = ctx.queues.total >= ncores;
+        let rank = |c: CoreId| -> (usize, usize) {
+            let kind_rank = if pressured {
+                match ctx.aff.topology().kind(c) {
+                    CoreKind::Big => 0,
+                    CoreKind::Little => 1,
+                }
+            } else {
+                0 // below pressure, kinds tie — don't chase big cores
+            };
+            (ctx.queues.depth(c), kind_rank)
+        };
+        let best = idle.iter().copied().map(rank).min()?;
+        // Round-robin among the equally best candidates: first core id at
+        // or after the cursor (wrapping), so ties spread deterministically.
+        let chosen = idle
+            .iter()
+            .copied()
+            .filter(|&c| rank(c) == best)
+            .min_by_key(|&c| (c.0 + ncores - self.next % ncores) % ncores)
+            .expect("non-empty candidate set");
+        self.next = (chosen.0 + 1) % ncores;
+        Some(chosen)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{AffinityTable, Topology};
+    use crate::sched::QueueView;
+    use crate::util::Rng;
+
+    fn pick(
+        p: &mut QueueAware,
+        idle: &[CoreId],
+        depths: &[usize],
+        aff: &AffinityTable,
+    ) -> Option<CoreId> {
+        let mut rng = Rng::new(0);
+        let total: usize = depths.iter().sum();
+        let mut ctx = SchedCtx {
+            aff,
+            rng: &mut rng,
+            queues: QueueView {
+                per_core: depths,
+                total,
+            },
+            now_ms: 0.0,
+        };
+        p.choose_core(idle, DispatchInfo { keywords: 2 }, &mut ctx)
+    }
+
+    fn juno_aff() -> AffinityTable {
+        AffinityTable::round_robin(Topology::juno_r1())
+    }
+
+    #[test]
+    fn joins_the_shortest_queue() {
+        let aff = juno_aff();
+        let mut p = QueueAware::new();
+        let all: Vec<CoreId> = (0..6).map(CoreId).collect();
+        // Core 4 has the strictly shortest queue.
+        let got = pick(&mut p, &all, &[5, 4, 6, 3, 1, 7], &aff).unwrap();
+        assert_eq!(got, CoreId(4));
+    }
+
+    #[test]
+    fn big_first_under_pressure() {
+        let aff = juno_aff();
+        let mut p = QueueAware::new();
+        let all: Vec<CoreId> = (0..6).map(CoreId).collect();
+        // Equal depths, total 12 >= 6 cores: pressured — must pick a big
+        // core (0 or 1) despite the cursor starting anywhere.
+        for _ in 0..4 {
+            let got = pick(&mut p, &all, &[2, 2, 2, 2, 2, 2], &aff).unwrap();
+            assert_eq!(aff.topology().kind(got), CoreKind::Big, "{got:?}");
+        }
+    }
+
+    #[test]
+    fn no_pressure_ties_round_robin() {
+        let aff = juno_aff();
+        let mut p = QueueAware::new();
+        let all: Vec<CoreId> = (0..6).map(CoreId).collect();
+        // All-zero backlog (nothing queued): successive placements must
+        // cycle through the cores instead of piling onto one.
+        let picks: Vec<usize> = (0..6)
+            .map(|_| pick(&mut p, &all, &[0; 6], &aff).unwrap().0)
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn restricted_candidates_respected() {
+        let aff = juno_aff();
+        let mut p = QueueAware::new();
+        // Only cores 3 and 5 offered (e.g. a work-steal thief pair).
+        let got = pick(&mut p, &[CoreId(3), CoreId(5)], &[0, 0, 0, 2, 0, 1], &aff).unwrap();
+        assert_eq!(got, CoreId(5), "shorter of the two offered queues");
+        assert_eq!(pick(&mut p, &[], &[0; 6], &aff), None);
+    }
+
+    #[test]
+    fn tolerates_empty_queue_view() {
+        // A policy consulted before wiring (or in a bare unit test) must
+        // not panic on an empty snapshot: depths read as 0, RR applies.
+        let aff = juno_aff();
+        let mut p = QueueAware::new();
+        let mut rng = Rng::new(1);
+        let mut ctx = SchedCtx {
+            aff: &aff,
+            rng: &mut rng,
+            queues: QueueView::empty(),
+            now_ms: 0.0,
+        };
+        let got = p
+            .choose_core(&[CoreId(2)], DispatchInfo { keywords: 1 }, &mut ctx)
+            .unwrap();
+        assert_eq!(got, CoreId(2));
+    }
+
+    #[test]
+    fn never_migrates() {
+        let aff = juno_aff();
+        let mut p = QueueAware::new();
+        let mut rng = Rng::new(2);
+        assert_eq!(p.sampling_ms(), None);
+        let mut ctx = SchedCtx {
+            aff: &aff,
+            rng: &mut rng,
+            queues: QueueView::empty(),
+            now_ms: 1e6,
+        };
+        assert!(p.tick(&mut ctx).is_empty());
+    }
+}

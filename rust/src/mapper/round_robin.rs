@@ -2,9 +2,8 @@
 //! migrations). Isolates how much of Hurry-up's win comes from randomness
 //! in initial placement vs. migration.
 
-use super::{DispatchInfo, Policy};
-use crate::platform::{AffinityTable, CoreId};
-use crate::util::Rng;
+use super::{DispatchInfo, Policy, SchedCtx};
+use crate::platform::CoreId;
 
 /// Round-robin dispatch, no migrations.
 #[derive(Debug, Default)]
@@ -31,15 +30,14 @@ impl Policy for RoundRobin {
     fn choose_core(
         &mut self,
         idle: &[CoreId],
-        aff: &AffinityTable,
         _info: DispatchInfo,
-        _rng: &mut Rng,
+        ctx: &mut SchedCtx<'_>,
     ) -> Option<CoreId> {
         if idle.is_empty() {
             return None;
         }
         // Walk the global core order from the cursor, take the first idle.
-        let n = aff.topology().num_cores();
+        let n = ctx.aff.topology().num_cores();
         for off in 0..n {
             let candidate = CoreId((self.next + off) % n);
             if idle.contains(&candidate) {
@@ -54,7 +52,9 @@ impl Policy for RoundRobin {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::platform::Topology;
+    use crate::platform::{AffinityTable, Topology};
+    use crate::sched::testctx::ctx;
+    use crate::util::Rng;
 
     #[test]
     fn cycles_through_cores() {
@@ -64,7 +64,7 @@ mod tests {
         let mut rng = Rng::new(0);
         let picks: Vec<usize> = (0..8)
             .map(|_| {
-                p.choose_core(&idle, &aff, DispatchInfo { keywords: 1 }, &mut rng)
+                p.choose_core(&idle, DispatchInfo { keywords: 1 }, &mut ctx(&aff, &mut rng))
                     .unwrap()
                     .0
             })
@@ -79,11 +79,11 @@ mod tests {
         let mut rng = Rng::new(0);
         let idle = vec![CoreId(2), CoreId(5)];
         assert_eq!(
-            p.choose_core(&idle, &aff, DispatchInfo { keywords: 1 }, &mut rng),
+            p.choose_core(&idle, DispatchInfo { keywords: 1 }, &mut ctx(&aff, &mut rng)),
             Some(CoreId(2))
         );
         assert_eq!(
-            p.choose_core(&idle, &aff, DispatchInfo { keywords: 1 }, &mut rng),
+            p.choose_core(&idle, DispatchInfo { keywords: 1 }, &mut ctx(&aff, &mut rng)),
             Some(CoreId(5))
         );
     }
@@ -92,6 +92,7 @@ mod tests {
     fn no_migrations() {
         let mut p = RoundRobin::new();
         let aff = AffinityTable::round_robin(Topology::juno_r1());
-        assert!(p.tick(100.0, &aff).is_empty());
+        let mut rng = Rng::new(0);
+        assert!(p.tick(&mut ctx(&aff, &mut rng)).is_empty());
     }
 }

@@ -1,0 +1,290 @@
+//! Admission control by projected queueing delay — the `SheddingHurryUp`
+//! wrapper of the production roadmap: wrap the paper's Hurry-up (or any
+//! other policy) and shed requests at the door once the backlog implies
+//! they could not meet a latency deadline anyway.
+//!
+//! At overload an open queue grows without bound and *every* admitted
+//! request pays the accumulated delay; shedding the excess keeps the
+//! admitted requests' tail latency bounded near the deadline and turns
+//! throughput into *goodput*. The controller:
+//!
+//! * estimates the mean service time from the same stats stream Hurry-up
+//!   reads (begin/end pairs → EWMA), starting from a calibrated fallback
+//!   until the first completion is observed. The simulator delivers that
+//!   stream on sampling ticks, so the wrapper reports a sampling interval
+//!   of its own ([`EST_SAMPLING_MS`]) when the wrapped policy is static —
+//!   otherwise the estimator would never see a completion. In the live
+//!   server the queue-owned policy instance is not fed the stream at all,
+//!   so there the estimate stays at the fallback (deterministic and
+//!   conservative);
+//! * at [`Policy::admit`] projects the queueing delay the new request
+//!   would face — `total backlog × est. service / cores` (an M/M/c-style
+//!   all-servers-busy estimate that works for both the centralized queue
+//!   and, in aggregate, the per-core disciplines);
+//! * sheds ([`ShedReason::DeadlineExceeded`]) when the projection exceeds
+//!   the configured deadline. A deadline of `f64::INFINITY` never sheds
+//!   and leaves the wrapped policy's behaviour bit-for-bit intact (the
+//!   wrapper draws no randomness and delegates every other decision), so
+//!   `--shed-deadline-ms inf` reproduces seeded no-admission runs exactly
+//!   — pinned by `rust/tests/sched_properties.rs`.
+//!
+//! Everything except `admit` delegates to the wrapped policy: dispatch,
+//! migrations, sampling. `observe` both updates the estimator and forwards
+//! the record, so a wrapped Hurry-up still sees the full stream.
+
+use std::collections::HashMap;
+
+use super::{
+    AdmissionDecision, DispatchInfo, Migration, Policy, SchedCtx, ShedReason,
+};
+use crate::ipc::{RequestTag, StatsRecord};
+use crate::platform::CoreId;
+
+/// EWMA weight of each new service-time sample.
+const EWMA_ALPHA: f64 = 0.1;
+
+/// Stats sampling interval the wrapper requests when the wrapped policy is
+/// static (`sampling_ms` = `None`), ms — the engines deliver the stats
+/// stream on sampling ticks, and the estimator needs that stream.
+pub const EST_SAMPLING_MS: f64 = 25.0;
+
+/// Service-time estimate used before any completion has been observed, ms
+/// (≈ the paper mix's mean service on the 2B4L pool).
+pub const DEFAULT_EST_SERVICE_MS: f64 = 150.0;
+
+/// Projected-delay admission controller wrapping an inner [`Policy`].
+pub struct Shedding {
+    inner: Box<dyn Policy>,
+    deadline_ms: f64,
+    est_service_ms: f64,
+    /// Begin timestamps of in-flight requests (to pair stream records).
+    inflight: HashMap<RequestTag, f64>,
+    /// Requests refused so far (reporting).
+    shed: u64,
+}
+
+impl Shedding {
+    /// Wrap `inner` with a projected-queueing-delay deadline (ms).
+    /// `f64::INFINITY` admits everything; a negative deadline sheds
+    /// everything (useful to test drain paths).
+    pub fn new(inner: Box<dyn Policy>, deadline_ms: f64) -> Shedding {
+        Shedding {
+            inner,
+            deadline_ms,
+            est_service_ms: DEFAULT_EST_SERVICE_MS,
+            inflight: HashMap::new(),
+            shed: 0,
+        }
+    }
+
+    /// Override the cold-start service-time estimate (ms).
+    pub fn with_est(mut self, est_ms: f64) -> Shedding {
+        self.est_service_ms = est_ms;
+        self
+    }
+
+    /// The `SheddingHurryUp` configuration: Hurry-up placement +
+    /// migrations with deadline admission on top.
+    pub fn hurry_up(
+        params: super::HurryUpParams,
+        deadline_ms: f64,
+        topology: crate::platform::Topology,
+    ) -> Shedding {
+        Shedding::new(Box::new(super::HurryUp::new(params, topology)), deadline_ms)
+    }
+
+    /// Current mean-service estimate, ms.
+    pub fn est_service_ms(&self) -> f64 {
+        self.est_service_ms
+    }
+
+    /// Requests shed so far.
+    pub fn shed_count(&self) -> u64 {
+        self.shed
+    }
+
+    /// The admission deadline, ms.
+    pub fn deadline_ms(&self) -> f64 {
+        self.deadline_ms
+    }
+}
+
+impl Policy for Shedding {
+    fn name(&self) -> String {
+        format!(
+            "shed({}, deadline={}ms)",
+            self.inner.name(),
+            self.deadline_ms
+        )
+    }
+
+    fn sampling_ms(&self) -> Option<f64> {
+        // A ticking inner policy sets the cadence; a static inner still
+        // needs ticks so the estimator receives the stats stream.
+        self.inner.sampling_ms().or(Some(EST_SAMPLING_MS))
+    }
+
+    fn admit(&mut self, _info: DispatchInfo, ctx: &mut SchedCtx<'_>) -> AdmissionDecision {
+        // All-servers-busy projection: the new arrival waits for the whole
+        // backlog to drain across the pool. Deliberately ignores
+        // `info.keywords` — request sizes are not observable in production
+        // (the paper's §II); backlog and completed service times are.
+        let servers = ctx.queues.per_core.len().max(1);
+        let projected_ms = ctx.queues.total as f64 * self.est_service_ms / servers as f64;
+        if projected_ms > self.deadline_ms {
+            self.shed += 1;
+            AdmissionDecision::Shed {
+                reason: ShedReason::DeadlineExceeded {
+                    projected_ms,
+                    deadline_ms: self.deadline_ms,
+                },
+            }
+        } else {
+            AdmissionDecision::Admit
+        }
+    }
+
+    fn choose_core(
+        &mut self,
+        idle: &[CoreId],
+        info: DispatchInfo,
+        ctx: &mut SchedCtx<'_>,
+    ) -> Option<CoreId> {
+        self.inner.choose_core(idle, info, ctx)
+    }
+
+    fn observe(&mut self, rec: &StatsRecord) {
+        match self.inflight.remove(&rec.rid) {
+            Some(begin) => {
+                let service = (rec.ts_ms as f64 - begin).max(0.0);
+                self.est_service_ms =
+                    (1.0 - EWMA_ALPHA) * self.est_service_ms + EWMA_ALPHA * service;
+            }
+            None => {
+                self.inflight.insert(rec.rid, rec.ts_ms as f64);
+            }
+        }
+        self.inner.observe(rec);
+    }
+
+    fn tick(&mut self, ctx: &mut SchedCtx<'_>) -> Vec<Migration> {
+        self.inner.tick(ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ipc::RequestTag;
+    use crate::mapper::PolicyKind;
+    use crate::platform::{AffinityTable, ThreadId, Topology};
+    use crate::sched::QueueView;
+    use crate::util::Rng;
+
+    fn admit_with(
+        p: &mut Shedding,
+        depths: &[usize],
+        aff: &AffinityTable,
+    ) -> AdmissionDecision {
+        let mut rng = Rng::new(0);
+        let total: usize = depths.iter().sum();
+        let mut ctx = SchedCtx {
+            aff,
+            rng: &mut rng,
+            queues: QueueView {
+                per_core: depths,
+                total,
+            },
+            now_ms: 0.0,
+        };
+        p.admit(DispatchInfo { keywords: 3 }, &mut ctx)
+    }
+
+    fn wrap(deadline_ms: f64) -> (Shedding, AffinityTable) {
+        let topo = Topology::juno_r1();
+        (
+            Shedding::new(PolicyKind::LinuxRandom.build(&topo), deadline_ms),
+            AffinityTable::round_robin(topo),
+        )
+    }
+
+    #[test]
+    fn admits_light_backlog_sheds_heavy() {
+        let (mut p, aff) = wrap(500.0);
+        // 2 queued × 150ms / 6 cores = 50ms projected — admit.
+        assert_eq!(admit_with(&mut p, &[1, 1, 0, 0, 0, 0], &aff), AdmissionDecision::Admit);
+        // 30 queued × 150ms / 6 = 750ms projected > 500 — shed.
+        match admit_with(&mut p, &[5; 6], &aff) {
+            AdmissionDecision::Shed {
+                reason: ShedReason::DeadlineExceeded { projected_ms, deadline_ms },
+            } => {
+                assert!((projected_ms - 750.0).abs() < 1e-9);
+                assert_eq!(deadline_ms, 500.0);
+            }
+            other => panic!("expected deadline shed, got {other:?}"),
+        }
+        assert_eq!(p.shed_count(), 1);
+    }
+
+    #[test]
+    fn infinite_deadline_never_sheds() {
+        let (mut p, aff) = wrap(f64::INFINITY);
+        assert_eq!(admit_with(&mut p, &[1000; 6], &aff), AdmissionDecision::Admit);
+        assert_eq!(p.shed_count(), 0);
+    }
+
+    #[test]
+    fn negative_deadline_sheds_even_empty_queues() {
+        let (mut p, aff) = wrap(-1.0);
+        assert!(matches!(
+            admit_with(&mut p, &[0; 6], &aff),
+            AdmissionDecision::Shed { .. }
+        ));
+    }
+
+    #[test]
+    fn estimator_learns_from_begin_end_pairs() {
+        let (mut p, _aff) = wrap(500.0);
+        assert_eq!(p.est_service_ms(), DEFAULT_EST_SERVICE_MS);
+        let rid = RequestTag::from_seq(1);
+        p.observe(&StatsRecord { tid: ThreadId(0), rid, ts_ms: 1000 });
+        assert_eq!(p.est_service_ms(), DEFAULT_EST_SERVICE_MS, "begin alone: no update");
+        p.observe(&StatsRecord { tid: ThreadId(0), rid, ts_ms: 1350 });
+        // EWMA: 0.9·150 + 0.1·350 = 170.
+        assert!((p.est_service_ms() - 170.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn static_inner_still_gets_sampling_for_the_estimator() {
+        // Over a never-ticked policy the wrapper must request ticks of its
+        // own, or the engines would never deliver the stats stream and the
+        // EWMA could never leave its fallback.
+        let (p, _aff) = wrap(500.0);
+        assert_eq!(p.sampling_ms(), Some(EST_SAMPLING_MS));
+    }
+
+    #[test]
+    fn delegates_dispatch_and_sampling_to_inner() {
+        let topo = Topology::juno_r1();
+        let mut p = Shedding::hurry_up(
+            super::super::HurryUpParams::default(),
+            500.0,
+            topo.clone(),
+        );
+        assert_eq!(p.sampling_ms(), Some(25.0));
+        assert!(p.name().contains("hurry-up") && p.name().contains("500"));
+        let aff = AffinityTable::round_robin(topo);
+        let mut rng = Rng::new(5);
+        let mut ctx = SchedCtx {
+            aff: &aff,
+            rng: &mut rng,
+            queues: QueueView::empty(),
+            now_ms: 0.0,
+        };
+        let idle = [crate::platform::CoreId(3)];
+        assert_eq!(
+            p.choose_core(&idle, DispatchInfo { keywords: 2 }, &mut ctx),
+            Some(crate::platform::CoreId(3))
+        );
+    }
+}

@@ -2,9 +2,8 @@
 //! all-little (the homogeneous configurations of Figs 2–3, run on the
 //! heterogeneous topology by simply never using the other cluster).
 
-use super::{random_idle_of_kind, DispatchInfo, Policy};
-use crate::platform::{AffinityTable, CoreId, CoreKind};
-use crate::util::Rng;
+use super::{random_idle_of_kind, DispatchInfo, Policy, SchedCtx};
+use crate::platform::{CoreId, CoreKind};
 
 /// Which cluster the static policy is allowed to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -50,18 +49,19 @@ impl Policy for StaticPolicy {
     fn choose_core(
         &mut self,
         idle: &[CoreId],
-        aff: &AffinityTable,
         _info: DispatchInfo,
-        rng: &mut Rng,
+        ctx: &mut SchedCtx<'_>,
     ) -> Option<CoreId> {
-        random_idle_of_kind(idle, aff, self.core_kind(), rng)
+        random_idle_of_kind(idle, ctx.aff, self.core_kind(), ctx.rng)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::platform::Topology;
+    use crate::platform::{AffinityTable, Topology};
+    use crate::sched::testctx::ctx;
+    use crate::util::Rng;
 
     #[test]
     fn all_big_refuses_little_cores() {
@@ -71,13 +71,13 @@ mod tests {
         // Only little cores idle => request must wait.
         let idle = vec![CoreId(2), CoreId(3)];
         assert_eq!(
-            p.choose_core(&idle, &aff, DispatchInfo { keywords: 2 }, &mut rng),
+            p.choose_core(&idle, DispatchInfo { keywords: 2 }, &mut ctx(&aff, &mut rng)),
             None
         );
         // A big core idle => taken.
         let idle = vec![CoreId(1), CoreId(4)];
         assert_eq!(
-            p.choose_core(&idle, &aff, DispatchInfo { keywords: 2 }, &mut rng),
+            p.choose_core(&idle, DispatchInfo { keywords: 2 }, &mut ctx(&aff, &mut rng)),
             Some(CoreId(1))
         );
     }
@@ -89,11 +89,15 @@ mod tests {
         let mut rng = Rng::new(2);
         let idle = vec![CoreId(0), CoreId(1)];
         assert_eq!(
-            p.choose_core(&idle, &aff, DispatchInfo { keywords: 2 }, &mut rng),
+            p.choose_core(&idle, DispatchInfo { keywords: 2 }, &mut ctx(&aff, &mut rng)),
             None
         );
         let got = p
-            .choose_core(&[CoreId(0), CoreId(5)], &aff, DispatchInfo { keywords: 2 }, &mut rng)
+            .choose_core(
+                &[CoreId(0), CoreId(5)],
+                DispatchInfo { keywords: 2 },
+                &mut ctx(&aff, &mut rng),
+            )
             .unwrap();
         assert_eq!(got, CoreId(5));
     }

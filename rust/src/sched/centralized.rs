@@ -9,10 +9,9 @@
 
 use std::collections::VecDeque;
 
-use super::{QueueDiscipline, QueuedTicket};
+use super::{QueueDiscipline, QueuedTicket, SchedCtx};
 use crate::mapper::Policy;
-use crate::platform::{AffinityTable, CoreId};
-use crate::util::Rng;
+use crate::platform::CoreId;
 
 /// One global FIFO dispatch queue.
 pub struct Centralized {
@@ -37,13 +36,7 @@ impl QueueDiscipline for Centralized {
         "centralized"
     }
 
-    fn enqueue(
-        &mut self,
-        item: QueuedTicket,
-        _policy: &mut dyn Policy,
-        _aff: &AffinityTable,
-        _rng: &mut Rng,
-    ) {
+    fn enqueue(&mut self, item: QueuedTicket, _policy: &mut dyn Policy, _ctx: &mut SchedCtx<'_>) {
         self.queue.push_back(item);
     }
 
@@ -51,14 +44,13 @@ impl QueueDiscipline for Centralized {
         &mut self,
         idle: &[CoreId],
         policy: &mut dyn Policy,
-        aff: &AffinityTable,
-        rng: &mut Rng,
+        ctx: &mut SchedCtx<'_>,
     ) -> Option<(QueuedTicket, CoreId)> {
         if self.queue.is_empty() || idle.is_empty() {
             return None;
         }
         let head = *self.queue.front().expect("non-empty");
-        let core = policy.choose_core(idle, aff, head.info, rng)?;
+        let core = policy.choose_core(idle, head.info, ctx)?;
         self.queue.pop_front();
         Some((head, core))
     }
@@ -81,7 +73,9 @@ impl QueueDiscipline for Centralized {
 mod tests {
     use super::*;
     use crate::mapper::{DispatchInfo, PolicyKind};
-    use crate::platform::Topology;
+    use crate::platform::{AffinityTable, Topology};
+    use crate::sched::testctx::ctx;
+    use crate::util::Rng;
 
     #[test]
     fn head_blocks_queue_until_policy_accepts() {
@@ -97,17 +91,18 @@ mod tests {
                     info: DispatchInfo { keywords: 2 },
                 },
                 all_big.as_mut(),
-                &aff,
-                &mut rng,
+                &mut ctx(&aff, &mut rng),
             );
         }
         // Only little cores idle: all-big holds the head, nothing dispatches.
         let littles: Vec<CoreId> = (2..6).map(CoreId).collect();
-        assert!(q.next(&littles, all_big.as_mut(), &aff, &mut rng).is_none());
+        assert!(q
+            .next(&littles, all_big.as_mut(), &mut ctx(&aff, &mut rng))
+            .is_none());
         assert_eq!(q.queued(), 3);
         // A big core frees up: strict FIFO order resumes.
         let (qt, core) = q
-            .next(&[CoreId(0)], all_big.as_mut(), &aff, &mut rng)
+            .next(&[CoreId(0)], all_big.as_mut(), &mut ctx(&aff, &mut rng))
             .expect("big core accepts");
         assert_eq!(qt.ticket, 0);
         assert_eq!(core, CoreId(0));
@@ -127,8 +122,7 @@ mod tests {
                     info: DispatchInfo { keywords: 1 },
                 },
                 p.as_mut(),
-                &aff,
-                &mut rng,
+                &mut ctx(&aff, &mut rng),
             );
         }
         assert_eq!(q.depth(CoreId(5)), 4);

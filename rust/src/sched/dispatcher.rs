@@ -1,26 +1,65 @@
-//! The [`Dispatcher`]: glues a payload store to a [`QueueDiscipline`].
+//! The [`Dispatcher`]: glues a payload store to a [`QueueDiscipline`] and
+//! runs the admission stage.
 //!
 //! Disciplines queue opaque [`Ticket`]s; the dispatcher owns the payloads
 //! (workload indices in the simulator, full [`crate::live`] requests in the
-//! live server) and enforces the conservation contract: a ticket handed out
-//! by a discipline must have been enqueued exactly once and never before
-//! dispatched — violations panic immediately rather than corrupting runs.
+//! live server) and enforces two contracts:
+//!
+//! * **Conservation** — a ticket handed out by a discipline must have been
+//!   enqueued exactly once and never before dispatched; violations panic
+//!   immediately rather than corrupting runs.
+//! * **No stranded sheds** — [`Policy::admit`] is consulted *before* any
+//!   ticket or payload is stored, so a `Shed` decision returns the payload
+//!   to the caller with the scheduling layer untouched.
+//!
+//! The dispatcher is also where the per-decision [`SchedCtx`] is
+//! assembled: it snapshots the discipline's backlog into a reused buffer
+//! (no allocation on the hot path) immediately before every admit /
+//! placement / dispatch call, so policies read the queue state as of the
+//! decision itself.
 
 use std::collections::HashMap;
 
-use super::{QueueDiscipline, QueuedTicket};
-use crate::mapper::{DispatchInfo, Policy};
+use super::{QueueDiscipline, QueuedTicket, QueueView, SchedCtx};
+use crate::mapper::{AdmissionDecision, DispatchInfo, Policy, ShedReason};
 use crate::platform::{AffinityTable, CoreId};
 use crate::util::Rng;
 
 /// Opaque payload handle issued at enqueue time (monotonic).
 pub type Ticket = u64;
 
+/// Outcome of [`Dispatcher::enqueue`]: either the request entered the
+/// queues, or admission control refused it and the payload comes straight
+/// back — nothing about a shed request is retained by the scheduling layer.
+#[must_use = "a shed payload must be accounted for by the caller"]
+#[derive(Debug)]
+pub enum AdmissionOutcome<T> {
+    /// Admitted into the discipline's queues.
+    Admitted,
+    /// Refused at admission; the payload is returned untouched.
+    Shed {
+        /// The payload offered at enqueue, returned to the caller.
+        payload: T,
+        /// Why the policy refused it.
+        reason: ShedReason,
+    },
+}
+
+impl<T> AdmissionOutcome<T> {
+    /// True if the request was refused at admission.
+    pub fn is_shed(&self) -> bool {
+        matches!(self, AdmissionOutcome::Shed { .. })
+    }
+}
+
 /// A discipline plus the payloads riding on its tickets.
 pub struct Dispatcher<T> {
     discipline: Box<dyn QueueDiscipline>,
     payloads: HashMap<Ticket, T>,
     next_ticket: Ticket,
+    /// Reused backlog-snapshot buffer for the per-call [`SchedCtx`]; the
+    /// hot dispatch loop must not allocate.
+    depth_scratch: Vec<usize>,
 }
 
 impl<T> Dispatcher<T> {
@@ -30,10 +69,14 @@ impl<T> Dispatcher<T> {
             discipline,
             payloads: HashMap::new(),
             next_ticket: 0,
+            depth_scratch: Vec::new(),
         }
     }
 
-    /// Admit one request into the discipline's queues.
+    /// Offer one request: run admission ([`Policy::admit`]) and, if
+    /// admitted, store the payload and enqueue into the discipline. The
+    /// [`SchedCtx`] seen by the policy describes the backlog *ahead of*
+    /// this request.
     pub fn enqueue(
         &mut self,
         payload: T,
@@ -41,17 +84,37 @@ impl<T> Dispatcher<T> {
         policy: &mut dyn Policy,
         aff: &AffinityTable,
         rng: &mut Rng,
-    ) {
-        let ticket = self.next_ticket;
-        self.next_ticket += 1;
-        self.payloads.insert(ticket, payload);
-        self.discipline
-            .enqueue(QueuedTicket { ticket, info }, policy, aff, rng);
+        now_ms: f64,
+    ) -> AdmissionOutcome<T> {
+        let Dispatcher {
+            discipline,
+            payloads,
+            next_ticket,
+            depth_scratch,
+        } = self;
+        discipline.depths_into(depth_scratch);
+        let mut ctx = SchedCtx {
+            aff,
+            rng,
+            queues: QueueView {
+                per_core: depth_scratch,
+                total: discipline.queued(),
+            },
+            now_ms,
+        };
+        if let AdmissionDecision::Shed { reason } = policy.admit(info, &mut ctx) {
+            return AdmissionOutcome::Shed { payload, reason };
+        }
+        let ticket = *next_ticket;
+        *next_ticket += 1;
+        payloads.insert(ticket, payload);
+        discipline.enqueue(QueuedTicket { ticket, info }, policy, &mut ctx);
         debug_assert_eq!(
-            self.payloads.len(),
-            self.discipline.queued(),
+            payloads.len(),
+            discipline.queued(),
             "discipline dropped a ticket at enqueue"
         );
+        AdmissionOutcome::Admitted
     }
 
     /// Hand at most one queued request to one of the `idle` cores. Callers
@@ -62,13 +125,45 @@ impl<T> Dispatcher<T> {
         policy: &mut dyn Policy,
         aff: &AffinityTable,
         rng: &mut Rng,
+        now_ms: f64,
     ) -> Option<(T, CoreId)> {
-        let (qt, core) = self.discipline.next(idle, policy, aff, rng)?;
-        let payload = self
-            .payloads
+        // Guaranteed misses (no backlog / no idle core) never consult the
+        // policy under any discipline — skip the snapshot entirely; idle
+        // workers poll this path every few ms in the live server.
+        if self.payloads.is_empty() || idle.is_empty() {
+            return None;
+        }
+        let Dispatcher {
+            discipline,
+            payloads,
+            depth_scratch,
+            ..
+        } = self;
+        discipline.depths_into(depth_scratch);
+        let mut ctx = SchedCtx {
+            aff,
+            rng,
+            queues: QueueView {
+                per_core: depth_scratch,
+                total: discipline.queued(),
+            },
+            now_ms,
+        };
+        let (qt, core) = discipline.next(idle, policy, &mut ctx)?;
+        let payload = payloads
             .remove(&qt.ticket)
             .expect("discipline duplicated or invented a ticket");
         Some((payload, core))
+    }
+
+    /// Fresh per-core backlog snapshot into `buf` — for engine-built tick
+    /// contexts (allocation-free once `buf` has grown).
+    pub fn queue_view<'a>(&self, buf: &'a mut Vec<usize>) -> QueueView<'a> {
+        self.discipline.depths_into(buf);
+        QueueView {
+            per_core: buf,
+            total: self.discipline.queued(),
+        }
     }
 
     /// Requests currently queued.
@@ -81,8 +176,8 @@ impl<T> Dispatcher<T> {
         self.discipline.depth(core)
     }
 
-    /// Per-core backlog snapshot into a reused buffer (for
-    /// [`crate::mapper::QueueView`]; allocation-free on the hot path).
+    /// Per-core backlog snapshot into a reused buffer (see
+    /// [`Dispatcher::queue_view`] for the [`QueueView`] form).
     pub fn depths_into(&self, out: &mut Vec<usize>) {
         self.discipline.depths_into(out);
     }
@@ -112,12 +207,20 @@ mod tests {
         let mut rng = Rng::new(7);
         let mut d: Dispatcher<usize> = Dispatcher::new(kind.build(6));
         for i in 0..40 {
-            d.enqueue(i, DispatchInfo { keywords: 3 }, policy.as_mut(), &aff, &mut rng);
+            let outcome = d.enqueue(
+                i,
+                DispatchInfo { keywords: 3 },
+                policy.as_mut(),
+                &aff,
+                &mut rng,
+                0.0,
+            );
+            assert!(!outcome.is_shed(), "default admission must admit");
         }
         assert_eq!(d.queued(), 40);
         let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
         let mut got = Vec::new();
-        while let Some((p, _core)) = d.next(&idle, policy.as_mut(), &aff, &mut rng) {
+        while let Some((p, _core)) = d.next(&idle, policy.as_mut(), &aff, &mut rng, 0.0) {
             got.push(p);
         }
         assert_eq!(d.queued(), 0);
@@ -136,5 +239,64 @@ mod tests {
     #[test]
     fn centralized_drains_in_fifo_order() {
         assert_eq!(drain(DisciplineKind::Centralized), (0..40).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shed_returns_payload_and_leaves_no_trace() {
+        /// Refuses everything at admission.
+        struct ShedAll;
+        impl Policy for ShedAll {
+            fn name(&self) -> String {
+                "shed-all".into()
+            }
+            fn sampling_ms(&self) -> Option<f64> {
+                None
+            }
+            fn admit(
+                &mut self,
+                _info: DispatchInfo,
+                _ctx: &mut SchedCtx<'_>,
+            ) -> AdmissionDecision {
+                AdmissionDecision::Shed {
+                    reason: ShedReason::Other("test"),
+                }
+            }
+            fn choose_core(
+                &mut self,
+                idle: &[CoreId],
+                _info: DispatchInfo,
+                _ctx: &mut SchedCtx<'_>,
+            ) -> Option<CoreId> {
+                idle.first().copied()
+            }
+        }
+
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo.clone());
+        let mut policy = ShedAll;
+        let mut rng = Rng::new(9);
+        for kind in DisciplineKind::all() {
+            let mut d: Dispatcher<String> = Dispatcher::new(kind.build(6));
+            for i in 0..5 {
+                let payload = format!("req-{i}");
+                match d.enqueue(
+                    payload.clone(),
+                    DispatchInfo { keywords: 2 },
+                    &mut policy,
+                    &aff,
+                    &mut rng,
+                    1.0,
+                ) {
+                    AdmissionOutcome::Shed { payload: back, reason } => {
+                        assert_eq!(back, payload, "payload must come back intact");
+                        assert_eq!(reason, ShedReason::Other("test"));
+                    }
+                    AdmissionOutcome::Admitted => panic!("shed-all admitted"),
+                }
+                assert_eq!(d.queued(), 0, "{kind:?}: shed left state behind");
+            }
+            let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
+            assert!(d.next(&idle, &mut policy, &aff, &mut rng, 1.0).is_none());
+        }
     }
 }

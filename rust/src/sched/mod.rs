@@ -3,6 +3,30 @@
 //! (`crate::live`), so the queue discipline + [`Policy`] pair under test is
 //! literally the same code in both execution modes.
 //!
+//! # Request lifecycle
+//!
+//! Every request moves through five stages, in both execution modes:
+//!
+//! 1. **enqueue** — the engine offers the request to the [`Dispatcher`];
+//! 2. **admit** — the [`Policy`] rules on admission
+//!    ([`Policy::admit`][crate::mapper::Policy::admit]) with full
+//!    [`SchedCtx`] visibility; a `Shed` decision hands the payload straight
+//!    back to the caller — nothing is ticketed or queued;
+//! 3. **queue** — the [`QueueDiscipline`] stores the admitted request
+//!    (per-core disciplines consult the policy for a home queue);
+//! 4. **next** — as cores go idle, the discipline + policy pick the next
+//!    (request, core) pair;
+//! 5. **run** — the engine executes it and reports begin/end through the
+//!    stats stream ([`crate::ipc::StatsRecord`]).
+//!
+//! Every policy and discipline entry point receives a [`SchedCtx`]: the
+//! affinity table, the engine's deterministic rng, the engine clock, and a
+//! fresh [`QueueView`] backlog snapshot — so backlog is *readable at
+//! decision time* (admission, placement, migration) instead of being
+//! side-channeled through a write-only observer hook.
+//!
+//! # Disciplines
+//!
 //! Three [`QueueDiscipline`]s are provided (the cFCFS/dFCFS design space of
 //! queueing studies, plus work stealing):
 //!
@@ -10,8 +34,7 @@
 //!   cores for the head request. This is the paper's setup and reproduces
 //!   the pre-`sched` simulator bit-for-bit on seeded runs.
 //! * [`PerCore`] — decentralized FCFS (dFCFS): every request is assigned a
-//!   home core at admission (the policy chooses among *all* cores, which
-//!   for the random-dispatch policies degenerates to random enqueue); each
+//!   home core at admission (the policy chooses among *all* cores); each
 //!   core serves only its own queue, strictly FIFO.
 //! * [`WorkSteal`] — per-core queues with stealing: an idle core whose own
 //!   queue is empty steals the *oldest* request from the most backlogged
@@ -19,14 +42,15 @@
 //!   violated).
 //!
 //! Division of labour: a discipline owns queue *structure* (where requests
-//! wait, who may serve them); the [`Policy`] owns *placement* (which core a
-//! request should run on) and migration. The [`Dispatcher`] glues them to a
-//! payload store; [`SharedDispatcher`] adds blocking semantics for the live
-//! server's worker threads.
+//! wait, who may serve them); the [`Policy`] owns *admission* (whether a
+//! request enters at all), *placement* (which core it should run on) and
+//! migration. The [`Dispatcher`] glues them to a payload store;
+//! [`SharedDispatcher`] adds blocking semantics for the live server's
+//! worker threads.
 //!
-//! Determinism: disciplines draw randomness only through the caller's
-//! [`Rng`] and never iterate unordered containers, so seeded simulations
-//! replay bit-for-bit under every discipline.
+//! Determinism: disciplines and policies draw randomness only through
+//! [`SchedCtx::rng`] and never iterate unordered containers, so seeded
+//! simulations replay bit-for-bit under every discipline.
 
 pub mod centralized;
 pub mod dispatcher;
@@ -35,14 +59,66 @@ pub mod shared;
 pub mod work_steal;
 
 pub use centralized::Centralized;
-pub use dispatcher::{Dispatcher, Ticket};
+pub use dispatcher::{AdmissionOutcome, Dispatcher, Ticket};
 pub use per_core::PerCore;
 pub use shared::SharedDispatcher;
 pub use work_steal::WorkSteal;
 
 use crate::mapper::{DispatchInfo, Policy};
 use crate::platform::{AffinityTable, CoreId};
-use crate::util::Rng;
+use crate::util::{norm_token, Rng};
+
+/// Snapshot of the scheduler's queue state at one decision point. Unlike
+/// `DispatchInfo.keywords` (oracle-only ground truth), backlog is
+/// observable in a real deployment, so any policy may legitimately exploit
+/// it — for admission control, join-shortest-queue placement, or
+/// backlog-aware migration.
+#[derive(Clone, Copy, Debug)]
+pub struct QueueView<'a> {
+    /// Backlog visible to each core: for per-core disciplines this is that
+    /// core's own queue length; for a centralized discipline every core
+    /// sees the shared queue, so all entries equal `total`.
+    pub per_core: &'a [usize],
+    /// Total requests queued across all queues (no double counting).
+    pub total: usize,
+}
+
+impl QueueView<'_> {
+    /// A view over no queues (unit tests, pre-wiring defaults).
+    pub const fn empty() -> QueueView<'static> {
+        QueueView {
+            per_core: &[],
+            total: 0,
+        }
+    }
+
+    /// Backlog visible to one core (0 if the view doesn't cover it).
+    pub fn depth(&self, core: CoreId) -> usize {
+        self.per_core.get(core.0).copied().unwrap_or(0)
+    }
+}
+
+/// Everything a scheduling decision may read, in one place — passed to
+/// every [`Policy`] and [`QueueDiscipline`] entry point by the
+/// [`Dispatcher`] (admission, placement, dispatch) and by the engines
+/// (mapper ticks).
+///
+/// The queue snapshot is taken immediately before the call it is passed
+/// to: at admission and placement time it describes the backlog *ahead of*
+/// the request under decision.
+pub struct SchedCtx<'a> {
+    /// Thread ↔ core affinity (read-only at decision time; migrations are
+    /// returned from `tick` and applied by the engine).
+    pub aff: &'a AffinityTable,
+    /// The engine's deterministic randomness stream. Decisions must draw
+    /// all randomness from here so seeded runs replay bit-for-bit.
+    pub rng: &'a mut Rng,
+    /// Per-core backlog snapshot at decision time.
+    pub queues: QueueView<'a>,
+    /// Engine clock, ms (simulated time in the DES, wall-clock since the
+    /// dispatcher epoch in the live server).
+    pub now_ms: f64,
+}
 
 /// A queued request as disciplines see it: an opaque ticket (the
 /// [`Dispatcher`] owns the payloads) plus its dispatch-time facts.
@@ -57,21 +133,16 @@ pub struct QueuedTicket {
 /// A queue discipline: owns where requests wait and which core serves them
 /// next. Implementations must conserve requests (every enqueued ticket is
 /// eventually returned by `next` exactly once, given idle cores) and keep
-/// each internal queue strictly FIFO.
+/// each internal queue strictly FIFO. Admission happens *before* the
+/// discipline is involved — `enqueue` only ever sees admitted requests.
 pub trait QueueDiscipline: Send {
     /// Stable label for reports and tables.
     fn name(&self) -> &'static str;
 
-    /// Admit one request. Per-core disciplines consult `policy` over *all*
-    /// cores to choose the home queue (random placement for the paper's
-    /// policies); the centralized discipline ignores `policy` and `rng`.
-    fn enqueue(
-        &mut self,
-        item: QueuedTicket,
-        policy: &mut dyn Policy,
-        aff: &AffinityTable,
-        rng: &mut Rng,
-    );
+    /// Store one admitted request. Per-core disciplines consult `policy`
+    /// over *all* cores to choose the home queue; the centralized
+    /// discipline ignores `policy` and the ctx rng.
+    fn enqueue(&mut self, item: QueuedTicket, policy: &mut dyn Policy, ctx: &mut SchedCtx<'_>);
 
     /// Hand at most ONE queued request to one of the `idle` cores (callers
     /// loop, refreshing `idle`, until `None`). `None` means no queued
@@ -80,8 +151,7 @@ pub trait QueueDiscipline: Send {
         &mut self,
         idle: &[CoreId],
         policy: &mut dyn Policy,
-        aff: &AffinityTable,
-        rng: &mut Rng,
+        ctx: &mut SchedCtx<'_>,
     ) -> Option<(QueuedTicket, CoreId)>;
 
     /// Total requests queued across all queues.
@@ -91,10 +161,10 @@ pub trait QueueDiscipline: Send {
     /// centralized discipline).
     fn depth(&self, core: CoreId) -> usize;
 
-    /// Fill `out` with the per-core backlog snapshot (see
-    /// [`crate::mapper::QueueView`] for the centralized convention). Takes
-    /// a caller-owned buffer because the engines snapshot on every event —
-    /// the hot dispatch loop must not allocate.
+    /// Fill `out` with the per-core backlog snapshot (see [`QueueView`]
+    /// for the centralized convention). Takes a caller-owned buffer
+    /// because the engines snapshot on every event — the hot dispatch loop
+    /// must not allocate.
     fn depths_into(&self, out: &mut Vec<usize>);
 
     /// Allocating convenience form of [`QueueDiscipline::depths_into`].
@@ -147,12 +217,30 @@ impl DisciplineKind {
     }
 
     /// Parse a CLI/config token (queueing-literature aliases accepted).
+    /// Matching is case-insensitive, ignores surrounding whitespace, and
+    /// treats `-` as `_` — `--discipline Centralized` and TOML
+    /// `"WORK_STEAL"` both work.
     pub fn parse(s: &str) -> Option<DisciplineKind> {
-        match s {
+        match norm_token(s).as_str() {
             "centralized" | "cfcfs" => Some(DisciplineKind::Centralized),
             "per_core" | "dfcfs" => Some(DisciplineKind::PerCore),
             "work_steal" | "steal" => Some(DisciplineKind::WorkSteal),
             _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testctx {
+    use super::*;
+
+    /// A [`SchedCtx`] over empty queues at t=0 — the common unit-test bed.
+    pub(crate) fn ctx<'a>(aff: &'a AffinityTable, rng: &'a mut Rng) -> SchedCtx<'a> {
+        SchedCtx {
+            aff,
+            rng,
+            queues: QueueView::empty(),
+            now_ms: 0.0,
         }
     }
 }
@@ -174,7 +262,37 @@ mod tests {
     }
 
     #[test]
+    fn parse_is_case_insensitive_and_trims() {
+        assert_eq!(
+            DisciplineKind::parse("Centralized"),
+            Some(DisciplineKind::Centralized)
+        );
+        assert_eq!(
+            DisciplineKind::parse("  WORK_STEAL  "),
+            Some(DisciplineKind::WorkSteal)
+        );
+        assert_eq!(
+            DisciplineKind::parse("work-steal"),
+            Some(DisciplineKind::WorkSteal)
+        );
+        assert_eq!(DisciplineKind::parse("dFCFS"), Some(DisciplineKind::PerCore));
+        assert_eq!(DisciplineKind::parse("  "), None);
+    }
+
+    #[test]
     fn default_is_centralized() {
         assert_eq!(DisciplineKind::default(), DisciplineKind::Centralized);
+    }
+
+    #[test]
+    fn queue_view_depth_lookup_and_out_of_range() {
+        let view = QueueView {
+            per_core: &[3, 1],
+            total: 4,
+        };
+        assert_eq!(view.depth(crate::platform::CoreId(0)), 3);
+        assert_eq!(view.depth(crate::platform::CoreId(1)), 1);
+        assert_eq!(view.depth(crate::platform::CoreId(9)), 0);
+        assert_eq!(QueueView::empty().total, 0);
     }
 }

@@ -4,10 +4,12 @@
 //! core among *all* cores (busy or idle — queues decouple placement from
 //! occupancy). For the paper's random-dispatch policies this is exactly
 //! "random enqueue"; all-big/all-little naturally confine requests to one
-//! cluster, and the oracle steers heavy requests to big-core queues. After
-//! placement a core serves only its own queue, strictly FIFO — no policy
-//! consult at pop, so a placement the policy approved is always eventually
-//! served (conservation holds for every policy).
+//! cluster, the oracle steers heavy requests to big-core queues, and a
+//! queue-aware policy can read the [`SchedCtx`] backlog snapshot to place
+//! join-shortest-queue. After placement a core serves only its own queue,
+//! strictly FIFO — no policy consult at pop, so a placement the policy
+//! approved is always eventually served (conservation holds for every
+//! policy).
 //!
 //! This trades the centralized queue's global FIFO fairness for zero
 //! head-of-line coupling between cores — the cFCFS/dFCFS trade-off:
@@ -17,10 +19,9 @@
 
 use std::collections::VecDeque;
 
-use super::{QueueDiscipline, QueuedTicket};
+use super::{QueueDiscipline, QueuedTicket, SchedCtx};
 use crate::mapper::Policy;
-use crate::platform::{AffinityTable, CoreId};
-use crate::util::Rng;
+use crate::platform::CoreId;
 
 /// Per-core FIFO queues with admission-time placement.
 pub struct PerCore {
@@ -46,12 +47,11 @@ impl PerCore {
         all_cores: &[CoreId],
         item: QueuedTicket,
         policy: &mut dyn Policy,
-        aff: &AffinityTable,
-        rng: &mut Rng,
+        ctx: &mut SchedCtx<'_>,
     ) -> CoreId {
         policy
-            .choose_core(all_cores, aff, item.info, rng)
-            .unwrap_or_else(|| all_cores[rng.below(all_cores.len())])
+            .choose_core(all_cores, item.info, &mut *ctx)
+            .unwrap_or_else(|| all_cores[ctx.rng.below(all_cores.len())])
     }
 
     /// Number of queues (== cores). For [`super::WorkSteal`], which wraps
@@ -83,14 +83,8 @@ impl QueueDiscipline for PerCore {
         "per_core"
     }
 
-    fn enqueue(
-        &mut self,
-        item: QueuedTicket,
-        policy: &mut dyn Policy,
-        aff: &AffinityTable,
-        rng: &mut Rng,
-    ) {
-        let home = Self::place(&self.all_cores, item, policy, aff, rng);
+    fn enqueue(&mut self, item: QueuedTicket, policy: &mut dyn Policy, ctx: &mut SchedCtx<'_>) {
+        let home = Self::place(&self.all_cores, item, policy, ctx);
         self.queues[home.0].push_back(item);
         self.queued += 1;
     }
@@ -99,8 +93,7 @@ impl QueueDiscipline for PerCore {
         &mut self,
         idle: &[CoreId],
         _policy: &mut dyn Policy,
-        _aff: &AffinityTable,
-        _rng: &mut Rng,
+        _ctx: &mut SchedCtx<'_>,
     ) -> Option<(QueuedTicket, CoreId)> {
         for &core in idle {
             if let Some(head) = self.queues[core.0].pop_front() {
@@ -129,7 +122,9 @@ impl QueueDiscipline for PerCore {
 mod tests {
     use super::*;
     use crate::mapper::{DispatchInfo, PolicyKind};
-    use crate::platform::{CoreKind, Topology};
+    use crate::platform::{AffinityTable, CoreKind, Topology};
+    use crate::sched::testctx::ctx;
+    use crate::util::Rng;
 
     fn enq(
         q: &mut PerCore,
@@ -145,8 +140,7 @@ mod tests {
                 info: DispatchInfo { keywords: kw },
             },
             p,
-            aff,
-            rng,
+            &mut ctx(aff, rng),
         );
     }
 
@@ -164,12 +158,18 @@ mod tests {
         }
         // Core 2's queue holds tickets 2 and 8, in that order.
         assert_eq!(q.depth(CoreId(2)), 2);
-        let (a, c) = q.next(&[CoreId(2)], p.as_mut(), &aff, &mut rng).unwrap();
+        let (a, c) = q
+            .next(&[CoreId(2)], p.as_mut(), &mut ctx(&aff, &mut rng))
+            .unwrap();
         assert_eq!((a.ticket, c), (2, CoreId(2)));
-        let (b, _) = q.next(&[CoreId(2)], p.as_mut(), &aff, &mut rng).unwrap();
+        let (b, _) = q
+            .next(&[CoreId(2)], p.as_mut(), &mut ctx(&aff, &mut rng))
+            .unwrap();
         assert_eq!(b.ticket, 8);
         // Empty now: an idle core with no backlog gets nothing (no stealing).
-        assert!(q.next(&[CoreId(2)], p.as_mut(), &aff, &mut rng).is_none());
+        assert!(q
+            .next(&[CoreId(2)], p.as_mut(), &mut ctx(&aff, &mut rng))
+            .is_none());
         assert_eq!(q.queued(), 10);
     }
 

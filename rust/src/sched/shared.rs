@@ -1,6 +1,8 @@
 //! Thread-safe blocking front-end over [`Dispatcher`] — the live server's
 //! dispatch queue, replacing the old hard-coded global FIFO so live workers
-//! drain the exact same discipline code the simulator exercises.
+//! drain the exact same discipline code the simulator exercises. Admission
+//! control runs under the same lock: [`SharedDispatcher::push`] returns the
+//! payload to the producer when the policy sheds it.
 //!
 //! Locking: the internal state lock is always taken BEFORE the affinity
 //! table lock (the mapper thread takes only the affinity lock), so lock
@@ -9,12 +11,16 @@
 //! a migration can silently re-home a blocked worker to a different core
 //! (and thus a different queue), so waiters re-resolve their core each
 //! wakeup rather than relying on a targeted notification.
+//!
+//! Clock: the queue stamps [`crate::sched::SchedCtx::now_ms`] from its own
+//! construction epoch (wall clock). Policies must treat it as a monotonic
+//! decision timestamp, not as the server's request-arrival clock.
 
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use super::{Dispatcher, QueueDiscipline};
-use crate::mapper::{DispatchInfo, Policy, QueueView};
+use super::{AdmissionOutcome, Dispatcher, QueueDiscipline};
+use crate::mapper::{DispatchInfo, Policy};
 use crate::platform::{AffinityTable, CoreId, ThreadId};
 use crate::util::Rng;
 
@@ -24,16 +30,12 @@ const IDLE_RECHECK_MS: u64 = 5;
 
 struct Inner<T> {
     dispatcher: Dispatcher<T>,
-    /// Placement policy instance owned by the queue (dispatch decisions
-    /// only; the live mapper thread owns its own ticking instance — for
-    /// every live-supported policy `choose_core` is stateless, so the
-    /// split instances behave identically to one shared one). The mapper
-    /// thread's ticking instance gets its queue visibility via
-    /// [`SharedDispatcher::queue_view_into`].
+    /// Admission + placement policy instance owned by the queue (the live
+    /// mapper thread owns its own ticking instance — for every
+    /// live-supported policy `choose_core` is stateless, so the split
+    /// instances dispatch identically to one shared one).
     policy: Box<dyn Policy>,
     rng: Rng,
-    /// Reused queue-depth snapshot buffer (no allocation under the lock).
-    depth_scratch: Vec<usize>,
     closed: bool,
 }
 
@@ -41,10 +43,12 @@ struct Inner<T> {
 pub struct SharedDispatcher<T> {
     inner: Mutex<Inner<T>>,
     cv: Condvar,
+    /// Basis for the `SchedCtx` clock handed to policies.
+    epoch: Instant,
 }
 
 impl<T> SharedDispatcher<T> {
-    /// New queue over a discipline and a placement policy.
+    /// New queue over a discipline and an admission/placement policy.
     pub fn new(
         discipline: Box<dyn QueueDiscipline>,
         policy: Box<dyn Policy>,
@@ -55,36 +59,48 @@ impl<T> SharedDispatcher<T> {
                 dispatcher: Dispatcher::new(discipline),
                 policy,
                 rng: Rng::new(seed),
-                depth_scratch: Vec::new(),
                 closed: false,
             }),
             cv: Condvar::new(),
+            epoch: Instant::now(),
         }
     }
 
-    /// Admit a request and wake the workers.
-    pub fn push(&self, payload: T, info: DispatchInfo, aff: &Mutex<AffinityTable>) {
-        {
+    /// Milliseconds since this queue was constructed (the ctx clock).
+    fn now_ms(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Offer a request: run admission and, if admitted, enqueue and wake
+    /// the workers. On `Shed` the payload comes straight back and no
+    /// worker is woken.
+    pub fn push(
+        &self,
+        payload: T,
+        info: DispatchInfo,
+        aff: &Mutex<AffinityTable>,
+    ) -> AdmissionOutcome<T> {
+        let outcome = {
             let mut g = self.inner.lock().expect("sched queue poisoned");
+            // Clock read under the lock (like `pop`), so ctx timestamps
+            // are monotonic across admission/dispatch decisions.
+            let now_ms = self.now_ms();
             let aff_g = aff.lock().expect("aff poisoned");
             let Inner {
                 dispatcher,
                 policy,
                 rng,
-                depth_scratch,
                 ..
             } = &mut *g;
-            dispatcher.enqueue(payload, info, policy.as_mut(), &aff_g, rng);
-            dispatcher.depths_into(depth_scratch);
-            policy.observe_queues(QueueView {
-                per_core: depth_scratch.as_slice(),
-                total: dispatcher.queued(),
-            });
+            dispatcher.enqueue(payload, info, policy.as_mut(), &aff_g, rng, now_ms)
+        };
+        if !outcome.is_shed() {
+            // Per-core disciplines route to one specific core, but a
+            // waiting worker may be migrated onto it at any moment: wake
+            // everyone and let each re-resolve its core.
+            self.cv.notify_all();
         }
-        // Per-core disciplines route to one specific core, but a waiting
-        // worker may be migrated onto it at any moment: wake everyone and
-        // let each re-resolve its core.
-        self.cv.notify_all();
+        outcome
     }
 
     /// Blocking pop for the worker `tid`: serves the queue of whatever core
@@ -94,6 +110,7 @@ impl<T> SharedDispatcher<T> {
         let mut g = self.inner.lock().expect("sched queue poisoned");
         loop {
             {
+                let now_ms = self.now_ms();
                 let aff_g = aff.lock().expect("aff poisoned");
                 let core = aff_g.core_of(tid);
                 let Inner {
@@ -103,7 +120,7 @@ impl<T> SharedDispatcher<T> {
                     ..
                 } = &mut *g;
                 if let Some((item, _core)) =
-                    dispatcher.next(&[core], policy.as_mut(), &aff_g, rng)
+                    dispatcher.next(&[core], policy.as_mut(), &aff_g, rng, now_ms)
                 {
                     return Some(item);
                 }
@@ -126,8 +143,8 @@ impl<T> SharedDispatcher<T> {
     }
 
     /// Per-core backlog snapshot into `out`; returns the total queued.
-    /// For the live mapper thread, which feeds its ticking policy's
-    /// `observe_queues` before every tick (same contract as the sim).
+    /// For the live mapper thread, which builds the tick-time
+    /// [`crate::sched::SchedCtx`] from it (same contract as the sim).
     pub fn queue_view_into(&self, out: &mut Vec<usize>) -> usize {
         let g = self.inner.lock().expect("sched queue poisoned");
         g.dispatcher.depths_into(out);
@@ -156,7 +173,7 @@ impl<T> SharedDispatcher<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mapper::PolicyKind;
+    use crate::mapper::{PolicyKind, Shedding};
     use crate::platform::Topology;
     use crate::sched::DisciplineKind;
     use std::sync::Arc;
@@ -171,11 +188,15 @@ mod tests {
         (q, Mutex::new(AffinityTable::round_robin(topo)))
     }
 
+    fn push_admitted(q: &SharedDispatcher<usize>, v: usize, aff: &Mutex<AffinityTable>) {
+        assert!(!q.push(v, DispatchInfo { keywords: 1 }, aff).is_shed());
+    }
+
     #[test]
     fn centralized_fifo_and_drain_after_close() {
         let (q, aff) = queue(DisciplineKind::Centralized);
         for i in 0..3 {
-            q.push(i, DispatchInfo { keywords: 1 }, &aff);
+            push_admitted(&q, i, &aff);
         }
         assert_eq!(q.queued(), 3);
         assert_eq!(q.pop(ThreadId(0), &aff), Some(0));
@@ -206,7 +227,7 @@ mod tests {
         let (q, aff) = queue(DisciplineKind::PerCore);
         // Find where the seeded placement sends ticket 0, then swap that
         // core's thread: the NEW thread on the core must receive the work.
-        q.push(7usize, DispatchInfo { keywords: 2 }, &aff);
+        push_admitted(&q, 7usize, &aff);
         let topo = aff.lock().unwrap().topology().clone();
         let home = topo
             .cores()
@@ -220,5 +241,27 @@ mod tests {
         };
         q.close();
         assert_eq!(q.pop(displaced, &aff), Some(7));
+    }
+
+    #[test]
+    fn shedding_policy_bounces_payload_back_through_push() {
+        let topo = Topology::juno_r1();
+        // Negative deadline: every projected delay (≥ 0) exceeds it, so
+        // admission refuses everything.
+        let policy = Box::new(Shedding::new(PolicyKind::LinuxRandom.build(&topo), -1.0));
+        let q: SharedDispatcher<usize> = SharedDispatcher::new(
+            DisciplineKind::Centralized.build(6),
+            policy,
+            7,
+        );
+        let aff = Mutex::new(AffinityTable::round_robin(topo));
+        let outcome = q.push(42, DispatchInfo { keywords: 3 }, &aff);
+        match outcome {
+            AdmissionOutcome::Shed { payload, .. } => assert_eq!(payload, 42),
+            AdmissionOutcome::Admitted => panic!("negative deadline must shed"),
+        }
+        assert_eq!(q.queued(), 0);
+        q.close();
+        assert_eq!(q.pop(ThreadId(0), &aff), None);
     }
 }

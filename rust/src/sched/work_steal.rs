@@ -11,10 +11,9 @@
 //! fastest — the backlog-rebalancing plain dFCFS lacks.
 
 use super::per_core::PerCore;
-use super::{QueueDiscipline, QueuedTicket};
+use super::{QueueDiscipline, QueuedTicket, SchedCtx};
 use crate::mapper::Policy;
-use crate::platform::{AffinityTable, CoreId};
-use crate::util::Rng;
+use crate::platform::CoreId;
 
 /// Per-core FIFO queues; idle cores steal the oldest backlogged request.
 pub struct WorkSteal {
@@ -57,25 +56,18 @@ impl QueueDiscipline for WorkSteal {
         "work_steal"
     }
 
-    fn enqueue(
-        &mut self,
-        item: QueuedTicket,
-        policy: &mut dyn Policy,
-        aff: &AffinityTable,
-        rng: &mut Rng,
-    ) {
-        self.local.enqueue(item, policy, aff, rng);
+    fn enqueue(&mut self, item: QueuedTicket, policy: &mut dyn Policy, ctx: &mut SchedCtx<'_>) {
+        self.local.enqueue(item, policy, ctx);
     }
 
     fn next(
         &mut self,
         idle: &[CoreId],
         policy: &mut dyn Policy,
-        aff: &AffinityTable,
-        rng: &mut Rng,
+        ctx: &mut SchedCtx<'_>,
     ) -> Option<(QueuedTicket, CoreId)> {
         // Own queues first: local FIFO work beats stealing.
-        if let Some(hit) = self.local.next(idle, policy, aff, rng) {
+        if let Some(hit) = self.local.next(idle, policy, &mut *ctx) {
             return Some(hit);
         }
         // All idle cores are out of local work: steal the oldest request
@@ -84,7 +76,7 @@ impl QueueDiscipline for WorkSteal {
         for &thief in idle {
             let victim = self.victim()?;
             let head = self.local.front(victim).expect("victim has work");
-            if policy.choose_core(&[thief], aff, head.info, rng).is_some() {
+            if policy.choose_core(&[thief], head.info, &mut *ctx).is_some() {
                 self.local.pop_front(victim);
                 self.steals += 1;
                 return Some((head, thief));
@@ -110,7 +102,9 @@ impl QueueDiscipline for WorkSteal {
 mod tests {
     use super::*;
     use crate::mapper::{DispatchInfo, PolicyKind};
-    use crate::platform::Topology;
+    use crate::platform::{AffinityTable, Topology};
+    use crate::sched::testctx::ctx;
+    use crate::util::Rng;
 
     fn enq(
         q: &mut WorkSteal,
@@ -126,8 +120,7 @@ mod tests {
                 info: DispatchInfo { keywords: kw },
             },
             p,
-            aff,
-            rng,
+            &mut ctx(aff, rng),
         );
     }
 
@@ -144,12 +137,18 @@ mod tests {
         }
         // Every queue has 2; drain core 3's own queue, then it must steal
         // the OLDEST item of the longest remaining queue (core 0, ticket 0).
-        let (a, _) = q.next(&[CoreId(3)], p.as_mut(), &aff, &mut rng).unwrap();
+        let (a, _) = q
+            .next(&[CoreId(3)], p.as_mut(), &mut ctx(&aff, &mut rng))
+            .unwrap();
         assert_eq!(a.ticket, 3);
-        let (b, _) = q.next(&[CoreId(3)], p.as_mut(), &aff, &mut rng).unwrap();
+        let (b, _) = q
+            .next(&[CoreId(3)], p.as_mut(), &mut ctx(&aff, &mut rng))
+            .unwrap();
         assert_eq!(b.ticket, 9);
         assert_eq!(q.depth(CoreId(3)), 0);
-        let (c, core) = q.next(&[CoreId(3)], p.as_mut(), &aff, &mut rng).unwrap();
+        let (c, core) = q
+            .next(&[CoreId(3)], p.as_mut(), &mut ctx(&aff, &mut rng))
+            .unwrap();
         assert_eq!(core, CoreId(3));
         assert_eq!(c.ticket, 0, "steals the oldest of the longest queue");
         assert_eq!(q.steals(), 1);
@@ -167,10 +166,14 @@ mod tests {
         }
         // All work sits on big-core queues; a little core may not steal it.
         let littles: Vec<CoreId> = (2..6).map(CoreId).collect();
-        assert!(q.next(&littles, p.as_mut(), &aff, &mut rng).is_none());
+        assert!(q
+            .next(&littles, p.as_mut(), &mut ctx(&aff, &mut rng))
+            .is_none());
         assert_eq!(q.queued(), 6);
         // The big cores drain their own queues normally.
-        let (qt, core) = q.next(&[CoreId(0)], p.as_mut(), &aff, &mut rng).unwrap();
+        let (qt, core) = q
+            .next(&[CoreId(0)], p.as_mut(), &mut ctx(&aff, &mut rng))
+            .unwrap();
         assert_eq!(core, CoreId(0));
         assert!(qt.ticket < 6);
     }

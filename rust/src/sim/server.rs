@@ -10,10 +10,10 @@ use super::service::{ServiceDemand, ServiceSampler};
 use crate::config::SimConfig;
 use crate::ipc::{RequestTag, StatsRecord};
 use crate::loadgen::{ArrivalProcess, QueryGen, Workload};
-use crate::mapper::{DispatchInfo, Policy, QueueView};
+use crate::mapper::{DispatchInfo, Policy, Shedding};
 use crate::metrics::LatencyHistogram;
-use crate::platform::{AffinityTable, CoreId, CoreKind, EnergyMeters, ThreadId};
-use crate::sched::Dispatcher;
+use crate::platform::{AffinityTable, CoreId, CoreKind, EnergyMeters};
+use crate::sched::{AdmissionOutcome, Dispatcher, SchedCtx};
 use crate::util::Rng;
 
 /// Per-request outcome record.
@@ -58,15 +58,21 @@ impl RequestRecord {
 /// excluded from every *derived latency/placement statistic* — `latency`,
 /// [`SimOutput::p90_ms`], [`SimOutput::big_share`],
 /// [`SimOutput::latency_samples`] all describe the same measured
-/// population. Whole-run accounting (`per_request`, `completed`,
+/// population. Whole-run accounting (`per_request`, `completed`, `shed`,
 /// `migrations`, `energy`, `duration_ms`, [`SimOutput::throughput_qps`])
 /// deliberately includes warmup, since energy and wall-clock are physical
 /// quantities of the full run.
+///
+/// Shedding convention: requests refused at admission never enter the
+/// queues, so they appear in no latency statistic — `latency`/`p90_ms`
+/// describe *admitted* requests only, which is exactly what an admission
+/// controller promises to protect. `completed + shed` always equals the
+/// offered workload (conservation).
 #[derive(Clone, Debug)]
 pub struct SimOutput {
-    /// End-to-end latency histogram (post-warmup requests).
+    /// End-to-end latency histogram (post-warmup admitted requests).
     pub latency: LatencyHistogram,
-    /// Every request's record, in completion order (includes warmup).
+    /// Every admitted request's record, in completion order (incl. warmup).
     pub per_request: Vec<RequestRecord>,
     /// Four-channel energy meters over the full run.
     pub energy: EnergyMeters,
@@ -74,6 +80,8 @@ pub struct SimOutput {
     pub duration_ms: f64,
     /// Requests completed.
     pub completed: usize,
+    /// Requests refused at admission (load shedding).
+    pub shed: usize,
     /// Thread migrations applied.
     pub migrations: usize,
     /// Policy name.
@@ -86,9 +94,33 @@ pub struct SimOutput {
 }
 
 impl SimOutput {
-    /// Achieved throughput, QPS (full run).
+    /// Achieved throughput, QPS (full run). 0.0 for degenerate runs
+    /// (zero-length span — e.g. everything shed), never NaN/inf.
     pub fn throughput_qps(&self) -> f64 {
+        if self.duration_ms <= 0.0 || !self.duration_ms.is_finite() {
+            return 0.0;
+        }
         self.completed as f64 / (self.duration_ms / 1000.0)
+    }
+
+    /// Requests offered to the server (admitted + shed).
+    pub fn offered(&self) -> usize {
+        self.completed + self.shed
+    }
+
+    /// Goodput: completed (admitted) requests per second — identical to
+    /// [`SimOutput::throughput_qps`], named for shedding reports where the
+    /// offered load is higher.
+    pub fn goodput_qps(&self) -> f64 {
+        self.throughput_qps()
+    }
+
+    /// Fraction of offered requests refused at admission.
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered() == 0 {
+            return 0.0;
+        }
+        self.shed as f64 / self.offered() as f64
     }
 
     /// Measured (post-warmup) request records, in completion order.
@@ -184,8 +216,18 @@ impl Simulation {
         let cfg = &self.cfg;
         let topology = cfg.topology();
         let mut rng = Rng::new(cfg.seed ^ 0xD15_BA7C); // dispatch/noise stream
-        let mut policy = cfg.policy.build(&topology);
+        let mut policy: Box<dyn Policy> = cfg.policy.build(&topology);
+        if let Some(deadline_ms) = cfg.shed_deadline_ms {
+            // First-class admission control: wrap the configured policy in
+            // the projected-delay shedder. An infinite deadline admits
+            // everything and leaves seeded runs bit-for-bit unchanged.
+            policy = Box::new(Shedding::new(policy, deadline_ms));
+        }
         let mut aff = AffinityTable::round_robin(topology.clone());
+        // Tick-time ctx rng, separate from the dispatch/noise stream (same
+        // convention as the live mapper thread): a policy that draws in
+        // `tick` must not perturb the placement of every later request.
+        let mut tick_rng = Rng::new(cfg.seed ^ 0x71C4_11FE);
         let sampler = ServiceSampler::from_config(cfg);
         let mut meters = EnergyMeters::new();
 
@@ -213,14 +255,15 @@ impl Simulation {
 
         // The scheduling layer: queue structure per the configured
         // discipline, payloads (workload indices) owned by the dispatcher.
+        // Per-decision SchedCtx snapshots are assembled inside the
+        // dispatcher; this buffer serves the tick-time ctx only.
         let mut dispatcher: Dispatcher<usize> =
             Dispatcher::new(cfg.discipline.build(cores.len()));
-        // Reused buffer for queue-depth snapshots: the dispatch loop runs
-        // per event and must not allocate.
         let mut depth_scratch: Vec<usize> = Vec::new();
         let mut latency = LatencyHistogram::new();
         let mut per_request: Vec<RequestRecord> = Vec::with_capacity(workload.len());
         let mut completed = 0usize;
+        let mut shed = 0usize;
         let mut migrations = 0usize;
         let mut now = 0.0f64;
         // The run semantically ends at the last completion; trailing mapper
@@ -245,12 +288,6 @@ impl Simulation {
 
         macro_rules! try_dispatch {
             () => {
-                // Queue visibility at dispatch time (per-core backlog).
-                dispatcher.depths_into(&mut depth_scratch);
-                policy.observe_queues(QueueView {
-                    per_core: &depth_scratch,
-                    total: dispatcher.queued(),
-                });
                 loop {
                     let idle: Vec<CoreId> = (0..cores.len())
                         .map(CoreId)
@@ -260,7 +297,7 @@ impl Simulation {
                     // pair; `None` leaves the backlog queued (e.g. all-big
                     // holding the centralized head for a big core).
                     let Some((widx, core_id)) =
-                        dispatcher.next(&idle, policy.as_mut(), &aff, &mut rng)
+                        dispatcher.next(&idle, policy.as_mut(), &aff, &mut rng, now)
                     else {
                         break;
                     };
@@ -306,7 +343,12 @@ impl Simulation {
                     let info = DispatchInfo {
                         keywords: workload.requests[widx].keywords,
                     };
-                    dispatcher.enqueue(widx, info, policy.as_mut(), &aff, &mut rng);
+                    // Lifecycle: enqueue → admit (inside the dispatcher) →
+                    // queue. A shed request never touches the queues.
+                    match dispatcher.enqueue(widx, info, policy.as_mut(), &aff, &mut rng, now) {
+                        AdmissionOutcome::Admitted => {}
+                        AdmissionOutcome::Shed { .. } => shed += 1,
+                    }
                     try_dispatch!();
                 }
                 EventKind::Completion { core: core_id, gen } => {
@@ -349,13 +391,18 @@ impl Simulation {
                     for rec in stream.drain(..) {
                         policy.observe(&rec);
                     }
-                    // Queue visibility at tick time.
-                    dispatcher.depths_into(&mut depth_scratch);
-                    policy.observe_queues(QueueView {
-                        per_core: &depth_scratch,
-                        total: dispatcher.queued(),
-                    });
-                    for mig in policy.tick(now, &aff) {
+                    // Tick with full ctx: backlog snapshot, affinity, clock.
+                    let migs = {
+                        let view = dispatcher.queue_view(&mut depth_scratch);
+                        let mut ctx = SchedCtx {
+                            aff: &aff,
+                            rng: &mut tick_rng,
+                            queues: view,
+                            now_ms: now,
+                        };
+                        policy.tick(&mut ctx)
+                    };
+                    for mig in migs {
                         migrations += 1;
                         apply_migration(
                             mig.big_core,
@@ -370,8 +417,9 @@ impl Simulation {
                         );
                     }
                     if let Some(sampling) = policy.sampling_ms() {
-                        // Keep ticking while work remains.
-                        if completed < workload.len() {
+                        // Keep ticking while offered work remains
+                        // unaccounted (completed or shed).
+                        if completed + shed < workload.len() {
                             events.push(now + sampling, EventKind::MapperTick);
                         }
                     }
@@ -389,7 +437,7 @@ impl Simulation {
         }
         meters.add_wall_time(&cfg.power, last_completion_ms);
 
-        debug_assert_eq!(completed, workload.len(), "requests lost");
+        debug_assert_eq!(completed + shed, workload.len(), "requests lost");
         debug_assert_eq!(dispatcher.queued(), 0, "requests stranded in queues");
         SimOutput {
             latency,
@@ -397,6 +445,7 @@ impl Simulation {
             energy: meters,
             duration_ms: last_completion_ms,
             completed,
+            shed,
             migrations,
             policy: policy.name(),
             discipline: dispatcher.discipline_name().to_string(),
@@ -695,5 +744,46 @@ mod tests {
         let out = Simulation::new(base(PolicyKind::LinuxRandom).with_qps(10.0)).run();
         let qps = out.throughput_qps();
         assert!((qps - 10.0).abs() < 1.0, "qps={qps}");
+    }
+
+    #[test]
+    fn no_shedding_by_default() {
+        let out = Simulation::new(base(PolicyKind::LinuxRandom)).run();
+        assert_eq!(out.shed, 0);
+        assert_eq!(out.offered(), 3_000);
+        assert_eq!(out.shed_rate(), 0.0);
+    }
+
+    #[test]
+    fn all_shed_run_reports_zero_throughput_not_nan() {
+        // A negative deadline sheds every arrival at the door: the run has
+        // no completions and zero span — throughput must be 0.0, not
+        // NaN/inf from the 0/0 division.
+        let mut cfg = base(PolicyKind::LinuxRandom).with_requests(200);
+        cfg.shed_deadline_ms = Some(-1.0);
+        let out = Simulation::new(cfg).run();
+        assert_eq!(out.completed, 0);
+        assert_eq!(out.shed, 200);
+        assert_eq!(out.duration_ms, 0.0);
+        assert_eq!(out.throughput_qps(), 0.0, "guarded division");
+        assert_eq!(out.goodput_qps(), 0.0);
+        assert_eq!(out.shed_rate(), 1.0);
+        assert!(out.per_request.is_empty());
+    }
+
+    #[test]
+    fn shedding_conserves_offered_requests_at_overload() {
+        let mut cfg = base(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        })
+        .with_qps(45.0)
+        .with_requests(2_000);
+        cfg.shed_deadline_ms = Some(300.0);
+        let out = Simulation::new(cfg).run();
+        assert!(out.shed > 0, "overload at 45 qps must shed");
+        assert_eq!(out.completed + out.shed, 2_000, "conservation");
+        assert_eq!(out.per_request.len(), out.completed);
+        assert!(out.goodput_qps() > 0.0);
     }
 }

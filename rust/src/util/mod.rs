@@ -7,3 +7,23 @@ pub mod prop;
 pub mod rng;
 
 pub use rng::Rng;
+
+/// Normalise a user-supplied selector token (CLI flag value, TOML string):
+/// trim whitespace, lowercase, and fold `-` into `_`, so `"Centralized"`,
+/// `" WORK_STEAL "` and `"hurry-up"` all match their canonical spellings.
+pub fn norm_token(s: &str) -> String {
+    s.trim().to_ascii_lowercase().replace('-', "_")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_token_folds_case_space_and_dashes() {
+        assert_eq!(norm_token("  Hurry-Up "), "hurry_up");
+        assert_eq!(norm_token("WORK_STEAL"), "work_steal");
+        assert_eq!(norm_token("cfcfs"), "cfcfs");
+        assert_eq!(norm_token(""), "");
+    }
+}

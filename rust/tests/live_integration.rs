@@ -70,6 +70,28 @@ fn serves_every_request_with_results() {
     assert!(with_hits > 100, "only {with_hits}/120 queries returned hits");
     assert!(report.total_passes > 0);
     assert!(report.duration_ms > 0.0);
+    assert_eq!(report.shed, 0, "no admission control configured");
+    assert_eq!(report.offered(), 120);
+}
+
+#[test]
+fn negative_shed_deadline_refuses_every_request() {
+    // Admission control end to end on real threads: a negative deadline
+    // sheds every push, workers serve nothing, the mapper still exits, and
+    // the degenerate report is 0 QPS (not NaN).
+    let cfg = LiveConfig {
+        shed_deadline_ms: Some(-1.0),
+        qps: 200.0,
+        num_requests: 40,
+        ..base_cfg()
+    };
+    let report = LiveServer::new(cfg, small_index()).run().unwrap();
+    assert_eq!(report.per_request.len(), 0);
+    assert_eq!(report.shed, 40);
+    assert_eq!(report.offered(), 40);
+    assert_eq!(report.throughput_qps(), 0.0);
+    assert_eq!(report.goodput_qps(), 0.0);
+    assert_eq!(report.total_passes, 0);
 }
 
 #[test]

@@ -8,8 +8,9 @@ use std::collections::HashMap;
 
 use hurryup::config::SimConfig;
 use hurryup::ipc::{RequestTag, StatsRecord};
-use hurryup::mapper::{HurryUp, HurryUpParams, Policy, PolicyKind};
+use hurryup::mapper::{HurryUp, HurryUpParams, Policy, PolicyKind, SchedCtx};
 use hurryup::platform::{AffinityTable, CoreKind, ThreadId, Topology};
+use hurryup::sched::QueueView;
 use hurryup::sim::Simulation;
 use hurryup::util::{prop, Rng};
 
@@ -34,6 +35,9 @@ fn prop_hurryup_full_trajectory_invariants() {
         let mut now = 0.0f64;
         let mut in_flight: HashMap<usize, (u64, f64)> = HashMap::new(); // tid -> (seq, start)
         let mut seq = 0u64;
+        // Ctx rng for ticks (Algorithm 1 draws none; separate stream so
+        // the property rng replays exactly under PROP_SEED).
+        let mut tick_rng = Rng::new(0);
 
         for _step in 0..rng.below(200) {
             now += rng.f64_range(1.0, 40.0);
@@ -67,8 +71,17 @@ fn prop_hurryup_full_trajectory_invariants() {
                     }
                 }
                 _ => {
-                    // Mapper tick.
-                    let migs = mapper.tick(now, &aff);
+                    // Mapper tick (full SchedCtx, empty backlog view —
+                    // Algorithm 1 ignores it by design).
+                    let migs = {
+                        let mut ctx = SchedCtx {
+                            aff: &aff,
+                            rng: &mut tick_rng,
+                            queues: QueueView::empty(),
+                            now_ms: now,
+                        };
+                        mapper.tick(&mut ctx)
+                    };
                     // Invariant: at most one migration per big core, sources
                     // distinct little cores, all above threshold.
                     assert!(migs.len() <= topo.big_cores().len());

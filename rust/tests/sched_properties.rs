@@ -1,12 +1,17 @@
 //! Property tests over the scheduling layer (`sched`): conservation (no
-//! request lost or duplicated), per-queue FIFO order under every
-//! discipline, and the refactor's anchor guarantee — a centralized-FCFS
-//! simulation is the pre-`sched` simulator, bit for bit, on seeded runs.
+//! request lost or duplicated — with and without admission control),
+//! per-queue FIFO order under every discipline, shed requests never
+//! stranding payloads, and the refactor's anchor guarantees — a
+//! centralized-FCFS simulation is the pre-`sched` simulator bit for bit on
+//! seeded runs, through the `SchedCtx` API, and an infinite shed deadline
+//! reproduces the no-admission output exactly.
 
 use hurryup::config::SimConfig;
-use hurryup::mapper::{DispatchInfo, Policy, PolicyKind};
+use hurryup::mapper::{
+    AdmissionDecision, DispatchInfo, Policy, PolicyKind, SchedCtx, ShedReason,
+};
 use hurryup::platform::{AffinityTable, CoreId, Topology};
-use hurryup::sched::{DisciplineKind, Dispatcher};
+use hurryup::sched::{AdmissionOutcome, DisciplineKind, Dispatcher};
 use hurryup::sim::Simulation;
 use hurryup::util::{prop, Rng};
 
@@ -25,11 +30,49 @@ impl Policy for PinFirst {
     fn choose_core(
         &mut self,
         idle: &[CoreId],
-        _aff: &AffinityTable,
         _info: DispatchInfo,
-        _rng: &mut Rng,
+        _ctx: &mut SchedCtx<'_>,
     ) -> Option<CoreId> {
         idle.first().copied()
+    }
+}
+
+/// Test-only admission controller: random placement, but refuses requests
+/// once the visible backlog reaches `cap` (a hard queue bound).
+struct CapAdmission {
+    cap: usize,
+}
+
+impl Policy for CapAdmission {
+    fn name(&self) -> String {
+        "cap-admission".into()
+    }
+    fn sampling_ms(&self) -> Option<f64> {
+        None
+    }
+    fn admit(&mut self, _info: DispatchInfo, ctx: &mut SchedCtx<'_>) -> AdmissionDecision {
+        if ctx.queues.total >= self.cap {
+            AdmissionDecision::Shed {
+                reason: ShedReason::QueueFull {
+                    queued: ctx.queues.total,
+                    limit: self.cap,
+                },
+            }
+        } else {
+            AdmissionDecision::Admit
+        }
+    }
+    fn choose_core(
+        &mut self,
+        idle: &[CoreId],
+        _info: DispatchInfo,
+        ctx: &mut SchedCtx<'_>,
+    ) -> Option<CoreId> {
+        if idle.is_empty() {
+            None
+        } else {
+            Some(idle[ctx.rng.below(idle.len())])
+        }
     }
 }
 
@@ -56,13 +99,15 @@ fn prop_no_request_lost_or_duplicated() {
             let mut out: Vec<usize> = Vec::new();
             while out.len() < total {
                 if next_in < total && rng.chance(0.6) {
-                    d.enqueue(
+                    let outcome = d.enqueue(
                         next_in,
                         DispatchInfo { keywords: rng.range(1, 8) },
                         policy.as_mut(),
                         &aff,
                         rng,
+                        0.0,
                     );
+                    assert!(!outcome.is_shed(), "default admission must admit");
                     next_in += 1;
                 } else if next_in == total || rng.chance(0.7) {
                     // Random non-empty idle subset.
@@ -71,7 +116,7 @@ fn prop_no_request_lost_or_duplicated() {
                     rng.shuffle(&mut cores);
                     cores.truncate(k);
                     cores.sort_unstable();
-                    while let Some((p, _)) = d.next(&cores, policy.as_mut(), &aff, rng) {
+                    while let Some((p, _)) = d.next(&cores, policy.as_mut(), &aff, rng, 0.0) {
                         out.push(p);
                     }
                 }
@@ -79,6 +124,61 @@ fn prop_no_request_lost_or_duplicated() {
             assert_eq!(d.queued(), 0);
             out.sort_unstable();
             assert_eq!(out, (0..total).collect::<Vec<_>>(), "{kind:?}");
+        });
+    }
+}
+
+/// Conservation under admission control: with a shedding policy in the
+/// loop, every offered payload is either dispatched exactly once or came
+/// straight back as a shed — enqueued == completed + shed — and the
+/// backlog never exceeds the cap.
+#[test]
+fn prop_conservation_holds_under_shedding() {
+    for kind in DisciplineKind::all() {
+        prop::check(48, |rng: &mut Rng, _i| {
+            let topo = Topology::juno_r1();
+            let aff = AffinityTable::round_robin(topo.clone());
+            let cap = rng.range(1, 12);
+            let mut policy = CapAdmission { cap };
+            let mut d: Dispatcher<usize> = Dispatcher::new(kind.build(6));
+            let total = rng.range(1, 120);
+            let mut offered = 0usize;
+            let mut shed: Vec<usize> = Vec::new();
+            let mut out: Vec<usize> = Vec::new();
+            while offered < total || d.queued() > 0 {
+                if offered < total && rng.chance(0.6) {
+                    match d.enqueue(
+                        offered,
+                        DispatchInfo { keywords: rng.range(1, 8) },
+                        &mut policy,
+                        &aff,
+                        rng,
+                        offered as f64,
+                    ) {
+                        AdmissionOutcome::Admitted => {}
+                        AdmissionOutcome::Shed { payload, reason } => {
+                            assert_eq!(payload, offered, "shed must return its own payload");
+                            assert!(matches!(reason, ShedReason::QueueFull { .. }));
+                            shed.push(payload);
+                        }
+                    }
+                    offered += 1;
+                } else if rng.chance(0.7) || offered == total {
+                    let k = rng.range(1, 6);
+                    let mut cores: Vec<CoreId> = (0..6).map(CoreId).collect();
+                    rng.shuffle(&mut cores);
+                    cores.truncate(k);
+                    cores.sort_unstable();
+                    if let Some((p, _)) = d.next(&cores, &mut policy, &aff, rng, 0.0) {
+                        out.push(p);
+                    }
+                }
+                assert!(d.queued() <= cap, "cap admission must bound the backlog");
+            }
+            assert_eq!(out.len() + shed.len(), total, "{kind:?}: conservation");
+            let mut all: Vec<usize> = out.iter().chain(shed.iter()).copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..total).collect::<Vec<_>>(), "{kind:?}");
         });
     }
 }
@@ -92,13 +192,15 @@ fn prop_centralized_is_globally_fifo() {
         let mut policy = PolicyKind::LinuxRandom.build(aff.topology());
         let n = rng.range(1, 60);
         for i in 0..n {
-            d.enqueue(i, DispatchInfo { keywords: 2 }, policy.as_mut(), &aff, rng);
+            let outcome =
+                d.enqueue(i, DispatchInfo { keywords: 2 }, policy.as_mut(), &aff, rng, 0.0);
+            assert!(!outcome.is_shed());
         }
         let mut got = Vec::new();
         loop {
             let k = rng.range(1, 6);
             let idle: Vec<CoreId> = (0..k).map(CoreId).collect();
-            match d.next(&idle, policy.as_mut(), &aff, rng) {
+            match d.next(&idle, policy.as_mut(), &aff, rng, 0.0) {
                 Some((p, _)) => got.push(p),
                 None => break,
             }
@@ -116,11 +218,13 @@ fn prop_per_core_is_fifo_per_queue() {
         let mut policy = PolicyKind::LinuxRandom.build(aff.topology());
         let n = rng.range(1, 80);
         for i in 0..n {
-            d.enqueue(i, DispatchInfo { keywords: 2 }, policy.as_mut(), &aff, rng);
+            let outcome =
+                d.enqueue(i, DispatchInfo { keywords: 2 }, policy.as_mut(), &aff, rng, 0.0);
+            assert!(!outcome.is_shed());
         }
         let mut last_on_core = vec![None::<usize>; 6];
         let all: Vec<CoreId> = (0..6).map(CoreId).collect();
-        while let Some((p, core)) = d.next(&all, policy.as_mut(), &aff, rng) {
+        while let Some((p, core)) = d.next(&all, policy.as_mut(), &aff, rng, 0.0) {
             if let Some(prev) = last_on_core[core.0] {
                 assert!(prev < p, "core {core:?} served {p} after {prev}");
             }
@@ -140,13 +244,15 @@ fn steal_order_is_oldest_first() {
     let mut rng = Rng::new(1234);
     for i in 0..20usize {
         // PinFirst homes every request on core 0.
-        d.enqueue(i, DispatchInfo { keywords: 1 }, &mut policy, &aff, &mut rng);
+        let outcome =
+            d.enqueue(i, DispatchInfo { keywords: 1 }, &mut policy, &aff, &mut rng, 0.0);
+        assert!(!outcome.is_shed());
     }
     assert_eq!(d.depth(CoreId(0)), 20);
     // Core 5 (empty local queue) steals repeatedly: strict enqueue order.
     for expect in 0..20usize {
         let (p, core) = d
-            .next(&[CoreId(5)], &mut policy, &aff, &mut rng)
+            .next(&[CoreId(5)], &mut policy, &aff, &mut rng, 0.0)
             .expect("work available");
         assert_eq!(core, CoreId(5));
         assert_eq!(p, expect, "steal must take the oldest request");
@@ -168,6 +274,7 @@ fn prop_sim_conserves_requests_under_every_discipline() {
             PolicyKind::LinuxRandom,
             PolicyKind::RoundRobin,
             PolicyKind::Oracle { cutoff_kw: rng.range(1, 10) },
+            PolicyKind::QueueAware,
         ];
         let policy = policies[rng.below(policies.len())];
         let n = rng.range(200, 900);
@@ -178,10 +285,38 @@ fn prop_sim_conserves_requests_under_every_discipline() {
             .with_discipline(kind);
         let out = Simulation::new(cfg).run();
         assert_eq!(out.completed, n, "{kind:?} {policy:?}");
+        assert_eq!(out.shed, 0, "no admission control configured");
         assert_eq!(out.per_request.len(), n);
         for r in &out.per_request {
             assert!(r.latency_ms() >= 0.0);
             assert!(r.queue_ms() >= -1e-9);
+        }
+    });
+}
+
+/// Simulation-level conservation WITH admission control: across random
+/// overloads and deadlines, completed + shed always equals the offered
+/// workload and nothing is stranded.
+#[test]
+fn prop_sim_conserves_requests_under_shedding() {
+    prop::check(12, |rng: &mut Rng, _i| {
+        let kind = *rng.choose(&DisciplineKind::all());
+        let n = rng.range(300, 900);
+        let cfg = SimConfig::paper_default(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        })
+        .with_qps(rng.f64_range(25.0, 55.0))
+        .with_requests(n)
+        .with_seed(rng.next_u64())
+        .with_discipline(kind)
+        .with_shed_deadline(rng.f64_range(100.0, 800.0));
+        let out = Simulation::new(cfg).run();
+        assert_eq!(out.completed + out.shed, n, "{kind:?}: conservation");
+        assert_eq!(out.per_request.len(), out.completed);
+        assert_eq!(out.offered(), n);
+        for r in &out.per_request {
+            assert!(r.latency_ms() >= 0.0);
         }
     });
 }
@@ -192,7 +327,7 @@ fn prop_sim_conserves_requests_under_every_discipline() {
 /// with all idle cores, one rng draw per offer, demand sampled at first
 /// dispatch — the structural fingerprints below (global FIFO start order,
 /// unchanged rng stream across reruns, byte-identical record streams)
-/// pin that behaviour in place.
+/// pin that behaviour in place (now through the `SchedCtx` API).
 #[test]
 fn centralized_reproduces_pre_refactor_seeded_output() {
     let mk = |disc| {
@@ -240,6 +375,38 @@ fn centralized_reproduces_pre_refactor_seeded_output() {
     assert_eq!(a.p90_ms(), c.p90_ms());
     assert_eq!(a.migrations, c.migrations);
     assert_eq!(a.duration_ms, c.duration_ms);
+}
+
+/// The admission anchor: an INFINITE shed deadline takes the admission
+/// code path (policy wrapped in `Shedding`, `admit` consulted on every
+/// arrival) yet reproduces the no-admission seeded output bit for bit —
+/// the wrapper draws no randomness and delegates every other decision.
+#[test]
+fn infinite_shed_deadline_reproduces_no_admission_output() {
+    let mk = || {
+        SimConfig::paper_default(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        })
+        .with_qps(30.0)
+        .with_requests(3_000)
+        .with_seed(11)
+    };
+    let plain = Simulation::new(mk()).run();
+    let wrapped = Simulation::new(mk().with_shed_deadline(f64::INFINITY)).run();
+    assert_eq!(wrapped.shed, 0, "infinite deadline must never shed");
+    assert_eq!(plain.per_request.len(), wrapped.per_request.len());
+    for (x, y) in plain.per_request.iter().zip(&wrapped.per_request) {
+        assert_eq!(x.arrived_ms, y.arrived_ms);
+        assert_eq!(x.started_ms, y.started_ms);
+        assert_eq!(x.completed_ms, y.completed_ms);
+        assert_eq!(x.first_kind, y.first_kind);
+        assert_eq!(x.final_kind, y.final_kind);
+        assert_eq!(x.migrated, y.migrated);
+    }
+    assert_eq!(plain.migrations, wrapped.migrations);
+    assert_eq!(plain.duration_ms, wrapped.duration_ms);
+    assert!((plain.energy.total_j() - wrapped.energy.total_j()).abs() < 1e-12);
 }
 
 /// Seeded determinism for the decentralized disciplines too.
