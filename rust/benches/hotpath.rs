@@ -134,7 +134,7 @@ fn main() {
                 for i in 0..64usize {
                     let _ = dispatcher.enqueue(
                         i,
-                        DispatchInfo { keywords: 3 },
+                        DispatchInfo::untyped(3),
                         policy.as_mut(),
                         &aff,
                         &mut rng,

@@ -3,9 +3,10 @@
 
 use std::path::Path;
 
-use super::toml::{parse, Document, Value};
+use super::toml::{array_indices, parse, Document, Value};
 use super::{KeywordMix, SimConfig};
 use crate::error::{Error, Result};
+use crate::loadgen::{parse_mix_token, ClassSpec};
 use crate::mapper::PolicyKind;
 use crate::sched::DisciplineKind;
 
@@ -46,7 +47,15 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
             "noise.sigma_big",
             "noise.sigma_little",
         ];
-        if !KNOWN.contains(&key.as_str()) {
+        // Per-class keys of `[[workload.class]]` tables, flattened as
+        // `workload.class.<index>.<field>`.
+        const CLASS_FIELDS: &[&str] = &["name", "share", "mix", "deadline_ms", "priority"];
+        let class_field = key
+            .strip_prefix("workload.class.")
+            .and_then(|rest| rest.split_once('.'))
+            .map(|(idx, field)| idx.parse::<usize>().is_ok() && CLASS_FIELDS.contains(&field))
+            .unwrap_or(false);
+        if !KNOWN.contains(&key.as_str()) && !class_field {
             return Err(Error::config(format!("unknown config key `{key}`")));
         }
     }
@@ -133,6 +142,40 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
             ),
             other => return Err(Error::config(format!("unknown mix kind `{other}`"))),
         };
+    }
+
+    // `[[workload.class]]` tables — parsed after `mix.kind` so classes
+    // that omit `mix` inherit the document's keyword mix.
+    let n_classes = array_indices(&doc, "workload.class");
+    for i in 0..n_classes {
+        let field = |f: &str| format!("workload.class.{i}.{f}");
+        let name = doc
+            .get(&field("name"))
+            .and_then(Value::as_str)
+            .ok_or_else(|| {
+                Error::config(format!("workload.class {i}: `name` (string) required"))
+            })?;
+        let mut spec = ClassSpec::new(name, cfg.keyword_mix);
+        if let Some(v) = get_f64(&doc, &field("share"))? {
+            spec.share = v;
+        }
+        if let Some(v) = get_f64(&doc, &field("deadline_ms"))? {
+            spec.deadline_ms = Some(v);
+        }
+        if let Some(v) = get_i64(&doc, &field("priority"))? {
+            spec.priority = u8::try_from(v).map_err(|_| {
+                Error::config(format!("class `{name}`: priority must fit 0..=255"))
+            })?;
+        }
+        if let Some(v) = doc.get(&field("mix")) {
+            let tok = v.as_str().ok_or_else(|| {
+                Error::config(format!(
+                    "class `{name}`: mix must be a string (paper | fixed:K | uniform:LO:HI)"
+                ))
+            })?;
+            spec.mix = parse_mix_token(tok)?;
+        }
+        cfg.classes.push(spec);
     }
 
     cfg.validated()
@@ -259,6 +302,70 @@ mod tests {
         assert_eq!(cfg.policy, PolicyKind::QueueAware);
         let cfg = sim_config_from_str("[mix]\nkind = \"Paper\"").unwrap();
         assert_eq!(cfg.keyword_mix, KeywordMix::Paper);
+    }
+
+    #[test]
+    fn workload_class_tables_parsed() {
+        let cfg = sim_config_from_str(
+            r#"
+            qps = 30.0
+            [mix]
+            kind = "fixed"
+            fixed_k = 4
+            [[workload.class]]
+            name = "interactive"
+            share = 0.7
+            deadline_ms = 500.0
+            priority = 1
+            [[workload.class]]
+            name = "batch"
+            share = 0.3
+            mix = "uniform:6:14"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.classes.len(), 2);
+        assert_eq!(cfg.classes[0].name, "interactive");
+        assert_eq!(cfg.classes[0].share, 0.7);
+        assert_eq!(cfg.classes[0].deadline_ms, Some(500.0));
+        assert_eq!(cfg.classes[0].priority, 1);
+        // Omitted mix inherits the document's keyword mix.
+        assert_eq!(cfg.classes[0].mix, KeywordMix::Fixed(4));
+        assert_eq!(cfg.classes[1].mix, KeywordMix::Uniform(6, 14));
+        assert_eq!(cfg.classes[1].priority, 0);
+        assert!(cfg.admission_enabled(), "class deadline enables admission");
+        let reg = cfg.class_registry();
+        assert_eq!(reg.len(), 2);
+        assert!(!reg.is_implicit_default());
+    }
+
+    #[test]
+    fn class_tables_validated() {
+        // Missing name.
+        assert!(sim_config_from_str("[[workload.class]]\nshare = 1.0").is_err());
+        // Unknown per-class key.
+        assert!(
+            sim_config_from_str("[[workload.class]]\nname = \"a\"\nweight = 2").is_err()
+        );
+        // Duplicate names (norm_token-folded) rejected by validation.
+        assert!(sim_config_from_str(
+            "[[workload.class]]\nname = \"a\"\n[[workload.class]]\nname = \" A \""
+        )
+        .is_err());
+        // Bad mix token.
+        assert!(
+            sim_config_from_str("[[workload.class]]\nname = \"a\"\nmix = \"zipf\"").is_err()
+        );
+        // Priority out of range.
+        assert!(sim_config_from_str(
+            "[[workload.class]]\nname = \"a\"\npriority = 4096"
+        )
+        .is_err());
+        // No classes declared: implicit default registry.
+        let cfg = sim_config_from_str("qps = 5.0").unwrap();
+        assert!(cfg.classes.is_empty());
+        assert!(cfg.class_registry().is_implicit_default());
+        assert!(!cfg.admission_enabled());
     }
 
     #[test]

@@ -6,6 +6,7 @@ pub mod toml;
 
 pub use file::load_sim_config;
 
+use crate::loadgen::{ClassRegistry, ClassSpec};
 use crate::mapper::PolicyKind;
 use crate::platform::{CoreKind, PowerModel, Topology};
 use crate::sched::DisciplineKind;
@@ -161,9 +162,17 @@ pub struct SimConfig {
     pub num_requests: usize,
     /// Requests excluded from latency statistics at the start.
     pub warmup_requests: usize,
-    /// Keyword mix of the query stream.
+    /// Keyword mix of the query stream (the implicit default class's mix,
+    /// and the fallback mix of declared classes that omit one).
     pub keyword_mix: KeywordMix,
-    /// Master seed (arrivals, keyword sampling, service noise, dispatch).
+    /// Declared service classes (TOML `[[workload.class]]` tables, CLI
+    /// `--classes`). Empty ⇒ one implicit default class with
+    /// `keyword_mix`, which reproduces untyped seeded runs bit-for-bit.
+    /// A class's `deadline_ms` is its latency SLO *and* its admission
+    /// deadline — declaring one enables admission control for the run.
+    pub classes: Vec<ClassSpec>,
+    /// Master seed (arrivals, class + keyword sampling, service noise,
+    /// dispatch).
     pub seed: u64,
     /// Multiplicative service-noise σ per core kind; `None` uses the
     /// calibrated `CoreKind::noise_sigma()` values.
@@ -191,6 +200,7 @@ impl SimConfig {
             num_requests: 100_000,
             warmup_requests: 200,
             keyword_mix: KeywordMix::Paper,
+            classes: Vec::new(),
             seed: 42,
             noise_override: None,
             speed_override: None,
@@ -253,6 +263,29 @@ impl SimConfig {
         self
     }
 
+    /// Builder: declare service classes (empty restores the implicit
+    /// default class).
+    pub fn with_classes(mut self, classes: Vec<ClassSpec>) -> Self {
+        self.classes = classes;
+        self
+    }
+
+    /// The resolved class registry: the declared classes, or the single
+    /// implicit default class when none were declared. Panics on invalid
+    /// declarations — run [`SimConfig::validated`] first.
+    pub fn class_registry(&self) -> ClassRegistry {
+        ClassRegistry::resolve(&self.classes, self.keyword_mix)
+            .expect("invalid class declarations (SimConfig::validated catches this)")
+    }
+
+    /// True when admission control should wrap the policy: a global shed
+    /// deadline is set, or any declared class carries its own
+    /// `deadline_ms` (per-class SLO ⇒ per-class admission deadline).
+    pub fn admission_enabled(&self) -> bool {
+        self.shed_deadline_ms.is_some()
+            || self.classes.iter().any(|c| c.deadline_ms.is_some())
+    }
+
     /// Core speed (units/ms) for a kind, honouring the DVFS override.
     pub fn speed(&self, kind: CoreKind) -> f64 {
         match (self.speed_override, kind) {
@@ -289,6 +322,8 @@ impl SimConfig {
                 ));
             }
         }
+        // Shares, names and deadlines of declared classes.
+        ClassRegistry::resolve(&self.classes, self.keyword_mix)?;
         Ok(self)
     }
 }
@@ -349,6 +384,37 @@ mod tests {
         let c = SimConfig::paper_default(PolicyKind::LinuxRandom);
         assert_eq!(c.discipline, DisciplineKind::Centralized);
         assert_eq!(c.shed_deadline_ms, None);
+    }
+
+    #[test]
+    fn class_declarations_validated_and_gate_admission() {
+        use crate::loadgen::ClassSpec;
+        let base = SimConfig::paper_default(PolicyKind::LinuxRandom);
+        assert!(!base.admission_enabled());
+        assert!(base.class_registry().is_implicit_default());
+        // Declaring an SLO class turns admission control on.
+        let typed = base.clone().with_classes(vec![
+            ClassSpec::new("interactive", KeywordMix::Paper).with_deadline(500.0),
+            ClassSpec::new("batch", KeywordMix::Uniform(6, 14)),
+        ]);
+        assert!(typed.admission_enabled());
+        assert!(typed.clone().validated().is_ok());
+        assert_eq!(typed.class_registry().len(), 2);
+        // A global deadline alone also enables admission.
+        assert!(base.clone().with_shed_deadline(500.0).admission_enabled());
+        // Invalid declarations fail validation.
+        assert!(base
+            .clone()
+            .with_classes(vec![
+                ClassSpec::new("dup", KeywordMix::Paper),
+                ClassSpec::new("DUP", KeywordMix::Paper),
+            ])
+            .validated()
+            .is_err());
+        assert!(base
+            .with_classes(vec![ClassSpec::new("z", KeywordMix::Paper).with_share(-1.0)])
+            .validated()
+            .is_err());
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! Minimal TOML-subset parser (serde/toml crates are unavailable offline).
 //!
 //! Supports the subset the launcher configs use: `[section]` /
-//! `[section.sub]` headers, `key = value` with string, integer, float,
-//! boolean and flat-array values, `#` comments, and blank lines. Keys are
-//! flattened to dotted paths (`section.key`).
+//! `[section.sub]` headers, `[[section.array]]` array-of-tables headers,
+//! `key = value` with string, integer, float, boolean and flat-array
+//! values, `#` comments, and blank lines. Keys are flattened to dotted
+//! paths (`section.key`); array tables flatten with a running index
+//! (`section.array.0.key`, `section.array.1.key`, …) — enumerate them
+//! with [`array_indices`].
 
 use std::collections::BTreeMap;
 
@@ -66,9 +69,24 @@ pub type Document = BTreeMap<String, Value>;
 pub fn parse(input: &str) -> Result<Document> {
     let mut doc = Document::new();
     let mut prefix = String::new();
+    // Next index per array-of-tables name (`[[workload.class]]`).
+    let mut array_counts: BTreeMap<String, usize> = BTreeMap::new();
     for (lineno, raw) in input.lines().enumerate() {
         let line = strip_comment(raw).trim();
         if line.is_empty() {
+            continue;
+        }
+        if let Some(array) = line.strip_prefix("[[") {
+            let array = array
+                .strip_suffix("]]")
+                .ok_or_else(|| err(lineno, "unterminated array-of-tables header"))?
+                .trim();
+            if array.is_empty() {
+                return Err(err(lineno, "empty array-of-tables name"));
+            }
+            let idx = array_counts.entry(array.to_string()).or_insert(0);
+            prefix = format!("{array}.{idx}");
+            *idx += 1;
             continue;
         }
         if let Some(section) = line.strip_prefix('[') {
@@ -100,6 +118,19 @@ pub fn parse(input: &str) -> Result<Document> {
         }
     }
     Ok(doc)
+}
+
+/// Number of `[[name]]` tables a parsed document holds (indices are
+/// dense: `name.0.*` … `name.{n-1}.*`).
+pub fn array_indices(doc: &Document, name: &str) -> usize {
+    let prefix = format!("{name}.");
+    doc.keys()
+        .filter_map(|k| k.strip_prefix(&prefix))
+        .filter_map(|rest| rest.split('.').next())
+        .filter_map(|idx| idx.parse::<usize>().ok())
+        .max()
+        .map(|max| max + 1)
+        .unwrap_or(0)
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -229,5 +260,28 @@ mod tests {
         assert!(parse("[section").is_err());
         assert!(parse(r#"s = "oops"#).is_err());
         assert!(parse("a = [1, 2").is_err());
+        assert!(parse("[[classes]").is_err());
+        assert!(parse("[[  ]]").is_err());
+    }
+
+    #[test]
+    fn array_of_tables_flattens_with_indices() {
+        let doc = parse(
+            r#"
+            qps = 10.0
+            [[workload.class]]
+            name = "interactive"
+            share = 0.7
+            [[workload.class]]
+            name = "batch"
+            priority = 0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc["workload.class.0.name"].as_str(), Some("interactive"));
+        assert_eq!(doc["workload.class.0.share"].as_f64(), Some(0.7));
+        assert_eq!(doc["workload.class.1.name"].as_str(), Some("batch"));
+        assert_eq!(array_indices(&doc, "workload.class"), 2);
+        assert_eq!(array_indices(&doc, "workload.other"), 0);
     }
 }

@@ -14,11 +14,13 @@
 //! | `ablations` | extra design-choice studies (DESIGN.md §6)        |
 //! | `disciplines` | queue-discipline × policy grid (`sched` layer)  |
 //! | `shedding`  | admission control: p90/goodput ± load shedding    |
+//! | `classes`   | service classes: interactive vs batch SLO/shed    |
 //!
 //! Scale: experiments default to a fast setting; set `HURRYUP_FULL=1` for
 //! the paper's 1×10⁵-request scale.
 
 pub mod ablations;
+pub mod classes;
 pub mod disciplines;
 pub mod fig1;
 pub mod fig2;
@@ -52,6 +54,7 @@ pub fn registry() -> Vec<(&'static str, ExperimentFn)> {
         ("ablations", ablations::run as ExperimentFn),
         ("disciplines", disciplines::run as ExperimentFn),
         ("shedding", shedding::run as ExperimentFn),
+        ("classes", classes::run as ExperimentFn),
     ]
 }
 

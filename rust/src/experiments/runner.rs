@@ -3,7 +3,7 @@
 //! policy-caused, never workload-sampling noise).
 
 use crate::config::SimConfig;
-use crate::loadgen::{ArrivalProcess, QueryGen, Workload};
+use crate::loadgen::{ArrivalProcess, Workload, WorkloadMix};
 use crate::mapper::PolicyKind;
 use crate::sim::{SimOutput, Simulation};
 use crate::util::Rng;
@@ -42,13 +42,14 @@ impl Scale {
     }
 }
 
-/// Generate the shared workload a config implies (same seed ⇒ same trace).
+/// Generate the shared workload a config implies (same seed ⇒ same trace,
+/// classified per the config's class registry).
 pub fn shared_workload(cfg: &SimConfig) -> Workload {
     let mut rng = Rng::new(cfg.seed);
-    let gen = QueryGen::new(cfg.keyword_mix, 0);
+    let mix = WorkloadMix::new(&cfg.class_registry(), 0);
     Workload::generate(
         ArrivalProcess::Poisson { qps: cfg.qps },
-        &gen,
+        &mix,
         cfg.num_requests,
         false,
         &mut rng.fork(),

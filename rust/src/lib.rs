@@ -25,8 +25,11 @@
 //!   first-class admission control / load shedding, driven identically by
 //!   both execution modes), the discrete-event simulator, the live
 //!   thread-pool server (which executes the AOT artifact on the request
-//!   path via PJRT), the load generator, metrics and the experiment
-//!   harness.
+//!   path via PJRT), the typed load generator (`loadgen`: every request
+//!   carries a service-class tag; classes declare traffic share, keyword
+//!   mix, SLO deadline and dispatch priority — per-class admission
+//!   deadlines, priority-aware queueing and class-aware reporting follow),
+//!   metrics and the experiment harness.
 //!
 //! Python runs only at `make artifacts`; the serving binary is pure Rust.
 //!
@@ -53,9 +56,12 @@ pub mod util;
 pub mod prelude {
     pub use crate::config::{CorpusConfig, HurryUpParams, ServiceModel, SimConfig};
     pub use crate::error::{Error, Result};
-    pub use crate::loadgen::{ArrivalProcess, QueryGen, Workload};
+    pub use crate::loadgen::{
+        ArrivalProcess, ClassId, ClassRegistry, ClassSpec, QueryGen, Request, Workload,
+        WorkloadMix,
+    };
     pub use crate::mapper::{Migration, PolicyKind};
-    pub use crate::metrics::{LatencyHistogram, Summary};
+    pub use crate::metrics::{ClassStats, LatencyHistogram, Summary};
     pub use crate::sched::DisciplineKind;
     pub use crate::platform::{CoreId, CoreKind, PowerModel, ThreadId, Topology};
     pub use crate::search::{Corpus, Index, Query, SearchEngine};

@@ -9,9 +9,9 @@ use super::worker::{EmulatedScorer, LiveRequest, SpeedCell};
 use crate::config::KeywordMix;
 use crate::error::Result;
 use crate::ipc::{stats_channel, RequestTag, StatsRecord, StatsWriter};
-use crate::loadgen::{ArrivalProcess, QueryGen, Workload};
+use crate::loadgen::{ArrivalProcess, ClassId, ClassRegistry, ClassSpec, Workload, WorkloadMix};
 use crate::mapper::{DispatchInfo, HurryUp, HurryUpParams, Policy, PolicyKind, Shedding};
-use crate::metrics::LatencyHistogram;
+use crate::metrics::{ClassStats, LatencyHistogram};
 use crate::platform::{AffinityTable, CoreKind, EnergyMeters, PowerModel, ThreadId, Topology};
 use crate::runtime::XlaScorer;
 use crate::sched::{AdmissionOutcome, DisciplineKind, QueueView, SchedCtx, SharedDispatcher};
@@ -50,8 +50,39 @@ pub struct LiveConfig {
     pub work_scale: f64,
     /// Hits returned per query.
     pub top_k: usize,
-    /// Keyword mix of the query stream.
+    /// Keyword mix of the query stream (the implicit default class's mix,
+    /// and the fallback for declared classes that omit one).
     pub keyword_mix: KeywordMix,
+    /// Declared service classes (same semantics as `SimConfig::classes`):
+    /// empty = one implicit default class; a class's `deadline_ms` is its
+    /// SLO and admission deadline, and enables admission control.
+    pub classes: Vec<ClassSpec>,
+}
+
+impl LiveConfig {
+    /// Validate invariants (class shares/names/deadlines, like
+    /// `SimConfig::validated`); returns self for chaining. Run this on
+    /// user-supplied configs — [`LiveConfig::class_registry`] panics on
+    /// invalid declarations.
+    pub fn validated(self) -> crate::error::Result<Self> {
+        ClassRegistry::resolve(&self.classes, self.keyword_mix)?;
+        Ok(self)
+    }
+
+    /// The resolved class registry (implicit default when none declared).
+    /// Panics on invalid declarations — run [`LiveConfig::validated`]
+    /// first.
+    pub fn class_registry(&self) -> ClassRegistry {
+        ClassRegistry::resolve(&self.classes, self.keyword_mix)
+            .expect("invalid class declarations (LiveConfig::validated catches this)")
+    }
+
+    /// True when admission control wraps the placement policy (a global
+    /// shed deadline, or any class-declared `deadline_ms`).
+    pub fn admission_enabled(&self) -> bool {
+        self.shed_deadline_ms.is_some()
+            || self.classes.iter().any(|c| c.deadline_ms.is_some())
+    }
 }
 
 impl Default for LiveConfig {
@@ -69,6 +100,7 @@ impl Default for LiveConfig {
             work_scale: 10.0,
             top_k: 10,
             keyword_mix: KeywordMix::Paper,
+            classes: Vec::new(),
         }
     }
 }
@@ -76,6 +108,8 @@ impl Default for LiveConfig {
 /// One served request's record.
 #[derive(Clone, Debug)]
 pub struct LiveRecord {
+    /// Service class of the request.
+    pub class: ClassId,
     /// Keyword count.
     pub keywords: usize,
     /// Arrival, ms since epoch.
@@ -118,6 +152,9 @@ pub struct LiveReport {
     pub migrations: usize,
     /// Requests refused at admission (load shedding).
     pub shed: usize,
+    /// Per-service-class outcomes, in class-registry order (one entry —
+    /// the implicit default class — for untyped configs).
+    pub per_class: Vec<ClassStats>,
     /// Scorer backend used ("xla" or "rust").
     pub backend: &'static str,
     /// Queue-discipline name (`sched` layer).
@@ -151,6 +188,14 @@ impl LiveReport {
     /// p90 end-to-end latency, ms.
     pub fn p90_ms(&self) -> f64 {
         self.latency.percentile(0.90)
+    }
+
+    /// Per-class outcomes of one class by name (norm_token-matched).
+    pub fn class_stats(&self, name: &str) -> Option<&ClassStats> {
+        let key = crate::util::norm_token(name);
+        self.per_class
+            .iter()
+            .find(|c| crate::util::norm_token(&c.name) == key)
     }
 }
 
@@ -199,13 +244,16 @@ impl LiveServer {
             None => PolicyKind::LinuxRandom.build(&topology),
         };
         // First-class admission control: wrap the placement policy in the
-        // projected-delay shedder so `push` can refuse requests. (The live
-        // queue policy never sees the stats stream, so the estimator stays
-        // at its calibrated fallback — deterministic and conservative.)
-        let placement: Box<dyn Policy> = match cfg.shed_deadline_ms {
-            Some(deadline_ms) => Box::new(Shedding::new(placement, deadline_ms)),
-            None => placement,
-        };
+        // projected-delay shedder so `push` can refuse requests — per
+        // class (a class's deadline_ms overrides the global deadline),
+        // through the same `Shedding::wrap` rule the simulator applies.
+        // (The live queue policy never sees the stats stream, so the
+        // estimator stays at its calibrated fallback — deterministic and
+        // conservative.)
+        let registry = cfg.class_registry();
+        let priorities = registry.priorities();
+        let placement: Box<dyn Policy> =
+            Shedding::wrap(placement, cfg.shed_deadline_ms, &registry);
         let shared = Arc::new(SharedState {
             queue: SharedDispatcher::new(
                 cfg.discipline.build(n_threads),
@@ -222,12 +270,12 @@ impl LiveServer {
         let epoch = Instant::now();
         let now_ms = move || epoch.elapsed().as_secs_f64() * 1e3;
 
-        // Workload (with concrete terms).
+        // Workload (with concrete terms), classified per the registry.
         let mut rng = Rng::new(cfg.seed);
-        let qgen = QueryGen::new(cfg.keyword_mix, self.index.num_terms());
+        let qmix = WorkloadMix::new(&registry, self.index.num_terms());
         let workload = Workload::generate(
             ArrivalProcess::Poisson { qps: cfg.qps },
-            &qgen,
+            &qmix,
             cfg.num_requests,
             true,
             &mut rng,
@@ -253,6 +301,7 @@ impl LiveServer {
                 .ok();
                 let mut last_tick = 0.0f64;
                 let mut depths: Vec<usize> = Vec::new();
+                let mut prios: Vec<usize> = Vec::new();
                 loop {
                     match rx.recv() {
                         Ok(Some(rec)) => policy.observe(&rec),
@@ -264,7 +313,8 @@ impl LiveServer {
                         last_tick = now;
                         // Tick with full SchedCtx — the same backlog
                         // visibility contract the simulator honours.
-                        let queued = shared.queue.queue_view_into(&mut depths);
+                        let queued =
+                            shared.queue.queue_view_into(&mut depths, &mut prios);
                         let mut aff = shared.aff.lock().expect("aff poisoned");
                         let migs = {
                             let mut ctx = SchedCtx {
@@ -272,6 +322,7 @@ impl LiveServer {
                                 rng: &mut tick_rng,
                                 queues: QueueView {
                                     per_core: &depths,
+                                    per_priority: &prios,
                                     total: queued,
                                 },
                                 now_ms: now,
@@ -362,6 +413,7 @@ impl LiveServer {
                         aff.kind_of(ThreadId(t))
                     };
                     records.lock().expect("records poisoned").push(LiveRecord {
+                        class: req.class,
                         keywords: req.query.keyword_count(),
                         arrived_ms: req.arrived_ms,
                         started_ms: started,
@@ -379,6 +431,8 @@ impl LiveServer {
         }
 
         // ---- load generator (this thread) ----
+        // Per-class shed counts live here: only the generator sheds.
+        let mut shed_by_class: Vec<usize> = vec![0; registry.len()];
         for req in &workload.requests {
             let target = req.arrive_ms;
             let now = now_ms();
@@ -390,18 +444,23 @@ impl LiveServer {
                 .iter()
                 .map(|&id| self.index.term(id).to_string())
                 .collect();
-            let keywords = req.keywords;
             let outcome = shared.queue.push(
                 LiveRequest {
                     widx: 0,
+                    class: req.class,
                     query: Query::from_terms(terms),
                     arrived_ms: now_ms(),
                 },
-                DispatchInfo { keywords },
+                DispatchInfo {
+                    keywords: req.keywords,
+                    class: req.class,
+                    priority: priorities[req.class.idx()],
+                },
                 &shared.aff,
             );
             if let AdmissionOutcome::Shed { .. } = outcome {
                 shared.shed.fetch_add(1, Ordering::Relaxed);
+                shed_by_class[req.class.idx()] += 1;
             }
         }
         shared.queue.close();
@@ -420,8 +479,19 @@ impl LiveServer {
         let mut per_request = records.lock().expect("records poisoned").clone();
         per_request.sort_by(|a, b| a.completed_ms.partial_cmp(&b.completed_ms).unwrap());
         let mut latency = LatencyHistogram::new();
+        let mut per_class: Vec<ClassStats> = registry
+            .specs()
+            .iter()
+            .map(|s| ClassStats::new(s.name.clone(), s.priority, s.deadline_ms))
+            .collect();
+        for (class_stats, &shed) in per_class.iter_mut().zip(&shed_by_class) {
+            class_stats.shed = shed;
+        }
         for r in &per_request {
             latency.record(r.latency_ms());
+            // The live server has no warmup convention: every completion
+            // is measured.
+            per_class[r.class.idx()].record_completion(r.latency_ms(), true);
         }
         let energy = post_hoc_energy(&per_request, &topology, duration_ms);
 
@@ -432,6 +502,7 @@ impl LiveServer {
             duration_ms,
             migrations,
             shed: shared.shed.load(Ordering::Relaxed),
+            per_class,
             backend: if cfg.use_xla { "xla" } else { "rust" },
             discipline: discipline_label,
             total_passes,

@@ -8,6 +8,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::error::Result;
+use crate::loadgen::ClassId;
 use crate::search::engine::{BlockScorer, BlockTopK, ScoreBlock};
 use crate::search::Query;
 
@@ -16,6 +17,8 @@ use crate::search::Query;
 pub struct LiveRequest {
     /// Workload index.
     pub widx: usize,
+    /// Service class of the request.
+    pub class: ClassId,
     /// Parsed query.
     pub query: Query,
     /// Arrival timestamp, ms since server epoch.

@@ -1,0 +1,543 @@
+//! Service classes: the typed request taxonomy of the workload.
+//!
+//! Hurry-up's core insight is that requests differ in compute intensity and
+//! should be treated differently by the scheduler. A [`ClassSpec`] makes
+//! that difference *declarative*: every request carries a [`ClassId`] tag
+//! assigned at generation time, and each class declares its traffic
+//! `share`, keyword mix (the compute-intensity axis), an optional latency
+//! SLO (`deadline_ms` — also the class's admission deadline when shedding
+//! is enabled), and a dispatch `priority` (higher is served first).
+//!
+//! The [`ClassRegistry`] resolves the declared classes (TOML
+//! `[[workload.class]]` tables or the `--classes` CLI flag) into a dense
+//! id space; when nothing is declared it holds one implicit default class,
+//! and every seeded run reproduces the untyped (pre-class) output bit for
+//! bit — the single-class [`WorkloadMix`] draws no class-sampling
+//! randomness at all.
+//!
+//! Class names are matched with [`crate::util::norm_token`] (trimmed,
+//! case-insensitive, `-` ≡ `_`), the same convention as policy and
+//! discipline selectors.
+
+use crate::config::KeywordMix;
+use crate::error::{Error, Result};
+use crate::util::rng::Discrete;
+use crate::util::{norm_token, Rng};
+
+use super::querygen::QueryGen;
+
+/// Dense index of a service class in its [`ClassRegistry`] (0 = the first
+/// declared class, or the implicit default class).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ClassId(pub u16);
+
+impl ClassId {
+    /// The implicit default class of untyped configs.
+    pub const DEFAULT: ClassId = ClassId(0);
+
+    /// As a vector index.
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for ClassId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "class{}", self.0)
+    }
+}
+
+/// Declaration of one service class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassSpec {
+    /// Class name (reports, lookups; matched via [`norm_token`]).
+    pub name: String,
+    /// Relative traffic share (positive weight; normalised over classes).
+    pub share: f64,
+    /// Keyword mix of this class's query stream.
+    pub mix: KeywordMix,
+    /// Latency SLO, ms: the target reported as SLO attainment, and the
+    /// class's admission deadline when shedding is enabled. `None` = no
+    /// SLO (and the global `shed_deadline_ms` applies at admission).
+    pub deadline_ms: Option<f64>,
+    /// Dispatch priority: higher values are dequeued first; equal
+    /// priorities preserve FIFO order.
+    pub priority: u8,
+}
+
+impl ClassSpec {
+    /// A class with defaults: share 1, the given mix, no SLO, priority 0.
+    pub fn new(name: impl Into<String>, mix: KeywordMix) -> ClassSpec {
+        ClassSpec {
+            name: name.into(),
+            share: 1.0,
+            mix,
+            deadline_ms: None,
+            priority: 0,
+        }
+    }
+
+    /// Builder: traffic share.
+    pub fn with_share(mut self, share: f64) -> ClassSpec {
+        self.share = share;
+        self
+    }
+
+    /// Builder: latency SLO / admission deadline, ms.
+    pub fn with_deadline(mut self, deadline_ms: f64) -> ClassSpec {
+        self.deadline_ms = Some(deadline_ms);
+        self
+    }
+
+    /// Builder: dispatch priority (higher is served first).
+    pub fn with_priority(mut self, priority: u8) -> ClassSpec {
+        self.priority = priority;
+        self
+    }
+}
+
+/// The resolved set of service classes of one experiment. Always holds at
+/// least one class; an untyped config resolves to the single implicit
+/// default class.
+#[derive(Clone, Debug)]
+pub struct ClassRegistry {
+    specs: Vec<ClassSpec>,
+    /// True when this is the implicit default registry (no classes were
+    /// declared) — the seeded-anchor configuration.
+    implicit: bool,
+}
+
+/// Name of the implicit default class.
+pub const DEFAULT_CLASS_NAME: &str = "default";
+
+impl ClassRegistry {
+    /// The implicit single-class registry of an untyped config.
+    pub fn single(mix: KeywordMix) -> ClassRegistry {
+        ClassRegistry {
+            specs: vec![ClassSpec::new(DEFAULT_CLASS_NAME, mix)],
+            implicit: true,
+        }
+    }
+
+    /// Resolve declared specs (empty ⇒ the implicit default class with
+    /// `default_mix`), validating shares, names and deadlines.
+    pub fn resolve(specs: &[ClassSpec], default_mix: KeywordMix) -> Result<ClassRegistry> {
+        if specs.is_empty() {
+            return Ok(ClassRegistry::single(default_mix));
+        }
+        if specs.len() > u16::MAX as usize {
+            return Err(Error::config("too many workload classes"));
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for spec in specs {
+            let key = norm_token(&spec.name);
+            if key.is_empty() {
+                return Err(Error::config("class name must be non-empty"));
+            }
+            if !seen.insert(key) {
+                return Err(Error::config(format!(
+                    "duplicate class name `{}`",
+                    spec.name
+                )));
+            }
+            if !(spec.share > 0.0 && spec.share.is_finite()) {
+                return Err(Error::config(format!(
+                    "class `{}`: share must be a positive finite number",
+                    spec.name
+                )));
+            }
+            if let Some(d) = spec.deadline_ms {
+                if d.is_nan() {
+                    return Err(Error::config(format!(
+                        "class `{}`: deadline_ms must be a number (use inf for no deadline)",
+                        spec.name
+                    )));
+                }
+            }
+        }
+        Ok(ClassRegistry {
+            specs: specs.to_vec(),
+            implicit: false,
+        })
+    }
+
+    /// Number of classes (≥ 1).
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Always false — a registry holds at least the default class.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// True when no classes were declared (the implicit default class).
+    pub fn is_implicit_default(&self) -> bool {
+        self.implicit
+    }
+
+    /// The class specs, in [`ClassId`] order.
+    pub fn specs(&self) -> &[ClassSpec] {
+        &self.specs
+    }
+
+    /// Spec of one class.
+    pub fn get(&self, id: ClassId) -> &ClassSpec {
+        &self.specs[id.idx()]
+    }
+
+    /// Look a class up by name — trimmed, case-insensitive, `-` ≡ `_`
+    /// (via [`norm_token`], like discipline/policy parsing).
+    pub fn lookup(&self, name: &str) -> Option<ClassId> {
+        let key = norm_token(name);
+        self.specs
+            .iter()
+            .position(|s| norm_token(&s.name) == key)
+            .map(|i| ClassId(i as u16))
+    }
+
+    /// Dispatch priority of each class, indexed by [`ClassId`].
+    pub fn priorities(&self) -> Vec<u8> {
+        self.specs.iter().map(|s| s.priority).collect()
+    }
+
+    /// True when any class declares a latency SLO.
+    pub fn any_deadline(&self) -> bool {
+        self.specs.iter().any(|s| s.deadline_ms.is_some())
+    }
+
+    /// Effective per-class admission deadlines: a class's own
+    /// `deadline_ms`, else the global fallback (ms, may be `INFINITY`).
+    pub fn admission_deadlines(&self, global_ms: f64) -> Vec<f64> {
+        self.specs
+            .iter()
+            .map(|s| s.deadline_ms.unwrap_or(global_ms))
+            .collect()
+    }
+}
+
+/// Per-arrival class + query sampler: the classify stage of the typed
+/// request lifecycle (generate → classify → enqueue → admit → queue →
+/// next → run).
+///
+/// Determinism contract: with a single class no class-sampling randomness
+/// is drawn, so untyped configs replay the pre-class rng stream bit for
+/// bit. With multiple classes, one class draw precedes the keyword draw
+/// for every request.
+#[derive(Clone, Debug)]
+pub struct WorkloadMix {
+    gens: Vec<QueryGen>,
+    /// Traffic-share sampler; `None` for the single-class fast path.
+    share_sampler: Option<Discrete>,
+}
+
+impl WorkloadMix {
+    /// Build the samplers for a registry. `vocab_size > 0` enables
+    /// concrete term sampling (live mode).
+    pub fn new(registry: &ClassRegistry, vocab_size: usize) -> WorkloadMix {
+        let gens = registry
+            .specs()
+            .iter()
+            .map(|s| QueryGen::new(s.mix, vocab_size))
+            .collect();
+        let share_sampler = (registry.len() > 1).then(|| {
+            Discrete::new(
+                &registry
+                    .specs()
+                    .iter()
+                    .map(|s| s.share)
+                    .collect::<Vec<_>>(),
+            )
+        });
+        WorkloadMix { gens, share_sampler }
+    }
+
+    /// Number of classes.
+    pub fn num_classes(&self) -> usize {
+        self.gens.len()
+    }
+
+    /// Sample the class of one arrival (no rng draw with a single class).
+    pub fn sample_class(&self, rng: &mut Rng) -> ClassId {
+        match &self.share_sampler {
+            None => ClassId::DEFAULT,
+            Some(d) => ClassId(d.sample(rng) as u16),
+        }
+    }
+
+    /// Sample a keyword count for a class.
+    pub fn sample_keywords(&self, class: ClassId, rng: &mut Rng) -> usize {
+        self.gens[class.idx()].sample_keywords(rng)
+    }
+
+    /// Sample `k` distinct term ids for a class (requires a vocabulary).
+    pub fn sample_terms(&self, class: ClassId, k: usize, rng: &mut Rng) -> Vec<u32> {
+        self.gens[class.idx()].sample_terms(k, rng)
+    }
+}
+
+/// Parse a `--classes` CLI value into class specs.
+///
+/// Grammar: specs separated by `;`, each `name[:key=value,...]` with keys
+/// `share`, `mix` (`paper` | `fixed:K` | `uniform:LO:HI`), `deadline_ms`
+/// (alias `deadline`), `priority` (alias `prio`). Keys and mix tokens are
+/// normalised via [`norm_token`]. Classes default to share 1, the config's
+/// keyword mix, no SLO, priority 0. Example:
+///
+/// ```text
+/// interactive:share=0.65,deadline_ms=500,priority=1;batch:share=0.35,mix=uniform:6:14
+/// ```
+pub fn parse_classes(s: &str, default_mix: KeywordMix) -> Result<Vec<ClassSpec>> {
+    let mut specs = Vec::new();
+    for part in s.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, opts) = match part.split_once(':') {
+            Some((n, o)) => (n.trim(), o),
+            None => (part, ""),
+        };
+        if name.is_empty() {
+            return Err(Error::invalid(format!("class spec `{part}`: empty name")));
+        }
+        let mut spec = ClassSpec::new(name, default_mix);
+        for kv in opts.split(',') {
+            let kv = kv.trim();
+            if kv.is_empty() {
+                continue;
+            }
+            let (key, val) = kv.split_once('=').ok_or_else(|| {
+                Error::invalid(format!("class `{name}`: expected key=value, got `{kv}`"))
+            })?;
+            let bad = |what: &str| {
+                Error::invalid(format!("class `{name}`: bad {what} `{}`", val.trim()))
+            };
+            match norm_token(key).as_str() {
+                "share" => {
+                    spec.share = val.trim().parse().map_err(|_| bad("share"))?;
+                }
+                "deadline_ms" | "deadline" => {
+                    let d: f64 = val.trim().parse().map_err(|_| bad("deadline_ms"))?;
+                    spec.deadline_ms = Some(d);
+                }
+                "priority" | "prio" => {
+                    spec.priority = val.trim().parse().map_err(|_| bad("priority"))?;
+                }
+                "mix" => {
+                    spec.mix = parse_mix_token(val)?;
+                }
+                other => {
+                    return Err(Error::invalid(format!(
+                        "class `{name}`: unknown key `{other}`"
+                    )))
+                }
+            }
+        }
+        specs.push(spec);
+    }
+    if specs.is_empty() {
+        return Err(Error::invalid("--classes given but no class declared"));
+    }
+    Ok(specs)
+}
+
+/// Parse a compact keyword-mix token: `paper`, `fixed:K`, `uniform:LO:HI`
+/// (shared by the `--classes` flag and per-class TOML `mix` strings).
+/// Strict: trailing tokens and inverted uniform ranges are config errors
+/// here, not panics later inside workload generation.
+pub fn parse_mix_token(s: &str) -> Result<KeywordMix> {
+    let norm = norm_token(s);
+    let mut parts = norm.split(':');
+    let kind = parts.next().unwrap_or("");
+    let mut int_arg = |what: &str| -> Result<usize> {
+        parts
+            .next()
+            .and_then(|t| t.parse().ok())
+            .ok_or_else(|| Error::invalid(format!("mix `{s}`: bad {what}")))
+    };
+    let mix = match kind {
+        "paper" => KeywordMix::Paper,
+        "fixed" => KeywordMix::Fixed(int_arg("k")?),
+        "uniform" => {
+            let lo = int_arg("lo")?;
+            let hi = int_arg("hi")?;
+            if lo > hi {
+                return Err(Error::invalid(format!(
+                    "mix `{s}`: uniform range is inverted (lo {lo} > hi {hi})"
+                )));
+            }
+            KeywordMix::Uniform(lo, hi)
+        }
+        _ => {
+            return Err(Error::invalid(format!(
+                "unknown mix `{s}` (paper | fixed:K | uniform:LO:HI)"
+            )))
+        }
+    };
+    if parts.next().is_some() {
+        return Err(Error::invalid(format!("mix `{s}`: trailing tokens")));
+    }
+    Ok(mix)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_classes() -> Vec<ClassSpec> {
+        vec![
+            ClassSpec::new("interactive", KeywordMix::Paper)
+                .with_share(0.7)
+                .with_deadline(500.0)
+                .with_priority(1),
+            ClassSpec::new("batch", KeywordMix::Uniform(6, 14)).with_share(0.3),
+        ]
+    }
+
+    #[test]
+    fn implicit_default_registry() {
+        let reg = ClassRegistry::resolve(&[], KeywordMix::Paper).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert!(reg.is_implicit_default());
+        assert_eq!(reg.get(ClassId::DEFAULT).name, DEFAULT_CLASS_NAME);
+        assert_eq!(reg.get(ClassId::DEFAULT).mix, KeywordMix::Paper);
+        assert_eq!(reg.get(ClassId::DEFAULT).priority, 0);
+        assert!(!reg.any_deadline());
+    }
+
+    #[test]
+    fn declared_registry_resolves_in_order() {
+        let reg = ClassRegistry::resolve(&two_classes(), KeywordMix::Paper).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert!(!reg.is_implicit_default());
+        assert_eq!(reg.get(ClassId(0)).name, "interactive");
+        assert_eq!(reg.get(ClassId(1)).name, "batch");
+        assert_eq!(reg.priorities(), vec![1, 0]);
+        assert!(reg.any_deadline());
+        assert_eq!(reg.admission_deadlines(f64::INFINITY), vec![500.0, f64::INFINITY]);
+    }
+
+    #[test]
+    fn lookup_uses_norm_token() {
+        let reg = ClassRegistry::resolve(&two_classes(), KeywordMix::Paper).unwrap();
+        assert_eq!(reg.lookup("interactive"), Some(ClassId(0)));
+        assert_eq!(reg.lookup("  Interactive "), Some(ClassId(0)));
+        assert_eq!(reg.lookup("BATCH"), Some(ClassId(1)));
+        assert_eq!(reg.lookup("bat-ch"), None);
+        let dashed = vec![ClassSpec::new("bulk-scrape", KeywordMix::Paper)];
+        let reg = ClassRegistry::resolve(&dashed, KeywordMix::Paper).unwrap();
+        assert_eq!(reg.lookup("BULK_SCRAPE"), Some(ClassId(0)));
+    }
+
+    #[test]
+    fn invalid_registries_rejected() {
+        let dup = vec![
+            ClassSpec::new("a", KeywordMix::Paper),
+            ClassSpec::new(" A ", KeywordMix::Paper),
+        ];
+        assert!(ClassRegistry::resolve(&dup, KeywordMix::Paper).is_err());
+        let zero_share =
+            vec![ClassSpec::new("a", KeywordMix::Paper).with_share(0.0)];
+        assert!(ClassRegistry::resolve(&zero_share, KeywordMix::Paper).is_err());
+        let nan_deadline =
+            vec![ClassSpec::new("a", KeywordMix::Paper).with_deadline(f64::NAN)];
+        assert!(ClassRegistry::resolve(&nan_deadline, KeywordMix::Paper).is_err());
+        let unnamed = vec![ClassSpec::new("  ", KeywordMix::Paper)];
+        assert!(ClassRegistry::resolve(&unnamed, KeywordMix::Paper).is_err());
+    }
+
+    #[test]
+    fn single_class_mix_draws_no_class_randomness() {
+        // The bit-for-bit anchor: the keyword stream of a single-class mix
+        // must be identical to sampling the QueryGen directly.
+        let reg = ClassRegistry::single(KeywordMix::Paper);
+        let mix = WorkloadMix::new(&reg, 0);
+        let gen = QueryGen::new(KeywordMix::Paper, 0);
+        let mut a = Rng::new(99);
+        let mut b = Rng::new(99);
+        for _ in 0..200 {
+            let class = mix.sample_class(&mut a);
+            assert_eq!(class, ClassId::DEFAULT);
+            assert_eq!(
+                mix.sample_keywords(class, &mut a),
+                gen.sample_keywords(&mut b)
+            );
+        }
+    }
+
+    #[test]
+    fn multi_class_shares_respected() {
+        let reg = ClassRegistry::resolve(&two_classes(), KeywordMix::Paper).unwrap();
+        let mix = WorkloadMix::new(&reg, 0);
+        let mut rng = Rng::new(7);
+        let n = 20_000;
+        let hits = (0..n)
+            .filter(|_| mix.sample_class(&mut rng) == ClassId(0))
+            .count();
+        let share = hits as f64 / n as f64;
+        assert!((share - 0.7).abs() < 0.02, "share={share}");
+    }
+
+    #[test]
+    fn per_class_keyword_mixes_differ() {
+        let reg = ClassRegistry::resolve(&two_classes(), KeywordMix::Paper).unwrap();
+        let mix = WorkloadMix::new(&reg, 0);
+        let mut rng = Rng::new(8);
+        for _ in 0..200 {
+            let k = mix.sample_keywords(ClassId(1), &mut rng);
+            assert!((6..=14).contains(&k), "batch mix is uniform 6..14");
+        }
+    }
+
+    #[test]
+    fn parse_classes_full_grammar() {
+        let specs = parse_classes(
+            "interactive:share=0.65,deadline_ms=500,priority=1;\
+             batch:share=0.35,mix=uniform:6:14,prio=0",
+            KeywordMix::Paper,
+        )
+        .unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "interactive");
+        assert_eq!(specs[0].share, 0.65);
+        assert_eq!(specs[0].deadline_ms, Some(500.0));
+        assert_eq!(specs[0].priority, 1);
+        assert_eq!(specs[0].mix, KeywordMix::Paper);
+        assert_eq!(specs[1].mix, KeywordMix::Uniform(6, 14));
+        assert_eq!(specs[1].deadline_ms, None);
+    }
+
+    #[test]
+    fn parse_classes_defaults_and_errors() {
+        let specs = parse_classes("solo", KeywordMix::Fixed(3)).unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].share, 1.0);
+        assert_eq!(specs[0].mix, KeywordMix::Fixed(3));
+        assert!(parse_classes("", KeywordMix::Paper).is_err());
+        assert!(parse_classes("a:share", KeywordMix::Paper).is_err());
+        assert!(parse_classes("a:share=x", KeywordMix::Paper).is_err());
+        assert!(parse_classes("a:magic=1", KeywordMix::Paper).is_err());
+        assert!(parse_classes("a:mix=banana", KeywordMix::Paper).is_err());
+    }
+
+    #[test]
+    fn parse_mix_token_variants() {
+        assert_eq!(parse_mix_token("paper").unwrap(), KeywordMix::Paper);
+        assert_eq!(parse_mix_token(" Paper ").unwrap(), KeywordMix::Paper);
+        assert_eq!(parse_mix_token("fixed:8").unwrap(), KeywordMix::Fixed(8));
+        assert_eq!(
+            parse_mix_token("uniform:2:9").unwrap(),
+            KeywordMix::Uniform(2, 9)
+        );
+        assert!(parse_mix_token("fixed").is_err());
+        assert!(parse_mix_token("uniform:2").is_err());
+        assert!(parse_mix_token("zipf:1").is_err());
+        // Strictness: inverted ranges and trailing tokens are errors here,
+        // never panics inside workload generation.
+        assert!(parse_mix_token("uniform:14:6").is_err());
+        assert!(parse_mix_token("paper:junk").is_err());
+        assert!(parse_mix_token("fixed:3:9").is_err());
+        assert!(parse_mix_token("uniform:2:9:1").is_err());
+    }
+}

@@ -1,16 +1,32 @@
 //! Load generation — the Faban stand-in (the paper drives Elasticsearch
-//! with Faban from CloudSuite 3.0 on a separate machine).
+//! with Faban from CloudSuite 3.0 on a separate machine) — and the typed
+//! request model every layer speaks.
 //!
-//! `arrivals` produces open-loop arrival times at a fixed offered QPS;
-//! `querygen` samples keyword counts (the paper's compute-intensity axis)
-//! and concrete query terms matching the corpus' Zipfian popularity;
-//! `trace` records and replays complete workloads so every experiment is
-//! reproducible bit-for-bit.
+//! The typed request lifecycle starts here: **generate** (`arrivals`
+//! produces open-loop arrival times at a fixed offered QPS) → **classify**
+//! ([`WorkloadMix`] samples each arrival's service class from the
+//! [`ClassRegistry`]'s traffic shares, then its keyword count — the
+//! paper's compute-intensity axis — from that class's [`QueryGen`];
+//! concrete query terms match the corpus' Zipfian popularity). The
+//! resulting [`Request`] descriptors (`id`, `class`, `arrive_ms`,
+//! `keywords`, `terms`) flow into the scheduling layer (enqueue → admit →
+//! queue → next → run, see [`crate::sched`]) tagged with their [`ClassId`]
+//! so admission, queue ordering and reporting can all treat classes
+//! differently.
+//!
+//! `trace` records and replays complete workloads (format v2 carries the
+//! class tag; legacy v1 traces still parse) so every experiment is
+//! reproducible bit-for-bit. An untyped config resolves to one implicit
+//! default class and replays pre-class seeded runs exactly.
 
 pub mod arrivals;
+pub mod class;
 pub mod querygen;
 pub mod trace;
 
 pub use arrivals::ArrivalProcess;
+pub use class::{
+    parse_classes, parse_mix_token, ClassId, ClassRegistry, ClassSpec, WorkloadMix,
+};
 pub use querygen::QueryGen;
-pub use trace::{TraceRequest, Workload};
+pub use trace::{Request, Workload};

@@ -1,19 +1,34 @@
-//! Workload traces: a fully materialised request stream (arrival time,
-//! keyword count, term ids) that both the simulator and the live server
-//! consume, with text record/replay so experiments are reproducible and
-//! shareable.
+//! Workload traces: a fully materialised typed request stream that both
+//! the simulator and the live server consume, with text record/replay so
+//! experiments are reproducible and shareable.
+//!
+//! Trace format v2 (`# hurryup workload trace v2`) records the service
+//! class of every request:
+//!
+//! ```text
+//! arrive_ms;class_id;keywords;t1,t2,...
+//! ```
+//!
+//! Legacy v1 traces (`arrive_ms;keywords;terms`, or any file without a
+//! version header) still parse — every request lands in the implicit
+//! default class ([`ClassId::DEFAULT`]). Parse errors name the offending
+//! line, field and token.
 
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
 use super::arrivals::ArrivalProcess;
-use super::querygen::QueryGen;
+use super::class::{ClassId, WorkloadMix};
 use crate::error::{Error, Result};
 use crate::util::Rng;
 
-/// One request in a workload trace.
+/// One typed request in a workload trace.
 #[derive(Clone, Debug, PartialEq)]
-pub struct TraceRequest {
+pub struct Request {
+    /// Stable request id (generation/trace order).
+    pub id: u64,
+    /// Service class the request belongs to.
+    pub class: ClassId,
     /// Arrival timestamp, ms from experiment start.
     pub arrive_ms: f64,
     /// Keyword count (the compute-intensity driver).
@@ -26,16 +41,20 @@ pub struct TraceRequest {
 #[derive(Clone, Debug, Default)]
 pub struct Workload {
     /// Requests in arrival order.
-    pub requests: Vec<TraceRequest>,
+    pub requests: Vec<Request>,
 }
 
 impl Workload {
     /// Generate a workload: `n` requests with the given arrival process and
-    /// query mix. `with_terms` controls whether concrete term ids are
-    /// sampled (needed by live mode, skipped by the simulator for speed).
+    /// per-class query mix (the classify stage — each arrival samples its
+    /// class from the mix's traffic shares, then its keywords from that
+    /// class's generator). `with_terms` controls whether concrete term ids
+    /// are sampled (needed by live mode, skipped by the simulator for
+    /// speed). With a single class no class-sampling randomness is drawn,
+    /// so untyped configs replay the pre-class rng stream bit for bit.
     pub fn generate(
         arrivals: ArrivalProcess,
-        gen: &QueryGen,
+        mix: &WorkloadMix,
         n: usize,
         with_terms: bool,
         rng: &mut Rng,
@@ -43,14 +62,18 @@ impl Workload {
         let times = arrivals.generate(n, rng);
         let requests = times
             .into_iter()
-            .map(|arrive_ms| {
-                let keywords = gen.sample_keywords(rng);
+            .enumerate()
+            .map(|(id, arrive_ms)| {
+                let class = mix.sample_class(rng);
+                let keywords = mix.sample_keywords(class, rng);
                 let terms = if with_terms {
-                    gen.sample_terms(keywords, rng)
+                    mix.sample_terms(class, keywords, rng)
                 } else {
                     Vec::new()
                 };
-                TraceRequest {
+                Request {
+                    id: id as u64,
+                    class,
                     arrive_ms,
                     keywords,
                     terms,
@@ -75,10 +98,16 @@ impl Workload {
         self.requests.last().map(|r| r.arrive_ms).unwrap_or(0.0)
     }
 
-    /// Save as a text trace: `arrive_ms;keywords;t1,t2,...` per line.
+    /// Requests belonging to one class.
+    pub fn count_class(&self, class: ClassId) -> usize {
+        self.requests.iter().filter(|r| r.class == class).count()
+    }
+
+    /// Save as a v2 text trace: `arrive_ms;class;keywords;t1,t2,...` per
+    /// line.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        writeln!(f, "# hurryup workload trace v1")?;
+        writeln!(f, "# hurryup workload trace v2")?;
         for r in &self.requests {
             let terms = r
                 .terms
@@ -86,43 +115,78 @@ impl Workload {
                 .map(|t| t.to_string())
                 .collect::<Vec<_>>()
                 .join(",");
-            writeln!(f, "{:.6};{};{}", r.arrive_ms, r.keywords, terms)?;
+            writeln!(f, "{:.6};{};{};{}", r.arrive_ms, r.class.0, r.keywords, terms)?;
         }
         Ok(())
     }
 
-    /// Load a text trace saved by [`Workload::save`].
+    /// Load a text trace: v2 (with a class field) or legacy v1 (untyped —
+    /// every request joins the implicit default class).
     pub fn load(path: impl AsRef<Path>) -> Result<Workload> {
         let f = BufReader::new(std::fs::File::open(path)?);
         let mut requests = Vec::new();
+        // No version header ⇒ legacy v1 (hand-written traces).
+        let mut version = 1u32;
         for (lineno, line) in f.lines().enumerate() {
             let line = line?;
             let line = line.trim();
-            if line.is_empty() || line.starts_with('#') {
+            if let Some(comment) = line.strip_prefix('#') {
+                if let Some(v) = comment.trim().strip_prefix("hurryup workload trace v") {
+                    version = v.trim().parse::<u32>().map_err(|_| {
+                        Error::Invalid(format!(
+                            "trace line {}: bad version header `{line}`",
+                            lineno + 1
+                        ))
+                    })?;
+                    if !(1..=2).contains(&version) {
+                        return Err(Error::Invalid(format!(
+                            "trace line {}: unsupported trace version {version}",
+                            lineno + 1
+                        )));
+                    }
+                }
+                continue;
+            }
+            if line.is_empty() {
                 continue;
             }
             let mut parts = line.split(';');
-            let bad = |what: &str| {
-                Error::Invalid(format!("trace line {}: bad {what}", lineno + 1))
+            let mut field = |what: &'static str| {
+                parts.next().ok_or_else(|| {
+                    Error::Invalid(format!("trace line {}: missing {what} field", lineno + 1))
+                })
             };
-            let arrive_ms = parts
-                .next()
-                .and_then(|s| s.parse::<f64>().ok())
-                .ok_or_else(|| bad("arrival"))?;
-            let keywords = parts
-                .next()
-                .and_then(|s| s.parse::<usize>().ok())
-                .ok_or_else(|| bad("keywords"))?;
+            let bad = |what: &str, tok: &str| {
+                Error::Invalid(format!("trace line {}: bad {what} `{tok}`", lineno + 1))
+            };
+            let tok = field("arrival")?;
+            let arrive_ms = tok.parse::<f64>().map_err(|_| bad("arrival", tok))?;
+            let class = if version >= 2 {
+                let tok = field("class")?;
+                ClassId(tok.parse::<u16>().map_err(|_| bad("class", tok))?)
+            } else {
+                ClassId::DEFAULT
+            };
+            let tok = field("keywords")?;
+            let keywords = tok.parse::<usize>().map_err(|_| bad("keywords", tok))?;
             let terms_s = parts.next().unwrap_or("");
             let terms = if terms_s.is_empty() {
                 Vec::new()
             } else {
                 terms_s
                     .split(',')
-                    .map(|t| t.parse::<u32>().map_err(|_| bad("terms")))
+                    .map(|t| t.parse::<u32>().map_err(|_| bad("terms", t)))
                     .collect::<Result<Vec<_>>>()?
             };
-            requests.push(TraceRequest {
+            if parts.next().is_some() {
+                return Err(Error::Invalid(format!(
+                    "trace line {}: too many fields for v{version}",
+                    lineno + 1
+                )));
+            }
+            requests.push(Request {
+                id: requests.len() as u64,
+                class,
                 arrive_ms,
                 keywords,
                 terms,
@@ -136,17 +200,37 @@ impl Workload {
 mod tests {
     use super::*;
     use crate::config::KeywordMix;
+    use crate::loadgen::class::{ClassRegistry, ClassSpec};
+
+    fn single_mix(vocab: usize) -> WorkloadMix {
+        WorkloadMix::new(&ClassRegistry::single(KeywordMix::Paper), vocab)
+    }
+
+    fn two_class_mix(vocab: usize) -> WorkloadMix {
+        let specs = vec![
+            ClassSpec::new("interactive", KeywordMix::Paper).with_share(0.7),
+            ClassSpec::new("batch", KeywordMix::Uniform(6, 14)).with_share(0.3),
+        ];
+        WorkloadMix::new(
+            &ClassRegistry::resolve(&specs, KeywordMix::Paper).unwrap(),
+            vocab,
+        )
+    }
 
     fn workload(with_terms: bool) -> Workload {
         let mut rng = Rng::new(21);
-        let gen = QueryGen::new(KeywordMix::Paper, 500);
+        let mix = single_mix(500);
         Workload::generate(
             ArrivalProcess::Poisson { qps: 30.0 },
-            &gen,
+            &mix,
             200,
             with_terms,
             &mut rng,
         )
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("hu_{name}_{}.txt", std::process::id()))
     }
 
     #[test]
@@ -154,8 +238,10 @@ mod tests {
         let w = workload(true);
         assert_eq!(w.len(), 200);
         assert!(w.span_ms() > 0.0);
-        for r in &w.requests {
+        for (i, r) in w.requests.iter().enumerate() {
             assert_eq!(r.terms.len(), r.keywords);
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.class, ClassId::DEFAULT);
         }
     }
 
@@ -167,18 +253,81 @@ mod tests {
     }
 
     #[test]
-    fn save_load_roundtrip() {
-        let w = workload(true);
-        let path = std::env::temp_dir().join(format!("hu_trace_{}.txt", std::process::id()));
+    fn multi_class_generation_tags_and_mixes() {
+        let mut rng = Rng::new(5);
+        let mix = two_class_mix(0);
+        let w = Workload::generate(
+            ArrivalProcess::Poisson { qps: 30.0 },
+            &mix,
+            2_000,
+            false,
+            &mut rng,
+        );
+        let interactive = w.count_class(ClassId(0));
+        let batch = w.count_class(ClassId(1));
+        assert_eq!(interactive + batch, 2_000);
+        assert!(interactive > batch, "0.7 share must dominate");
+        for r in &w.requests {
+            if r.class == ClassId(1) {
+                assert!((6..=14).contains(&r.keywords), "batch mix range");
+            }
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_v2() {
+        let mut rng = Rng::new(31);
+        let mix = two_class_mix(400);
+        let w = Workload::generate(
+            ArrivalProcess::Poisson { qps: 30.0 },
+            &mix,
+            150,
+            true,
+            &mut rng,
+        );
+        let path = tmp("trace_v2");
         w.save(&path).unwrap();
+        let header = std::fs::read_to_string(&path).unwrap();
+        assert!(header.starts_with("# hurryup workload trace v2"));
         let loaded = Workload::load(&path).unwrap();
         std::fs::remove_file(&path).ok();
         assert_eq!(loaded.len(), w.len());
         for (a, b) in w.requests.iter().zip(&loaded.requests) {
             assert!((a.arrive_ms - b.arrive_ms).abs() < 1e-6);
+            assert_eq!(a.class, b.class);
             assert_eq!(a.keywords, b.keywords);
             assert_eq!(a.terms, b.terms);
+            assert_eq!(a.id, b.id);
         }
+    }
+
+    #[test]
+    fn legacy_v1_trace_parses_into_default_class() {
+        let path = tmp("trace_v1");
+        std::fs::write(
+            &path,
+            "# hurryup workload trace v1\n12.500000;3;5,9,2\n40.000000;1;\n",
+        )
+        .unwrap();
+        let w = Workload::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(w.len(), 2);
+        assert!(w.requests.iter().all(|r| r.class == ClassId::DEFAULT));
+        assert_eq!(w.requests[0].keywords, 3);
+        assert_eq!(w.requests[0].terms, vec![5, 9, 2]);
+        assert_eq!(w.requests[1].keywords, 1);
+        assert!(w.requests[1].terms.is_empty());
+    }
+
+    #[test]
+    fn headerless_trace_parses_as_v1() {
+        let path = tmp("trace_nohdr");
+        std::fs::write(&path, "5.000000;2;7,8\n").unwrap();
+        let w = Workload::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.requests[0].class, ClassId::DEFAULT);
+        assert_eq!(w.requests[0].keywords, 2);
     }
 
     #[test]
@@ -188,8 +337,38 @@ mod tests {
     }
 
     #[test]
+    fn parse_errors_name_line_field_and_token() {
+        let cases = [
+            ("# hurryup workload trace v2\nxx;0;3;\n", "line 2", "arrival"),
+            ("# hurryup workload trace v2\n1.0;zz;3;\n", "line 2", "class"),
+            ("# hurryup workload trace v2\n1.0;0;kw;\n", "line 2", "keywords"),
+            ("# hurryup workload trace v2\n1.0;0;2;5,oops\n", "line 2", "terms"),
+            ("# hurryup workload trace v2\n1.0;0\n", "line 2", "keywords"),
+            ("# hurryup workload trace v9\n", "line 1", "version"),
+        ];
+        for (i, (text, line, field)) in cases.iter().enumerate() {
+            let path = tmp(&format!("trace_bad{i}"));
+            std::fs::write(&path, text).unwrap();
+            let err = Workload::load(&path).unwrap_err().to_string();
+            std::fs::remove_file(&path).ok();
+            assert!(err.contains(line), "case {i}: {err}");
+            assert!(err.contains(field), "case {i}: {err}");
+        }
+    }
+
+    #[test]
+    fn v1_line_with_v2_arity_rejected() {
+        // A v1 trace line with four fields is ambiguous — fail loudly.
+        let path = tmp("trace_v1_arity");
+        std::fs::write(&path, "# hurryup workload trace v1\n1.0;0;3;5\n").unwrap();
+        let err = Workload::load(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("too many fields"), "{err}");
+    }
+
+    #[test]
     fn malformed_trace_rejected() {
-        let path = std::env::temp_dir().join(format!("hu_bad_{}.txt", std::process::id()));
+        let path = tmp("bad");
         std::fs::write(&path, "not;a;valid;trace\n").unwrap();
         assert!(Workload::load(&path).is_err());
         std::fs::remove_file(&path).ok();

@@ -19,6 +19,7 @@ use hurryup::mapper::{HurryUpParams, PolicyKind};
 use hurryup::prelude::*;
 use hurryup::sched::DisciplineKind;
 use hurryup::search::{self, Bm25Params, RustScorer};
+use hurryup::util::fmt::Table;
 
 const USAGE: &str = "\
 hurryup — request-level thread mapping for web search on big/little cores
@@ -26,14 +27,14 @@ hurryup — request-level thread mapping for web search on big/little cores
 
 USAGE:
   hurryup sim     [--config f.toml] [--qps N] [--requests N] [--policy P]
-                  [--discipline D] [--shed-deadline-ms N] [--seed N]
-                  [--threshold-ms N] [--sampling-ms N]
+                  [--discipline D] [--shed-deadline-ms N] [--classes SPEC]
+                  [--seed N] [--threshold-ms N] [--sampling-ms N]
   hurryup serve   [--qps N] [--requests N] [--policy P] [--discipline D]
-                  [--shed-deadline-ms N] [--xla] [--docs N]
+                  [--shed-deadline-ms N] [--classes SPEC] [--xla] [--docs N]
   hurryup index   [--docs N] [--vocab N]
   hurryup query   --q \"search terms\" [--xla] [--docs N]
   hurryup figures [fig1 fig2 fig3 fig6 fig7 fig8 fig9 power_table ablations
-                  disciplines shedding] [--full | --scale quick|full]
+                  disciplines shedding classes] [--full | --scale quick|full]
   hurryup check
 
 POLICIES:    hurry_up | linux_random | round_robin | all_big | all_little |
@@ -41,6 +42,12 @@ POLICIES:    hurry_up | linux_random | round_robin | all_big | all_little |
 DISCIPLINES: centralized (cfcfs) | per_core (dfcfs) | work_steal (steal)
 ADMISSION:   --shed-deadline-ms wraps the policy in the projected-delay
              shedder (inf = admission path, never sheds)
+CLASSES:     --classes declares service classes (SPEC =
+             \"name:key=val,...;name:...\", keys share | mix | deadline_ms |
+             priority; mix = paper | fixed:K | uniform:LO:HI). A class
+             deadline_ms is its SLO and admission deadline; higher
+             priority classes are dequeued first. TOML equivalent:
+             [[workload.class]] tables.
 ";
 
 fn main() {
@@ -139,6 +146,9 @@ fn cmd_sim(args: &Args) -> Result<()> {
     if let Some(deadline) = shed_deadline_from(args)? {
         cfg.shed_deadline_ms = Some(deadline);
     }
+    if let Some(spec) = args.get("classes") {
+        cfg.classes = hurryup::loadgen::parse_classes(spec, cfg.keyword_mix)?;
+    }
     let cfg = cfg.validated()?;
     println!(
         "sim: {} | {} qps | {} requests | seed {} | queue {}{}",
@@ -152,6 +162,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
             None => String::new(),
         },
     );
+    let typed = !cfg.classes.is_empty();
     let out = Simulation::new(cfg).run();
     println!("policy     : {}", out.policy);
     println!("discipline : {}", out.discipline);
@@ -165,7 +176,42 @@ fn cmd_sim(args: &Args) -> Result<()> {
     println!("energy     : {:.1} J total, {:.3} J/request",
         out.energy.total_j(), out.energy_per_request_j());
     println!("big share  : {:.0}%", out.big_share() * 100.0);
+    // Any declared class gets the class table — a single SLO class still
+    // has attainment and shed columns worth reading.
+    if typed {
+        println!();
+        class_table(&out.per_class, out.duration_ms).print();
+    }
     Ok(())
+}
+
+/// Per-class report table shared by `sim` and `serve` output.
+fn class_table(per_class: &[hurryup::metrics::ClassStats], duration_ms: f64) -> Table {
+    use hurryup::util::fmt::{ms_or_dash, pct, pct_or_dash};
+    let mut t = Table::new(
+        "per-class outcomes",
+        &[
+            "class", "prio", "offered", "done", "shed", "shed%", "goodput",
+            "p50_ms", "p90_ms", "p99_ms", "slo",
+        ],
+    );
+    for cs in per_class {
+        let s = cs.summary();
+        t.row(&[
+            cs.name.clone(),
+            cs.priority.to_string(),
+            cs.offered().to_string(),
+            cs.completed.to_string(),
+            cs.shed.to_string(),
+            pct(cs.shed_rate()),
+            format!("{:.1}", cs.goodput_qps(duration_ms)),
+            ms_or_dash(s.p50, s.count),
+            ms_or_dash(s.p90, s.count),
+            ms_or_dash(s.p99, s.count),
+            pct_or_dash(cs.slo_attainment()),
+        ]);
+    }
+    t
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -189,7 +235,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             )))
         }
     };
-    let cfg = LiveConfig {
+    let mut cfg = LiveConfig {
         qps: args.get_f64("qps", 30.0)?,
         num_requests: args.get_usize("requests", 300)?,
         use_xla: args.has("xla"),
@@ -198,6 +244,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         shed_deadline_ms: shed_deadline_from(args)?,
         ..LiveConfig::default()
     };
+    if let Some(spec) = args.get("classes") {
+        cfg.classes = hurryup::loadgen::parse_classes(spec, cfg.keyword_mix)?;
+    }
+    // Same semantic validation as the sim path: bad class declarations
+    // (duplicate names, non-positive shares, NaN deadlines) must be a
+    // clean CLI error, not a panic inside the server.
+    let cfg = cfg.validated()?;
     println!(
         "serve: 2B4L | {} qps | {} requests | backend={} | mapper={} | queue {}{}",
         cfg.qps,
@@ -210,6 +263,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None => String::new(),
         },
     );
+    let typed = !cfg.classes.is_empty();
     let report = LiveServer::new(cfg, index).run()?;
     println!("served     : {}", report.per_request.len());
     println!("shed       : {}", report.shed);
@@ -223,6 +277,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("migrations : {}", report.migrations);
     println!("passes     : {}", report.total_passes);
     println!("energy     : {:.1} J (post-hoc model)", report.energy.total_j());
+    if typed {
+        println!();
+        class_table(&report.per_class, report.duration_ms).print();
+    }
     Ok(())
 }
 

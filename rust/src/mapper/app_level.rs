@@ -240,14 +240,14 @@ mod tests {
         let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
         for _ in 0..20 {
             assert_eq!(
-                p.choose_core(&idle, DispatchInfo { keywords: 3 }, &mut ctx(&aff, &mut rng)),
+                p.choose_core(&idle, DispatchInfo::untyped(3), &mut ctx(&aff, &mut rng)),
                 Some(first_little)
             );
         }
         // If the active core is busy, the request must wait.
         let idle = vec![CoreId(0), CoreId(1)];
         assert_eq!(
-            p.choose_core(&idle, DispatchInfo { keywords: 3 }, &mut ctx(&aff, &mut rng)),
+            p.choose_core(&idle, DispatchInfo::untyped(3), &mut ctx(&aff, &mut rng)),
             None
         );
     }

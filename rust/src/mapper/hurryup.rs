@@ -357,6 +357,7 @@ mod tests {
             rng: &mut rng,
             queues: QueueView {
                 per_core: &[9, 9, 9, 9, 9, 9],
+                per_priority: &[9],
                 total: 9,
             },
             now_ms: 1051.0,

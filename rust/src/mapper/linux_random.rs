@@ -62,7 +62,7 @@ mod tests {
         let mut hit = [false; 6];
         for _ in 0..200 {
             let c = p
-                .choose_core(&idle, DispatchInfo { keywords: 3 }, &mut ctx(&aff, &mut rng))
+                .choose_core(&idle, DispatchInfo::untyped(3), &mut ctx(&aff, &mut rng))
                 .unwrap();
             hit[c.0] = true;
         }
@@ -75,7 +75,7 @@ mod tests {
         let aff = AffinityTable::round_robin(Topology::juno_r1());
         let mut rng = Rng::new(4);
         assert_eq!(
-            p.choose_core(&[], DispatchInfo { keywords: 1 }, &mut ctx(&aff, &mut rng)),
+            p.choose_core(&[], DispatchInfo::untyped(1), &mut ctx(&aff, &mut rng)),
             None
         );
     }

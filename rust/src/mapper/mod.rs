@@ -8,7 +8,12 @@
 //! 1. **Admission** ([`Policy::admit`]): whether a request may enter the
 //!    queues at all, or is shed at the door (load shedding). The default
 //!    admits everything — the paper's setup. See [`Shedding`] for the
-//!    projected-delay admission controller.
+//!    projected-delay admission controller, which rules per *service
+//!    class*: each [`DispatchInfo`] carries the request's
+//!    [`ClassId`][crate::loadgen::ClassId] and dispatch priority, so
+//!    admission deadlines differ by class (priority shedding) and the
+//!    projection counts only the backlog that would be served ahead of the
+//!    request's priority.
 //! 2. **Dispatch** ([`Policy::choose_core`]): which core takes a request —
 //!    among idle cores at dispatch time (centralized discipline) or among
 //!    all cores at admission-time placement (per-core disciplines). The
@@ -21,8 +26,9 @@
 //!    application stats stream ([`crate::ipc::StatsRecord`]), sampled every
 //!    `sampling_ms` (Algorithm 1).
 //!
-//! Request lifecycle through the scheduling layer: enqueue → admit →
-//! queue → next → run (see the [`crate::sched`] module docs).
+//! Typed request lifecycle: generate → classify ([`crate::loadgen`]) →
+//! enqueue → admit → queue → next → run (see the [`crate::sched`] module
+//! docs for the scheduling stages).
 //!
 //! The same `Policy` object drives both the discrete-event simulator
 //! (`crate::sim`) and the live thread-pool server (`crate::live`), so the
@@ -67,13 +73,32 @@ pub struct Migration {
 
 /// Request facts available at dispatch time. `keywords` is ground truth the
 /// realistic policies must NOT read (the paper: "it is impractical to
-/// annotate all applications"); only the Oracle ablation uses it. Backlog,
-/// by contrast, is legitimately observable — it arrives via
-/// [`SchedCtx::queues`].
+/// annotate all applications"); only the Oracle ablation uses it. The
+/// service class and its priority, by contrast, are *declared* by the
+/// client (production systems tag traffic classes), so admission and
+/// queue ordering may legitimately read them — as may backlog, which
+/// arrives via [`SchedCtx::queues`].
 #[derive(Clone, Copy, Debug)]
 pub struct DispatchInfo {
     /// Keyword count of the query (oracle-only).
     pub keywords: usize,
+    /// Service class of the request (see [`crate::loadgen::ClassRegistry`]).
+    pub class: crate::loadgen::ClassId,
+    /// Dispatch priority of the class: higher values are dequeued first;
+    /// equal priorities preserve FIFO order.
+    pub priority: u8,
+}
+
+impl DispatchInfo {
+    /// Facts for an untyped request: the implicit default class at
+    /// priority 0 (unit tests, single-class configs).
+    pub fn untyped(keywords: usize) -> DispatchInfo {
+        DispatchInfo {
+            keywords,
+            class: crate::loadgen::ClassId::DEFAULT,
+            priority: 0,
+        }
+    }
 }
 
 /// Why an admission controller refused a request.
@@ -355,7 +380,7 @@ mod tests {
         ] {
             let mut p = kind.build(&topo);
             assert_eq!(
-                p.admit(DispatchInfo { keywords: 9 }, &mut ctx(&aff, &mut rng)),
+                p.admit(DispatchInfo::untyped(9), &mut ctx(&aff, &mut rng)),
                 AdmissionDecision::Admit,
                 "{kind:?}"
             );

@@ -69,7 +69,7 @@ mod tests {
         let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
         for _ in 0..50 {
             let c = p
-                .choose_core(&idle, DispatchInfo { keywords: 9 }, &mut ctx(&aff, &mut rng))
+                .choose_core(&idle, DispatchInfo::untyped(9), &mut ctx(&aff, &mut rng))
                 .unwrap();
             assert_eq!(aff.topology().kind(c), CoreKind::Big);
         }
@@ -81,7 +81,7 @@ mod tests {
         let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
         for _ in 0..50 {
             let c = p
-                .choose_core(&idle, DispatchInfo { keywords: 2 }, &mut ctx(&aff, &mut rng))
+                .choose_core(&idle, DispatchInfo::untyped(2), &mut ctx(&aff, &mut rng))
                 .unwrap();
             assert_eq!(aff.topology().kind(c), CoreKind::Little);
         }
@@ -94,7 +94,7 @@ mod tests {
         // than queue (work-conserving).
         let idle = vec![CoreId(3), CoreId(4)];
         let c = p
-            .choose_core(&idle, DispatchInfo { keywords: 12 }, &mut ctx(&aff, &mut rng))
+            .choose_core(&idle, DispatchInfo::untyped(12), &mut ctx(&aff, &mut rng))
             .unwrap();
         assert!(idle.contains(&c));
     }
@@ -104,11 +104,11 @@ mod tests {
         let (mut p, aff, mut rng) = setup();
         let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
         let c = p
-            .choose_core(&idle, DispatchInfo { keywords: 5 }, &mut ctx(&aff, &mut rng))
+            .choose_core(&idle, DispatchInfo::untyped(5), &mut ctx(&aff, &mut rng))
             .unwrap();
         assert_eq!(aff.topology().kind(c), CoreKind::Big); // >= cutoff is heavy
         let c = p
-            .choose_core(&idle, DispatchInfo { keywords: 4 }, &mut ctx(&aff, &mut rng))
+            .choose_core(&idle, DispatchInfo::untyped(4), &mut ctx(&aff, &mut rng))
             .unwrap();
         assert_eq!(aff.topology().kind(c), CoreKind::Little);
     }

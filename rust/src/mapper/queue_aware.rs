@@ -109,11 +109,12 @@ mod tests {
             rng: &mut rng,
             queues: QueueView {
                 per_core: depths,
+                per_priority: &[],
                 total,
             },
             now_ms: 0.0,
         };
-        p.choose_core(idle, DispatchInfo { keywords: 2 }, &mut ctx)
+        p.choose_core(idle, DispatchInfo::untyped(2), &mut ctx)
     }
 
     fn juno_aff() -> AffinityTable {
@@ -180,7 +181,7 @@ mod tests {
             now_ms: 0.0,
         };
         let got = p
-            .choose_core(&[CoreId(2)], DispatchInfo { keywords: 1 }, &mut ctx)
+            .choose_core(&[CoreId(2)], DispatchInfo::untyped(1), &mut ctx)
             .unwrap();
         assert_eq!(got, CoreId(2));
     }

@@ -64,7 +64,7 @@ mod tests {
         let mut rng = Rng::new(0);
         let picks: Vec<usize> = (0..8)
             .map(|_| {
-                p.choose_core(&idle, DispatchInfo { keywords: 1 }, &mut ctx(&aff, &mut rng))
+                p.choose_core(&idle, DispatchInfo::untyped(1), &mut ctx(&aff, &mut rng))
                     .unwrap()
                     .0
             })
@@ -79,11 +79,11 @@ mod tests {
         let mut rng = Rng::new(0);
         let idle = vec![CoreId(2), CoreId(5)];
         assert_eq!(
-            p.choose_core(&idle, DispatchInfo { keywords: 1 }, &mut ctx(&aff, &mut rng)),
+            p.choose_core(&idle, DispatchInfo::untyped(1), &mut ctx(&aff, &mut rng)),
             Some(CoreId(2))
         );
         assert_eq!(
-            p.choose_core(&idle, DispatchInfo { keywords: 1 }, &mut ctx(&aff, &mut rng)),
+            p.choose_core(&idle, DispatchInfo::untyped(1), &mut ctx(&aff, &mut rng)),
             Some(CoreId(5))
         );
     }

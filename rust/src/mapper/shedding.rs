@@ -18,13 +18,24 @@
 //!   so there the estimate stays at the fallback (deterministic and
 //!   conservative);
 //! * at [`Policy::admit`] projects the queueing delay the new request
-//!   would face — `total backlog × est. service / cores` (an M/M/c-style
+//!   would face — `backlog ahead × est. service / cores` (an M/M/c-style
 //!   all-servers-busy estimate that works for both the centralized queue
-//!   and, in aggregate, the per-core disciplines);
+//!   and, in aggregate, the per-core disciplines). "Backlog ahead" is the
+//!   queued work at or above the request's dispatch priority
+//!   ([`crate::sched::QueueView::at_or_above`]): under priority-aware
+//!   dequeue a high-priority arrival overtakes every lower-priority
+//!   request, so only its own tier's backlog delays it. For single-class
+//!   runs every priority ties and this is exactly the total backlog — the
+//!   pre-class projection bit for bit;
 //! * sheds ([`ShedReason::DeadlineExceeded`]) when the projection exceeds
-//!   the configured deadline. A deadline of `f64::INFINITY` never sheds
-//!   and leaves the wrapped policy's behaviour bit-for-bit intact (the
-//!   wrapper draws no randomness and delegates every other decision), so
+//!   the request's *class* deadline: each service class may declare its
+//!   own `deadline_ms` ([`crate::loadgen::ClassSpec`]), falling back to
+//!   the wrapper's global deadline. Tight deadlines on low-priority bulk
+//!   classes + priority-ahead projection = **priority shedding**: batch
+//!   traffic is refused first while interactive traffic keeps its SLO.
+//!   A deadline of `f64::INFINITY` never sheds and leaves the wrapped
+//!   policy's behaviour bit-for-bit intact (the wrapper draws no
+//!   randomness and delegates every other decision), so
 //!   `--shed-deadline-ms inf` reproduces seeded no-admission runs exactly
 //!   — pinned by `rust/tests/sched_properties.rs`.
 //!
@@ -56,6 +67,10 @@ pub const DEFAULT_EST_SERVICE_MS: f64 = 150.0;
 pub struct Shedding {
     inner: Box<dyn Policy>,
     deadline_ms: f64,
+    /// Per-class admission deadlines, indexed by
+    /// [`ClassId`][crate::loadgen::ClassId]; classes beyond the table (or
+    /// an empty table — the untyped configuration) use `deadline_ms`.
+    class_deadlines_ms: Vec<f64>,
     est_service_ms: f64,
     /// Begin timestamps of in-flight requests (to pair stream records).
     inflight: HashMap<RequestTag, f64>,
@@ -71,10 +86,40 @@ impl Shedding {
         Shedding {
             inner,
             deadline_ms,
+            class_deadlines_ms: Vec::new(),
             est_service_ms: DEFAULT_EST_SERVICE_MS,
             inflight: HashMap::new(),
             shed: 0,
         }
+    }
+
+    /// Builder: per-class admission deadlines (ms, indexed by class id —
+    /// see [`crate::loadgen::ClassRegistry::admission_deadlines`]).
+    /// Classes not covered fall back to the global deadline.
+    pub fn with_class_deadlines(mut self, deadlines_ms: Vec<f64>) -> Shedding {
+        self.class_deadlines_ms = deadlines_ms;
+        self
+    }
+
+    /// The one admission-wrap rule both engines share: wrap `inner` when a
+    /// global shed deadline is set OR any class declares its own
+    /// `deadline_ms` (per-class SLO ⇒ per-class admission deadline, with
+    /// the global deadline — `INFINITY` when unset — as the fallback);
+    /// return `inner` untouched otherwise. Keeping this in one place is
+    /// what guarantees the simulator and the live server shed identically.
+    pub fn wrap(
+        inner: Box<dyn Policy>,
+        shed_deadline_ms: Option<f64>,
+        registry: &crate::loadgen::ClassRegistry,
+    ) -> Box<dyn Policy> {
+        if shed_deadline_ms.is_none() && !registry.any_deadline() {
+            return inner;
+        }
+        let global_ms = shed_deadline_ms.unwrap_or(f64::INFINITY);
+        Box::new(
+            Shedding::new(inner, global_ms)
+                .with_class_deadlines(registry.admission_deadlines(global_ms)),
+        )
     }
 
     /// Override the cold-start service-time estimate (ms).
@@ -124,19 +169,27 @@ impl Policy for Shedding {
         self.inner.sampling_ms().or(Some(EST_SAMPLING_MS))
     }
 
-    fn admit(&mut self, _info: DispatchInfo, ctx: &mut SchedCtx<'_>) -> AdmissionDecision {
-        // All-servers-busy projection: the new arrival waits for the whole
-        // backlog to drain across the pool. Deliberately ignores
-        // `info.keywords` — request sizes are not observable in production
-        // (the paper's §II); backlog and completed service times are.
+    fn admit(&mut self, info: DispatchInfo, ctx: &mut SchedCtx<'_>) -> AdmissionDecision {
+        // All-servers-busy projection over the backlog that would be
+        // served AHEAD of this request: queued work at or above its
+        // dispatch priority (the whole backlog for single-class runs).
+        // Deliberately ignores `info.keywords` — request sizes are not
+        // observable in production (the paper's §II); backlog, priorities
+        // and completed service times are.
         let servers = ctx.queues.per_core.len().max(1);
-        let projected_ms = ctx.queues.total as f64 * self.est_service_ms / servers as f64;
-        if projected_ms > self.deadline_ms {
+        let ahead = ctx.queues.at_or_above(info.priority);
+        let projected_ms = ahead as f64 * self.est_service_ms / servers as f64;
+        let deadline_ms = self
+            .class_deadlines_ms
+            .get(info.class.idx())
+            .copied()
+            .unwrap_or(self.deadline_ms);
+        if projected_ms > deadline_ms {
             self.shed += 1;
             AdmissionDecision::Shed {
                 reason: ShedReason::DeadlineExceeded {
                     projected_ms,
-                    deadline_ms: self.deadline_ms,
+                    deadline_ms,
                 },
             }
         } else {
@@ -181,9 +234,11 @@ mod tests {
     use crate::sched::QueueView;
     use crate::util::Rng;
 
-    fn admit_with(
+    fn admit_info_with(
         p: &mut Shedding,
+        info: DispatchInfo,
         depths: &[usize],
+        per_priority: &[usize],
         aff: &AffinityTable,
     ) -> AdmissionDecision {
         let mut rng = Rng::new(0);
@@ -193,11 +248,20 @@ mod tests {
             rng: &mut rng,
             queues: QueueView {
                 per_core: depths,
+                per_priority,
                 total,
             },
             now_ms: 0.0,
         };
-        p.admit(DispatchInfo { keywords: 3 }, &mut ctx)
+        p.admit(info, &mut ctx)
+    }
+
+    fn admit_with(
+        p: &mut Shedding,
+        depths: &[usize],
+        aff: &AffinityTable,
+    ) -> AdmissionDecision {
+        admit_info_with(p, DispatchInfo::untyped(3), depths, &[], aff)
     }
 
     fn wrap(deadline_ms: f64) -> (Shedding, AffinityTable) {
@@ -243,6 +307,84 @@ mod tests {
     }
 
     #[test]
+    fn wrap_engages_only_when_a_deadline_is_declared() {
+        use crate::config::KeywordMix;
+        use crate::loadgen::{ClassRegistry, ClassSpec};
+        let topo = Topology::juno_r1();
+        let implicit = ClassRegistry::single(KeywordMix::Paper);
+        // No global deadline, no class deadline: the policy is untouched.
+        let p = Shedding::wrap(PolicyKind::LinuxRandom.build(&topo), None, &implicit);
+        assert_eq!(p.name(), "linux-random");
+        // A global deadline wraps.
+        let p = Shedding::wrap(
+            PolicyKind::LinuxRandom.build(&topo),
+            Some(500.0),
+            &implicit,
+        );
+        assert!(p.name().starts_with("shed("), "{}", p.name());
+        // A class deadline alone wraps too (global falls back to inf).
+        let reg = ClassRegistry::resolve(
+            &[ClassSpec::new("fg", KeywordMix::Paper).with_deadline(500.0)],
+            KeywordMix::Paper,
+        )
+        .unwrap();
+        let p = Shedding::wrap(PolicyKind::LinuxRandom.build(&topo), None, &reg);
+        assert!(p.name().starts_with("shed("), "{}", p.name());
+    }
+
+    #[test]
+    fn class_deadlines_override_the_global_deadline() {
+        let (mut p, aff) = wrap(500.0);
+        // Class 0 keeps the global 500 ms; class 1 declares a tight 100 ms.
+        p = p.with_class_deadlines(vec![500.0, 100.0]);
+        let info = |class: u16| DispatchInfo {
+            class: crate::loadgen::ClassId(class),
+            ..DispatchInfo::untyped(3)
+        };
+        // 12 queued × 150ms / 6 cores = 300ms projected: under 500, over 100.
+        let depths = [2usize; 6];
+        assert_eq!(
+            admit_info_with(&mut p, info(0), &depths, &[], &aff),
+            AdmissionDecision::Admit
+        );
+        match admit_info_with(&mut p, info(1), &depths, &[], &aff) {
+            AdmissionDecision::Shed {
+                reason: ShedReason::DeadlineExceeded { deadline_ms, .. },
+            } => assert_eq!(deadline_ms, 100.0, "class deadline, not global"),
+            other => panic!("expected class-deadline shed, got {other:?}"),
+        }
+        // A class beyond the table falls back to the global deadline.
+        assert_eq!(
+            admit_info_with(&mut p, info(7), &depths, &[], &aff),
+            AdmissionDecision::Admit
+        );
+    }
+
+    #[test]
+    fn projection_counts_only_backlog_ahead_of_the_priority() {
+        // Priority shedding: 30 queued total but only 2 at priority ≥ 1.
+        // A priority-1 arrival projects 2×150/6 = 50ms (admit at 500);
+        // a priority-0 arrival projects 30×150/6 = 750ms (shed at 500).
+        let (mut p, aff) = wrap(500.0);
+        let depths = [5usize; 6];
+        let per_priority = [28usize, 2];
+        let info = |prio: u8| DispatchInfo {
+            priority: prio,
+            ..DispatchInfo::untyped(3)
+        };
+        assert_eq!(
+            admit_info_with(&mut p, info(1), &depths, &per_priority, &aff),
+            AdmissionDecision::Admit
+        );
+        match admit_info_with(&mut p, info(0), &depths, &per_priority, &aff) {
+            AdmissionDecision::Shed {
+                reason: ShedReason::DeadlineExceeded { projected_ms, .. },
+            } => assert!((projected_ms - 750.0).abs() < 1e-9),
+            other => panic!("expected shed, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn estimator_learns_from_begin_end_pairs() {
         let (mut p, _aff) = wrap(500.0);
         assert_eq!(p.est_service_ms(), DEFAULT_EST_SERVICE_MS);
@@ -283,7 +425,7 @@ mod tests {
         };
         let idle = [crate::platform::CoreId(3)];
         assert_eq!(
-            p.choose_core(&idle, DispatchInfo { keywords: 2 }, &mut ctx),
+            p.choose_core(&idle, DispatchInfo::untyped(2), &mut ctx),
             Some(crate::platform::CoreId(3))
         );
     }

@@ -71,13 +71,13 @@ mod tests {
         // Only little cores idle => request must wait.
         let idle = vec![CoreId(2), CoreId(3)];
         assert_eq!(
-            p.choose_core(&idle, DispatchInfo { keywords: 2 }, &mut ctx(&aff, &mut rng)),
+            p.choose_core(&idle, DispatchInfo::untyped(2), &mut ctx(&aff, &mut rng)),
             None
         );
         // A big core idle => taken.
         let idle = vec![CoreId(1), CoreId(4)];
         assert_eq!(
-            p.choose_core(&idle, DispatchInfo { keywords: 2 }, &mut ctx(&aff, &mut rng)),
+            p.choose_core(&idle, DispatchInfo::untyped(2), &mut ctx(&aff, &mut rng)),
             Some(CoreId(1))
         );
     }
@@ -89,13 +89,13 @@ mod tests {
         let mut rng = Rng::new(2);
         let idle = vec![CoreId(0), CoreId(1)];
         assert_eq!(
-            p.choose_core(&idle, DispatchInfo { keywords: 2 }, &mut ctx(&aff, &mut rng)),
+            p.choose_core(&idle, DispatchInfo::untyped(2), &mut ctx(&aff, &mut rng)),
             None
         );
         let got = p
             .choose_core(
                 &[CoreId(0), CoreId(5)],
-                DispatchInfo { keywords: 2 },
+                DispatchInfo::untyped(2),
                 &mut ctx(&aff, &mut rng),
             )
             .unwrap();

@@ -1,0 +1,149 @@
+//! Per-service-class outcome accounting — the class-aware slice of a run
+//! report, shared by the simulator ([`crate::sim::SimOutput`]) and the
+//! live server ([`crate::live::LiveReport`]).
+//!
+//! Conservation per class: `offered() == completed + shed` — every offered
+//! request of a class either completed or was refused at admission (pinned
+//! by `rust/tests/sched_properties.rs`).
+
+use super::histogram::LatencyHistogram;
+use super::summary::Summary;
+
+/// Outcomes of one service class over one run.
+#[derive(Clone, Debug)]
+pub struct ClassStats {
+    /// Class name (from the [`crate::loadgen::ClassSpec`]).
+    pub name: String,
+    /// Dispatch priority of the class.
+    pub priority: u8,
+    /// Latency SLO of the class, ms (`None` = no SLO declared).
+    pub deadline_ms: Option<f64>,
+    /// Requests of this class completed (including warmup).
+    pub completed: usize,
+    /// Requests of this class refused at admission.
+    pub shed: usize,
+    /// End-to-end latency histogram over the *measured* (post-warmup)
+    /// completions of this class.
+    pub latency: LatencyHistogram,
+    /// Measured completions that met the SLO (`latency ≤ deadline_ms`);
+    /// equals the measured count when no SLO is declared.
+    pub slo_met: u64,
+}
+
+impl ClassStats {
+    /// Empty stats for a class.
+    pub fn new(name: impl Into<String>, priority: u8, deadline_ms: Option<f64>) -> ClassStats {
+        ClassStats {
+            name: name.into(),
+            priority,
+            deadline_ms,
+            completed: 0,
+            shed: 0,
+            latency: LatencyHistogram::new(),
+            slo_met: 0,
+        }
+    }
+
+    /// Account one completion. `measured` excludes warmup completions from
+    /// the latency/SLO statistics (they still count toward `completed`).
+    pub fn record_completion(&mut self, latency_ms: f64, measured: bool) {
+        self.completed += 1;
+        if measured {
+            self.latency.record(latency_ms);
+            if latency_ms <= self.deadline_ms.unwrap_or(f64::INFINITY) {
+                self.slo_met += 1;
+            }
+        }
+    }
+
+    /// Account one admission refusal.
+    pub fn record_shed(&mut self) {
+        self.shed += 1;
+    }
+
+    /// Requests of this class offered to the server (completed + shed).
+    pub fn offered(&self) -> usize {
+        self.completed + self.shed
+    }
+
+    /// Fraction of offered requests refused at admission.
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered() == 0 {
+            return 0.0;
+        }
+        self.shed as f64 / self.offered() as f64
+    }
+
+    /// Completed requests of this class per second over the run span.
+    /// 0.0 on degenerate zero-span runs, never NaN/inf (the same guard as
+    /// `throughput_qps` on the run reports).
+    pub fn goodput_qps(&self, duration_ms: f64) -> f64 {
+        if duration_ms <= 0.0 || !duration_ms.is_finite() {
+            return 0.0;
+        }
+        self.completed as f64 / (duration_ms / 1000.0)
+    }
+
+    /// Fraction of measured completions that met the SLO. `None` when the
+    /// class declares no SLO, or when it has no measured completions —
+    /// an entirely-shed class must render `-` like its latency columns,
+    /// not a vacuous `100.0%`.
+    pub fn slo_attainment(&self) -> Option<f64> {
+        self.deadline_ms?;
+        let n = self.latency.count();
+        if n == 0 {
+            return None;
+        }
+        Some(self.slo_met as f64 / n as f64)
+    }
+
+    /// Latency summary over the measured completions (zero-filled with
+    /// `count == 0` for a class that completed nothing — render as `-`).
+    pub fn summary(&self) -> Summary {
+        Summary::from_histogram(&self.latency)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conservation_and_rates() {
+        let mut cs = ClassStats::new("interactive", 1, Some(500.0));
+        cs.record_completion(100.0, true);
+        cs.record_completion(600.0, true);
+        cs.record_completion(50.0, false); // warmup
+        cs.record_shed();
+        assert_eq!(cs.completed, 3);
+        assert_eq!(cs.shed, 1);
+        assert_eq!(cs.offered(), 4);
+        assert_eq!(cs.shed_rate(), 0.25);
+        assert_eq!(cs.latency.count(), 2, "warmup excluded from latency");
+        assert_eq!(cs.slo_attainment(), Some(0.5));
+        assert!((cs.goodput_qps(1000.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_class_is_dash_not_nan() {
+        let cs = ClassStats::new("batch", 0, Some(2000.0));
+        assert_eq!(cs.offered(), 0);
+        assert_eq!(cs.shed_rate(), 0.0);
+        assert_eq!(cs.goodput_qps(0.0), 0.0, "zero-span guard");
+        assert_eq!(
+            cs.slo_attainment(),
+            None,
+            "no measured completions renders '-', never a vacuous 100%"
+        );
+        let s = cs.summary();
+        assert_eq!(s.count, 0);
+        assert!(s.p50 == 0.0 && s.p90 == 0.0 && s.p99 == 0.0, "no NaN leakage");
+    }
+
+    #[test]
+    fn no_slo_class_reports_none() {
+        let mut cs = ClassStats::new("free", 0, None);
+        cs.record_completion(10_000.0, true);
+        assert_eq!(cs.slo_attainment(), None);
+    }
+}

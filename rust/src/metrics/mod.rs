@@ -1,11 +1,14 @@
 //! Latency/throughput metrics: log-bucketed histograms with percentile
 //! queries (the paper reports 90th-percentile tail latency), running
-//! mean/std (Fig 1 error bars), and PDF estimation (Fig 6).
+//! mean/std (Fig 1 error bars), PDF estimation (Fig 6), and per-class
+//! outcome accounting (service-class SLO reports).
 
+pub mod class_stats;
 pub mod histogram;
 pub mod pdf;
 pub mod summary;
 
+pub use class_stats::ClassStats;
 pub use histogram::LatencyHistogram;
 pub use pdf::pdf_from_samples;
 pub use summary::Summary;

@@ -25,8 +25,34 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Summarise a histogram.
+    /// The zero-sample summary: every statistic 0.0 with `count == 0`.
+    /// Tables and CSV render it as `-`/0 — never NaN (an empty histogram's
+    /// raw `mean()`/`percentile()` are NaN, which would otherwise leak
+    /// into reports whenever a service class completes nothing).
+    pub fn empty() -> Summary {
+        Summary {
+            count: 0,
+            mean: 0.0,
+            std: 0.0,
+            min: 0.0,
+            p50: 0.0,
+            p90: 0.0,
+            p99: 0.0,
+            max: 0.0,
+        }
+    }
+
+    /// True when no samples back this summary (render statistics as `-`).
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Summarise a histogram ([`Summary::empty`] for an empty one — the
+    /// zero-completions guard, mirroring `throughput_qps`'s 0.0-on-empty).
     pub fn from_histogram(h: &LatencyHistogram) -> Summary {
+        if h.is_empty() {
+            return Summary::empty();
+        }
         Summary {
             count: h.count(),
             mean: h.mean(),
@@ -94,5 +120,15 @@ mod tests {
     #[should_panic(expected = "empty")]
     fn empty_slice_panics() {
         Summary::from_slice(&[]);
+    }
+
+    #[test]
+    fn empty_histogram_summary_has_no_nan() {
+        let s = Summary::from_histogram(&LatencyHistogram::new());
+        assert!(s.is_empty());
+        assert_eq!(s.count, 0);
+        for v in [s.mean, s.std, s.min, s.p50, s.p90, s.p99, s.max] {
+            assert_eq!(v, 0.0, "no NaN may leak from an empty sample set");
+        }
     }
 }

@@ -1,21 +1,23 @@
-//! Centralized FCFS (cFCFS): one global FIFO queue, the paper's setup.
+//! Centralized FCFS (cFCFS): one global queue, the paper's setup.
 //!
-//! The head request is offered to the [`Policy`] together with the full
+//! The queue's *head* — the oldest request of the highest queued dispatch
+//! priority — is offered to the [`Policy`] together with the full
 //! idle-core set; the policy may hold the head queued (e.g. all-big waits
-//! for a big core), which blocks everything behind it — global FIFO order
-//! is strict. The operation order (queue check → idle check → policy →
-//! pop) and the rng draws replicate the pre-`sched` simulator loop exactly,
-//! so seeded runs reproduce bit-for-bit.
+//! for a big core), which blocks everything behind it. Within a priority
+//! level order is strict FIFO, and single-class workloads (every priority
+//! equal) degenerate to the plain global FIFO: the operation order (queue
+//! check → idle check → policy → pop) and the rng draws then replicate the
+//! pre-`sched` simulator loop exactly, so seeded runs reproduce
+//! bit-for-bit.
 
-use std::collections::VecDeque;
-
+use super::prio_queue::PrioQueue;
 use super::{QueueDiscipline, QueuedTicket, SchedCtx};
 use crate::mapper::Policy;
 use crate::platform::CoreId;
 
-/// One global FIFO dispatch queue.
+/// One global dispatch queue, priority-then-FIFO ordered.
 pub struct Centralized {
-    queue: VecDeque<QueuedTicket>,
+    queue: PrioQueue,
     num_cores: usize,
 }
 
@@ -23,7 +25,7 @@ impl Centralized {
     /// New empty queue for a core count.
     pub fn new(num_cores: usize) -> Centralized {
         Centralized {
-            queue: VecDeque::new(),
+            queue: PrioQueue::new(),
             num_cores,
         }
     }
@@ -37,7 +39,7 @@ impl QueueDiscipline for Centralized {
     }
 
     fn enqueue(&mut self, item: QueuedTicket, _policy: &mut dyn Policy, _ctx: &mut SchedCtx<'_>) {
-        self.queue.push_back(item);
+        self.queue.push(item);
     }
 
     fn next(
@@ -49,9 +51,12 @@ impl QueueDiscipline for Centralized {
         if self.queue.is_empty() || idle.is_empty() {
             return None;
         }
-        let head = *self.queue.front().expect("non-empty");
+        // Effective head: oldest request of the highest queued priority.
+        // With a single priority level (single class) that is the plain
+        // FIFO front — the pre-class behaviour bit for bit.
+        let head = self.queue.peek_best().expect("non-empty");
         let core = policy.choose_core(idle, head.info, ctx)?;
-        self.queue.pop_front();
+        self.queue.take_best();
         Some((head, core))
     }
 
@@ -66,6 +71,11 @@ impl QueueDiscipline for Centralized {
     fn depths_into(&self, out: &mut Vec<usize>) {
         out.clear();
         out.resize(self.num_cores, self.queue.len());
+    }
+
+    fn prios_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        self.queue.add_counts_into(out);
     }
 }
 
@@ -88,7 +98,7 @@ mod tests {
             q.enqueue(
                 QueuedTicket {
                     ticket: t,
-                    info: DispatchInfo { keywords: 2 },
+                    info: DispatchInfo::untyped(2),
                 },
                 all_big.as_mut(),
                 &mut ctx(&aff, &mut rng),
@@ -109,6 +119,37 @@ mod tests {
     }
 
     #[test]
+    fn high_priority_overtakes_fifo_within_class() {
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo.clone());
+        let mut p = PolicyKind::RoundRobin.build(&topo);
+        let mut rng = Rng::new(9);
+        let mut q = Centralized::new(6);
+        let info = |prio: u8| DispatchInfo {
+            priority: prio,
+            ..DispatchInfo::untyped(2)
+        };
+        // Two low-priority, then one high, then another of each.
+        for (t, prio) in [(0u64, 0u8), (1, 0), (2, 1), (3, 1), (4, 0)] {
+            q.enqueue(
+                QueuedTicket {
+                    ticket: t,
+                    info: info(prio),
+                },
+                p.as_mut(),
+                &mut ctx(&aff, &mut rng),
+            );
+        }
+        let all: Vec<CoreId> = (0..6).map(CoreId).collect();
+        let mut order = Vec::new();
+        while let Some((qt, _)) = q.next(&all, p.as_mut(), &mut ctx(&aff, &mut rng)) {
+            order.push(qt.ticket);
+        }
+        // High-priority tickets first (FIFO among them), then the rest FIFO.
+        assert_eq!(order, vec![2, 3, 0, 1, 4]);
+    }
+
+    #[test]
     fn depths_report_shared_backlog() {
         let topo = Topology::juno_r1();
         let aff = AffinityTable::round_robin(topo.clone());
@@ -119,7 +160,7 @@ mod tests {
             q.enqueue(
                 QueuedTicket {
                     ticket: t,
-                    info: DispatchInfo { keywords: 1 },
+                    info: DispatchInfo::untyped(1),
                 },
                 p.as_mut(),
                 &mut ctx(&aff, &mut rng),

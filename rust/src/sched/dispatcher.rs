@@ -57,9 +57,12 @@ pub struct Dispatcher<T> {
     discipline: Box<dyn QueueDiscipline>,
     payloads: HashMap<Ticket, T>,
     next_ticket: Ticket,
-    /// Reused backlog-snapshot buffer for the per-call [`SchedCtx`]; the
-    /// hot dispatch loop must not allocate.
+    /// Reused backlog-snapshot buffers for the per-call [`SchedCtx`] (the
+    /// hot dispatch loop must not allocate). The per-priority counts are
+    /// snapshotted from the discipline's own queues on every call —
+    /// there is no parallel bookkeeping to drift out of sync.
     depth_scratch: Vec<usize>,
+    prio_scratch: Vec<usize>,
 }
 
 impl<T> Dispatcher<T> {
@@ -70,6 +73,7 @@ impl<T> Dispatcher<T> {
             payloads: HashMap::new(),
             next_ticket: 0,
             depth_scratch: Vec::new(),
+            prio_scratch: Vec::new(),
         }
     }
 
@@ -91,13 +95,16 @@ impl<T> Dispatcher<T> {
             payloads,
             next_ticket,
             depth_scratch,
+            prio_scratch,
         } = self;
         discipline.depths_into(depth_scratch);
+        discipline.prios_into(prio_scratch);
         let mut ctx = SchedCtx {
             aff,
             rng,
             queues: QueueView {
                 per_core: depth_scratch,
+                per_priority: prio_scratch,
                 total: discipline.queued(),
             },
             now_ms,
@@ -137,14 +144,17 @@ impl<T> Dispatcher<T> {
             discipline,
             payloads,
             depth_scratch,
+            prio_scratch,
             ..
         } = self;
         discipline.depths_into(depth_scratch);
+        discipline.prios_into(prio_scratch);
         let mut ctx = SchedCtx {
             aff,
             rng,
             queues: QueueView {
                 per_core: depth_scratch,
+                per_priority: prio_scratch,
                 total: discipline.queued(),
             },
             now_ms,
@@ -156,14 +166,27 @@ impl<T> Dispatcher<T> {
         Some((payload, core))
     }
 
-    /// Fresh per-core backlog snapshot into `buf` — for engine-built tick
-    /// contexts (allocation-free once `buf` has grown).
-    pub fn queue_view<'a>(&self, buf: &'a mut Vec<usize>) -> QueueView<'a> {
-        self.discipline.depths_into(buf);
+    /// Fresh backlog snapshot into caller buffers (per-core depths and
+    /// per-priority counts) — for engine-built tick contexts
+    /// (allocation-free once the buffers have grown).
+    pub fn queue_view<'a>(
+        &self,
+        depths: &'a mut Vec<usize>,
+        prios: &'a mut Vec<usize>,
+    ) -> QueueView<'a> {
+        self.discipline.depths_into(depths);
+        self.discipline.prios_into(prios);
         QueueView {
-            per_core: buf,
+            per_core: depths,
+            per_priority: prios,
             total: self.discipline.queued(),
         }
+    }
+
+    /// Per-priority backlog counts into a reused buffer (index =
+    /// priority; see [`QueueView::per_priority`]).
+    pub fn prios_into(&self, out: &mut Vec<usize>) {
+        self.discipline.prios_into(out);
     }
 
     /// Requests currently queued.
@@ -209,7 +232,7 @@ mod tests {
         for i in 0..40 {
             let outcome = d.enqueue(
                 i,
-                DispatchInfo { keywords: 3 },
+                DispatchInfo::untyped(3),
                 policy.as_mut(),
                 &aff,
                 &mut rng,
@@ -281,7 +304,7 @@ mod tests {
                 let payload = format!("req-{i}");
                 match d.enqueue(
                     payload.clone(),
-                    DispatchInfo { keywords: 2 },
+                    DispatchInfo::untyped(2),
                     &mut policy,
                     &aff,
                     &mut rng,

@@ -3,19 +3,27 @@
 //! (`crate::live`), so the queue discipline + [`Policy`] pair under test is
 //! literally the same code in both execution modes.
 //!
-//! # Request lifecycle
+//! # Typed request lifecycle
 //!
-//! Every request moves through five stages, in both execution modes:
+//! Every request is generated and *classified* by [`crate::loadgen`]
+//! (each [`crate::loadgen::Request`] carries a
+//! [`ClassId`][crate::loadgen::ClassId] tag with a declared dispatch
+//! priority), then moves through five scheduling stages, in both
+//! execution modes — generate → classify → **enqueue → admit → queue →
+//! next → run**:
 //!
 //! 1. **enqueue** — the engine offers the request to the [`Dispatcher`];
 //! 2. **admit** — the [`Policy`] rules on admission
 //!    ([`Policy::admit`][crate::mapper::Policy::admit]) with full
-//!    [`SchedCtx`] visibility; a `Shed` decision hands the payload straight
-//!    back to the caller — nothing is ticketed or queued;
+//!    [`SchedCtx`] visibility (including the per-priority backlog, so
+//!    per-class deadlines = priority shedding); a `Shed` decision hands
+//!    the payload straight back to the caller — nothing is ticketed or
+//!    queued;
 //! 3. **queue** — the [`QueueDiscipline`] stores the admitted request
 //!    (per-core disciplines consult the policy for a home queue);
 //! 4. **next** — as cores go idle, the discipline + policy pick the next
-//!    (request, core) pair;
+//!    (request, core) pair, serving higher-priority classes first (FIFO
+//!    within a priority level);
 //! 5. **run** — the engine executes it and reports begin/end through the
 //!    stats stream ([`crate::ipc::StatsRecord`]).
 //!
@@ -55,6 +63,7 @@
 pub mod centralized;
 pub mod dispatcher;
 pub mod per_core;
+mod prio_queue;
 pub mod shared;
 pub mod work_steal;
 
@@ -79,6 +88,12 @@ pub struct QueueView<'a> {
     /// core's own queue length; for a centralized discipline every core
     /// sees the shared queue, so all entries equal `total`.
     pub per_core: &'a [usize],
+    /// Queued requests per dispatch-priority level (index = priority).
+    /// Disciplines dequeue higher priorities first, so the backlog *ahead
+    /// of* a priority-`p` arrival is [`QueueView::at_or_above`]`(p)` —
+    /// what class-aware admission controllers project against. Empty in
+    /// bare unit-test views; then every priority sees `total`.
+    pub per_priority: &'a [usize],
     /// Total requests queued across all queues (no double counting).
     pub total: usize,
 }
@@ -88,6 +103,7 @@ impl QueueView<'_> {
     pub const fn empty() -> QueueView<'static> {
         QueueView {
             per_core: &[],
+            per_priority: &[],
             total: 0,
         }
     }
@@ -95,6 +111,17 @@ impl QueueView<'_> {
     /// Backlog visible to one core (0 if the view doesn't cover it).
     pub fn depth(&self, core: CoreId) -> usize {
         self.per_core.get(core.0).copied().unwrap_or(0)
+    }
+
+    /// Queued requests at or above a dispatch priority — the backlog a
+    /// priority-`prio` arrival would wait behind under priority-aware
+    /// dequeue. Falls back to `total` when no priority breakdown was
+    /// captured (hand-built views), which is exact for single-class runs.
+    pub fn at_or_above(&self, prio: u8) -> usize {
+        if self.per_priority.is_empty() {
+            return self.total;
+        }
+        self.per_priority.iter().skip(prio as usize).sum()
     }
 }
 
@@ -132,9 +159,13 @@ pub struct QueuedTicket {
 
 /// A queue discipline: owns where requests wait and which core serves them
 /// next. Implementations must conserve requests (every enqueued ticket is
-/// eventually returned by `next` exactly once, given idle cores) and keep
-/// each internal queue strictly FIFO. Admission happens *before* the
-/// discipline is involved — `enqueue` only ever sees admitted requests.
+/// eventually returned by `next` exactly once, given idle cores) and order
+/// each internal queue by dispatch priority — higher
+/// [`DispatchInfo::priority`] values are served first, and equal
+/// priorities keep strict FIFO order (so single-class workloads, where
+/// every priority ties, are plain FIFO — the pre-class behaviour bit for
+/// bit). Admission happens *before* the discipline is involved —
+/// `enqueue` only ever sees admitted requests.
 pub trait QueueDiscipline: Send {
     /// Stable label for reports and tables.
     fn name(&self) -> &'static str;
@@ -166,6 +197,12 @@ pub trait QueueDiscipline: Send {
     /// because the engines snapshot on every event — the hot dispatch loop
     /// must not allocate.
     fn depths_into(&self, out: &mut Vec<usize>);
+
+    /// Fill `out` with the per-priority backlog counts (index =
+    /// priority; see [`QueueView::per_priority`]). Derived from the
+    /// discipline's own queues — the single source of truth — so the
+    /// admission projection can never drift from queue reality.
+    fn prios_into(&self, out: &mut Vec<usize>);
 
     /// Allocating convenience form of [`QueueDiscipline::depths_into`].
     fn depths(&self) -> Vec<usize> {
@@ -288,11 +325,34 @@ mod tests {
     fn queue_view_depth_lookup_and_out_of_range() {
         let view = QueueView {
             per_core: &[3, 1],
+            per_priority: &[],
             total: 4,
         };
         assert_eq!(view.depth(crate::platform::CoreId(0)), 3);
         assert_eq!(view.depth(crate::platform::CoreId(1)), 1);
         assert_eq!(view.depth(crate::platform::CoreId(9)), 0);
         assert_eq!(QueueView::empty().total, 0);
+    }
+
+    #[test]
+    fn queue_view_priority_backlog() {
+        // 4 requests at priority 0, 2 at priority 1, 1 at priority 3.
+        let view = QueueView {
+            per_core: &[7],
+            per_priority: &[4, 2, 0, 1],
+            total: 7,
+        };
+        assert_eq!(view.at_or_above(0), 7);
+        assert_eq!(view.at_or_above(1), 3);
+        assert_eq!(view.at_or_above(2), 1);
+        assert_eq!(view.at_or_above(3), 1);
+        assert_eq!(view.at_or_above(4), 0);
+        // No breakdown captured: every priority conservatively sees total.
+        let flat = QueueView {
+            per_core: &[7],
+            per_priority: &[],
+            total: 7,
+        };
+        assert_eq!(flat.at_or_above(5), 7);
     }
 }

@@ -7,9 +7,10 @@
 //! cluster, the oracle steers heavy requests to big-core queues, and a
 //! queue-aware policy can read the [`SchedCtx`] backlog snapshot to place
 //! join-shortest-queue. After placement a core serves only its own queue,
-//! strictly FIFO — no policy consult at pop, so a placement the policy
-//! approved is always eventually served (conservation holds for every
-//! policy).
+//! highest dispatch priority first and FIFO within a priority (plain FIFO
+//! for single-class workloads) — no policy consult at pop, so a placement
+//! the policy approved is always eventually served (conservation holds
+//! for every policy).
 //!
 //! This trades the centralized queue's global FIFO fairness for zero
 //! head-of-line coupling between cores — the cFCFS/dFCFS trade-off:
@@ -17,15 +18,14 @@
 //! queue backs up behind a heavy request (no rebalancing; see
 //! [`super::WorkSteal`]).
 
-use std::collections::VecDeque;
-
+use super::prio_queue::PrioQueue;
 use super::{QueueDiscipline, QueuedTicket, SchedCtx};
 use crate::mapper::Policy;
 use crate::platform::CoreId;
 
-/// Per-core FIFO queues with admission-time placement.
+/// Per-core priority-then-FIFO queues with admission-time placement.
 pub struct PerCore {
-    queues: Vec<VecDeque<QueuedTicket>>,
+    queues: Vec<PrioQueue>,
     all_cores: Vec<CoreId>,
     queued: usize,
 }
@@ -34,7 +34,7 @@ impl PerCore {
     /// New empty queues for a core count.
     pub fn new(num_cores: usize) -> PerCore {
         PerCore {
-            queues: (0..num_cores).map(|_| VecDeque::new()).collect(),
+            queues: (0..num_cores).map(|_| PrioQueue::new()).collect(),
             all_cores: (0..num_cores).map(CoreId).collect(),
             queued: 0,
         }
@@ -60,16 +60,16 @@ impl PerCore {
         self.queues.len()
     }
 
-    /// Oldest queued request on `core`, without removing it (work
-    /// stealing's victim peek).
-    pub(crate) fn front(&self, core: CoreId) -> Option<QueuedTicket> {
-        self.queues[core.0].front().copied()
+    /// The next-served request on `core` — oldest of the highest queued
+    /// priority — without removing it (work stealing's victim peek).
+    pub(crate) fn peek_best(&self, core: CoreId) -> Option<QueuedTicket> {
+        self.queues[core.0].peek_best()
     }
 
-    /// Remove and return the oldest queued request on `core` (work
+    /// Remove and return the next-served request on `core` (work
     /// stealing's steal).
-    pub(crate) fn pop_front(&mut self, core: CoreId) -> Option<QueuedTicket> {
-        let item = self.queues[core.0].pop_front();
+    pub(crate) fn take_best(&mut self, core: CoreId) -> Option<QueuedTicket> {
+        let item = self.queues[core.0].take_best();
         if item.is_some() {
             self.queued -= 1;
         }
@@ -85,7 +85,7 @@ impl QueueDiscipline for PerCore {
 
     fn enqueue(&mut self, item: QueuedTicket, policy: &mut dyn Policy, ctx: &mut SchedCtx<'_>) {
         let home = Self::place(&self.all_cores, item, policy, ctx);
-        self.queues[home.0].push_back(item);
+        self.queues[home.0].push(item);
         self.queued += 1;
     }
 
@@ -96,7 +96,7 @@ impl QueueDiscipline for PerCore {
         _ctx: &mut SchedCtx<'_>,
     ) -> Option<(QueuedTicket, CoreId)> {
         for &core in idle {
-            if let Some(head) = self.queues[core.0].pop_front() {
+            if let Some(head) = self.queues[core.0].take_best() {
                 self.queued -= 1;
                 return Some((head, core));
             }
@@ -114,7 +114,14 @@ impl QueueDiscipline for PerCore {
 
     fn depths_into(&self, out: &mut Vec<usize>) {
         out.clear();
-        out.extend(self.queues.iter().map(VecDeque::len));
+        out.extend(self.queues.iter().map(PrioQueue::len));
+    }
+
+    fn prios_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        for q in &self.queues {
+            q.add_counts_into(out);
+        }
     }
 }
 
@@ -137,7 +144,7 @@ mod tests {
         q.enqueue(
             QueuedTicket {
                 ticket: t,
-                info: DispatchInfo { keywords: kw },
+                info: DispatchInfo::untyped(kw),
             },
             p,
             &mut ctx(aff, rng),

@@ -1,0 +1,156 @@
+//! Priority-then-FIFO ticket queue — the storage primitive the queue
+//! disciplines share.
+//!
+//! Dequeue order: the oldest item of the highest queued dispatch priority
+//! ([`crate::mapper::DispatchInfo::priority`]). Storage is one FIFO bucket
+//! per priority level, so push and pop are O(1) in the number of queued
+//! items (O(levels) to find the highest non-empty bucket — levels are
+//! tiny). A single-class workload only ever touches bucket 0 and the
+//! queue degenerates to the plain FIFO of the pre-class scheduler —
+//! bit-for-bit, which is what the seeded-replay anchors rely on.
+//!
+//! The bucket lengths double as the queue's per-priority backlog counts
+//! ([`PrioQueue::add_counts_into`]) — the single source of truth behind
+//! [`crate::sched::QueueView::per_priority`].
+
+use std::collections::VecDeque;
+
+use super::QueuedTicket;
+
+/// A FIFO queue dequeued highest-priority-first (FIFO within a priority).
+#[derive(Default)]
+pub(crate) struct PrioQueue {
+    /// One FIFO bucket per priority level (index = priority).
+    buckets: Vec<VecDeque<QueuedTicket>>,
+    len: usize,
+}
+
+impl PrioQueue {
+    /// New empty queue.
+    pub(crate) fn new() -> PrioQueue {
+        PrioQueue::default()
+    }
+
+    /// Queued items.
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing is queued.
+    pub(crate) fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append one item (FIFO position within its priority level).
+    pub(crate) fn push(&mut self, item: QueuedTicket) {
+        let prio = item.info.priority as usize;
+        if prio >= self.buckets.len() {
+            self.buckets.resize_with(prio + 1, VecDeque::new);
+        }
+        self.buckets[prio].push_back(item);
+        self.len += 1;
+    }
+
+    /// Highest-priority non-empty bucket index.
+    fn top_bucket(&self) -> Option<usize> {
+        self.buckets.iter().rposition(|b| !b.is_empty())
+    }
+
+    /// The effective head — the oldest item of the highest queued
+    /// priority — without removing it.
+    pub(crate) fn peek_best(&self) -> Option<QueuedTicket> {
+        self.top_bucket()
+            .and_then(|p| self.buckets[p].front().copied())
+    }
+
+    /// Remove and return the effective head.
+    pub(crate) fn take_best(&mut self) -> Option<QueuedTicket> {
+        let top = self.top_bucket()?;
+        let item = self.buckets[top].pop_front().expect("non-empty bucket");
+        self.len -= 1;
+        Some(item)
+    }
+
+    /// Accumulate this queue's per-priority counts into `out` (index =
+    /// priority; `out` grows as needed and is NOT cleared — callers sum
+    /// across queues).
+    pub(crate) fn add_counts_into(&self, out: &mut Vec<usize>) {
+        if self.buckets.len() > out.len() {
+            out.resize(self.buckets.len(), 0);
+        }
+        for (prio, bucket) in self.buckets.iter().enumerate() {
+            out[prio] += bucket.len();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapper::DispatchInfo;
+
+    fn qt(ticket: u64, prio: u8) -> QueuedTicket {
+        QueuedTicket {
+            ticket,
+            info: DispatchInfo {
+                priority: prio,
+                ..DispatchInfo::untyped(1)
+            },
+        }
+    }
+
+    #[test]
+    fn single_priority_is_plain_fifo() {
+        let mut q = PrioQueue::new();
+        for t in 0..5u64 {
+            q.push(qt(t, 0));
+        }
+        assert_eq!(q.peek_best().unwrap().ticket, 0);
+        for expect in 0..5u64 {
+            assert_eq!(q.take_best().unwrap().ticket, expect);
+        }
+        assert!(q.take_best().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn higher_priority_dequeues_first_fifo_within_level() {
+        let mut q = PrioQueue::new();
+        q.push(qt(0, 0));
+        q.push(qt(1, 2));
+        q.push(qt(2, 1));
+        q.push(qt(3, 2));
+        q.push(qt(4, 0));
+        let order: Vec<u64> = std::iter::from_fn(|| q.take_best().map(|i| i.ticket)).collect();
+        assert_eq!(order, vec![1, 3, 2, 0, 4]);
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn peek_matches_take() {
+        let mut q = PrioQueue::new();
+        q.push(qt(7, 0));
+        q.push(qt(8, 3));
+        let peeked = q.peek_best().unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.take_best().unwrap().ticket, peeked.ticket);
+        assert_eq!(peeked.ticket, 8);
+    }
+
+    #[test]
+    fn counts_accumulate_across_queues() {
+        let mut a = PrioQueue::new();
+        a.push(qt(0, 0));
+        a.push(qt(1, 2));
+        let mut b = PrioQueue::new();
+        b.push(qt(2, 0));
+        let mut out = Vec::new();
+        a.add_counts_into(&mut out);
+        b.add_counts_into(&mut out);
+        assert_eq!(out, vec![2, 0, 1]);
+        a.take_best();
+        out.clear();
+        a.add_counts_into(&mut out);
+        assert_eq!(out, vec![1, 0, 0], "take removed the priority-2 head");
+    }
+}

@@ -142,12 +142,14 @@ impl<T> SharedDispatcher<T> {
         self.cv.notify_all();
     }
 
-    /// Per-core backlog snapshot into `out`; returns the total queued.
-    /// For the live mapper thread, which builds the tick-time
+    /// Backlog snapshot into caller buffers (per-core depths and
+    /// per-priority counts); returns the total queued. For the live
+    /// mapper thread, which builds the tick-time
     /// [`crate::sched::SchedCtx`] from it (same contract as the sim).
-    pub fn queue_view_into(&self, out: &mut Vec<usize>) -> usize {
+    pub fn queue_view_into(&self, depths: &mut Vec<usize>, prios: &mut Vec<usize>) -> usize {
         let g = self.inner.lock().expect("sched queue poisoned");
-        g.dispatcher.depths_into(out);
+        g.dispatcher.depths_into(depths);
+        g.dispatcher.prios_into(prios);
         g.dispatcher.queued()
     }
 
@@ -189,7 +191,7 @@ mod tests {
     }
 
     fn push_admitted(q: &SharedDispatcher<usize>, v: usize, aff: &Mutex<AffinityTable>) {
-        assert!(!q.push(v, DispatchInfo { keywords: 1 }, aff).is_shed());
+        assert!(!q.push(v, DispatchInfo::untyped(1), aff).is_shed());
     }
 
     #[test]
@@ -255,7 +257,7 @@ mod tests {
             7,
         );
         let aff = Mutex::new(AffinityTable::round_robin(topo));
-        let outcome = q.push(42, DispatchInfo { keywords: 3 }, &aff);
+        let outcome = q.push(42, DispatchInfo::untyped(3), &aff);
         match outcome {
             AdmissionOutcome::Shed { payload, .. } => assert_eq!(payload, 42),
             AdmissionOutcome::Admitted => panic!("negative deadline must shed"),

@@ -70,14 +70,16 @@ impl QueueDiscipline for WorkSteal {
         if let Some(hit) = self.local.next(idle, policy, &mut *ctx) {
             return Some(hit);
         }
-        // All idle cores are out of local work: steal the oldest request
-        // from the most backlogged queue, if the policy lets the thief run
-        // it. A veto leaves the request for its home core — never lost.
+        // All idle cores are out of local work: steal the next-served
+        // request (highest priority, oldest within it — plain oldest for
+        // single-class runs) from the most backlogged queue, if the policy
+        // lets the thief run it. A veto leaves the request for its home
+        // core — never lost.
         for &thief in idle {
             let victim = self.victim()?;
-            let head = self.local.front(victim).expect("victim has work");
+            let head = self.local.peek_best(victim).expect("victim has work");
             if policy.choose_core(&[thief], head.info, &mut *ctx).is_some() {
-                self.local.pop_front(victim);
+                self.local.take_best(victim);
                 self.steals += 1;
                 return Some((head, thief));
             }
@@ -95,6 +97,10 @@ impl QueueDiscipline for WorkSteal {
 
     fn depths_into(&self, out: &mut Vec<usize>) {
         self.local.depths_into(out);
+    }
+
+    fn prios_into(&self, out: &mut Vec<usize>) {
+        self.local.prios_into(out);
     }
 }
 
@@ -117,7 +123,7 @@ mod tests {
         q.enqueue(
             QueuedTicket {
                 ticket: t,
-                info: DispatchInfo { keywords: kw },
+                info: DispatchInfo::untyped(kw),
             },
             p,
             &mut ctx(aff, rng),

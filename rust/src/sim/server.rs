@@ -9,9 +9,9 @@ use super::event::{EventKind, EventQueue};
 use super::service::{ServiceDemand, ServiceSampler};
 use crate::config::SimConfig;
 use crate::ipc::{RequestTag, StatsRecord};
-use crate::loadgen::{ArrivalProcess, QueryGen, Workload};
+use crate::loadgen::{ArrivalProcess, ClassId, Workload, WorkloadMix};
 use crate::mapper::{DispatchInfo, Policy, Shedding};
-use crate::metrics::LatencyHistogram;
+use crate::metrics::{ClassStats, LatencyHistogram};
 use crate::platform::{AffinityTable, CoreId, CoreKind, EnergyMeters};
 use crate::sched::{AdmissionOutcome, Dispatcher, SchedCtx};
 use crate::util::Rng;
@@ -19,6 +19,8 @@ use crate::util::Rng;
 /// Per-request outcome record.
 #[derive(Clone, Copy, Debug)]
 pub struct RequestRecord {
+    /// Service class of the request.
+    pub class: ClassId,
     /// Keyword count.
     pub keywords: usize,
     /// Arrival time, ms.
@@ -67,7 +69,8 @@ impl RequestRecord {
 /// queues, so they appear in no latency statistic — `latency`/`p90_ms`
 /// describe *admitted* requests only, which is exactly what an admission
 /// controller promises to protect. `completed + shed` always equals the
-/// offered workload (conservation).
+/// offered workload (conservation) — globally and per class
+/// ([`SimOutput::per_class`]).
 #[derive(Clone, Debug)]
 pub struct SimOutput {
     /// End-to-end latency histogram (post-warmup admitted requests).
@@ -82,6 +85,10 @@ pub struct SimOutput {
     pub completed: usize,
     /// Requests refused at admission (load shedding).
     pub shed: usize,
+    /// Per-service-class outcomes, in class-registry order (one entry —
+    /// the implicit default class — for untyped configs). Latency/SLO
+    /// statistics follow the same post-warmup convention as `latency`.
+    pub per_class: Vec<ClassStats>,
     /// Thread migrations applied.
     pub migrations: usize,
     /// Policy name.
@@ -156,6 +163,14 @@ impl SimOutput {
     pub fn energy_per_request_j(&self) -> f64 {
         self.energy.total_j() / self.completed.max(1) as f64
     }
+
+    /// Per-class outcomes of one class by name (norm_token-matched).
+    pub fn class_stats(&self, name: &str) -> Option<&ClassStats> {
+        let key = crate::util::norm_token(name);
+        self.per_class
+            .iter()
+            .find(|c| crate::util::norm_token(&c.name) == key)
+    }
 }
 
 /// State of one simulated core.
@@ -196,13 +211,14 @@ impl Simulation {
         }
     }
 
-    /// Run with a freshly generated workload.
+    /// Run with a freshly generated workload (classified per the config's
+    /// class registry).
     pub fn run(self) -> SimOutput {
         let mut rng = Rng::new(self.cfg.seed);
-        let gen = QueryGen::new(self.cfg.keyword_mix, 0);
+        let mix = WorkloadMix::new(&self.cfg.class_registry(), 0);
         let workload = Workload::generate(
             ArrivalProcess::Poisson { qps: self.cfg.qps },
-            &gen,
+            &mix,
             self.cfg.num_requests,
             false,
             &mut rng.fork(),
@@ -215,14 +231,28 @@ impl Simulation {
     pub fn run_workload(self, workload: &Workload) -> SimOutput {
         let cfg = &self.cfg;
         let topology = cfg.topology();
-        let mut rng = Rng::new(cfg.seed ^ 0xD15_BA7C); // dispatch/noise stream
-        let mut policy: Box<dyn Policy> = cfg.policy.build(&topology);
-        if let Some(deadline_ms) = cfg.shed_deadline_ms {
-            // First-class admission control: wrap the configured policy in
-            // the projected-delay shedder. An infinite deadline admits
-            // everything and leaves seeded runs bit-for-bit unchanged.
-            policy = Box::new(Shedding::new(policy, deadline_ms));
+        let registry = cfg.class_registry();
+        // Dispatch priority per class, looked up on every arrival.
+        let priorities = registry.priorities();
+        // Replayed traces must reference classes the config declares —
+        // fail loudly up front instead of indexing out of bounds mid-run.
+        if let Some(max) = workload.requests.iter().map(|r| r.class.idx()).max() {
+            assert!(
+                max < registry.len(),
+                "workload references class id {max} but the config declares \
+                 only {} class(es) — load the trace with its matching \
+                 [[workload.class]] / --classes declaration",
+                registry.len()
+            );
         }
+        let mut rng = Rng::new(cfg.seed ^ 0xD15_BA7C); // dispatch/noise stream
+        // First-class admission control: wrap the configured policy in the
+        // projected-delay shedder when a deadline (global or per-class) is
+        // declared. Each class sheds against its own deadline_ms (priority
+        // shedding). An infinite deadline admits everything and leaves
+        // seeded runs bit-for-bit unchanged.
+        let mut policy: Box<dyn Policy> =
+            Shedding::wrap(cfg.policy.build(&topology), cfg.shed_deadline_ms, &registry);
         let mut aff = AffinityTable::round_robin(topology.clone());
         // Tick-time ctx rng, separate from the dispatch/noise stream (same
         // convention as the live mapper thread): a policy that draws in
@@ -260,8 +290,14 @@ impl Simulation {
         let mut dispatcher: Dispatcher<usize> =
             Dispatcher::new(cfg.discipline.build(cores.len()));
         let mut depth_scratch: Vec<usize> = Vec::new();
+        let mut prio_scratch: Vec<usize> = Vec::new();
         let mut latency = LatencyHistogram::new();
         let mut per_request: Vec<RequestRecord> = Vec::with_capacity(workload.len());
+        let mut per_class: Vec<ClassStats> = registry
+            .specs()
+            .iter()
+            .map(|s| ClassStats::new(s.name.clone(), s.priority, s.deadline_ms))
+            .collect();
         let mut completed = 0usize;
         let mut shed = 0usize;
         let mut migrations = 0usize;
@@ -340,14 +376,20 @@ impl Simulation {
             now = ev.time;
             match ev.kind {
                 EventKind::Arrival(widx) => {
+                    let req = &workload.requests[widx];
                     let info = DispatchInfo {
-                        keywords: workload.requests[widx].keywords,
+                        keywords: req.keywords,
+                        class: req.class,
+                        priority: priorities[req.class.idx()],
                     };
                     // Lifecycle: enqueue → admit (inside the dispatcher) →
                     // queue. A shed request never touches the queues.
                     match dispatcher.enqueue(widx, info, policy.as_mut(), &aff, &mut rng, now) {
                         AdmissionOutcome::Admitted => {}
-                        AdmissionOutcome::Shed { .. } => shed += 1,
+                        AdmissionOutcome::Shed { .. } => {
+                            shed += 1;
+                            per_class[req.class.idx()].record_shed();
+                        }
                     }
                     try_dispatch!();
                 }
@@ -362,6 +404,7 @@ impl Simulation {
                     let kind = core.kind;
                     let req = &workload.requests[run.widx];
                     let record = RequestRecord {
+                        class: req.class,
                         keywords: req.keywords,
                         arrived_ms: run.arrived_ms,
                         started_ms: run.started_ms,
@@ -370,9 +413,12 @@ impl Simulation {
                         final_kind: kind,
                         migrated: run.migrated,
                     };
-                    if per_request.len() >= cfg.warmup_requests {
+                    let measured = per_request.len() >= cfg.warmup_requests;
+                    if measured {
                         latency.record(record.latency_ms());
                     }
+                    per_class[req.class.idx()]
+                        .record_completion(record.latency_ms(), measured);
                     per_request.push(record);
                     completed += 1;
                     last_completion_ms = now;
@@ -393,7 +439,8 @@ impl Simulation {
                     }
                     // Tick with full ctx: backlog snapshot, affinity, clock.
                     let migs = {
-                        let view = dispatcher.queue_view(&mut depth_scratch);
+                        let view =
+                            dispatcher.queue_view(&mut depth_scratch, &mut prio_scratch);
                         let mut ctx = SchedCtx {
                             aff: &aff,
                             rng: &mut tick_rng,
@@ -439,6 +486,11 @@ impl Simulation {
 
         debug_assert_eq!(completed + shed, workload.len(), "requests lost");
         debug_assert_eq!(dispatcher.queued(), 0, "requests stranded in queues");
+        debug_assert_eq!(
+            per_class.iter().map(ClassStats::offered).sum::<usize>(),
+            workload.len(),
+            "per-class conservation"
+        );
         SimOutput {
             latency,
             per_request,
@@ -446,6 +498,7 @@ impl Simulation {
             duration_ms: last_completion_ms,
             completed,
             shed,
+            per_class,
             migrations,
             policy: policy.name(),
             discipline: dispatcher.discipline_name().to_string(),
@@ -769,6 +822,105 @@ mod tests {
         assert_eq!(out.goodput_qps(), 0.0);
         assert_eq!(out.shed_rate(), 1.0);
         assert!(out.per_request.is_empty());
+    }
+
+    #[test]
+    fn untyped_run_has_single_default_class_stats() {
+        let out = Simulation::new(base(PolicyKind::LinuxRandom).with_requests(500)).run();
+        assert_eq!(out.per_class.len(), 1);
+        let cs = &out.per_class[0];
+        assert_eq!(cs.name, "default");
+        assert_eq!(cs.completed, 500);
+        assert_eq!(cs.shed, 0);
+        assert_eq!(cs.latency.count(), (500 - out.warmup) as u64);
+        assert_eq!(cs.slo_attainment(), None, "no SLO declared");
+        assert!(out.class_stats("Default").is_some(), "norm_token lookup");
+        assert!(out.class_stats("nope").is_none());
+    }
+
+    #[test]
+    fn explicit_single_class_reproduces_implicit_default_bit_for_bit() {
+        use crate::loadgen::ClassSpec;
+        // Declaring ONE class with the same mix (and no deadline) must take
+        // the typed code path yet replay the untyped seeded run exactly.
+        let untyped = Simulation::new(base(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        })
+        .with_requests(2_000))
+        .run();
+        let typed = Simulation::new(
+            base(PolicyKind::HurryUp {
+                sampling_ms: 25.0,
+                threshold_ms: 50.0,
+            })
+            .with_requests(2_000)
+            .with_classes(vec![ClassSpec::new("everything", KeywordMix::Paper)]),
+        )
+        .run();
+        assert_eq!(untyped.per_request.len(), typed.per_request.len());
+        for (a, b) in untyped.per_request.iter().zip(&typed.per_request) {
+            assert_eq!(a.arrived_ms, b.arrived_ms);
+            assert_eq!(a.started_ms, b.started_ms);
+            assert_eq!(a.completed_ms, b.completed_ms);
+            assert_eq!(a.final_kind, b.final_kind);
+            assert_eq!(a.migrated, b.migrated);
+        }
+        assert_eq!(untyped.migrations, typed.migrations);
+        assert_eq!(untyped.duration_ms, typed.duration_ms);
+        assert_eq!(typed.per_class[0].name, "everything");
+    }
+
+    #[test]
+    fn class_deadlines_enable_priority_shedding() {
+        use crate::loadgen::ClassSpec;
+        // Interactive (priority 1, 500 ms SLO) + batch (priority 0, heavy
+        // mix, 2.5 s SLO) at overload: batch sheds harder and tails worse.
+        let classes = vec![
+            ClassSpec::new("interactive", KeywordMix::Paper)
+                .with_share(0.6)
+                .with_deadline(500.0)
+                .with_priority(1),
+            ClassSpec::new("batch", KeywordMix::Uniform(6, 14))
+                .with_share(0.4)
+                .with_deadline(2_500.0),
+        ];
+        let out = Simulation::new(
+            base(PolicyKind::HurryUp {
+                sampling_ms: 25.0,
+                threshold_ms: 50.0,
+            })
+            .with_qps(40.0)
+            .with_requests(3_000)
+            .with_classes(classes),
+        )
+        .run();
+        assert_eq!(out.per_class.len(), 2);
+        let inter = out.class_stats("interactive").unwrap().clone();
+        let batch = out.class_stats("batch").unwrap().clone();
+        // Conservation, globally and per class.
+        assert_eq!(out.completed + out.shed, 3_000);
+        assert_eq!(inter.offered() + batch.offered(), 3_000);
+        assert!(batch.shed > 0, "overload must shed batch traffic");
+        assert!(
+            inter.shed_rate() < batch.shed_rate(),
+            "priority shedding protects the interactive class: {} vs {}",
+            inter.shed_rate(),
+            batch.shed_rate()
+        );
+        assert!(
+            inter.latency.percentile(0.99) < batch.latency.percentile(0.99),
+            "interactive p99 {} must beat batch p99 {}",
+            inter.latency.percentile(0.99),
+            batch.latency.percentile(0.99)
+        );
+        // Records carry the class tag consistently.
+        let tagged: usize = out
+            .per_request
+            .iter()
+            .filter(|r| r.class == crate::loadgen::ClassId(0))
+            .count();
+        assert_eq!(tagged, inter.completed);
     }
 
     #[test]

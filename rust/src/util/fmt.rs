@@ -111,6 +111,26 @@ pub fn pct(v: f64) -> String {
     format!("{:.1}%", v * 100.0)
 }
 
+/// Format milliseconds, rendering `-` when the backing sample set is
+/// empty (`count == 0`) — the zero-completions convention of class-aware
+/// tables and CSV (never NaN).
+pub fn ms_or_dash(v: f64, count: u64) -> String {
+    if count == 0 {
+        "-".into()
+    } else {
+        ms(v)
+    }
+}
+
+/// Format an optional ratio as a percentage, `-` when absent (e.g. SLO
+/// attainment of a class with no declared SLO).
+pub fn pct_or_dash(v: Option<f64>) -> String {
+    match v {
+        Some(v) => pct(v),
+        None => "-".into(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,5 +172,13 @@ mod tests {
     #[test]
     fn pct_formatting() {
         assert_eq!(pct(0.395), "39.5%");
+    }
+
+    #[test]
+    fn dash_formatting_for_empty_samples() {
+        assert_eq!(ms_or_dash(123.0, 4), "123");
+        assert_eq!(ms_or_dash(f64::NAN, 0), "-", "empty sets never print NaN");
+        assert_eq!(pct_or_dash(Some(0.5)), "50.0%");
+        assert_eq!(pct_or_dash(None), "-");
     }
 }

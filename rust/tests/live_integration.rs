@@ -95,6 +95,40 @@ fn negative_shed_deadline_refuses_every_request() {
 }
 
 #[test]
+fn typed_classes_reported_end_to_end() {
+    use hurryup::loadgen::ClassSpec;
+    // Two declared classes on real threads: every served request carries
+    // its class tag, per-class stats partition the run, and conservation
+    // holds per class (offered == completed + shed).
+    let cfg = LiveConfig {
+        classes: vec![
+            ClassSpec::new("interactive", KeywordMix::Paper)
+                .with_share(0.7)
+                .with_priority(1),
+            ClassSpec::new("batch", KeywordMix::Uniform(4, 8)).with_share(0.3),
+        ],
+        ..base_cfg()
+    };
+    let report = LiveServer::new(cfg, small_index()).run().unwrap();
+    assert_eq!(report.per_request.len(), 120);
+    assert_eq!(report.per_class.len(), 2);
+    let inter = report.class_stats("Interactive").expect("norm_token lookup");
+    let batch = report.class_stats("batch").unwrap();
+    assert_eq!(inter.offered() + batch.offered(), 120);
+    assert_eq!(inter.shed + batch.shed, report.shed);
+    assert!(inter.completed > batch.completed, "0.7 share dominates");
+    for r in &report.per_request {
+        assert!(r.class.idx() < 2, "every record carries a valid class tag");
+    }
+    let tagged_inter = report
+        .per_request
+        .iter()
+        .filter(|r| r.class.idx() == 0)
+        .count();
+    assert_eq!(tagged_inter, inter.completed);
+}
+
+#[test]
 fn static_mapping_never_migrates() {
     let cfg = LiveConfig {
         hurryup: None,

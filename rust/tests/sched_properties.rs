@@ -1,12 +1,15 @@
 //! Property tests over the scheduling layer (`sched`): conservation (no
-//! request lost or duplicated — with and without admission control),
-//! per-queue FIFO order under every discipline, shed requests never
-//! stranding payloads, and the refactor's anchor guarantees — a
-//! centralized-FCFS simulation is the pre-`sched` simulator bit for bit on
-//! seeded runs, through the `SchedCtx` API, and an infinite shed deadline
-//! reproduces the no-admission output exactly.
+//! request lost or duplicated — with and without admission control,
+//! globally and per service class), per-queue FIFO order under every
+//! discipline, shed requests never stranding payloads, and the refactor's
+//! anchor guarantees — a centralized-FCFS simulation is the pre-`sched`
+//! simulator bit for bit on seeded runs, through the `SchedCtx` API; an
+//! infinite shed deadline reproduces the no-admission output exactly; and
+//! the single-default-class typed-request path reproduces the untyped
+//! seeded output exactly.
 
-use hurryup::config::SimConfig;
+use hurryup::config::{KeywordMix, SimConfig};
+use hurryup::loadgen::ClassSpec;
 use hurryup::mapper::{
     AdmissionDecision, DispatchInfo, Policy, PolicyKind, SchedCtx, ShedReason,
 };
@@ -101,7 +104,7 @@ fn prop_no_request_lost_or_duplicated() {
                 if next_in < total && rng.chance(0.6) {
                     let outcome = d.enqueue(
                         next_in,
-                        DispatchInfo { keywords: rng.range(1, 8) },
+                        DispatchInfo::untyped(rng.range(1, 8)),
                         policy.as_mut(),
                         &aff,
                         rng,
@@ -149,7 +152,7 @@ fn prop_conservation_holds_under_shedding() {
                 if offered < total && rng.chance(0.6) {
                     match d.enqueue(
                         offered,
-                        DispatchInfo { keywords: rng.range(1, 8) },
+                        DispatchInfo::untyped(rng.range(1, 8)),
                         &mut policy,
                         &aff,
                         rng,
@@ -193,7 +196,7 @@ fn prop_centralized_is_globally_fifo() {
         let n = rng.range(1, 60);
         for i in 0..n {
             let outcome =
-                d.enqueue(i, DispatchInfo { keywords: 2 }, policy.as_mut(), &aff, rng, 0.0);
+                d.enqueue(i, DispatchInfo::untyped(2), policy.as_mut(), &aff, rng, 0.0);
             assert!(!outcome.is_shed());
         }
         let mut got = Vec::new();
@@ -219,7 +222,7 @@ fn prop_per_core_is_fifo_per_queue() {
         let n = rng.range(1, 80);
         for i in 0..n {
             let outcome =
-                d.enqueue(i, DispatchInfo { keywords: 2 }, policy.as_mut(), &aff, rng, 0.0);
+                d.enqueue(i, DispatchInfo::untyped(2), policy.as_mut(), &aff, rng, 0.0);
             assert!(!outcome.is_shed());
         }
         let mut last_on_core = vec![None::<usize>; 6];
@@ -245,7 +248,7 @@ fn steal_order_is_oldest_first() {
     for i in 0..20usize {
         // PinFirst homes every request on core 0.
         let outcome =
-            d.enqueue(i, DispatchInfo { keywords: 1 }, &mut policy, &aff, &mut rng, 0.0);
+            d.enqueue(i, DispatchInfo::untyped(1), &mut policy, &aff, &mut rng, 0.0);
         assert!(!outcome.is_shed());
     }
     assert_eq!(d.depth(CoreId(0)), 20);
@@ -407,6 +410,100 @@ fn infinite_shed_deadline_reproduces_no_admission_output() {
     assert_eq!(plain.migrations, wrapped.migrations);
     assert_eq!(plain.duration_ms, wrapped.duration_ms);
     assert!((plain.energy.total_j() - wrapped.energy.total_j()).abs() < 1e-12);
+}
+
+/// Per-class conservation under priority shedding: for EVERY class,
+/// offered == completed + shed — across disciplines, overloads and
+/// deadlines. The shed/priority machinery may redistribute damage between
+/// classes but can never lose or invent a request.
+#[test]
+fn prop_per_class_conservation_under_priority_shedding() {
+    prop::check(10, |rng: &mut Rng, _i| {
+        let kind = *rng.choose(&DisciplineKind::all());
+        let n = rng.range(400, 1_000);
+        let classes = vec![
+            ClassSpec::new("interactive", KeywordMix::Paper)
+                .with_share(rng.f64_range(0.3, 0.8))
+                .with_deadline(rng.f64_range(200.0, 800.0))
+                .with_priority(1),
+            ClassSpec::new("batch", KeywordMix::Uniform(5, 12))
+                .with_share(rng.f64_range(0.2, 0.7))
+                .with_deadline(rng.f64_range(1_000.0, 4_000.0)),
+        ];
+        let cfg = SimConfig::paper_default(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        })
+        .with_qps(rng.f64_range(15.0, 50.0))
+        .with_requests(n)
+        .with_seed(rng.next_u64())
+        .with_discipline(kind)
+        .with_classes(classes);
+        let out = Simulation::new(cfg).run();
+        assert_eq!(out.completed + out.shed, n, "{kind:?}: global conservation");
+        assert_eq!(out.per_class.len(), 2);
+        let mut offered_sum = 0;
+        for cs in &out.per_class {
+            assert_eq!(
+                cs.offered(),
+                cs.completed + cs.shed,
+                "{kind:?}/{}: per-class conservation",
+                cs.name
+            );
+            offered_sum += cs.offered();
+        }
+        assert_eq!(offered_sum, n, "{kind:?}: classes partition the workload");
+        assert_eq!(
+            out.per_class.iter().map(|c| c.shed).sum::<usize>(),
+            out.shed,
+            "class shed counts sum to the global count"
+        );
+        assert_eq!(
+            out.per_class.iter().map(|c| c.completed).sum::<usize>(),
+            out.completed
+        );
+    });
+}
+
+/// The typed-request anchor: a run with ONE declared class (the default
+/// mix, no deadline, priority 0) takes the full typed path — class
+/// registry, class-tagged `DispatchInfo`, priority-aware queues — yet
+/// reproduces the implicit-default (PR 2 seeded) output bit for bit.
+/// Chained with `centralized_reproduces_pre_refactor_seeded_output` and
+/// `infinite_shed_deadline_reproduces_no_admission_output` (same config,
+/// seed 11) this extends the anchor chain back to the pre-`sched`
+/// simulator.
+#[test]
+fn single_default_class_reproduces_untyped_seeded_output() {
+    let untyped = || {
+        SimConfig::paper_default(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        })
+        .with_qps(30.0)
+        .with_requests(3_000)
+        .with_seed(11)
+    };
+    let a = Simulation::new(untyped()).run();
+    let b = Simulation::new(
+        untyped().with_classes(vec![ClassSpec::new("default", KeywordMix::Paper)]),
+    )
+    .run();
+    assert_eq!(a.per_request.len(), b.per_request.len());
+    for (x, y) in a.per_request.iter().zip(&b.per_request) {
+        assert_eq!(x.arrived_ms, y.arrived_ms);
+        assert_eq!(x.started_ms, y.started_ms);
+        assert_eq!(x.completed_ms, y.completed_ms);
+        assert_eq!(x.first_kind, y.first_kind);
+        assert_eq!(x.final_kind, y.final_kind);
+        assert_eq!(x.migrated, y.migrated);
+        assert_eq!(x.class, y.class, "everything lands in the default class");
+    }
+    assert_eq!(a.migrations, b.migrations);
+    assert_eq!(a.duration_ms, b.duration_ms);
+    assert!((a.energy.total_j() - b.energy.total_j()).abs() < 1e-12);
+    assert_eq!(a.shed, 0);
+    assert_eq!(b.shed, 0, "no deadline declared: admission stays off");
 }
 
 /// Seeded determinism for the decentralized disciplines too.
