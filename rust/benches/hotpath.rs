@@ -6,6 +6,7 @@
 //!   sim_event_loop     DES throughput (requests/s) at the 30 QPS point
 //!   mapper_tick        Algorithm 1 decision cost with a loaded table
 //!   queue_discipline   sched-layer enqueue+dispatch cost per discipline
+//!   order              OrderPolicy push/take_best per order at 10k queued
 //!   stats_codec        IPC record encode+parse
 //!   bm25_block_rust    one 256×24 block scored in Rust
 //!   xla_block          one block through the PJRT artifact (if built)
@@ -21,7 +22,9 @@ use hurryup::ipc::{RequestTag, StatsRecord};
 use hurryup::mapper::{DispatchInfo, HurryUp, HurryUpParams, Policy, PolicyKind, SchedCtx};
 use hurryup::metrics::LatencyHistogram;
 use hurryup::platform::{AffinityTable, CoreId, ThreadId, Topology};
-use hurryup::sched::{DisciplineKind, Dispatcher, QueueView};
+use hurryup::sched::{
+    ClassOrdering, DisciplineKind, Dispatcher, OrderKind, OrderSpec, QueueView, QueuedTicket,
+};
 use hurryup::search::engine::BlockScorer;
 use hurryup::search::{Bm25Params, Index, Query, RustScorer, ScoreBlock, SearchEngine, TopK};
 use hurryup::sim::Simulation;
@@ -104,6 +107,7 @@ fn main() {
                 tid: ThreadId(t),
                 rid: RequestTag::from_seq(t as u64),
                 ts_ms: 1000 + t as u64,
+                class: None,
             });
         }
         let mut tick_rng = Rng::new(1);
@@ -156,12 +160,51 @@ fn main() {
         }
     }
 
+    // --- order layer: OrderPolicy push/take_best at a 10k standing queue ---
+    // Steady-state cost of the intra-queue ordering decision alone (no
+    // discipline/policy overhead): one push + one take per iteration with
+    // 10 000 requests queued — strict is the O(1) bucket baseline the DRR
+    // scan (wfq) and heap (edf) are read against.
+    {
+        let spec = |kind| OrderSpec {
+            kind,
+            classes: vec![
+                ClassOrdering { weight: 3.0, deadline_ms: Some(500.0) },
+                ClassOrdering { weight: 1.0, deadline_ms: Some(1_500.0) },
+            ],
+        };
+        for kind in OrderKind::all() {
+            let mut q = spec(kind).build();
+            let item = |t: u64| QueuedTicket {
+                ticket: t,
+                info: DispatchInfo {
+                    class: hurryup::loadgen::ClassId((t % 2) as u16),
+                    priority: 1 - (t % 2) as u8,
+                    arrive_ms: t as f64,
+                    ..DispatchInfo::untyped(3)
+                },
+            };
+            for t in 0..10_000u64 {
+                q.push(item(t));
+            }
+            let mut t = 10_000u64;
+            let (iters, secs) = measure(300, || {
+                q.push(item(black_box(t)));
+                t += 1;
+                black_box(q.take_best());
+            });
+            assert_eq!(q.len(), 10_000, "steady state preserved");
+            report(&format!("order_{}", kind.label()), "ops", 2.0, iters, secs);
+        }
+    }
+
     // --- stats codec ---
     {
         let rec = StatsRecord {
             tid: ThreadId(77),
             rid: RequestTag::from_seq(123_456),
             ts_ms: 1_498_060_927_953,
+            class: None,
         };
         let (iters, secs) = measure(300, || {
             let line = black_box(&rec).encode();

@@ -8,7 +8,7 @@ use super::{KeywordMix, SimConfig};
 use crate::error::{Error, Result};
 use crate::loadgen::{parse_mix_token, ClassSpec};
 use crate::mapper::PolicyKind;
-use crate::sched::DisciplineKind;
+use crate::sched::{DisciplineKind, OrderKind};
 
 /// Read and parse a config file into a validated `SimConfig`.
 pub fn load_sim_config(path: impl AsRef<Path>) -> Result<SimConfig> {
@@ -27,6 +27,7 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
             "big_cores",
             "little_cores",
             "discipline",
+            "order",
             "shed_deadline_ms",
             "qps",
             "num_requests",
@@ -49,7 +50,8 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
         ];
         // Per-class keys of `[[workload.class]]` tables, flattened as
         // `workload.class.<index>.<field>`.
-        const CLASS_FIELDS: &[&str] = &["name", "share", "mix", "deadline_ms", "priority"];
+        const CLASS_FIELDS: &[&str] =
+            &["name", "share", "mix", "deadline_ms", "priority", "weight"];
         let class_field = key
             .strip_prefix("workload.class.")
             .and_then(|rest| rest.split_once('.'))
@@ -81,6 +83,10 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
     if let Some(v) = doc.get("discipline").and_then(Value::as_str) {
         cfg.discipline = DisciplineKind::parse(v)
             .ok_or_else(|| Error::config(format!("unknown discipline `{v}`")))?;
+    }
+    if let Some(v) = doc.get("order").and_then(Value::as_str) {
+        cfg.order = OrderKind::parse(v)
+            .ok_or_else(|| Error::config(format!("unknown order `{v}`")))?;
     }
     if let Some(v) = get_f64(&doc, "shed_deadline_ms")? {
         cfg.shed_deadline_ms = Some(v);
@@ -166,6 +172,9 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
             spec.priority = u8::try_from(v).map_err(|_| {
                 Error::config(format!("class `{name}`: priority must fit 0..=255"))
             })?;
+        }
+        if let Some(v) = get_f64(&doc, &field("weight"))? {
+            spec.weight = v;
         }
         if let Some(v) = doc.get(&field("mix")) {
             let tok = v.as_str().ok_or_else(|| {
@@ -283,6 +292,34 @@ mod tests {
     }
 
     #[test]
+    fn order_parsed_and_validated() {
+        let cfg = sim_config_from_str("order = \"wfq\"").unwrap();
+        assert_eq!(cfg.order, OrderKind::Wfq);
+        let cfg = sim_config_from_str("order = \"drr\"").unwrap();
+        assert_eq!(cfg.order, OrderKind::Wfq);
+        let cfg = sim_config_from_str("order = \"deadline\"").unwrap();
+        assert_eq!(cfg.order, OrderKind::Edf);
+        assert_eq!(
+            sim_config_from_str("qps = 5.0").unwrap().order,
+            OrderKind::Strict,
+            "strict is the default order"
+        );
+        let e = sim_config_from_str("order = \"lifo\"").unwrap_err();
+        assert!(e.to_string().contains("lifo"), "{e}");
+    }
+
+    #[test]
+    fn class_weight_parsed() {
+        let cfg = sim_config_from_str(
+            "[[workload.class]]\nname = \"fg\"\nweight = 3.0\n\
+             [[workload.class]]\nname = \"bg\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.classes[0].weight, 3.0);
+        assert_eq!(cfg.classes[1].weight, 1.0, "weight defaults to 1");
+    }
+
+    #[test]
     fn noise_override_parsed() {
         let cfg = sim_config_from_str("[noise]\nsigma_little = 0.6").unwrap();
         let (b, l) = cfg.noise_override.unwrap();
@@ -345,7 +382,11 @@ mod tests {
         assert!(sim_config_from_str("[[workload.class]]\nshare = 1.0").is_err());
         // Unknown per-class key.
         assert!(
-            sim_config_from_str("[[workload.class]]\nname = \"a\"\nweight = 2").is_err()
+            sim_config_from_str("[[workload.class]]\nname = \"a\"\ncolour = 2").is_err()
+        );
+        // Non-positive weights fail registry validation.
+        assert!(
+            sim_config_from_str("[[workload.class]]\nname = \"a\"\nweight = 0.0").is_err()
         );
         // Duplicate names (norm_token-folded) rejected by validation.
         assert!(sim_config_from_str(

@@ -9,7 +9,7 @@ pub use file::load_sim_config;
 use crate::loadgen::{ClassRegistry, ClassSpec};
 use crate::mapper::PolicyKind;
 use crate::platform::{CoreKind, PowerModel, Topology};
-use crate::sched::DisciplineKind;
+use crate::sched::{DisciplineKind, OrderKind};
 
 pub use crate::mapper::HurryUpParams;
 
@@ -150,6 +150,11 @@ pub struct SimConfig {
     /// Queue discipline of the scheduling layer (default: the paper's
     /// single centralized FIFO).
     pub discipline: DisciplineKind,
+    /// Intra-queue dequeue order of the scheduling layer (default:
+    /// strict priority — the pre-order behaviour, bit-for-bit; `wfq`
+    /// shares dequeues by class weight, `edf` serves earliest class
+    /// deadline first).
+    pub order: OrderKind,
     /// Admission-control deadline, ms: when set, the configured policy is
     /// wrapped in [`crate::mapper::Shedding`], refusing requests whose
     /// projected queueing delay exceeds it. `None` (default) and
@@ -195,6 +200,7 @@ impl SimConfig {
             service: ServiceModel::paper_calibrated(),
             policy,
             discipline: DisciplineKind::Centralized,
+            order: OrderKind::Strict,
             shed_deadline_ms: None,
             qps: 30.0,
             num_requests: 100_000,
@@ -252,6 +258,12 @@ impl SimConfig {
     /// Builder: set the queue discipline.
     pub fn with_discipline(mut self, discipline: DisciplineKind) -> Self {
         self.discipline = discipline;
+        self
+    }
+
+    /// Builder: set the intra-queue dequeue order.
+    pub fn with_order(mut self, order: OrderKind) -> Self {
+        self.order = order;
         self
     }
 
@@ -369,6 +381,7 @@ mod tests {
             .with_topology(1, 0)
             .with_mix(KeywordMix::Fixed(3))
             .with_discipline(DisciplineKind::WorkSteal)
+            .with_order(OrderKind::Wfq)
             .with_shed_deadline(500.0);
         assert_eq!(c.qps, 20.0);
         assert_eq!(c.num_requests, 10);
@@ -376,6 +389,7 @@ mod tests {
         assert_eq!(c.topology().label(), "1B");
         assert_eq!(c.keyword_mix, KeywordMix::Fixed(3));
         assert_eq!(c.discipline, DisciplineKind::WorkSteal);
+        assert_eq!(c.order, OrderKind::Wfq);
         assert_eq!(c.shed_deadline_ms, Some(500.0));
     }
 
@@ -383,6 +397,7 @@ mod tests {
     fn paper_default_uses_centralized_queue_without_admission() {
         let c = SimConfig::paper_default(PolicyKind::LinuxRandom);
         assert_eq!(c.discipline, DisciplineKind::Centralized);
+        assert_eq!(c.order, OrderKind::Strict, "strict order is the default");
         assert_eq!(c.shed_deadline_ms, None);
     }
 

@@ -15,6 +15,7 @@
 //! | `disciplines` | queue-discipline × policy grid (`sched` layer)  |
 //! | `shedding`  | admission control: p90/goodput ± load shedding    |
 //! | `classes`   | service classes: interactive vs batch SLO/shed    |
+//! | `orders`    | dequeue orders: strict vs wfq vs edf, sim + live  |
 //!
 //! Scale: experiments default to a fast setting; set `HURRYUP_FULL=1` for
 //! the paper's 1×10⁵-request scale.
@@ -29,6 +30,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod orders;
 pub mod power_table;
 pub mod runner;
 pub mod shedding;
@@ -55,6 +57,7 @@ pub fn registry() -> Vec<(&'static str, ExperimentFn)> {
         ("disciplines", disciplines::run as ExperimentFn),
         ("shedding", shedding::run as ExperimentFn),
         ("classes", classes::run as ExperimentFn),
+        ("orders", orders::run as ExperimentFn),
     ]
 }
 

@@ -97,6 +97,7 @@ mod tests {
             tid: ThreadId(tid),
             rid: RequestTag::from_seq(seq),
             ts_ms: ts,
+            class: None,
         }
     }
 

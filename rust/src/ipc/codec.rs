@@ -1,10 +1,18 @@
-//! Wire format of the stats stream: `TID;RID;TIMESTAMP\n`.
+//! Wire format of the stats stream: `TID;RID;TIMESTAMP[;CLASS]\n`.
 //!
 //! `RID` is a 4-character printable tag, as in the paper's snapshot
 //! (`ixI.`, `1J.D`, `579[`, `Xrt@`, `qc80`): sequential request numbers
 //! encoded base-85-ish over a printable alphabet.
+//!
+//! `CLASS` is an optional trailing service-class id ([`ClassId`]) — an
+//! extension over the paper's three-field format so class-aware admission
+//! controllers can keep per-class service-time estimates from the same
+//! stream. Three-field lines (the paper's snapshot verbatim) still parse,
+//! with `class = None`; records without a class encode to exactly the
+//! paper's format.
 
 use crate::error::{Error, Result};
+use crate::loadgen::ClassId;
 use crate::platform::ThreadId;
 
 /// Printable alphabet for request tags (85 symbols, no `;` or whitespace —
@@ -51,15 +59,22 @@ pub struct StatsRecord {
     pub rid: RequestTag,
     /// Event timestamp in milliseconds.
     pub ts_ms: u64,
+    /// Service class of the request, when the producer stamps one (both
+    /// engines do; the paper's bare format carries none).
+    pub class: Option<ClassId>,
 }
 
 impl StatsRecord {
-    /// Encode as one wire line (without trailing newline).
+    /// Encode as one wire line (without trailing newline). Classless
+    /// records encode to the paper's exact three-field format.
     pub fn encode(&self) -> String {
-        format!("{};{};{}", self.tid.0, self.rid, self.ts_ms)
+        match self.class {
+            None => format!("{};{};{}", self.tid.0, self.rid, self.ts_ms),
+            Some(c) => format!("{};{};{};{}", self.tid.0, self.rid, self.ts_ms, c.0),
+        }
     }
 
-    /// Parse one wire line.
+    /// Parse one wire line (with or without the trailing class field).
     pub fn parse(line: &str) -> Result<StatsRecord> {
         let mut parts = line.trim_end().split(';');
         let tid = parts
@@ -76,6 +91,12 @@ impl StatsRecord {
             .next()
             .and_then(|s| s.parse::<u64>().ok())
             .ok_or_else(|| bad(line, "timestamp"))?;
+        let class = match parts.next() {
+            None => None,
+            Some(s) => Some(ClassId(
+                s.parse::<u16>().map_err(|_| bad(line, "class id"))?,
+            )),
+        };
         if parts.next().is_some() {
             return Err(bad(line, "trailing fields"));
         }
@@ -83,6 +104,7 @@ impl StatsRecord {
             tid: ThreadId(tid),
             rid,
             ts_ms,
+            class,
         })
     }
 }
@@ -146,9 +168,24 @@ mod tests {
             "1;abc;123",
             "1;abcd;notanum",
             "1;abcd;123;extra",
+            "1;abcd;123;-2",
+            "1;abcd;123;7;8",
         ] {
             assert!(StatsRecord::parse(line).is_err(), "{line:?}");
         }
+    }
+
+    #[test]
+    fn class_field_roundtrips_and_is_optional() {
+        let bare = StatsRecord::parse("77;1J.D;1498060927953").unwrap();
+        assert_eq!(bare.class, None);
+        assert_eq!(bare.encode(), "77;1J.D;1498060927953");
+        let tagged = StatsRecord {
+            class: Some(ClassId(3)),
+            ..bare
+        };
+        assert_eq!(tagged.encode(), "77;1J.D;1498060927953;3");
+        assert_eq!(StatsRecord::parse(&tagged.encode()).unwrap(), tagged);
     }
 
     #[test]
@@ -158,6 +195,11 @@ mod tests {
                 tid: ThreadId(rng.below(1000)),
                 rid: RequestTag::from_seq(rng.next_u64()),
                 ts_ms: rng.next_u64() % 10_u64.pow(13),
+                class: if rng.chance(0.5) {
+                    Some(ClassId(rng.below(100) as u16))
+                } else {
+                    None
+                },
             };
             let parsed = StatsRecord::parse(&rec.encode()).unwrap();
             assert_eq!(parsed, rec);

@@ -21,9 +21,12 @@
 //!   model, the Hurry-up mapper, the shared scheduling layer (`sched`: a
 //!   policy platform — every admission/placement/migration decision gets a
 //!   `SchedCtx` with the live backlog snapshot; pluggable queue
-//!   disciplines — centralized FCFS, per-core dFCFS, work stealing — and
-//!   first-class admission control / load shedding, driven identically by
-//!   both execution modes), the discrete-event simulator, the live
+//!   disciplines — centralized FCFS, per-core dFCFS, work stealing —
+//!   each composed with a pluggable intra-queue dequeue order —
+//!   strict priority, weighted fair queueing, earliest deadline first
+//!   (`sched::order`) — and first-class admission control / load
+//!   shedding, driven identically by both execution modes), the
+//!   discrete-event simulator, the live
 //!   thread-pool server (which executes the AOT artifact on the request
 //!   path via PJRT), the typed load generator (`loadgen`: every request
 //!   carries a service-class tag; classes declare traffic share, keyword
@@ -62,7 +65,7 @@ pub mod prelude {
     };
     pub use crate::mapper::{Migration, PolicyKind};
     pub use crate::metrics::{ClassStats, LatencyHistogram, Summary};
-    pub use crate::sched::DisciplineKind;
+    pub use crate::sched::{DisciplineKind, OrderKind};
     pub use crate::platform::{CoreId, CoreKind, PowerModel, ThreadId, Topology};
     pub use crate::search::{Corpus, Index, Query, SearchEngine};
     pub use crate::sim::{SimOutput, Simulation};

@@ -14,7 +14,10 @@ use crate::mapper::{DispatchInfo, HurryUp, HurryUpParams, Policy, PolicyKind, Sh
 use crate::metrics::{ClassStats, LatencyHistogram};
 use crate::platform::{AffinityTable, CoreKind, EnergyMeters, PowerModel, ThreadId, Topology};
 use crate::runtime::XlaScorer;
-use crate::sched::{AdmissionOutcome, DisciplineKind, QueueView, SchedCtx, SharedDispatcher};
+use crate::sched::{
+    AdmissionOutcome, DisciplineKind, OrderKind, OrderSpec, QueueView, SchedCtx,
+    SharedDispatcher,
+};
 use crate::search::engine::BlockScorer;
 use crate::search::{Bm25Params, Index, Query, RustScorer, SearchEngine};
 use crate::util::Rng;
@@ -31,6 +34,9 @@ pub struct LiveConfig {
     /// Queue discipline of the scheduling layer (default: the paper's
     /// single centralized FIFO; same selector as `SimConfig.discipline`).
     pub discipline: DisciplineKind,
+    /// Intra-queue dequeue order (default: strict priority; same selector
+    /// as `SimConfig.order`).
+    pub order: OrderKind,
     /// Admission-control deadline, ms: when set, the placement policy is
     /// wrapped in [`Shedding`] and requests whose projected queueing delay
     /// exceeds it are refused at `push` (same semantics as
@@ -92,6 +98,7 @@ impl Default for LiveConfig {
             little_cores: 4,
             hurryup: Some(HurryUpParams::default()),
             discipline: DisciplineKind::Centralized,
+            order: OrderKind::Strict,
             shed_deadline_ms: None,
             qps: 30.0,
             num_requests: 300,
@@ -159,6 +166,8 @@ pub struct LiveReport {
     pub backend: &'static str,
     /// Queue-discipline name (`sched` layer).
     pub discipline: &'static str,
+    /// Intra-queue dequeue-order name (`sched::order` layer).
+    pub order: &'static str,
     /// Total scoring passes across workers.
     pub total_passes: u64,
 }
@@ -256,7 +265,8 @@ impl LiveServer {
             Shedding::wrap(placement, cfg.shed_deadline_ms, &registry);
         let shared = Arc::new(SharedState {
             queue: SharedDispatcher::new(
-                cfg.discipline.build(n_threads),
+                cfg.discipline
+                    .build_ordered(n_threads, &OrderSpec::from_registry(cfg.order, &registry)),
                 placement,
                 cfg.seed ^ 0x5EED_D15C,
             ),
@@ -393,6 +403,7 @@ impl LiveServer {
                             tid: ThreadId(t),
                             rid: tag,
                             ts_ms: started as u64,
+                            class: Some(req.class),
                         })
                         .ok();
                     let mut emulated =
@@ -406,6 +417,7 @@ impl LiveServer {
                             tid: ThreadId(t),
                             rid: tag,
                             ts_ms: completed as u64,
+                            class: Some(req.class),
                         })
                         .ok();
                     let final_kind = {
@@ -455,6 +467,10 @@ impl LiveServer {
                     keywords: req.keywords,
                     class: req.class,
                     priority: priorities[req.class.idx()],
+                    // Wall-clock arrival since the server epoch — the same
+                    // clock the worker records use, so EDF keys are
+                    // consistent monotonic release times.
+                    arrive_ms: now_ms(),
                 },
                 &shared.aff,
             );
@@ -490,8 +506,13 @@ impl LiveServer {
         for r in &per_request {
             latency.record(r.latency_ms());
             // The live server has no warmup convention: every completion
-            // is measured.
-            per_class[r.class.idx()].record_completion(r.latency_ms(), true);
+            // is measured. record_completion clamps sub-zero waits
+            // (scheduling jitter can invert same-clock stamps by µs).
+            per_class[r.class.idx()].record_completion(
+                r.latency_ms(),
+                r.started_ms - r.arrived_ms,
+                true,
+            );
         }
         let energy = post_hoc_energy(&per_request, &topology, duration_ms);
 
@@ -505,6 +526,7 @@ impl LiveServer {
             per_class,
             backend: if cfg.use_xla { "xla" } else { "rust" },
             discipline: discipline_label,
+            order: cfg.order.label(),
             total_passes,
         })
     }

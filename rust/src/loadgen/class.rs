@@ -56,17 +56,24 @@ pub struct ClassSpec {
     pub share: f64,
     /// Keyword mix of this class's query stream.
     pub mix: KeywordMix,
-    /// Latency SLO, ms: the target reported as SLO attainment, and the
-    /// class's admission deadline when shedding is enabled. `None` = no
-    /// SLO (and the global `shed_deadline_ms` applies at admission).
+    /// Latency SLO, ms: the target reported as SLO attainment, the
+    /// class's admission deadline when shedding is enabled, and its
+    /// urgency under the `edf` dequeue order. `None` = no SLO (the global
+    /// `shed_deadline_ms` applies at admission; sorts last under `edf`).
     pub deadline_ms: Option<f64>,
-    /// Dispatch priority: higher values are dequeued first; equal
-    /// priorities preserve FIFO order.
+    /// Dispatch priority: higher values are dequeued first under the
+    /// default `strict` order; equal priorities preserve FIFO order.
     pub priority: u8,
+    /// Dequeue weight under the `wfq` order
+    /// ([`crate::sched::OrderKind`]): relative share of dequeue slots
+    /// this class receives while backlogged (positive; default 1).
+    /// Ignored by the other orders.
+    pub weight: f64,
 }
 
 impl ClassSpec {
-    /// A class with defaults: share 1, the given mix, no SLO, priority 0.
+    /// A class with defaults: share 1, the given mix, no SLO, priority 0,
+    /// weight 1.
     pub fn new(name: impl Into<String>, mix: KeywordMix) -> ClassSpec {
         ClassSpec {
             name: name.into(),
@@ -74,6 +81,7 @@ impl ClassSpec {
             mix,
             deadline_ms: None,
             priority: 0,
+            weight: 1.0,
         }
     }
 
@@ -92,6 +100,12 @@ impl ClassSpec {
     /// Builder: dispatch priority (higher is served first).
     pub fn with_priority(mut self, priority: u8) -> ClassSpec {
         self.priority = priority;
+        self
+    }
+
+    /// Builder: WFQ dequeue weight (relative share while backlogged).
+    pub fn with_weight(mut self, weight: f64) -> ClassSpec {
+        self.weight = weight;
         self
     }
 }
@@ -154,6 +168,12 @@ impl ClassRegistry {
                     )));
                 }
             }
+            if !(spec.weight > 0.0 && spec.weight.is_finite()) {
+                return Err(Error::config(format!(
+                    "class `{}`: weight must be a positive finite number",
+                    spec.name
+                )));
+            }
         }
         Ok(ClassRegistry {
             specs: specs.to_vec(),
@@ -199,6 +219,11 @@ impl ClassRegistry {
     /// Dispatch priority of each class, indexed by [`ClassId`].
     pub fn priorities(&self) -> Vec<u8> {
         self.specs.iter().map(|s| s.priority).collect()
+    }
+
+    /// WFQ dequeue weight of each class, indexed by [`ClassId`].
+    pub fn weights(&self) -> Vec<f64> {
+        self.specs.iter().map(|s| s.weight).collect()
     }
 
     /// True when any class declares a latency SLO.
@@ -280,12 +305,13 @@ impl WorkloadMix {
 ///
 /// Grammar: specs separated by `;`, each `name[:key=value,...]` with keys
 /// `share`, `mix` (`paper` | `fixed:K` | `uniform:LO:HI`), `deadline_ms`
-/// (alias `deadline`), `priority` (alias `prio`). Keys and mix tokens are
-/// normalised via [`norm_token`]. Classes default to share 1, the config's
-/// keyword mix, no SLO, priority 0. Example:
+/// (alias `deadline`), `priority` (alias `prio`), `weight` (alias `w` —
+/// the WFQ dequeue share). Keys and mix tokens are normalised via
+/// [`norm_token`]. Classes default to share 1, the config's keyword mix,
+/// no SLO, priority 0, weight 1. Example:
 ///
 /// ```text
-/// interactive:share=0.65,deadline_ms=500,priority=1;batch:share=0.35,mix=uniform:6:14
+/// interactive:share=0.65,deadline_ms=500,priority=1,weight=3;batch:share=0.35,mix=uniform:6:14
 /// ```
 pub fn parse_classes(s: &str, default_mix: KeywordMix) -> Result<Vec<ClassSpec>> {
     let mut specs = Vec::new();
@@ -323,6 +349,9 @@ pub fn parse_classes(s: &str, default_mix: KeywordMix) -> Result<Vec<ClassSpec>>
                 }
                 "priority" | "prio" => {
                     spec.priority = val.trim().parse().map_err(|_| bad("priority"))?;
+                }
+                "weight" | "w" => {
+                    spec.weight = val.trim().parse().map_err(|_| bad("weight"))?;
                 }
                 "mix" => {
                     spec.mix = parse_mix_token(val)?;
@@ -390,7 +419,8 @@ mod tests {
             ClassSpec::new("interactive", KeywordMix::Paper)
                 .with_share(0.7)
                 .with_deadline(500.0)
-                .with_priority(1),
+                .with_priority(1)
+                .with_weight(3.0),
             ClassSpec::new("batch", KeywordMix::Uniform(6, 14)).with_share(0.3),
         ]
     }
@@ -414,6 +444,7 @@ mod tests {
         assert_eq!(reg.get(ClassId(0)).name, "interactive");
         assert_eq!(reg.get(ClassId(1)).name, "batch");
         assert_eq!(reg.priorities(), vec![1, 0]);
+        assert_eq!(reg.weights(), vec![3.0, 1.0]);
         assert!(reg.any_deadline());
         assert_eq!(reg.admission_deadlines(f64::INFINITY), vec![500.0, f64::INFINITY]);
     }
@@ -445,6 +476,12 @@ mod tests {
         assert!(ClassRegistry::resolve(&nan_deadline, KeywordMix::Paper).is_err());
         let unnamed = vec![ClassSpec::new("  ", KeywordMix::Paper)];
         assert!(ClassRegistry::resolve(&unnamed, KeywordMix::Paper).is_err());
+        let zero_weight =
+            vec![ClassSpec::new("a", KeywordMix::Paper).with_weight(0.0)];
+        assert!(ClassRegistry::resolve(&zero_weight, KeywordMix::Paper).is_err());
+        let inf_weight =
+            vec![ClassSpec::new("a", KeywordMix::Paper).with_weight(f64::INFINITY)];
+        assert!(ClassRegistry::resolve(&inf_weight, KeywordMix::Paper).is_err());
     }
 
     #[test]
@@ -493,8 +530,8 @@ mod tests {
     #[test]
     fn parse_classes_full_grammar() {
         let specs = parse_classes(
-            "interactive:share=0.65,deadline_ms=500,priority=1;\
-             batch:share=0.35,mix=uniform:6:14,prio=0",
+            "interactive:share=0.65,deadline_ms=500,priority=1,weight=3;\
+             batch:share=0.35,mix=uniform:6:14,prio=0,w=0.5",
             KeywordMix::Paper,
         )
         .unwrap();
@@ -503,9 +540,11 @@ mod tests {
         assert_eq!(specs[0].share, 0.65);
         assert_eq!(specs[0].deadline_ms, Some(500.0));
         assert_eq!(specs[0].priority, 1);
+        assert_eq!(specs[0].weight, 3.0);
         assert_eq!(specs[0].mix, KeywordMix::Paper);
         assert_eq!(specs[1].mix, KeywordMix::Uniform(6, 14));
         assert_eq!(specs[1].deadline_ms, None);
+        assert_eq!(specs[1].weight, 0.5);
     }
 
     #[test]
@@ -513,12 +552,14 @@ mod tests {
         let specs = parse_classes("solo", KeywordMix::Fixed(3)).unwrap();
         assert_eq!(specs.len(), 1);
         assert_eq!(specs[0].share, 1.0);
+        assert_eq!(specs[0].weight, 1.0);
         assert_eq!(specs[0].mix, KeywordMix::Fixed(3));
         assert!(parse_classes("", KeywordMix::Paper).is_err());
         assert!(parse_classes("a:share", KeywordMix::Paper).is_err());
         assert!(parse_classes("a:share=x", KeywordMix::Paper).is_err());
         assert!(parse_classes("a:magic=1", KeywordMix::Paper).is_err());
         assert!(parse_classes("a:mix=banana", KeywordMix::Paper).is_err());
+        assert!(parse_classes("a:weight=x", KeywordMix::Paper).is_err());
     }
 
     #[test]

@@ -17,7 +17,7 @@ use hurryup::experiments::{self, Scale};
 use hurryup::live::{LiveConfig, LiveServer};
 use hurryup::mapper::{HurryUpParams, PolicyKind};
 use hurryup::prelude::*;
-use hurryup::sched::DisciplineKind;
+use hurryup::sched::{DisciplineKind, OrderKind};
 use hurryup::search::{self, Bm25Params, RustScorer};
 use hurryup::util::fmt::Table;
 
@@ -27,26 +27,33 @@ hurryup — request-level thread mapping for web search on big/little cores
 
 USAGE:
   hurryup sim     [--config f.toml] [--qps N] [--requests N] [--policy P]
-                  [--discipline D] [--shed-deadline-ms N] [--classes SPEC]
-                  [--seed N] [--threshold-ms N] [--sampling-ms N]
+                  [--discipline D] [--order O] [--shed-deadline-ms N]
+                  [--classes SPEC] [--seed N] [--threshold-ms N]
+                  [--sampling-ms N]
   hurryup serve   [--qps N] [--requests N] [--policy P] [--discipline D]
-                  [--shed-deadline-ms N] [--classes SPEC] [--xla] [--docs N]
+                  [--order O] [--shed-deadline-ms N] [--classes SPEC]
+                  [--xla] [--docs N]
   hurryup index   [--docs N] [--vocab N]
   hurryup query   --q \"search terms\" [--xla] [--docs N]
   hurryup figures [fig1 fig2 fig3 fig6 fig7 fig8 fig9 power_table ablations
-                  disciplines shedding classes] [--full | --scale quick|full]
+                  disciplines shedding classes orders]
+                  [--full | --scale quick|full]
   hurryup check
 
 POLICIES:    hurry_up | linux_random | round_robin | all_big | all_little |
              oracle | app_level | queue_aware   (names are case-insensitive)
 DISCIPLINES: centralized (cfcfs) | per_core (dfcfs) | work_steal (steal)
+ORDERS:      strict (prio) | wfq (drr) | edf (deadline) — intra-queue
+             dequeue order; strict is the default, wfq shares dequeues by
+             class weight, edf serves earliest class deadline first
 ADMISSION:   --shed-deadline-ms wraps the policy in the projected-delay
              shedder (inf = admission path, never sheds)
 CLASSES:     --classes declares service classes (SPEC =
              \"name:key=val,...;name:...\", keys share | mix | deadline_ms |
-             priority; mix = paper | fixed:K | uniform:LO:HI). A class
-             deadline_ms is its SLO and admission deadline; higher
-             priority classes are dequeued first. TOML equivalent:
+             priority | weight; mix = paper | fixed:K | uniform:LO:HI). A
+             class deadline_ms is its SLO and admission deadline; higher
+             priority classes are dequeued first under strict order;
+             weight is the class's wfq dequeue share. TOML equivalent:
              [[workload.class]] tables.
 ";
 
@@ -88,6 +95,15 @@ fn discipline_from(args: &Args, default: DisciplineKind) -> Result<DisciplineKin
         None => Ok(default),
         Some(s) => DisciplineKind::parse(s)
             .ok_or_else(|| Error::invalid(format!("unknown discipline `{s}`"))),
+    }
+}
+
+fn order_from(args: &Args, default: OrderKind) -> Result<OrderKind> {
+    match args.get("order") {
+        None => Ok(default),
+        Some(s) => {
+            OrderKind::parse(s).ok_or_else(|| Error::invalid(format!("unknown order `{s}`")))
+        }
     }
 }
 
@@ -143,6 +159,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     cfg.num_requests = args.get_usize("requests", cfg.num_requests.min(20_000))?;
     cfg.seed = args.get_usize("seed", cfg.seed as usize)? as u64;
     cfg.discipline = discipline_from(args, cfg.discipline)?;
+    cfg.order = order_from(args, cfg.order)?;
     if let Some(deadline) = shed_deadline_from(args)? {
         cfg.shed_deadline_ms = Some(deadline);
     }
@@ -151,12 +168,13 @@ fn cmd_sim(args: &Args) -> Result<()> {
     }
     let cfg = cfg.validated()?;
     println!(
-        "sim: {} | {} qps | {} requests | seed {} | queue {}{}",
+        "sim: {} | {} qps | {} requests | seed {} | queue {} | order {}{}",
         cfg.topology().label(),
         cfg.qps,
         cfg.num_requests,
         cfg.seed,
         cfg.discipline.label(),
+        cfg.order.label(),
         match cfg.shed_deadline_ms {
             Some(d) => format!(" | shed-deadline {d} ms"),
             None => String::new(),
@@ -166,6 +184,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let out = Simulation::new(cfg).run();
     println!("policy     : {}", out.policy);
     println!("discipline : {}", out.discipline);
+    println!("order      : {}", out.order);
     println!("completed  : {}", out.completed);
     println!("shed       : {} ({:.1}% of offered)", out.shed, out.shed_rate() * 100.0);
     println!("goodput    : {:.1} qps", out.goodput_qps());
@@ -192,7 +211,7 @@ fn class_table(per_class: &[hurryup::metrics::ClassStats], duration_ms: f64) -> 
         "per-class outcomes",
         &[
             "class", "prio", "offered", "done", "shed", "shed%", "goodput",
-            "p50_ms", "p90_ms", "p99_ms", "slo",
+            "p50_ms", "p90_ms", "p99_ms", "wait_p99", "wait_max", "slo",
         ],
     );
     for cs in per_class {
@@ -208,6 +227,8 @@ fn class_table(per_class: &[hurryup::metrics::ClassStats], duration_ms: f64) -> 
             ms_or_dash(s.p50, s.count),
             ms_or_dash(s.p90, s.count),
             ms_or_dash(s.p99, s.count),
+            ms_or_dash(cs.wait_p99_ms(), s.count),
+            ms_or_dash(cs.wait_max_ms(), s.count),
             pct_or_dash(cs.slo_attainment()),
         ]);
     }
@@ -241,6 +262,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         use_xla: args.has("xla"),
         hurryup,
         discipline: discipline_from(args, DisciplineKind::Centralized)?,
+        order: order_from(args, OrderKind::Strict)?,
         shed_deadline_ms: shed_deadline_from(args)?,
         ..LiveConfig::default()
     };
@@ -252,12 +274,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // clean CLI error, not a panic inside the server.
     let cfg = cfg.validated()?;
     println!(
-        "serve: 2B4L | {} qps | {} requests | backend={} | mapper={} | queue {}{}",
+        "serve: 2B4L | {} qps | {} requests | backend={} | mapper={} | queue {} | order {}{}",
         cfg.qps,
         cfg.num_requests,
         if cfg.use_xla { "xla" } else { "rust" },
         if cfg.hurryup.is_some() { "hurry-up" } else { "static" },
         cfg.discipline.label(),
+        cfg.order.label(),
         match cfg.shed_deadline_ms {
             Some(d) => format!(" | shed-deadline {d} ms"),
             None => String::new(),
@@ -266,6 +289,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let typed = !cfg.classes.is_empty();
     let report = LiveServer::new(cfg, index).run()?;
     println!("served     : {}", report.per_request.len());
+    println!("order      : {}", report.order);
     println!("shed       : {}", report.shed);
     println!("goodput    : {:.1} qps", report.goodput_qps());
     println!(

@@ -177,11 +177,13 @@ mod tests {
             tid: ThreadId(0),
             rid,
             ts_ms: begin,
+            class: None,
         });
         p.observe(&StatsRecord {
             tid: ThreadId(0),
             rid,
             ts_ms: end,
+            class: None,
         });
     }
 

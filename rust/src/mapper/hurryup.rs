@@ -210,6 +210,7 @@ mod tests {
             tid: ThreadId(tid),
             rid: RequestTag::from_seq(seq),
             ts_ms: ts,
+            class: None,
         }
     }
 

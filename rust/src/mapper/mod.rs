@@ -84,19 +84,25 @@ pub struct DispatchInfo {
     pub keywords: usize,
     /// Service class of the request (see [`crate::loadgen::ClassRegistry`]).
     pub class: crate::loadgen::ClassId,
-    /// Dispatch priority of the class: higher values are dequeued first;
-    /// equal priorities preserve FIFO order.
+    /// Dispatch priority of the class: higher values are dequeued first
+    /// under the default `strict` order; equal priorities preserve FIFO
+    /// order.
     pub priority: u8,
+    /// Arrival (enqueue) time on the engine clock, ms. The `edf` dequeue
+    /// order sorts by `arrive_ms + class deadline`; like class and
+    /// priority it is legitimately observable (the server stamps it).
+    pub arrive_ms: f64,
 }
 
 impl DispatchInfo {
     /// Facts for an untyped request: the implicit default class at
-    /// priority 0 (unit tests, single-class configs).
+    /// priority 0, arrived at t=0 (unit tests, single-class configs).
     pub fn untyped(keywords: usize) -> DispatchInfo {
         DispatchInfo {
             keywords,
             class: crate::loadgen::ClassId::DEFAULT,
             priority: 0,
+            arrive_ms: 0.0,
         }
     }
 }

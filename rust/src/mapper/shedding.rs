@@ -8,25 +8,38 @@
 //! admitted requests' tail latency bounded near the deadline and turns
 //! throughput into *goodput*. The controller:
 //!
-//! * estimates the mean service time from the same stats stream Hurry-up
+//! * estimates mean service times from the same stats stream Hurry-up
 //!   reads (begin/end pairs → EWMA), starting from a calibrated fallback
-//!   until the first completion is observed. The simulator delivers that
+//!   until the first completion is observed. Estimates are kept **per
+//!   service class** (records carry an optional
+//!   [`ClassId`][crate::loadgen::ClassId] tag): one global EWMA over all
+//!   completions, plus a per-class EWMA seeded from the global value at a
+//!   class's first sample — so a heavy batch class can no longer inflate
+//!   the projection applied to light interactive arrivals. The projection
+//!   uses the *arriving request's class* estimate, falling back to the
+//!   global EWMA for classes not yet sampled. The simulator delivers the
 //!   stream on sampling ticks, so the wrapper reports a sampling interval
 //!   of its own ([`EST_SAMPLING_MS`]) when the wrapped policy is static —
 //!   otherwise the estimator would never see a completion. In the live
 //!   server the queue-owned policy instance is not fed the stream at all,
-//!   so there the estimate stays at the fallback (deterministic and
+//!   so there every estimate stays at the fallback (deterministic and
 //!   conservative);
 //! * at [`Policy::admit`] projects the queueing delay the new request
 //!   would face — `backlog ahead × est. service / cores` (an M/M/c-style
 //!   all-servers-busy estimate that works for both the centralized queue
 //!   and, in aggregate, the per-core disciplines). "Backlog ahead" is the
 //!   queued work at or above the request's dispatch priority
-//!   ([`crate::sched::QueueView::at_or_above`]): under priority-aware
-//!   dequeue a high-priority arrival overtakes every lower-priority
-//!   request, so only its own tier's backlog delays it. For single-class
-//!   runs every priority ties and this is exactly the total backlog — the
-//!   pre-class projection bit for bit;
+//!   ([`crate::sched::QueueView::at_or_above`]): under the default
+//!   `strict` dequeue order a high-priority arrival overtakes every
+//!   lower-priority request, so only its own tier's backlog delays it.
+//!   For single-class runs every priority ties and this is exactly the
+//!   total backlog — the pre-class projection bit for bit. **Caveat:**
+//!   under the non-priority dequeue orders (`wfq`/`edf`,
+//!   [`crate::sched::OrderKind`]) no per-priority breakdown exists and
+//!   the projection degrades to the *total* backlog for every class —
+//!   conservative for high-priority arrivals, since under those orders a
+//!   request genuinely may wait behind lower-priority work (see
+//!   [`crate::sched::order`]; pinned by `rust/tests/sched_properties.rs`);
 //! * sheds ([`ShedReason::DeadlineExceeded`]) when the projection exceeds
 //!   the request's *class* deadline: each service class may declare its
 //!   own `deadline_ms` ([`crate::loadgen::ClassSpec`]), falling back to
@@ -49,6 +62,7 @@ use super::{
     AdmissionDecision, DispatchInfo, Migration, Policy, SchedCtx, ShedReason,
 };
 use crate::ipc::{RequestTag, StatsRecord};
+use crate::loadgen::ClassId;
 use crate::platform::CoreId;
 
 /// EWMA weight of each new service-time sample.
@@ -67,13 +81,20 @@ pub const DEFAULT_EST_SERVICE_MS: f64 = 150.0;
 pub struct Shedding {
     inner: Box<dyn Policy>,
     deadline_ms: f64,
-    /// Per-class admission deadlines, indexed by
-    /// [`ClassId`][crate::loadgen::ClassId]; classes beyond the table (or
-    /// an empty table — the untyped configuration) use `deadline_ms`.
+    /// Per-class admission deadlines, indexed by [`ClassId`]; classes
+    /// beyond the table (or an empty table — the untyped configuration)
+    /// use `deadline_ms`.
     class_deadlines_ms: Vec<f64>,
+    /// Global mean-service EWMA, ms (all classes pooled) — the projection
+    /// fallback for classes not yet sampled.
     est_service_ms: f64,
-    /// Begin timestamps of in-flight requests (to pair stream records).
-    inflight: HashMap<RequestTag, f64>,
+    /// Per-class mean-service EWMAs, ms, indexed by [`ClassId`] (`None`
+    /// until the class's first observed completion; seeded from the
+    /// global EWMA then).
+    est_by_class: Vec<Option<f64>>,
+    /// Begin timestamp + class of in-flight requests (to pair stream
+    /// records).
+    inflight: HashMap<RequestTag, (f64, Option<ClassId>)>,
     /// Requests refused so far (reporting).
     shed: u64,
 }
@@ -88,6 +109,7 @@ impl Shedding {
             deadline_ms,
             class_deadlines_ms: Vec::new(),
             est_service_ms: DEFAULT_EST_SERVICE_MS,
+            est_by_class: Vec::new(),
             inflight: HashMap::new(),
             shed: 0,
         }
@@ -138,9 +160,20 @@ impl Shedding {
         Shedding::new(Box::new(super::HurryUp::new(params, topology)), deadline_ms)
     }
 
-    /// Current mean-service estimate, ms.
+    /// Current global mean-service estimate, ms (all classes pooled).
     pub fn est_service_ms(&self) -> f64 {
         self.est_service_ms
+    }
+
+    /// Mean-service estimate used to project for a `class` arrival, ms:
+    /// the class's own EWMA once it has a sample, the global EWMA until
+    /// then.
+    pub fn class_est_ms(&self, class: ClassId) -> f64 {
+        self.est_by_class
+            .get(class.idx())
+            .copied()
+            .flatten()
+            .unwrap_or(self.est_service_ms)
     }
 
     /// Requests shed so far.
@@ -172,13 +205,17 @@ impl Policy for Shedding {
     fn admit(&mut self, info: DispatchInfo, ctx: &mut SchedCtx<'_>) -> AdmissionDecision {
         // All-servers-busy projection over the backlog that would be
         // served AHEAD of this request: queued work at or above its
-        // dispatch priority (the whole backlog for single-class runs).
-        // Deliberately ignores `info.keywords` — request sizes are not
-        // observable in production (the paper's §II); backlog, priorities
-        // and completed service times are.
+        // dispatch priority (the whole backlog for single-class runs, and
+        // under the non-priority `wfq`/`edf` orders, which report no
+        // per-priority breakdown). The service estimate is the ARRIVING
+        // class's own EWMA (global fallback until its first sample), so
+        // heavy batch completions no longer inflate interactive
+        // projections. Deliberately ignores `info.keywords` — request
+        // sizes are not observable in production (the paper's §II);
+        // backlog, priorities, classes and completed service times are.
         let servers = ctx.queues.per_core.len().max(1);
         let ahead = ctx.queues.at_or_above(info.priority);
-        let projected_ms = ahead as f64 * self.est_service_ms / servers as f64;
+        let projected_ms = ahead as f64 * self.class_est_ms(info.class) / servers as f64;
         let deadline_ms = self
             .class_deadlines_ms
             .get(info.class.idx())
@@ -208,13 +245,27 @@ impl Policy for Shedding {
 
     fn observe(&mut self, rec: &StatsRecord) {
         match self.inflight.remove(&rec.rid) {
-            Some(begin) => {
+            Some((begin, class)) => {
                 let service = (rec.ts_ms as f64 - begin).max(0.0);
+                // Per-class EWMA first, seeded from the global estimate
+                // as it stood BEFORE this sample (smooth start, no double
+                // counting). The class comes from the record pair's begin
+                // side; classless records (bare paper-format streams)
+                // feed only the global estimate.
+                if let Some(class) = class {
+                    if class.idx() >= self.est_by_class.len() {
+                        self.est_by_class.resize(class.idx() + 1, None);
+                    }
+                    let prior = self.est_by_class[class.idx()]
+                        .unwrap_or(self.est_service_ms);
+                    self.est_by_class[class.idx()] =
+                        Some((1.0 - EWMA_ALPHA) * prior + EWMA_ALPHA * service);
+                }
                 self.est_service_ms =
                     (1.0 - EWMA_ALPHA) * self.est_service_ms + EWMA_ALPHA * service;
             }
             None => {
-                self.inflight.insert(rec.rid, rec.ts_ms as f64);
+                self.inflight.insert(rec.rid, (rec.ts_ms as f64, rec.class));
             }
         }
         self.inner.observe(rec);
@@ -389,11 +440,63 @@ mod tests {
         let (mut p, _aff) = wrap(500.0);
         assert_eq!(p.est_service_ms(), DEFAULT_EST_SERVICE_MS);
         let rid = RequestTag::from_seq(1);
-        p.observe(&StatsRecord { tid: ThreadId(0), rid, ts_ms: 1000 });
+        p.observe(&StatsRecord { tid: ThreadId(0), rid, ts_ms: 1000, class: None });
         assert_eq!(p.est_service_ms(), DEFAULT_EST_SERVICE_MS, "begin alone: no update");
-        p.observe(&StatsRecord { tid: ThreadId(0), rid, ts_ms: 1350 });
+        p.observe(&StatsRecord { tid: ThreadId(0), rid, ts_ms: 1350, class: None });
         // EWMA: 0.9·150 + 0.1·350 = 170.
         assert!((p.est_service_ms() - 170.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_class_estimates_separate_heavy_from_light() {
+        use crate::loadgen::ClassId;
+        let (mut p, _aff) = wrap(500.0);
+        // Until a class has a sample, its projection uses the global EWMA.
+        assert_eq!(p.class_est_ms(ClassId(0)), DEFAULT_EST_SERVICE_MS);
+        assert_eq!(p.class_est_ms(ClassId(1)), DEFAULT_EST_SERVICE_MS);
+        let pair = |p: &mut Shedding, seq: u64, class: u16, begin: u64, end: u64| {
+            let rid = RequestTag::from_seq(seq);
+            let class = Some(ClassId(class));
+            p.observe(&StatsRecord { tid: ThreadId(0), rid, ts_ms: begin, class });
+            p.observe(&StatsRecord { tid: ThreadId(0), rid, ts_ms: end, class });
+        };
+        // One light (100 ms, class 0) and one heavy (1100 ms, class 1)
+        // completion.
+        pair(&mut p, 1, 0, 1000, 1100);
+        pair(&mut p, 2, 1, 1000, 2100);
+        // Class 0 seeded from global 150: 0.9·150 + 0.1·100 = 145.
+        assert!((p.class_est_ms(ClassId(0)) - 145.0).abs() < 1e-9);
+        // Global after the light sample: 145; class 1 seeds from it:
+        // 0.9·145 + 0.1·1100 = 240.5.
+        assert!((p.class_est_ms(ClassId(1)) - 240.5).abs() < 1e-9);
+        // The heavy class's samples must NOT leak into class 0's estimate.
+        assert!((p.class_est_ms(ClassId(0)) - 145.0).abs() < 1e-9);
+        // A class never observed still falls back to the global EWMA
+        // (which pools both samples).
+        assert!((p.class_est_ms(ClassId(9)) - p.est_service_ms()).abs() < 1e-12);
+        // And the projection uses the per-class figure: a class-0 arrival
+        // over a 12-deep backlog projects 12×145/6 = 290 ms (admit at
+        // 500); a class-1 arrival over a 24-deep backlog projects
+        // 24×240.5/6 = 962 ms (shed).
+        let info = |class: u16| DispatchInfo {
+            class: ClassId(class),
+            ..DispatchInfo::untyped(3)
+        };
+        let depths = [2usize; 6]; // 12 queued
+        assert_eq!(
+            admit_info_with(&mut p, info(0), &depths, &[], &aff_for_tests()),
+            AdmissionDecision::Admit
+        );
+        match admit_info_with(&mut p, info(1), &[4usize; 6], &[], &aff_for_tests()) {
+            AdmissionDecision::Shed {
+                reason: ShedReason::DeadlineExceeded { projected_ms, .. },
+            } => assert!((projected_ms - 24.0 * 240.5 / 6.0).abs() < 1e-9),
+            other => panic!("expected heavy-class shed, got {other:?}"),
+        }
+    }
+
+    fn aff_for_tests() -> AffinityTable {
+        AffinityTable::round_robin(Topology::juno_r1())
     }
 
     #[test]

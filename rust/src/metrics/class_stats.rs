@@ -25,6 +25,11 @@ pub struct ClassStats {
     /// End-to-end latency histogram over the *measured* (post-warmup)
     /// completions of this class.
     pub latency: LatencyHistogram,
+    /// Queueing-wait histogram (service start − arrival) over the same
+    /// measured completions — the starvation observable: under strict
+    /// priority a saturating higher-priority class drives a lower class's
+    /// wait tail unbounded; `wfq` bounds it at the class's weight share.
+    pub wait: LatencyHistogram,
     /// Measured completions that met the SLO (`latency ≤ deadline_ms`);
     /// equals the measured count when no SLO is declared.
     pub slo_met: u64,
@@ -40,20 +45,41 @@ impl ClassStats {
             completed: 0,
             shed: 0,
             latency: LatencyHistogram::new(),
+            wait: LatencyHistogram::new(),
             slo_met: 0,
         }
     }
 
-    /// Account one completion. `measured` excludes warmup completions from
-    /// the latency/SLO statistics (they still count toward `completed`).
-    pub fn record_completion(&mut self, latency_ms: f64, measured: bool) {
+    /// Account one completion with its queueing wait (service start −
+    /// arrival). `measured` excludes warmup completions from the
+    /// latency/wait/SLO statistics (they still count toward `completed`).
+    pub fn record_completion(&mut self, latency_ms: f64, wait_ms: f64, measured: bool) {
         self.completed += 1;
         if measured {
             self.latency.record(latency_ms);
+            self.wait.record(wait_ms.max(0.0));
             if latency_ms <= self.deadline_ms.unwrap_or(f64::INFINITY) {
                 self.slo_met += 1;
             }
         }
+    }
+
+    /// 99th-percentile queueing wait over measured completions, ms (0.0
+    /// when nothing completed — render as `-`, keyed on the latency
+    /// count).
+    pub fn wait_p99_ms(&self) -> f64 {
+        if self.wait.is_empty() {
+            return 0.0;
+        }
+        self.wait.percentile(0.99)
+    }
+
+    /// Worst measured queueing wait, ms (0.0 when nothing completed).
+    pub fn wait_max_ms(&self) -> f64 {
+        if self.wait.is_empty() {
+            return 0.0;
+        }
+        self.wait.max()
     }
 
     /// Account one admission refusal.
@@ -111,17 +137,31 @@ mod tests {
     #[test]
     fn conservation_and_rates() {
         let mut cs = ClassStats::new("interactive", 1, Some(500.0));
-        cs.record_completion(100.0, true);
-        cs.record_completion(600.0, true);
-        cs.record_completion(50.0, false); // warmup
+        cs.record_completion(100.0, 10.0, true);
+        cs.record_completion(600.0, 450.0, true);
+        cs.record_completion(50.0, 5.0, false); // warmup
         cs.record_shed();
         assert_eq!(cs.completed, 3);
         assert_eq!(cs.shed, 1);
         assert_eq!(cs.offered(), 4);
         assert_eq!(cs.shed_rate(), 0.25);
         assert_eq!(cs.latency.count(), 2, "warmup excluded from latency");
+        assert_eq!(cs.wait.count(), 2, "warmup excluded from waits too");
         assert_eq!(cs.slo_attainment(), Some(0.5));
         assert!((cs.goodput_qps(1000.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wait_statistics_track_queueing_not_service() {
+        let mut cs = ClassStats::new("batch", 0, None);
+        cs.record_completion(5_000.0, 4_700.0, true);
+        cs.record_completion(400.0, 20.0, true);
+        // Negative waits (clock jitter in the live server) clamp to 0.
+        cs.record_completion(100.0, -0.5, true);
+        assert_eq!(cs.wait.count(), 3);
+        assert!((cs.wait_max_ms() - 4_700.0).abs() / 4_700.0 < 0.02);
+        assert!(cs.wait_p99_ms() <= cs.wait_max_ms());
+        assert!(cs.wait_p99_ms() > 400.0, "p99 reflects the starved sample");
     }
 
     #[test]
@@ -138,12 +178,14 @@ mod tests {
         let s = cs.summary();
         assert_eq!(s.count, 0);
         assert!(s.p50 == 0.0 && s.p90 == 0.0 && s.p99 == 0.0, "no NaN leakage");
+        assert_eq!(cs.wait_p99_ms(), 0.0, "no NaN from the empty wait histogram");
+        assert_eq!(cs.wait_max_ms(), 0.0);
     }
 
     #[test]
     fn no_slo_class_reports_none() {
         let mut cs = ClassStats::new("free", 0, None);
-        cs.record_completion(10_000.0, true);
+        cs.record_completion(10_000.0, 9_000.0, true);
         assert_eq!(cs.slo_attainment(), None);
     }
 }

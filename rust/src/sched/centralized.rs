@@ -1,31 +1,37 @@
 //! Centralized FCFS (cFCFS): one global queue, the paper's setup.
 //!
-//! The queue's *head* — the oldest request of the highest queued dispatch
-//! priority — is offered to the [`Policy`] together with the full
-//! idle-core set; the policy may hold the head queued (e.g. all-big waits
-//! for a big core), which blocks everything behind it. Within a priority
-//! level order is strict FIFO, and single-class workloads (every priority
-//! equal) degenerate to the plain global FIFO: the operation order (queue
-//! check → idle check → policy → pop) and the rng draws then replicate the
-//! pre-`sched` simulator loop exactly, so seeded runs reproduce
-//! bit-for-bit.
+//! The queue's *effective head* — chosen by the configured
+//! [`OrderPolicy`] (strict priority by default: oldest request of the
+//! highest queued dispatch priority) — is offered to the [`Policy`]
+//! together with the full idle-core set; the policy may hold the head
+//! queued (e.g. all-big waits for a big core), which blocks everything
+//! behind it. Under the default order, single-class workloads (every
+//! priority equal) degenerate to the plain global FIFO: the operation
+//! order (queue check → idle check → policy → pop) and the rng draws then
+//! replicate the pre-`sched` simulator loop exactly, so seeded runs
+//! reproduce bit-for-bit.
 
-use super::prio_queue::PrioQueue;
+use super::order::{OrderPolicy, OrderSpec};
 use super::{QueueDiscipline, QueuedTicket, SchedCtx};
 use crate::mapper::Policy;
 use crate::platform::CoreId;
 
-/// One global dispatch queue, priority-then-FIFO ordered.
+/// One global dispatch queue, ordered per the configured [`OrderPolicy`].
 pub struct Centralized {
-    queue: PrioQueue,
+    queue: Box<dyn OrderPolicy>,
     num_cores: usize,
 }
 
 impl Centralized {
-    /// New empty queue for a core count.
+    /// New empty queue for a core count (strict-priority order).
     pub fn new(num_cores: usize) -> Centralized {
+        Centralized::with_order(num_cores, &OrderSpec::strict())
+    }
+
+    /// New empty queue with an explicit dequeue order.
+    pub fn with_order(num_cores: usize, order: &OrderSpec) -> Centralized {
         Centralized {
-            queue: PrioQueue::new(),
+            queue: order.build(),
             num_cores,
         }
     }
@@ -51,9 +57,12 @@ impl QueueDiscipline for Centralized {
         if self.queue.is_empty() || idle.is_empty() {
             return None;
         }
-        // Effective head: oldest request of the highest queued priority.
-        // With a single priority level (single class) that is the plain
-        // FIFO front — the pre-class behaviour bit for bit.
+        // Effective head per the configured order (strict default: oldest
+        // request of the highest queued priority; single-class runs are
+        // then the plain FIFO front — the pre-class behaviour bit for
+        // bit). Peek and take agree within this call (no push can
+        // intervene); after a refusal, later arrivals may legitimately
+        // change the head under edf/strict.
         let head = self.queue.peek_best().expect("non-empty");
         let core = policy.choose_core(idle, head.info, ctx)?;
         self.queue.take_best();

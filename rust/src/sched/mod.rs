@@ -22,8 +22,9 @@
 //! 3. **queue** — the [`QueueDiscipline`] stores the admitted request
 //!    (per-core disciplines consult the policy for a home queue);
 //! 4. **next** — as cores go idle, the discipline + policy pick the next
-//!    (request, core) pair, serving higher-priority classes first (FIFO
-//!    within a priority level);
+//!    (request, core) pair; *which* queued request is next is the
+//!    [`order`] layer's call (strict priority by default — higher
+//!    priorities first, FIFO within a level);
 //! 5. **run** — the engine executes it and reports begin/end through the
 //!    stats stream ([`crate::ipc::StatsRecord`]).
 //!
@@ -49,26 +50,53 @@
 //!   queue (subject to a policy veto, so e.g. all-big placement is never
 //!   violated).
 //!
-//! Division of labour: a discipline owns queue *structure* (where requests
-//! wait, who may serve them); the [`Policy`] owns *admission* (whether a
-//! request enters at all), *placement* (which core it should run on) and
-//! migration. The [`Dispatcher`] glues them to a payload store;
+//! # Division of labour: structure / order / policy
+//!
+//! Three orthogonal axes compose the scheduling layer, each independently
+//! selectable from config and CLI:
+//!
+//! * **Structure** — a [`QueueDiscipline`] ([`DisciplineKind`], config
+//!   `discipline`, CLI `--discipline`) owns *where requests wait and who
+//!   may serve them*: one shared queue, per-core queues, stealing.
+//! * **Intra-queue order** — an [`OrderPolicy`] ([`OrderKind`], config
+//!   `order`, CLI `--order`) owns *which of one queue's requests is at
+//!   the effective head*: strict priority (default), weighted fair
+//!   queueing between classes (DRR), or earliest class-deadline first.
+//!   Every discipline builds its queues from the same [`OrderSpec`], so
+//!   the order axis composes with all three structures.
+//! * **Placement + admission** — the [`Policy`] owns whether a request
+//!   enters at all ([`Policy::admit`][crate::mapper::Policy::admit]) and
+//!   which core runs it, plus thread migration.
+//!
+//! The [`Dispatcher`] glues the three to a payload store;
 //! [`SharedDispatcher`] adds blocking semantics for the live server's
 //! worker threads.
 //!
-//! Determinism: disciplines and policies draw randomness only through
-//! [`SchedCtx::rng`] and never iterate unordered containers, so seeded
-//! simulations replay bit-for-bit under every discipline.
+//! ## Backlog observability caveat
+//!
+//! [`QueueView::per_priority`] is derived from the order layer. Only the
+//! `strict` order dequeues by priority, so only it reports per-priority
+//! counts; under `wfq`/`edf` the breakdown is empty and
+//! [`QueueView::at_or_above`] degrades to the *total* backlog — the
+//! [`Shedding`][crate::mapper::Shedding] admission projection is then
+//! total-backlog for every class (conservative for high-priority
+//! arrivals). See [`order`] for details; pinned by
+//! `rust/tests/sched_properties.rs`.
+//!
+//! Determinism: disciplines, orders and policies draw randomness only
+//! through [`SchedCtx::rng`] and never iterate unordered containers, so
+//! seeded simulations replay bit-for-bit under every discipline × order.
 
 pub mod centralized;
 pub mod dispatcher;
+pub mod order;
 pub mod per_core;
-mod prio_queue;
 pub mod shared;
 pub mod work_steal;
 
 pub use centralized::Centralized;
 pub use dispatcher::{AdmissionOutcome, Dispatcher, Ticket};
+pub use order::{ClassOrdering, OrderKind, OrderPolicy, OrderSpec};
 pub use per_core::PerCore;
 pub use shared::SharedDispatcher;
 pub use work_steal::WorkSteal;
@@ -88,11 +116,13 @@ pub struct QueueView<'a> {
     /// core's own queue length; for a centralized discipline every core
     /// sees the shared queue, so all entries equal `total`.
     pub per_core: &'a [usize],
-    /// Queued requests per dispatch-priority level (index = priority).
-    /// Disciplines dequeue higher priorities first, so the backlog *ahead
-    /// of* a priority-`p` arrival is [`QueueView::at_or_above`]`(p)` —
-    /// what class-aware admission controllers project against. Empty in
-    /// bare unit-test views; then every priority sees `total`.
+    /// Queued requests per dispatch-priority level (index = priority),
+    /// derived from the [`order`] layer. Under the `strict` order,
+    /// queues dequeue higher priorities first and the backlog *ahead of*
+    /// a priority-`p` arrival is [`QueueView::at_or_above`]`(p)` — what
+    /// class-aware admission controllers project against. Empty in bare
+    /// unit-test views AND under non-priority orders (`wfq`/`edf`, which
+    /// don't dequeue by priority); every priority then sees `total`.
     pub per_priority: &'a [usize],
     /// Total requests queued across all queues (no double counting).
     pub total: usize,
@@ -116,7 +146,9 @@ impl QueueView<'_> {
     /// Queued requests at or above a dispatch priority — the backlog a
     /// priority-`prio` arrival would wait behind under priority-aware
     /// dequeue. Falls back to `total` when no priority breakdown was
-    /// captured (hand-built views), which is exact for single-class runs.
+    /// captured — hand-built views, and the `wfq`/`edf` orders (which
+    /// report no per-priority counts; see [`order`]). The fallback is
+    /// exact for single-class runs and conservative otherwise.
     pub fn at_or_above(&self, prio: u8) -> usize {
         if self.per_priority.is_empty() {
             return self.total;
@@ -160,9 +192,9 @@ pub struct QueuedTicket {
 /// A queue discipline: owns where requests wait and which core serves them
 /// next. Implementations must conserve requests (every enqueued ticket is
 /// eventually returned by `next` exactly once, given idle cores) and order
-/// each internal queue by dispatch priority — higher
-/// [`DispatchInfo::priority`] values are served first, and equal
-/// priorities keep strict FIFO order (so single-class workloads, where
+/// each internal queue per the [`OrderPolicy`] they were built with —
+/// strict priority by default: higher [`DispatchInfo::priority`] values
+/// served first, FIFO within a level (so single-class workloads, where
 /// every priority ties, are plain FIFO — the pre-class behaviour bit for
 /// bit). Admission happens *before* the discipline is involved —
 /// `enqueue` only ever sees admitted requests.
@@ -200,8 +232,11 @@ pub trait QueueDiscipline: Send {
 
     /// Fill `out` with the per-priority backlog counts (index =
     /// priority; see [`QueueView::per_priority`]). Derived from the
-    /// discipline's own queues — the single source of truth — so the
-    /// admission projection can never drift from queue reality.
+    /// discipline's own queues through the [`order`] layer — the single
+    /// source of truth — so the admission projection can never drift
+    /// from queue reality. Left empty by non-priority orders
+    /// (`wfq`/`edf`), which makes [`QueueView::at_or_above`] fall back
+    /// to the total backlog.
     fn prios_into(&self, out: &mut Vec<usize>);
 
     /// Allocating convenience form of [`QueueDiscipline::depths_into`].
@@ -235,12 +270,20 @@ impl DisciplineKind {
         ]
     }
 
-    /// Instantiate for a core count.
+    /// Instantiate for a core count with the default (strict-priority)
+    /// dequeue order — unit tests and untyped configs.
     pub fn build(&self, num_cores: usize) -> Box<dyn QueueDiscipline> {
+        self.build_ordered(num_cores, &OrderSpec::strict())
+    }
+
+    /// Instantiate for a core count, queues ordered per `order` (the
+    /// engines derive the spec from the class registry —
+    /// [`OrderSpec::from_registry`]).
+    pub fn build_ordered(&self, num_cores: usize, order: &OrderSpec) -> Box<dyn QueueDiscipline> {
         match self {
-            DisciplineKind::Centralized => Box::new(Centralized::new(num_cores)),
-            DisciplineKind::PerCore => Box::new(PerCore::new(num_cores)),
-            DisciplineKind::WorkSteal => Box::new(WorkSteal::new(num_cores)),
+            DisciplineKind::Centralized => Box::new(Centralized::with_order(num_cores, order)),
+            DisciplineKind::PerCore => Box::new(PerCore::with_order(num_cores, order)),
+            DisciplineKind::WorkSteal => Box::new(WorkSteal::with_order(num_cores, order)),
         }
     }
 

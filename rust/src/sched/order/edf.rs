@@ -1,0 +1,218 @@
+//! Earliest class-deadline first: the queued request with the smallest
+//! absolute deadline — its arrival time plus its class's declared SLO
+//! ([`crate::loadgen::ClassSpec::deadline_ms`]) — is served next.
+//!
+//! Requests of deadline-free classes get an infinite absolute deadline, so
+//! they sort after every deadline-carrying request and FIFO among
+//! themselves (ties — including the all-infinite single-class case — break
+//! on push order). With one deadline-free class the queue is therefore
+//! plain FIFO.
+//!
+//! Storage is a binary heap keyed `(absolute deadline, push seq)`; push
+//! and pop are O(log n). Deterministic: the key is a total order (f64
+//! `total_cmp` + unique sequence numbers), so equal runs replay
+//! bit-for-bit.
+
+use std::collections::BinaryHeap;
+
+use super::super::QueuedTicket;
+use super::{ClassOrdering, OrderPolicy};
+
+/// Heap entry: min-ordered by `(deadline, seq)` (comparisons reversed so
+/// Rust's max-heap pops the smallest key first).
+struct Entry {
+    /// Absolute deadline, ms (`arrive_ms + class deadline`; +∞ when the
+    /// class declares none).
+    deadline_ms: f64,
+    /// Push sequence — unique, breaks ties FIFO.
+    seq: u64,
+    item: QueuedTicket,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Entry) -> bool {
+        self.seq == other.seq // seq is unique per queue
+    }
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Entry) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Entry) -> std::cmp::Ordering {
+        // Reversed: the heap's "greatest" entry is the earliest deadline
+        // (oldest push on ties).
+        other
+            .deadline_ms
+            .total_cmp(&self.deadline_ms)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Earliest-deadline-first queue over the per-class SLO table.
+pub struct Edf {
+    /// Class deadline, ms, indexed by
+    /// [`ClassId`][crate::loadgen::ClassId]; `None` = deadline-free.
+    class_deadlines_ms: Vec<Option<f64>>,
+    heap: BinaryHeap<Entry>,
+    next_seq: u64,
+}
+
+impl Edf {
+    /// New empty queue for a class table (deadlines from
+    /// [`ClassOrdering::deadline_ms`]; classes beyond the table are
+    /// deadline-free).
+    pub fn new(classes: &[ClassOrdering]) -> Edf {
+        Edf {
+            class_deadlines_ms: classes.iter().map(|c| c.deadline_ms).collect(),
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+        }
+    }
+
+    /// Absolute deadline of one item.
+    fn key(&self, item: &QueuedTicket) -> f64 {
+        let class_deadline = self
+            .class_deadlines_ms
+            .get(item.info.class.idx())
+            .copied()
+            .flatten()
+            .unwrap_or(f64::INFINITY);
+        item.info.arrive_ms + class_deadline
+    }
+}
+
+impl OrderPolicy for Edf {
+    fn name(&self) -> &'static str {
+        // Matches `OrderKind::label()`.
+        "edf"
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    fn push(&mut self, item: QueuedTicket) {
+        let deadline_ms = self.key(&item);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Entry {
+            deadline_ms,
+            seq,
+            item,
+        });
+    }
+
+    fn peek_best(&mut self) -> Option<QueuedTicket> {
+        self.heap.peek().map(|e| e.item)
+    }
+
+    fn take_best(&mut self) -> Option<QueuedTicket> {
+        self.heap.pop().map(|e| e.item)
+    }
+
+    fn add_counts_into(&self, _out: &mut Vec<usize>) {
+        // Deliberately nothing: EDF does not dequeue by priority, so
+        // `at_or_above` falls back to the total backlog (see module docs).
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::qt;
+    use super::*;
+    use crate::loadgen::ClassId;
+    use crate::mapper::DispatchInfo;
+
+    fn arriving(ticket: u64, class: u16, arrive_ms: f64) -> QueuedTicket {
+        QueuedTicket {
+            ticket,
+            info: DispatchInfo {
+                class: ClassId(class),
+                arrive_ms,
+                ..DispatchInfo::untyped(1)
+            },
+        }
+    }
+
+    fn two_class(d0: Option<f64>, d1: Option<f64>) -> Edf {
+        Edf::new(&[
+            ClassOrdering { weight: 1.0, deadline_ms: d0 },
+            ClassOrdering { weight: 1.0, deadline_ms: d1 },
+        ])
+    }
+
+    #[test]
+    fn earliest_absolute_deadline_first() {
+        // Class 0: 500 ms SLO; class 1: 2000 ms SLO. A later-arriving
+        // tight-SLO request overtakes an earlier loose-SLO one when its
+        // absolute deadline is earlier.
+        let mut q = two_class(Some(500.0), Some(2_000.0));
+        q.push(arriving(0, 1, 0.0)); // deadline 2000
+        q.push(arriving(1, 0, 100.0)); // deadline 600
+        q.push(arriving(2, 0, 900.0)); // deadline 1400
+        q.push(arriving(3, 1, 10.0)); // deadline 2010
+        let order: Vec<u64> = std::iter::from_fn(|| q.take_best().map(|i| i.ticket)).collect();
+        assert_eq!(order, vec![1, 2, 0, 3]);
+    }
+
+    #[test]
+    fn deadline_free_classes_fall_back_to_fifo_after_deadlines() {
+        let mut q = two_class(Some(500.0), None);
+        q.push(arriving(0, 1, 0.0)); // ∞
+        q.push(arriving(1, 1, 5.0)); // ∞, later push
+        q.push(arriving(2, 0, 800.0)); // deadline 1300 — still before ∞
+        let order: Vec<u64> = std::iter::from_fn(|| q.take_best().map(|i| i.ticket)).collect();
+        assert_eq!(order, vec![2, 0, 1], "finite deadlines first, then FIFO");
+    }
+
+    #[test]
+    fn single_deadline_free_class_is_plain_fifo() {
+        let mut q = Edf::new(&[ClassOrdering::default()]);
+        for t in 0..6u64 {
+            // Same (infinite) key for every item: FIFO by push seq.
+            q.push(qt(t, 0, 0));
+        }
+        for expect in 0..6u64 {
+            assert_eq!(q.take_best().unwrap().ticket, expect);
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn equal_deadlines_tie_break_fifo() {
+        let mut q = two_class(Some(500.0), Some(500.0));
+        q.push(arriving(0, 0, 50.0));
+        q.push(arriving(1, 1, 50.0)); // same absolute deadline
+        q.push(arriving(2, 0, 50.0));
+        let order: Vec<u64> = std::iter::from_fn(|| q.take_best().map(|i| i.ticket)).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn peek_matches_take_and_counts_absent() {
+        let mut q = two_class(Some(100.0), Some(900.0));
+        q.push(arriving(0, 1, 0.0));
+        q.push(arriving(1, 0, 0.0));
+        assert_eq!(q.peek_best().unwrap().ticket, 1);
+        assert_eq!(q.take_best().unwrap().ticket, 1);
+        let mut out = Vec::new();
+        q.add_counts_into(&mut out);
+        assert!(out.is_empty(), "EDF must not claim priority semantics");
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn unknown_class_is_deadline_free() {
+        let mut q = Edf::new(&[]);
+        q.push(qt(0, 7, 0));
+        q.push(qt(1, 7, 0));
+        assert_eq!(q.take_best().unwrap().ticket, 0, "FIFO fallback");
+        assert_eq!(q.take_best().unwrap().ticket, 1);
+    }
+}

@@ -1,0 +1,335 @@
+//! The intra-queue ordering layer: *which queued request is served next*
+//! within one queue, factored out of the disciplines so dequeue order is a
+//! first-class, selectable policy axis.
+//!
+//! Division of labour inside the scheduling layer:
+//!
+//! * a [`QueueDiscipline`][super::QueueDiscipline] owns queue **structure**
+//!   (one shared queue vs per-core queues, who may serve which queue,
+//!   stealing);
+//! * an [`OrderPolicy`] owns **intra-queue order** (which of one queue's
+//!   requests is at the effective head);
+//! * the [`Policy`][crate::mapper::Policy] owns **admission and placement**
+//!   (whether a request enters, which core runs it).
+//!
+//! Three orders are provided, selected by [`OrderKind`] (config
+//! `order = "..."`, CLI `--order`):
+//!
+//! * [`StrictPrio`] — the default: higher dispatch priority first, FIFO
+//!   within a priority level. A saturating high-priority class starves
+//!   lower priorities — by design. Single-class workloads degenerate to
+//!   plain FIFO, which is what the seeded-replay anchors rely on.
+//! * [`Wfq`] — deficit round robin between service classes: each class
+//!   owns a FIFO and earns `weight × quantum` estimated-service-ms of
+//!   dequeue credit per round, so a saturating class can no longer starve
+//!   the rest — every backlogged class is served at ≈ its weight share
+//!   ([`crate::loadgen::ClassSpec::weight`]).
+//! * [`Edf`] — earliest class-deadline first: a request's urgency is
+//!   `arrive_ms + deadline_ms` of its class
+//!   ([`crate::loadgen::ClassSpec::deadline_ms`]); deadline-free classes
+//!   sort last, FIFO among themselves.
+//!
+//! # Backlog observability under non-priority orders
+//!
+//! [`QueueView::per_priority`][super::QueueView::per_priority] is derived
+//! from this layer ([`OrderPolicy::add_counts_into`]). Only [`StrictPrio`]
+//! can promise "a priority-`p` arrival waits behind exactly the backlog at
+//! or above `p`", so only it reports per-priority counts; [`Wfq`] and
+//! [`Edf`] report none, and
+//! [`QueueView::at_or_above`][super::QueueView::at_or_above] then degrades
+//! to the *total* backlog. Consequence: the
+//! [`Shedding`][crate::mapper::Shedding] admission projection is
+//! priority-aware under `strict` but total-backlog (conservative for
+//! high-priority classes) under `wfq`/`edf` — pinned by
+//! `rust/tests/sched_properties.rs`.
+//!
+//! Determinism: no order draws randomness; given the same push sequence
+//! they select the same heads, so seeded runs replay bit-for-bit under
+//! every `OrderKind`.
+
+mod edf;
+mod strict;
+mod wfq;
+
+pub use edf::Edf;
+pub use strict::StrictPrio;
+pub use wfq::Wfq;
+
+use super::QueuedTicket;
+use crate::loadgen::ClassRegistry;
+use crate::util::norm_token;
+
+/// One queue's dequeue-order policy: storage plus the "effective head"
+/// decision. Implementations must conserve items (everything pushed is
+/// returned by `take_best` exactly once) and be deterministic — no
+/// randomness, no iteration over unordered containers.
+///
+/// `peek_best` takes `&mut self` because stateful orders (DRR) resolve
+/// their next selection lazily and cache it. Peek-stability contract:
+/// with no intervening `push` or `take_best`, repeated peeks return the
+/// same item and `take_best` removes exactly the item the last peek
+/// returned — the window the centralized discipline needs (it peeks,
+/// consults the placement policy, then takes, all within one `next`
+/// call). After a `push`, the head may legitimately change ([`Edf`]: an
+/// earlier-deadline arrival; [`StrictPrio`]: a higher-priority one);
+/// [`Wfq`] pins its selection even across pushes.
+pub trait OrderPolicy: Send {
+    /// Stable label (matches [`OrderKind::label`]).
+    fn name(&self) -> &'static str;
+
+    /// Queued items.
+    fn len(&self) -> usize;
+
+    /// True when nothing is queued.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Store one item.
+    fn push(&mut self, item: QueuedTicket);
+
+    /// The effective head — the item `take_best` would remove — without
+    /// removing it.
+    fn peek_best(&mut self) -> Option<QueuedTicket>;
+
+    /// Remove and return the effective head.
+    fn take_best(&mut self) -> Option<QueuedTicket>;
+
+    /// Accumulate per-dispatch-priority backlog counts into `out` (index =
+    /// priority; `out` grows as needed and is NOT cleared — callers sum
+    /// across queues). Only orders that actually dequeue by priority may
+    /// contribute: [`StrictPrio`] reports real counts; [`Wfq`] and [`Edf`]
+    /// contribute nothing, so
+    /// [`QueueView::at_or_above`][crate::sched::QueueView::at_or_above]
+    /// falls back to the total backlog (see the module docs).
+    fn add_counts_into(&self, out: &mut Vec<usize>);
+}
+
+/// Serializable dequeue-order selector (config `order = "..."`, CLI
+/// `--order`) — the third selector axis of the scheduling layer, next to
+/// [`DisciplineKind`][super::DisciplineKind] and
+/// [`PolicyKind`][crate::mapper::PolicyKind].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OrderKind {
+    /// Strict priority, FIFO within a level (the default; PR 3 behaviour).
+    #[default]
+    Strict,
+    /// Weighted fair queueing between classes (deficit round robin).
+    Wfq,
+    /// Earliest class-deadline first (`arrive_ms + deadline_ms`).
+    Edf,
+}
+
+impl OrderKind {
+    /// Every order, in ablation-table order.
+    pub fn all() -> [OrderKind; 3] {
+        [OrderKind::Strict, OrderKind::Wfq, OrderKind::Edf]
+    }
+
+    /// Short label for tables and flags.
+    pub fn label(&self) -> &'static str {
+        match self {
+            OrderKind::Strict => "strict",
+            OrderKind::Wfq => "wfq",
+            OrderKind::Edf => "edf",
+        }
+    }
+
+    /// Parse a CLI/config token (scheduling-literature aliases accepted:
+    /// `prio`/`priority`, `drr`, `deadline`). Case-insensitive, trimmed,
+    /// `-` ≡ `_` — the same [`norm_token`] convention as discipline and
+    /// policy selectors.
+    pub fn parse(s: &str) -> Option<OrderKind> {
+        match norm_token(s).as_str() {
+            "strict" | "prio" | "priority" => Some(OrderKind::Strict),
+            "wfq" | "drr" => Some(OrderKind::Wfq),
+            "edf" | "deadline" => Some(OrderKind::Edf),
+            _ => None,
+        }
+    }
+}
+
+/// Per-class ordering parameters (what [`Wfq`] and [`Edf`] read), indexed
+/// by [`ClassId`][crate::loadgen::ClassId].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClassOrdering {
+    /// WFQ weight (relative dequeue share; positive).
+    pub weight: f64,
+    /// Class latency SLO, ms (`None` = deadline-free, sorts last under
+    /// EDF).
+    pub deadline_ms: Option<f64>,
+}
+
+impl Default for ClassOrdering {
+    fn default() -> ClassOrdering {
+        ClassOrdering {
+            weight: 1.0,
+            deadline_ms: None,
+        }
+    }
+}
+
+/// A buildable dequeue-order selection: the [`OrderKind`] plus the
+/// per-class parameters it needs. Per-core disciplines build one
+/// [`OrderPolicy`] instance per queue from the same spec.
+#[derive(Clone, Debug, Default)]
+pub struct OrderSpec {
+    /// Which order to build.
+    pub kind: OrderKind,
+    /// Per-class parameters, in [`ClassId`][crate::loadgen::ClassId]
+    /// order. May be empty (unit tests, untyped configs): orders then fall
+    /// back to [`ClassOrdering::default`] per class.
+    pub classes: Vec<ClassOrdering>,
+}
+
+impl OrderSpec {
+    /// The default spec: strict priority, no class table (what every
+    /// pre-order call site gets).
+    pub fn strict() -> OrderSpec {
+        OrderSpec::default()
+    }
+
+    /// Derive the spec for a resolved class registry: each class's
+    /// declared `weight` and `deadline_ms`, in registry order.
+    pub fn from_registry(kind: OrderKind, registry: &ClassRegistry) -> OrderSpec {
+        OrderSpec {
+            kind,
+            classes: registry
+                .specs()
+                .iter()
+                .map(|s| ClassOrdering {
+                    weight: s.weight,
+                    deadline_ms: s.deadline_ms,
+                })
+                .collect(),
+        }
+    }
+
+    /// Instantiate one queue's order policy.
+    pub fn build(&self) -> Box<dyn OrderPolicy> {
+        match self.kind {
+            OrderKind::Strict => Box::new(StrictPrio::new()),
+            OrderKind::Wfq => Box::new(Wfq::new(&self.classes)),
+            OrderKind::Edf => Box::new(Edf::new(&self.classes)),
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::loadgen::ClassId;
+    use crate::mapper::DispatchInfo;
+
+    /// A ticket of one class/priority (arrive 0) — the common test item.
+    pub(crate) fn qt(ticket: u64, class: u16, prio: u8) -> QueuedTicket {
+        QueuedTicket {
+            ticket,
+            info: DispatchInfo {
+                class: ClassId(class),
+                priority: prio,
+                ..DispatchInfo::untyped(1)
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::qt;
+    use super::*;
+
+    #[test]
+    fn labels_parse_roundtrip_with_aliases() {
+        for kind in OrderKind::all() {
+            assert_eq!(OrderKind::parse(kind.label()), Some(kind));
+            assert_eq!(OrderSpec { kind, classes: vec![] }.build().name(), kind.label());
+        }
+        assert_eq!(OrderKind::parse("drr"), Some(OrderKind::Wfq));
+        assert_eq!(OrderKind::parse("deadline"), Some(OrderKind::Edf));
+        assert_eq!(OrderKind::parse("priority"), Some(OrderKind::Strict));
+        assert_eq!(OrderKind::parse("prio"), Some(OrderKind::Strict));
+        assert_eq!(OrderKind::parse("  WFQ "), Some(OrderKind::Wfq));
+        assert_eq!(OrderKind::parse("e-d-f"), None);
+        assert_eq!(OrderKind::parse("lifo"), None);
+        assert_eq!(OrderKind::default(), OrderKind::Strict);
+    }
+
+    #[test]
+    fn spec_from_registry_copies_weights_and_deadlines() {
+        use crate::config::KeywordMix;
+        use crate::loadgen::{ClassRegistry, ClassSpec};
+        let reg = ClassRegistry::resolve(
+            &[
+                ClassSpec::new("fg", KeywordMix::Paper)
+                    .with_weight(3.0)
+                    .with_deadline(500.0),
+                ClassSpec::new("bg", KeywordMix::Paper),
+            ],
+            KeywordMix::Paper,
+        )
+        .unwrap();
+        let spec = OrderSpec::from_registry(OrderKind::Wfq, &reg);
+        assert_eq!(spec.kind, OrderKind::Wfq);
+        assert_eq!(
+            spec.classes,
+            vec![
+                ClassOrdering { weight: 3.0, deadline_ms: Some(500.0) },
+                ClassOrdering { weight: 1.0, deadline_ms: None },
+            ]
+        );
+    }
+
+    /// Every order conserves items: N pushes of mixed classes/priorities
+    /// drain in exactly N takes, as a permutation of what went in.
+    #[test]
+    fn every_order_conserves_items() {
+        for kind in OrderKind::all() {
+            let spec = OrderSpec {
+                kind,
+                classes: vec![
+                    ClassOrdering { weight: 3.0, deadline_ms: Some(500.0) },
+                    ClassOrdering { weight: 1.0, deadline_ms: None },
+                ],
+            };
+            let mut q = spec.build();
+            for t in 0..40u64 {
+                let class = (t % 2) as u16;
+                q.push(qt(t, class, 1 - class as u8));
+            }
+            assert_eq!(q.len(), 40, "{kind:?}");
+            let mut out: Vec<u64> =
+                std::iter::from_fn(|| q.take_best().map(|i| i.ticket)).collect();
+            assert!(q.is_empty(), "{kind:?}");
+            out.sort_unstable();
+            assert_eq!(out, (0..40).collect::<Vec<_>>(), "{kind:?}");
+        }
+    }
+
+    /// Peek/take agreement under every order, including after refused
+    /// offers (repeated peeks) and interleaved pushes.
+    #[test]
+    fn peek_matches_take_under_every_order() {
+        for kind in OrderKind::all() {
+            let spec = OrderSpec {
+                kind,
+                classes: vec![
+                    ClassOrdering { weight: 2.0, deadline_ms: Some(300.0) },
+                    ClassOrdering { weight: 1.0, deadline_ms: Some(900.0) },
+                ],
+            };
+            let mut q = spec.build();
+            for t in 0..10u64 {
+                q.push(qt(t, (t % 2) as u16, 0));
+            }
+            while !q.is_empty() {
+                let a = q.peek_best().unwrap();
+                let b = q.peek_best().unwrap();
+                assert_eq!(a.ticket, b.ticket, "{kind:?}: peek must be stable");
+                let taken = q.take_best().unwrap();
+                assert_eq!(taken.ticket, a.ticket, "{kind:?}: take must match peek");
+            }
+            assert!(q.take_best().is_none());
+        }
+    }
+}

@@ -1,5 +1,5 @@
-//! Priority-then-FIFO ticket queue — the storage primitive the queue
-//! disciplines share.
+//! Strict priority-then-FIFO — the default dequeue order, extracted from
+//! the former `sched::prio_queue::PrioQueue` storage primitive.
 //!
 //! Dequeue order: the oldest item of the highest queued dispatch priority
 //! ([`crate::mapper::DispatchInfo::priority`]). Storage is one FIFO bucket
@@ -10,39 +10,46 @@
 //! bit-for-bit, which is what the seeded-replay anchors rely on.
 //!
 //! The bucket lengths double as the queue's per-priority backlog counts
-//! ([`PrioQueue::add_counts_into`]) — the single source of truth behind
-//! [`crate::sched::QueueView::per_priority`].
+//! ([`OrderPolicy::add_counts_into`]) — the single source of truth behind
+//! [`crate::sched::QueueView::per_priority`]. Strict priority is the only
+//! order that reports them (see the [`super`] module docs).
 
 use std::collections::VecDeque;
 
-use super::QueuedTicket;
+use super::super::QueuedTicket;
+use super::OrderPolicy;
 
 /// A FIFO queue dequeued highest-priority-first (FIFO within a priority).
 #[derive(Default)]
-pub(crate) struct PrioQueue {
+pub struct StrictPrio {
     /// One FIFO bucket per priority level (index = priority).
     buckets: Vec<VecDeque<QueuedTicket>>,
     len: usize,
 }
 
-impl PrioQueue {
+impl StrictPrio {
     /// New empty queue.
-    pub(crate) fn new() -> PrioQueue {
-        PrioQueue::default()
+    pub fn new() -> StrictPrio {
+        StrictPrio::default()
     }
 
-    /// Queued items.
-    pub(crate) fn len(&self) -> usize {
+    /// Highest-priority non-empty bucket index.
+    fn top_bucket(&self) -> Option<usize> {
+        self.buckets.iter().rposition(|b| !b.is_empty())
+    }
+}
+
+impl OrderPolicy for StrictPrio {
+    fn name(&self) -> &'static str {
+        // Matches `OrderKind::label()`.
+        "strict"
+    }
+
+    fn len(&self) -> usize {
         self.len
     }
 
-    /// True when nothing is queued.
-    pub(crate) fn is_empty(&self) -> bool {
-        self.len == 0
-    }
-
-    /// Append one item (FIFO position within its priority level).
-    pub(crate) fn push(&mut self, item: QueuedTicket) {
+    fn push(&mut self, item: QueuedTicket) {
         let prio = item.info.priority as usize;
         if prio >= self.buckets.len() {
             self.buckets.resize_with(prio + 1, VecDeque::new);
@@ -51,30 +58,19 @@ impl PrioQueue {
         self.len += 1;
     }
 
-    /// Highest-priority non-empty bucket index.
-    fn top_bucket(&self) -> Option<usize> {
-        self.buckets.iter().rposition(|b| !b.is_empty())
-    }
-
-    /// The effective head — the oldest item of the highest queued
-    /// priority — without removing it.
-    pub(crate) fn peek_best(&self) -> Option<QueuedTicket> {
+    fn peek_best(&mut self) -> Option<QueuedTicket> {
         self.top_bucket()
             .and_then(|p| self.buckets[p].front().copied())
     }
 
-    /// Remove and return the effective head.
-    pub(crate) fn take_best(&mut self) -> Option<QueuedTicket> {
+    fn take_best(&mut self) -> Option<QueuedTicket> {
         let top = self.top_bucket()?;
         let item = self.buckets[top].pop_front().expect("non-empty bucket");
         self.len -= 1;
         Some(item)
     }
 
-    /// Accumulate this queue's per-priority counts into `out` (index =
-    /// priority; `out` grows as needed and is NOT cleared — callers sum
-    /// across queues).
-    pub(crate) fn add_counts_into(&self, out: &mut Vec<usize>) {
+    fn add_counts_into(&self, out: &mut Vec<usize>) {
         if self.buckets.len() > out.len() {
             out.resize(self.buckets.len(), 0);
         }
@@ -86,24 +82,18 @@ impl PrioQueue {
 
 #[cfg(test)]
 mod tests {
+    use super::super::testutil::qt;
     use super::*;
-    use crate::mapper::DispatchInfo;
 
-    fn qt(ticket: u64, prio: u8) -> QueuedTicket {
-        QueuedTicket {
-            ticket,
-            info: DispatchInfo {
-                priority: prio,
-                ..DispatchInfo::untyped(1)
-            },
-        }
+    fn item(ticket: u64, prio: u8) -> QueuedTicket {
+        qt(ticket, 0, prio)
     }
 
     #[test]
     fn single_priority_is_plain_fifo() {
-        let mut q = PrioQueue::new();
+        let mut q = StrictPrio::new();
         for t in 0..5u64 {
-            q.push(qt(t, 0));
+            q.push(item(t, 0));
         }
         assert_eq!(q.peek_best().unwrap().ticket, 0);
         for expect in 0..5u64 {
@@ -115,12 +105,12 @@ mod tests {
 
     #[test]
     fn higher_priority_dequeues_first_fifo_within_level() {
-        let mut q = PrioQueue::new();
-        q.push(qt(0, 0));
-        q.push(qt(1, 2));
-        q.push(qt(2, 1));
-        q.push(qt(3, 2));
-        q.push(qt(4, 0));
+        let mut q = StrictPrio::new();
+        q.push(item(0, 0));
+        q.push(item(1, 2));
+        q.push(item(2, 1));
+        q.push(item(3, 2));
+        q.push(item(4, 0));
         let order: Vec<u64> = std::iter::from_fn(|| q.take_best().map(|i| i.ticket)).collect();
         assert_eq!(order, vec![1, 3, 2, 0, 4]);
         assert_eq!(q.len(), 0);
@@ -128,9 +118,9 @@ mod tests {
 
     #[test]
     fn peek_matches_take() {
-        let mut q = PrioQueue::new();
-        q.push(qt(7, 0));
-        q.push(qt(8, 3));
+        let mut q = StrictPrio::new();
+        q.push(item(7, 0));
+        q.push(item(8, 3));
         let peeked = q.peek_best().unwrap();
         assert_eq!(q.len(), 2);
         assert_eq!(q.take_best().unwrap().ticket, peeked.ticket);
@@ -139,11 +129,11 @@ mod tests {
 
     #[test]
     fn counts_accumulate_across_queues() {
-        let mut a = PrioQueue::new();
-        a.push(qt(0, 0));
-        a.push(qt(1, 2));
-        let mut b = PrioQueue::new();
-        b.push(qt(2, 0));
+        let mut a = StrictPrio::new();
+        a.push(item(0, 0));
+        a.push(item(1, 2));
+        let mut b = StrictPrio::new();
+        b.push(item(2, 0));
         let mut out = Vec::new();
         a.add_counts_into(&mut out);
         b.add_counts_into(&mut out);

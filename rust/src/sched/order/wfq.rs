@@ -1,0 +1,292 @@
+//! Weighted fair queueing between service classes — deficit round robin
+//! (DRR, Shreedhar & Varghese): each class owns a FIFO and earns
+//! `weight × quantum` of dequeue credit per round-robin visit, spending a
+//! nominal estimated-service cost per dequeued request.
+//!
+//! With every class backlogged, class `c` receives `weight_c / Σ weights`
+//! of the dequeue slots — so a saturating high-weight class can no longer
+//! starve the rest, the exact failure mode of strict priority the ROADMAP
+//! warned about. An idle class's deficit resets (classic DRR), so credit
+//! never accumulates while a class has nothing queued and a returning
+//! class cannot burst past its share.
+//!
+//! Costs are charged in *estimated* service milliseconds: every request
+//! costs the same calibrated nominal ([`NOMINAL_SERVICE_MS`] — request
+//! sizes are not observable at dispatch, the paper's §II), making DRR a
+//! weighted round robin over dequeue slots. Classes whose requests are
+//! heavier than nominal therefore consume proportionally more *service
+//! time* per slot; weights apportion dequeue opportunities, not measured
+//! core-ms.
+//!
+//! Selection is resolved lazily and cached: `peek_best` advances the DRR
+//! scan (mutating cursor/deficit state) and pins the winning class until
+//! `take_best` removes its head — so peek → policy-consult → take (the
+//! centralized discipline's dance) is stable even across refused offers.
+//! Deterministic: no randomness, no unordered iteration.
+
+use std::collections::VecDeque;
+
+use super::super::QueuedTicket;
+use super::{ClassOrdering, OrderPolicy};
+
+/// Nominal per-request service cost charged against a class's deficit, ms
+/// (the same calibrated figure as the admission controller's cold-start
+/// estimate, [`crate::mapper::shedding::DEFAULT_EST_SERVICE_MS`]).
+pub const NOMINAL_SERVICE_MS: f64 = 150.0;
+
+/// Per-class FIFO queues served deficit-round-robin by class weight.
+pub struct Wfq {
+    /// One FIFO per class (index = [`ClassId`][crate::loadgen::ClassId]).
+    queues: Vec<VecDeque<QueuedTicket>>,
+    /// Deficit credit per class, estimated-service-ms.
+    deficit: Vec<f64>,
+    /// Credit granted per round visit: `weight × NOMINAL_SERVICE_MS`.
+    quantum: Vec<f64>,
+    /// Round-robin scan position (class index).
+    cursor: usize,
+    /// Class pinned by the last `peek_best`/`take_best` selection.
+    pending: Option<usize>,
+    len: usize,
+}
+
+impl Wfq {
+    /// New empty queue for a class table (weights below come from
+    /// [`ClassOrdering::weight`]; classes pushed beyond the table get
+    /// weight 1). Non-positive or non-finite weights are sanitized to 1 —
+    /// config validation rejects them earlier, this is belt-and-braces
+    /// against hand-built specs.
+    pub fn new(classes: &[ClassOrdering]) -> Wfq {
+        let mut q = Wfq {
+            queues: Vec::new(),
+            deficit: Vec::new(),
+            quantum: Vec::new(),
+            cursor: 0,
+            pending: None,
+            len: 0,
+        };
+        for c in classes {
+            q.add_class(c.weight);
+        }
+        q
+    }
+
+    fn add_class(&mut self, weight: f64) {
+        let w = if weight.is_finite() && weight > 0.0 {
+            weight
+        } else {
+            1.0
+        };
+        self.queues.push(VecDeque::new());
+        self.deficit.push(0.0);
+        self.quantum.push(w * NOMINAL_SERVICE_MS);
+    }
+
+    /// Resolve (or recall) the class whose head is served next. Advances
+    /// the DRR scan only when no selection is pinned.
+    fn select(&mut self) -> Option<usize> {
+        if self.len == 0 {
+            self.pending = None;
+            return None;
+        }
+        if let Some(c) = self.pending {
+            if !self.queues[c].is_empty() {
+                return Some(c);
+            }
+            self.pending = None;
+        }
+        // Scan from the cursor, granting one quantum per visited
+        // backlogged class, until one can afford the nominal cost. Each
+        // full round adds at least min(quantum) > 0 to some backlogged
+        // class, so the scan terminates.
+        loop {
+            let c = self.cursor;
+            if self.queues[c].is_empty() {
+                self.deficit[c] = 0.0; // classic DRR: idle classes hold no credit
+                self.cursor = (c + 1) % self.queues.len();
+                continue;
+            }
+            self.deficit[c] += self.quantum[c];
+            if self.deficit[c] >= NOMINAL_SERVICE_MS {
+                self.pending = Some(c);
+                return Some(c);
+            }
+            self.cursor = (c + 1) % self.queues.len();
+        }
+    }
+}
+
+impl OrderPolicy for Wfq {
+    fn name(&self) -> &'static str {
+        // Matches `OrderKind::label()`.
+        "wfq"
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn push(&mut self, item: QueuedTicket) {
+        let class = item.info.class.idx();
+        while class >= self.queues.len() {
+            self.add_class(1.0);
+        }
+        self.queues[class].push_back(item);
+        self.len += 1;
+    }
+
+    fn peek_best(&mut self) -> Option<QueuedTicket> {
+        let c = self.select()?;
+        self.queues[c].front().copied()
+    }
+
+    fn take_best(&mut self) -> Option<QueuedTicket> {
+        let c = self.select()?;
+        let item = self.queues[c].pop_front().expect("selected class non-empty");
+        self.len -= 1;
+        self.deficit[c] -= NOMINAL_SERVICE_MS;
+        if self.deficit[c] >= NOMINAL_SERVICE_MS && !self.queues[c].is_empty() {
+            // Burst continues: the class still has credit this visit.
+            self.pending = Some(c);
+        } else {
+            self.pending = None;
+            if self.queues[c].is_empty() {
+                self.deficit[c] = 0.0;
+            }
+            self.cursor = (c + 1) % self.queues.len();
+        }
+        Some(item)
+    }
+
+    fn add_counts_into(&self, _out: &mut Vec<usize>) {
+        // Deliberately nothing: WFQ does not dequeue by priority, so a
+        // per-priority backlog breakdown would be a lie. `at_or_above`
+        // then falls back to the total backlog (see module docs).
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::qt;
+    use super::*;
+
+    fn two_class(w0: f64, w1: f64) -> Wfq {
+        Wfq::new(&[
+            ClassOrdering { weight: w0, deadline_ms: None },
+            ClassOrdering { weight: w1, deadline_ms: None },
+        ])
+    }
+
+    #[test]
+    fn single_class_is_plain_fifo() {
+        let mut q = Wfq::new(&[ClassOrdering::default()]);
+        for t in 0..6u64 {
+            q.push(qt(t, 0, 0));
+        }
+        for expect in 0..6u64 {
+            assert_eq!(q.peek_best().unwrap().ticket, expect);
+            assert_eq!(q.take_best().unwrap().ticket, expect);
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn backlogged_classes_share_by_weight() {
+        // Weight 3:1, both saturated: dequeues must split 3:1 exactly.
+        let mut q = two_class(3.0, 1.0);
+        for t in 0..200u64 {
+            q.push(qt(t, (t % 2) as u16, 0));
+        }
+        let mut served = [0usize; 2];
+        for _ in 0..100 {
+            let item = q.take_best().unwrap();
+            served[item.info.class.idx()] += 1;
+        }
+        assert_eq!(served, [75, 25], "3:1 weights ⇒ 3:1 dequeue share");
+    }
+
+    #[test]
+    fn equal_weights_alternate() {
+        let mut q = two_class(1.0, 1.0);
+        for t in 0..8u64 {
+            q.push(qt(t, (t % 2) as u16, 0));
+        }
+        let classes: Vec<usize> =
+            std::iter::from_fn(|| q.take_best().map(|i| i.info.class.idx())).collect();
+        assert_eq!(classes, vec![0, 1, 0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn fractional_weight_is_served_every_other_round() {
+        // Weight 0.5 needs two round visits to afford one dequeue.
+        let mut q = two_class(1.0, 0.5);
+        for t in 0..30u64 {
+            q.push(qt(t, (t % 2) as u16, 0));
+        }
+        let mut served = [0usize; 2];
+        for _ in 0..12 {
+            served[q.take_best().unwrap().info.class.idx()] += 1;
+        }
+        assert_eq!(served, [8, 4], "2:1 effective share");
+    }
+
+    #[test]
+    fn idle_class_deficit_resets_no_burst_on_return() {
+        let mut q = two_class(1.0, 1.0);
+        // Only class 0 backlogged for a while: class 1 must not bank
+        // credit it could burst with later.
+        for t in 0..10u64 {
+            q.push(qt(t, 0, 0));
+        }
+        for _ in 0..10 {
+            q.take_best().unwrap();
+        }
+        for t in 10..18u64 {
+            q.push(qt(t, (t % 2) as u16, 0));
+        }
+        let mut streak1 = 0usize;
+        let mut max_streak1 = 0usize;
+        while let Some(item) = q.take_best() {
+            if item.info.class.idx() == 1 {
+                streak1 += 1;
+                max_streak1 = max_streak1.max(streak1);
+            } else {
+                streak1 = 0;
+            }
+        }
+        assert!(max_streak1 <= 1, "equal weights must not burst: {max_streak1}");
+    }
+
+    #[test]
+    fn unknown_class_grows_table_with_default_weight() {
+        let mut q = Wfq::new(&[]);
+        q.push(qt(0, 3, 0));
+        q.push(qt(1, 0, 0));
+        assert_eq!(q.len(), 2);
+        let mut out: Vec<u64> = std::iter::from_fn(|| q.take_best().map(|i| i.ticket)).collect();
+        out.sort_unstable();
+        assert_eq!(out, vec![0, 1]);
+    }
+
+    #[test]
+    fn peek_is_stable_across_refused_offers_and_pushes() {
+        let mut q = two_class(2.0, 1.0);
+        for t in 0..6u64 {
+            q.push(qt(t, (t % 2) as u16, 0));
+        }
+        let first = q.peek_best().unwrap();
+        // A push to the other class must not change the pinned selection.
+        q.push(qt(99, 1, 0));
+        assert_eq!(q.peek_best().unwrap().ticket, first.ticket);
+        assert_eq!(q.take_best().unwrap().ticket, first.ticket);
+    }
+
+    #[test]
+    fn reports_no_priority_counts() {
+        let mut q = two_class(1.0, 1.0);
+        q.push(qt(0, 0, 2));
+        q.push(qt(1, 1, 0));
+        let mut out = Vec::new();
+        q.add_counts_into(&mut out);
+        assert!(out.is_empty(), "WFQ must not claim priority semantics");
+    }
+}

@@ -7,8 +7,9 @@
 //! cluster, the oracle steers heavy requests to big-core queues, and a
 //! queue-aware policy can read the [`SchedCtx`] backlog snapshot to place
 //! join-shortest-queue. After placement a core serves only its own queue,
-//! highest dispatch priority first and FIFO within a priority (plain FIFO
-//! for single-class workloads) — no policy consult at pop, so a placement
+//! ordered per the configured [`OrderPolicy`] (strict default: highest
+//! dispatch priority first, FIFO within a priority — plain FIFO for
+//! single-class workloads) — no policy consult at pop, so a placement
 //! the policy approved is always eventually served (conservation holds
 //! for every policy).
 //!
@@ -18,23 +19,30 @@
 //! queue backs up behind a heavy request (no rebalancing; see
 //! [`super::WorkSteal`]).
 
-use super::prio_queue::PrioQueue;
+use super::order::{OrderPolicy, OrderSpec};
 use super::{QueueDiscipline, QueuedTicket, SchedCtx};
 use crate::mapper::Policy;
 use crate::platform::CoreId;
 
-/// Per-core priority-then-FIFO queues with admission-time placement.
+/// Per-core queues (ordered per the configured [`OrderPolicy`]) with
+/// admission-time placement.
 pub struct PerCore {
-    queues: Vec<PrioQueue>,
+    queues: Vec<Box<dyn OrderPolicy>>,
     all_cores: Vec<CoreId>,
     queued: usize,
 }
 
 impl PerCore {
-    /// New empty queues for a core count.
+    /// New empty queues for a core count (strict-priority order).
     pub fn new(num_cores: usize) -> PerCore {
+        PerCore::with_order(num_cores, &OrderSpec::strict())
+    }
+
+    /// New empty queues with an explicit dequeue order (one
+    /// [`OrderPolicy`] instance per core, from the same spec).
+    pub fn with_order(num_cores: usize, order: &OrderSpec) -> PerCore {
         PerCore {
-            queues: (0..num_cores).map(|_| PrioQueue::new()).collect(),
+            queues: (0..num_cores).map(|_| order.build()).collect(),
             all_cores: (0..num_cores).map(CoreId).collect(),
             queued: 0,
         }
@@ -60,9 +68,9 @@ impl PerCore {
         self.queues.len()
     }
 
-    /// The next-served request on `core` — oldest of the highest queued
-    /// priority — without removing it (work stealing's victim peek).
-    pub(crate) fn peek_best(&self, core: CoreId) -> Option<QueuedTicket> {
+    /// The next-served request on `core` — per the queue's order —
+    /// without removing it (work stealing's victim peek).
+    pub(crate) fn peek_best(&mut self, core: CoreId) -> Option<QueuedTicket> {
         self.queues[core.0].peek_best()
     }
 
@@ -114,7 +122,7 @@ impl QueueDiscipline for PerCore {
 
     fn depths_into(&self, out: &mut Vec<usize>) {
         out.clear();
-        out.extend(self.queues.iter().map(PrioQueue::len));
+        out.extend(self.queues.iter().map(|q| q.len()));
     }
 
     fn prios_into(&self, out: &mut Vec<usize>) {

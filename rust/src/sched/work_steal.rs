@@ -10,6 +10,7 @@
 //! front) and targets exactly the requests whose queueing delay is growing
 //! fastest — the backlog-rebalancing plain dFCFS lacks.
 
+use super::order::OrderSpec;
 use super::per_core::PerCore;
 use super::{QueueDiscipline, QueuedTicket, SchedCtx};
 use crate::mapper::Policy;
@@ -23,10 +24,17 @@ pub struct WorkSteal {
 }
 
 impl WorkSteal {
-    /// New empty queues for a core count.
+    /// New empty queues for a core count (strict-priority order).
     pub fn new(num_cores: usize) -> WorkSteal {
+        WorkSteal::with_order(num_cores, &OrderSpec::strict())
+    }
+
+    /// New empty queues with an explicit dequeue order (the wrapped
+    /// [`PerCore`] queues carry it; steals take whatever the victim
+    /// queue's order serves next).
+    pub fn with_order(num_cores: usize, order: &OrderSpec) -> WorkSteal {
         WorkSteal {
-            local: PerCore::new(num_cores),
+            local: PerCore::with_order(num_cores, order),
             steals: 0,
         }
     }
@@ -71,10 +79,10 @@ impl QueueDiscipline for WorkSteal {
             return Some(hit);
         }
         // All idle cores are out of local work: steal the next-served
-        // request (highest priority, oldest within it — plain oldest for
-        // single-class runs) from the most backlogged queue, if the policy
-        // lets the thief run it. A veto leaves the request for its home
-        // core — never lost.
+        // request (per the victim queue's order — under strict, highest
+        // priority then oldest; plain oldest for single-class runs) from
+        // the most backlogged queue, if the policy lets the thief run it.
+        // A veto leaves the request for its home core — never lost.
         for &thief in idle {
             let victim = self.victim()?;
             let head = self.local.peek_best(victim).expect("victim has work");

@@ -13,7 +13,7 @@ use crate::loadgen::{ArrivalProcess, ClassId, Workload, WorkloadMix};
 use crate::mapper::{DispatchInfo, Policy, Shedding};
 use crate::metrics::{ClassStats, LatencyHistogram};
 use crate::platform::{AffinityTable, CoreId, CoreKind, EnergyMeters};
-use crate::sched::{AdmissionOutcome, Dispatcher, SchedCtx};
+use crate::sched::{AdmissionOutcome, Dispatcher, OrderSpec, SchedCtx};
 use crate::util::Rng;
 
 /// Per-request outcome record.
@@ -95,6 +95,8 @@ pub struct SimOutput {
     pub policy: String,
     /// Queue-discipline name (`sched` layer).
     pub discipline: String,
+    /// Intra-queue dequeue-order name (`sched::order` layer).
+    pub order: String,
     /// Completions excluded from latency/placement statistics at the start
     /// of the run (`SimConfig::warmup_requests`).
     pub warmup: usize,
@@ -287,8 +289,9 @@ impl Simulation {
         // discipline, payloads (workload indices) owned by the dispatcher.
         // Per-decision SchedCtx snapshots are assembled inside the
         // dispatcher; this buffer serves the tick-time ctx only.
+        let order_spec = OrderSpec::from_registry(cfg.order, &registry);
         let mut dispatcher: Dispatcher<usize> =
-            Dispatcher::new(cfg.discipline.build(cores.len()));
+            Dispatcher::new(cfg.discipline.build_ordered(cores.len(), &order_spec));
         let mut depth_scratch: Vec<usize> = Vec::new();
         let mut prio_scratch: Vec<usize> = Vec::new();
         let mut latency = LatencyHistogram::new();
@@ -366,6 +369,7 @@ impl Simulation {
                         tid: aff.thread_on(core_id),
                         rid: tag,
                         ts_ms: now as u64,
+                        class: Some(req.class),
                     };
                     stream.push(rec);
                 }
@@ -381,6 +385,7 @@ impl Simulation {
                         keywords: req.keywords,
                         class: req.class,
                         priority: priorities[req.class.idx()],
+                        arrive_ms: req.arrive_ms,
                     };
                     // Lifecycle: enqueue → admit (inside the dispatcher) →
                     // queue. A shed request never touches the queues.
@@ -417,8 +422,11 @@ impl Simulation {
                     if measured {
                         latency.record(record.latency_ms());
                     }
-                    per_class[req.class.idx()]
-                        .record_completion(record.latency_ms(), measured);
+                    per_class[req.class.idx()].record_completion(
+                        record.latency_ms(),
+                        record.queue_ms(),
+                        measured,
+                    );
                     per_request.push(record);
                     completed += 1;
                     last_completion_ms = now;
@@ -428,6 +436,7 @@ impl Simulation {
                             tid: aff.thread_on(core_id),
                             rid: tag,
                             ts_ms: now as u64,
+                            class: Some(req.class),
                         });
                     }
                     try_dispatch!();
@@ -502,6 +511,7 @@ impl Simulation {
             migrations,
             policy: policy.name(),
             discipline: dispatcher.discipline_name().to_string(),
+            order: cfg.order.label().to_string(),
             warmup: cfg.warmup_requests,
         }
     }
@@ -921,6 +931,38 @@ mod tests {
             .filter(|r| r.class == crate::loadgen::ClassId(0))
             .count();
         assert_eq!(tagged, inter.completed);
+    }
+
+    #[test]
+    fn every_order_completes_and_replays_deterministically() {
+        use crate::loadgen::ClassSpec;
+        use crate::sched::OrderKind;
+        let classes = || {
+            vec![
+                ClassSpec::new("fg", KeywordMix::Paper)
+                    .with_share(0.7)
+                    .with_priority(1)
+                    .with_weight(3.0)
+                    .with_deadline(800.0),
+                ClassSpec::new("bg", KeywordMix::Uniform(5, 9)).with_share(0.3),
+            ]
+        };
+        for order in OrderKind::all() {
+            let mk = || {
+                base(PolicyKind::LinuxRandom)
+                    .with_requests(1_200)
+                    .with_qps(12.0)
+                    .with_classes(classes())
+                    .with_order(order)
+            };
+            let a = Simulation::new(mk()).run();
+            let b = Simulation::new(mk()).run();
+            assert_eq!(a.order, order.label(), "{order:?}");
+            assert_eq!(a.completed + a.shed, 1_200, "{order:?}: conservation");
+            assert_eq!(a.p90_ms(), b.p90_ms(), "{order:?}: seeded replay");
+            assert_eq!(a.duration_ms, b.duration_ms, "{order:?}");
+            assert_eq!(a.shed, b.shed, "{order:?}");
+        }
     }
 
     #[test]

@@ -52,6 +52,7 @@ fn prop_hurryup_full_trajectory_invariants() {
                             tid: ThreadId(tid),
                             rid: RequestTag::from_seq(seq),
                             ts_ms: now as u64,
+                            class: None,
                         });
                         seq += 1;
                     }
@@ -66,6 +67,7 @@ fn prop_hurryup_full_trajectory_invariants() {
                             tid: ThreadId(tid),
                             rid: RequestTag::from_seq(s),
                             ts_ms: now as u64,
+                            class: None,
                         });
                         in_flight.remove(&tid);
                     }
@@ -188,6 +190,7 @@ fn prop_codec_roundtrip_and_rejects_junk() {
             tid: ThreadId(rng.below(4096)),
             rid: RequestTag::from_seq(rng.next_u64()),
             ts_ms: rng.next_u64() % 10u64.pow(13),
+            class: None,
         };
         assert_eq!(StatsRecord::parse(&rec.encode()).unwrap(), rec);
         // Mutating the separator structure must fail parsing.

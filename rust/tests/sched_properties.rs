@@ -1,22 +1,27 @@
 //! Property tests over the scheduling layer (`sched`): conservation (no
 //! request lost or duplicated — with and without admission control,
-//! globally and per service class), per-queue FIFO order under every
-//! discipline, shed requests never stranding payloads, and the refactor's
-//! anchor guarantees — a centralized-FCFS simulation is the pre-`sched`
-//! simulator bit for bit on seeded runs, through the `SchedCtx` API; an
-//! infinite shed deadline reproduces the no-admission output exactly; and
-//! the single-default-class typed-request path reproduces the untyped
-//! seeded output exactly.
+//! globally, per service class, and under every dequeue order), per-queue
+//! FIFO order under every discipline, shed requests never stranding
+//! payloads, the starvation regression strict priority exhibits and WFQ
+//! fixes, the per-priority-view degradation under non-priority orders,
+//! and the refactor's anchor guarantees — a centralized-FCFS simulation
+//! is the pre-`sched` simulator bit for bit on seeded runs, through the
+//! `SchedCtx` API; an infinite shed deadline reproduces the no-admission
+//! output exactly; the single-default-class typed-request path reproduces
+//! the untyped seeded output exactly; and the default `strict` order
+//! reproduces the pre-order (PR 3) seeded output exactly.
 
 use hurryup::config::{KeywordMix, SimConfig};
-use hurryup::loadgen::ClassSpec;
+use hurryup::loadgen::{ClassId, ClassSpec};
 use hurryup::mapper::{
     AdmissionDecision, DispatchInfo, Policy, PolicyKind, SchedCtx, ShedReason,
 };
 use hurryup::platform::{AffinityTable, CoreId, Topology};
-use hurryup::sched::{AdmissionOutcome, DisciplineKind, Dispatcher};
+use hurryup::sched::{
+    AdmissionOutcome, ClassOrdering, DisciplineKind, Dispatcher, OrderKind, OrderSpec,
+};
 use hurryup::sim::Simulation;
-use hurryup::util::{prop, Rng};
+use hurryup::util::{norm_token, prop, Rng};
 
 /// Test-only policy: always picks the first offered core. Deterministic
 /// placement (everything homes on core 0) makes FIFO/steal order externally
@@ -504,6 +509,249 @@ fn single_default_class_reproduces_untyped_seeded_output() {
     assert!((a.energy.total_j() - b.energy.total_j()).abs() < 1e-12);
     assert_eq!(a.shed, 0);
     assert_eq!(b.shed, 0, "no deadline declared: admission stays off");
+}
+
+/// Two-class ordering spec of the order-layer tests: interactive (class
+/// 0, priority 1, weight 3, 500 ms SLO) vs batch (class 1, priority 0,
+/// weight 1, no SLO).
+fn two_class_spec(kind: OrderKind) -> OrderSpec {
+    OrderSpec {
+        kind,
+        classes: vec![
+            ClassOrdering { weight: 3.0, deadline_ms: Some(500.0) },
+            ClassOrdering { weight: 1.0, deadline_ms: None },
+        ],
+    }
+}
+
+/// A typed ticket's dispatch facts (class 0 = priority 1, class 1 =
+/// priority 0 — matching `two_class_spec`).
+fn typed_info(class: u16, arrive_ms: f64) -> DispatchInfo {
+    DispatchInfo {
+        class: ClassId(class),
+        priority: 1 - class as u8,
+        arrive_ms,
+        ..DispatchInfo::untyped(2)
+    }
+}
+
+/// The starvation regression the order layer exists for: under sustained
+/// overload with a saturating priority-1 class, strict priority leaves
+/// batch requests queued indefinitely (zero served while interactive
+/// work remains), while WFQ serves them at exactly the configured weight
+/// share.
+#[test]
+fn strict_starves_batch_wfq_serves_it_at_weight_share() {
+    let topo = Topology::juno_r1();
+    let aff = AffinityTable::round_robin(topo.clone());
+    for (order, expect_batch) in [(OrderKind::Strict, 0usize), (OrderKind::Wfq, 50)] {
+        let mut policy = PinFirst;
+        let mut rng = Rng::new(77);
+        let mut d: Dispatcher<usize> = Dispatcher::new(
+            DisciplineKind::Centralized.build_ordered(6, &two_class_spec(order)),
+        );
+        // Sustained overload: 300 interactive + 100 batch queued (every
+        // 4th arrival is batch), and only 200 dispatch slots.
+        for t in 0..400usize {
+            let class = u16::from(t % 4 == 3);
+            let outcome = d.enqueue(
+                t,
+                typed_info(class, t as f64),
+                &mut policy,
+                &aff,
+                &mut rng,
+                t as f64,
+            );
+            assert!(!outcome.is_shed());
+        }
+        let mut batch_served = 0usize;
+        for _ in 0..200 {
+            let (payload, _core) = d
+                .next(&[CoreId(0)], &mut policy, &aff, &mut rng, 400.0)
+                .expect("backlog remains");
+            if payload % 4 == 3 {
+                batch_served += 1;
+            }
+        }
+        assert_eq!(
+            batch_served,
+            expect_batch,
+            "{order:?}: strict must serve zero batch while interactive \
+             saturates; wfq must serve exactly its 1-of-4 weight share"
+        );
+        // The starved backlog is still queued, never lost.
+        assert_eq!(d.queued(), 200, "{order:?}");
+    }
+}
+
+/// `OrderKind` parse/label roundtrip incl. the norm_token aliases
+/// (`wfq`/`drr`, `edf`/`deadline`, `strict`/`prio`/`priority`), from the
+/// public API surface the config/CLI layers use.
+#[test]
+fn order_kind_parse_label_roundtrip() {
+    for kind in OrderKind::all() {
+        assert_eq!(OrderKind::parse(kind.label()), Some(kind));
+        assert_eq!(
+            OrderKind::parse(&kind.label().to_uppercase()),
+            Some(kind),
+            "parsing is norm_token-folded"
+        );
+    }
+    for (alias, kind) in [
+        ("wfq", OrderKind::Wfq),
+        ("drr", OrderKind::Wfq),
+        ("DRR", OrderKind::Wfq),
+        ("edf", OrderKind::Edf),
+        ("deadline", OrderKind::Edf),
+        (" DeadLine ", OrderKind::Edf),
+        ("strict", OrderKind::Strict),
+        ("prio", OrderKind::Strict),
+        ("priority", OrderKind::Strict),
+    ] {
+        assert_eq!(OrderKind::parse(alias), Some(kind), "{alias}");
+        assert_eq!(norm_token(kind.label()), kind.label(), "labels are canonical");
+    }
+    assert_eq!(OrderKind::parse("fifo"), None);
+    assert_eq!(OrderKind::default(), OrderKind::Strict);
+}
+
+/// Conservation per order: random interleavings of typed enqueues and
+/// dispatches with random idle subsets — every payload comes out exactly
+/// once, under every discipline × order.
+#[test]
+fn prop_orders_conserve_requests_under_every_discipline() {
+    for order in OrderKind::all() {
+        for kind in DisciplineKind::all() {
+            prop::check(16, |rng: &mut Rng, _i| {
+                let topo = Topology::juno_r1();
+                let aff = AffinityTable::round_robin(topo.clone());
+                let mut policy = PolicyKind::LinuxRandom.build(&topo);
+                let mut d: Dispatcher<usize> = Dispatcher::new(
+                    kind.build_ordered(6, &two_class_spec(order)),
+                );
+                let total = rng.range(1, 100);
+                let mut next_in = 0usize;
+                let mut out: Vec<usize> = Vec::new();
+                while out.len() < total {
+                    if next_in < total && rng.chance(0.6) {
+                        let class = u16::from(rng.chance(0.3));
+                        let outcome = d.enqueue(
+                            next_in,
+                            typed_info(class, next_in as f64),
+                            policy.as_mut(),
+                            &aff,
+                            rng,
+                            next_in as f64,
+                        );
+                        assert!(!outcome.is_shed());
+                        next_in += 1;
+                    } else if next_in == total || rng.chance(0.7) {
+                        let k = rng.range(1, 6);
+                        let mut cores: Vec<CoreId> = (0..6).map(CoreId).collect();
+                        rng.shuffle(&mut cores);
+                        cores.truncate(k);
+                        cores.sort_unstable();
+                        while let Some((p, _)) =
+                            d.next(&cores, policy.as_mut(), &aff, rng, 0.0)
+                        {
+                            out.push(p);
+                        }
+                    }
+                }
+                assert_eq!(d.queued(), 0, "{kind:?}/{order:?}");
+                out.sort_unstable();
+                assert_eq!(out, (0..total).collect::<Vec<_>>(), "{kind:?}/{order:?}");
+            });
+        }
+    }
+}
+
+/// The documented degradation: non-priority orders report no
+/// per-priority backlog breakdown, so `QueueView::at_or_above` — the
+/// `Shedding` projection's input — falls back to the TOTAL backlog for
+/// every priority. Strict keeps the real breakdown.
+#[test]
+fn non_priority_orders_degrade_projection_to_total_backlog() {
+    let topo = Topology::juno_r1();
+    let aff = AffinityTable::round_robin(topo.clone());
+    for kind in DisciplineKind::all() {
+        for order in OrderKind::all() {
+            let mut policy = PolicyKind::LinuxRandom.build(&topo);
+            let mut rng = Rng::new(3);
+            let mut d: Dispatcher<usize> = Dispatcher::new(
+                kind.build_ordered(6, &two_class_spec(order)),
+            );
+            // 6 interactive (priority 1) + 2 batch (priority 0) queued.
+            for t in 0..8usize {
+                let class = u16::from(t % 4 == 3);
+                let outcome = d.enqueue(
+                    t,
+                    typed_info(class, t as f64),
+                    policy.as_mut(),
+                    &aff,
+                    &mut rng,
+                    t as f64,
+                );
+                assert!(!outcome.is_shed());
+            }
+            let (mut depths, mut prios) = (Vec::new(), Vec::new());
+            let view = d.queue_view(&mut depths, &mut prios);
+            assert_eq!(view.total, 8, "{kind:?}/{order:?}");
+            match order {
+                OrderKind::Strict => {
+                    assert_eq!(
+                        view.at_or_above(1),
+                        6,
+                        "{kind:?}: strict sees the priority tier exactly"
+                    );
+                    assert_eq!(view.at_or_above(0), 8);
+                }
+                OrderKind::Wfq | OrderKind::Edf => {
+                    assert!(
+                        view.per_priority.is_empty(),
+                        "{kind:?}/{order:?}: non-priority orders report no breakdown"
+                    );
+                    assert_eq!(
+                        view.at_or_above(1),
+                        8,
+                        "{kind:?}/{order:?}: projection degrades to total backlog"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The order-layer anchor: `order = strict` is the default, and setting
+/// it explicitly replays the PR 3 seeded output (same config as the
+/// pre-`sched` anchor above) bit for bit — the order plumbing perturbs
+/// neither the rng stream nor dispatch.
+#[test]
+fn explicit_strict_order_replays_pr3_seeded_output() {
+    let mk = || {
+        SimConfig::paper_default(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        })
+        .with_qps(30.0)
+        .with_requests(3_000)
+        .with_seed(11)
+    };
+    let default_run = Simulation::new(mk()).run();
+    let explicit = Simulation::new(mk().with_order(OrderKind::Strict)).run();
+    assert_eq!(default_run.order, "strict", "strict is the default order");
+    assert_eq!(default_run.per_request.len(), explicit.per_request.len());
+    for (x, y) in default_run.per_request.iter().zip(&explicit.per_request) {
+        assert_eq!(x.arrived_ms, y.arrived_ms);
+        assert_eq!(x.started_ms, y.started_ms);
+        assert_eq!(x.completed_ms, y.completed_ms);
+        assert_eq!(x.first_kind, y.first_kind);
+        assert_eq!(x.final_kind, y.final_kind);
+        assert_eq!(x.migrated, y.migrated);
+    }
+    assert_eq!(default_run.migrations, explicit.migrations);
+    assert_eq!(default_run.duration_ms, explicit.duration_ms);
+    assert!((default_run.energy.total_j() - explicit.energy.total_j()).abs() < 1e-12);
 }
 
 /// Seeded determinism for the decentralized disciplines too.
