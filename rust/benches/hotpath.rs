@@ -7,6 +7,7 @@
 //!   mapper_tick        Algorithm 1 decision cost with a loaded table
 //!   queue_discipline   sched-layer enqueue+dispatch cost per discipline
 //!   order              OrderPolicy push/take_best per order at 10k queued
+//!   shard_merge        k-way gather merge, 10k candidate hits, 2/4/8 shards
 //!   stats_codec        IPC record encode+parse
 //!   bm25_block_rust    one 256×24 block scored in Rust
 //!   xla_block          one block through the PJRT artifact (if built)
@@ -172,6 +173,7 @@ fn main() {
                 ClassOrdering { weight: 3.0, deadline_ms: Some(500.0) },
                 ClassOrdering { weight: 1.0, deadline_ms: Some(1_500.0) },
             ],
+            ..OrderSpec::default()
         };
         for kind in OrderKind::all() {
             let mut q = spec(kind).build();
@@ -195,6 +197,45 @@ fn main() {
             });
             assert_eq!(q.len(), 10_000, "steady state preserved");
             report(&format!("order_{}", kind.label()), "ops", 2.0, iters, secs);
+        }
+    }
+
+    // --- shard gather: k-way top-k merge of per-shard partial lists ---
+    // The scatter-gather critical-path cost model: the gather must stay
+    // O(k log S) no matter how many candidates the shards scored. 10 000
+    // candidate hits split across 2/4/8 shards, merged to a top-10.
+    {
+        use hurryup::search::ScoredDoc;
+        use hurryup::shard::merge_topk;
+        for shards in [2usize, 4, 8] {
+            let per_shard = 10_000 / shards;
+            let mut rng = Rng::new(41 + shards as u64);
+            let parts: Vec<Vec<ScoredDoc>> = (0..shards)
+                .map(|p| {
+                    let mut list: Vec<ScoredDoc> = (0..per_shard)
+                        .map(|i| ScoredDoc {
+                            doc: (p * per_shard + i) as u32,
+                            score: rng.f64_range(0.0, 40.0) as f32,
+                        })
+                        .collect();
+                    list.sort_by(|a, b| {
+                        b.score
+                            .total_cmp(&a.score)
+                            .then_with(|| a.doc.cmp(&b.doc))
+                    });
+                    list
+                })
+                .collect();
+            let (iters, secs) = measure(300, || {
+                black_box(merge_topk(black_box(&parts), 10));
+            });
+            report(
+                &format!("shard_merge_{shards}"),
+                "hits",
+                10_000.0,
+                iters,
+                secs,
+            );
         }
     }
 

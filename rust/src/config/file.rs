@@ -4,11 +4,11 @@
 use std::path::Path;
 
 use super::toml::{array_indices, parse, Document, Value};
-use super::{KeywordMix, SimConfig};
+use super::{parse_policy_token, KeywordMix, ShardOverride, SimConfig};
 use crate::error::{Error, Result};
 use crate::loadgen::{parse_mix_token, ClassSpec};
 use crate::mapper::PolicyKind;
-use crate::sched::{DisciplineKind, OrderKind};
+use crate::sched::{DisciplineKind, OrderKind, WfqCostKind};
 
 /// Read and parse a config file into a validated `SimConfig`.
 pub fn load_sim_config(path: impl AsRef<Path>) -> Result<SimConfig> {
@@ -28,6 +28,8 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
             "little_cores",
             "discipline",
             "order",
+            "wfq_cost",
+            "shards",
             "shed_deadline_ms",
             "qps",
             "num_requests",
@@ -57,7 +59,15 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
             .and_then(|rest| rest.split_once('.'))
             .map(|(idx, field)| idx.parse::<usize>().is_ok() && CLASS_FIELDS.contains(&field))
             .unwrap_or(false);
-        if !KNOWN.contains(&key.as_str()) && !class_field {
+        // Per-shard keys of `[[shard]]` override tables, flattened as
+        // `shard.<index>.<field>`.
+        const SHARD_FIELDS: &[&str] = &["discipline", "order", "policy"];
+        let shard_field = key
+            .strip_prefix("shard.")
+            .and_then(|rest| rest.split_once('.'))
+            .map(|(idx, field)| idx.parse::<usize>().is_ok() && SHARD_FIELDS.contains(&field))
+            .unwrap_or(false);
+        if !KNOWN.contains(&key.as_str()) && !class_field && !shard_field {
             return Err(Error::config(format!("unknown config key `{key}`")));
         }
     }
@@ -88,6 +98,13 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
         cfg.order = OrderKind::parse(v)
             .ok_or_else(|| Error::config(format!("unknown order `{v}`")))?;
     }
+    if let Some(v) = doc.get("wfq_cost").and_then(Value::as_str) {
+        cfg.wfq_cost = WfqCostKind::parse(v)
+            .ok_or_else(|| Error::config(format!("unknown wfq_cost `{v}`")))?;
+    }
+    if let Some(v) = get_i64(&doc, "shards")? {
+        cfg.shards = v as usize;
+    }
     if let Some(v) = get_f64(&doc, "shed_deadline_ms")? {
         cfg.shed_deadline_ms = Some(v);
     }
@@ -112,26 +129,32 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
     }
 
     if let Some(kind) = doc.get("policy.kind").and_then(Value::as_str) {
-        // Selector strings are case-insensitive, trimmed, `-` == `_`.
-        cfg.policy = match crate::util::norm_token(kind).as_str() {
-            "hurry_up" => PolicyKind::HurryUp {
-                sampling_ms: get_f64(&doc, "policy.sampling_ms")?.unwrap_or(25.0),
-                threshold_ms: get_f64(&doc, "policy.threshold_ms")?.unwrap_or(50.0),
-            },
-            "linux_random" => PolicyKind::LinuxRandom,
-            "round_robin" => PolicyKind::RoundRobin,
-            "all_big" => PolicyKind::AllBig,
-            "all_little" => PolicyKind::AllLittle,
-            "oracle" => PolicyKind::Oracle {
-                cutoff_kw: get_i64(&doc, "policy.oracle_cutoff_kw")?.unwrap_or(5) as usize,
-            },
-            "app_level" => PolicyKind::AppLevel {
-                qos_ms: get_f64(&doc, "policy.qos_ms")?.unwrap_or(500.0),
-                sampling_ms: get_f64(&doc, "policy.sampling_ms")?.unwrap_or(50.0),
-            },
-            "queue_aware" => PolicyKind::QueueAware,
-            _ => return Err(Error::config(format!("unknown policy kind `{kind}`"))),
-        };
+        // One shared token table (config::parse_policy_token, norm_token
+        // folded — also the CLI and `[[shard]]` surface); the TOML layer
+        // then patches the parameterised kinds from their keys, keeping
+        // this surface's historical defaults.
+        let mut policy = parse_policy_token(kind)?;
+        match &mut policy {
+            PolicyKind::HurryUp {
+                sampling_ms,
+                threshold_ms,
+            } => {
+                *sampling_ms = get_f64(&doc, "policy.sampling_ms")?.unwrap_or(25.0);
+                *threshold_ms = get_f64(&doc, "policy.threshold_ms")?.unwrap_or(50.0);
+            }
+            PolicyKind::Oracle { cutoff_kw } => {
+                *cutoff_kw = get_i64(&doc, "policy.oracle_cutoff_kw")?.unwrap_or(5) as usize;
+            }
+            PolicyKind::AppLevel {
+                qos_ms,
+                sampling_ms,
+            } => {
+                *qos_ms = get_f64(&doc, "policy.qos_ms")?.unwrap_or(500.0);
+                *sampling_ms = get_f64(&doc, "policy.sampling_ms")?.unwrap_or(50.0);
+            }
+            _ => {}
+        }
+        cfg.policy = policy;
     }
 
     if let Some(kind) = doc.get("mix.kind").and_then(Value::as_str) {
@@ -185,6 +208,39 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
             spec.mix = parse_mix_token(tok)?;
         }
         cfg.classes.push(spec);
+    }
+
+    // `[[shard]]` per-shard scheduling overrides, in shard order. Any
+    // subset of the fields may be declared; the rest fall back to the
+    // document's global selectors at run time.
+    let n_shard_tables = array_indices(&doc, "shard");
+    for i in 0..n_shard_tables {
+        let field = |f: &str| format!("shard.{i}.{f}");
+        let mut ov = ShardOverride::default();
+        if let Some(v) = doc.get(&field("discipline")) {
+            let tok = v.as_str().ok_or_else(|| {
+                Error::config(format!("shard {i}: discipline must be a string"))
+            })?;
+            ov.discipline = Some(DisciplineKind::parse(tok).ok_or_else(|| {
+                Error::config(format!("shard {i}: unknown discipline `{tok}`"))
+            })?);
+        }
+        if let Some(v) = doc.get(&field("order")) {
+            let tok = v
+                .as_str()
+                .ok_or_else(|| Error::config(format!("shard {i}: order must be a string")))?;
+            ov.order = Some(
+                OrderKind::parse(tok)
+                    .ok_or_else(|| Error::config(format!("shard {i}: unknown order `{tok}`")))?,
+            );
+        }
+        if let Some(v) = doc.get(&field("policy")) {
+            let tok = v
+                .as_str()
+                .ok_or_else(|| Error::config(format!("shard {i}: policy must be a string")))?;
+            ov.policy = Some(parse_policy_token(tok)?);
+        }
+        cfg.shard_overrides.push(ov);
     }
 
     cfg.validated()
@@ -407,6 +463,69 @@ mod tests {
         assert!(cfg.classes.is_empty());
         assert!(cfg.class_registry().is_implicit_default());
         assert!(!cfg.admission_enabled());
+    }
+
+    #[test]
+    fn shards_and_overrides_parsed_and_validated() {
+        let cfg = sim_config_from_str(
+            r#"
+            shards = 3
+            discipline = "per_core"
+            [[shard]]
+            discipline = "centralized"
+            order = "wfq"
+            [[shard]]
+            policy = "queue_aware"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.shards, 3);
+        assert_eq!(cfg.shard_overrides.len(), 2);
+        assert_eq!(
+            cfg.shard_scheduling(0),
+            (
+                DisciplineKind::Centralized,
+                OrderKind::Wfq,
+                PolicyKind::LinuxRandom
+            )
+        );
+        assert_eq!(cfg.shard_scheduling(1).0, DisciplineKind::PerCore);
+        assert_eq!(cfg.shard_scheduling(1).2, PolicyKind::QueueAware);
+        assert_eq!(cfg.shard_scheduling(2).0, DisciplineKind::PerCore);
+        // Defaults: unsharded.
+        assert_eq!(sim_config_from_str("qps = 5.0").unwrap().shards, 1);
+        // Validation: shards bounded by the core count, overrides by shards.
+        assert!(sim_config_from_str("shards = 0").is_err());
+        assert!(sim_config_from_str("shards = 9").is_err());
+        assert!(sim_config_from_str(
+            "shards = 1\n[[shard]]\norder = \"wfq\"\n[[shard]]\norder = \"edf\""
+        )
+        .is_err());
+        // Bad per-shard tokens are named.
+        let e = sim_config_from_str("shards = 2\n[[shard]]\ndiscipline = \"lifo\"")
+            .unwrap_err();
+        assert!(e.to_string().contains("lifo"), "{e}");
+        let e =
+            sim_config_from_str("shards = 2\n[[shard]]\npolicy = \"magic\"").unwrap_err();
+        assert!(e.to_string().contains("magic"), "{e}");
+        // Unknown per-shard keys rejected.
+        assert!(sim_config_from_str("shards = 2\n[[shard]]\ncolour = \"red\"").is_err());
+    }
+
+    #[test]
+    fn wfq_cost_parsed_and_validated() {
+        use crate::sched::WfqCostKind;
+        let cfg = sim_config_from_str("wfq_cost = \"estimated\"").unwrap();
+        assert_eq!(cfg.wfq_cost, WfqCostKind::Estimated);
+        let cfg = sim_config_from_str("wfq_cost = \"size-aware\"").unwrap();
+        assert_eq!(cfg.wfq_cost, WfqCostKind::Estimated);
+        assert_eq!(
+            sim_config_from_str("qps = 5.0").unwrap().wfq_cost,
+            WfqCostKind::Nominal,
+            "nominal is the default"
+        );
+        let e = sim_config_from_str("wfq_cost = \"banana\"").unwrap_err();
+        assert!(e.to_string().contains("banana"), "{e}");
     }
 
     #[test]

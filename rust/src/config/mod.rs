@@ -9,9 +9,54 @@ pub use file::load_sim_config;
 use crate::loadgen::{ClassRegistry, ClassSpec};
 use crate::mapper::PolicyKind;
 use crate::platform::{CoreKind, PowerModel, Topology};
-use crate::sched::{DisciplineKind, OrderKind};
+use crate::sched::{DisciplineKind, OrderKind, WfqCostKind};
+use crate::util::norm_token;
 
 pub use crate::mapper::HurryUpParams;
+
+/// Per-shard scheduling overrides of a scatter-gather run (TOML
+/// `[[shard]]` tables, in shard order). Each field falls back to the
+/// run's global selector — so `[[shard]]` tables may override any subset
+/// of {queue structure, dequeue order, placement policy} per shard (e.g.
+/// strict order on big-core shards, WFQ on little-core shards).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardOverride {
+    /// Queue discipline of this shard (`None` = the global `discipline`).
+    pub discipline: Option<DisciplineKind>,
+    /// Dequeue order of this shard (`None` = the global `order`).
+    pub order: Option<OrderKind>,
+    /// Placement policy of this shard (`None` = the global `policy`).
+    pub policy: Option<PolicyKind>,
+}
+
+/// Parse a bare policy token into a [`PolicyKind`] with its calibrated
+/// default parameters (Hurry-up 25/50 ms, oracle cutoff 5, app-level
+/// 500 ms QoS / 25 ms sampling) — the per-shard `[[shard]]
+/// policy = "..."` form, which has no room for parameter flags.
+/// [`norm_token`] conventions.
+pub fn parse_policy_token(s: &str) -> crate::error::Result<PolicyKind> {
+    Ok(match norm_token(s).as_str() {
+        "hurry_up" => PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        },
+        "linux_random" => PolicyKind::LinuxRandom,
+        "round_robin" => PolicyKind::RoundRobin,
+        "all_big" => PolicyKind::AllBig,
+        "all_little" => PolicyKind::AllLittle,
+        "oracle" => PolicyKind::Oracle { cutoff_kw: 5 },
+        "app_level" => PolicyKind::AppLevel {
+            qos_ms: 500.0,
+            sampling_ms: 25.0,
+        },
+        "queue_aware" => PolicyKind::QueueAware,
+        _ => {
+            return Err(crate::error::Error::config(format!(
+                "unknown policy `{s}`"
+            )))
+        }
+    })
+}
 
 /// Synthetic-corpus parameters (the Wikipedia-index stand-in).
 #[derive(Clone, Debug, PartialEq)]
@@ -155,6 +200,23 @@ pub struct SimConfig {
     /// shares dequeues by class weight, `edf` serves earliest class
     /// deadline first).
     pub order: OrderKind,
+    /// WFQ dequeue-cost model (TOML `wfq_cost`, CLI `--wfq-cost`):
+    /// `Nominal` charges the fixed calibrated figure (default — weights
+    /// share dequeue slots, pre-size-aware behaviour bit for bit);
+    /// `Estimated` charges the class's live mean-service EWMA (size-aware
+    /// WFQ — weights share served time). Only meaningful under
+    /// `order = "wfq"`.
+    pub wfq_cost: WfqCostKind,
+    /// Number of index/scheduler shards (default 1 = unsharded, which
+    /// replays pre-sharding seeded output bit for bit). With S > 1 every
+    /// request fans out into S shard tasks — one per shard, each shard
+    /// owning a core partition and a full scheduling stack — and
+    /// completes at last-shard-merge (TOML `shards`, CLI `--shards`).
+    pub shards: usize,
+    /// Per-shard scheduling overrides, in shard order (TOML `[[shard]]`
+    /// tables); may cover fewer than `shards` shards — the rest use the
+    /// global selectors.
+    pub shard_overrides: Vec<ShardOverride>,
     /// Admission-control deadline, ms: when set, the configured policy is
     /// wrapped in [`crate::mapper::Shedding`], refusing requests whose
     /// projected queueing delay exceeds it. `None` (default) and
@@ -201,6 +263,9 @@ impl SimConfig {
             policy,
             discipline: DisciplineKind::Centralized,
             order: OrderKind::Strict,
+            wfq_cost: WfqCostKind::Nominal,
+            shards: 1,
+            shard_overrides: Vec::new(),
             shed_deadline_ms: None,
             qps: 30.0,
             num_requests: 100_000,
@@ -265,6 +330,35 @@ impl SimConfig {
     pub fn with_order(mut self, order: OrderKind) -> Self {
         self.order = order;
         self
+    }
+
+    /// Builder: set the WFQ dequeue-cost model.
+    pub fn with_wfq_cost(mut self, cost: WfqCostKind) -> Self {
+        self.wfq_cost = cost;
+        self
+    }
+
+    /// Builder: set the shard count (1 = unsharded).
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Builder: per-shard scheduling overrides, in shard order.
+    pub fn with_shard_overrides(mut self, overrides: Vec<ShardOverride>) -> Self {
+        self.shard_overrides = overrides;
+        self
+    }
+
+    /// The effective (discipline, order, policy) of one shard: its
+    /// override where declared, the global selector otherwise.
+    pub fn shard_scheduling(&self, shard: usize) -> (DisciplineKind, OrderKind, PolicyKind) {
+        let ov = self.shard_overrides.get(shard);
+        (
+            ov.and_then(|o| o.discipline).unwrap_or(self.discipline),
+            ov.and_then(|o| o.order).unwrap_or(self.order),
+            ov.and_then(|o| o.policy).unwrap_or(self.policy),
+        )
     }
 
     /// Builder: enable admission control with a projected-queueing-delay
@@ -333,6 +427,23 @@ impl SimConfig {
                     "shed_deadline_ms must be a number (use inf to disable shedding)",
                 ));
             }
+        }
+        if self.shards == 0 {
+            return Err(crate::error::Error::config("shards must be >= 1"));
+        }
+        if self.shards > self.big_cores + self.little_cores {
+            return Err(crate::error::Error::config(format!(
+                "shards ({}) exceeds cores ({}): every shard needs at least one core",
+                self.shards,
+                self.big_cores + self.little_cores
+            )));
+        }
+        if self.shard_overrides.len() > self.shards {
+            return Err(crate::error::Error::config(format!(
+                "{} [[shard]] overrides declared for {} shard(s)",
+                self.shard_overrides.len(),
+                self.shards
+            )));
         }
         // Shares, names and deadlines of declared classes.
         ClassRegistry::resolve(&self.classes, self.keyword_mix)?;
@@ -430,6 +541,74 @@ mod tests {
             .with_classes(vec![ClassSpec::new("z", KeywordMix::Paper).with_share(-1.0)])
             .validated()
             .is_err());
+    }
+
+    #[test]
+    fn shard_config_validated_and_overrides_resolve() {
+        use crate::sched::{DisciplineKind, OrderKind};
+        let base = SimConfig::paper_default(PolicyKind::LinuxRandom);
+        assert_eq!(base.shards, 1, "unsharded by default");
+        assert!(base.shard_overrides.is_empty());
+        assert!(base.clone().with_shards(6).validated().is_ok());
+        assert!(base.clone().with_shards(0).validated().is_err());
+        assert!(
+            base.clone().with_shards(7).validated().is_err(),
+            "2B4L has 6 cores: every shard needs one"
+        );
+        // Overrides beyond the shard count are a config error.
+        assert!(base
+            .clone()
+            .with_shards(2)
+            .with_shard_overrides(vec![ShardOverride::default(); 3])
+            .validated()
+            .is_err());
+        // Resolution: overridden fields win, the rest fall back.
+        let cfg = base
+            .with_discipline(DisciplineKind::PerCore)
+            .with_order(OrderKind::Edf)
+            .with_shards(3)
+            .with_shard_overrides(vec![
+                ShardOverride::default(),
+                ShardOverride {
+                    discipline: Some(DisciplineKind::WorkSteal),
+                    order: Some(OrderKind::Wfq),
+                    policy: Some(PolicyKind::QueueAware),
+                },
+            ]);
+        assert!(cfg.clone().validated().is_ok());
+        assert_eq!(
+            cfg.shard_scheduling(0),
+            (DisciplineKind::PerCore, OrderKind::Edf, PolicyKind::LinuxRandom)
+        );
+        assert_eq!(
+            cfg.shard_scheduling(1),
+            (DisciplineKind::WorkSteal, OrderKind::Wfq, PolicyKind::QueueAware)
+        );
+        // Shard 2 has no override table at all.
+        assert_eq!(
+            cfg.shard_scheduling(2),
+            (DisciplineKind::PerCore, OrderKind::Edf, PolicyKind::LinuxRandom)
+        );
+    }
+
+    #[test]
+    fn policy_tokens_parse_with_calibrated_defaults() {
+        assert_eq!(
+            parse_policy_token("Hurry-Up").unwrap(),
+            PolicyKind::HurryUp {
+                sampling_ms: 25.0,
+                threshold_ms: 50.0
+            }
+        );
+        assert_eq!(
+            parse_policy_token("queue_aware").unwrap(),
+            PolicyKind::QueueAware
+        );
+        assert_eq!(
+            parse_policy_token("oracle").unwrap(),
+            PolicyKind::Oracle { cutoff_kw: 5 }
+        );
+        assert!(parse_policy_token("magic").is_err());
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! | `shedding`  | admission control: p90/goodput ± load shedding    |
 //! | `classes`   | service classes: interactive vs batch SLO/shed    |
 //! | `orders`    | dequeue orders: strict vs wfq vs edf, sim + live  |
+//! | `sharding`  | scatter-gather fan-out: tail amplification vs S   |
 //!
 //! Scale: experiments default to a fast setting; set `HURRYUP_FULL=1` for
 //! the paper's 1×10⁵-request scale.
@@ -33,6 +34,7 @@ pub mod fig9;
 pub mod orders;
 pub mod power_table;
 pub mod runner;
+pub mod sharding;
 pub mod shedding;
 
 pub use runner::{compare_policies, Scale};
@@ -58,6 +60,7 @@ pub fn registry() -> Vec<(&'static str, ExperimentFn)> {
         ("shedding", shedding::run as ExperimentFn),
         ("classes", classes::run as ExperimentFn),
         ("orders", orders::run as ExperimentFn),
+        ("sharding", sharding::run as ExperimentFn),
     ]
 }
 

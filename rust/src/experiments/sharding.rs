@@ -1,0 +1,270 @@
+//! Scatter-gather sharding ablation: {shards × load} in BOTH engines —
+//! the capstone of the `shard` subsystem.
+//!
+//! At a fixed offered load the aggregate utilisation is *independent of
+//! S*: every query fans out to all S shards, each task is `1/S` of the
+//! parent's work, and the S core partitions jointly cover the machine —
+//! so sweeping S at one QPS holds the per-shard load fixed wherever the
+//! partition is capacity-balanced (S=2 on 2B4L: two identical 1B2L
+//! shards). Where it is not (S=3's third shard is 2L — no big core),
+//! that shard runs *hotter* than the unsharded ρ, which is exactly the
+//! heterogeneous-straggler story the attribution histogram exposes. What
+//! changes with S is the *shape* of latency:
+//!
+//! * **intra-query parallelism** — a query's work spreads across S cores,
+//!   so service time per query drops ≈ `1/S` (visible in the mean/p50
+//!   columns at low load — the throughput-scaling story of fan-out
+//!   serving: the same hardware turns one long request into S short
+//!   tasks);
+//! * **fan-out tail amplification** — the response leaves at the *last*
+//!   shard, so end-to-end latency is a max over S draws: e2e p99 ≥ every
+//!   shard's task p99 at every grid point (asserted), and the tail
+//!   amplification ratio (e2e p99 / mean per-shard task p99,
+//!   [`crate::metrics::tail_amplification`]) *grows with S* at fixed
+//!   per-shard load (asserted — the reason per-shard tail control matters
+//!   more, not less, as fan-out widens);
+//! * **slowest-shard attribution** — the `crit%` columns name the shard
+//!   that owns the critical path; on 2B4L with S=3 the 2L shard (no big
+//!   core) dominates, the heterogeneity-aware version of the paper's
+//!   little-core tail story.
+//!
+//! The live half drives the same sweep through the real thread-pool
+//! server — per-shard worker pools over doc-range index slices, real
+//! query execution, gather by k-way merge — asserting the same
+//! end-to-end-dominates-every-shard property on wall-clock latencies.
+
+use super::runner::Scale;
+use crate::config::{CorpusConfig, SimConfig};
+use crate::live::{LiveConfig, LiveServer};
+use crate::mapper::PolicyKind;
+use crate::metrics::tail_amplification;
+use crate::sim::Simulation;
+use crate::util::fmt::{ms, pct, Table};
+
+/// Shard counts swept (2B4L has 6 cores; 3 shards already includes an
+/// all-little shard — the interesting heterogeneous case).
+const SHARDS: [usize; 3] = [1, 2, 3];
+
+/// Offered loads swept, QPS (below / near / past the capacity knee).
+const LOADS: [f64; 3] = [10.0, 25.0, 40.0];
+
+/// Offered load of the live half, QPS.
+const LIVE_QPS: f64 = 60.0;
+
+/// Requests per live cell (real time — keep small).
+const LIVE_REQUESTS: usize = 90;
+
+fn hurry_up() -> PolicyKind {
+    PolicyKind::HurryUp {
+        sampling_ms: 25.0,
+        threshold_ms: 50.0,
+    }
+}
+
+fn grid_header(title: String, lead: &'static str) -> Table {
+    Table::new(
+        title,
+        &[
+            lead, "shards", "goodput", "p50_ms", "p99_ms", "max_shard_p99",
+            "mean_shard_p99", "amp", "crit_max%",
+        ],
+    )
+}
+
+/// One grid row from a finished run's aggregates. Returns the tail
+/// amplification for the caller's monotonicity checks (1.0 unsharded).
+#[allow(clippy::too_many_arguments)]
+fn push_row(
+    t: &mut Table,
+    lead: String,
+    shards: usize,
+    goodput: f64,
+    p50: f64,
+    p99: f64,
+    per_shard: &[crate::metrics::ShardStats],
+    completed: usize,
+) -> f64 {
+    let max_shard = per_shard
+        .iter()
+        .map(crate::metrics::ShardStats::task_p99_ms)
+        .fold(0.0f64, f64::max);
+    let mean_shard = if per_shard.is_empty() {
+        p99
+    } else {
+        per_shard
+            .iter()
+            .map(crate::metrics::ShardStats::task_p99_ms)
+            .sum::<f64>()
+            / per_shard.len() as f64
+    };
+    let amp = tail_amplification(p99, per_shard).unwrap_or(1.0);
+    let crit_max = per_shard
+        .iter()
+        .map(|s| s.critical_share(completed))
+        .fold(0.0f64, f64::max);
+    // The fan-out dominance invariant: the end-to-end tail can never beat
+    // the slowest shard's tail (a parent's latency is the max over its
+    // tasks, over the same measured population).
+    assert!(
+        p99 >= max_shard - 1e-9,
+        "e2e p99 {p99} below max per-shard p99 {max_shard} (S={shards})"
+    );
+    t.row(&[
+        lead,
+        shards.to_string(),
+        format!("{goodput:.1}"),
+        ms(p50),
+        ms(p99),
+        if per_shard.is_empty() { "-".into() } else { ms(max_shard) },
+        if per_shard.is_empty() { "-".into() } else { ms(mean_shard) },
+        format!("{amp:.2}x"),
+        if per_shard.is_empty() { "-".into() } else { pct(crit_max) },
+    ]);
+    amp
+}
+
+/// Simulated {shards × load} grid. Asserts the two fan-out invariants at
+/// every point: e2e p99 ≥ max per-shard p99, and tail amplification
+/// increasing in S at fixed (per-shard) load.
+pub fn sim_grid(requests: usize) -> Table {
+    let mut t = grid_header(
+        format!(
+            "Scatter-gather sharding × load (sim): 2B4L partitioned into S \
+             shards, task work 1/S, {requests} requests/cell"
+        ),
+        "qps",
+    );
+    for qps in LOADS {
+        let mut amps: Vec<f64> = Vec::new();
+        for shards in SHARDS {
+            let cfg = SimConfig::paper_default(hurry_up())
+                .with_qps(qps)
+                .with_requests(requests)
+                .with_seed(0x5AAD)
+                .with_shards(shards);
+            let out = Simulation::new(cfg).run();
+            assert_eq!(out.completed + out.shed, requests, "conservation");
+            for s in &out.per_shard {
+                assert_eq!(s.offered(), requests, "per-shard conservation");
+            }
+            let amp = push_row(
+                &mut t,
+                format!("{qps:.0}"),
+                shards,
+                out.goodput_qps(),
+                out.latency.percentile(0.50),
+                out.latency.percentile(0.99),
+                &out.per_shard,
+                out.completed,
+            );
+            amps.push(amp);
+        }
+        // Fan-out tail amplification grows with S at fixed offered load:
+        // S=2 adds a max over two iid balanced shards; S=3 additionally
+        // concentrates the tail on the all-little shard, so the gap to
+        // the mean per-shard p99 widens further.
+        for w in amps.windows(2) {
+            assert!(
+                w[1] > w[0],
+                "tail amplification must increase in S at {qps} qps: {amps:?}"
+            );
+        }
+    }
+    t
+}
+
+/// Live {shards} grid at one fixed load: the same scatter-gather stack on
+/// real threads over real index slices. Asserts conservation and the
+/// e2e-dominates-every-shard invariant (wall-clock timing is too noisy
+/// for a strict amplification ordering — the sim grid pins that).
+pub fn live_grid(requests: usize) -> Table {
+    let mut t = grid_header(
+        format!(
+            "Scatter-gather sharding (live): thread-pool server @ \
+             {LIVE_QPS:.0} QPS, {requests} requests/cell"
+        ),
+        "engine",
+    );
+    let corpus = CorpusConfig {
+        num_docs: 1_500,
+        ..CorpusConfig::small()
+    }
+    .build();
+    for shards in SHARDS {
+        let cfg = LiveConfig {
+            qps: LIVE_QPS,
+            num_requests: requests,
+            seed: 0x5AAD,
+            shards,
+            ..LiveConfig::default()
+        };
+        let report = LiveServer::from_corpus(cfg, &corpus)
+            .run()
+            .expect("live sharding cell failed");
+        assert_eq!(
+            report.per_request.len() + report.shed,
+            requests,
+            "live conservation at S={shards}"
+        );
+        for s in &report.per_shard {
+            assert_eq!(s.offered(), requests, "live per-shard conservation");
+        }
+        push_row(
+            &mut t,
+            "live".into(),
+            shards,
+            report.goodput_qps(),
+            report.latency.percentile(0.50),
+            report.latency.percentile(0.99),
+            &report.per_shard,
+            report.per_request.len(),
+        );
+    }
+    t
+}
+
+/// Regenerate the sharding ablation (sim grid + live grid).
+pub fn run(scale: Scale) -> Vec<Table> {
+    vec![sim_grid(scale.cell_requests(9)), live_grid(LIVE_REQUESTS)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_grid_renders_every_cell_and_holds_invariants() {
+        // 3 loads × 3 shard counts; the dominance + amplification asserts
+        // run inside sim_grid itself.
+        assert_eq!(sim_grid(1_200).len(), 3 * 3);
+    }
+
+    #[test]
+    fn live_grid_renders_every_cell() {
+        assert_eq!(live_grid(40).len(), 3);
+    }
+
+    /// The acceptance anchor in isolation: at a fixed load, tail
+    /// amplification (e2e p99 / mean per-shard task p99) increases with
+    /// the shard count.
+    #[test]
+    fn tail_amplification_grows_with_shard_count() {
+        let amp_at = |shards: usize| -> f64 {
+            let out = Simulation::new(
+                SimConfig::paper_default(hurry_up())
+                    .with_qps(25.0)
+                    .with_requests(2_000)
+                    .with_seed(0x5AAE)
+                    .with_shards(shards),
+            )
+            .run();
+            tail_amplification(out.latency.percentile(0.99), &out.per_shard).unwrap_or(1.0)
+        };
+        let a1 = amp_at(1);
+        let a2 = amp_at(2);
+        let a3 = amp_at(3);
+        assert!((a1 - 1.0).abs() < 1e-9, "unsharded amplification is 1.0");
+        assert!(a2 > 1.0, "S=2 must amplify: {a2}");
+        assert!(a3 > a2, "amplification must grow with S: {a2} vs {a3}");
+    }
+}

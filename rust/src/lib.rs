@@ -23,16 +23,23 @@
 //!   `SchedCtx` with the live backlog snapshot; pluggable queue
 //!   disciplines — centralized FCFS, per-core dFCFS, work stealing —
 //!   each composed with a pluggable intra-queue dequeue order —
-//!   strict priority, weighted fair queueing, earliest deadline first
-//!   (`sched::order`) — and first-class admission control / load
-//!   shedding, driven identically by both execution modes), the
+//!   strict priority, weighted fair queueing (fixed-cost or size-aware
+//!   EWMA costing), earliest deadline first (`sched::order`) — and
+//!   first-class admission control / load shedding, driven identically by
+//!   both execution modes), the scatter-gather sharding layer (`shard`:
+//!   the corpus and core set partition into S self-contained shards, each
+//!   running its own full scheduling stack; every query fans out to all
+//!   shards — **scatter → per-shard schedule → gather** — completing at
+//!   last-shard-merge via a k-way top-k merge, with end-to-end tails
+//!   attributed to the slowest shard), the
 //!   discrete-event simulator, the live
 //!   thread-pool server (which executes the AOT artifact on the request
 //!   path via PJRT), the typed load generator (`loadgen`: every request
 //!   carries a service-class tag; classes declare traffic share, keyword
 //!   mix, SLO deadline and dispatch priority — per-class admission
 //!   deadlines, priority-aware queueing and class-aware reporting follow),
-//!   metrics and the experiment harness.
+//!   metrics (per-class *and* per-shard outcome accounting) and the
+//!   experiment harness.
 //!
 //! Python runs only at `make artifacts`; the serving binary is pure Rust.
 //!
@@ -52,6 +59,7 @@ pub mod platform;
 pub mod runtime;
 pub mod sched;
 pub mod search;
+pub mod shard;
 pub mod sim;
 pub mod util;
 
@@ -64,9 +72,10 @@ pub mod prelude {
         WorkloadMix,
     };
     pub use crate::mapper::{Migration, PolicyKind};
-    pub use crate::metrics::{ClassStats, LatencyHistogram, Summary};
-    pub use crate::sched::{DisciplineKind, OrderKind};
+    pub use crate::metrics::{ClassStats, LatencyHistogram, ShardStats, Summary};
+    pub use crate::sched::{DisciplineKind, OrderKind, WfqCostKind};
     pub use crate::platform::{CoreId, CoreKind, PowerModel, ThreadId, Topology};
     pub use crate::search::{Corpus, Index, Query, SearchEngine};
+    pub use crate::shard::{merge_topk, ShardIndex, ShardPlan};
     pub use crate::sim::{SimOutput, Simulation};
 }

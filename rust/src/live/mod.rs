@@ -20,7 +20,15 @@
 //!   stream and swapping core affinities on its sampling interval — the
 //!   same `HurryUp` state machine the simulator uses;
 //! * energy is computed post-hoc from per-kind busy time via the same
-//!   calibrated power model.
+//!   calibrated power model;
+//! * sharded serving (`LiveConfig::shards` > 1, built via
+//!   [`LiveServer::from_corpus`]) runs one worker pool, doc-range index
+//!   slice, dispatch queue and mapper thread *per shard*: the load
+//!   generator scatters each request through all-or-nothing admission,
+//!   every shard executes its task against its own index slice, and the
+//!   worker completing the parent's last task gathers — k-way-merging the
+//!   partial top-k into the final result and attributing the tail to the
+//!   slowest shard.
 
 pub mod server;
 pub mod worker;

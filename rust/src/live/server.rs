@@ -6,20 +6,23 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::worker::{EmulatedScorer, LiveRequest, SpeedCell};
-use crate::config::KeywordMix;
-use crate::error::Result;
+use crate::config::{KeywordMix, ShardOverride};
+use crate::error::{Error, Result};
 use crate::ipc::{stats_channel, RequestTag, StatsRecord, StatsWriter};
 use crate::loadgen::{ArrivalProcess, ClassId, ClassRegistry, ClassSpec, Workload, WorkloadMix};
-use crate::mapper::{DispatchInfo, HurryUp, HurryUpParams, Policy, PolicyKind, Shedding};
-use crate::metrics::{ClassStats, LatencyHistogram};
+use crate::mapper::{
+    AdmissionDecision, DispatchInfo, HurryUp, HurryUpParams, Policy, PolicyKind, Shedding,
+};
+use crate::metrics::{ClassStats, LatencyHistogram, ShardStats};
 use crate::platform::{AffinityTable, CoreKind, EnergyMeters, PowerModel, ThreadId, Topology};
 use crate::runtime::XlaScorer;
 use crate::sched::{
     AdmissionOutcome, DisciplineKind, OrderKind, OrderSpec, QueueView, SchedCtx,
-    SharedDispatcher,
+    ServiceEstimates, SharedDispatcher, WfqCost, WfqCostKind,
 };
 use crate::search::engine::BlockScorer;
-use crate::search::{Bm25Params, Index, Query, RustScorer, SearchEngine};
+use crate::search::{Bm25Params, Corpus, Index, Query, RustScorer, ScoredDoc, SearchEngine};
+use crate::shard::{build_shard_indexes, merge_topk, FanOutTable, ShardIndex, ShardPlan};
 use crate::util::Rng;
 
 /// Live-server configuration.
@@ -37,6 +40,18 @@ pub struct LiveConfig {
     /// Intra-queue dequeue order (default: strict priority; same selector
     /// as `SimConfig.order`).
     pub order: OrderKind,
+    /// WFQ dequeue-cost model (same selector as `SimConfig.wfq_cost`):
+    /// nominal fixed cost (default) or the live per-class mean-service
+    /// EWMA (size-aware WFQ — the workers feed the estimate table).
+    pub wfq_cost: WfqCostKind,
+    /// Number of scatter-gather shards (default 1 = unsharded). With
+    /// S > 1 the server runs one worker pool, index slice and mapper
+    /// thread per shard; build via [`LiveServer::from_corpus`] so the
+    /// shard indexes exist.
+    pub shards: usize,
+    /// Per-shard scheduling overrides, in shard order (same semantics as
+    /// `SimConfig::shard_overrides`).
+    pub shard_overrides: Vec<ShardOverride>,
     /// Admission-control deadline, ms: when set, the placement policy is
     /// wrapped in [`Shedding`] and requests whose projected queueing delay
     /// exceeds it are refused at `push` (same semantics as
@@ -72,7 +87,39 @@ impl LiveConfig {
     /// invalid declarations.
     pub fn validated(self) -> crate::error::Result<Self> {
         ClassRegistry::resolve(&self.classes, self.keyword_mix)?;
+        if self.shards == 0 {
+            return Err(Error::config("shards must be >= 1"));
+        }
+        if self.shards > self.big_cores + self.little_cores {
+            return Err(Error::config(format!(
+                "shards ({}) exceeds cores ({}): every shard needs at least one core",
+                self.shards,
+                self.big_cores + self.little_cores
+            )));
+        }
+        if self.shard_overrides.len() > self.shards {
+            return Err(Error::config(format!(
+                "{} [[shard]] overrides declared for {} shard(s)",
+                self.shard_overrides.len(),
+                self.shards
+            )));
+        }
         Ok(self)
+    }
+
+    /// The effective (discipline, order, placement-policy override) of
+    /// one shard: its override where declared, the global selector
+    /// otherwise (`None` policy = the `hurryup`-derived default).
+    pub fn shard_scheduling(
+        &self,
+        shard: usize,
+    ) -> (DisciplineKind, OrderKind, Option<PolicyKind>) {
+        let ov = self.shard_overrides.get(shard);
+        (
+            ov.and_then(|o| o.discipline).unwrap_or(self.discipline),
+            ov.and_then(|o| o.order).unwrap_or(self.order),
+            ov.and_then(|o| o.policy),
+        )
     }
 
     /// The resolved class registry (implicit default when none declared).
@@ -99,6 +146,9 @@ impl Default for LiveConfig {
             hurryup: Some(HurryUpParams::default()),
             discipline: DisciplineKind::Centralized,
             order: OrderKind::Strict,
+            wfq_cost: WfqCostKind::Nominal,
+            shards: 1,
+            shard_overrides: Vec::new(),
             shed_deadline_ms: None,
             qps: 30.0,
             num_requests: 300,
@@ -125,7 +175,8 @@ pub struct LiveRecord {
     pub started_ms: f64,
     /// Completion, ms.
     pub completed_ms: f64,
-    /// Worker thread that served it.
+    /// Worker thread that served it (sharded runs: the global core index
+    /// of the critical-path task's worker).
     pub tid: usize,
     /// Core kind at start.
     pub first_kind: CoreKind,
@@ -168,6 +219,12 @@ pub struct LiveReport {
     pub discipline: &'static str,
     /// Intra-queue dequeue-order name (`sched::order` layer).
     pub order: &'static str,
+    /// Number of scatter-gather shards served with (1 = unsharded).
+    pub shards: usize,
+    /// Per-shard fan-out outcomes (task latencies, per-class stats,
+    /// slowest-shard attribution), in shard order. Empty for unsharded
+    /// runs; the live server has no warmup, so every task is measured.
+    pub per_shard: Vec<ShardStats>,
     /// Total scoring passes across workers.
     pub total_passes: u64,
 }
@@ -222,16 +279,49 @@ struct SharedState {
 pub struct LiveServer {
     cfg: LiveConfig,
     index: Arc<Index>,
+    /// Per-shard index slices (empty for unsharded servers; populated by
+    /// [`LiveServer::from_corpus`] when `cfg.shards > 1`).
+    shard_indexes: Vec<ShardIndex>,
 }
 
 impl LiveServer {
-    /// New server over a prebuilt index.
+    /// New server over a prebuilt (unsharded) index. For sharded serving
+    /// use [`LiveServer::from_corpus`], which also builds the per-shard
+    /// index slices.
     pub fn new(cfg: LiveConfig, index: Arc<Index>) -> LiveServer {
-        LiveServer { cfg, index }
+        LiveServer {
+            cfg,
+            index,
+            shard_indexes: Vec::new(),
+        }
     }
 
-    /// Serve a generated workload to completion and report.
+    /// Build a server from a corpus: the global index always (query-term
+    /// rendering and the unsharded path), plus one [`ShardIndex`] per
+    /// shard when `cfg.shards > 1` — each a doc-range slice scoring with
+    /// corpus-wide statistics, so the gather merge reproduces the
+    /// unsharded ranking.
+    pub fn from_corpus(cfg: LiveConfig, corpus: &Corpus) -> LiveServer {
+        let index = Arc::new(Index::build(corpus));
+        let shard_indexes = if cfg.shards > 1 {
+            build_shard_indexes(corpus, cfg.shards)
+        } else {
+            Vec::new()
+        };
+        LiveServer {
+            cfg,
+            index,
+            shard_indexes,
+        }
+    }
+
+    /// Serve a generated workload to completion and report. Sharded
+    /// configurations scatter every request across all shards' worker
+    /// pools and gather at last-shard-merge ([`LiveServer::run_sharded`]).
     pub fn run(&self) -> Result<LiveReport> {
+        if self.cfg.shards > 1 {
+            return self.run_sharded();
+        }
         let cfg = &self.cfg;
         let topology = Topology::new(cfg.big_cores, cfg.little_cores);
         let n_threads = topology.num_cores();
@@ -263,10 +353,20 @@ impl LiveServer {
         let priorities = registry.priorities();
         let placement: Box<dyn Policy> =
             Shedding::wrap(placement, cfg.shed_deadline_ms, &registry);
+        // Size-aware WFQ: workers feed the shared estimate table one EWMA
+        // sample per completion (absent under nominal costing).
+        let est = matches!(cfg.wfq_cost, WfqCostKind::Estimated)
+            .then(|| ServiceEstimates::new(registry.len()));
+        let order_spec = {
+            let spec = OrderSpec::from_registry(cfg.order, &registry);
+            match &est {
+                Some(e) => spec.with_wfq_cost(WfqCost::Estimated(e.clone())),
+                None => spec,
+            }
+        };
         let shared = Arc::new(SharedState {
             queue: SharedDispatcher::new(
-                cfg.discipline
-                    .build_ordered(n_threads, &OrderSpec::from_registry(cfg.order, &registry)),
+                cfg.discipline.build_ordered(n_threads, &order_spec),
                 placement,
                 cfg.seed ^ 0x5EED_D15C,
             ),
@@ -380,6 +480,7 @@ impl LiveServer {
             let use_xla = cfg.use_xla;
             let work_scale = cfg.work_scale;
             let top_k = cfg.top_k;
+            let est = est.clone();
             workers.push(std::thread::spawn(move || -> Result<u64> {
                 // Per-thread scorer: PJRT client is not Send, build here.
                 let mut scorer: Box<dyn BlockScorer> = if use_xla {
@@ -412,6 +513,9 @@ impl LiveServer {
                     let passes = emulated.passes;
                     passes_total += passes;
                     let completed = now_ms();
+                    if let Some(est) = &est {
+                        est.observe(req.class, completed - started);
+                    }
                     stats_tx
                         .send(&StatsRecord {
                             tid: ThreadId(t),
@@ -527,6 +631,498 @@ impl LiveServer {
             backend: if cfg.use_xla { "xla" } else { "rust" },
             discipline: discipline_label,
             order: cfg.order.label(),
+            shards: 1,
+            per_shard: Vec::new(),
+            total_passes,
+        })
+    }
+
+    /// The sharded live server: one worker pool, index slice, dispatch
+    /// queue and mapper thread per shard. The load generator scatters
+    /// every request through all-or-nothing admission (probe every
+    /// shard, then push to each); the worker that completes a parent's
+    /// *last* shard task performs the gather under the fan-out lock —
+    /// k-way-merging the per-shard partial top-k into the final result,
+    /// recording end-to-end latency at last-shard-merge, and attributing
+    /// the critical path to the slowest shard.
+    fn run_sharded(&self) -> Result<LiveReport> {
+        let cfg = &self.cfg;
+        let topology = Topology::new(cfg.big_cores, cfg.little_cores);
+        let s_count = cfg.shards;
+        if self.shard_indexes.len() != s_count {
+            return Err(Error::invalid(
+                "sharded serving needs per-shard indexes — build the server \
+                 with LiveServer::from_corpus",
+            ));
+        }
+        let plan = ShardPlan::partition(&topology, s_count);
+        let registry = cfg.class_registry();
+        let priorities = registry.priorities();
+        let est = matches!(cfg.wfq_cost, WfqCostKind::Estimated)
+            .then(|| ServiceEstimates::new(registry.len()));
+        let total = cfg.num_requests;
+        let epoch = Instant::now();
+        let now_ms = move || epoch.elapsed().as_secs_f64() * 1e3;
+
+        /// One shard's queue + affinity + speed cells + migration count.
+        struct ShardShared {
+            queue: SharedDispatcher<ShardTask>,
+            aff: Mutex<AffinityTable>,
+            speeds: Vec<SpeedCell>,
+            migrations: std::sync::atomic::AtomicUsize,
+        }
+        /// One queued shard task.
+        struct ShardTask {
+            parent: u64,
+            class: ClassId,
+            query: Query,
+        }
+        /// What a finished task contributes to the gather.
+        struct TaskPartial {
+            hits: Vec<ScoredDoc>,
+            passes: u64,
+            /// Global core index of the serving worker.
+            tid: usize,
+            first_kind: CoreKind,
+            final_kind: CoreKind,
+        }
+        /// Post-hoc per-task accounting row.
+        struct TaskRow {
+            shard: usize,
+            class: ClassId,
+            arrived_ms: f64,
+            started_ms: f64,
+            completed_ms: f64,
+            final_kind: CoreKind,
+            critical: bool,
+        }
+        /// Everything the gather updates, under one lock.
+        struct Gather {
+            table: FanOutTable<TaskPartial>,
+            records: Vec<LiveRecord>,
+            task_log: Vec<TaskRow>,
+        }
+
+        // One policy rule for the whole sharded server (placement policy,
+        // mapper choice, report label): the shard's override where
+        // declared, else the global `hurryup`-derived default.
+        let effective_policy = |s: usize| -> PolicyKind {
+            cfg.shard_scheduling(s).2.unwrap_or(match cfg.hurryup {
+                Some(p) => PolicyKind::HurryUp {
+                    sampling_ms: p.sampling_ms,
+                    threshold_ms: p.threshold_ms,
+                },
+                None => PolicyKind::LinuxRandom,
+            })
+        };
+
+        // ---- per-shard scheduling stacks ----
+        let mut shard_shareds: Vec<Arc<ShardShared>> = Vec::with_capacity(s_count);
+        for s in 0..s_count {
+            let local_topo = plan.local_topology(s, &topology);
+            let (disc, order, _) = cfg.shard_scheduling(s);
+            let pkind = effective_policy(s);
+            let placement =
+                Shedding::wrap(pkind.build(&local_topo), cfg.shed_deadline_ms, &registry);
+            let spec = {
+                let spec = OrderSpec::from_registry(order, &registry);
+                match &est {
+                    Some(e) => spec.with_wfq_cost(WfqCost::Estimated(e.clone())),
+                    None => spec,
+                }
+            };
+            let aff = AffinityTable::round_robin(local_topo.clone());
+            let speeds: Vec<SpeedCell> = (0..local_topo.num_cores())
+                .map(|t| SpeedCell::new(aff.kind_of(ThreadId(t)).speed()))
+                .collect();
+            let salt = (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            shard_shareds.push(Arc::new(ShardShared {
+                queue: SharedDispatcher::new(
+                    disc.build_ordered(local_topo.num_cores(), &spec),
+                    placement,
+                    cfg.seed ^ 0x5EED_D15C ^ salt,
+                ),
+                aff: Mutex::new(aff),
+                speeds,
+                migrations: std::sync::atomic::AtomicUsize::new(0),
+            }));
+        }
+
+        let gather = Arc::new(Mutex::new(Gather {
+            table: FanOutTable::new(s_count),
+            records: Vec::new(),
+            task_log: Vec::new(),
+        }));
+        let done = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let shed_total = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+
+        // ---- per-shard mapper threads (own stats channel each) ----
+        // Engine parity with the sim: a shard migrates iff its EFFECTIVE
+        // policy is Hurry-up — a `[[shard]] policy` override replaces the
+        // global mapper choice for that shard (a non-Hurry-up override
+        // gets a drain thread and no migrations, exactly like its sim
+        // counterpart whose tick returns none; only Hurry-up has live
+        // migration support).
+        let mut mapper_handles = Vec::with_capacity(s_count);
+        let mut stats_txs: Vec<StatsWriter> = Vec::with_capacity(s_count);
+        for s in 0..s_count {
+            let (stats_tx, stats_rx) = stats_channel()?;
+            stats_txs.push(stats_tx);
+            let handle = if let PolicyKind::HurryUp {
+                sampling_ms,
+                threshold_ms,
+            } = effective_policy(s)
+            {
+                let params = HurryUpParams {
+                    sampling_ms,
+                    threshold_ms,
+                };
+                let shared = shard_shareds[s].clone();
+                let local_topo = plan.local_topology(s, &topology);
+                let tick_seed = cfg.seed
+                    ^ 0x71C4_11FE
+                    ^ (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                let (done, shed_total) = (done.clone(), shed_total.clone());
+                let mut rx = stats_rx;
+                std::thread::spawn(move || {
+                    let mut policy = HurryUp::new(params, local_topo);
+                    let mut tick_rng = Rng::new(tick_seed);
+                    rx.set_timeout(Some(Duration::from_millis(
+                        (params.sampling_ms / 4.0).max(1.0) as u64,
+                    )))
+                    .ok();
+                    let mut last_tick = 0.0f64;
+                    let mut depths: Vec<usize> = Vec::new();
+                    let mut prios: Vec<usize> = Vec::new();
+                    loop {
+                        match rx.recv() {
+                            Ok(Some(rec)) => policy.observe(&rec),
+                            Ok(None) => break, // EOF: this shard's workers left
+                            Err(_) => {}       // timeout: fall through to tick
+                        }
+                        let now = now_ms();
+                        if now - last_tick >= params.sampling_ms {
+                            last_tick = now;
+                            let queued =
+                                shared.queue.queue_view_into(&mut depths, &mut prios);
+                            let mut aff = shared.aff.lock().expect("aff poisoned");
+                            let migs = {
+                                let mut ctx = SchedCtx {
+                                    aff: &aff,
+                                    rng: &mut tick_rng,
+                                    queues: QueueView {
+                                        per_core: &depths,
+                                        per_priority: &prios,
+                                        total: queued,
+                                    },
+                                    now_ms: now,
+                                };
+                                policy.tick(&mut ctx)
+                            };
+                            for m in &migs {
+                                let (t_big, t_little) = aff.swap(m.big_core, m.little_core);
+                                shared.speeds[t_big.0].set(aff.kind_of(t_big).speed());
+                                shared.speeds[t_little.0]
+                                    .set(aff.kind_of(t_little).speed());
+                            }
+                            shared
+                                .migrations
+                                .fetch_add(migs.len(), Ordering::Relaxed);
+                        }
+                        if done.load(Ordering::Relaxed) + shed_total.load(Ordering::Relaxed)
+                            >= total
+                        {
+                            break;
+                        }
+                    }
+                    policy.migrations()
+                })
+            } else {
+                let mut rx = stats_rx;
+                std::thread::spawn(move || {
+                    while let Ok(Some(_)) = rx.recv() {}
+                    0usize
+                })
+            };
+            mapper_handles.push(handle);
+        }
+
+        // ---- per-shard worker pools ----
+        let mut workers = Vec::new();
+        for s in 0..s_count {
+            let shard_index = self.shard_indexes[s].clone();
+            let n_local = plan.cores(s).len();
+            for t in 0..n_local {
+                let shared = shard_shareds[s].clone();
+                let gather = gather.clone();
+                let done = done.clone();
+                let stats_tx: StatsWriter = stats_txs[s].clone();
+                let est = est.clone();
+                let shard_index = shard_index.clone();
+                let global_core = plan.cores(s)[t].0;
+                let use_xla = cfg.use_xla;
+                let work_scale = cfg.work_scale;
+                let top_k = cfg.top_k;
+                let n_threads = topology.num_cores();
+                workers.push(std::thread::spawn(move || -> Result<u64> {
+                    let mut scorer: Box<dyn BlockScorer> = if use_xla {
+                        Box::new(XlaScorer::load()?)
+                    } else {
+                        Box::new(RustScorer::new(Bm25Params::default()))
+                    };
+                    let engine = SearchEngine::new(shard_index.index.clone(), top_k);
+                    let mut rid_seq = ((s * n_threads + t) as u64) << 40;
+                    let mut passes_total = 0u64;
+                    while let Some(task) = shared.queue.pop(ThreadId(t), &shared.aff) {
+                        let started = now_ms();
+                        let first_kind = {
+                            let aff = shared.aff.lock().expect("aff poisoned");
+                            aff.kind_of(ThreadId(t))
+                        };
+                        let tag = RequestTag::from_seq(rid_seq);
+                        rid_seq += 1;
+                        stats_tx
+                            .send(&StatsRecord {
+                                tid: ThreadId(t),
+                                rid: tag,
+                                ts_ms: started as u64,
+                                class: Some(task.class),
+                            })
+                            .ok();
+                        let mut emulated =
+                            EmulatedScorer::new(scorer.as_mut(), &shared.speeds[t], work_scale);
+                        let result = engine.search_with(&task.query, &mut emulated)?;
+                        let passes = emulated.passes;
+                        passes_total += passes;
+                        let completed = now_ms();
+                        if let Some(est) = &est {
+                            est.observe(task.class, completed - started);
+                        }
+                        stats_tx
+                            .send(&StatsRecord {
+                                tid: ThreadId(t),
+                                rid: tag,
+                                ts_ms: completed as u64,
+                                class: Some(task.class),
+                            })
+                            .ok();
+                        let final_kind = {
+                            let aff = shared.aff.lock().expect("aff poisoned");
+                            aff.kind_of(ThreadId(t))
+                        };
+                        // Gather: start/complete bookkeeping under the
+                        // fan-out lock; the last task merges and records.
+                        let mut g = gather.lock().expect("gather poisoned");
+                        g.table.start(task.parent, s, started);
+                        if let Some(fan) = g.table.complete(
+                            task.parent,
+                            s,
+                            completed,
+                            TaskPartial {
+                                hits: shard_index.globalize(&result.hits),
+                                passes,
+                                tid: global_core,
+                                first_kind,
+                                final_kind,
+                            },
+                        ) {
+                            let critical = fan.critical_shard();
+                            let parts: Vec<Vec<ScoredDoc>> = fan
+                                .tasks()
+                                .map(|(_, td)| td.partial.hits.clone())
+                                .collect();
+                            let merged = merge_topk(&parts, top_k);
+                            let crit_task = fan.task(critical);
+                            let keywords = task.query.keyword_count();
+                            g.records.push(LiveRecord {
+                                class: fan.class,
+                                keywords,
+                                arrived_ms: fan.arrive_ms,
+                                started_ms: fan.first_start_ms(),
+                                completed_ms: fan.last_completion_ms(),
+                                tid: crit_task.partial.tid,
+                                first_kind: crit_task.partial.first_kind,
+                                final_kind: crit_task.partial.final_kind,
+                                passes: fan.tasks().map(|(_, td)| td.partial.passes).sum(),
+                                top_hit: merged.first().map(|d| (d.doc, d.score)),
+                            });
+                            for (sh, td) in fan.tasks() {
+                                g.task_log.push(TaskRow {
+                                    shard: sh,
+                                    class: fan.class,
+                                    arrived_ms: fan.arrive_ms,
+                                    started_ms: td.started_ms,
+                                    completed_ms: td.completed_ms,
+                                    final_kind: td.partial.final_kind,
+                                    critical: sh == critical,
+                                });
+                            }
+                            done.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    Ok(passes_total)
+                }));
+            }
+        }
+
+        // ---- workload + load generator (this thread) ----
+        let mut rng = Rng::new(cfg.seed);
+        let qmix = WorkloadMix::new(&registry, self.index.num_terms());
+        let workload = Workload::generate(
+            ArrivalProcess::Poisson { qps: cfg.qps },
+            &qmix,
+            cfg.num_requests,
+            true,
+            &mut rng,
+        );
+        let mut shed_by_class: Vec<usize> = vec![0; registry.len()];
+        for req in &workload.requests {
+            let target = req.arrive_ms;
+            let now = now_ms();
+            if target > now {
+                std::thread::sleep(Duration::from_secs_f64((target - now) / 1e3));
+            }
+            let terms: Vec<String> = req
+                .terms
+                .iter()
+                .map(|&id| self.index.term(id).to_string())
+                .collect();
+            let arrived = now_ms();
+            let info = DispatchInfo {
+                keywords: req.keywords,
+                class: req.class,
+                priority: priorities[req.class.idx()],
+                arrive_ms: arrived,
+            };
+            // All-or-nothing fan-out admission: probe every shard before
+            // anything is enqueued anywhere (the load generator is the
+            // only producer, so backlogs can only shrink meanwhile).
+            let refused = shard_shareds.iter().any(|sh| {
+                matches!(
+                    sh.queue.probe_admit(info, &sh.aff),
+                    AdmissionDecision::Shed { .. }
+                )
+            });
+            if refused {
+                shed_total.fetch_add(1, Ordering::Relaxed);
+                shed_by_class[req.class.idx()] += 1;
+                continue;
+            }
+            // Open the parent BEFORE any push: a fast shard may complete
+            // its task before the loop reaches the last shard.
+            gather
+                .lock()
+                .expect("gather poisoned")
+                .table
+                .open(req.id, req.class, arrived);
+            let query = Query::from_terms(terms);
+            for sh in &shard_shareds {
+                sh.queue.push_admitted(
+                    ShardTask {
+                        parent: req.id,
+                        class: req.class,
+                        query: query.clone(),
+                    },
+                    info,
+                    &sh.aff,
+                );
+            }
+        }
+        for sh in &shard_shareds {
+            sh.queue.close();
+        }
+
+        // ---- join ----
+        let mut total_passes = 0u64;
+        for w in workers {
+            total_passes += w.join().expect("worker panicked")?;
+        }
+        for tx in stats_txs {
+            tx.shutdown();
+            drop(tx);
+        }
+        let mut migrations = 0usize;
+        for h in mapper_handles {
+            migrations += h.join().expect("mapper panicked");
+        }
+        let duration_ms = now_ms();
+
+        // ---- post-hoc metrics ----
+        let gather = Arc::try_unwrap(gather)
+            .map_err(|_| Error::invalid("gather still shared after join"))?
+            .into_inner()
+            .expect("gather poisoned");
+        debug_assert!(gather.table.is_empty(), "parents stranded mid-gather");
+        let mut per_request = gather.records;
+        per_request.sort_by(|a, b| a.completed_ms.partial_cmp(&b.completed_ms).unwrap());
+        let mut latency = LatencyHistogram::new();
+        let mut per_class: Vec<ClassStats> = registry
+            .specs()
+            .iter()
+            .map(|c| ClassStats::new(c.name.clone(), c.priority, c.deadline_ms))
+            .collect();
+        for (class_stats, &n) in per_class.iter_mut().zip(&shed_by_class) {
+            class_stats.shed = n;
+        }
+        for r in &per_request {
+            latency.record(r.latency_ms());
+            per_class[r.class.idx()].record_completion(
+                r.latency_ms(),
+                r.started_ms - r.arrived_ms,
+                true,
+            );
+        }
+        let mut per_shard: Vec<ShardStats> = (0..s_count)
+            .map(|s| {
+                let (disc, order, _) = cfg.shard_scheduling(s);
+                ShardStats::new(
+                    s,
+                    plan.local_topology(s, &topology).label(),
+                    disc.label(),
+                    order.label(),
+                    effective_policy(s).label(),
+                    &registry,
+                )
+            })
+            .collect();
+        let mut busy_big = 0.0f64;
+        let mut busy_little = 0.0f64;
+        for row in &gather.task_log {
+            per_shard[row.shard].record_task(
+                row.class,
+                row.completed_ms - row.arrived_ms,
+                row.started_ms - row.arrived_ms,
+                true,
+                row.critical,
+            );
+            match row.final_kind {
+                CoreKind::Big => busy_big += row.completed_ms - row.started_ms,
+                CoreKind::Little => busy_little += row.completed_ms - row.started_ms,
+            }
+        }
+        // All-or-nothing admission: a shed parent is a shed task on every
+        // shard, so per-shard conservation holds exactly.
+        let shed = shed_total.load(Ordering::Relaxed);
+        for stats in per_shard.iter_mut() {
+            for (class_stats, &n) in stats.per_class.iter_mut().zip(&shed_by_class) {
+                class_stats.shed = n;
+            }
+        }
+        let energy = energy_from_busy(busy_big, busy_little, &topology, duration_ms);
+
+        Ok(LiveReport {
+            latency,
+            per_request,
+            energy,
+            duration_ms,
+            migrations,
+            shed,
+            per_class,
+            backend: if cfg.use_xla { "xla" } else { "rust" },
+            discipline: cfg.discipline.label(),
+            order: cfg.order.label(),
+            shards: s_count,
+            per_shard,
             total_passes,
         })
     }
@@ -541,8 +1137,6 @@ fn post_hoc_energy(
     topology: &Topology,
     duration_ms: f64,
 ) -> EnergyMeters {
-    let power = PowerModel::juno_r1();
-    let mut meters = EnergyMeters::new();
     let mut busy_big = 0.0;
     let mut busy_little = 0.0;
     for r in records {
@@ -552,6 +1146,21 @@ fn post_hoc_energy(
             CoreKind::Little => busy_little += service,
         }
     }
+    energy_from_busy(busy_big, busy_little, topology, duration_ms)
+}
+
+/// Shared tail of the post-hoc energy estimate: per-kind busy time
+/// (already attributed — per request unsharded, per shard *task* sharded,
+/// since parent spans overlap their tasks) capped at each cluster's
+/// capacity, idle time filling the remainder.
+fn energy_from_busy(
+    busy_big: f64,
+    busy_little: f64,
+    topology: &Topology,
+    duration_ms: f64,
+) -> EnergyMeters {
+    let power = PowerModel::juno_r1();
+    let mut meters = EnergyMeters::new();
     let cap = |busy: f64, cores: usize| busy.min(cores as f64 * duration_ms);
     let busy_big = cap(busy_big, topology.count(CoreKind::Big));
     let busy_little = cap(busy_little, topology.count(CoreKind::Little));

@@ -16,10 +16,10 @@ use hurryup::error::{Error, Result};
 use hurryup::experiments::{self, Scale};
 use hurryup::live::{LiveConfig, LiveServer};
 use hurryup::mapper::{HurryUpParams, PolicyKind};
+use hurryup::metrics::report;
 use hurryup::prelude::*;
-use hurryup::sched::{DisciplineKind, OrderKind};
+use hurryup::sched::{DisciplineKind, OrderKind, WfqCostKind};
 use hurryup::search::{self, Bm25Params, RustScorer};
-use hurryup::util::fmt::Table;
 
 const USAGE: &str = "\
 hurryup — request-level thread mapping for web search on big/little cores
@@ -27,16 +27,16 @@ hurryup — request-level thread mapping for web search on big/little cores
 
 USAGE:
   hurryup sim     [--config f.toml] [--qps N] [--requests N] [--policy P]
-                  [--discipline D] [--order O] [--shed-deadline-ms N]
-                  [--classes SPEC] [--seed N] [--threshold-ms N]
-                  [--sampling-ms N]
+                  [--discipline D] [--order O] [--wfq-cost C] [--shards S]
+                  [--shed-deadline-ms N] [--classes SPEC] [--seed N]
+                  [--threshold-ms N] [--sampling-ms N]
   hurryup serve   [--qps N] [--requests N] [--policy P] [--discipline D]
-                  [--order O] [--shed-deadline-ms N] [--classes SPEC]
-                  [--xla] [--docs N]
+                  [--order O] [--wfq-cost C] [--shards S]
+                  [--shed-deadline-ms N] [--classes SPEC] [--xla] [--docs N]
   hurryup index   [--docs N] [--vocab N]
   hurryup query   --q \"search terms\" [--xla] [--docs N]
   hurryup figures [fig1 fig2 fig3 fig6 fig7 fig8 fig9 power_table ablations
-                  disciplines shedding classes orders]
+                  disciplines shedding classes orders sharding]
                   [--full | --scale quick|full]
   hurryup check
 
@@ -46,8 +46,18 @@ DISCIPLINES: centralized (cfcfs) | per_core (dfcfs) | work_steal (steal)
 ORDERS:      strict (prio) | wfq (drr) | edf (deadline) — intra-queue
              dequeue order; strict is the default, wfq shares dequeues by
              class weight, edf serves earliest class deadline first
+WFQ COST:    --wfq-cost nominal (default) | estimated — what a wfq dequeue
+             charges: the fixed nominal (weights share dequeue slots) or
+             the class's live mean-service EWMA (size-aware WFQ — weights
+             share served time)
+SHARDING:    --shards S partitions the index and core set into S shards;
+             every request fans out to all shards (scatter → per-shard
+             schedule → gather) and completes at last-shard-merge.
+             Per-shard discipline/order/policy via [[shard]] TOML tables;
+             reports add a per-shard table + slowest-shard attribution
 ADMISSION:   --shed-deadline-ms wraps the policy in the projected-delay
-             shedder (inf = admission path, never sheds)
+             shedder (inf = admission path, never sheds); sharded runs
+             shed all-or-nothing across shards
 CLASSES:     --classes declares service classes (SPEC =
              \"name:key=val,...;name:...\", keys share | mix | deadline_ms |
              priority | weight; mix = paper | fixed:K | uniform:LO:HI). A
@@ -107,30 +117,41 @@ fn order_from(args: &Args, default: OrderKind) -> Result<OrderKind> {
     }
 }
 
+fn wfq_cost_from(args: &Args, default: WfqCostKind) -> Result<WfqCostKind> {
+    match args.get("wfq-cost") {
+        None => Ok(default),
+        Some(s) => WfqCostKind::parse(s)
+            .ok_or_else(|| Error::invalid(format!("unknown wfq cost `{s}`"))),
+    }
+}
+
 fn policy_from(args: &Args) -> Result<PolicyKind> {
-    let sampling = args.get_f64("sampling-ms", 25.0)?;
-    let threshold = args.get_f64("threshold-ms", 50.0)?;
+    // One shared token table (config::parse_policy_token — also the
+    // `[[shard]]` and TOML `policy.kind` surface); the CLI then patches
+    // the parameterised kinds from their flags.
     let raw = args.get("policy").unwrap_or("hurry_up");
-    // Case-insensitive, trimmed, `-` == `_` (so `--policy Hurry-Up` works).
-    Ok(match hurryup::util::norm_token(raw).as_str() {
-        "hurry_up" => PolicyKind::HurryUp {
-            sampling_ms: sampling,
-            threshold_ms: threshold,
-        },
-        "linux_random" => PolicyKind::LinuxRandom,
-        "round_robin" => PolicyKind::RoundRobin,
-        "all_big" => PolicyKind::AllBig,
-        "all_little" => PolicyKind::AllLittle,
-        "oracle" => PolicyKind::Oracle {
-            cutoff_kw: args.get_usize("oracle-cutoff", 5)?,
-        },
-        "app_level" => PolicyKind::AppLevel {
-            qos_ms: args.get_f64("qos-ms", 500.0)?,
-            sampling_ms: sampling,
-        },
-        "queue_aware" => PolicyKind::QueueAware,
-        _ => return Err(Error::invalid(format!("unknown policy `{raw}`"))),
-    })
+    let mut kind = hurryup::config::parse_policy_token(raw)?;
+    match &mut kind {
+        PolicyKind::HurryUp {
+            sampling_ms,
+            threshold_ms,
+        } => {
+            *sampling_ms = args.get_f64("sampling-ms", *sampling_ms)?;
+            *threshold_ms = args.get_f64("threshold-ms", *threshold_ms)?;
+        }
+        PolicyKind::Oracle { cutoff_kw } => {
+            *cutoff_kw = args.get_usize("oracle-cutoff", *cutoff_kw)?;
+        }
+        PolicyKind::AppLevel {
+            qos_ms,
+            sampling_ms,
+        } => {
+            *qos_ms = args.get_f64("qos-ms", *qos_ms)?;
+            *sampling_ms = args.get_f64("sampling-ms", *sampling_ms)?;
+        }
+        _ => {}
+    }
+    Ok(kind)
 }
 
 /// Optional `--shed-deadline-ms` value; accepts `inf` for the
@@ -160,6 +181,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
     cfg.seed = args.get_usize("seed", cfg.seed as usize)? as u64;
     cfg.discipline = discipline_from(args, cfg.discipline)?;
     cfg.order = order_from(args, cfg.order)?;
+    cfg.wfq_cost = wfq_cost_from(args, cfg.wfq_cost)?;
+    cfg.shards = args.get_usize("shards", cfg.shards)?;
     if let Some(deadline) = shed_deadline_from(args)? {
         cfg.shed_deadline_ms = Some(deadline);
     }
@@ -168,13 +191,18 @@ fn cmd_sim(args: &Args) -> Result<()> {
     }
     let cfg = cfg.validated()?;
     println!(
-        "sim: {} | {} qps | {} requests | seed {} | queue {} | order {}{}",
+        "sim: {} | {} qps | {} requests | seed {} | queue {} | order {}{}{}",
         cfg.topology().label(),
         cfg.qps,
         cfg.num_requests,
         cfg.seed,
         cfg.discipline.label(),
         cfg.order.label(),
+        if cfg.shards > 1 {
+            format!(" | {} shards", cfg.shards)
+        } else {
+            String::new()
+        },
         match cfg.shed_deadline_ms {
             Some(d) => format!(" | shed-deadline {d} ms"),
             None => String::new(),
@@ -199,40 +227,17 @@ fn cmd_sim(args: &Args) -> Result<()> {
     // has attainment and shed columns worth reading.
     if typed {
         println!();
-        class_table(&out.per_class, out.duration_ms).print();
+        report::class_table(&out.per_class, out.duration_ms).print();
+    }
+    if out.shards > 1 {
+        println!();
+        println!(
+            "fan-out    : {}",
+            report::fanout_line(out.latency.percentile(0.99), &out.per_shard)
+        );
+        report::shard_table(&out.per_shard, out.completed).print();
     }
     Ok(())
-}
-
-/// Per-class report table shared by `sim` and `serve` output.
-fn class_table(per_class: &[hurryup::metrics::ClassStats], duration_ms: f64) -> Table {
-    use hurryup::util::fmt::{ms_or_dash, pct, pct_or_dash};
-    let mut t = Table::new(
-        "per-class outcomes",
-        &[
-            "class", "prio", "offered", "done", "shed", "shed%", "goodput",
-            "p50_ms", "p90_ms", "p99_ms", "wait_p99", "wait_max", "slo",
-        ],
-    );
-    for cs in per_class {
-        let s = cs.summary();
-        t.row(&[
-            cs.name.clone(),
-            cs.priority.to_string(),
-            cs.offered().to_string(),
-            cs.completed.to_string(),
-            cs.shed.to_string(),
-            pct(cs.shed_rate()),
-            format!("{:.1}", cs.goodput_qps(duration_ms)),
-            ms_or_dash(s.p50, s.count),
-            ms_or_dash(s.p90, s.count),
-            ms_or_dash(s.p99, s.count),
-            ms_or_dash(cs.wait_p99_ms(), s.count),
-            ms_or_dash(cs.wait_max_ms(), s.count),
-            pct_or_dash(cs.slo_attainment()),
-        ]);
-    }
-    t
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -242,7 +247,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ..CorpusConfig::small()
     }
     .build();
-    let index = Arc::new(Index::build(&corpus));
     let raw_policy = args.get("policy").unwrap_or("hurry_up");
     let hurryup = match hurryup::util::norm_token(raw_policy).as_str() {
         "hurry_up" => Some(HurryUpParams {
@@ -263,6 +267,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         hurryup,
         discipline: discipline_from(args, DisciplineKind::Centralized)?,
         order: order_from(args, OrderKind::Strict)?,
+        wfq_cost: wfq_cost_from(args, WfqCostKind::Nominal)?,
+        shards: args.get_usize("shards", 1)?,
         shed_deadline_ms: shed_deadline_from(args)?,
         ..LiveConfig::default()
     };
@@ -274,36 +280,49 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // clean CLI error, not a panic inside the server.
     let cfg = cfg.validated()?;
     println!(
-        "serve: 2B4L | {} qps | {} requests | backend={} | mapper={} | queue {} | order {}{}",
+        "serve: 2B4L | {} qps | {} requests | backend={} | mapper={} | queue {} | order {}{}{}",
         cfg.qps,
         cfg.num_requests,
         if cfg.use_xla { "xla" } else { "rust" },
         if cfg.hurryup.is_some() { "hurry-up" } else { "static" },
         cfg.discipline.label(),
         cfg.order.label(),
+        if cfg.shards > 1 {
+            format!(" | {} shards", cfg.shards)
+        } else {
+            String::new()
+        },
         match cfg.shed_deadline_ms {
             Some(d) => format!(" | shed-deadline {d} ms"),
             None => String::new(),
         },
     );
     let typed = !cfg.classes.is_empty();
-    let report = LiveServer::new(cfg, index).run()?;
-    println!("served     : {}", report.per_request.len());
-    println!("order      : {}", report.order);
-    println!("shed       : {}", report.shed);
-    println!("goodput    : {:.1} qps", report.goodput_qps());
+    let out = LiveServer::from_corpus(cfg, &corpus).run()?;
+    println!("served     : {}", out.per_request.len());
+    println!("order      : {}", out.order);
+    println!("shed       : {}", out.shed);
+    println!("goodput    : {:.1} qps", out.goodput_qps());
     println!(
         "p50 / p90 / p99 : {:.0} / {:.0} / {:.0} ms",
-        report.latency.percentile(0.5),
-        report.p90_ms(),
-        report.latency.percentile(0.99)
+        out.latency.percentile(0.5),
+        out.p90_ms(),
+        out.latency.percentile(0.99)
     );
-    println!("migrations : {}", report.migrations);
-    println!("passes     : {}", report.total_passes);
-    println!("energy     : {:.1} J (post-hoc model)", report.energy.total_j());
+    println!("migrations : {}", out.migrations);
+    println!("passes     : {}", out.total_passes);
+    println!("energy     : {:.1} J (post-hoc model)", out.energy.total_j());
     if typed {
         println!();
-        class_table(&report.per_class, report.duration_ms).print();
+        report::class_table(&out.per_class, out.duration_ms).print();
+    }
+    if out.shards > 1 {
+        println!();
+        println!(
+            "fan-out    : {}",
+            report::fanout_line(out.latency.percentile(0.99), &out.per_shard)
+        );
+        report::shard_table(&out.per_shard, out.per_request.len()).print();
     }
     Ok(())
 }

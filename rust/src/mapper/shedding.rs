@@ -65,8 +65,10 @@ use crate::ipc::{RequestTag, StatsRecord};
 use crate::loadgen::ClassId;
 use crate::platform::CoreId;
 
-/// EWMA weight of each new service-time sample.
-const EWMA_ALPHA: f64 = 0.1;
+/// EWMA weight of each new service-time sample (shared with the engines'
+/// [`crate::sched::ServiceEstimates`] table, which feeds size-aware WFQ
+/// costing — the two estimators stay calibrated identically).
+pub const EWMA_ALPHA: f64 = 0.1;
 
 /// Stats sampling interval the wrapper requests when the wrapped policy is
 /// static (`sampling_ms` = `None`), ms — the engines deliver the stats

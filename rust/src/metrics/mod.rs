@@ -1,14 +1,20 @@
 //! Latency/throughput metrics: log-bucketed histograms with percentile
 //! queries (the paper reports 90th-percentile tail latency), running
-//! mean/std (Fig 1 error bars), PDF estimation (Fig 6), and per-class
-//! outcome accounting (service-class SLO reports).
+//! mean/std (Fig 1 error bars), PDF estimation (Fig 6), per-class outcome
+//! accounting (service-class SLO reports), per-shard outcome accounting
+//! for scatter-gather runs (task tails + slowest-shard attribution), and
+//! the shared report tables (`report`) the CLI and experiment runners
+//! print.
 
 pub mod class_stats;
 pub mod histogram;
 pub mod pdf;
+pub mod report;
+pub mod shard_stats;
 pub mod summary;
 
 pub use class_stats::ClassStats;
 pub use histogram::LatencyHistogram;
 pub use pdf::pdf_from_samples;
+pub use shard_stats::{tail_amplification, ShardStats};
 pub use summary::Summary;

@@ -1,0 +1,125 @@
+//! Shared report rendering: the per-class and per-shard tables every
+//! surface prints — the `sim`/`serve` CLI, the `experiments/` runners and
+//! library users all call these instead of reimplementing row formats
+//! (extracted from the launcher, where the class table used to live).
+
+use super::class_stats::ClassStats;
+use super::shard_stats::{tail_amplification, ShardStats};
+use crate::util::fmt::{ms, ms_or_dash, pct, pct_or_dash, Table};
+
+/// Per-class outcome table (offered/done/shed/goodput/latency/wait/SLO) —
+/// the standard class-aware report of both engines. `duration_ms` is the
+/// run span the goodput column divides by.
+pub fn class_table(per_class: &[ClassStats], duration_ms: f64) -> Table {
+    let mut t = Table::new(
+        "per-class outcomes",
+        &[
+            "class", "prio", "offered", "done", "shed", "shed%", "goodput",
+            "p50_ms", "p90_ms", "p99_ms", "wait_p99", "wait_max", "slo",
+        ],
+    );
+    for cs in per_class {
+        let s = cs.summary();
+        t.row(&[
+            cs.name.clone(),
+            cs.priority.to_string(),
+            cs.offered().to_string(),
+            cs.completed.to_string(),
+            cs.shed.to_string(),
+            pct(cs.shed_rate()),
+            format!("{:.1}", cs.goodput_qps(duration_ms)),
+            ms_or_dash(s.p50, s.count),
+            ms_or_dash(s.p90, s.count),
+            ms_or_dash(s.p99, s.count),
+            ms_or_dash(cs.wait_p99_ms(), s.count),
+            ms_or_dash(cs.wait_max_ms(), s.count),
+            pct_or_dash(cs.slo_attainment()),
+        ]);
+    }
+    t
+}
+
+/// Per-shard fan-out table: each shard's scheduling stack, task-latency
+/// tail and critical-path attribution. `parents_completed` is the run's
+/// completed parent count (the denominator of the `crit%` column).
+pub fn shard_table(per_shard: &[ShardStats], parents_completed: usize) -> Table {
+    let mut t = Table::new(
+        "per-shard outcomes (fan-out)",
+        &[
+            "shard", "cores", "queue", "order", "policy", "tasks", "shed",
+            "task_p50", "task_p99", "crit", "crit%",
+        ],
+    );
+    for s in per_shard {
+        t.row(&[
+            s.shard.to_string(),
+            s.cores.clone(),
+            s.discipline.clone(),
+            s.order.clone(),
+            s.policy.clone(),
+            s.completed().to_string(),
+            s.shed().to_string(),
+            ms_or_dash(s.task_p50_ms(), s.tasks.count()),
+            ms_or_dash(s.task_p99_ms(), s.tasks.count()),
+            s.critical.to_string(),
+            pct(s.critical_share(parents_completed)),
+        ]);
+    }
+    t
+}
+
+/// One-line fan-out summary: end-to-end p99 against the slowest and mean
+/// per-shard task p99, plus the tail amplification ratio.
+pub fn fanout_line(e2e_p99_ms: f64, per_shard: &[ShardStats]) -> String {
+    let max_p99 = per_shard
+        .iter()
+        .map(ShardStats::task_p99_ms)
+        .fold(0.0f64, f64::max);
+    match tail_amplification(e2e_p99_ms, per_shard) {
+        Some(amp) => format!(
+            "e2e p99 {} ms vs max shard p99 {} ms | tail amplification {:.2}x (e2e/mean shard p99)",
+            ms(e2e_p99_ms),
+            ms(max_p99),
+            amp
+        ),
+        None => "no measured shard tasks".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KeywordMix;
+    use crate::loadgen::{ClassId, ClassRegistry};
+
+    #[test]
+    fn class_table_renders_dashes_for_empty_classes() {
+        let cs = ClassStats::new("ghost", 0, Some(500.0));
+        let t = class_table(&[cs], 1_000.0);
+        assert_eq!(t.len(), 1);
+        let rendered = t.render();
+        assert!(rendered.contains("ghost"));
+        assert!(rendered.contains('-'), "empty stats render dashes");
+        assert!(!rendered.contains("NaN"));
+    }
+
+    #[test]
+    fn shard_table_and_fanout_line_cover_each_shard() {
+        let reg = ClassRegistry::single(KeywordMix::Paper);
+        let mut a = ShardStats::new(0, "1B2L", "centralized", "strict", "hurry-up", &reg);
+        let mut b = ShardStats::new(1, "1B2L", "per_core", "wfq", "hurry-up", &reg);
+        for _ in 0..50 {
+            a.record_task(ClassId(0), 100.0, 10.0, true, false);
+            b.record_task(ClassId(0), 200.0, 20.0, true, true);
+        }
+        let t = shard_table(&[a.clone(), b.clone()], 50);
+        assert_eq!(t.len(), 2);
+        let rendered = t.render();
+        assert!(rendered.contains("per_core") && rendered.contains("wfq"));
+        assert!(rendered.contains("100.0%"), "shard 1 owns the critical path");
+        let line = fanout_line(220.0, &[a, b]);
+        assert!(line.contains("amplification"), "{line}");
+        assert!(!line.contains("NaN"));
+        assert_eq!(fanout_line(0.0, &[]), "no measured shard tasks");
+    }
+}

@@ -1,0 +1,213 @@
+//! Per-shard outcome accounting for scatter-gather runs — the shard-aware
+//! slice of a run report, shared by the simulator
+//! ([`crate::sim::SimOutput::per_shard`]) and the live server
+//! ([`crate::live::LiveReport::per_shard`]).
+//!
+//! Two observables matter for fan-out serving and both live here:
+//!
+//! * **per-shard task statistics** — every shard task's latency and
+//!   queueing wait, per service class ([`ClassStats`]) and pooled
+//!   ([`ShardStats::tasks`]); end-to-end p99 is always ≥ every shard's
+//!   task p99 (a parent's latency is the max over its tasks), and the gap
+//!   is the fan-out tail amplification ([`tail_amplification`]);
+//! * **slowest-shard attribution** — [`ShardStats::critical`] counts how
+//!   often this shard's task finished *last* (the critical path): a
+//!   skewed attribution histogram names the shard that owns the tail.
+//!
+//! Conservation per shard: every parent offered to the server is either a
+//! completed task or a shed task on *every* shard —
+//! `offered() == completed() + shed()` shard by shard (all-or-nothing
+//! admission; pinned by `rust/tests/sched_properties.rs`).
+
+use super::class_stats::ClassStats;
+use super::histogram::LatencyHistogram;
+use crate::loadgen::{ClassId, ClassRegistry};
+
+/// Outcomes of one shard over one run.
+#[derive(Clone, Debug)]
+pub struct ShardStats {
+    /// Shard number (plan order).
+    pub shard: usize,
+    /// Local core-set label, e.g. `1B2L`.
+    pub cores: String,
+    /// Queue-discipline label this shard ran.
+    pub discipline: String,
+    /// Dequeue-order label this shard ran.
+    pub order: String,
+    /// Placement-policy label this shard ran.
+    pub policy: String,
+    /// Shard-task latency histogram over measured completions, all classes
+    /// pooled (the same measured population as the end-to-end histogram —
+    /// tasks of measured parents).
+    pub tasks: LatencyHistogram,
+    /// Per-class task outcomes, in class-registry order.
+    pub per_class: Vec<ClassStats>,
+    /// Parents whose *slowest* task ran on this shard (critical-path
+    /// attribution; sums to the completed parent count across shards).
+    pub critical: usize,
+}
+
+impl ShardStats {
+    /// Empty stats for one shard of a plan.
+    pub fn new(
+        shard: usize,
+        cores: impl Into<String>,
+        discipline: impl Into<String>,
+        order: impl Into<String>,
+        policy: impl Into<String>,
+        registry: &ClassRegistry,
+    ) -> ShardStats {
+        ShardStats {
+            shard,
+            cores: cores.into(),
+            discipline: discipline.into(),
+            order: order.into(),
+            policy: policy.into(),
+            tasks: LatencyHistogram::new(),
+            per_class: registry
+                .specs()
+                .iter()
+                .map(|s| ClassStats::new(s.name.clone(), s.priority, s.deadline_ms))
+                .collect(),
+            critical: 0,
+        }
+    }
+
+    /// Account one completed shard task. `measured` follows the parent's
+    /// warmup status; `critical` marks the parent's slowest task.
+    pub fn record_task(
+        &mut self,
+        class: ClassId,
+        latency_ms: f64,
+        wait_ms: f64,
+        measured: bool,
+        critical: bool,
+    ) {
+        if measured {
+            self.tasks.record(latency_ms);
+        }
+        self.per_class[class.idx()].record_completion(latency_ms, wait_ms, measured);
+        if critical {
+            self.critical += 1;
+        }
+    }
+
+    /// Account one shed parent (all-or-nothing admission sheds the task on
+    /// every shard).
+    pub fn record_shed(&mut self, class: ClassId) {
+        self.per_class[class.idx()].record_shed();
+    }
+
+    /// Tasks completed on this shard (including warmup).
+    pub fn completed(&self) -> usize {
+        self.per_class.iter().map(|c| c.completed).sum()
+    }
+
+    /// Tasks shed on this shard.
+    pub fn shed(&self) -> usize {
+        self.per_class.iter().map(|c| c.shed).sum()
+    }
+
+    /// Parents offered to this shard (completed + shed tasks).
+    pub fn offered(&self) -> usize {
+        self.completed() + self.shed()
+    }
+
+    /// Median measured task latency, ms (0.0 when nothing measured).
+    pub fn task_p50_ms(&self) -> f64 {
+        if self.tasks.is_empty() {
+            return 0.0;
+        }
+        self.tasks.percentile(0.50)
+    }
+
+    /// 99th-percentile measured task latency, ms (0.0 when nothing
+    /// measured) — compare against the run's end-to-end p99.
+    pub fn task_p99_ms(&self) -> f64 {
+        if self.tasks.is_empty() {
+            return 0.0;
+        }
+        self.tasks.percentile(0.99)
+    }
+
+    /// Fraction of completed parents whose critical path was this shard.
+    pub fn critical_share(&self, parents_completed: usize) -> f64 {
+        if parents_completed == 0 {
+            return 0.0;
+        }
+        self.critical as f64 / parents_completed as f64
+    }
+}
+
+/// Fan-out tail amplification: end-to-end p99 over the *mean* per-shard
+/// task p99 — 1.0 means no amplification (S = 1), and it grows with S at
+/// fixed per-shard load (a maximum over more draws). `None` when no shard
+/// measured any task (nothing completed, or an unsharded run).
+pub fn tail_amplification(e2e_p99_ms: f64, per_shard: &[ShardStats]) -> Option<f64> {
+    let p99s: Vec<f64> = per_shard
+        .iter()
+        .filter(|s| !s.tasks.is_empty())
+        .map(ShardStats::task_p99_ms)
+        .collect();
+    if p99s.is_empty() {
+        return None;
+    }
+    let mean = p99s.iter().sum::<f64>() / p99s.len() as f64;
+    (mean > 0.0).then(|| e2e_p99_ms / mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KeywordMix;
+
+    fn stats() -> ShardStats {
+        ShardStats::new(
+            0,
+            "1B2L",
+            "centralized",
+            "strict",
+            "hurry-up",
+            &ClassRegistry::single(KeywordMix::Paper),
+        )
+    }
+
+    #[test]
+    fn conservation_and_critical_accounting() {
+        let mut s = stats();
+        s.record_task(ClassId(0), 120.0, 20.0, true, true);
+        s.record_task(ClassId(0), 300.0, 80.0, true, false);
+        s.record_task(ClassId(0), 50.0, 5.0, false, true); // warmup, critical
+        s.record_shed(ClassId(0));
+        assert_eq!(s.completed(), 3);
+        assert_eq!(s.shed(), 1);
+        assert_eq!(s.offered(), 4);
+        assert_eq!(s.critical, 2, "critical counts warmup parents too");
+        assert_eq!(s.tasks.count(), 2, "warmup excluded from the histogram");
+        assert!(s.task_p99_ms() >= s.task_p50_ms());
+        assert!((s.critical_share(4) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_shard_reports_zero_not_nan() {
+        let s = stats();
+        assert_eq!(s.task_p50_ms(), 0.0);
+        assert_eq!(s.task_p99_ms(), 0.0);
+        assert_eq!(s.critical_share(0), 0.0);
+        assert_eq!(tail_amplification(100.0, &[s]), None);
+        assert_eq!(tail_amplification(100.0, &[]), None);
+    }
+
+    #[test]
+    fn tail_amplification_over_mean_shard_p99() {
+        let mut a = stats();
+        let mut b = stats();
+        for _ in 0..200 {
+            a.record_task(ClassId(0), 100.0, 0.0, true, false);
+            b.record_task(ClassId(0), 300.0, 0.0, true, true);
+        }
+        // Mean shard p99 ≈ 200; e2e p99 400 ⇒ amplification ≈ 2.
+        let amp = tail_amplification(400.0, &[a, b]).unwrap();
+        assert!((amp - 2.0).abs() < 0.1, "amp={amp}");
+    }
+}

@@ -124,6 +124,90 @@ impl<T> Dispatcher<T> {
         AdmissionOutcome::Admitted
     }
 
+    /// Run ONLY the admission stage against the current backlog — no
+    /// ticket, payload or queue state is touched either way. The
+    /// scatter-gather frontend uses this for *all-or-nothing* fan-out
+    /// admission: every shard's dispatcher is probed first, and only if
+    /// all admit is [`Dispatcher::enqueue_admitted`] called on each — a
+    /// refusal anywhere sheds the parent before anything is enqueued
+    /// anywhere, so per-shard conservation stays exact. The [`SchedCtx`]
+    /// seen by the policy is identical to the one [`Dispatcher::enqueue`]
+    /// would build.
+    pub fn admit_probe(
+        &mut self,
+        info: DispatchInfo,
+        policy: &mut dyn Policy,
+        aff: &AffinityTable,
+        rng: &mut Rng,
+        now_ms: f64,
+    ) -> AdmissionDecision {
+        let Dispatcher {
+            discipline,
+            depth_scratch,
+            prio_scratch,
+            ..
+        } = self;
+        discipline.depths_into(depth_scratch);
+        discipline.prios_into(prio_scratch);
+        let mut ctx = SchedCtx {
+            aff,
+            rng,
+            queues: QueueView {
+                per_core: depth_scratch,
+                per_priority: prio_scratch,
+                total: discipline.queued(),
+            },
+            now_ms,
+        };
+        policy.admit(info, &mut ctx)
+    }
+
+    /// Store and enqueue a request WITHOUT consulting admission — the
+    /// second phase of all-or-nothing fan-out admission (the caller
+    /// already ran [`Dispatcher::admit_probe`] on every shard). Since the
+    /// backlog cannot have grown between the probe and this call in either
+    /// engine (the simulator is single-threaded; the live load generator
+    /// is the only producer), the probe's ruling still describes the
+    /// backlog ahead of this request.
+    pub fn enqueue_admitted(
+        &mut self,
+        payload: T,
+        info: DispatchInfo,
+        policy: &mut dyn Policy,
+        aff: &AffinityTable,
+        rng: &mut Rng,
+        now_ms: f64,
+    ) {
+        let Dispatcher {
+            discipline,
+            payloads,
+            next_ticket,
+            depth_scratch,
+            prio_scratch,
+        } = self;
+        discipline.depths_into(depth_scratch);
+        discipline.prios_into(prio_scratch);
+        let mut ctx = SchedCtx {
+            aff,
+            rng,
+            queues: QueueView {
+                per_core: depth_scratch,
+                per_priority: prio_scratch,
+                total: discipline.queued(),
+            },
+            now_ms,
+        };
+        let ticket = *next_ticket;
+        *next_ticket += 1;
+        payloads.insert(ticket, payload);
+        discipline.enqueue(QueuedTicket { ticket, info }, policy, &mut ctx);
+        debug_assert_eq!(
+            payloads.len(),
+            discipline.queued(),
+            "discipline dropped a ticket at enqueue"
+        );
+    }
+
     /// Hand at most one queued request to one of the `idle` cores. Callers
     /// loop — refreshing `idle` as cores become busy — until `None`.
     pub fn next(
@@ -262,6 +346,80 @@ mod tests {
     #[test]
     fn centralized_drains_in_fifo_order() {
         assert_eq!(drain(DisciplineKind::Centralized), (0..40).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn admit_probe_rules_without_touching_state() {
+        // A capping policy: sheds once 3 requests are visible.
+        struct Cap;
+        impl Policy for Cap {
+            fn name(&self) -> String {
+                "cap".into()
+            }
+            fn sampling_ms(&self) -> Option<f64> {
+                None
+            }
+            fn admit(
+                &mut self,
+                _info: DispatchInfo,
+                ctx: &mut SchedCtx<'_>,
+            ) -> AdmissionDecision {
+                if ctx.queues.total >= 3 {
+                    AdmissionDecision::Shed {
+                        reason: ShedReason::QueueFull {
+                            queued: ctx.queues.total,
+                            limit: 3,
+                        },
+                    }
+                } else {
+                    AdmissionDecision::Admit
+                }
+            }
+            fn choose_core(
+                &mut self,
+                idle: &[CoreId],
+                _info: DispatchInfo,
+                _ctx: &mut SchedCtx<'_>,
+            ) -> Option<CoreId> {
+                idle.first().copied()
+            }
+        }
+
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo);
+        let mut policy = Cap;
+        let mut rng = Rng::new(3);
+        for kind in DisciplineKind::all() {
+            let mut d: Dispatcher<usize> = Dispatcher::new(kind.build(6));
+            // Probe admits below the cap and NEVER changes queue state.
+            for _ in 0..5 {
+                assert_eq!(
+                    d.admit_probe(DispatchInfo::untyped(1), &mut policy, &aff, &mut rng, 0.0),
+                    AdmissionDecision::Admit,
+                    "{kind:?}"
+                );
+                assert_eq!(d.queued(), 0, "{kind:?}: probe must not enqueue");
+            }
+            // Phase 2 stores unconditionally (two-phase fan-out admission).
+            for i in 0..4usize {
+                d.enqueue_admitted(i, DispatchInfo::untyped(1), &mut policy, &aff, &mut rng, 0.0);
+            }
+            assert_eq!(d.queued(), 4, "{kind:?}");
+            // Probe now sheds on the visible backlog — still no state change.
+            assert!(matches!(
+                d.admit_probe(DispatchInfo::untyped(1), &mut policy, &aff, &mut rng, 0.0),
+                AdmissionDecision::Shed { .. }
+            ));
+            assert_eq!(d.queued(), 4, "{kind:?}");
+            // Everything enqueued drains exactly once.
+            let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
+            let mut got = Vec::new();
+            while let Some((p, _)) = d.next(&idle, &mut policy, &aff, &mut rng, 0.0) {
+                got.push(p);
+            }
+            got.sort_unstable();
+            assert_eq!(got, vec![0, 1, 2, 3], "{kind:?}: conservation");
+        }
     }
 
     #[test]

@@ -72,6 +72,24 @@
 //! [`SharedDispatcher`] adds blocking semantics for the live server's
 //! worker threads.
 //!
+//! # Scatter-gather composition
+//!
+//! Under sharded serving ([`crate::shard`]) this whole stack is
+//! instantiated *once per shard*: every shard owns its own dispatcher,
+//! discipline × order × policy selection, affinity table and backlog
+//! view over its partition of the core set, so admission, placement and
+//! Hurry-up migration all run per shard. The lifecycle becomes **scatter
+//! → per-shard schedule → gather**: a parent request passes
+//! *all-or-nothing* admission (phase 1 probes every shard's policy via
+//! [`Dispatcher::admit_probe`] / [`SharedDispatcher::probe_admit`]; phase
+//! 2 enqueues on each via [`Dispatcher::enqueue_admitted`] /
+//! [`SharedDispatcher::push_admitted`] only if all admitted — a refusal
+//! anywhere sheds the parent before anything is enqueued anywhere), each
+//! shard schedules its task independently through the five stages above,
+//! and the completion that fills the parent's last fan-out slot performs
+//! the gather. `shards = 1` never touches these entry points and replays
+//! pre-sharding seeded runs bit for bit.
+//!
 //! ## Backlog observability caveat
 //!
 //! [`QueueView::per_priority`] is derived from the order layer. Only the
@@ -96,7 +114,9 @@ pub mod work_steal;
 
 pub use centralized::Centralized;
 pub use dispatcher::{AdmissionOutcome, Dispatcher, Ticket};
-pub use order::{ClassOrdering, OrderKind, OrderPolicy, OrderSpec};
+pub use order::{
+    ClassOrdering, OrderKind, OrderPolicy, OrderSpec, ServiceEstimates, WfqCost, WfqCostKind,
+};
 pub use per_core::PerCore;
 pub use shared::SharedDispatcher;
 pub use work_steal::WorkSteal;

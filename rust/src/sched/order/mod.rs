@@ -23,7 +23,11 @@
 //!   owns a FIFO and earns `weight × quantum` estimated-service-ms of
 //!   dequeue credit per round, so a saturating class can no longer starve
 //!   the rest — every backlogged class is served at ≈ its weight share
-//!   ([`crate::loadgen::ClassSpec::weight`]).
+//!   ([`crate::loadgen::ClassSpec::weight`]). What a dequeue *costs* is a
+//!   second knob ([`WfqCost`], config `wfq_cost`, CLI `--wfq-cost`): the
+//!   fixed nominal (default — weights share dequeue slots) or the class's
+//!   live mean-service EWMA ([`ServiceEstimates`], size-aware WFQ —
+//!   weights share served time).
 //! * [`Edf`] — earliest class-deadline first: a request's urgency is
 //!   `arrive_ms + deadline_ms` of its class
 //!   ([`crate::loadgen::ClassSpec::deadline_ms`]); deadline-free classes
@@ -53,11 +57,120 @@ mod wfq;
 
 pub use edf::Edf;
 pub use strict::StrictPrio;
-pub use wfq::Wfq;
+pub use wfq::{Wfq, NOMINAL_SERVICE_MS};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use super::QueuedTicket;
-use crate::loadgen::ClassRegistry;
+use crate::loadgen::{ClassId, ClassRegistry};
 use crate::util::norm_token;
+
+/// Shared per-class mean-service estimates, ms — the size signal behind
+/// size-aware WFQ costing ([`WfqCost::Estimated`]). The engines write one
+/// EWMA sample per completion (same α and cold-start figure as the
+/// admission controller's estimator in [`crate::mapper::shedding`], so the
+/// two stay calibrated identically); every [`Wfq`] queue built from the
+/// same [`OrderSpec`] reads the table when charging a dequeue against a
+/// class's deficit. Lock-free f64-bits cells: updates race benignly in the
+/// live server (an estimate is advisory), and the simulator is
+/// single-threaded so seeded runs stay deterministic.
+#[derive(Clone, Debug)]
+pub struct ServiceEstimates {
+    cells: Arc<Vec<AtomicU64>>,
+}
+
+impl ServiceEstimates {
+    /// One cell per class, cold-started at the calibrated nominal
+    /// ([`NOMINAL_SERVICE_MS`] — the figure fixed-cost WFQ charges).
+    pub fn new(classes: usize) -> ServiceEstimates {
+        ServiceEstimates {
+            cells: Arc::new(
+                (0..classes)
+                    .map(|_| AtomicU64::new(NOMINAL_SERVICE_MS.to_bits()))
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Fold one completed request's service time into its class's EWMA.
+    /// Classes beyond the table are ignored (untyped test traffic).
+    pub fn observe(&self, class: ClassId, service_ms: f64) {
+        let Some(cell) = self.cells.get(class.idx()) else {
+            return;
+        };
+        if !service_ms.is_finite() {
+            return;
+        }
+        let alpha = crate::mapper::shedding::EWMA_ALPHA;
+        let prior = f64::from_bits(cell.load(Ordering::Relaxed));
+        let next = (1.0 - alpha) * prior + alpha * service_ms.max(0.0);
+        cell.store(next.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current estimate for a class, ms (the nominal for classes beyond
+    /// the table).
+    pub fn get(&self, class: ClassId) -> f64 {
+        self.cells
+            .get(class.idx())
+            .map(|c| f64::from_bits(c.load(Ordering::Relaxed)))
+            .unwrap_or(NOMINAL_SERVICE_MS)
+    }
+
+    /// Number of classes covered.
+    pub fn classes(&self) -> usize {
+        self.cells.len()
+    }
+}
+
+/// What a WFQ dequeue charges against the class's deficit.
+#[derive(Clone, Debug, Default)]
+pub enum WfqCost {
+    /// Every request costs the fixed calibrated nominal
+    /// ([`NOMINAL_SERVICE_MS`]) — weights then apportion dequeue *slots*,
+    /// so a class whose requests run heavier than nominal consumes more
+    /// than its weight share of served **time**. The pre-size-aware
+    /// behaviour, bit for bit.
+    #[default]
+    Nominal,
+    /// Every request costs its class's live mean-service EWMA — weights
+    /// then apportion served *time*: a heavy class gets proportionally
+    /// fewer dequeue slots and can no longer exceed its weight share of
+    /// core-ms (the ROADMAP's size-aware WFQ item).
+    Estimated(ServiceEstimates),
+}
+
+/// Serializable selector for [`WfqCost`] (config `wfq_cost = "..."`, CLI
+/// `--wfq-cost`): the engines build the shared [`ServiceEstimates`] table
+/// and feed it completions when `Estimated` is selected.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WfqCostKind {
+    /// Fixed nominal cost (default).
+    #[default]
+    Nominal,
+    /// Per-class EWMA service-estimate cost (size-aware WFQ).
+    Estimated,
+}
+
+impl WfqCostKind {
+    /// Short label for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            WfqCostKind::Nominal => "nominal",
+            WfqCostKind::Estimated => "estimated",
+        }
+    }
+
+    /// Parse a CLI/config token ([`norm_token`] conventions; aliases:
+    /// `fixed`, `est`/`ewma`/`size_aware`).
+    pub fn parse(s: &str) -> Option<WfqCostKind> {
+        match norm_token(s).as_str() {
+            "nominal" | "fixed" => Some(WfqCostKind::Nominal),
+            "estimated" | "est" | "ewma" | "size_aware" => Some(WfqCostKind::Estimated),
+            _ => None,
+        }
+    }
+}
 
 /// One queue's dequeue-order policy: storage plus the "effective head"
 /// decision. Implementations must conserve items (everything pushed is
@@ -180,6 +293,10 @@ pub struct OrderSpec {
     /// order. May be empty (unit tests, untyped configs): orders then fall
     /// back to [`ClassOrdering::default`] per class.
     pub classes: Vec<ClassOrdering>,
+    /// WFQ dequeue-cost model (ignored by the other orders): the fixed
+    /// nominal by default, or a shared live estimate table for size-aware
+    /// costing ([`OrderSpec::with_wfq_cost`]).
+    pub wfq_cost: WfqCost,
 }
 
 impl OrderSpec {
@@ -190,7 +307,8 @@ impl OrderSpec {
     }
 
     /// Derive the spec for a resolved class registry: each class's
-    /// declared `weight` and `deadline_ms`, in registry order.
+    /// declared `weight` and `deadline_ms`, in registry order (nominal
+    /// WFQ cost — chain [`OrderSpec::with_wfq_cost`] for size-aware).
     pub fn from_registry(kind: OrderKind, registry: &ClassRegistry) -> OrderSpec {
         OrderSpec {
             kind,
@@ -202,14 +320,22 @@ impl OrderSpec {
                     deadline_ms: s.deadline_ms,
                 })
                 .collect(),
+            wfq_cost: WfqCost::Nominal,
         }
+    }
+
+    /// Builder: set the WFQ dequeue-cost model (size-aware WFQ when given
+    /// an [`WfqCost::Estimated`] table the engine feeds completions).
+    pub fn with_wfq_cost(mut self, cost: WfqCost) -> OrderSpec {
+        self.wfq_cost = cost;
+        self
     }
 
     /// Instantiate one queue's order policy.
     pub fn build(&self) -> Box<dyn OrderPolicy> {
         match self.kind {
             OrderKind::Strict => Box::new(StrictPrio::new()),
-            OrderKind::Wfq => Box::new(Wfq::new(&self.classes)),
+            OrderKind::Wfq => Box::new(Wfq::new(&self.classes, self.wfq_cost.clone())),
             OrderKind::Edf => Box::new(Edf::new(&self.classes)),
         }
     }
@@ -243,7 +369,10 @@ mod tests {
     fn labels_parse_roundtrip_with_aliases() {
         for kind in OrderKind::all() {
             assert_eq!(OrderKind::parse(kind.label()), Some(kind));
-            assert_eq!(OrderSpec { kind, classes: vec![] }.build().name(), kind.label());
+            assert_eq!(
+                OrderSpec { kind, ..OrderSpec::default() }.build().name(),
+                kind.label()
+            );
         }
         assert_eq!(OrderKind::parse("drr"), Some(OrderKind::Wfq));
         assert_eq!(OrderKind::parse("deadline"), Some(OrderKind::Edf));
@@ -291,6 +420,7 @@ mod tests {
                     ClassOrdering { weight: 3.0, deadline_ms: Some(500.0) },
                     ClassOrdering { weight: 1.0, deadline_ms: None },
                 ],
+                wfq_cost: WfqCost::Nominal,
             };
             let mut q = spec.build();
             for t in 0..40u64 {
@@ -306,6 +436,48 @@ mod tests {
         }
     }
 
+    #[test]
+    fn wfq_cost_kind_parse_label_roundtrip() {
+        for kind in [WfqCostKind::Nominal, WfqCostKind::Estimated] {
+            assert_eq!(WfqCostKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(WfqCostKind::parse("fixed"), Some(WfqCostKind::Nominal));
+        assert_eq!(WfqCostKind::parse("est"), Some(WfqCostKind::Estimated));
+        assert_eq!(WfqCostKind::parse("EWMA"), Some(WfqCostKind::Estimated));
+        assert_eq!(WfqCostKind::parse("size-aware"), Some(WfqCostKind::Estimated));
+        assert_eq!(WfqCostKind::parse("banana"), None);
+        assert_eq!(WfqCostKind::default(), WfqCostKind::Nominal);
+    }
+
+    #[test]
+    fn service_estimates_ewma_and_bounds() {
+        let est = ServiceEstimates::new(2);
+        assert_eq!(est.classes(), 2);
+        assert_eq!(est.get(ClassId(0)), NOMINAL_SERVICE_MS, "cold start");
+        est.observe(ClassId(0), 350.0);
+        // EWMA: 0.9·150 + 0.1·350 = 170 — the same update the admission
+        // controller's estimator applies.
+        assert!((est.get(ClassId(0)) - 170.0).abs() < 1e-9);
+        assert_eq!(
+            est.get(ClassId(1)),
+            NOMINAL_SERVICE_MS,
+            "classes keep independent estimates"
+        );
+        // Out-of-table classes: reads fall back, writes are ignored.
+        est.observe(ClassId(7), 9_000.0);
+        assert_eq!(est.get(ClassId(7)), NOMINAL_SERVICE_MS);
+        // Garbage samples never poison the table.
+        est.observe(ClassId(1), f64::NAN);
+        est.observe(ClassId(1), f64::INFINITY);
+        assert_eq!(est.get(ClassId(1)), NOMINAL_SERVICE_MS);
+        est.observe(ClassId(1), -50.0);
+        assert!((est.get(ClassId(1)) - 135.0).abs() < 1e-9, "negatives clamp to 0");
+        // Cloned handles share the cells (the engines clone per queue).
+        let alias = est.clone();
+        alias.observe(ClassId(0), 170.0);
+        assert_eq!(est.get(ClassId(0)), alias.get(ClassId(0)));
+    }
+
     /// Peek/take agreement under every order, including after refused
     /// offers (repeated peeks) and interleaved pushes.
     #[test]
@@ -317,6 +489,7 @@ mod tests {
                     ClassOrdering { weight: 2.0, deadline_ms: Some(300.0) },
                     ClassOrdering { weight: 1.0, deadline_ms: Some(900.0) },
                 ],
+                wfq_cost: WfqCost::Nominal,
             };
             let mut q = spec.build();
             for t in 0..10u64 {

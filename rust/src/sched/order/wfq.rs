@@ -1,33 +1,44 @@
 //! Weighted fair queueing between service classes — deficit round robin
 //! (DRR, Shreedhar & Varghese): each class owns a FIFO and earns
 //! `weight × quantum` of dequeue credit per round-robin visit, spending a
-//! nominal estimated-service cost per dequeued request.
+//! per-dequeue cost chosen by the configured [`WfqCost`] model.
 //!
 //! With every class backlogged, class `c` receives `weight_c / Σ weights`
-//! of the dequeue slots — so a saturating high-weight class can no longer
+//! of the *charged cost* — so a saturating high-weight class can no longer
 //! starve the rest, the exact failure mode of strict priority the ROADMAP
 //! warned about. An idle class's deficit resets (classic DRR), so credit
 //! never accumulates while a class has nothing queued and a returning
 //! class cannot burst past its share.
 //!
-//! Costs are charged in *estimated* service milliseconds: every request
-//! costs the same calibrated nominal ([`NOMINAL_SERVICE_MS`] — request
-//! sizes are not observable at dispatch, the paper's §II), making DRR a
-//! weighted round robin over dequeue slots. Classes whose requests are
-//! heavier than nominal therefore consume proportionally more *service
-//! time* per slot; weights apportion dequeue opportunities, not measured
-//! core-ms.
+//! Two cost models ([`WfqCost`], an [`super::OrderSpec`] knob):
+//!
+//! * **Nominal** (default) — every request costs the same calibrated
+//!   [`NOMINAL_SERVICE_MS`] (request sizes are not observable at dispatch,
+//!   the paper's §II), making DRR a weighted round robin over dequeue
+//!   *slots*. A class whose requests run heavier than nominal then
+//!   consumes proportionally more served **time** than its weight share.
+//! * **Estimated** — every request costs its class's live mean-service
+//!   EWMA ([`super::ServiceEstimates`], fed by the engines from real
+//!   completions — the same estimator the admission controller in
+//!   [`crate::mapper::shedding`] keeps). Weights then apportion served
+//!   *time*: a class with 3× heavier requests gets 3× fewer dequeue slots
+//!   per unit weight, and no class exceeds its weight share of core-ms
+//!   while backlogged (the ROADMAP's size-aware WFQ item; pinned by
+//!   `estimated_cost_caps_heavy_class_served_time`).
 //!
 //! Selection is resolved lazily and cached: `peek_best` advances the DRR
-//! scan (mutating cursor/deficit state) and pins the winning class until
-//! `take_best` removes its head — so peek → policy-consult → take (the
-//! centralized discipline's dance) is stable even across refused offers.
-//! Deterministic: no randomness, no unordered iteration.
+//! scan (mutating cursor/deficit state) and pins the winning class *and
+//! its charged cost* until `take_best` removes its head — so
+//! peek → policy-consult → take (the centralized discipline's dance) is
+//! stable even across refused offers, and a concurrent estimate update in
+//! the live server cannot desynchronise the charge from the selection.
+//! Deterministic: no randomness, no unordered iteration; the nominal model
+//! replays pre-size-aware seeded runs bit for bit.
 
 use std::collections::VecDeque;
 
 use super::super::QueuedTicket;
-use super::{ClassOrdering, OrderPolicy};
+use super::{ClassOrdering, OrderPolicy, WfqCost};
 
 /// Nominal per-request service cost charged against a class's deficit, ms
 /// (the same calibrated figure as the admission controller's cold-start
@@ -42,10 +53,14 @@ pub struct Wfq {
     deficit: Vec<f64>,
     /// Credit granted per round visit: `weight × NOMINAL_SERVICE_MS`.
     quantum: Vec<f64>,
+    /// What one dequeue charges against the class's deficit.
+    cost: WfqCost,
     /// Round-robin scan position (class index).
     cursor: usize,
-    /// Class pinned by the last `peek_best`/`take_best` selection.
-    pending: Option<usize>,
+    /// Class pinned by the last `peek_best`/`take_best` selection, with
+    /// the cost captured at selection time (stable across estimate
+    /// updates between peek and take).
+    pending: Option<(usize, f64)>,
     len: usize,
 }
 
@@ -55,11 +70,12 @@ impl Wfq {
     /// weight 1). Non-positive or non-finite weights are sanitized to 1 —
     /// config validation rejects them earlier, this is belt-and-braces
     /// against hand-built specs.
-    pub fn new(classes: &[ClassOrdering]) -> Wfq {
+    pub fn new(classes: &[ClassOrdering], cost: WfqCost) -> Wfq {
         let mut q = Wfq {
             queues: Vec::new(),
             deficit: Vec::new(),
             quantum: Vec::new(),
+            cost,
             cursor: 0,
             pending: None,
             len: 0,
@@ -81,23 +97,40 @@ impl Wfq {
         self.quantum.push(w * NOMINAL_SERVICE_MS);
     }
 
+    /// The cost one dequeue of class `c` charges right now. Clamped to at
+    /// least 1 ms so a (pathological) near-zero estimate cannot turn DRR
+    /// into an unbounded burst.
+    fn cost_of(&self, c: usize) -> f64 {
+        match &self.cost {
+            WfqCost::Nominal => NOMINAL_SERVICE_MS,
+            WfqCost::Estimated(est) => {
+                let ms = est.get(crate::loadgen::ClassId(c as u16));
+                if ms.is_finite() {
+                    ms.max(1.0)
+                } else {
+                    NOMINAL_SERVICE_MS
+                }
+            }
+        }
+    }
+
     /// Resolve (or recall) the class whose head is served next. Advances
     /// the DRR scan only when no selection is pinned.
-    fn select(&mut self) -> Option<usize> {
+    fn select(&mut self) -> Option<(usize, f64)> {
         if self.len == 0 {
             self.pending = None;
             return None;
         }
-        if let Some(c) = self.pending {
+        if let Some((c, cost)) = self.pending {
             if !self.queues[c].is_empty() {
-                return Some(c);
+                return Some((c, cost));
             }
             self.pending = None;
         }
         // Scan from the cursor, granting one quantum per visited
-        // backlogged class, until one can afford the nominal cost. Each
+        // backlogged class, until one can afford its current cost. Each
         // full round adds at least min(quantum) > 0 to some backlogged
-        // class, so the scan terminates.
+        // class and costs are finite, so the scan terminates.
         loop {
             let c = self.cursor;
             if self.queues[c].is_empty() {
@@ -106,9 +139,10 @@ impl Wfq {
                 continue;
             }
             self.deficit[c] += self.quantum[c];
-            if self.deficit[c] >= NOMINAL_SERVICE_MS {
-                self.pending = Some(c);
-                return Some(c);
+            let cost = self.cost_of(c);
+            if self.deficit[c] >= cost {
+                self.pending = Some((c, cost));
+                return Some((c, cost));
             }
             self.cursor = (c + 1) % self.queues.len();
         }
@@ -135,18 +169,19 @@ impl OrderPolicy for Wfq {
     }
 
     fn peek_best(&mut self) -> Option<QueuedTicket> {
-        let c = self.select()?;
+        let (c, _cost) = self.select()?;
         self.queues[c].front().copied()
     }
 
     fn take_best(&mut self) -> Option<QueuedTicket> {
-        let c = self.select()?;
+        let (c, cost) = self.select()?;
         let item = self.queues[c].pop_front().expect("selected class non-empty");
         self.len -= 1;
-        self.deficit[c] -= NOMINAL_SERVICE_MS;
-        if self.deficit[c] >= NOMINAL_SERVICE_MS && !self.queues[c].is_empty() {
+        self.deficit[c] -= cost;
+        let next_cost = self.cost_of(c);
+        if self.deficit[c] >= next_cost && !self.queues[c].is_empty() {
             // Burst continues: the class still has credit this visit.
-            self.pending = Some(c);
+            self.pending = Some((c, next_cost));
         } else {
             self.pending = None;
             if self.queues[c].is_empty() {
@@ -167,18 +202,34 @@ impl OrderPolicy for Wfq {
 #[cfg(test)]
 mod tests {
     use super::super::testutil::qt;
+    use super::super::ServiceEstimates;
     use super::*;
+    use crate::loadgen::ClassId;
 
     fn two_class(w0: f64, w1: f64) -> Wfq {
-        Wfq::new(&[
-            ClassOrdering { weight: w0, deadline_ms: None },
-            ClassOrdering { weight: w1, deadline_ms: None },
-        ])
+        Wfq::new(
+            &[
+                ClassOrdering { weight: w0, deadline_ms: None },
+                ClassOrdering { weight: w1, deadline_ms: None },
+            ],
+            WfqCost::Nominal,
+        )
+    }
+
+    /// Drive an estimate table to (approximately) fixed per-class means.
+    fn estimates(means_ms: &[f64]) -> ServiceEstimates {
+        let est = ServiceEstimates::new(means_ms.len());
+        for _ in 0..400 {
+            for (c, &ms) in means_ms.iter().enumerate() {
+                est.observe(ClassId(c as u16), ms);
+            }
+        }
+        est
     }
 
     #[test]
     fn single_class_is_plain_fifo() {
-        let mut q = Wfq::new(&[ClassOrdering::default()]);
+        let mut q = Wfq::new(&[ClassOrdering::default()], WfqCost::Nominal);
         for t in 0..6u64 {
             q.push(qt(t, 0, 0));
         }
@@ -258,7 +309,7 @@ mod tests {
 
     #[test]
     fn unknown_class_grows_table_with_default_weight() {
-        let mut q = Wfq::new(&[]);
+        let mut q = Wfq::new(&[], WfqCost::Nominal);
         q.push(qt(0, 3, 0));
         q.push(qt(1, 0, 0));
         assert_eq!(q.len(), 2);
@@ -288,5 +339,92 @@ mod tests {
         let mut out = Vec::new();
         q.add_counts_into(&mut out);
         assert!(out.is_empty(), "WFQ must not claim priority semantics");
+    }
+
+    /// The size-aware WFQ satellite's anchor. Classes of equal weight, but
+    /// class 1's requests run 9× heavier (450 ms vs 50 ms). Under the
+    /// nominal cost both alternate dequeue slots, so the heavy class
+    /// consumes 90 % of served time — 1.8× its 50 % weight share. Under
+    /// the estimated cost it is charged 9× per dequeue: slots split ≈ 9:1
+    /// toward the light class and served *time* returns to the weight
+    /// split — the heavy class no longer gets 2× (or even 1.25×) its
+    /// share of core-ms.
+    #[test]
+    fn estimated_cost_caps_heavy_class_served_time() {
+        let light_ms = 50.0;
+        let heavy_ms = 450.0;
+        let serve = |cost: WfqCost| -> [f64; 2] {
+            let mut q = Wfq::new(
+                &[ClassOrdering::default(), ClassOrdering::default()],
+                cost,
+            );
+            for t in 0..2_000u64 {
+                q.push(qt(t, (t % 2) as u16, 0));
+            }
+            let mut time = [0.0f64; 2];
+            for _ in 0..400 {
+                match q.take_best().unwrap().info.class.idx() {
+                    0 => time[0] += light_ms,
+                    _ => time[1] += heavy_ms,
+                }
+            }
+            time
+        };
+        let nominal = serve(WfqCost::Nominal);
+        assert!(
+            nominal[1] > 2.0 * nominal[0],
+            "nominal costing lets the heavy class hog served time: {nominal:?}"
+        );
+        let est = estimates(&[light_ms, heavy_ms]);
+        let sized = serve(WfqCost::Estimated(est));
+        let ratio = sized[1] / sized[0];
+        assert!(
+            (0.8..=1.25).contains(&ratio),
+            "size-aware costing must hold the heavy class to its weight \
+             share of served time, got heavy/light = {ratio:.3} ({sized:?})"
+        );
+    }
+
+    #[test]
+    fn estimated_cost_pins_charge_across_peek_take() {
+        // The cost captured at selection is the cost charged at take, even
+        // if the estimate moves in between (live-server concurrency).
+        let est = estimates(&[100.0]);
+        let mut q = Wfq::new(&[ClassOrdering::default()], WfqCost::Estimated(est.clone()));
+        for t in 0..4u64 {
+            q.push(qt(t, 0, 0));
+        }
+        let head = q.peek_best().unwrap();
+        for _ in 0..400 {
+            est.observe(ClassId(0), 10_000.0); // estimate jumps after peek
+        }
+        assert_eq!(q.take_best().unwrap().ticket, head.ticket);
+        // Conservation still holds with the wild estimate.
+        let rest: Vec<u64> = std::iter::from_fn(|| q.take_best().map(|i| i.ticket)).collect();
+        assert_eq!(rest, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn nominal_cost_matches_fixed_constant_behaviour() {
+        // The estimated model fed *exactly* the nominal figure dequeues in
+        // the same order as the fixed-cost model (the bit-for-bit
+        // compatibility of the default path).
+        let mk = |cost: WfqCost| {
+            let mut q = Wfq::new(
+                &[
+                    ClassOrdering { weight: 3.0, deadline_ms: None },
+                    ClassOrdering { weight: 1.0, deadline_ms: None },
+                ],
+                cost,
+            );
+            for t in 0..60u64 {
+                q.push(qt(t, (t % 2) as u16, 0));
+            }
+            std::iter::from_fn(move || q.take_best().map(|i| i.ticket)).collect::<Vec<_>>()
+        };
+        let fixed = mk(WfqCost::Nominal);
+        let est = ServiceEstimates::new(2); // cold start == nominal, never fed
+        let estimated = mk(WfqCost::Estimated(est));
+        assert_eq!(fixed, estimated);
     }
 }

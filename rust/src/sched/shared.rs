@@ -103,6 +103,50 @@ impl<T> SharedDispatcher<T> {
         outcome
     }
 
+    /// Run ONLY the admission stage against the current backlog — no
+    /// queue state is touched and no worker is woken. The sharded live
+    /// server's all-or-nothing fan-out admission probes every shard's
+    /// queue with this before [`SharedDispatcher::push_admitted`]-ing the
+    /// shard tasks; since the load generator is the only producer, the
+    /// backlog can only *shrink* between the probe and the push, so a
+    /// probe-time Admit remains valid (for backlog-monotone admission
+    /// policies such as [`crate::mapper::Shedding`]).
+    pub fn probe_admit(
+        &self,
+        info: DispatchInfo,
+        aff: &Mutex<AffinityTable>,
+    ) -> crate::mapper::AdmissionDecision {
+        let mut g = self.inner.lock().expect("sched queue poisoned");
+        let now_ms = self.now_ms();
+        let aff_g = aff.lock().expect("aff poisoned");
+        let Inner {
+            dispatcher,
+            policy,
+            rng,
+            ..
+        } = &mut *g;
+        dispatcher.admit_probe(info, policy.as_mut(), &aff_g, rng, now_ms)
+    }
+
+    /// Enqueue a request WITHOUT consulting admission (the caller already
+    /// ran [`SharedDispatcher::probe_admit`] on every shard) and wake the
+    /// workers — phase two of all-or-nothing fan-out admission.
+    pub fn push_admitted(&self, payload: T, info: DispatchInfo, aff: &Mutex<AffinityTable>) {
+        {
+            let mut g = self.inner.lock().expect("sched queue poisoned");
+            let now_ms = self.now_ms();
+            let aff_g = aff.lock().expect("aff poisoned");
+            let Inner {
+                dispatcher,
+                policy,
+                rng,
+                ..
+            } = &mut *g;
+            dispatcher.enqueue_admitted(payload, info, policy.as_mut(), &aff_g, rng, now_ms);
+        }
+        self.cv.notify_all();
+    }
+
     /// Blocking pop for the worker `tid`: serves the queue of whatever core
     /// the thread is currently pinned to. Returns `None` once the queue is
     /// closed and fully drained.
@@ -243,6 +287,36 @@ mod tests {
         };
         q.close();
         assert_eq!(q.pop(displaced, &aff), Some(7));
+    }
+
+    #[test]
+    fn probe_then_push_admitted_round_trip() {
+        let topo = Topology::juno_r1();
+        // Shedding with a 1-request cap's worth of deadline: projected
+        // delay is 0 on an empty queue (admit) and positive once anything
+        // is visible — a tight deadline sheds the probe then.
+        let policy = Box::new(Shedding::new(PolicyKind::LinuxRandom.build(&topo), 10.0));
+        let q: SharedDispatcher<usize> =
+            SharedDispatcher::new(DisciplineKind::Centralized.build(6), policy, 5);
+        let aff = Mutex::new(AffinityTable::round_robin(topo));
+        let info = DispatchInfo::untyped(2);
+        assert!(matches!(
+            q.probe_admit(info, &aff),
+            crate::mapper::AdmissionDecision::Admit
+        ));
+        assert_eq!(q.queued(), 0, "probe must not enqueue");
+        q.push_admitted(11, info, &aff);
+        assert_eq!(q.queued(), 1);
+        // Backlog now projects past the 10 ms deadline: the probe sheds,
+        // and still changes nothing.
+        assert!(matches!(
+            q.probe_admit(info, &aff),
+            crate::mapper::AdmissionDecision::Shed { .. }
+        ));
+        assert_eq!(q.queued(), 1);
+        q.close();
+        assert_eq!(q.pop(ThreadId(0), &aff), Some(11));
+        assert_eq!(q.pop(ThreadId(0), &aff), None);
     }
 
     #[test]

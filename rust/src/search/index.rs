@@ -28,6 +28,9 @@ pub struct Index {
     titles: Vec<String>,
     avgdl: f64,
     total_postings: usize,
+    /// Corpus-wide IDF table distributed to a shard index at build time
+    /// (see [`Index::with_global_stats`]). `None` = plain local statistics.
+    idf_override: Option<Vec<f32>>,
 }
 
 impl Index {
@@ -83,7 +86,29 @@ impl Index {
             titles,
             avgdl,
             total_postings,
+            idf_override: None,
         }
+    }
+
+    /// Replace this index's ranking statistics with corpus-wide figures —
+    /// how a doc-range shard index stays *self-consistent* (it owns every
+    /// statistic it needs to score, no cross-shard lookup at query time)
+    /// while remaining *globally calibrated* (scores are comparable across
+    /// shards, so the k-way gather merge reproduces the unsharded ranking
+    /// exactly — the `shard::plan` equivalence anchor). This is the
+    /// distributed-IDF convention of production scatter-gather engines.
+    ///
+    /// `avgdl` is the full corpus' average document length and `idf` its
+    /// per-term IDF table (must cover this index's dictionary).
+    pub fn with_global_stats(mut self, avgdl: f64, idf: Vec<f32>) -> Index {
+        assert_eq!(
+            idf.len(),
+            self.terms.len(),
+            "global IDF table must cover the dictionary"
+        );
+        self.avgdl = avgdl;
+        self.idf_override = Some(idf);
+        self
     }
 
     /// Reassemble an index from its serialized parts (`persist.rs`),
@@ -128,6 +153,7 @@ impl Index {
             titles,
             avgdl,
             total_postings,
+            idf_override: None,
         })
     }
 
@@ -151,9 +177,14 @@ impl Index {
         self.postings[term as usize].len()
     }
 
-    /// BM25 IDF of a term against this index.
+    /// BM25 IDF of a term: the corpus-wide table when this is a shard
+    /// index carrying global statistics ([`Index::with_global_stats`]),
+    /// else computed from this index's own document frequencies.
     pub fn idf(&self, term: u32) -> f32 {
-        bm25::idf(self.num_docs(), self.doc_freq(term))
+        match &self.idf_override {
+            Some(table) => table[term as usize],
+            None => bm25::idf(self.num_docs(), self.doc_freq(term)),
+        }
     }
 
     /// Number of indexed documents.
@@ -266,6 +297,25 @@ mod tests {
         let head = idx.idf(0);
         let tail_term = (idx.num_terms() - 1) as u32;
         assert!(idx.idf(tail_term) >= head);
+    }
+
+    #[test]
+    fn global_stats_override_replaces_idf_and_avgdl() {
+        let idx = small_index();
+        let local_idf = idx.idf(0);
+        let table: Vec<f32> = (0..idx.num_terms()).map(|_| 2.5).collect();
+        let over = idx.clone().with_global_stats(321.0, table);
+        assert_eq!(over.avgdl(), 321.0);
+        assert_eq!(over.idf(0), 2.5);
+        // The plain index keeps computing from its own doc frequencies.
+        assert_eq!(idx.idf(0), local_idf);
+    }
+
+    #[test]
+    #[should_panic(expected = "cover the dictionary")]
+    fn global_stats_arity_checked() {
+        let idx = small_index();
+        idx.with_global_stats(100.0, vec![1.0; 3]);
     }
 
     #[test]

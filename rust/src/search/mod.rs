@@ -9,6 +9,15 @@
 //! BM25 ranking (identical formula to the Layer-1 Pallas kernel) and top-k
 //! selection. `engine.rs` executes queries either through the pure-Rust
 //! scorer or through the AOT-compiled XLA scorer on the live request path.
+//!
+//! Like its production counterpart, the index also serves *partitioned*:
+//! [`crate::shard`] splits the corpus into contiguous doc-range shards,
+//! each a self-contained [`Index`] over its slice that scores with the
+//! corpus-wide statistics ([`Index::with_global_stats`] — distributed
+//! IDF), so per-shard partial top-k lists merge into exactly the
+//! unsharded ranking (scatter → per-shard schedule → gather; equivalence
+//! anchored in `shard::plan`). The fixed-capacity [`TopK`] produces the
+//! per-shard partials and `shard::merge_topk` performs the k-way gather.
 
 pub mod bm25;
 pub mod corpus;

@@ -1,0 +1,250 @@
+//! Parent fan-out tracking: one entry per in-flight query, S shard-task
+//! slots each — the bookkeeping half of scatter-gather serving.
+//!
+//! A query is *opened* when it passes (all-or-nothing) admission, each
+//! shard task is *started* when its shard dispatches it and *completed*
+//! when that shard finishes; the completion that fills the last slot
+//! returns the whole entry to the caller, which then performs the gather
+//! (merge partial top-k, record end-to-end latency at last-shard-merge,
+//! attribute the critical path to the slowest shard).
+//!
+//! Conservation contract (pinned by `rust/tests/sched_properties.rs`):
+//! every opened parent completes exactly once, after *all* S of its shard
+//! tasks; misuse (double start/complete, unknown parent) panics
+//! immediately rather than corrupting run accounting. The table is
+//! engine-agnostic — the simulator stores `()` partials, the live server
+//! stores merged-top-k inputs plus worker facts.
+
+use std::collections::HashMap;
+
+use crate::loadgen::ClassId;
+
+/// One finished shard task.
+#[derive(Clone, Debug)]
+pub struct TaskDone<P> {
+    /// Task dispatch (service start) time, ms.
+    pub started_ms: f64,
+    /// Task completion time, ms.
+    pub completed_ms: f64,
+    /// Engine-specific payload (partial top-k in the live server).
+    pub partial: P,
+}
+
+/// One in-flight (or just-completed) parent query.
+#[derive(Debug)]
+pub struct FanOut<P> {
+    /// Service class of the parent request.
+    pub class: ClassId,
+    /// Parent arrival time, ms.
+    pub arrive_ms: f64,
+    /// Per-shard dispatch times (set by [`FanOutTable::start`]).
+    started: Vec<Option<f64>>,
+    /// Per-shard finished tasks (set by [`FanOutTable::complete`]).
+    tasks: Vec<Option<TaskDone<P>>>,
+    remaining: usize,
+}
+
+impl<P> FanOut<P> {
+    /// The finished tasks, `(shard, task)` in shard order. Only meaningful
+    /// on the entry returned by the final [`FanOutTable::complete`].
+    pub fn tasks(&self) -> impl Iterator<Item = (usize, &TaskDone<P>)> {
+        self.tasks
+            .iter()
+            .enumerate()
+            .filter_map(|(s, t)| t.as_ref().map(|t| (s, t)))
+    }
+
+    /// One shard's finished task. Panics if that task has not completed.
+    pub fn task(&self, shard: usize) -> &TaskDone<P> {
+        self.tasks[shard].as_ref().expect("shard task not completed")
+    }
+
+    /// The critical-path shard: the one whose task completed *last* (ties
+    /// broken toward the lowest shard id, deterministically). End-to-end
+    /// latency is this shard's task latency — the fan-out tail.
+    pub fn critical_shard(&self) -> usize {
+        let mut best = 0usize;
+        let mut best_t = f64::NEG_INFINITY;
+        for (s, t) in self.tasks() {
+            if t.completed_ms > best_t {
+                best_t = t.completed_ms;
+                best = s;
+            }
+        }
+        best
+    }
+
+    /// Earliest shard-task dispatch time, ms (the parent's "service start").
+    pub fn first_start_ms(&self) -> f64 {
+        self.tasks()
+            .map(|(_, t)| t.started_ms)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Latest shard-task completion time, ms — when the gather runs.
+    pub fn last_completion_ms(&self) -> f64 {
+        self.tasks()
+            .map(|(_, t)| t.completed_ms)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// End-to-end latency (arrival → last shard completion), ms.
+    pub fn e2e_ms(&self) -> f64 {
+        self.last_completion_ms() - self.arrive_ms
+    }
+}
+
+/// Parent table: all queries whose fan-out has not yet fully gathered.
+#[derive(Debug)]
+pub struct FanOutTable<P> {
+    map: HashMap<u64, FanOut<P>>,
+    shards: usize,
+}
+
+impl<P> FanOutTable<P> {
+    /// Empty table for an S-shard plan.
+    pub fn new(shards: usize) -> FanOutTable<P> {
+        assert!(shards >= 1, "fan-out over zero shards");
+        FanOutTable {
+            map: HashMap::new(),
+            shards,
+        }
+    }
+
+    /// Open a parent entry (exactly once, at admission).
+    pub fn open(&mut self, parent: u64, class: ClassId, arrive_ms: f64) {
+        let prev = self.map.insert(
+            parent,
+            FanOut {
+                class,
+                arrive_ms,
+                started: vec![None; self.shards],
+                tasks: std::iter::repeat_with(|| None).take(self.shards).collect(),
+                remaining: self.shards,
+            },
+        );
+        assert!(prev.is_none(), "parent {parent} opened twice");
+    }
+
+    /// Record one shard task's dispatch time.
+    pub fn start(&mut self, parent: u64, shard: usize, now_ms: f64) {
+        let entry = self.map.get_mut(&parent).expect("start on unknown parent");
+        assert!(
+            entry.started[shard].replace(now_ms).is_none(),
+            "parent {parent} shard {shard} started twice"
+        );
+    }
+
+    /// Record one shard task's completion. Returns the full entry when this
+    /// was the *last* outstanding task — the gather point.
+    pub fn complete(
+        &mut self,
+        parent: u64,
+        shard: usize,
+        now_ms: f64,
+        partial: P,
+    ) -> Option<FanOut<P>> {
+        let entry = self
+            .map
+            .get_mut(&parent)
+            .expect("complete on unknown parent");
+        let started_ms = entry.started[shard].expect("task completed before start");
+        assert!(
+            entry.tasks[shard]
+                .replace(TaskDone {
+                    started_ms,
+                    completed_ms: now_ms,
+                    partial,
+                })
+                .is_none(),
+            "parent {parent} shard {shard} completed twice"
+        );
+        entry.remaining -= 1;
+        if entry.remaining == 0 {
+            return self.map.remove(&parent);
+        }
+        None
+    }
+
+    /// Parents still waiting on at least one shard task.
+    pub fn in_flight(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when no parent is outstanding (end-of-run conservation check).
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gathers_on_last_completion_only() {
+        let mut t: FanOutTable<u32> = FanOutTable::new(3);
+        t.open(7, ClassId(1), 100.0);
+        for s in 0..3 {
+            t.start(7, s, 110.0 + s as f64);
+        }
+        assert!(t.complete(7, 1, 150.0, 10).is_none());
+        assert!(t.complete(7, 0, 170.0, 20).is_none());
+        assert_eq!(t.in_flight(), 1);
+        let done = t.complete(7, 2, 160.0, 30).expect("last task gathers");
+        assert!(t.is_empty());
+        assert_eq!(done.class, ClassId(1));
+        assert_eq!(done.critical_shard(), 0, "slowest completion wins");
+        assert_eq!(done.e2e_ms(), 70.0);
+        assert_eq!(done.first_start_ms(), 110.0);
+        assert_eq!(done.last_completion_ms(), 170.0);
+        assert_eq!(done.task(2).partial, 30);
+        assert_eq!(done.tasks().count(), 3);
+    }
+
+    #[test]
+    fn critical_shard_tie_breaks_low() {
+        let mut t: FanOutTable<()> = FanOutTable::new(2);
+        t.open(1, ClassId(0), 0.0);
+        t.start(1, 0, 1.0);
+        t.start(1, 1, 1.0);
+        assert!(t.complete(1, 1, 9.0, ()).is_none());
+        let done = t.complete(1, 0, 9.0, ()).unwrap();
+        assert_eq!(done.critical_shard(), 0);
+    }
+
+    #[test]
+    fn interleaved_parents_tracked_independently() {
+        let mut t: FanOutTable<()> = FanOutTable::new(2);
+        t.open(1, ClassId(0), 0.0);
+        t.open(2, ClassId(0), 5.0);
+        t.start(1, 0, 1.0);
+        t.start(2, 0, 6.0);
+        t.start(1, 1, 1.0);
+        t.start(2, 1, 6.0);
+        assert!(t.complete(2, 0, 8.0, ()).is_none());
+        assert!(t.complete(1, 0, 9.0, ()).is_none());
+        assert!(t.complete(2, 1, 10.0, ()).is_some());
+        assert_eq!(t.in_flight(), 1);
+        assert!(t.complete(1, 1, 11.0, ()).is_some());
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "opened twice")]
+    fn double_open_panics() {
+        let mut t: FanOutTable<()> = FanOutTable::new(1);
+        t.open(1, ClassId(0), 0.0);
+        t.open(1, ClassId(0), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "completed twice")]
+    fn double_complete_panics() {
+        let mut t: FanOutTable<()> = FanOutTable::new(2);
+        t.open(1, ClassId(0), 0.0);
+        t.start(1, 0, 1.0);
+        t.complete(1, 0, 2.0, ());
+        t.complete(1, 0, 3.0, ());
+    }
+}

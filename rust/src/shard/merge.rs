@@ -1,0 +1,169 @@
+//! K-way merge of per-shard partial top-k lists — the gather step of
+//! scatter-gather serving.
+//!
+//! Each shard returns its local top-k sorted best-first (descending score,
+//! ascending doc id on ties — the same total order [`crate::search::TopK`]
+//! emits). The merge walks the S list heads through a small binary heap:
+//! O(k log S) comparisons regardless of how many candidates each shard
+//! scored, which is why the gather stays off the per-query critical path's
+//! cost model (benchmarked in `benches/hotpath.rs`, `shard_merge_*`).
+//!
+//! Correctness: because every list is sorted by the same total order and
+//! global doc ids are disjoint across shards (doc-range partitioning), the
+//! merged prefix equals the top-k of the concatenated candidate set — the
+//! sharded-search equivalence anchor (`shard::plan` tests).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::search::ScoredDoc;
+
+/// One shard list's current head in the merge heap.
+struct Head {
+    score: f32,
+    doc: u32,
+    part: usize,
+    offset: usize,
+}
+
+impl PartialEq for Head {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Head {}
+
+impl Ord for Head {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap pops the best head: higher score first, lower doc id on
+        // ties (doc ids are globally unique, so this is a total order).
+        self.score
+            .total_cmp(&other.score)
+            .then_with(|| other.doc.cmp(&self.doc))
+    }
+}
+
+impl PartialOrd for Head {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Merge per-shard partial top-k lists (each sorted descending score,
+/// ascending doc on ties) into the global best `k`. Returns fewer than `k`
+/// entries when the lists hold fewer in total.
+pub fn merge_topk(parts: &[Vec<ScoredDoc>], k: usize) -> Vec<ScoredDoc> {
+    let mut heap = BinaryHeap::with_capacity(parts.len());
+    for (part, list) in parts.iter().enumerate() {
+        debug_assert!(
+            list.windows(2).all(|w| {
+                w[0].score > w[1].score || (w[0].score == w[1].score && w[0].doc < w[1].doc)
+            }),
+            "shard {part} partial list not sorted best-first"
+        );
+        if let Some(d) = list.first() {
+            heap.push(Head {
+                score: d.score,
+                doc: d.doc,
+                part,
+                offset: 0,
+            });
+        }
+    }
+    let mut out = Vec::with_capacity(k.min(parts.iter().map(Vec::len).sum()));
+    while out.len() < k {
+        let Some(h) = heap.pop() else { break };
+        out.push(ScoredDoc {
+            doc: h.doc,
+            score: h.score,
+        });
+        let next = h.offset + 1;
+        if let Some(d) = parts[h.part].get(next) {
+            heap.push(Head {
+                score: d.score,
+                doc: d.doc,
+                part: h.part,
+                offset: next,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    fn sort_best_first(v: &mut Vec<ScoredDoc>) {
+        v.sort_by(|a, b| {
+            b.score
+                .total_cmp(&a.score)
+                .then_with(|| a.doc.cmp(&b.doc))
+        });
+    }
+
+    #[test]
+    fn merges_two_sorted_lists() {
+        let a = vec![
+            ScoredDoc { doc: 0, score: 9.0 },
+            ScoredDoc { doc: 2, score: 5.0 },
+        ];
+        let b = vec![
+            ScoredDoc { doc: 1, score: 7.0 },
+            ScoredDoc { doc: 3, score: 6.0 },
+        ];
+        let m = merge_topk(&[a, b], 3);
+        assert_eq!(
+            m.iter().map(|d| d.doc).collect::<Vec<_>>(),
+            vec![0, 1, 3]
+        );
+    }
+
+    #[test]
+    fn k_larger_than_total_and_empty_parts() {
+        let a = vec![ScoredDoc { doc: 5, score: 1.0 }];
+        let m = merge_topk(&[Vec::new(), a, Vec::new()], 10);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].doc, 5);
+        assert!(merge_topk(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn tie_break_is_ascending_doc_across_parts() {
+        let a = vec![ScoredDoc { doc: 9, score: 3.0 }];
+        let b = vec![ScoredDoc { doc: 4, score: 3.0 }];
+        let m = merge_topk(&[a, b], 2);
+        assert_eq!(m.iter().map(|d| d.doc).collect::<Vec<_>>(), vec![4, 9]);
+    }
+
+    #[test]
+    fn prop_merge_equals_flat_sort_prefix() {
+        prop::check(prop::DEFAULT_CASES, |rng: &mut Rng, _| {
+            let shards = rng.range(1, 8);
+            let k = rng.range(1, 24);
+            let mut parts: Vec<Vec<ScoredDoc>> = Vec::new();
+            let mut all: Vec<ScoredDoc> = Vec::new();
+            let mut next_doc = 0u32;
+            for _ in 0..shards {
+                let n = rng.below(30);
+                let mut list: Vec<ScoredDoc> = (0..n)
+                    .map(|_| {
+                        next_doc += 1;
+                        ScoredDoc {
+                            doc: next_doc,
+                            score: rng.below(12) as f32, // many score ties
+                        }
+                    })
+                    .collect();
+                sort_best_first(&mut list);
+                all.extend(list.iter().copied());
+                parts.push(list);
+            }
+            let merged = merge_topk(&parts, k);
+            sort_best_first(&mut all);
+            all.truncate(k);
+            assert_eq!(merged, all);
+        });
+    }
+}

@@ -1,0 +1,47 @@
+//! Sharded scatter-gather serving: partitioned index, per-shard
+//! schedulers, and slowest-shard tail attribution.
+//!
+//! Production web search never answers a query from one index: the corpus
+//! is partitioned into S shards, every query fans out to *all* of them,
+//! and the response can only leave when the **slowest** shard's partial
+//! result arrives — end-to-end latency is a maximum over S draws, the
+//! fan-out tail amplification that makes per-shard tail control (the whole
+//! subject of Hurry-up) matter per shard, not just per node.
+//!
+//! The lifecycle is **scatter → per-shard schedule → gather**:
+//!
+//! 1. **scatter** — a [`crate::loadgen::Request`] passes *all-or-nothing*
+//!    admission (every shard's policy is probed first —
+//!    [`crate::sched::Dispatcher::admit_probe`] — so a refusal anywhere
+//!    sheds the parent before anything is enqueued, keeping conservation
+//!    exact per shard and end-to-end), a parent entry opens in the
+//!    [`FanOutTable`], and one shard task enters each shard's scheduler;
+//! 2. **per-shard schedule** — every shard owns a full scheduling stack of
+//!    its own: a [`crate::sched::Dispatcher`]/[`crate::sched::SharedDispatcher`]
+//!    with an independently selectable discipline × order × policy
+//!    (config `shards = N` / `--shards`, per-shard `[[shard]]` TOML
+//!    overrides), a partition of the big/little core set
+//!    ([`ShardPlan::partition`]) and its own backlog view — admission,
+//!    placement and Hurry-up migration all run per shard;
+//! 3. **gather** — the completion that fills the parent's last slot merges
+//!    the per-shard partial top-k ([`merge_topk`], O(k log S)) into the
+//!    final result; end-to-end latency is recorded at last-shard-merge and
+//!    the critical path is attributed to the slowest shard
+//!    ([`FanOut::critical_shard`] — the per-shard attribution histogram in
+//!    [`crate::metrics::ShardStats`]).
+//!
+//! Both engines drive this module with the same pieces: the simulator
+//! shard-tags its events and models each task as `1/S` of the parent's
+//! work; the live server runs one worker pool, index slice
+//! ([`ShardIndex`], [`build_shard_indexes`]) and mapper thread per shard
+//! and executes real queries. `shards = 1` bypasses the fan-out entirely
+//! and replays the unsharded seeded output bit-for-bit (anchored in
+//! `rust/tests/sched_properties.rs`).
+
+pub mod fanout;
+pub mod merge;
+pub mod plan;
+
+pub use fanout::{FanOut, FanOutTable, TaskDone};
+pub use merge::merge_topk;
+pub use plan::{build_shard_indexes, ShardIndex, ShardPlan};

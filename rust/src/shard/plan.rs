@@ -1,0 +1,280 @@
+//! The shard plan: how one node's corpus and core set are partitioned into
+//! S self-contained serving shards.
+//!
+//! Two orthogonal partitions compose a plan:
+//!
+//! * **Documents** ([`build_shard_indexes`]) — contiguous doc-id ranges,
+//!   one [`ShardIndex`] each. Every shard index is built over its own doc
+//!   slice (its postings, lengths and titles cover only its range — local
+//!   doc ids start at 0, `doc_base` maps back to global ids) but carries
+//!   the *corpus-wide* ranking statistics (global avgdl + IDF table,
+//!   [`crate::search::Index::with_global_stats`]): self-consistent
+//!   per-shard scoring with globally comparable scores, so the gather
+//!   merge reproduces the unsharded ranking exactly (the equivalence
+//!   anchor below).
+//! * **Cores** ([`ShardPlan::partition`]) — the big/little core set of the
+//!   [`Topology`] is dealt round-robin across shards. Global core order is
+//!   big-first, so the deal spreads big cores as evenly as they go: on the
+//!   paper's 2B4L Juno, S=2 yields two 1B2L shards; S=3 yields 1B1L,
+//!   1B1L, 2L. Each shard then runs its own scheduler (dispatcher,
+//!   discipline × order × policy, affinity table, Hurry-up migrations)
+//!   over its local core set.
+
+use std::sync::Arc;
+
+use crate::platform::{CoreId, CoreKind, Topology};
+use crate::search::{bm25, Corpus, Index, ScoredDoc, SearchHit};
+
+/// The core-set partition of one node for S shards.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    core_sets: Vec<Vec<CoreId>>,
+}
+
+impl ShardPlan {
+    /// Deal the topology's cores round-robin across `shards` sets (core
+    /// `i` → shard `i mod S`). Each set preserves global big-first order,
+    /// so a set's positional order matches its local [`Topology`]'s.
+    /// Panics unless `1 <= shards <= num_cores` (every shard needs a
+    /// core) — config validation reports the same bound as a clean error.
+    pub fn partition(topology: &Topology, shards: usize) -> ShardPlan {
+        assert!(
+            shards >= 1 && shards <= topology.num_cores(),
+            "shards must be in 1..=num_cores ({} cores, {shards} shards)",
+            topology.num_cores()
+        );
+        let mut core_sets = vec![Vec::new(); shards];
+        for core in topology.cores() {
+            core_sets[core.0 % shards].push(core);
+        }
+        ShardPlan { core_sets }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.core_sets.len()
+    }
+
+    /// Global core ids of one shard, big cores first. A shard's local
+    /// `CoreId(i)` maps to `cores(s)[i]`.
+    pub fn cores(&self, shard: usize) -> &[CoreId] {
+        &self.core_sets[shard]
+    }
+
+    /// The local big/little topology of one shard.
+    pub fn local_topology(&self, shard: usize, global: &Topology) -> Topology {
+        let big = self.core_sets[shard]
+            .iter()
+            .filter(|&&c| global.kind(c) == CoreKind::Big)
+            .count();
+        Topology::new(big, self.core_sets[shard].len() - big)
+    }
+}
+
+/// One document shard: a self-contained index over a contiguous doc range,
+/// scoring with corpus-wide statistics.
+#[derive(Clone, Debug)]
+pub struct ShardIndex {
+    /// Shard number (plan order).
+    pub shard: usize,
+    /// Global doc id of this shard's local doc 0.
+    pub doc_base: u32,
+    /// The shard's index (local doc ids, global ranking stats).
+    pub index: Arc<Index>,
+}
+
+impl ShardIndex {
+    /// Map this shard's local search hits to globally-addressed scored
+    /// docs, sorted best-first — the partial-top-k format
+    /// [`crate::shard::merge_topk`] consumes. Local hit order is already
+    /// the merge's total order (score desc, doc asc): adding the constant
+    /// base preserves it.
+    pub fn globalize(&self, hits: &[SearchHit]) -> Vec<ScoredDoc> {
+        hits.iter()
+            .map(|h| ScoredDoc {
+                doc: h.doc + self.doc_base,
+                score: h.score,
+            })
+            .collect()
+    }
+}
+
+/// Partition a corpus into `shards` contiguous doc-range [`ShardIndex`]es.
+/// Ranges are as even as integer division allows; every shard shares the
+/// corpus vocabulary (so query analysis resolves the same term ids
+/// everywhere) and the corpus-wide avgdl + IDF table (so per-shard scores
+/// merge into exactly the unsharded ranking — see the equivalence test).
+pub fn build_shard_indexes(corpus: &Corpus, shards: usize) -> Vec<ShardIndex> {
+    assert!(
+        shards >= 1 && shards <= corpus.len(),
+        "shards must be in 1..=num_docs ({} docs, {shards} shards)",
+        corpus.len()
+    );
+    // Corpus-wide statistics, computed once: avgdl over all docs, document
+    // frequency per term (a last-seen-doc stamp avoids a per-doc set).
+    let num_docs = corpus.len();
+    let total_tokens: usize = corpus.docs.iter().map(|d| d.tokens.len()).sum();
+    let avgdl = total_tokens as f64 / num_docs as f64;
+    let mut doc_freq = vec![0usize; corpus.vocab.len()];
+    let mut last_seen = vec![u32::MAX; corpus.vocab.len()];
+    for (doc, d) in corpus.docs.iter().enumerate() {
+        for &t in &d.tokens {
+            if last_seen[t as usize] != doc as u32 {
+                last_seen[t as usize] = doc as u32;
+                doc_freq[t as usize] += 1;
+            }
+        }
+    }
+    let idf: Vec<f32> = doc_freq
+        .iter()
+        .map(|&df| bm25::idf(num_docs, df))
+        .collect();
+
+    (0..shards)
+        .map(|s| {
+            let lo = s * num_docs / shards;
+            let hi = (s + 1) * num_docs / shards;
+            let slice = Corpus {
+                vocab: corpus.vocab.clone(),
+                docs: corpus.docs[lo..hi].to_vec(),
+                zipf_s: corpus.zipf_s,
+            };
+            ShardIndex {
+                shard: s,
+                doc_base: lo as u32,
+                index: Arc::new(
+                    Index::build(&slice).with_global_stats(avgdl, idf.clone()),
+                ),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CorpusConfig;
+    use crate::search::{Query, SearchEngine};
+    use crate::shard::merge_topk;
+
+    #[test]
+    fn partition_covers_every_core_exactly_once() {
+        let topo = Topology::juno_r1();
+        for shards in 1..=topo.num_cores() {
+            let plan = ShardPlan::partition(&topo, shards);
+            assert_eq!(plan.shards(), shards);
+            let mut seen: Vec<usize> = (0..shards)
+                .flat_map(|s| plan.cores(s).iter().map(|c| c.0))
+                .collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..topo.num_cores()).collect::<Vec<_>>());
+            for s in 0..shards {
+                assert!(!plan.cores(s).is_empty(), "S={shards} shard {s} empty");
+                let local = plan.local_topology(s, &topo);
+                assert_eq!(local.num_cores(), plan.cores(s).len());
+                // Big-first order is preserved within the set, matching
+                // the local topology's positional kinds.
+                for (i, &c) in plan.cores(s).iter().enumerate() {
+                    assert_eq!(local.kind(CoreId(i)), topo.kind(c), "S={shards} s={s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_spreads_big_cores() {
+        let topo = Topology::juno_r1(); // 2B4L
+        let plan = ShardPlan::partition(&topo, 2);
+        for s in 0..2 {
+            assert_eq!(plan.local_topology(s, &topo).label(), "1B2L");
+        }
+        let plan3 = ShardPlan::partition(&topo, 3);
+        let labels: Vec<String> = (0..3)
+            .map(|s| plan3.local_topology(s, &topo).label())
+            .collect();
+        assert_eq!(labels, vec!["1B1L", "1B1L", "2L"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "1..=num_cores")]
+    fn oversharded_partition_rejected() {
+        ShardPlan::partition(&Topology::juno_r1(), 7);
+    }
+
+    #[test]
+    fn shard_indexes_cover_the_corpus_with_global_stats() {
+        let corpus = CorpusConfig::small().build();
+        let global = Index::build(&corpus);
+        for shards in [1usize, 2, 3, 5] {
+            let parts = build_shard_indexes(&corpus, shards);
+            assert_eq!(parts.len(), shards);
+            let mut docs = 0usize;
+            let mut next_base = 0u32;
+            for p in &parts {
+                assert_eq!(p.doc_base, next_base, "contiguous ranges");
+                next_base += p.index.num_docs() as u32;
+                docs += p.index.num_docs();
+                assert!(p.index.num_docs() > 0, "S={shards}: empty shard");
+                // Global calibration: every shard scores with the corpus
+                // avgdl and the corpus IDF table.
+                assert_eq!(p.index.avgdl(), global.avgdl(), "S={shards}");
+                for t in (0..global.num_terms() as u32).step_by(977) {
+                    assert_eq!(p.index.idf(t), global.idf(t), "S={shards} term {t}");
+                }
+            }
+            assert_eq!(docs, corpus.len(), "S={shards}: ranges partition docs");
+        }
+    }
+
+    /// The sharded-search equivalence anchor: for any S, per-shard top-k
+    /// merged by the gather returns the same doc ids and scores (within
+    /// f32 merge tolerance) as the unsharded engine — the partitioned
+    /// scorer changes nothing about the ranking.
+    #[test]
+    fn sharded_search_equals_unsharded_for_any_shard_count() {
+        let corpus = CorpusConfig::small().build();
+        let global_index = Arc::new(Index::build(&corpus));
+        let reference = SearchEngine::new(global_index.clone(), 10);
+        for shards in [2usize, 3, 5] {
+            let parts = build_shard_indexes(&corpus, shards);
+            let engines: Vec<SearchEngine> = parts
+                .iter()
+                .map(|p| SearchEngine::new(p.index.clone(), 10))
+                .collect();
+            for seed in 0..8u32 {
+                // Common + mid + rare term mixes exercise pruning paths.
+                let ids = [
+                    seed % 7,
+                    40 + seed * 13 % 200,
+                    1_000 + seed * 97 % 2_000,
+                ];
+                let q = Query::from_terms(
+                    ids.iter()
+                        .map(|&t| global_index.term(t).to_string())
+                        .collect(),
+                );
+                let want = reference.search(&q);
+                let partials: Vec<Vec<ScoredDoc>> = parts
+                    .iter()
+                    .zip(&engines)
+                    .map(|(p, e)| p.globalize(&e.search(&q).hits))
+                    .collect();
+                let got = merge_topk(&partials, 10);
+                assert_eq!(
+                    got.len(),
+                    want.hits.len(),
+                    "S={shards} seed={seed}: hit count"
+                );
+                for (g, w) in got.iter().zip(&want.hits) {
+                    assert_eq!(g.doc, w.doc, "S={shards} seed={seed}");
+                    assert!(
+                        (g.score - w.score).abs() <= 1e-4 * w.score.abs().max(1.0),
+                        "S={shards} seed={seed}: score {} vs {}",
+                        g.score,
+                        w.score
+                    );
+                }
+            }
+        }
+    }
+}

@@ -21,6 +21,10 @@ pub enum EventKind {
     },
     /// Mapper sampling window elapsed (Algorithm 1 lines 9–10).
     MapperTick,
+    /// One shard's mapper sampling window elapsed (sharded runs tick each
+    /// shard's policy independently; the unsharded loop keeps using
+    /// [`EventKind::MapperTick`] so seeded replays are untouched).
+    ShardMapperTick(usize),
 }
 
 /// A scheduled event.

@@ -11,8 +11,17 @@
 //! core's speed after a small cross-cluster stall); the four-channel energy
 //! meters integrate power over every busy/idle interval.
 //!
+//! Sharded runs (`SimConfig::shards` > 1) scatter every arrival into one
+//! task per shard (each `1/S` of the parent's work), schedule each task
+//! through that shard's own scheduling stack over its core partition
+//! (shard-tagged events: completions resolve to their shard, mapper
+//! ticks are per shard), and record end-to-end latency at
+//! last-shard-merge — with the slowest shard taking the critical-path
+//! attribution ([`crate::shard`], [`crate::metrics::ShardStats`]).
+//!
 //! Determinism: everything derives from `SimConfig::seed`, so every figure
-//! regenerates bit-for-bit — under every queue discipline.
+//! regenerates bit-for-bit — under every queue discipline, and per shard
+//! (each shard forks its own rng streams).
 
 pub mod event;
 pub mod server;

@@ -9,12 +9,30 @@ use super::event::{EventKind, EventQueue};
 use super::service::{ServiceDemand, ServiceSampler};
 use crate::config::SimConfig;
 use crate::ipc::{RequestTag, StatsRecord};
-use crate::loadgen::{ArrivalProcess, ClassId, Workload, WorkloadMix};
-use crate::mapper::{DispatchInfo, Policy, Shedding};
-use crate::metrics::{ClassStats, LatencyHistogram};
+use crate::loadgen::{ArrivalProcess, ClassId, ClassRegistry, Workload, WorkloadMix};
+use crate::mapper::{AdmissionDecision, DispatchInfo, Policy, Shedding};
+use crate::metrics::{ClassStats, LatencyHistogram, ShardStats};
 use crate::platform::{AffinityTable, CoreId, CoreKind, EnergyMeters};
-use crate::sched::{AdmissionOutcome, Dispatcher, OrderSpec, SchedCtx};
+use crate::sched::{
+    AdmissionOutcome, Dispatcher, OrderKind, OrderSpec, SchedCtx, ServiceEstimates, WfqCost,
+    WfqCostKind,
+};
+use crate::shard::{FanOutTable, ShardPlan};
 use crate::util::Rng;
+
+/// Build one queue's order spec from the run selectors, attaching the
+/// shared size-aware estimate table when configured.
+fn order_spec_for(
+    order: OrderKind,
+    registry: &ClassRegistry,
+    est: &Option<ServiceEstimates>,
+) -> OrderSpec {
+    let spec = OrderSpec::from_registry(order, registry);
+    match est {
+        Some(e) => spec.with_wfq_cost(WfqCost::Estimated(e.clone())),
+        None => spec,
+    }
+}
 
 /// Per-request outcome record.
 #[derive(Clone, Copy, Debug)]
@@ -71,6 +89,15 @@ impl RequestRecord {
 /// controller promises to protect. `completed + shed` always equals the
 /// offered workload (conservation) — globally and per class
 /// ([`SimOutput::per_class`]).
+///
+/// Sharding convention: with [`SimOutput::shards`] > 1 a request
+/// completes at *last-shard-merge* — `latency`/`per_request` describe
+/// parent (end-to-end) outcomes while [`SimOutput::per_shard`] holds the
+/// per-task view. A parent record's `started_ms` is its earliest task
+/// dispatch; `first_kind`/`final_kind` describe the critical-path
+/// (slowest) task and `migrated` is true if any task migrated. End-to-end
+/// p99 always dominates every shard's task p99 (a parent's latency is the
+/// max over its tasks, recorded over the same measured population).
 #[derive(Clone, Debug)]
 pub struct SimOutput {
     /// End-to-end latency histogram (post-warmup admitted requests).
@@ -97,6 +124,14 @@ pub struct SimOutput {
     pub discipline: String,
     /// Intra-queue dequeue-order name (`sched::order` layer).
     pub order: String,
+    /// Number of scatter-gather shards the run served with (1 =
+    /// unsharded).
+    pub shards: usize,
+    /// Per-shard fan-out outcomes (task latencies, per-class stats,
+    /// slowest-shard attribution), in shard order. Empty for unsharded
+    /// runs. Task statistics follow the same post-warmup convention as
+    /// `latency`: a task is measured iff its *parent* is.
+    pub per_shard: Vec<ShardStats>,
     /// Completions excluded from latency/placement statistics at the start
     /// of the run (`SimConfig::warmup_requests`).
     pub warmup: usize,
@@ -229,8 +264,14 @@ impl Simulation {
     }
 
     /// Run over a fixed workload trace (shared across policies so latency
-    /// comparisons are paired).
+    /// comparisons are paired). With `SimConfig::shards` > 1 every request
+    /// fans out into one task per shard and completes at last-shard-merge
+    /// (see [`Simulation::run_workload_sharded`]); `shards = 1` takes the
+    /// unsharded path below, byte for byte.
     pub fn run_workload(self, workload: &Workload) -> SimOutput {
+        if self.cfg.shards > 1 {
+            return self.run_workload_sharded(workload);
+        }
         let cfg = &self.cfg;
         let topology = cfg.topology();
         let registry = cfg.class_registry();
@@ -289,7 +330,12 @@ impl Simulation {
         // discipline, payloads (workload indices) owned by the dispatcher.
         // Per-decision SchedCtx snapshots are assembled inside the
         // dispatcher; this buffer serves the tick-time ctx only.
-        let order_spec = OrderSpec::from_registry(cfg.order, &registry);
+        // Size-aware WFQ: the engine owns the estimate table and feeds it
+        // one EWMA sample per completion (absent under the default
+        // nominal costing — no behaviour change).
+        let est = matches!(cfg.wfq_cost, WfqCostKind::Estimated)
+            .then(|| ServiceEstimates::new(registry.len()));
+        let order_spec = order_spec_for(cfg.order, &registry, &est);
         let mut dispatcher: Dispatcher<usize> =
             Dispatcher::new(cfg.discipline.build_ordered(cores.len(), &order_spec));
         let mut depth_scratch: Vec<usize> = Vec::new();
@@ -422,6 +468,9 @@ impl Simulation {
                     if measured {
                         latency.record(record.latency_ms());
                     }
+                    if let Some(est) = &est {
+                        est.observe(req.class, record.service_ms());
+                    }
                     per_class[req.class.idx()].record_completion(
                         record.latency_ms(),
                         record.queue_ms(),
@@ -481,6 +530,9 @@ impl Simulation {
                     }
                     try_dispatch!();
                 }
+                EventKind::ShardMapperTick(_) => {
+                    unreachable!("shard-tagged events never occur in an unsharded run")
+                }
             }
         }
 
@@ -512,6 +564,445 @@ impl Simulation {
             policy: policy.name(),
             discipline: dispatcher.discipline_name().to_string(),
             order: cfg.order.label().to_string(),
+            shards: 1,
+            per_shard: Vec::new(),
+            warmup: cfg.warmup_requests,
+        }
+    }
+
+    /// The sharded scatter-gather event loop: every arrival passes
+    /// all-or-nothing admission across all S shards, then fans out into
+    /// one task per shard (each `1/S` of the parent's work — a shard
+    /// scores `1/S` of the corpus); each shard runs a complete scheduling
+    /// stack (own dispatcher, discipline × order × policy, affinity,
+    /// mapper ticks and migrations) over its core partition; the
+    /// completion that fills the parent's last slot performs the gather —
+    /// end-to-end latency is recorded at last-shard-merge and the slowest
+    /// shard takes the critical-path attribution.
+    fn run_workload_sharded(self, workload: &Workload) -> SimOutput {
+        let cfg = &self.cfg;
+        let topology = cfg.topology();
+        let registry = cfg.class_registry();
+        let priorities = registry.priorities();
+        if let Some(max) = workload.requests.iter().map(|r| r.class.idx()).max() {
+            assert!(
+                max < registry.len(),
+                "workload references class id {max} but the config declares \
+                 only {} class(es) — load the trace with its matching \
+                 [[workload.class]] / --classes declaration",
+                registry.len()
+            );
+        }
+        let s_count = cfg.shards;
+        let plan = ShardPlan::partition(&topology, s_count);
+        let est = matches!(cfg.wfq_cost, WfqCostKind::Estimated)
+            .then(|| ServiceEstimates::new(registry.len()));
+        let sampler = ServiceSampler::from_config(cfg);
+        let mut meters = EnergyMeters::new();
+
+        // Global core states (indexed by global CoreId), plus the
+        // core → (shard, local index) maps.
+        let mut cores: Vec<CoreState> = topology
+            .cores()
+            .map(|c| CoreState {
+                kind: topology.kind(c),
+                running: None,
+                gen: 0,
+                last_integrated: 0.0,
+            })
+            .collect();
+        let mut shard_of_core = vec![0usize; cores.len()];
+        let mut local_of_core = vec![0usize; cores.len()];
+        for s in 0..s_count {
+            for (li, &c) in plan.cores(s).iter().enumerate() {
+                shard_of_core[c.0] = s;
+                local_of_core[c.0] = li;
+            }
+        }
+
+        /// One shard's full scheduling runtime.
+        struct ShardRt {
+            aff: AffinityTable,
+            policy: Box<dyn Policy>,
+            dispatcher: Dispatcher<usize>,
+            /// Dispatch/noise rng stream of this shard (forked per shard
+            /// so shard counts don't perturb each other's draws).
+            rng: Rng,
+            tick_rng: Rng,
+            /// Stats stream buffered between this shard's mapper ticks.
+            stream: Vec<StatsRecord>,
+            /// rid tag per in-flight local core.
+            core_rid: Vec<Option<RequestTag>>,
+            rid_seq: u64,
+            depth_scratch: Vec<usize>,
+            prio_scratch: Vec<usize>,
+            stats: ShardStats,
+        }
+
+        let mut shards: Vec<ShardRt> = (0..s_count)
+            .map(|s| {
+                let local_topo = plan.local_topology(s, &topology);
+                let (disc, order, pkind) = cfg.shard_scheduling(s);
+                let policy =
+                    Shedding::wrap(pkind.build(&local_topo), cfg.shed_deadline_ms, &registry);
+                let spec = order_spec_for(order, &registry, &est);
+                let salt = (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                ShardRt {
+                    aff: AffinityTable::round_robin(local_topo.clone()),
+                    policy,
+                    dispatcher: Dispatcher::new(
+                        disc.build_ordered(local_topo.num_cores(), &spec),
+                    ),
+                    rng: Rng::new(cfg.seed ^ 0xD15_BA7C ^ salt),
+                    tick_rng: Rng::new(cfg.seed ^ 0x71C4_11FE ^ salt),
+                    stream: Vec::new(),
+                    core_rid: vec![None; local_topo.num_cores()],
+                    rid_seq: (s as u64) << 48,
+                    depth_scratch: Vec::new(),
+                    prio_scratch: Vec::new(),
+                    stats: ShardStats::new(
+                        s,
+                        local_topo.label(),
+                        disc.label(),
+                        order.label(),
+                        pkind.label(),
+                        &registry,
+                    ),
+                }
+            })
+            .collect();
+
+        let mut events = EventQueue::new();
+        for (i, req) in workload.requests.iter().enumerate() {
+            events.push(req.arrive_ms, EventKind::Arrival(i));
+        }
+        for (s, srt) in shards.iter().enumerate() {
+            if let Some(sampling) = srt.policy.sampling_ms() {
+                events.push(sampling, EventKind::ShardMapperTick(s));
+            }
+        }
+
+        /// Sim-side per-task gather payload: the facts the parent record
+        /// needs from its critical-path task.
+        #[derive(Clone, Copy)]
+        struct TaskMark {
+            first_kind: CoreKind,
+            final_kind: CoreKind,
+            migrated: bool,
+        }
+        let mut fanout: FanOutTable<TaskMark> = FanOutTable::new(s_count);
+
+        let mut latency = LatencyHistogram::new();
+        let mut per_request: Vec<RequestRecord> = Vec::with_capacity(workload.len());
+        let mut per_class: Vec<ClassStats> = registry
+            .specs()
+            .iter()
+            .map(|c| ClassStats::new(c.name.clone(), c.priority, c.deadline_ms))
+            .collect();
+        let mut completed = 0usize;
+        let mut shed = 0usize;
+        let mut migrations = 0usize;
+        let mut now = 0.0f64;
+        let mut last_completion_ms = 0.0f64;
+
+        let integrate = |core: &mut CoreState,
+                         meters: &mut EnergyMeters,
+                         now: f64,
+                         power: &crate::platform::PowerModel| {
+            let dt = now - core.last_integrated;
+            if dt > 0.0 {
+                meters.add_core_time(power, core.kind, core.running.is_some(), dt);
+                core.last_integrated = now;
+            }
+        };
+
+        macro_rules! try_dispatch_shard {
+            ($shard:expr) => {{
+                let s_idx: usize = $shard;
+                loop {
+                    let srt = &mut shards[s_idx];
+                    let idle: Vec<CoreId> = plan
+                        .cores(s_idx)
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, g)| cores[g.0].running.is_none())
+                        .map(|(li, _)| CoreId(li))
+                        .collect();
+                    let Some((widx, local)) = srt.dispatcher.next(
+                        &idle,
+                        srt.policy.as_mut(),
+                        &srt.aff,
+                        &mut srt.rng,
+                        now,
+                    ) else {
+                        break;
+                    };
+                    let g = plan.cores(s_idx)[local.0];
+                    let req = &workload.requests[widx];
+                    // A shard task is 1/S of the parent's work: each shard
+                    // scores 1/S of the corpus (postings lengths scale with
+                    // the doc range); noise is drawn per task, which is what
+                    // makes the end-to-end latency a max over S draws.
+                    let mut demand = sampler.sample(req.keywords, &mut srt.rng);
+                    demand.work_units /= s_count as f64;
+                    let gen = {
+                        let core = &mut cores[g.0];
+                        integrate(core, &mut meters, now, &cfg.power);
+                        let kind = core.kind;
+                        core.running = Some(Running {
+                            widx,
+                            demand,
+                            arrived_ms: req.arrive_ms,
+                            started_ms: now,
+                            first_kind: kind,
+                            migrated: false,
+                            work_left: demand.work_units,
+                            last_progress: now,
+                            stall_ms: 0.0,
+                        });
+                        core.gen += 1;
+                        core.gen
+                    };
+                    let kind = cores[g.0].kind;
+                    let finish = now + demand.work_units / demand.speed_on(kind);
+                    events.push(finish, EventKind::Completion { core: g, gen });
+                    fanout.start(widx as u64, s_idx, now);
+                    let tag = RequestTag::from_seq(srt.rid_seq);
+                    srt.rid_seq += 1;
+                    srt.core_rid[local.0] = Some(tag);
+                    srt.stream.push(StatsRecord {
+                        tid: srt.aff.thread_on(local),
+                        rid: tag,
+                        ts_ms: now as u64,
+                        class: Some(req.class),
+                    });
+                }
+            }};
+        }
+
+        while let Some(ev) = events.pop() {
+            now = ev.time;
+            match ev.kind {
+                EventKind::Arrival(widx) => {
+                    let req = &workload.requests[widx];
+                    let info = DispatchInfo {
+                        keywords: req.keywords,
+                        class: req.class,
+                        priority: priorities[req.class.idx()],
+                        arrive_ms: req.arrive_ms,
+                    };
+                    // All-or-nothing fan-out admission: probe every
+                    // shard's policy against its own backlog first; a
+                    // refusal anywhere sheds the parent before anything
+                    // is enqueued anywhere.
+                    let mut refused = false;
+                    for srt in shards.iter_mut() {
+                        if let AdmissionDecision::Shed { .. } = srt.dispatcher.admit_probe(
+                            info,
+                            srt.policy.as_mut(),
+                            &srt.aff,
+                            &mut srt.rng,
+                            now,
+                        ) {
+                            refused = true;
+                            break;
+                        }
+                    }
+                    if refused {
+                        shed += 1;
+                        per_class[req.class.idx()].record_shed();
+                        // Per-shard conservation: every shard accounts the
+                        // parent, as a shed task on all S of them.
+                        for srt in shards.iter_mut() {
+                            srt.stats.record_shed(req.class);
+                        }
+                    } else {
+                        fanout.open(widx as u64, req.class, req.arrive_ms);
+                        for srt in shards.iter_mut() {
+                            srt.dispatcher.enqueue_admitted(
+                                widx,
+                                info,
+                                srt.policy.as_mut(),
+                                &srt.aff,
+                                &mut srt.rng,
+                                now,
+                            );
+                        }
+                        for s in 0..s_count {
+                            try_dispatch_shard!(s);
+                        }
+                    }
+                }
+                EventKind::Completion { core: g, gen } => {
+                    if cores[g.0].gen != gen {
+                        continue; // stale: the thread migrated meanwhile
+                    }
+                    integrate(&mut cores[g.0], &mut meters, now, &cfg.power);
+                    let (run, kind) = {
+                        let core = &mut cores[g.0];
+                        let run = core.running.take().expect("completion on idle core");
+                        core.gen += 1;
+                        (run, core.kind)
+                    };
+                    let s = shard_of_core[g.0];
+                    let local = local_of_core[g.0];
+                    let req = &workload.requests[run.widx];
+                    // End stats record for this shard task.
+                    if let Some(tag) = shards[s].core_rid[local].take() {
+                        let tid = shards[s].aff.thread_on(CoreId(local));
+                        shards[s].stream.push(StatsRecord {
+                            tid,
+                            rid: tag,
+                            ts_ms: now as u64,
+                            class: Some(req.class),
+                        });
+                    }
+                    if let Some(est) = &est {
+                        est.observe(req.class, now - run.started_ms);
+                    }
+                    // Fan-in: the last task performs the gather.
+                    if let Some(done) = fanout.complete(
+                        run.widx as u64,
+                        s,
+                        now,
+                        TaskMark {
+                            first_kind: run.first_kind,
+                            final_kind: kind,
+                            migrated: run.migrated,
+                        },
+                    ) {
+                        let critical = done.critical_shard();
+                        let crit_task = done.task(critical);
+                        let record = RequestRecord {
+                            class: req.class,
+                            keywords: req.keywords,
+                            arrived_ms: req.arrive_ms,
+                            started_ms: done.first_start_ms(),
+                            completed_ms: now,
+                            first_kind: crit_task.partial.first_kind,
+                            final_kind: crit_task.partial.final_kind,
+                            migrated: done.tasks().any(|(_, t)| t.partial.migrated),
+                        };
+                        let measured = per_request.len() >= cfg.warmup_requests;
+                        if measured {
+                            latency.record(record.latency_ms());
+                        }
+                        per_class[req.class.idx()].record_completion(
+                            record.latency_ms(),
+                            record.queue_ms(),
+                            measured,
+                        );
+                        for (sh, task) in done.tasks() {
+                            shards[sh].stats.record_task(
+                                req.class,
+                                task.completed_ms - req.arrive_ms,
+                                task.started_ms - req.arrive_ms,
+                                measured,
+                                sh == critical,
+                            );
+                        }
+                        per_request.push(record);
+                        completed += 1;
+                        last_completion_ms = now;
+                    }
+                    try_dispatch_shard!(s);
+                }
+                EventKind::ShardMapperTick(s) => {
+                    let migs = {
+                        let ShardRt {
+                            aff,
+                            policy,
+                            dispatcher,
+                            tick_rng,
+                            stream,
+                            depth_scratch,
+                            prio_scratch,
+                            ..
+                        } = &mut shards[s];
+                        for rec in stream.drain(..) {
+                            policy.observe(&rec);
+                        }
+                        let view = dispatcher.queue_view(depth_scratch, prio_scratch);
+                        let mut ctx = SchedCtx {
+                            aff,
+                            rng: tick_rng,
+                            queues: view,
+                            now_ms: now,
+                        };
+                        policy.tick(&mut ctx)
+                    };
+                    for mig in migs {
+                        migrations += 1;
+                        let global_big = plan.cores(s)[mig.big_core.0];
+                        let global_little = plan.cores(s)[mig.little_core.0];
+                        let srt = &mut shards[s];
+                        apply_shard_migration(
+                            mig.big_core,
+                            mig.little_core,
+                            global_big,
+                            global_little,
+                            now,
+                            &mut cores,
+                            &mut srt.aff,
+                            &mut srt.core_rid,
+                            &mut events,
+                            &mut meters,
+                            cfg,
+                        );
+                    }
+                    if completed + shed < workload.len() {
+                        if let Some(sampling) = shards[s].policy.sampling_ms() {
+                            events.push(now + sampling, EventKind::ShardMapperTick(s));
+                        }
+                    }
+                    try_dispatch_shard!(s);
+                }
+                EventKind::MapperTick => {
+                    unreachable!("untagged mapper ticks never occur in a sharded run")
+                }
+            }
+        }
+
+        for core in cores.iter_mut() {
+            let dt = last_completion_ms - core.last_integrated;
+            if dt > 0.0 {
+                meters.add_core_time(&cfg.power, core.kind, core.running.is_some(), dt);
+            }
+        }
+        meters.add_wall_time(&cfg.power, last_completion_ms);
+
+        debug_assert_eq!(completed + shed, workload.len(), "parents lost");
+        debug_assert!(fanout.is_empty(), "parents stranded mid-gather");
+        for srt in &shards {
+            debug_assert_eq!(srt.dispatcher.queued(), 0, "tasks stranded in queues");
+            debug_assert_eq!(
+                srt.stats.offered(),
+                workload.len(),
+                "per-shard conservation"
+            );
+        }
+        debug_assert_eq!(
+            per_class.iter().map(ClassStats::offered).sum::<usize>(),
+            workload.len(),
+            "per-class conservation"
+        );
+
+        let policy_name = shards[0].policy.name();
+        let per_shard: Vec<ShardStats> = shards.into_iter().map(|srt| srt.stats).collect();
+        SimOutput {
+            latency,
+            per_request,
+            energy: meters,
+            duration_ms: last_completion_ms,
+            completed,
+            shed,
+            per_class,
+            migrations,
+            policy: policy_name,
+            discipline: cfg.discipline.label().to_string(),
+            order: cfg.order.label().to_string(),
+            shards: s_count,
+            per_shard,
             warmup: cfg.warmup_requests,
         }
     }
@@ -521,6 +1012,8 @@ impl Simulation {
 /// remaining units continue at the new core's speed after the migration
 /// stall. Requests stay attached to their *thread*: the request running on
 /// the little core moves (with its thread) to the big core and vice versa.
+/// In the unsharded engine the mapper's id space IS the core array's, so
+/// this is [`apply_shard_migration`] with the identity local↔global map.
 #[allow(clippy::too_many_arguments)]
 fn apply_migration(
     big: CoreId,
@@ -533,9 +1026,32 @@ fn apply_migration(
     meters: &mut EnergyMeters,
     cfg: &SimConfig,
 ) {
-    debug_assert_ne!(big, little);
+    apply_shard_migration(big, little, big, little, now, cores, aff, core_rid, events, meters, cfg)
+}
+
+/// The migration mechanics, generic over the two id spaces of sharded
+/// runs: the mapper speaks *local* core ids (its policy runs over the
+/// shard's local topology and affinity table — `local_*` drive the
+/// affinity and rid-tag swaps) while run state, energy and completion
+/// events live on the *global* core array (`global_*`). The unsharded
+/// engine passes the same ids for both.
+#[allow(clippy::too_many_arguments)]
+fn apply_shard_migration(
+    local_big: CoreId,
+    local_little: CoreId,
+    global_big: CoreId,
+    global_little: CoreId,
+    now: f64,
+    cores: &mut [CoreState],
+    aff: &mut AffinityTable,
+    core_rid: &mut [Option<RequestTag>],
+    events: &mut EventQueue,
+    meters: &mut EnergyMeters,
+    cfg: &SimConfig,
+) {
+    debug_assert_ne!(global_big, global_little);
     // Integrate energy and progress up to `now` on both cores.
-    for &cid in &[big, little] {
+    for &cid in &[global_big, global_little] {
         let core = &mut cores[cid.0];
         let dt = now - core.last_integrated;
         if dt > 0.0 {
@@ -552,27 +1068,27 @@ fn apply_migration(
             run.last_progress = now;
         }
     }
-    // Swap the *threads* (and the requests riding on them).
-    aff.swap(big, little);
-    let (a, b) = if big.0 < little.0 {
-        let (lo, hi) = cores.split_at_mut(little.0);
-        (&mut lo[big.0], &mut hi[0])
+    // Swap the threads in the shard's local affinity table and the
+    // requests riding on the global cores.
+    aff.swap(local_big, local_little);
+    let (a, b) = if global_big.0 < global_little.0 {
+        let (lo, hi) = cores.split_at_mut(global_little.0);
+        (&mut lo[global_big.0], &mut hi[0])
     } else {
-        let (lo, hi) = cores.split_at_mut(big.0);
-        (&mut hi[0], &mut lo[little.0])
+        let (lo, hi) = cores.split_at_mut(global_big.0);
+        (&mut hi[0], &mut lo[global_little.0])
     };
     std::mem::swap(&mut a.running, &mut b.running);
-    core_rid.swap(big.0, little.0);
+    core_rid.swap(local_big.0, local_little.0);
 
     // Reschedule completions on both cores at their new speeds.
-    for &cid in &[big, little] {
+    for &cid in &[global_big, global_little] {
         let core = &mut cores[cid.0];
         core.gen += 1;
         if let Some(run) = core.running.as_mut() {
             run.migrated = true;
             run.stall_ms += cfg.service.migration_cost_ms;
-            let finish =
-                now + run.stall_ms + run.work_left / run.demand.speed_on(core.kind);
+            let finish = now + run.stall_ms + run.work_left / run.demand.speed_on(core.kind);
             events.push(
                 finish,
                 EventKind::Completion {
@@ -963,6 +1479,131 @@ mod tests {
             assert_eq!(a.duration_ms, b.duration_ms, "{order:?}");
             assert_eq!(a.shed, b.shed, "{order:?}");
         }
+    }
+
+    #[test]
+    fn sharded_run_conserves_and_dominates_shard_tails() {
+        let out = Simulation::new(
+            base(PolicyKind::HurryUp {
+                sampling_ms: 25.0,
+                threshold_ms: 50.0,
+            })
+            .with_qps(20.0)
+            .with_requests(1_500)
+            .with_shards(2),
+        )
+        .run();
+        assert_eq!(out.shards, 2);
+        assert_eq!(out.per_shard.len(), 2);
+        assert_eq!(out.completed, 1_500, "no admission control: all complete");
+        assert_eq!(out.shed, 0);
+        for s in &out.per_shard {
+            // Per-shard conservation: every parent is a task on every shard.
+            assert_eq!(s.offered(), 1_500, "shard {}", s.shard);
+            assert_eq!(s.completed(), out.completed, "shard {}", s.shard);
+            assert_eq!(s.shed(), out.shed, "shard {}", s.shard);
+            // Same measured population as the end-to-end histogram, and
+            // e2e latency dominates every shard's task latency.
+            assert_eq!(s.tasks.count(), out.latency.count(), "shard {}", s.shard);
+            assert!(
+                out.latency.percentile(0.99) >= s.task_p99_ms(),
+                "e2e p99 {} < shard {} task p99 {}",
+                out.latency.percentile(0.99),
+                s.shard,
+                s.task_p99_ms()
+            );
+            assert_eq!(s.cores, "1B2L", "round-robin deal splits 2B4L evenly");
+        }
+        // Critical-path attribution partitions the completed parents.
+        assert_eq!(
+            out.per_shard.iter().map(|s| s.critical).sum::<usize>(),
+            out.completed
+        );
+        // Parents' records are physically sane.
+        for r in &out.per_request {
+            assert!(r.started_ms >= r.arrived_ms - 1e-9);
+            assert!(r.completed_ms > r.started_ms);
+        }
+    }
+
+    #[test]
+    fn sharded_runs_replay_deterministically() {
+        for shards in [2usize, 3] {
+            let mk = || {
+                base(PolicyKind::HurryUp {
+                    sampling_ms: 25.0,
+                    threshold_ms: 50.0,
+                })
+                .with_qps(15.0)
+                .with_requests(800)
+                .with_shards(shards)
+            };
+            let a = Simulation::new(mk()).run();
+            let b = Simulation::new(mk()).run();
+            assert_eq!(a.completed, 800, "S={shards}");
+            assert_eq!(a.duration_ms, b.duration_ms, "S={shards}");
+            assert_eq!(a.migrations, b.migrations, "S={shards}");
+            for (x, y) in a.per_request.iter().zip(&b.per_request) {
+                assert_eq!(x.completed_ms, y.completed_ms, "S={shards}");
+                assert_eq!(x.started_ms, y.started_ms, "S={shards}");
+            }
+            for (x, y) in a.per_shard.iter().zip(&b.per_shard) {
+                assert_eq!(x.critical, y.critical, "S={shards}");
+                assert_eq!(x.task_p99_ms(), y.task_p99_ms(), "S={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_shard_overrides_select_independent_stacks() {
+        use crate::config::ShardOverride;
+        use crate::sched::OrderKind;
+        let cfg = base(PolicyKind::LinuxRandom)
+            .with_qps(10.0)
+            .with_requests(400)
+            .with_shards(2)
+            .with_shard_overrides(vec![
+                ShardOverride::default(),
+                ShardOverride {
+                    discipline: Some(DisciplineKind::PerCore),
+                    order: Some(OrderKind::Wfq),
+                    policy: Some(PolicyKind::QueueAware),
+                },
+            ]);
+        let out = Simulation::new(cfg).run();
+        assert_eq!(out.completed, 400);
+        assert_eq!(out.per_shard[0].discipline, "centralized");
+        assert_eq!(out.per_shard[0].order, "strict");
+        assert_eq!(out.per_shard[1].discipline, "per_core");
+        assert_eq!(out.per_shard[1].order, "wfq");
+        assert_eq!(out.per_shard[1].policy, "queue-aware");
+    }
+
+    #[test]
+    fn estimated_wfq_cost_completes_and_replays() {
+        use crate::loadgen::ClassSpec;
+        use crate::sched::{OrderKind, WfqCostKind};
+        let classes = || {
+            vec![
+                ClassSpec::new("fg", KeywordMix::Paper)
+                    .with_share(0.5)
+                    .with_weight(1.0),
+                ClassSpec::new("bg", KeywordMix::Uniform(8, 14)).with_share(0.5),
+            ]
+        };
+        let mk = || {
+            base(PolicyKind::LinuxRandom)
+                .with_qps(40.0)
+                .with_requests(1_000)
+                .with_classes(classes())
+                .with_order(OrderKind::Wfq)
+                .with_wfq_cost(WfqCostKind::Estimated)
+        };
+        let a = Simulation::new(mk()).run();
+        let b = Simulation::new(mk()).run();
+        assert_eq!(a.completed + a.shed, 1_000, "conservation");
+        assert_eq!(a.duration_ms, b.duration_ms, "seeded replay");
+        assert_eq!(a.p90_ms(), b.p90_ms());
     }
 
     #[test]

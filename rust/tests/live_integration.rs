@@ -253,6 +253,90 @@ fn hurryup_beats_static_on_live_server() {
 }
 
 #[test]
+fn sharded_live_scatter_gathers_every_request() {
+    // Scatter-gather end to end on real threads: S=2 worker pools over
+    // doc-range index slices, all-or-nothing admission, gather at
+    // last-shard-merge.
+    let corpus = CorpusConfig {
+        num_docs: 800,
+        vocab_size: 2_000,
+        ..CorpusConfig::small()
+    }
+    .build();
+    let cfg = LiveConfig {
+        shards: 2,
+        qps: 60.0,
+        num_requests: 80,
+        ..base_cfg()
+    };
+    let report = LiveServer::from_corpus(cfg, &corpus).run().unwrap();
+    assert_eq!(report.shards, 2);
+    assert_eq!(report.per_shard.len(), 2);
+    assert_eq!(report.per_request.len() + report.shed, 80, "conservation");
+    assert_eq!(report.shed, 0, "no admission control configured");
+    let parents = report.per_request.len();
+    for s in &report.per_shard {
+        // Per-shard conservation: every parent is a task on every shard.
+        assert_eq!(s.offered(), 80, "shard {}", s.shard);
+        assert_eq!(s.completed(), parents, "shard {}", s.shard);
+        // End-to-end latency dominates every shard's task latency.
+        assert!(
+            report.latency.percentile(0.99) >= s.task_p99_ms(),
+            "e2e p99 {} < shard {} task p99 {}",
+            report.latency.percentile(0.99),
+            s.shard,
+            s.task_p99_ms()
+        );
+        assert_eq!(s.cores, "1B2L", "round-robin deal splits 2B4L evenly");
+    }
+    // Critical-path attribution partitions the completed parents.
+    assert_eq!(
+        report.per_shard.iter().map(|s| s.critical).sum::<usize>(),
+        parents
+    );
+    // The gather produced real merged results for most queries.
+    let with_hits = report
+        .per_request
+        .iter()
+        .filter(|r| r.top_hit.is_some())
+        .count();
+    assert!(with_hits > 60, "only {with_hits}/{parents} gathers had hits");
+    // Parent records are physically sane (start ≤ completion, e2e ≥ 0).
+    for r in &report.per_request {
+        assert!(r.completed_ms >= r.started_ms);
+        assert!(r.latency_ms() >= 0.0);
+    }
+}
+
+#[test]
+fn sharded_live_sheds_all_or_nothing() {
+    // A negative deadline refuses every parent at the fan-out door: no
+    // shard ever sees a task, and per-shard conservation still holds
+    // (every parent is a shed task on every shard).
+    let corpus = CorpusConfig {
+        num_docs: 400,
+        vocab_size: 1_000,
+        ..CorpusConfig::small()
+    }
+    .build();
+    let cfg = LiveConfig {
+        shards: 2,
+        shed_deadline_ms: Some(-1.0),
+        qps: 200.0,
+        num_requests: 30,
+        ..base_cfg()
+    };
+    let report = LiveServer::from_corpus(cfg, &corpus).run().unwrap();
+    assert_eq!(report.per_request.len(), 0);
+    assert_eq!(report.shed, 30);
+    assert_eq!(report.total_passes, 0, "no shard ever saw a task");
+    for s in &report.per_shard {
+        assert_eq!(s.completed(), 0);
+        assert_eq!(s.shed(), 30, "shard {}: all-or-nothing accounting", s.shard);
+    }
+}
+
+#[test]
 fn xla_backend_end_to_end_if_artifact_present() {
     if hurryup::runtime::artifact::require_scorer().is_err() {
         eprintln!("SKIP: artifact missing (run `make artifacts`)");

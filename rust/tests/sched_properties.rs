@@ -8,8 +8,12 @@
 //! is the pre-`sched` simulator bit for bit on seeded runs, through the
 //! `SchedCtx` API; an infinite shed deadline reproduces the no-admission
 //! output exactly; the single-default-class typed-request path reproduces
-//! the untyped seeded output exactly; and the default `strict` order
-//! reproduces the pre-order (PR 3) seeded output exactly.
+//! the untyped seeded output exactly; the default `strict` order
+//! reproduces the pre-order (PR 3) seeded output exactly; and `shards = 1`
+//! reproduces the pre-sharding (PR 4) seeded output exactly, while sharded
+//! runs conserve requests per shard AND end to end (all-or-nothing
+//! fan-out admission; every parent completes exactly once, after all S of
+//! its shard tasks).
 
 use hurryup::config::{KeywordMix, SimConfig};
 use hurryup::loadgen::{ClassId, ClassSpec};
@@ -521,6 +525,7 @@ fn two_class_spec(kind: OrderKind) -> OrderSpec {
             ClassOrdering { weight: 3.0, deadline_ms: Some(500.0) },
             ClassOrdering { weight: 1.0, deadline_ms: None },
         ],
+        ..OrderSpec::default()
     }
 }
 
@@ -752,6 +757,112 @@ fn explicit_strict_order_replays_pr3_seeded_output() {
     assert_eq!(default_run.migrations, explicit.migrations);
     assert_eq!(default_run.duration_ms, explicit.duration_ms);
     assert!((default_run.energy.total_j() - explicit.energy.total_j()).abs() < 1e-12);
+}
+
+/// The sharding anchor: `shards = 1` (set explicitly) takes the exact
+/// unsharded code path and replays the PR 4 seeded output bit for bit —
+/// same config/seed as the anchor chain above, so the chain extends all
+/// the way back to the pre-`sched` simulator.
+#[test]
+fn single_shard_replays_pr4_seeded_output() {
+    let mk = || {
+        SimConfig::paper_default(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        })
+        .with_qps(30.0)
+        .with_requests(3_000)
+        .with_seed(11)
+    };
+    let default_run = Simulation::new(mk()).run();
+    let explicit = Simulation::new(mk().with_shards(1)).run();
+    assert_eq!(default_run.shards, 1, "unsharded by default");
+    assert_eq!(explicit.shards, 1);
+    assert!(explicit.per_shard.is_empty(), "no fan-out bookkeeping at S=1");
+    assert_eq!(default_run.per_request.len(), explicit.per_request.len());
+    for (x, y) in default_run.per_request.iter().zip(&explicit.per_request) {
+        assert_eq!(x.arrived_ms, y.arrived_ms);
+        assert_eq!(x.started_ms, y.started_ms);
+        assert_eq!(x.completed_ms, y.completed_ms);
+        assert_eq!(x.first_kind, y.first_kind);
+        assert_eq!(x.final_kind, y.final_kind);
+        assert_eq!(x.migrated, y.migrated);
+    }
+    assert_eq!(default_run.migrations, explicit.migrations);
+    assert_eq!(default_run.duration_ms, explicit.duration_ms);
+    assert!((default_run.energy.total_j() - explicit.energy.total_j()).abs() < 1e-12);
+}
+
+/// Scatter-gather conservation, per shard AND end to end, with admission
+/// control in the loop: offered == completed + shed globally, per class,
+/// and on every shard (all-or-nothing fan-out admission — a parent is
+/// either a completed task on all S shards or a shed task on all S);
+/// every completed parent completed exactly once, after all S of its
+/// shard tasks (its e2e latency dominates every per-shard task tail).
+#[test]
+fn prop_sharded_conservation_per_shard_and_end_to_end() {
+    prop::check(8, |rng: &mut Rng, _i| {
+        let shards = rng.range(2, 3); // 2 or 3 shards on the 6-core Juno
+        let n = rng.range(400, 900);
+        let classes = vec![
+            ClassSpec::new("interactive", KeywordMix::Paper)
+                .with_share(0.7)
+                .with_deadline(rng.f64_range(300.0, 900.0))
+                .with_priority(1),
+            ClassSpec::new("batch", KeywordMix::Uniform(5, 10)).with_share(0.3),
+        ];
+        let cfg = SimConfig::paper_default(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        })
+        .with_qps(rng.f64_range(15.0, 45.0))
+        .with_requests(n)
+        .with_seed(rng.next_u64())
+        .with_shards(shards)
+        .with_classes(classes);
+        let out = Simulation::new(cfg).run();
+        // End-to-end conservation.
+        assert_eq!(out.completed + out.shed, n, "S={shards}: conservation");
+        assert_eq!(
+            out.per_request.len(),
+            out.completed,
+            "every parent completes exactly once"
+        );
+        assert_eq!(out.per_shard.len(), shards);
+        // Per-class conservation (parent level).
+        assert_eq!(
+            out.per_class.iter().map(|c| c.offered()).sum::<usize>(),
+            n,
+            "S={shards}: classes partition the workload"
+        );
+        // Per-shard conservation: every parent is accounted on every
+        // shard, completed XOR shed, class by class.
+        for s in &out.per_shard {
+            assert_eq!(s.offered(), n, "S={shards} shard {}", s.shard);
+            assert_eq!(s.completed(), out.completed, "shard {}", s.shard);
+            assert_eq!(s.shed(), out.shed, "shard {}", s.shard);
+            for (sc, pc) in s.per_class.iter().zip(&out.per_class) {
+                assert_eq!(sc.completed, pc.completed, "shard {} class", s.shard);
+                assert_eq!(sc.shed, pc.shed, "shard {} class", s.shard);
+            }
+            // Fan-out dominance: the end-to-end tail can never beat a
+            // shard's task tail (same measured population).
+            assert_eq!(s.tasks.count(), out.latency.count(), "shard {}", s.shard);
+            assert!(
+                out.latency.percentile(0.99) >= s.task_p99_ms() - 1e-9,
+                "S={shards} shard {}: e2e p99 {} < task p99 {}",
+                s.shard,
+                out.latency.percentile(0.99),
+                s.task_p99_ms()
+            );
+        }
+        // Critical-path attribution partitions the completed parents.
+        assert_eq!(
+            out.per_shard.iter().map(|s| s.critical).sum::<usize>(),
+            out.completed,
+            "S={shards}: slowest-shard attribution"
+        );
+    });
 }
 
 /// Seeded determinism for the decentralized disciplines too.
