@@ -6,14 +6,24 @@
 //!   sim_event_loop     DES throughput (requests/s) at the 30 QPS point
 //!   mapper_tick        Algorithm 1 decision cost with a loaded table
 //!   queue_discipline   sched-layer enqueue+dispatch cost per discipline
+//!   batched_dispatch   next_batch drain at batch_max 1/4/8 (same backlog)
 //!   order              OrderPolicy push/take_best per order at 10k queued
 //!   shard_merge        k-way gather merge, 10k candidate hits, 2/4/8 shards
 //!   stats_codec        IPC record encode+parse
 //!   bm25_block_rust    one 256×24 block scored in Rust
 //!   xla_block          one block through the PJRT artifact (if built)
 //!   engine_query       full query execution over the small index
+//!   engine_query_union union traversal, 8k-doc index, common+rare queries
+//!   engine_query_wand  Block-Max WAND on the identical index and queries
 //!   histogram_record   latency histogram insert + percentile
 //!   topk_push          bounded top-k insertion
+//!
+//! Flags (after `--`):
+//!   --json           emit one machine-readable JSON object on stdout
+//!                    (human lines suppressed; see BENCH_hotpath.json)
+//!   --budget-ms N    override every group's measure budget (CI smoke runs
+//!                    `--json --budget-ms 20`; also shrinks the one-shot
+//!                    sim_event_loop to 2 000 requests)
 
 use std::hint::black_box;
 use std::time::Instant;
@@ -27,32 +37,98 @@ use hurryup::sched::{
     ClassOrdering, DisciplineKind, Dispatcher, OrderKind, OrderSpec, QueueView, QueuedTicket,
 };
 use hurryup::search::engine::BlockScorer;
-use hurryup::search::{Bm25Params, Index, Query, RustScorer, ScoreBlock, SearchEngine, TopK};
+use hurryup::search::{
+    Bm25Params, Index, Query, RustScorer, ScoreBlock, SearchEngine, TopK, Traversal,
+};
 use hurryup::sim::Simulation;
 use hurryup::util::Rng;
 
-/// Run `f` repeatedly for ~`budget_ms`, returning (iters, secs).
+/// Run `f` repeatedly for ~`budget_ms` (always at least once), returning
+/// (iters, secs) — the at-least-once guarantee keeps tiny CI smoke budgets
+/// from producing 0-iteration NaN rates.
 fn measure<F: FnMut()>(budget_ms: u64, mut f: F) -> (u64, f64) {
     for _ in 0..3 {
         f(); // warmup
     }
     let t0 = Instant::now();
-    let budget = std::time::Duration::from_millis(budget_ms);
+    let budget = std::time::Duration::from_millis(budget_ms.max(1));
     let mut iters = 0u64;
-    while t0.elapsed() < budget {
+    loop {
         f();
         iters += 1;
+        if t0.elapsed() >= budget {
+            break;
+        }
     }
     (iters, t0.elapsed().as_secs_f64())
 }
 
-fn report(name: &str, unit: &str, per_iter_units: f64, iters: u64, secs: f64) {
-    let rate = per_iter_units * iters as f64 / secs;
-    let per = secs / iters as f64;
-    println!(
-        "{name:<18} {rate:>14.0} {unit}/s   {:>12.3} µs/iter   ({iters} iters)",
-        per * 1e6
-    );
+/// Collects results; prints human lines as they arrive or one JSON object
+/// at the end (`--json`), so stdout is parseable machine output.
+struct Reporter {
+    json: bool,
+    entries: Vec<String>,
+}
+
+impl Reporter {
+    fn new(json: bool) -> Reporter {
+        Reporter { json, entries: Vec::new() }
+    }
+
+    fn add(&mut self, name: &str, unit: &str, per_iter_units: f64, iters: u64, secs: f64) {
+        self.add_work(name, unit, per_iter_units, iters, secs, &[]);
+    }
+
+    /// Like [`Reporter::add`] with deterministic work counters attached
+    /// (e.g. docs scored vs skipped — what "wand does strictly less work"
+    /// is read off, independent of machine speed).
+    fn add_work(
+        &mut self,
+        name: &str,
+        unit: &str,
+        per_iter_units: f64,
+        iters: u64,
+        secs: f64,
+        work: &[(&str, u64)],
+    ) {
+        let rate = per_iter_units * iters as f64 / secs;
+        let per_us = secs / iters as f64 * 1e6;
+        if !self.json {
+            println!(
+                "{name:<22} {rate:>14.0} {unit}/s   {per_us:>12.3} µs/iter   ({iters} iters)"
+            );
+            for (k, v) in work {
+                println!("{:<22}   {k} = {v}", "");
+            }
+        }
+        let mut entry = format!(
+            "{{\"name\":\"{name}\",\"unit\":\"{unit}\",\"rate_per_s\":{rate:.1},\
+             \"us_per_iter\":{per_us:.3},\"iters\":{iters}"
+        );
+        if !work.is_empty() {
+            let body: Vec<String> = work.iter().map(|(k, v)| format!("\"{k}\":{v}")).collect();
+            entry.push_str(",\"work\":{");
+            entry.push_str(&body.join(","));
+            entry.push('}');
+        }
+        entry.push('}');
+        self.entries.push(entry);
+    }
+
+    fn finish(self, budget_override: Option<u64>) {
+        if self.json {
+            let budget = budget_override
+                .map(|b| b.to_string())
+                .unwrap_or_else(|| "null".to_string());
+            println!(
+                "{{\"bench\":\"hotpath\",\"schema\":1,\"budget_override_ms\":{budget},\
+                 \"results\":[{}]}}",
+                self.entries.join(",")
+            );
+        } else {
+            println!("\nhotpath bench complete");
+        }
+    }
 }
 
 fn make_block() -> (ScoreBlock, Vec<f32>) {
@@ -75,26 +151,54 @@ fn make_block() -> (ScoreBlock, Vec<f32>) {
 }
 
 fn main() {
-    println!("hurryup hotpath bench (hand-rolled; criterion unavailable offline)\n");
+    let mut json = false;
+    let mut budget_override: Option<u64> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => json = true,
+            "--budget-ms" => {
+                budget_override = Some(
+                    args.next()
+                        .and_then(|v| v.parse().ok())
+                        .expect("--budget-ms takes an integer (milliseconds)"),
+                );
+            }
+            // `cargo bench` passes --bench through to harness=false targets.
+            "--bench" => {}
+            other => {
+                eprintln!("unknown argument: {other}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let b = |default_ms: u64| budget_override.unwrap_or(default_ms);
+    let mut r = Reporter::new(json);
+
+    if !json {
+        println!("hurryup hotpath bench (hand-rolled; criterion unavailable offline)\n");
+    }
 
     // --- sim event loop ---
     {
+        let requests = if budget_override.is_some() { 2_000 } else { 20_000 };
         let cfg = SimConfig::paper_default(PolicyKind::HurryUp {
             sampling_ms: 25.0,
             threshold_ms: 50.0,
         })
         .with_qps(30.0)
-        .with_requests(20_000)
+        .with_requests(requests)
         .with_seed(1);
         let t0 = Instant::now();
         let out = Simulation::new(cfg).run();
         let secs = t0.elapsed().as_secs_f64();
-        println!(
-            "sim_event_loop     {:>14.0} requests/s ({} requests, {} migrations, {:.2}s)",
-            out.completed as f64 / secs,
-            out.completed,
-            out.migrations,
-            secs
+        r.add_work(
+            "sim_event_loop",
+            "requests",
+            out.completed as f64,
+            1,
+            secs,
+            &[("completed", out.completed as u64), ("migrations", out.migrations as u64)],
         );
     }
 
@@ -112,7 +216,7 @@ fn main() {
             });
         }
         let mut tick_rng = Rng::new(1);
-        let (iters, secs) = measure(300, || {
+        let (iters, secs) = measure(b(300), || {
             let mut ctx = SchedCtx {
                 aff: &aff,
                 rng: &mut tick_rng,
@@ -121,7 +225,7 @@ fn main() {
             };
             black_box(policy.tick(&mut ctx));
         });
-        report("mapper_tick", "ticks", 1.0, iters, secs);
+        r.add("mapper_tick", "ticks", 1.0, iters, secs);
     }
 
     // --- queue disciplines: sched-layer enqueue + dispatch cost ---
@@ -135,7 +239,7 @@ fn main() {
             let mut policy = PolicyKind::LinuxRandom.build(&topo);
             let mut rng = Rng::new(17);
             let mut dispatcher: Dispatcher<usize> = Dispatcher::new(kind.build(6));
-            let (iters, secs) = measure(300, || {
+            let (iters, secs) = measure(b(300), || {
                 for i in 0..64usize {
                     let _ = dispatcher.enqueue(
                         i,
@@ -151,13 +255,45 @@ fn main() {
                     .is_some()
                 {}
             });
-            report(
-                &format!("sched_{}", kind.label()),
-                "requests",
-                64.0,
-                iters,
-                secs,
-            );
+            r.add(&format!("sched_{}", kind.label()), "requests", 64.0, iters, secs);
+        }
+    }
+
+    // --- batched dispatch: next_batch drain vs the unbatched baseline ---
+    // The same 64-request single-class backlog drained through the
+    // centralized discipline at batch_max 1 (the `next` degenerate case),
+    // 4, and 8: the per-dispatch policy/rng/scan overhead amortizes over
+    // the batch, so higher caps drain the backlog in fewer queue passes.
+    {
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo.clone());
+        let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
+        for bmax in [1usize, 4, 8] {
+            let limits = vec![bmax];
+            let mut policy = PolicyKind::LinuxRandom.build(&topo);
+            let mut rng = Rng::new(23);
+            let mut dispatcher: Dispatcher<usize> =
+                Dispatcher::new(DisciplineKind::Centralized.build(6));
+            let mut out: Vec<usize> = Vec::new();
+            let info = |i: usize| DispatchInfo {
+                class: hurryup::loadgen::ClassId(0),
+                priority: 0,
+                arrive_ms: i as f64,
+                ..DispatchInfo::untyped(3)
+            };
+            let (iters, secs) = measure(b(300), || {
+                for i in 0..64usize {
+                    let _ = dispatcher.enqueue(i, info(i), policy.as_mut(), &aff, &mut rng, 0.0);
+                }
+                while dispatcher
+                    .next_batch(&idle, &limits, policy.as_mut(), &aff, &mut rng, 0.0, &mut out)
+                    .is_some()
+                {
+                    black_box(&out);
+                    out.clear();
+                }
+            });
+            r.add(&format!("batched_dispatch_{bmax}"), "requests", 64.0, iters, secs);
         }
     }
 
@@ -190,13 +326,13 @@ fn main() {
                 q.push(item(t));
             }
             let mut t = 10_000u64;
-            let (iters, secs) = measure(300, || {
+            let (iters, secs) = measure(b(300), || {
                 q.push(item(black_box(t)));
                 t += 1;
                 black_box(q.take_best());
             });
             assert_eq!(q.len(), 10_000, "steady state preserved");
-            report(&format!("order_{}", kind.label()), "ops", 2.0, iters, secs);
+            r.add(&format!("order_{}", kind.label()), "ops", 2.0, iters, secs);
         }
     }
 
@@ -226,16 +362,10 @@ fn main() {
                     list
                 })
                 .collect();
-            let (iters, secs) = measure(300, || {
+            let (iters, secs) = measure(b(300), || {
                 black_box(merge_topk(black_box(&parts), 10));
             });
-            report(
-                &format!("shard_merge_{shards}"),
-                "hits",
-                10_000.0,
-                iters,
-                secs,
-            );
+            r.add(&format!("shard_merge_{shards}"), "hits", 10_000.0, iters, secs);
         }
     }
 
@@ -247,55 +377,43 @@ fn main() {
             ts_ms: 1_498_060_927_953,
             class: None,
         };
-        let (iters, secs) = measure(300, || {
+        let (iters, secs) = measure(b(300), || {
             let line = black_box(&rec).encode();
             black_box(StatsRecord::parse(&line).unwrap());
         });
-        report("stats_codec", "records", 1.0, iters, secs);
+        r.add("stats_codec", "records", 1.0, iters, secs);
     }
 
     // --- BM25 block, Rust ---
     {
         let (block, idf) = make_block();
         let mut scorer = RustScorer::new(Bm25Params::default());
-        let (iters, secs) = measure(500, || {
+        let (iters, secs) = measure(b(500), || {
             black_box(scorer.score_block(black_box(&block), &idf, 450.0).unwrap());
         });
-        report(
-            "bm25_block_rust",
-            "docs",
-            hurryup::search::DOC_BLOCK as f64,
-            iters,
-            secs,
-        );
+        r.add("bm25_block_rust", "docs", hurryup::search::DOC_BLOCK as f64, iters, secs);
     }
 
     // --- BM25 block, XLA artifact (optional) ---
     match hurryup::runtime::XlaScorer::load() {
         Ok(mut scorer) => {
             let (block, idf) = make_block();
-            let (iters, secs) = measure(1000, || {
+            let (iters, secs) = measure(b(1000), || {
                 black_box(scorer.score_block(black_box(&block), &idf, 450.0).unwrap());
             });
-            report(
-                "xla_block",
-                "docs",
-                hurryup::search::DOC_BLOCK as f64,
-                iters,
-                secs,
-            );
+            r.add("xla_block", "docs", hurryup::search::DOC_BLOCK as f64, iters, secs);
             // Repeated execution (the live emulation path): 16 passes per
             // upload — §Perf optimization amortising H2D/literal cost.
-            let (iters, secs) = measure(1000, || {
+            let (iters, secs) = measure(b(1000), || {
                 black_box(
                     scorer
                         .score_block_repeated(black_box(&block), &idf, 450.0, 16)
                         .unwrap(),
                 );
             });
-            report("xla_block_rep16", "passes", 16.0, iters, secs);
+            r.add("xla_block_rep16", "passes", 16.0, iters, secs);
         }
-        Err(e) => println!("xla_block          skipped ({e})"),
+        Err(e) => eprintln!("xla_block          skipped ({e})"),
     }
 
     // --- full query over the small index ---
@@ -316,39 +434,102 @@ fn main() {
             })
             .collect();
         let mut qi = 0;
-        let (iters, secs) = measure(500, || {
+        let (iters, secs) = measure(b(500), || {
             black_box(engine.search(&queries[qi % queries.len()]));
             qi += 1;
         });
-        report("engine_query", "queries", 1.0, iters, secs);
+        r.add("engine_query", "queries", 1.0, iters, secs);
+    }
+
+    // --- union vs Block-Max WAND on a bigger index ---
+    // The headline A/B of the traversal PR: identical 8k-doc/4k-vocab
+    // index, identical common+rare query shape (2 high-df + 4 low-df
+    // terms — the shape where a scan wastes the most work on unbeatable
+    // postings). The `work` counters are deterministic totals over the 64
+    // queries: WAND must score strictly fewer candidates and skip docs
+    // the union path materialises (enforced bit-exactly by the engine's
+    // equivalence tests; surfaced here for the committed trajectory).
+    {
+        let cfg = CorpusConfig {
+            num_docs: 8_000,
+            vocab_size: 4_000,
+            ..CorpusConfig::small()
+        };
+        let index = std::sync::Arc::new(Index::build(&cfg.build()));
+        let mut by_df: Vec<u32> = (0..index.num_terms() as u32).collect();
+        by_df.sort_by_key(|&t| std::cmp::Reverse(index.doc_freq(t)));
+        let common = &by_df[..by_df.len() / 10];
+        let rare = &by_df[by_df.len() / 2..];
+        let mut rng = Rng::new(13);
+        let queries: Vec<Query> = (0..64)
+            .map(|_| {
+                let mut terms: Vec<String> = Vec::new();
+                for _ in 0..2 {
+                    terms.push(index.term(common[rng.below(common.len())]).to_string());
+                }
+                for _ in 0..4 {
+                    terms.push(index.term(rare[rng.below(rare.len())]).to_string());
+                }
+                Query::from_terms(terms)
+            })
+            .collect();
+        for traversal in Traversal::all() {
+            let engine = SearchEngine::new(index.clone(), 10).with_traversal(traversal);
+            let (mut cand, mut skipped, mut blocks, mut elided) = (0u64, 0u64, 0u64, 0u64);
+            for q in &queries {
+                let res = engine.search(q);
+                cand += res.stats.candidates as u64;
+                skipped += res.stats.docs_skipped as u64;
+                blocks += res.stats.blocks as u64;
+                elided += res.stats.blocks_elided as u64;
+            }
+            let mut qi = 0;
+            let (iters, secs) = measure(b(500), || {
+                black_box(engine.search(&queries[qi % queries.len()]));
+                qi += 1;
+            });
+            r.add_work(
+                &format!("engine_query_{}", traversal.label()),
+                "queries",
+                1.0,
+                iters,
+                secs,
+                &[
+                    ("candidates", cand),
+                    ("docs_skipped", skipped),
+                    ("blocks", blocks),
+                    ("blocks_elided", elided),
+                ],
+            );
+        }
     }
 
     // --- histogram ---
     {
         let mut h = LatencyHistogram::new();
         let mut rng = Rng::new(6);
-        let (iters, secs) = measure(300, || {
+        let (iters, secs) = measure(b(300), || {
             for _ in 0..1000 {
                 h.record(rng.f64_range(0.5, 5_000.0));
             }
             black_box(h.percentile(0.90));
         });
-        report("histogram_record", "samples", 1000.0, iters, secs);
+        r.add("histogram_record", "samples", 1000.0, iters, secs);
     }
 
     // --- top-k ---
     {
         let mut rng = Rng::new(7);
         let scores: Vec<f32> = (0..4096).map(|_| rng.f64_range(0.0, 30.0) as f32).collect();
-        let (iters, secs) = measure(300, || {
+        let (iters, secs) = measure(b(300), || {
             let mut tk = TopK::new(10);
             for (i, &s) in scores.iter().enumerate() {
                 tk.push(i as u32, s);
             }
             black_box(tk.into_sorted());
         });
-        report("topk_push", "candidates", 4096.0, iters, secs);
+        r.add("topk_push", "candidates", 4096.0, iters, secs);
     }
 
-    println!("\nhotpath bench complete");
+    r.finish(budget_override);
 }

@@ -52,8 +52,15 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
         ];
         // Per-class keys of `[[workload.class]]` tables, flattened as
         // `workload.class.<index>.<field>`.
-        const CLASS_FIELDS: &[&str] =
-            &["name", "share", "mix", "deadline_ms", "priority", "weight"];
+        const CLASS_FIELDS: &[&str] = &[
+            "name",
+            "share",
+            "mix",
+            "deadline_ms",
+            "priority",
+            "weight",
+            "batch_max",
+        ];
         let class_field = key
             .strip_prefix("workload.class.")
             .and_then(|rest| rest.split_once('.'))
@@ -198,6 +205,11 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
         }
         if let Some(v) = get_f64(&doc, &field("weight"))? {
             spec.weight = v;
+        }
+        if let Some(v) = get_i64(&doc, &field("batch_max"))? {
+            spec.batch_max = usize::try_from(v).map_err(|_| {
+                Error::config(format!("class `{name}`: batch_max must be non-negative"))
+            })?;
         }
         if let Some(v) = doc.get(&field("mix")) {
             let tok = v.as_str().ok_or_else(|| {
@@ -373,6 +385,26 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.classes[0].weight, 3.0);
         assert_eq!(cfg.classes[1].weight, 1.0, "weight defaults to 1");
+    }
+
+    #[test]
+    fn class_batch_max_parsed_and_validated() {
+        let cfg = sim_config_from_str(
+            "[[workload.class]]\nname = \"fg\"\n\
+             [[workload.class]]\nname = \"bg\"\nbatch_max = 4",
+        )
+        .unwrap();
+        assert_eq!(cfg.classes[0].batch_max, 1, "batch_max defaults to 1");
+        assert_eq!(cfg.classes[1].batch_max, 4);
+        assert_eq!(cfg.class_registry().batch_maxes(), vec![1, 4]);
+        // Registry validation rejects batch_max = 0.
+        assert!(
+            sim_config_from_str("[[workload.class]]\nname = \"a\"\nbatch_max = 0").is_err()
+        );
+        assert!(
+            sim_config_from_str("[[workload.class]]\nname = \"a\"\nbatch_max = \"x\"")
+                .is_err()
+        );
     }
 
     #[test]

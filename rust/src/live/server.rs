@@ -351,6 +351,10 @@ impl LiveServer {
         // conservative.)
         let registry = cfg.class_registry();
         let priorities = registry.priorities();
+        // Per-class batch caps: a worker pulls up to batch_max same-class
+        // requests per queue pull and scores them back-to-back on its
+        // (warm) current core. Default 1 = the familiar one-at-a-time pop.
+        let batch_limits = registry.batch_maxes();
         let placement: Box<dyn Policy> =
             Shedding::wrap(placement, cfg.shed_deadline_ms, &registry);
         // Size-aware WFQ: workers feed the shared estimate table one EWMA
@@ -481,6 +485,7 @@ impl LiveServer {
             let work_scale = cfg.work_scale;
             let top_k = cfg.top_k;
             let est = est.clone();
+            let batch_limits = batch_limits.clone();
             workers.push(std::thread::spawn(move || -> Result<u64> {
                 // Per-thread scorer: PJRT client is not Send, build here.
                 let mut scorer: Box<dyn BlockScorer> = if use_xla {
@@ -491,7 +496,24 @@ impl LiveServer {
                 let engine = SearchEngine::new(index, top_k);
                 let mut rid_seq = (t as u64) << 40;
                 let mut passes_total = 0u64;
-                while let Some(req) = shared.queue.pop(ThreadId(t), &shared.aff) {
+                // One pull dequeues a whole same-class batch (size capped
+                // by the class's batch_max; 1 = plain pop) which this
+                // thread scores back-to-back without re-entering the
+                // queue — the dispatch overhead amortizes across the
+                // batch and every follower hits a warm core.
+                let mut batch: Vec<LiveRequest> = Vec::new();
+                loop {
+                    if batch.is_empty()
+                        && !shared.queue.pop_batch(
+                            ThreadId(t),
+                            &shared.aff,
+                            &batch_limits,
+                            &mut batch,
+                        )
+                    {
+                        break;
+                    }
+                    let req = batch.remove(0);
                     let started = now_ms();
                     let first_kind = {
                         let aff = shared.aff.lock().expect("aff poisoned");
@@ -873,6 +895,11 @@ impl LiveServer {
                     let engine = SearchEngine::new(shard_index.index.clone(), top_k);
                     let mut rid_seq = ((s * n_threads + t) as u64) << 40;
                     let mut passes_total = 0u64;
+                    // Sharded workers stay unbatched (plain `pop`): a
+                    // shard task is a 1/S sliver of a request whose setup
+                    // cost is already split across shards, so there is no
+                    // per-batch overhead left to amortize — matching the
+                    // simulator's sharded path.
                     while let Some(task) = shared.queue.pop(ThreadId(t), &shared.aff) {
                         let started = now_ms();
                         let first_kind = {

@@ -69,11 +69,20 @@ pub struct ClassSpec {
     /// this class receives while backlogged (positive; default 1).
     /// Ignored by the other orders.
     pub weight: f64,
+    /// Dispatch batch cap: how many same-class requests one idle core may
+    /// pull in a single batched dequeue
+    /// ([`Dispatcher::next_batch`][crate::sched::Dispatcher::next_batch]).
+    /// Default 1 — the unbatched behaviour, right for interactive classes
+    /// that must never wait on a batch fill; throughput-oriented classes
+    /// raise it to amortize per-dispatch overhead over back-to-back
+    /// services on a warm core (at the cost of coarser fairness between
+    /// batches).
+    pub batch_max: usize,
 }
 
 impl ClassSpec {
     /// A class with defaults: share 1, the given mix, no SLO, priority 0,
-    /// weight 1.
+    /// weight 1, batch_max 1.
     pub fn new(name: impl Into<String>, mix: KeywordMix) -> ClassSpec {
         ClassSpec {
             name: name.into(),
@@ -82,6 +91,7 @@ impl ClassSpec {
             deadline_ms: None,
             priority: 0,
             weight: 1.0,
+            batch_max: 1,
         }
     }
 
@@ -106,6 +116,12 @@ impl ClassSpec {
     /// Builder: WFQ dequeue weight (relative share while backlogged).
     pub fn with_weight(mut self, weight: f64) -> ClassSpec {
         self.weight = weight;
+        self
+    }
+
+    /// Builder: dispatch batch cap (≥ 1; 1 = unbatched).
+    pub fn with_batch_max(mut self, batch_max: usize) -> ClassSpec {
+        self.batch_max = batch_max;
         self
     }
 }
@@ -174,6 +190,12 @@ impl ClassRegistry {
                     spec.name
                 )));
             }
+            if spec.batch_max == 0 {
+                return Err(Error::config(format!(
+                    "class `{}`: batch_max must be at least 1 (1 = unbatched)",
+                    spec.name
+                )));
+            }
         }
         Ok(ClassRegistry {
             specs: specs.to_vec(),
@@ -224,6 +246,19 @@ impl ClassRegistry {
     /// WFQ dequeue weight of each class, indexed by [`ClassId`].
     pub fn weights(&self) -> Vec<f64> {
         self.specs.iter().map(|s| s.weight).collect()
+    }
+
+    /// Dispatch batch cap of each class, indexed by [`ClassId`] — the
+    /// `limits` table of the batched dequeue entry points
+    /// ([`Dispatcher::next_batch`][crate::sched::Dispatcher::next_batch],
+    /// [`SharedDispatcher::pop_batch`][crate::sched::SharedDispatcher::pop_batch]).
+    pub fn batch_maxes(&self) -> Vec<usize> {
+        self.specs.iter().map(|s| s.batch_max).collect()
+    }
+
+    /// True when any class opts into batched dispatch (`batch_max > 1`).
+    pub fn any_batching(&self) -> bool {
+        self.specs.iter().any(|s| s.batch_max > 1)
     }
 
     /// True when any class declares a latency SLO.
@@ -306,9 +341,11 @@ impl WorkloadMix {
 /// Grammar: specs separated by `;`, each `name[:key=value,...]` with keys
 /// `share`, `mix` (`paper` | `fixed:K` | `uniform:LO:HI`), `deadline_ms`
 /// (alias `deadline`), `priority` (alias `prio`), `weight` (alias `w` —
-/// the WFQ dequeue share). Keys and mix tokens are normalised via
-/// [`norm_token`]. Classes default to share 1, the config's keyword mix,
-/// no SLO, priority 0, weight 1. Example:
+/// the WFQ dequeue share), `batch_max` (alias `batch` — same-class
+/// requests one core may pull per dispatch; 1 = unbatched). Keys and mix
+/// tokens are normalised via [`norm_token`]. Classes default to share 1,
+/// the config's keyword mix, no SLO, priority 0, weight 1, batch_max 1.
+/// Example:
 ///
 /// ```text
 /// interactive:share=0.65,deadline_ms=500,priority=1,weight=3;batch:share=0.35,mix=uniform:6:14
@@ -352,6 +389,9 @@ pub fn parse_classes(s: &str, default_mix: KeywordMix) -> Result<Vec<ClassSpec>>
                 }
                 "weight" | "w" => {
                     spec.weight = val.trim().parse().map_err(|_| bad("weight"))?;
+                }
+                "batch_max" | "batch" => {
+                    spec.batch_max = val.trim().parse().map_err(|_| bad("batch_max"))?;
                 }
                 "mix" => {
                     spec.mix = parse_mix_token(val)?;
@@ -560,6 +600,26 @@ mod tests {
         assert!(parse_classes("a:magic=1", KeywordMix::Paper).is_err());
         assert!(parse_classes("a:mix=banana", KeywordMix::Paper).is_err());
         assert!(parse_classes("a:weight=x", KeywordMix::Paper).is_err());
+    }
+
+    #[test]
+    fn batch_max_parses_validates_and_reaches_the_limits_table() {
+        let specs = parse_classes(
+            "interactive:priority=1;bulk:batch_max=8;scrape:batch=3",
+            KeywordMix::Paper,
+        )
+        .unwrap();
+        assert_eq!(specs[0].batch_max, 1, "default is unbatched");
+        assert_eq!(specs[1].batch_max, 8);
+        assert_eq!(specs[2].batch_max, 3, "`batch` alias");
+        let reg = ClassRegistry::resolve(&specs, KeywordMix::Paper).unwrap();
+        assert_eq!(reg.batch_maxes(), vec![1, 8, 3]);
+        assert!(reg.any_batching());
+        assert!(!ClassRegistry::single(KeywordMix::Paper).any_batching());
+        // batch_max = 0 is meaningless (a pull that takes nothing).
+        let zero = vec![ClassSpec::new("a", KeywordMix::Paper).with_batch_max(0)];
+        assert!(ClassRegistry::resolve(&zero, KeywordMix::Paper).is_err());
+        assert!(parse_classes("a:batch_max=x", KeywordMix::Paper).is_err());
     }
 
     #[test]

@@ -60,10 +60,12 @@ ADMISSION:   --shed-deadline-ms wraps the policy in the projected-delay
              shed all-or-nothing across shards
 CLASSES:     --classes declares service classes (SPEC =
              \"name:key=val,...;name:...\", keys share | mix | deadline_ms |
-             priority | weight; mix = paper | fixed:K | uniform:LO:HI). A
-             class deadline_ms is its SLO and admission deadline; higher
-             priority classes are dequeued first under strict order;
-             weight is the class's wfq dequeue share. TOML equivalent:
+             priority | weight | batch_max; mix = paper | fixed:K |
+             uniform:LO:HI). A class deadline_ms is its SLO and admission
+             deadline; higher priority classes are dequeued first under
+             strict order; weight is the class's wfq dequeue share;
+             batch_max lets one core pull that many same-class requests
+             per dispatch (default 1 = unbatched). TOML equivalent:
              [[workload.class]] tables.
 ";
 

@@ -13,6 +13,7 @@
 
 use super::order::{OrderPolicy, OrderSpec};
 use super::{QueueDiscipline, QueuedTicket, SchedCtx};
+use crate::loadgen::ClassId;
 use crate::mapper::Policy;
 use crate::platform::CoreId;
 
@@ -67,6 +68,27 @@ impl QueueDiscipline for Centralized {
         let core = policy.choose_core(idle, head.info, ctx)?;
         self.queue.take_best();
         Some((head, core))
+    }
+
+    fn next_same_class(
+        &mut self,
+        core: CoreId,
+        class: ClassId,
+        policy: &mut dyn Policy,
+        ctx: &mut SchedCtx<'_>,
+    ) -> Option<QueuedTicket> {
+        // The fill stops at the first class boundary — the effective head
+        // stays the effective head, batching never reorders the queue. The
+        // policy is re-consulted with the batching core as the only
+        // candidate, so a placement constraint (e.g. all-big) that would
+        // have held this request queued also stops the fill.
+        let head = self.queue.peek_best()?;
+        if head.info.class != class {
+            return None;
+        }
+        policy.choose_core(&[core], head.info, ctx)?;
+        self.queue.take_best();
+        Some(head)
     }
 
     fn queued(&self) -> usize {

@@ -250,6 +250,81 @@ impl<T> Dispatcher<T> {
         Some((payload, core))
     }
 
+    /// Hand a *batch* to one idle core: a leader chosen exactly as
+    /// [`Dispatcher::next`] would choose it, then up to `limit − 1`
+    /// same-class followers pulled from the same queue
+    /// ([`QueueDiscipline::next_same_class`]), where `limit` is the
+    /// leader class's entry in `limits` (index =
+    /// [`ClassId::idx`][crate::loadgen::ClassId::idx]; missing entries
+    /// mean 1). Payloads are appended to `out` in service order, leader
+    /// first; returns the serving core, or `None` — with `out`
+    /// untouched — when nothing can dispatch. With every limit at 1
+    /// (the default) this is bit-for-bit [`Dispatcher::next`]: the
+    /// discipline's fill hook is never consulted and no extra rng draws
+    /// occur, so seeded unbatched runs replay exactly.
+    #[allow(clippy::too_many_arguments)] // `next`'s signature + the cap table and out-buffer
+    pub fn next_batch(
+        &mut self,
+        idle: &[CoreId],
+        limits: &[usize],
+        policy: &mut dyn Policy,
+        aff: &AffinityTable,
+        rng: &mut Rng,
+        now_ms: f64,
+        out: &mut Vec<T>,
+    ) -> Option<CoreId> {
+        if self.payloads.is_empty() || idle.is_empty() {
+            return None;
+        }
+        let Dispatcher {
+            discipline,
+            payloads,
+            depth_scratch,
+            prio_scratch,
+            ..
+        } = self;
+        discipline.depths_into(depth_scratch);
+        discipline.prios_into(prio_scratch);
+        let mut ctx = SchedCtx {
+            aff,
+            rng,
+            queues: QueueView {
+                per_core: depth_scratch,
+                per_priority: prio_scratch,
+                total: discipline.queued(),
+            },
+            now_ms,
+        };
+        let (leader, core) = discipline.next(idle, policy, &mut ctx)?;
+        let class = leader.info.class;
+        let limit = limits.get(class.idx()).copied().unwrap_or(1).max(1);
+        out.push(
+            payloads
+                .remove(&leader.ticket)
+                .expect("discipline duplicated or invented a ticket"),
+        );
+        let mut filled = 1;
+        while filled < limit {
+            // The ctx snapshot describes the backlog ahead of the leader;
+            // the fill is one atomic pull, so followers reuse it.
+            let Some(follower) = discipline.next_same_class(core, class, policy, &mut ctx) else {
+                break;
+            };
+            out.push(
+                payloads
+                    .remove(&follower.ticket)
+                    .expect("discipline duplicated or invented a ticket"),
+            );
+            filled += 1;
+        }
+        debug_assert_eq!(
+            payloads.len(),
+            discipline.queued(),
+            "discipline dropped or duplicated a ticket in a batch fill"
+        );
+        Some(core)
+    }
+
     /// Fresh backlog snapshot into caller buffers (per-core depths and
     /// per-priority counts) — for engine-built tick contexts
     /// (allocation-free once the buffers have grown).
@@ -346,6 +421,123 @@ mod tests {
     #[test]
     fn centralized_drains_in_fifo_order() {
         assert_eq!(drain(DisciplineKind::Centralized), (0..40).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batch_fills_same_class_and_stops_at_boundary_or_limit() {
+        use crate::loadgen::ClassId;
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo.clone());
+        let mut policy = PolicyKind::LinuxRandom.build(&topo);
+        let mut rng = Rng::new(11);
+        let mut d: Dispatcher<usize> = Dispatcher::new(DisciplineKind::Centralized.build(6));
+        // Class 0 batches up to 3; class 1 stays unbatched.
+        let limits = [3usize, 1];
+        let classes = [0u16, 0, 0, 0, 1, 0];
+        for (i, &c) in classes.iter().enumerate() {
+            let info = DispatchInfo {
+                class: ClassId(c),
+                ..DispatchInfo::untyped(2)
+            };
+            assert!(!d
+                .enqueue(i, info, policy.as_mut(), &aff, &mut rng, 0.0)
+                .is_shed());
+        }
+        let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
+        let mut batches = Vec::new();
+        let mut out = Vec::new();
+        while d
+            .next_batch(&idle, &limits, policy.as_mut(), &aff, &mut rng, 0.0, &mut out)
+            .is_some()
+        {
+            batches.push(std::mem::take(&mut out));
+        }
+        // Limit caps the first pull at 3; the class-1 head then bounds the
+        // second (batches never reorder the FIFO); class 1 rides alone.
+        assert_eq!(batches, vec![vec![0, 1, 2], vec![3], vec![4], vec![5]]);
+        assert_eq!(d.queued(), 0);
+    }
+
+    #[test]
+    fn batch_conserves_payloads_and_never_mixes_classes() {
+        use crate::loadgen::ClassId;
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo.clone());
+        let limits = [1usize, 2, 4];
+        for kind in DisciplineKind::all() {
+            let mut policy = PolicyKind::LinuxRandom.build(&topo);
+            let mut rng = Rng::new(23);
+            let mut d: Dispatcher<usize> = Dispatcher::new(kind.build(6));
+            for i in 0..30usize {
+                let info = DispatchInfo {
+                    class: ClassId((i % 3) as u16),
+                    ..DispatchInfo::untyped(1)
+                };
+                assert!(!d
+                    .enqueue(i, info, policy.as_mut(), &aff, &mut rng, 0.0)
+                    .is_shed());
+            }
+            let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
+            let mut got = Vec::new();
+            let mut out = Vec::new();
+            while d
+                .next_batch(&idle, &limits, policy.as_mut(), &aff, &mut rng, 0.0, &mut out)
+                .is_some()
+            {
+                let class = out[0] % 3;
+                assert!(out.len() <= limits[class], "{kind:?}: over-filled batch");
+                assert!(
+                    out.iter().all(|p| p % 3 == class),
+                    "{kind:?}: mixed-class batch {out:?}"
+                );
+                got.append(&mut out);
+            }
+            got.sort_unstable();
+            assert_eq!(got, (0..30).collect::<Vec<_>>(), "{kind:?}: conservation");
+        }
+    }
+
+    #[test]
+    fn batch_limit_one_replays_plain_next_bit_for_bit() {
+        // With every cap at 1, next_batch must take the exact code path of
+        // next: same (payload, core) sequence AND same rng consumption.
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo.clone());
+        for kind in DisciplineKind::all() {
+            let fill = |batched: bool| {
+                let mut policy = PolicyKind::LinuxRandom.build(&topo);
+                let mut rng = Rng::new(77);
+                let mut d: Dispatcher<usize> = Dispatcher::new(kind.build(6));
+                for i in 0..25usize {
+                    assert!(!d
+                        .enqueue(i, DispatchInfo::untyped(2), policy.as_mut(), &aff, &mut rng, 0.0)
+                        .is_shed());
+                }
+                let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
+                let mut seq = Vec::new();
+                if batched {
+                    let mut out = Vec::new();
+                    while let Some(core) = d.next_batch(
+                        &idle,
+                        &[1, 1],
+                        policy.as_mut(),
+                        &aff,
+                        &mut rng,
+                        0.0,
+                        &mut out,
+                    ) {
+                        assert_eq!(out.len(), 1);
+                        seq.push((out.pop().unwrap(), core));
+                    }
+                } else {
+                    while let Some(hit) = d.next(&idle, policy.as_mut(), &aff, &mut rng, 0.0) {
+                        seq.push(hit);
+                    }
+                }
+                (seq, rng.below(1 << 30))
+            };
+            assert_eq!(fill(false), fill(true), "{kind:?}");
+        }
     }
 
     #[test]

@@ -101,6 +101,24 @@
 //! arrivals). See [`order`] for details; pinned by
 //! `rust/tests/sched_properties.rs`.
 //!
+//! # Per-class dispatch batching
+//!
+//! A core that goes idle may pull a *batch*: one leader chosen exactly as
+//! a plain [`QueueDiscipline::next`] call would, then up to
+//! `batch_max − 1` follower requests of the **same class** from the same
+//! queue ([`QueueDiscipline::next_same_class`]), capped per class by
+//! [`ClassSpec::batch_max`][crate::loadgen::ClassSpec] (default 1 —
+//! interactive classes never wait on a fill). Batching amortizes
+//! per-dispatch overhead and keeps a warm core on one request shape; the
+//! cost is fairness granularity — WFQ/EDF ordering is enforced *between*
+//! batches, not within one, so a large `batch_max` lets a batchable class
+//! occupy a core for several back-to-back services. Batches never fill
+//! across queues: per-core disciplines fill only from the serving core's
+//! own queue, and work stealing never steals followers. With every
+//! `batch_max` at 1 (the default) the batched entry points are
+//! bit-for-bit identical to the unbatched ones — no extra rng draws, no
+//! reordering — so seeded anchor runs are unperturbed.
+//!
 //! Determinism: disciplines, orders and policies draw randomness only
 //! through [`SchedCtx::rng`] and never iterate unordered containers, so
 //! seeded simulations replay bit-for-bit under every discipline × order.
@@ -121,6 +139,7 @@ pub use per_core::PerCore;
 pub use shared::SharedDispatcher;
 pub use work_steal::WorkSteal;
 
+use crate::loadgen::ClassId;
 use crate::mapper::{DispatchInfo, Policy};
 use crate::platform::{AffinityTable, CoreId};
 use crate::util::{norm_token, Rng};
@@ -236,6 +255,23 @@ pub trait QueueDiscipline: Send {
         policy: &mut dyn Policy,
         ctx: &mut SchedCtx<'_>,
     ) -> Option<(QueuedTicket, CoreId)>;
+
+    /// Batch fill: hand one more queued request of `class` that `core` —
+    /// which just received a batch leader via [`QueueDiscipline::next`] —
+    /// may also serve, or `None` if the next-served request on that
+    /// core's queue is a different class (batches never reorder the
+    /// queue; the fill stops at the first class boundary). Only called
+    /// when the leader's class has `batch_max > 1`, so the default
+    /// (no batching support) is exactly the unbatched behaviour.
+    fn next_same_class(
+        &mut self,
+        _core: CoreId,
+        _class: ClassId,
+        _policy: &mut dyn Policy,
+        _ctx: &mut SchedCtx<'_>,
+    ) -> Option<QueuedTicket> {
+        None
+    }
 
     /// Total requests queued across all queues.
     fn queued(&self) -> usize;

@@ -21,6 +21,7 @@
 
 use super::order::{OrderPolicy, OrderSpec};
 use super::{QueueDiscipline, QueuedTicket, SchedCtx};
+use crate::loadgen::ClassId;
 use crate::mapper::Policy;
 use crate::platform::CoreId;
 
@@ -110,6 +111,22 @@ impl QueueDiscipline for PerCore {
             }
         }
         None
+    }
+
+    fn next_same_class(
+        &mut self,
+        core: CoreId,
+        class: ClassId,
+        _policy: &mut dyn Policy,
+        _ctx: &mut SchedCtx<'_>,
+    ) -> Option<QueuedTicket> {
+        // Fill only from the batching core's own queue — `next` needed no
+        // policy consult at pop (placement already approved the home), so
+        // the fill doesn't either.
+        if self.peek_best(core)?.info.class != class {
+            return None;
+        }
+        self.take_best(core)
     }
 
     fn queued(&self) -> usize {

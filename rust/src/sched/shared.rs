@@ -180,6 +180,53 @@ impl<T> SharedDispatcher<T> {
         }
     }
 
+    /// Blocking batched pop for the worker `tid`: like
+    /// [`SharedDispatcher::pop`] but pulls up to the leader class's
+    /// batch cap of same-class requests in one lock hold
+    /// ([`Dispatcher::next_batch`]; `limits` indexed by
+    /// [`ClassId::idx`][crate::loadgen::ClassId::idx], missing entries
+    /// mean 1), so the worker can score the batch back-to-back on the
+    /// same warm core. Appends the batch to `out` in service order and
+    /// returns `true`; returns `false` — `out` untouched — once the
+    /// queue is closed and fully drained. With every limit at 1 the
+    /// pull is bit-for-bit [`SharedDispatcher::pop`].
+    pub fn pop_batch(
+        &self,
+        tid: ThreadId,
+        aff: &Mutex<AffinityTable>,
+        limits: &[usize],
+        out: &mut Vec<T>,
+    ) -> bool {
+        let mut g = self.inner.lock().expect("sched queue poisoned");
+        loop {
+            {
+                let now_ms = self.now_ms();
+                let aff_g = aff.lock().expect("aff poisoned");
+                let core = aff_g.core_of(tid);
+                let Inner {
+                    dispatcher,
+                    policy,
+                    rng,
+                    ..
+                } = &mut *g;
+                if dispatcher
+                    .next_batch(&[core], limits, policy.as_mut(), &aff_g, rng, now_ms, out)
+                    .is_some()
+                {
+                    return true;
+                }
+            }
+            if g.closed && g.dispatcher.queued() == 0 {
+                return false;
+            }
+            let (g2, _timeout) = self
+                .cv
+                .wait_timeout(g, Duration::from_millis(IDLE_RECHECK_MS))
+                .expect("sched queue poisoned");
+            g = g2;
+        }
+    }
+
     /// Close the queue: workers drain remaining work and exit.
     pub fn close(&self) {
         self.inner.lock().expect("sched queue poisoned").closed = true;
@@ -250,6 +297,25 @@ mod tests {
         q.close();
         assert_eq!(q.pop(ThreadId(2), &aff), Some(2)); // drain after close
         assert_eq!(q.pop(ThreadId(2), &aff), None);
+    }
+
+    #[test]
+    fn pop_batch_pulls_same_class_runs_and_drains_after_close() {
+        let (q, aff) = queue(DisciplineKind::Centralized);
+        for i in 0..4 {
+            push_admitted(&q, i, &aff);
+        }
+        q.close();
+        // The default class caps at 3 here: one 3-batch, then a 1-batch.
+        let mut out = Vec::new();
+        assert!(q.pop_batch(ThreadId(0), &aff, &[3], &mut out));
+        assert_eq!(out, vec![0, 1, 2]);
+        out.clear();
+        assert!(q.pop_batch(ThreadId(1), &aff, &[3], &mut out));
+        assert_eq!(out, vec![3]);
+        out.clear();
+        assert!(!q.pop_batch(ThreadId(2), &aff, &[3], &mut out));
+        assert!(out.is_empty());
     }
 
     #[test]

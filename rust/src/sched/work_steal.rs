@@ -13,6 +13,7 @@
 use super::order::OrderSpec;
 use super::per_core::PerCore;
 use super::{QueueDiscipline, QueuedTicket, SchedCtx};
+use crate::loadgen::ClassId;
 use crate::mapper::Policy;
 use crate::platform::CoreId;
 
@@ -93,6 +94,18 @@ impl QueueDiscipline for WorkSteal {
             }
         }
         None
+    }
+
+    fn next_same_class(
+        &mut self,
+        core: CoreId,
+        class: ClassId,
+        policy: &mut dyn Policy,
+        ctx: &mut SchedCtx<'_>,
+    ) -> Option<QueuedTicket> {
+        // Batches fill only from the core's own queue — stealing a
+        // follower would raid a victim that may be about to serve it.
+        self.local.next_same_class(core, class, policy, ctx)
     }
 
     fn queued(&self) -> usize {

@@ -1,20 +1,47 @@
 //! Query execution: candidate generation + block scoring + top-k.
 //!
-//! Candidates are the union of the query terms' postings lists, produced in
-//! document order by a k-way merge. Scoring happens in fixed-geometry blocks
-//! matching the AOT artifact: `DOC_BLOCK` documents × `MAX_TERMS` term
-//! slots. Two interchangeable [`BlockScorer`] backends exist:
+//! Two selectable traversals ([`Traversal`], A/B-comparable because they
+//! return bit-identical rankings):
 //!
-//! * [`RustScorer`] — the in-process reference (same BM25 formula),
-//! * `runtime::XlaScorer` — the compiled Layer-1/2 artifact via PJRT, used
-//!   on the live request path.
+//! * **Union** (default) — candidates are the union of the query terms'
+//!   postings lists, produced in document order by a heap-based k-way
+//!   merge. Scoring happens in fixed-geometry blocks matching the AOT
+//!   artifact: `DOC_BLOCK` documents × `MAX_TERMS` term slots, through a
+//!   pluggable [`BlockScorer`] backend ([`RustScorer`] in-process, or
+//!   `runtime::XlaScorer` — the compiled Layer-1/2 artifact via PJRT — on
+//!   the live request path; both produce identical rankings,
+//!   cross-checked by integration tests). Block-max pruning may skip a
+//!   *filled* block whose score upper bound cannot beat the running top-k
+//!   threshold, but every candidate is still decoded and staged.
 //!
-//! Both produce identical rankings (cross-checked by integration tests).
+//! * **Wand** — document-at-a-time Block-Max WAND over the index-resident
+//!   block directory ([`crate::search::index::BlockEntry`], built at
+//!   `Index::build`/`from_parts` time). Pivot selection on per-term score
+//!   upper bounds plus `seek(doc)` galloping through the directory skip
+//!   postings ranges that cannot beat the threshold *without decoding
+//!   them at all* — strictly less work, not just fewer backend calls.
+//!   Skips use strict `<` against the threshold, so results are
+//!   bit-identical to exhaustive scoring (same lossless guarantee as
+//!   `tests::pruning_is_lossless`; equivalence is anchored by
+//!   `tests::prop_union_and_wand_rankings_identical`). The upper bounds
+//!   are computed at query time from the index's *effective* IDF/avgdl,
+//!   so shard slices carrying corpus-wide statistics
+//!   (`Index::with_global_stats`) skip soundly. WAND scores documents
+//!   inline (same `bm25_score` formula) and never materialises score
+//!   blocks, so it does not drive a [`BlockScorer`] backend — the live
+//!   server's heterogeneity emulation (which meters backend block calls)
+//!   therefore keeps Union as its default.
+//!
+//! [`SearchStats`] accounts the difference: `candidates` counts documents
+//! actually scored, `docs_skipped` postings entries galloped over without
+//! decoding, and `blocks_elided` whole directory blocks never touched.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::sync::Arc;
 
 use super::bm25::{bm25_score, Bm25Params};
-use super::index::Index;
+use super::index::{BlockEntry, Index, SKIP_BLOCK};
 use super::query::Query;
 use super::topk::{ScoredDoc, TopK};
 use crate::error::Result;
@@ -173,7 +200,7 @@ pub struct SearchHit {
 /// Execution statistics of one query (the live server's work accounting).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct SearchStats {
-    /// Candidate documents touched.
+    /// Candidate documents actually decoded and scored.
     pub candidates: usize,
     /// Scoring blocks executed.
     pub blocks: usize,
@@ -181,6 +208,49 @@ pub struct SearchStats {
     pub blocks_pruned: usize,
     /// Query terms found in the dictionary.
     pub matched_terms: usize,
+    /// Postings entries skipped without decoding (WAND galloping; always 0
+    /// under the union traversal, which touches every candidate).
+    pub docs_skipped: usize,
+    /// Whole skip-directory blocks galloped over without decoding a single
+    /// entry (WAND; the union traversal materialises everything).
+    pub blocks_elided: usize,
+}
+
+/// Postings-traversal strategy of a [`SearchEngine`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Traversal {
+    /// Exhaustive document-order union merge through the block-scoring
+    /// backend (optionally block-max pruned). The A/B baseline, and the
+    /// only traversal that drives [`BlockScorer`] backends.
+    #[default]
+    Union,
+    /// Block-Max WAND over the index-resident block directory: postings
+    /// ranges that cannot beat the top-k threshold are never decoded.
+    Wand,
+}
+
+impl Traversal {
+    /// All traversals, for A/B sweeps.
+    pub fn all() -> [Traversal; 2] {
+        [Traversal::Union, Traversal::Wand]
+    }
+
+    /// Stable label for reports and selectors.
+    pub fn label(self) -> &'static str {
+        match self {
+            Traversal::Union => "union",
+            Traversal::Wand => "wand",
+        }
+    }
+
+    /// Parse a selector token (`union` | `wand`).
+    pub fn parse(s: &str) -> Option<Traversal> {
+        match crate::util::norm_token(s).as_str() {
+            "union" => Some(Traversal::Union),
+            "wand" => Some(Traversal::Wand),
+            _ => None,
+        }
+    }
 }
 
 /// Complete result of one query.
@@ -192,31 +262,100 @@ pub struct SearchResult {
     pub stats: SearchStats,
 }
 
+/// Per-term traversal cursor of the WAND path: a postings position plus
+/// the term's slice of the index-resident block directory.
+struct WandCursor<'a> {
+    /// Term slot in the tf/idf layout (assigned at query resolution, so
+    /// slot order matches the union path's fill order exactly).
+    slot: usize,
+    list: &'a [super::index::Posting],
+    blocks: &'a [BlockEntry],
+    /// Current postings position (`list.len()` = exhausted).
+    pos: usize,
+    /// Term-level score upper bound (max over the term's block bounds).
+    ub: f32,
+}
+
+impl WandCursor<'_> {
+    fn doc(&self) -> u32 {
+        self.list[self.pos].doc
+    }
+
+    fn exhausted(&self) -> bool {
+        self.pos >= self.list.len()
+    }
+
+    /// Directory block covering `doc` — the first block (from the current
+    /// position on) whose `last_doc >= doc`. `None` means the remaining
+    /// postings all precede `doc`, i.e. the term cannot contain it.
+    fn block_for(&self, doc: u32) -> Option<&BlockEntry> {
+        self.blocks[self.pos / SKIP_BLOCK..]
+            .iter()
+            .find(|b| b.last_doc >= doc)
+    }
+
+    /// Advance to the first posting with doc id `>= target`, galloping
+    /// through the block directory: blocks ending before `target` are
+    /// stepped over without touching their postings, then the landing
+    /// block is binary-searched. Skipped entries and fully elided blocks
+    /// are accounted in `stats`.
+    fn seek(&mut self, target: u32, stats: &mut SearchStats) {
+        let start = self.pos;
+        let mut b = start / SKIP_BLOCK;
+        while b < self.blocks.len() && self.blocks[b].last_doc < target {
+            b += 1;
+        }
+        let new_pos = if b >= self.blocks.len() {
+            self.list.len()
+        } else {
+            let lo = (b * SKIP_BLOCK).max(start);
+            let hi = ((b + 1) * SKIP_BLOCK).min(self.list.len());
+            lo + self.list[lo..hi].partition_point(|p| p.doc < target)
+        };
+        stats.docs_skipped += new_pos - start;
+        // Blocks whose every entry fell inside the skipped range.
+        stats.blocks_elided +=
+            (new_pos / SKIP_BLOCK).saturating_sub(start.div_ceil(SKIP_BLOCK));
+        self.pos = new_pos;
+    }
+}
+
 /// The query executor over an index.
 pub struct SearchEngine {
     index: Arc<Index>,
     params: Bm25Params,
     top_k: usize,
     prune: bool,
+    traversal: Traversal,
 }
 
 impl SearchEngine {
     /// New engine over an index, returning the best `top_k` hits per query.
-    /// Block-max pruning is on by default (results are exactly unchanged —
-    /// see `tests::pruning_is_lossless`); disable with
-    /// [`SearchEngine::without_pruning`] for A/B measurement.
+    /// The default traversal is [`Traversal::Union`] with block-max pruning
+    /// on (results are exactly unchanged — see `tests::pruning_is_lossless`);
+    /// disable pruning with [`SearchEngine::without_pruning`] or switch to
+    /// WAND with [`SearchEngine::with_traversal`] for A/B measurement.
     pub fn new(index: Arc<Index>, top_k: usize) -> SearchEngine {
         SearchEngine {
             index,
             params: Bm25Params::default(),
             top_k,
             prune: true,
+            traversal: Traversal::Union,
         }
     }
 
-    /// Disable block-max pruning (exhaustive scoring).
+    /// Disable block-max pruning in the union traversal (exhaustive
+    /// scoring). No effect on [`Traversal::Wand`], whose skipping *is* the
+    /// traversal.
     pub fn without_pruning(mut self) -> SearchEngine {
         self.prune = false;
+        self
+    }
+
+    /// Select the postings traversal (default: [`Traversal::Union`]).
+    pub fn with_traversal(mut self, traversal: Traversal) -> SearchEngine {
+        self.traversal = traversal;
         self
     }
 
@@ -232,7 +371,9 @@ impl SearchEngine {
             .expect("rust backend is infallible")
     }
 
-    /// Execute a query with an arbitrary block-scoring backend.
+    /// Execute a query with an arbitrary block-scoring backend. (Only the
+    /// union traversal drives the backend; WAND scores inline — see the
+    /// module docs.)
     pub fn search_with(
         &self,
         query: &Query,
@@ -241,24 +382,26 @@ impl SearchEngine {
         let index = &*self.index;
         let avgdl = index.avgdl() as f32;
 
-        // Resolve query terms; cap at the artifact's term-slot count.
+        // Resolve query terms, then cap at the artifact's term-slot count.
+        // The cap must come *after* lookup + dedup: capping the raw token
+        // stream would let early out-of-vocabulary or duplicate tokens
+        // crowd real terms out of the slots.
         let mut term_ids: Vec<u32> = Vec::new();
-        for t in query.terms.iter().take(MAX_TERMS) {
+        for t in query.terms.iter() {
             if let Some(id) = index.lookup(t) {
                 if !term_ids.contains(&id) {
                     term_ids.push(id);
                 }
             }
         }
+        term_ids.truncate(MAX_TERMS);
         let mut idf = vec![0.0f32; MAX_TERMS];
         for (slot, &t) in term_ids.iter().enumerate() {
             idf[slot] = index.idf(t);
         }
         let mut stats = SearchStats {
-            candidates: 0,
-            blocks: 0,
-            blocks_pruned: 0,
             matched_terms: term_ids.len(),
+            ..SearchStats::default()
         };
         if term_ids.is_empty() {
             return Ok(SearchResult {
@@ -267,51 +410,14 @@ impl SearchEngine {
             });
         }
 
-        // K-way union merge over postings, in doc order; fill blocks.
-        let lists: Vec<&[super::index::Posting]> =
-            term_ids.iter().map(|&t| index.postings(t)).collect();
-        let mut cursors = vec![0usize; lists.len()];
-        let mut block = ScoreBlock::new(avgdl);
         let mut global = TopK::new(self.top_k);
-
-        loop {
-            // Find the smallest current doc across lists.
-            let mut next_doc = u32::MAX;
-            for (li, list) in lists.iter().enumerate() {
-                if cursors[li] < list.len() {
-                    next_doc = next_doc.min(list[cursors[li]].doc);
-                }
+        match self.traversal {
+            Traversal::Union => {
+                self.search_union(&term_ids, &idf, avgdl, backend, &mut global, &mut stats)?
             }
-            if next_doc == u32::MAX {
-                break;
+            Traversal::Wand => {
+                self.search_wand(&term_ids, &idf, avgdl, &mut global, &mut stats)
             }
-            // Fill one row: tf per slot for every list positioned at next_doc.
-            let row = block.docs.len();
-            block.docs.push(next_doc);
-            let dl = index.doc_len(next_doc) as f32;
-            block.dl[row] = dl;
-            if dl < block.min_dl {
-                block.min_dl = dl;
-            }
-            for (li, list) in lists.iter().enumerate() {
-                if cursors[li] < list.len() && list[cursors[li]].doc == next_doc {
-                    let tf = list[cursors[li]].tf as f32;
-                    block.tf[row * MAX_TERMS + li] = tf;
-                    if tf > block.max_tf[li] {
-                        block.max_tf[li] = tf;
-                    }
-                    cursors[li] += 1;
-                }
-            }
-            stats.candidates += 1;
-
-            if block.is_full() {
-                self.flush_block(&block, &idf, avgdl, backend, &mut global, &mut stats)?;
-                block.reset(avgdl);
-            }
-        }
-        if !block.docs.is_empty() {
-            self.flush_block(&block, &idf, avgdl, backend, &mut global, &mut stats)?;
         }
 
         let hits = global
@@ -324,6 +430,212 @@ impl SearchEngine {
             })
             .collect();
         Ok(SearchResult { hits, stats })
+    }
+
+    /// Exhaustive union traversal: heap-based k-way merge over postings in
+    /// document order, staging candidates into fixed-geometry score blocks
+    /// for the backend.
+    fn search_union(
+        &self,
+        term_ids: &[u32],
+        idf: &[f32],
+        avgdl: f32,
+        backend: &mut dyn BlockScorer,
+        global: &mut TopK,
+        stats: &mut SearchStats,
+    ) -> Result<()> {
+        let index = &*self.index;
+        let lists: Vec<&[super::index::Posting]> =
+            term_ids.iter().map(|&t| index.postings(t)).collect();
+        let mut cursors = vec![0usize; lists.len()];
+        let mut block = ScoreBlock::new(avgdl);
+        // Min-heap of (current doc, list) heads: each merge step pops the
+        // lists positioned at the smallest doc instead of min-scanning all
+        // k lists per candidate — O(log k) per posting, and the Reverse
+        // tuple ordering visits co-located lists in slot order, exactly the
+        // fill order of the previous linear scan.
+        let mut heads: BinaryHeap<Reverse<(u32, usize)>> =
+            BinaryHeap::with_capacity(lists.len());
+        for (li, list) in lists.iter().enumerate() {
+            if let Some(p) = list.first() {
+                heads.push(Reverse((p.doc, li)));
+            }
+        }
+
+        while let Some(&Reverse((next_doc, _))) = heads.peek() {
+            // Fill one row: tf per slot for every list positioned at next_doc.
+            let row = block.docs.len();
+            block.docs.push(next_doc);
+            let dl = index.doc_len(next_doc) as f32;
+            block.dl[row] = dl;
+            if dl < block.min_dl {
+                block.min_dl = dl;
+            }
+            while let Some(&Reverse((doc, li))) = heads.peek() {
+                if doc != next_doc {
+                    break;
+                }
+                heads.pop();
+                let tf = lists[li][cursors[li]].tf as f32;
+                block.tf[row * MAX_TERMS + li] = tf;
+                if tf > block.max_tf[li] {
+                    block.max_tf[li] = tf;
+                }
+                cursors[li] += 1;
+                if let Some(p) = lists[li].get(cursors[li]) {
+                    heads.push(Reverse((p.doc, li)));
+                }
+            }
+            stats.candidates += 1;
+
+            if block.is_full() {
+                self.flush_block(&block, idf, avgdl, backend, global, stats)?;
+                block.reset(avgdl);
+            }
+        }
+        if !block.docs.is_empty() {
+            self.flush_block(&block, idf, avgdl, backend, global, stats)?;
+        }
+        Ok(())
+    }
+
+    /// Block-Max WAND document-at-a-time traversal over the index-resident
+    /// block directory. Results are bit-identical to the union traversal:
+    /// evaluation computes the same `bm25_score` over the same full
+    /// term-slot layout, and every skip is gated on a sound upper bound
+    /// falling strictly below the current top-k threshold (an exact tie
+    /// can still win on doc id, so ties are always evaluated — the same
+    /// strict-`<` rule as union block-max pruning).
+    fn search_wand(
+        &self,
+        term_ids: &[u32],
+        idf: &[f32],
+        avgdl: f32,
+        global: &mut TopK,
+        stats: &mut SearchStats,
+    ) {
+        let index = &*self.index;
+        let params = self.params;
+        // Upper bound of one directory block's per-document contribution
+        // for a term: block-max tf + the block's shortest document — the
+        // same soundness argument as `ScoreBlock::upper_bound`, but
+        // evaluated against the index's *effective* IDF/avgdl so shard
+        // slices with global statistics bound correctly.
+        let block_bound = |w: f32, b: &BlockEntry| -> f32 {
+            let mtf = b.max_tf as f32;
+            let floor = params.k1 * (1.0 - params.b + params.b * (b.min_dl as f32) / avgdl);
+            w * mtf * (params.k1 + 1.0) / (mtf + floor)
+        };
+        let mut cursors: Vec<WandCursor> = term_ids
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, &t)| {
+                let list = index.postings(t);
+                if list.is_empty() {
+                    return None;
+                }
+                let blocks = index.blocks(t);
+                let ub = blocks
+                    .iter()
+                    .map(|b| block_bound(idf[slot], b))
+                    .fold(0.0f32, f32::max);
+                Some(WandCursor {
+                    slot,
+                    list,
+                    blocks,
+                    pos: 0,
+                    ub,
+                })
+            })
+            .collect();
+
+        loop {
+            cursors.retain(|c| !c.exhausted());
+            if cursors.is_empty() {
+                break;
+            }
+            cursors.sort_by_key(|c| (c.doc(), c.slot));
+            let threshold = global.threshold();
+
+            // Pivot selection: the shortest prefix of cursors (in doc
+            // order) whose summed term upper bounds could reach the
+            // threshold. No such prefix ⇒ no remaining document can enter
+            // the top-k. Until the heap fills (no threshold) the pivot is
+            // the frontier document itself — a plain DAAT merge.
+            let mut acc = 0.0f32;
+            let mut pivot = None;
+            for (i, c) in cursors.iter().enumerate() {
+                acc += c.ub;
+                if threshold.is_none_or(|t| acc >= t) {
+                    pivot = Some(i);
+                    break;
+                }
+            }
+            let Some(mut p) = pivot else { break };
+            let pivot_doc = cursors[p].doc();
+            // Terms co-located at the pivot document contribute too — fold
+            // them in so the refinement bound (and evaluation) see them.
+            while p + 1 < cursors.len() && cursors[p + 1].doc() == pivot_doc {
+                p += 1;
+            }
+
+            // Block-max refinement: re-bound using the directory blocks
+            // actually covering the pivot document.
+            let beats = match threshold {
+                None => true,
+                Some(t) => {
+                    let mut block_acc = 0.0f32;
+                    for c in &cursors[..=p] {
+                        if let Some(b) = c.block_for(pivot_doc) {
+                            block_acc += block_bound(idf[c.slot], b);
+                        }
+                    }
+                    block_acc >= t
+                }
+            };
+
+            if !beats {
+                // Nothing in [pivot_doc, next) can beat the threshold:
+                // every such doc is covered by the same sub-threshold
+                // blocks (next is capped at the blocks' ends and at the
+                // first uncounted term's current doc). Gallop past it.
+                let mut next = u32::MAX;
+                for c in &cursors[..=p] {
+                    if let Some(b) = c.block_for(pivot_doc) {
+                        next = next.min(b.last_doc.saturating_add(1));
+                    }
+                }
+                if let Some(c) = cursors.get(p + 1) {
+                    next = next.min(c.doc());
+                }
+                for c in cursors[..=p].iter_mut() {
+                    if c.doc() < next {
+                        c.seek(next, stats);
+                    }
+                }
+            } else if cursors[0].doc() == pivot_doc {
+                // Fully aligned: decode and score the pivot document with
+                // the exact union-path arithmetic (full-slot bm25_score).
+                let dl = index.doc_len(pivot_doc) as f32;
+                let mut tfs = [0.0f32; MAX_TERMS];
+                for c in cursors[..=p].iter_mut() {
+                    tfs[c.slot] = c.list[c.pos].tf as f32;
+                    c.pos += 1;
+                }
+                let score = bm25_score(&tfs, idf, dl, avgdl, params);
+                stats.candidates += 1;
+                global.push(pivot_doc, score);
+            } else {
+                // The pivot may win but trailing cursors lag behind it.
+                // Documents before the pivot are covered only by the
+                // sub-threshold prefix, so gallop the laggards forward.
+                for c in cursors[..=p].iter_mut() {
+                    if c.doc() < pivot_doc {
+                        c.seek(pivot_doc, stats);
+                    }
+                }
+            }
+        }
     }
 
     fn flush_block(
@@ -555,5 +867,149 @@ mod tests {
         let q = query_for_terms(&e, &[0]); // Zipf head: huge postings list
         let r = e.search(&q);
         assert_eq!(r.hits.len(), 10);
+    }
+
+    #[test]
+    fn term_cap_applies_after_resolution() {
+        let e = engine();
+        // More tokens than term slots, all the early ones out-of-vocabulary:
+        // the real terms at the tail must still resolve (the old pre-lookup
+        // cap truncated the token stream and silently dropped them).
+        let mut toks: Vec<String> = (0..MAX_TERMS + 2)
+            .map(|i| format!("zzznotaword{i}"))
+            .collect();
+        for t in [3u32, 9, 15, 21] {
+            toks.push(e.index().term(t).to_string());
+        }
+        let r = e.search(&Query::from_terms(toks));
+        assert_eq!(r.stats.matched_terms, 4);
+        assert!(!r.hits.is_empty());
+
+        // Duplicate tokens must not crowd out real terms either.
+        let w0 = e.index().term(5).to_string();
+        let mut toks: Vec<String> = vec![w0; MAX_TERMS];
+        toks.push(e.index().term(6).to_string());
+        let r = e.search(&Query::from_terms(toks));
+        assert_eq!(r.stats.matched_terms, 2);
+    }
+
+    fn assert_same_hits(a: &SearchResult, b: &SearchResult, what: &str) {
+        assert_eq!(a.hits.len(), b.hits.len(), "{what}: hit count");
+        for (x, y) in a.hits.iter().zip(&b.hits) {
+            assert_eq!(x.doc, y.doc, "{what}: doc order");
+            assert_eq!(
+                x.score.to_bits(),
+                y.score.to_bits(),
+                "{what}: scores must be bit-identical"
+            );
+        }
+    }
+
+    #[test]
+    fn wand_matches_union_and_does_strictly_less_work() {
+        // Common+rare term pairs over a larger corpus: the canonical shape
+        // where a rare (high-idf) hit raises the threshold beyond what
+        // common-only postings ranges can reach, so WAND gallops past them.
+        let corpus = Corpus::generate(&CorpusConfig {
+            num_docs: 8_000,
+            vocab_size: 4_000,
+            ..CorpusConfig::small()
+        });
+        let index = Arc::new(Index::build(&corpus));
+        let union = SearchEngine::new(index.clone(), 10);
+        let wand = SearchEngine::new(index.clone(), 10).with_traversal(Traversal::Wand);
+        let (mut union_docs, mut wand_docs, mut skipped, mut elided) = (0, 0, 0, 0);
+        for seed in 0..10u32 {
+            let ids = vec![5 + seed % 20, 2_000 + seed * 53 % 2_000];
+            let q = Query::from_terms(
+                ids.iter().map(|&t| index.term(t).to_string()).collect(),
+            );
+            let a = union.search(&q);
+            let b = wand.search(&q);
+            assert_same_hits(&a, &b, &format!("seed {seed}"));
+            assert_eq!(a.stats.docs_skipped, 0, "union never skips");
+            union_docs += a.stats.candidates;
+            wand_docs += b.stats.candidates;
+            skipped += b.stats.docs_skipped;
+            elided += b.stats.blocks_elided;
+        }
+        assert!(
+            wand_docs < union_docs,
+            "wand touched {wand_docs} docs vs union {union_docs}"
+        );
+        assert!(skipped > 0, "wand never galloped");
+        assert!(elided > 0, "wand never elided a whole block");
+    }
+
+    #[test]
+    fn prop_union_and_wand_rankings_identical() {
+        use crate::util::{prop, Rng};
+        // Random corpora × random query shapes (term count, OOV tokens,
+        // duplicates, top-k width): pruned union, exhaustive union and
+        // WAND must agree bit-for-bit.
+        prop::check(24, |rng: &mut Rng, case| {
+            let corpus = Corpus::generate(&CorpusConfig {
+                num_docs: rng.range(300, 1_500),
+                vocab_size: rng.range(200, 2_000),
+                seed: 0xC0FFEE ^ case as u64,
+                ..CorpusConfig::small()
+            });
+            let index = Arc::new(Index::build(&corpus));
+            let nt = index.num_terms();
+            let k = rng.range(1, 12);
+            let mut terms: Vec<String> = (0..rng.range(1, 8))
+                .map(|_| index.term(rng.below(nt) as u32).to_string())
+                .collect();
+            if rng.chance(0.5) {
+                terms.push("zzznotaword".into());
+            }
+            if rng.chance(0.5) {
+                terms.push(terms[0].clone());
+            }
+            let q = Query::from_terms(terms);
+            let exhaustive = SearchEngine::new(index.clone(), k)
+                .without_pruning()
+                .search(&q);
+            let pruned = SearchEngine::new(index.clone(), k).search(&q);
+            let wand = SearchEngine::new(index.clone(), k)
+                .with_traversal(Traversal::Wand)
+                .search(&q);
+            assert_same_hits(&pruned, &exhaustive, &format!("case {case}: pruned union"));
+            assert_same_hits(&wand, &exhaustive, &format!("case {case}: wand"));
+            assert_eq!(pruned.stats.docs_skipped, 0);
+            assert_eq!(wand.stats.matched_terms, exhaustive.stats.matched_terms);
+        });
+    }
+
+    #[test]
+    fn wand_equals_union_on_sharded_global_stats_indexes() {
+        // Shard slices score with corpus-wide statistics (IDF override +
+        // global avgdl). The block directory stores only tf/dl statistics,
+        // so the WAND bound must pick the override up at query time — a
+        // stale local-IDF bound would skip unsoundly and desync rankings.
+        let corpus = Corpus::generate(&CorpusConfig {
+            num_docs: 6_000,
+            vocab_size: 3_000,
+            ..CorpusConfig::small()
+        });
+        let mut skipped = 0usize;
+        for s_count in [2usize, 3] {
+            let shards = crate::shard::build_shard_indexes(&corpus, s_count);
+            for (s, shard) in shards.iter().enumerate() {
+                for seed in 0..6u32 {
+                    let ids = [5 + seed % 20, 1_500 + seed * 97 % 1_500];
+                    let q = Query::from_terms(
+                        ids.iter().map(|&t| shard.index.term(t).to_string()).collect(),
+                    );
+                    let u = SearchEngine::new(shard.index.clone(), 10).search(&q);
+                    let w = SearchEngine::new(shard.index.clone(), 10)
+                        .with_traversal(Traversal::Wand)
+                        .search(&q);
+                    assert_same_hits(&u, &w, &format!("{s_count} shards, shard {s}, seed {seed}"));
+                    skipped += w.stats.docs_skipped;
+                }
+            }
+        }
+        assert!(skipped > 0, "wand never skipped on any shard");
     }
 }

@@ -1,8 +1,17 @@
-//! Inverted index: dictionary, postings lists, document statistics.
+//! Inverted index: dictionary, postings lists, document statistics, and a
+//! per-term block directory for skip-based traversal.
 //!
 //! Postings are strictly sorted by document id (verified by tests and a
 //! property test), which the candidate-union iterator in `engine.rs` relies
-//! on for its k-way merge.
+//! on for its k-way merge. On top of each list the index keeps a *block
+//! directory*: one [`BlockEntry`] per [`SKIP_BLOCK`] postings, recording the
+//! block's last document id (a classic skip list) plus the block-max payload
+//! (`max_tf`, `min_dl`) that lets the WAND traversal in `engine.rs` bound a
+//! block's best possible BM25 contribution without decoding it. The
+//! directory stores only term-frequency/length statistics — deliberately no
+//! scores — so it stays valid under [`Index::with_global_stats`]: the bound
+//! is computed at query time from the *effective* IDF/avgdl, which is how a
+//! shard slice carrying corpus-wide statistics skips soundly.
 
 use std::collections::HashMap;
 
@@ -18,6 +27,50 @@ pub struct Posting {
     pub tf: u32,
 }
 
+/// Postings entries summarised by one block-directory entry.
+pub const SKIP_BLOCK: usize = 128;
+
+/// One entry of a term's block directory: summary statistics of a run of
+/// up to [`SKIP_BLOCK`] consecutive postings (the skip-list payload of
+/// Block-Max WAND).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockEntry {
+    /// Highest document id in the block (postings are sorted, so this is
+    /// the last entry — the skip pointer).
+    pub last_doc: u32,
+    /// Maximum term frequency among the block's postings.
+    pub max_tf: u32,
+    /// Minimum document length among the block's documents.
+    pub min_dl: u32,
+}
+
+/// Build the per-term block directory from sorted postings and document
+/// lengths. Shared by [`Index::build`] and [`Index::from_parts`] so loaded
+/// indexes (HUIX v1 stores no directory) and freshly inverted corpora carry
+/// identical metadata.
+fn build_block_directory(postings: &[Vec<Posting>], doc_len: &[u32]) -> Vec<Vec<BlockEntry>> {
+    postings
+        .iter()
+        .map(|list| {
+            list.chunks(SKIP_BLOCK)
+                .map(|chunk| {
+                    let mut max_tf = 0u32;
+                    let mut min_dl = u32::MAX;
+                    for p in chunk {
+                        max_tf = max_tf.max(p.tf);
+                        min_dl = min_dl.min(doc_len[p.doc as usize]);
+                    }
+                    BlockEntry {
+                        last_doc: chunk.last().expect("chunks are non-empty").doc,
+                        max_tf,
+                        min_dl,
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
 /// Immutable inverted index over a corpus.
 #[derive(Clone, Debug)]
 pub struct Index {
@@ -31,6 +84,10 @@ pub struct Index {
     /// Corpus-wide IDF table distributed to a shard index at build time
     /// (see [`Index::with_global_stats`]). `None` = plain local statistics.
     idf_override: Option<Vec<f32>>,
+    /// Per-term block directory ([`SKIP_BLOCK`]-entry granularity), built
+    /// at construction time and carried unchanged through
+    /// [`Index::with_global_stats`] (it stores statistics, not scores).
+    block_dir: Vec<Vec<BlockEntry>>,
 }
 
 impl Index {
@@ -78,6 +135,7 @@ impl Index {
         } else {
             doc_len.iter().map(|&l| l as f64).sum::<f64>() / doc_len.len() as f64
         };
+        let block_dir = build_block_directory(&postings, &doc_len);
         Index {
             dict,
             terms: corpus.vocab.clone(),
@@ -87,6 +145,7 @@ impl Index {
             avgdl,
             total_postings,
             idf_override: None,
+            block_dir,
         }
     }
 
@@ -145,6 +204,7 @@ impl Index {
         } else {
             doc_len.iter().map(|&l| l as f64).sum::<f64>() / doc_len.len() as f64
         };
+        let block_dir = build_block_directory(&postings, &doc_len);
         Ok(Index {
             dict,
             terms,
@@ -154,6 +214,7 @@ impl Index {
             avgdl,
             total_postings,
             idf_override: None,
+            block_dir,
         })
     }
 
@@ -170,6 +231,14 @@ impl Index {
     /// Postings list for a term (sorted by doc id).
     pub fn postings(&self, term: u32) -> &[Posting] {
         &self.postings[term as usize]
+    }
+
+    /// Block directory of a term: one [`BlockEntry`] per [`SKIP_BLOCK`]
+    /// postings, in list order (entry `i` covers postings
+    /// `[i*SKIP_BLOCK, (i+1)*SKIP_BLOCK)`). Empty for terms with no
+    /// postings.
+    pub fn blocks(&self, term: u32) -> &[BlockEntry] {
+        &self.block_dir[term as usize]
     }
 
     /// Document frequency of a term.
@@ -322,5 +391,54 @@ mod tests {
     fn common_term_has_long_postings() {
         let idx = small_index();
         assert!(idx.doc_freq(0) > idx.num_docs() / 2, "Zipf head should hit most docs");
+    }
+
+    #[test]
+    fn block_directory_covers_and_bounds_postings() {
+        let idx = small_index();
+        for t in 0..idx.num_terms() as u32 {
+            let list = idx.postings(t);
+            let dir = idx.blocks(t);
+            assert_eq!(dir.len(), list.len().div_ceil(SKIP_BLOCK), "term {t}");
+            for (b, entry) in dir.iter().enumerate() {
+                let chunk = &list[b * SKIP_BLOCK..((b + 1) * SKIP_BLOCK).min(list.len())];
+                assert_eq!(entry.last_doc, chunk.last().unwrap().doc, "term {t} block {b}");
+                assert_eq!(
+                    entry.max_tf,
+                    chunk.iter().map(|p| p.tf).max().unwrap(),
+                    "term {t} block {b}"
+                );
+                assert_eq!(
+                    entry.min_dl,
+                    chunk.iter().map(|p| idx.doc_len(p.doc)).min().unwrap(),
+                    "term {t} block {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_directory_survives_from_parts_and_global_stats() {
+        let idx = small_index();
+        // from_parts (the persistence load path) must rebuild an identical
+        // directory from the same postings.
+        let rebuilt = Index::from_parts(
+            (0..idx.num_terms() as u32).map(|t| idx.term(t).to_string()).collect(),
+            (0..idx.num_terms() as u32).map(|t| idx.postings(t).to_vec()).collect(),
+            (0..idx.num_docs() as u32).map(|d| idx.doc_len(d)).collect(),
+            (0..idx.num_docs() as u32).map(|d| idx.title(d).to_string()).collect(),
+        )
+        .unwrap();
+        for t in 0..idx.num_terms() as u32 {
+            assert_eq!(idx.blocks(t), rebuilt.blocks(t), "term {t}");
+        }
+        // with_global_stats replaces ranking statistics but must keep the
+        // (statistics-only) directory — the shard-slice skipping guarantee.
+        let table: Vec<f32> = (0..idx.num_terms()).map(|_| 1.5).collect();
+        let probe: Vec<_> = (0..idx.num_terms() as u32).map(|t| idx.blocks(t).to_vec()).collect();
+        let over = idx.with_global_stats(500.0, table);
+        for (t, want) in probe.iter().enumerate() {
+            assert_eq!(over.blocks(t as u32), &want[..], "term {t}");
+        }
     }
 }

@@ -10,6 +10,26 @@
 //! selection. `engine.rs` executes queries either through the pure-Rust
 //! scorer or through the AOT-compiled XLA scorer on the live request path.
 //!
+//! **Index-resident block-max metadata.** At construction time
+//! ([`Index::build`] and the persistence-load path `Index::from_parts`)
+//! every postings list is segmented into [`SKIP_BLOCK`]-entry blocks with
+//! a per-term directory of [`BlockEntry`]s — `{ last_doc, max_tf, min_dl }`
+//! per block, a skip list carrying the block-max payload. The directory
+//! stores term-frequency/length *statistics*, never scores, so it is
+//! carried unchanged through [`Index::with_global_stats`] and shard
+//! slicing, and score bounds are derived at query time from the effective
+//! IDF/avgdl.
+//!
+//! **Traversal choice.** [`SearchEngine`] executes a query under one of two
+//! [`Traversal`]s with bit-identical rankings: `Union` (default), an
+//! exhaustive document-order merge through the fixed-geometry block-scoring
+//! backends (with optional block-max pruning of filled blocks), or `Wand`,
+//! a document-at-a-time Block-Max WAND that uses the directory to gallop
+//! over postings ranges whose upper bound cannot beat the running top-k
+//! threshold — skipping the decode work itself, not just the backend call.
+//! [`SearchStats`] (`candidates`, `docs_skipped`, `blocks_elided`) accounts
+//! the difference; `benches/hotpath.rs` A/Bs the two.
+//!
 //! Like its production counterpart, the index also serves *partitioned*:
 //! [`crate::shard`] splits the corpus into contiguous doc-range shards,
 //! each a self-contained [`Index`] over its slice that scores with the
@@ -34,9 +54,9 @@ pub use bm25::{bm25_score, Bm25Params};
 pub use corpus::{Corpus, Document};
 pub use engine::{
     BlockScorer, BlockTopK, RustScorer, ScoreBlock, SearchEngine, SearchHit, SearchResult,
-    SearchStats, BLOCK_TOP_K, DOC_BLOCK, MAX_TERMS,
+    SearchStats, Traversal, BLOCK_TOP_K, DOC_BLOCK, MAX_TERMS,
 };
-pub use index::{Index, Posting};
+pub use index::{BlockEntry, Index, Posting, SKIP_BLOCK};
 pub use persist::{load_index_file, save_index_file};
 pub use query::Query;
 pub use topk::{ScoredDoc, TopK};

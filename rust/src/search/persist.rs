@@ -12,6 +12,11 @@
 //!
 //! Everything is length-prefixed and validated on load; a corrupt or
 //! truncated file yields `Error::Invalid`, never a panic.
+//!
+//! Derived structures are deliberately *not* serialized: the load path ends
+//! in `Index::from_parts`, which recomputes statistics and rebuilds the
+//! per-term block-max skip directory (`Index::blocks`) from the postings —
+//! so v1 files produce indexes with full WAND support and no format bump.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;

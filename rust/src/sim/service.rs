@@ -44,6 +44,13 @@ impl ServiceDemand {
     }
 }
 
+/// Fraction of `base_units` a batch *follower* pays. The per-request base
+/// cost models fixed dispatch/setup overhead (query parse, dictionary
+/// probes, cache warm-up); a follower scored back-to-back on the same warm
+/// core amortizes part of it, while the keyword-proportional scoring work
+/// is irreducible. Batch leaders always pay the full base.
+pub const BATCH_FOLLOWER_BASE_FRAC: f64 = 0.5;
+
 /// Samples service demands per the configured model.
 #[derive(Clone, Debug)]
 pub struct ServiceSampler {
@@ -70,7 +77,20 @@ impl ServiceSampler {
 
     /// Sample one request's demand.
     pub fn sample(&self, keywords: usize, rng: &mut Rng) -> ServiceDemand {
-        let work_units = self.base_units + self.per_kw_units * keywords as f64;
+        self.sample_scaled(keywords, 1.0, rng)
+    }
+
+    /// Sample the demand of a batch *follower*: identical rng draw
+    /// sequence to [`ServiceSampler::sample`] (one big draw then one
+    /// little draw), but only [`BATCH_FOLLOWER_BASE_FRAC`] of the base
+    /// cost — the dispatch/setup share a warm same-class batch amortizes.
+    /// The keyword-proportional work is unchanged.
+    pub fn sample_follower(&self, keywords: usize, rng: &mut Rng) -> ServiceDemand {
+        self.sample_scaled(keywords, BATCH_FOLLOWER_BASE_FRAC, rng)
+    }
+
+    fn sample_scaled(&self, keywords: usize, base_frac: f64, rng: &mut Rng) -> ServiceDemand {
+        let work_units = self.base_units * base_frac + self.per_kw_units * keywords as f64;
         // exp(N(-σ²/2, σ)) has mean exactly 1 ⇒ noise preserves mean speed.
         let draw = |rng: &mut Rng, sigma: f64| -> f64 {
             if sigma == 0.0 {
@@ -108,6 +128,36 @@ mod tests {
         let d1 = s.sample(1, &mut rng);
         let d5 = s.sample(5, &mut rng);
         assert!((d5.work_units - d1.work_units - 4.0 * 28.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn follower_discounts_base_only_and_draws_identically() {
+        let s = sampler(None);
+        // Same seed ⇒ a follower consumes exactly the rng stream a leader
+        // would (the batching path must not perturb later draws) and gets
+        // the same noise factors; only the base cost differs.
+        let mut a = Rng::new(6);
+        let mut b = Rng::new(6);
+        for kw in [1usize, 5, 12] {
+            let lead = s.sample(kw, &mut a);
+            let follow = s.sample_follower(kw, &mut b);
+            // Only the 15-unit base is discounted (paper-calibrated model);
+            // the per-keyword work is untouched.
+            let base_cut = lead.work_units - follow.work_units;
+            assert!(
+                (base_cut - 15.0 * (1.0 - BATCH_FOLLOWER_BASE_FRAC)).abs() < 1e-9,
+                "base_cut={base_cut}"
+            );
+            assert_eq!(
+                lead.speed_on(CoreKind::Big).to_bits(),
+                follow.speed_on(CoreKind::Big).to_bits()
+            );
+            assert_eq!(
+                lead.speed_on(CoreKind::Little).to_bits(),
+                follow.speed_on(CoreKind::Little).to_bits()
+            );
+        }
+        assert_eq!(a.below(1 << 20), b.below(1 << 20), "streams stay in step");
     }
 
     #[test]

@@ -129,6 +129,38 @@ fn typed_classes_reported_end_to_end() {
 }
 
 #[test]
+fn batched_dequeue_serves_every_request_on_real_threads() {
+    use hurryup::loadgen::ClassSpec;
+    // Per-class dispatch batching end to end: workers pull up to
+    // batch_max same-class requests per queue pass and score them
+    // back-to-back. Conservation and per-class accounting must be
+    // indistinguishable from the unbatched server.
+    let cfg = LiveConfig {
+        classes: vec![
+            ClassSpec::new("interactive", KeywordMix::Paper).with_share(0.5),
+            ClassSpec::new("bulk", KeywordMix::Uniform(3, 7))
+                .with_share(0.5)
+                .with_batch_max(4),
+        ],
+        qps: 200.0, // deliberate backlog so batches actually form
+        ..base_cfg()
+    };
+    let report = LiveServer::new(cfg, small_index()).run().unwrap();
+    assert_eq!(report.per_request.len(), 120);
+    assert_eq!(report.shed, 0);
+    let inter = report.class_stats("interactive").unwrap();
+    let bulk = report.class_stats("bulk").unwrap();
+    assert_eq!(inter.offered() + bulk.offered(), 120);
+    assert_eq!(inter.completed + bulk.completed, 120);
+    let with_hits = report
+        .per_request
+        .iter()
+        .filter(|r| r.top_hit.is_some())
+        .count();
+    assert!(with_hits > 100, "batched serving dropped results: {with_hits}");
+}
+
+#[test]
 fn static_mapping_never_migrates() {
     let cfg = LiveConfig {
         hurryup: None,
