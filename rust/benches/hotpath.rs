@@ -9,6 +9,7 @@
 //!   batched_dispatch   next_batch drain at batch_max 1/4/8 (same backlog)
 //!   order              OrderPolicy push/take_best per order at 10k queued
 //!   shard_merge        k-way gather merge, 10k candidate hits, 2/4/8 shards
+//!   fanout_hedge       first-wins gather cycle with one hedged dup/parent
 //!   stats_codec        IPC record encode+parse
 //!   bm25_block_rust    one 256×24 block scored in Rust
 //!   xla_block          one block through the PJRT artifact (if built)
@@ -366,6 +367,74 @@ fn main() {
                 black_box(merge_topk(black_box(&parts), 10));
             });
             r.add(&format!("shard_merge_{shards}"), "hits", 10_000.0, iters, secs);
+        }
+    }
+
+    // --- fan-out gather under hedging: first-wins slot cycle ---
+    // The hedged gather-side hot path at a 10 000-parent standing table
+    // (the in-flight population of a deeply backlogged hedged run): per
+    // iteration one parent opens, starts all S slots, the straggler
+    // check runs on every slot, one slot is hedged, the duplicate wins
+    // its race, the remaining slots gather, and the cancelled primary's
+    // completion arrives late as a loser. This is the whole per-parent
+    // FanOutTable traffic of a hedged run, so the rate bounds the
+    // gather lock's serviceable QPS ceiling. The work counters are
+    // deterministic per-iteration totals for the JSON trajectory.
+    {
+        use hurryup::shard::{FanOutTable, FirstWins};
+        for shards in [2usize, 4] {
+            let mut table: FanOutTable<u32> = FanOutTable::new(shards);
+            let mut next = 0u64;
+            // Standing population: 10k parents opened and started but
+            // never completing, so every map op runs at depth.
+            for _ in 0..10_000u64 {
+                table.open(next, hurryup::loadgen::ClassId(0), 0.0);
+                for s in 0..shards {
+                    assert!(table.try_start(next, s, 1.0));
+                }
+                next += 1;
+            }
+            let mut pending: Vec<usize> = Vec::new();
+            let (iters, secs) = measure(b(300), || {
+                let parent = next;
+                next += 1;
+                table.open(parent, hurryup::loadgen::ClassId(0), 0.0);
+                for s in 0..shards {
+                    assert!(table.try_start(parent, s, 1.0));
+                }
+                // The hedger's straggler scan: every slot still pending.
+                table.pending_shards_into(parent, &mut pending);
+                assert_eq!(pending.len(), shards);
+                // Shard 0 is hedged: the duplicate starts later and wins.
+                assert!(table.try_start(parent, 0, 2.0));
+                assert!(table.is_task_pending(parent, 0));
+                match table.complete_first_wins(parent, 0, 3.0, 0) {
+                    FirstWins::Won(None) => {}
+                    _ => unreachable!("duplicate wins an empty slot"),
+                }
+                for s in 1..shards {
+                    black_box(table.complete_first_wins(parent, s, 4.0, s as u32));
+                }
+                // The cancelled primary escaped and completes late.
+                assert!(matches!(
+                    table.complete_first_wins(parent, 0, 5.0, 9),
+                    FirstWins::Lost
+                ));
+            });
+            assert_eq!(table.in_flight(), 10_000, "standing population preserved");
+            r.add_work(
+                &format!("fanout_hedge_{shards}"),
+                "parents",
+                1.0,
+                iters,
+                secs,
+                &[
+                    ("standing_parents", 10_000),
+                    ("slots_per_parent", shards as u64),
+                    ("hedges_per_parent", 1),
+                    ("late_losers_per_parent", 1),
+                ],
+            );
         }
     }
 

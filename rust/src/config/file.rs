@@ -30,6 +30,9 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
             "order",
             "wfq_cost",
             "shards",
+            "replicas",
+            "hedge_quantile",
+            "hedge_budget",
             "shed_deadline_ms",
             "qps",
             "num_requests",
@@ -111,6 +114,15 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
     }
     if let Some(v) = get_i64(&doc, "shards")? {
         cfg.shards = v as usize;
+    }
+    if let Some(v) = get_i64(&doc, "replicas")? {
+        cfg.replicas = v as usize;
+    }
+    if let Some(v) = get_f64(&doc, "hedge_quantile")? {
+        cfg.hedge_quantile = v;
+    }
+    if let Some(v) = get_f64(&doc, "hedge_budget")? {
+        cfg.hedge_budget = v;
     }
     if let Some(v) = get_f64(&doc, "shed_deadline_ms")? {
         cfg.shed_deadline_ms = Some(v);
@@ -542,6 +554,28 @@ mod tests {
         assert!(e.to_string().contains("magic"), "{e}");
         // Unknown per-shard keys rejected.
         assert!(sim_config_from_str("shards = 2\n[[shard]]\ncolour = \"red\"").is_err());
+    }
+
+    #[test]
+    fn replicas_and_hedge_knobs_parsed_and_validated() {
+        let cfg = sim_config_from_str(
+            "shards = 2\nreplicas = 2\nhedge_quantile = 0.9\nhedge_budget = 0.1",
+        )
+        .unwrap();
+        assert_eq!(cfg.replicas, 2);
+        assert_eq!(cfg.hedge_quantile, 0.9);
+        assert_eq!(cfg.hedge_budget, 0.1);
+        // Defaults: unreplicated, p95 delay, 5% budget.
+        let cfg = sim_config_from_str("qps = 5.0").unwrap();
+        assert_eq!(cfg.replicas, 1);
+        assert_eq!(cfg.hedge_quantile, 0.95);
+        assert_eq!(cfg.hedge_budget, 0.05);
+        // Validation: slots bounded by cores, knobs by their ranges.
+        assert!(sim_config_from_str("replicas = 0").is_err());
+        assert!(sim_config_from_str("shards = 4\nreplicas = 2").is_err());
+        assert!(sim_config_from_str("hedge_quantile = 1.0").is_err());
+        assert!(sim_config_from_str("hedge_budget = 1.5").is_err());
+        assert!(sim_config_from_str("hedge_budget = \"some\"").is_err());
     }
 
     #[test]

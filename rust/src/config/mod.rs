@@ -213,10 +213,30 @@ pub struct SimConfig {
     /// owning a core partition and a full scheduling stack — and
     /// completes at last-shard-merge (TOML `shards`, CLI `--shards`).
     pub shards: usize,
-    /// Per-shard scheduling overrides, in shard order (TOML `[[shard]]`
-    /// tables); may cover fewer than `shards` shards — the rest use the
-    /// global selectors.
+    /// Per-shard scheduling overrides, in *slot* order (TOML `[[shard]]`
+    /// tables); may cover fewer than `shards × replicas` slots — the rest
+    /// use the global selectors. With `replicas = 1` a slot IS a shard;
+    /// replicated runs index replica slots after the primaries
+    /// (`slot = replica · shards + shard`).
     pub shard_overrides: Vec<ShardOverride>,
+    /// Replica sets per doc-range shard (default 1 = unreplicated, which
+    /// replays plain sharded seeded output bit for bit). With R > 1 the
+    /// core set is dealt across `shards × replicas` slots
+    /// ([`crate::hedge::ReplicaPlan`]) and straggling shard tasks are
+    /// hedged onto their replica slot (TOML `replicas`, CLI
+    /// `--replicas`). Requires `shards > 1`-style feasibility:
+    /// `shards × replicas ≤ cores`.
+    pub replicas: usize,
+    /// Per-class shard-task latency quantile arming the hedge timer
+    /// (default 0.95): a parent whose task is still pending after its
+    /// class's observed quantile latency re-issues the straggler to the
+    /// replica. Must lie strictly inside (0, 1).
+    pub hedge_quantile: f64,
+    /// Global hedge budget as a fraction of offered shard tasks (default
+    /// 0.05 ≈ the classic "hedge no more than 5%"), enforced by a token
+    /// bucket. 0 disables firing (replicas still dealt — the ablation
+    /// control); must lie in [0, 1].
+    pub hedge_budget: f64,
     /// Admission-control deadline, ms: when set, the configured policy is
     /// wrapped in [`crate::mapper::Shedding`], refusing requests whose
     /// projected queueing delay exceeds it. `None` (default) and
@@ -266,6 +286,9 @@ impl SimConfig {
             wfq_cost: WfqCostKind::Nominal,
             shards: 1,
             shard_overrides: Vec::new(),
+            replicas: 1,
+            hedge_quantile: 0.95,
+            hedge_budget: 0.05,
             shed_deadline_ms: None,
             qps: 30.0,
             num_requests: 100_000,
@@ -344,9 +367,27 @@ impl SimConfig {
         self
     }
 
-    /// Builder: per-shard scheduling overrides, in shard order.
+    /// Builder: per-shard scheduling overrides, in slot order.
     pub fn with_shard_overrides(mut self, overrides: Vec<ShardOverride>) -> Self {
         self.shard_overrides = overrides;
+        self
+    }
+
+    /// Builder: set the replica count per shard (1 = unreplicated).
+    pub fn with_replicas(mut self, replicas: usize) -> Self {
+        self.replicas = replicas;
+        self
+    }
+
+    /// Builder: set the hedge-delay latency quantile.
+    pub fn with_hedge_quantile(mut self, q: f64) -> Self {
+        self.hedge_quantile = q;
+        self
+    }
+
+    /// Builder: set the hedge budget (fraction of offered shard tasks).
+    pub fn with_hedge_budget(mut self, budget: f64) -> Self {
+        self.hedge_budget = budget;
         self
     }
 
@@ -438,11 +479,39 @@ impl SimConfig {
                 self.big_cores + self.little_cores
             )));
         }
-        if self.shard_overrides.len() > self.shards {
+        if self.replicas == 0 {
+            return Err(crate::error::Error::config("replicas must be >= 1"));
+        }
+        if self.shards * self.replicas > self.big_cores + self.little_cores {
             return Err(crate::error::Error::config(format!(
-                "{} [[shard]] overrides declared for {} shard(s)",
+                "shards x replicas ({} x {} = {}) exceeds cores ({}): every \
+                 replica slot needs at least one core",
+                self.shards,
+                self.replicas,
+                self.shards * self.replicas,
+                self.big_cores + self.little_cores
+            )));
+        }
+        if !(self.hedge_quantile > 0.0 && self.hedge_quantile < 1.0) {
+            return Err(crate::error::Error::config(format!(
+                "hedge_quantile must lie strictly inside (0, 1), got {}",
+                self.hedge_quantile
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.hedge_budget) {
+            return Err(crate::error::Error::config(format!(
+                "hedge_budget must lie in [0, 1], got {}",
+                self.hedge_budget
+            )));
+        }
+        if self.shard_overrides.len() > self.shards * self.replicas {
+            return Err(crate::error::Error::config(format!(
+                "{} [[shard]] overrides declared for {} slot(s) ({} shard(s) \
+                 x {} replica(s))",
                 self.shard_overrides.len(),
-                self.shards
+                self.shards * self.replicas,
+                self.shards,
+                self.replicas
             )));
         }
         // Shares, names and deadlines of declared classes.
@@ -589,6 +658,56 @@ mod tests {
             cfg.shard_scheduling(2),
             (DisciplineKind::PerCore, OrderKind::Edf, PolicyKind::LinuxRandom)
         );
+    }
+
+    #[test]
+    fn hedging_config_validated() {
+        let base = SimConfig::paper_default(PolicyKind::LinuxRandom);
+        assert_eq!(base.replicas, 1, "unreplicated by default");
+        assert_eq!(base.hedge_quantile, 0.95);
+        assert_eq!(base.hedge_budget, 0.05);
+        // Feasible replica deals pass; infeasible ones name the bound.
+        assert!(base.clone().with_shards(2).with_replicas(3).validated().is_ok());
+        assert!(base.clone().with_shards(3).with_replicas(2).validated().is_ok());
+        let err = base
+            .clone()
+            .with_shards(4)
+            .with_replicas(2)
+            .validated()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("4 x 2 = 8"), "{err}");
+        assert!(base.clone().with_replicas(0).validated().is_err());
+        // Quantile strictly inside (0, 1); budget inside [0, 1].
+        for q in [0.0, 1.0, -0.1, 1.5, f64::NAN] {
+            assert!(
+                base.clone().with_hedge_quantile(q).validated().is_err(),
+                "quantile {q} must be rejected"
+            );
+        }
+        assert!(base.clone().with_hedge_quantile(0.5).validated().is_ok());
+        for b in [-0.01, 1.01, f64::NAN] {
+            assert!(
+                base.clone().with_hedge_budget(b).validated().is_err(),
+                "budget {b} must be rejected"
+            );
+        }
+        assert!(base.clone().with_hedge_budget(0.0).validated().is_ok());
+        assert!(base.clone().with_hedge_budget(1.0).validated().is_ok());
+        // Overrides may cover every replica slot, but not more.
+        assert!(base
+            .clone()
+            .with_shards(2)
+            .with_replicas(2)
+            .with_shard_overrides(vec![ShardOverride::default(); 4])
+            .validated()
+            .is_ok());
+        assert!(base
+            .with_shards(2)
+            .with_replicas(2)
+            .with_shard_overrides(vec![ShardOverride::default(); 5])
+            .validated()
+            .is_err());
     }
 
     #[test]

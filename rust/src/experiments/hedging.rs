@@ -1,0 +1,296 @@
+//! Hedged-request ablation: {shards × replicas × load} in BOTH engines —
+//! the capstone of the `hedge` subsystem.
+//!
+//! The replica deal splits each doc-range shard's core subset in R, so
+//! the honest baseline for "does hedging help?" is NOT `R = 1` (different
+//! partition, different capacity) but `R = 2` with a **zero hedge
+//! budget**: identical slots, identical primary traffic, every hedge
+//! timer fires and is refused by the token bucket — the backup slots sit
+//! provably idle. Turning the budget on is then the only difference, and
+//! the sim is deterministic, so any latency movement is hedge-caused:
+//!
+//! * **tail rescue** — a task still pending when its parent outlives the
+//!   per-class streaming `hedge_quantile` (P²) latency estimate is
+//!   re-issued to the shard's backup slot. The backup is idle (it serves
+//!   only hedges), so the duplicate starts immediately while the primary
+//!   copy sits in a queue — exactly the parents that make up the e2e p99.
+//!   Asserted: hedged p99 strictly below the budget-0 control at every
+//!   grid point.
+//! * **p50 neutrality** — hedges are capped at `hedge_budget` per primary
+//!   task (token bucket, asserted against the reported rate), and losing
+//!   copies are cancelled (queued → dropped at dequeue, running →
+//!   preempted/aborted), so the median must not pay for the tail rescue.
+//!   Asserted: hedged p50 within 5% of the control's.
+//! * **work accounting** — every fired hedge resolves exactly one way
+//!   (win / cancelled-queued / cancelled-in-flight / late loser,
+//!   [`crate::metrics::HedgeStats::is_balanced`], asserted by the engines
+//!   themselves), and cancelled duplicates never appear in per-shard
+//!   `offered`, so conservation stays exact with hedging on.
+//!
+//! The live half drives the same config through the thread-pool server —
+//! replica worker pools over shared shard indexes, a hedger thread arming
+//! wall-clock timers, cancellation through the shared dispatchers and
+//! cooperative scoring aborts — asserting conservation and ledger
+//! balance on real threads (wall-clock noise makes strict p99 ordering a
+//! sim-only claim).
+
+use super::runner::Scale;
+use crate::config::{CorpusConfig, SimConfig};
+use crate::live::{LiveConfig, LiveServer};
+use crate::mapper::PolicyKind;
+use crate::metrics::HedgeStats;
+use crate::sim::Simulation;
+use crate::util::fmt::{ms, pct, Table};
+
+/// (shards, loads) swept: S=2 deals 1B1L primaries + 1L backups, S=3 is
+/// the fully-dealt 6-slot case whose little-core primary owns the tail.
+/// Loads put the bottleneck primary slot near (ρ ≈ 0.85–0.9) and past
+/// (ρ ≈ 1.05–1.1) its capacity knee — the regime where queue-wait
+/// stragglers exist for hedging to rescue, and where the rescue (an idle
+/// backup vs a deep primary queue) dwarfs histogram-bucket granularity
+/// so the strict p99 ordering is robust.
+const GRID: [(usize, [f64; 2]); 2] = [(2, [24.0, 30.0]), (3, [9.0, 11.0])];
+
+/// Hedge budget of the treatment arm (fraction of primary tasks).
+const BUDGET: f64 = 0.05;
+
+/// Offered load of the live half, QPS.
+const LIVE_QPS: f64 = 40.0;
+
+/// Requests per live cell (real time — keep small).
+const LIVE_REQUESTS: usize = 80;
+
+fn hurry_up() -> PolicyKind {
+    PolicyKind::HurryUp {
+        sampling_ms: 25.0,
+        threshold_ms: 50.0,
+    }
+}
+
+fn grid_header(title: String, lead: &'static str) -> Table {
+    Table::new(
+        title,
+        &[
+            lead, "shards", "replicas", "budget", "goodput", "p50_ms", "p99_ms", "hedge%",
+            "win%", "cxl_q", "cxl_run", "denied",
+        ],
+    )
+}
+
+/// One grid row from a finished run's aggregates.
+#[allow(clippy::too_many_arguments)]
+fn push_row(
+    t: &mut Table,
+    lead: String,
+    shards: usize,
+    replicas: usize,
+    goodput: f64,
+    p50: f64,
+    p99: f64,
+    hedge: Option<&HedgeStats>,
+) {
+    let dash = || "-".to_string();
+    t.row(&[
+        lead,
+        shards.to_string(),
+        replicas.to_string(),
+        hedge.map_or_else(dash, |h| format!("{:.2}", h.budget)),
+        format!("{goodput:.1}"),
+        ms(p50),
+        ms(p99),
+        hedge.map_or_else(dash, |h| pct(h.hedge_rate())),
+        hedge.map_or_else(dash, |h| pct(h.win_rate())),
+        hedge.map_or_else(dash, |h| h.cancelled_queued.to_string()),
+        hedge.map_or_else(dash, |h| h.cancelled_inflight.to_string()),
+        hedge.map_or_else(dash, |h| h.budget_denied.to_string()),
+    ]);
+}
+
+/// Simulated {S × R × load} grid. Per grid point: an `R = 1` reference
+/// row (the pre-hedging partition), the `R = 2` budget-0 control, and the
+/// hedged arm — asserting the tail-rescue, p50-neutrality and budget
+/// invariants between the matched R = 2 pair.
+pub fn sim_grid(requests: usize) -> Table {
+    let mut t = grid_header(
+        format!(
+            "Hedged shard requests × load (sim): replica slots on 2B4L, \
+             straggler re-issue at the p95 class latency, {requests} \
+             requests/cell"
+        ),
+        "qps",
+    );
+    for (shards, loads) in GRID {
+        for qps in loads {
+            let base = SimConfig::paper_default(hurry_up())
+                .with_qps(qps)
+                .with_requests(requests)
+                .with_seed(0x4ED6E)
+                .with_shards(shards);
+            let run = |replicas: usize, budget: f64| {
+                Simulation::new(
+                    base.clone()
+                        .with_replicas(replicas)
+                        .with_hedge_budget(budget),
+                )
+                .run()
+            };
+            let reference = run(1, BUDGET);
+            let control = run(2, 0.0);
+            let hedged = run(2, BUDGET);
+            for out in [&reference, &control, &hedged] {
+                assert_eq!(out.completed + out.shed, requests, "conservation");
+                for s in &out.per_shard {
+                    assert_eq!(s.offered(), requests, "per-shard conservation");
+                }
+            }
+            assert!(reference.hedge.is_none(), "R=1 must not carry a ledger");
+            let ctl = control.hedge.as_ref().expect("R=2 carries a ledger");
+            assert_eq!(ctl.hedges_fired, 0, "budget 0 must never fire");
+            assert!(ctl.budget_denied > 0, "stragglers must exist to deny");
+            let h = hedged.hedge.as_ref().expect("R=2 carries a ledger");
+            assert!(h.hedges_fired > 0, "hedges must fire at S={shards} {qps} qps");
+            // Budget cap, plus the token bucket's burst allowance
+            // (negligible at this scale).
+            assert!(
+                h.hedge_rate() <= h.budget + 11.0 / h.primary_tasks as f64,
+                "token bucket must hold: {} > {}",
+                h.hedge_rate(),
+                h.budget
+            );
+            let (ctl_p50, ctl_p99) = (
+                control.latency.percentile(0.50),
+                control.latency.percentile(0.99),
+            );
+            let (hdg_p50, hdg_p99) = (
+                hedged.latency.percentile(0.50),
+                hedged.latency.percentile(0.99),
+            );
+            // The acceptance anchor: at identical slots and load, hedging
+            // strictly shrinks the e2e tail without inflating the median.
+            assert!(
+                hdg_p99 < ctl_p99,
+                "hedged p99 {hdg_p99} must beat control {ctl_p99} (S={shards}, {qps} qps)"
+            );
+            assert!(
+                hdg_p50 <= ctl_p50 * 1.05,
+                "hedged p50 {hdg_p50} must stay within 5% of control {ctl_p50}"
+            );
+            push_row(
+                &mut t,
+                format!("{qps:.0}"),
+                shards,
+                1,
+                reference.goodput_qps(),
+                reference.latency.percentile(0.50),
+                reference.latency.percentile(0.99),
+                None,
+            );
+            push_row(
+                &mut t,
+                format!("{qps:.0}"),
+                shards,
+                2,
+                control.goodput_qps(),
+                ctl_p50,
+                ctl_p99,
+                Some(ctl),
+            );
+            push_row(
+                &mut t,
+                format!("{qps:.0}"),
+                shards,
+                2,
+                hedged.goodput_qps(),
+                hdg_p50,
+                hdg_p99,
+                Some(h),
+            );
+        }
+    }
+    t
+}
+
+/// Live smoke cell: the full hedging stack (hedger thread, replica worker
+/// pools, dispatcher drop-at-dequeue, cooperative scoring aborts) on real
+/// threads. Asserts conservation and ledger balance; timing claims stay
+/// in the sim grid.
+pub fn live_grid(requests: usize) -> Table {
+    let mut t = grid_header(
+        format!(
+            "Hedged shard requests (live): thread-pool server @ \
+             {LIVE_QPS:.0} QPS, {requests} requests/cell"
+        ),
+        "engine",
+    );
+    let corpus = CorpusConfig {
+        num_docs: 1_500,
+        ..CorpusConfig::small()
+    }
+    .build();
+    for (replicas, budget) in [(1usize, BUDGET), (2, 0.25)] {
+        let cfg = LiveConfig {
+            qps: LIVE_QPS,
+            num_requests: requests,
+            seed: 0xF1E1D,
+            shards: 2,
+            replicas,
+            hedge_budget: budget,
+            ..LiveConfig::default()
+        };
+        let report = LiveServer::from_corpus(cfg, &corpus)
+            .run()
+            .expect("live hedging cell failed");
+        assert_eq!(
+            report.per_request.len() + report.shed,
+            requests,
+            "live conservation at R={replicas}"
+        );
+        for s in &report.per_shard {
+            assert_eq!(s.offered(), requests, "live per-shard conservation");
+        }
+        let hedge = report.hedge.as_ref();
+        if replicas == 1 {
+            assert!(hedge.is_none(), "live R=1 must not carry a ledger");
+        } else {
+            let h = hedge.expect("live R=2 carries a ledger");
+            assert!(h.is_balanced(), "live hedge ledger unbalanced: {h:?}");
+            assert!(
+                h.hedge_rate() <= h.budget + 11.0 / h.primary_tasks.max(1) as f64,
+                "live token bucket must hold: {h:?}"
+            );
+        }
+        push_row(
+            &mut t,
+            "live".into(),
+            2,
+            replicas,
+            report.goodput_qps(),
+            report.latency.percentile(0.50),
+            report.latency.percentile(0.99),
+            hedge,
+        );
+    }
+    t
+}
+
+/// Regenerate the hedging ablation (sim grid + live smoke).
+pub fn run(scale: Scale) -> Vec<Table> {
+    vec![sim_grid(scale.cell_requests(6)), live_grid(LIVE_REQUESTS)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_grid_renders_every_cell_and_holds_invariants() {
+        // 2 shard counts × 2 loads × 3 variants; the tail-rescue and
+        // budget asserts run inside sim_grid itself.
+        assert_eq!(sim_grid(1_500).len(), 2 * 2 * 3);
+    }
+
+    #[test]
+    fn live_grid_renders_every_cell() {
+        assert_eq!(live_grid(40).len(), 2);
+    }
+}

@@ -17,6 +17,7 @@
 //! | `classes`   | service classes: interactive vs batch SLO/shed    |
 //! | `orders`    | dequeue orders: strict vs wfq vs edf, sim + live  |
 //! | `sharding`  | scatter-gather fan-out: tail amplification vs S   |
+//! | `hedging`   | replica sets + hedged stragglers: p99 vs budget   |
 //!
 //! Scale: experiments default to a fast setting; set `HURRYUP_FULL=1` for
 //! the paper's 1×10⁵-request scale.
@@ -31,6 +32,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod hedging;
 pub mod orders;
 pub mod power_table;
 pub mod runner;
@@ -61,6 +63,7 @@ pub fn registry() -> Vec<(&'static str, ExperimentFn)> {
         ("classes", classes::run as ExperimentFn),
         ("orders", orders::run as ExperimentFn),
         ("sharding", sharding::run as ExperimentFn),
+        ("hedging", hedging::run as ExperimentFn),
     ]
 }
 

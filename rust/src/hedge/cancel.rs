@@ -1,0 +1,130 @@
+//! Cancellation primitives — how a first-wins gather kills the loser.
+//!
+//! A hedged task exists twice: once on the primary replica, once on the
+//! backup. The first completion wins; the duplicate is then pure waste
+//! and must die wherever it currently is:
+//!
+//! * **Still queued** — a [`CancelSet`] registered on the duplicate's
+//!   dispatcher ([`crate::sched::Dispatcher::set_cancellation`]) drops it
+//!   at dequeue: the scheduler pops it normally, sees its key in the
+//!   set, discards the payload and takes the next candidate instead.
+//!   Cancellation therefore costs nothing on the hot path until a
+//!   cancelled item actually reaches a queue head.
+//! * **Already running** — a [`CancelToken`] carried by the task is
+//!   flipped; the worker polls it at score-block flush boundaries
+//!   ([`crate::search::SearchEngine::search_with_cancel`]) and abandons
+//!   the traversal. In the simulator the same event is modelled as an
+//!   instant preempt (the core's generation counter is bumped, exactly
+//!   the mechanism live migration uses).
+//!
+//! Both primitives are deliberately dumb: a set of keys and an atomic
+//! flag. All policy — who cancels whom, and when — lives in the gather
+//! path ([`crate::shard::FanOutTable::complete_first_wins`] call sites).
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Keys of queued tasks that must be dropped at dequeue instead of
+/// dispatched. Shared between the canceller (gather path) and the
+/// dispatcher that owns the queue; clone to share.
+///
+/// Keys are caller-defined `u64`s — the engines use the parent request
+/// index, which is unique within any one slot's queue (a parent never
+/// queues the same shard task twice on the same slot).
+#[derive(Clone, Debug, Default)]
+pub struct CancelSet {
+    keys: Arc<Mutex<HashSet<u64>>>,
+}
+
+impl CancelSet {
+    /// Empty set.
+    pub fn new() -> CancelSet {
+        CancelSet::default()
+    }
+
+    /// Mark `key` cancelled: the next dequeue of a payload with this key
+    /// drops it.
+    pub fn cancel(&self, key: u64) {
+        self.keys.lock().expect("cancel set poisoned").insert(key);
+    }
+
+    /// Consume a cancellation: returns true (and clears the mark) when
+    /// `key` was cancelled. Dispatchers call this once per dequeued
+    /// payload, so a mark kills exactly one queued duplicate.
+    pub fn take(&self, key: u64) -> bool {
+        self.keys.lock().expect("cancel set poisoned").remove(&key)
+    }
+
+    /// Non-consuming membership test (diagnostics).
+    pub fn contains(&self, key: u64) -> bool {
+        self.keys.lock().expect("cancel set poisoned").contains(&key)
+    }
+
+    /// Outstanding cancellation marks (cancelled but not yet dequeued).
+    pub fn len(&self) -> usize {
+        self.keys.lock().expect("cancel set poisoned").len()
+    }
+
+    /// True when no marks are outstanding.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Cooperative in-flight cancellation flag for one task instance. The
+/// canceller flips it; the worker polls [`CancelToken::is_cancelled`] at
+/// block boundaries and abandons the rest of the work. Clone to share
+/// (all clones observe the same flag).
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    /// A live (not cancelled) token.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Flip the flag. Idempotent.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    /// Has someone cancelled this task?
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_set_marks_are_consumed_exactly_once() {
+        let set = CancelSet::new();
+        assert!(set.is_empty());
+        assert!(!set.take(7), "unmarked keys pass through");
+        set.cancel(7);
+        set.cancel(7); // idempotent
+        assert_eq!(set.len(), 1);
+        assert!(set.contains(7));
+        let alias = set.clone();
+        assert!(alias.take(7), "first dequeue consumes the mark");
+        assert!(!set.take(7), "second dequeue of the same key passes");
+        assert!(set.is_empty());
+    }
+
+    #[test]
+    fn cancel_token_is_shared_and_idempotent() {
+        let t = CancelToken::new();
+        let alias = t.clone();
+        assert!(!t.is_cancelled());
+        alias.cancel();
+        assert!(t.is_cancelled(), "clones share the flag");
+        t.cancel();
+        assert!(t.is_cancelled());
+    }
+}

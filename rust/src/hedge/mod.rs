@@ -1,0 +1,44 @@
+//! Hedged shard requests: replica sets, straggler re-issue, first-wins
+//! gather, and cancellation of the loser.
+//!
+//! The `figures sharding` ablation proved the scatter-gather weakness:
+//! end-to-end p99 is hostage to the *slowest* shard, and tail
+//! amplification grows with the fan-out width S. Hurry-up attacks the
+//! straggler inside a shard (big-core acceleration of the laggard);
+//! this module attacks it at the fan-out layer the way "The Tail at
+//! Scale" prescribes — **hedged requests**: when one shard task has
+//! outlived the latency quantile of its class, re-issue it to a replica
+//! that holds the same documents on different cores, take whichever
+//! copy finishes first, and cancel the other so the duplicate work is
+//! reclaimed, not just ignored.
+//!
+//! The subsystem is three small parts, wired through the whole stack:
+//!
+//! * [`ReplicaPlan`] ([`plan`]) — R copies of each doc-range shard dealt
+//!   onto disjoint core subsets. Replicas share the shard's `Arc`-ed
+//!   index (corpus-wide ranking stats), so either copy's answer is
+//!   bit-identical; slot `r·S + s` numbering makes `R = 1` coincide
+//!   exactly with the plain [`crate::shard::ShardPlan`].
+//! * [`HedgePolicy`] ([`policy`]) — *when* (per-class P² latency
+//!   quantile, [`crate::sched::QuantileEstimates`]) and *how much*
+//!   ([`HedgeBudget`] token bucket: ≈5% of offered tasks, so hedging
+//!   can help the tail but never melt the medians).
+//! * [`CancelSet`] / [`CancelToken`] ([`cancel`]) — *how the loser
+//!   dies*: queued duplicates are dropped at dequeue by the slot's
+//!   dispatcher; running ones are cooperatively aborted at score-block
+//!   boundaries (live) or preempted by a generation bump (sim).
+//!
+//! The gather side lives in [`crate::shard::FanOutTable`]: replica-aware
+//! completion ([`complete_first_wins`][crate::shard::FanOutTable::complete_first_wins])
+//! makes the first copy win and tells the caller whether to cancel a
+//! loser. Outcome accounting — hedge rate, win rate, cancelled work —
+//! is [`crate::metrics::HedgeStats`], reported by both engines and swept
+//! by the `figures hedging` ablation.
+
+pub mod cancel;
+pub mod plan;
+pub mod policy;
+
+pub use cancel::{CancelSet, CancelToken};
+pub use plan::ReplicaPlan;
+pub use policy::{HedgeBudget, HedgePolicy, HEDGE_BURST};

@@ -1,0 +1,173 @@
+//! The replica plan: R copies of each doc-range shard, dealt onto
+//! disjoint core subsets.
+//!
+//! A [`ReplicaPlan`] is a [`ShardPlan`] over `S × R` **slots**: slot
+//! `r·S + s` is replica `r` of doc-range shard `s`. The two layouts are
+//! deliberately nested — with `R = 1` the slot numbering, the core deal
+//! and therefore every per-slot rng salt coincide exactly with the plain
+//! sharded plan, which is what keeps hedging-off runs bit-for-bit
+//! identical to the pre-hedging engine (the
+//! `replicas_1_replays_pr6_seeded_output` anchor).
+//!
+//! Replicas of a shard serve the **same** doc range with the **same**
+//! corpus-wide ranking statistics: the live server hands every replica of
+//! shard `s` the same `Arc<`[`Index`][crate::search::Index]`>` built by
+//! [`crate::shard::build_shard_indexes`] (global avgdl + IDF via
+//! `Index::with_global_stats`), so whichever replica answers first, the
+//! gathered ranking is bit-identical. Only placement differs: each slot
+//! owns a disjoint core subset and runs its own scheduler stack, so a
+//! hedged duplicate never competes with its primary for cores.
+//!
+//! Core deal: the global big-first core order is dealt round-robin over
+//! all `S × R` slots ([`ShardPlan::partition`] semantics). Primaries
+//! (replica 0, slots `0..S`) therefore get the first pick of big cores;
+//! backups absorb what remains — on the paper's 2B4L Juno, `S=2, R=2`
+//! yields primaries 1B1L/1B1L and backups 1L/1L: spare little capacity
+//! that costs the primaries nothing and exists purely to eat stragglers.
+
+use crate::platform::{CoreId, Topology};
+use crate::shard::ShardPlan;
+
+/// The core-set partition of one node for S doc-range shards × R
+/// replicas.
+#[derive(Clone, Debug)]
+pub struct ReplicaPlan {
+    shards: usize,
+    replicas: usize,
+    slots: ShardPlan,
+}
+
+impl ReplicaPlan {
+    /// Deal the topology's cores round-robin across `shards × replicas`
+    /// slots. Panics unless `shards ≥ 1`, `replicas ≥ 1` and every slot
+    /// gets a core (`shards × replicas ≤ num_cores`) — config validation
+    /// reports the same bounds as clean errors first.
+    pub fn partition(topology: &Topology, shards: usize, replicas: usize) -> ReplicaPlan {
+        assert!(shards >= 1, "shards must be >= 1");
+        assert!(replicas >= 1, "replicas must be >= 1");
+        ReplicaPlan {
+            shards,
+            replicas,
+            slots: ShardPlan::partition(topology, shards * replicas),
+        }
+    }
+
+    /// Number of doc-range shards (the gather fan-out width).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Replication factor.
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Total scheduling slots (`shards × replicas`).
+    pub fn slots(&self) -> usize {
+        self.shards * self.replicas
+    }
+
+    /// The slot serving replica `r` of shard `s` (`r·S + s` — replica 0
+    /// of shard `s` is slot `s`, so R=1 degenerates to the shard plan).
+    pub fn slot(&self, shard: usize, replica: usize) -> usize {
+        debug_assert!(shard < self.shards && replica < self.replicas);
+        replica * self.shards + shard
+    }
+
+    /// The doc-range shard a slot serves.
+    pub fn shard_of(&self, slot: usize) -> usize {
+        slot % self.shards
+    }
+
+    /// Which replica of its shard a slot is.
+    pub fn replica_of(&self, slot: usize) -> usize {
+        slot / self.shards
+    }
+
+    /// Is this slot a primary (replica 0)?
+    pub fn is_primary(&self, slot: usize) -> bool {
+        slot < self.shards
+    }
+
+    /// Global core ids of one slot, big cores first (a slot's local
+    /// `CoreId(i)` maps to `cores(slot)[i]`).
+    pub fn cores(&self, slot: usize) -> &[CoreId] {
+        self.slots.cores(slot)
+    }
+
+    /// The local big/little topology of one slot.
+    pub fn local_topology(&self, slot: usize, global: &Topology) -> Topology {
+        self.slots.local_topology(slot, global)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn r1_plan_coincides_with_the_shard_plan() {
+        let topo = Topology::juno_r1();
+        for shards in 1..=topo.num_cores() {
+            let plain = ShardPlan::partition(&topo, shards);
+            let plan = ReplicaPlan::partition(&topo, shards, 1);
+            assert_eq!(plan.slots(), shards);
+            for s in 0..shards {
+                assert_eq!(plan.slot(s, 0), s, "slot(s,0) must be s");
+                assert_eq!(plan.cores(s), plain.cores(s), "S={shards} s={s}");
+                assert!(plan.is_primary(s));
+                assert_eq!(plan.shard_of(s), s);
+                assert_eq!(plan.replica_of(s), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn replicated_slots_cover_every_core_once_and_address_consistently() {
+        let topo = Topology::juno_r1(); // 6 cores
+        for (shards, replicas) in [(2usize, 2usize), (3, 2), (2, 3), (1, 6)] {
+            let plan = ReplicaPlan::partition(&topo, shards, replicas);
+            assert_eq!(plan.slots(), shards * replicas);
+            let mut seen: Vec<usize> = (0..plan.slots())
+                .flat_map(|slot| plan.cores(slot).iter().map(|c| c.0))
+                .collect();
+            seen.sort_unstable();
+            assert_eq!(
+                seen,
+                (0..topo.num_cores()).collect::<Vec<_>>(),
+                "S={shards} R={replicas}: disjoint cover"
+            );
+            for s in 0..shards {
+                for r in 0..replicas {
+                    let slot = plan.slot(s, r);
+                    assert_eq!(plan.shard_of(slot), s);
+                    assert_eq!(plan.replica_of(slot), r);
+                    assert_eq!(plan.is_primary(slot), r == 0);
+                    assert!(!plan.cores(slot).is_empty());
+                    assert_eq!(
+                        plan.local_topology(slot, &topo).num_cores(),
+                        plan.cores(slot).len()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn primaries_keep_first_pick_of_big_cores() {
+        let topo = Topology::juno_r1(); // 2B4L
+        let plan = ReplicaPlan::partition(&topo, 2, 2);
+        // Slots 0,1 (primaries) take cores {0,4} and {1,5}: 1B1L each;
+        // backup slots 2,3 get one little core each.
+        assert_eq!(plan.local_topology(0, &topo).label(), "1B1L");
+        assert_eq!(plan.local_topology(1, &topo).label(), "1B1L");
+        assert_eq!(plan.local_topology(2, &topo).label(), "1L");
+        assert_eq!(plan.local_topology(3, &topo).label(), "1L");
+    }
+
+    #[test]
+    #[should_panic(expected = "1..=num_cores")]
+    fn infeasible_replica_deal_rejected() {
+        ReplicaPlan::partition(&Topology::juno_r1(), 4, 2); // 8 slots, 6 cores
+    }
+}

@@ -29,9 +29,15 @@
 //!   both execution modes), the scatter-gather sharding layer (`shard`:
 //!   the corpus and core set partition into S self-contained shards, each
 //!   running its own full scheduling stack; every query fans out to all
-//!   shards — **scatter → per-shard schedule → gather** — completing at
-//!   last-shard-merge via a k-way top-k merge, with end-to-end tails
-//!   attributed to the slowest shard), the
+//!   shards, completing at last-shard-merge via a k-way top-k merge, with
+//!   end-to-end tails attributed to the slowest shard), the hedging layer
+//!   (`hedge`: R replicas of each shard on disjoint core subsets; a
+//!   straggler task that outlives its class's observed latency quantile
+//!   is re-issued to the replica under a token-bucket budget, the first
+//!   completion wins, and the loser is cancelled — dropped at dequeue if
+//!   queued, aborted at score-block boundaries if running — so the full
+//!   request lifecycle is **scatter → per-shard schedule → hedge →
+//!   first-wins gather**), the
 //!   discrete-event simulator, the live
 //!   thread-pool server (which executes the AOT artifact on the request
 //!   path via PJRT), the typed load generator (`loadgen`: every request
@@ -50,6 +56,7 @@ pub mod cli;
 pub mod config;
 pub mod error;
 pub mod experiments;
+pub mod hedge;
 pub mod ipc;
 pub mod live;
 pub mod loadgen;
@@ -67,12 +74,13 @@ pub mod util;
 pub mod prelude {
     pub use crate::config::{CorpusConfig, HurryUpParams, ServiceModel, SimConfig};
     pub use crate::error::{Error, Result};
+    pub use crate::hedge::{CancelSet, CancelToken, HedgePolicy, ReplicaPlan};
     pub use crate::loadgen::{
         ArrivalProcess, ClassId, ClassRegistry, ClassSpec, QueryGen, Request, Workload,
         WorkloadMix,
     };
     pub use crate::mapper::{Migration, PolicyKind};
-    pub use crate::metrics::{ClassStats, LatencyHistogram, ShardStats, Summary};
+    pub use crate::metrics::{ClassStats, HedgeStats, LatencyHistogram, ShardStats, Summary};
     pub use crate::sched::{DisciplineKind, OrderKind, WfqCostKind};
     pub use crate::platform::{CoreId, CoreKind, PowerModel, ThreadId, Topology};
     pub use crate::search::{Corpus, Index, Query, SearchEngine};

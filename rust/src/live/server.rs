@@ -8,12 +8,13 @@ use std::time::{Duration, Instant};
 use super::worker::{EmulatedScorer, LiveRequest, SpeedCell};
 use crate::config::{KeywordMix, ShardOverride};
 use crate::error::{Error, Result};
+use crate::hedge::{CancelSet, CancelToken, HedgePolicy, ReplicaPlan};
 use crate::ipc::{stats_channel, RequestTag, StatsRecord, StatsWriter};
 use crate::loadgen::{ArrivalProcess, ClassId, ClassRegistry, ClassSpec, Workload, WorkloadMix};
 use crate::mapper::{
     AdmissionDecision, DispatchInfo, HurryUp, HurryUpParams, Policy, PolicyKind, Shedding,
 };
-use crate::metrics::{ClassStats, LatencyHistogram, ShardStats};
+use crate::metrics::{ClassStats, HedgeStats, LatencyHistogram, ShardStats};
 use crate::platform::{AffinityTable, CoreKind, EnergyMeters, PowerModel, ThreadId, Topology};
 use crate::runtime::XlaScorer;
 use crate::sched::{
@@ -21,8 +22,10 @@ use crate::sched::{
     ServiceEstimates, SharedDispatcher, WfqCost, WfqCostKind,
 };
 use crate::search::engine::BlockScorer;
-use crate::search::{Bm25Params, Corpus, Index, Query, RustScorer, ScoredDoc, SearchEngine};
-use crate::shard::{build_shard_indexes, merge_topk, FanOutTable, ShardIndex, ShardPlan};
+use crate::search::{
+    Bm25Params, Corpus, Index, Query, RustScorer, ScoredDoc, SearchEngine, Traversal,
+};
+use crate::shard::{build_shard_indexes, merge_topk, FanOutTable, FirstWins, ShardIndex};
 use crate::util::Rng;
 
 /// Live-server configuration.
@@ -49,8 +52,25 @@ pub struct LiveConfig {
     /// thread per shard; build via [`LiveServer::from_corpus`] so the
     /// shard indexes exist.
     pub shards: usize,
-    /// Per-shard scheduling overrides, in shard order (same semantics as
-    /// `SimConfig::shard_overrides`).
+    /// Replica sets per shard (default 1 = unreplicated; same semantics
+    /// as `SimConfig::replicas`). With R > 1 each shard's doc range is
+    /// served by R disjoint worker pools and straggler tasks are hedged
+    /// to a replica; any replica's slice scores with corpus-wide
+    /// statistics, so whichever copy wins returns identical hits.
+    pub replicas: usize,
+    /// Straggler quantile arming the hedge timer (same semantics as
+    /// `SimConfig::hedge_quantile`). Inert unless `replicas` > 1.
+    pub hedge_quantile: f64,
+    /// Hedge budget — token-bucket earn rate per primary task (same
+    /// semantics as `SimConfig::hedge_budget`). Inert unless
+    /// `replicas` > 1.
+    pub hedge_budget: f64,
+    /// Postings traversal of every worker's search engine (union merge or
+    /// Block-Max WAND — both stage candidates through the same block
+    /// scorer, so the emulated live timing covers either).
+    pub traversal: Traversal,
+    /// Per-slot scheduling overrides, in slot order (`replica * shards +
+    /// shard`; same semantics as `SimConfig::shard_overrides`).
     pub shard_overrides: Vec<ShardOverride>,
     /// Admission-control deadline, ms: when set, the placement policy is
     /// wrapped in [`Shedding`] and requests whose projected queueing delay
@@ -90,18 +110,39 @@ impl LiveConfig {
         if self.shards == 0 {
             return Err(Error::config("shards must be >= 1"));
         }
-        if self.shards > self.big_cores + self.little_cores {
+        if self.replicas == 0 {
+            return Err(Error::config("replicas must be >= 1"));
+        }
+        if self.shards * self.replicas > self.big_cores + self.little_cores {
             return Err(Error::config(format!(
-                "shards ({}) exceeds cores ({}): every shard needs at least one core",
+                "shards x replicas ({} x {} = {}) exceeds cores ({}): every \
+                 replica slot needs at least one core",
                 self.shards,
+                self.replicas,
+                self.shards * self.replicas,
                 self.big_cores + self.little_cores
             )));
         }
-        if self.shard_overrides.len() > self.shards {
+        if !(self.hedge_quantile > 0.0 && self.hedge_quantile < 1.0) {
             return Err(Error::config(format!(
-                "{} [[shard]] overrides declared for {} shard(s)",
+                "hedge_quantile must be in (0, 1), got {}",
+                self.hedge_quantile
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.hedge_budget) {
+            return Err(Error::config(format!(
+                "hedge_budget must be in [0, 1], got {}",
+                self.hedge_budget
+            )));
+        }
+        if self.shard_overrides.len() > self.shards * self.replicas {
+            return Err(Error::config(format!(
+                "{} [[shard]] overrides declared for {} slot(s) ({} shard(s) \
+                 x {} replica(s))",
                 self.shard_overrides.len(),
-                self.shards
+                self.shards * self.replicas,
+                self.shards,
+                self.replicas
             )));
         }
         Ok(self)
@@ -148,6 +189,10 @@ impl Default for LiveConfig {
             order: OrderKind::Strict,
             wfq_cost: WfqCostKind::Nominal,
             shards: 1,
+            replicas: 1,
+            hedge_quantile: 0.95,
+            hedge_budget: 0.05,
+            traversal: Traversal::Union,
             shard_overrides: Vec::new(),
             shed_deadline_ms: None,
             qps: 30.0,
@@ -225,6 +270,10 @@ pub struct LiveReport {
     /// slowest-shard attribution), in shard order. Empty for unsharded
     /// runs; the live server has no warmup, so every task is measured.
     pub per_shard: Vec<ShardStats>,
+    /// Replica sets per shard (1 = unreplicated).
+    pub replicas: usize,
+    /// Hedged-request accounting (`Some` iff `replicas` > 1).
+    pub hedge: Option<HedgeStats>,
     /// Total scoring passes across workers.
     pub total_passes: u64,
 }
@@ -484,6 +533,7 @@ impl LiveServer {
             let use_xla = cfg.use_xla;
             let work_scale = cfg.work_scale;
             let top_k = cfg.top_k;
+            let traversal = cfg.traversal;
             let est = est.clone();
             let batch_limits = batch_limits.clone();
             workers.push(std::thread::spawn(move || -> Result<u64> {
@@ -493,7 +543,7 @@ impl LiveServer {
                 } else {
                     Box::new(RustScorer::new(Bm25Params::default()))
                 };
-                let engine = SearchEngine::new(index, top_k);
+                let engine = SearchEngine::new(index, top_k).with_traversal(traversal);
                 let mut rid_seq = (t as u64) << 40;
                 let mut passes_total = 0u64;
                 // One pull dequeues a whole same-class batch (size capped
@@ -655,6 +705,8 @@ impl LiveServer {
             order: cfg.order.label(),
             shards: 1,
             per_shard: Vec::new(),
+            replicas: 1,
+            hedge: None,
             total_passes,
         })
     }
@@ -677,7 +729,14 @@ impl LiveServer {
                  with LiveServer::from_corpus",
             ));
         }
-        let plan = ShardPlan::partition(&topology, s_count);
+        let r_count = cfg.replicas;
+        // R disjoint copies of the S-way partition; slot r*S + s serves
+        // shard s on replica r (replicas share the shard's index slice,
+        // so whichever copy wins returns identical hits). replicas = 1
+        // keeps the slots identical to the unreplicated plan.
+        let plan = ReplicaPlan::partition(&topology, s_count, r_count);
+        let n_slots = plan.slots();
+        let hedging = r_count > 1;
         let registry = cfg.class_registry();
         let priorities = registry.priorities();
         let est = matches!(cfg.wfq_cost, WfqCostKind::Estimated)
@@ -686,18 +745,36 @@ impl LiveServer {
         let epoch = Instant::now();
         let now_ms = move || epoch.elapsed().as_secs_f64() * 1e3;
 
-        /// One shard's queue + affinity + speed cells + migration count.
+        // Straggler policy (per-class P² latency quantile + token-bucket
+        // budget) and outcome accounting, shared by the load generator,
+        // the hedger thread and every worker.
+        let hedge_policy =
+            hedging.then(|| Arc::new(HedgePolicy::new(registry.len(), cfg.hedge_quantile, cfg.hedge_budget)));
+        let hedge_stats =
+            hedging.then(|| Arc::new(Mutex::new(HedgeStats::new(r_count, cfg.hedge_budget))));
+
+        /// One slot's queue + affinity + speed cells + migration count (a
+        /// slot is one replica of one shard).
         struct ShardShared {
             queue: SharedDispatcher<ShardTask>,
             aff: Mutex<AffinityTable>,
             speeds: Vec<SpeedCell>,
             migrations: std::sync::atomic::AtomicUsize,
+            /// Drop-at-dequeue cancellation marks (replicated runs only;
+            /// also registered on `queue`).
+            cancel: Option<CancelSet>,
         }
-        /// One queued shard task.
+        /// One queued shard task (one copy — the primary's and a hedged
+        /// duplicate's carry different cancel tokens).
         struct ShardTask {
             parent: u64,
             class: ClassId,
+            /// Parent arrival, ms — feeds the straggler quantile.
+            arrived_ms: f64,
             query: Query,
+            /// Flipped by the winner's gather to abort this copy
+            /// mid-scoring (polled at block boundaries).
+            cancel: CancelToken,
         }
         /// What a finished task contributes to the gather.
         struct TaskPartial {
@@ -723,6 +800,12 @@ impl LiveServer {
             table: FanOutTable<TaskPartial>,
             records: Vec<LiveRecord>,
             task_log: Vec<TaskRow>,
+            /// Open hedges: (parent, shard) → duplicate's slot. Inserted
+            /// when the hedger fires, removed by whichever copy wins.
+            hedged: std::collections::HashMap<(u64, usize), usize>,
+            /// Live cancel tokens: (parent, slot) → that copy's token.
+            /// The winner removes its own and flips the loser's.
+            tokens: std::collections::HashMap<(u64, usize), CancelToken>,
         }
 
         // One policy rule for the whole sharded server (placement policy,
@@ -738,12 +821,16 @@ impl LiveServer {
             })
         };
 
-        // ---- per-shard scheduling stacks ----
-        let mut shard_shareds: Vec<Arc<ShardShared>> = Vec::with_capacity(s_count);
-        for s in 0..s_count {
-            let local_topo = plan.local_topology(s, &topology);
-            let (disc, order, _) = cfg.shard_scheduling(s);
-            let pkind = effective_policy(s);
+        // ---- per-slot scheduling stacks ----
+        // Replica slots carry the same stack as their primary (overrides
+        // are declared in slot order, so slot `r*S + s` can differ), and —
+        // when hedging — a CancelSet so losing duplicates still queued are
+        // dropped at dequeue instead of scored.
+        let mut shard_shareds: Vec<Arc<ShardShared>> = Vec::with_capacity(n_slots);
+        for slot in 0..n_slots {
+            let local_topo = plan.local_topology(slot, &topology);
+            let (disc, order, _) = cfg.shard_scheduling(slot);
+            let pkind = effective_policy(slot);
             let placement =
                 Shedding::wrap(pkind.build(&local_topo), cfg.shed_deadline_ms, &registry);
             let spec = {
@@ -757,16 +844,22 @@ impl LiveServer {
             let speeds: Vec<SpeedCell> = (0..local_topo.num_cores())
                 .map(|t| SpeedCell::new(aff.kind_of(ThreadId(t)).speed()))
                 .collect();
-            let salt = (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let salt = (slot as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let queue = SharedDispatcher::new(
+                disc.build_ordered(local_topo.num_cores(), &spec),
+                placement,
+                cfg.seed ^ 0x5EED_D15C ^ salt,
+            );
+            let cancel = hedging.then(CancelSet::new);
+            if let Some(set) = &cancel {
+                queue.set_cancellation(set.clone(), |t: &ShardTask| t.parent);
+            }
             shard_shareds.push(Arc::new(ShardShared {
-                queue: SharedDispatcher::new(
-                    disc.build_ordered(local_topo.num_cores(), &spec),
-                    placement,
-                    cfg.seed ^ 0x5EED_D15C ^ salt,
-                ),
+                queue,
                 aff: Mutex::new(aff),
                 speeds,
                 migrations: std::sync::atomic::AtomicUsize::new(0),
+                cancel,
             }));
         }
 
@@ -774,6 +867,8 @@ impl LiveServer {
             table: FanOutTable::new(s_count),
             records: Vec::new(),
             task_log: Vec::new(),
+            hedged: std::collections::HashMap::new(),
+            tokens: std::collections::HashMap::new(),
         }));
         let done = Arc::new(std::sync::atomic::AtomicUsize::new(0));
         let shed_total = Arc::new(std::sync::atomic::AtomicUsize::new(0));
@@ -785,25 +880,25 @@ impl LiveServer {
         // gets a drain thread and no migrations, exactly like its sim
         // counterpart whose tick returns none; only Hurry-up has live
         // migration support).
-        let mut mapper_handles = Vec::with_capacity(s_count);
-        let mut stats_txs: Vec<StatsWriter> = Vec::with_capacity(s_count);
-        for s in 0..s_count {
+        let mut mapper_handles = Vec::with_capacity(n_slots);
+        let mut stats_txs: Vec<StatsWriter> = Vec::with_capacity(n_slots);
+        for slot in 0..n_slots {
             let (stats_tx, stats_rx) = stats_channel()?;
             stats_txs.push(stats_tx);
             let handle = if let PolicyKind::HurryUp {
                 sampling_ms,
                 threshold_ms,
-            } = effective_policy(s)
+            } = effective_policy(slot)
             {
                 let params = HurryUpParams {
                     sampling_ms,
                     threshold_ms,
                 };
-                let shared = shard_shareds[s].clone();
-                let local_topo = plan.local_topology(s, &topology);
+                let shared = shard_shareds[slot].clone();
+                let local_topo = plan.local_topology(slot, &topology);
                 let tick_seed = cfg.seed
                     ^ 0x71C4_11FE
-                    ^ (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                    ^ (slot as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
                 let (done, shed_total) = (done.clone(), shed_total.clone());
                 let mut rx = stats_rx;
                 std::thread::spawn(move || {
@@ -869,22 +964,27 @@ impl LiveServer {
             mapper_handles.push(handle);
         }
 
-        // ---- per-shard worker pools ----
+        // ---- per-slot worker pools ----
         let mut workers = Vec::new();
-        for s in 0..s_count {
-            let shard_index = self.shard_indexes[s].clone();
-            let n_local = plan.cores(s).len();
+        for slot in 0..n_slots {
+            let shard = plan.shard_of(slot);
+            let slot_index = self.shard_indexes[shard].clone();
+            let n_local = plan.cores(slot).len();
             for t in 0..n_local {
-                let shared = shard_shareds[s].clone();
+                let shared = shard_shareds[slot].clone();
+                let all_shareds = shard_shareds.clone();
                 let gather = gather.clone();
                 let done = done.clone();
-                let stats_tx: StatsWriter = stats_txs[s].clone();
+                let stats_tx: StatsWriter = stats_txs[slot].clone();
                 let est = est.clone();
-                let shard_index = shard_index.clone();
-                let global_core = plan.cores(s)[t].0;
+                let shard_index = slot_index.clone();
+                let hedge_stats = hedge_stats.clone();
+                let hedge_policy = hedge_policy.clone();
+                let global_core = plan.cores(slot)[t].0;
                 let use_xla = cfg.use_xla;
                 let work_scale = cfg.work_scale;
                 let top_k = cfg.top_k;
+                let traversal = cfg.traversal;
                 let n_threads = topology.num_cores();
                 workers.push(std::thread::spawn(move || -> Result<u64> {
                     let mut scorer: Box<dyn BlockScorer> = if use_xla {
@@ -892,8 +992,9 @@ impl LiveServer {
                     } else {
                         Box::new(RustScorer::new(Bm25Params::default()))
                     };
-                    let engine = SearchEngine::new(shard_index.index.clone(), top_k);
-                    let mut rid_seq = ((s * n_threads + t) as u64) << 40;
+                    let engine =
+                        SearchEngine::new(shard_index.index.clone(), top_k).with_traversal(traversal);
+                    let mut rid_seq = ((slot * n_threads + t) as u64) << 40;
                     let mut passes_total = 0u64;
                     // Sharded workers stay unbatched (plain `pop`): a
                     // shard task is a 1/S sliver of a request whose setup
@@ -901,6 +1002,22 @@ impl LiveServer {
                     // per-batch overhead left to amortize — matching the
                     // simulator's sharded path.
                     while let Some(task) = shared.queue.pop(ThreadId(t), &shared.aff) {
+                        if hedging {
+                            // A losing copy whose cancel mark raced past
+                            // the queue drop: its shard slot is already
+                            // filled (or the parent gathered), so skip it
+                            // before any accounting.
+                            let mut g = gather.lock().expect("gather poisoned");
+                            if !g.table.is_task_pending(task.parent, shard) {
+                                g.tokens.remove(&(task.parent, slot));
+                                drop(g);
+                                if slot >= s_count {
+                                    let hs = hedge_stats.as_ref().expect("hedging");
+                                    hs.lock().expect("hedge stats poisoned").cancelled_inflight += 1;
+                                }
+                                continue;
+                            }
+                        }
                         let started = now_ms();
                         let first_kind = {
                             let aff = shared.aff.lock().expect("aff poisoned");
@@ -918,13 +1035,11 @@ impl LiveServer {
                             .ok();
                         let mut emulated =
                             EmulatedScorer::new(scorer.as_mut(), &shared.speeds[t], work_scale);
-                        let result = engine.search_with(&task.query, &mut emulated)?;
+                        let result =
+                            engine.search_with_cancel(&task.query, &mut emulated, Some(&task.cancel))?;
                         let passes = emulated.passes;
                         passes_total += passes;
                         let completed = now_ms();
-                        if let Some(est) = &est {
-                            est.observe(task.class, completed - started);
-                        }
                         stats_tx
                             .send(&StatsRecord {
                                 tid: ThreadId(t),
@@ -933,26 +1048,97 @@ impl LiveServer {
                                 class: Some(task.class),
                             })
                             .ok();
+                        let Some(result) = result else {
+                            // Aborted mid-scoring: the other copy won and
+                            // flipped our token. Reclaimed work is the
+                            // sunk service time; only duplicate slots
+                            // count toward the hedge ledger's buckets.
+                            let hs = hedge_stats.as_ref().expect("cancel implies hedging");
+                            {
+                                let mut hs = hs.lock().expect("hedge stats poisoned");
+                                hs.cancelled_work_ms += completed - started;
+                                if slot >= s_count {
+                                    hs.cancelled_inflight += 1;
+                                }
+                            }
+                            let mut g = gather.lock().expect("gather poisoned");
+                            g.tokens.remove(&(task.parent, slot));
+                            continue;
+                        };
+                        if let Some(est) = &est {
+                            est.observe(task.class, completed - started);
+                        }
                         let final_kind = {
                             let aff = shared.aff.lock().expect("aff poisoned");
                             aff.kind_of(ThreadId(t))
                         };
                         // Gather: start/complete bookkeeping under the
                         // fan-out lock; the last task merges and records.
+                        // Hedged runs race the copies: first completion
+                        // wins the shard slot, the loser is cancelled
+                        // wherever it is (queued → drop-at-dequeue mark,
+                        // running → token abort).
                         let mut g = gather.lock().expect("gather poisoned");
-                        g.table.start(task.parent, s, started);
-                        if let Some(fan) = g.table.complete(
-                            task.parent,
-                            s,
-                            completed,
-                            TaskPartial {
-                                hits: shard_index.globalize(&result.hits),
-                                passes,
-                                tid: global_core,
-                                first_kind,
-                                final_kind,
-                            },
-                        ) {
+                        let partial = TaskPartial {
+                            hits: shard_index.globalize(&result.hits),
+                            passes,
+                            tid: global_core,
+                            first_kind,
+                            final_kind,
+                        };
+                        let gathered = if hedging {
+                            if !g.table.try_start(task.parent, shard, started) {
+                                // Parent fully gathered while we scored.
+                                g.tokens.remove(&(task.parent, slot));
+                                drop(g);
+                                if slot >= s_count {
+                                    let hs = hedge_stats.as_ref().expect("hedging");
+                                    hs.lock().expect("hedge stats poisoned").late_losers += 1;
+                                }
+                                continue;
+                            }
+                            match g.table.complete_first_wins(task.parent, shard, completed, partial)
+                            {
+                                FirstWins::Won(fan) => {
+                                    g.tokens.remove(&(task.parent, slot));
+                                    if let Some(hp) = &hedge_policy {
+                                        hp.observe(task.class, completed - task.arrived_ms);
+                                    }
+                                    if let Some(dup_slot) = g.hedged.remove(&(task.parent, shard)) {
+                                        let loser_slot =
+                                            if slot == dup_slot { shard } else { dup_slot };
+                                        if let Some(tok) =
+                                            g.tokens.remove(&(task.parent, loser_slot))
+                                        {
+                                            tok.cancel();
+                                        }
+                                        if let Some(set) = &all_shareds[loser_slot].cancel {
+                                            set.cancel(task.parent);
+                                        }
+                                        if slot == dup_slot {
+                                            let hs =
+                                                hedge_stats.as_ref().expect("hedging");
+                                            hs.lock().expect("hedge stats poisoned").hedge_wins +=
+                                                1;
+                                        }
+                                    }
+                                    fan
+                                }
+                                FirstWins::Lost => {
+                                    g.tokens.remove(&(task.parent, slot));
+                                    drop(g);
+                                    if slot >= s_count {
+                                        let hs = hedge_stats.as_ref().expect("hedging");
+                                        hs.lock().expect("hedge stats poisoned").late_losers += 1;
+                                    }
+                                    continue;
+                                }
+                            }
+                        } else {
+                            g.table.start(task.parent, shard, started);
+                            g.table.complete(task.parent, shard, completed, partial)
+                        };
+                        if let Some(fan) = gathered {
                             let critical = fan.critical_shard();
                             let parts: Vec<Vec<ScoredDoc>> = fan
                                 .tasks()
@@ -992,6 +1178,113 @@ impl LiveServer {
             }
         }
 
+        // ---- hedger thread ----
+        // Watches admitted parents: once a parent's per-class hedge delay
+        // elapses, any shard task still pending is a straggler and gets a
+        // duplicate issued to that shard's replica slot — if the token
+        // bucket allows. Runs only when `replicas > 1`.
+        /// One admitted parent the hedger is watching.
+        struct HedgeOrder {
+            parent: u64,
+            class: ClassId,
+            arrived_ms: f64,
+            /// When to check for stragglers (arrival + per-class delay).
+            deadline_ms: f64,
+            info: DispatchInfo,
+            query: Query,
+        }
+        let (hedge_tx, hedger_handle) = if hedging {
+            let (tx, rx) = std::sync::mpsc::channel::<HedgeOrder>();
+            let gather = gather.clone();
+            let hp = hedge_policy.clone().expect("hedging");
+            let hs = hedge_stats.clone().expect("hedging");
+            let all_shareds = shard_shareds.clone();
+            let (done, shed_total) = (done.clone(), shed_total.clone());
+            let handle = std::thread::spawn(move || {
+                let mut waiting: Vec<HedgeOrder> = Vec::new();
+                let mut pending: Vec<usize> = Vec::new();
+                let mut disconnected = false;
+                loop {
+                    // Fire every order whose deadline has passed.
+                    let now = now_ms();
+                    let mut i = 0;
+                    while i < waiting.len() {
+                        if waiting[i].deadline_ms > now {
+                            i += 1;
+                            continue;
+                        }
+                        let order = waiting.swap_remove(i);
+                        // Decide the duplicates under the gather lock so a
+                        // concurrent win can't race the ledger; push them
+                        // after releasing it (a mark inserted between the
+                        // two drops the duplicate at dequeue, so the late
+                        // push stays safe).
+                        let mut fired: Vec<(usize, ShardTask)> = Vec::new();
+                        {
+                            let mut g = gather.lock().expect("gather poisoned");
+                            g.table.pending_shards_into(order.parent, &mut pending);
+                            for &sh in &pending {
+                                if g.hedged.contains_key(&(order.parent, sh)) {
+                                    continue;
+                                }
+                                if !hp.try_fire() {
+                                    hs.lock().expect("hedge stats poisoned").budget_denied += 1;
+                                    continue;
+                                }
+                                hs.lock().expect("hedge stats poisoned").hedges_fired += 1;
+                                let replica = 1 + (order.parent as usize % (r_count - 1));
+                                let dup_slot = replica * s_count + sh;
+                                let tok = CancelToken::new();
+                                g.hedged.insert((order.parent, sh), dup_slot);
+                                g.tokens.insert((order.parent, dup_slot), tok.clone());
+                                fired.push((
+                                    dup_slot,
+                                    ShardTask {
+                                        parent: order.parent,
+                                        class: order.class,
+                                        arrived_ms: order.arrived_ms,
+                                        query: order.query.clone(),
+                                        cancel: tok,
+                                    },
+                                ));
+                            }
+                        }
+                        for (dup_slot, task) in fired {
+                            let sh = &all_shareds[dup_slot];
+                            sh.queue.push_admitted(task, order.info, &sh.aff);
+                        }
+                    }
+                    // Exit once every parent resolved, or once the load
+                    // generator hung up and no deadline is outstanding.
+                    if done.load(Ordering::Relaxed) + shed_total.load(Ordering::Relaxed) >= total
+                        || (disconnected && waiting.is_empty())
+                    {
+                        break;
+                    }
+                    // Sleep until the next deadline or the next order.
+                    let next = waiting
+                        .iter()
+                        .map(|o| o.deadline_ms)
+                        .fold(f64::INFINITY, f64::min);
+                    let wait_ms = (next - now_ms()).clamp(0.2, 5.0);
+                    if disconnected {
+                        std::thread::sleep(Duration::from_secs_f64(wait_ms / 1e3));
+                    } else {
+                        match rx.recv_timeout(Duration::from_secs_f64(wait_ms / 1e3)) {
+                            Ok(order) => waiting.push(order),
+                            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                                disconnected = true;
+                            }
+                        }
+                    }
+                }
+            });
+            (Some(tx), Some(handle))
+        } else {
+            (None, None)
+        };
+
         // ---- workload + load generator (this thread) ----
         let mut rng = Rng::new(cfg.seed);
         let qmix = WorkloadMix::new(&registry, self.index.num_terms());
@@ -1021,10 +1314,12 @@ impl LiveServer {
                 priority: priorities[req.class.idx()],
                 arrive_ms: arrived,
             };
-            // All-or-nothing fan-out admission: probe every shard before
-            // anything is enqueued anywhere (the load generator is the
-            // only producer, so backlogs can only shrink meanwhile).
-            let refused = shard_shareds.iter().any(|sh| {
+            // All-or-nothing fan-out admission: probe every PRIMARY shard
+            // before anything is enqueued anywhere (the load generator is
+            // the only producer, so backlogs can only shrink meanwhile).
+            // Replica slots never gate admission — a hedge is optional
+            // extra work, not part of the request's contract.
+            let refused = shard_shareds.iter().take(s_count).any(|sh| {
                 matches!(
                     sh.queue.probe_admit(info, &sh.aff),
                     AdmissionDecision::Shed { .. }
@@ -1035,25 +1330,57 @@ impl LiveServer {
                 shed_by_class[req.class.idx()] += 1;
                 continue;
             }
+            let query = Query::from_terms(terms);
+            // One cancel token per primary copy, registered in the gather
+            // ledger (hedged runs) so a winning duplicate can abort it.
+            let copy_tokens: Vec<CancelToken> =
+                (0..s_count).map(|_| CancelToken::new()).collect();
             // Open the parent BEFORE any push: a fast shard may complete
             // its task before the loop reaches the last shard.
-            gather
-                .lock()
-                .expect("gather poisoned")
-                .table
-                .open(req.id, req.class, arrived);
-            let query = Query::from_terms(terms);
-            for sh in &shard_shareds {
+            {
+                let mut g = gather.lock().expect("gather poisoned");
+                g.table.open(req.id, req.class, arrived);
+                if hedging {
+                    for (s, tok) in copy_tokens.iter().enumerate() {
+                        g.tokens.insert((req.id, s), tok.clone());
+                    }
+                }
+            }
+            for (s, sh) in shard_shareds.iter().take(s_count).enumerate() {
                 sh.queue.push_admitted(
                     ShardTask {
                         parent: req.id,
                         class: req.class,
+                        arrived_ms: arrived,
                         query: query.clone(),
+                        cancel: copy_tokens[s].clone(),
                     },
                     info,
                     &sh.aff,
                 );
             }
+            if let (Some(hp), Some(hs), Some(tx)) = (&hedge_policy, &hedge_stats, &hedge_tx) {
+                hs.lock().expect("hedge stats poisoned").primary_tasks += s_count;
+                for _ in 0..s_count {
+                    hp.task_offered();
+                }
+                let deadline = arrived + hp.delay_ms(req.class);
+                tx.send(HedgeOrder {
+                    parent: req.id,
+                    class: req.class,
+                    arrived_ms: arrived,
+                    deadline_ms: deadline,
+                    info,
+                    query,
+                })
+                .ok();
+            }
+        }
+        // The hedger may still push duplicates for in-flight parents, so
+        // it must wind down before the queues close.
+        drop(hedge_tx);
+        if let Some(h) = hedger_handle {
+            h.join().expect("hedger panicked");
         }
         for sh in &shard_shareds {
             sh.queue.close();
@@ -1080,6 +1407,27 @@ impl LiveServer {
             .into_inner()
             .expect("gather poisoned");
         debug_assert!(gather.table.is_empty(), "parents stranded mid-gather");
+        debug_assert!(gather.hedged.is_empty(), "hedges stranded unresolved");
+        debug_assert!(gather.tokens.is_empty(), "cancel tokens leaked");
+        let hedge = match hedge_stats {
+            Some(hs) => {
+                let mut hs = Arc::try_unwrap(hs)
+                    .map_err(|_| Error::invalid("hedge stats still shared after join"))?
+                    .into_inner()
+                    .expect("hedge stats poisoned");
+                // Queued losers were dropped inside the duplicate slots'
+                // dispatchers (the CancelSet mark consumed at dequeue);
+                // fold those drops into the ledger. Primary-slot drops
+                // (the duplicate won first) are not duplicate fates and
+                // stay out of the buckets.
+                for slot_shared in shard_shareds.iter().skip(s_count) {
+                    hs.cancelled_queued += slot_shared.queue.cancelled_dropped();
+                }
+                debug_assert!(hs.is_balanced(), "hedge ledger unbalanced: {hs:?}");
+                Some(hs)
+            }
+            None => None,
+        };
         let mut per_request = gather.records;
         per_request.sort_by(|a, b| a.completed_ms.partial_cmp(&b.completed_ms).unwrap());
         let mut latency = LatencyHistogram::new();
@@ -1150,6 +1498,8 @@ impl LiveServer {
             order: cfg.order.label(),
             shards: s_count,
             per_shard,
+            replicas: r_count,
+            hedge,
             total_passes,
         })
     }

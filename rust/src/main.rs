@@ -28,15 +28,17 @@ hurryup — request-level thread mapping for web search on big/little cores
 USAGE:
   hurryup sim     [--config f.toml] [--qps N] [--requests N] [--policy P]
                   [--discipline D] [--order O] [--wfq-cost C] [--shards S]
+                  [--replicas R] [--hedge-quantile Q] [--hedge-budget B]
                   [--shed-deadline-ms N] [--classes SPEC] [--seed N]
                   [--threshold-ms N] [--sampling-ms N]
   hurryup serve   [--qps N] [--requests N] [--policy P] [--discipline D]
-                  [--order O] [--wfq-cost C] [--shards S]
+                  [--order O] [--wfq-cost C] [--shards S] [--replicas R]
+                  [--hedge-quantile Q] [--hedge-budget B] [--traversal T]
                   [--shed-deadline-ms N] [--classes SPEC] [--xla] [--docs N]
   hurryup index   [--docs N] [--vocab N]
   hurryup query   --q \"search terms\" [--xla] [--docs N]
   hurryup figures [fig1 fig2 fig3 fig6 fig7 fig8 fig9 power_table ablations
-                  disciplines shedding classes orders sharding]
+                  disciplines shedding classes orders sharding hedging]
                   [--full | --scale quick|full]
   hurryup check
 
@@ -55,6 +57,14 @@ SHARDING:    --shards S partitions the index and core set into S shards;
              schedule → gather) and completes at last-shard-merge.
              Per-shard discipline/order/policy via [[shard]] TOML tables;
              reports add a per-shard table + slowest-shard attribution
+HEDGING:     --replicas R deals R copies of every shard onto disjoint core
+             subsets (needs shards x replicas <= cores); once a shard task
+             outlives its class's --hedge-quantile latency estimate it is
+             re-issued to a replica slot, first completion wins and the
+             loser is cancelled (queued: dropped at dequeue; running:
+             aborted at the next score block). --hedge-budget caps hedges
+             per primary task (token bucket); --traversal union|wand picks
+             the live index traversal
 ADMISSION:   --shed-deadline-ms wraps the policy in the projected-delay
              shedder (inf = admission path, never sheds); sharded runs
              shed all-or-nothing across shards
@@ -185,6 +195,9 @@ fn cmd_sim(args: &Args) -> Result<()> {
     cfg.order = order_from(args, cfg.order)?;
     cfg.wfq_cost = wfq_cost_from(args, cfg.wfq_cost)?;
     cfg.shards = args.get_usize("shards", cfg.shards)?;
+    cfg.replicas = args.get_usize("replicas", cfg.replicas)?;
+    cfg.hedge_quantile = args.get_f64("hedge-quantile", cfg.hedge_quantile)?;
+    cfg.hedge_budget = args.get_f64("hedge-budget", cfg.hedge_budget)?;
     if let Some(deadline) = shed_deadline_from(args)? {
         cfg.shed_deadline_ms = Some(deadline);
     }
@@ -201,7 +214,15 @@ fn cmd_sim(args: &Args) -> Result<()> {
         cfg.discipline.label(),
         cfg.order.label(),
         if cfg.shards > 1 {
-            format!(" | {} shards", cfg.shards)
+            format!(
+                " | {} shards{}",
+                cfg.shards,
+                if cfg.replicas > 1 {
+                    format!(" x {} replicas", cfg.replicas)
+                } else {
+                    String::new()
+                }
+            )
         } else {
             String::new()
         },
@@ -239,6 +260,9 @@ fn cmd_sim(args: &Args) -> Result<()> {
         );
         report::shard_table(&out.per_shard, out.completed).print();
     }
+    if let Some(h) = &out.hedge {
+        println!("hedging    : {}", report::hedge_line(h));
+    }
     Ok(())
 }
 
@@ -271,9 +295,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         order: order_from(args, OrderKind::Strict)?,
         wfq_cost: wfq_cost_from(args, WfqCostKind::Nominal)?,
         shards: args.get_usize("shards", 1)?,
+        replicas: args.get_usize("replicas", 1)?,
         shed_deadline_ms: shed_deadline_from(args)?,
         ..LiveConfig::default()
     };
+    cfg.hedge_quantile = args.get_f64("hedge-quantile", cfg.hedge_quantile)?;
+    cfg.hedge_budget = args.get_f64("hedge-budget", cfg.hedge_budget)?;
+    if let Some(t) = args.get("traversal") {
+        cfg.traversal = hurryup::search::Traversal::parse(t)
+            .ok_or_else(|| Error::invalid(format!("unknown traversal `{t}` (union | wand)")))?;
+    }
     if let Some(spec) = args.get("classes") {
         cfg.classes = hurryup::loadgen::parse_classes(spec, cfg.keyword_mix)?;
     }
@@ -290,7 +321,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.discipline.label(),
         cfg.order.label(),
         if cfg.shards > 1 {
-            format!(" | {} shards", cfg.shards)
+            format!(
+                " | {} shards{}",
+                cfg.shards,
+                if cfg.replicas > 1 {
+                    format!(" x {} replicas", cfg.replicas)
+                } else {
+                    String::new()
+                }
+            )
         } else {
             String::new()
         },
@@ -325,6 +364,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             report::fanout_line(out.latency.percentile(0.99), &out.per_shard)
         );
         report::shard_table(&out.per_shard, out.per_request.len()).print();
+    }
+    if let Some(h) = &out.hedge {
+        println!("hedging    : {}", report::hedge_line(h));
     }
     Ok(())
 }

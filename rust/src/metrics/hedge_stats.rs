@@ -1,0 +1,129 @@
+//! Hedging outcome accounting: how often we hedged, how often the hedge
+//! won, and how much duplicate work cancellation reclaimed.
+//!
+//! One [`HedgeStats`] per run, filled by whichever engine executed it.
+//! The counters are chosen so the ablation's claims are checkable
+//! directly from the report:
+//!
+//! * `hedge_rate ≤ hedge_budget` — the token bucket held;
+//! * `hedges_fired = hedge_wins + cancelled_queued + cancelled_inflight
+//!   + late_losers` — every duplicate was exactly one of: the winner
+//!   (its primary was cancelled instead), dropped before running,
+//!   aborted while running, or (live only) finished just after the
+//!   winner;
+//! * conservation — cancelled duplicates appear **only** here, never in
+//!   per-shard `offered/completed/shed`, so hedging cannot double-count.
+
+/// Outcome counters for one hedged run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HedgeStats {
+    /// Replication factor the run was configured with.
+    pub replicas: usize,
+    /// The configured budget (token-bucket earn rate per offered task).
+    pub budget: f64,
+    /// Primary shard tasks offered (admitted parents × S) — the hedge
+    /// budget's denominator.
+    pub primary_tasks: usize,
+    /// Duplicates actually issued to a replica slot.
+    pub hedges_fired: usize,
+    /// Straggler tasks whose timer fired but whose hedge was refused by
+    /// the token bucket.
+    pub budget_denied: usize,
+    /// Hedges that completed before their primary (the duplicate won).
+    pub hedge_wins: usize,
+    /// Losing copies dropped at dequeue (cancelled while still queued).
+    pub cancelled_queued: usize,
+    /// Losing copies aborted mid-execution (preempted in the simulator,
+    /// cooperative token abort in the live server).
+    pub cancelled_inflight: usize,
+    /// Execution time reclaimed from in-flight cancellations, ms (work
+    /// the loser had already sunk when it was aborted).
+    pub cancelled_work_ms: f64,
+    /// Losing copies that completed anyway, a hair after the winner
+    /// (live-server races only; the simulator cancels instantly).
+    pub late_losers: usize,
+}
+
+impl HedgeStats {
+    /// Fresh counters for a run at replication `replicas` under `budget`.
+    pub fn new(replicas: usize, budget: f64) -> HedgeStats {
+        HedgeStats {
+            replicas,
+            budget,
+            ..HedgeStats::default()
+        }
+    }
+
+    /// Fraction of primary tasks that were hedged. The token bucket
+    /// guarantees this never exceeds `budget` by more than the fixed
+    /// burst allowance over the run.
+    pub fn hedge_rate(&self) -> f64 {
+        if self.primary_tasks == 0 {
+            0.0
+        } else {
+            self.hedges_fired as f64 / self.primary_tasks as f64
+        }
+    }
+
+    /// Fraction of fired hedges that beat their primary — the payoff
+    /// side of the duplicate work.
+    pub fn win_rate(&self) -> f64 {
+        if self.hedges_fired == 0 {
+            0.0
+        } else {
+            self.hedge_wins as f64 / self.hedges_fired as f64
+        }
+    }
+
+    /// Total losing copies cancelled (queued + in-flight).
+    pub fn cancelled(&self) -> usize {
+        self.cancelled_queued + self.cancelled_inflight
+    }
+
+    /// Accounting identity: every fired hedge resolved exactly one way.
+    /// Engines assert this at end of run.
+    pub fn is_balanced(&self) -> bool {
+        self.hedges_fired
+            == self.hedge_wins + self.cancelled_queued + self.cancelled_inflight + self.late_losers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_guard_zero_denominators() {
+        let s = HedgeStats::new(2, 0.05);
+        assert_eq!(s.replicas, 2);
+        assert_eq!(s.budget, 0.05);
+        assert_eq!(s.hedge_rate(), 0.0);
+        assert_eq!(s.win_rate(), 0.0);
+        assert!(s.is_balanced(), "all-zero is balanced");
+    }
+
+    #[test]
+    fn rates_and_balance() {
+        let s = HedgeStats {
+            replicas: 2,
+            budget: 0.05,
+            primary_tasks: 1_000,
+            hedges_fired: 40,
+            budget_denied: 3,
+            hedge_wins: 25,
+            cancelled_queued: 10,
+            cancelled_inflight: 4,
+            cancelled_work_ms: 120.0,
+            late_losers: 1,
+        };
+        assert!((s.hedge_rate() - 0.04).abs() < 1e-12);
+        assert!((s.win_rate() - 0.625).abs() < 1e-12);
+        assert_eq!(s.cancelled(), 14);
+        assert!(s.is_balanced());
+        let unbalanced = HedgeStats {
+            hedge_wins: 26,
+            ..s
+        };
+        assert!(!unbalanced.is_balanced());
+    }
+}

@@ -2,11 +2,13 @@
 //! queries (the paper reports 90th-percentile tail latency), running
 //! mean/std (Fig 1 error bars), PDF estimation (Fig 6), per-class outcome
 //! accounting (service-class SLO reports), per-shard outcome accounting
-//! for scatter-gather runs (task tails + slowest-shard attribution), and
-//! the shared report tables (`report`) the CLI and experiment runners
-//! print.
+//! for scatter-gather runs (task tails + slowest-shard attribution),
+//! hedging outcome accounting (`hedge_stats`: hedge/win rates and
+//! cancelled duplicate work), and the shared report tables (`report`)
+//! the CLI and experiment runners print.
 
 pub mod class_stats;
+pub mod hedge_stats;
 pub mod histogram;
 pub mod pdf;
 pub mod report;
@@ -14,6 +16,7 @@ pub mod shard_stats;
 pub mod summary;
 
 pub use class_stats::ClassStats;
+pub use hedge_stats::HedgeStats;
 pub use histogram::LatencyHistogram;
 pub use pdf::pdf_from_samples;
 pub use shard_stats::{tail_amplification, ShardStats};

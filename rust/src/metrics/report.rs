@@ -4,6 +4,7 @@
 //! (extracted from the launcher, where the class table used to live).
 
 use super::class_stats::ClassStats;
+use super::hedge_stats::HedgeStats;
 use super::shard_stats::{tail_amplification, ShardStats};
 use crate::util::fmt::{ms, ms_or_dash, pct, pct_or_dash, Table};
 
@@ -86,6 +87,27 @@ pub fn fanout_line(e2e_p99_ms: f64, per_shard: &[ShardStats]) -> String {
     }
 }
 
+/// One-line hedging summary: fire/win rates, budget pressure, and how the
+/// losing duplicates died.
+pub fn hedge_line(h: &HedgeStats) -> String {
+    format!(
+        "hedging R={}: fired {} of {} tasks ({}, budget {}) | wins {} ({}) | \
+         cancelled {} queued + {} in-flight ({} ms reclaimed) | {} denied, {} late",
+        h.replicas,
+        h.hedges_fired,
+        h.primary_tasks,
+        pct(h.hedge_rate()),
+        pct(h.budget),
+        h.hedge_wins,
+        pct(h.win_rate()),
+        h.cancelled_queued,
+        h.cancelled_inflight,
+        ms(h.cancelled_work_ms),
+        h.budget_denied,
+        h.late_losers,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,5 +143,29 @@ mod tests {
         assert!(line.contains("amplification"), "{line}");
         assert!(!line.contains("NaN"));
         assert_eq!(fanout_line(0.0, &[]), "no measured shard tasks");
+    }
+
+    #[test]
+    fn hedge_line_reports_rates_without_nans() {
+        use super::super::hedge_stats::HedgeStats;
+        let line = hedge_line(&HedgeStats {
+            replicas: 2,
+            budget: 0.05,
+            primary_tasks: 2_000,
+            hedges_fired: 80,
+            budget_denied: 5,
+            hedge_wins: 50,
+            cancelled_queued: 20,
+            cancelled_inflight: 9,
+            cancelled_work_ms: 314.0,
+            late_losers: 1,
+        });
+        assert!(line.contains("R=2"), "{line}");
+        assert!(line.contains("fired 80"), "{line}");
+        assert!(line.contains("wins 50"), "{line}");
+        assert!(!line.contains("NaN"));
+        // Zero-task runs render cleanly too.
+        let empty = hedge_line(&HedgeStats::new(2, 0.05));
+        assert!(!empty.contains("NaN"), "{empty}");
     }
 }

@@ -21,6 +21,7 @@
 use std::collections::HashMap;
 
 use super::{QueueDiscipline, QueuedTicket, QueueView, SchedCtx};
+use crate::hedge::CancelSet;
 use crate::mapper::{AdmissionDecision, DispatchInfo, Policy, ShedReason};
 use crate::platform::{AffinityTable, CoreId};
 use crate::util::Rng;
@@ -63,6 +64,14 @@ pub struct Dispatcher<T> {
     /// there is no parallel bookkeeping to drift out of sync.
     depth_scratch: Vec<usize>,
     prio_scratch: Vec<usize>,
+    /// Hedged-cancellation hook ([`Dispatcher::set_cancellation`]): a
+    /// shared [`CancelSet`] plus the payload→key projection. When set,
+    /// every dequeued payload whose key holds a cancellation mark is
+    /// dropped — counted in `cancelled_dropped`, never handed to a core —
+    /// and the dispatch loop takes the next candidate instead. `None`
+    /// (the default) leaves every dequeue path bit-for-bit untouched.
+    cancel: Option<(CancelSet, fn(&T) -> u64)>,
+    cancelled_dropped: usize,
 }
 
 impl<T> Dispatcher<T> {
@@ -74,7 +83,23 @@ impl<T> Dispatcher<T> {
             next_ticket: 0,
             depth_scratch: Vec::new(),
             prio_scratch: Vec::new(),
+            cancel: None,
+            cancelled_dropped: 0,
         }
+    }
+
+    /// Register the hedged-cancellation hook: queued payloads whose
+    /// `key(payload)` carries a mark in `set` are dropped at dequeue
+    /// (see [`crate::hedge::CancelSet`]). Payload conservation becomes
+    /// `enqueued = dequeued + shed + cancelled_dropped`.
+    pub fn set_cancellation(&mut self, set: CancelSet, key: fn(&T) -> u64) {
+        self.cancel = Some((set, key));
+    }
+
+    /// Queued duplicates dropped at dequeue so far (0 without a
+    /// registered [`CancelSet`]).
+    pub fn cancelled_dropped(&self) -> usize {
+        self.cancelled_dropped
     }
 
     /// Offer one request: run admission ([`Policy::admit`]) and, if
@@ -229,25 +254,40 @@ impl<T> Dispatcher<T> {
             payloads,
             depth_scratch,
             prio_scratch,
+            cancel,
+            cancelled_dropped,
             ..
         } = self;
-        discipline.depths_into(depth_scratch);
-        discipline.prios_into(prio_scratch);
-        let mut ctx = SchedCtx {
-            aff,
-            rng,
-            queues: QueueView {
-                per_core: depth_scratch,
-                per_priority: prio_scratch,
-                total: discipline.queued(),
-            },
-            now_ms,
-        };
-        let (qt, core) = discipline.next(idle, policy, &mut ctx)?;
-        let payload = payloads
-            .remove(&qt.ticket)
-            .expect("discipline duplicated or invented a ticket");
-        Some((payload, core))
+        loop {
+            if payloads.is_empty() {
+                return None;
+            }
+            // Re-snapshot per candidate: a cancelled drop just shrank the
+            // backlog, and the policy must see the state as of this pick.
+            discipline.depths_into(depth_scratch);
+            discipline.prios_into(prio_scratch);
+            let mut ctx = SchedCtx {
+                aff,
+                rng,
+                queues: QueueView {
+                    per_core: depth_scratch,
+                    per_priority: prio_scratch,
+                    total: discipline.queued(),
+                },
+                now_ms,
+            };
+            let (qt, core) = discipline.next(idle, policy, &mut ctx)?;
+            let payload = payloads
+                .remove(&qt.ticket)
+                .expect("discipline duplicated or invented a ticket");
+            if let Some((set, key)) = cancel.as_ref() {
+                if set.take(key(&payload)) {
+                    *cancelled_dropped += 1;
+                    continue;
+                }
+            }
+            return Some((payload, core));
+        }
     }
 
     /// Hand a *batch* to one idle core: a leader chosen exactly as
@@ -281,48 +321,71 @@ impl<T> Dispatcher<T> {
             payloads,
             depth_scratch,
             prio_scratch,
+            cancel,
+            cancelled_dropped,
             ..
         } = self;
-        discipline.depths_into(depth_scratch);
-        discipline.prios_into(prio_scratch);
-        let mut ctx = SchedCtx {
-            aff,
-            rng,
-            queues: QueueView {
-                per_core: depth_scratch,
-                per_priority: prio_scratch,
-                total: discipline.queued(),
-            },
-            now_ms,
-        };
-        let (leader, core) = discipline.next(idle, policy, &mut ctx)?;
-        let class = leader.info.class;
-        let limit = limits.get(class.idx()).copied().unwrap_or(1).max(1);
-        out.push(
-            payloads
-                .remove(&leader.ticket)
-                .expect("discipline duplicated or invented a ticket"),
-        );
-        let mut filled = 1;
-        while filled < limit {
-            // The ctx snapshot describes the backlog ahead of the leader;
-            // the fill is one atomic pull, so followers reuse it.
-            let Some(follower) = discipline.next_same_class(core, class, policy, &mut ctx) else {
-                break;
+        loop {
+            if payloads.is_empty() {
+                return None;
+            }
+            discipline.depths_into(depth_scratch);
+            discipline.prios_into(prio_scratch);
+            let mut ctx = SchedCtx {
+                aff,
+                rng,
+                queues: QueueView {
+                    per_core: depth_scratch,
+                    per_priority: prio_scratch,
+                    total: discipline.queued(),
+                },
+                now_ms,
             };
-            out.push(
-                payloads
+            let (leader, core) = discipline.next(idle, policy, &mut ctx)?;
+            let class = leader.info.class;
+            let limit = limits.get(class.idx()).copied().unwrap_or(1).max(1);
+            let payload = payloads
+                .remove(&leader.ticket)
+                .expect("discipline duplicated or invented a ticket");
+            if let Some((set, key)) = cancel.as_ref() {
+                if set.take(key(&payload)) {
+                    // A cancelled leader leaves `out` untouched; pick a
+                    // fresh leader against a fresh snapshot.
+                    *cancelled_dropped += 1;
+                    continue;
+                }
+            }
+            out.push(payload);
+            let mut filled = 1;
+            while filled < limit {
+                // The ctx snapshot describes the backlog ahead of the
+                // leader; the fill is one atomic pull, so followers reuse
+                // it.
+                let Some(follower) = discipline.next_same_class(core, class, policy, &mut ctx)
+                else {
+                    break;
+                };
+                let fp = payloads
                     .remove(&follower.ticket)
-                    .expect("discipline duplicated or invented a ticket"),
+                    .expect("discipline duplicated or invented a ticket");
+                if let Some((set, key)) = cancel.as_ref() {
+                    if set.take(key(&fp)) {
+                        // A cancelled follower is dropped without filling
+                        // its slot; keep pulling.
+                        *cancelled_dropped += 1;
+                        continue;
+                    }
+                }
+                out.push(fp);
+                filled += 1;
+            }
+            debug_assert_eq!(
+                payloads.len(),
+                discipline.queued(),
+                "discipline dropped or duplicated a ticket in a batch fill"
             );
-            filled += 1;
+            return Some(core);
         }
-        debug_assert_eq!(
-            payloads.len(),
-            discipline.queued(),
-            "discipline dropped or duplicated a ticket in a batch fill"
-        );
-        Some(core)
     }
 
     /// Fresh backlog snapshot into caller buffers (per-core depths and
@@ -671,5 +734,84 @@ mod tests {
             let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
             assert!(d.next(&idle, &mut policy, &aff, &mut rng, 1.0).is_none());
         }
+    }
+
+    #[test]
+    fn cancelled_payloads_drop_at_dequeue_under_every_discipline() {
+        use crate::hedge::CancelSet;
+        for kind in DisciplineKind::all() {
+            let topo = Topology::juno_r1();
+            let aff = AffinityTable::round_robin(topo.clone());
+            let mut policy = PolicyKind::LinuxRandom.build(&topo);
+            let mut rng = Rng::new(13);
+            let mut d: Dispatcher<usize> = Dispatcher::new(kind.build(6));
+            let set = CancelSet::new();
+            d.set_cancellation(set.clone(), |p| *p as u64);
+            for i in 0..20usize {
+                assert!(!d
+                    .enqueue(i, DispatchInfo::untyped(2), policy.as_mut(), &aff, &mut rng, 0.0)
+                    .is_shed());
+            }
+            // Cancel a third of them while queued, including both ends.
+            for k in [0u64, 3, 6, 9, 12, 19] {
+                set.cancel(k);
+            }
+            let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
+            let mut got = Vec::new();
+            while let Some((p, _)) = d.next(&idle, policy.as_mut(), &aff, &mut rng, 0.0) {
+                got.push(p);
+            }
+            got.sort_unstable();
+            let want: Vec<usize> =
+                (0..20).filter(|i| ![0, 3, 6, 9, 12, 19].contains(i)).collect();
+            assert_eq!(got, want, "{kind:?}: survivors dispatch exactly once");
+            assert_eq!(d.cancelled_dropped(), 6, "{kind:?}");
+            assert_eq!(d.queued(), 0, "{kind:?}: cancelled items drain too");
+            assert!(set.is_empty(), "{kind:?}: marks are consumed");
+        }
+    }
+
+    #[test]
+    fn cancelled_leader_and_followers_drop_in_batches() {
+        use crate::hedge::CancelSet;
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo.clone());
+        let mut policy = PolicyKind::LinuxRandom.build(&topo);
+        let mut rng = Rng::new(5);
+        let mut d: Dispatcher<usize> = Dispatcher::new(DisciplineKind::Centralized.build(6));
+        let set = CancelSet::new();
+        d.set_cancellation(set.clone(), |p| *p as u64);
+        for i in 0..8usize {
+            assert!(!d
+                .enqueue(i, DispatchInfo::untyped(1), policy.as_mut(), &aff, &mut rng, 0.0)
+                .is_shed());
+        }
+        // 0 would lead the first batch; 2 would ride in it as a follower.
+        set.cancel(0);
+        set.cancel(2);
+        let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
+        let limits = [4usize];
+        let mut batches = Vec::new();
+        let mut out = Vec::new();
+        while d
+            .next_batch(&idle, &limits, policy.as_mut(), &aff, &mut rng, 0.0, &mut out)
+            .is_some()
+        {
+            batches.push(std::mem::take(&mut out));
+        }
+        // The cancelled leader never occupies a batch; the cancelled
+        // follower's slot is refilled from behind it.
+        assert_eq!(batches, vec![vec![1, 3, 4, 5], vec![6, 7]]);
+        assert_eq!(d.cancelled_dropped(), 2);
+        assert_eq!(d.queued(), 0);
+    }
+
+    #[test]
+    fn unset_cancellation_hook_changes_nothing() {
+        // With no CancelSet registered, the counter stays 0 and dequeue
+        // sequence/rng use are the plain path (covered bit-for-bit by
+        // batch_limit_one_replays_plain_next_bit_for_bit).
+        let d: Dispatcher<usize> = Dispatcher::new(DisciplineKind::Centralized.build(6));
+        assert_eq!(d.cancelled_dropped(), 0);
     }
 }

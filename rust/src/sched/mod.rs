@@ -90,6 +90,19 @@
 //! the gather. `shards = 1` never touches these entry points and replays
 //! pre-sharding seeded runs bit for bit.
 //!
+//! Hedging ([`crate::hedge`]) extends the composition to **scatter →
+//! per-shard schedule → hedge → first-wins gather**: with `replicas > 1`
+//! each doc-range shard's stack is instantiated once per replica slot,
+//! a straggler task is re-issued to its replica's dispatcher via
+//! [`Dispatcher::enqueue_admitted`] / [`SharedDispatcher::push_admitted`]
+//! (the duplicate bypasses admission — it is budget-gated instead), and
+//! the losing copy is cancelled: a [`crate::hedge::CancelSet`] registered
+//! via [`Dispatcher::set_cancellation`] makes the dispatcher drop the
+//! duplicate at dequeue time, counted but never dispatched, so payload
+//! conservation becomes `enqueued = dequeued + shed + cancelled-dropped`.
+//! With no cancel set registered (the default) dequeue behaviour is
+//! bit-for-bit unchanged.
+//!
 //! ## Backlog observability caveat
 //!
 //! [`QueueView::per_priority`] is derived from the order layer. Only the
@@ -133,7 +146,8 @@ pub mod work_steal;
 pub use centralized::Centralized;
 pub use dispatcher::{AdmissionOutcome, Dispatcher, Ticket};
 pub use order::{
-    ClassOrdering, OrderKind, OrderPolicy, OrderSpec, ServiceEstimates, WfqCost, WfqCostKind,
+    ClassOrdering, OrderKind, OrderPolicy, OrderSpec, P2Quantile, QuantileEstimates,
+    ServiceEstimates, WfqCost, WfqCostKind, COLD_START_MS,
 };
 pub use per_core::PerCore;
 pub use shared::SharedDispatcher;

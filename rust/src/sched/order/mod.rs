@@ -52,10 +52,12 @@
 //! every `OrderKind`.
 
 mod edf;
+mod quantile;
 mod strict;
 mod wfq;
 
 pub use edf::Edf;
+pub use quantile::{P2Quantile, QuantileEstimates, COLD_START_MS};
 pub use strict::StrictPrio;
 pub use wfq::{Wfq, NOMINAL_SERVICE_MS};
 

@@ -1,0 +1,319 @@
+//! Streaming quantile estimation — the observed-latency side of hedging.
+//!
+//! [`P2Quantile`] implements the P² (piecewise-parabolic) algorithm of
+//! Jain & Chlamtac (CACM 1985): a single quantile tracked with five
+//! markers whose heights approximate the empirical quantile curve and
+//! whose positions are nudged toward their desired ranks by at most one
+//! per observation — O(1) time and O(1) space per sample, **no
+//! allocation** ever. That matters because the consumer is the hedge
+//! policy ([`crate::hedge::HedgePolicy`]): every completed shard task
+//! feeds an observation on the dispatch path, and the per-class hedge
+//! delay is read at every admission.
+//!
+//! [`QuantileEstimates`] is the per-class table, following the same
+//! shape as [`super::ServiceEstimates`] (the shedding EWMA): one shared,
+//! cheaply clonable handle both engines thread through workers and the
+//! scheduler. Unlike the EWMA cells the P² state is five correlated
+//! floats, so the table is a mutex rather than atomics — observations
+//! are rare (one per task completion) and the critical section is a few
+//! float ops.
+//!
+//! Cold start: below five samples the P² marker invariants are not yet
+//! established, so [`QuantileEstimates::get`] reports a conservative
+//! fallback of 2 × [`super::NOMINAL_SERVICE_MS`] (300 ms) — a hedge
+//! delay long enough that hedging stays effectively off until the class
+//! has real observations.
+
+use std::sync::{Arc, Mutex};
+
+use super::NOMINAL_SERVICE_MS;
+use crate::loadgen::ClassId;
+
+/// Hedge-delay fallback before a class has enough samples for P² (ms).
+pub const COLD_START_MS: f64 = 2.0 * NOMINAL_SERVICE_MS;
+
+/// One streaming quantile, P²-estimated. O(1) per observation, no
+/// allocation after construction.
+#[derive(Clone, Debug)]
+pub struct P2Quantile {
+    /// Target quantile in (0, 1).
+    q: f64,
+    /// Marker heights (estimates of the 0, q/2, q, (1+q)/2, 1 quantiles).
+    heights: [f64; 5],
+    /// Marker positions (1-based ranks), kept as floats per the paper.
+    pos: [f64; 5],
+    /// Desired marker positions.
+    desired: [f64; 5],
+    /// Per-observation increments of the desired positions.
+    inc: [f64; 5],
+    /// Observations seen so far.
+    count: u64,
+}
+
+impl P2Quantile {
+    /// New estimator for quantile `q` (panics unless `0 < q < 1`).
+    pub fn new(q: f64) -> P2Quantile {
+        assert!(q > 0.0 && q < 1.0, "quantile must be in (0,1), got {q}");
+        P2Quantile {
+            q,
+            heights: [0.0; 5],
+            pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+            desired: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+            inc: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+            count: 0,
+        }
+    }
+
+    /// The target quantile.
+    pub fn quantile(&self) -> f64 {
+        self.q
+    }
+
+    /// Observations fed so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Feed one observation. Non-finite samples are ignored.
+    pub fn observe(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        if self.count < 5 {
+            // Initialisation: buffer the first five in the height slots,
+            // kept sorted (insertion into a 5-array — still allocation
+            // free).
+            let n = self.count as usize;
+            self.heights[n] = x;
+            let mut i = n;
+            while i > 0 && self.heights[i - 1] > self.heights[i] {
+                self.heights.swap(i - 1, i);
+                i -= 1;
+            }
+            self.count += 1;
+            return;
+        }
+
+        // Locate the cell k such that heights[k] <= x < heights[k+1],
+        // extending the extremes when x falls outside them.
+        let k = if x < self.heights[0] {
+            self.heights[0] = x;
+            0
+        } else if x >= self.heights[4] {
+            self.heights[4] = x;
+            3
+        } else {
+            // heights[0] <= x < heights[4]: the last marker not above x.
+            let mut k = 0;
+            for i in 1..4 {
+                if self.heights[i] <= x {
+                    k = i;
+                }
+            }
+            k
+        };
+
+        for p in self.pos.iter_mut().skip(k + 1) {
+            *p += 1.0;
+        }
+        for (d, inc) in self.desired.iter_mut().zip(self.inc) {
+            *d += inc;
+        }
+
+        // Nudge the three interior markers toward their desired ranks.
+        for i in 1..4 {
+            let d = self.desired[i] - self.pos[i];
+            if (d >= 1.0 && self.pos[i + 1] - self.pos[i] > 1.0)
+                || (d <= -1.0 && self.pos[i - 1] - self.pos[i] < -1.0)
+            {
+                let d = d.signum();
+                let hp = self.parabolic(i, d);
+                self.heights[i] = if self.heights[i - 1] < hp && hp < self.heights[i + 1] {
+                    hp
+                } else {
+                    self.linear(i, d)
+                };
+                self.pos[i] += d;
+            }
+        }
+        self.count += 1;
+    }
+
+    /// Piecewise-parabolic height prediction for marker `i` moved by `d`.
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (h, n) = (&self.heights, &self.pos);
+        h[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (h[i + 1] - h[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (h[i] - h[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    /// Linear fallback when the parabola would break marker monotonicity.
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.heights[i] + d * (self.heights[j] - self.heights[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    /// Current estimate of the target quantile; `None` below 5 samples
+    /// (the markers are not established yet — callers pick a fallback).
+    pub fn estimate(&self) -> Option<f64> {
+        (self.count >= 5).then_some(self.heights[2])
+    }
+}
+
+/// Per-class streaming quantile table — the hedge-delay source. One
+/// estimator per declared class, behind one shared handle (clone to
+/// share, like [`super::ServiceEstimates`]).
+#[derive(Clone, Debug)]
+pub struct QuantileEstimates {
+    q: f64,
+    cells: Arc<Mutex<Vec<P2Quantile>>>,
+}
+
+impl QuantileEstimates {
+    /// New table for `classes` classes, all tracking quantile `q`.
+    pub fn new(classes: usize, q: f64) -> QuantileEstimates {
+        QuantileEstimates {
+            q,
+            cells: Arc::new(Mutex::new(
+                (0..classes.max(1)).map(|_| P2Quantile::new(q)).collect(),
+            )),
+        }
+    }
+
+    /// The tracked quantile.
+    pub fn quantile(&self) -> f64 {
+        self.q
+    }
+
+    /// Number of class cells.
+    pub fn classes(&self) -> usize {
+        self.cells.lock().expect("quantile table poisoned").len()
+    }
+
+    /// Feed one observed latency for a class. Out-of-table classes and
+    /// non-finite/negative samples are ignored (same tolerance as the
+    /// shedding EWMA).
+    pub fn observe(&self, class: ClassId, latency_ms: f64) {
+        if !latency_ms.is_finite() || latency_ms < 0.0 {
+            return;
+        }
+        let mut cells = self.cells.lock().expect("quantile table poisoned");
+        if let Some(cell) = cells.get_mut(class.idx()) {
+            cell.observe(latency_ms);
+        }
+    }
+
+    /// Current quantile estimate for a class, ms. Falls back to
+    /// [`COLD_START_MS`] below five samples or for out-of-table classes.
+    pub fn get(&self, class: ClassId) -> f64 {
+        let cells = self.cells.lock().expect("quantile table poisoned");
+        cells
+            .get(class.idx())
+            .and_then(P2Quantile::estimate)
+            .unwrap_or(COLD_START_MS)
+    }
+
+    /// Samples observed for a class (0 for out-of-table classes).
+    pub fn count(&self, class: ClassId) -> u64 {
+        let cells = self.cells.lock().expect("quantile table poisoned");
+        cells.get(class.idx()).map_or(0, P2Quantile::count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Exact quantile by sorting (nearest-rank on the sorted sample).
+    fn exact(samples: &mut [f64], q: f64) -> f64 {
+        samples.sort_by(f64::total_cmp);
+        let idx = ((samples.len() as f64 - 1.0) * q).round() as usize;
+        samples[idx]
+    }
+
+    #[test]
+    fn p2_tracks_uniform_distribution() {
+        for q in [0.5, 0.9, 0.95, 0.99] {
+            let mut est = P2Quantile::new(q);
+            let mut rng = Rng::new(0xD1CE ^ q.to_bits());
+            let mut samples = Vec::new();
+            for _ in 0..20_000 {
+                let x = rng.f64_range(0.0, 1000.0);
+                samples.push(x);
+                est.observe(x);
+            }
+            let truth = exact(&mut samples, q);
+            let got = est.estimate().unwrap();
+            assert!(
+                (got - truth).abs() < 0.05 * 1000.0,
+                "q={q}: got {got}, exact {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn p2_tracks_skewed_distribution() {
+        // Latency-shaped heavy tail: exp(N(0,1))-ish via squaring uniforms.
+        let mut est = P2Quantile::new(0.95);
+        let mut rng = Rng::new(7);
+        let mut samples = Vec::new();
+        for _ in 0..30_000 {
+            let u = rng.f64_range(0.0, 1.0);
+            let x = 10.0 + 500.0 * u * u * u; // skewed toward 10, tail to 510
+            samples.push(x);
+            est.observe(x);
+        }
+        let truth = exact(&mut samples, 0.95);
+        let got = est.estimate().unwrap();
+        assert!(
+            (got - truth).abs() / truth < 0.10,
+            "got {got}, exact {truth}"
+        );
+    }
+
+    #[test]
+    fn p2_small_sample_and_degenerate_inputs() {
+        let mut est = P2Quantile::new(0.95);
+        assert_eq!(est.estimate(), None, "no samples, no estimate");
+        for x in [5.0, 1.0, 3.0, 2.0] {
+            est.observe(x);
+        }
+        assert_eq!(est.estimate(), None, "four samples is still cold");
+        est.observe(4.0);
+        let e = est.estimate().unwrap();
+        assert!((1.0..=5.0).contains(&e));
+        // Non-finite samples are ignored, constants stay constant.
+        est.observe(f64::NAN);
+        est.observe(f64::INFINITY);
+        assert_eq!(est.count(), 5);
+        let mut c = P2Quantile::new(0.5);
+        for _ in 0..100 {
+            c.observe(42.0);
+        }
+        assert_eq!(c.estimate().unwrap(), 42.0);
+    }
+
+    #[test]
+    fn per_class_table_isolates_classes_and_cold_starts() {
+        let t = QuantileEstimates::new(2, 0.95);
+        assert_eq!(t.classes(), 2);
+        assert_eq!(t.get(ClassId(0)), COLD_START_MS, "cold start fallback");
+        let mut rng = Rng::new(11);
+        for _ in 0..5_000 {
+            t.observe(ClassId(0), rng.f64_range(90.0, 110.0));
+            t.observe(ClassId(1), rng.f64_range(900.0, 1100.0));
+        }
+        let fast = t.get(ClassId(0));
+        let slow = t.get(ClassId(1));
+        assert!((90.0..=110.0).contains(&fast), "class 0 p95 {fast}");
+        assert!((900.0..=1100.0).contains(&slow), "class 1 p95 {slow}");
+        // Shared handle: a clone observes into the same cells.
+        let h = t.clone();
+        assert_eq!(h.get(ClassId(0)), fast);
+        // Out-of-table class: ignored on write, fallback on read.
+        t.observe(ClassId(9), 1.0);
+        assert_eq!(t.get(ClassId(9)), COLD_START_MS);
+        assert_eq!(t.count(ClassId(9)), 0);
+    }
+}

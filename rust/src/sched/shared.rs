@@ -227,6 +227,31 @@ impl<T> SharedDispatcher<T> {
         }
     }
 
+    /// Install a cancellation set on the underlying [`Dispatcher`]: queued
+    /// payloads whose key is marked cancelled are dropped at dequeue inside
+    /// [`SharedDispatcher::pop`]/[`SharedDispatcher::pop_batch`] instead of
+    /// being handed to a worker. The hedged live server registers one set
+    /// per shard-slot queue so a first-wins loser that is still queued dies
+    /// without costing any scoring work.
+    pub fn set_cancellation(&self, set: crate::hedge::CancelSet, key: fn(&T) -> u64) {
+        self.inner
+            .lock()
+            .expect("sched queue poisoned")
+            .dispatcher
+            .set_cancellation(set, key);
+    }
+
+    /// Payloads dropped at dequeue by the cancellation set (diagnostics;
+    /// part of the conservation identity
+    /// `enqueued = dequeued + shed + cancelled-dropped`).
+    pub fn cancelled_dropped(&self) -> usize {
+        self.inner
+            .lock()
+            .expect("sched queue poisoned")
+            .dispatcher
+            .cancelled_dropped()
+    }
+
     /// Close the queue: workers drain remaining work and exit.
     pub fn close(&self) {
         self.inner.lock().expect("sched queue poisoned").closed = true;
@@ -383,6 +408,24 @@ mod tests {
         q.close();
         assert_eq!(q.pop(ThreadId(0), &aff), Some(11));
         assert_eq!(q.pop(ThreadId(0), &aff), None);
+    }
+
+    #[test]
+    fn cancelled_payloads_never_reach_workers() {
+        let (q, aff) = queue(DisciplineKind::Centralized);
+        let set = crate::hedge::CancelSet::new();
+        q.set_cancellation(set.clone(), |v: &usize| *v as u64);
+        for i in 0..4 {
+            push_admitted(&q, i, &aff);
+        }
+        set.cancel(1);
+        set.cancel(3);
+        q.close();
+        assert_eq!(q.pop(ThreadId(0), &aff), Some(0));
+        assert_eq!(q.pop(ThreadId(0), &aff), Some(2));
+        assert_eq!(q.pop(ThreadId(0), &aff), None);
+        assert_eq!(q.cancelled_dropped(), 2);
+        assert!(set.is_empty(), "marks are consumed when the drop happens");
     }
 
     #[test]

@@ -26,15 +26,25 @@
 //!   `tests::prop_union_and_wand_rankings_identical`). The upper bounds
 //!   are computed at query time from the index's *effective* IDF/avgdl,
 //!   so shard slices carrying corpus-wide statistics
-//!   (`Index::with_global_stats`) skip soundly. WAND scores documents
-//!   inline (same `bm25_score` formula) and never materialises score
-//!   blocks, so it does not drive a [`BlockScorer`] backend — the live
-//!   server's heterogeneity emulation (which meters backend block calls)
-//!   therefore keeps Union as its default.
+//!   (`Index::with_global_stats`) skip soundly. Pivot survivors are
+//!   staged into the same fixed-geometry score blocks as the union path
+//!   and flushed through the pluggable [`BlockScorer`] backend, so the
+//!   live server's heterogeneity emulation (which meters backend block
+//!   calls) covers WAND exactly like Union — replicated shard slots
+//!   running WAND do the same reduced work as the primary. The skip
+//!   threshold advances only at flush boundaries (a block-granular lag),
+//!   which can only *under*-skip relative to a document-at-a-time
+//!   threshold — never unsoundly.
+//!
+//! Both traversal loops poll an optional [`CancelToken`] at score-block
+//! boundaries ([`SearchEngine::search_with_cancel`]): a hedged duplicate
+//! whose twin already won aborts mid-query with `Ok(None)`, reclaiming
+//! the rest of its scoring work.
 //!
 //! [`SearchStats`] accounts the difference: `candidates` counts documents
-//! actually scored, `docs_skipped` postings entries galloped over without
-//! decoding, and `blocks_elided` whole directory blocks never touched.
+//! actually decoded and staged, `docs_skipped` postings entries galloped
+//! over without decoding, and `blocks_elided` whole directory blocks
+//! never touched.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -45,6 +55,7 @@ use super::index::{BlockEntry, Index, SKIP_BLOCK};
 use super::query::Query;
 use super::topk::{ScoredDoc, TopK};
 use crate::error::Result;
+use crate::hedge::CancelToken;
 
 /// Documents per scoring block — MUST match `DOC_BLOCK` in
 /// `python/compile/kernels/bm25.py` (validated against the artifact at
@@ -220,12 +231,13 @@ pub struct SearchStats {
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum Traversal {
     /// Exhaustive document-order union merge through the block-scoring
-    /// backend (optionally block-max pruned). The A/B baseline, and the
-    /// only traversal that drives [`BlockScorer`] backends.
+    /// backend (optionally block-max pruned). The A/B baseline.
     #[default]
     Union,
     /// Block-Max WAND over the index-resident block directory: postings
     /// ranges that cannot beat the top-k threshold are never decoded.
+    /// Pivot survivors flush through the same [`BlockScorer`] backend as
+    /// Union, so backend metering (the live emulation) covers both.
     Wand,
 }
 
@@ -371,14 +383,30 @@ impl SearchEngine {
             .expect("rust backend is infallible")
     }
 
-    /// Execute a query with an arbitrary block-scoring backend. (Only the
-    /// union traversal drives the backend; WAND scores inline — see the
-    /// module docs.)
+    /// Execute a query with an arbitrary block-scoring backend (both
+    /// traversals stage candidates into score blocks and drive it).
     pub fn search_with(
         &self,
         query: &Query,
         backend: &mut dyn BlockScorer,
     ) -> Result<SearchResult> {
+        Ok(self
+            .search_with_cancel(query, backend, None)?
+            .expect("search without a cancel token cannot abort"))
+    }
+
+    /// Execute a query with a backend and an optional cancellation token.
+    /// The token is polled at score-block boundaries in both traversal
+    /// loops; once it reads cancelled the query aborts and returns
+    /// `Ok(None)` — the hedged live server's way of reclaiming a losing
+    /// duplicate's remaining scoring work mid-flight. `None` for the token
+    /// makes this exactly [`SearchEngine::search_with`].
+    pub fn search_with_cancel(
+        &self,
+        query: &Query,
+        backend: &mut dyn BlockScorer,
+        cancel: Option<&CancelToken>,
+    ) -> Result<Option<SearchResult>> {
         let index = &*self.index;
         let avgdl = index.avgdl() as f32;
 
@@ -404,20 +432,23 @@ impl SearchEngine {
             ..SearchStats::default()
         };
         if term_ids.is_empty() {
-            return Ok(SearchResult {
+            return Ok(Some(SearchResult {
                 hits: Vec::new(),
                 stats,
-            });
+            }));
         }
 
         let mut global = TopK::new(self.top_k);
-        match self.traversal {
-            Traversal::Union => {
-                self.search_union(&term_ids, &idf, avgdl, backend, &mut global, &mut stats)?
-            }
-            Traversal::Wand => {
-                self.search_wand(&term_ids, &idf, avgdl, &mut global, &mut stats)
-            }
+        let finished = match self.traversal {
+            Traversal::Union => self.search_union(
+                &term_ids, &idf, avgdl, backend, cancel, &mut global, &mut stats,
+            )?,
+            Traversal::Wand => self.search_wand(
+                &term_ids, &idf, avgdl, backend, cancel, &mut global, &mut stats,
+            )?,
+        };
+        if !finished {
+            return Ok(None);
         }
 
         let hits = global
@@ -429,21 +460,24 @@ impl SearchEngine {
                 title: index.title(d.doc).to_string(),
             })
             .collect();
-        Ok(SearchResult { hits, stats })
+        Ok(Some(SearchResult { hits, stats }))
     }
 
     /// Exhaustive union traversal: heap-based k-way merge over postings in
     /// document order, staging candidates into fixed-geometry score blocks
-    /// for the backend.
+    /// for the backend. Returns `false` if the cancel token aborted the
+    /// query at a block boundary.
+    #[allow(clippy::too_many_arguments)] // traversal state + backend + cancel
     fn search_union(
         &self,
         term_ids: &[u32],
         idf: &[f32],
         avgdl: f32,
         backend: &mut dyn BlockScorer,
+        cancel: Option<&CancelToken>,
         global: &mut TopK,
         stats: &mut SearchStats,
-    ) -> Result<()> {
+    ) -> Result<bool> {
         let index = &*self.index;
         let lists: Vec<&[super::index::Posting]> =
             term_ids.iter().map(|&t| index.postings(t)).collect();
@@ -489,6 +523,9 @@ impl SearchEngine {
             stats.candidates += 1;
 
             if block.is_full() {
+                if cancel.is_some_and(CancelToken::is_cancelled) {
+                    return Ok(false);
+                }
                 self.flush_block(&block, idf, avgdl, backend, global, stats)?;
                 block.reset(avgdl);
             }
@@ -496,24 +533,31 @@ impl SearchEngine {
         if !block.docs.is_empty() {
             self.flush_block(&block, idf, avgdl, backend, global, stats)?;
         }
-        Ok(())
+        Ok(true)
     }
 
     /// Block-Max WAND document-at-a-time traversal over the index-resident
     /// block directory. Results are bit-identical to the union traversal:
-    /// evaluation computes the same `bm25_score` over the same full
-    /// term-slot layout, and every skip is gated on a sound upper bound
-    /// falling strictly below the current top-k threshold (an exact tie
-    /// can still win on doc id, so ties are always evaluated — the same
-    /// strict-`<` rule as union block-max pruning).
+    /// pivot survivors are staged into the same fixed-geometry score
+    /// blocks (same full term-slot layout, same backend arithmetic), and
+    /// every skip is gated on a sound upper bound falling strictly below
+    /// the current top-k threshold (an exact tie can still win on doc id,
+    /// so ties are always evaluated — the same strict-`<` rule as union
+    /// block-max pruning). The threshold advances only when a staged
+    /// block flushes, so relative to a document-at-a-time threshold the
+    /// lag can only make skipping *more* conservative, never unsound.
+    /// Returns `false` if the cancel token aborted at a block boundary.
+    #[allow(clippy::too_many_arguments)] // traversal state + backend + cancel
     fn search_wand(
         &self,
         term_ids: &[u32],
         idf: &[f32],
         avgdl: f32,
+        backend: &mut dyn BlockScorer,
+        cancel: Option<&CancelToken>,
         global: &mut TopK,
         stats: &mut SearchStats,
-    ) {
+    ) -> Result<bool> {
         let index = &*self.index;
         let params = self.params;
         // Upper bound of one directory block's per-document contribution
@@ -549,6 +593,7 @@ impl SearchEngine {
             })
             .collect();
 
+        let mut block = ScoreBlock::new(avgdl);
         loop {
             cursors.retain(|c| !c.exhausted());
             if cursors.is_empty() {
@@ -614,17 +659,32 @@ impl SearchEngine {
                     }
                 }
             } else if cursors[0].doc() == pivot_doc {
-                // Fully aligned: decode and score the pivot document with
-                // the exact union-path arithmetic (full-slot bm25_score).
+                // Fully aligned: decode the pivot document into the staged
+                // score block — the exact union-path row layout, scored by
+                // the same backend at the next flush.
+                let row = block.docs.len();
+                block.docs.push(pivot_doc);
                 let dl = index.doc_len(pivot_doc) as f32;
-                let mut tfs = [0.0f32; MAX_TERMS];
+                block.dl[row] = dl;
+                if dl < block.min_dl {
+                    block.min_dl = dl;
+                }
                 for c in cursors[..=p].iter_mut() {
-                    tfs[c.slot] = c.list[c.pos].tf as f32;
+                    let tf = c.list[c.pos].tf as f32;
+                    block.tf[row * MAX_TERMS + c.slot] = tf;
+                    if tf > block.max_tf[c.slot] {
+                        block.max_tf[c.slot] = tf;
+                    }
                     c.pos += 1;
                 }
-                let score = bm25_score(&tfs, idf, dl, avgdl, params);
                 stats.candidates += 1;
-                global.push(pivot_doc, score);
+                if block.is_full() {
+                    if cancel.is_some_and(CancelToken::is_cancelled) {
+                        return Ok(false);
+                    }
+                    self.flush_block(&block, idf, avgdl, backend, global, stats)?;
+                    block.reset(avgdl);
+                }
             } else {
                 // The pivot may win but trailing cursors lag behind it.
                 // Documents before the pivot are covered only by the
@@ -636,6 +696,10 @@ impl SearchEngine {
                 }
             }
         }
+        if !block.docs.is_empty() {
+            self.flush_block(&block, idf, avgdl, backend, global, stats)?;
+        }
+        Ok(true)
     }
 
     fn flush_block(
@@ -979,6 +1043,101 @@ mod tests {
             assert_eq!(pruned.stats.docs_skipped, 0);
             assert_eq!(wand.stats.matched_terms, exhaustive.stats.matched_terms);
         });
+    }
+
+    /// Backend wrapper counting `score_block` calls — the live server's
+    /// heterogeneity emulation meters exactly this.
+    struct CountingScorer {
+        inner: RustScorer,
+        calls: usize,
+    }
+
+    impl BlockScorer for CountingScorer {
+        fn score_block(
+            &mut self,
+            block: &ScoreBlock,
+            idf: &[f32],
+            avgdl: f32,
+        ) -> Result<BlockTopK> {
+            self.calls += 1;
+            self.inner.score_block(block, idf, avgdl)
+        }
+
+        fn label(&self) -> &'static str {
+            "counting"
+        }
+    }
+
+    #[test]
+    fn wand_drives_the_block_scoring_backend() {
+        // The emulated-scorer live path meters backend block calls, so the
+        // WAND traversal must route its staged candidates through the
+        // backend — with strictly fewer calls than the union traversal.
+        let corpus = Corpus::generate(&CorpusConfig {
+            num_docs: 8_000,
+            vocab_size: 4_000,
+            ..CorpusConfig::small()
+        });
+        let index = Arc::new(Index::build(&corpus));
+        let q = Query::from_terms(vec![
+            index.term(7).to_string(),
+            index.term(2_313).to_string(),
+        ]);
+        let mut staged = [0usize; 2];
+        for (i, traversal) in Traversal::all().into_iter().enumerate() {
+            let e = SearchEngine::new(index.clone(), 10).with_traversal(traversal);
+            let mut backend = CountingScorer {
+                inner: RustScorer::new(Bm25Params::default()),
+                calls: 0,
+            };
+            let r = e.search_with(&q, &mut backend).unwrap();
+            assert_eq!(
+                backend.calls, r.stats.blocks,
+                "{}: stats must count exactly the metered backend calls",
+                traversal.label()
+            );
+            assert!(backend.calls > 0, "{}: backend never driven", traversal.label());
+            staged[i] = r.stats.candidates;
+        }
+        // Traversal::all() is [Union, Wand]: the metered WAND path must do
+        // the same reduced staging work as the inline one did.
+        assert!(
+            staged[1] < staged[0],
+            "wand staged {} docs vs union {}",
+            staged[1],
+            staged[0]
+        );
+    }
+
+    #[test]
+    fn cancelled_token_aborts_both_traversals_at_block_boundaries() {
+        let corpus = Corpus::generate(&CorpusConfig {
+            num_docs: 8_000,
+            vocab_size: 4_000,
+            ..CorpusConfig::small()
+        });
+        let index = Arc::new(Index::build(&corpus));
+        // A head term alone unions to thousands of candidates, so both
+        // traversals must cross a block boundary (and its cancel poll).
+        let q = Query::from_terms(vec![index.term(0).to_string()]);
+        for traversal in Traversal::all() {
+            let e = SearchEngine::new(index.clone(), 10).with_traversal(traversal);
+            let mut backend = RustScorer::new(Bm25Params::default());
+            let token = crate::hedge::CancelToken::new();
+            let live = e
+                .search_with_cancel(&q, &mut backend, Some(&token))
+                .unwrap()
+                .unwrap_or_else(|| panic!("{}: uncancelled search aborted", traversal.label()));
+            let plain = e.search_with(&q, &mut backend).unwrap();
+            assert_same_hits(&live, &plain, traversal.label());
+            token.cancel();
+            let aborted = e.search_with_cancel(&q, &mut backend, Some(&token)).unwrap();
+            assert!(
+                aborted.is_none(),
+                "{}: cancelled duplicate must abort mid-query",
+                traversal.label()
+            );
+        }
     }
 
     #[test]

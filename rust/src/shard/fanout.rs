@@ -14,6 +14,21 @@
 //! immediately rather than corrupting run accounting. The table is
 //! engine-agnostic — the simulator stores `()` partials, the live server
 //! stores merged-top-k inputs plus worker facts.
+//!
+//! # Replica-aware slots (hedging)
+//!
+//! Under hedged serving ([`crate::hedge`]) a shard task may exist twice —
+//! primary and duplicate — but the slot is still *per doc-range shard*:
+//! whichever copy finishes **first wins** the slot. The tolerant entry
+//! points [`FanOutTable::try_start`] / [`FanOutTable::complete_first_wins`]
+//! replace the panicking ones on hedged paths: a second start records the
+//! earlier of the two dispatch times, and a second completion (a loser
+//! that escaped cancellation — live-server races only) reports
+//! [`FirstWins::Lost`] instead of corrupting accounting, so every parent
+//! still gathers exactly once and cancelled duplicates never double-count
+//! in conservation. With no duplicates in flight the tolerant calls are
+//! behaviourally identical to [`FanOutTable::start`] /
+//! [`FanOutTable::complete`].
 
 use std::collections::HashMap;
 
@@ -94,6 +109,19 @@ impl<P> FanOut<P> {
     }
 }
 
+/// Outcome of a replica-aware slot completion
+/// ([`FanOutTable::complete_first_wins`]).
+#[derive(Debug)]
+pub enum FirstWins<P> {
+    /// This completion won its slot. Carries the gathered entry when it
+    /// was the parent's last outstanding slot, exactly like
+    /// [`FanOutTable::complete`].
+    Won(Option<FanOut<P>>),
+    /// A losing duplicate: the slot was already won (or the parent has
+    /// already gathered). Nothing was recorded.
+    Lost,
+}
+
 /// Parent table: all queries whose fan-out has not yet fully gathered.
 #[derive(Debug)]
 pub struct FanOutTable<P> {
@@ -166,6 +194,73 @@ impl<P> FanOutTable<P> {
         None
     }
 
+    /// Replica-tolerant [`FanOutTable::start`]: records the *earliest*
+    /// dispatch time when both the primary and a hedged duplicate start
+    /// the same slot, and tolerates a parent that has already gathered
+    /// (a duplicate dispatched just before its cancellation landed).
+    /// Returns false when the parent is gone — the caller should treat
+    /// the task as a late loser and skip the work entirely.
+    pub fn try_start(&mut self, parent: u64, shard: usize, now_ms: f64) -> bool {
+        let Some(entry) = self.map.get_mut(&parent) else {
+            return false;
+        };
+        entry.started[shard] = Some(match entry.started[shard] {
+            Some(prev) => prev.min(now_ms),
+            None => now_ms,
+        });
+        true
+    }
+
+    /// Replica-tolerant [`FanOutTable::complete`]: the first completion
+    /// of a slot wins it ([`FirstWins::Won`], carrying the full entry at
+    /// the gather point exactly like [`FanOutTable::complete`]); a
+    /// completion for an already-won slot or an already-gathered parent
+    /// is a losing duplicate ([`FirstWins::Lost`]) and changes nothing.
+    pub fn complete_first_wins(
+        &mut self,
+        parent: u64,
+        shard: usize,
+        now_ms: f64,
+        partial: P,
+    ) -> FirstWins<P> {
+        let Some(entry) = self.map.get_mut(&parent) else {
+            return FirstWins::Lost;
+        };
+        if entry.tasks[shard].is_some() {
+            return FirstWins::Lost;
+        }
+        let started_ms = entry.started[shard].expect("task completed before start");
+        entry.tasks[shard] = Some(TaskDone {
+            started_ms,
+            completed_ms: now_ms,
+            partial,
+        });
+        entry.remaining -= 1;
+        if entry.remaining == 0 {
+            FirstWins::Won(self.map.remove(&parent))
+        } else {
+            FirstWins::Won(None)
+        }
+    }
+
+    /// Is this parent still open with shard `shard`'s slot unfilled? The
+    /// hedger's straggler test: a pending slot past its hedge delay is a
+    /// straggler.
+    pub fn is_task_pending(&self, parent: u64, shard: usize) -> bool {
+        self.map
+            .get(&parent)
+            .is_some_and(|e| e.tasks[shard].is_none())
+    }
+
+    /// Collect the still-unfilled slots of a parent into `out` (cleared
+    /// first; left empty when the parent has already gathered).
+    pub fn pending_shards_into(&self, parent: u64, out: &mut Vec<usize>) {
+        out.clear();
+        if let Some(e) = self.map.get(&parent) {
+            out.extend((0..self.shards).filter(|&s| e.tasks[s].is_none()));
+        }
+    }
+
     /// Parents still waiting on at least one shard task.
     pub fn in_flight(&self) -> usize {
         self.map.len()
@@ -228,6 +323,63 @@ mod tests {
         assert_eq!(t.in_flight(), 1);
         assert!(t.complete(1, 1, 11.0, ()).is_some());
         assert!(t.is_empty());
+    }
+
+    #[test]
+    fn first_wins_takes_the_earliest_completion_and_drops_the_loser() {
+        let mut t: FanOutTable<&'static str> = FanOutTable::new(2);
+        t.open(3, ClassId(0), 0.0);
+        // Primary starts shard 0; the hedge starts the same slot later —
+        // the recorded start is the earlier of the two.
+        assert!(t.try_start(3, 0, 10.0));
+        assert!(t.try_start(3, 0, 25.0), "duplicate start tolerated");
+        assert!(t.try_start(3, 1, 10.0));
+        // The hedge wins slot 0; the primary's later completion loses.
+        match t.complete_first_wins(3, 0, 40.0, "hedge") {
+            FirstWins::Won(None) => {}
+            other => panic!("expected a non-gathering win, got {other:?}"),
+        }
+        assert!(matches!(
+            t.complete_first_wins(3, 0, 55.0, "primary"),
+            FirstWins::Lost
+        ));
+        assert!(t.is_task_pending(3, 1) && !t.is_task_pending(3, 0));
+        let mut pending = Vec::new();
+        t.pending_shards_into(3, &mut pending);
+        assert_eq!(pending, vec![1]);
+        let FirstWins::Won(Some(done)) = t.complete_first_wins(3, 1, 60.0, "p1") else {
+            panic!("last slot must gather");
+        };
+        assert!(t.is_empty());
+        assert_eq!(done.task(0).partial, "hedge");
+        assert_eq!(done.task(0).started_ms, 10.0, "earliest start kept");
+        assert_eq!(done.e2e_ms(), 60.0);
+        // After the gather, everything about the parent is Lost/absent.
+        assert!(matches!(
+            t.complete_first_wins(3, 1, 70.0, "late"),
+            FirstWins::Lost
+        ));
+        assert!(!t.try_start(3, 0, 70.0), "gathered parent rejects starts");
+        assert!(!t.is_task_pending(3, 0));
+        t.pending_shards_into(3, &mut pending);
+        assert!(pending.is_empty());
+    }
+
+    #[test]
+    fn first_wins_without_duplicates_matches_plain_complete() {
+        let mut t: FanOutTable<u8> = FanOutTable::new(2);
+        t.open(1, ClassId(0), 0.0);
+        assert!(t.try_start(1, 0, 1.0));
+        assert!(t.try_start(1, 1, 2.0));
+        assert!(matches!(
+            t.complete_first_wins(1, 0, 5.0, 0),
+            FirstWins::Won(None)
+        ));
+        let FirstWins::Won(Some(done)) = t.complete_first_wins(1, 1, 6.0, 1) else {
+            panic!("gather expected");
+        };
+        assert_eq!(done.critical_shard(), 1);
+        assert_eq!(done.first_start_ms(), 1.0);
     }
 
     #[test]

@@ -8,7 +8,8 @@
 //! fan-out tail amplification that makes per-shard tail control (the whole
 //! subject of Hurry-up) matter per shard, not just per node.
 //!
-//! The lifecycle is **scatter → per-shard schedule → gather**:
+//! The lifecycle is **scatter → per-shard schedule → hedge → first-wins
+//! gather**:
 //!
 //! 1. **scatter** — a [`crate::loadgen::Request`] passes *all-or-nothing*
 //!    admission (every shard's policy is probed first —
@@ -21,14 +22,23 @@
 //!    with an independently selectable discipline × order × policy
 //!    (config `shards = N` / `--shards`, per-shard `[[shard]]` TOML
 //!    overrides), a partition of the big/little core set
-//!    ([`ShardPlan::partition`]) and its own backlog view — admission,
-//!    placement and Hurry-up migration all run per shard;
-//! 3. **gather** — the completion that fills the parent's last slot merges
-//!    the per-shard partial top-k ([`merge_topk`], O(k log S)) into the
-//!    final result; end-to-end latency is recorded at last-shard-merge and
-//!    the critical path is attributed to the slowest shard
-//!    ([`FanOut::critical_shard`] — the per-shard attribution histogram in
-//!    [`crate::metrics::ShardStats`]).
+//!    ([`ShardPlan::partition`] — or, replicated,
+//!    [`crate::hedge::ReplicaPlan`]) and its own backlog view —
+//!    admission, placement and Hurry-up migration all run per shard;
+//! 3. **hedge** — with `replicas > 1` ([`crate::hedge`]), a shard task
+//!    that outlives its class's observed latency quantile is re-issued
+//!    to that shard's replica slot under a token-bucket budget; the
+//!    losing copy is cancelled (dropped at dequeue, or aborted at
+//!    score-block boundaries when already running);
+//! 4. **first-wins gather** — the first completion of each slot wins it
+//!    ([`FanOutTable::complete_first_wins`]); the completion that fills
+//!    the parent's last slot merges the per-shard partial top-k
+//!    ([`merge_topk`], O(k log S)) into the final result — bit-identical
+//!    whichever replica answered, since replicas share the shard's
+//!    index. End-to-end latency is recorded at last-slot-merge and the
+//!    critical path is attributed to the slowest shard
+//!    ([`FanOut::critical_shard`] — the per-shard attribution histogram
+//!    in [`crate::metrics::ShardStats`]).
 //!
 //! Both engines drive this module with the same pieces: the simulator
 //! shard-tags its events and models each task as `1/S` of the parent's
@@ -36,12 +46,13 @@
 //! ([`ShardIndex`], [`build_shard_indexes`]) and mapper thread per shard
 //! and executes real queries. `shards = 1` bypasses the fan-out entirely
 //! and replays the unsharded seeded output bit-for-bit (anchored in
-//! `rust/tests/sched_properties.rs`).
+//! `rust/tests/sched_properties.rs`); `replicas = 1` never touches the
+//! hedged entry points and replays the plain sharded output bit-for-bit.
 
 pub mod fanout;
 pub mod merge;
 pub mod plan;
 
-pub use fanout::{FanOut, FanOutTable, TaskDone};
+pub use fanout::{FanOut, FanOutTable, FirstWins, TaskDone};
 pub use merge::merge_topk;
 pub use plan::{build_shard_indexes, ShardIndex, ShardPlan};

@@ -25,6 +25,12 @@ pub enum EventKind {
     /// shard's policy independently; the unsharded loop keeps using
     /// [`EventKind::MapperTick`] so seeded replays are untouched).
     ShardMapperTick(usize),
+    /// This parent's hedge delay elapsed (replicated sharded runs only,
+    /// `replicas > 1`): any of its shard tasks still pending is a
+    /// straggler, re-issued to the shard's replica slot if the hedge
+    /// budget allows. Unreplicated runs never schedule one, so seeded
+    /// replays are untouched.
+    HedgeTimer(usize),
 }
 
 /// A scheduled event.

@@ -11,13 +11,14 @@ use crate::config::SimConfig;
 use crate::ipc::{RequestTag, StatsRecord};
 use crate::loadgen::{ArrivalProcess, ClassId, ClassRegistry, Workload, WorkloadMix};
 use crate::mapper::{AdmissionDecision, DispatchInfo, Policy, Shedding};
-use crate::metrics::{ClassStats, LatencyHistogram, ShardStats};
+use crate::hedge::{CancelSet, HedgePolicy, ReplicaPlan};
+use crate::metrics::{ClassStats, HedgeStats, LatencyHistogram, ShardStats};
 use crate::platform::{AffinityTable, CoreId, CoreKind, EnergyMeters};
 use crate::sched::{
     AdmissionOutcome, Dispatcher, OrderKind, OrderSpec, SchedCtx, ServiceEstimates, WfqCost,
     WfqCostKind,
 };
-use crate::shard::{FanOutTable, ShardPlan};
+use crate::shard::{FanOutTable, FirstWins};
 use crate::util::Rng;
 
 /// Build one queue's order spec from the run selectors, attaching the
@@ -98,6 +99,15 @@ impl RequestRecord {
 /// (slowest) task and `migrated` is true if any task migrated. End-to-end
 /// p99 always dominates every shard's task p99 (a parent's latency is the
 /// max over its tasks, recorded over the same measured population).
+///
+/// Hedging convention: with [`SimOutput::replicas`] > 1 each shard's
+/// doc range is dealt onto R disjoint core subsets and stragglers are
+/// re-issued to a replica after a per-class latency-quantile delay —
+/// first completion wins a shard's slot, the loser is cancelled, and
+/// [`SimOutput::hedge`] accounts every duplicate's fate. `per_shard`
+/// stays S-wide (a shard's stats aggregate whichever replica won each
+/// task); cancelled duplicates never appear in any latency statistic or
+/// conservation count.
 #[derive(Clone, Debug)]
 pub struct SimOutput {
     /// End-to-end latency histogram (post-warmup admitted requests).
@@ -132,6 +142,11 @@ pub struct SimOutput {
     /// runs. Task statistics follow the same post-warmup convention as
     /// `latency`: a task is measured iff its *parent* is.
     pub per_shard: Vec<ShardStats>,
+    /// Replica sets per shard (1 = unreplicated; see the hedging
+    /// convention above).
+    pub replicas: usize,
+    /// Hedged-request accounting (`Some` iff `replicas` > 1).
+    pub hedge: Option<HedgeStats>,
     /// Completions excluded from latency/placement statistics at the start
     /// of the run (`SimConfig::warmup_requests`).
     pub warmup: usize,
@@ -588,7 +603,7 @@ impl Simulation {
                     }
                     try_dispatch!();
                 }
-                EventKind::ShardMapperTick(_) => {
+                EventKind::ShardMapperTick(_) | EventKind::HedgeTimer(_) => {
                     unreachable!("shard-tagged events never occur in an unsharded run")
                 }
             }
@@ -628,6 +643,8 @@ impl Simulation {
             order: cfg.order.label().to_string(),
             shards: 1,
             per_shard: Vec::new(),
+            replicas: 1,
+            hedge: None,
             warmup: cfg.warmup_requests,
         }
     }
@@ -647,6 +664,19 @@ impl Simulation {
     /// fixed setup cost is already split across shards, so back-to-back
     /// amortization has no analogue here and every shard dispatches
     /// request by request.
+    ///
+    /// With `SimConfig::replicas` > 1 the partition is dealt R times onto
+    /// disjoint core subsets ([`ReplicaPlan`]) and every admitted parent
+    /// arms a [`EventKind::HedgeTimer`] at its class's streaming task-
+    /// latency quantile; tasks still pending when it fires are re-issued
+    /// to the replica's slot under a global token-bucket budget. The
+    /// first completion of a shard's slot wins
+    /// ([`FanOutTable::complete_first_wins`]) and the loser is cancelled:
+    /// queued duplicates drop at dequeue via a [`CancelSet`], in-flight
+    /// ones are preempted instantly through the same generation-bump
+    /// mechanism migrations use. `replicas = 1` runs this exact loop with
+    /// every hedging branch compiled to a no-op — bit-for-bit the
+    /// pre-replica behaviour.
     fn run_workload_sharded(self, workload: &Workload) -> SimOutput {
         let cfg = &self.cfg;
         let topology = cfg.topology();
@@ -662,14 +692,20 @@ impl Simulation {
             );
         }
         let s_count = cfg.shards;
-        let plan = ShardPlan::partition(&topology, s_count);
+        let r_count = cfg.replicas;
+        // R disjoint copies of the S-way partition; slot r*S + s serves
+        // shard s on replica r. With replicas = 1 the slots ARE the
+        // shards of the unreplicated plan, core for core.
+        let plan = ReplicaPlan::partition(&topology, s_count, r_count);
+        let n_slots = plan.slots();
+        let hedging = r_count > 1;
         let est = matches!(cfg.wfq_cost, WfqCostKind::Estimated)
             .then(|| ServiceEstimates::new(registry.len()));
         let sampler = ServiceSampler::from_config(cfg);
         let mut meters = EnergyMeters::new();
 
         // Global core states (indexed by global CoreId), plus the
-        // core → (shard, local index) maps.
+        // core → (slot, local index) maps.
         let mut cores: Vec<CoreState> = topology
             .cores()
             .map(|c| CoreState {
@@ -679,64 +715,97 @@ impl Simulation {
                 last_integrated: 0.0,
             })
             .collect();
-        let mut shard_of_core = vec![0usize; cores.len()];
+        let mut slot_of_core = vec![0usize; cores.len()];
         let mut local_of_core = vec![0usize; cores.len()];
-        for s in 0..s_count {
-            for (li, &c) in plan.cores(s).iter().enumerate() {
-                shard_of_core[c.0] = s;
+        for slot in 0..n_slots {
+            for (li, &c) in plan.cores(slot).iter().enumerate() {
+                slot_of_core[c.0] = slot;
                 local_of_core[c.0] = li;
             }
         }
 
-        /// One shard's full scheduling runtime.
+        // Hedging state (replicated runs only): the straggler policy
+        // (per-class P² latency quantile + token-bucket budget), the
+        // duplicate ledger mapping a fired (parent, shard) race to its
+        // replica slot, and the outcome accounting.
+        let hedge_policy =
+            hedging.then(|| HedgePolicy::new(registry.len(), cfg.hedge_quantile, cfg.hedge_budget));
+        let mut hedge = hedging.then(|| HedgeStats::new(r_count, cfg.hedge_budget));
+        let mut hedged: std::collections::HashMap<(usize, usize), usize> =
+            std::collections::HashMap::new();
+        let mut marks_inserted = 0usize;
+        let mut pending_scratch: Vec<usize> = Vec::new();
+        let mut fired_scratch: Vec<usize> = Vec::new();
+
+        /// One slot's full scheduling runtime (a slot is one replica of
+        /// one shard; unreplicated runs have exactly S slots).
         struct ShardRt {
             aff: AffinityTable,
             policy: Box<dyn Policy>,
             dispatcher: Dispatcher<usize>,
-            /// Dispatch/noise rng stream of this shard (forked per shard
-            /// so shard counts don't perturb each other's draws).
+            /// Dispatch/noise rng stream of this slot (forked per slot
+            /// so slot counts don't perturb each other's draws).
             rng: Rng,
             tick_rng: Rng,
-            /// Stats stream buffered between this shard's mapper ticks.
+            /// Stats stream buffered between this slot's mapper ticks.
             stream: Vec<StatsRecord>,
             /// rid tag per in-flight local core.
             core_rid: Vec<Option<RequestTag>>,
             rid_seq: u64,
             depth_scratch: Vec<usize>,
             prio_scratch: Vec<usize>,
-            stats: ShardStats,
+            /// Drop-at-dequeue cancellation marks (replicated runs only).
+            cancel: Option<CancelSet>,
         }
 
-        let mut shards: Vec<ShardRt> = (0..s_count)
-            .map(|s| {
-                let local_topo = plan.local_topology(s, &topology);
-                let (disc, order, pkind) = cfg.shard_scheduling(s);
+        let mut shards: Vec<ShardRt> = (0..n_slots)
+            .map(|slot| {
+                let local_topo = plan.local_topology(slot, &topology);
+                let (disc, order, pkind) = cfg.shard_scheduling(slot);
                 let policy =
                     Shedding::wrap(pkind.build(&local_topo), cfg.shed_deadline_ms, &registry);
                 let spec = order_spec_for(order, &registry, &est);
-                let salt = (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                let salt = (slot as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                let mut dispatcher: Dispatcher<usize> =
+                    Dispatcher::new(disc.build_ordered(local_topo.num_cores(), &spec));
+                let cancel = hedging.then(CancelSet::new);
+                if let Some(set) = &cancel {
+                    dispatcher.set_cancellation(set.clone(), |w: &usize| *w as u64);
+                }
                 ShardRt {
                     aff: AffinityTable::round_robin(local_topo.clone()),
                     policy,
-                    dispatcher: Dispatcher::new(
-                        disc.build_ordered(local_topo.num_cores(), &spec),
-                    ),
+                    dispatcher,
                     rng: Rng::new(cfg.seed ^ 0xD15_BA7C ^ salt),
                     tick_rng: Rng::new(cfg.seed ^ 0x71C4_11FE ^ salt),
                     stream: Vec::new(),
                     core_rid: vec![None; local_topo.num_cores()],
-                    rid_seq: (s as u64) << 48,
+                    rid_seq: (slot as u64) << 48,
                     depth_scratch: Vec::new(),
                     prio_scratch: Vec::new(),
-                    stats: ShardStats::new(
-                        s,
-                        local_topo.label(),
-                        disc.label(),
-                        order.label(),
-                        pkind.label(),
-                        &registry,
-                    ),
+                    cancel,
                 }
+            })
+            .collect();
+
+        // Reported task stats stay S-wide whatever R is: a shard's stats
+        // aggregate whichever replica won each task, labelled from the
+        // primary slot's stack (replica stacks share the primary's
+        // configuration — slot r*S + s resolves the same overrides as
+        // slot s only when the config declares them; labels come from
+        // the shard index the figures report on).
+        let mut shard_stats: Vec<ShardStats> = (0..s_count)
+            .map(|s| {
+                let local_topo = plan.local_topology(s, &topology);
+                let (disc, order, pkind) = cfg.shard_scheduling(s);
+                ShardStats::new(
+                    s,
+                    local_topo.label(),
+                    disc.label(),
+                    order.label(),
+                    pkind.label(),
+                    &registry,
+                )
             })
             .collect();
 
@@ -806,11 +875,25 @@ impl Simulation {
                         break;
                     };
                     let g = plan.cores(s_idx)[local.0];
+                    let shard = plan.shard_of(s_idx);
+                    // Replicated runs record the start through the
+                    // first-wins table *before* committing a core: a
+                    // parent that already gathered (its other copy won
+                    // moments before this duplicate's cancel mark could
+                    // land) is a late loser — drop the task untouched.
+                    if hedging && !fanout.try_start(widx as u64, shard, now) {
+                        if let Some(hs) = hedge.as_mut() {
+                            hs.late_losers += 1;
+                        }
+                        continue;
+                    }
                     let req = &workload.requests[widx];
                     // A shard task is 1/S of the parent's work: each shard
                     // scores 1/S of the corpus (postings lengths scale with
-                    // the doc range); noise is drawn per task, which is what
-                    // makes the end-to-end latency a max over S draws.
+                    // the doc range — a replica scores the same range, so
+                    // replication never changes a task's size); noise is
+                    // drawn per task, which is what makes the end-to-end
+                    // latency a max over S draws.
                     let mut demand = sampler.sample(req.keywords, &mut srt.rng);
                     demand.work_units /= s_count as f64;
                     let gen = {
@@ -834,7 +917,9 @@ impl Simulation {
                     let kind = cores[g.0].kind;
                     let finish = now + demand.work_units / demand.speed_on(kind);
                     events.push(finish, EventKind::Completion { core: g, gen });
-                    fanout.start(widx as u64, s_idx, now);
+                    if !hedging {
+                        fanout.start(widx as u64, shard, now);
+                    }
                     let tag = RequestTag::from_seq(srt.rid_seq);
                     srt.rid_seq += 1;
                     srt.core_rid[local.0] = Some(tag);
@@ -860,11 +945,12 @@ impl Simulation {
                         arrive_ms: req.arrive_ms,
                     };
                     // All-or-nothing fan-out admission: probe every
-                    // shard's policy against its own backlog first; a
-                    // refusal anywhere sheds the parent before anything
-                    // is enqueued anywhere.
+                    // *primary* slot's policy against its own backlog
+                    // first; a refusal anywhere sheds the parent before
+                    // anything is enqueued anywhere. Replica slots never
+                    // gate admission — they only ever see fired hedges.
                     let mut refused = false;
-                    for srt in shards.iter_mut() {
+                    for srt in shards.iter_mut().take(s_count) {
                         if let AdmissionDecision::Shed { .. } = srt.dispatcher.admit_probe(
                             info,
                             srt.policy.as_mut(),
@@ -881,12 +967,12 @@ impl Simulation {
                         per_class[req.class.idx()].record_shed();
                         // Per-shard conservation: every shard accounts the
                         // parent, as a shed task on all S of them.
-                        for srt in shards.iter_mut() {
-                            srt.stats.record_shed(req.class);
+                        for st in shard_stats.iter_mut() {
+                            st.record_shed(req.class);
                         }
                     } else {
                         fanout.open(widx as u64, req.class, req.arrive_ms);
-                        for srt in shards.iter_mut() {
+                        for srt in shards.iter_mut().take(s_count) {
                             srt.dispatcher.enqueue_admitted(
                                 widx,
                                 info,
@@ -895,6 +981,18 @@ impl Simulation {
                                 &mut srt.rng,
                                 now,
                             );
+                        }
+                        // Arm the straggler timer at the class's current
+                        // task-latency quantile. Armed for every admitted
+                        // parent whenever replicas > 1 — budget is checked
+                        // at *fire* time, so a zero-budget control run
+                        // pushes the identical event sequence.
+                        if let (Some(hp), Some(hs)) = (&hedge_policy, hedge.as_mut()) {
+                            hs.primary_tasks += s_count;
+                            for _ in 0..s_count {
+                                hp.task_offered();
+                            }
+                            events.push(now + hp.delay_ms(req.class), EventKind::HedgeTimer(widx));
                         }
                         for s in 0..s_count {
                             try_dispatch_shard!(s);
@@ -912,13 +1010,14 @@ impl Simulation {
                         core.gen += 1;
                         (run, core.kind)
                     };
-                    let s = shard_of_core[g.0];
+                    let slot = slot_of_core[g.0];
+                    let shard = plan.shard_of(slot);
                     let local = local_of_core[g.0];
                     let req = &workload.requests[run.widx];
-                    // End stats record for this shard task.
-                    if let Some(tag) = shards[s].core_rid[local].take() {
-                        let tid = shards[s].aff.thread_on(CoreId(local));
-                        shards[s].stream.push(StatsRecord {
+                    // End stats record for this slot's task.
+                    if let Some(tag) = shards[slot].core_rid[local].take() {
+                        let tid = shards[slot].aff.thread_on(CoreId(local));
+                        shards[slot].stream.push(StatsRecord {
                             tid,
                             rid: tag,
                             ts_ms: now as u64,
@@ -928,17 +1027,104 @@ impl Simulation {
                     if let Some(est) = &est {
                         est.observe(req.class, now - run.started_ms);
                     }
-                    // Fan-in: the last task performs the gather.
-                    if let Some(done) = fanout.complete(
-                        run.widx as u64,
-                        s,
-                        now,
-                        TaskMark {
-                            first_kind: run.first_kind,
-                            final_kind: kind,
-                            migrated: run.migrated,
-                        },
-                    ) {
+                    let mark = TaskMark {
+                        first_kind: run.first_kind,
+                        final_kind: kind,
+                        migrated: run.migrated,
+                    };
+                    // Fan-in: the last task performs the gather. Replicated
+                    // runs go through the first-wins table — this completion
+                    // wins its shard's slot (losers never get here: a
+                    // preempted copy's event is stale, a queue-cancelled
+                    // copy never dispatches) and the losing duplicate, if
+                    // one was fired, is cancelled wherever it currently is.
+                    let mut freed_slot: Option<usize> = None;
+                    let gathered = if hedging {
+                        match fanout.complete_first_wins(run.widx as u64, shard, now, mark) {
+                            FirstWins::Won(done) => {
+                                // Feed the straggler policy the winner's
+                                // task latency (arrival → completion, the
+                                // span the timer is armed over).
+                                if let Some(hp) = &hedge_policy {
+                                    hp.observe(req.class, now - req.arrive_ms);
+                                }
+                                if let Some(dup_slot) = hedged.remove(&(run.widx, shard)) {
+                                    let hs = hedge.as_mut().expect("hedging implies stats");
+                                    let loser_slot = if slot == dup_slot {
+                                        hs.hedge_wins += 1;
+                                        shard // the duplicate won; cancel the primary
+                                    } else {
+                                        dup_slot
+                                    };
+                                    // Find the losing copy on the loser
+                                    // slot's cores (a slot runs a parent's
+                                    // task on at most one core).
+                                    let running_on = plan
+                                        .cores(loser_slot)
+                                        .iter()
+                                        .position(|gc| {
+                                            cores[gc.0]
+                                                .running
+                                                .as_ref()
+                                                .is_some_and(|r| r.widx == run.widx)
+                                        });
+                                    if let Some(li) = running_on {
+                                        // In-flight: instant preempt —
+                                        // integrate energy up to now, bump
+                                        // the generation so the pending
+                                        // completion event goes stale, and
+                                        // reclaim the core.
+                                        let gc = plan.cores(loser_slot)[li];
+                                        integrate(&mut cores[gc.0], &mut meters, now, &cfg.power);
+                                        let core = &mut cores[gc.0];
+                                        let dead =
+                                            core.running.take().expect("scanned as running");
+                                        core.gen += 1;
+                                        hs.cancelled_work_ms += now - dead.started_ms;
+                                        if slot != dup_slot {
+                                            hs.cancelled_inflight += 1;
+                                        }
+                                        // Close the loser's stats record so
+                                        // its mapper sees the thread go idle.
+                                        let lrt = &mut shards[loser_slot];
+                                        if let Some(tag) = lrt.core_rid[li].take() {
+                                            lrt.stream.push(StatsRecord {
+                                                tid: lrt.aff.thread_on(CoreId(li)),
+                                                rid: tag,
+                                                ts_ms: now as u64,
+                                                class: Some(req.class),
+                                            });
+                                        }
+                                        freed_slot = Some(loser_slot);
+                                    } else {
+                                        // Still queued: mark for a
+                                        // consume-once drop at dequeue.
+                                        shards[loser_slot]
+                                            .cancel
+                                            .as_ref()
+                                            .expect("hedging registers cancel sets")
+                                            .cancel(run.widx as u64);
+                                        marks_inserted += 1;
+                                        if slot != dup_slot {
+                                            hs.cancelled_queued += 1;
+                                        }
+                                    }
+                                }
+                                done
+                            }
+                            FirstWins::Lost => {
+                                // Defensive: with instant preemption and
+                                // drop-at-dequeue a loser never completes.
+                                if let Some(hs) = hedge.as_mut() {
+                                    hs.late_losers += 1;
+                                }
+                                None
+                            }
+                        }
+                    } else {
+                        fanout.complete(run.widx as u64, shard, now, mark)
+                    };
+                    if let Some(done) = gathered {
                         let critical = done.critical_shard();
                         let crit_task = done.task(critical);
                         let record = RequestRecord {
@@ -961,7 +1147,7 @@ impl Simulation {
                             measured,
                         );
                         for (sh, task) in done.tasks() {
-                            shards[sh].stats.record_task(
+                            shard_stats[sh].record_task(
                                 req.class,
                                 task.completed_ms - req.arrive_ms,
                                 task.started_ms - req.arrive_ms,
@@ -973,7 +1159,12 @@ impl Simulation {
                         completed += 1;
                         last_completion_ms = now;
                     }
-                    try_dispatch_shard!(s);
+                    try_dispatch_shard!(slot);
+                    // An in-flight cancellation reclaimed a core on the
+                    // loser's slot — refill it.
+                    if let Some(ls) = freed_slot {
+                        try_dispatch_shard!(ls);
+                    }
                 }
                 EventKind::ShardMapperTick(s) => {
                     let migs = {
@@ -1025,6 +1216,53 @@ impl Simulation {
                     }
                     try_dispatch_shard!(s);
                 }
+                EventKind::HedgeTimer(widx) => {
+                    let (Some(hp), Some(hs)) = (&hedge_policy, hedge.as_mut()) else {
+                        unreachable!("hedge timers are only armed when replicas > 1")
+                    };
+                    // Any shard slot this parent is still waiting on is a
+                    // straggler: re-issue it to the parent's replica if
+                    // the global budget allows. A parent that already
+                    // gathered leaves the scratch empty — the timer is a
+                    // no-op for the fast majority.
+                    fanout.pending_shards_into(widx as u64, &mut pending_scratch);
+                    let req = &workload.requests[widx];
+                    let info = DispatchInfo {
+                        keywords: req.keywords,
+                        class: req.class,
+                        priority: priorities[req.class.idx()],
+                        arrive_ms: req.arrive_ms,
+                    };
+                    fired_scratch.clear();
+                    for &shard in &pending_scratch {
+                        if hedged.contains_key(&(widx, shard)) {
+                            continue; // already hedged (timers fire once)
+                        }
+                        if !hp.try_fire() {
+                            hs.budget_denied += 1;
+                            continue;
+                        }
+                        hs.hedges_fired += 1;
+                        // Spread duplicates across replicas by parent
+                        // index; with R = 2 this is always replica 1.
+                        let replica = 1 + (widx % (r_count - 1));
+                        let dup_slot = replica * s_count + shard;
+                        hedged.insert((widx, shard), dup_slot);
+                        let srt = &mut shards[dup_slot];
+                        srt.dispatcher.enqueue_admitted(
+                            widx,
+                            info,
+                            srt.policy.as_mut(),
+                            &srt.aff,
+                            &mut srt.rng,
+                            now,
+                        );
+                        fired_scratch.push(dup_slot);
+                    }
+                    for &fired in &fired_scratch {
+                        try_dispatch_shard!(fired);
+                    }
+                }
                 EventKind::MapperTick => {
                     unreachable!("untagged mapper ticks never occur in a sharded run")
                 }
@@ -1041,22 +1279,33 @@ impl Simulation {
 
         debug_assert_eq!(completed + shed, workload.len(), "parents lost");
         debug_assert!(fanout.is_empty(), "parents stranded mid-gather");
+        debug_assert!(hedged.is_empty(), "unresolved hedge races");
+        let mut marks_consumed = 0usize;
         for srt in &shards {
             debug_assert_eq!(srt.dispatcher.queued(), 0, "tasks stranded in queues");
-            debug_assert_eq!(
-                srt.stats.offered(),
-                workload.len(),
-                "per-shard conservation"
+            debug_assert!(
+                srt.cancel.as_ref().is_none_or(CancelSet::is_empty),
+                "cancel marks outstanding at end of run"
             );
+            marks_consumed += srt.dispatcher.cancelled_dropped();
+        }
+        debug_assert_eq!(
+            marks_consumed, marks_inserted,
+            "every queue-cancel mark must drop exactly one duplicate"
+        );
+        for st in &shard_stats {
+            debug_assert_eq!(st.offered(), workload.len(), "per-shard conservation");
         }
         debug_assert_eq!(
             per_class.iter().map(ClassStats::offered).sum::<usize>(),
             workload.len(),
             "per-class conservation"
         );
+        if let Some(hs) = &hedge {
+            debug_assert!(hs.is_balanced(), "hedge accounting unbalanced: {hs:?}");
+        }
 
         let policy_name = shards[0].policy.name();
-        let per_shard: Vec<ShardStats> = shards.into_iter().map(|srt| srt.stats).collect();
         SimOutput {
             latency,
             per_request,
@@ -1070,7 +1319,9 @@ impl Simulation {
             discipline: cfg.discipline.label().to_string(),
             order: cfg.order.label().to_string(),
             shards: s_count,
-            per_shard,
+            per_shard: shard_stats,
+            replicas: r_count,
+            hedge,
             warmup: cfg.warmup_requests,
         }
     }
@@ -1716,6 +1967,136 @@ mod tests {
         assert_eq!(out.per_shard[1].discipline, "per_core");
         assert_eq!(out.per_shard[1].order, "wfq");
         assert_eq!(out.per_shard[1].policy, "queue-aware");
+    }
+
+    /// The anchor for the replica refactor: `replicas = 1` must replay the
+    /// pre-replica sharded loop bit for bit — whatever the hedge knobs say,
+    /// since no timer is ever armed and no first-wins branch is taken.
+    #[test]
+    fn replicas_1_replays_pr6_seeded_output() {
+        let mk = || {
+            base(PolicyKind::HurryUp {
+                sampling_ms: 25.0,
+                threshold_ms: 50.0,
+            })
+            .with_qps(18.0)
+            .with_requests(900)
+            .with_shards(2)
+        };
+        let plain = Simulation::new(mk()).run();
+        let knobs = Simulation::new(
+            mk()
+                .with_replicas(1)
+                .with_hedge_quantile(0.5)
+                .with_hedge_budget(1.0),
+        )
+        .run();
+        assert_eq!(plain.replicas, 1);
+        assert!(plain.hedge.is_none(), "unreplicated runs report no hedging");
+        assert!(knobs.hedge.is_none());
+        assert_eq!(plain.completed, knobs.completed);
+        assert_eq!(plain.duration_ms, knobs.duration_ms);
+        assert_eq!(plain.migrations, knobs.migrations);
+        assert_eq!(plain.per_request.len(), knobs.per_request.len());
+        for (x, y) in plain.per_request.iter().zip(&knobs.per_request) {
+            assert_eq!(x.started_ms, y.started_ms);
+            assert_eq!(x.completed_ms, y.completed_ms);
+            assert_eq!(x.final_kind, y.final_kind);
+        }
+        assert!((plain.energy.total_j() - knobs.energy.total_j()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hedged_run_conserves_and_balances() {
+        let out = Simulation::new(
+            base(PolicyKind::HurryUp {
+                sampling_ms: 25.0,
+                threshold_ms: 50.0,
+            })
+            .with_qps(15.0)
+            .with_requests(1_200)
+            .with_shards(2)
+            .with_replicas(2),
+        )
+        .run();
+        assert_eq!(out.replicas, 2);
+        assert_eq!(out.shards, 2, "reported shards stay S-wide under replication");
+        assert_eq!(out.per_shard.len(), 2);
+        // Conservation with hedging on: every parent completes exactly
+        // once, end-to-end and on every shard — duplicates never
+        // double-count.
+        assert_eq!(out.completed + out.shed, 1_200);
+        assert_eq!(out.per_request.len(), out.completed);
+        for s in &out.per_shard {
+            assert_eq!(s.offered(), 1_200, "shard {}", s.shard);
+            assert_eq!(s.completed(), out.completed, "shard {}", s.shard);
+        }
+        let hs = out.hedge.as_ref().expect("replicated run reports hedging");
+        assert_eq!(hs.replicas, 2);
+        assert_eq!(hs.primary_tasks, 2 * out.completed);
+        assert!(hs.hedges_fired > 0, "p95 timers at 15 qps must fire: {hs:?}");
+        assert!(hs.is_balanced(), "{hs:?}");
+        assert_eq!(hs.late_losers, 0, "instant cancellation leaves no late losers");
+        // The token bucket caps the hedge rate at the configured budget
+        // (plus the burst allowance, negligible at this scale).
+        assert!(
+            hs.hedge_rate() <= hs.budget + 11.0 / hs.primary_tasks as f64,
+            "hedge rate {} over budget {}",
+            hs.hedge_rate(),
+            hs.budget
+        );
+        // Every fired duplicate resolved: won, or was cancelled.
+        assert_eq!(hs.hedge_wins + hs.cancelled(), hs.hedges_fired);
+        if hs.cancelled_inflight > 0 {
+            assert!(hs.cancelled_work_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn hedged_runs_replay_deterministically() {
+        let mk = || {
+            base(PolicyKind::HurryUp {
+                sampling_ms: 25.0,
+                threshold_ms: 50.0,
+            })
+            .with_qps(15.0)
+            .with_requests(700)
+            .with_shards(2)
+            .with_replicas(2)
+        };
+        let a = Simulation::new(mk()).run();
+        let b = Simulation::new(mk()).run();
+        assert_eq!(a.duration_ms, b.duration_ms);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.hedge, b.hedge, "hedge accounting replays");
+        for (x, y) in a.per_request.iter().zip(&b.per_request) {
+            assert_eq!(x.started_ms, y.started_ms);
+            assert_eq!(x.completed_ms, y.completed_ms);
+        }
+    }
+
+    /// The ablation's control arm: replicas dealt, timers armed, but a
+    /// zero budget means no duplicate is ever issued — the run degenerates
+    /// to the primary slots doing all the work.
+    #[test]
+    fn zero_hedge_budget_never_fires() {
+        let out = Simulation::new(
+            base(PolicyKind::HurryUp {
+                sampling_ms: 25.0,
+                threshold_ms: 50.0,
+            })
+            .with_qps(15.0)
+            .with_requests(700)
+            .with_shards(2)
+            .with_replicas(2)
+            .with_hedge_budget(0.0),
+        )
+        .run();
+        assert_eq!(out.completed + out.shed, 700);
+        let hs = out.hedge.as_ref().expect("replicated run reports hedging");
+        assert_eq!(hs.hedges_fired, 0);
+        assert!(hs.budget_denied > 0, "stragglers exist but the bucket is dry");
+        assert_eq!(hs.hedge_wins + hs.cancelled() + hs.late_losers, 0);
     }
 
     #[test]

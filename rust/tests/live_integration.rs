@@ -341,6 +341,74 @@ fn sharded_live_scatter_gathers_every_request() {
 }
 
 #[test]
+fn hedged_live_first_wins_and_cancels_losers() {
+    // The full hedging stack on real threads: replica slots (S=2 × R=2
+    // splits each shard's 1B2L subset into a 1B1L primary and a 1L
+    // backup), a hedger thread arming per-parent timers off streaming
+    // latency quantiles, first-wins gather, and loser cancellation
+    // through the dispatchers (queued dups dropped at dequeue) and the
+    // scorer (in-flight dups aborted at block boundaries).
+    let corpus = CorpusConfig {
+        num_docs: 800,
+        vocab_size: 2_000,
+        ..CorpusConfig::small()
+    }
+    .build();
+    // Aggressive knobs so hedges certainly fire within the short run:
+    // deliberate backlog (offered faster than the halved slots drain),
+    // hedge at the observed *median* task latency, unbounded budget.
+    let cfg = LiveConfig {
+        shards: 2,
+        replicas: 2,
+        hedge_quantile: 0.5,
+        hedge_budget: 1.0,
+        qps: 250.0,
+        num_requests: 100,
+        ..base_cfg()
+    };
+    let report = LiveServer::from_corpus(cfg, &corpus).run().unwrap();
+    assert_eq!(report.shards, 2, "reported shards stay S-wide");
+    assert_eq!(report.replicas, 2);
+    assert_eq!(report.per_shard.len(), 2);
+    // Conservation with hedging on: every parent completes exactly once,
+    // end-to-end and on every shard — duplicates never double-count.
+    assert_eq!(report.per_request.len() + report.shed, 100, "conservation");
+    let parents = report.per_request.len();
+    for s in &report.per_shard {
+        assert_eq!(s.offered(), 100, "shard {}", s.shard);
+        assert_eq!(s.completed(), parents, "shard {}", s.shard);
+    }
+    let hs = report.hedge.as_ref().expect("R=2 reports a hedge ledger");
+    assert_eq!(hs.replicas, 2);
+    assert_eq!(hs.primary_tasks, 2 * parents, "S tasks per admitted parent");
+    assert!(
+        hs.hedges_fired > 0,
+        "median-delay timers under backlog must fire: {hs:?}"
+    );
+    // Every fired duplicate resolved exactly one way: won the race, was
+    // dropped from a queue, was aborted mid-scoring, or lost late.
+    assert!(hs.is_balanced(), "hedge ledger unbalanced: {hs:?}");
+    assert!(
+        hs.hedge_rate() <= hs.budget + 11.0 / hs.primary_tasks.max(1) as f64,
+        "token bucket breached: {hs:?}"
+    );
+    // Cancelled in-flight work implies measured abandoned milliseconds.
+    if hs.cancelled_inflight > 0 {
+        assert!(hs.cancelled_work_ms > 0.0, "{hs:?}");
+    }
+    // The gather still produced real merged results for most queries.
+    let with_hits = report
+        .per_request
+        .iter()
+        .filter(|r| r.top_hit.is_some())
+        .count();
+    assert!(with_hits > 60, "only {with_hits}/{parents} gathers had hits");
+    for r in &report.per_request {
+        assert!(r.completed_ms >= r.started_ms);
+    }
+}
+
+#[test]
 fn sharded_live_sheds_all_or_nothing() {
     // A negative deadline refuses every parent at the fan-out door: no
     // shard ever sees a task, and per-shard conservation still holds
