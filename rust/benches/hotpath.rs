@@ -18,6 +18,9 @@
 //!   engine_query_wand  Block-Max WAND on the identical index and queries
 //!   histogram_record   latency histogram insert + percentile
 //!   topk_push          bounded top-k insertion
+//!   cache_probe_hit    sharded ResultCache get on resident keys
+//!   cache_probe_miss   the same probe walk on absent keys
+//!   zipf_draw          QueryPopulation rank draw + entry lookup
 //!
 //! Flags (after `--`):
 //!   --json           emit one machine-readable JSON object on stdout
@@ -598,6 +601,87 @@ fn main() {
             black_box(tk.into_sorted());
         });
         r.add("topk_push", "candidates", 4096.0, iters, secs);
+    }
+
+    // --- result cache: sharded probe cost, hit vs miss ---
+    // The admission-side tax every cacheable request pays (cache PR): a
+    // hit is key-hash + segment lock + LRU bump + value clone; a miss is
+    // the same walk minus the bump and clone. 4 096 resident rank keys in
+    // an 8 192-entry cache (per-segment capacity 1 024 ≫ the ~512-key
+    // expected segment load, so nothing evicts and every resident probe
+    // must hit) with the sim engine's `()` value, isolating cache
+    // overhead from result-payload sizes.
+    {
+        use hurryup::cache::{CacheKey, ResultCache};
+        let cache: ResultCache<()> = ResultCache::new(8_192, 8, f64::INFINITY);
+        let resident: Vec<CacheKey> =
+            (0..4_096u32).map(|r| CacheKey::from_rank(0, r)).collect();
+        for (i, k) in resident.iter().enumerate() {
+            cache.insert(k.clone(), (), i as f64);
+        }
+        let mut i = 0usize;
+        let (iters, secs) = measure(b(300), || {
+            let hit = cache.get(black_box(&resident[i % resident.len()]), 1e6);
+            assert!(hit.is_some(), "resident key must hit");
+            i += 1;
+        });
+        r.add_work(
+            "cache_probe_hit",
+            "probes",
+            1.0,
+            iters,
+            secs,
+            &[("resident", 4_096), ("segments", 8)],
+        );
+
+        let absent: Vec<CacheKey> =
+            (0..4_096u32).map(|r| CacheKey::from_rank(1, r)).collect();
+        let mut j = 0usize;
+        let (iters, secs) = measure(b(300), || {
+            let miss = cache.get(black_box(&absent[j % absent.len()]), 1e6);
+            assert!(miss.is_none(), "absent key must miss");
+            j += 1;
+        });
+        r.add_work(
+            "cache_probe_miss",
+            "probes",
+            1.0,
+            iters,
+            secs,
+            &[("resident", 4_096), ("segments", 8)],
+        );
+    }
+
+    // --- Zipf popularity draw: the per-request loadgen cost ---
+    // One rank draw + entry lookup against a 100k-query population at the
+    // caching ablation's strong skew (s = 1.2). The work counter records
+    // how many of 10 000 seeded draws land in the top-100 head — the
+    // head-heavy signature that makes the result cache worth probing —
+    // deterministic for the committed JSON trajectory.
+    {
+        use hurryup::loadgen::{QueryGen, QueryPopulation};
+        let qgen = QueryGen::new(KeywordMix::Paper, 0);
+        let mut build_rng = Rng::new(0xCAC4E);
+        let pop = QueryPopulation::generate(100_000, 1.2, &qgen, false, &mut build_rng);
+        let mut draw_rng = Rng::new(51);
+        let (iters, secs) = measure(b(300), || {
+            black_box(pop.draw(&mut draw_rng));
+        });
+        let mut count_rng = Rng::new(51);
+        let mut head = 0u64;
+        for _ in 0..10_000 {
+            if pop.draw(&mut count_rng).0 < 100 {
+                head += 1;
+            }
+        }
+        r.add_work(
+            "zipf_draw",
+            "draws",
+            1.0,
+            iters,
+            secs,
+            &[("population", 100_000), ("head100_per_10k", head)],
+        );
     }
 
     r.finish(budget_override);

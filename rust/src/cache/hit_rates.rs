@@ -1,0 +1,92 @@
+//! Per-class cache hit-rate tracking for admission control.
+//!
+//! [`crate::mapper::Shedding`] projects queueing delay as `ahead × est /
+//! servers` — but when a class's traffic mostly hits the cache, most of
+//! its requests never queue at all, and that projection over-sheds.
+//! `HitRates` gives shedding the observed per-class hit probability so
+//! it can discount: `h × HIT_COST_MS + (1 − h) × projected`.
+//!
+//! The tracker is a clone-shared bundle of atomics (one probe/hit pair
+//! per class), written by the engines at every cache probe and read by
+//! the policy at every admission decision — lock-free on both sides, so
+//! the live server's loadgen thread and worker threads never contend.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::loadgen::ClassId;
+
+/// Shared per-class (probes, hits) counters. Cloning is cheap and all
+/// clones observe the same counters.
+#[derive(Clone)]
+pub struct HitRates {
+    per_class: Arc<Vec<(AtomicU64, AtomicU64)>>,
+}
+
+impl HitRates {
+    /// One slot per class in the registry. Out-of-range classes are
+    /// ignored on record and read as rate 0.
+    pub fn new(num_classes: usize) -> Self {
+        let per_class = (0..num_classes.max(1))
+            .map(|_| (AtomicU64::new(0), AtomicU64::new(0)))
+            .collect();
+        HitRates { per_class: Arc::new(per_class) }
+    }
+
+    /// Record one cache probe outcome for `class`.
+    pub fn record(&self, class: ClassId, hit: bool) {
+        if let Some((probes, hits)) = self.per_class.get(class.idx()) {
+            probes.fetch_add(1, Ordering::Relaxed);
+            if hit {
+                hits.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Observed hit probability for `class` in [0, 1]; 0 before any
+    /// probe (so an attached-but-cold tracker leaves the projection
+    /// arithmetic untouched).
+    pub fn rate(&self, class: ClassId) -> f64 {
+        match self.per_class.get(class.idx()) {
+            Some((probes, hits)) => {
+                let p = probes.load(Ordering::Relaxed);
+                if p == 0 {
+                    0.0
+                } else {
+                    hits.load(Ordering::Relaxed) as f64 / p as f64
+                }
+            }
+            None => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_is_zero_before_probes_and_tracks_after() {
+        let hr = HitRates::new(2);
+        let c0 = ClassId(0);
+        let c1 = ClassId(1);
+        assert_eq!(hr.rate(c0), 0.0);
+        hr.record(c0, true);
+        hr.record(c0, true);
+        hr.record(c0, false);
+        hr.record(c1, false);
+        assert!((hr.rate(c0) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(hr.rate(c1), 0.0);
+    }
+
+    #[test]
+    fn clones_share_counters_and_out_of_range_is_safe() {
+        let hr = HitRates::new(1);
+        let other = hr.clone();
+        other.record(ClassId(0), true);
+        assert_eq!(hr.rate(ClassId(0)), 1.0);
+        // Out-of-range class: no panic, rate 0.
+        hr.record(ClassId(9), true);
+        assert_eq!(hr.rate(ClassId(9)), 0.0);
+    }
+}

@@ -1,0 +1,88 @@
+//! Canonical cache identity for a query.
+//!
+//! Two requests must share a cache entry exactly when the engine would
+//! compute the same result for both. The engine scores the *resolved,
+//! deduplicated* term-id set (`SearchEngine::search_with` sorts and
+//! dedups before scoring), so the canonical key is that set — sorted and
+//! deduplicated here too, making `[3, 1, 3]` and `[1, 3]` the same entry.
+//!
+//! Sim-only streams (`with_terms = false`) carry no concrete terms; for
+//! those the generator's population rank ([`crate::loadgen::Request::query_id`])
+//! identifies the query instead. Uniform-popularity sim traffic has
+//! neither — such requests are uncacheable by construction, which is
+//! what keeps the all-default configuration on the exact pre-cache path.
+
+/// Canonicalized query identity. Keys are exact (no lossy hashing): a
+/// hit can never return another query's results.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum CacheKey {
+    /// Sorted, deduplicated resolved term ids — the canonical form the
+    /// engine scores. Preferred whenever the request carries terms.
+    Terms(Box<[u32]>),
+    /// Population rank within a class's fixed query population, for
+    /// term-less sim streams under a popularity model.
+    Rank { class: u16, rank: u32 },
+}
+
+impl CacheKey {
+    /// Canonicalize a term list: sort + dedup. Returns `None` for an
+    /// empty list (an empty query matches nothing; caching it would just
+    /// occupy a slot).
+    pub fn from_terms(terms: &[u32]) -> Option<CacheKey> {
+        if terms.is_empty() {
+            return None;
+        }
+        let mut t: Vec<u32> = terms.to_vec();
+        t.sort_unstable();
+        t.dedup();
+        Some(CacheKey::Terms(t.into_boxed_slice()))
+    }
+
+    /// Key a term-less request by its population rank within its class.
+    pub fn from_rank(class: usize, rank: u32) -> CacheKey {
+        CacheKey::Rank { class: class as u16, rank }
+    }
+
+    /// The key for a request, by precedence: concrete terms if present,
+    /// else the population rank, else `None` (uncacheable).
+    pub fn for_request(terms: &[u32], class: usize, query_id: Option<u32>) -> Option<CacheKey> {
+        if let Some(k) = CacheKey::from_terms(terms) {
+            return Some(k);
+        }
+        query_id.map(|rank| CacheKey::from_rank(class, rank))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn terms_canonicalize_order_and_duplicates() {
+        let a = CacheKey::from_terms(&[3, 1, 3, 2]).unwrap();
+        let b = CacheKey::from_terms(&[2, 3, 1]).unwrap();
+        assert_eq!(a, b);
+        match &a {
+            CacheKey::Terms(t) => assert_eq!(&**t, &[1, 2, 3]),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn empty_terms_are_uncacheable() {
+        assert!(CacheKey::from_terms(&[]).is_none());
+        assert!(CacheKey::for_request(&[], 0, None).is_none());
+    }
+
+    #[test]
+    fn precedence_terms_then_rank() {
+        // Terms win even when a query_id is present.
+        let k = CacheKey::for_request(&[5, 4], 1, Some(7)).unwrap();
+        assert!(matches!(k, CacheKey::Terms(_)));
+        // No terms: fall back to the population rank, class-scoped.
+        let r0 = CacheKey::for_request(&[], 0, Some(7)).unwrap();
+        let r1 = CacheKey::for_request(&[], 1, Some(7)).unwrap();
+        assert_eq!(r0, CacheKey::Rank { class: 0, rank: 7 });
+        assert_ne!(r0, r1);
+    }
+}

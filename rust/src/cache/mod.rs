@@ -1,0 +1,53 @@
+//! Query-result caching — the serving stack's exploitation of repeated
+//! traffic.
+//!
+//! Real search traffic is heavily repeated (Zipf over a query population,
+//! see [`crate::loadgen::Popularity`]), which makes the full
+//! scatter-gather/hedge fan-out wasted work for the popular head. The
+//! cache sits at **admission**: the typed request lifecycle becomes
+//! generate → classify → **cache-probe** → admit → scatter → per-shard
+//! schedule → gather → **populate**. A probe happens only *after* the
+//! admission decision (so shedding still rules on every request and
+//! conservation stays `offered == hits + miss-completions + shed`); a hit
+//! bypasses the entire fan-out and completes on the dispatching core at a
+//! small fixed cost ([`HIT_COST_MS`]); a miss proceeds through the normal
+//! path and populates the cache at completion/gather time — hedged
+//! first-wins gathers populate exactly once, because only the winning
+//! task's completion performs the gather.
+//!
+//! Pieces:
+//!
+//! * [`CacheKey`] — canonicalized query identity: the post-dedup resolved
+//!   term ids (sorted + deduplicated, the same canonical form
+//!   `SearchEngine::search_with` resolves before scoring), or the
+//!   generator's population rank for sim-only streams that carry no
+//!   concrete terms.
+//! * [`ResultCache`] — a sharded, size-bounded, O(1) cache: N
+//!   independently locked segments, each with its own slab-backed
+//!   intrusive LRU list, per-entry TTL, and generation-tagged
+//!   invalidation ([`ResultCache::invalidate_all`] — the hook reserved
+//!   for the future mutable-corpus write path).
+//! * [`HitRates`] — lock-free per-class hit-rate tracker feeding
+//!   [`crate::mapper::Shedding`]'s hit-rate-discounted delay projection.
+//!
+//! Caching splits the service-time distribution bimodally (cheap hits vs
+//! expensive misses) — exactly the heterogeneity the Hurry-up big/little
+//! mapping exploits: policies read [`DispatchInfo::cheap`]
+//! [`crate::mapper::DispatchInfo`] to steer predicted hits toward little
+//! cores and misses toward big cores.
+
+pub mod hit_rates;
+pub mod key;
+pub mod result_cache;
+
+pub use hit_rates::HitRates;
+pub use key::CacheKey;
+pub use result_cache::{CacheCounters, ResultCache};
+
+/// Cost of serving a cache hit on the dispatching core, ms: a hash probe
+/// plus response serialization — orders of magnitude below the cheapest
+/// scatter-gather miss (the service model's floor is `base_units +
+/// per_kw_units` ≈ 43 ms of big-core work). Both engines charge exactly
+/// this for a hit; [`crate::mapper::Shedding`] uses it as the hit-side
+/// term of its discounted delay projection.
+pub const HIT_COST_MS: f64 = 0.05;

@@ -1,0 +1,387 @@
+//! The sharded, size-bounded, O(1) result cache.
+//!
+//! `ResultCache` splits its capacity across N independently locked
+//! segments (a key always maps to the same segment via a fixed-seed
+//! hash, so contention scales with segment count, not request count).
+//! Each segment is a `HashMap` from [`CacheKey`] to a slot in a slab of
+//! entries threaded onto an intrusive doubly-linked LRU list — `get`,
+//! `insert`, and eviction are all O(1).
+//!
+//! Expiry is lazy: a `get` that lands on an entry older than the TTL, or
+//! stamped with a stale generation (see [`ResultCache::invalidate_all`]),
+//! removes it and counts a miss. Generations are the invalidation hook
+//! reserved for the future mutable-corpus write path: a corpus delta
+//! bumps the generation and every cached result goes stale at once,
+//! without walking the segments.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::key::CacheKey;
+
+/// Sentinel slot index for "no link" in the intrusive LRU list.
+const NIL: usize = usize::MAX;
+
+/// Lifetime counters, snapshot via [`ResultCache::counters`].
+///
+/// Identities (no TTL, no invalidation): `hits + misses` equals probes,
+/// and every insertion either fills a free slot or evicts (`insertions
+/// <= occupancy + evictions + expirations` — refreshes of a live key
+/// count as insertions without consuming a slot).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    /// Probes that returned a live entry.
+    pub hits: u64,
+    /// Probes that found nothing (including lazy-expired entries).
+    pub misses: u64,
+    /// Values stored (new keys and refreshes of existing keys).
+    pub insertions: u64,
+    /// Live entries displaced by LRU pressure at capacity.
+    pub evictions: u64,
+    /// Entries removed lazily on probe: TTL-stale or generation-stale.
+    pub expirations: u64,
+}
+
+struct Entry<V> {
+    key: CacheKey,
+    value: V,
+    /// Insertion timestamp (workload clock, ms) for TTL expiry.
+    inserted_ms: f64,
+    /// Cache generation at insertion; stale generations expire lazily.
+    generation: u64,
+    prev: usize,
+    next: usize,
+}
+
+/// One locked segment: map + slab + intrusive LRU list (head = most
+/// recently used, tail = eviction victim).
+struct Segment<V> {
+    map: HashMap<CacheKey, usize>,
+    slab: Vec<Entry<V>>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+    capacity: usize,
+}
+
+impl<V> Segment<V> {
+    fn new(capacity: usize) -> Self {
+        Segment {
+            map: HashMap::with_capacity(capacity),
+            slab: Vec::with_capacity(capacity),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            capacity,
+        }
+    }
+
+    /// Unlink `slot` from the LRU list (does not touch map/slab).
+    fn unlink(&mut self, slot: usize) {
+        let (prev, next) = (self.slab[slot].prev, self.slab[slot].next);
+        match prev {
+            NIL => self.head = next,
+            p => self.slab[p].next = next,
+        }
+        match next {
+            NIL => self.tail = prev,
+            n => self.slab[n].prev = prev,
+        }
+    }
+
+    /// Link `slot` at the head (most recently used).
+    fn link_front(&mut self, slot: usize) {
+        self.slab[slot].prev = NIL;
+        self.slab[slot].next = self.head;
+        match self.head {
+            NIL => self.tail = slot,
+            h => self.slab[h].prev = slot,
+        }
+        self.head = slot;
+    }
+
+    fn touch(&mut self, slot: usize) {
+        if self.head != slot {
+            self.unlink(slot);
+            self.link_front(slot);
+        }
+    }
+
+    /// Remove `slot` entirely, returning its slab cell to the free list.
+    fn remove(&mut self, slot: usize) {
+        self.unlink(slot);
+        self.map.remove(&self.slab[slot].key);
+        self.free.push(slot);
+    }
+}
+
+/// Sharded LRU+TTL query-result cache. `V` is whatever the engine wants
+/// back on a hit: the sim stores `()` (only the bypass matters there),
+/// the live server stores the merged top-k.
+pub struct ResultCache<V> {
+    segments: Vec<Mutex<Segment<V>>>,
+    ttl_ms: f64,
+    /// Bumped by `invalidate_all`; entries carry the generation they
+    /// were inserted under and expire lazily once it goes stale.
+    generation: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+    expirations: AtomicU64,
+}
+
+impl<V: Clone> ResultCache<V> {
+    /// Build a cache holding at most `capacity` entries across
+    /// `segments` locks (clamped to `capacity` so every segment holds at
+    /// least one entry), each entry living at most `ttl_ms` after
+    /// insertion (`f64::INFINITY` disables the TTL).
+    ///
+    /// `capacity` must be > 0 — a zero capacity means "no cache"; the
+    /// engines gate construction on that, keeping the capacity-0 path
+    /// free of even a probe.
+    pub fn new(capacity: usize, segments: usize, ttl_ms: f64) -> Self {
+        assert!(capacity > 0, "ResultCache capacity must be > 0 (0 disables caching upstream)");
+        assert!(segments > 0, "ResultCache needs at least one segment");
+        assert!(ttl_ms > 0.0, "ResultCache TTL must be positive");
+        let n_seg = segments.min(capacity);
+        // Split capacity as evenly as possible; the first `rem` segments
+        // take the remainder so the total is exactly `capacity`.
+        let (base, rem) = (capacity / n_seg, capacity % n_seg);
+        let segs = (0..n_seg)
+            .map(|i| Mutex::new(Segment::new(base + usize::from(i < rem))))
+            .collect();
+        ResultCache {
+            segments: segs,
+            ttl_ms,
+            generation: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            expirations: AtomicU64::new(0),
+        }
+    }
+
+    /// Total entry budget across all segments.
+    pub fn capacity(&self) -> usize {
+        let mut cap = 0;
+        for s in &self.segments {
+            cap += s.lock().unwrap().capacity;
+        }
+        cap
+    }
+
+    /// Number of independently locked segments.
+    pub fn num_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Live entries right now (stale-but-unprobed entries count).
+    pub fn len(&self) -> usize {
+        let mut n = 0;
+        for s in &self.segments {
+            n += s.lock().unwrap().map.len();
+        }
+        n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Segment index for a key — a fixed-seed SipHash, so placement is
+    /// identical across runs and across threads.
+    fn segment_of(&self, key: &CacheKey) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() % self.segments.len() as u64) as usize
+    }
+
+    /// Probe for `key` at workload time `now_ms`. A live entry is moved
+    /// to the front of its segment's LRU list and its value cloned out;
+    /// a TTL- or generation-stale entry is removed (counted as an
+    /// expiration) and the probe counts as a miss.
+    pub fn get(&self, key: &CacheKey, now_ms: f64) -> Option<V> {
+        let generation = self.generation.load(Ordering::Acquire);
+        let mut seg = self.segments[self.segment_of(key)].lock().unwrap();
+        if let Some(&slot) = seg.map.get(key) {
+            let stale = seg.slab[slot].generation != generation
+                || now_ms - seg.slab[slot].inserted_ms > self.ttl_ms;
+            if stale {
+                seg.remove(slot);
+                self.expirations.fetch_add(1, Ordering::Relaxed);
+            } else {
+                seg.touch(slot);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Some(seg.slab[slot].value.clone());
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Store `value` under `key`. An existing entry for the key is
+    /// refreshed in place; otherwise the segment's LRU tail is evicted
+    /// if it is at capacity.
+    pub fn insert(&self, key: CacheKey, value: V, now_ms: f64) {
+        let generation = self.generation.load(Ordering::Acquire);
+        let mut seg = self.segments[self.segment_of(&key)].lock().unwrap();
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        if let Some(&slot) = seg.map.get(&key) {
+            seg.slab[slot].value = value;
+            seg.slab[slot].inserted_ms = now_ms;
+            seg.slab[slot].generation = generation;
+            seg.touch(slot);
+            return;
+        }
+        if seg.map.len() >= seg.capacity {
+            let victim = seg.tail;
+            debug_assert_ne!(victim, NIL);
+            seg.remove(victim);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        let entry = Entry { key: key.clone(), value, inserted_ms: now_ms, generation, prev: NIL, next: NIL };
+        let slot = match seg.free.pop() {
+            Some(s) => {
+                seg.slab[s] = entry;
+                s
+            }
+            None => {
+                seg.slab.push(entry);
+                seg.slab.len() - 1
+            }
+        };
+        seg.map.insert(key, slot);
+        seg.link_front(slot);
+    }
+
+    /// Invalidation hook for the future mutable-corpus write path: bump
+    /// the generation so every currently cached result goes stale at
+    /// once. Stale entries are reclaimed lazily on their next probe.
+    pub fn invalidate_all(&self) {
+        self.generation.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Snapshot the lifetime counters.
+    pub fn counters(&self) -> CacheCounters {
+        CacheCounters {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            expirations: self.expirations.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(id: u32) -> CacheKey {
+        CacheKey::from_terms(&[id]).unwrap()
+    }
+
+    #[test]
+    fn hit_after_insert_miss_before() {
+        let c: ResultCache<u32> = ResultCache::new(8, 2, f64::INFINITY);
+        assert_eq!(c.get(&k(1), 0.0), None);
+        c.insert(k(1), 42, 0.0);
+        assert_eq!(c.get(&k(1), 1.0), Some(42));
+        let s = c.counters();
+        assert_eq!((s.hits, s.misses, s.insertions), (1, 1, 1));
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        // Single segment so the eviction order is fully determined.
+        let c: ResultCache<u32> = ResultCache::new(2, 1, f64::INFINITY);
+        c.insert(k(1), 1, 0.0);
+        c.insert(k(2), 2, 0.0);
+        // Touch 1 so 2 becomes the LRU victim.
+        assert_eq!(c.get(&k(1), 0.0), Some(1));
+        c.insert(k(3), 3, 0.0);
+        assert_eq!(c.get(&k(2), 0.0), None, "LRU entry evicted");
+        assert_eq!(c.get(&k(1), 0.0), Some(1));
+        assert_eq!(c.get(&k(3), 0.0), Some(3));
+        assert_eq!(c.counters().evictions, 1);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn refresh_does_not_evict() {
+        let c: ResultCache<u32> = ResultCache::new(2, 1, f64::INFINITY);
+        c.insert(k(1), 1, 0.0);
+        c.insert(k(2), 2, 0.0);
+        c.insert(k(1), 10, 1.0); // refresh, not a new slot
+        assert_eq!(c.counters().evictions, 0);
+        assert_eq!(c.get(&k(1), 1.0), Some(10));
+        assert_eq!(c.get(&k(2), 1.0), Some(2));
+    }
+
+    #[test]
+    fn ttl_expires_lazily() {
+        let c: ResultCache<u32> = ResultCache::new(4, 1, 100.0);
+        c.insert(k(1), 1, 0.0);
+        assert_eq!(c.get(&k(1), 99.0), Some(1));
+        assert_eq!(c.get(&k(1), 200.1), None, "past TTL");
+        let s = c.counters();
+        assert_eq!(s.expirations, 1);
+        assert_eq!(s.misses, 1);
+        assert_eq!(c.len(), 0, "expired entry reclaimed");
+        // Slot is reusable after expiry.
+        c.insert(k(1), 2, 300.0);
+        assert_eq!(c.get(&k(1), 300.0), Some(2));
+    }
+
+    #[test]
+    fn generation_invalidates_everything() {
+        let c: ResultCache<u32> = ResultCache::new(4, 2, f64::INFINITY);
+        c.insert(k(1), 1, 0.0);
+        c.insert(k(2), 2, 0.0);
+        c.invalidate_all();
+        assert_eq!(c.get(&k(1), 0.0), None);
+        assert_eq!(c.get(&k(2), 0.0), None);
+        assert_eq!(c.counters().expirations, 2);
+        // Fresh inserts under the new generation are live.
+        c.insert(k(1), 3, 0.0);
+        assert_eq!(c.get(&k(1), 0.0), Some(3));
+    }
+
+    #[test]
+    fn capacity_splits_across_segments_exactly() {
+        let c: ResultCache<()> = ResultCache::new(10, 4, f64::INFINITY);
+        assert_eq!(c.capacity(), 10);
+        assert_eq!(c.num_segments(), 4);
+        // Segments are clamped so each holds at least one entry.
+        let c2: ResultCache<()> = ResultCache::new(3, 8, f64::INFINITY);
+        assert_eq!(c2.num_segments(), 3);
+        assert_eq!(c2.capacity(), 3);
+    }
+
+    #[test]
+    fn total_occupancy_never_exceeds_capacity() {
+        let c: ResultCache<u32> = ResultCache::new(16, 4, f64::INFINITY);
+        for i in 0..1_000u32 {
+            c.insert(k(i), i, f64::from(i));
+            assert!(c.len() <= 16);
+        }
+        let s = c.counters();
+        assert_eq!(s.insertions, 1_000);
+        assert_eq!(s.insertions, c.len() as u64 + s.evictions);
+    }
+
+    #[test]
+    fn same_key_same_segment_across_instances() {
+        // Placement must be deterministic across runs: two caches with
+        // identical shapes route every key identically.
+        let a: ResultCache<u32> = ResultCache::new(64, 8, f64::INFINITY);
+        let b: ResultCache<u32> = ResultCache::new(64, 8, f64::INFINITY);
+        for i in 0..100u32 {
+            assert_eq!(a.segment_of(&k(i)), b.segment_of(&k(i)));
+        }
+    }
+}

@@ -6,7 +6,7 @@ use std::path::Path;
 use super::toml::{array_indices, parse, Document, Value};
 use super::{parse_policy_token, KeywordMix, ShardOverride, SimConfig};
 use crate::error::{Error, Result};
-use crate::loadgen::{parse_mix_token, ClassSpec};
+use crate::loadgen::{parse_mix_token, parse_popularity_token, ClassSpec};
 use crate::mapper::PolicyKind;
 use crate::sched::{DisciplineKind, OrderKind, WfqCostKind};
 
@@ -34,6 +34,10 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
             "hedge_quantile",
             "hedge_budget",
             "shed_deadline_ms",
+            "cache_capacity",
+            "cache_segments",
+            "cache_ttl_ms",
+            "arrivals",
             "qps",
             "num_requests",
             "warmup_requests",
@@ -63,6 +67,7 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
             "priority",
             "weight",
             "batch_max",
+            "popularity",
         ];
         let class_field = key
             .strip_prefix("workload.class.")
@@ -126,6 +131,18 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
     }
     if let Some(v) = get_f64(&doc, "shed_deadline_ms")? {
         cfg.shed_deadline_ms = Some(v);
+    }
+    if let Some(v) = get_i64(&doc, "cache_capacity")? {
+        cfg.cache_capacity = v as usize;
+    }
+    if let Some(v) = get_i64(&doc, "cache_segments")? {
+        cfg.cache_segments = v as usize;
+    }
+    if let Some(v) = get_f64(&doc, "cache_ttl_ms")? {
+        cfg.cache_ttl_ms = v;
+    }
+    if let Some(v) = doc.get("arrivals").and_then(Value::as_str) {
+        cfg.arrivals = crate::loadgen::ArrivalKind::parse(v)?;
     }
     if let Some(v) = get_f64(&doc, "service.base_units")? {
         cfg.service.base_units = v;
@@ -230,6 +247,14 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
                 ))
             })?;
             spec.mix = parse_mix_token(tok)?;
+        }
+        if let Some(v) = doc.get(&field("popularity")) {
+            let tok = v.as_str().ok_or_else(|| {
+                Error::config(format!(
+                    "class `{name}`: popularity must be a string (uniform | zipf:<s>:<population>)"
+                ))
+            })?;
+            spec.popularity = parse_popularity_token(tok)?;
         }
         cfg.classes.push(spec);
     }
@@ -592,6 +617,76 @@ mod tests {
         );
         let e = sim_config_from_str("wfq_cost = \"banana\"").unwrap_err();
         assert!(e.to_string().contains("banana"), "{e}");
+    }
+
+    #[test]
+    fn cache_knobs_parsed_and_validated() {
+        let cfg = sim_config_from_str(
+            "cache_capacity = 4096\ncache_segments = 16\ncache_ttl_ms = 30000.0",
+        )
+        .unwrap();
+        assert_eq!(cfg.cache_capacity, 4096);
+        assert_eq!(cfg.cache_segments, 16);
+        assert_eq!(cfg.cache_ttl_ms, 30_000.0);
+        // Defaults: caching off, 8 segments, no expiry.
+        let cfg = sim_config_from_str("qps = 5.0").unwrap();
+        assert_eq!(cfg.cache_capacity, 0);
+        assert_eq!(cfg.cache_segments, 8);
+        assert_eq!(cfg.cache_ttl_ms, f64::INFINITY);
+        // Validation: segments >= 1, ttl positive, with clear messages.
+        let e = sim_config_from_str("cache_segments = 0").unwrap_err();
+        assert!(e.to_string().contains("cache_segments"), "{e}");
+        assert!(sim_config_from_str("cache_ttl_ms = 0.0").is_err());
+        assert!(sim_config_from_str("cache_capacity = \"big\"").is_err());
+    }
+
+    #[test]
+    fn arrivals_parsed_and_validated() {
+        use crate::loadgen::ArrivalKind;
+        assert_eq!(
+            sim_config_from_str("arrivals = \"diurnal\"").unwrap().arrivals,
+            ArrivalKind::Diurnal
+        );
+        assert_eq!(
+            sim_config_from_str("arrivals = \"Flash-Crowd\"").unwrap().arrivals,
+            ArrivalKind::FlashCrowd,
+            "norm_token tolerance"
+        );
+        assert_eq!(
+            sim_config_from_str("qps = 5.0").unwrap().arrivals,
+            ArrivalKind::Poisson,
+            "poisson is the default"
+        );
+        let e = sim_config_from_str("arrivals = \"bursty\"").unwrap_err();
+        assert!(e.to_string().contains("bursty"), "{e}");
+    }
+
+    #[test]
+    fn class_popularity_parsed_and_validated() {
+        use crate::loadgen::Popularity;
+        let cfg = sim_config_from_str(
+            "[[workload.class]]\nname = \"hot\"\npopularity = \"zipf:1.1:5000\"\n\
+             [[workload.class]]\nname = \"cold\"",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.classes[0].popularity,
+            Popularity::Zipf { s: 1.1, population: 5000 }
+        );
+        assert_eq!(cfg.classes[1].popularity, Popularity::Uniform, "default");
+        // Bad tokens fail with the parse error, not later panics.
+        assert!(sim_config_from_str(
+            "[[workload.class]]\nname = \"a\"\npopularity = \"zipf:0:10\""
+        )
+        .is_err());
+        assert!(sim_config_from_str(
+            "[[workload.class]]\nname = \"a\"\npopularity = \"zipf:1.0:0\""
+        )
+        .is_err());
+        assert!(sim_config_from_str(
+            "[[workload.class]]\nname = \"a\"\npopularity = 3"
+        )
+        .is_err());
     }
 
     #[test]

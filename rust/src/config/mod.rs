@@ -6,7 +6,7 @@ pub mod toml;
 
 pub use file::load_sim_config;
 
-use crate::loadgen::{ClassRegistry, ClassSpec};
+use crate::loadgen::{ArrivalKind, ClassRegistry, ClassSpec};
 use crate::mapper::PolicyKind;
 use crate::platform::{CoreKind, PowerModel, Topology};
 use crate::sched::{DisciplineKind, OrderKind, WfqCostKind};
@@ -243,6 +243,22 @@ pub struct SimConfig {
     /// `Some(f64::INFINITY)` both admit everything — the latter takes the
     /// admission code path but reproduces seeded runs bit-for-bit.
     pub shed_deadline_ms: Option<f64>,
+    /// Query-result cache capacity, entries across all segments (TOML
+    /// `cache_capacity`, CLI `--cache-capacity`). 0 (default) disables
+    /// caching entirely — not even a probe — replaying uncached seeded
+    /// runs bit for bit. See [`crate::cache::ResultCache`].
+    pub cache_capacity: usize,
+    /// Number of independently locked cache segments (default 8; clamped
+    /// to the capacity so every segment holds at least one entry). Only
+    /// meaningful with `cache_capacity > 0`.
+    pub cache_segments: usize,
+    /// Cache entry time-to-live, ms (default ∞ = never expires). Entries
+    /// older than this at probe time are lazily evicted.
+    pub cache_ttl_ms: f64,
+    /// Arrival-shape selector (TOML `arrivals`, CLI `--arrivals`):
+    /// stationary `poisson` (default), `uniform`, `diurnal`, or
+    /// `flashcrowd` — see [`crate::loadgen::ArrivalKind`].
+    pub arrivals: ArrivalKind,
     /// Offered load, queries per second.
     pub qps: f64,
     /// Number of requests to inject.
@@ -290,6 +306,10 @@ impl SimConfig {
             hedge_quantile: 0.95,
             hedge_budget: 0.05,
             shed_deadline_ms: None,
+            cache_capacity: 0,
+            cache_segments: 8,
+            cache_ttl_ms: f64::INFINITY,
+            arrivals: ArrivalKind::Poisson,
             qps: 30.0,
             num_requests: 100_000,
             warmup_requests: 200,
@@ -410,6 +430,30 @@ impl SimConfig {
         self
     }
 
+    /// Builder: set the result-cache capacity (entries; 0 disables).
+    pub fn with_cache_capacity(mut self, capacity: usize) -> Self {
+        self.cache_capacity = capacity;
+        self
+    }
+
+    /// Builder: set the result-cache segment count.
+    pub fn with_cache_segments(mut self, segments: usize) -> Self {
+        self.cache_segments = segments;
+        self
+    }
+
+    /// Builder: set the result-cache entry TTL, ms.
+    pub fn with_cache_ttl(mut self, ttl_ms: f64) -> Self {
+        self.cache_ttl_ms = ttl_ms;
+        self
+    }
+
+    /// Builder: set the arrival shape.
+    pub fn with_arrivals(mut self, arrivals: ArrivalKind) -> Self {
+        self.arrivals = arrivals;
+        self
+    }
+
     /// Builder: declare service classes (empty restores the implicit
     /// default class).
     pub fn with_classes(mut self, classes: Vec<ClassSpec>) -> Self {
@@ -514,7 +558,18 @@ impl SimConfig {
                 self.replicas
             )));
         }
-        // Shares, names and deadlines of declared classes.
+        if self.cache_segments == 0 {
+            return Err(crate::error::Error::config(
+                "cache_segments must be >= 1 (set cache_capacity = 0 to disable caching)",
+            ));
+        }
+        if !(self.cache_ttl_ms > 0.0) {
+            return Err(crate::error::Error::config(format!(
+                "cache_ttl_ms must be positive (use inf for no expiry), got {}",
+                self.cache_ttl_ms
+            )));
+        }
+        // Shares, names, deadlines and popularity of declared classes.
         ClassRegistry::resolve(&self.classes, self.keyword_mix)?;
         Ok(self)
     }
@@ -706,6 +761,43 @@ mod tests {
             .with_shards(2)
             .with_replicas(2)
             .with_shard_overrides(vec![ShardOverride::default(); 5])
+            .validated()
+            .is_err());
+    }
+
+    #[test]
+    fn cache_and_arrival_config_validated() {
+        let base = SimConfig::paper_default(PolicyKind::LinuxRandom);
+        assert_eq!(base.cache_capacity, 0, "caching off by default");
+        assert_eq!(base.cache_segments, 8);
+        assert_eq!(base.cache_ttl_ms, f64::INFINITY);
+        assert_eq!(base.arrivals, ArrivalKind::Poisson);
+        assert!(base
+            .clone()
+            .with_cache_capacity(1024)
+            .with_cache_segments(4)
+            .with_cache_ttl(5_000.0)
+            .with_arrivals(ArrivalKind::FlashCrowd)
+            .validated()
+            .is_ok());
+        let err = base
+            .clone()
+            .with_cache_segments(0)
+            .validated()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cache_segments"), "{err}");
+        for ttl in [0.0, -1.0, f64::NAN] {
+            assert!(
+                base.clone().with_cache_ttl(ttl).validated().is_err(),
+                "ttl {ttl} must be rejected"
+            );
+        }
+        // Invalid per-class popularity surfaces through validated().
+        use crate::loadgen::{ClassSpec, Popularity};
+        assert!(base
+            .with_classes(vec![ClassSpec::new("a", KeywordMix::Paper)
+                .with_popularity(Popularity::Zipf { s: 0.0, population: 10 })])
             .validated()
             .is_err());
     }

@@ -1,0 +1,303 @@
+//! Result-cache ablation: {popularity skew × capacity × load} in BOTH
+//! engines — the capstone of the `cache` subsystem.
+//!
+//! Traffic is a Zipf-popular query stream over a fixed population, so the
+//! same logical query repeats and a result cache can win. Two regimes per
+//! skew, all runs sharing the skew's workload parameters (the sim is
+//! deterministic, so any movement between capacities is cache-caused):
+//!
+//! * **latency regime** (ρ < 1, no admission control) — hits complete at
+//!   the flat probe cost instead of queueing + scoring. Asserted: hits
+//!   exist, the hit p50 sits strictly below the miss p50, and hit counts
+//!   are monotone in capacity (per-segment LRU is a stack algorithm and
+//!   uncontrolled admission probes the identical sequence, so a bigger
+//!   cache can never hit less).
+//! * **goodput regime** (ρ > 1, shedding at the paper's 500 ms deadline)
+//!   — every hit bypasses the queues entirely, so the shedder's projected
+//!   delay falls and fewer requests are refused. Asserted: the largest
+//!   capacity sheds no more, and delivers at least the goodput of, the
+//!   uncached control. (Interior capacities are reported, not asserted:
+//!   shedding feeds back into which requests are probed, so strict
+//!   pairwise monotonicity is not an invariant of the system.)
+//!
+//! `capacity = 0` rows run the uncached engine — not even a probe, and no
+//! `CacheStats` on the output (asserted); `tests/sched_properties.rs`
+//! anchors that this path replays the pre-cache engine bit for bit.
+//!
+//! The live half drives a Zipf stream through the thread-pool server:
+//! hits complete on the dispatching thread with zero scoring passes,
+//! misses populate at completion. Asserted: conservation, counter/record
+//! agreement, and hits actually occurring; timing claims stay sim-side.
+
+use super::runner::Scale;
+use crate::config::{CorpusConfig, KeywordMix, SimConfig};
+use crate::live::{LiveConfig, LiveServer};
+use crate::loadgen::{ClassSpec, Popularity};
+use crate::mapper::PolicyKind;
+use crate::metrics::CacheStats;
+use crate::sim::Simulation;
+use crate::util::fmt::{ms, ms_or_dash, pct, Table};
+
+/// Popularity skews swept: mild (fat tail, lower hit rate at small
+/// capacity) and strong (head-heavy, caches well even tiny).
+const SKEWS: [f64; 2] = [0.8, 1.2];
+
+/// Distinct logical queries in each class's population.
+const POPULATION: usize = 2_000;
+
+/// Cache capacities swept against the capacity-0 (uncached) control.
+const CAPACITIES: [usize; 2] = [64, 4_096];
+
+/// Offered load of the latency regime, QPS (ρ < 1 for the paper mix).
+const LATENCY_QPS: f64 = 25.0;
+
+/// Offered load of the goodput regime, QPS (ρ > 1: shedding engages).
+const GOODPUT_QPS: f64 = 45.0;
+
+/// Admission deadline of the goodput regime, ms (the paper's QoS target).
+const DEADLINE_MS: f64 = 500.0;
+
+/// Offered load of the live half, QPS.
+const LIVE_QPS: f64 = 60.0;
+
+/// Requests per live cell (real time — keep small).
+const LIVE_REQUESTS: usize = 100;
+
+fn hurry_up() -> PolicyKind {
+    PolicyKind::HurryUp {
+        sampling_ms: 25.0,
+        threshold_ms: 50.0,
+    }
+}
+
+/// The swept class: paper keyword mix, Zipf(s) over a fixed population.
+fn popular_class(s: f64) -> ClassSpec {
+    ClassSpec::new("popular", KeywordMix::Paper).with_popularity(Popularity::Zipf {
+        s,
+        population: POPULATION,
+    })
+}
+
+fn grid_header(title: String, lead: &'static str) -> Table {
+    Table::new(
+        title,
+        &[
+            lead, "qps", "capacity", "hit%", "shed", "goodput", "p50_ms", "p99_ms",
+            "hit_p50", "miss_p50",
+        ],
+    )
+}
+
+/// One grid row from a finished run's aggregates.
+#[allow(clippy::too_many_arguments)]
+fn push_row(
+    t: &mut Table,
+    lead: String,
+    qps: f64,
+    capacity: usize,
+    shed: usize,
+    goodput: f64,
+    p50: f64,
+    p99: f64,
+    cache: Option<&CacheStats>,
+) {
+    let dash = || "-".to_string();
+    t.row(&[
+        lead,
+        format!("{qps:.0}"),
+        capacity.to_string(),
+        cache.map_or_else(dash, |c| pct(c.hit_rate())),
+        shed.to_string(),
+        format!("{goodput:.1}"),
+        ms(p50),
+        ms(p99),
+        cache.map_or_else(dash, |c| {
+            ms_or_dash(c.hit_latency.percentile(0.5), c.hit_latency.count())
+        }),
+        cache.map_or_else(dash, |c| {
+            ms_or_dash(c.miss_latency.percentile(0.5), c.miss_latency.count())
+        }),
+    ]);
+}
+
+/// Simulated {skew × capacity × regime} grid with the latency and goodput
+/// invariants asserted inline.
+pub fn sim_grid(requests: usize) -> Table {
+    let mut t = grid_header(
+        format!(
+            "Result cache × Zipf popularity (sim): {POPULATION}-query \
+             population on 2B4L, {requests} requests/cell"
+        ),
+        "skew",
+    );
+    for skew in SKEWS {
+        // ---- latency regime: ρ < 1, nothing sheds, identical probes ----
+        let base = SimConfig::paper_default(hurry_up())
+            .with_qps(LATENCY_QPS)
+            .with_requests(requests)
+            .with_seed(0xCAC4E)
+            .with_classes(vec![popular_class(skew)]);
+        let runs: Vec<_> = std::iter::once(0)
+            .chain(CAPACITIES)
+            .map(|cap| {
+                let out = Simulation::new(base.clone().with_cache_capacity(cap)).run();
+                assert_eq!(out.completed + out.shed, requests, "conservation");
+                assert_eq!(out.shed, 0, "no admission control in this regime");
+                (cap, out)
+            })
+            .collect();
+        assert!(runs[0].1.cache.is_none(), "capacity 0 = uncached engine");
+        let mut prev_hits = 0u64;
+        for (cap, out) in runs.iter().skip(1) {
+            let cs = out.cache.as_ref().expect("cached runs carry stats");
+            assert!(cs.hits > 0, "Zipf({skew}) traffic must repeat at cap {cap}");
+            assert!(
+                cs.hit_latency.percentile(0.5) < cs.miss_latency.percentile(0.5),
+                "hit p50 must beat miss p50 at skew {skew} cap {cap}"
+            );
+            assert!(
+                cs.hits >= prev_hits,
+                "LRU hit count must be monotone in capacity (skew {skew})"
+            );
+            prev_hits = cs.hits;
+        }
+        for (cap, out) in &runs {
+            push_row(
+                &mut t,
+                format!("{skew:.1}"),
+                LATENCY_QPS,
+                *cap,
+                out.shed,
+                out.goodput_qps(),
+                out.latency.percentile(0.50),
+                out.latency.percentile(0.99),
+                out.cache.as_ref(),
+            );
+        }
+        // ---- goodput regime: ρ > 1, shedding on, hits relieve load ----
+        let over = base.with_qps(GOODPUT_QPS).with_shed_deadline(DEADLINE_MS);
+        let o_runs: Vec<_> = std::iter::once(0)
+            .chain(CAPACITIES)
+            .map(|cap| {
+                let out = Simulation::new(over.clone().with_cache_capacity(cap)).run();
+                assert_eq!(out.completed + out.shed, requests, "conservation");
+                (cap, out)
+            })
+            .collect();
+        let (_, uncached) = &o_runs[0];
+        assert!(uncached.shed > 0, "ρ > 1 must shed without a cache");
+        let (_, largest) = o_runs.last().expect("swept capacities");
+        assert!(
+            largest.shed <= uncached.shed,
+            "a warm cache must not increase shedding (skew {skew})"
+        );
+        assert!(
+            largest.goodput_qps() >= uncached.goodput_qps(),
+            "goodput must not decrease with capacity (skew {skew}): {} < {}",
+            largest.goodput_qps(),
+            uncached.goodput_qps()
+        );
+        for (cap, out) in &o_runs {
+            push_row(
+                &mut t,
+                format!("{skew:.1}"),
+                GOODPUT_QPS,
+                *cap,
+                out.shed,
+                out.goodput_qps(),
+                out.latency.percentile(0.50),
+                out.latency.percentile(0.99),
+                out.cache.as_ref(),
+            );
+        }
+    }
+    t
+}
+
+/// Live smoke cell: the cache on real threads — generator-side probe,
+/// worker-side populate, hits completing with zero scoring passes.
+pub fn live_grid(requests: usize) -> Table {
+    let mut t = grid_header(
+        format!(
+            "Result cache (live): thread-pool server @ {LIVE_QPS:.0} QPS, \
+             {requests} requests/cell"
+        ),
+        "engine",
+    );
+    let corpus = CorpusConfig {
+        num_docs: 1_500,
+        ..CorpusConfig::small()
+    }
+    .build();
+    for capacity in [0usize, 512] {
+        let cfg = LiveConfig {
+            qps: LIVE_QPS,
+            num_requests: requests,
+            seed: 0xCAC4E,
+            cache_capacity: capacity,
+            classes: vec![ClassSpec::new("popular", KeywordMix::Paper).with_popularity(
+                Popularity::Zipf {
+                    s: 1.1,
+                    population: 40,
+                },
+            )],
+            ..LiveConfig::default()
+        };
+        let report = LiveServer::from_corpus(cfg, &corpus)
+            .run()
+            .expect("live caching cell failed");
+        assert_eq!(
+            report.per_request.len() + report.shed,
+            requests,
+            "live conservation at capacity {capacity}"
+        );
+        let cached = report.per_request.iter().filter(|r| r.cached).count();
+        match report.cache.as_ref() {
+            None => {
+                assert_eq!(capacity, 0, "cached runs must report stats");
+                assert_eq!(cached, 0, "uncached runs tag no record");
+            }
+            Some(cs) => {
+                assert!(cs.hits > 0, "40-query Zipf stream must repeat");
+                assert_eq!(cs.hits as usize, cached, "counter/record agreement");
+                for r in report.per_request.iter().filter(|r| r.cached) {
+                    assert_eq!(r.passes, 0, "live hits never score");
+                }
+            }
+        }
+        push_row(
+            &mut t,
+            "live".into(),
+            LIVE_QPS,
+            capacity,
+            report.shed,
+            report.goodput_qps(),
+            report.latency.percentile(0.50),
+            report.latency.percentile(0.99),
+            report.cache.as_ref(),
+        );
+    }
+    t
+}
+
+/// Regenerate the caching ablation (sim grid + live smoke).
+pub fn run(scale: Scale) -> Vec<Table> {
+    vec![sim_grid(scale.cell_requests(6)), live_grid(LIVE_REQUESTS)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_grid_renders_every_cell_and_holds_invariants() {
+        // 2 skews × 2 regimes × 3 capacities; the latency and goodput
+        // asserts run inside sim_grid itself.
+        assert_eq!(sim_grid(2_000).len(), 2 * 2 * 3);
+    }
+
+    #[test]
+    fn live_grid_renders_every_cell() {
+        assert_eq!(live_grid(40).len(), 2);
+    }
+}

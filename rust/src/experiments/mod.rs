@@ -18,11 +18,13 @@
 //! | `orders`    | dequeue orders: strict vs wfq vs edf, sim + live  |
 //! | `sharding`  | scatter-gather fan-out: tail amplification vs S   |
 //! | `hedging`   | replica sets + hedged stragglers: p99 vs budget   |
+//! | `caching`   | result cache × Zipf popularity: hit/goodput wins  |
 //!
 //! Scale: experiments default to a fast setting; set `HURRYUP_FULL=1` for
 //! the paper's 1×10⁵-request scale.
 
 pub mod ablations;
+pub mod caching;
 pub mod classes;
 pub mod disciplines;
 pub mod fig1;
@@ -64,6 +66,7 @@ pub fn registry() -> Vec<(&'static str, ExperimentFn)> {
         ("orders", orders::run as ExperimentFn),
         ("sharding", sharding::run as ExperimentFn),
         ("hedging", hedging::run as ExperimentFn),
+        ("caching", caching::run as ExperimentFn),
     ]
 }
 

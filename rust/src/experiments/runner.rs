@@ -3,7 +3,7 @@
 //! policy-caused, never workload-sampling noise).
 
 use crate::config::SimConfig;
-use crate::loadgen::{ArrivalProcess, Workload, WorkloadMix};
+use crate::loadgen::{Workload, WorkloadMix};
 use crate::mapper::PolicyKind;
 use crate::sim::{SimOutput, Simulation};
 use crate::util::Rng;
@@ -48,7 +48,7 @@ pub fn shared_workload(cfg: &SimConfig) -> Workload {
     let mut rng = Rng::new(cfg.seed);
     let mix = WorkloadMix::new(&cfg.class_registry(), 0);
     Workload::generate(
-        ArrivalProcess::Poisson { qps: cfg.qps },
+        cfg.arrivals.process(cfg.qps),
         &mix,
         cfg.num_requests,
         false,

@@ -36,22 +36,28 @@
 //!   is re-issued to the replica under a token-bucket budget, the first
 //!   completion wins, and the loser is cancelled — dropped at dequeue if
 //!   queued, aborted at score-block boundaries if running — so the full
-//!   request lifecycle is **scatter → per-shard schedule → hedge →
-//!   first-wins gather**), the
+//!   request lifecycle is **cache-probe → scatter → per-shard schedule →
+//!   hedge → first-wins gather → populate**), the sharded query-result
+//!   cache (`cache`: popularity makes queries repeat, so a size-bounded
+//!   segmented LRU keyed by resolved term ids answers repeats at a flat
+//!   hit cost on the dispatching core, bypassing the whole fan-out;
+//!   per-class hit rates feed back into admission projections), the
 //!   discrete-event simulator, the live
 //!   thread-pool server (which executes the AOT artifact on the request
 //!   path via PJRT), the typed load generator (`loadgen`: every request
 //!   carries a service-class tag; classes declare traffic share, keyword
-//!   mix, SLO deadline and dispatch priority — per-class admission
-//!   deadlines, priority-aware queueing and class-aware reporting follow),
-//!   metrics (per-class *and* per-shard outcome accounting) and the
-//!   experiment harness.
+//!   mix, SLO deadline, dispatch priority and *popularity* — uniform fresh
+//!   draws or Zipf-repeating draws from a fixed query population — under
+//!   stationary Poisson or diurnal/flash-crowd arrival shapes),
+//!   metrics (per-class *and* per-shard outcome accounting, plus cache
+//!   hit/miss accounting) and the experiment harness.
 //!
 //! Python runs only at `make artifacts`; the serving binary is pure Rust.
 //!
 //! See `examples/` for end-to-end drivers and `rust/benches/figures.rs` for
 //! the reproduction of every figure in the paper.
 
+pub mod cache;
 pub mod cli;
 pub mod config;
 pub mod error;
@@ -72,15 +78,18 @@ pub mod util;
 
 /// Convenient re-exports for examples and downstream users.
 pub mod prelude {
+    pub use crate::cache::{CacheKey, HitRates, ResultCache};
     pub use crate::config::{CorpusConfig, HurryUpParams, ServiceModel, SimConfig};
     pub use crate::error::{Error, Result};
     pub use crate::hedge::{CancelSet, CancelToken, HedgePolicy, ReplicaPlan};
     pub use crate::loadgen::{
-        ArrivalProcess, ClassId, ClassRegistry, ClassSpec, QueryGen, Request, Workload,
-        WorkloadMix,
+        ArrivalKind, ArrivalProcess, ClassId, ClassRegistry, ClassSpec, Popularity,
+        QueryGen, QueryPopulation, Request, Workload, WorkloadMix,
     };
     pub use crate::mapper::{Migration, PolicyKind};
-    pub use crate::metrics::{ClassStats, HedgeStats, LatencyHistogram, ShardStats, Summary};
+    pub use crate::metrics::{
+        CacheStats, ClassStats, HedgeStats, LatencyHistogram, ShardStats, Summary,
+    };
     pub use crate::sched::{DisciplineKind, OrderKind, WfqCostKind};
     pub use crate::platform::{CoreId, CoreKind, PowerModel, ThreadId, Topology};
     pub use crate::search::{Corpus, Index, Query, SearchEngine};

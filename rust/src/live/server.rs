@@ -6,20 +6,21 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::worker::{EmulatedScorer, LiveRequest, SpeedCell};
+use crate::cache::{CacheKey, HitRates, ResultCache};
 use crate::config::{KeywordMix, ShardOverride};
 use crate::error::{Error, Result};
 use crate::hedge::{CancelSet, CancelToken, HedgePolicy, ReplicaPlan};
 use crate::ipc::{stats_channel, RequestTag, StatsRecord, StatsWriter};
-use crate::loadgen::{ArrivalProcess, ClassId, ClassRegistry, ClassSpec, Workload, WorkloadMix};
+use crate::loadgen::{ArrivalKind, ClassId, ClassRegistry, ClassSpec, Workload, WorkloadMix};
 use crate::mapper::{
     AdmissionDecision, DispatchInfo, HurryUp, HurryUpParams, Policy, PolicyKind, Shedding,
 };
-use crate::metrics::{ClassStats, HedgeStats, LatencyHistogram, ShardStats};
+use crate::metrics::{CacheStats, ClassStats, HedgeStats, LatencyHistogram, ShardStats};
 use crate::platform::{AffinityTable, CoreKind, EnergyMeters, PowerModel, ThreadId, Topology};
 use crate::runtime::XlaScorer;
 use crate::sched::{
-    AdmissionOutcome, DisciplineKind, OrderKind, OrderSpec, QueueView, SchedCtx,
-    ServiceEstimates, SharedDispatcher, WfqCost, WfqCostKind,
+    DisciplineKind, OrderKind, OrderSpec, QueueView, SchedCtx, ServiceEstimates,
+    SharedDispatcher, WfqCost, WfqCostKind,
 };
 use crate::search::engine::BlockScorer;
 use crate::search::{
@@ -77,6 +78,21 @@ pub struct LiveConfig {
     /// exceeds it are refused at `push` (same semantics as
     /// `SimConfig::shed_deadline_ms`).
     pub shed_deadline_ms: Option<f64>,
+    /// Result-cache capacity, entries pooled across segments (same
+    /// semantics as `SimConfig::cache_capacity`; 0 = no cache, the
+    /// default — not even a probe happens).
+    pub cache_capacity: usize,
+    /// Cache segment count (same semantics as
+    /// `SimConfig::cache_segments`). Live workers populate concurrently,
+    /// so segments are the lock-splitting knob here.
+    pub cache_segments: usize,
+    /// Cache entry TTL, ms (same semantics as `SimConfig::cache_ttl_ms`;
+    /// infinite = never expires).
+    pub cache_ttl_ms: f64,
+    /// Arrival shape of the generated open-loop stream (same selector as
+    /// `SimConfig::arrivals`; the default Poisson reproduces the
+    /// historical stream bit for bit).
+    pub arrivals: ArrivalKind,
     /// Offered load, QPS.
     pub qps: f64,
     /// Requests to serve.
@@ -145,6 +161,17 @@ impl LiveConfig {
                 self.replicas
             )));
         }
+        if self.cache_segments == 0 {
+            return Err(Error::config(
+                "cache_segments must be >= 1 (set cache_capacity = 0 to disable caching)",
+            ));
+        }
+        if !(self.cache_ttl_ms > 0.0) {
+            return Err(Error::config(format!(
+                "cache_ttl_ms must be positive (use inf for no expiry), got {}",
+                self.cache_ttl_ms
+            )));
+        }
         Ok(self)
     }
 
@@ -195,6 +222,10 @@ impl Default for LiveConfig {
             traversal: Traversal::Union,
             shard_overrides: Vec::new(),
             shed_deadline_ms: None,
+            cache_capacity: 0,
+            cache_segments: 8,
+            cache_ttl_ms: f64::INFINITY,
+            arrivals: ArrivalKind::Poisson,
             qps: 30.0,
             num_requests: 300,
             seed: 7,
@@ -231,6 +262,10 @@ pub struct LiveRecord {
     pub passes: u64,
     /// Top hit (doc id, score), if any.
     pub top_hit: Option<(u32, f32)>,
+    /// Whether the result cache answered this request — it completed on
+    /// the dispatching thread at probe cost, never reached a worker, and
+    /// reports `tid` 0, zero passes and Little core kinds by convention.
+    pub cached: bool,
 }
 
 impl LiveRecord {
@@ -274,6 +309,11 @@ pub struct LiveReport {
     pub replicas: usize,
     /// Hedged-request accounting (`Some` iff `replicas` > 1).
     pub hedge: Option<HedgeStats>,
+    /// Result-cache accounting (`Some` iff `LiveConfig::cache_capacity`
+    /// > 0). Same conventions as `SimOutput::cache`: hits complete on
+    /// the dispatching thread, never reach a worker or the fan-out, and
+    /// conservation reads offered == hits + miss-completions + shed.
+    pub cache: Option<CacheStats>,
     /// Total scoring passes across workers.
     pub total_passes: u64,
 }
@@ -404,8 +444,25 @@ impl LiveServer {
         // requests per queue pull and scores them back-to-back on its
         // (warm) current core. Default 1 = the familiar one-at-a-time pop.
         let batch_limits = registry.batch_maxes();
-        let placement: Box<dyn Policy> =
-            Shedding::wrap(placement, cfg.shed_deadline_ms, &registry);
+        // Result cache + per-class hit-rate tracker, gated on a nonzero
+        // capacity (capacity-0 runs build neither and probe nothing). The
+        // cache stores each query's merged top-k hits; the load generator
+        // probes it after admission and workers populate at completion.
+        let cache: Option<Arc<ResultCache<Vec<ScoredDoc>>>> = (cfg.cache_capacity > 0)
+            .then(|| {
+                Arc::new(ResultCache::new(
+                    cfg.cache_capacity,
+                    cfg.cache_segments,
+                    cfg.cache_ttl_ms,
+                ))
+            });
+        let hit_rates = cache.as_ref().map(|_| HitRates::new(registry.len()));
+        let placement: Box<dyn Policy> = Shedding::wrap_with_cache(
+            placement,
+            cfg.shed_deadline_ms,
+            &registry,
+            hit_rates.clone(),
+        );
         // Size-aware WFQ: workers feed the shared estimate table one EWMA
         // sample per completion (absent under nominal costing).
         let est = matches!(cfg.wfq_cost, WfqCostKind::Estimated)
@@ -433,11 +490,12 @@ impl LiveServer {
         let epoch = Instant::now();
         let now_ms = move || epoch.elapsed().as_secs_f64() * 1e3;
 
-        // Workload (with concrete terms), classified per the registry.
+        // Workload (with concrete terms), classified per the registry,
+        // arrival-shaped per `LiveConfig::arrivals`.
         let mut rng = Rng::new(cfg.seed);
         let qmix = WorkloadMix::new(&registry, self.index.num_terms());
         let workload = Workload::generate(
-            ArrivalProcess::Poisson { qps: cfg.qps },
+            cfg.arrivals.process(cfg.qps),
             &qmix,
             cfg.num_requests,
             true,
@@ -530,6 +588,7 @@ impl LiveServer {
             let index = self.index.clone();
             let records = records.clone();
             let stats_tx: StatsWriter = stats_tx.clone();
+            let cache = cache.clone();
             let use_xla = cfg.use_xla;
             let work_scale = cfg.work_scale;
             let top_k = cfg.top_k;
@@ -600,6 +659,11 @@ impl LiveServer {
                         let aff = shared.aff.lock().expect("aff poisoned");
                         aff.kind_of(ThreadId(t))
                     };
+                    // Populate at completion: only misses reach a worker,
+                    // so a repeat of this query hits until evicted/expired.
+                    if let (Some(c), Some(key)) = (&cache, &req.cache_key) {
+                        c.insert(key.clone(), result.hits.clone(), completed);
+                    }
                     records.lock().expect("records poisoned").push(LiveRecord {
                         class: req.class,
                         keywords: req.query.keyword_count(),
@@ -611,6 +675,7 @@ impl LiveServer {
                         final_kind,
                         passes,
                         top_hit: result.hits.first().map(|h| (h.doc, h.score)),
+                        cached: false,
                     });
                     shared.done.fetch_add(1, Ordering::Relaxed);
                 }
@@ -627,33 +692,65 @@ impl LiveServer {
             if target > now {
                 std::thread::sleep(Duration::from_secs_f64((target - now) / 1e3));
             }
+            let info = DispatchInfo {
+                keywords: req.keywords,
+                class: req.class,
+                priority: priorities[req.class.idx()],
+                // Wall-clock arrival since the server epoch — the same
+                // clock the worker records use, so EDF keys are
+                // consistent monotonic release times.
+                arrive_ms: now_ms(),
+                cheap: false,
+            };
+            if let AdmissionDecision::Shed { .. } = shared.queue.probe_admit(info, &shared.aff) {
+                shared.shed.fetch_add(1, Ordering::Relaxed);
+                shed_by_class[req.class.idx()] += 1;
+                continue;
+            }
+            // Admission first, then the cache: a hit completes right here
+            // on the dispatching thread — no queue, no worker, no scoring.
+            let key = cache
+                .as_ref()
+                .and_then(|_| CacheKey::for_request(&req.terms, req.class.idx(), req.query_id));
+            if let (Some(c), Some(k)) = (&cache, &key) {
+                let hit = c.get(k, info.arrive_ms);
+                if let Some(hr) = &hit_rates {
+                    hr.record(req.class, hit.is_some());
+                }
+                if let Some(hits) = hit {
+                    records.lock().expect("records poisoned").push(LiveRecord {
+                        class: req.class,
+                        keywords: req.keywords,
+                        arrived_ms: info.arrive_ms,
+                        started_ms: info.arrive_ms,
+                        completed_ms: now_ms(),
+                        tid: 0,
+                        first_kind: CoreKind::Little,
+                        final_kind: CoreKind::Little,
+                        passes: 0,
+                        top_hit: hits.first().map(|h| (h.doc, h.score)),
+                        cached: true,
+                    });
+                    shared.done.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+            }
             let terms = req
                 .terms
                 .iter()
                 .map(|&id| self.index.term(id).to_string())
                 .collect();
-            let outcome = shared.queue.push(
+            shared.queue.push_admitted(
                 LiveRequest {
                     widx: 0,
                     class: req.class,
                     query: Query::from_terms(terms),
-                    arrived_ms: now_ms(),
+                    arrived_ms: info.arrive_ms,
+                    cache_key: key,
                 },
-                DispatchInfo {
-                    keywords: req.keywords,
-                    class: req.class,
-                    priority: priorities[req.class.idx()],
-                    // Wall-clock arrival since the server epoch — the same
-                    // clock the worker records use, so EDF keys are
-                    // consistent monotonic release times.
-                    arrive_ms: now_ms(),
-                },
+                info,
                 &shared.aff,
             );
-            if let AdmissionOutcome::Shed { .. } = outcome {
-                shared.shed.fetch_add(1, Ordering::Relaxed);
-                shed_by_class[req.class.idx()] += 1;
-            }
         }
         shared.queue.close();
 
@@ -691,6 +788,9 @@ impl LiveServer {
             );
         }
         let energy = post_hoc_energy(&per_request, &topology, duration_ms);
+        let cache_stats = cache
+            .as_ref()
+            .map(|c| build_cache_stats(c, cfg, &registry, &per_request));
 
         Ok(LiveReport {
             latency,
@@ -707,6 +807,7 @@ impl LiveServer {
             per_shard: Vec::new(),
             replicas: 1,
             hedge: None,
+            cache: cache_stats,
             total_passes,
         })
     }
@@ -739,6 +840,18 @@ impl LiveServer {
         let hedging = r_count > 1;
         let registry = cfg.class_registry();
         let priorities = registry.priorities();
+        // Result cache (optional, `cache_capacity > 0`): shared by the
+        // load generator (probe at admission) and every worker (populate
+        // at gather). Stores the merged end-to-end top-k, so a hit skips
+        // the whole fan-out.
+        let cache: Option<Arc<ResultCache<Vec<ScoredDoc>>>> = (cfg.cache_capacity > 0).then(|| {
+            Arc::new(ResultCache::new(
+                cfg.cache_capacity,
+                cfg.cache_segments,
+                cfg.cache_ttl_ms,
+            ))
+        });
+        let hit_rates = cache.as_ref().map(|_| HitRates::new(registry.len()));
         let est = matches!(cfg.wfq_cost, WfqCostKind::Estimated)
             .then(|| ServiceEstimates::new(registry.len()));
         let total = cfg.num_requests;
@@ -775,6 +888,11 @@ impl LiveServer {
             /// Flipped by the winner's gather to abort this copy
             /// mid-scoring (polled at block boundaries).
             cancel: CancelToken,
+            /// Parent's result-cache identity (every copy of a parent's
+            /// tasks carries the same key): the gather that completes the
+            /// parent populates the cache with the merged top-k exactly
+            /// once. `None` when uncached/uncacheable.
+            cache_key: Option<CacheKey>,
         }
         /// What a finished task contributes to the gather.
         struct TaskPartial {
@@ -831,8 +949,12 @@ impl LiveServer {
             let local_topo = plan.local_topology(slot, &topology);
             let (disc, order, _) = cfg.shard_scheduling(slot);
             let pkind = effective_policy(slot);
-            let placement =
-                Shedding::wrap(pkind.build(&local_topo), cfg.shed_deadline_ms, &registry);
+            let placement = Shedding::wrap_with_cache(
+                pkind.build(&local_topo),
+                cfg.shed_deadline_ms,
+                &registry,
+                hit_rates.clone(),
+            );
             let spec = {
                 let spec = OrderSpec::from_registry(order, &registry);
                 match &est {
@@ -974,6 +1096,7 @@ impl LiveServer {
                 let shared = shard_shareds[slot].clone();
                 let all_shareds = shard_shareds.clone();
                 let gather = gather.clone();
+                let cache = cache.clone();
                 let done = done.clone();
                 let stats_tx: StatsWriter = stats_txs[slot].clone();
                 let est = est.clone();
@@ -1145,6 +1268,13 @@ impl LiveServer {
                                 .map(|(_, td)| td.partial.hits.clone())
                                 .collect();
                             let merged = merge_topk(&parts, top_k);
+                            // Populate at gather: only the task that
+                            // completes the parent reaches here (first-wins
+                            // already resolved hedged duplicates), so the
+                            // merged top-k is inserted exactly once.
+                            if let (Some(c), Some(key)) = (&cache, &task.cache_key) {
+                                c.insert(key.clone(), merged.clone(), completed);
+                            }
                             let crit_task = fan.task(critical);
                             let keywords = task.query.keyword_count();
                             g.records.push(LiveRecord {
@@ -1158,6 +1288,7 @@ impl LiveServer {
                                 final_kind: crit_task.partial.final_kind,
                                 passes: fan.tasks().map(|(_, td)| td.partial.passes).sum(),
                                 top_hit: merged.first().map(|d| (d.doc, d.score)),
+                                cached: false,
                             });
                             for (sh, td) in fan.tasks() {
                                 g.task_log.push(TaskRow {
@@ -1192,6 +1323,8 @@ impl LiveServer {
             deadline_ms: f64,
             info: DispatchInfo,
             query: Query,
+            /// Parent's result-cache identity, copied into duplicates.
+            cache_key: Option<CacheKey>,
         }
         let (hedge_tx, hedger_handle) = if hedging {
             let (tx, rx) = std::sync::mpsc::channel::<HedgeOrder>();
@@ -1245,6 +1378,7 @@ impl LiveServer {
                                         arrived_ms: order.arrived_ms,
                                         query: order.query.clone(),
                                         cancel: tok,
+                                        cache_key: order.cache_key.clone(),
                                     },
                                 ));
                             }
@@ -1289,7 +1423,7 @@ impl LiveServer {
         let mut rng = Rng::new(cfg.seed);
         let qmix = WorkloadMix::new(&registry, self.index.num_terms());
         let workload = Workload::generate(
-            ArrivalProcess::Poisson { qps: cfg.qps },
+            cfg.arrivals.process(cfg.qps),
             &qmix,
             cfg.num_requests,
             true,
@@ -1313,6 +1447,7 @@ impl LiveServer {
                 class: req.class,
                 priority: priorities[req.class.idx()],
                 arrive_ms: arrived,
+                cheap: false,
             };
             // All-or-nothing fan-out admission: probe every PRIMARY shard
             // before anything is enqueued anywhere (the load generator is
@@ -1329,6 +1464,37 @@ impl LiveServer {
                 shed_total.fetch_add(1, Ordering::Relaxed);
                 shed_by_class[req.class.idx()] += 1;
                 continue;
+            }
+            // Admission first, then the cache: a hit completes right here
+            // on the dispatching thread — the parent never opens a fan-out
+            // entry, queues a shard task, or arms a hedge deadline.
+            let key = cache
+                .as_ref()
+                .and_then(|_| CacheKey::for_request(&req.terms, req.class.idx(), req.query_id));
+            if let (Some(c), Some(k)) = (&cache, &key) {
+                let hit = c.get(k, arrived);
+                if let Some(hr) = &hit_rates {
+                    hr.record(req.class, hit.is_some());
+                }
+                if let Some(hits) = hit {
+                    let mut g = gather.lock().expect("gather poisoned");
+                    g.records.push(LiveRecord {
+                        class: req.class,
+                        keywords: req.keywords,
+                        arrived_ms: arrived,
+                        started_ms: arrived,
+                        completed_ms: now_ms(),
+                        tid: 0,
+                        first_kind: CoreKind::Little,
+                        final_kind: CoreKind::Little,
+                        passes: 0,
+                        top_hit: hits.first().map(|h| (h.doc, h.score)),
+                        cached: true,
+                    });
+                    drop(g);
+                    done.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
             }
             let query = Query::from_terms(terms);
             // One cancel token per primary copy, registered in the gather
@@ -1354,6 +1520,7 @@ impl LiveServer {
                         arrived_ms: arrived,
                         query: query.clone(),
                         cancel: copy_tokens[s].clone(),
+                        cache_key: key.clone(),
                     },
                     info,
                     &sh.aff,
@@ -1372,6 +1539,7 @@ impl LiveServer {
                     deadline_ms: deadline,
                     info,
                     query,
+                    cache_key: key,
                 })
                 .ok();
             }
@@ -1484,6 +1652,9 @@ impl LiveServer {
             }
         }
         let energy = energy_from_busy(busy_big, busy_little, &topology, duration_ms);
+        let cache_stats = cache
+            .as_ref()
+            .map(|c| build_cache_stats(c, cfg, &registry, &per_request));
 
         Ok(LiveReport {
             latency,
@@ -1500,9 +1671,28 @@ impl LiveServer {
             per_shard,
             replicas: r_count,
             hedge,
+            cache: cache_stats,
             total_passes,
         })
     }
+}
+
+/// Build the run's [`CacheStats`] post-hoc from the per-request records.
+/// The live server has no warmup convention, so every completion feeds the
+/// hit/miss latency split.
+fn build_cache_stats(
+    cache: &ResultCache<Vec<ScoredDoc>>,
+    cfg: &LiveConfig,
+    registry: &ClassRegistry,
+    per_request: &[LiveRecord],
+) -> CacheStats {
+    let names: Vec<String> = registry.specs().iter().map(|s| s.name.clone()).collect();
+    let mut cs = CacheStats::new(cfg.cache_capacity, cfg.cache_segments, &names);
+    cs.absorb_counters(&cache.counters());
+    for r in per_request {
+        cs.record_latency(r.class.idx(), r.cached, r.latency_ms());
+    }
+    cs
 }
 
 /// Estimate energy from per-request busy intervals using the calibrated

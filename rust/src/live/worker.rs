@@ -7,6 +7,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::cache::CacheKey;
 use crate::error::Result;
 use crate::loadgen::ClassId;
 use crate::search::engine::{BlockScorer, BlockTopK, ScoreBlock};
@@ -23,6 +24,11 @@ pub struct LiveRequest {
     pub query: Query,
     /// Arrival timestamp, ms since server epoch.
     pub arrived_ms: f64,
+    /// Result-cache identity (canonicalized term ids), computed once at
+    /// admission so the completing worker can populate the cache without
+    /// re-resolving terms. `None` when the run has no cache or the
+    /// request is uncacheable.
+    pub cache_key: Option<CacheKey>,
 }
 
 /// Lock-free per-thread speed cell (f64 bits in an AtomicU64), updated by

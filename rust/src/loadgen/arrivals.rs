@@ -4,8 +4,17 @@
 //! independent of server completions (so queueing delays are *felt*, not
 //! hidden — crucial for tail-latency fidelity). Poisson arrivals are the
 //! standard model; Uniform is provided for deterministic debugging.
+//!
+//! Real traffic is not stationary, so two inhomogeneous-Poisson shapes
+//! are layered on top via Lewis thinning ([`ArrivalProcess::Diurnal`],
+//! [`ArrivalProcess::FlashCrowd`]): candidate arrivals are drawn at the
+//! peak rate λmax and each is accepted with probability λ(t)/λmax, which
+//! keeps the draws seeded and the timestamps strictly increasing.
+//! [`ArrivalKind`] is the config-facing selector (`arrivals =
+//! poisson|uniform|diurnal|flashcrowd` in TOML / `--arrivals`).
 
-use crate::util::Rng;
+use crate::error::{Error, Result};
+use crate::util::{norm_token, Rng};
 
 /// How inter-arrival gaps are drawn.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -20,29 +29,144 @@ pub enum ArrivalProcess {
         /// Offered load, queries/second.
         qps: f64,
     },
+    /// Inhomogeneous Poisson with a sinusoidal day/night swing: λ(t) =
+    /// qps·(1 + 0.5·sin(2πt/T)) over the expected span T of the run —
+    /// mean rate `qps`, peak 1.5×, trough 0.5×.
+    Diurnal {
+        /// Mean offered load, queries/second.
+        qps: f64,
+    },
+    /// Inhomogeneous Poisson with a 5× burst over the middle tenth of
+    /// the expected span (t ∈ [0.45T, 0.55T]) on a `qps` baseline — the
+    /// breaking-news spike that stresses admission and caching at once.
+    FlashCrowd {
+        /// Baseline offered load, queries/second.
+        qps: f64,
+    },
 }
 
 impl ArrivalProcess {
-    /// Offered load in QPS.
+    /// Nominal load in QPS (the mean rate for `Diurnal`, the baseline
+    /// for `FlashCrowd`).
     pub fn qps(&self) -> f64 {
         match *self {
-            ArrivalProcess::Poisson { qps } | ArrivalProcess::Uniform { qps } => qps,
+            ArrivalProcess::Poisson { qps }
+            | ArrivalProcess::Uniform { qps }
+            | ArrivalProcess::Diurnal { qps }
+            | ArrivalProcess::FlashCrowd { qps } => qps,
         }
     }
 
     /// Generate `n` arrival timestamps (ms, ascending, starting after 0).
     pub fn generate(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
-        let gap_ms = 1000.0 / self.qps();
-        let mut t = 0.0;
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            t += match *self {
-                ArrivalProcess::Poisson { qps } => rng.exp(qps / 1000.0),
-                ArrivalProcess::Uniform { .. } => gap_ms,
-            };
+        match *self {
+            ArrivalProcess::Poisson { qps } => {
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += rng.exp(qps / 1000.0);
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Uniform { qps } => {
+                let gap_ms = 1000.0 / qps;
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += gap_ms;
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Diurnal { qps } => {
+                // Expected span of n arrivals at the mean rate; the
+                // sinusoid completes one full period over the run.
+                let horizon_ms = n as f64 * 1000.0 / qps;
+                let lambda = |t: f64| {
+                    qps * (1.0 + 0.5 * (2.0 * std::f64::consts::PI * t / horizon_ms).sin())
+                };
+                thin(n, qps * 1.5, lambda, rng)
+            }
+            ArrivalProcess::FlashCrowd { qps } => {
+                let horizon_ms = n as f64 * 1000.0 / qps;
+                let lambda = move |t: f64| {
+                    if (0.45 * horizon_ms..0.55 * horizon_ms).contains(&t) {
+                        qps * 5.0
+                    } else {
+                        qps
+                    }
+                };
+                thin(n, qps * 5.0, lambda, rng)
+            }
+        }
+    }
+}
+
+/// Lewis thinning: draw candidate gaps at the peak rate `lambda_max`
+/// (QPS) and accept each candidate at probability λ(t)/λmax. Two rng
+/// draws per candidate (gap + acceptance), fully seeded.
+fn thin(n: usize, lambda_max: f64, lambda: impl Fn(f64) -> f64, rng: &mut Rng) -> Vec<f64> {
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0;
+    while out.len() < n {
+        t += rng.exp(lambda_max / 1000.0);
+        if rng.chance(lambda(t) / lambda_max) {
             out.push(t);
         }
-        out
+    }
+    out
+}
+
+/// Config-facing arrival-shape selector: the `arrivals` TOML key /
+/// `--arrivals` flag, resolved to an [`ArrivalProcess`] at the
+/// configured load.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Stationary Poisson (the default — the historical behaviour).
+    #[default]
+    Poisson,
+    /// Fixed gaps (deterministic debugging).
+    Uniform,
+    /// Sinusoidal day/night swing, mean `qps`.
+    Diurnal,
+    /// 5× burst over the middle tenth of the run.
+    FlashCrowd,
+}
+
+impl ArrivalKind {
+    /// Parse a selector (via [`norm_token`]: trimmed, case-insensitive,
+    /// `-` ≡ `_`; `flashcrowd` ≡ `flash_crowd`).
+    pub fn parse(s: &str) -> Result<ArrivalKind> {
+        match norm_token(s).as_str() {
+            "poisson" => Ok(ArrivalKind::Poisson),
+            "uniform" => Ok(ArrivalKind::Uniform),
+            "diurnal" => Ok(ArrivalKind::Diurnal),
+            "flashcrowd" | "flash_crowd" => Ok(ArrivalKind::FlashCrowd),
+            _ => Err(Error::invalid(format!(
+                "unknown arrivals `{s}` (poisson | uniform | diurnal | flashcrowd)"
+            ))),
+        }
+    }
+
+    /// Resolve to a process at the given load.
+    pub fn process(self, qps: f64) -> ArrivalProcess {
+        match self {
+            ArrivalKind::Poisson => ArrivalProcess::Poisson { qps },
+            ArrivalKind::Uniform => ArrivalProcess::Uniform { qps },
+            ArrivalKind::Diurnal => ArrivalProcess::Diurnal { qps },
+            ArrivalKind::FlashCrowd => ArrivalProcess::FlashCrowd { qps },
+        }
+    }
+
+    /// The selector token (round-trips through [`ArrivalKind::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Uniform => "uniform",
+            ArrivalKind::Diurnal => "diurnal",
+            ArrivalKind::FlashCrowd => "flashcrowd",
+        }
     }
 }
 
@@ -62,8 +186,14 @@ mod tests {
     #[test]
     fn arrivals_strictly_increasing() {
         let mut rng = Rng::new(12);
-        let arr = ArrivalProcess::Poisson { qps: 100.0 }.generate(5_000, &mut rng);
-        assert!(arr.windows(2).all(|w| w[0] < w[1]));
+        for proc in [
+            ArrivalProcess::Poisson { qps: 100.0 },
+            ArrivalProcess::Diurnal { qps: 100.0 },
+            ArrivalProcess::FlashCrowd { qps: 100.0 },
+        ] {
+            let arr = proc.generate(5_000, &mut rng);
+            assert!(arr.windows(2).all(|w| w[0] < w[1]), "{proc:?}");
+        }
     }
 
     #[test]
@@ -84,5 +214,83 @@ mod tests {
             / gaps.len() as f64
             / (mean * mean);
         assert!((cv2 - 1.0).abs() < 0.1, "cv²={cv2} (exp gaps ⇒ 1)");
+    }
+
+    #[test]
+    fn diurnal_swings_around_the_mean() {
+        let mut rng = Rng::new(15);
+        let n = 40_000;
+        let qps = 50.0;
+        let arr = ArrivalProcess::Diurnal { qps }.generate(n, &mut rng);
+        let horizon_ms = n as f64 * 1000.0 / qps;
+        // First quarter of the period rides the sinusoid's crest, the
+        // third quarter its trough: compare arrivals landing in each.
+        let peak = arr
+            .iter()
+            .filter(|&&t| t < 0.25 * horizon_ms)
+            .count() as f64;
+        let trough = arr
+            .iter()
+            .filter(|&&t| (0.5 * horizon_ms..0.75 * horizon_ms).contains(&t))
+            .count() as f64;
+        assert!(
+            peak > 1.5 * trough,
+            "crest {peak} should far outdraw trough {trough}"
+        );
+    }
+
+    #[test]
+    fn flashcrowd_bursts_in_the_middle_tenth() {
+        let mut rng = Rng::new(16);
+        let n = 40_000;
+        let qps = 50.0;
+        let arr = ArrivalProcess::FlashCrowd { qps }.generate(n, &mut rng);
+        let horizon_ms = n as f64 * 1000.0 / qps;
+        let in_burst = arr
+            .iter()
+            .filter(|&&t| (0.45 * horizon_ms..0.55 * horizon_ms).contains(&t))
+            .count() as f64;
+        let before = arr
+            .iter()
+            .filter(|&&t| (0.30 * horizon_ms..0.40 * horizon_ms).contains(&t))
+            .count() as f64;
+        // The burst window runs at 5× the baseline rate.
+        let ratio = in_burst / before.max(1.0);
+        assert!((3.0..7.0).contains(&ratio), "burst ratio {ratio}");
+    }
+
+    #[test]
+    fn kind_parses_with_norm_token_and_round_trips() {
+        assert_eq!(ArrivalKind::parse("poisson").unwrap(), ArrivalKind::Poisson);
+        assert_eq!(ArrivalKind::parse(" Diurnal ").unwrap(), ArrivalKind::Diurnal);
+        assert_eq!(ArrivalKind::parse("FLASHCROWD").unwrap(), ArrivalKind::FlashCrowd);
+        assert_eq!(ArrivalKind::parse("flash-crowd").unwrap(), ArrivalKind::FlashCrowd);
+        assert_eq!(ArrivalKind::parse("flash_crowd").unwrap(), ArrivalKind::FlashCrowd);
+        assert_eq!(ArrivalKind::parse("uniform").unwrap(), ArrivalKind::Uniform);
+        assert!(ArrivalKind::parse("bursty").is_err());
+        for kind in [
+            ArrivalKind::Poisson,
+            ArrivalKind::Uniform,
+            ArrivalKind::Diurnal,
+            ArrivalKind::FlashCrowd,
+        ] {
+            assert_eq!(ArrivalKind::parse(kind.name()).unwrap(), kind);
+            assert_eq!(kind.process(25.0).qps(), 25.0);
+        }
+        assert_eq!(ArrivalKind::default(), ArrivalKind::Poisson);
+    }
+
+    #[test]
+    fn poisson_stream_identical_to_pre_shapes_formulation() {
+        // Refactoring generate() into per-shape arms must not change the
+        // Poisson draw stream (the seeded-replay anchor).
+        let mut rng = Rng::new(17);
+        let arr = ArrivalProcess::Poisson { qps: 30.0 }.generate(100, &mut rng);
+        let mut rng2 = Rng::new(17);
+        let mut t = 0.0;
+        for a in arr {
+            t += rng2.exp(30.0 / 1000.0);
+            assert_eq!(a, t);
+        }
     }
 }

@@ -24,7 +24,7 @@ use crate::error::{Error, Result};
 use crate::util::rng::Discrete;
 use crate::util::{norm_token, Rng};
 
-use super::querygen::QueryGen;
+use super::querygen::{QueryGen, QueryPopulation};
 
 /// Dense index of a service class in its [`ClassRegistry`] (0 = the first
 /// declared class, or the implicit default class).
@@ -45,6 +45,73 @@ impl std::fmt::Display for ClassId {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "class{}", self.0)
     }
+}
+
+/// Popularity model of a class's query stream: how often the *same*
+/// query recurs.
+///
+/// `Uniform` is the historical behaviour — every request draws a fresh
+/// query, so nothing repeats and nothing can be cached. `Zipf` draws
+/// each request from a fixed, seeded population of `population` queries
+/// under a Zipf(`s`) rank-frequency law (rank 0 most popular), the
+/// standard model of real search traffic; repeated queries are what the
+/// [`crate::cache`] result cache exploits.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum Popularity {
+    /// Fresh query per request (nothing repeats). The default.
+    #[default]
+    Uniform,
+    /// Zipf(`s`) over a fixed population of `population` queries.
+    Zipf {
+        /// Skew exponent (> 0, finite; ~1 is web-like).
+        s: f64,
+        /// Number of distinct queries in the class's population (≥ 1).
+        population: usize,
+    },
+}
+
+/// Parse a popularity token: `uniform` | `zipf:<s>:<population>`
+/// (normalised via [`norm_token`]; shared by `--classes` and the
+/// per-class TOML `popularity` string). Strict: a non-positive or
+/// non-finite skew, a zero population, and trailing tokens are config
+/// errors here, not panics inside workload generation.
+pub fn parse_popularity_token(s: &str) -> Result<Popularity> {
+    let norm = norm_token(s);
+    let mut parts = norm.split(':');
+    let kind = parts.next().unwrap_or("");
+    let pop = match kind {
+        "uniform" => Popularity::Uniform,
+        "zipf" => {
+            let skew: f64 = parts
+                .next()
+                .and_then(|t| t.parse().ok())
+                .ok_or_else(|| Error::invalid(format!("popularity `{s}`: bad skew")))?;
+            if !(skew > 0.0 && skew.is_finite()) {
+                return Err(Error::invalid(format!(
+                    "popularity `{s}`: zipf skew must be a positive finite number"
+                )));
+            }
+            let population: usize = parts
+                .next()
+                .and_then(|t| t.parse().ok())
+                .ok_or_else(|| Error::invalid(format!("popularity `{s}`: bad population")))?;
+            if population == 0 {
+                return Err(Error::invalid(format!(
+                    "popularity `{s}`: population must be at least 1"
+                )));
+            }
+            Popularity::Zipf { s: skew, population }
+        }
+        _ => {
+            return Err(Error::invalid(format!(
+                "unknown popularity `{s}` (uniform | zipf:<s>:<population>)"
+            )))
+        }
+    };
+    if parts.next().is_some() {
+        return Err(Error::invalid(format!("popularity `{s}`: trailing tokens")));
+    }
+    Ok(pop)
 }
 
 /// Declaration of one service class.
@@ -78,11 +145,17 @@ pub struct ClassSpec {
     /// services on a warm core (at the cost of coarser fairness between
     /// batches).
     pub batch_max: usize,
+    /// Popularity model of this class's query stream: `Uniform` (fresh
+    /// query per request, the historical default — uncacheable) or
+    /// `Zipf { s, population }` (requests drawn from a fixed seeded
+    /// query population under a Zipf(s) rank-frequency law — the
+    /// repeated traffic the [`crate::cache`] result cache exploits).
+    pub popularity: Popularity,
 }
 
 impl ClassSpec {
     /// A class with defaults: share 1, the given mix, no SLO, priority 0,
-    /// weight 1, batch_max 1.
+    /// weight 1, batch_max 1, uniform popularity.
     pub fn new(name: impl Into<String>, mix: KeywordMix) -> ClassSpec {
         ClassSpec {
             name: name.into(),
@@ -92,6 +165,7 @@ impl ClassSpec {
             priority: 0,
             weight: 1.0,
             batch_max: 1,
+            popularity: Popularity::Uniform,
         }
     }
 
@@ -122,6 +196,12 @@ impl ClassSpec {
     /// Builder: dispatch batch cap (≥ 1; 1 = unbatched).
     pub fn with_batch_max(mut self, batch_max: usize) -> ClassSpec {
         self.batch_max = batch_max;
+        self
+    }
+
+    /// Builder: popularity model of the query stream.
+    pub fn with_popularity(mut self, popularity: Popularity) -> ClassSpec {
+        self.popularity = popularity;
         self
     }
 }
@@ -196,6 +276,20 @@ impl ClassRegistry {
                     spec.name
                 )));
             }
+            if let Popularity::Zipf { s, population } = spec.popularity {
+                if !(s > 0.0 && s.is_finite()) {
+                    return Err(Error::config(format!(
+                        "class `{}`: zipf skew must be a positive finite number",
+                        spec.name
+                    )));
+                }
+                if population == 0 {
+                    return Err(Error::config(format!(
+                        "class `{}`: zipf population must be at least 1",
+                        spec.name
+                    )));
+                }
+            }
         }
         Ok(ClassRegistry {
             specs: specs.to_vec(),
@@ -266,6 +360,13 @@ impl ClassRegistry {
         self.specs.iter().any(|s| s.deadline_ms.is_some())
     }
 
+    /// True when any class draws from a fixed query population
+    /// (`popularity = zipf:*`) — the precondition for the result cache
+    /// ever seeing a repeat.
+    pub fn any_popularity(&self) -> bool {
+        self.specs.iter().any(|s| s.popularity != Popularity::Uniform)
+    }
+
     /// Effective per-class admission deadlines: a class's own
     /// `deadline_ms`, else the global fallback (ms, may be `INFINITY`).
     pub fn admission_deadlines(&self, global_ms: f64) -> Vec<f64> {
@@ -287,6 +388,8 @@ impl ClassRegistry {
 #[derive(Clone, Debug)]
 pub struct WorkloadMix {
     gens: Vec<QueryGen>,
+    /// Popularity model of each class, in [`ClassId`] order.
+    popularities: Vec<Popularity>,
     /// Traffic-share sampler; `None` for the single-class fast path.
     share_sampler: Option<Discrete>,
 }
@@ -300,6 +403,7 @@ impl WorkloadMix {
             .iter()
             .map(|s| QueryGen::new(s.mix, vocab_size))
             .collect();
+        let popularities = registry.specs().iter().map(|s| s.popularity).collect();
         let share_sampler = (registry.len() > 1).then(|| {
             Discrete::new(
                 &registry
@@ -309,7 +413,7 @@ impl WorkloadMix {
                     .collect::<Vec<_>>(),
             )
         });
-        WorkloadMix { gens, share_sampler }
+        WorkloadMix { gens, popularities, share_sampler }
     }
 
     /// Number of classes.
@@ -334,6 +438,30 @@ impl WorkloadMix {
     pub fn sample_terms(&self, class: ClassId, k: usize, rng: &mut Rng) -> Vec<u32> {
         self.gens[class.idx()].sample_terms(k, rng)
     }
+
+    /// Materialize the fixed per-class query populations, in class
+    /// order: `None` for uniform classes (fresh query per request),
+    /// `Some` for zipf classes.
+    ///
+    /// Determinism contract: uniform classes draw *nothing* here, so an
+    /// all-uniform mix (the default) adds zero rng draws and seeded runs
+    /// replay the pre-popularity stream bit for bit.
+    pub fn build_populations(
+        &self,
+        with_terms: bool,
+        rng: &mut Rng,
+    ) -> Vec<Option<QueryPopulation>> {
+        self.gens
+            .iter()
+            .zip(&self.popularities)
+            .map(|(gen, pop)| match *pop {
+                Popularity::Uniform => None,
+                Popularity::Zipf { s, population } => {
+                    Some(QueryPopulation::generate(population, s, gen, with_terms, rng))
+                }
+            })
+            .collect()
+    }
 }
 
 /// Parse a `--classes` CLI value into class specs.
@@ -342,13 +470,15 @@ impl WorkloadMix {
 /// `share`, `mix` (`paper` | `fixed:K` | `uniform:LO:HI`), `deadline_ms`
 /// (alias `deadline`), `priority` (alias `prio`), `weight` (alias `w` —
 /// the WFQ dequeue share), `batch_max` (alias `batch` — same-class
-/// requests one core may pull per dispatch; 1 = unbatched). Keys and mix
+/// requests one core may pull per dispatch; 1 = unbatched), and
+/// `popularity` (alias `pop` — `uniform` | `zipf:<s>:<population>`, the
+/// query-repetition model the result cache exploits). Keys and value
 /// tokens are normalised via [`norm_token`]. Classes default to share 1,
-/// the config's keyword mix, no SLO, priority 0, weight 1, batch_max 1.
-/// Example:
+/// the config's keyword mix, no SLO, priority 0, weight 1, batch_max 1,
+/// uniform popularity. Example:
 ///
 /// ```text
-/// interactive:share=0.65,deadline_ms=500,priority=1,weight=3;batch:share=0.35,mix=uniform:6:14
+/// interactive:share=0.65,deadline_ms=500,priority=1,pop=zipf:1.1:5000;batch:share=0.35,mix=uniform:6:14
 /// ```
 pub fn parse_classes(s: &str, default_mix: KeywordMix) -> Result<Vec<ClassSpec>> {
     let mut specs = Vec::new();
@@ -395,6 +525,9 @@ pub fn parse_classes(s: &str, default_mix: KeywordMix) -> Result<Vec<ClassSpec>>
                 }
                 "mix" => {
                     spec.mix = parse_mix_token(val)?;
+                }
+                "popularity" | "pop" => {
+                    spec.popularity = parse_popularity_token(val)?;
                 }
                 other => {
                     return Err(Error::invalid(format!(
@@ -620,6 +753,58 @@ mod tests {
         let zero = vec![ClassSpec::new("a", KeywordMix::Paper).with_batch_max(0)];
         assert!(ClassRegistry::resolve(&zero, KeywordMix::Paper).is_err());
         assert!(parse_classes("a:batch_max=x", KeywordMix::Paper).is_err());
+    }
+
+    #[test]
+    fn parse_popularity_token_variants() {
+        assert_eq!(parse_popularity_token("uniform").unwrap(), Popularity::Uniform);
+        assert_eq!(parse_popularity_token(" Uniform ").unwrap(), Popularity::Uniform);
+        assert_eq!(
+            parse_popularity_token("zipf:1.1:5000").unwrap(),
+            Popularity::Zipf { s: 1.1, population: 5000 }
+        );
+        assert_eq!(
+            parse_popularity_token("ZIPF:0.8:10").unwrap(),
+            Popularity::Zipf { s: 0.8, population: 10 },
+            "norm_token tolerance"
+        );
+        // Strictness: s <= 0, population 0, missing args, trailing junk.
+        assert!(parse_popularity_token("zipf:0:100").is_err());
+        assert!(parse_popularity_token("zipf:nan:100").is_err());
+        assert!(parse_popularity_token("zipf:inf:100").is_err());
+        assert!(parse_popularity_token("zipf:1.0:0").is_err());
+        assert!(parse_popularity_token("zipf:1.0").is_err());
+        assert!(parse_popularity_token("zipf").is_err());
+        assert!(parse_popularity_token("zipf:1.0:10:junk").is_err());
+        assert!(parse_popularity_token("banana").is_err());
+        let err = parse_popularity_token("zipf:0:100").unwrap_err().to_string();
+        assert!(err.contains("skew"), "clear message, got: {err}");
+    }
+
+    #[test]
+    fn popularity_via_classes_flag_and_registry_validation() {
+        let specs = parse_classes(
+            "interactive:pop=zipf:1.2:500;batch:popularity=uniform;plain",
+            KeywordMix::Paper,
+        )
+        .unwrap();
+        assert_eq!(specs[0].popularity, Popularity::Zipf { s: 1.2, population: 500 });
+        assert_eq!(specs[1].popularity, Popularity::Uniform);
+        assert_eq!(specs[2].popularity, Popularity::Uniform, "default is uniform");
+        assert!(parse_classes("a:pop=zipf:0:10", KeywordMix::Paper).is_err());
+        // Builder-constructed specs are validated at resolve time too.
+        let bad = vec![ClassSpec::new("a", KeywordMix::Paper)
+            .with_popularity(Popularity::Zipf { s: -1.0, population: 10 })];
+        let err = ClassRegistry::resolve(&bad, KeywordMix::Paper).unwrap_err().to_string();
+        assert!(err.contains("class `a`"), "names the class, got: {err}");
+        let bad_pop = vec![ClassSpec::new("a", KeywordMix::Paper)
+            .with_popularity(Popularity::Zipf { s: 1.0, population: 0 })];
+        assert!(ClassRegistry::resolve(&bad_pop, KeywordMix::Paper).is_err());
+        let ok = vec![ClassSpec::new("a", KeywordMix::Paper)
+            .with_popularity(Popularity::Zipf { s: 1.0, population: 10 })];
+        let reg = ClassRegistry::resolve(&ok, KeywordMix::Paper).unwrap();
+        assert!(reg.any_popularity());
+        assert!(!ClassRegistry::single(KeywordMix::Paper).any_popularity());
     }
 
     #[test]

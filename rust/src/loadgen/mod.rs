@@ -3,30 +3,36 @@
 //! request model every layer speaks.
 //!
 //! The typed request lifecycle starts here: **generate** (`arrivals`
-//! produces open-loop arrival times at a fixed offered QPS) → **classify**
+//! produces open-loop arrival times — stationary Poisson by default, or
+//! the diurnal/flash-crowd shapes of [`ArrivalKind`]) → **classify**
 //! ([`WorkloadMix`] samples each arrival's service class from the
-//! [`ClassRegistry`]'s traffic shares, then its keyword count — the
-//! paper's compute-intensity axis — from that class's [`QueryGen`];
-//! concrete query terms match the corpus' Zipfian popularity). The
-//! resulting [`Request`] descriptors (`id`, `class`, `arrive_ms`,
-//! `keywords`, `terms`) flow into the scheduling layer (enqueue → admit →
-//! queue → next → run, see [`crate::sched`]) tagged with their [`ClassId`]
-//! so admission, queue ordering and reporting can all treat classes
-//! differently.
+//! [`ClassRegistry`]'s traffic shares, then its query: a fresh draw from
+//! that class's [`QueryGen`] under uniform [`Popularity`], or a repeated
+//! draw from the class's fixed [`QueryPopulation`] under
+//! `popularity = zipf:<s>:<population>` — the paper's compute-intensity
+//! axis either way, with concrete query terms matching the corpus'
+//! Zipfian popularity). The resulting [`Request`] descriptors (`id`,
+//! `class`, `arrive_ms`, `keywords`, `terms`, `query_id`) flow into the
+//! serving stack — **cache-probe** → **admit** → scatter → per-shard
+//! schedule → gather → **populate** (see [`crate::cache`] and
+//! [`crate::sched`]) — tagged with their [`ClassId`] so admission, queue
+//! ordering, caching and reporting can all treat classes differently.
 //!
 //! `trace` records and replays complete workloads (format v2 carries the
 //! class tag; legacy v1 traces still parse) so every experiment is
 //! reproducible bit-for-bit. An untyped config resolves to one implicit
-//! default class and replays pre-class seeded runs exactly.
+//! default class with uniform popularity and replays pre-class seeded
+//! runs exactly.
 
 pub mod arrivals;
 pub mod class;
 pub mod querygen;
 pub mod trace;
 
-pub use arrivals::ArrivalProcess;
+pub use arrivals::{ArrivalKind, ArrivalProcess};
 pub use class::{
-    parse_classes, parse_mix_token, ClassId, ClassRegistry, ClassSpec, WorkloadMix,
+    parse_classes, parse_mix_token, parse_popularity_token, ClassId, ClassRegistry,
+    ClassSpec, Popularity, WorkloadMix,
 };
-pub use querygen::QueryGen;
+pub use querygen::{QueryGen, QueryPopulation};
 pub use trace::{Request, Workload};

@@ -5,6 +5,12 @@
 //! [`KeywordMix`], then (for live mode) samples that many *distinct* term
 //! ids Zipf-distributed over the corpus vocabulary, so popular terms appear
 //! in queries as often as they appear in documents.
+//!
+//! [`QueryPopulation`] adds query-level repetition on top: a fixed,
+//! seeded population of queries pre-generated through a class's
+//! [`QueryGen`], drawn per request under a Zipf rank-frequency law (see
+//! [`crate::loadgen::Popularity`]). Repeats are what the
+//! [`crate::cache`] result cache exploits.
 
 use crate::config::KeywordMix;
 use crate::util::{rng::Discrete, rng::Zipf, Rng};
@@ -73,6 +79,72 @@ impl QueryGen {
     /// The configured mix.
     pub fn mix(&self) -> KeywordMix {
         self.mix
+    }
+}
+
+/// One query in a fixed population: the keyword count and (live mode)
+/// concrete term ids that every recurrence of this query shares.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueryEntry {
+    /// Keyword count (the compute-intensity driver).
+    pub keywords: usize,
+    /// Concrete term ids (empty when generated without a vocabulary).
+    pub terms: Vec<u32>,
+}
+
+/// A fixed, seeded population of queries drawn under a Zipf
+/// rank-frequency law: rank 0 is the most popular query, rank r occurs
+/// with probability ∝ 1/(r+1)^s. Each class with `popularity = zipf:*`
+/// owns one population; every request of that class draws a rank and
+/// replays that entry verbatim — so identical queries recur, and the
+/// result cache ([`crate::cache`]) has something to hit.
+#[derive(Clone, Debug)]
+pub struct QueryPopulation {
+    entries: Vec<QueryEntry>,
+    rank_zipf: Zipf,
+}
+
+impl QueryPopulation {
+    /// Pre-generate `size` queries through `gen` (one keyword draw each,
+    /// plus term draws when `with_terms`), then build the Zipf(s) rank
+    /// sampler. Fully seeded: same rng state ⇒ same population.
+    pub fn generate(
+        size: usize,
+        s: f64,
+        gen: &QueryGen,
+        with_terms: bool,
+        rng: &mut Rng,
+    ) -> QueryPopulation {
+        assert!(size > 0, "query population must be non-empty");
+        let entries = (0..size)
+            .map(|_| {
+                let keywords = gen.sample_keywords(rng);
+                let terms = if with_terms {
+                    gen.sample_terms(keywords, rng)
+                } else {
+                    Vec::new()
+                };
+                QueryEntry { keywords, terms }
+            })
+            .collect();
+        QueryPopulation { entries, rank_zipf: Zipf::new(size, s) }
+    }
+
+    /// Draw one request's query: its population rank and the shared
+    /// entry. Exactly one rng draw per call.
+    pub fn draw(&self, rng: &mut Rng) -> (u32, &QueryEntry) {
+        let rank = self.rank_zipf.sample(rng);
+        (rank as u32, &self.entries[rank])
+    }
+
+    /// Number of distinct queries in the population.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Always false — construction requires size > 0.
+    pub fn is_empty(&self) -> bool {
+        false
     }
 }
 
@@ -149,5 +221,81 @@ mod tests {
         let g = QueryGen::new(KeywordMix::Paper, 0);
         let mut rng = Rng::new(6);
         g.sample_terms(3, &mut rng);
+    }
+
+    #[test]
+    fn population_is_seeded_and_fixed() {
+        let g = QueryGen::new(KeywordMix::Paper, 800);
+        let mut a = Rng::new(17);
+        let mut b = Rng::new(17);
+        let pa = QueryPopulation::generate(50, 1.0, &g, true, &mut a);
+        let pb = QueryPopulation::generate(50, 1.0, &g, true, &mut b);
+        assert_eq!(pa.len(), 50);
+        // Same seed ⇒ same population and same draw sequence.
+        for _ in 0..200 {
+            let (ra, ea) = pa.draw(&mut a);
+            let (rb, eb) = pb.draw(&mut b);
+            assert_eq!(ra, rb);
+            assert_eq!(ea, eb);
+            assert_eq!(ea.terms.len(), ea.keywords);
+        }
+    }
+
+    #[test]
+    fn population_zipf_rank_frequency_matches_exponent() {
+        // The Zipf-generator statistical check: over 100k seeded draws
+        // from a Zipf(1.0) population, the empirical rank-frequency
+        // log-log slope must recover the exponent within tolerance, and
+        // the distinct-query count can never exceed the population.
+        let g = QueryGen::new(KeywordMix::Fixed(3), 0);
+        let mut rng = Rng::new(23);
+        let n_pop = 1_000;
+        let s = 1.0;
+        let pop = QueryPopulation::generate(n_pop, s, &g, false, &mut rng);
+        let draws = 100_000;
+        let mut counts = vec![0u64; n_pop];
+        for _ in 0..draws {
+            let (rank, _) = pop.draw(&mut rng);
+            counts[rank as usize] += 1;
+        }
+        let distinct = counts.iter().filter(|&&c| c > 0).count();
+        assert!(distinct <= n_pop, "distinct={distinct} > population");
+        assert!(distinct > 100, "zipf(1.0) over 1000 ranks should touch a wide tail");
+        // Least-squares fit of log(count) vs log(rank+1) over the head
+        // (ranks with enough mass for a stable estimate): slope ≈ -s.
+        let pts: Vec<(f64, f64)> = counts
+            .iter()
+            .enumerate()
+            .take(100)
+            .filter(|(_, &c)| c > 0)
+            .map(|(r, &c)| (((r + 1) as f64).ln(), (c as f64).ln()))
+            .collect();
+        let n = pts.len() as f64;
+        let (sx, sy): (f64, f64) = pts.iter().fold((0.0, 0.0), |(a, b), (x, y)| (a + x, b + y));
+        let (sxx, sxy): (f64, f64) = pts
+            .iter()
+            .fold((0.0, 0.0), |(a, b), (x, y)| (a + x * x, b + x * y));
+        let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+        assert!(
+            (slope + s).abs() < 0.1,
+            "empirical exponent {:.3} vs target {s}",
+            -slope
+        );
+    }
+
+    #[test]
+    fn higher_skew_concentrates_head_mass() {
+        let g = QueryGen::new(KeywordMix::Fixed(2), 0);
+        let mut rng = Rng::new(29);
+        let head_share = |s: f64, rng: &mut Rng| {
+            let pop = QueryPopulation::generate(500, s, &g, false, rng);
+            let head = (0..20_000)
+                .filter(|_| pop.draw(rng).0 < 10)
+                .count();
+            head as f64 / 20_000.0
+        };
+        let low = head_share(0.6, &mut rng);
+        let high = head_share(1.4, &mut rng);
+        assert!(high > low + 0.15, "skew 1.4 head={high} vs 0.6 head={low}");
     }
 }

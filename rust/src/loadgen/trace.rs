@@ -35,6 +35,13 @@ pub struct Request {
     pub keywords: usize,
     /// Concrete query term ids (empty in sim-only traces).
     pub terms: Vec<u32>,
+    /// Population rank of this query within its class, when the class
+    /// draws from a fixed query population (`popularity = zipf:*`);
+    /// `None` for uniform classes and loaded traces. Lets the result
+    /// cache key term-less sim requests ([`crate::cache::CacheKey`]).
+    /// Not persisted by the v2 trace format — replayed traces cache by
+    /// concrete terms only.
+    pub query_id: Option<u32>,
 }
 
 /// A complete workload: the request stream one experiment serves.
@@ -47,11 +54,20 @@ pub struct Workload {
 impl Workload {
     /// Generate a workload: `n` requests with the given arrival process and
     /// per-class query mix (the classify stage — each arrival samples its
-    /// class from the mix's traffic shares, then its keywords from that
-    /// class's generator). `with_terms` controls whether concrete term ids
-    /// are sampled (needed by live mode, skipped by the simulator for
-    /// speed). With a single class no class-sampling randomness is drawn,
-    /// so untyped configs replay the pre-class rng stream bit for bit.
+    /// class from the mix's traffic shares, then its query). For a
+    /// uniform-popularity class each request samples a fresh keyword
+    /// count (and, `with_terms`, concrete term ids — needed by live
+    /// mode, skipped by the simulator for speed); a zipf-popularity
+    /// class instead draws a rank from its fixed pre-generated
+    /// [`QueryPopulation`][super::QueryPopulation] and replays that
+    /// entry, tagging the request's `query_id` so repeats are visible to
+    /// the result cache.
+    ///
+    /// Determinism: populations are materialised *after* the arrival
+    /// draws, and only for zipf classes — with a single uniform class
+    /// (the default) no class-sampling or popularity randomness is
+    /// drawn, so untyped configs replay the pre-class rng stream bit for
+    /// bit.
     pub fn generate(
         arrivals: ArrivalProcess,
         mix: &WorkloadMix,
@@ -60,16 +76,26 @@ impl Workload {
         rng: &mut Rng,
     ) -> Workload {
         let times = arrivals.generate(n, rng);
+        let populations = mix.build_populations(with_terms, rng);
         let requests = times
             .into_iter()
             .enumerate()
             .map(|(id, arrive_ms)| {
                 let class = mix.sample_class(rng);
-                let keywords = mix.sample_keywords(class, rng);
-                let terms = if with_terms {
-                    mix.sample_terms(class, keywords, rng)
-                } else {
-                    Vec::new()
+                let (keywords, terms, query_id) = match &populations[class.idx()] {
+                    None => {
+                        let keywords = mix.sample_keywords(class, rng);
+                        let terms = if with_terms {
+                            mix.sample_terms(class, keywords, rng)
+                        } else {
+                            Vec::new()
+                        };
+                        (keywords, terms, None)
+                    }
+                    Some(pop) => {
+                        let (rank, entry) = pop.draw(rng);
+                        (entry.keywords, entry.terms.clone(), Some(rank))
+                    }
                 };
                 Request {
                     id: id as u64,
@@ -77,6 +103,7 @@ impl Workload {
                     arrive_ms,
                     keywords,
                     terms,
+                    query_id,
                 }
             })
             .collect();
@@ -190,6 +217,7 @@ impl Workload {
                 arrive_ms,
                 keywords,
                 terms,
+                query_id: None,
             });
         }
         Ok(Workload { requests })
@@ -271,6 +299,63 @@ mod tests {
             if r.class == ClassId(1) {
                 assert!((6..=14).contains(&r.keywords), "batch mix range");
             }
+        }
+    }
+
+    #[test]
+    fn zipf_class_generates_repeats_with_bounded_query_ids() {
+        use crate::loadgen::class::Popularity;
+        let specs = vec![ClassSpec::new("hot", KeywordMix::Paper)
+            .with_popularity(Popularity::Zipf { s: 1.1, population: 50 })];
+        let mix = WorkloadMix::new(
+            &ClassRegistry::resolve(&specs, KeywordMix::Paper).unwrap(),
+            300,
+        );
+        let mut rng = Rng::new(41);
+        let w = Workload::generate(
+            ArrivalProcess::Poisson { qps: 30.0 },
+            &mix,
+            2_000,
+            true,
+            &mut rng,
+        );
+        let mut seen = std::collections::HashMap::new();
+        for r in &w.requests {
+            let qid = r.query_id.expect("zipf class tags every request");
+            assert!((qid as usize) < 50, "rank within population");
+            assert_eq!(r.terms.len(), r.keywords);
+            // Every recurrence of a rank replays the identical query.
+            let entry = seen.entry(qid).or_insert_with(|| (r.keywords, r.terms.clone()));
+            assert_eq!((entry.0, &entry.1), (r.keywords, &r.terms));
+        }
+        assert!(seen.len() <= 50);
+        assert!(
+            w.len() > seen.len() * 2,
+            "2000 requests over 50 queries must repeat heavily"
+        );
+    }
+
+    #[test]
+    fn uniform_popularity_draw_stream_unchanged() {
+        // The determinism anchor at loadgen level: a uniform-popularity
+        // workload must replay the exact pre-popularity rng stream —
+        // reproduced here by hand (arrivals, then per-request keyword
+        // draws, no population draws in between).
+        let mix = single_mix(0);
+        let mut a = Rng::new(53);
+        let w = Workload::generate(
+            ArrivalProcess::Poisson { qps: 30.0 },
+            &mix,
+            100,
+            false,
+            &mut a,
+        );
+        let mut b = Rng::new(53);
+        let times = ArrivalProcess::Poisson { qps: 30.0 }.generate(100, &mut b);
+        for (r, t) in w.requests.iter().zip(times) {
+            assert_eq!(r.arrive_ms, t);
+            assert_eq!(r.keywords, mix.sample_keywords(r.class, &mut b));
+            assert_eq!(r.query_id, None);
         }
     }
 

@@ -30,16 +30,20 @@ USAGE:
                   [--discipline D] [--order O] [--wfq-cost C] [--shards S]
                   [--replicas R] [--hedge-quantile Q] [--hedge-budget B]
                   [--shed-deadline-ms N] [--classes SPEC] [--seed N]
+                  [--cache-capacity N] [--cache-segments N]
+                  [--cache-ttl-ms N] [--arrivals A]
                   [--threshold-ms N] [--sampling-ms N]
   hurryup serve   [--qps N] [--requests N] [--policy P] [--discipline D]
                   [--order O] [--wfq-cost C] [--shards S] [--replicas R]
                   [--hedge-quantile Q] [--hedge-budget B] [--traversal T]
                   [--shed-deadline-ms N] [--classes SPEC] [--xla] [--docs N]
+                  [--cache-capacity N] [--cache-segments N]
+                  [--cache-ttl-ms N] [--arrivals A]
   hurryup index   [--docs N] [--vocab N]
   hurryup query   --q \"search terms\" [--xla] [--docs N]
   hurryup figures [fig1 fig2 fig3 fig6 fig7 fig8 fig9 power_table ablations
-                  disciplines shedding classes orders sharding hedging]
-                  [--full | --scale quick|full]
+                  disciplines shedding classes orders sharding hedging
+                  caching] [--full | --scale quick|full]
   hurryup check
 
 POLICIES:    hurry_up | linux_random | round_robin | all_big | all_little |
@@ -67,16 +71,28 @@ HEDGING:     --replicas R deals R copies of every shard onto disjoint core
              the live index traversal
 ADMISSION:   --shed-deadline-ms wraps the policy in the projected-delay
              shedder (inf = admission path, never sheds); sharded runs
-             shed all-or-nothing across shards
+             shed all-or-nothing across shards. With a cache on, the
+             projection is discounted by the class's observed hit rate
+CACHING:     --cache-capacity N (default 0 = no cache) enables the sharded
+             query-result cache: admitted requests probe it and a hit
+             completes immediately, bypassing queues and the shard
+             fan-out; misses populate at completion. --cache-segments
+             splits the LRU into N locked segments (default 8);
+             --cache-ttl-ms bounds entry age (default inf = never expires)
+ARRIVALS:    --arrivals poisson (default) | uniform | diurnal | flashcrowd
+             shapes the open-loop arrival process at the same mean QPS
 CLASSES:     --classes declares service classes (SPEC =
              \"name:key=val,...;name:...\", keys share | mix | deadline_ms |
-             priority | weight | batch_max; mix = paper | fixed:K |
-             uniform:LO:HI). A class deadline_ms is its SLO and admission
-             deadline; higher priority classes are dequeued first under
-             strict order; weight is the class's wfq dequeue share;
-             batch_max lets one core pull that many same-class requests
-             per dispatch (default 1 = unbatched). TOML equivalent:
-             [[workload.class]] tables.
+             priority | weight | batch_max | popularity; mix = paper |
+             fixed:K | uniform:LO:HI; popularity = uniform |
+             zipf:S:POPULATION draws the class's queries Zipf(S)-skewed
+             from a fixed POPULATION-query population, which is what makes
+             a result cache win). A class deadline_ms is its SLO and
+             admission deadline; higher priority classes are dequeued
+             first under strict order; weight is the class's wfq dequeue
+             share; batch_max lets one core pull that many same-class
+             requests per dispatch (default 1 = unbatched). TOML
+             equivalent: [[workload.class]] tables.
 ";
 
 fn main() {
@@ -198,6 +214,12 @@ fn cmd_sim(args: &Args) -> Result<()> {
     cfg.replicas = args.get_usize("replicas", cfg.replicas)?;
     cfg.hedge_quantile = args.get_f64("hedge-quantile", cfg.hedge_quantile)?;
     cfg.hedge_budget = args.get_f64("hedge-budget", cfg.hedge_budget)?;
+    cfg.cache_capacity = args.get_usize("cache-capacity", cfg.cache_capacity)?;
+    cfg.cache_segments = args.get_usize("cache-segments", cfg.cache_segments)?;
+    cfg.cache_ttl_ms = args.get_f64("cache-ttl-ms", cfg.cache_ttl_ms)?;
+    if let Some(a) = args.get("arrivals") {
+        cfg.arrivals = hurryup::loadgen::ArrivalKind::parse(a)?;
+    }
     if let Some(deadline) = shed_deadline_from(args)? {
         cfg.shed_deadline_ms = Some(deadline);
     }
@@ -263,6 +285,9 @@ fn cmd_sim(args: &Args) -> Result<()> {
     if let Some(h) = &out.hedge {
         println!("hedging    : {}", report::hedge_line(h));
     }
+    if let Some(c) = &out.cache {
+        println!("caching    : {}", report::cache_line(c));
+    }
     Ok(())
 }
 
@@ -301,6 +326,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     cfg.hedge_quantile = args.get_f64("hedge-quantile", cfg.hedge_quantile)?;
     cfg.hedge_budget = args.get_f64("hedge-budget", cfg.hedge_budget)?;
+    cfg.cache_capacity = args.get_usize("cache-capacity", cfg.cache_capacity)?;
+    cfg.cache_segments = args.get_usize("cache-segments", cfg.cache_segments)?;
+    cfg.cache_ttl_ms = args.get_f64("cache-ttl-ms", cfg.cache_ttl_ms)?;
+    if let Some(a) = args.get("arrivals") {
+        cfg.arrivals = hurryup::loadgen::ArrivalKind::parse(a)?;
+    }
     if let Some(t) = args.get("traversal") {
         cfg.traversal = hurryup::search::Traversal::parse(t)
             .ok_or_else(|| Error::invalid(format!("unknown traversal `{t}` (union | wand)")))?;
@@ -367,6 +398,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if let Some(h) = &out.hedge {
         println!("hedging    : {}", report::hedge_line(h));
+    }
+    if let Some(c) = &out.cache {
+        println!("caching    : {}", report::cache_line(c));
     }
     Ok(())
 }

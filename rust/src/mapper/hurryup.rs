@@ -126,9 +126,22 @@ impl Policy for HurryUp {
     fn choose_core(
         &mut self,
         idle: &[CoreId],
-        _info: DispatchInfo,
+        info: DispatchInfo,
         ctx: &mut SchedCtx<'_>,
     ) -> Option<CoreId> {
+        // Requests hinted cheap (predicted cache hits) go to the first
+        // idle little core in offered order — deterministic, no rng draw, so
+        // the un-hinted path below replays bit-for-bit. A cheap request on
+        // a little core finishes before the migration threshold anyway, and
+        // this keeps big cores free for real compute.
+        if info.cheap {
+            if let Some(&c) = idle
+                .iter()
+                .find(|&&c| ctx.aff.topology().kind(c) == CoreKind::Little)
+            {
+                return Some(c);
+            }
+        }
         // Same random dispatch as the Linux baseline; the initial thread
         // pool mapping is round-robin (AffinityTable::round_robin) so the
         // difference under test is migration alone.
@@ -364,6 +377,60 @@ mod tests {
             now_ms: 1051.0,
         };
         assert_eq!(n.tick(&mut ctx), baseline);
+    }
+
+    #[test]
+    fn cheap_hint_steers_to_idle_little() {
+        let (mut m, aff) = juno_mapper();
+        let mut rng = Rng::new(5);
+        let idle = vec![CoreId(0), CoreId(4), CoreId(3)];
+        let cheap = DispatchInfo {
+            cheap: true,
+            ..DispatchInfo::untyped(2)
+        };
+        for _ in 0..20 {
+            let mut ctx = SchedCtx {
+                aff: &aff,
+                rng: &mut rng,
+                queues: QueueView::empty(),
+                now_ms: 0.0,
+            };
+            // Deterministic: first idle little in offered order, no rng draw.
+            assert_eq!(m.choose_core(&idle, cheap, &mut ctx), Some(CoreId(4)));
+        }
+        // No idle littles: falls through to the random path.
+        let mut ctx = SchedCtx {
+            aff: &aff,
+            rng: &mut rng,
+            queues: QueueView::empty(),
+            now_ms: 0.0,
+        };
+        let pick = m.choose_core(&[CoreId(0), CoreId(1)], cheap, &mut ctx);
+        assert!(matches!(pick, Some(CoreId(0)) | Some(CoreId(1))));
+    }
+
+    #[test]
+    fn uncheap_dispatch_draw_stream_unchanged() {
+        // The cheap branch must not perturb the rng stream for normal
+        // requests (seeded-replay anchor for the default path).
+        let (mut m, aff) = juno_mapper();
+        let idle = vec![CoreId(1), CoreId(2), CoreId(5)];
+        let mut rng = Rng::new(6);
+        let picks: Vec<_> = (0..50)
+            .map(|_| {
+                let mut ctx = SchedCtx {
+                    aff: &aff,
+                    rng: &mut rng,
+                    queues: QueueView::empty(),
+                    now_ms: 0.0,
+                };
+                m.choose_core(&idle, DispatchInfo::untyped(3), &mut ctx)
+            })
+            .collect();
+        let mut rng2 = Rng::new(6);
+        for p in picks {
+            assert_eq!(p, Some(idle[rng2.below(idle.len())]));
+        }
     }
 
     #[test]

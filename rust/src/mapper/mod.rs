@@ -92,6 +92,13 @@ pub struct DispatchInfo {
     /// order sorts by `arrive_ms + class deadline`; like class and
     /// priority it is legitimately observable (the server stamps it).
     pub arrive_ms: f64,
+    /// Front-end hint that this request is expected to be cheap — e.g. a
+    /// predicted result-cache hit ([`crate::cache`]). Policies may steer
+    /// cheap work to little cores (energy) and keep big cores for misses.
+    /// Both engines currently pass `false` for every enqueued request
+    /// (actual cache hits complete inline and never reach dispatch); the
+    /// field is the seam for a future front-end hit predictor.
+    pub cheap: bool,
 }
 
 impl DispatchInfo {
@@ -103,6 +110,7 @@ impl DispatchInfo {
             class: crate::loadgen::ClassId::DEFAULT,
             priority: 0,
             arrive_ms: 0.0,
+            cheap: false,
         }
     }
 }

@@ -56,7 +56,7 @@ impl Policy for QueueAware {
     fn choose_core(
         &mut self,
         idle: &[CoreId],
-        _info: DispatchInfo,
+        info: DispatchInfo,
         ctx: &mut SchedCtx<'_>,
     ) -> Option<CoreId> {
         if idle.is_empty() {
@@ -65,8 +65,17 @@ impl Policy for QueueAware {
         let ncores = ctx.aff.topology().num_cores().max(1);
         let pressured = ctx.queues.total >= ncores;
         let rank = |c: CoreId| -> (usize, usize) {
-            let kind_rank = if pressured {
-                match ctx.aff.topology().kind(c) {
+            let kind = ctx.aff.topology().kind(c);
+            let kind_rank = if info.cheap {
+                // Predicted cache hit: a little core serves it nearly as
+                // fast and far cheaper — invert the preference so big
+                // cores stay free for misses, pressured or not.
+                match kind {
+                    CoreKind::Little => 0,
+                    CoreKind::Big => 1,
+                }
+            } else if pressured {
+                match kind {
                     CoreKind::Big => 0,
                     CoreKind::Little => 1,
                 }
@@ -165,6 +174,47 @@ mod tests {
         let got = pick(&mut p, &[CoreId(3), CoreId(5)], &[0, 0, 0, 2, 0, 1], &aff).unwrap();
         assert_eq!(got, CoreId(5), "shorter of the two offered queues");
         assert_eq!(pick(&mut p, &[], &[0; 6], &aff), None);
+    }
+
+    #[test]
+    fn cheap_hint_prefers_little_even_under_pressure() {
+        let aff = juno_aff();
+        let mut p = QueueAware::new();
+        let all: Vec<CoreId> = (0..6).map(CoreId).collect();
+        let cheap = DispatchInfo {
+            cheap: true,
+            ..DispatchInfo::untyped(2)
+        };
+        let mut rng = Rng::new(3);
+        // Equal depths, total 12 >= 6 cores: pressure would send a normal
+        // request to a big core, but a cheap one inverts the preference.
+        for _ in 0..4 {
+            let mut ctx = SchedCtx {
+                aff: &aff,
+                rng: &mut rng,
+                queues: QueueView {
+                    per_core: &[2, 2, 2, 2, 2, 2],
+                    per_priority: &[],
+                    total: 12,
+                },
+                now_ms: 0.0,
+            };
+            let got = p.choose_core(&all, cheap, &mut ctx).unwrap();
+            assert_eq!(aff.topology().kind(got), CoreKind::Little, "{got:?}");
+        }
+        // JSQ still dominates: a strictly shorter big queue wins even for
+        // cheap work (depth ranks before kind).
+        let mut ctx = SchedCtx {
+            aff: &aff,
+            rng: &mut rng,
+            queues: QueueView {
+                per_core: &[0, 5, 5, 5, 5, 5],
+                per_priority: &[],
+                total: 25,
+            },
+            now_ms: 0.0,
+        };
+        assert_eq!(p.choose_core(&all, cheap, &mut ctx), Some(CoreId(0)));
     }
 
     #[test]

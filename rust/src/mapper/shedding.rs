@@ -97,6 +97,13 @@ pub struct Shedding {
     /// Begin timestamp + class of in-flight requests (to pair stream
     /// records).
     inflight: HashMap<RequestTag, (f64, Option<ClassId>)>,
+    /// Live per-class result-cache hit rates ([`crate::cache::HitRates`]),
+    /// shared with the engine's probe path. When attached, the projection
+    /// discounts the service estimate by the class's observed hit rate: a
+    /// hit completes at [`crate::cache::HIT_COST_MS`] instead of a full
+    /// service, so the expected delay an arrival faces shrinks as the
+    /// cache warms and fewer requests need shedding.
+    hit_rates: Option<crate::cache::HitRates>,
     /// Requests refused so far (reporting).
     shed: u64,
 }
@@ -113,8 +120,16 @@ impl Shedding {
             est_service_ms: DEFAULT_EST_SERVICE_MS,
             est_by_class: Vec::new(),
             inflight: HashMap::new(),
+            hit_rates: None,
             shed: 0,
         }
+    }
+
+    /// Builder: share the engine's per-class cache hit-rate tracker so
+    /// projections discount by the observed hit rate.
+    pub fn with_hit_rates(mut self, hit_rates: crate::cache::HitRates) -> Shedding {
+        self.hit_rates = Some(hit_rates);
+        self
     }
 
     /// Builder: per-class admission deadlines (ms, indexed by class id —
@@ -136,14 +151,29 @@ impl Shedding {
         shed_deadline_ms: Option<f64>,
         registry: &crate::loadgen::ClassRegistry,
     ) -> Box<dyn Policy> {
+        Shedding::wrap_with_cache(inner, shed_deadline_ms, registry, None)
+    }
+
+    /// [`Shedding::wrap`] with an optional shared hit-rate tracker: when a
+    /// result cache is active the engines pass their [`crate::cache::HitRates`]
+    /// handle so the admission projection is hit-rate-discounted. `None`
+    /// (or a tracker with no probes yet) projects exactly as before.
+    pub fn wrap_with_cache(
+        inner: Box<dyn Policy>,
+        shed_deadline_ms: Option<f64>,
+        registry: &crate::loadgen::ClassRegistry,
+        hit_rates: Option<crate::cache::HitRates>,
+    ) -> Box<dyn Policy> {
         if shed_deadline_ms.is_none() && !registry.any_deadline() {
             return inner;
         }
         let global_ms = shed_deadline_ms.unwrap_or(f64::INFINITY);
-        Box::new(
-            Shedding::new(inner, global_ms)
-                .with_class_deadlines(registry.admission_deadlines(global_ms)),
-        )
+        let mut shed = Shedding::new(inner, global_ms)
+            .with_class_deadlines(registry.admission_deadlines(global_ms));
+        if let Some(hr) = hit_rates {
+            shed = shed.with_hit_rates(hr);
+        }
+        Box::new(shed)
     }
 
     /// Override the cold-start service-time estimate (ms).
@@ -217,7 +247,18 @@ impl Policy for Shedding {
         // backlog, priorities, classes and completed service times are.
         let servers = ctx.queues.per_core.len().max(1);
         let ahead = ctx.queues.at_or_above(info.priority);
-        let projected_ms = ahead as f64 * self.class_est_ms(info.class) / servers as f64;
+        let mut projected_ms = ahead as f64 * self.class_est_ms(info.class) / servers as f64;
+        // With a result cache attached, a fraction h of this class's
+        // arrivals complete at the flat hit cost instead of full service —
+        // discount the projection to the expected delay. The `h > 0.0`
+        // guard keeps the arithmetic (and thus seeded decisions) bit-exact
+        // while the cache is cold or disabled.
+        if let Some(hr) = &self.hit_rates {
+            let h = hr.rate(info.class);
+            if h > 0.0 {
+                projected_ms = h * crate::cache::HIT_COST_MS + (1.0 - h) * projected_ms;
+            }
+        }
         let deadline_ms = self
             .class_deadlines_ms
             .get(info.class.idx())
@@ -499,6 +540,87 @@ mod tests {
 
     fn aff_for_tests() -> AffinityTable {
         AffinityTable::round_robin(Topology::juno_r1())
+    }
+
+    #[test]
+    fn hit_rate_discount_relaxes_the_projection() {
+        use crate::cache::{HitRates, HIT_COST_MS};
+        use crate::loadgen::ClassId;
+        let hr = HitRates::new(2);
+        let (p, aff) = wrap(500.0);
+        let mut p = p.with_hit_rates(hr.clone());
+        // Cold tracker: 30 queued × 150ms / 6 = 750ms > 500 — shed, exactly
+        // as without the tracker (h = 0 takes the undiscounted branch).
+        assert!(matches!(
+            admit_with(&mut p, &[5; 6], &aff),
+            AdmissionDecision::Shed { .. }
+        ));
+        // Warm the tracker to h = 0.5 for class 0: expected delay becomes
+        // 0.5·HIT_COST + 0.5·750 = 375ms ≤ 500 — the same backlog now admits.
+        hr.record(ClassId(0), true);
+        hr.record(ClassId(0), false);
+        assert_eq!(admit_with(&mut p, &[5; 6], &aff), AdmissionDecision::Admit);
+        // The discount is per class: class 1 (never probed) still sheds.
+        let info1 = DispatchInfo {
+            class: ClassId(1),
+            ..DispatchInfo::untyped(3)
+        };
+        match admit_info_with(&mut p, info1, &[5; 6], &[], &aff) {
+            AdmissionDecision::Shed {
+                reason: ShedReason::DeadlineExceeded { projected_ms, .. },
+            } => assert!((projected_ms - 750.0).abs() < 1e-9),
+            other => panic!("expected undiscounted shed, got {other:?}"),
+        }
+        // And a fully warm class projects essentially the hit cost.
+        for _ in 0..98 {
+            hr.record(ClassId(0), true);
+        }
+        let h = hr.rate(ClassId(0));
+        let expect = h * HIT_COST_MS + (1.0 - h) * 750.0;
+        assert!(expect < 10.0, "h={h} expect={expect}");
+        assert_eq!(admit_with(&mut p, &[5; 6], &aff), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn wrap_with_cache_attaches_the_tracker() {
+        use crate::cache::HitRates;
+        use crate::config::KeywordMix;
+        use crate::loadgen::{ClassId, ClassRegistry};
+        let topo = Topology::juno_r1();
+        let implicit = ClassRegistry::single(KeywordMix::Paper);
+        let hr = HitRates::new(1);
+        hr.record(ClassId(0), true); // h = 1.0
+        let mut p = Shedding::wrap_with_cache(
+            PolicyKind::LinuxRandom.build(&topo),
+            Some(500.0),
+            &implicit,
+            Some(hr),
+        );
+        // 750ms raw projection, discounted to ~HIT_COST_MS at h=1 — admit.
+        let aff = aff_for_tests();
+        let mut rng = Rng::new(0);
+        let mut ctx = SchedCtx {
+            aff: &aff,
+            rng: &mut rng,
+            queues: QueueView {
+                per_core: &[5; 6],
+                per_priority: &[],
+                total: 30,
+            },
+            now_ms: 0.0,
+        };
+        assert_eq!(
+            p.admit(DispatchInfo::untyped(3), &mut ctx),
+            AdmissionDecision::Admit
+        );
+        // No deadline anywhere: still returns the inner untouched.
+        let p = Shedding::wrap_with_cache(
+            PolicyKind::LinuxRandom.build(&topo),
+            None,
+            &implicit,
+            Some(HitRates::new(1)),
+        );
+        assert_eq!(p.name(), "linux-random");
     }
 
     #[test]

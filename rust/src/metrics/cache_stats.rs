@@ -1,0 +1,157 @@
+//! Result-cache outcome accounting: how often the cache answered, what it
+//! cost to answer, and what the cache churned through to stay bounded.
+//!
+//! One [`CacheStats`] per run, built by whichever engine executed it —
+//! occupancy counters copied from the cache's own
+//! [`CacheCounters`][crate::cache::CacheCounters] at end of run, latency
+//! split recorded per completion from the request records (`cached` flag).
+//! The split is the headline: a hit completes at the flat probe cost on
+//! the dispatching core while a miss pays the full scatter-gather, so
+//! `hit p50 ≪ miss p50` is the invariant the `figures caching` ablation
+//! asserts per class.
+
+use super::histogram::LatencyHistogram;
+
+/// Hit/miss latency split for one service class.
+#[derive(Clone, Debug)]
+pub struct ClassCacheLatency {
+    /// Class name (from the [`crate::loadgen::ClassRegistry`]).
+    pub name: String,
+    /// Completion latency of cache hits, ms.
+    pub hit: LatencyHistogram,
+    /// Completion latency of cache misses (the full serving path), ms.
+    pub miss: LatencyHistogram,
+}
+
+/// Outcome counters for one run with a result cache attached.
+#[derive(Clone, Debug)]
+pub struct CacheStats {
+    /// Configured capacity (entries, all segments pooled).
+    pub capacity: usize,
+    /// Number of independently locked segments.
+    pub segments: usize,
+    /// Probes answered from the cache.
+    pub hits: u64,
+    /// Probes that fell through to the serving path.
+    pub misses: u64,
+    /// Entries written (at gather/completion time).
+    pub insertions: u64,
+    /// Entries displaced by LRU pressure.
+    pub evictions: u64,
+    /// Entries dropped lazily on TTL/generation expiry (each also counted
+    /// a miss).
+    pub expirations: u64,
+    /// Completion latency of all cache hits, ms.
+    pub hit_latency: LatencyHistogram,
+    /// Completion latency of all cache misses, ms.
+    pub miss_latency: LatencyHistogram,
+    /// Per-class hit/miss latency split, indexed by class id.
+    pub per_class: Vec<ClassCacheLatency>,
+}
+
+impl CacheStats {
+    /// Fresh stats for a cache of `capacity` entries over `segments`
+    /// segments, with one per-class latency slot per name.
+    pub fn new(capacity: usize, segments: usize, class_names: &[String]) -> CacheStats {
+        CacheStats {
+            capacity,
+            segments,
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+            expirations: 0,
+            hit_latency: LatencyHistogram::new(),
+            miss_latency: LatencyHistogram::new(),
+            per_class: class_names
+                .iter()
+                .map(|name| ClassCacheLatency {
+                    name: name.clone(),
+                    hit: LatencyHistogram::new(),
+                    miss: LatencyHistogram::new(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Copy the occupancy counters the cache itself kept
+    /// ([`crate::cache::ResultCache::counters`]).
+    pub fn absorb_counters(&mut self, c: &crate::cache::CacheCounters) {
+        self.hits = c.hits;
+        self.misses = c.misses;
+        self.insertions = c.insertions;
+        self.evictions = c.evictions;
+        self.expirations = c.expirations;
+    }
+
+    /// Record one completion's latency on the hit or miss side (global
+    /// and per-class; out-of-range classes feed only the global split).
+    pub fn record_latency(&mut self, class_idx: usize, hit: bool, latency_ms: f64) {
+        let (global, class) = if hit {
+            (&mut self.hit_latency, self.per_class.get_mut(class_idx).map(|c| &mut c.hit))
+        } else {
+            (&mut self.miss_latency, self.per_class.get_mut(class_idx).map(|c| &mut c.miss))
+        };
+        global.record(latency_ms);
+        if let Some(h) = class {
+            h.record(latency_ms);
+        }
+    }
+
+    /// Total cache probes.
+    pub fn probes(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of probes answered from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        if self.probes() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.probes() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_guard_zero_denominators() {
+        let s = CacheStats::new(64, 8, &["fg".into()]);
+        assert_eq!(s.capacity, 64);
+        assert_eq!(s.segments, 8);
+        assert_eq!(s.probes(), 0);
+        assert_eq!(s.hit_rate(), 0.0);
+        assert_eq!(s.per_class.len(), 1);
+    }
+
+    #[test]
+    fn counters_absorbed_and_latency_split_per_class() {
+        use crate::cache::CacheCounters;
+        let mut s = CacheStats::new(64, 8, &["fg".into(), "bg".into()]);
+        s.absorb_counters(&CacheCounters {
+            hits: 30,
+            misses: 70,
+            insertions: 65,
+            evictions: 1,
+            expirations: 4,
+        });
+        assert!((s.hit_rate() - 0.3).abs() < 1e-12);
+        for _ in 0..10 {
+            s.record_latency(0, true, 0.05);
+            s.record_latency(0, false, 120.0);
+            s.record_latency(1, false, 400.0);
+        }
+        // Out-of-range class: global only, no panic.
+        s.record_latency(9, true, 0.05);
+        assert_eq!(s.hit_latency.count(), 11);
+        assert_eq!(s.miss_latency.count(), 20);
+        assert_eq!(s.per_class[0].hit.count(), 10);
+        assert_eq!(s.per_class[0].miss.count(), 10);
+        assert_eq!(s.per_class[1].hit.count(), 0);
+        assert_eq!(s.per_class[1].miss.count(), 10);
+        assert!(s.per_class[0].hit.percentile(0.5) < s.per_class[0].miss.percentile(0.5));
+    }
+}

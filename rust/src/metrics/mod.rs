@@ -4,9 +4,12 @@
 //! accounting (service-class SLO reports), per-shard outcome accounting
 //! for scatter-gather runs (task tails + slowest-shard attribution),
 //! hedging outcome accounting (`hedge_stats`: hedge/win rates and
-//! cancelled duplicate work), and the shared report tables (`report`)
-//! the CLI and experiment runners print.
+//! cancelled duplicate work), result-cache outcome accounting
+//! (`cache_stats`: hit rate and the per-class hit/miss latency split),
+//! and the shared report tables (`report`) the CLI and experiment
+//! runners print.
 
+pub mod cache_stats;
 pub mod class_stats;
 pub mod hedge_stats;
 pub mod histogram;
@@ -15,6 +18,7 @@ pub mod report;
 pub mod shard_stats;
 pub mod summary;
 
+pub use cache_stats::{CacheStats, ClassCacheLatency};
 pub use class_stats::ClassStats;
 pub use hedge_stats::HedgeStats;
 pub use histogram::LatencyHistogram;

@@ -3,6 +3,7 @@
 //! library users all call these instead of reimplementing row formats
 //! (extracted from the launcher, where the class table used to live).
 
+use super::cache_stats::CacheStats;
 use super::class_stats::ClassStats;
 use super::hedge_stats::HedgeStats;
 use super::shard_stats::{tail_amplification, ShardStats};
@@ -108,6 +109,25 @@ pub fn hedge_line(h: &HedgeStats) -> String {
     )
 }
 
+/// One-line result-cache summary: hit rate, the hit/miss latency split,
+/// and the occupancy churn (inserts/evicts/expiries).
+pub fn cache_line(c: &CacheStats) -> String {
+    format!(
+        "cache cap={} seg={}: {} hits of {} probes ({}) | hit p50 {} vs miss p50 {} | \
+         {} inserted, {} evicted, {} expired",
+        c.capacity,
+        c.segments,
+        c.hits,
+        c.probes(),
+        pct(c.hit_rate()),
+        ms_or_dash(c.hit_latency.percentile(0.5), c.hit_latency.count()),
+        ms_or_dash(c.miss_latency.percentile(0.5), c.miss_latency.count()),
+        c.insertions,
+        c.evictions,
+        c.expirations,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,6 +163,30 @@ mod tests {
         assert!(line.contains("amplification"), "{line}");
         assert!(!line.contains("NaN"));
         assert_eq!(fanout_line(0.0, &[]), "no measured shard tasks");
+    }
+
+    #[test]
+    fn cache_line_reports_split_without_nans() {
+        let mut c = CacheStats::new(256, 8, &["fg".into()]);
+        c.absorb_counters(&crate::cache::CacheCounters {
+            hits: 40,
+            misses: 60,
+            insertions: 55,
+            evictions: 3,
+            expirations: 2,
+        });
+        for _ in 0..10 {
+            c.record_latency(0, true, 0.05);
+            c.record_latency(0, false, 150.0);
+        }
+        let line = cache_line(&c);
+        assert!(line.contains("cap=256"), "{line}");
+        assert!(line.contains("40 hits of 100"), "{line}");
+        assert!(!line.contains("NaN"), "{line}");
+        // A run with zero probes (cache on, nothing cacheable) renders
+        // dashes, not NaNs.
+        let empty = cache_line(&CacheStats::new(64, 4, &[]));
+        assert!(!empty.contains("NaN"), "{empty}");
     }
 
     #[test]

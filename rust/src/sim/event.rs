@@ -31,6 +31,12 @@ pub enum EventKind {
     /// budget allows. Unreplicated runs never schedule one, so seeded
     /// replays are untouched.
     HedgeTimer(usize),
+    /// Request with this workload index completes from the result cache
+    /// at the flat hit cost ([`crate::cache::HIT_COST_MS`]) — it never
+    /// entered the queues or the fan-out. Uncached runs
+    /// (`cache_capacity = 0`, the default) never schedule one, so seeded
+    /// replays are untouched.
+    CacheHit(usize),
 }
 
 /// A scheduled event.

@@ -7,19 +7,46 @@
 
 use super::event::{EventKind, EventQueue};
 use super::service::{ServiceDemand, ServiceSampler};
+use crate::cache::{CacheKey, HitRates, ResultCache, HIT_COST_MS};
 use crate::config::SimConfig;
 use crate::ipc::{RequestTag, StatsRecord};
-use crate::loadgen::{ArrivalProcess, ClassId, ClassRegistry, Workload, WorkloadMix};
+use crate::loadgen::{ClassId, ClassRegistry, Request, Workload, WorkloadMix};
 use crate::mapper::{AdmissionDecision, DispatchInfo, Policy, Shedding};
 use crate::hedge::{CancelSet, HedgePolicy, ReplicaPlan};
-use crate::metrics::{ClassStats, HedgeStats, LatencyHistogram, ShardStats};
+use crate::metrics::{CacheStats, ClassStats, HedgeStats, LatencyHistogram, ShardStats};
 use crate::platform::{AffinityTable, CoreId, CoreKind, EnergyMeters};
 use crate::sched::{
-    AdmissionOutcome, Dispatcher, OrderKind, OrderSpec, SchedCtx, ServiceEstimates, WfqCost,
-    WfqCostKind,
+    Dispatcher, OrderKind, OrderSpec, SchedCtx, ServiceEstimates, WfqCost, WfqCostKind,
 };
 use crate::shard::{FanOutTable, FirstWins};
 use crate::util::Rng;
+
+/// Cache identity of a request: concrete terms first, the generator's
+/// population rank for term-less sim streams, `None` (uncacheable) for
+/// uniform-popularity term-less traffic — which is what keeps all-default
+/// runs on the exact pre-cache path even with a capacity configured.
+fn cache_key(req: &Request) -> Option<CacheKey> {
+    CacheKey::for_request(&req.terms, req.class.idx(), req.query_id)
+}
+
+/// Post-hoc cache accounting shared by both sim paths: occupancy counters
+/// from the cache itself, the hit/miss latency split from the request
+/// records (post-warmup, the same population `SimOutput::latency`
+/// describes).
+fn build_cache_stats<V: Clone>(
+    cache: &ResultCache<V>,
+    cfg: &SimConfig,
+    registry: &ClassRegistry,
+    per_request: &[RequestRecord],
+) -> CacheStats {
+    let names: Vec<String> = registry.specs().iter().map(|s| s.name.clone()).collect();
+    let mut cs = CacheStats::new(cfg.cache_capacity, cfg.cache_segments, &names);
+    cs.absorb_counters(&cache.counters());
+    for r in per_request.iter().skip(cfg.warmup_requests) {
+        cs.record_latency(r.class.idx(), r.cached, r.latency_ms());
+    }
+    cs
+}
 
 /// Build one queue's order spec from the run selectors, attaching the
 /// shared size-aware estimate table when configured.
@@ -54,6 +81,11 @@ pub struct RequestRecord {
     pub final_kind: CoreKind,
     /// Whether the serving thread migrated mid-request.
     pub migrated: bool,
+    /// Whether the result cache answered this request — it completed at
+    /// the flat hit cost on the dispatching core, never entered the
+    /// queues, and `started_ms == arrived_ms`, `first_kind == final_kind
+    /// == Little` by convention.
+    pub cached: bool,
 }
 
 impl RequestRecord {
@@ -147,6 +179,14 @@ pub struct SimOutput {
     pub replicas: usize,
     /// Hedged-request accounting (`Some` iff `replicas` > 1).
     pub hedge: Option<HedgeStats>,
+    /// Result-cache accounting (`Some` iff `SimConfig::cache_capacity` >
+    /// 0). Hits complete inline at the probe cost and never reach the
+    /// queues or the fan-out — conservation becomes `offered == hits +
+    /// miss-completions + shed`, with both completion kinds pooled in
+    /// `completed`/`per_request` (the `cached` flag splits them) and
+    /// per-shard task counts covering misses only. Latency histograms
+    /// follow the same post-warmup convention as `latency`.
+    pub cache: Option<CacheStats>,
     /// Completions excluded from latency/placement statistics at the start
     /// of the run (`SimConfig::warmup_requests`).
     pub warmup: usize,
@@ -264,12 +304,14 @@ impl Simulation {
     }
 
     /// Run with a freshly generated workload (classified per the config's
-    /// class registry).
+    /// class registry, arrival-shaped per `SimConfig::arrivals` — the
+    /// default [`crate::loadgen::ArrivalKind::Poisson`] reproduces the
+    /// historical stream bit for bit).
     pub fn run(self) -> SimOutput {
         let mut rng = Rng::new(self.cfg.seed);
         let mix = WorkloadMix::new(&self.cfg.class_registry(), 0);
         let workload = Workload::generate(
-            ArrivalProcess::Poisson { qps: self.cfg.qps },
+            self.cfg.arrivals.process(self.cfg.qps),
             &mix,
             self.cfg.num_requests,
             false,
@@ -312,8 +354,18 @@ impl Simulation {
         // declared. Each class sheds against its own deadline_ms (priority
         // shedding). An infinite deadline admits everything and leaves
         // seeded runs bit-for-bit unchanged.
-        let mut policy: Box<dyn Policy> =
-            Shedding::wrap(cfg.policy.build(&topology), cfg.shed_deadline_ms, &registry);
+        // Result cache + per-class hit-rate tracker, both gated on a
+        // nonzero capacity: capacity-0 runs build neither and probe
+        // nothing, so the historical event stream replays bit for bit.
+        let cache: Option<ResultCache<()>> = (cfg.cache_capacity > 0)
+            .then(|| ResultCache::new(cfg.cache_capacity, cfg.cache_segments, cfg.cache_ttl_ms));
+        let hit_rates = cache.as_ref().map(|_| HitRates::new(registry.len()));
+        let mut policy: Box<dyn Policy> = Shedding::wrap_with_cache(
+            cfg.policy.build(&topology),
+            cfg.shed_deadline_ms,
+            &registry,
+            hit_rates.clone(),
+        );
         let mut aff = AffinityTable::round_robin(topology.clone());
         // Tick-time ctx rng, separate from the dispatch/noise stream (same
         // convention as the live mapper thread): a policy that draws in
@@ -505,14 +557,41 @@ impl Simulation {
                         class: req.class,
                         priority: priorities[req.class.idx()],
                         arrive_ms: req.arrive_ms,
+                        cheap: false,
                     };
-                    // Lifecycle: enqueue → admit (inside the dispatcher) →
-                    // queue. A shed request never touches the queues.
-                    match dispatcher.enqueue(widx, info, policy.as_mut(), &aff, &mut rng, now) {
-                        AdmissionOutcome::Admitted => {}
-                        AdmissionOutcome::Shed { .. } => {
+                    // Lifecycle: admit → cache-probe → queue. A shed request
+                    // never touches the queues; an admitted hit completes
+                    // inline at the flat probe cost and never touches them
+                    // either. With no cache this is `Dispatcher::enqueue`
+                    // bit for bit (probe + enqueue_admitted ≡ enqueue).
+                    match dispatcher.admit_probe(info, policy.as_mut(), &aff, &mut rng, now) {
+                        AdmissionDecision::Shed { .. } => {
                             shed += 1;
                             per_class[req.class.idx()].record_shed();
+                        }
+                        AdmissionDecision::Admit => {
+                            let hit = match (&cache, cache_key(req)) {
+                                (Some(c), Some(key)) => {
+                                    let hit = c.get(&key, now).is_some();
+                                    if let Some(hr) = &hit_rates {
+                                        hr.record(req.class, hit);
+                                    }
+                                    hit
+                                }
+                                _ => false,
+                            };
+                            if hit {
+                                events.push(now + HIT_COST_MS, EventKind::CacheHit(widx));
+                            } else {
+                                dispatcher.enqueue_admitted(
+                                    widx,
+                                    info,
+                                    policy.as_mut(),
+                                    &aff,
+                                    &mut rng,
+                                    now,
+                                );
+                            }
                         }
                     }
                     try_dispatch!();
@@ -536,6 +615,7 @@ impl Simulation {
                         first_kind: run.first_kind,
                         final_kind: kind,
                         migrated: run.migrated,
+                        cached: false,
                     };
                     let measured = per_request.len() >= cfg.warmup_requests;
                     if measured {
@@ -552,6 +632,14 @@ impl Simulation {
                     per_request.push(record);
                     completed += 1;
                     last_completion_ms = now;
+                    // Populate at completion: only misses reach here, so a
+                    // repeat of this query hits until evicted/expired (the
+                    // sim caches cost, not payloads — the value is unit).
+                    if let Some(c) = &cache {
+                        if let Some(key) = cache_key(req) {
+                            c.insert(key, (), now);
+                        }
+                    }
                     // End stats record.
                     if let Some(tag) = core_rid[core_id.0].take() {
                         stream.push(StatsRecord {
@@ -603,6 +691,36 @@ impl Simulation {
                     }
                     try_dispatch!();
                 }
+                EventKind::CacheHit(widx) => {
+                    // The result cache answered at admission: the request
+                    // completes here at the flat probe cost, on the
+                    // dispatching core (Little by convention) — it never
+                    // entered a queue, sampled a demand, or burned a core.
+                    let req = &workload.requests[widx];
+                    let record = RequestRecord {
+                        class: req.class,
+                        keywords: req.keywords,
+                        arrived_ms: req.arrive_ms,
+                        started_ms: req.arrive_ms,
+                        completed_ms: now,
+                        first_kind: CoreKind::Little,
+                        final_kind: CoreKind::Little,
+                        migrated: false,
+                        cached: true,
+                    };
+                    let measured = per_request.len() >= cfg.warmup_requests;
+                    if measured {
+                        latency.record(record.latency_ms());
+                    }
+                    per_class[req.class.idx()].record_completion(
+                        record.latency_ms(),
+                        record.queue_ms(),
+                        measured,
+                    );
+                    per_request.push(record);
+                    completed += 1;
+                    last_completion_ms = now;
+                }
                 EventKind::ShardMapperTick(_) | EventKind::HedgeTimer(_) => {
                     unreachable!("shard-tagged events never occur in an unsharded run")
                 }
@@ -629,6 +747,9 @@ impl Simulation {
             workload.len(),
             "per-class conservation"
         );
+        let cache_stats = cache
+            .as_ref()
+            .map(|c| build_cache_stats(c, cfg, &registry, &per_request));
         SimOutput {
             latency,
             per_request,
@@ -645,6 +766,7 @@ impl Simulation {
             per_shard: Vec::new(),
             replicas: 1,
             hedge: None,
+            cache: cache_stats,
             warmup: cfg.warmup_requests,
         }
     }
@@ -699,6 +821,12 @@ impl Simulation {
         let plan = ReplicaPlan::partition(&topology, s_count, r_count);
         let n_slots = plan.slots();
         let hedging = r_count > 1;
+        // Result cache + hit-rate tracker (same gating as the unsharded
+        // path): one cache in front of the whole fan-out — a hit bypasses
+        // every shard, replica and hedge timer at once.
+        let cache: Option<ResultCache<()>> = (cfg.cache_capacity > 0)
+            .then(|| ResultCache::new(cfg.cache_capacity, cfg.cache_segments, cfg.cache_ttl_ms));
+        let hit_rates = cache.as_ref().map(|_| HitRates::new(registry.len()));
         let est = matches!(cfg.wfq_cost, WfqCostKind::Estimated)
             .then(|| ServiceEstimates::new(registry.len()));
         let sampler = ServiceSampler::from_config(cfg);
@@ -762,8 +890,12 @@ impl Simulation {
             .map(|slot| {
                 let local_topo = plan.local_topology(slot, &topology);
                 let (disc, order, pkind) = cfg.shard_scheduling(slot);
-                let policy =
-                    Shedding::wrap(pkind.build(&local_topo), cfg.shed_deadline_ms, &registry);
+                let policy = Shedding::wrap_with_cache(
+                    pkind.build(&local_topo),
+                    cfg.shed_deadline_ms,
+                    &registry,
+                    hit_rates.clone(),
+                );
                 let spec = order_spec_for(order, &registry, &est);
                 let salt = (slot as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
                 let mut dispatcher: Dispatcher<usize> =
@@ -838,6 +970,11 @@ impl Simulation {
             .collect();
         let mut completed = 0usize;
         let mut shed = 0usize;
+        // Parents answered from the result cache: they complete inline,
+        // never open a fan-out entry, and never appear in any shard's
+        // task accounting — per-shard conservation becomes
+        // `offered + cache_hits == workload.len()`.
+        let mut cache_hits = 0usize;
         let mut migrations = 0usize;
         let mut now = 0.0f64;
         let mut last_completion_ms = 0.0f64;
@@ -943,6 +1080,7 @@ impl Simulation {
                         class: req.class,
                         priority: priorities[req.class.idx()],
                         arrive_ms: req.arrive_ms,
+                        cheap: false,
                     };
                     // All-or-nothing fan-out admission: probe every
                     // *primary* slot's policy against its own backlog
@@ -970,6 +1108,24 @@ impl Simulation {
                         for st in shard_stats.iter_mut() {
                             st.record_shed(req.class);
                         }
+                        continue;
+                    }
+                    // Admitted everywhere: probe the cache before fanning
+                    // out. A hit completes the parent inline — it never
+                    // opens a fan-out entry, enqueues a task, or arms a
+                    // hedge timer, so the shards never see it.
+                    let hit = match (&cache, cache_key(req)) {
+                        (Some(c), Some(key)) => {
+                            let hit = c.get(&key, now).is_some();
+                            if let Some(hr) = &hit_rates {
+                                hr.record(req.class, hit);
+                            }
+                            hit
+                        }
+                        _ => false,
+                    };
+                    if hit {
+                        events.push(now + HIT_COST_MS, EventKind::CacheHit(widx));
                     } else {
                         fanout.open(widx as u64, req.class, req.arrive_ms);
                         for srt in shards.iter_mut().take(s_count) {
@@ -1136,6 +1292,7 @@ impl Simulation {
                             first_kind: crit_task.partial.first_kind,
                             final_kind: crit_task.partial.final_kind,
                             migrated: done.tasks().any(|(_, t)| t.partial.migrated),
+                            cached: false,
                         };
                         let measured = per_request.len() >= cfg.warmup_requests;
                         if measured {
@@ -1158,6 +1315,14 @@ impl Simulation {
                         per_request.push(record);
                         completed += 1;
                         last_completion_ms = now;
+                        // Populate at gather: exactly one gather happens per
+                        // parent (first-wins dedups hedged duplicates), so a
+                        // hedged race never double-inserts.
+                        if let Some(c) = &cache {
+                            if let Some(key) = cache_key(req) {
+                                c.insert(key, (), now);
+                            }
+                        }
                     }
                     try_dispatch_shard!(slot);
                     // An in-flight cancellation reclaimed a core on the
@@ -1232,6 +1397,7 @@ impl Simulation {
                         class: req.class,
                         priority: priorities[req.class.idx()],
                         arrive_ms: req.arrive_ms,
+                        cheap: false,
                     };
                     fired_scratch.clear();
                     for &shard in &pending_scratch {
@@ -1262,6 +1428,36 @@ impl Simulation {
                     for &fired in &fired_scratch {
                         try_dispatch_shard!(fired);
                     }
+                }
+                EventKind::CacheHit(widx) => {
+                    // Cache-answered parent: completes at the flat probe
+                    // cost without ever fanning out. Shard stats never see
+                    // it (see the `cache_hits` conservation note above).
+                    let req = &workload.requests[widx];
+                    let record = RequestRecord {
+                        class: req.class,
+                        keywords: req.keywords,
+                        arrived_ms: req.arrive_ms,
+                        started_ms: req.arrive_ms,
+                        completed_ms: now,
+                        first_kind: CoreKind::Little,
+                        final_kind: CoreKind::Little,
+                        migrated: false,
+                        cached: true,
+                    };
+                    let measured = per_request.len() >= cfg.warmup_requests;
+                    if measured {
+                        latency.record(record.latency_ms());
+                    }
+                    per_class[req.class.idx()].record_completion(
+                        record.latency_ms(),
+                        record.queue_ms(),
+                        measured,
+                    );
+                    per_request.push(record);
+                    completed += 1;
+                    cache_hits += 1;
+                    last_completion_ms = now;
                 }
                 EventKind::MapperTick => {
                     unreachable!("untagged mapper ticks never occur in a sharded run")
@@ -1294,7 +1490,11 @@ impl Simulation {
             "every queue-cancel mark must drop exactly one duplicate"
         );
         for st in &shard_stats {
-            debug_assert_eq!(st.offered(), workload.len(), "per-shard conservation");
+            debug_assert_eq!(
+                st.offered() + cache_hits,
+                workload.len(),
+                "per-shard conservation (cache hits never fan out)"
+            );
         }
         debug_assert_eq!(
             per_class.iter().map(ClassStats::offered).sum::<usize>(),
@@ -1306,6 +1506,9 @@ impl Simulation {
         }
 
         let policy_name = shards[0].policy.name();
+        let cache_stats = cache
+            .as_ref()
+            .map(|c| build_cache_stats(c, cfg, &registry, &per_request));
         SimOutput {
             latency,
             per_request,
@@ -1322,6 +1525,7 @@ impl Simulation {
             per_shard: shard_stats,
             replicas: r_count,
             hedge,
+            cache: cache_stats,
             warmup: cfg.warmup_requests,
         }
     }
@@ -2140,5 +2344,109 @@ mod tests {
         assert_eq!(out.completed + out.shed, 2_000, "conservation");
         assert_eq!(out.per_request.len(), out.completed);
         assert!(out.goodput_qps() > 0.0);
+    }
+
+    /// Zipf popularity over a small population + an ample cache: repeats
+    /// hit, hits complete at the flat probe cost, and the accounting
+    /// closes exactly (offered == hits + miss-completions + shed;
+    /// insert-once identity with no TTL/eviction pressure).
+    #[test]
+    fn cache_hits_split_latency_and_conserve() {
+        use crate::loadgen::{ClassSpec, Popularity};
+        let cfg = base(PolicyKind::LinuxRandom)
+            .with_requests(2_000)
+            .with_classes(vec![ClassSpec::new("fg", KeywordMix::Paper)
+                .with_popularity(Popularity::Zipf { s: 1.1, population: 50 })])
+            .with_cache_capacity(200);
+        let out = Simulation::new(cfg).run();
+        assert_eq!(out.completed + out.shed, 2_000, "conservation");
+        let cs = out.cache.as_ref().expect("capacity > 0 reports cache stats");
+        let cached = out.per_request.iter().filter(|r| r.cached).count();
+        assert!(cached > 0, "a 50-query population at 2000 requests must repeat");
+        assert_eq!(cs.hits as usize, cached, "every hit completes as a cached record");
+        assert_eq!(cs.probes() as usize, 2_000, "every admitted arrival probes");
+        // Insert-once: capacity (200) exceeds the population (50), no TTL —
+        // every completed miss inserts, nothing evicts or expires.
+        assert_eq!(cs.insertions as usize, out.completed - cached);
+        assert_eq!(cs.evictions, 0);
+        assert_eq!(cs.expirations, 0);
+        // Hits complete at the flat probe cost; misses pay real service.
+        for r in out.per_request.iter().filter(|r| r.cached) {
+            assert!((r.latency_ms() - crate::cache::HIT_COST_MS).abs() < 1e-9);
+            assert_eq!(r.queue_ms(), 0.0);
+            assert!(!r.migrated);
+        }
+        assert!(
+            cs.hit_latency.percentile(0.5) < cs.miss_latency.percentile(0.5),
+            "hit p50 {} must beat miss p50 {}",
+            cs.hit_latency.percentile(0.5),
+            cs.miss_latency.percentile(0.5)
+        );
+    }
+
+    /// Uniform-popularity traffic is uncacheable (no terms, no population
+    /// rank), so switching the cache on must not move a single event:
+    /// zero probes, and a bit-for-bit replay of the uncached run.
+    #[test]
+    fn uncacheable_traffic_with_cache_enabled_replays_uncached_run() {
+        let mk = || {
+            base(PolicyKind::HurryUp {
+                sampling_ms: 25.0,
+                threshold_ms: 50.0,
+            })
+            .with_requests(1_500)
+        };
+        let uncached = Simulation::new(mk()).run();
+        let enabled = Simulation::new(mk().with_cache_capacity(4_096)).run();
+        assert!(uncached.cache.is_none(), "capacity 0 reports no cache");
+        let cs = enabled.cache.as_ref().expect("capacity > 0 reports cache stats");
+        assert_eq!(cs.probes(), 0, "uniform traffic never forms a key");
+        assert_eq!(uncached.per_request.len(), enabled.per_request.len());
+        for (a, b) in uncached.per_request.iter().zip(&enabled.per_request) {
+            assert_eq!(a.started_ms, b.started_ms);
+            assert_eq!(a.completed_ms, b.completed_ms);
+            assert_eq!(a.final_kind, b.final_kind);
+        }
+        assert_eq!(uncached.migrations, enabled.migrations);
+        assert_eq!(uncached.duration_ms, enabled.duration_ms);
+        assert!((uncached.energy.total_j() - enabled.energy.total_j()).abs() < 1e-12);
+    }
+
+    /// Sharded serving with a cache in front: a hit parent never fans out
+    /// — shard task counts cover misses only, and per-shard conservation
+    /// becomes offered + hits == total.
+    #[test]
+    fn sharded_cache_hits_bypass_the_fanout() {
+        use crate::loadgen::{ClassSpec, Popularity};
+        let mk = || {
+            base(PolicyKind::HurryUp {
+                sampling_ms: 25.0,
+                threshold_ms: 50.0,
+            })
+            .with_qps(20.0)
+            .with_requests(1_500)
+            .with_shards(2)
+            .with_classes(vec![ClassSpec::new("fg", KeywordMix::Paper)
+                .with_popularity(Popularity::Zipf { s: 1.1, population: 60 })])
+            .with_cache_capacity(256)
+        };
+        let out = Simulation::new(mk()).run();
+        assert_eq!(out.completed + out.shed, 1_500);
+        let cs = out.cache.as_ref().expect("capacity > 0 reports cache stats");
+        let cached = out.per_request.iter().filter(|r| r.cached).count();
+        assert!(cached > 0, "repeats must hit");
+        assert_eq!(cs.hits as usize, cached);
+        for s in &out.per_shard {
+            // Hit parents never become shard tasks.
+            assert_eq!(s.offered() + cached, 1_500, "shard {}", s.shard);
+            assert_eq!(s.completed() + cached, out.completed, "shard {}", s.shard);
+        }
+        // Seeded replay holds with the cache in the loop.
+        let again = Simulation::new(mk()).run();
+        assert_eq!(out.duration_ms, again.duration_ms);
+        assert_eq!(
+            out.per_request.iter().filter(|r| r.cached).count(),
+            again.per_request.iter().filter(|r| r.cached).count()
+        );
     }
 }

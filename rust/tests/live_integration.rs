@@ -460,3 +460,93 @@ fn xla_backend_end_to_end_if_artifact_present() {
         .count();
     assert!(with_hits > 30, "xla backend returned too few hits: {with_hits}");
 }
+
+#[test]
+fn live_cache_hits_bypass_workers_and_conserve() {
+    use hurryup::loadgen::{ClassSpec, Popularity};
+    // The result cache on real threads: a Zipf-popular query stream over
+    // a 40-query population against a 512-entry cache. Hits complete on
+    // the load-generator thread (tid 0, zero scoring passes); misses run
+    // the full worker path and populate at completion.
+    let cfg = LiveConfig {
+        cache_capacity: 512,
+        classes: vec![ClassSpec::new("popular", KeywordMix::Paper).with_popularity(
+            Popularity::Zipf {
+                s: 1.1,
+                population: 40,
+            },
+        )],
+        qps: 150.0,
+        num_requests: 200,
+        ..base_cfg()
+    };
+    let report = LiveServer::new(cfg, small_index()).run().unwrap();
+    assert_eq!(report.per_request.len() + report.shed, 200, "conservation");
+    assert_eq!(report.shed, 0, "no admission control configured");
+    let cached = report.per_request.iter().filter(|r| r.cached).count();
+    let cs = report.cache.as_ref().expect("cache stats present");
+    assert!(cs.hits > 0, "40-query Zipf population must repeat in 200 draws");
+    assert_eq!(cs.hits as usize, cached, "counter matches tagged records");
+    // Every admitted request is probed exactly once; every completed miss
+    // inserts exactly once (ample capacity, no TTL: nothing evicts).
+    assert_eq!(cs.probes() as usize, 200);
+    assert_eq!(cs.insertions as usize, 200 - cached);
+    assert_eq!(cs.evictions + cs.expirations, 0);
+    for r in report.per_request.iter().filter(|r| r.cached) {
+        assert_eq!(r.passes, 0, "hits never score");
+        assert_eq!(r.tid, 0, "hits complete on the dispatching thread");
+        assert!(r.started_ms == r.arrived_ms, "hits never wait");
+    }
+    // A hit serves the merged result its miss populated.
+    let served = report
+        .per_request
+        .iter()
+        .filter(|r| r.cached && r.top_hit.is_some())
+        .count();
+    assert!(served > 0, "cached responses carry real results");
+}
+
+#[test]
+fn sharded_live_cache_hits_skip_the_fanout() {
+    use hurryup::loadgen::{ClassSpec, Popularity};
+    // Sharded serving + cache: a hit parent never opens a fan-out entry
+    // or queues a shard task, so per-shard offered counts only misses.
+    let corpus = CorpusConfig {
+        num_docs: 800,
+        vocab_size: 2_000,
+        ..CorpusConfig::small()
+    }
+    .build();
+    let cfg = LiveConfig {
+        shards: 2,
+        cache_capacity: 512,
+        classes: vec![ClassSpec::new("popular", KeywordMix::Paper).with_popularity(
+            Popularity::Zipf {
+                s: 1.1,
+                population: 30,
+            },
+        )],
+        qps: 100.0,
+        num_requests: 120,
+        ..base_cfg()
+    };
+    let report = LiveServer::from_corpus(cfg, &corpus).run().unwrap();
+    assert_eq!(report.per_request.len() + report.shed, 120, "conservation");
+    let cached = report.per_request.iter().filter(|r| r.cached).count();
+    let cs = report.cache.as_ref().expect("cache stats present");
+    assert!(cs.hits > 0, "30-query Zipf population must repeat in 120 draws");
+    assert_eq!(cs.hits as usize, cached);
+    let gathered = report.per_request.len() - cached;
+    for s in &report.per_shard {
+        // Hit parents bypassed this shard entirely.
+        assert_eq!(s.offered(), gathered, "shard {}", s.shard);
+    }
+    // Critical-path attribution still partitions the *gathered* parents.
+    assert_eq!(
+        report.per_shard.iter().map(|s| s.critical).sum::<usize>(),
+        gathered
+    );
+    for r in report.per_request.iter().filter(|r| r.cached) {
+        assert_eq!(r.passes, 0, "hits aggregate no shard passes");
+    }
+}

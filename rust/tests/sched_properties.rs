@@ -890,3 +890,129 @@ fn prop_decentralized_disciplines_replay_exactly() {
         }
     });
 }
+
+/// The caching anchor: the cache knobs at their defaults — capacity 0,
+/// 8 segments, infinite TTL, Poisson arrivals, all set EXPLICITLY — take
+/// the exact pre-cache code path and replay the PR 7 seeded output bit
+/// for bit (same config/seed as the anchor chain above, so the chain
+/// extends back to the pre-`sched` simulator). Capacity 0 means not even
+/// a probe: no cache is constructed and the output carries no stats.
+#[test]
+fn default_cache_knobs_replay_pr7_seeded_output() {
+    use hurryup::loadgen::ArrivalKind;
+    let mk = || {
+        SimConfig::paper_default(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        })
+        .with_qps(30.0)
+        .with_requests(3_000)
+        .with_seed(11)
+    };
+    let default_run = Simulation::new(mk()).run();
+    let explicit = Simulation::new(
+        mk().with_cache_capacity(0)
+            .with_cache_segments(8)
+            .with_cache_ttl(f64::INFINITY)
+            .with_arrivals(ArrivalKind::Poisson),
+    )
+    .run();
+    assert!(default_run.cache.is_none(), "capacity 0 carries no stats");
+    assert!(explicit.cache.is_none());
+    assert_eq!(default_run.per_request.len(), explicit.per_request.len());
+    for (x, y) in default_run.per_request.iter().zip(&explicit.per_request) {
+        assert_eq!(x.arrived_ms, y.arrived_ms);
+        assert_eq!(x.started_ms, y.started_ms);
+        assert_eq!(x.completed_ms, y.completed_ms);
+        assert_eq!(x.first_kind, y.first_kind);
+        assert_eq!(x.final_kind, y.final_kind);
+        assert_eq!(x.migrated, y.migrated);
+        assert!(!x.cached && !y.cached, "nothing is cached at capacity 0");
+    }
+    assert_eq!(default_run.migrations, explicit.migrations);
+    assert_eq!(default_run.duration_ms, explicit.duration_ms);
+    assert!((default_run.energy.total_j() - explicit.energy.total_j()).abs() < 1e-12);
+}
+
+/// Cache conservation, randomized: offered == cache-hit completions +
+/// miss completions + shed, per class; and with ample capacity and no
+/// TTL, insert-exactly-once holds (insertions == completed misses — a
+/// hedged or sharded duplicate never double-populates; evictions and
+/// expirations stay zero).
+#[test]
+fn prop_cached_runs_conserve_and_populate_exactly_once() {
+    use hurryup::loadgen::Popularity;
+    prop::check(8, |rng: &mut Rng, _i| {
+        let n = rng.range(600, 1_200);
+        let population = rng.range(30, 120);
+        let s = rng.f64_range(0.7, 1.4);
+        let shards = if rng.chance(0.5) { 1 } else { 2 };
+        let with_deadline = rng.chance(0.5);
+        let classes = vec![
+            ClassSpec::new("popular", KeywordMix::Paper)
+                .with_share(0.6)
+                .with_popularity(Popularity::Zipf { s, population }),
+            ClassSpec::new("fresh", KeywordMix::Uniform(3, 8)).with_share(0.4),
+        ];
+        let mut cfg = SimConfig::paper_default(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        })
+        .with_qps(rng.f64_range(15.0, 40.0))
+        .with_requests(n)
+        .with_seed(rng.next_u64())
+        .with_shards(shards)
+        .with_classes(classes)
+        .with_cache_capacity(8_192); // ample: every population fits
+        if with_deadline {
+            cfg = cfg.with_shed_deadline(rng.f64_range(400.0, 900.0));
+        }
+        let out = Simulation::new(cfg).run();
+        let cached = out.per_request.iter().filter(|r| r.cached).count();
+        let misses = out.per_request.len() - cached;
+        // Conservation with the cache in the admission path.
+        assert_eq!(
+            cached + misses + out.shed,
+            n,
+            "S={shards}: offered == hits + miss-completions + shed"
+        );
+        let cs = out.cache.as_ref().expect("capacity > 0 carries stats");
+        assert_eq!(cs.hits as usize, cached, "counter/record agreement");
+        // Only the Zipf class is cacheable (the uniform class draws fresh
+        // queries with no identity), so probes and insertions count its
+        // completions alone. Insert-exactly-once: every completed
+        // cacheable miss populates, nothing else does (ample capacity +
+        // no TTL: no churn to re-insert; duplicates never double-insert).
+        let popular: Vec<_> = out
+            .per_request
+            .iter()
+            .filter(|r| r.class.idx() == 0)
+            .collect();
+        assert_eq!(
+            cs.probes() as usize,
+            popular.len(),
+            "S={shards}: every admitted cacheable request probes once"
+        );
+        let cacheable_misses = popular.iter().filter(|r| !r.cached).count();
+        assert_eq!(cs.insertions as usize, cacheable_misses, "S={shards}");
+        assert_eq!(cs.evictions, 0);
+        assert_eq!(cs.expirations, 0);
+        // A cache-hit parent never reaches the fan-out: per-shard offered
+        // counts misses + sheds only.
+        for sh in &out.per_shard {
+            assert_eq!(
+                sh.offered() + cached,
+                n,
+                "S={shards} shard {}: hit parents bypass the fan-out",
+                sh.shard
+            );
+        }
+        // The "fresh" uniform class never draws from a population, so it
+        // is uncacheable: every one of its completions is a miss.
+        for r in &out.per_request {
+            if r.class.idx() == 1 {
+                assert!(!r.cached, "uniform-popularity traffic cannot hit");
+            }
+        }
+    });
+}
