@@ -31,7 +31,8 @@ fn main() -> Result<()> {
         query.text, result.stats.candidates, result.stats.blocks
     );
     for hit in &result.hits {
-        println!("  doc{:<6} {:7.3}  {}", hit.doc, hit.score, hit.title);
+        // Hits are (doc, score); titles resolve at the display edge.
+        println!("  doc{:<6} {:7.3}  {}", hit.doc, hit.score, index.title(hit.doc));
     }
 
     // 3. One simulated serving experiment on the Juno R1 platform model:

@@ -13,9 +13,16 @@
 //!   stats_codec        IPC record encode+parse
 //!   bm25_block_rust    one 256×24 block scored in Rust
 //!   xla_block          one block through the PJRT artifact (if built)
+//!   index_build        two-pass arena inversion of an 8k-doc corpus
 //!   engine_query       full query execution over the small index
 //!   engine_query_union union traversal, 8k-doc index, common+rare queries
 //!   engine_query_wand  Block-Max WAND on the identical index and queries
+//!   engine_query_scratch_reuse  the same union queries through one
+//!                      reusable QueryScratch (the zero-allocation path;
+//!                      counters must equal engine_query_union's)
+//!   batch_score_2/8    the same 64 queries scored as same-class batches
+//!                      through search_batch (counters carry seq_* twins
+//!                      from per-request calls for the CI equality check)
 //!   histogram_record   latency histogram insert + percentile
 //!   topk_push          bounded top-k insertion
 //!   cache_probe_hit    sharded ResultCache get on resident keys
@@ -42,7 +49,7 @@ use hurryup::sched::{
 };
 use hurryup::search::engine::BlockScorer;
 use hurryup::search::{
-    Bm25Params, Index, Query, RustScorer, ScoreBlock, SearchEngine, TopK, Traversal,
+    Bm25Params, Index, Query, QueryScratch, RustScorer, ScoreBlock, SearchEngine, TopK, Traversal,
 };
 use hurryup::sim::Simulation;
 use hurryup::util::Rng;
@@ -488,6 +495,34 @@ fn main() {
         Err(e) => eprintln!("xla_block          skipped ({e})"),
     }
 
+    // --- index build: the two-pass arena inversion ---
+    // One contiguous docs/tfs slab pair per index (df count pass, prefix
+    // sum, tf fill pass through a reusable per-term scratch) — no per-term
+    // Vec or per-doc HashMap churn. Counters are corpus facts, so the
+    // committed trajectory can tell corpus drift from build regressions.
+    {
+        let cfg = CorpusConfig {
+            num_docs: 8_000,
+            vocab_size: 4_000,
+            ..CorpusConfig::small()
+        };
+        let corpus = cfg.build();
+        let built = Index::build(&corpus);
+        let (docs, postings) = (built.num_docs() as u64, built.total_postings() as u64);
+        drop(built);
+        let (iters, secs) = measure(b(500), || {
+            black_box(Index::build(black_box(&corpus)));
+        });
+        r.add_work(
+            "index_build",
+            "docs",
+            docs as f64,
+            iters,
+            secs,
+            &[("docs", docs), ("postings", postings)],
+        );
+    }
+
     // --- full query over the small index ---
     {
         let index = std::sync::Arc::new(Index::build(&CorpusConfig::small().build()));
@@ -571,6 +606,109 @@ fn main() {
                     ("docs_skipped", skipped),
                     ("blocks", blocks),
                     ("blocks_elided", elided),
+                ],
+            );
+        }
+
+        // --- zero-allocation steady state: one reusable QueryScratch ---
+        // The identical union queries through `search_scratch` with a
+        // persistent scratch and backend (the serving worker's loop). The
+        // work counters are the same deterministic totals, so CI asserts
+        // them equal to engine_query_union's: reuse changes allocation
+        // behaviour, never the traversal.
+        {
+            let engine = SearchEngine::new(index.clone(), 10);
+            let mut scorer = RustScorer::new(Bm25Params::default());
+            let mut scratch = QueryScratch::new();
+            let (mut cand, mut skipped, mut blocks, mut elided) = (0u64, 0u64, 0u64, 0u64);
+            for q in &queries {
+                let stats = engine
+                    .search_scratch(q, &mut scorer, None, &mut scratch)
+                    .unwrap()
+                    .expect("no cancel token");
+                cand += stats.candidates as u64;
+                skipped += stats.docs_skipped as u64;
+                blocks += stats.blocks as u64;
+                elided += stats.blocks_elided as u64;
+            }
+            let mut qi = 0;
+            let (iters, secs) = measure(b(500), || {
+                black_box(
+                    engine
+                        .search_scratch(&queries[qi % queries.len()], &mut scorer, None, &mut scratch)
+                        .unwrap(),
+                );
+                black_box(scratch.hits());
+                qi += 1;
+            });
+            r.add_work(
+                "engine_query_scratch_reuse",
+                "queries",
+                1.0,
+                iters,
+                secs,
+                &[
+                    ("candidates", cand),
+                    ("docs_skipped", skipped),
+                    ("blocks", blocks),
+                    ("blocks_elided", elided),
+                ],
+            );
+        }
+
+        // --- cross-request batch scoring ---
+        // The same 64 queries scored as same-class dispatch batches of 2
+        // and 8 through one `search_batch` call per chunk. The counters
+        // carry both the batch totals and `seq_*` twins from per-request
+        // calls over the same queries — CI asserts them equal: batching
+        // amortizes setup, it never changes the scored work.
+        for bsize in [2usize, 8] {
+            let engine = SearchEngine::new(index.clone(), 10);
+            let mut scorer = RustScorer::new(Bm25Params::default());
+            let mut scratch = QueryScratch::new();
+            let (mut cand, mut blocks) = (0u64, 0u64);
+            for chunk in queries.chunks(bsize) {
+                engine
+                    .search_batch(chunk, &mut scorer, &mut scratch, |_, stats, hits| {
+                        cand += stats.candidates as u64;
+                        blocks += stats.blocks as u64;
+                        black_box(hits);
+                    })
+                    .unwrap();
+            }
+            let (mut seq_cand, mut seq_blocks) = (0u64, 0u64);
+            for q in &queries {
+                let res = engine.search_with(q, &mut scorer).unwrap();
+                seq_cand += res.stats.candidates as u64;
+                seq_blocks += res.stats.blocks as u64;
+            }
+            let chunks: Vec<&[Query]> = queries.chunks(bsize).collect();
+            let mut ci = 0;
+            let (iters, secs) = measure(b(500), || {
+                engine
+                    .search_batch(
+                        chunks[ci % chunks.len()],
+                        &mut scorer,
+                        &mut scratch,
+                        |_, stats, hits| {
+                            black_box(stats);
+                            black_box(hits);
+                        },
+                    )
+                    .unwrap();
+                ci += 1;
+            });
+            r.add_work(
+                &format!("batch_score_{bsize}"),
+                "queries",
+                bsize as f64,
+                iters,
+                secs,
+                &[
+                    ("candidates", cand),
+                    ("blocks", blocks),
+                    ("seq_candidates", seq_cand),
+                    ("seq_blocks", seq_blocks),
                 ],
             );
         }

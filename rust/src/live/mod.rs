@@ -34,3 +34,4 @@ pub mod server;
 pub mod worker;
 
 pub use server::{LiveConfig, LiveRecord, LiveReport, LiveServer};
+pub use worker::{EmulatedScorer, LiveRequest, PassMeter, SpeedCell};

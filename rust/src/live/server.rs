@@ -603,81 +603,116 @@ impl LiveServer {
                     Box::new(RustScorer::new(Bm25Params::default()))
                 };
                 let engine = SearchEngine::new(index, top_k).with_traversal(traversal);
+                // Per-thread reusable query scratch: after the first query
+                // warms its capacities the steady-state query path
+                // allocates nothing.
+                let mut scratch = crate::search::QueryScratch::new();
                 let mut rid_seq = (t as u64) << 40;
                 let mut passes_total = 0u64;
                 // One pull dequeues a whole same-class batch (size capped
                 // by the class's batch_max; 1 = plain pop) which this
-                // thread scores back-to-back without re-entering the
-                // queue — the dispatch overhead amortizes across the
-                // batch and every follower hits a warm core.
+                // thread scores in ONE `search_batch` call over the shared
+                // scratch — no re-entering the queue between items, warm
+                // core and warm term state for every follower (adjacent
+                // duplicate queries skip term re-resolution entirely).
                 let mut batch: Vec<LiveRequest> = Vec::new();
                 loop {
-                    if batch.is_empty()
-                        && !shared.queue.pop_batch(
-                            ThreadId(t),
-                            &shared.aff,
-                            &batch_limits,
-                            &mut batch,
-                        )
-                    {
+                    batch.clear();
+                    if !shared.queue.pop_batch(
+                        ThreadId(t),
+                        &shared.aff,
+                        &batch_limits,
+                        &mut batch,
+                    ) {
                         break;
                     }
-                    let req = batch.remove(0);
-                    let started = now_ms();
-                    let first_kind = {
-                        let aff = shared.aff.lock().expect("aff poisoned");
-                        aff.kind_of(ThreadId(t))
-                    };
-                    let tag = RequestTag::from_seq(rid_seq);
-                    rid_seq += 1;
-                    stats_tx
-                        .send(&StatsRecord {
-                            tid: ThreadId(t),
-                            rid: tag,
-                            ts_ms: started as u64,
-                            class: Some(req.class),
-                        })
-                        .ok();
                     let mut emulated =
                         EmulatedScorer::new(scorer.as_mut(), &shared.speeds[t], work_scale);
-                    let result = engine.search_with(&req.query, &mut emulated)?;
-                    let passes = emulated.passes;
-                    passes_total += passes;
-                    let completed = now_ms();
-                    if let Some(est) = &est {
-                        est.observe(req.class, completed - started);
-                    }
-                    stats_tx
-                        .send(&StatsRecord {
-                            tid: ThreadId(t),
-                            rid: tag,
-                            ts_ms: completed as u64,
-                            class: Some(req.class),
-                        })
-                        .ok();
-                    let final_kind = {
+                    // The batch call holds the scorer `&mut`; per-item pass
+                    // deltas are read through the meter handle instead.
+                    let meter = emulated.meter();
+                    let rid_base = rid_seq;
+                    rid_seq += batch.len() as u64;
+                    // Item i's start is item i-1's completion (the thread
+                    // never re-enters the queue mid-batch); the start
+                    // record for each item goes out at that moment so the
+                    // mapper's in-flight view stays accurate.
+                    let mut item_started = now_ms();
+                    let mut kind_at_start = {
                         let aff = shared.aff.lock().expect("aff poisoned");
                         aff.kind_of(ThreadId(t))
                     };
-                    // Populate at completion: only misses reach a worker,
-                    // so a repeat of this query hits until evicted/expired.
-                    if let (Some(c), Some(key)) = (&cache, &req.cache_key) {
-                        c.insert(key.clone(), result.hits.clone(), completed);
-                    }
-                    records.lock().expect("records poisoned").push(LiveRecord {
-                        class: req.class,
-                        keywords: req.query.keyword_count(),
-                        arrived_ms: req.arrived_ms,
-                        started_ms: started,
-                        completed_ms: completed,
-                        tid: t,
-                        first_kind,
-                        final_kind,
-                        passes,
-                        top_hit: result.hits.first().map(|h| (h.doc, h.score)),
-                        cached: false,
-                    });
-                    shared.done.fetch_add(1, Ordering::Relaxed);
+                    stats_tx
+                        .send(&StatsRecord {
+                            tid: ThreadId(t),
+                            rid: RequestTag::from_seq(rid_base),
+                            ts_ms: item_started as u64,
+                            class: Some(batch[0].class),
+                        })
+                        .ok();
+                    let mut passes_prev = 0u64;
+                    let queries: Vec<&Query> = batch.iter().map(|r| &r.query).collect();
+                    engine.search_batch(
+                        &queries,
+                        &mut emulated,
+                        &mut scratch,
+                        |i, _stats, hits| {
+                            let req = &batch[i];
+                            let completed = now_ms();
+                            if let Some(est) = &est {
+                                est.observe(req.class, completed - item_started);
+                            }
+                            stats_tx
+                                .send(&StatsRecord {
+                                    tid: ThreadId(t),
+                                    rid: RequestTag::from_seq(rid_base + i as u64),
+                                    ts_ms: completed as u64,
+                                    class: Some(req.class),
+                                })
+                                .ok();
+                            let final_kind = {
+                                let aff = shared.aff.lock().expect("aff poisoned");
+                                aff.kind_of(ThreadId(t))
+                            };
+                            let passes_now = meter.total();
+                            let passes = passes_now - passes_prev;
+                            passes_prev = passes_now;
+                            // Populate at completion: only misses reach a
+                            // worker, so a repeat of this query hits until
+                            // evicted/expired.
+                            if let (Some(c), Some(key)) = (&cache, &req.cache_key) {
+                                c.insert(key.clone(), hits.to_vec(), completed);
+                            }
+                            records.lock().expect("records poisoned").push(LiveRecord {
+                                class: req.class,
+                                keywords: req.query.keyword_count(),
+                                arrived_ms: req.arrived_ms,
+                                started_ms: item_started,
+                                completed_ms: completed,
+                                tid: t,
+                                first_kind: kind_at_start,
+                                final_kind,
+                                passes,
+                                top_hit: hits.first().map(|h| (h.doc, h.score)),
+                                cached: false,
+                            });
+                            shared.done.fetch_add(1, Ordering::Relaxed);
+                            // The next item starts here, on this core.
+                            if i + 1 < batch.len() {
+                                stats_tx
+                                    .send(&StatsRecord {
+                                        tid: ThreadId(t),
+                                        rid: RequestTag::from_seq(rid_base + i as u64 + 1),
+                                        ts_ms: completed as u64,
+                                        class: Some(batch[i + 1].class),
+                                    })
+                                    .ok();
+                            }
+                            item_started = completed;
+                            kind_at_start = final_kind;
+                        },
+                    )?;
+                    passes_total += meter.total();
                 }
                 Ok(passes_total)
             }));
@@ -1117,6 +1152,9 @@ impl LiveServer {
                     };
                     let engine =
                         SearchEngine::new(shard_index.index.clone(), top_k).with_traversal(traversal);
+                    // Per-thread reusable scratch — the steady-state shard
+                    // task path allocates nothing once warm.
+                    let mut scratch = crate::search::QueryScratch::new();
                     let mut rid_seq = ((slot * n_threads + t) as u64) << 40;
                     let mut passes_total = 0u64;
                     // Sharded workers stay unbatched (plain `pop`): a
@@ -1158,9 +1196,13 @@ impl LiveServer {
                             .ok();
                         let mut emulated =
                             EmulatedScorer::new(scorer.as_mut(), &shared.speeds[t], work_scale);
-                        let result =
-                            engine.search_with_cancel(&task.query, &mut emulated, Some(&task.cancel))?;
-                        let passes = emulated.passes;
+                        let outcome = engine.search_scratch(
+                            &task.query,
+                            &mut emulated,
+                            Some(&task.cancel),
+                            &mut scratch,
+                        )?;
+                        let passes = emulated.passes();
                         passes_total += passes;
                         let completed = now_ms();
                         stats_tx
@@ -1171,7 +1213,7 @@ impl LiveServer {
                                 class: Some(task.class),
                             })
                             .ok();
-                        let Some(result) = result else {
+                        if outcome.is_none() {
                             // Aborted mid-scoring: the other copy won and
                             // flipped our token. Reclaimed work is the
                             // sunk service time; only duplicate slots
@@ -1187,7 +1229,7 @@ impl LiveServer {
                             let mut g = gather.lock().expect("gather poisoned");
                             g.tokens.remove(&(task.parent, slot));
                             continue;
-                        };
+                        }
                         if let Some(est) = &est {
                             est.observe(task.class, completed - started);
                         }
@@ -1203,7 +1245,7 @@ impl LiveServer {
                         // running → token abort).
                         let mut g = gather.lock().expect("gather poisoned");
                         let partial = TaskPartial {
-                            hits: shard_index.globalize(&result.hits),
+                            hits: shard_index.globalize(scratch.hits()),
                             passes,
                             tid: global_core,
                             first_kind,

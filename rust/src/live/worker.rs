@@ -6,6 +6,7 @@
 //! ever see requests that survived admission.)
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::cache::CacheKey;
 use crate::error::Result;
@@ -64,10 +65,26 @@ pub struct EmulatedScorer<'a> {
     /// mapper's ms-scale thresholds are meaningful on a small test corpus).
     scale: f64,
     carry: f64,
-    /// Total block passes executed (work accounting).
-    pub passes: u64,
+    /// Total block passes executed (work accounting). Shared through a
+    /// [`PassMeter`] so per-item deltas can be read while the scorer is
+    /// mutably borrowed by a batch call.
+    passes: Arc<AtomicU64>,
     /// Whether a speed other than the initial one was ever observed.
     pub observed_speeds: Vec<f64>,
+}
+
+/// A cloneable read handle on an [`EmulatedScorer`]'s cumulative pass
+/// counter. The live worker's batch-completion sink reads per-request
+/// deltas from the meter while `SearchEngine::search_batch` holds the
+/// scorer itself `&mut`.
+#[derive(Clone)]
+pub struct PassMeter(Arc<AtomicU64>);
+
+impl PassMeter {
+    /// Total block passes executed so far.
+    pub fn total(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
 }
 
 impl<'a> EmulatedScorer<'a> {
@@ -82,14 +99,30 @@ impl<'a> EmulatedScorer<'a> {
             speed,
             scale,
             carry: 0.0,
-            passes: 0,
+            passes: Arc::new(AtomicU64::new(0)),
             observed_speeds: Vec::new(),
         }
+    }
+
+    /// Total block passes executed so far (work accounting).
+    pub fn passes(&self) -> u64 {
+        self.passes.load(Ordering::Relaxed)
+    }
+
+    /// A read handle on the cumulative pass counter.
+    pub fn meter(&self) -> PassMeter {
+        PassMeter(self.passes.clone())
     }
 }
 
 impl BlockScorer for EmulatedScorer<'_> {
-    fn score_block(&mut self, block: &ScoreBlock, idf: &[f32], avgdl: f32) -> Result<BlockTopK> {
+    fn score_block_into(
+        &mut self,
+        block: &ScoreBlock,
+        idf: &[f32],
+        avgdl: f32,
+        out: &mut BlockTopK,
+    ) -> Result<()> {
         let speed = self.speed.get();
         if self
             .observed_speeds
@@ -108,11 +141,10 @@ impl BlockScorer for EmulatedScorer<'_> {
         let repeats = (self.carry.floor() as u64).max(1);
         self.carry -= repeats as f64;
         // §Perf: one repeated call uploads inputs once and re-executes.
-        let result = self
-            .inner
-            .score_block_repeated(block, idf, avgdl, repeats)?;
-        self.passes += repeats;
-        Ok(result)
+        self.inner
+            .score_block_repeated_into(block, idf, avgdl, repeats, out)?;
+        self.passes.fetch_add(repeats, Ordering::Relaxed);
+        Ok(())
     }
 
     fn label(&self) -> &'static str {
@@ -160,7 +192,8 @@ mod tests {
         for _ in 0..10 {
             em.score_block(&block, &idf, 100.0).unwrap();
         }
-        assert_eq!(em.passes, 10);
+        assert_eq!(em.passes(), 10);
+        assert_eq!(em.meter().total(), 10);
         // Little core, scale 1: 1/0.3 ≈ 3.33 passes per block.
         let little = SpeedCell::new(0.30);
         let mut inner2 = RustScorer::new(Bm25Params::default());
@@ -168,7 +201,7 @@ mod tests {
         for _ in 0..30 {
             em.score_block(&block, &idf, 100.0).unwrap();
         }
-        let ratio = em.passes as f64 / 30.0;
+        let ratio = em.passes() as f64 / 30.0;
         assert!((3.1..3.6).contains(&ratio), "ratio={ratio}");
     }
 

@@ -448,7 +448,9 @@ fn cmd_query(args: &Args) -> Result<()> {
         q, result.stats.matched_terms, result.stats.candidates, result.stats.blocks
     );
     for (i, hit) in result.hits.iter().enumerate() {
-        println!("{:2}. doc{:<6} {:8.4}  {}", i + 1, hit.doc, hit.score, hit.title);
+        // Hits carry doc ids only; titles resolve at the display edge.
+        let title = engine.index().title(hit.doc);
+        println!("{:2}. doc{:<6} {:8.4}  {}", i + 1, hit.doc, hit.score, title);
     }
     Ok(())
 }

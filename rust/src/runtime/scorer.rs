@@ -138,39 +138,43 @@ impl XlaScorer {
         self.fetch(&out[0][0])
     }
 
-    fn topk_from(
-        &self,
-        vals: Vec<f32>,
-        idx: Vec<i32>,
-        live_rows: usize,
-    ) -> BlockTopK {
-        let entries = idx
-            .into_iter()
-            .zip(vals)
-            .filter(|(row, _)| (*row as usize) < live_rows) // padded rows out
-            .map(|(row, score)| (row as usize, score))
-            .take(BLOCK_TOP_K)
-            .collect();
-        BlockTopK { entries }
+    fn topk_into(&self, vals: Vec<f32>, idx: Vec<i32>, live_rows: usize, out: &mut BlockTopK) {
+        out.entries.clear();
+        out.entries.extend(
+            idx.into_iter()
+                .zip(vals)
+                .filter(|(row, _)| (*row as usize) < live_rows) // padded rows out
+                .map(|(row, score)| (row as usize, score))
+                .take(BLOCK_TOP_K),
+        );
     }
 }
 
 impl BlockScorer for XlaScorer {
-    fn score_block(&mut self, block: &ScoreBlock, idf: &[f32], avgdl: f32) -> Result<BlockTopK> {
+    fn score_block_into(
+        &mut self,
+        block: &ScoreBlock,
+        idf: &[f32],
+        avgdl: f32,
+        out: &mut BlockTopK,
+    ) -> Result<()> {
         let (_scores, vals, idx) = self.execute_raw(&block.tf, &block.dl, idf, avgdl)?;
-        Ok(self.topk_from(vals, idx, block.docs.len()))
+        self.topk_into(vals, idx, block.docs.len(), out);
+        Ok(())
     }
 
-    fn score_block_repeated(
+    fn score_block_repeated_into(
         &mut self,
         block: &ScoreBlock,
         idf: &[f32],
         avgdl: f32,
         repeats: u64,
-    ) -> Result<BlockTopK> {
+        out: &mut BlockTopK,
+    ) -> Result<()> {
         let (_scores, vals, idx) =
             self.execute_repeated(&block.tf, &block.dl, idf, avgdl, repeats)?;
-        Ok(self.topk_from(vals, idx, block.docs.len()))
+        self.topk_into(vals, idx, block.docs.len(), out);
+        Ok(())
     }
 
     fn label(&self) -> &'static str {

@@ -60,12 +60,13 @@ impl XlaScorer {
 }
 
 impl BlockScorer for XlaScorer {
-    fn score_block(
+    fn score_block_into(
         &mut self,
         _block: &ScoreBlock,
         _idf: &[f32],
         _avgdl: f32,
-    ) -> Result<BlockTopK> {
+        _out: &mut BlockTopK,
+    ) -> Result<()> {
         Err(unavailable())
     }
 

@@ -1,27 +1,51 @@
-//! Query execution: candidate generation + block scoring + top-k.
+//! Query execution: candidate generation + block scoring + top-k, running
+//! allocation-free in steady state over the arena-backed index.
+//!
+//! # Scratch reuse
+//!
+//! Every buffer the hot path needs lives in a [`QueryScratch`]: the resolved
+//! term-id list, the per-slot IDF table, the staged [`ScoreBlock`], the
+//! per-block and global top-k accumulators, the union merge heap and the
+//! WAND cursor vector. A worker owns one scratch and threads it through
+//! [`SearchEngine::search_scratch`] (or [`SearchEngine::search_batch`]) for
+//! every query it serves; after the first few queries have grown each buffer
+//! to its steady-state capacity (bounded by `MAX_TERMS`, `DOC_BLOCK`,
+//! `BLOCK_TOP_K` and the largest `top_k` seen), query execution performs
+//! **zero** heap allocations — anchored by the counting-allocator
+//! integration test (`tests/alloc_steady_state.rs`). The convenience
+//! wrappers ([`SearchEngine::search`], [`SearchEngine::search_with`],
+//! [`SearchEngine::search_with_cancel`]) build a temporary scratch per call
+//! and exist for tests and cold paths.
+//!
+//! Hits are plain `(doc, score)` pairs ([`SearchHit`] is [`ScoredDoc`]):
+//! titles are resolved at the display edge (`main.rs` / report paths) via
+//! [`crate::search::Index::title`], never cloned per hit on the serving
+//! path.
+//!
+//! # Traversals
 //!
 //! Two selectable traversals ([`Traversal`], A/B-comparable because they
 //! return bit-identical rankings):
 //!
 //! * **Union** (default) — candidates are the union of the query terms'
-//!   postings lists, produced in document order by a heap-based k-way
-//!   merge. Scoring happens in fixed-geometry blocks matching the AOT
-//!   artifact: `DOC_BLOCK` documents × `MAX_TERMS` term slots, through a
-//!   pluggable [`BlockScorer`] backend ([`RustScorer`] in-process, or
-//!   `runtime::XlaScorer` — the compiled Layer-1/2 artifact via PJRT — on
-//!   the live request path; both produce identical rankings,
+//!   postings ranges, produced in document order by a heap-based k-way
+//!   merge over the arena slabs. Scoring happens in fixed-geometry blocks
+//!   matching the AOT artifact: `DOC_BLOCK` documents × `MAX_TERMS` term
+//!   slots, through a pluggable [`BlockScorer`] backend ([`RustScorer`]
+//!   in-process, or `runtime::XlaScorer` — the compiled Layer-1/2 artifact
+//!   via PJRT — on the live request path; both produce identical rankings,
 //!   cross-checked by integration tests). Block-max pruning may skip a
 //!   *filled* block whose score upper bound cannot beat the running top-k
 //!   threshold, but every candidate is still decoded and staged.
 //!
 //! * **Wand** — document-at-a-time Block-Max WAND over the index-resident
 //!   block directory ([`crate::search::index::BlockEntry`], built at
-//!   `Index::build`/`from_parts` time). Pivot selection on per-term score
-//!   upper bounds plus `seek(doc)` galloping through the directory skip
-//!   postings ranges that cannot beat the threshold *without decoding
-//!   them at all* — strictly less work, not just fewer backend calls.
-//!   Skips use strict `<` against the threshold, so results are
-//!   bit-identical to exhaustive scoring (same lossless guarantee as
+//!   `Index::build`/`from_parts`/`slice_docs` time). Pivot selection on
+//!   per-term score upper bounds plus `seek(doc)` galloping through the
+//!   directory skip postings ranges that cannot beat the threshold
+//!   *without decoding them at all* — strictly less work, not just fewer
+//!   backend calls. Skips use strict `<` against the threshold, so results
+//!   are bit-identical to exhaustive scoring (same lossless guarantee as
 //!   `tests::pruning_is_lossless`; equivalence is anchored by
 //!   `tests::prop_union_and_wand_rankings_identical`). The upper bounds
 //!   are computed at query time from the index's *effective* IDF/avgdl,
@@ -30,16 +54,19 @@
 //!   staged into the same fixed-geometry score blocks as the union path
 //!   and flushed through the pluggable [`BlockScorer`] backend, so the
 //!   live server's heterogeneity emulation (which meters backend block
-//!   calls) covers WAND exactly like Union — replicated shard slots
-//!   running WAND do the same reduced work as the primary. The skip
-//!   threshold advances only at flush boundaries (a block-granular lag),
-//!   which can only *under*-skip relative to a document-at-a-time
-//!   threshold — never unsoundly.
+//!   calls) covers WAND exactly like Union. The skip threshold advances
+//!   only at flush boundaries (a block-granular lag), which can only
+//!   *under*-skip relative to a document-at-a-time threshold — never
+//!   unsoundly.
+//!
+//! The engine traverses in *arena* document space (the slab ids shared by
+//! every view of the index) and localises ids only when staging a block —
+//! comparisons are shift-invariant, so a sliced view ranks exactly like a
+//! from-scratch index of the sub-corpus.
 //!
 //! Both traversal loops poll an optional [`CancelToken`] at score-block
-//! boundaries ([`SearchEngine::search_with_cancel`]): a hedged duplicate
-//! whose twin already won aborts mid-query with `Ok(None)`, reclaiming
-//! the rest of its scoring work.
+//! boundaries: a hedged duplicate whose twin already won aborts mid-query
+//! with `Ok(None)`, reclaiming the rest of its scoring work.
 //!
 //! [`SearchStats`] accounts the difference: `candidates` counts documents
 //! actually decoded and staged, `docs_skipped` postings entries galloped
@@ -73,7 +100,7 @@ pub struct ScoreBlock {
     pub tf: Vec<f32>,
     /// Document lengths, `[DOC_BLOCK]` (padded rows carry avgdl).
     pub dl: Vec<f32>,
-    /// Global doc ids of the block rows (`len() <= DOC_BLOCK`).
+    /// Local doc ids of the block rows (`len() <= DOC_BLOCK`).
     pub docs: Vec<u32>,
     /// Per-slot maximum tf within the block (block-max pruning metadata).
     pub max_tf: Vec<f32>,
@@ -82,7 +109,8 @@ pub struct ScoreBlock {
 }
 
 impl ScoreBlock {
-    fn new(avgdl: f32) -> ScoreBlock {
+    /// A fresh block with padded rows carrying `avgdl`.
+    pub fn new(avgdl: f32) -> ScoreBlock {
         ScoreBlock {
             tf: vec![0.0; DOC_BLOCK * MAX_TERMS],
             dl: vec![avgdl; DOC_BLOCK],
@@ -92,7 +120,8 @@ impl ScoreBlock {
         }
     }
 
-    fn reset(&mut self, avgdl: f32) {
+    /// Clear the block for refill, keeping all backing allocations.
+    pub fn reset(&mut self, avgdl: f32) {
         self.tf.iter_mut().for_each(|v| *v = 0.0);
         self.dl.iter_mut().for_each(|v| *v = avgdl);
         self.docs.clear();
@@ -136,14 +165,52 @@ pub struct BlockTopK {
 }
 
 /// A scoring backend operating on one padded block.
+///
+/// The required method is [`BlockScorer::score_block_into`], which writes
+/// the block-local top-k into a caller-owned [`BlockTopK`] — the
+/// allocation-free form the engine's scratch path drives. The allocating
+/// [`BlockScorer::score_block`] wrapper exists for tests and one-shot use.
 pub trait BlockScorer {
-    /// Score the block against per-slot IDF weights; return its local top-k.
-    fn score_block(&mut self, block: &ScoreBlock, idf: &[f32], avgdl: f32) -> Result<BlockTopK>;
+    /// Score the block against per-slot IDF weights, replacing `out`'s
+    /// contents with the block-local top-k (descending score). Must not
+    /// assume anything about `out`'s prior contents.
+    fn score_block_into(
+        &mut self,
+        block: &ScoreBlock,
+        idf: &[f32],
+        avgdl: f32,
+        out: &mut BlockTopK,
+    ) -> Result<()>;
 
-    /// Score the same block `repeats` times, returning the (identical)
-    /// result once. Used by the live server's heterogeneity emulation; a
-    /// backend with per-call setup cost (e.g. PJRT literal construction)
+    /// Allocating convenience wrapper around
+    /// [`BlockScorer::score_block_into`].
+    fn score_block(&mut self, block: &ScoreBlock, idf: &[f32], avgdl: f32) -> Result<BlockTopK> {
+        let mut out = BlockTopK::default();
+        self.score_block_into(block, idf, avgdl, &mut out)?;
+        Ok(out)
+    }
+
+    /// Score the same block `repeats` times, leaving the (identical)
+    /// result in `out`. Used by the live server's heterogeneity emulation;
+    /// a backend with per-call setup cost (e.g. PJRT literal construction)
     /// should override this to pay that cost once.
+    fn score_block_repeated_into(
+        &mut self,
+        block: &ScoreBlock,
+        idf: &[f32],
+        avgdl: f32,
+        repeats: u64,
+        out: &mut BlockTopK,
+    ) -> Result<()> {
+        debug_assert!(repeats >= 1);
+        for _ in 1..repeats {
+            self.score_block_into(block, idf, avgdl, out)?;
+        }
+        self.score_block_into(block, idf, avgdl, out)
+    }
+
+    /// Allocating convenience wrapper around
+    /// [`BlockScorer::score_block_repeated_into`].
     fn score_block_repeated(
         &mut self,
         block: &ScoreBlock,
@@ -151,45 +218,62 @@ pub trait BlockScorer {
         avgdl: f32,
         repeats: u64,
     ) -> Result<BlockTopK> {
-        debug_assert!(repeats >= 1);
-        for _ in 1..repeats {
-            self.score_block(block, idf, avgdl)?;
-        }
-        self.score_block(block, idf, avgdl)
+        let mut out = BlockTopK::default();
+        self.score_block_repeated_into(block, idf, avgdl, repeats, &mut out)?;
+        Ok(out)
     }
 
     /// Backend label for reports.
     fn label(&self) -> &'static str;
 }
 
-/// Pure-Rust reference backend (same formula as the Pallas kernel).
-#[derive(Debug, Default)]
+/// Pure-Rust reference backend (same formula as the Pallas kernel). Keeps
+/// a reusable block-local [`TopK`] so repeated scoring allocates nothing.
+#[derive(Debug)]
 pub struct RustScorer {
     params: Bm25Params,
+    topk: TopK,
 }
 
 impl RustScorer {
     /// New backend with BM25 params.
     pub fn new(params: Bm25Params) -> RustScorer {
-        RustScorer { params }
+        RustScorer {
+            params,
+            topk: TopK::new(1),
+        }
+    }
+}
+
+impl Default for RustScorer {
+    fn default() -> RustScorer {
+        RustScorer::new(Bm25Params::default())
     }
 }
 
 impl BlockScorer for RustScorer {
-    fn score_block(&mut self, block: &ScoreBlock, idf: &[f32], avgdl: f32) -> Result<BlockTopK> {
-        let mut topk = TopK::new(BLOCK_TOP_K.min(block.docs.len().max(1)));
+    fn score_block_into(
+        &mut self,
+        block: &ScoreBlock,
+        idf: &[f32],
+        avgdl: f32,
+        out: &mut BlockTopK,
+    ) -> Result<()> {
+        self.topk.reset(BLOCK_TOP_K.min(block.docs.len().max(1)));
         for row in 0..block.docs.len() {
             let tfs = &block.tf[row * MAX_TERMS..(row + 1) * MAX_TERMS];
             let score = bm25_score(tfs, idf, block.dl[row], avgdl, self.params);
-            topk.push(row as u32, score);
+            self.topk.push(row as u32, score);
         }
-        Ok(BlockTopK {
-            entries: topk
-                .into_sorted()
-                .into_iter()
-                .map(|d| (d.doc as usize, d.score))
-                .collect(),
-        })
+        // Draining the min-heap and reversing yields exactly
+        // `TopK::into_sorted`'s order (see `TopK::pop_min`) without
+        // allocating.
+        out.entries.clear();
+        while let Some(d) = self.topk.pop_min() {
+            out.entries.push((d.doc as usize, d.score));
+        }
+        out.entries.reverse();
+        Ok(())
     }
 
     fn label(&self) -> &'static str {
@@ -197,16 +281,10 @@ impl BlockScorer for RustScorer {
     }
 }
 
-/// A search hit returned to the client.
-#[derive(Clone, Debug, PartialEq)]
-pub struct SearchHit {
-    /// Document id.
-    pub doc: u32,
-    /// BM25 score.
-    pub score: f32,
-    /// Document title.
-    pub title: String,
-}
+/// A search hit returned to the client: a document id and its BM25 score.
+/// Titles are resolved at the display edge (`Index::title`), never carried
+/// on the serving path.
+pub type SearchHit = ScoredDoc;
 
 /// Execution statistics of one query (the live server's work accounting).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -265,7 +343,8 @@ impl Traversal {
     }
 }
 
-/// Complete result of one query.
+/// Complete result of one query (allocating convenience form; the scratch
+/// path leaves hits in [`QueryScratch::hits`] instead).
 #[derive(Clone, Debug)]
 pub struct SearchResult {
     /// Ranked hits, best first.
@@ -274,36 +353,47 @@ pub struct SearchResult {
     pub stats: SearchStats,
 }
 
-/// Per-term traversal cursor of the WAND path: a postings position plus
-/// the term's slice of the index-resident block directory.
-struct WandCursor<'a> {
+/// Per-term traversal cursor of the WAND path: a position within the
+/// term's arena range plus the range of its block directory. Holds no
+/// borrows (plain offsets into the slabs the engine passes to each
+/// method), so cursors live in the reusable [`QueryScratch`].
+#[derive(Clone, Copy, Debug)]
+struct WandCursor {
     /// Term slot in the tf/idf layout (assigned at query resolution, so
     /// slot order matches the union path's fill order exactly).
     slot: usize,
-    list: &'a [super::index::Posting],
-    blocks: &'a [BlockEntry],
-    /// Current postings position (`list.len()` = exhausted).
-    pos: usize,
+    /// Arena offset of the term's postings range.
+    off: u32,
+    /// Length of the term's postings range.
+    len: u32,
+    /// Offset of the term's blocks in the view's block slab.
+    blk_off: u32,
+    /// Number of directory blocks covering the range.
+    blk_len: u32,
+    /// Current range-relative postings position (`len` = exhausted).
+    pos: u32,
     /// Term-level score upper bound (max over the term's block bounds).
     ub: f32,
 }
 
-impl WandCursor<'_> {
-    fn doc(&self) -> u32 {
-        self.list[self.pos].doc
+impl WandCursor {
+    /// Current document id (arena space).
+    #[inline]
+    fn doc(&self, docs: &[u32]) -> u32 {
+        docs[(self.off + self.pos) as usize]
     }
 
     fn exhausted(&self) -> bool {
-        self.pos >= self.list.len()
+        self.pos >= self.len
     }
 
     /// Directory block covering `doc` — the first block (from the current
     /// position on) whose `last_doc >= doc`. `None` means the remaining
     /// postings all precede `doc`, i.e. the term cannot contain it.
-    fn block_for(&self, doc: u32) -> Option<&BlockEntry> {
-        self.blocks[self.pos / SKIP_BLOCK..]
-            .iter()
-            .find(|b| b.last_doc >= doc)
+    fn block_for<'b>(&self, doc: u32, blocks: &'b [BlockEntry]) -> Option<&'b BlockEntry> {
+        let lo = self.blk_off as usize + self.pos as usize / SKIP_BLOCK;
+        let hi = (self.blk_off + self.blk_len) as usize;
+        blocks[lo..hi].iter().find(|b| b.last_doc >= doc)
     }
 
     /// Advance to the first posting with doc id `>= target`, galloping
@@ -311,24 +401,91 @@ impl WandCursor<'_> {
     /// stepped over without touching their postings, then the landing
     /// block is binary-searched. Skipped entries and fully elided blocks
     /// are accounted in `stats`.
-    fn seek(&mut self, target: u32, stats: &mut SearchStats) {
-        let start = self.pos;
+    fn seek(&mut self, target: u32, docs: &[u32], blocks: &[BlockEntry], stats: &mut SearchStats) {
+        let start = self.pos as usize;
+        let len = self.len as usize;
+        let nblk = self.blk_len as usize;
         let mut b = start / SKIP_BLOCK;
-        while b < self.blocks.len() && self.blocks[b].last_doc < target {
+        while b < nblk && blocks[self.blk_off as usize + b].last_doc < target {
             b += 1;
         }
-        let new_pos = if b >= self.blocks.len() {
-            self.list.len()
+        let new_pos = if b >= nblk {
+            len
         } else {
             let lo = (b * SKIP_BLOCK).max(start);
-            let hi = ((b + 1) * SKIP_BLOCK).min(self.list.len());
-            lo + self.list[lo..hi].partition_point(|p| p.doc < target)
+            let hi = ((b + 1) * SKIP_BLOCK).min(len);
+            let abs = self.off as usize;
+            lo + docs[abs + lo..abs + hi].partition_point(|&d| d < target)
         };
         stats.docs_skipped += new_pos - start;
         // Blocks whose every entry fell inside the skipped range.
-        stats.blocks_elided +=
-            (new_pos / SKIP_BLOCK).saturating_sub(start.div_ceil(SKIP_BLOCK));
-        self.pos = new_pos;
+        stats.blocks_elided += (new_pos / SKIP_BLOCK).saturating_sub(start.div_ceil(SKIP_BLOCK));
+        self.pos = new_pos as u32;
+    }
+}
+
+/// Reusable per-worker query-execution state: every buffer the engine's
+/// hot path touches, owned by the caller and threaded through
+/// [`SearchEngine::search_scratch`] / [`SearchEngine::search_batch`].
+///
+/// Ownership contract: a scratch belongs to one worker thread (it is plain
+/// mutable state, not shared); the engine borrows it for the duration of
+/// one call and leaves the query's ranked hits in [`QueryScratch::hits`]
+/// (valid until the next call with the same scratch). Buffers are cleared,
+/// never shrunk — once each has grown to its steady-state capacity the
+/// query path allocates nothing (see the module docs).
+pub struct QueryScratch {
+    /// Resolved distinct term ids, slot order (`<= MAX_TERMS`).
+    term_ids: Vec<u32>,
+    /// Per-slot IDF weights (`MAX_TERMS` wide, zero-padded).
+    idf: Vec<f32>,
+    /// The staged fixed-geometry scoring block.
+    block: ScoreBlock,
+    /// Backend output buffer (block-local top-k).
+    block_topk: BlockTopK,
+    /// Global top-k accumulator.
+    topk: TopK,
+    /// Ranked hits of the most recent query (best first).
+    hits: Vec<SearchHit>,
+    /// Union merge heap: (arena doc, slot) heads, min first.
+    heads: BinaryHeap<Reverse<(u32, usize)>>,
+    /// Union per-slot (cursor, end) absolute arena positions.
+    union_ranges: Vec<(u32, u32)>,
+    /// WAND cursors.
+    wand: Vec<WandCursor>,
+}
+
+impl QueryScratch {
+    /// A fresh scratch. Capacities are pre-sized to the fixed geometry
+    /// (`MAX_TERMS`, `DOC_BLOCK`, `BLOCK_TOP_K`); the top-k accumulator
+    /// and hit buffer grow to the engine's `top_k` on first use.
+    pub fn new() -> QueryScratch {
+        QueryScratch {
+            term_ids: Vec::with_capacity(MAX_TERMS),
+            idf: vec![0.0; MAX_TERMS],
+            block: ScoreBlock::new(0.0),
+            block_topk: BlockTopK {
+                entries: Vec::with_capacity(BLOCK_TOP_K),
+            },
+            topk: TopK::new(1),
+            hits: Vec::new(),
+            heads: BinaryHeap::with_capacity(MAX_TERMS),
+            union_ranges: Vec::with_capacity(MAX_TERMS),
+            wand: Vec::with_capacity(MAX_TERMS),
+        }
+    }
+
+    /// Ranked hits of the most recent [`SearchEngine::search_scratch`] /
+    /// batch item, best first. Valid until the next call reusing this
+    /// scratch.
+    pub fn hits(&self) -> &[SearchHit] {
+        &self.hits
+    }
+}
+
+impl Default for QueryScratch {
+    fn default() -> QueryScratch {
+        QueryScratch::new()
     }
 }
 
@@ -395,129 +552,207 @@ impl SearchEngine {
             .expect("search without a cancel token cannot abort"))
     }
 
-    /// Execute a query with a backend and an optional cancellation token.
-    /// The token is polled at score-block boundaries in both traversal
-    /// loops; once it reads cancelled the query aborts and returns
-    /// `Ok(None)` — the hedged live server's way of reclaiming a losing
-    /// duplicate's remaining scoring work mid-flight. `None` for the token
-    /// makes this exactly [`SearchEngine::search_with`].
+    /// Execute a query with a backend and an optional cancellation token,
+    /// building a temporary [`QueryScratch`] — the allocating convenience
+    /// form of [`SearchEngine::search_scratch`] (identical results; the
+    /// steady-state serving paths hold a reusable scratch instead).
     pub fn search_with_cancel(
         &self,
         query: &Query,
         backend: &mut dyn BlockScorer,
         cancel: Option<&CancelToken>,
     ) -> Result<Option<SearchResult>> {
-        let index = &*self.index;
-        let avgdl = index.avgdl() as f32;
+        let mut scratch = QueryScratch::new();
+        match self.search_scratch(query, backend, cancel, &mut scratch)? {
+            None => Ok(None),
+            Some(stats) => Ok(Some(SearchResult {
+                hits: std::mem::take(&mut scratch.hits),
+                stats,
+            })),
+        }
+    }
 
-        // Resolve query terms, then cap at the artifact's term-slot count.
-        // The cap must come *after* lookup + dedup: capping the raw token
-        // stream would let early out-of-vocabulary or duplicate tokens
-        // crowd real terms out of the slots.
-        let mut term_ids: Vec<u32> = Vec::new();
+    /// Execute a query through a caller-owned [`QueryScratch`] — the
+    /// allocation-free steady-state entry point. On completion the ranked
+    /// hits are in [`QueryScratch::hits`] and the work statistics are
+    /// returned; `Ok(None)` means the cancel token aborted the query at a
+    /// block boundary (hits are then meaningless). Rankings are
+    /// bit-identical to [`SearchEngine::search_with_cancel`].
+    pub fn search_scratch(
+        &self,
+        query: &Query,
+        backend: &mut dyn BlockScorer,
+        cancel: Option<&CancelToken>,
+        scratch: &mut QueryScratch,
+    ) -> Result<Option<SearchStats>> {
+        self.resolve_terms(query, scratch);
+        self.run_resolved(backend, cancel, scratch)
+    }
+
+    /// Score a same-class dispatch batch (`Dispatcher::next_batch` /
+    /// `SharedDispatcher::pop_batch` output) back to back over one shared
+    /// scratch and one backend — PR 6's cross-request batch-scoring
+    /// follow-up. Consecutive batch items with identical term lists (the
+    /// common case under Zipf-popular traffic, where the dispatcher
+    /// batches recurring queries) skip re-resolution and reuse the decoded
+    /// per-term state (term ids + IDF slots) outright; resolution is
+    /// deterministic, so the reuse is exact. `sink` receives each item's
+    /// index, statistics and ranked hits (borrowed from the scratch —
+    /// consume before the next item overwrites them). Rankings are
+    /// bit-identical to per-request [`SearchEngine::search_with`] calls,
+    /// anchored by `tests::prop_search_batch_matches_sequential`.
+    pub fn search_batch<Q, F>(
+        &self,
+        queries: &[Q],
+        backend: &mut dyn BlockScorer,
+        scratch: &mut QueryScratch,
+        mut sink: F,
+    ) -> Result<()>
+    where
+        Q: std::borrow::Borrow<Query>,
+        F: FnMut(usize, SearchStats, &[SearchHit]),
+    {
+        for (i, q) in queries.iter().enumerate() {
+            let q = q.borrow();
+            let resolved = i > 0 && queries[i - 1].borrow().terms == q.terms;
+            if !resolved {
+                self.resolve_terms(q, scratch);
+            }
+            let stats = self
+                .run_resolved(backend, None, scratch)?
+                .expect("batch search without a cancel token cannot abort");
+            sink(i, stats, &scratch.hits);
+        }
+        Ok(())
+    }
+
+    /// Resolve query tokens to distinct term ids and fill the per-slot IDF
+    /// table, capped at the artifact's term-slot count. The cap applies
+    /// *after* lookup + dedup: capping the raw token stream would let
+    /// early out-of-vocabulary or duplicate tokens crowd real terms out of
+    /// the slots. (Stopping at `MAX_TERMS` resolved terms is equivalent to
+    /// resolve-all-then-truncate: later duplicates would be dropped by the
+    /// dedup anyway, and later new terms would be truncated.)
+    fn resolve_terms(&self, query: &Query, scratch: &mut QueryScratch) {
+        let index = &*self.index;
+        scratch.term_ids.clear();
+        scratch.idf.iter_mut().for_each(|v| *v = 0.0);
         for t in query.terms.iter() {
+            if scratch.term_ids.len() == MAX_TERMS {
+                break;
+            }
             if let Some(id) = index.lookup(t) {
-                if !term_ids.contains(&id) {
-                    term_ids.push(id);
+                if !scratch.term_ids.contains(&id) {
+                    scratch.term_ids.push(id);
                 }
             }
         }
-        term_ids.truncate(MAX_TERMS);
-        let mut idf = vec![0.0f32; MAX_TERMS];
-        for (slot, &t) in term_ids.iter().enumerate() {
-            idf[slot] = index.idf(t);
+        for (slot, &t) in scratch.term_ids.iter().enumerate() {
+            scratch.idf[slot] = index.idf(t);
         }
+    }
+
+    /// Run the traversal for the terms already resolved in `scratch`,
+    /// leaving ranked hits in `scratch.hits`. `Ok(None)` = cancelled.
+    fn run_resolved(
+        &self,
+        backend: &mut dyn BlockScorer,
+        cancel: Option<&CancelToken>,
+        scratch: &mut QueryScratch,
+    ) -> Result<Option<SearchStats>> {
+        let avgdl = self.index.avgdl() as f32;
         let mut stats = SearchStats {
-            matched_terms: term_ids.len(),
+            matched_terms: scratch.term_ids.len(),
             ..SearchStats::default()
         };
-        if term_ids.is_empty() {
-            return Ok(Some(SearchResult {
-                hits: Vec::new(),
-                stats,
-            }));
+        scratch.hits.clear();
+        if scratch.term_ids.is_empty() {
+            return Ok(Some(stats));
         }
-
-        let mut global = TopK::new(self.top_k);
+        scratch.topk.reset(self.top_k);
+        scratch.block.reset(avgdl);
         let finished = match self.traversal {
-            Traversal::Union => self.search_union(
-                &term_ids, &idf, avgdl, backend, cancel, &mut global, &mut stats,
-            )?,
-            Traversal::Wand => self.search_wand(
-                &term_ids, &idf, avgdl, backend, cancel, &mut global, &mut stats,
-            )?,
+            Traversal::Union => self.search_union(backend, cancel, scratch, &mut stats)?,
+            Traversal::Wand => self.search_wand(backend, cancel, scratch, &mut stats)?,
         };
         if !finished {
             return Ok(None);
         }
-
-        let hits = global
-            .into_sorted()
-            .into_iter()
-            .map(|d| SearchHit {
-                doc: d.doc,
-                score: d.score,
-                title: index.title(d.doc).to_string(),
-            })
-            .collect();
-        Ok(Some(SearchResult { hits, stats }))
+        // Drain the min-heap worst-first and reverse: exactly
+        // `TopK::into_sorted`'s order (see `TopK::pop_min`), no allocation.
+        while let Some(d) = scratch.topk.pop_min() {
+            scratch.hits.push(d);
+        }
+        scratch.hits.reverse();
+        Ok(Some(stats))
     }
 
-    /// Exhaustive union traversal: heap-based k-way merge over postings in
-    /// document order, staging candidates into fixed-geometry score blocks
-    /// for the backend. Returns `false` if the cancel token aborted the
-    /// query at a block boundary.
-    #[allow(clippy::too_many_arguments)] // traversal state + backend + cancel
+    /// Exhaustive union traversal: heap-based k-way merge over the terms'
+    /// arena ranges in document order, staging candidates into the scratch
+    /// score block for the backend. Returns `false` if the cancel token
+    /// aborted the query at a block boundary.
     fn search_union(
         &self,
-        term_ids: &[u32],
-        idf: &[f32],
-        avgdl: f32,
         backend: &mut dyn BlockScorer,
         cancel: Option<&CancelToken>,
-        global: &mut TopK,
+        scratch: &mut QueryScratch,
         stats: &mut SearchStats,
     ) -> Result<bool> {
         let index = &*self.index;
-        let lists: Vec<&[super::index::Posting]> =
-            term_ids.iter().map(|&t| index.postings(t)).collect();
-        let mut cursors = vec![0usize; lists.len()];
-        let mut block = ScoreBlock::new(avgdl);
-        // Min-heap of (current doc, list) heads: each merge step pops the
-        // lists positioned at the smallest doc instead of min-scanning all
-        // k lists per candidate — O(log k) per posting, and the Reverse
-        // tuple ordering visits co-located lists in slot order, exactly the
-        // fill order of the previous linear scan.
-        let mut heads: BinaryHeap<Reverse<(u32, usize)>> =
-            BinaryHeap::with_capacity(lists.len());
-        for (li, list) in lists.iter().enumerate() {
-            if let Some(p) = list.first() {
-                heads.push(Reverse((p.doc, li)));
+        let avgdl = index.avgdl() as f32;
+        let base = index.doc_base();
+        let (docs_slab, tfs_slab) = index.postings_slabs();
+        let dl_slab = index.doc_len_slab();
+        let QueryScratch {
+            ref term_ids,
+            ref idf,
+            ref mut block,
+            ref mut block_topk,
+            ref mut topk,
+            ref mut heads,
+            ref mut union_ranges,
+            ..
+        } = *scratch;
+
+        union_ranges.clear();
+        heads.clear();
+        // Min-heap of (current doc, slot) heads: each merge step pops the
+        // slots positioned at the smallest doc instead of min-scanning all
+        // k ranges per candidate — O(log k) per posting, and the Reverse
+        // tuple ordering visits co-located slots in slot order, exactly
+        // the union fill order the block layout expects.
+        for (slot, &t) in term_ids.iter().enumerate() {
+            let (off, len) = index.term_range(t);
+            union_ranges.push((off, off + len));
+            if len > 0 {
+                heads.push(Reverse((docs_slab[off as usize], slot)));
             }
         }
 
         while let Some(&Reverse((next_doc, _))) = heads.peek() {
-            // Fill one row: tf per slot for every list positioned at next_doc.
+            // Fill one row: tf per slot for every range positioned at
+            // next_doc. Ids are arena-space; the staged row is local.
             let row = block.docs.len();
-            block.docs.push(next_doc);
-            let dl = index.doc_len(next_doc) as f32;
+            block.docs.push(next_doc - base);
+            let dl = dl_slab[next_doc as usize] as f32;
             block.dl[row] = dl;
             if dl < block.min_dl {
                 block.min_dl = dl;
             }
-            while let Some(&Reverse((doc, li))) = heads.peek() {
+            while let Some(&Reverse((doc, slot))) = heads.peek() {
                 if doc != next_doc {
                     break;
                 }
                 heads.pop();
-                let tf = lists[li][cursors[li]].tf as f32;
-                block.tf[row * MAX_TERMS + li] = tf;
-                if tf > block.max_tf[li] {
-                    block.max_tf[li] = tf;
+                let (cur, end) = &mut union_ranges[slot];
+                let tf = tfs_slab[*cur as usize] as f32;
+                block.tf[row * MAX_TERMS + slot] = tf;
+                if tf > block.max_tf[slot] {
+                    block.max_tf[slot] = tf;
                 }
-                cursors[li] += 1;
-                if let Some(p) = lists[li].get(cursors[li]) {
-                    heads.push(Reverse((p.doc, li)));
+                *cur += 1;
+                if *cur < *end {
+                    heads.push(Reverse((docs_slab[*cur as usize], slot)));
                 }
             }
             stats.candidates += 1;
@@ -526,12 +761,12 @@ impl SearchEngine {
                 if cancel.is_some_and(CancelToken::is_cancelled) {
                     return Ok(false);
                 }
-                self.flush_block(&block, idf, avgdl, backend, global, stats)?;
+                self.flush_block(block, idf, avgdl, backend, block_topk, topk, stats)?;
                 block.reset(avgdl);
             }
         }
         if !block.docs.is_empty() {
-            self.flush_block(&block, idf, avgdl, backend, global, stats)?;
+            self.flush_block(block, idf, avgdl, backend, block_topk, topk, stats)?;
         }
         Ok(true)
     }
@@ -547,18 +782,19 @@ impl SearchEngine {
     /// block flushes, so relative to a document-at-a-time threshold the
     /// lag can only make skipping *more* conservative, never unsound.
     /// Returns `false` if the cancel token aborted at a block boundary.
-    #[allow(clippy::too_many_arguments)] // traversal state + backend + cancel
     fn search_wand(
         &self,
-        term_ids: &[u32],
-        idf: &[f32],
-        avgdl: f32,
         backend: &mut dyn BlockScorer,
         cancel: Option<&CancelToken>,
-        global: &mut TopK,
+        scratch: &mut QueryScratch,
         stats: &mut SearchStats,
     ) -> Result<bool> {
         let index = &*self.index;
+        let avgdl = index.avgdl() as f32;
+        let base = index.doc_base();
+        let (docs_slab, tfs_slab) = index.postings_slabs();
+        let blocks_slab = index.block_slab();
+        let dl_slab = index.doc_len_slab();
         let params = self.params;
         // Upper bound of one directory block's per-document contribution
         // for a term: block-max tf + the block's shortest document — the
@@ -570,37 +806,48 @@ impl SearchEngine {
             let floor = params.k1 * (1.0 - params.b + params.b * (b.min_dl as f32) / avgdl);
             w * mtf * (params.k1 + 1.0) / (mtf + floor)
         };
-        let mut cursors: Vec<WandCursor> = term_ids
-            .iter()
-            .enumerate()
-            .filter_map(|(slot, &t)| {
-                let list = index.postings(t);
-                if list.is_empty() {
-                    return None;
-                }
-                let blocks = index.blocks(t);
-                let ub = blocks
-                    .iter()
-                    .map(|b| block_bound(idf[slot], b))
-                    .fold(0.0f32, f32::max);
-                Some(WandCursor {
-                    slot,
-                    list,
-                    blocks,
-                    pos: 0,
-                    ub,
-                })
-            })
-            .collect();
+        let QueryScratch {
+            ref term_ids,
+            ref idf,
+            ref mut block,
+            ref mut block_topk,
+            ref mut topk,
+            wand: ref mut cursors,
+            ..
+        } = *scratch;
 
-        let mut block = ScoreBlock::new(avgdl);
+        cursors.clear();
+        for (slot, &t) in term_ids.iter().enumerate() {
+            let (off, len) = index.term_range(t);
+            if len == 0 {
+                continue;
+            }
+            let (blk_off, blk_len) = index.block_range(t);
+            let ub = blocks_slab[blk_off as usize..(blk_off + blk_len) as usize]
+                .iter()
+                .map(|b| block_bound(idf[slot], b))
+                .fold(0.0f32, f32::max);
+            cursors.push(WandCursor {
+                slot,
+                off,
+                len,
+                blk_off,
+                blk_len,
+                pos: 0,
+                ub,
+            });
+        }
+
         loop {
             cursors.retain(|c| !c.exhausted());
             if cursors.is_empty() {
                 break;
             }
-            cursors.sort_by_key(|c| (c.doc(), c.slot));
-            let threshold = global.threshold();
+            // In-place unstable sort: keys are unique (one entry per
+            // slot), so the order is identical to a stable sort — and no
+            // sort buffer is allocated.
+            cursors.sort_unstable_by_key(|c| (c.doc(docs_slab), c.slot));
+            let threshold = topk.threshold();
 
             // Pivot selection: the shortest prefix of cursors (in doc
             // order) whose summed term upper bounds could reach the
@@ -617,10 +864,10 @@ impl SearchEngine {
                 }
             }
             let Some(mut p) = pivot else { break };
-            let pivot_doc = cursors[p].doc();
+            let pivot_doc = cursors[p].doc(docs_slab);
             // Terms co-located at the pivot document contribute too — fold
             // them in so the refinement bound (and evaluation) see them.
-            while p + 1 < cursors.len() && cursors[p + 1].doc() == pivot_doc {
+            while p + 1 < cursors.len() && cursors[p + 1].doc(docs_slab) == pivot_doc {
                 p += 1;
             }
 
@@ -631,7 +878,7 @@ impl SearchEngine {
                 Some(t) => {
                     let mut block_acc = 0.0f32;
                     for c in &cursors[..=p] {
-                        if let Some(b) = c.block_for(pivot_doc) {
+                        if let Some(b) = c.block_for(pivot_doc, blocks_slab) {
                             block_acc += block_bound(idf[c.slot], b);
                         }
                     }
@@ -646,31 +893,31 @@ impl SearchEngine {
                 // first uncounted term's current doc). Gallop past it.
                 let mut next = u32::MAX;
                 for c in &cursors[..=p] {
-                    if let Some(b) = c.block_for(pivot_doc) {
+                    if let Some(b) = c.block_for(pivot_doc, blocks_slab) {
                         next = next.min(b.last_doc.saturating_add(1));
                     }
                 }
                 if let Some(c) = cursors.get(p + 1) {
-                    next = next.min(c.doc());
+                    next = next.min(c.doc(docs_slab));
                 }
                 for c in cursors[..=p].iter_mut() {
-                    if c.doc() < next {
-                        c.seek(next, stats);
+                    if c.doc(docs_slab) < next {
+                        c.seek(next, docs_slab, blocks_slab, stats);
                     }
                 }
-            } else if cursors[0].doc() == pivot_doc {
+            } else if cursors[0].doc(docs_slab) == pivot_doc {
                 // Fully aligned: decode the pivot document into the staged
                 // score block — the exact union-path row layout, scored by
                 // the same backend at the next flush.
                 let row = block.docs.len();
-                block.docs.push(pivot_doc);
-                let dl = index.doc_len(pivot_doc) as f32;
+                block.docs.push(pivot_doc - base);
+                let dl = dl_slab[pivot_doc as usize] as f32;
                 block.dl[row] = dl;
                 if dl < block.min_dl {
                     block.min_dl = dl;
                 }
                 for c in cursors[..=p].iter_mut() {
-                    let tf = c.list[c.pos].tf as f32;
+                    let tf = tfs_slab[(c.off + c.pos) as usize] as f32;
                     block.tf[row * MAX_TERMS + c.slot] = tf;
                     if tf > block.max_tf[c.slot] {
                         block.max_tf[c.slot] = tf;
@@ -682,7 +929,7 @@ impl SearchEngine {
                     if cancel.is_some_and(CancelToken::is_cancelled) {
                         return Ok(false);
                     }
-                    self.flush_block(&block, idf, avgdl, backend, global, stats)?;
+                    self.flush_block(block, idf, avgdl, backend, block_topk, topk, stats)?;
                     block.reset(avgdl);
                 }
             } else {
@@ -690,24 +937,26 @@ impl SearchEngine {
                 // Documents before the pivot are covered only by the
                 // sub-threshold prefix, so gallop the laggards forward.
                 for c in cursors[..=p].iter_mut() {
-                    if c.doc() < pivot_doc {
-                        c.seek(pivot_doc, stats);
+                    if c.doc(docs_slab) < pivot_doc {
+                        c.seek(pivot_doc, docs_slab, blocks_slab, stats);
                     }
                 }
             }
         }
         if !block.docs.is_empty() {
-            self.flush_block(&block, idf, avgdl, backend, global, stats)?;
+            self.flush_block(block, idf, avgdl, backend, block_topk, topk, stats)?;
         }
         Ok(true)
     }
 
+    #[allow(clippy::too_many_arguments)] // hot-path plumbing of scratch parts
     fn flush_block(
         &self,
         block: &ScoreBlock,
         idf: &[f32],
         avgdl: f32,
         backend: &mut dyn BlockScorer,
+        out: &mut BlockTopK,
         global: &mut TopK,
         stats: &mut SearchStats,
     ) -> Result<()> {
@@ -723,9 +972,9 @@ impl SearchEngine {
                 }
             }
         }
-        let local = backend.score_block(block, idf, avgdl)?;
+        backend.score_block_into(block, idf, avgdl, out)?;
         stats.blocks += 1;
-        for &(row, score) in &local.entries {
+        for &(row, score) in &out.entries {
             if row < block.docs.len() {
                 global.push(block.docs[row], score);
             }
@@ -758,11 +1007,7 @@ mod tests {
         assert!(r.stats.candidates > 0);
         // Every hit must actually contain term 3.
         for hit in &r.hits {
-            assert!(e
-                .index()
-                .postings(3)
-                .iter()
-                .any(|p| p.doc == hit.doc));
+            assert!(e.index().postings(3).any(|p| p.doc == hit.doc));
         }
     }
 
@@ -825,7 +1070,7 @@ mod tests {
         for hit in &r.hits {
             let mut expect = 0.0f32;
             for &t in &[4u32, 6] {
-                if let Some(p) = idx.postings(t).iter().find(|p| p.doc == hit.doc) {
+                if let Some(p) = idx.postings(t).find(|p| p.doc == hit.doc) {
                     expect += crate::search::bm25::bm25_term(
                         p.tf as f32,
                         idx.idf(t),
@@ -1045,22 +1290,23 @@ mod tests {
         });
     }
 
-    /// Backend wrapper counting `score_block` calls — the live server's
-    /// heterogeneity emulation meters exactly this.
+    /// Backend wrapper counting `score_block_into` calls — the live
+    /// server's heterogeneity emulation meters exactly this.
     struct CountingScorer {
         inner: RustScorer,
         calls: usize,
     }
 
     impl BlockScorer for CountingScorer {
-        fn score_block(
+        fn score_block_into(
             &mut self,
             block: &ScoreBlock,
             idf: &[f32],
             avgdl: f32,
-        ) -> Result<BlockTopK> {
+            out: &mut BlockTopK,
+        ) -> Result<()> {
             self.calls += 1;
-            self.inner.score_block(block, idf, avgdl)
+            self.inner.score_block_into(block, idf, avgdl, out)
         }
 
         fn label(&self) -> &'static str {
@@ -1170,5 +1416,101 @@ mod tests {
             }
         }
         assert!(skipped > 0, "wand never skipped on any shard");
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_across_queries() {
+        // One scratch threaded through a sequence of different queries
+        // must return exactly what fresh per-call state returns — stale
+        // buffer contents must never leak between queries.
+        let corpus = Corpus::generate(&CorpusConfig {
+            num_docs: 4_000,
+            vocab_size: 2_000,
+            ..CorpusConfig::small()
+        });
+        let index = Arc::new(Index::build(&corpus));
+        for traversal in Traversal::all() {
+            let e = SearchEngine::new(index.clone(), 10).with_traversal(traversal);
+            let mut backend = RustScorer::new(Bm25Params::default());
+            let mut scratch = QueryScratch::new();
+            for seed in 0..12u32 {
+                let ids = [seed % 30, 300 + seed * 71 % 1_700];
+                let q = Query::from_terms(
+                    ids.iter().map(|&t| index.term(t).to_string()).collect(),
+                );
+                let stats = e
+                    .search_scratch(&q, &mut backend, None, &mut scratch)
+                    .unwrap()
+                    .expect("no cancel token");
+                let fresh = e.search(&q);
+                assert_eq!(stats, fresh.stats, "{} seed {seed}", traversal.label());
+                let reused = SearchResult {
+                    hits: scratch.hits().to_vec(),
+                    stats,
+                };
+                assert_same_hits(&reused, &fresh, &format!("{} seed {seed}", traversal.label()));
+            }
+        }
+    }
+
+    #[test]
+    fn prop_search_batch_matches_sequential() {
+        use crate::util::{prop, Rng};
+        // Random corpora × random batch shapes (including adjacent
+        // duplicate queries, which exercise the resolve-skip reuse):
+        // search_batch must be bit-identical to per-request search_with,
+        // under both traversals.
+        prop::check(16, |rng: &mut Rng, case| {
+            let corpus = Corpus::generate(&CorpusConfig {
+                num_docs: rng.range(300, 1_200),
+                vocab_size: rng.range(200, 1_500),
+                seed: 0xBA7C4 ^ case as u64,
+                ..CorpusConfig::small()
+            });
+            let index = Arc::new(Index::build(&corpus));
+            let nt = index.num_terms();
+            let mut queries: Vec<Query> = Vec::new();
+            for _ in 0..rng.range(1, 9) {
+                if rng.chance(0.3) && !queries.is_empty() {
+                    // Adjacent duplicate: same terms as the previous item.
+                    let prev = queries.last().unwrap().terms.clone();
+                    queries.push(Query::from_terms(prev));
+                } else {
+                    let terms: Vec<String> = (0..rng.range(1, 5))
+                        .map(|_| index.term(rng.below(nt) as u32).to_string())
+                        .collect();
+                    queries.push(Query::from_terms(terms));
+                }
+            }
+            for traversal in Traversal::all() {
+                let e = SearchEngine::new(index.clone(), 10).with_traversal(traversal);
+                let mut backend = RustScorer::new(Bm25Params::default());
+                let mut scratch = QueryScratch::new();
+                let mut batched: Vec<SearchResult> = Vec::new();
+                e.search_batch(&queries, &mut backend, &mut scratch, |i, stats, hits| {
+                    assert_eq!(i, batched.len());
+                    batched.push(SearchResult {
+                        hits: hits.to_vec(),
+                        stats,
+                    });
+                })
+                .unwrap();
+                assert_eq!(batched.len(), queries.len());
+                for (i, q) in queries.iter().enumerate() {
+                    let mut b2 = RustScorer::new(Bm25Params::default());
+                    let want = e.search_with(q, &mut b2).unwrap();
+                    assert_same_hits(
+                        &batched[i],
+                        &want,
+                        &format!("case {case} {} item {i}", traversal.label()),
+                    );
+                    assert_eq!(
+                        batched[i].stats, want.stats,
+                        "case {case} {} item {i}: stats",
+                        traversal.label()
+                    );
+                }
+            }
+        });
     }
 }

@@ -1,19 +1,45 @@
-//! Inverted index: dictionary, postings lists, document statistics, and a
-//! per-term block directory for skip-based traversal.
+//! Inverted index: dictionary, a contiguous postings arena, document
+//! statistics, and a per-term block directory for skip-based traversal.
 //!
-//! Postings are strictly sorted by document id (verified by tests and a
-//! property test), which the candidate-union iterator in `engine.rs` relies
-//! on for its k-way merge. On top of each list the index keeps a *block
-//! directory*: one [`BlockEntry`] per [`SKIP_BLOCK`] postings, recording the
-//! block's last document id (a classic skip list) plus the block-max payload
-//! (`max_tf`, `min_dl`) that lets the WAND traversal in `engine.rs` bound a
-//! block's best possible BM25 contribution without decoding it. The
-//! directory stores only term-frequency/length statistics — deliberately no
-//! scores — so it stays valid under [`Index::with_global_stats`]: the bound
-//! is computed at query time from the *effective* IDF/avgdl, which is how a
-//! shard slice carrying corpus-wide statistics skips soundly.
+//! # Arena layout
+//!
+//! All postings live in one struct-of-arrays [`PostingsArena`]: a `docs`
+//! slab and a parallel `tfs` slab, each a single contiguous `Vec<u32>`
+//! covering every term's list back to back. A term's list is the
+//! `(offset, len)` range recorded in `term_ranges` — no per-term `Vec`, no
+//! pointer chase between lists, and a whole-index traversal is one
+//! sequential sweep. The block directory is flattened the same way: one
+//! [`BlockEntry`] slab plus per-term `(offset, len)` ranges.
+//!
+//! Postings within a term's range are strictly sorted by document id
+//! (verified by tests), which the candidate-union iterator in `engine.rs`
+//! relies on for its k-way merge. One [`BlockEntry`] summarises each run of
+//! [`SKIP_BLOCK`] postings, recording the run's last document id (a classic
+//! skip list) plus the block-max payload (`max_tf`, `min_dl`) that lets the
+//! WAND traversal bound a block's best possible BM25 contribution without
+//! decoding it. The directory stores only term-frequency/length statistics —
+//! deliberately no scores — so it stays valid under
+//! [`Index::with_global_stats`]: the bound is computed at query time from
+//! the *effective* IDF/avgdl, which is how a shard slice carrying
+//! corpus-wide statistics skips soundly.
+//!
+//! # Zero-copy slicing
+//!
+//! An [`Index`] is a cheap *view*: the arena, dictionary, vocabulary,
+//! document lengths and titles are behind `Arc`s, and the per-view state is
+//! just the range tables plus `doc_base`. [`Index::slice_docs`] narrows
+//! every term range with two binary searches and rebuilds only the (small)
+//! per-view block directory — O(terms · log len) with **zero** postings
+//! copied, which is how `shard::build_shard_indexes` gets S shard views
+//! from one inversion. Slab document ids are *arena-space* (the root
+//! index's ids); a view exposes *local* ids `0..num_docs` where
+//! `local = arena - doc_base`. [`Index::term_postings`] / [`Index::blocks`]
+//! speak arena space (the engine traverses there and localises only when
+//! staging a block); [`Index::postings`], [`Index::doc_len`] and
+//! [`Index::title`] speak local space.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use super::bm25;
 use super::corpus::Corpus;
@@ -36,7 +62,8 @@ pub const SKIP_BLOCK: usize = 128;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BlockEntry {
     /// Highest document id in the block (postings are sorted, so this is
-    /// the last entry — the skip pointer).
+    /// the last entry — the skip pointer). Arena-space, like the `docs`
+    /// slab it summarises.
     pub last_doc: u32,
     /// Maximum term frequency among the block's postings.
     pub max_tf: u32,
@@ -44,56 +71,116 @@ pub struct BlockEntry {
     pub min_dl: u32,
 }
 
-/// Build the per-term block directory from sorted postings and document
-/// lengths. Shared by [`Index::build`] and [`Index::from_parts`] so loaded
-/// indexes (HUIX v1 stores no directory) and freshly inverted corpora carry
-/// identical metadata.
-fn build_block_directory(postings: &[Vec<Posting>], doc_len: &[u32]) -> Vec<Vec<BlockEntry>> {
-    postings
-        .iter()
-        .map(|list| {
-            list.chunks(SKIP_BLOCK)
-                .map(|chunk| {
-                    let mut max_tf = 0u32;
-                    let mut min_dl = u32::MAX;
-                    for p in chunk {
-                        max_tf = max_tf.max(p.tf);
-                        min_dl = min_dl.min(doc_len[p.doc as usize]);
-                    }
-                    BlockEntry {
-                        last_doc: chunk.last().expect("chunks are non-empty").doc,
-                        max_tf,
-                        min_dl,
-                    }
-                })
-                .collect()
-        })
-        .collect()
+/// The struct-of-arrays postings storage shared by a root index and every
+/// view sliced from it: one contiguous `docs` slab and a parallel `tfs`
+/// slab. Document ids are arena-space (the root index's numbering).
+#[derive(Debug)]
+pub struct PostingsArena {
+    docs: Vec<u32>,
+    tfs: Vec<u32>,
 }
 
-/// Immutable inverted index over a corpus.
+/// A term's postings as parallel arena slices (struct-of-arrays view).
+/// `docs[i]` is arena-space; pair with [`Index::doc_base`] to localise.
+#[derive(Clone, Copy, Debug)]
+pub struct TermPostings<'a> {
+    /// Document ids, strictly ascending, arena-space.
+    pub docs: &'a [u32],
+    /// Term frequencies, parallel to `docs`.
+    pub tfs: &'a [u32],
+}
+
+impl<'a> TermPostings<'a> {
+    /// Number of postings in the range.
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+
+    /// True if the term has no postings in this view.
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+}
+
+/// Build the flat block directory for the given term ranges over the arena
+/// slabs. Blocks are chunked from each *range's* start (not the slab's), so
+/// a sliced view gets the same directory a from-scratch inversion of the
+/// sub-corpus would. `doc_len` is indexed by arena doc id. Returns the
+/// entry slab plus per-term `(offset, len)` ranges into it.
+fn build_directory(
+    docs: &[u32],
+    tfs: &[u32],
+    term_ranges: &[(u32, u32)],
+    doc_len: &[u32],
+) -> (Vec<BlockEntry>, Vec<(u32, u32)>) {
+    let total_blocks: usize = term_ranges
+        .iter()
+        .map(|&(_, len)| (len as usize).div_ceil(SKIP_BLOCK))
+        .sum();
+    let mut blocks = Vec::with_capacity(total_blocks);
+    let mut block_ranges = Vec::with_capacity(term_ranges.len());
+    for &(off, len) in term_ranges {
+        let (off, len) = (off as usize, len as usize);
+        let blk_off = blocks.len() as u32;
+        let term_docs = &docs[off..off + len];
+        let term_tfs = &tfs[off..off + len];
+        for c in 0..len.div_ceil(SKIP_BLOCK) {
+            let lo = c * SKIP_BLOCK;
+            let hi = (lo + SKIP_BLOCK).min(len);
+            let mut max_tf = 0u32;
+            let mut min_dl = u32::MAX;
+            for j in lo..hi {
+                max_tf = max_tf.max(term_tfs[j]);
+                min_dl = min_dl.min(doc_len[term_docs[j] as usize]);
+            }
+            blocks.push(BlockEntry {
+                last_doc: term_docs[hi - 1],
+                max_tf,
+                min_dl,
+            });
+        }
+        block_ranges.push((blk_off, blocks.len() as u32 - blk_off));
+    }
+    (blocks, block_ranges)
+}
+
+/// Immutable inverted index over a corpus — or a zero-copy doc-range view
+/// of one (see the module docs for the arena layout and slicing contract).
 #[derive(Clone, Debug)]
 pub struct Index {
-    dict: HashMap<String, u32>,
-    terms: Vec<String>,
-    postings: Vec<Vec<Posting>>,
-    doc_len: Vec<u32>,
-    titles: Vec<String>,
+    dict: Arc<HashMap<String, u32>>,
+    terms: Arc<Vec<String>>,
+    arena: Arc<PostingsArena>,
+    /// Per-term `(offset, len)` into the arena slabs — this view's ranges.
+    term_ranges: Vec<(u32, u32)>,
+    /// Flat block-directory slab for this view (rebuilt per slice; small).
+    blocks: Vec<BlockEntry>,
+    /// Per-term `(offset, len)` into `blocks`.
+    block_ranges: Vec<(u32, u32)>,
+    /// Arena doc id of this view's local doc 0.
+    doc_base: u32,
+    /// Documents in this view (`local` ids are `0..num_docs`).
+    num_docs: u32,
+    /// Full parent arrays, indexed by *arena* doc id.
+    doc_len: Arc<Vec<u32>>,
+    titles: Arc<Vec<String>>,
     avgdl: f64,
     total_postings: usize,
-    /// Corpus-wide IDF table distributed to a shard index at build time
+    /// Corpus-wide IDF table distributed to a shard view at build time
     /// (see [`Index::with_global_stats`]). `None` = plain local statistics.
-    idf_override: Option<Vec<f32>>,
-    /// Per-term block directory ([`SKIP_BLOCK`]-entry granularity), built
-    /// at construction time and carried unchanged through
-    /// [`Index::with_global_stats`] (it stores statistics, not scores).
-    block_dir: Vec<Vec<BlockEntry>>,
+    idf_override: Option<Arc<Vec<f32>>>,
 }
 
 impl Index {
     /// Invert a corpus. Documents arrive pre-analysed (term-id streams);
-    /// the dictionary is built from the corpus vocabulary so that query-time
-    /// analysis (`text::analyze`) maps back to the same ids.
+    /// the dictionary is built from the corpus vocabulary so that
+    /// query-time analysis (`text::analyze`) maps back to the same ids.
+    ///
+    /// Two counting-sort passes produce the arena directly: pass 1 counts
+    /// per-term document frequencies (sizing every range exactly), pass 2
+    /// writes postings at per-term cursors. Both passes reuse one scratch
+    /// tf-accumulation buffer across documents — no per-document map, no
+    /// per-term `Vec` growth, exactly one allocation per slab.
     pub fn build(corpus: &Corpus) -> Index {
         let num_terms = corpus.vocab.len();
         let mut dict = HashMap::with_capacity(num_terms);
@@ -101,56 +188,80 @@ impl Index {
             dict.insert(w.clone(), id as u32);
         }
 
-        let mut postings: Vec<Vec<Posting>> = vec![Vec::new(); num_terms];
         let mut doc_len = Vec::with_capacity(corpus.docs.len());
         let mut titles = Vec::with_capacity(corpus.docs.len());
-        // Per-document tf accumulation, then append — docs are processed in
-        // id order, which keeps every postings list sorted by construction.
-        let mut tf_acc: HashMap<u32, u32> = HashMap::new();
-        let mut total_postings = 0usize;
+        // Pass 1: per-term document frequency via a last-seen-doc stamp
+        // (no per-doc set), plus document statistics.
+        let mut df = vec![0u32; num_terms];
+        let mut last_seen = vec![u32::MAX; num_terms];
         for (doc_id, doc) in corpus.docs.iter().enumerate() {
             doc_len.push(doc.tokens.len() as u32);
             titles.push(doc.title.clone());
-            tf_acc.clear();
             for &t in &doc.tokens {
-                *tf_acc.entry(t).or_insert(0) += 1;
-            }
-            for (&term, &tf) in tf_acc.iter() {
-                postings[term as usize].push(Posting {
-                    doc: doc_id as u32,
-                    tf,
-                });
-                total_postings += 1;
+                if last_seen[t as usize] != doc_id as u32 {
+                    last_seen[t as usize] = doc_id as u32;
+                    df[t as usize] += 1;
+                }
             }
         }
-        // HashMap iteration order is arbitrary per doc, but each doc appends
-        // exactly one posting per term, so per-term lists are still sorted;
-        // assert in debug builds.
-        #[cfg(debug_assertions)]
-        for list in &postings {
-            debug_assert!(list.windows(2).all(|w| w[0].doc < w[1].doc));
+        // Exclusive prefix sum of df → per-term arena offsets.
+        let mut term_ranges = Vec::with_capacity(num_terms);
+        let mut total = 0u32;
+        for &d in &df {
+            term_ranges.push((total, d));
+            total += d;
+        }
+        let total_postings = total as usize;
+        let mut docs = vec![0u32; total_postings];
+        let mut tfs = vec![0u32; total_postings];
+        // Pass 2: accumulate each document's term frequencies in one
+        // reusable scratch (`tf_scratch` + `touched` reset per doc), then
+        // write at the per-term cursors. Documents are processed in id
+        // order, so every term's range is sorted by construction.
+        let mut cursor: Vec<u32> = term_ranges.iter().map(|&(off, _)| off).collect();
+        let mut tf_scratch = vec![0u32; num_terms];
+        let mut touched: Vec<u32> = Vec::new();
+        for (doc_id, doc) in corpus.docs.iter().enumerate() {
+            for &t in &doc.tokens {
+                if tf_scratch[t as usize] == 0 {
+                    touched.push(t);
+                }
+                tf_scratch[t as usize] += 1;
+            }
+            for &t in &touched {
+                let c = cursor[t as usize] as usize;
+                docs[c] = doc_id as u32;
+                tfs[c] = tf_scratch[t as usize];
+                cursor[t as usize] += 1;
+                tf_scratch[t as usize] = 0;
+            }
+            touched.clear();
         }
         let avgdl = if doc_len.is_empty() {
             0.0
         } else {
             doc_len.iter().map(|&l| l as f64).sum::<f64>() / doc_len.len() as f64
         };
-        let block_dir = build_block_directory(&postings, &doc_len);
+        let (blocks, block_ranges) = build_directory(&docs, &tfs, &term_ranges, &doc_len);
         Index {
-            dict,
-            terms: corpus.vocab.clone(),
-            postings,
-            doc_len,
-            titles,
+            dict: Arc::new(dict),
+            terms: Arc::new(corpus.vocab.clone()),
+            arena: Arc::new(PostingsArena { docs, tfs }),
+            term_ranges,
+            blocks,
+            block_ranges,
+            doc_base: 0,
+            num_docs: doc_len.len() as u32,
+            doc_len: Arc::new(doc_len),
+            titles: Arc::new(titles),
             avgdl,
             total_postings,
             idf_override: None,
-            block_dir,
         }
     }
 
     /// Replace this index's ranking statistics with corpus-wide figures —
-    /// how a doc-range shard index stays *self-consistent* (it owns every
+    /// how a doc-range shard view stays *self-consistent* (it owns every
     /// statistic it needs to score, no cross-shard lookup at query time)
     /// while remaining *globally calibrated* (scores are comparable across
     /// shards, so the k-way gather merge reproduces the unsharded ranking
@@ -166,13 +277,74 @@ impl Index {
             "global IDF table must cover the dictionary"
         );
         self.avgdl = avgdl;
-        self.idf_override = Some(idf);
+        self.idf_override = Some(Arc::new(idf));
         self
     }
 
+    /// A zero-copy view over local docs `[lo, hi)` of this index. Every
+    /// term range is narrowed with two binary searches on the shared arena
+    /// — no postings are copied (the view `Arc`-shares the parent's slabs,
+    /// dictionary and document arrays; see [`Index::shares_arena`]) — and
+    /// the per-view block directory is rebuilt from the narrowed ranges,
+    /// chunked from each range's start so skipping behaves exactly as a
+    /// from-scratch inversion of the sub-corpus would.
+    ///
+    /// The view's local doc ids are `0..hi - lo`; ranking statistics
+    /// (avgdl, IDF) are recomputed over the slice — shard builds override
+    /// them with corpus-wide figures via [`Index::with_global_stats`].
+    pub fn slice_docs(&self, lo: u32, hi: u32) -> Index {
+        assert!(
+            lo <= hi && hi <= self.num_docs,
+            "slice [{lo}, {hi}) out of bounds (num_docs {})",
+            self.num_docs
+        );
+        let arena_lo = self.doc_base + lo;
+        let arena_hi = self.doc_base + hi;
+        let mut term_ranges = Vec::with_capacity(self.term_ranges.len());
+        let mut total_postings = 0usize;
+        for &(off, len) in &self.term_ranges {
+            let list = &self.arena.docs[off as usize..(off + len) as usize];
+            let a = list.partition_point(|&d| d < arena_lo) as u32;
+            let b = list.partition_point(|&d| d < arena_hi) as u32;
+            term_ranges.push((off + a, b - a));
+            total_postings += (b - a) as usize;
+        }
+        let (blocks, block_ranges) = build_directory(
+            &self.arena.docs,
+            &self.arena.tfs,
+            &term_ranges,
+            &self.doc_len,
+        );
+        let slice_len = (hi - lo) as usize;
+        let avgdl = if slice_len == 0 {
+            0.0
+        } else {
+            self.doc_len[arena_lo as usize..arena_hi as usize]
+                .iter()
+                .map(|&l| l as f64)
+                .sum::<f64>()
+                / slice_len as f64
+        };
+        Index {
+            dict: self.dict.clone(),
+            terms: self.terms.clone(),
+            arena: self.arena.clone(),
+            term_ranges,
+            blocks,
+            block_ranges,
+            doc_base: arena_lo,
+            num_docs: hi - lo,
+            doc_len: self.doc_len.clone(),
+            titles: self.titles.clone(),
+            avgdl,
+            total_postings,
+            idf_override: None,
+        }
+    }
+
     /// Reassemble an index from its serialized parts (`persist.rs`),
-    /// rebuilding the dictionary and derived statistics and validating the
-    /// postings invariants.
+    /// rebuilding the dictionary and derived statistics, validating the
+    /// postings invariants, and flattening the lists into a fresh arena.
     pub fn from_parts(
         terms: Vec<String>,
         postings: Vec<Vec<Posting>>,
@@ -199,22 +371,37 @@ impl Index {
             }
             total_postings += list.len();
         }
+        let mut term_ranges = Vec::with_capacity(postings.len());
+        let mut docs = Vec::with_capacity(total_postings);
+        let mut tfs = Vec::with_capacity(total_postings);
+        for list in &postings {
+            let off = docs.len() as u32;
+            for p in list {
+                docs.push(p.doc);
+                tfs.push(p.tf);
+            }
+            term_ranges.push((off, list.len() as u32));
+        }
         let avgdl = if doc_len.is_empty() {
             0.0
         } else {
             doc_len.iter().map(|&l| l as f64).sum::<f64>() / doc_len.len() as f64
         };
-        let block_dir = build_block_directory(&postings, &doc_len);
+        let (blocks, block_ranges) = build_directory(&docs, &tfs, &term_ranges, &doc_len);
         Ok(Index {
-            dict,
-            terms,
-            postings,
-            doc_len,
-            titles,
+            dict: Arc::new(dict),
+            terms: Arc::new(terms),
+            arena: Arc::new(PostingsArena { docs, tfs }),
+            term_ranges,
+            blocks,
+            block_ranges,
+            doc_base: 0,
+            num_docs: doc_len.len() as u32,
+            doc_len: Arc::new(doc_len),
+            titles: Arc::new(titles),
             avgdl,
             total_postings,
             idf_override: None,
-            block_dir,
         })
     }
 
@@ -228,27 +415,79 @@ impl Index {
         &self.terms[id as usize]
     }
 
-    /// Postings list for a term (sorted by doc id).
-    pub fn postings(&self, term: u32) -> &[Posting] {
-        &self.postings[term as usize]
+    /// Postings list of a term as *local-space* [`Posting`]s (sorted by
+    /// doc id) — the persistence/test-facing view. The engine hot path
+    /// uses [`Index::term_postings`] and the raw slabs instead.
+    pub fn postings(&self, term: u32) -> impl Iterator<Item = Posting> + '_ {
+        let base = self.doc_base;
+        let tp = self.term_postings(term);
+        tp.docs
+            .iter()
+            .zip(tp.tfs.iter())
+            .map(move |(&d, &tf)| Posting { doc: d - base, tf })
+    }
+
+    /// A term's postings as parallel arena slices (arena-space doc ids).
+    pub fn term_postings(&self, term: u32) -> TermPostings<'_> {
+        let (off, len) = self.term_ranges[term as usize];
+        let (off, len) = (off as usize, len as usize);
+        TermPostings {
+            docs: &self.arena.docs[off..off + len],
+            tfs: &self.arena.tfs[off..off + len],
+        }
+    }
+
+    /// This view's `(offset, len)` arena range for a term.
+    pub fn term_range(&self, term: u32) -> (u32, u32) {
+        self.term_ranges[term as usize]
+    }
+
+    /// This view's `(offset, len)` range into the block-directory slab.
+    pub fn block_range(&self, term: u32) -> (u32, u32) {
+        self.block_ranges[term as usize]
+    }
+
+    /// The raw arena slabs `(docs, tfs)` — arena-space doc ids. Index with
+    /// [`Index::term_range`] offsets (absolute positions stay meaningful
+    /// across a view and its parent, since the arena is shared).
+    pub fn postings_slabs(&self) -> (&[u32], &[u32]) {
+        (&self.arena.docs, &self.arena.tfs)
+    }
+
+    /// The flat block-directory slab of this view. Index with
+    /// [`Index::block_range`] offsets.
+    pub fn block_slab(&self) -> &[BlockEntry] {
+        &self.blocks
     }
 
     /// Block directory of a term: one [`BlockEntry`] per [`SKIP_BLOCK`]
-    /// postings, in list order (entry `i` covers postings
-    /// `[i*SKIP_BLOCK, (i+1)*SKIP_BLOCK)`). Empty for terms with no
-    /// postings.
+    /// postings of this view's range, in list order (entry `i` covers
+    /// range-relative postings `[i*SKIP_BLOCK, (i+1)*SKIP_BLOCK)`).
+    /// `last_doc` is arena-space. Empty for terms with no postings.
     pub fn blocks(&self, term: u32) -> &[BlockEntry] {
-        &self.block_dir[term as usize]
+        let (off, len) = self.block_ranges[term as usize];
+        &self.blocks[off as usize..(off + len) as usize]
     }
 
-    /// Document frequency of a term.
+    /// Arena doc id of this view's local doc 0 (0 for a root index).
+    pub fn doc_base(&self) -> u32 {
+        self.doc_base
+    }
+
+    /// True if both indexes are views over the same postings arena —
+    /// the zero-copy slicing guarantee ([`Index::slice_docs`]).
+    pub fn shares_arena(&self, other: &Index) -> bool {
+        Arc::ptr_eq(&self.arena, &other.arena)
+    }
+
+    /// Document frequency of a term (within this view).
     pub fn doc_freq(&self, term: u32) -> usize {
-        self.postings[term as usize].len()
+        self.term_ranges[term as usize].1 as usize
     }
 
     /// BM25 IDF of a term: the corpus-wide table when this is a shard
-    /// index carrying global statistics ([`Index::with_global_stats`]),
-    /// else computed from this index's own document frequencies.
+    /// view carrying global statistics ([`Index::with_global_stats`]),
+    /// else computed from this view's own document frequencies.
     pub fn idf(&self, term: u32) -> f32 {
         match &self.idf_override {
             Some(table) => table[term as usize],
@@ -256,9 +495,9 @@ impl Index {
         }
     }
 
-    /// Number of indexed documents.
+    /// Number of indexed documents (in this view).
     pub fn num_docs(&self) -> usize {
-        self.doc_len.len()
+        self.num_docs as usize
     }
 
     /// Number of distinct terms in the dictionary.
@@ -266,22 +505,29 @@ impl Index {
         self.terms.len()
     }
 
-    /// Length (token count) of a document.
+    /// Length (token count) of a *local* document id.
     pub fn doc_len(&self, doc: u32) -> u32 {
-        self.doc_len[doc as usize]
+        self.doc_len[(self.doc_base + doc) as usize]
     }
 
-    /// Title of a document.
+    /// The full document-length array, indexed by *arena* doc id (shared
+    /// with the parent across views).
+    pub fn doc_len_slab(&self) -> &[u32] {
+        &self.doc_len
+    }
+
+    /// Title of a *local* document id.
     pub fn title(&self, doc: u32) -> &str {
-        &self.titles[doc as usize]
+        &self.titles[(self.doc_base + doc) as usize]
     }
 
-    /// Corpus average document length.
+    /// Average document length of this view (or the corpus-wide figure
+    /// after [`Index::with_global_stats`]).
     pub fn avgdl(&self) -> f64 {
         self.avgdl
     }
 
-    /// Total postings count (index size proxy).
+    /// Total postings count in this view (index size proxy).
     pub fn total_postings(&self) -> usize {
         self.total_postings
     }
@@ -301,7 +547,7 @@ mod tests {
     fn postings_sorted_strictly_by_doc() {
         let idx = small_index();
         for t in 0..idx.num_terms() as u32 {
-            let p = idx.postings(t);
+            let p: Vec<Posting> = idx.postings(t).collect();
             assert!(
                 p.windows(2).all(|w| w[0].doc < w[1].doc),
                 "term {t} unsorted"
@@ -313,7 +559,8 @@ mod tests {
     fn doc_freq_matches_postings_len() {
         let idx = small_index();
         for t in (0..idx.num_terms() as u32).step_by(101) {
-            assert_eq!(idx.doc_freq(t), idx.postings(t).len());
+            assert_eq!(idx.doc_freq(t), idx.postings(t).count());
+            assert_eq!(idx.doc_freq(t), idx.term_postings(t).len());
         }
     }
 
@@ -329,11 +576,27 @@ mod tests {
         for (&term, &tf) in &counts {
             let p = idx
                 .postings(term)
-                .iter()
                 .find(|p| p.doc == 0)
                 .expect("posting for doc 0 missing");
             assert_eq!(p.tf, tf);
         }
+    }
+
+    #[test]
+    fn arena_is_one_contiguous_range_per_term() {
+        // Term ranges tile the slabs back to back, in term order — the
+        // single-allocation layout the module docs promise.
+        let idx = small_index();
+        let mut expect_off = 0u32;
+        for t in 0..idx.num_terms() as u32 {
+            let (off, len) = idx.term_range(t);
+            assert_eq!(off, expect_off, "term {t} range not contiguous");
+            expect_off += len;
+        }
+        let (docs, tfs) = idx.postings_slabs();
+        assert_eq!(docs.len(), expect_off as usize);
+        assert_eq!(tfs.len(), docs.len());
+        assert_eq!(idx.total_postings(), docs.len());
     }
 
     #[test]
@@ -397,7 +660,7 @@ mod tests {
     fn block_directory_covers_and_bounds_postings() {
         let idx = small_index();
         for t in 0..idx.num_terms() as u32 {
-            let list = idx.postings(t);
+            let list: Vec<Posting> = idx.postings(t).collect();
             let dir = idx.blocks(t);
             assert_eq!(dir.len(), list.len().div_ceil(SKIP_BLOCK), "term {t}");
             for (b, entry) in dir.iter().enumerate() {
@@ -424,7 +687,7 @@ mod tests {
         // directory from the same postings.
         let rebuilt = Index::from_parts(
             (0..idx.num_terms() as u32).map(|t| idx.term(t).to_string()).collect(),
-            (0..idx.num_terms() as u32).map(|t| idx.postings(t).to_vec()).collect(),
+            (0..idx.num_terms() as u32).map(|t| idx.postings(t).collect()).collect(),
             (0..idx.num_docs() as u32).map(|d| idx.doc_len(d)).collect(),
             (0..idx.num_docs() as u32).map(|d| idx.title(d).to_string()).collect(),
         )
@@ -439,6 +702,69 @@ mod tests {
         let over = idx.with_global_stats(500.0, table);
         for (t, want) in probe.iter().enumerate() {
             assert_eq!(over.blocks(t as u32), &want[..], "term {t}");
+        }
+    }
+
+    /// The zero-copy slicing anchor: a doc-range view must be
+    /// indistinguishable (postings, block directory, statistics, titles)
+    /// from inverting the sub-corpus from scratch — while sharing the
+    /// parent's arena instead of copying it.
+    #[test]
+    fn slice_docs_matches_rebuilt_sub_corpus() {
+        let corpus = Corpus::generate(&CorpusConfig::small());
+        let root = Index::build(&corpus);
+        let n = corpus.len();
+        for (lo, hi) in [(0, n / 3), (n / 3, 2 * n / 3), (2 * n / 3, n), (0, n)] {
+            let view = root.slice_docs(lo as u32, hi as u32);
+            assert!(view.shares_arena(&root), "[{lo},{hi}) copied the arena");
+            let sub = Corpus {
+                vocab: corpus.vocab.clone(),
+                docs: corpus.docs[lo..hi].to_vec(),
+                zipf_s: corpus.zipf_s,
+            };
+            let rebuilt = Index::build(&sub);
+            assert_eq!(view.num_docs(), rebuilt.num_docs(), "[{lo},{hi})");
+            assert_eq!(view.doc_base(), lo as u32);
+            assert_eq!(view.avgdl(), rebuilt.avgdl(), "[{lo},{hi})");
+            assert_eq!(view.total_postings(), rebuilt.total_postings());
+            for t in 0..root.num_terms() as u32 {
+                // Local-space postings are bit-identical...
+                assert!(
+                    view.postings(t).eq(rebuilt.postings(t)),
+                    "[{lo},{hi}) term {t} postings differ"
+                );
+                // ...and the block directory matches up to the arena
+                // offset in last_doc (same chunking, same statistics).
+                let vb = view.blocks(t);
+                let rb = rebuilt.blocks(t);
+                assert_eq!(vb.len(), rb.len(), "[{lo},{hi}) term {t}");
+                for (v, r) in vb.iter().zip(rb) {
+                    assert_eq!(v.last_doc - lo as u32, r.last_doc);
+                    assert_eq!(v.max_tf, r.max_tf);
+                    assert_eq!(v.min_dl, r.min_dl);
+                }
+            }
+            for d in 0..view.num_docs() as u32 {
+                assert_eq!(view.doc_len(d), rebuilt.doc_len(d));
+                assert_eq!(view.title(d), rebuilt.title(d));
+            }
+        }
+    }
+
+    #[test]
+    fn slice_of_slice_composes() {
+        let corpus = Corpus::generate(&CorpusConfig::small());
+        let root = Index::build(&corpus);
+        let n = corpus.len() as u32;
+        let mid = root.slice_docs(n / 4, 3 * n / 4);
+        let nested = mid.slice_docs(10, mid.num_docs() as u32 - 10);
+        let direct = root.slice_docs(n / 4 + 10, 3 * n / 4 - 10);
+        assert!(nested.shares_arena(&root));
+        assert_eq!(nested.doc_base(), direct.doc_base());
+        assert_eq!(nested.num_docs(), direct.num_docs());
+        for t in (0..root.num_terms() as u32).step_by(61) {
+            assert!(nested.postings(t).eq(direct.postings(t)), "term {t}");
+            assert_eq!(nested.blocks(t), direct.blocks(t), "term {t}");
         }
     }
 }

@@ -10,15 +10,41 @@
 //! selection. `engine.rs` executes queries either through the pure-Rust
 //! scorer or through the AOT-compiled XLA scorer on the live request path.
 //!
+//! **Arena postings layout.** [`Index`] stores every postings list in one
+//! contiguous struct-of-arrays arena — a `docs` slab and a parallel `tfs`
+//! slab, with each term owning a `(offset, len)` range — rather than one
+//! heap `Vec` per term. Building an index is two counting passes and
+//! exactly one allocation per slab; traversal decodes blocks sequentially
+//! from a flat range with no pointer chasing. Shard partitioning is
+//! *zero-copy*: [`Index::slice_docs`] narrows every term range with two
+//! binary searches and returns a view that shares the parent arena
+//! (`Arc`), so N shards borrow one postings copy instead of re-inverting
+//! N sub-corpora — the arena IS the hot-postings cache shared across
+//! shards.
+//!
 //! **Index-resident block-max metadata.** At construction time
 //! ([`Index::build`] and the persistence-load path `Index::from_parts`)
 //! every postings list is segmented into [`SKIP_BLOCK`]-entry blocks with
 //! a per-term directory of [`BlockEntry`]s — `{ last_doc, max_tf, min_dl }`
 //! per block, a skip list carrying the block-max payload. The directory
 //! stores term-frequency/length *statistics*, never scores, so it is
-//! carried unchanged through [`Index::with_global_stats`] and shard
-//! slicing, and score bounds are derived at query time from the effective
-//! IDF/avgdl.
+//! carried unchanged through [`Index::with_global_stats`] (and rebuilt
+//! per-view by `slice_docs`, chunked from each sliced range's start so a
+//! view prunes exactly like a from-scratch sub-corpus index), and score
+//! bounds are derived at query time from the effective IDF/avgdl.
+//!
+//! **Zero-allocation steady state.** All per-query working memory lives in
+//! a caller-owned [`QueryScratch`] — term ids, the staging [`ScoreBlock`],
+//! the top-k heap, cursor arrays and the output hits. Workers construct
+//! one scratch per thread and thread it through
+//! [`SearchEngine::search_scratch`] / [`SearchEngine::search_batch`];
+//! after the first query warms its capacities, the query path performs no
+//! heap allocation (anchored by `tests/alloc_steady_state.rs`). Hits carry
+//! `doc: u32` only; titles resolve at the reporting edge via
+//! [`Index::title`]. `search_batch` scores a whole same-class dispatch
+//! batch over one scratch in a single backend call sequence, skipping
+//! term re-resolution when adjacent queries repeat (Zipf-popular
+//! duplicates), with rankings bit-identical to per-request calls.
 //!
 //! **Traversal choice.** [`SearchEngine`] executes a query under one of two
 //! [`Traversal`]s with bit-identical rankings: `Union` (default), an
@@ -53,10 +79,10 @@ pub mod topk;
 pub use bm25::{bm25_score, Bm25Params};
 pub use corpus::{Corpus, Document};
 pub use engine::{
-    BlockScorer, BlockTopK, RustScorer, ScoreBlock, SearchEngine, SearchHit, SearchResult,
-    SearchStats, Traversal, BLOCK_TOP_K, DOC_BLOCK, MAX_TERMS,
+    BlockScorer, BlockTopK, QueryScratch, RustScorer, ScoreBlock, SearchEngine, SearchHit,
+    SearchResult, SearchStats, Traversal, BLOCK_TOP_K, DOC_BLOCK, MAX_TERMS,
 };
-pub use index::{BlockEntry, Index, Posting, SKIP_BLOCK};
+pub use index::{BlockEntry, Index, Posting, TermPostings, SKIP_BLOCK};
 pub use persist::{load_index_file, save_index_file};
 pub use query::Query;
 pub use topk::{ScoredDoc, TopK};

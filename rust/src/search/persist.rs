@@ -73,10 +73,11 @@ pub fn save_index(index: &Index, w: &mut impl Write) -> Result<()> {
         w_str(w, index.title(d))?;
     }
     for t in 0..index.num_terms() as u32 {
-        let postings = index.postings(t);
-        w_u32(w, postings.len() as u32)?;
+        // `Index::postings` yields *local* doc ids, so a sliced view
+        // serializes as a self-contained index of its own doc range.
+        w_u32(w, index.doc_freq(t) as u32)?;
         let mut prev = 0u32;
-        for p in postings {
+        for p in index.postings(t) {
             w_u32(w, p.doc - prev)?; // gap encoding
             w_u32(w, p.tf)?;
             prev = p.doc;
@@ -182,7 +183,7 @@ mod tests {
         assert!((a.avgdl() - b.avgdl()).abs() < 1e-12);
         for t in (0..a.num_terms() as u32).step_by(17) {
             assert_eq!(a.term(t), b.term(t));
-            assert_eq!(a.postings(t), b.postings(t));
+            assert!(a.postings(t).eq(b.postings(t)), "term {t} postings");
             assert_eq!(a.idf(t), b.idf(t));
         }
         for d in (0..a.num_docs() as u32).step_by(13) {
@@ -206,6 +207,27 @@ mod tests {
         for (x, y) in ra.hits.iter().zip(&rb.hits) {
             assert_eq!(x.doc, y.doc);
             assert_eq!(x.score, y.score);
+        }
+    }
+
+    #[test]
+    fn sliced_view_roundtrips_as_self_contained_index() {
+        // A zero-copy doc-range view serializes local doc ids, so loading
+        // it back yields a standalone index of the sub-corpus — postings,
+        // lengths and titles all re-based at 0.
+        let a = small_index();
+        let view = a.slice_docs(100, 250);
+        let mut buf = Vec::new();
+        save_index(&view, &mut buf).unwrap();
+        let b = load_index(&mut buf.as_slice()).unwrap();
+        assert_eq!(b.num_docs(), 150);
+        assert_eq!(b.total_postings(), view.total_postings());
+        for t in (0..a.num_terms() as u32).step_by(17) {
+            assert!(view.postings(t).eq(b.postings(t)), "term {t}");
+        }
+        for d in (0..150u32).step_by(13) {
+            assert_eq!(view.doc_len(d), b.doc_len(d));
+            assert_eq!(view.title(d), b.title(d));
         }
     }
 

@@ -73,6 +73,24 @@ impl TopK {
         }
     }
 
+    /// Reuse this accumulator for a new selection of size `k`: clears the
+    /// entries but keeps the heap's backing allocation — the scratch-reuse
+    /// contract of `QueryScratch` (no per-query heap allocation once the
+    /// capacity has grown to the largest `k` seen).
+    pub fn reset(&mut self, k: usize) {
+        assert!(k > 0, "top-k with k=0");
+        self.k = k;
+        self.heap.clear();
+    }
+
+    /// Pop the *worst* entry currently held (lowest score; among equal
+    /// scores the highest doc id first). Popping all entries and reversing
+    /// yields exactly [`TopK::into_sorted`]'s order — the allocation-free
+    /// drain used by the engine's scratch path.
+    pub fn pop_min(&mut self) -> Option<ScoredDoc> {
+        self.heap.pop().map(|e| e.0)
+    }
+
     /// Current score threshold for admission (None until full).
     pub fn threshold(&self) -> Option<f32> {
         (self.heap.len() == self.k).then(|| self.heap.peek().unwrap().0.score)
@@ -175,6 +193,46 @@ mod tests {
         tk.push(5, 1.0);
         let out = tk.into_sorted();
         assert_eq!(out.iter().map(|d| d.doc).collect::<Vec<_>>(), vec![3, 5]);
+    }
+
+    #[test]
+    fn pop_min_drains_in_reverse_sorted_order() {
+        prop::check(prop::DEFAULT_CASES, |rng: &mut Rng, _| {
+            let n = rng.range(1, 120);
+            let k = rng.range(1, 24);
+            let mut tk = TopK::new(k);
+            let mut clone = TopK::new(k);
+            for i in 0..n {
+                let s = rng.below(40) as f32;
+                tk.push(i as u32, s);
+                clone.push(i as u32, s);
+            }
+            let mut drained = Vec::new();
+            while let Some(d) = tk.pop_min() {
+                drained.push(d);
+            }
+            drained.reverse();
+            assert_eq!(drained, clone.into_sorted());
+        });
+    }
+
+    #[test]
+    fn reset_reuses_across_selections() {
+        let mut tk = TopK::new(4);
+        for i in 0..10u32 {
+            tk.push(i, i as f32);
+        }
+        tk.reset(2);
+        assert!(tk.is_empty());
+        tk.push(1, 5.0);
+        tk.push(2, 7.0);
+        tk.push(3, 6.0);
+        let mut out = Vec::new();
+        while let Some(d) = tk.pop_min() {
+            out.push(d);
+        }
+        out.reverse();
+        assert_eq!(out.iter().map(|d| d.doc).collect::<Vec<_>>(), vec![2, 3]);
     }
 
     #[test]

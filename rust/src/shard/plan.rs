@@ -4,10 +4,13 @@
 //! Two orthogonal partitions compose a plan:
 //!
 //! * **Documents** ([`build_shard_indexes`]) — contiguous doc-id ranges,
-//!   one [`ShardIndex`] each. Every shard index is built over its own doc
-//!   slice (its postings, lengths and titles cover only its range — local
-//!   doc ids start at 0, `doc_base` maps back to global ids) but carries
-//!   the *corpus-wide* ranking statistics (global avgdl + IDF table,
+//!   one [`ShardIndex`] each. The corpus is inverted *once* into the
+//!   arena-backed root [`crate::search::Index`]; each shard is then a
+//!   zero-copy [`crate::search::Index::slice_docs`] view borrowing the
+//!   root's postings arena (no per-shard re-inversion, one shared postings
+//!   copy for all S shards). A view exposes local doc ids starting at 0
+//!   (`doc_base` maps back to global ids) and carries the *corpus-wide*
+//!   ranking statistics (global avgdl + IDF table,
 //!   [`crate::search::Index::with_global_stats`]): self-consistent
 //!   per-shard scoring with globally comparable scores, so the gather
 //!   merge reproduces the unsharded ranking exactly (the equivalence
@@ -23,7 +26,7 @@
 use std::sync::Arc;
 
 use crate::platform::{CoreId, CoreKind, Topology};
-use crate::search::{bm25, Corpus, Index, ScoredDoc, SearchHit};
+use crate::search::{Corpus, Index, ScoredDoc, SearchHit};
 
 /// The core-set partition of one node for S shards.
 #[derive(Clone, Debug)]
@@ -100,6 +103,8 @@ impl ShardIndex {
 }
 
 /// Partition a corpus into `shards` contiguous doc-range [`ShardIndex`]es.
+/// The corpus is inverted once; each shard is a zero-copy `slice_docs`
+/// view of that root index (all S shards share one postings arena).
 /// Ranges are as even as integer division allows; every shard shares the
 /// corpus vocabulary (so query analysis resolves the same term ids
 /// everywhere) and the corpus-wide avgdl + IDF table (so per-shard scores
@@ -110,40 +115,23 @@ pub fn build_shard_indexes(corpus: &Corpus, shards: usize) -> Vec<ShardIndex> {
         "shards must be in 1..=num_docs ({} docs, {shards} shards)",
         corpus.len()
     );
-    // Corpus-wide statistics, computed once: avgdl over all docs, document
-    // frequency per term (a last-seen-doc stamp avoids a per-doc set).
-    let num_docs = corpus.len();
-    let total_tokens: usize = corpus.docs.iter().map(|d| d.tokens.len()).sum();
-    let avgdl = total_tokens as f64 / num_docs as f64;
-    let mut doc_freq = vec![0usize; corpus.vocab.len()];
-    let mut last_seen = vec![u32::MAX; corpus.vocab.len()];
-    for (doc, d) in corpus.docs.iter().enumerate() {
-        for &t in &d.tokens {
-            if last_seen[t as usize] != doc as u32 {
-                last_seen[t as usize] = doc as u32;
-                doc_freq[t as usize] += 1;
-            }
-        }
-    }
-    let idf: Vec<f32> = doc_freq
-        .iter()
-        .map(|&df| bm25::idf(num_docs, df))
-        .collect();
+    // One inversion: the root index already holds the corpus-wide
+    // statistics every shard must score with.
+    let root = Index::build(corpus);
+    let num_docs = root.num_docs();
+    let avgdl = root.avgdl();
+    let idf: Vec<f32> = (0..root.num_terms() as u32).map(|t| root.idf(t)).collect();
 
     (0..shards)
         .map(|s| {
             let lo = s * num_docs / shards;
             let hi = (s + 1) * num_docs / shards;
-            let slice = Corpus {
-                vocab: corpus.vocab.clone(),
-                docs: corpus.docs[lo..hi].to_vec(),
-                zipf_s: corpus.zipf_s,
-            };
             ShardIndex {
                 shard: s,
                 doc_base: lo as u32,
                 index: Arc::new(
-                    Index::build(&slice).with_global_stats(avgdl, idf.clone()),
+                    root.slice_docs(lo as u32, hi as u32)
+                        .with_global_stats(avgdl, idf.clone()),
                 ),
             }
         })
@@ -223,6 +211,22 @@ mod tests {
                 }
             }
             assert_eq!(docs, corpus.len(), "S={shards}: ranges partition docs");
+        }
+    }
+
+    #[test]
+    fn shard_indexes_share_one_postings_arena() {
+        // Zero-copy partitioning: every shard view borrows the same arena
+        // (Arc identity), so S shards cost one postings copy, not S.
+        let corpus = CorpusConfig::small().build();
+        let parts = build_shard_indexes(&corpus, 4);
+        for w in parts.windows(2) {
+            assert!(
+                w[0].index.shares_arena(&w[1].index),
+                "shards {} and {} re-inverted instead of slicing",
+                w[0].shard,
+                w[1].shard
+            );
         }
     }
 

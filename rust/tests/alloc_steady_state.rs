@@ -1,0 +1,154 @@
+//! The zero-allocation anchor for the steady-state query path.
+//!
+//! A counting `#[global_allocator]` wraps the system allocator; the single
+//! test below (one test — concurrent tests would pollute the global
+//! counter) warms a reusable [`QueryScratch`] + backend over a query set,
+//! then asserts the warmed path performs **zero** heap allocations per
+//! query: union and WAND traversals, execution under an (uncancelled)
+//! cancel token, an actually-cancelled abort, and whole-batch scoring via
+//! `search_batch`.
+//!
+//! This is the enforcement side of the arena/scratch contract: all
+//! per-query working state lives in the caller-owned scratch, the arena
+//! index hands out borrowed slices (never materialised postings), and
+//! hits carry `doc: u32` — no title clones on the hot path.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use hurryup::config::CorpusConfig;
+use hurryup::hedge::CancelToken;
+use hurryup::search::{
+    Bm25Params, Index, Query, QueryScratch, RustScorer, SearchEngine, Traversal,
+};
+
+/// System allocator with a global allocation counter (frees not counted:
+/// the assertion is "no new memory", not "no churn" — though on this path
+/// both hold).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn steady_state_query_path_allocates_nothing() {
+    // ---- setup (allocates freely) ----
+    let corpus = CorpusConfig {
+        num_docs: 2_000,
+        vocab_size: 1_200,
+        ..CorpusConfig::small()
+    }
+    .build();
+    let index = Arc::new(Index::build(&corpus));
+    let union = SearchEngine::new(index.clone(), 10);
+    let wand = SearchEngine::new(index.clone(), 10).with_traversal(Traversal::Wand);
+    let queries: Vec<Query> = (0..16u32)
+        .map(|i| {
+            Query::from_terms(vec![
+                index.term(i % 7).to_string(),
+                index.term(13 + i * 29 % 400).to_string(),
+                index.term(500 + i * 61 % 700).to_string(),
+            ])
+        })
+        .collect();
+    let live = CancelToken::new();
+    let cancelled = CancelToken::new();
+    cancelled.cancel();
+    let mut scorer = RustScorer::new(Bm25Params::default());
+    let mut scratch = QueryScratch::new();
+
+    // ---- warm-up: two full passes of every scenario grow all scratch,
+    // backend and hit capacities to their steady-state sizes ----
+    for _ in 0..2 {
+        for q in &queries {
+            union
+                .search_scratch(q, &mut scorer, None, &mut scratch)
+                .unwrap();
+            wand.search_scratch(q, &mut scorer, None, &mut scratch)
+                .unwrap();
+            union
+                .search_scratch(q, &mut scorer, Some(&live), &mut scratch)
+                .unwrap();
+            assert!(union
+                .search_scratch(q, &mut scorer, Some(&cancelled), &mut scratch)
+                .unwrap()
+                .is_none());
+        }
+        union
+            .search_batch(&queries, &mut scorer, &mut scratch, |_, _, hits| {
+                assert!(hits.len() <= 10);
+            })
+            .unwrap();
+        wand.search_batch(&queries, &mut scorer, &mut scratch, |_, _, hits| {
+            assert!(hits.len() <= 10);
+        })
+        .unwrap();
+    }
+
+    // ---- measure: the warmed path must not touch the allocator ----
+    let before = allocs();
+    let mut total_hits = 0usize;
+    for q in &queries {
+        let stats = union
+            .search_scratch(q, &mut scorer, None, &mut scratch)
+            .unwrap()
+            .expect("no token");
+        assert!(stats.matched_terms > 0);
+        total_hits += scratch.hits().len();
+        wand.search_scratch(q, &mut scorer, None, &mut scratch)
+            .unwrap();
+        total_hits += scratch.hits().len();
+        union
+            .search_scratch(q, &mut scorer, Some(&live), &mut scratch)
+            .unwrap()
+            .expect("live token never cancels");
+        assert!(union
+            .search_scratch(q, &mut scorer, Some(&cancelled), &mut scratch)
+            .unwrap()
+            .is_none());
+    }
+    union
+        .search_batch(&queries, &mut scorer, &mut scratch, |_, stats, hits| {
+            assert!(stats.candidates >= hits.len());
+            std::hint::black_box(hits);
+        })
+        .unwrap();
+    wand.search_batch(&queries, &mut scorer, &mut scratch, |_, _, hits| {
+        std::hint::black_box(hits);
+    })
+    .unwrap();
+    let delta = allocs() - before;
+    assert!(total_hits > 0, "queries must actually match");
+    assert_eq!(
+        delta, 0,
+        "steady-state query path allocated {delta} times (union+wand+cancel+batch over 16 queries)"
+    );
+}
