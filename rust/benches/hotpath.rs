@@ -24,6 +24,8 @@
 //!                      through search_batch (counters carry seq_* twins
 //!                      from per-request calls for the CI equality check)
 //!   histogram_record   latency histogram insert + percentile
+//!   trace_record       lifecycle tracer stamp cost on a standing 64k ring
+//!                      (one request's full 7-event stamp set per iter)
 //!   topk_push          bounded top-k insertion
 //!   cache_probe_hit    sharded ResultCache get on resident keys
 //!   cache_probe_miss   the same probe walk on absent keys
@@ -725,6 +727,55 @@ fn main() {
             black_box(h.percentile(0.90));
         });
         r.add("histogram_record", "samples", 1000.0, iters, secs);
+    }
+
+    // --- lifecycle tracer: per-event stamp cost on a standing ring ---
+    // The tax every traced request pays on the serving path: one full
+    // 7-event stamp set (frontend arrival/admit/enqueue, worker
+    // dequeue/scoring-start/scoring-end, frontend completion) against a
+    // 64k-slot ring that has long since wrapped — so this measures the
+    // steady drop-oldest overwrite path, not the cold fill. The work
+    // counters are per-iteration constants (deterministic for the
+    // committed JSON trajectory); the record path never allocates
+    // (enforced by tests/alloc_steady_state.rs).
+    {
+        use hurryup::trace::{ReasonCode, Stage, Tracer};
+        let tracer = Tracer::new(7, 1 << 16);
+        let mut rid = 0u64;
+        // Pre-wrap the frontend lane so steady state is overwrite.
+        for i in 0..(1u64 << 16) + 1 {
+            tracer.record(6, i, i as f64, Stage::Completed);
+        }
+        let (iters, secs) = measure(b(300), || {
+            let t = rid as f64;
+            tracer.record(6, rid, t, Stage::Arrived { class: 0 });
+            tracer.record(
+                6,
+                rid,
+                t,
+                Stage::AdmitDecision { admitted: true, reason: ReasonCode::None },
+            );
+            tracer.record(6, rid, t, Stage::Enqueued { shard: 0, slot: 0 });
+            tracer.record(0, rid, t + 1.0, Stage::Dequeued { core: 0, big: true });
+            tracer.record(0, rid, t + 1.0, Stage::ScoringStart { core: 0, big: true });
+            tracer.record(
+                0,
+                rid,
+                t + 2.0,
+                Stage::ScoringEnd { core: 0, big: true, passes: 1, docs_skipped: 0 },
+            );
+            tracer.record(6, rid, t + 2.0, Stage::Completed);
+            rid += 1;
+            black_box(&tracer);
+        });
+        r.add_work(
+            "trace_record",
+            "events",
+            7.0,
+            iters,
+            secs,
+            &[("lanes", 7), ("ring_capacity", 1 << 16), ("events_per_iter", 7)],
+        );
     }
 
     // --- top-k ---

@@ -37,6 +37,7 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
             "cache_capacity",
             "cache_segments",
             "cache_ttl_ms",
+            "trace_capacity",
             "arrivals",
             "qps",
             "num_requests",
@@ -140,6 +141,9 @@ pub fn sim_config_from_str(text: &str) -> Result<SimConfig> {
     }
     if let Some(v) = get_f64(&doc, "cache_ttl_ms")? {
         cfg.cache_ttl_ms = v;
+    }
+    if let Some(v) = get_i64(&doc, "trace_capacity")? {
+        cfg.trace_capacity = v as usize;
     }
     if let Some(v) = doc.get("arrivals").and_then(Value::as_str) {
         cfg.arrivals = crate::loadgen::ArrivalKind::parse(v)?;
@@ -638,6 +642,18 @@ mod tests {
         assert!(e.to_string().contains("cache_segments"), "{e}");
         assert!(sim_config_from_str("cache_ttl_ms = 0.0").is_err());
         assert!(sim_config_from_str("cache_capacity = \"big\"").is_err());
+    }
+
+    #[test]
+    fn trace_capacity_parsed_and_validated() {
+        let cfg = sim_config_from_str("trace_capacity = 16384").unwrap();
+        assert_eq!(cfg.trace_capacity, 16_384);
+        assert_eq!(
+            sim_config_from_str("qps = 5.0").unwrap().trace_capacity,
+            0,
+            "tracing off by default"
+        );
+        assert!(sim_config_from_str("trace_capacity = \"lots\"").is_err());
     }
 
     #[test]

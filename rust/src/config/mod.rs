@@ -255,6 +255,13 @@ pub struct SimConfig {
     /// Cache entry time-to-live, ms (default ∞ = never expires). Entries
     /// older than this at probe time are lazily evicted.
     pub cache_ttl_ms: f64,
+    /// Per-lane event capacity of the lifecycle tracer (TOML
+    /// `trace_capacity`, CLI `--trace-capacity`). 0 (default) disables
+    /// tracing entirely — no tracer is built, no record site runs, and
+    /// seeded runs replay untraced output bit for bit. With N > 0 every
+    /// core/worker (plus the frontend) gets a drop-oldest ring of N
+    /// events; see [`crate::trace`].
+    pub trace_capacity: usize,
     /// Arrival-shape selector (TOML `arrivals`, CLI `--arrivals`):
     /// stationary `poisson` (default), `uniform`, `diurnal`, or
     /// `flashcrowd` — see [`crate::loadgen::ArrivalKind`].
@@ -309,6 +316,7 @@ impl SimConfig {
             cache_capacity: 0,
             cache_segments: 8,
             cache_ttl_ms: f64::INFINITY,
+            trace_capacity: 0,
             arrivals: ArrivalKind::Poisson,
             qps: 30.0,
             num_requests: 100_000,
@@ -445,6 +453,13 @@ impl SimConfig {
     /// Builder: set the result-cache entry TTL, ms.
     pub fn with_cache_ttl(mut self, ttl_ms: f64) -> Self {
         self.cache_ttl_ms = ttl_ms;
+        self
+    }
+
+    /// Builder: set the per-lane trace-ring capacity (events; 0 disables
+    /// tracing).
+    pub fn with_trace_capacity(mut self, capacity: usize) -> Self {
+        self.trace_capacity = capacity;
         self
     }
 
@@ -769,6 +784,11 @@ mod tests {
     fn cache_and_arrival_config_validated() {
         let base = SimConfig::paper_default(PolicyKind::LinuxRandom);
         assert_eq!(base.cache_capacity, 0, "caching off by default");
+        assert_eq!(base.trace_capacity, 0, "tracing off by default");
+        assert_eq!(
+            base.clone().with_trace_capacity(1 << 14).trace_capacity,
+            1 << 14
+        );
         assert_eq!(base.cache_segments, 8);
         assert_eq!(base.cache_ttl_ms, f64::INFINITY);
         assert_eq!(base.arrivals, ArrivalKind::Poisson);

@@ -19,6 +19,7 @@
 //! | `sharding`  | scatter-gather fan-out: tail amplification vs S   |
 //! | `hedging`   | replica sets + hedged stragglers: p99 vs budget   |
 //! | `caching`   | result cache × Zipf popularity: hit/goodput wins  |
+//! | `tracing`   | critical-path decomposition vs load, both engines |
 //!
 //! Scale: experiments default to a fast setting; set `HURRYUP_FULL=1` for
 //! the paper's 1×10⁵-request scale.
@@ -40,6 +41,7 @@ pub mod power_table;
 pub mod runner;
 pub mod sharding;
 pub mod shedding;
+pub mod tracing;
 
 pub use runner::{compare_policies, Scale};
 
@@ -67,6 +69,7 @@ pub fn registry() -> Vec<(&'static str, ExperimentFn)> {
         ("sharding", sharding::run as ExperimentFn),
         ("hedging", hedging::run as ExperimentFn),
         ("caching", caching::run as ExperimentFn),
+        ("tracing", tracing::run as ExperimentFn),
     ]
 }
 

@@ -1,0 +1,215 @@
+//! Tracing ablation: per-request critical-path decomposition vs load, in
+//! BOTH engines — the capstone of the `trace` subsystem.
+//!
+//! Every cell runs with the tracer on (ring capacity sized so nothing
+//! drops) and asserts the observability invariants the instrumentation is
+//! supposed to guarantee:
+//!
+//! * **accounting** — every offered request shows up as exactly one valid
+//!   span chain: `completed_chains == completed`, zero events dropped,
+//!   zero chains discarded.
+//! * **coverage** — the stage decomposition (admit / cache / queue-wait /
+//!   service big vs little / gather-wait) explains ≥ 95 % of every
+//!   completed chain's end-to-end time. The classifier is total by
+//!   construction, so a miss here means the engines emitted missing or
+//!   mis-ordered stage events — this is the tripwire, not a tolerance.
+//! * **queueing theory sanity** — across the load sweep the queue-wait
+//!   share of the critical path (mean and p99 tail) grows with load,
+//!   while per-request service time stays flat: the work a query needs
+//!   does not depend on how many neighbours it has, but its wait does.
+//!   Asserted as: queue share strictly larger at the top load than the
+//!   bottom, queue time growing strictly faster than service time, and
+//!   service time staying within a generous constant band.
+//!
+//! The live half replays the same shape on real threads (structure and
+//! coverage asserted; timing magnitudes reported, not asserted — wall
+//! clocks are noisy in CI).
+
+use super::runner::Scale;
+use crate::config::{CorpusConfig, SimConfig};
+use crate::live::{LiveConfig, LiveServer};
+use crate::mapper::PolicyKind;
+use crate::sim::Simulation;
+use crate::trace::{ClassDecomp, StageBreakdown, TraceReport};
+use crate::util::fmt::{ms, pct, Table};
+
+/// Offered loads swept, QPS: well under, near, and over the 2B4L capacity
+/// of the paper mix (no admission control, so ρ > 1 queues, never sheds).
+const QPS_GRID: [f64; 3] = [12.0, 30.0, 42.0];
+
+/// Minimum fraction of e2e time the decomposition must explain.
+const MIN_COVERAGE: f64 = 0.95;
+
+/// Offered loads of the live half, QPS.
+const LIVE_QPS: [f64; 2] = [20.0, 60.0];
+
+/// Requests per live cell (real time — keep small).
+const LIVE_REQUESTS: usize = 120;
+
+fn hurry_up() -> PolicyKind {
+    PolicyKind::HurryUp {
+        sampling_ms: 25.0,
+        threshold_ms: 50.0,
+    }
+}
+
+/// Ring capacity per lane that provably cannot drop: the frontend lane is
+/// the hottest (≤ 6 events per request) and every ring gets the same size.
+fn no_drop_capacity(requests: usize) -> usize {
+    requests * 8
+}
+
+fn grid_header(title: String) -> Table {
+    Table::new(
+        title,
+        &[
+            "engine", "qps", "done", "shed", "queue", "service", "gather", "q_share",
+            "tail_q_share", "min_cov",
+        ],
+    )
+}
+
+fn queue_share(b: &StageBreakdown) -> f64 {
+    b.queue_ms / b.total_ms().max(1e-12)
+}
+
+fn push_row(t: &mut Table, engine: &str, qps: f64, done: usize, shed: usize, tr: &TraceReport) {
+    let cd = &tr.per_class[0];
+    t.row(&[
+        engine.to_string(),
+        format!("{qps:.0}"),
+        done.to_string(),
+        shed.to_string(),
+        ms(cd.mean.queue_ms),
+        ms(cd.mean.service_ms()),
+        ms(cd.mean.gather_ms),
+        pct(queue_share(&cd.mean)),
+        pct(queue_share(&cd.tail_mean)),
+        pct(tr.min_coverage()),
+    ]);
+}
+
+/// Structural invariants every traced cell must satisfy, both engines.
+fn assert_accounting(tr: &TraceReport, completed: usize, shed: usize, label: &str) {
+    assert_eq!(tr.dropped, 0, "{label}: ring sized to never drop");
+    assert_eq!(tr.discarded_chains, 0, "{label}: no torn chains");
+    assert_eq!(tr.completed_chains(), completed, "{label}: one chain per completion");
+    assert_eq!(tr.shed_chains(), shed, "{label}: one chain per shed");
+    assert!(
+        tr.min_coverage() >= MIN_COVERAGE,
+        "{label}: decomposition explains only {:.1}% of some chain's e2e",
+        tr.min_coverage() * 100.0
+    );
+}
+
+/// Simulated load sweep with the coverage and queueing-shape invariants
+/// asserted inline.
+pub fn sim_grid(requests: usize) -> Table {
+    let mut t = grid_header(format!(
+        "Critical-path decomposition vs load (sim): 2B4L paper mix, \
+         {requests} requests/cell, coverage floor {:.0}%",
+        MIN_COVERAGE * 100.0
+    ));
+    let mut per_load: Vec<(f64, ClassDecomp)> = Vec::new();
+    for qps in QPS_GRID {
+        let cfg = SimConfig::paper_default(hurry_up())
+            .with_qps(qps)
+            .with_requests(requests)
+            .with_seed(0x7A4CE)
+            .with_trace_capacity(no_drop_capacity(requests));
+        let out = Simulation::new(cfg).run();
+        assert_eq!(out.completed, requests, "no admission control: all complete");
+        let tr = out.trace.as_ref().expect("tracing enabled for every cell");
+        assert_accounting(tr, out.completed, out.shed, &format!("sim @ {qps} qps"));
+        push_row(&mut t, "sim", qps, out.completed, out.shed, tr);
+        per_load.push((qps, tr.per_class[0].clone()));
+    }
+
+    // Queueing shape across the sweep: wait grows with load, work does not.
+    let (lo_qps, lo) = per_load.first().expect("swept loads");
+    let (hi_qps, hi) = per_load.last().expect("swept loads");
+    assert!(
+        queue_share(&hi.mean) > queue_share(&lo.mean),
+        "mean queue share must grow {lo_qps} → {hi_qps} qps"
+    );
+    assert!(
+        queue_share(&hi.tail_mean) > queue_share(&lo.tail_mean),
+        "p99-tail queue share must grow {lo_qps} → {hi_qps} qps"
+    );
+    let queue_growth = hi.mean.queue_ms / lo.mean.queue_ms.max(1e-12);
+    let service_growth = hi.mean.service_ms() / lo.mean.service_ms().max(1e-12);
+    assert!(
+        queue_growth > service_growth,
+        "queue wait must outgrow service time ({queue_growth:.2}x vs {service_growth:.2}x)"
+    );
+    // Service time is load-independent work; Hurry-up migration may move
+    // some of it big-ward under pressure, but it cannot leave this band.
+    assert!(
+        (1.0 / 3.0..3.0).contains(&service_growth),
+        "service time must stay flat-ish across the sweep ({service_growth:.2}x)"
+    );
+    t
+}
+
+/// Live smoke cells: the same chains assembled from real threads. The
+/// structural and coverage invariants are identical; timing magnitudes
+/// are reported only.
+pub fn live_grid(requests: usize) -> Table {
+    let mut t = grid_header(format!(
+        "Critical-path decomposition (live): thread-pool server, \
+         {requests} requests/cell"
+    ));
+    let corpus = CorpusConfig {
+        num_docs: 1_500,
+        ..CorpusConfig::small()
+    }
+    .build();
+    for qps in LIVE_QPS {
+        let cfg = LiveConfig {
+            qps,
+            num_requests: requests,
+            seed: 0x7A4CE,
+            trace_capacity: no_drop_capacity(requests),
+            ..LiveConfig::default()
+        };
+        let report = LiveServer::from_corpus(cfg, &corpus)
+            .run()
+            .expect("live tracing cell failed");
+        assert_eq!(
+            report.per_request.len() + report.shed,
+            requests,
+            "live conservation @ {qps} qps"
+        );
+        let tr = report.trace.as_ref().expect("tracing enabled");
+        assert_accounting(
+            tr,
+            report.per_request.len(),
+            report.shed,
+            &format!("live @ {qps} qps"),
+        );
+        push_row(&mut t, "live", qps, report.per_request.len(), report.shed, tr);
+    }
+    t
+}
+
+/// Regenerate the tracing ablation (sim load sweep + live smoke).
+pub fn run(scale: Scale) -> Vec<Table> {
+    vec![sim_grid(scale.cell_requests(3)), live_grid(LIVE_REQUESTS)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_grid_renders_every_cell_and_holds_invariants() {
+        // 3 loads; accounting, coverage and queue-shape asserts run
+        // inside sim_grid itself.
+        assert_eq!(sim_grid(1_000).len(), QPS_GRID.len());
+    }
+
+    #[test]
+    fn live_grid_renders_every_cell() {
+        assert_eq!(live_grid(40).len(), LIVE_QPS.len());
+    }
+}

@@ -35,9 +35,7 @@
 //!   straggler task that outlives its class's observed latency quantile
 //!   is re-issued to the replica under a token-bucket budget, the first
 //!   completion wins, and the loser is cancelled — dropped at dequeue if
-//!   queued, aborted at score-block boundaries if running — so the full
-//!   request lifecycle is **cache-probe → scatter → per-shard schedule →
-//!   hedge → first-wins gather → populate**), the sharded query-result
+//!   queued, aborted at score-block boundaries if running), the sharded query-result
 //!   cache (`cache`: popularity makes queries repeat, so a size-bounded
 //!   segmented LRU keyed by resolved term ids answers repeats at a flat
 //!   hit cost on the dispatching core, bypassing the whole fan-out;
@@ -50,7 +48,43 @@
 //!   draws or Zipf-repeating draws from a fixed query population — under
 //!   stationary Poisson or diurnal/flash-crowd arrival shapes),
 //!   metrics (per-class *and* per-shard outcome accounting, plus cache
-//!   hit/miss accounting) and the experiment harness.
+//!   hit/miss accounting), the per-request lifecycle tracer (`trace`)
+//!   and the experiment harness.
+//!
+//! ## Request lifecycle (the traced stages)
+//!
+//! Every request — in both the simulator and the live server — walks the
+//! same stage chain, and with `trace_capacity > 0` each transition is
+//! recorded as a typed [`trace::Stage`] event:
+//!
+//! 1. **`Arrived`** — the request reaches the frontend with its service
+//!    class.
+//! 2. **`AdmitDecision`** — admission control rules (deadline projection,
+//!    queue caps); a shed terminates the chain here with a reason.
+//! 3. **`CacheProbe`** — the result cache is probed; a *hit* completes at
+//!    flat hit cost, skipping every scoring stage below.
+//! 4. **`Enqueued`** — on a miss the request scatters: one task per shard
+//!    enters that shard's dispatch queue (unsharded: a single task).
+//! 5. **`Dequeued`** — the scheduling layer's dispatcher hands the task
+//!    to a core (the discipline/order/policy decision point).
+//! 6. **`ScoringStart` / `ScoringEnd`** — the task scores on a big or
+//!    little core; a Hurry-up migration splits the span into an
+//!    end/start pair across cores.
+//! 7. **`HedgeFired`** — a straggling shard task is re-issued to a
+//!    replica slot under the hedging budget.
+//! 8. **`TaskWon` / `TaskLost`** — first completion wins the shard's
+//!    fan-out slot; the loser is cancelled (dropped while queued,
+//!    preempted mid-scoring, or simply late).
+//! 9. **`GatherComplete`** — all shard slots filled; the k-way top-k
+//!    merge runs.
+//! 10. **`Completed`** — the terminal stage of every non-shed chain.
+//!
+//! The post-hoc analyzer ([`trace::analyze`]) reassembles per-request
+//! span chains from the per-lane ring buffers and decomposes each e2e
+//! latency into admit / cache / queue-wait / service (big vs little) /
+//! gather-wait, with per-class rollups and tail exemplars; see the
+//! `trace` module docs for the cost model (zero-cost when disabled,
+//! allocation-free when enabled).
 //!
 //! Python runs only at `make artifacts`; the serving binary is pure Rust.
 //!
@@ -74,6 +108,7 @@ pub mod sched;
 pub mod search;
 pub mod shard;
 pub mod sim;
+pub mod trace;
 pub mod util;
 
 /// Convenient re-exports for examples and downstream users.
@@ -95,4 +130,5 @@ pub mod prelude {
     pub use crate::search::{Corpus, Index, Query, SearchEngine};
     pub use crate::shard::{merge_topk, ShardIndex, ShardPlan};
     pub use crate::sim::{SimOutput, Simulation};
+    pub use crate::trace::{Stage, TraceChain, TraceReport, Tracer};
 }

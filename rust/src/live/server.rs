@@ -27,6 +27,7 @@ use crate::search::{
     Bm25Params, Corpus, Index, Query, RustScorer, ScoredDoc, SearchEngine, Traversal,
 };
 use crate::shard::{build_shard_indexes, merge_topk, FanOutTable, FirstWins, ShardIndex};
+use crate::trace::{analyze::DEFAULT_EXEMPLARS, LoserFate, ReasonCode, Stage, TraceReport, Tracer};
 use crate::util::Rng;
 
 /// Live-server configuration.
@@ -114,6 +115,11 @@ pub struct LiveConfig {
     /// empty = one implicit default class; a class's `deadline_ms` is its
     /// SLO and admission deadline, and enables admission control.
     pub classes: Vec<ClassSpec>,
+    /// Per-lane lifecycle-trace ring capacity, events (one ring per
+    /// worker thread plus a frontend lane for the load generator; same
+    /// semantics as `SimConfig::trace_capacity`). 0 = tracing off, the
+    /// default: no tracer is built and no record site executes.
+    pub trace_capacity: usize,
 }
 
 impl LiveConfig {
@@ -234,6 +240,7 @@ impl Default for LiveConfig {
             top_k: 10,
             keyword_mix: KeywordMix::Paper,
             classes: Vec::new(),
+            trace_capacity: 0,
         }
     }
 }
@@ -316,6 +323,11 @@ pub struct LiveReport {
     pub cache: Option<CacheStats>,
     /// Total scoring passes across workers.
     pub total_passes: u64,
+    /// Post-hoc span-chain analysis (`Some` iff
+    /// `LiveConfig::trace_capacity` > 0): per-class critical-path
+    /// decomposition and tail exemplars assembled from the per-thread
+    /// trace rings.
+    pub trace: Option<TraceReport>,
 }
 
 impl LiveReport {
@@ -351,6 +363,66 @@ impl LiveReport {
         self.per_class
             .iter()
             .find(|c| crate::util::norm_token(&c.name) == key)
+    }
+
+    /// Machine-readable report (`--report-json`): same shape as
+    /// [`crate::sim::SimOutput::to_json`] with `"engine": "live"`, so one
+    /// parser covers both engines. Hand-rolled (no serde); always
+    /// parseable by `python3 -m json.tool`.
+    pub fn to_json(&self) -> String {
+        use crate::metrics::report as rj;
+        let mut w = crate::util::JsonWriter::new();
+        w.begin_obj();
+        w.field_str("engine", "live");
+        w.field_str("backend", self.backend);
+        w.field_str("discipline", self.discipline);
+        w.field_str("order", self.order);
+        w.field_f64("duration_ms", self.duration_ms);
+        w.field_u64("offered", self.offered() as u64);
+        w.field_u64("completed", self.per_request.len() as u64);
+        w.field_u64("shed", self.shed as u64);
+        w.field_u64(
+            "cache_hits",
+            self.per_request.iter().filter(|r| r.cached).count() as u64,
+        );
+        w.field_u64("migrations", self.migrations as u64);
+        w.field_u64("total_passes", self.total_passes);
+        w.field_f64("throughput_qps", self.throughput_qps());
+        w.key("latency");
+        rj::histogram_json(&mut w, &self.latency);
+        w.key("energy");
+        rj::energy_json(&mut w, &self.energy);
+        w.key("per_class");
+        w.begin_arr();
+        for cs in &self.per_class {
+            rj::class_stats_json(&mut w, cs);
+        }
+        w.end_arr();
+        w.field_u64("shards", self.shards as u64);
+        w.field_u64("replicas", self.replicas as u64);
+        w.key("per_shard");
+        w.begin_arr();
+        for s in &self.per_shard {
+            rj::shard_stats_json(&mut w, s);
+        }
+        w.end_arr();
+        w.key("hedge");
+        match &self.hedge {
+            Some(h) => rj::hedge_stats_json(&mut w, h),
+            None => w.value_null(),
+        }
+        w.key("cache");
+        match &self.cache {
+            Some(c) => rj::cache_stats_json(&mut w, c),
+            None => w.value_null(),
+        }
+        w.key("trace");
+        match &self.trace {
+            Some(t) => rj::trace_report_json(&mut w, t),
+            None => w.value_null(),
+        }
+        w.end_obj();
+        w.finish()
     }
 }
 
@@ -490,6 +562,30 @@ impl LiveServer {
         let epoch = Instant::now();
         let now_ms = move || epoch.elapsed().as_secs_f64() * 1e3;
 
+        // Lifecycle tracer: one ring per worker thread plus a frontend
+        // lane for the load generator. The dequeue stamp restamps from
+        // the server epoch — the shared queue keeps its own construction
+        // epoch, and chain events must share one timebase.
+        let tracer: Option<Arc<Tracer>> = (cfg.trace_capacity > 0)
+            .then(|| Arc::new(Tracer::new(n_threads + 1, cfg.trace_capacity)));
+        if let Some(t) = &tracer {
+            let t = Arc::clone(t);
+            shared
+                .queue
+                .set_dequeue_stamp(Box::new(move |req: &LiveRequest, core, kind, _queue_ms| {
+                    let now = epoch.elapsed().as_secs_f64() * 1e3;
+                    t.record(
+                        core.0,
+                        req.widx as u64,
+                        now,
+                        Stage::Dequeued {
+                            core: core.0 as u16,
+                            big: kind == CoreKind::Big,
+                        },
+                    );
+                }));
+        }
+
         // Workload (with concrete terms), classified per the registry,
         // arrival-shaped per `LiveConfig::arrivals`.
         let mut rng = Rng::new(cfg.seed);
@@ -595,6 +691,7 @@ impl LiveServer {
             let traversal = cfg.traversal;
             let est = est.clone();
             let batch_limits = batch_limits.clone();
+            let tracer = tracer.clone();
             workers.push(std::thread::spawn(move || -> Result<u64> {
                 // Per-thread scorer: PJRT client is not Send, build here.
                 let mut scorer: Box<dyn BlockScorer> = if use_xla {
@@ -642,6 +739,17 @@ impl LiveServer {
                         let aff = shared.aff.lock().expect("aff poisoned");
                         aff.kind_of(ThreadId(t))
                     };
+                    if let Some(tr) = &tracer {
+                        tr.record(
+                            t,
+                            batch[0].widx as u64,
+                            item_started,
+                            Stage::ScoringStart {
+                                core: t as u16,
+                                big: kind_at_start == CoreKind::Big,
+                            },
+                        );
+                    }
                     stats_tx
                         .send(&StatsRecord {
                             tid: ThreadId(t),
@@ -677,6 +785,30 @@ impl LiveServer {
                             let passes_now = meter.total();
                             let passes = passes_now - passes_prev;
                             passes_prev = passes_now;
+                            if let Some(tr) = &tracer {
+                                // The end record reuses the start-time
+                                // kind: migration can reclass the thread
+                                // mid-request, and the decomposition
+                                // charges service to the kind that began
+                                // the work.
+                                tr.record(
+                                    t,
+                                    req.widx as u64,
+                                    completed,
+                                    Stage::ScoringEnd {
+                                        core: t as u16,
+                                        big: kind_at_start == CoreKind::Big,
+                                        passes: passes.min(u32::MAX as u64) as u32,
+                                        docs_skipped: 0,
+                                    },
+                                );
+                                tr.record(
+                                    tr.frontend_lane(),
+                                    req.widx as u64,
+                                    completed,
+                                    Stage::Completed,
+                                );
+                            }
                             // Populate at completion: only misses reach a
                             // worker, so a repeat of this query hits until
                             // evicted/expired.
@@ -707,6 +839,17 @@ impl LiveServer {
                                         class: Some(batch[i + 1].class),
                                     })
                                     .ok();
+                                if let Some(tr) = &tracer {
+                                    tr.record(
+                                        t,
+                                        batch[i + 1].widx as u64,
+                                        completed,
+                                        Stage::ScoringStart {
+                                            core: t as u16,
+                                            big: final_kind == CoreKind::Big,
+                                        },
+                                    );
+                                }
                             }
                             item_started = completed;
                             kind_at_start = final_kind;
@@ -721,7 +864,7 @@ impl LiveServer {
         // ---- load generator (this thread) ----
         // Per-class shed counts live here: only the generator sheds.
         let mut shed_by_class: Vec<usize> = vec![0; registry.len()];
-        for req in &workload.requests {
+        for (widx, req) in workload.requests.iter().enumerate() {
             let target = req.arrive_ms;
             let now = now_ms();
             if target > now {
@@ -737,10 +880,45 @@ impl LiveServer {
                 arrive_ms: now_ms(),
                 cheap: false,
             };
-            if let AdmissionDecision::Shed { .. } = shared.queue.probe_admit(info, &shared.aff) {
+            let rid = widx as u64;
+            if let Some(t) = &tracer {
+                t.record(
+                    t.frontend_lane(),
+                    rid,
+                    info.arrive_ms,
+                    Stage::Arrived {
+                        class: req.class.idx() as u16,
+                    },
+                );
+            }
+            if let AdmissionDecision::Shed { reason } =
+                shared.queue.probe_admit(info, &shared.aff)
+            {
+                if let Some(t) = &tracer {
+                    t.record(
+                        t.frontend_lane(),
+                        rid,
+                        now_ms(),
+                        Stage::AdmitDecision {
+                            admitted: false,
+                            reason: ReasonCode::from_reason(&reason),
+                        },
+                    );
+                }
                 shared.shed.fetch_add(1, Ordering::Relaxed);
                 shed_by_class[req.class.idx()] += 1;
                 continue;
+            }
+            if let Some(t) = &tracer {
+                t.record(
+                    t.frontend_lane(),
+                    rid,
+                    now_ms(),
+                    Stage::AdmitDecision {
+                        admitted: true,
+                        reason: ReasonCode::None,
+                    },
+                );
             }
             // Admission first, then the cache: a hit completes right here
             // on the dispatching thread — no queue, no worker, no scoring.
@@ -752,13 +930,22 @@ impl LiveServer {
                 if let Some(hr) = &hit_rates {
                     hr.record(req.class, hit.is_some());
                 }
+                if let Some(t) = &tracer {
+                    t.record(
+                        t.frontend_lane(),
+                        rid,
+                        now_ms(),
+                        Stage::CacheProbe { hit: hit.is_some() },
+                    );
+                }
                 if let Some(hits) = hit {
+                    let completed = now_ms();
                     records.lock().expect("records poisoned").push(LiveRecord {
                         class: req.class,
                         keywords: req.keywords,
                         arrived_ms: info.arrive_ms,
                         started_ms: info.arrive_ms,
-                        completed_ms: now_ms(),
+                        completed_ms: completed,
                         tid: 0,
                         first_kind: CoreKind::Little,
                         final_kind: CoreKind::Little,
@@ -766,6 +953,9 @@ impl LiveServer {
                         top_hit: hits.first().map(|h| (h.doc, h.score)),
                         cached: true,
                     });
+                    if let Some(t) = &tracer {
+                        t.record(t.frontend_lane(), rid, completed, Stage::Completed);
+                    }
                     shared.done.fetch_add(1, Ordering::Relaxed);
                     continue;
                 }
@@ -775,9 +965,17 @@ impl LiveServer {
                 .iter()
                 .map(|&id| self.index.term(id).to_string())
                 .collect();
+            if let Some(t) = &tracer {
+                t.record(
+                    t.frontend_lane(),
+                    rid,
+                    now_ms(),
+                    Stage::Enqueued { shard: 0, slot: 0 },
+                );
+            }
             shared.queue.push_admitted(
                 LiveRequest {
-                    widx: 0,
+                    widx,
                     class: req.class,
                     query: Query::from_terms(terms),
                     arrived_ms: info.arrive_ms,
@@ -826,6 +1024,9 @@ impl LiveServer {
         let cache_stats = cache
             .as_ref()
             .map(|c| build_cache_stats(c, cfg, &registry, &per_request));
+        let class_names: Vec<String> =
+            registry.specs().iter().map(|s| s.name.clone()).collect();
+        let trace = tracer.map(|t| t.report(&class_names, DEFAULT_EXEMPLARS));
 
         Ok(LiveReport {
             latency,
@@ -844,6 +1045,7 @@ impl LiveServer {
             hedge: None,
             cache: cache_stats,
             total_passes,
+            trace,
         })
     }
 
@@ -892,6 +1094,13 @@ impl LiveServer {
         let total = cfg.num_requests;
         let epoch = Instant::now();
         let now_ms = move || epoch.elapsed().as_secs_f64() * 1e3;
+
+        // Lifecycle tracer: one ring per GLOBAL core plus a frontend lane
+        // shared by the load generator, the hedger and gather-side
+        // records. Worker lanes are keyed by global core index so slot
+        // pools never collide.
+        let tracer: Option<Arc<Tracer>> = (cfg.trace_capacity > 0)
+            .then(|| Arc::new(Tracer::new(topology.num_cores() + 1, cfg.trace_capacity)));
 
         // Straggler policy (per-class P² latency quantile + token-bucket
         // budget) and outcome accounting, shared by the load generator,
@@ -1010,6 +1219,28 @@ impl LiveServer {
             let cancel = hedging.then(CancelSet::new);
             if let Some(set) = &cancel {
                 queue.set_cancellation(set.clone(), |t: &ShardTask| t.parent);
+            }
+            if let Some(t) = &tracer {
+                let t = Arc::clone(t);
+                // The stamp restamps from the server epoch (the queue has
+                // its own construction epoch) and maps the slot-local core
+                // index onto the global lane.
+                let to_global: Vec<usize> = plan.cores(slot).iter().map(|c| c.0).collect();
+                queue.set_dequeue_stamp(Box::new(
+                    move |task: &ShardTask, core, kind, _queue_ms| {
+                        let g = to_global[core.0];
+                        let now = epoch.elapsed().as_secs_f64() * 1e3;
+                        t.record(
+                            g,
+                            task.parent,
+                            now,
+                            Stage::Dequeued {
+                                core: g as u16,
+                                big: kind == CoreKind::Big,
+                            },
+                        );
+                    },
+                ));
             }
             shard_shareds.push(Arc::new(ShardShared {
                 queue,
@@ -1139,6 +1370,7 @@ impl LiveServer {
                 let hedge_stats = hedge_stats.clone();
                 let hedge_policy = hedge_policy.clone();
                 let global_core = plan.cores(slot)[t].0;
+                let tracer = tracer.clone();
                 let use_xla = cfg.use_xla;
                 let work_scale = cfg.work_scale;
                 let top_k = cfg.top_k;
@@ -1176,6 +1408,19 @@ impl LiveServer {
                                     let hs = hedge_stats.as_ref().expect("hedging");
                                     hs.lock().expect("hedge stats poisoned").cancelled_inflight += 1;
                                 }
+                                // Dequeued but never scored: a late loser
+                                // whose cancel raced past the queue drop.
+                                if let Some(tr) = &tracer {
+                                    tr.record(
+                                        global_core,
+                                        task.parent,
+                                        now_ms(),
+                                        Stage::TaskLost {
+                                            shard: shard as u16,
+                                            fate: LoserFate::Late,
+                                        },
+                                    );
+                                }
                                 continue;
                             }
                         }
@@ -1184,6 +1429,17 @@ impl LiveServer {
                             let aff = shared.aff.lock().expect("aff poisoned");
                             aff.kind_of(ThreadId(t))
                         };
+                        if let Some(tr) = &tracer {
+                            tr.record(
+                                global_core,
+                                task.parent,
+                                started,
+                                Stage::ScoringStart {
+                                    core: global_core as u16,
+                                    big: first_kind == CoreKind::Big,
+                                },
+                            );
+                        }
                         let tag = RequestTag::from_seq(rid_seq);
                         rid_seq += 1;
                         stats_tx
@@ -1228,6 +1484,20 @@ impl LiveServer {
                             }
                             let mut g = gather.lock().expect("gather poisoned");
                             g.tokens.remove(&(task.parent, slot));
+                            drop(g);
+                            if let Some(tr) = &tracer {
+                                tr.record(
+                                    global_core,
+                                    task.parent,
+                                    completed,
+                                    Stage::TaskLost {
+                                        shard: shard as u16,
+                                        fate: LoserFate::InflightPreempt {
+                                            big: first_kind == CoreKind::Big,
+                                        },
+                                    },
+                                );
+                            }
                             continue;
                         }
                         if let Some(est) = &est {
@@ -1237,6 +1507,22 @@ impl LiveServer {
                             let aff = shared.aff.lock().expect("aff poisoned");
                             aff.kind_of(ThreadId(t))
                         };
+                        if let Some(tr) = &tracer {
+                            // End reuses the start-time kind: the mapper can
+                            // reclass the thread mid-task, and service is
+                            // charged to the kind that began the work.
+                            tr.record(
+                                global_core,
+                                task.parent,
+                                completed,
+                                Stage::ScoringEnd {
+                                    core: global_core as u16,
+                                    big: first_kind == CoreKind::Big,
+                                    passes: passes.min(u32::MAX as u64) as u32,
+                                    docs_skipped: 0,
+                                },
+                            );
+                        }
                         // Gather: start/complete bookkeeping under the
                         // fan-out lock; the last task merges and records.
                         // Hedged runs race the copies: first completion
@@ -1260,11 +1546,37 @@ impl LiveServer {
                                     let hs = hedge_stats.as_ref().expect("hedging");
                                     hs.lock().expect("hedge stats poisoned").late_losers += 1;
                                 }
+                                if let Some(tr) = &tracer {
+                                    tr.record(
+                                        global_core,
+                                        task.parent,
+                                        completed,
+                                        Stage::TaskLost {
+                                            shard: shard as u16,
+                                            fate: LoserFate::Late,
+                                        },
+                                    );
+                                }
                                 continue;
                             }
                             match g.table.complete_first_wins(task.parent, shard, completed, partial)
                             {
                                 FirstWins::Won(fan) => {
+                                    if let Some(tr) = &tracer {
+                                        let by_hedge = g
+                                            .hedged
+                                            .get(&(task.parent, shard))
+                                            .is_some_and(|&d| d == slot);
+                                        tr.record(
+                                            global_core,
+                                            task.parent,
+                                            completed,
+                                            Stage::TaskWon {
+                                                shard: shard as u16,
+                                                by_hedge,
+                                            },
+                                        );
+                                    }
                                     g.tokens.remove(&(task.parent, slot));
                                     if let Some(hp) = &hedge_policy {
                                         hp.observe(task.class, completed - task.arrived_ms);
@@ -1296,14 +1608,41 @@ impl LiveServer {
                                         let hs = hedge_stats.as_ref().expect("hedging");
                                         hs.lock().expect("hedge stats poisoned").late_losers += 1;
                                     }
+                                    if let Some(tr) = &tracer {
+                                        tr.record(
+                                            global_core,
+                                            task.parent,
+                                            completed,
+                                            Stage::TaskLost {
+                                                shard: shard as u16,
+                                                fate: LoserFate::Late,
+                                            },
+                                        );
+                                    }
                                     continue;
                                 }
                             }
                         } else {
                             g.table.start(task.parent, shard, started);
+                            if let Some(tr) = &tracer {
+                                tr.record(
+                                    global_core,
+                                    task.parent,
+                                    completed,
+                                    Stage::TaskWon {
+                                        shard: shard as u16,
+                                        by_hedge: false,
+                                    },
+                                );
+                            }
                             g.table.complete(task.parent, shard, completed, partial)
                         };
                         if let Some(fan) = gathered {
+                            if let Some(tr) = &tracer {
+                                let fl = tr.frontend_lane();
+                                tr.record(fl, task.parent, completed, Stage::GatherComplete);
+                                tr.record(fl, task.parent, completed, Stage::Completed);
+                            }
                             let critical = fan.critical_shard();
                             let parts: Vec<Vec<ScoredDoc>> = fan
                                 .tasks()
@@ -1375,6 +1714,7 @@ impl LiveServer {
             let hs = hedge_stats.clone().expect("hedging");
             let all_shareds = shard_shareds.clone();
             let (done, shed_total) = (done.clone(), shed_total.clone());
+            let tracer = tracer.clone();
             let handle = std::thread::spawn(move || {
                 let mut waiting: Vec<HedgeOrder> = Vec::new();
                 let mut pending: Vec<usize> = Vec::new();
@@ -1426,6 +1766,29 @@ impl LiveServer {
                             }
                         }
                         for (dup_slot, task) in fired {
+                            if let Some(tr) = &tracer {
+                                let fl = tr.frontend_lane();
+                                let sh_id = (dup_slot % s_count) as u16;
+                                let t_fire = now_ms();
+                                tr.record(
+                                    fl,
+                                    task.parent,
+                                    t_fire,
+                                    Stage::HedgeFired {
+                                        shard: sh_id,
+                                        slot: dup_slot as u16,
+                                    },
+                                );
+                                tr.record(
+                                    fl,
+                                    task.parent,
+                                    t_fire,
+                                    Stage::Enqueued {
+                                        shard: sh_id,
+                                        slot: dup_slot as u16,
+                                    },
+                                );
+                            }
                             let sh = &all_shareds[dup_slot];
                             sh.queue.push_admitted(task, order.info, &sh.aff);
                         }
@@ -1496,16 +1859,49 @@ impl LiveServer {
             // the only producer, so backlogs can only shrink meanwhile).
             // Replica slots never gate admission — a hedge is optional
             // extra work, not part of the request's contract.
-            let refused = shard_shareds.iter().take(s_count).any(|sh| {
-                matches!(
-                    sh.queue.probe_admit(info, &sh.aff),
-                    AdmissionDecision::Shed { .. }
-                )
-            });
-            if refused {
+            if let Some(t) = &tracer {
+                t.record(
+                    t.frontend_lane(),
+                    req.id,
+                    arrived,
+                    Stage::Arrived {
+                        class: req.class.idx() as u16,
+                    },
+                );
+            }
+            let refused = shard_shareds
+                .iter()
+                .take(s_count)
+                .find_map(|sh| match sh.queue.probe_admit(info, &sh.aff) {
+                    AdmissionDecision::Shed { reason } => Some(reason),
+                    _ => None,
+                });
+            if let Some(reason) = refused {
+                if let Some(t) = &tracer {
+                    t.record(
+                        t.frontend_lane(),
+                        req.id,
+                        now_ms(),
+                        Stage::AdmitDecision {
+                            admitted: false,
+                            reason: ReasonCode::from_reason(&reason),
+                        },
+                    );
+                }
                 shed_total.fetch_add(1, Ordering::Relaxed);
                 shed_by_class[req.class.idx()] += 1;
                 continue;
+            }
+            if let Some(t) = &tracer {
+                t.record(
+                    t.frontend_lane(),
+                    req.id,
+                    now_ms(),
+                    Stage::AdmitDecision {
+                        admitted: true,
+                        reason: ReasonCode::None,
+                    },
+                );
             }
             // Admission first, then the cache: a hit completes right here
             // on the dispatching thread — the parent never opens a fan-out
@@ -1518,14 +1914,23 @@ impl LiveServer {
                 if let Some(hr) = &hit_rates {
                     hr.record(req.class, hit.is_some());
                 }
+                if let Some(t) = &tracer {
+                    t.record(
+                        t.frontend_lane(),
+                        req.id,
+                        now_ms(),
+                        Stage::CacheProbe { hit: hit.is_some() },
+                    );
+                }
                 if let Some(hits) = hit {
+                    let completed = now_ms();
                     let mut g = gather.lock().expect("gather poisoned");
                     g.records.push(LiveRecord {
                         class: req.class,
                         keywords: req.keywords,
                         arrived_ms: arrived,
                         started_ms: arrived,
-                        completed_ms: now_ms(),
+                        completed_ms: completed,
                         tid: 0,
                         first_kind: CoreKind::Little,
                         final_kind: CoreKind::Little,
@@ -1534,6 +1939,9 @@ impl LiveServer {
                         cached: true,
                     });
                     drop(g);
+                    if let Some(t) = &tracer {
+                        t.record(t.frontend_lane(), req.id, completed, Stage::Completed);
+                    }
                     done.fetch_add(1, Ordering::Relaxed);
                     continue;
                 }
@@ -1555,6 +1963,20 @@ impl LiveServer {
                 }
             }
             for (s, sh) in shard_shareds.iter().take(s_count).enumerate() {
+                // Record before the push: a task can dequeue on another
+                // thread the instant it lands, and the chain's Enqueued
+                // must sequence before its Dequeued.
+                if let Some(t) = &tracer {
+                    t.record(
+                        t.frontend_lane(),
+                        req.id,
+                        now_ms(),
+                        Stage::Enqueued {
+                            shard: s as u16,
+                            slot: s as u16,
+                        },
+                    );
+                }
                 sh.queue.push_admitted(
                     ShardTask {
                         parent: req.id,
@@ -1697,6 +2119,9 @@ impl LiveServer {
         let cache_stats = cache
             .as_ref()
             .map(|c| build_cache_stats(c, cfg, &registry, &per_request));
+        let class_names: Vec<String> =
+            registry.specs().iter().map(|s| s.name.clone()).collect();
+        let trace = tracer.map(|t| t.report(&class_names, DEFAULT_EXEMPLARS));
 
         Ok(LiveReport {
             latency,
@@ -1715,6 +2140,7 @@ impl LiveServer {
             hedge,
             cache: cache_stats,
             total_passes,
+            trace,
         })
     }
 }

@@ -33,17 +33,19 @@ USAGE:
                   [--cache-capacity N] [--cache-segments N]
                   [--cache-ttl-ms N] [--arrivals A]
                   [--threshold-ms N] [--sampling-ms N]
+                  [--trace-capacity N] [--trace-out FILE] [--report-json FILE]
   hurryup serve   [--qps N] [--requests N] [--policy P] [--discipline D]
                   [--order O] [--wfq-cost C] [--shards S] [--replicas R]
                   [--hedge-quantile Q] [--hedge-budget B] [--traversal T]
                   [--shed-deadline-ms N] [--classes SPEC] [--xla] [--docs N]
                   [--cache-capacity N] [--cache-segments N]
                   [--cache-ttl-ms N] [--arrivals A]
+                  [--trace-capacity N] [--trace-out FILE] [--report-json FILE]
   hurryup index   [--docs N] [--vocab N]
   hurryup query   --q \"search terms\" [--xla] [--docs N]
   hurryup figures [fig1 fig2 fig3 fig6 fig7 fig8 fig9 power_table ablations
                   disciplines shedding classes orders sharding hedging
-                  caching] [--full | --scale quick|full]
+                  caching tracing] [--full | --scale quick|full]
   hurryup check
 
 POLICIES:    hurry_up | linux_random | round_robin | all_big | all_little |
@@ -81,6 +83,19 @@ CACHING:     --cache-capacity N (default 0 = no cache) enables the sharded
              --cache-ttl-ms bounds entry age (default inf = never expires)
 ARRIVALS:    --arrivals poisson (default) | uniform | diurnal | flashcrowd
              shapes the open-loop arrival process at the same mean QPS
+TRACING:     --trace-capacity N (default 0 = off) records every request's
+             lifecycle as a span chain (arrive → admit → cache probe →
+             enqueue → dequeue → score → gather → complete) into per-core
+             rings of N events; the report then includes a critical-path
+             decomposition (admit / cache / queue / service big vs little /
+             gather) per class plus tail exemplars. 0 replays the untraced
+             engine bit for bit. --trace-out FILE exports the chains —
+             .json extension = Chrome trace-event JSON (load in Perfetto /
+             chrome://tracing), anything else = one JSON object per line
+             (JSONL). --report-json FILE writes the whole machine-readable
+             report (conservation counters, histograms, ledgers, trace
+             rollup) as one JSON document; both flags work for sim and
+             serve
 CLASSES:     --classes declares service classes (SPEC =
              \"name:key=val,...;name:...\", keys share | mix | deadline_ms |
              priority | weight | batch_max | popularity; mix = paper |
@@ -217,6 +232,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     cfg.cache_capacity = args.get_usize("cache-capacity", cfg.cache_capacity)?;
     cfg.cache_segments = args.get_usize("cache-segments", cfg.cache_segments)?;
     cfg.cache_ttl_ms = args.get_f64("cache-ttl-ms", cfg.cache_ttl_ms)?;
+    cfg.trace_capacity = args.get_usize("trace-capacity", cfg.trace_capacity)?;
     if let Some(a) = args.get("arrivals") {
         cfg.arrivals = hurryup::loadgen::ArrivalKind::parse(a)?;
     }
@@ -288,6 +304,31 @@ fn cmd_sim(args: &Args) -> Result<()> {
     if let Some(c) = &out.cache {
         println!("caching    : {}", report::cache_line(c));
     }
+    if let Some(t) = &out.trace {
+        println!("tracing    : {}", t.summary_line());
+    }
+    write_trace_out(args, out.trace.as_ref())?;
+    if let Some(path) = args.get("report-json") {
+        std::fs::write(path, out.to_json())?;
+        println!("report-json: wrote {path}");
+    }
+    Ok(())
+}
+
+/// Shared `--trace-out` handling for `sim` and `serve`: export the span
+/// chains in the format the file extension picks (`.json` = Chrome
+/// trace-event JSON, else JSONL). A clean error when tracing was off.
+fn write_trace_out(args: &Args, trace: Option<&hurryup::trace::TraceReport>) -> Result<()> {
+    let Some(path) = args.get("trace-out") else {
+        return Ok(());
+    };
+    let Some(t) = trace else {
+        return Err(Error::invalid(
+            "--trace-out needs tracing enabled: pass --trace-capacity N (e.g. 32768)",
+        ));
+    };
+    std::fs::write(path, hurryup::trace::export::render_for_path(t, path))?;
+    println!("trace-out  : wrote {path} ({} chains)", t.chains.len());
     Ok(())
 }
 
@@ -329,6 +370,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.cache_capacity = args.get_usize("cache-capacity", cfg.cache_capacity)?;
     cfg.cache_segments = args.get_usize("cache-segments", cfg.cache_segments)?;
     cfg.cache_ttl_ms = args.get_f64("cache-ttl-ms", cfg.cache_ttl_ms)?;
+    cfg.trace_capacity = args.get_usize("trace-capacity", cfg.trace_capacity)?;
     if let Some(a) = args.get("arrivals") {
         cfg.arrivals = hurryup::loadgen::ArrivalKind::parse(a)?;
     }
@@ -401,6 +443,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if let Some(c) = &out.cache {
         println!("caching    : {}", report::cache_line(c));
+    }
+    if let Some(t) = &out.trace {
+        println!("tracing    : {}", t.summary_line());
+    }
+    write_trace_out(args, out.trace.as_ref())?;
+    if let Some(path) = args.get("report-json") {
+        std::fs::write(path, out.to_json())?;
+        println!("report-json: wrote {path}");
     }
     Ok(())
 }

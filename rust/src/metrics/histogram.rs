@@ -255,6 +255,61 @@ mod tests {
     }
 
     #[test]
+    fn prop_merge_quantiles_match_concatenated_stream() {
+        // Splitting a sample stream into K histograms and merging them
+        // must agree with one histogram over the concatenation: counts,
+        // moments and extremes exactly (Chan et al. combination), every
+        // quantile to within the bucket precision of the exact
+        // order-statistic of the pooled samples.
+        prop::check(64, |rng: &mut Rng, _| {
+            let parts = rng.range(2, 6);
+            let n = rng.range(50, 1500);
+            let mut split: Vec<LatencyHistogram> =
+                (0..parts).map(|_| LatencyHistogram::new()).collect();
+            let mut vals = Vec::with_capacity(n);
+            for _ in 0..n {
+                // Mixed regimes so parts have very different shapes.
+                let v = if rng.below(3) == 0 {
+                    rng.f64_range(0.01, 2.0)
+                } else {
+                    rng.lognormal(4.0, 1.5)
+                };
+                split[rng.below(parts)].record(v);
+                vals.push(v);
+            }
+            let mut all = LatencyHistogram::new();
+            for v in &vals {
+                all.record(*v);
+            }
+            let mut merged = LatencyHistogram::new();
+            for part in &split {
+                merged.merge(part);
+            }
+            assert_eq!(merged.count(), all.count());
+            assert!((merged.mean() - all.mean()).abs() < 1e-9);
+            assert!((merged.std() - all.std()).abs() < 1e-9);
+            assert_eq!(merged.min(), all.min());
+            assert_eq!(merged.max(), all.max());
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [0.0, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+                let m = merged.percentile(q);
+                // Merged buckets are the elementwise sum, so the merged
+                // quantile equals the single-stream histogram's exactly…
+                assert_eq!(m, all.percentile(q), "q={q}");
+                // …and tracks the exact order statistic within 2x the
+                // bucket precision (clamped floor for sub-µs samples).
+                let idx = ((q * n as f64).ceil() as usize).max(1) - 1;
+                let exact = vals[idx.min(n - 1)].max(MIN_VALUE);
+                let rel = (m - exact).abs() / exact;
+                assert!(
+                    rel < 2.0 * PRECISION + 1e-9,
+                    "q={q} exact={exact} merged={m} rel={rel}"
+                );
+            }
+        });
+    }
+
+    #[test]
     fn bucket_monotone() {
         // bucket_of must be monotone non-decreasing in value.
         let mut last = 0;

@@ -6,8 +6,12 @@
 use super::cache_stats::CacheStats;
 use super::class_stats::ClassStats;
 use super::hedge_stats::HedgeStats;
+use super::histogram::LatencyHistogram;
 use super::shard_stats::{tail_amplification, ShardStats};
+use crate::platform::{EnergyMeters, MeterChannel};
+use crate::trace::{StageBreakdown, TraceReport};
 use crate::util::fmt::{ms, ms_or_dash, pct, pct_or_dash, Table};
+use crate::util::JsonWriter;
 
 /// Per-class outcome table (offered/done/shed/goodput/latency/wait/SLO) —
 /// the standard class-aware report of both engines. `duration_ms` is the
@@ -128,6 +132,174 @@ pub fn cache_line(c: &CacheStats) -> String {
     )
 }
 
+// ---------------------------------------------------------------------
+// JSON fragments (`--report-json`): every stats struct both engines
+// aggregate serialises through these, so the machine-readable report has
+// one shape regardless of engine. Hand-rolled via `util::JsonWriter` —
+// the offline environment has no serde.
+// ---------------------------------------------------------------------
+
+/// Histogram summary object: count + moments + standard quantiles.
+pub fn histogram_json(w: &mut JsonWriter, h: &LatencyHistogram) {
+    w.begin_obj();
+    w.field_u64("count", h.count());
+    w.field_f64("mean_ms", h.mean());
+    w.field_f64("min_ms", h.min());
+    w.field_f64("max_ms", h.max());
+    w.field_f64("p50_ms", h.percentile(0.50));
+    w.field_f64("p90_ms", h.percentile(0.90));
+    w.field_f64("p99_ms", h.percentile(0.99));
+    w.end_obj();
+}
+
+/// One service class's outcome object. Conservation: `offered ==
+/// completed + shed` by construction ([`ClassStats::offered`]).
+pub fn class_stats_json(w: &mut JsonWriter, cs: &ClassStats) {
+    w.begin_obj();
+    w.field_str("name", &cs.name);
+    w.field_u64("priority", cs.priority as u64);
+    w.key("deadline_ms");
+    match cs.deadline_ms {
+        Some(d) => w.value_f64(d),
+        None => w.value_null(),
+    }
+    w.field_u64("offered", cs.offered() as u64);
+    w.field_u64("completed", cs.completed as u64);
+    w.field_u64("shed", cs.shed as u64);
+    w.field_u64("slo_met", cs.slo_met);
+    w.key("latency");
+    histogram_json(w, &cs.latency);
+    w.key("wait");
+    histogram_json(w, &cs.wait);
+    w.end_obj();
+}
+
+/// Result-cache accounting object. Conservation: `probes == hits +
+/// misses`.
+pub fn cache_stats_json(w: &mut JsonWriter, c: &CacheStats) {
+    w.begin_obj();
+    w.field_u64("capacity", c.capacity as u64);
+    w.field_u64("segments", c.segments as u64);
+    w.field_u64("probes", c.probes());
+    w.field_u64("hits", c.hits);
+    w.field_u64("misses", c.misses);
+    w.field_f64("hit_rate", c.hit_rate());
+    w.field_u64("insertions", c.insertions);
+    w.field_u64("evictions", c.evictions);
+    w.field_u64("expirations", c.expirations);
+    w.key("hit_latency");
+    histogram_json(w, &c.hit_latency);
+    w.key("miss_latency");
+    histogram_json(w, &c.miss_latency);
+    w.end_obj();
+}
+
+/// Hedge-ledger object. `balanced` asserts `hedges_fired == hedge_wins +
+/// cancelled_queued + cancelled_inflight + late_losers`.
+pub fn hedge_stats_json(w: &mut JsonWriter, h: &HedgeStats) {
+    w.begin_obj();
+    w.field_u64("replicas", h.replicas as u64);
+    w.field_f64("budget", h.budget);
+    w.field_u64("primary_tasks", h.primary_tasks as u64);
+    w.field_u64("hedges_fired", h.hedges_fired as u64);
+    w.field_u64("budget_denied", h.budget_denied as u64);
+    w.field_u64("hedge_wins", h.hedge_wins as u64);
+    w.field_u64("cancelled_queued", h.cancelled_queued as u64);
+    w.field_u64("cancelled_inflight", h.cancelled_inflight as u64);
+    w.field_f64("cancelled_work_ms", h.cancelled_work_ms);
+    w.field_u64("late_losers", h.late_losers as u64);
+    w.field_bool("balanced", h.is_balanced());
+    w.end_obj();
+}
+
+/// One shard's fan-out outcome object (task tail + per-class split +
+/// critical-path attribution).
+pub fn shard_stats_json(w: &mut JsonWriter, s: &ShardStats) {
+    w.begin_obj();
+    w.field_u64("shard", s.shard as u64);
+    w.field_str("cores", &s.cores);
+    w.field_str("discipline", &s.discipline);
+    w.field_str("order", &s.order);
+    w.field_str("policy", &s.policy);
+    w.field_u64("completed", s.completed() as u64);
+    w.field_u64("shed", s.shed() as u64);
+    w.field_u64("critical", s.critical as u64);
+    w.key("tasks");
+    histogram_json(w, &s.tasks);
+    w.key("per_class");
+    w.begin_arr();
+    for cs in &s.per_class {
+        class_stats_json(w, cs);
+    }
+    w.end_arr();
+    w.end_obj();
+}
+
+/// Four-channel energy object, Joules.
+pub fn energy_json(w: &mut JsonWriter, e: &EnergyMeters) {
+    w.begin_obj();
+    w.field_f64("big_j", e.channel_j(MeterChannel::BigCluster));
+    w.field_f64("little_j", e.channel_j(MeterChannel::LittleCluster));
+    w.field_f64("rest_j", e.channel_j(MeterChannel::Rest));
+    w.field_f64("gpu_j", e.channel_j(MeterChannel::Gpu));
+    w.field_f64("total_j", e.total_j());
+    w.end_obj();
+}
+
+/// Critical-path stage-decomposition object, ms per bucket.
+pub fn stage_breakdown_json(w: &mut JsonWriter, b: &StageBreakdown) {
+    w.begin_obj();
+    w.field_f64("admit_ms", b.admit_ms);
+    w.field_f64("cache_ms", b.cache_ms);
+    w.field_f64("queue_ms", b.queue_ms);
+    w.field_f64("service_big_ms", b.service_big_ms);
+    w.field_f64("service_little_ms", b.service_little_ms);
+    w.field_f64("gather_ms", b.gather_ms);
+    w.field_f64("total_ms", b.total_ms());
+    w.end_obj();
+}
+
+/// Trace-report summary object: ring accounting, chain conservation and
+/// the per-class decomposition rollup (individual chains are exported
+/// via `--trace-out`, not here).
+pub fn trace_report_json(w: &mut JsonWriter, t: &TraceReport) {
+    w.begin_obj();
+    w.field_u64("capacity", t.capacity as u64);
+    w.field_u64("recorded", t.recorded);
+    w.field_u64("dropped", t.dropped);
+    w.field_u64("discarded_chains", t.discarded_chains as u64);
+    w.field_u64("chains", t.chains.len() as u64);
+    w.field_u64("completed_chains", t.completed_chains() as u64);
+    w.field_u64("shed_chains", t.shed_chains() as u64);
+    w.field_f64("min_coverage", t.min_coverage());
+    w.key("per_class");
+    w.begin_arr();
+    for c in &t.per_class {
+        w.begin_obj();
+        w.field_u64("class", c.class as u64);
+        w.field_str("name", &c.name);
+        w.field_u64("completed", c.completed as u64);
+        w.field_u64("shed", c.shed as u64);
+        w.field_u64("cache_hits", c.cache_hits as u64);
+        w.field_u64("hedged", c.hedged as u64);
+        w.key("mean");
+        stage_breakdown_json(w, &c.mean);
+        w.key("tail_mean");
+        stage_breakdown_json(w, &c.tail_mean);
+        w.field_u64("tail_count", c.tail_count as u64);
+        w.field_f64("min_coverage", c.min_coverage);
+        w.key("exemplars");
+        w.begin_arr();
+        for &rid in &c.exemplars {
+            w.value_u64(rid);
+        }
+        w.end_arr();
+        w.end_obj();
+    }
+    w.end_arr();
+    w.end_obj();
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,6 +359,44 @@ mod tests {
         // dashes, not NaNs.
         let empty = cache_line(&CacheStats::new(64, 4, &[]));
         assert!(!empty.contains("NaN"), "{empty}");
+    }
+
+    #[test]
+    fn json_fragments_render_conservation_fields() {
+        let mut w = JsonWriter::new();
+        let mut cs = ClassStats::new("fg", 0, Some(100.0));
+        cs.record_completion(40.0, 5.0, true);
+        cs.record_shed();
+        class_stats_json(&mut w, &cs);
+        let s = w.finish();
+        assert!(s.contains("\"offered\":2"), "{s}");
+        assert!(s.contains("\"completed\":1"), "{s}");
+        assert!(s.contains("\"shed\":1"), "{s}");
+
+        let mut w = JsonWriter::new();
+        let h = HedgeStats {
+            replicas: 2,
+            budget: 0.05,
+            primary_tasks: 100,
+            hedges_fired: 8,
+            budget_denied: 1,
+            hedge_wins: 5,
+            cancelled_queued: 2,
+            cancelled_inflight: 1,
+            cancelled_work_ms: 3.5,
+            late_losers: 0,
+        };
+        hedge_stats_json(&mut w, &h);
+        let s = w.finish();
+        assert!(s.contains("\"balanced\":true"), "{s}");
+        assert!(s.contains("\"hedges_fired\":8"), "{s}");
+
+        // Empty histograms serialise without NaN (non-finite -> null).
+        let mut w = JsonWriter::new();
+        histogram_json(&mut w, &LatencyHistogram::new());
+        let s = w.finish();
+        assert!(!s.contains("NaN"), "{s}");
+        assert!(s.starts_with('{') && s.ends_with('}'), "{s}");
     }
 
     #[test]

@@ -23,8 +23,12 @@ use std::collections::HashMap;
 use super::{QueueDiscipline, QueuedTicket, QueueView, SchedCtx};
 use crate::hedge::CancelSet;
 use crate::mapper::{AdmissionDecision, DispatchInfo, Policy, ShedReason};
-use crate::platform::{AffinityTable, CoreId};
+use crate::platform::{AffinityTable, CoreId, CoreKind};
 use crate::util::Rng;
+
+/// Dequeue-stamp hook: observes every payload the instant the dispatcher
+/// hands it to a core (see [`Dispatcher::set_dequeue_stamp`]).
+pub type DequeueStamp<T> = Box<dyn FnMut(&T, CoreId, CoreKind, f64) + Send>;
 
 /// Opaque payload handle issued at enqueue time (monotonic).
 pub type Ticket = u64;
@@ -72,6 +76,13 @@ pub struct Dispatcher<T> {
     /// (the default) leaves every dequeue path bit-for-bit untouched.
     cancel: Option<(CancelSet, fn(&T) -> u64)>,
     cancelled_dropped: usize,
+    /// Dequeue-stamp hook ([`Dispatcher::set_dequeue_stamp`]): observes
+    /// every payload (leaders *and* batch followers) at the moment it is
+    /// handed to a core, with the serving core's static kind. The tracer
+    /// records its `Dequeued` stage through this — the scheduling layer
+    /// stays ignorant of request ids. `None` (the default) leaves every
+    /// dispatch path untouched.
+    stamp: Option<DequeueStamp<T>>,
 }
 
 impl<T> Dispatcher<T> {
@@ -85,7 +96,17 @@ impl<T> Dispatcher<T> {
             prio_scratch: Vec::new(),
             cancel: None,
             cancelled_dropped: 0,
+            stamp: None,
         }
+    }
+
+    /// Register the dequeue-stamp hook: `stamp(payload, core, kind,
+    /// now_ms)` fires for every payload the dispatcher hands out —
+    /// [`Dispatcher::next`] hits, batch leaders and batch followers
+    /// alike — after cancellation filtering, with the serving core's
+    /// static [`CoreKind`]. Never fires for shed or cancelled payloads.
+    pub fn set_dequeue_stamp(&mut self, stamp: DequeueStamp<T>) {
+        self.stamp = Some(stamp);
     }
 
     /// Register the hedged-cancellation hook: queued payloads whose
@@ -121,6 +142,7 @@ impl<T> Dispatcher<T> {
             next_ticket,
             depth_scratch,
             prio_scratch,
+            ..
         } = self;
         discipline.depths_into(depth_scratch);
         discipline.prios_into(prio_scratch);
@@ -209,6 +231,7 @@ impl<T> Dispatcher<T> {
             next_ticket,
             depth_scratch,
             prio_scratch,
+            ..
         } = self;
         discipline.depths_into(depth_scratch);
         discipline.prios_into(prio_scratch);
@@ -256,6 +279,7 @@ impl<T> Dispatcher<T> {
             prio_scratch,
             cancel,
             cancelled_dropped,
+            stamp,
             ..
         } = self;
         loop {
@@ -285,6 +309,9 @@ impl<T> Dispatcher<T> {
                     *cancelled_dropped += 1;
                     continue;
                 }
+            }
+            if let Some(stamp) = stamp.as_mut() {
+                stamp(&payload, core, aff.topology().kind(core), now_ms);
             }
             return Some((payload, core));
         }
@@ -323,6 +350,7 @@ impl<T> Dispatcher<T> {
             prio_scratch,
             cancel,
             cancelled_dropped,
+            stamp,
             ..
         } = self;
         loop {
@@ -355,6 +383,9 @@ impl<T> Dispatcher<T> {
                     continue;
                 }
             }
+            if let Some(stamp) = stamp.as_mut() {
+                stamp(&payload, core, aff.topology().kind(core), now_ms);
+            }
             out.push(payload);
             let mut filled = 1;
             while filled < limit {
@@ -375,6 +406,9 @@ impl<T> Dispatcher<T> {
                         *cancelled_dropped += 1;
                         continue;
                     }
+                }
+                if let Some(stamp) = stamp.as_mut() {
+                    stamp(&fp, core, aff.topology().kind(core), now_ms);
                 }
                 out.push(fp);
                 filled += 1;
@@ -804,6 +838,43 @@ mod tests {
         assert_eq!(batches, vec![vec![1, 3, 4, 5], vec![6, 7]]);
         assert_eq!(d.cancelled_dropped(), 2);
         assert_eq!(d.queued(), 0);
+    }
+
+    #[test]
+    fn dequeue_stamp_fires_for_leaders_and_followers_with_core_kind() {
+        use std::sync::{Arc, Mutex};
+        let topo = Topology::juno_r1();
+        let aff = AffinityTable::round_robin(topo.clone());
+        let mut policy = PolicyKind::LinuxRandom.build(&topo);
+        let mut rng = Rng::new(17);
+        let mut d: Dispatcher<usize> = Dispatcher::new(DisciplineKind::Centralized.build(6));
+        let seen: Arc<Mutex<Vec<(usize, usize, CoreKind)>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&seen);
+        d.set_dequeue_stamp(Box::new(move |p, core, kind, _now| {
+            sink.lock().unwrap().push((*p, core.0, kind));
+        }));
+        for i in 0..6usize {
+            assert!(!d
+                .enqueue(i, DispatchInfo::untyped(1), policy.as_mut(), &aff, &mut rng, 0.0)
+                .is_shed());
+        }
+        let idle: Vec<CoreId> = (0..6).map(CoreId).collect();
+        let limits = [3usize];
+        let mut out = Vec::new();
+        while d
+            .next_batch(&idle, &limits, policy.as_mut(), &aff, &mut rng, 0.0, &mut out)
+            .is_some()
+        {
+            out.clear();
+        }
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.len(), 6, "every payload stamped exactly once");
+        let mut stamped: Vec<usize> = seen.iter().map(|(p, _, _)| *p).collect();
+        stamped.sort_unstable();
+        assert_eq!(stamped, (0..6).collect::<Vec<_>>());
+        for (_, core, kind) in seen.iter() {
+            assert_eq!(*kind, topo.kind(CoreId(*core)), "stamp carries static kind");
+        }
     }
 
     #[test]

@@ -144,7 +144,7 @@ pub mod shared;
 pub mod work_steal;
 
 pub use centralized::Centralized;
-pub use dispatcher::{AdmissionOutcome, Dispatcher, Ticket};
+pub use dispatcher::{AdmissionOutcome, DequeueStamp, Dispatcher, Ticket};
 pub use order::{
     ClassOrdering, OrderKind, OrderPolicy, OrderSpec, P2Quantile, QuantileEstimates,
     ServiceEstimates, WfqCost, WfqCostKind, COLD_START_MS,

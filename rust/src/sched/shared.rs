@@ -241,6 +241,19 @@ impl<T> SharedDispatcher<T> {
             .set_cancellation(set, key);
     }
 
+    /// Install a dequeue-stamp hook on the underlying [`Dispatcher`]:
+    /// fires for every payload (leaders and batch followers) the instant
+    /// a worker pulls it, with the serving core's static kind — the live
+    /// tracer records its `Dequeued` stage through this
+    /// ([`Dispatcher::set_dequeue_stamp`]).
+    pub fn set_dequeue_stamp(&self, stamp: super::DequeueStamp<T>) {
+        self.inner
+            .lock()
+            .expect("sched queue poisoned")
+            .dispatcher
+            .set_dequeue_stamp(stamp);
+    }
+
     /// Payloads dropped at dequeue by the cancellation set (diagnostics;
     /// part of the conservation identity
     /// `enqueued = dequeued + shed + cancelled-dropped`).

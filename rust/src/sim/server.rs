@@ -19,7 +19,9 @@ use crate::sched::{
     Dispatcher, OrderKind, OrderSpec, SchedCtx, ServiceEstimates, WfqCost, WfqCostKind,
 };
 use crate::shard::{FanOutTable, FirstWins};
+use crate::trace::{analyze::DEFAULT_EXEMPLARS, LoserFate, ReasonCode, Stage, TraceReport, Tracer};
 use crate::util::Rng;
+use std::sync::Arc;
 
 /// Cache identity of a request: concrete terms first, the generator's
 /// population rank for term-less sim streams, `None` (uncacheable) for
@@ -190,6 +192,12 @@ pub struct SimOutput {
     /// Completions excluded from latency/placement statistics at the start
     /// of the run (`SimConfig::warmup_requests`).
     pub warmup: usize,
+    /// Per-request lifecycle trace report (`Some` iff
+    /// `SimConfig::trace_capacity` > 0): span chains reassembled from the
+    /// per-core rings, the critical-path decomposition per class, and the
+    /// tail exemplars. `None` (the default) means no tracer was built and
+    /// the run replayed the untraced engine bit for bit.
+    pub trace: Option<TraceReport>,
 }
 
 impl SimOutput {
@@ -262,6 +270,64 @@ impl SimOutput {
         self.per_class
             .iter()
             .find(|c| crate::util::norm_token(&c.name) == key)
+    }
+
+    /// Machine-readable report (`--report-json`): the whole output as one
+    /// JSON object — scheduling labels, conservation counters, latency and
+    /// energy summaries, per-class/per-shard splits, the hedge/cache
+    /// ledgers and the trace rollup. Hand-rolled (no serde); always
+    /// parseable by `python3 -m json.tool`.
+    pub fn to_json(&self) -> String {
+        use crate::metrics::report as rj;
+        let mut w = crate::util::JsonWriter::new();
+        w.begin_obj();
+        w.field_str("engine", "sim");
+        w.field_str("policy", &self.policy);
+        w.field_str("discipline", &self.discipline);
+        w.field_str("order", &self.order);
+        w.field_f64("duration_ms", self.duration_ms);
+        w.field_u64("offered", self.offered() as u64);
+        w.field_u64("completed", self.completed as u64);
+        w.field_u64("shed", self.shed as u64);
+        w.field_u64("cache_hits", self.per_request.iter().filter(|r| r.cached).count() as u64);
+        w.field_u64("warmup", self.warmup as u64);
+        w.field_u64("migrations", self.migrations as u64);
+        w.field_f64("throughput_qps", self.throughput_qps());
+        w.key("latency");
+        rj::histogram_json(&mut w, &self.latency);
+        w.key("energy");
+        rj::energy_json(&mut w, &self.energy);
+        w.key("per_class");
+        w.begin_arr();
+        for cs in &self.per_class {
+            rj::class_stats_json(&mut w, cs);
+        }
+        w.end_arr();
+        w.field_u64("shards", self.shards as u64);
+        w.field_u64("replicas", self.replicas as u64);
+        w.key("per_shard");
+        w.begin_arr();
+        for s in &self.per_shard {
+            rj::shard_stats_json(&mut w, s);
+        }
+        w.end_arr();
+        w.key("hedge");
+        match &self.hedge {
+            Some(h) => rj::hedge_stats_json(&mut w, h),
+            None => w.value_null(),
+        }
+        w.key("cache");
+        match &self.cache {
+            Some(c) => rj::cache_stats_json(&mut w, c),
+            None => w.value_null(),
+        }
+        w.key("trace");
+        match &self.trace {
+            Some(t) => rj::trace_report_json(&mut w, t),
+            None => w.value_null(),
+        }
+        w.end_obj();
+        w.finish()
     }
 }
 
@@ -408,6 +474,23 @@ impl Simulation {
         let order_spec = order_spec_for(cfg.order, &registry, &est);
         let mut dispatcher: Dispatcher<usize> =
             Dispatcher::new(cfg.discipline.build_ordered(cores.len(), &order_spec));
+        // Lifecycle tracer: one lane per core plus the frontend lane.
+        // Behind an Option so capacity-0 runs never construct it — no rng
+        // stream or event ordering is touched either way, which is what
+        // keeps seeded replays bit for bit identical to the untraced run.
+        let tracer: Option<Arc<Tracer>> = (cfg.trace_capacity > 0)
+            .then(|| Arc::new(Tracer::new(cores.len() + 1, cfg.trace_capacity)));
+        if let Some(t) = &tracer {
+            let t = Arc::clone(t);
+            dispatcher.set_dequeue_stamp(Box::new(move |widx, core, kind, now_ms| {
+                t.record(
+                    core.0,
+                    *widx as u64,
+                    now_ms,
+                    Stage::Dequeued { core: core.0 as u16, big: kind == CoreKind::Big },
+                );
+            }));
+        }
         let mut depth_scratch: Vec<usize> = Vec::new();
         let mut prio_scratch: Vec<usize> = Vec::new();
         let mut latency = LatencyHistogram::new();
@@ -476,6 +559,17 @@ impl Simulation {
                 core.gen += 1;
                 let finish = now + demand.work_units / demand.speed_on(kind);
                 events.push(finish, EventKind::Completion { core: core_id, gen: core.gen });
+                if let Some(t) = &tracer {
+                    t.record(
+                        core_id.0,
+                        widx as u64,
+                        now,
+                        Stage::ScoringStart {
+                            core: core_id.0 as u16,
+                            big: kind == CoreKind::Big,
+                        },
+                    );
+                }
                 // Begin stats record (what the search thread writes).
                 let tag = RequestTag::from_seq(rid_seq);
                 rid_seq += 1;
@@ -559,19 +653,51 @@ impl Simulation {
                         arrive_ms: req.arrive_ms,
                         cheap: false,
                     };
+                    if let Some(t) = &tracer {
+                        t.record(
+                            t.frontend_lane(),
+                            widx as u64,
+                            now,
+                            Stage::Arrived { class: req.class.idx() as u16 },
+                        );
+                    }
                     // Lifecycle: admit → cache-probe → queue. A shed request
                     // never touches the queues; an admitted hit completes
                     // inline at the flat probe cost and never touches them
                     // either. With no cache this is `Dispatcher::enqueue`
                     // bit for bit (probe + enqueue_admitted ≡ enqueue).
                     match dispatcher.admit_probe(info, policy.as_mut(), &aff, &mut rng, now) {
-                        AdmissionDecision::Shed { .. } => {
+                        AdmissionDecision::Shed { reason } => {
                             shed += 1;
                             per_class[req.class.idx()].record_shed();
+                            if let Some(t) = &tracer {
+                                t.record(
+                                    t.frontend_lane(),
+                                    widx as u64,
+                                    now,
+                                    Stage::AdmitDecision {
+                                        admitted: false,
+                                        reason: ReasonCode::from_reason(&reason),
+                                    },
+                                );
+                            }
                         }
                         AdmissionDecision::Admit => {
+                            if let Some(t) = &tracer {
+                                t.record(
+                                    t.frontend_lane(),
+                                    widx as u64,
+                                    now,
+                                    Stage::AdmitDecision {
+                                        admitted: true,
+                                        reason: ReasonCode::None,
+                                    },
+                                );
+                            }
+                            let mut probed = false;
                             let hit = match (&cache, cache_key(req)) {
                                 (Some(c), Some(key)) => {
+                                    probed = true;
                                     let hit = c.get(&key, now).is_some();
                                     if let Some(hr) = &hit_rates {
                                         hr.record(req.class, hit);
@@ -580,9 +706,27 @@ impl Simulation {
                                 }
                                 _ => false,
                             };
+                            if let Some(t) = &tracer {
+                                if probed {
+                                    t.record(
+                                        t.frontend_lane(),
+                                        widx as u64,
+                                        now,
+                                        Stage::CacheProbe { hit },
+                                    );
+                                }
+                            }
                             if hit {
                                 events.push(now + HIT_COST_MS, EventKind::CacheHit(widx));
                             } else {
+                                if let Some(t) = &tracer {
+                                    t.record(
+                                        t.frontend_lane(),
+                                        widx as u64,
+                                        now,
+                                        Stage::Enqueued { shard: 0, slot: 0 },
+                                    );
+                                }
                                 dispatcher.enqueue_admitted(
                                     widx,
                                     info,
@@ -606,6 +750,20 @@ impl Simulation {
                     core.gen += 1;
                     let kind = core.kind;
                     let req = &workload.requests[run.widx];
+                    if let Some(t) = &tracer {
+                        t.record(
+                            core_id.0,
+                            run.widx as u64,
+                            now,
+                            Stage::ScoringEnd {
+                                core: core_id.0 as u16,
+                                big: kind == CoreKind::Big,
+                                passes: 1,
+                                docs_skipped: 0,
+                            },
+                        );
+                        t.record(t.frontend_lane(), run.widx as u64, now, Stage::Completed);
+                    }
                     let record = RequestRecord {
                         class: req.class,
                         keywords: req.keywords,
@@ -680,6 +838,7 @@ impl Simulation {
                             &mut events,
                             &mut meters,
                             cfg,
+                            tracer.as_deref(),
                         );
                     }
                     if let Some(sampling) = policy.sampling_ms() {
@@ -697,6 +856,9 @@ impl Simulation {
                     // dispatching core (Little by convention) — it never
                     // entered a queue, sampled a demand, or burned a core.
                     let req = &workload.requests[widx];
+                    if let Some(t) = &tracer {
+                        t.record(t.frontend_lane(), widx as u64, now, Stage::Completed);
+                    }
                     let record = RequestRecord {
                         class: req.class,
                         keywords: req.keywords,
@@ -750,6 +912,9 @@ impl Simulation {
         let cache_stats = cache
             .as_ref()
             .map(|c| build_cache_stats(c, cfg, &registry, &per_request));
+        let class_names: Vec<String> =
+            registry.specs().iter().map(|s| s.name.clone()).collect();
+        let trace = tracer.map(|t| t.report(&class_names, DEFAULT_EXEMPLARS));
         SimOutput {
             latency,
             per_request,
@@ -768,6 +933,7 @@ impl Simulation {
             hedge: None,
             cache: cache_stats,
             warmup: cfg.warmup_requests,
+            trace,
         }
     }
 
@@ -852,6 +1018,14 @@ impl Simulation {
             }
         }
 
+        // Lifecycle tracer: one lane per *global* core plus the frontend
+        // lane. Slot dispatchers stamp `Dequeued` through their own
+        // local→global core map; everything frontend-side (admission,
+        // cache, fan-out, hedging verdicts, gather) records into the
+        // frontend lane.
+        let tracer: Option<Arc<Tracer>> = (cfg.trace_capacity > 0)
+            .then(|| Arc::new(Tracer::new(cores.len() + 1, cfg.trace_capacity)));
+
         // Hedging state (replicated runs only): the straggler policy
         // (per-class P² latency quantile + token-bucket budget), the
         // duplicate ledger mapping a fired (parent, shard) race to its
@@ -903,6 +1077,20 @@ impl Simulation {
                 let cancel = hedging.then(CancelSet::new);
                 if let Some(set) = &cancel {
                     dispatcher.set_cancellation(set.clone(), |w: &usize| *w as u64);
+                }
+                if let Some(t) = &tracer {
+                    let t = Arc::clone(t);
+                    let to_global: Vec<usize> =
+                        plan.cores(slot).iter().map(|c| c.0).collect();
+                    dispatcher.set_dequeue_stamp(Box::new(move |widx, core, kind, now_ms| {
+                        let g = to_global[core.0];
+                        t.record(
+                            g,
+                            *widx as u64,
+                            now_ms,
+                            Stage::Dequeued { core: g as u16, big: kind == CoreKind::Big },
+                        );
+                    }));
                 }
                 ShardRt {
                     aff: AffinityTable::round_robin(local_topo.clone()),
@@ -1022,6 +1210,17 @@ impl Simulation {
                         if let Some(hs) = hedge.as_mut() {
                             hs.late_losers += 1;
                         }
+                        if let Some(t) = &tracer {
+                            t.record(
+                                t.frontend_lane(),
+                                widx as u64,
+                                now,
+                                Stage::TaskLost {
+                                    shard: shard as u16,
+                                    fate: LoserFate::Late,
+                                },
+                            );
+                        }
                         continue;
                     }
                     let req = &workload.requests[widx];
@@ -1054,6 +1253,17 @@ impl Simulation {
                     let kind = cores[g.0].kind;
                     let finish = now + demand.work_units / demand.speed_on(kind);
                     events.push(finish, EventKind::Completion { core: g, gen });
+                    if let Some(t) = &tracer {
+                        t.record(
+                            g.0,
+                            widx as u64,
+                            now,
+                            Stage::ScoringStart {
+                                core: g.0 as u16,
+                                big: kind == CoreKind::Big,
+                            },
+                        );
+                    }
                     if !hedging {
                         fanout.start(widx as u64, shard, now);
                     }
@@ -1082,25 +1292,33 @@ impl Simulation {
                         arrive_ms: req.arrive_ms,
                         cheap: false,
                     };
+                    if let Some(t) = &tracer {
+                        t.record(
+                            t.frontend_lane(),
+                            widx as u64,
+                            now,
+                            Stage::Arrived { class: req.class.idx() as u16 },
+                        );
+                    }
                     // All-or-nothing fan-out admission: probe every
                     // *primary* slot's policy against its own backlog
                     // first; a refusal anywhere sheds the parent before
                     // anything is enqueued anywhere. Replica slots never
                     // gate admission — they only ever see fired hedges.
-                    let mut refused = false;
+                    let mut refused: Option<ReasonCode> = None;
                     for srt in shards.iter_mut().take(s_count) {
-                        if let AdmissionDecision::Shed { .. } = srt.dispatcher.admit_probe(
+                        if let AdmissionDecision::Shed { reason } = srt.dispatcher.admit_probe(
                             info,
                             srt.policy.as_mut(),
                             &srt.aff,
                             &mut srt.rng,
                             now,
                         ) {
-                            refused = true;
+                            refused = Some(ReasonCode::from_reason(&reason));
                             break;
                         }
                     }
-                    if refused {
+                    if let Some(reason) = refused {
                         shed += 1;
                         per_class[req.class.idx()].record_shed();
                         // Per-shard conservation: every shard accounts the
@@ -1108,14 +1326,35 @@ impl Simulation {
                         for st in shard_stats.iter_mut() {
                             st.record_shed(req.class);
                         }
+                        if let Some(t) = &tracer {
+                            t.record(
+                                t.frontend_lane(),
+                                widx as u64,
+                                now,
+                                Stage::AdmitDecision { admitted: false, reason },
+                            );
+                        }
                         continue;
+                    }
+                    if let Some(t) = &tracer {
+                        t.record(
+                            t.frontend_lane(),
+                            widx as u64,
+                            now,
+                            Stage::AdmitDecision {
+                                admitted: true,
+                                reason: ReasonCode::None,
+                            },
+                        );
                     }
                     // Admitted everywhere: probe the cache before fanning
                     // out. A hit completes the parent inline — it never
                     // opens a fan-out entry, enqueues a task, or arms a
                     // hedge timer, so the shards never see it.
+                    let mut probed = false;
                     let hit = match (&cache, cache_key(req)) {
                         (Some(c), Some(key)) => {
+                            probed = true;
                             let hit = c.get(&key, now).is_some();
                             if let Some(hr) = &hit_rates {
                                 hr.record(req.class, hit);
@@ -1124,11 +1363,29 @@ impl Simulation {
                         }
                         _ => false,
                     };
+                    if let Some(t) = &tracer {
+                        if probed {
+                            t.record(
+                                t.frontend_lane(),
+                                widx as u64,
+                                now,
+                                Stage::CacheProbe { hit },
+                            );
+                        }
+                    }
                     if hit {
                         events.push(now + HIT_COST_MS, EventKind::CacheHit(widx));
                     } else {
                         fanout.open(widx as u64, req.class, req.arrive_ms);
-                        for srt in shards.iter_mut().take(s_count) {
+                        for (s, srt) in shards.iter_mut().take(s_count).enumerate() {
+                            if let Some(t) = &tracer {
+                                t.record(
+                                    t.frontend_lane(),
+                                    widx as u64,
+                                    now,
+                                    Stage::Enqueued { shard: s as u16, slot: s as u16 },
+                                );
+                            }
                             srt.dispatcher.enqueue_admitted(
                                 widx,
                                 info,
@@ -1170,6 +1427,19 @@ impl Simulation {
                     let shard = plan.shard_of(slot);
                     let local = local_of_core[g.0];
                     let req = &workload.requests[run.widx];
+                    if let Some(t) = &tracer {
+                        t.record(
+                            g.0,
+                            run.widx as u64,
+                            now,
+                            Stage::ScoringEnd {
+                                core: g.0 as u16,
+                                big: kind == CoreKind::Big,
+                                passes: 1,
+                                docs_skipped: 0,
+                            },
+                        );
+                    }
                     // End stats record for this slot's task.
                     if let Some(tag) = shards[slot].core_rid[local].take() {
                         let tid = shards[slot].aff.thread_on(CoreId(local));
@@ -1204,6 +1474,17 @@ impl Simulation {
                                 if let Some(hp) = &hedge_policy {
                                     hp.observe(req.class, now - req.arrive_ms);
                                 }
+                                if let Some(t) = &tracer {
+                                    let by_hedge = hedged
+                                        .get(&(run.widx, shard))
+                                        .is_some_and(|&d| d == slot);
+                                    t.record(
+                                        t.frontend_lane(),
+                                        run.widx as u64,
+                                        now,
+                                        Stage::TaskWon { shard: shard as u16, by_hedge },
+                                    );
+                                }
                                 if let Some(dup_slot) = hedged.remove(&(run.widx, shard)) {
                                     let hs = hedge.as_mut().expect("hedging implies stats");
                                     let loser_slot = if slot == dup_slot {
@@ -1237,6 +1518,19 @@ impl Simulation {
                                             core.running.take().expect("scanned as running");
                                         core.gen += 1;
                                         hs.cancelled_work_ms += now - dead.started_ms;
+                                        if let Some(t) = &tracer {
+                                            t.record(
+                                                gc.0,
+                                                run.widx as u64,
+                                                now,
+                                                Stage::TaskLost {
+                                                    shard: shard as u16,
+                                                    fate: LoserFate::InflightPreempt {
+                                                        big: core.kind == CoreKind::Big,
+                                                    },
+                                                },
+                                            );
+                                        }
                                         if slot != dup_slot {
                                             hs.cancelled_inflight += 1;
                                         }
@@ -1261,6 +1555,17 @@ impl Simulation {
                                             .expect("hedging registers cancel sets")
                                             .cancel(run.widx as u64);
                                         marks_inserted += 1;
+                                        if let Some(t) = &tracer {
+                                            t.record(
+                                                t.frontend_lane(),
+                                                run.widx as u64,
+                                                now,
+                                                Stage::TaskLost {
+                                                    shard: shard as u16,
+                                                    fate: LoserFate::QueuedDrop,
+                                                },
+                                            );
+                                        }
                                         if slot != dup_slot {
                                             hs.cancelled_queued += 1;
                                         }
@@ -1274,13 +1579,41 @@ impl Simulation {
                                 if let Some(hs) = hedge.as_mut() {
                                     hs.late_losers += 1;
                                 }
+                                if let Some(t) = &tracer {
+                                    t.record(
+                                        t.frontend_lane(),
+                                        run.widx as u64,
+                                        now,
+                                        Stage::TaskLost {
+                                            shard: shard as u16,
+                                            fate: LoserFate::Late,
+                                        },
+                                    );
+                                }
                                 None
                             }
                         }
                     } else {
+                        if let Some(t) = &tracer {
+                            t.record(
+                                t.frontend_lane(),
+                                run.widx as u64,
+                                now,
+                                Stage::TaskWon { shard: shard as u16, by_hedge: false },
+                            );
+                        }
                         fanout.complete(run.widx as u64, shard, now, mark)
                     };
                     if let Some(done) = gathered {
+                        if let Some(t) = &tracer {
+                            t.record(
+                                t.frontend_lane(),
+                                run.widx as u64,
+                                now,
+                                Stage::GatherComplete,
+                            );
+                            t.record(t.frontend_lane(), run.widx as u64, now, Stage::Completed);
+                        }
                         let critical = done.critical_shard();
                         let crit_task = done.task(critical);
                         let record = RequestRecord {
@@ -1372,6 +1705,7 @@ impl Simulation {
                             &mut events,
                             &mut meters,
                             cfg,
+                            tracer.as_deref(),
                         );
                     }
                     if completed + shed < workload.len() {
@@ -1414,6 +1748,26 @@ impl Simulation {
                         let replica = 1 + (widx % (r_count - 1));
                         let dup_slot = replica * s_count + shard;
                         hedged.insert((widx, shard), dup_slot);
+                        if let Some(t) = &tracer {
+                            t.record(
+                                t.frontend_lane(),
+                                widx as u64,
+                                now,
+                                Stage::HedgeFired {
+                                    shard: shard as u16,
+                                    slot: dup_slot as u16,
+                                },
+                            );
+                            t.record(
+                                t.frontend_lane(),
+                                widx as u64,
+                                now,
+                                Stage::Enqueued {
+                                    shard: shard as u16,
+                                    slot: dup_slot as u16,
+                                },
+                            );
+                        }
                         let srt = &mut shards[dup_slot];
                         srt.dispatcher.enqueue_admitted(
                             widx,
@@ -1434,6 +1788,9 @@ impl Simulation {
                     // cost without ever fanning out. Shard stats never see
                     // it (see the `cache_hits` conservation note above).
                     let req = &workload.requests[widx];
+                    if let Some(t) = &tracer {
+                        t.record(t.frontend_lane(), widx as u64, now, Stage::Completed);
+                    }
                     let record = RequestRecord {
                         class: req.class,
                         keywords: req.keywords,
@@ -1509,6 +1866,9 @@ impl Simulation {
         let cache_stats = cache
             .as_ref()
             .map(|c| build_cache_stats(c, cfg, &registry, &per_request));
+        let class_names: Vec<String> =
+            registry.specs().iter().map(|s| s.name.clone()).collect();
+        let trace = tracer.map(|t| t.report(&class_names, DEFAULT_EXEMPLARS));
         SimOutput {
             latency,
             per_request,
@@ -1527,6 +1887,7 @@ impl Simulation {
             hedge,
             cache: cache_stats,
             warmup: cfg.warmup_requests,
+            trace,
         }
     }
 }
@@ -1548,8 +1909,11 @@ fn apply_migration(
     events: &mut EventQueue,
     meters: &mut EnergyMeters,
     cfg: &SimConfig,
+    tracer: Option<&Tracer>,
 ) {
-    apply_shard_migration(big, little, big, little, now, cores, aff, core_rid, events, meters, cfg)
+    apply_shard_migration(
+        big, little, big, little, now, cores, aff, core_rid, events, meters, cfg, tracer,
+    )
 }
 
 /// The migration mechanics, generic over the two id spaces of sharded
@@ -1571,6 +1935,7 @@ fn apply_shard_migration(
     events: &mut EventQueue,
     meters: &mut EnergyMeters,
     cfg: &SimConfig,
+    tracer: Option<&Tracer>,
 ) {
     debug_assert_ne!(global_big, global_little);
     // Integrate energy and progress up to `now` on both cores.
@@ -1591,6 +1956,27 @@ fn apply_shard_migration(
             run.last_progress = now;
         }
     }
+    // A migration splits each moving request's scoring span: end it on
+    // the old core now, restart it on the new core below — the
+    // decomposition then charges each segment to the right core kind.
+    if let Some(t) = tracer {
+        for &cid in &[global_big, global_little] {
+            let core = &cores[cid.0];
+            if let Some(run) = core.running.as_ref() {
+                t.record(
+                    cid.0,
+                    run.widx as u64,
+                    now,
+                    Stage::ScoringEnd {
+                        core: cid.0 as u16,
+                        big: core.kind == CoreKind::Big,
+                        passes: 1,
+                        docs_skipped: 0,
+                    },
+                );
+            }
+        }
+    }
     // Swap the threads in the shard's local affinity table and the
     // requests riding on the global cores.
     aff.swap(local_big, local_little);
@@ -1608,10 +1994,11 @@ fn apply_shard_migration(
     for &cid in &[global_big, global_little] {
         let core = &mut cores[cid.0];
         core.gen += 1;
+        let kind = core.kind;
         if let Some(run) = core.running.as_mut() {
             run.migrated = true;
             run.stall_ms += cfg.service.migration_cost_ms;
-            let finish = now + run.stall_ms + run.work_left / run.demand.speed_on(core.kind);
+            let finish = now + run.stall_ms + run.work_left / run.demand.speed_on(kind);
             events.push(
                 finish,
                 EventKind::Completion {
@@ -1619,6 +2006,17 @@ fn apply_shard_migration(
                     gen: core.gen,
                 },
             );
+            if let Some(t) = tracer {
+                t.record(
+                    cid.0,
+                    run.widx as u64,
+                    now,
+                    Stage::ScoringStart {
+                        core: cid.0 as u16,
+                        big: kind == CoreKind::Big,
+                    },
+                );
+            }
         }
     }
 }

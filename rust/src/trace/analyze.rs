@@ -1,0 +1,773 @@
+//! Post-hoc span-chain assembly and critical-path decomposition.
+//!
+//! Drained [`TraceEvent`]s are grouped by request id into chains, each
+//! chain is validated (whole-chain semantics: a chain that lost events to
+//! ring overflow is discarded entirely, never truncated), and every valid
+//! chain's end-to-end time is decomposed into disjoint stage intervals:
+//! admit / cache / queue-wait / service (split big vs little) /
+//! gather-wait. The classification is *total* — every inter-event
+//! interval lands in exactly one bucket — so a chain's decomposition sums
+//! to its e2e time by construction and the `figures tracing` ≥95%
+//! coverage assertion guards the instrumentation (missing or mis-ordered
+//! stage events), not floating-point luck.
+
+use super::{LoserFate, Stage, TraceEvent};
+
+/// Default tail-exemplar reservoir size (k slowest chains per class).
+pub const DEFAULT_EXEMPLARS: usize = 5;
+
+/// Disjoint stage intervals a request's e2e time decomposes into, ms.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageBreakdown {
+    /// Arrival until the admission ruling (plus any post-ruling,
+    /// pre-cache-probe slack).
+    pub admit_ms: f64,
+    /// Cache-probe path: probe-to-completion for hits, probe-to-enqueue
+    /// slack for misses.
+    pub cache_ms: f64,
+    /// At least one task queued or dispatched-but-not-scoring, and none
+    /// actively scoring.
+    pub queue_ms: f64,
+    /// At least one task actively scoring on a big core.
+    pub service_big_ms: f64,
+    /// Scoring, but only on little cores.
+    pub service_little_ms: f64,
+    /// All of the request's tasks resolved (or none issued) while the
+    /// request itself had not completed — gather/merge/bookkeeping wait.
+    pub gather_ms: f64,
+}
+
+impl StageBreakdown {
+    /// Sum of every bucket, ms.
+    pub fn total_ms(&self) -> f64 {
+        self.admit_ms
+            + self.cache_ms
+            + self.queue_ms
+            + self.service_big_ms
+            + self.service_little_ms
+            + self.gather_ms
+    }
+
+    /// Combined big+little scoring time, ms.
+    pub fn service_ms(&self) -> f64 {
+        self.service_big_ms + self.service_little_ms
+    }
+
+    fn add(&mut self, other: &StageBreakdown) {
+        self.admit_ms += other.admit_ms;
+        self.cache_ms += other.cache_ms;
+        self.queue_ms += other.queue_ms;
+        self.service_big_ms += other.service_big_ms;
+        self.service_little_ms += other.service_little_ms;
+        self.gather_ms += other.gather_ms;
+    }
+
+    fn scaled(&self, inv: f64) -> StageBreakdown {
+        StageBreakdown {
+            admit_ms: self.admit_ms * inv,
+            cache_ms: self.cache_ms * inv,
+            queue_ms: self.queue_ms * inv,
+            service_big_ms: self.service_big_ms * inv,
+            service_little_ms: self.service_little_ms * inv,
+            gather_ms: self.gather_ms * inv,
+        }
+    }
+}
+
+/// One request's reassembled, validated span chain.
+#[derive(Clone, Debug)]
+pub struct TraceChain {
+    /// Request id.
+    pub rid: u64,
+    /// Class registry index (from the `Arrived` event).
+    pub class: u16,
+    /// Chain terminated at `AdmitDecision { admitted: false }`.
+    pub shed: bool,
+    /// Chain contains a `CacheProbe { hit: true }`.
+    pub cached: bool,
+    /// Chain contains at least one `HedgeFired`.
+    pub hedged: bool,
+    /// Arrival timestamp, ms.
+    pub arrived_ms: f64,
+    /// Terminal-event timestamp, ms.
+    pub completed_ms: f64,
+    /// Critical-path decomposition of the e2e interval.
+    pub decomp: StageBreakdown,
+    /// For hedged requests won by a duplicate: largest `TaskWon` −
+    /// `HedgeFired` gap across shards (how much the hedge bought); 0
+    /// otherwise. Overlaps the service/queue buckets — reported
+    /// alongside, not part of the coverage sum.
+    pub hedge_win_margin_ms: f64,
+    /// The chain's events, (t_ms, seq)-ordered.
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceChain {
+    /// End-to-end latency, ms (0 for shed chains that die instantly).
+    pub fn e2e_ms(&self) -> f64 {
+        self.completed_ms - self.arrived_ms
+    }
+
+    /// Fraction of e2e time the decomposition accounts for (1.0 when e2e
+    /// is zero — nothing to explain).
+    pub fn coverage(&self) -> f64 {
+        let e2e = self.e2e_ms();
+        if e2e <= 0.0 {
+            1.0
+        } else {
+            self.decomp.total_ms() / e2e
+        }
+    }
+}
+
+/// Per-class rollup of completed chains plus the tail-exemplar reservoir.
+#[derive(Clone, Debug)]
+pub struct ClassDecomp {
+    /// Class registry index.
+    pub class: u16,
+    /// Class name (empty when the registry has no entry for the index).
+    pub name: String,
+    /// Completed chains rolled up here.
+    pub completed: usize,
+    /// Shed chains for this class.
+    pub shed: usize,
+    /// Completed chains that were cache hits.
+    pub cache_hits: usize,
+    /// Completed chains with at least one hedge fired.
+    pub hedged: usize,
+    /// Median e2e over completed chains, ms.
+    pub e2e_p50_ms: f64,
+    /// p99 e2e over completed chains, ms.
+    pub e2e_p99_ms: f64,
+    /// Mean stage breakdown over all completed chains.
+    pub mean: StageBreakdown,
+    /// Mean stage breakdown over the p99 tail (chains with e2e ≥
+    /// `e2e_p99_ms`).
+    pub tail_mean: StageBreakdown,
+    /// Chains in the p99 tail.
+    pub tail_count: usize,
+    /// Worst decomposition coverage over the class's completed chains.
+    pub min_coverage: f64,
+    /// Request ids of the k slowest completed chains, slowest first —
+    /// look them up in [`TraceReport::chain`] for the full span chain.
+    pub exemplars: Vec<u64>,
+}
+
+/// The analyzed trace both engines attach to their output.
+#[derive(Clone, Debug)]
+pub struct TraceReport {
+    /// Ring capacity per lane the tracer ran with.
+    pub capacity: usize,
+    /// Events recorded over the run (including ones later overwritten).
+    pub recorded: u64,
+    /// Events lost to ring overflow.
+    pub dropped: u64,
+    /// Chains discarded whole because overflow (or a recording gap) left
+    /// them without a valid Arrived→terminal shape.
+    pub discarded_chains: usize,
+    /// Tail-exemplar reservoir size used.
+    pub exemplar_k: usize,
+    /// Every valid chain (completed and shed), rid-ascending.
+    pub chains: Vec<TraceChain>,
+    /// Per-class rollups, class-index-ascending.
+    pub per_class: Vec<ClassDecomp>,
+}
+
+impl TraceReport {
+    /// Valid completed (non-shed) chains.
+    pub fn completed_chains(&self) -> usize {
+        self.chains.iter().filter(|c| !c.shed).count()
+    }
+
+    /// Valid shed chains.
+    pub fn shed_chains(&self) -> usize {
+        self.chains.iter().filter(|c| c.shed).count()
+    }
+
+    /// Look a chain up by request id.
+    pub fn chain(&self, rid: u64) -> Option<&TraceChain> {
+        self.chains
+            .binary_search_by_key(&rid, |c| c.rid)
+            .ok()
+            .map(|i| &self.chains[i])
+    }
+
+    /// Worst decomposition coverage over every completed chain (1.0 when
+    /// there are none).
+    pub fn min_coverage(&self) -> f64 {
+        self.chains
+            .iter()
+            .filter(|c| !c.shed)
+            .map(|c| c.coverage())
+            .fold(1.0, f64::min)
+    }
+
+    /// One-line summary for the text report.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "trace     | {} events recorded, {} dropped | chains: {} completed, {} shed, {} discarded | min coverage {:.1}%",
+            self.recorded,
+            self.dropped,
+            self.completed_chains(),
+            self.shed_chains(),
+            self.discarded_chains,
+            self.min_coverage() * 100.0
+        )
+    }
+}
+
+/// Assemble chains from drained events and roll them up.
+///
+/// `recorded`/`dropped` come from the tracer's counters; `class_names`
+/// maps class indices to names for the rollup; `exemplar_k` sizes the
+/// tail reservoir.
+pub fn analyze(
+    mut events: Vec<TraceEvent>,
+    capacity: usize,
+    recorded: u64,
+    dropped: u64,
+    class_names: &[String],
+    exemplar_k: usize,
+) -> TraceReport {
+    // Group by rid. Events arrive seq-sorted; a stable sort by rid keeps
+    // each group internally seq-ordered.
+    events.sort_by_key(|e| e.rid);
+
+    let mut chains: Vec<TraceChain> = Vec::new();
+    let mut discarded = 0usize;
+    let mut i = 0;
+    while i < events.len() {
+        let rid = events[i].rid;
+        let mut j = i;
+        while j < events.len() && events[j].rid == rid {
+            j += 1;
+        }
+        match assemble_chain(&events[i..j], rid) {
+            Some(chain) => chains.push(chain),
+            None => discarded += 1,
+        }
+        i = j;
+    }
+    chains.sort_by_key(|c| c.rid);
+
+    let per_class = rollup(&chains, class_names, exemplar_k);
+
+    TraceReport {
+        capacity,
+        recorded,
+        dropped,
+        discarded_chains: discarded,
+        exemplar_k,
+        chains,
+        per_class,
+    }
+}
+
+/// Validate and decompose one rid's events. Returns `None` for chains
+/// that must be discarded whole (overflow orphaned their head or tail).
+fn assemble_chain(group: &[TraceEvent], rid: u64) -> Option<TraceChain> {
+    let mut evs: Vec<TraceEvent> = group.to_vec();
+    // Chains interleave across lanes; (t, seq) is the ground-truth order.
+    evs.sort_by(|a, b| {
+        a.t_ms
+            .partial_cmp(&b.t_ms)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.seq.cmp(&b.seq))
+    });
+
+    let first = evs.first()?;
+    let last = evs.last()?;
+    let class = match first.stage {
+        Stage::Arrived { class } => class,
+        // Ring overflow dropped the arrival: the whole chain goes.
+        _ => return None,
+    };
+    let shed = match last.stage {
+        Stage::Completed => false,
+        Stage::AdmitDecision {
+            admitted: false, ..
+        } => true,
+        // No terminal event survived: discard whole.
+        _ => return None,
+    };
+    // Exactly one arrival and one terminal — a second Arrived or an early
+    // Completed means two recordings collided on one rid or the ring
+    // tore the chain; either way it is not a well-formed chain.
+    let arrivals = evs
+        .iter()
+        .filter(|e| matches!(e.stage, Stage::Arrived { .. }))
+        .count();
+    let terminals = evs
+        .iter()
+        .filter(|e| {
+            matches!(
+                e.stage,
+                Stage::Completed | Stage::AdmitDecision { admitted: false, .. }
+            )
+        })
+        .count();
+    if arrivals != 1 || terminals != 1 {
+        return None;
+    }
+
+    let (decomp, hedge_win_margin_ms, cached, hedged) = decompose(&evs);
+
+    Some(TraceChain {
+        rid,
+        class,
+        shed,
+        cached,
+        hedged,
+        arrived_ms: first.t_ms,
+        completed_ms: last.t_ms,
+        decomp,
+        hedge_win_margin_ms,
+        events: evs,
+    })
+}
+
+/// Totally classify every inter-event interval of a (t, seq)-ordered
+/// chain into one stage bucket.
+fn decompose(evs: &[TraceEvent]) -> (StageBreakdown, f64, bool, bool) {
+    let cached = evs
+        .iter()
+        .any(|e| matches!(e.stage, Stage::CacheProbe { hit: true }));
+    let hedged = evs
+        .iter()
+        .any(|e| matches!(e.stage, Stage::HedgeFired { .. }));
+
+    let mut bd = StageBreakdown::default();
+    let mut admit_done = false;
+    let mut probe_done = false;
+    let mut enqueued_any = false;
+    // Task state counters (saturating: a lost transition must not wedge
+    // the classifier into a negative state).
+    let mut queued: u32 = 0;
+    let mut dispatched: u32 = 0;
+    let mut active_big: u32 = 0;
+    let mut active_little: u32 = 0;
+
+    // Hedge-win margin: latest HedgeFired per shard vs its TaskWon.
+    let mut fired: Vec<(u16, f64)> = Vec::new();
+    let mut margin = 0.0f64;
+
+    for w in evs.windows(2) {
+        // Apply the leading event's state transition…
+        match w[0].stage {
+            Stage::AdmitDecision { .. } => admit_done = true,
+            Stage::CacheProbe { .. } => probe_done = true,
+            Stage::Enqueued { .. } => {
+                queued += 1;
+                enqueued_any = true;
+            }
+            Stage::Dequeued { .. } => {
+                queued = queued.saturating_sub(1);
+                dispatched += 1;
+            }
+            Stage::ScoringStart { big, .. } => {
+                dispatched = dispatched.saturating_sub(1);
+                if big {
+                    active_big += 1;
+                } else {
+                    active_little += 1;
+                }
+            }
+            Stage::ScoringEnd { big, .. } => {
+                if big {
+                    active_big = active_big.saturating_sub(1);
+                } else {
+                    active_little = active_little.saturating_sub(1);
+                }
+            }
+            Stage::HedgeFired { shard, .. } => {
+                fired.retain(|(s, _)| *s != shard);
+                fired.push((shard, w[0].t_ms));
+            }
+            Stage::TaskWon { shard, by_hedge } => {
+                if by_hedge {
+                    if let Some(&(_, t)) = fired.iter().find(|(s, _)| *s == shard) {
+                        margin = margin.max(w[0].t_ms - t);
+                    }
+                }
+            }
+            Stage::TaskLost { fate, .. } => match fate {
+                LoserFate::QueuedDrop => queued = queued.saturating_sub(1),
+                LoserFate::InflightPreempt { big } => {
+                    if big {
+                        active_big = active_big.saturating_sub(1);
+                    } else {
+                        active_little = active_little.saturating_sub(1);
+                    }
+                }
+                // A late loser was already dequeued (the stamp fires before
+                // the cancellation check resolves the race), so it releases
+                // the dispatched counter, not the queued one.
+                LoserFate::Late => dispatched = dispatched.saturating_sub(1),
+            },
+            Stage::Arrived { .. } | Stage::GatherComplete | Stage::Completed => {}
+        }
+
+        // …then classify the interval up to the next event. Priority
+        // order makes the classification total: exactly one bucket per
+        // interval.
+        let dt = w[1].t_ms - w[0].t_ms;
+        if dt <= 0.0 {
+            continue;
+        }
+        if !admit_done {
+            bd.admit_ms += dt;
+        } else if cached {
+            // Hit chains skip scoring: everything after admission is the
+            // cache path.
+            bd.cache_ms += dt;
+        } else if !enqueued_any {
+            // Admitted but not yet queued anywhere: probe slack counts as
+            // cache time, pre-probe slack as admission time.
+            if probe_done {
+                bd.cache_ms += dt;
+            } else {
+                bd.admit_ms += dt;
+            }
+        } else if active_big > 0 {
+            bd.service_big_ms += dt;
+        } else if active_little > 0 {
+            bd.service_little_ms += dt;
+        } else if queued + dispatched > 0 {
+            bd.queue_ms += dt;
+        } else {
+            bd.gather_ms += dt;
+        }
+    }
+
+    (bd, margin, cached, hedged)
+}
+
+fn rollup(chains: &[TraceChain], class_names: &[String], exemplar_k: usize) -> Vec<ClassDecomp> {
+    let max_class = chains.iter().map(|c| c.class as usize).max();
+    let Some(max_class) = max_class else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for cls in 0..=max_class {
+        let completed: Vec<&TraceChain> = chains
+            .iter()
+            .filter(|c| c.class as usize == cls && !c.shed)
+            .collect();
+        let shed = chains
+            .iter()
+            .filter(|c| c.class as usize == cls && c.shed)
+            .count();
+        if completed.is_empty() && shed == 0 {
+            continue;
+        }
+        let name = class_names.get(cls).cloned().unwrap_or_default();
+
+        let mut e2e: Vec<f64> = completed.iter().map(|c| c.e2e_ms()).collect();
+        e2e.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let pick = |q: f64| -> f64 {
+            if e2e.is_empty() {
+                0.0
+            } else {
+                let idx = ((e2e.len() as f64 * q).ceil() as usize).saturating_sub(1);
+                e2e[idx.min(e2e.len() - 1)]
+            }
+        };
+        let p50 = pick(0.50);
+        let p99 = pick(0.99);
+
+        let mut mean = StageBreakdown::default();
+        let mut tail_mean = StageBreakdown::default();
+        let mut tail_count = 0usize;
+        let mut min_cov = 1.0f64;
+        for c in &completed {
+            mean.add(&c.decomp);
+            min_cov = min_cov.min(c.coverage());
+            if c.e2e_ms() >= p99 {
+                tail_mean.add(&c.decomp);
+                tail_count += 1;
+            }
+        }
+        if !completed.is_empty() {
+            mean = mean.scaled(1.0 / completed.len() as f64);
+        }
+        if tail_count > 0 {
+            tail_mean = tail_mean.scaled(1.0 / tail_count as f64);
+        }
+
+        // Tail exemplars: the k slowest completed chains, slowest first.
+        let mut by_e2e: Vec<&&TraceChain> = completed.iter().collect();
+        by_e2e.sort_by(|a, b| {
+            b.e2e_ms()
+                .partial_cmp(&a.e2e_ms())
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.rid.cmp(&b.rid))
+        });
+        let exemplars: Vec<u64> = by_e2e.iter().take(exemplar_k).map(|c| c.rid).collect();
+
+        out.push(ClassDecomp {
+            class: cls as u16,
+            name,
+            completed: completed.len(),
+            shed,
+            cache_hits: completed.iter().filter(|c| c.cached).count(),
+            hedged: completed.iter().filter(|c| c.hedged).count(),
+            e2e_p50_ms: p50,
+            e2e_p99_ms: p99,
+            mean,
+            tail_mean,
+            tail_count,
+            min_coverage: min_cov,
+            exemplars,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::ReasonCode;
+
+    fn ev(rid: u64, seq: u64, t_ms: f64, stage: Stage) -> TraceEvent {
+        TraceEvent {
+            rid,
+            seq,
+            lane: 0,
+            t_ms,
+            stage,
+        }
+    }
+
+    fn simple_chain(rid: u64, base_seq: u64, t0: f64) -> Vec<TraceEvent> {
+        vec![
+            ev(rid, base_seq, t0, Stage::Arrived { class: 0 }),
+            ev(
+                rid,
+                base_seq + 1,
+                t0 + 1.0,
+                Stage::AdmitDecision {
+                    admitted: true,
+                    reason: ReasonCode::None,
+                },
+            ),
+            ev(rid, base_seq + 2, t0 + 1.0, Stage::CacheProbe { hit: false }),
+            ev(rid, base_seq + 3, t0 + 2.0, Stage::Enqueued { shard: 0, slot: 0 }),
+            ev(rid, base_seq + 4, t0 + 6.0, Stage::Dequeued { core: 1, big: true }),
+            ev(
+                rid,
+                base_seq + 5,
+                t0 + 6.0,
+                Stage::ScoringStart { core: 1, big: true },
+            ),
+            ev(
+                rid,
+                base_seq + 6,
+                t0 + 16.0,
+                Stage::ScoringEnd {
+                    core: 1,
+                    big: true,
+                    passes: 1,
+                    docs_skipped: 0,
+                },
+            ),
+            ev(rid, base_seq + 7, t0 + 16.0, Stage::TaskWon { shard: 0, by_hedge: false }),
+            ev(rid, base_seq + 8, t0 + 16.5, Stage::GatherComplete),
+            ev(rid, base_seq + 9, t0 + 16.5, Stage::Completed),
+        ]
+    }
+
+    #[test]
+    fn simple_chain_decomposes_totally() {
+        let report = analyze(
+            simple_chain(7, 0, 100.0),
+            1024,
+            10,
+            0,
+            &["interactive".into()],
+            3,
+        );
+        assert_eq!(report.chains.len(), 1);
+        assert_eq!(report.discarded_chains, 0);
+        let c = &report.chains[0];
+        assert_eq!(c.rid, 7);
+        assert!(!c.shed && !c.cached && !c.hedged);
+        assert!((c.e2e_ms() - 16.5).abs() < 1e-12);
+        assert!((c.decomp.admit_ms - 1.0).abs() < 1e-12, "arrival→decision");
+        assert!((c.decomp.cache_ms - 1.0).abs() < 1e-12, "probe→enqueue slack");
+        assert!((c.decomp.queue_ms - 4.0).abs() < 1e-12);
+        assert!((c.decomp.service_big_ms - 10.0).abs() < 1e-12);
+        assert!((c.decomp.gather_ms - 0.5).abs() < 1e-12);
+        assert!((c.coverage() - 1.0).abs() < 1e-9, "total classification");
+        let cd = &report.per_class[0];
+        assert_eq!(cd.completed, 1);
+        assert_eq!(cd.name, "interactive");
+        assert_eq!(cd.exemplars, vec![7]);
+    }
+
+    #[test]
+    fn shed_chain_terminates_at_admit_decision() {
+        let evs = vec![
+            ev(1, 0, 0.0, Stage::Arrived { class: 2 }),
+            ev(
+                1,
+                1,
+                0.5,
+                Stage::AdmitDecision {
+                    admitted: false,
+                    reason: ReasonCode::Deadline,
+                },
+            ),
+        ];
+        let report = analyze(evs, 64, 2, 0, &[], 3);
+        assert_eq!(report.chains.len(), 1);
+        let c = &report.chains[0];
+        assert!(c.shed);
+        assert_eq!(c.class, 2);
+        assert!((c.decomp.admit_ms - 0.5).abs() < 1e-12);
+        assert_eq!(report.per_class.len(), 1);
+        assert_eq!(report.per_class[0].shed, 1);
+        assert_eq!(report.per_class[0].completed, 0);
+    }
+
+    #[test]
+    fn cache_hit_chain_charges_cache_bucket() {
+        let evs = vec![
+            ev(3, 0, 0.0, Stage::Arrived { class: 0 }),
+            ev(
+                3,
+                1,
+                0.25,
+                Stage::AdmitDecision {
+                    admitted: true,
+                    reason: ReasonCode::None,
+                },
+            ),
+            ev(3, 2, 0.25, Stage::CacheProbe { hit: true }),
+            ev(3, 3, 0.45, Stage::Completed),
+        ];
+        let report = analyze(evs, 64, 4, 0, &[], 3);
+        let c = &report.chains[0];
+        assert!(c.cached && !c.shed);
+        assert!((c.decomp.cache_ms - 0.2).abs() < 1e-12);
+        assert!((c.decomp.admit_ms - 0.25).abs() < 1e-12);
+        assert_eq!(c.decomp.service_ms(), 0.0, "hits never score");
+        assert!((c.coverage() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn headless_or_tailless_chains_are_discarded_whole() {
+        let mut evs = simple_chain(1, 0, 0.0);
+        evs.remove(0); // overflow ate the Arrived
+        let mut tailless = simple_chain(2, 100, 0.0);
+        tailless.pop(); // overflow ate the Completed
+        evs.extend(tailless);
+        evs.extend(simple_chain(3, 200, 0.0)); // intact
+        let report = analyze(evs, 64, 30, 19, &[], 3);
+        assert_eq!(report.discarded_chains, 2);
+        assert_eq!(report.chains.len(), 1);
+        assert_eq!(report.chains[0].rid, 3);
+        assert_eq!(report.dropped, 19);
+    }
+
+    #[test]
+    fn hedged_fanout_overlap_prefers_big_service_and_tracks_margin() {
+        // Two shards: shard 0 runs 10ms on little, shard 1 is hedged and
+        // the duplicate wins on big overlapping the little span.
+        let evs = vec![
+            ev(5, 0, 0.0, Stage::Arrived { class: 1 }),
+            ev(
+                5,
+                1,
+                0.0,
+                Stage::AdmitDecision {
+                    admitted: true,
+                    reason: ReasonCode::None,
+                },
+            ),
+            ev(5, 2, 0.0, Stage::CacheProbe { hit: false }),
+            ev(5, 3, 0.0, Stage::Enqueued { shard: 0, slot: 0 }),
+            ev(5, 4, 0.0, Stage::Enqueued { shard: 1, slot: 1 }),
+            ev(5, 5, 1.0, Stage::Dequeued { core: 0, big: false }),
+            ev(5, 6, 1.0, Stage::ScoringStart { core: 0, big: false }),
+            ev(5, 7, 4.0, Stage::HedgeFired { shard: 1, slot: 3 }),
+            ev(5, 8, 4.0, Stage::Enqueued { shard: 1, slot: 3 }),
+            ev(5, 9, 5.0, Stage::Dequeued { core: 2, big: true }),
+            ev(5, 10, 5.0, Stage::ScoringStart { core: 2, big: true }),
+            ev(
+                5,
+                11,
+                8.0,
+                Stage::ScoringEnd {
+                    core: 2,
+                    big: true,
+                    passes: 1,
+                    docs_skipped: 0,
+                },
+            ),
+            ev(5, 12, 8.0, Stage::TaskWon { shard: 1, by_hedge: true }),
+            ev(
+                5,
+                13,
+                8.0,
+                Stage::TaskLost {
+                    shard: 1,
+                    fate: LoserFate::QueuedDrop,
+                },
+            ),
+            ev(
+                5,
+                14,
+                11.0,
+                Stage::ScoringEnd {
+                    core: 0,
+                    big: false,
+                    passes: 1,
+                    docs_skipped: 0,
+                },
+            ),
+            ev(5, 15, 11.0, Stage::TaskWon { shard: 0, by_hedge: false }),
+            ev(5, 16, 11.0, Stage::GatherComplete),
+            ev(5, 17, 11.5, Stage::Completed),
+        ];
+        let report = analyze(evs, 256, 18, 0, &[], 3);
+        let c = &report.chains[0];
+        assert!(c.hedged);
+        // 0–1 queued, 1–5 little only, 5–8 big overlaps (big wins the
+        // bucket), 8–11 little again, 11–11.5 gather.
+        assert!((c.decomp.queue_ms - 1.0).abs() < 1e-12);
+        assert!((c.decomp.service_big_ms - 3.0).abs() < 1e-12);
+        assert!((c.decomp.service_little_ms - 7.0).abs() < 1e-12);
+        assert!((c.decomp.gather_ms - 0.5).abs() < 1e-12);
+        assert!((c.hedge_win_margin_ms - 4.0).abs() < 1e-12);
+        assert!((c.coverage() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exemplars_are_k_slowest_per_class() {
+        let mut evs = Vec::new();
+        let mut seq = 0u64;
+        for rid in 0..6u64 {
+            // e2e grows with rid: 1ms, 2ms, … 6ms.
+            let dur = (rid + 1) as f64;
+            evs.push(ev(rid, seq, 0.0, Stage::Arrived { class: 0 }));
+            evs.push(ev(
+                rid,
+                seq + 1,
+                0.1,
+                Stage::AdmitDecision {
+                    admitted: true,
+                    reason: ReasonCode::None,
+                },
+            ));
+            evs.push(ev(rid, seq + 2, dur, Stage::Completed));
+            seq += 3;
+        }
+        let report = analyze(evs, 64, 18, 0, &[], 2);
+        let cd = &report.per_class[0];
+        assert_eq!(cd.exemplars, vec![5, 4], "two slowest, slowest first");
+        assert_eq!(cd.completed, 6);
+        assert!((cd.e2e_p99_ms - 6.0).abs() < 1e-12);
+        assert!(report.chain(5).is_some());
+        assert!(report.chain(99).is_none());
+    }
+}

@@ -1,0 +1,275 @@
+//! Trace exporters: JSONL (one chain per line, machine-diffable) and
+//! Chrome trace-event JSON (Perfetto/`chrome://tracing`-loadable).
+//!
+//! Format is chosen from the `--trace-out` filename: a path ending in
+//! `.jsonl` gets the line-oriented export, anything else the Chrome
+//! trace. Both are hand-rolled on [`crate::util::JsonWriter`] — no
+//! serde in this environment.
+
+use super::{LoserFate, Stage, TraceChain, TraceEvent, TraceReport};
+use crate::util::JsonWriter;
+
+/// Render `report` for `path`: JSONL when the path ends in `.jsonl`,
+/// Chrome trace-event JSON otherwise.
+pub fn render_for_path(report: &TraceReport, path: &str) -> String {
+    if path.ends_with(".jsonl") {
+        to_jsonl(report)
+    } else {
+        to_chrome_trace(report)
+    }
+}
+
+/// One JSON object per chain, one chain per line: rid, class, flags,
+/// e2e, the stage decomposition, coverage, and the full event list.
+pub fn to_jsonl(report: &TraceReport) -> String {
+    let mut out = String::new();
+    for chain in &report.chains {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.field_u64("rid", chain.rid);
+        w.field_u64("class", chain.class as u64);
+        w.field_bool("shed", chain.shed);
+        w.field_bool("cached", chain.cached);
+        w.field_bool("hedged", chain.hedged);
+        w.field_f64("arrived_ms", chain.arrived_ms);
+        w.field_f64("e2e_ms", chain.e2e_ms());
+        w.key("decomp");
+        w.begin_obj();
+        w.field_f64("admit_ms", chain.decomp.admit_ms);
+        w.field_f64("cache_ms", chain.decomp.cache_ms);
+        w.field_f64("queue_ms", chain.decomp.queue_ms);
+        w.field_f64("service_big_ms", chain.decomp.service_big_ms);
+        w.field_f64("service_little_ms", chain.decomp.service_little_ms);
+        w.field_f64("gather_ms", chain.decomp.gather_ms);
+        w.end_obj();
+        w.field_f64("coverage", chain.coverage());
+        w.field_f64("hedge_win_margin_ms", chain.hedge_win_margin_ms);
+        w.key("events");
+        w.begin_arr();
+        for ev in &chain.events {
+            write_event(&mut w, ev);
+        }
+        w.end_arr();
+        w.end_obj();
+        out.push_str(&w.finish());
+        out.push('\n');
+    }
+    out
+}
+
+fn write_event(w: &mut JsonWriter, ev: &TraceEvent) {
+    w.begin_obj();
+    w.field_f64("t_ms", ev.t_ms);
+    w.field_u64("lane", ev.lane as u64);
+    w.field_str("stage", ev.stage.label());
+    match ev.stage {
+        Stage::Arrived { class } => w.field_u64("class", class as u64),
+        Stage::AdmitDecision { reason, .. } => w.field_str("reason", reason.label()),
+        Stage::CacheProbe { .. } => {}
+        Stage::Enqueued { shard, slot } | Stage::HedgeFired { shard, slot } => {
+            w.field_u64("shard", shard as u64);
+            w.field_u64("slot", slot as u64);
+        }
+        Stage::Dequeued { core, big } | Stage::ScoringStart { core, big } => {
+            w.field_u64("core", core as u64);
+            w.field_bool("big", big);
+        }
+        Stage::ScoringEnd {
+            core,
+            big,
+            passes,
+            docs_skipped,
+        } => {
+            w.field_u64("core", core as u64);
+            w.field_bool("big", big);
+            w.field_u64("passes", passes as u64);
+            w.field_u64("docs_skipped", docs_skipped as u64);
+        }
+        Stage::TaskWon { shard, by_hedge } => {
+            w.field_u64("shard", shard as u64);
+            w.field_bool("by_hedge", by_hedge);
+        }
+        Stage::TaskLost { shard, fate } => {
+            w.field_u64("shard", shard as u64);
+            w.field_str("fate", fate.label());
+        }
+        Stage::GatherComplete | Stage::Completed => {}
+    }
+    w.end_obj();
+}
+
+/// Chrome trace-event JSON (the `{"traceEvents": [...]}` envelope).
+///
+/// Two process tracks:
+/// * pid 0 "cores" — one thread per core; each scoring span is a
+///   complete ("X") slice named `rid <id> (big|little)`, so the track
+///   shows big/little occupancy over time.
+/// * pid 1 "requests" — one thread per request id; each inter-event
+///   interval is a slice named after the leading stage, giving the
+///   request's lifecycle as a lane of its own.
+///
+/// Timestamps are microseconds (the format's unit).
+pub fn to_chrome_trace(report: &TraceReport) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    w.key("traceEvents");
+    w.begin_arr();
+
+    // Process-name metadata so Perfetto labels the two tracks.
+    for (pid, name) in [(0u64, "cores"), (1u64, "requests")] {
+        w.begin_obj();
+        w.field_str("ph", "M");
+        w.field_str("name", "process_name");
+        w.field_u64("pid", pid);
+        w.field_u64("tid", 0);
+        w.key("args");
+        w.begin_obj();
+        w.field_str("name", name);
+        w.end_obj();
+        w.end_obj();
+    }
+
+    for chain in &report.chains {
+        chrome_core_slices(&mut w, chain);
+        chrome_request_slices(&mut w, chain);
+    }
+
+    w.end_arr();
+    w.end_obj();
+    w.finish()
+}
+
+/// Per-core occupancy: pair each `ScoringStart` with the next
+/// `ScoringEnd` on the same core (a request can score on several cores
+/// at once when sharded, so pairing is by core, not by order alone).
+fn chrome_core_slices(w: &mut JsonWriter, chain: &TraceChain) {
+    let mut open: Vec<(u16, bool, f64)> = Vec::new();
+    for ev in &chain.events {
+        match ev.stage {
+            Stage::ScoringStart { core, big } => {
+                open.push((core, big, ev.t_ms));
+            }
+            Stage::ScoringEnd { core, .. } => {
+                if let Some(pos) = open.iter().rposition(|(c, _, _)| *c == core) {
+                    let (core, big, t0) = open.swap_remove(pos);
+                    emit_slice(
+                        w,
+                        0,
+                        core as u64,
+                        t0,
+                        ev.t_ms,
+                        &format!("rid {} ({})", chain.rid, if big { "big" } else { "little" }),
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Per-request lifecycle: one slice per inter-event interval, named
+/// after the leading stage.
+fn chrome_request_slices(w: &mut JsonWriter, chain: &TraceChain) {
+    for pair in chain.events.windows(2) {
+        if pair[1].t_ms <= pair[0].t_ms {
+            continue;
+        }
+        emit_slice(
+            w,
+            1,
+            chain.rid,
+            pair[0].t_ms,
+            pair[1].t_ms,
+            pair[0].stage.label(),
+        );
+    }
+}
+
+fn emit_slice(w: &mut JsonWriter, pid: u64, tid: u64, t0_ms: f64, t1_ms: f64, name: &str) {
+    w.begin_obj();
+    w.field_str("ph", "X");
+    w.field_u64("pid", pid);
+    w.field_u64("tid", tid);
+    w.field_str("name", name);
+    w.field_f64("ts", t0_ms * 1000.0);
+    w.field_f64("dur", (t1_ms - t0_ms) * 1000.0);
+    w.end_obj();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{analyze, ReasonCode};
+
+    fn tiny_report() -> TraceReport {
+        let mk = |rid: u64, seq: u64, t: f64, stage: Stage| TraceEvent {
+            rid,
+            seq,
+            lane: 0,
+            t_ms: t,
+            stage,
+        };
+        let evs = vec![
+            mk(1, 0, 0.0, Stage::Arrived { class: 0 }),
+            mk(
+                1,
+                1,
+                0.5,
+                Stage::AdmitDecision {
+                    admitted: true,
+                    reason: ReasonCode::None,
+                },
+            ),
+            mk(1, 2, 0.5, Stage::CacheProbe { hit: false }),
+            mk(1, 3, 1.0, Stage::Enqueued { shard: 0, slot: 0 }),
+            mk(1, 4, 2.0, Stage::Dequeued { core: 3, big: true }),
+            mk(1, 5, 2.0, Stage::ScoringStart { core: 3, big: true }),
+            mk(
+                1,
+                6,
+                5.0,
+                Stage::ScoringEnd {
+                    core: 3,
+                    big: true,
+                    passes: 2,
+                    docs_skipped: 40,
+                },
+            ),
+            mk(1, 7, 5.0, Stage::Completed),
+        ];
+        analyze(evs, 64, 8, 0, &["interactive".into()], 2)
+    }
+
+    #[test]
+    fn jsonl_emits_one_line_per_chain_with_events() {
+        let s = to_jsonl(&tiny_report());
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 1);
+        assert!(lines[0].starts_with('{') && lines[0].ends_with('}'));
+        assert!(lines[0].contains("\"rid\":1"));
+        assert!(lines[0].contains("\"stage\":\"scoring-end\""));
+        assert!(lines[0].contains("\"docs_skipped\":40"));
+        assert!(lines[0].contains("\"service_big_ms\":3"));
+    }
+
+    #[test]
+    fn chrome_trace_has_core_and_request_tracks() {
+        let s = to_chrome_trace(&tiny_report());
+        assert!(s.starts_with("{\"traceEvents\":["));
+        assert!(s.ends_with("]}"));
+        assert!(s.contains("\"process_name\""));
+        assert!(s.contains("\"name\":\"cores\""));
+        assert!(s.contains("\"name\":\"rid 1 (big)\""));
+        assert!(s.contains("\"name\":\"enqueued\""));
+        // Scoring slice: pid 0 (cores), tid 3, 3ms = 3000µs.
+        assert!(s.contains("\"dur\":3000"));
+    }
+
+    #[test]
+    fn render_for_path_picks_format_by_extension() {
+        let r = tiny_report();
+        assert!(render_for_path(&r, "out.jsonl").contains('\n'));
+        assert!(render_for_path(&r, "out.json").starts_with("{\"traceEvents\""));
+        assert!(render_for_path(&r, "trace").starts_with("{\"traceEvents\""));
+    }
+}

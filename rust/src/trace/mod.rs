@@ -1,0 +1,443 @@
+//! Per-request lifecycle tracing: typed stage events recorded into
+//! fixed-capacity per-lane ring buffers, assembled post-hoc into span
+//! chains with a critical-path decomposition.
+//!
+//! Both engines thread one [`Tracer`] through the full request lifecycle:
+//! the frontend records `Arrived → AdmitDecision → CacheProbe → Enqueued`
+//! (plus `HedgeFired` when a straggler timer re-issues a task), the
+//! scheduling layer stamps `Dequeued` as the dispatcher hands a payload to
+//! a core, and the serving side records `ScoringStart/End`, the
+//! first-wins verdicts (`TaskWon`/`TaskLost`), `GatherComplete` and
+//! `Completed`. A request's events may land in different lanes (each
+//! worker/core records into its own ring; the frontend has a lane of its
+//! own) — chains are reassembled by request id in
+//! [`analyze::analyze`].
+//!
+//! Cost model:
+//! * `trace_capacity = 0` (the default) builds no tracer at all — every
+//!   record site is behind an `Option`, no rng stream or event ordering
+//!   is touched, and seeded runs replay the untraced engine bit for bit.
+//! * With a tracer installed, the record path is allocation-free: rings
+//!   are preallocated at construction and overwrite their oldest entry
+//!   when full (counted in [`Tracer::dropped`]); recording is one atomic
+//!   sequence fetch plus one uncontended per-lane mutex write. Overflow
+//!   can orphan part of a request's chain — the analyzer discards such
+//!   chains *whole* (never truncated mid-chain) and counts them.
+
+pub mod analyze;
+pub mod export;
+
+pub use analyze::{analyze, ClassDecomp, StageBreakdown, TraceChain, TraceReport};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Why admission refused a request — a compact, copyable projection of
+/// [`crate::mapper::ShedReason`] (the full reason carries run-time
+/// numbers; the trace keeps the record path fixed-size).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReasonCode {
+    /// Not shed (the code carried by `admitted: true` decisions).
+    None,
+    /// Projected queueing delay exceeded the admission deadline.
+    Deadline,
+    /// Backlog at or above a fixed cap.
+    QueueFull,
+    /// Policy-specific reason.
+    Other,
+}
+
+impl ReasonCode {
+    /// Project a full shed reason onto its code.
+    pub fn from_reason(reason: &crate::mapper::ShedReason) -> ReasonCode {
+        use crate::mapper::ShedReason;
+        match reason {
+            ShedReason::DeadlineExceeded { .. } => ReasonCode::Deadline,
+            ShedReason::QueueFull { .. } => ReasonCode::QueueFull,
+            ShedReason::Other(_) => ReasonCode::Other,
+        }
+    }
+
+    /// Stable short label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ReasonCode::None => "none",
+            ReasonCode::Deadline => "deadline",
+            ReasonCode::QueueFull => "queue-full",
+            ReasonCode::Other => "other",
+        }
+    }
+}
+
+/// How a losing hedged duplicate died.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoserFate {
+    /// Marked for (or taken by) a drop-at-dequeue cancellation while
+    /// still queued.
+    QueuedDrop,
+    /// Preempted/aborted mid-scoring; `big` is the core kind it was
+    /// running on (so the decomposition can release the right service
+    /// counter).
+    InflightPreempt {
+        /// Loser was running on a big core.
+        big: bool,
+    },
+    /// Lost the race after the parent had already gathered.
+    Late,
+}
+
+impl LoserFate {
+    /// Stable short label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            LoserFate::QueuedDrop => "queued-drop",
+            LoserFate::InflightPreempt { .. } => "inflight-preempt",
+            LoserFate::Late => "late",
+        }
+    }
+}
+
+/// One typed lifecycle stage. All variants are `Copy` and fixed-size —
+/// nothing on the record path allocates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Stage {
+    /// Request arrived at the frontend. Carries its service class so
+    /// chains can be rolled up per class without a side table.
+    Arrived {
+        /// Class registry index.
+        class: u16,
+    },
+    /// Admission ruling (`admitted: false` terminates the chain).
+    AdmitDecision {
+        /// Whether the request entered the system.
+        admitted: bool,
+        /// Why it was refused (`None` when admitted).
+        reason: ReasonCode,
+    },
+    /// Result-cache probe after admission.
+    CacheProbe {
+        /// A hit completes inline and skips every scoring stage.
+        hit: bool,
+    },
+    /// Task entered a dispatch queue (`shard`/`slot` identify which;
+    /// unsharded engines use 0/0, hedged duplicates the replica slot).
+    Enqueued {
+        /// Doc-range shard index.
+        shard: u16,
+        /// Replica slot index (`replica * shards + shard`).
+        slot: u16,
+    },
+    /// The dispatcher handed this task to a core (the `sched`-layer
+    /// stamp — see `Dispatcher::set_dequeue_stamp`).
+    Dequeued {
+        /// Serving core (engine-local index).
+        core: u16,
+        /// Core kind at dispatch.
+        big: bool,
+    },
+    /// Scoring began on a core (re-emitted after a mid-request
+    /// migration, paired with a preceding `ScoringEnd` on the old core).
+    ScoringStart {
+        /// Serving core.
+        core: u16,
+        /// Core kind.
+        big: bool,
+    },
+    /// Scoring finished (or was split by a migration) on a core.
+    ScoringEnd {
+        /// Serving core.
+        core: u16,
+        /// Core kind the span ran on (mirrors the matching start).
+        big: bool,
+        /// Scoring passes executed in this span (0 in the simulator,
+        /// which models time rather than executing queries).
+        passes: u32,
+        /// Documents skipped by block-max pruning in this span.
+        docs_skipped: u32,
+    },
+    /// A straggler timer re-issued this shard's task to a replica slot.
+    HedgeFired {
+        /// Shard being hedged.
+        shard: u16,
+        /// Replica slot the duplicate was enqueued on.
+        slot: u16,
+    },
+    /// First completion won the shard's slot in the fan-out gather.
+    TaskWon {
+        /// Shard whose slot was filled.
+        shard: u16,
+        /// The winning copy was the hedged duplicate.
+        by_hedge: bool,
+    },
+    /// A losing duplicate was cancelled.
+    TaskLost {
+        /// Shard the loser was serving.
+        shard: u16,
+        /// How it died.
+        fate: LoserFate,
+    },
+    /// All shard slots filled; the k-way merge ran.
+    GatherComplete,
+    /// Request completed (terminal stage of every non-shed chain).
+    Completed,
+}
+
+impl Stage {
+    /// Stable short label (JSONL / Chrome-trace event names).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Stage::Arrived { .. } => "arrived",
+            Stage::AdmitDecision { admitted: true, .. } => "admit",
+            Stage::AdmitDecision { admitted: false, .. } => "shed",
+            Stage::CacheProbe { hit: true } => "cache-hit",
+            Stage::CacheProbe { hit: false } => "cache-miss",
+            Stage::Enqueued { .. } => "enqueued",
+            Stage::Dequeued { .. } => "dequeued",
+            Stage::ScoringStart { .. } => "scoring-start",
+            Stage::ScoringEnd { .. } => "scoring-end",
+            Stage::HedgeFired { .. } => "hedge-fired",
+            Stage::TaskWon { .. } => "task-won",
+            Stage::TaskLost { .. } => "task-lost",
+            Stage::GatherComplete => "gather",
+            Stage::Completed => "completed",
+        }
+    }
+}
+
+/// One recorded event: which request, when, and what happened. `seq` is a
+/// global record order (tie-breaker for same-timestamp events); `lane` is
+/// the ring it was recorded into.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Request id (workload index in the simulator, request id in the
+    /// live server) — the chain key.
+    pub rid: u64,
+    /// Global record sequence number.
+    pub seq: u64,
+    /// Ring lane the event was recorded into.
+    pub lane: u32,
+    /// Engine clock, ms.
+    pub t_ms: f64,
+    /// What happened.
+    pub stage: Stage,
+}
+
+impl TraceEvent {
+    /// Placeholder filling preallocated ring slots (overwritten before
+    /// ever being read — drained rings only yield live entries).
+    const IDLE: TraceEvent = TraceEvent {
+        rid: u64::MAX,
+        seq: 0,
+        lane: 0,
+        t_ms: 0.0,
+        stage: Stage::Completed,
+    };
+}
+
+/// Fixed-capacity drop-oldest ring. Preallocated at construction so
+/// `push` never touches the allocator.
+struct Ring {
+    buf: Vec<TraceEvent>,
+    head: usize,
+    len: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(capacity: usize) -> Ring {
+        Ring {
+            buf: vec![TraceEvent::IDLE; capacity],
+            head: 0,
+            len: 0,
+            dropped: 0,
+        }
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        let cap = self.buf.len();
+        if self.len < cap {
+            let i = (self.head + self.len) % cap;
+            self.buf[i] = ev;
+            self.len += 1;
+        } else {
+            // Full: overwrite the oldest entry (drop-oldest).
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % cap;
+            self.dropped += 1;
+        }
+    }
+
+    fn drain_into(&mut self, out: &mut Vec<TraceEvent>) {
+        let cap = self.buf.len();
+        for k in 0..self.len {
+            out.push(self.buf[(self.head + k) % cap]);
+        }
+        self.head = 0;
+        self.len = 0;
+    }
+}
+
+/// The recorder: one drop-oldest ring per lane (engines use one lane per
+/// core/worker plus a dedicated frontend lane — the last index), a global
+/// sequence counter, and nothing else. Shared across threads behind an
+/// `Arc` in the live server; the simulator owns one directly.
+pub struct Tracer {
+    lanes: Vec<Mutex<Ring>>,
+    capacity: usize,
+    seq: AtomicU64,
+}
+
+impl Tracer {
+    /// New tracer with `lanes` rings of `capacity` events each. Both must
+    /// be nonzero — a zero capacity means "tracing off", which callers
+    /// express by not constructing a tracer at all.
+    pub fn new(lanes: usize, capacity: usize) -> Tracer {
+        assert!(lanes > 0, "a tracer needs at least one lane");
+        assert!(capacity > 0, "trace_capacity = 0 means: build no tracer");
+        Tracer {
+            lanes: (0..lanes).map(|_| Mutex::new(Ring::new(capacity))).collect(),
+            capacity,
+            seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Ring capacity per lane.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Number of lanes.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The frontend lane index (by convention the last lane).
+    pub fn frontend_lane(&self) -> usize {
+        self.lanes.len() - 1
+    }
+
+    /// Record one event. Allocation-free: one relaxed atomic increment,
+    /// one per-lane lock, one slot write. Out-of-range lanes clamp to the
+    /// frontend lane rather than panicking mid-run.
+    pub fn record(&self, lane: usize, rid: u64, t_ms: f64, stage: Stage) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let lane = lane.min(self.lanes.len() - 1);
+        let ev = TraceEvent {
+            rid,
+            seq,
+            lane: lane as u32,
+            t_ms,
+            stage,
+        };
+        self.lanes[lane]
+            .lock()
+            .expect("trace lane poisoned")
+            .push(ev);
+    }
+
+    /// Events recorded so far (including any since overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Events lost to ring overflow so far, summed over lanes.
+    pub fn dropped(&self) -> u64 {
+        self.lanes
+            .iter()
+            .map(|l| l.lock().expect("trace lane poisoned").dropped)
+            .sum()
+    }
+
+    /// Drain every lane (post-hoc — the run is over), returning the
+    /// surviving events sorted by record sequence.
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        for lane in &self.lanes {
+            lane.lock().expect("trace lane poisoned").drain_into(&mut out);
+        }
+        out.sort_unstable_by_key(|e| e.seq);
+        out
+    }
+
+    /// Drain and analyze in one step: the [`TraceReport`] both engines
+    /// attach to their output.
+    pub fn report(&self, class_names: &[String], exemplar_k: usize) -> TraceReport {
+        let recorded = self.recorded();
+        let dropped = self.dropped();
+        analyze::analyze(
+            self.drain(),
+            self.capacity,
+            recorded,
+            dropped,
+            class_names,
+            exemplar_k,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut r = Ring::new(4);
+        for i in 0..6u64 {
+            r.push(TraceEvent {
+                rid: i,
+                seq: i,
+                lane: 0,
+                t_ms: i as f64,
+                stage: Stage::Completed,
+            });
+        }
+        assert_eq!(r.dropped, 2);
+        let mut out = Vec::new();
+        r.drain_into(&mut out);
+        let rids: Vec<u64> = out.iter().map(|e| e.rid).collect();
+        assert_eq!(rids, vec![2, 3, 4, 5], "oldest two overwritten");
+        // Drained rings are empty and reusable.
+        let mut again = Vec::new();
+        r.drain_into(&mut again);
+        assert!(again.is_empty());
+    }
+
+    #[test]
+    fn tracer_orders_events_by_global_seq_across_lanes() {
+        let t = Tracer::new(3, 8);
+        t.record(0, 1, 0.0, Stage::Arrived { class: 0 });
+        t.record(2, 1, 1.0, Stage::Enqueued { shard: 0, slot: 0 });
+        t.record(1, 1, 2.0, Stage::Completed);
+        assert_eq!(t.recorded(), 3);
+        assert_eq!(t.dropped(), 0);
+        let evs = t.drain();
+        assert_eq!(evs.len(), 3);
+        assert!(evs.windows(2).all(|w| w[0].seq < w[1].seq));
+        assert_eq!(evs[0].lane, 0);
+        assert_eq!(evs[1].lane, 2);
+        assert_eq!(t.frontend_lane(), 2);
+    }
+
+    #[test]
+    fn out_of_range_lane_clamps_to_frontend() {
+        let t = Tracer::new(2, 4);
+        t.record(99, 7, 0.0, Stage::Completed);
+        let evs = t.drain();
+        assert_eq!(evs[0].lane, 1);
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(Stage::Arrived { class: 0 }.label(), "arrived");
+        assert_eq!(
+            Stage::AdmitDecision {
+                admitted: false,
+                reason: ReasonCode::Deadline
+            }
+            .label(),
+            "shed"
+        );
+        assert_eq!(ReasonCode::QueueFull.label(), "queue-full");
+        assert_eq!(LoserFate::InflightPreempt { big: true }.label(), "inflight-preempt");
+    }
+}

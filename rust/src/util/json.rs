@@ -1,0 +1,221 @@
+//! A tiny hand-rolled JSON writer (the offline environment has no serde):
+//! comma placement is tracked per nesting level, strings are escaped per
+//! RFC 8259, and non-finite floats serialise as `null` so the output is
+//! always parseable by `python3 -m json.tool`. Used by `--report-json`,
+//! the trace exporters and (by convention, though it predates this
+//! module) `benches/hotpath.rs`.
+
+/// Streaming JSON builder. Call `key` before each object member's value;
+/// bare `value_*` calls append array elements. Nesting is tracked so the
+/// writer inserts commas — the caller never does.
+#[derive(Debug, Default)]
+pub struct JsonWriter {
+    out: String,
+    /// One entry per open container: `true` once a member/element has
+    /// been written at that level (so the next one needs a comma).
+    stack: Vec<bool>,
+    /// A `key` was just written — the next value must not emit a comma.
+    pending_key: bool,
+}
+
+impl JsonWriter {
+    /// Fresh writer.
+    pub fn new() -> JsonWriter {
+        JsonWriter::default()
+    }
+
+    fn before_value(&mut self) {
+        if self.pending_key {
+            self.pending_key = false;
+            return;
+        }
+        if let Some(used) = self.stack.last_mut() {
+            if *used {
+                self.out.push(',');
+            }
+            *used = true;
+        }
+    }
+
+    /// Open an object (`{`).
+    pub fn begin_obj(&mut self) {
+        self.before_value();
+        self.out.push('{');
+        self.stack.push(false);
+    }
+
+    /// Close the innermost object (`}`).
+    pub fn end_obj(&mut self) {
+        self.stack.pop();
+        self.out.push('}');
+    }
+
+    /// Open an array (`[`).
+    pub fn begin_arr(&mut self) {
+        self.before_value();
+        self.out.push('[');
+        self.stack.push(false);
+    }
+
+    /// Close the innermost array (`]`).
+    pub fn end_arr(&mut self) {
+        self.stack.pop();
+        self.out.push(']');
+    }
+
+    /// Write an object member key; the next value call supplies its value.
+    pub fn key(&mut self, k: &str) {
+        if let Some(used) = self.stack.last_mut() {
+            if *used {
+                self.out.push(',');
+            }
+            *used = true;
+        }
+        self.out.push('"');
+        escape_into(&mut self.out, k);
+        self.out.push_str("\":");
+        self.pending_key = true;
+    }
+
+    /// String value.
+    pub fn value_str(&mut self, s: &str) {
+        self.before_value();
+        self.out.push('"');
+        escape_into(&mut self.out, s);
+        self.out.push('"');
+    }
+
+    /// Float value; NaN/±inf serialise as `null` (JSON has no non-finite
+    /// numbers).
+    pub fn value_f64(&mut self, v: f64) {
+        self.before_value();
+        if v.is_finite() {
+            // Rust's shortest round-trip Display is valid JSON for every
+            // finite f64 (digits, optional '.', optional 'e' exponent).
+            self.out.push_str(&format!("{v}"));
+        } else {
+            self.out.push_str("null");
+        }
+    }
+
+    /// Unsigned integer value.
+    pub fn value_u64(&mut self, v: u64) {
+        self.before_value();
+        self.out.push_str(&v.to_string());
+    }
+
+    /// Boolean value.
+    pub fn value_bool(&mut self, v: bool) {
+        self.before_value();
+        self.out.push_str(if v { "true" } else { "false" });
+    }
+
+    /// Literal `null`.
+    pub fn value_null(&mut self) {
+        self.before_value();
+        self.out.push_str("null");
+    }
+
+    /// `"k": "v"` member.
+    pub fn field_str(&mut self, k: &str, v: &str) {
+        self.key(k);
+        self.value_str(v);
+    }
+
+    /// `"k": 1.5` member.
+    pub fn field_f64(&mut self, k: &str, v: f64) {
+        self.key(k);
+        self.value_f64(v);
+    }
+
+    /// `"k": 7` member.
+    pub fn field_u64(&mut self, k: &str, v: u64) {
+        self.key(k);
+        self.value_u64(v);
+    }
+
+    /// `"k": true` member.
+    pub fn field_bool(&mut self, k: &str, v: bool) {
+        self.key(k);
+        self.value_bool(v);
+    }
+
+    /// Consume the writer, returning the JSON text.
+    pub fn finish(self) -> String {
+        debug_assert!(self.stack.is_empty(), "unclosed JSON container");
+        self.out
+    }
+}
+
+/// Escape `s` into `out` per RFC 8259 (quotes, backslash, control chars).
+pub fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nested_objects_and_arrays_place_commas() {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.field_str("name", "run");
+        w.field_u64("n", 3);
+        w.key("xs");
+        w.begin_arr();
+        w.value_f64(1.5);
+        w.value_u64(2);
+        w.value_null();
+        w.end_arr();
+        w.key("inner");
+        w.begin_obj();
+        w.field_bool("ok", true);
+        w.end_obj();
+        w.end_obj();
+        assert_eq!(
+            w.finish(),
+            r#"{"name":"run","n":3,"xs":[1.5,2,null],"inner":{"ok":true}}"#
+        );
+    }
+
+    #[test]
+    fn strings_escape_and_nonfinite_floats_null() {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.field_str("s", "a\"b\\c\nd\u{1}");
+        w.field_f64("nan", f64::NAN);
+        w.field_f64("inf", f64::INFINITY);
+        w.field_f64("big", 1e300);
+        w.end_obj();
+        let s = w.finish();
+        assert_eq!(
+            s,
+            "{\"s\":\"a\\\"b\\\\c\\nd\\u0001\",\"nan\":null,\"inf\":null,\"big\":1e300}"
+        );
+    }
+
+    #[test]
+    fn empty_containers_render() {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("a");
+        w.begin_arr();
+        w.end_arr();
+        w.key("b");
+        w.begin_obj();
+        w.end_obj();
+        w.end_obj();
+        assert_eq!(w.finish(), r#"{"a":[],"b":{}}"#);
+    }
+}

@@ -1,11 +1,14 @@
 //! Utilities built from scratch for the offline environment: a seedable PRNG
 //! with the samplers the simulator needs, a tiny property-testing framework,
-//! and table/CSV formatting for the experiment harness.
+//! a hand-rolled JSON writer, and table/CSV formatting for the experiment
+//! harness.
 
 pub mod fmt;
+pub mod json;
 pub mod prop;
 pub mod rng;
 
+pub use json::JsonWriter;
 pub use rng::Rng;
 
 /// Normalise a user-supplied selector token (CLI flag value, TOML string):

@@ -5,8 +5,9 @@
 //! counter) warms a reusable [`QueryScratch`] + backend over a query set,
 //! then asserts the warmed path performs **zero** heap allocations per
 //! query: union and WAND traversals, execution under an (uncancelled)
-//! cancel token, an actually-cancelled abort, and whole-batch scoring via
-//! `search_batch`.
+//! cancel token, an actually-cancelled abort, whole-batch scoring via
+//! `search_batch`, and — tracing enabled — the lifecycle tracer's
+//! `record` path stamping every stage into its preallocated rings.
 //!
 //! This is the enforcement side of the arena/scratch contract: all
 //! per-query working state lives in the caller-owned scratch, the arena
@@ -22,6 +23,7 @@ use hurryup::hedge::CancelToken;
 use hurryup::search::{
     Bm25Params, Index, Query, QueryScratch, RustScorer, SearchEngine, Traversal,
 };
+use hurryup::trace::{ReasonCode, Stage, Tracer};
 
 /// System allocator with a global allocation counter (frees not counted:
 /// the assertion is "no new memory", not "no churn" — though on this path
@@ -84,6 +86,11 @@ fn steady_state_query_path_allocates_nothing() {
     cancelled.cancel();
     let mut scorer = RustScorer::new(Bm25Params::default());
     let mut scratch = QueryScratch::new();
+    // Lifecycle tracer: rings are preallocated at construction, so the
+    // record path must be stamp-only. Capacity is far smaller than the
+    // events the measured loop stamps — overwrite (drop-oldest) is the
+    // steady state being certified, exactly like a long serving run.
+    let tracer = Tracer::new(3, 16);
 
     // ---- warm-up: two full passes of every scenario grow all scratch,
     // backend and hit capacities to their steady-state sizes ----
@@ -116,7 +123,28 @@ fn steady_state_query_path_allocates_nothing() {
     // ---- measure: the warmed path must not touch the allocator ----
     let before = allocs();
     let mut total_hits = 0usize;
+    let mut rid = 0u64;
     for q in &queries {
+        // The per-request stamp set a traced serving worker emits.
+        let t = rid as f64;
+        tracer.record(2, rid, t, Stage::Arrived { class: 0 });
+        tracer.record(
+            2,
+            rid,
+            t,
+            Stage::AdmitDecision { admitted: true, reason: ReasonCode::None },
+        );
+        tracer.record(2, rid, t, Stage::Enqueued { shard: 0, slot: 0 });
+        tracer.record(0, rid, t + 1.0, Stage::Dequeued { core: 0, big: true });
+        tracer.record(0, rid, t + 1.0, Stage::ScoringStart { core: 0, big: true });
+        tracer.record(
+            0,
+            rid,
+            t + 2.0,
+            Stage::ScoringEnd { core: 0, big: true, passes: 1, docs_skipped: 0 },
+        );
+        tracer.record(2, rid, t + 2.0, Stage::Completed);
+        rid += 1;
         let stats = union
             .search_scratch(q, &mut scorer, None, &mut scratch)
             .unwrap()
@@ -149,6 +177,10 @@ fn steady_state_query_path_allocates_nothing() {
     assert!(total_hits > 0, "queries must actually match");
     assert_eq!(
         delta, 0,
-        "steady-state query path allocated {delta} times (union+wand+cancel+batch over 16 queries)"
+        "steady-state query path allocated {delta} times \
+         (union+wand+cancel+batch+trace over 16 queries)"
     );
+    // The tracer really ran through the measured section — and wrapped.
+    assert_eq!(tracer.recorded(), 7 * rid, "every stamp landed");
+    assert!(tracer.dropped() > 0, "16-slot rings wrapped: overwrite path hit");
 }

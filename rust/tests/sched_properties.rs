@@ -13,7 +13,10 @@
 //! reproduces the pre-sharding (PR 4) seeded output exactly, while sharded
 //! runs conserve requests per shard AND end to end (all-or-nothing
 //! fan-out admission; every parent completes exactly once, after all S of
-//! its shard tasks).
+//! its shard tasks); default cache knobs reproduce the pre-cache (PR 7)
+//! output exactly; and `trace_capacity = 0` (the default) reproduces the
+//! pre-trace (PR 9) output exactly, while an ENABLED tracer replays the
+//! untraced output bit for bit — observation is free of side effects.
 
 use hurryup::config::{KeywordMix, SimConfig};
 use hurryup::loadgen::{ClassId, ClassSpec};
@@ -1015,4 +1018,74 @@ fn prop_cached_runs_conserve_and_populate_exactly_once() {
             }
         }
     });
+}
+
+/// The tracing anchor, part 1: `trace_capacity = 0` — the default, set
+/// EXPLICITLY — constructs no tracer and replays the pre-trace (PR 9)
+/// seeded output bit for bit (same config/seed as the anchor chain
+/// above, extending it back to the pre-`sched` simulator).
+#[test]
+fn zero_trace_capacity_replays_pr9_seeded_output() {
+    let mk = || {
+        SimConfig::paper_default(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        })
+        .with_qps(30.0)
+        .with_requests(3_000)
+        .with_seed(11)
+    };
+    let default_run = Simulation::new(mk()).run();
+    let explicit = Simulation::new(mk().with_trace_capacity(0)).run();
+    assert!(default_run.trace.is_none(), "tracing is off by default");
+    assert!(explicit.trace.is_none(), "capacity 0 builds no tracer");
+    assert_eq!(default_run.per_request.len(), explicit.per_request.len());
+    for (x, y) in default_run.per_request.iter().zip(&explicit.per_request) {
+        assert_eq!(x.arrived_ms, y.arrived_ms);
+        assert_eq!(x.started_ms, y.started_ms);
+        assert_eq!(x.completed_ms, y.completed_ms);
+        assert_eq!(x.first_kind, y.first_kind);
+        assert_eq!(x.final_kind, y.final_kind);
+        assert_eq!(x.migrated, y.migrated);
+    }
+    assert_eq!(default_run.migrations, explicit.migrations);
+    assert_eq!(default_run.duration_ms, explicit.duration_ms);
+    assert!((default_run.energy.total_j() - explicit.energy.total_j()).abs() < 1e-12);
+}
+
+/// The tracing anchor, part 2: turning the tracer ON must be free of
+/// behavioural side effects — recording consumes no randomness and
+/// perturbs no dispatch decision, so a traced run replays the untraced
+/// seeded output bit for bit while ALSO carrying a full trace report
+/// (one chain per request, total decomposition coverage).
+#[test]
+fn enabled_tracer_replays_untraced_seeded_output_bit_for_bit() {
+    let mk = || {
+        SimConfig::paper_default(PolicyKind::HurryUp {
+            sampling_ms: 25.0,
+            threshold_ms: 50.0,
+        })
+        .with_qps(30.0)
+        .with_requests(3_000)
+        .with_seed(11)
+    };
+    let untraced = Simulation::new(mk()).run();
+    let traced = Simulation::new(mk().with_trace_capacity(1 << 15)).run();
+    assert_eq!(untraced.per_request.len(), traced.per_request.len());
+    for (x, y) in untraced.per_request.iter().zip(&traced.per_request) {
+        assert_eq!(x.arrived_ms, y.arrived_ms);
+        assert_eq!(x.started_ms, y.started_ms);
+        assert_eq!(x.completed_ms, y.completed_ms);
+        assert_eq!(x.first_kind, y.first_kind);
+        assert_eq!(x.final_kind, y.final_kind);
+        assert_eq!(x.migrated, y.migrated);
+    }
+    assert_eq!(untraced.migrations, traced.migrations);
+    assert_eq!(untraced.duration_ms, traced.duration_ms);
+    assert!((untraced.energy.total_j() - traced.energy.total_j()).abs() < 1e-12);
+    let tr = traced.trace.as_ref().expect("traced run carries a report");
+    assert_eq!(tr.dropped, 0, "2^15 slots never drop on 3k requests");
+    assert_eq!(tr.discarded_chains, 0);
+    assert_eq!(tr.completed_chains(), traced.completed);
+    assert!(tr.min_coverage() >= 0.95, "decomposition explains the e2e time");
 }

@@ -1,0 +1,231 @@
+//! Span-chain conservation properties, end to end through the simulator:
+//! every completed request yields exactly ONE well-ordered chain (Arrived
+//! first, Completed last, task transitions never going negative), shed
+//! requests terminate at their refusing `AdmitDecision`, cache hits skip
+//! every scoring stage, and ring overflow loses whole chains — a
+//! surviving chain is never a truncated one.
+
+use hurryup::config::{KeywordMix, SimConfig};
+use hurryup::loadgen::{ClassSpec, Popularity};
+use hurryup::mapper::PolicyKind;
+use hurryup::sim::Simulation;
+use hurryup::trace::{Stage, TraceChain};
+
+fn hurry_up() -> PolicyKind {
+    PolicyKind::HurryUp {
+        sampling_ms: 25.0,
+        threshold_ms: 50.0,
+    }
+}
+
+fn base(requests: usize) -> SimConfig {
+    SimConfig::paper_default(hurry_up())
+        .with_qps(25.0)
+        .with_requests(requests)
+        .with_seed(0x7ACE)
+}
+
+/// Walk one chain's events asserting well-orderedness: the terminal shape
+/// the assembler guarantees plus the task-lifecycle transitions no valid
+/// execution can violate (a dequeue without an enqueue, a scoring end
+/// without a start, …).
+fn assert_well_ordered(c: &TraceChain) {
+    let evs = &c.events;
+    assert!(
+        matches!(evs.first().map(|e| &e.stage), Some(Stage::Arrived { .. })),
+        "rid {}: chain must open with Arrived",
+        c.rid
+    );
+    if c.shed {
+        assert!(
+            matches!(
+                evs.last().map(|e| &e.stage),
+                Some(Stage::AdmitDecision { admitted: false, .. })
+            ),
+            "rid {}: shed chain must close at the refusing AdmitDecision",
+            c.rid
+        );
+    } else {
+        assert!(
+            matches!(evs.last().map(|e| &e.stage), Some(Stage::Completed)),
+            "rid {}: completed chain must close with Completed",
+            c.rid
+        );
+    }
+    // Timestamps are non-decreasing in chain order.
+    for w in evs.windows(2) {
+        assert!(
+            w[0].t_ms <= w[1].t_ms,
+            "rid {}: chain order must follow time",
+            c.rid
+        );
+    }
+    // Task lifecycle: counters may never go negative at any prefix.
+    let (mut queued, mut dispatched, mut active) = (0i64, 0i64, 0i64);
+    for (i, e) in evs.iter().enumerate() {
+        match e.stage {
+            Stage::Arrived { .. } => assert_eq!(i, 0, "rid {}: one arrival, first", c.rid),
+            Stage::Completed => {
+                assert_eq!(i, evs.len() - 1, "rid {}: Completed must be last", c.rid)
+            }
+            Stage::Enqueued { .. } => queued += 1,
+            Stage::Dequeued { .. } => {
+                queued -= 1;
+                dispatched += 1;
+            }
+            Stage::ScoringStart { .. } => {
+                dispatched -= 1;
+                active += 1;
+            }
+            Stage::ScoringEnd { .. } => active -= 1,
+            _ => {}
+        }
+        assert!(
+            queued >= 0 && dispatched >= 0 && active >= 0,
+            "rid {}: negative task state after event {i} ({:?})",
+            c.rid,
+            e.stage
+        );
+    }
+    assert_eq!(queued, 0, "rid {}: every enqueue resolved", c.rid);
+    assert_eq!(dispatched, 0, "rid {}: every dequeue started scoring", c.rid);
+    assert_eq!(active, 0, "rid {}: every scoring span closed", c.rid);
+}
+
+/// Every completed request yields exactly one well-ordered chain, in both
+/// the unsharded engine and a scatter-gather fan-out.
+#[test]
+fn every_completed_request_yields_one_well_ordered_chain() {
+    for shards in [1usize, 2] {
+        let n = 1_500;
+        let out = Simulation::new(
+            base(n).with_shards(shards).with_trace_capacity(n * 8),
+        )
+        .run();
+        assert_eq!(out.completed, n, "S={shards}");
+        let tr = out.trace.as_ref().expect("tracing on");
+        assert_eq!(tr.dropped, 0, "S={shards}: ring sized to never drop");
+        assert_eq!(tr.discarded_chains, 0, "S={shards}");
+        assert_eq!(tr.completed_chains(), n, "S={shards}: one chain each");
+        // rids are unique and cover the workload exactly once.
+        for w in tr.chains.windows(2) {
+            assert!(w[0].rid < w[1].rid, "chains are rid-unique and sorted");
+        }
+        for c in &tr.chains {
+            assert_well_ordered(c);
+            // A fan-out issues exactly one task per shard.
+            let enq = c
+                .events
+                .iter()
+                .filter(|e| matches!(e.stage, Stage::Enqueued { .. }))
+                .count();
+            assert_eq!(enq, shards, "rid {}: one task per shard", c.rid);
+        }
+    }
+}
+
+/// Shed requests terminate at the refusing admission ruling: a two-event
+/// chain, no queue or scoring stage ever recorded for them.
+#[test]
+fn shed_chains_terminate_at_the_refusing_admit_decision() {
+    let n = 1_500;
+    let out = Simulation::new(
+        base(n)
+            .with_qps(50.0) // ρ > 1: the deadline shedder engages
+            .with_shed_deadline(400.0)
+            .with_trace_capacity(n * 8),
+    )
+    .run();
+    assert!(out.shed > 0, "overload must shed");
+    let tr = out.trace.as_ref().expect("tracing on");
+    assert_eq!(tr.dropped, 0);
+    assert_eq!(tr.shed_chains(), out.shed, "one chain per shed request");
+    assert_eq!(tr.completed_chains(), out.completed);
+    for c in tr.chains.iter().filter(|c| c.shed) {
+        assert_well_ordered(c);
+        assert_eq!(
+            c.events.len(),
+            2,
+            "rid {}: a shed request is Arrived → refused, nothing more",
+            c.rid
+        );
+        assert_eq!(c.decomp.total_ms(), c.decomp.admit_ms, "all admit time");
+    }
+    for c in tr.chains.iter().filter(|c| !c.shed) {
+        assert_well_ordered(c);
+    }
+}
+
+/// Cache hits complete on the probe path: their chains carry the hit
+/// probe and skip every queue/scoring stage.
+#[test]
+fn cache_hit_chains_skip_scoring_stages() {
+    let n = 1_500;
+    let out = Simulation::new(
+        base(n)
+            .with_classes(vec![ClassSpec::new("popular", KeywordMix::Paper)
+                .with_popularity(Popularity::Zipf { s: 1.1, population: 100 })])
+            .with_cache_capacity(4_096)
+            .with_trace_capacity(n * 8),
+    )
+    .run();
+    let cs = out.cache.as_ref().expect("cache on");
+    assert!(cs.hits > 0, "a 100-query Zipf stream must repeat");
+    let tr = out.trace.as_ref().expect("tracing on");
+    assert_eq!(tr.dropped, 0);
+    let hit_chains: Vec<&TraceChain> = tr.chains.iter().filter(|c| c.cached).collect();
+    assert_eq!(hit_chains.len(), cs.hits as usize, "counter/chain agreement");
+    for c in &tr.chains {
+        assert_well_ordered(c);
+        if c.cached {
+            assert!(
+                c.events.iter().all(|e| !matches!(
+                    e.stage,
+                    Stage::Enqueued { .. }
+                        | Stage::Dequeued { .. }
+                        | Stage::ScoringStart { .. }
+                        | Stage::ScoringEnd { .. }
+                )),
+                "rid {}: a hit never queues or scores",
+                c.rid
+            );
+            assert_eq!(c.decomp.service_ms(), 0.0, "rid {}", c.rid);
+        } else {
+            assert!(
+                c.events
+                    .iter()
+                    .any(|e| matches!(e.stage, Stage::ScoringStart { .. })),
+                "rid {}: a miss must score",
+                c.rid
+            );
+        }
+    }
+}
+
+/// Ring overflow loses whole chains, never truncates one: with a ring far
+/// too small for the run, events drop and chains are discarded — but
+/// every chain that IS reported still passes the full well-orderedness
+/// walk, and the drop is visible in the counters.
+#[test]
+fn ring_overflow_discards_whole_chains_never_truncates() {
+    let n = 2_000;
+    let out = Simulation::new(base(n).with_qps(30.0).with_trace_capacity(64)).run();
+    assert_eq!(out.completed, n, "tracing never perturbs the engine");
+    let tr = out.trace.as_ref().expect("tracing on");
+    assert!(tr.dropped > 0, "64-slot rings must overflow on 2k requests");
+    assert!(tr.recorded > tr.dropped, "some events survive");
+    assert!(
+        tr.chains.iter().map(|c| c.events.len() as u64).sum::<u64>() + tr.dropped
+            <= tr.recorded,
+        "reported chains hold only surviving events"
+    );
+    assert!(tr.discarded_chains > 0, "torn chains are discarded whole");
+    assert!(
+        tr.completed_chains() >= 1,
+        "the final requests' events all survive in every lane"
+    );
+    assert!(tr.completed_chains() < n, "overflow must cost chains");
+    for c in &tr.chains {
+        assert_well_ordered(c);
+    }
+}
